@@ -1,0 +1,151 @@
+//! End-to-end driver: the full three-layer stack on a real small workload.
+//!
+//! Runs the 7-activity Risers Fatigue Analysis workflow with the stress and
+//! wear activities executing the AOT-compiled JAX/Pallas artifacts through
+//! PJRT (L1+L2), scheduled by the d-Chiron engine over the distributed
+//! in-memory DBMS (L3), with a steering monitor issuing the Table-2 query
+//! mix and a Q8 adaptation mid-run. Requires `make artifacts`.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example risers_end_to_end [conditions]
+//! ```
+//!
+//! The summary block at the end is what EXPERIMENTS.md §End-to-end records.
+
+use schaladb::coordinator::payload::RunnerRegistry;
+use schaladb::coordinator::{DChironEngine, EngineConfig};
+use schaladb::metrics;
+use schaladb::runtime::{self, riser, PjrtService};
+use schaladb::steering::{Monitor, SteeringClient};
+use schaladb::storage::AccessKind;
+use schaladb::workload;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let conditions: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(96);
+
+    if !runtime::artifacts_available() {
+        anyhow::bail!(
+            "artifacts not found in {:?} — run `make artifacts` first",
+            runtime::default_artifact_dir()
+        );
+    }
+
+    // L1/L2: PJRT service + riser runners over the AOT artifacts.
+    let svc = PjrtService::start(runtime::default_artifact_dir())?;
+    let mut registry = RunnerRegistry::new();
+    riser::register_riser_runners(&mut registry, &svc);
+
+    // L3: d-Chiron over 4 worker nodes x 2 threads, 2 data nodes,
+    // replication on. Sleep-payload activities scaled down.
+    let engine = DChironEngine::with_registry(
+        EngineConfig {
+            workers: 4,
+            threads_per_worker: 2,
+            data_nodes: 2,
+            replication: true,
+            connectors: 2,
+            time_scale: 0.01,
+            supervisor_poll_secs: 0.002,
+            ..Default::default()
+        },
+        registry,
+    );
+
+    let wf = workload::risers_workflow_with(conditions, Some("riser"));
+    let inputs = workload::risers_inputs(conditions, 42);
+    let planned = wf.planned_total_tasks();
+    println!(
+        "risers end-to-end: {conditions} environmental conditions, {} activities, {planned} tasks",
+        wf.activities.len()
+    );
+
+    let t0 = Instant::now();
+    let running = engine.start(wf, inputs)?;
+    let db = running.db.clone();
+
+    // Steering: monitor loop issuing Q1..Q7 every 250 ms while running.
+    let monitor = Monitor::spawn(db.clone(), 0.25, 1);
+
+    // Mid-run adaptation (Q8): once wear results exist, tighten the
+    // analyze_risers inputs — the paper's human-in-the-loop moment.
+    let client = SteeringClient::new(db.clone());
+    let mut adapted = 0usize;
+    for _ in 0..400 {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        if let Ok(rs) = client.q7_wear_outliers("calculate_wear_and_tear", 0.5) {
+            if !rs.rows.is_empty() {
+                adapted = client.q8_adapt_ready_inputs("analyze_risers", "a", 2.5, 8)?;
+                println!(
+                    "steering: Q7 found {} wear outliers -> Q8 adapted {} ready inputs",
+                    rs.rows.len(),
+                    adapted
+                );
+                break;
+            }
+        }
+        if running.done.load(std::sync::atomic::Ordering::SeqCst) {
+            break;
+        }
+    }
+
+    let report = running.join()?;
+    let queries = monitor.stop();
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Post-run analysis straight from the integrated database.
+    println!("\n== fatigue results (top wear factors) ==");
+    let rs = db.query(
+        "SELECT t.taskid, f.value AS f1 FROM workqueue t \
+         JOIN taskfield f ON f.taskid = t.taskid \
+         WHERE f.field = 'f1' AND f.direction = 'out' \
+         ORDER BY f1 DESC LIMIT 5",
+    )?;
+    println!("{}", rs.render());
+
+    let pjrt_tasks = db
+        .query(
+            "SELECT COUNT(*) FROM workqueue t JOIN activity a ON t.actid = a.actid \
+             WHERE a.name IN ('preprocessing', 'stress_analysis', 'calculate_wear_and_tear') \
+             AND t.status = 'FINISHED'",
+        )?
+        .rows[0]
+        .values[0]
+        .as_i64()
+        .unwrap_or(0);
+
+    println!("{}", metrics::format_report("risers end-to-end", &report));
+    println!("== end-to-end summary ==");
+    println!("wall time             : {wall:.2}s");
+    println!("tasks executed        : {}/{}", report.executed_tasks, report.total_tasks);
+    println!("PJRT kernel executions: {pjrt_tasks}");
+    println!(
+        "task throughput       : {:.1} tasks/s",
+        report.executed_tasks as f64 / wall
+    );
+    println!(
+        "mean claim latency    : {}",
+        schaladb::util::fmt_secs(
+            report
+                .access_stats
+                .iter()
+                .find(|(k, _)| *k == AccessKind::UpdateToRunning)
+                .map(|(_, s)| s.mean_secs())
+                .unwrap_or(0.0)
+        )
+    );
+    println!("steering queries run  : {queries} (adapted {adapted} inputs via Q8)");
+    println!(
+        "DBMS share of makespan: {:.1}%",
+        100.0 * report.dbms_max_node_secs / report.makespan_secs
+    );
+    println!("database size         : {} KB", report.db_bytes / 1024);
+
+    if report.executed_tasks < report.total_tasks as u64 {
+        anyhow::bail!("not all tasks executed");
+    }
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Steering session: runs the risers workflow (synthetic physics, no
+//! artifacts needed) and walks through the paper's Table-2 queries Q1–Q8
+//! against the live database, printing each result.
+//!
+//! ```bash
+//! cargo run --release --example steering_session
+//! ```
+
+use schaladb::coordinator::{DChironEngine, EngineConfig};
+use schaladb::steering::SteeringClient;
+use schaladb::workload;
+
+fn main() -> anyhow::Result<()> {
+    let conditions = 64;
+    let engine = DChironEngine::new(EngineConfig {
+        workers: 3,
+        threads_per_worker: 2,
+        time_scale: 0.02, // stretch the run so steering observes it live
+        ..Default::default()
+    });
+    let wf = workload::risers_workflow(conditions);
+    let inputs = workload::risers_inputs(conditions, 7);
+    println!(
+        "starting '{}' with {} conditions ({} planned tasks)\n",
+        wf.name,
+        conditions,
+        wf.planned_total_tasks()
+    );
+    let running = engine.start(wf, inputs)?;
+    let db = running.db.clone();
+    let client = SteeringClient::new(db.clone());
+
+    // Give the run a moment, then steer while it executes.
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    println!("Q1 — task status per node (last minute):");
+    println!("{}", client.q1_recent_status_by_node()?.render());
+
+    println!("Q2 — bytes per finished task on node000:");
+    println!("{}", client.q2_bytes_by_task("node000")?.render());
+
+    println!("Q3 — nodes with most failures (expected: none):");
+    let q3 = client.q3_worst_nodes()?;
+    println!("{}", if q3.rows.is_empty() { "  (no failures)\n".into() } else { q3.render() });
+
+    println!("Q4 — tasks left for workflow 1: {}", client.q4_tasks_left(1)?);
+
+    println!("\nQ5 — busiest activity (workflows running > 1 min):");
+    let q5 = client.q5_busiest_activity()?;
+    println!("{}", if q5.rows.is_empty() { "  (run is younger than one minute)\n".into() } else { q5.render() });
+
+    println!("Q6 — execution times per unfinished activity:");
+    println!("{}", client.q6_activity_times()?.render());
+
+    // Wait for wear results so Q7/Q8 have data.
+    for _ in 0..600 {
+        if client.q7_wear_outliers("calculate_wear_and_tear", 0.2).map(|r| !r.rows.is_empty()).unwrap_or(false) {
+            break;
+        }
+        if running.done.load(std::sync::atomic::Ordering::SeqCst) {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    println!("Q7 — wear outliers (f1 > 0.2, slower than activity average):");
+    println!("{}", client.q7_wear_outliers("calculate_wear_and_tear", 0.2)?.render());
+
+    let adapted = client.q8_adapt_ready_inputs("analyze_risers", "a", 1.5, 4)?;
+    println!("Q8 — adapted {adapted} ready analyze_risers inputs (a := 1.5)\n");
+
+    let report = running.join()?;
+    println!(
+        "workflow finished: {} tasks in {:.2}s; steering overhead is folded into the run",
+        report.executed_tasks, report.makespan_secs
+    );
+
+    // Provenance drill-down on one wear task, from the same database.
+    let rs = db.query(
+        "SELECT t.taskid FROM workqueue t JOIN activity a ON t.actid = a.actid \
+         WHERE a.name = 'calculate_wear_and_tear' ORDER BY t.taskid LIMIT 1",
+    )?;
+    if let Some(row) = rs.rows.first() {
+        let tid = row.values[0].as_i64().unwrap();
+        println!("\nprovenance of task {tid}:");
+        println!("{}", client.provenance_of(tid)?.render());
+    }
+    Ok(())
+}

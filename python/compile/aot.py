@@ -1,0 +1,74 @@
+"""AOT compile path: lower the L2 models to HLO *text* artifacts for the
+rust PJRT runtime. Run once via `make artifacts`; Python is never on the
+request path.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import riser as kernels
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(fn, example_shapes):
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in example_shapes]
+    return jax.jit(fn).lower(*specs)
+
+
+MODELS = {
+    "riser_stress": (model.riser_stress, [(model.BATCH, 3)]),
+    "riser_wear": (model.riser_wear, [(model.BATCH, 3)]),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=sorted(MODELS))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    meta = {
+        "batch": model.BATCH,
+        "modes": model.MODES,
+        "segments": model.SEGMENTS,
+        "kernel_vmem_bytes_per_step": kernels.vmem_bytes(modes=model.MODES),
+        "artifacts": {},
+    }
+    for name in args.models:
+        fn, shapes = MODELS[name]
+        text = to_hlo_text(lower_model(fn, shapes))
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["artifacts"][name] = {
+            "path": os.path.basename(path),
+            "input_shapes": shapes,
+            "hlo_chars": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"kernel VMEM/step estimate: {meta['kernel_vmem_bytes_per_step']} bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the Pallas kernel — the CORE correctness signal.
+
+Everything here is deliberately written in the most obvious way possible
+(no tiling, no accumulation tricks) so the pytest comparison against the
+Pallas implementation is meaningful.
+"""
+
+import jax.numpy as jnp
+
+from .riser import EXPONENT
+
+
+def stress_damage_ref(a, phi):
+    """Reference modal stress + damage. a (B, M), phi (M, S)."""
+    a = a.astype(jnp.float32)
+    phi = phi.astype(jnp.float32)
+    stress = a @ phi
+    damage = jnp.sum(jnp.abs(stress) ** EXPONENT, axis=1)
+    return stress, damage

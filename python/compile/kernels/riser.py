@@ -1,0 +1,81 @@
+"""L1: the riser stress/damage hot spot as a Pallas kernel.
+
+The per-task computation of the Risers Fatigue Analysis workflow is a
+modal-superposition stress evaluation followed by a power-law damage
+accumulation (Miner's rule): given modal amplitudes ``a[B, M]`` (derived
+from the environmental condition) and the riser's modal shape matrix
+``phi[M, S]`` over S segments,
+
+    stress[b, s] = sum_m a[b, m] * phi[m, s]        (dense matmul -> MXU)
+    damage[b]    = sum_s |stress[b, s]| ** EXPONENT (running reduction)
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles B and S;
+each grid step loads an (BB, M) amplitude tile and an (M, BS) phi tile
+into VMEM, issues one MXU matmul, writes the stress tile, and folds the
+tile's damage contribution into a revisited (BB,) accumulator block —
+the HBM<->VMEM schedule expressed with BlockSpecs instead of CUDA
+threadblocks. ``interpret=True`` is mandatory on this image: CPU PJRT
+cannot execute Mosaic custom-calls; the lowered HLO is portable.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Damage exponent (S-N curve slope; 3 is typical for welded steel).
+EXPONENT = 3.0
+
+
+def _kernel(a_ref, phi_ref, s_ref, d_ref):
+    j = pl.program_id(1)
+    # (BB, M) @ (M, BS) on the MXU; accumulate in f32.
+    st = jnp.dot(a_ref[...], phi_ref[...], preferred_element_type=jnp.float32)
+    s_ref[...] = st
+    partial = jnp.sum(jnp.abs(st) ** EXPONENT, axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        d_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        d_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_s"))
+def stress_damage(a, phi, *, block_b=32, block_s=128):
+    """Pallas stress + damage. Shapes: a (B, M), phi (M, S) with B % block_b
+    == 0 and S % block_s == 0. Returns (stress (B, S) f32, damage (B,) f32).
+    """
+    B, M = a.shape
+    M2, S = phi.shape
+    assert M == M2, f"mode mismatch {M} != {M2}"
+    assert B % block_b == 0, f"B={B} not a multiple of {block_b}"
+    assert S % block_s == 0, f"S={S} not a multiple of {block_s}"
+    grid = (B // block_b, S // block_s)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, M), lambda i, j: (i, 0)),
+            pl.BlockSpec((M, block_s), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, block_s), lambda i, j: (i, j)),
+            # revisited accumulator: every j maps to the same (i,) block
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a.astype(jnp.float32), phi.astype(jnp.float32))
+
+
+def vmem_bytes(block_b=32, block_s=128, modes=128):
+    """Estimated VMEM working set per grid step (f32): amplitude tile +
+    phi tile + stress tile + accumulator. Used by DESIGN.md §Perf."""
+    return 4 * (block_b * modes + modes * block_s + block_b * block_s + block_b)

@@ -1,0 +1,87 @@
+"""L2: the JAX models of the riser fatigue computation, calling the L1
+Pallas kernel. Lowered once by aot.py; never imported at runtime.
+
+Two model variants are exported as separate artifacts:
+
+- ``riser_stress``: env (B, 3) [wind m/s, wave Hz, depth m] ->
+  (curvature (B, 3), damage (B,)). The modal-amplitude expansion and the
+  curvature reductions are plain jnp (XLA fuses them); the (B,M)x(M,S)
+  stress matmul + damage accumulation is the Pallas kernel.
+- ``riser_wear``: curvature (B, 3) -> wear factor f1 (B,) in [0, 1).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import riser as kernels
+
+# Artifact shapes. BATCH must match rust/src/runtime/riser.rs::BATCH.
+BATCH = 64
+MODES = 128
+SEGMENTS = 256
+
+
+def phi_matrix(modes=MODES, segments=SEGMENTS):
+    """Deterministic modal shape matrix (M, S): sinusoidal mode shapes with
+    1/sqrt(M) normalization — a stand-in for the proprietary riser model
+    (DESIGN.md §Substitutions)."""
+    m = jnp.arange(1, modes + 1, dtype=jnp.float32)[:, None]
+    s = jnp.arange(1, segments + 1, dtype=jnp.float32)[None, :]
+    return (jnp.sin(m * s * (jnp.pi / segments)) / jnp.sqrt(float(modes))).astype(
+        jnp.float32
+    )
+
+
+def modal_amplitudes(env, modes=MODES):
+    """Environmental condition -> modal excitation amplitudes (B, M).
+
+    wind drives low modes, wave frequency picks a resonant band, depth
+    attenuates high modes. Smooth, deterministic, bounded.
+    """
+    wind = env[:, 0:1]
+    wave = env[:, 1:2]
+    depth = env[:, 2:3]
+    k = jnp.arange(1, modes + 1, dtype=jnp.float32)[None, :]
+    resonance = jnp.exp(-0.5 * ((k * wave - 8.0) / 4.0) ** 2)
+    drive = jnp.log1p(jnp.abs(wind)) * (1.0 + 0.1 * jnp.sin(wind * 0.7 * k / modes))
+    atten = jnp.exp(-k / (depth / 50.0 + 1.0))
+    return (drive * resonance * atten).astype(jnp.float32)
+
+
+def riser_stress(env):
+    """env (B, 3) -> (curvature (B, 3), damage (B,))."""
+    a = modal_amplitudes(env)
+    stress, damage = kernels.stress_damage(a, phi_matrix())
+    # curvature components: three orthogonal segment-weighted reductions
+    s_idx = jnp.arange(SEGMENTS, dtype=jnp.float32)
+    w1 = jnp.cos(jnp.pi * s_idx / SEGMENTS)
+    w2 = jnp.sin(jnp.pi * s_idx / SEGMENTS)
+    w3 = s_idx / SEGMENTS
+    abs_s = jnp.abs(stress)
+    cx = abs_s @ w1 / SEGMENTS
+    cy = abs_s @ w2 / SEGMENTS
+    cz = abs_s @ w3 / SEGMENTS
+    curv = jnp.stack([cx, cy, cz], axis=1)
+    return curv, damage / SEGMENTS
+
+
+def riser_wear(curv):
+    """curvature (B, 3) -> wear factor f1 (B,) in [0, 1)."""
+    f1 = 1.0 - jnp.exp(-jnp.sum(curv * curv, axis=1))
+    return (f1.astype(jnp.float32),)
+
+
+def riser_stress_ref(env):
+    """Model-level oracle: same computation with the reference kernel."""
+    from .kernels.ref import stress_damage_ref
+
+    a = modal_amplitudes(env)
+    stress, damage = stress_damage_ref(a, phi_matrix())
+    s_idx = jnp.arange(SEGMENTS, dtype=jnp.float32)
+    w1 = jnp.cos(jnp.pi * s_idx / SEGMENTS)
+    w2 = jnp.sin(jnp.pi * s_idx / SEGMENTS)
+    w3 = s_idx / SEGMENTS
+    abs_s = jnp.abs(stress)
+    curv = jnp.stack(
+        [abs_s @ w1 / SEGMENTS, abs_s @ w2 / SEGMENTS, abs_s @ w3 / SEGMENTS], axis=1
+    )
+    return curv, damage / SEGMENTS

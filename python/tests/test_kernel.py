@@ -1,0 +1,96 @@
+"""L1 correctness: the Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes and value ranges; the kernel must match ref.py to
+f32 tolerance for every tiling that divides the shape.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import stress_damage_ref
+from compile.kernels.riser import EXPONENT, stress_damage, vmem_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale), dtype=jnp.float32)
+
+
+def assert_matches_ref(a, phi, **kw):
+    s, d = stress_damage(a, phi, **kw)
+    s_ref, d_ref = stress_damage_ref(a, phi)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_default_shape_matches_ref():
+    assert_matches_ref(rand((64, 128), 0), rand((128, 256), 1))
+
+
+@pytest.mark.parametrize("block_b,block_s", [(8, 64), (16, 128), (32, 256), (64, 64)])
+def test_tilings_are_equivalent(block_b, block_s):
+    a = rand((64, 128), 2)
+    phi = rand((128, 256), 3)
+    assert_matches_ref(a, phi, block_b=block_b, block_s=block_s)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    bb=st.sampled_from([1, 2, 4, 8]),
+    tiles_b=st.integers(1, 4),
+    tiles_s=st.integers(1, 4),
+    bs=st.sampled_from([8, 16, 32]),
+    modes=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_hypothesis_shape_sweep(bb, tiles_b, tiles_s, bs, modes, seed, scale):
+    B, S = bb * tiles_b, bs * tiles_s
+    a = rand((B, modes), seed, scale)
+    phi = rand((modes, S), seed + 1)
+    s, d = stress_damage(a, phi, block_b=bb, block_s=bs)
+    s_ref, d_ref = stress_damage_ref(a, phi)
+    # accumulation-order differences scale with |s| ~ scale * sqrt(modes)
+    s_atol = 1e-4 * max(scale * np.sqrt(modes) * 10.0, 1.0)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-4, atol=s_atol)
+    # damage is a sum of |s|^3: tolerance scales with magnitude
+    d_scale = max((scale * np.sqrt(modes)) ** EXPONENT, 1.0)
+    np.testing.assert_allclose(
+        np.asarray(d), np.asarray(d_ref), rtol=1e-3, atol=1e-3 * d_scale
+    )
+
+
+def test_zero_amplitudes_give_zero_damage():
+    a = jnp.zeros((8, 16), jnp.float32)
+    phi = rand((16, 32), 5)
+    s, d = stress_damage(a, phi, block_b=8, block_s=32)
+    assert float(jnp.max(jnp.abs(s))) == 0.0
+    assert float(jnp.max(d)) == 0.0
+
+
+def test_damage_is_monotone_in_amplitude():
+    a = rand((8, 16), 6)
+    phi = rand((16, 32), 7)
+    _, d1 = stress_damage(a, phi, block_b=8, block_s=32)
+    _, d2 = stress_damage(2.0 * a, phi, block_b=8, block_s=32)
+    assert np.all(np.asarray(d2) >= np.asarray(d1))
+
+
+def test_shape_validation():
+    a = rand((10, 16), 8)  # B=10 not a multiple of block_b=8
+    phi = rand((16, 32), 9)
+    with pytest.raises(AssertionError):
+        stress_damage(a, phi, block_b=8, block_s=32)
+    with pytest.raises(AssertionError):
+        stress_damage(rand((8, 12), 10), phi, block_b=8, block_s=32)
+
+
+def test_vmem_estimate_fits_budget():
+    # default tiling must leave room for double buffering in 16 MiB VMEM
+    assert vmem_bytes() * 2 < 16 * 1024 * 1024

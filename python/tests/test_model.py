@@ -1,0 +1,77 @@
+"""L2 correctness: model shapes, value ranges, kernel-vs-ref at model
+level, and the AOT text lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def env_batch(seed=0):
+    rng = np.random.default_rng(seed)
+    wind = rng.uniform(0.0, 30.0, model.BATCH)
+    wave = rng.uniform(0.05, 0.4, model.BATCH)
+    depth = rng.uniform(500.0, 2500.0, model.BATCH)
+    return jnp.asarray(np.stack([wind, wave, depth], axis=1), dtype=jnp.float32)
+
+
+def test_stress_model_shapes_and_finiteness():
+    curv, damage = model.riser_stress(env_batch())
+    assert curv.shape == (model.BATCH, 3)
+    assert damage.shape == (model.BATCH,)
+    assert np.all(np.isfinite(np.asarray(curv)))
+    assert np.all(np.asarray(damage) >= 0.0)
+
+
+def test_stress_model_matches_reference_kernel():
+    env = env_batch(1)
+    curv, damage = model.riser_stress(env)
+    curv_ref, damage_ref = model.riser_stress_ref(env)
+    np.testing.assert_allclose(np.asarray(curv), np.asarray(curv_ref), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(damage), np.asarray(damage_ref), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_wear_model_bounded():
+    curv, _ = model.riser_stress(env_batch(2))
+    (f1,) = model.riser_wear(curv)
+    f1 = np.asarray(f1)
+    assert f1.shape == (model.BATCH,)
+    assert np.all((f1 >= 0.0) & (f1 < 1.0))
+
+
+def test_models_are_deterministic():
+    env = env_batch(3)
+    a = model.riser_stress(env)
+    b = model.riser_stress(env)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+
+def test_amplitudes_respond_to_environment():
+    calm = jnp.asarray([[1.0, 0.1, 600.0]] * model.BATCH, dtype=jnp.float32)
+    storm = jnp.asarray([[30.0, 0.35, 2400.0]] * model.BATCH, dtype=jnp.float32)
+    _, d_calm = model.riser_stress(calm)
+    _, d_storm = model.riser_stress(storm)
+    assert float(d_storm[0]) > float(d_calm[0]), "storm must accumulate more damage"
+
+
+@pytest.mark.parametrize("name", sorted(aot.MODELS))
+def test_aot_lowering_produces_parsable_hlo_text(name):
+    fn, shapes = aot.MODELS[name]
+    text = aot.to_hlo_text(aot.lower_model(fn, shapes))
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # must be pure HLO text without Mosaic custom-calls (interpret=True)
+    assert "mosaic" not in text.lower()
+    assert len(text) > 300
+
+
+def test_phi_matrix_is_normalized():
+    phi = np.asarray(model.phi_matrix())
+    assert phi.shape == (model.MODES, model.SEGMENTS)
+    assert np.all(np.abs(phi) <= 1.0 / np.sqrt(model.MODES) + 1e-6)

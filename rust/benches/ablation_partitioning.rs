@@ -1,0 +1,127 @@
+//! Ablations of SchalaDB's §3.2 design choices on the real engine:
+//!
+//! 1. **WQ partitioning**: W partitions (one per worker, the paper's
+//!    design) vs a single shared partition — isolates the locality /
+//!    contention claim ("each worker node accesses its own WQ partition
+//!    ... reduces race conditions").
+//! 2. **Replication factor**: one backup per partition (paper) vs none —
+//!    the write-path cost of availability.
+//! 3. **Claim batch size**: how many candidates one `getREADYtasks`
+//!    fetches (the knob that amortizes claim races).
+//!
+//! `cargo bench --bench ablation_partitioning`
+
+use schaladb::coordinator::{DChironEngine, EngineConfig};
+use schaladb::storage::cluster::ClusterConfig;
+use schaladb::storage::DbCluster;
+use schaladb::util::{fmt_secs, render_table};
+use schaladb::workload::SyntheticWorkload;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Claim throughput against a WQ with the given partition count.
+fn claim_throughput(partitions: usize, replication: bool, threads: usize) -> f64 {
+    let c = DbCluster::start(ClusterConfig { data_nodes: 2, replication, ..Default::default() })
+        .unwrap();
+    c.exec(&format!(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, status TEXT) \
+         PARTITION BY HASH(workerid) PARTITIONS {partitions} \
+         PRIMARY KEY (taskid) INDEX (status)"
+    ))
+    .unwrap();
+    let total = 8_000;
+    let mut vals = Vec::new();
+    for i in 0..total {
+        // worker ids span the thread count; the table's partition count
+        // decides whether they collide on storage
+        vals.push(format!("({i}, {}, 'READY')", i % threads));
+        if vals.len() == 512 {
+            c.execute(&format!(
+                "INSERT INTO workqueue (taskid, workerid, status) VALUES {}",
+                vals.join(", ")
+            ))
+            .unwrap();
+            vals.clear();
+        }
+    }
+    if !vals.is_empty() {
+        c.execute(&format!(
+            "INSERT INTO workqueue (taskid, workerid, status) VALUES {}",
+            vals.join(", ")
+        ))
+        .unwrap();
+    }
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..threads {
+        let c: Arc<DbCluster> = c.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut n = 0u64;
+            loop {
+                let rs = c
+                    .exec(&format!(
+                        "UPDATE workqueue SET status = 'RUNNING' \
+                         WHERE workerid = {w} AND status = 'READY' \
+                         ORDER BY taskid LIMIT 1 RETURNING taskid"
+                    ))
+                    .unwrap()
+                    .rows();
+                if rs.rows.is_empty() {
+                    break;
+                }
+                n += 1;
+            }
+            n
+        }));
+    }
+    let claimed: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(claimed as usize, total);
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn engine_makespan(claim_batch: usize) -> f64 {
+    let w = SyntheticWorkload { total_tasks: 1_200, mean_task_secs: 1.0, activities: 3, seed: 5 };
+    let r = DChironEngine::new(EngineConfig {
+        workers: 4,
+        threads_per_worker: 4,
+        time_scale: 0.001,
+        supervisor_poll_secs: 0.001,
+        claim_batch,
+        ..Default::default()
+    })
+    .run(w.workflow(), w.inputs())
+    .unwrap();
+    r.makespan_secs
+}
+
+fn main() {
+    let threads = 8;
+
+    println!("== ablation 1: WQ partitioning (8 claiming threads, 8k tasks) ==");
+    let mut rows = Vec::new();
+    for parts in [1usize, 2, 4, 8] {
+        let tput = claim_throughput(parts, true, threads);
+        rows.push(vec![
+            format!("{parts} partition(s)"),
+            format!("{tput:.0} claims/s"),
+        ]);
+    }
+    println!("{}", render_table(&["WQ layout", "claim throughput"], &rows));
+
+    println!("== ablation 2: replication factor (8 partitions) ==");
+    let mut rows = Vec::new();
+    for (label, repl) in [("1 backup/partition (paper)", true), ("no replication", false)] {
+        let tput = claim_throughput(8, repl, threads);
+        rows.push(vec![label.to_string(), format!("{tput:.0} claims/s")]);
+    }
+    println!("{}", render_table(&["replication", "claim throughput"], &rows));
+
+    println!("== ablation 3: claim batch size (full engine, 1200 x 1s scaled) ==");
+    let mut rows = Vec::new();
+    for batch in [1usize, 4, 16] {
+        let m = engine_makespan(batch);
+        rows.push(vec![format!("batch {batch}"), fmt_secs(m)]);
+    }
+    println!("{}", render_table(&["getREADYtasks batch", "makespan"], &rows));
+}

@@ -1,0 +1,103 @@
+//! Real-engine small-scale comparison: d-Chiron vs centralized Chiron on
+//! this machine (no simulation) — the Experiment-8 *shape* at laptop scale,
+//! plus the steering-overhead check (Experiment 7) on the real engine.
+//!
+//! Durations are nominal-seconds scaled by `time_scale`, so "1 s tasks"
+//! run as 2 ms of real sleep; the DBMS work is fully real.
+//!
+//! `cargo bench --bench engine_small_scale`
+
+use schaladb::baseline::{ChironConfig, ChironEngine};
+use schaladb::coordinator::{DChironEngine, EngineConfig};
+use schaladb::steering::Monitor;
+use schaladb::util::{fmt_secs, render_table};
+use schaladb::workload::SyntheticWorkload;
+
+const TIME_SCALE: f64 = 0.002;
+
+fn dchiron(tasks: usize, dur: f64, workers: usize, threads: usize) -> (f64, f64) {
+    let w = SyntheticWorkload { total_tasks: tasks, mean_task_secs: dur, activities: 3, seed: 9 };
+    let r = DChironEngine::new(EngineConfig {
+        workers,
+        threads_per_worker: threads,
+        time_scale: TIME_SCALE,
+        supervisor_poll_secs: 0.001,
+        ..Default::default()
+    })
+    .run(w.workflow(), w.inputs())
+    .unwrap();
+    assert_eq!(r.executed_tasks as usize, w.planned_tasks());
+    (r.makespan_secs, r.dbms_max_node_secs)
+}
+
+fn chiron(tasks: usize, dur: f64, workers: usize, threads: usize) -> f64 {
+    let w = SyntheticWorkload { total_tasks: tasks, mean_task_secs: dur, activities: 3, seed: 9 };
+    let r = ChironEngine::new(ChironConfig {
+        workers,
+        threads_per_worker: threads,
+        time_scale: TIME_SCALE,
+        supervisor_poll_secs: 0.001,
+        ..Default::default()
+    })
+    .run(w.workflow(), w.inputs())
+    .unwrap();
+    assert_eq!(r.executed_tasks as usize, w.planned_tasks());
+    r.makespan_secs
+}
+
+fn main() {
+    let workers = 4;
+    let threads = 4;
+    println!(
+        "engine_small_scale: real engines, {workers} workers x {threads} threads, time-scale {TIME_SCALE}\n"
+    );
+
+    // Experiment-8 shape at small scale.
+    let mut rows = Vec::new();
+    for (label, tasks, dur) in [
+        ("small x short", 600usize, 1.0f64),
+        ("small x long", 600, 8.0),
+        ("large x short", 2400, 1.0),
+        ("large x long", 2400, 8.0),
+    ] {
+        let (d, _) = dchiron(tasks, dur, workers, threads);
+        let c = chiron(tasks, dur, workers, threads);
+        rows.push(vec![
+            label.to_string(),
+            tasks.to_string(),
+            format!("{dur}s"),
+            fmt_secs(d),
+            fmt_secs(c),
+            format!("{:.2}x", c / d),
+        ]);
+    }
+    println!("== Chiron vs d-Chiron (real engines) ==");
+    println!(
+        "{}",
+        render_table(&["workload", "tasks", "dur", "d-Chiron", "Chiron", "speedup"], &rows)
+    );
+
+    // Experiment-7 shape: steering overhead on the real engine.
+    let tasks = 1200;
+    let (base, _) = dchiron(tasks, 2.0, workers, threads);
+    let w = SyntheticWorkload { total_tasks: tasks, mean_task_secs: 2.0, activities: 3, seed: 9 };
+    let engine = DChironEngine::new(EngineConfig {
+        workers,
+        threads_per_worker: threads,
+        time_scale: TIME_SCALE,
+        supervisor_poll_secs: 0.001,
+        ..Default::default()
+    });
+    let running = engine.start(w.workflow(), w.inputs()).unwrap();
+    let monitor = Monitor::spawn(running.db.clone(), 0.030, 1); // "15s" scaled
+    let steered = running.join().unwrap().makespan_secs;
+    let queries = monitor.stop();
+    println!("== steering overhead (real engine) ==");
+    println!(
+        "without queries: {}   with queries: {} ({} queries)   overhead {:+.1}%\n",
+        fmt_secs(base),
+        fmt_secs(steered),
+        queries,
+        100.0 * (steered / base - 1.0)
+    );
+}

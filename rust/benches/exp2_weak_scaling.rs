@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's exp2 rows on the calibrated
+//! simulator (see DESIGN.md per-experiment index). `cargo bench --bench exp2_weak_scaling`.
+use schaladb::sim::experiments;
+
+fn main() {
+    let out = experiments::run("exp2").expect("exp2");
+    out.print();
+    std::fs::create_dir_all("target/bench-results").ok();
+    let path = format!("target/bench-results/{}.json", "exp2");
+    std::fs::write(&path, out.json.to_string()).expect("write json");
+    println!("json: {path}");
+}

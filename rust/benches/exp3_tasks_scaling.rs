@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's exp3 rows on the calibrated
+//! simulator (see DESIGN.md per-experiment index). `cargo bench --bench exp3_tasks_scaling`.
+use schaladb::sim::experiments;
+
+fn main() {
+    let out = experiments::run("exp3").expect("exp3");
+    out.print();
+    std::fs::create_dir_all("target/bench-results").ok();
+    let path = format!("target/bench-results/{}.json", "exp3");
+    std::fs::write(&path, out.json.to_string()).expect("write json");
+    println!("json: {path}");
+}

@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's exp5 rows on the calibrated
+//! simulator (see DESIGN.md per-experiment index). `cargo bench --bench exp5_dbms_impact`.
+use schaladb::sim::experiments;
+
+fn main() {
+    let out = experiments::run("exp5").expect("exp5");
+    out.print();
+    std::fs::create_dir_all("target/bench-results").ok();
+    let path = format!("target/bench-results/{}.json", "exp5");
+    std::fs::write(&path, out.json.to_string()).expect("write json");
+    println!("json: {path}");
+}

@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's exp8 rows on the calibrated
+//! simulator (see DESIGN.md per-experiment index). `cargo bench --bench exp8_chiron_vs_dchiron`.
+use schaladb::sim::experiments;
+
+fn main() {
+    let out = experiments::run("exp8").expect("exp8");
+    out.print();
+    std::fs::create_dir_all("target/bench-results").ok();
+    let path = format!("target/bench-results/{}.json", "exp8");
+    std::fs::write(&path, out.json.to_string()).expect("write json");
+    println!("json: {path}");
+}

@@ -1,0 +1,239 @@
+//! Microbenchmarks of the real storage engine: the numbers that (a)
+//! document how far our in-process substrate is from the paper's networked
+//! MySQL Cluster (DESIGN.md §Substitutions) and (b) drive the §Perf
+//! iteration log in EXPERIMENTS.md.
+//!
+//! `cargo bench --bench storage_micro`
+
+use schaladb::metrics::Histogram;
+use schaladb::storage::cluster::ClusterConfig;
+use schaladb::storage::DbCluster;
+use schaladb::util::fmt_secs;
+use std::sync::Arc;
+use std::time::Instant;
+
+struct Bench {
+    name: &'static str,
+    hist: Histogram,
+}
+
+impl Bench {
+    fn run(name: &'static str, iters: usize, mut f: impl FnMut(usize)) -> Bench {
+        // warmup
+        for i in 0..(iters / 10).max(1) {
+            f(usize::MAX - i);
+        }
+        let mut hist = Histogram::new();
+        for i in 0..iters {
+            let t0 = Instant::now();
+            f(i);
+            hist.record(t0.elapsed().as_secs_f64());
+        }
+        Bench { name, hist }
+    }
+
+    fn row(&self) -> Vec<String> {
+        vec![
+            self.name.to_string(),
+            self.hist.count().to_string(),
+            fmt_secs(self.hist.mean()),
+            fmt_secs(self.hist.quantile(0.5)),
+            fmt_secs(self.hist.quantile(0.99)),
+        ]
+    }
+}
+
+fn wq_cluster(workers: usize, rows: usize) -> Arc<DbCluster> {
+    let c = DbCluster::start(ClusterConfig::default()).unwrap();
+    c.exec(&format!(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, actid INT, workerid INT NOT NULL, \
+         status TEXT, dur FLOAT, starttime FLOAT, endtime FLOAT) \
+         PARTITION BY HASH(workerid) PARTITIONS {workers} \
+         PRIMARY KEY (taskid) INDEX (status)"
+    ))
+    .unwrap();
+    let mut batch = Vec::new();
+    for i in 0..rows {
+        batch.push(format!("({i}, {}, {}, 'READY', 1.0, NULL, NULL)", i % 3, i % workers));
+        if batch.len() == 512 {
+            c.execute(&format!(
+                "INSERT INTO workqueue (taskid, actid, workerid, status, dur, starttime, endtime) VALUES {}",
+                batch.join(", ")
+            ))
+            .unwrap();
+            batch.clear();
+        }
+    }
+    if !batch.is_empty() {
+        c.execute(&format!(
+            "INSERT INTO workqueue (taskid, actid, workerid, status, dur, starttime, endtime) VALUES {}",
+            batch.join(", ")
+        ))
+        .unwrap();
+    }
+    c
+}
+
+fn main() {
+    let workers = 8;
+    let rows = 20_000;
+    println!("storage_micro: {rows} WQ rows, {workers} partitions, 2 data nodes, replication on\n");
+    let mut benches = Vec::new();
+
+    // point insert (supervisor task generation path)
+    {
+        let c = wq_cluster(workers, rows);
+        let base = rows as i64 + 1_000_000;
+        benches.push(Bench::run("insert 1 row", 2_000, |i| {
+            c.execute(&format!(
+                "INSERT INTO workqueue (taskid, actid, workerid, status, dur) \
+                 VALUES ({}, 1, {}, 'READY', 1.0)",
+                base + i as i64,
+                i % workers
+            ))
+            .unwrap();
+        }));
+    }
+
+    // getREADYtasks: the paper's hottest query (indexed + partition-pruned)
+    {
+        let c = wq_cluster(workers, rows);
+        benches.push(Bench::run("getREADYtasks (LIMIT 4)", 5_000, |i| {
+            c.query(&format!(
+                "SELECT taskid, actid, dur FROM workqueue \
+                 WHERE workerid = {} AND status = 'READY' ORDER BY taskid LIMIT 4",
+                i % workers
+            ))
+            .unwrap();
+        }));
+    }
+
+    // the atomic claim (UPDATE ... LIMIT 1 RETURNING)
+    {
+        let c = wq_cluster(workers, rows);
+        benches.push(Bench::run("claim (UPDATE..RETURNING)", 5_000, |i| {
+            c.exec(&format!(
+                "UPDATE workqueue SET status = 'RUNNING', starttime = NOW() \
+                 WHERE workerid = {} AND status = 'READY' ORDER BY taskid LIMIT 1 \
+                 RETURNING taskid",
+                i % workers
+            ))
+            .unwrap();
+        }));
+    }
+
+    // point status update by PK
+    {
+        let c = wq_cluster(workers, rows);
+        benches.push(Bench::run("updateToFINISHED (by PK)", 5_000, |i| {
+            c.execute(&format!(
+                "UPDATE workqueue SET status = 'FINISHED', endtime = NOW() WHERE taskid = {}",
+                i % rows
+            ))
+            .unwrap();
+        }));
+    }
+
+    // analytical aggregate over the whole WQ (monitoring-style)
+    {
+        let c = wq_cluster(workers, rows);
+        benches.push(Bench::run("full-WQ GROUP BY status", 200, |_| {
+            c.query("SELECT status, COUNT(*) FROM workqueue GROUP BY status").unwrap();
+        }));
+    }
+
+    // steering-style join (WQ x WQ self-join via actid aggregation)
+    {
+        let c = wq_cluster(workers, rows);
+        c.exec("CREATE TABLE node (nodeid INT NOT NULL, hostname TEXT) PRIMARY KEY (nodeid)")
+            .unwrap();
+        for w in 0..workers {
+            c.execute(&format!("INSERT INTO node (nodeid, hostname) VALUES ({w}, 'n{w}')"))
+                .unwrap();
+        }
+        benches.push(Bench::run("join WQ x node + GROUP BY", 200, |_| {
+            c.query(
+                "SELECT n.hostname, COUNT(*) FROM workqueue t JOIN node n \
+                 ON t.workerid = n.nodeid GROUP BY n.hostname",
+            )
+            .unwrap();
+        }));
+    }
+
+    // multi-statement transaction (2 partitions, 2PC + replica apply)
+    {
+        let c = wq_cluster(workers, rows);
+        benches.push(Bench::run("txn: 2 updates, 2 partitions", 2_000, |i| {
+            let a = i % workers;
+            let b = (i + 1) % workers;
+            schaladb::storage::txn::TxnBuilder::new(
+                c.clone(),
+                0,
+                schaladb::storage::AccessKind::Other,
+            )
+            .stmt(&format!(
+                "UPDATE workqueue SET dur = dur + 1 WHERE taskid = {}",
+                a * 10
+            ))
+            .unwrap()
+            .stmt(&format!(
+                "UPDATE workqueue SET dur = dur + 1 WHERE taskid = {}",
+                b * 10 + 1
+            ))
+            .unwrap()
+            .commit()
+            .unwrap();
+        }));
+    }
+
+    // concurrent claims: 8 threads hammering distinct partitions
+    {
+        let c = wq_cluster(workers, rows);
+        let t0 = Instant::now();
+        let claims = 1_000;
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..claims {
+                    c.exec(&format!(
+                        "UPDATE workqueue SET status = 'RUNNING' \
+                         WHERE workerid = {w} AND status = 'READY' ORDER BY taskid LIMIT 1 \
+                         RETURNING taskid"
+                    ))
+                    .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = (workers * claims) as f64;
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "concurrent claims: {} claims across {workers} threads in {} -> {:.0} claims/s\n",
+            workers * claims,
+            fmt_secs(dt),
+            total / dt
+        );
+    }
+
+    let rows_out: Vec<Vec<String>> = benches.iter().map(|b| b.row()).collect();
+    println!(
+        "{}",
+        schaladb::util::render_table(&["operation", "iters", "mean", "p50", "p99"], &rows_out)
+    );
+    std::fs::create_dir_all("target/bench-results").ok();
+    let mut obj = schaladb::util::json::Json::obj();
+    for b in &benches {
+        obj = obj.set(
+            b.name,
+            schaladb::util::json::Json::obj()
+                .set("mean_secs", b.hist.mean())
+                .set("p50_secs", b.hist.quantile(0.5))
+                .set("p99_secs", b.hist.quantile(0.99)),
+        );
+    }
+    std::fs::write("target/bench-results/storage_micro.json", obj.to_string()).unwrap();
+    println!("json: target/bench-results/storage_micro.json");
+}

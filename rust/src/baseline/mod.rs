@@ -1,0 +1,15 @@
+//! Centralized Chiron: the Experiment-8 baseline.
+//!
+//! Original Chiron's execution control (paper Figure 4 / Figure 6-B): a
+//! single *master* node is the only DBMS client. Workers ask the master for
+//! tasks over message passing (MPI in the paper; typed channels here, same
+//! control-flow shape), the master queues those requests, serves them one at
+//! a time against a *centralized* DBMS (one data node, no replication, one
+//! partition per table), and requires an extra acknowledgement hop when a
+//! worker reports completion. Every proxy step the paper counts in Figure
+//! 6-B exists here: request → master queue → DB → reply → execute → report →
+//! DB → ack.
+
+pub mod master;
+
+pub use master::{ChironConfig, ChironEngine};

@@ -1,0 +1,424 @@
+//! The d-Chiron engine: wires cluster, connectors, supervisors, and workers
+//! into a run-to-completion driver.
+
+use crate::coordinator::failover::{self, SupervisorRole};
+use crate::coordinator::payload::{Payload, RunnerRegistry};
+use crate::coordinator::supervisor::{IdGen, Supervisor};
+use crate::coordinator::worker::{WorkerConfig, WorkerCounters, WorkerNode};
+use crate::coordinator::{schema, workflow::WorkflowSpec};
+use crate::storage::cluster::ClusterConfig;
+use crate::storage::connector::{assign_links, Connector};
+use crate::storage::stats::{AccessKind, AccessStat};
+use crate::storage::DbCluster;
+use crate::util::clock;
+use crate::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Engine deployment parameters (the paper's component-to-node allocation).
+#[derive(Clone)]
+pub struct EngineConfig {
+    /// Worker nodes (W). The WQ gets W partitions.
+    pub workers: usize,
+    /// Threads per worker node (the paper sweeps 12/24/48).
+    pub threads_per_worker: usize,
+    /// SchalaDB data nodes (the paper uses 2).
+    pub data_nodes: usize,
+    /// One backup replica per partition.
+    pub replication: bool,
+    /// Connectors brokering worker↔DBMS traffic.
+    pub connectors: usize,
+    /// Scales nominal task durations to wall time (1.0 = real time; tests
+    /// and examples use ~1e-3 so "60-second tasks" take 60 ms).
+    pub time_scale: f64,
+    /// Tasks fetched per `getREADYtasks`.
+    pub claim_batch: usize,
+    /// Supervisor poll cadence in wall seconds.
+    pub supervisor_poll_secs: f64,
+    /// Secondary supervisor heartbeat timeout in wall seconds.
+    pub heartbeat_timeout_secs: f64,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            workers: 2,
+            threads_per_worker: 2,
+            data_nodes: 2,
+            replication: true,
+            connectors: 2,
+            time_scale: 1.0,
+            claim_batch: 4,
+            supervisor_poll_secs: 0.002,
+            heartbeat_timeout_secs: 0.5,
+            seed: 42,
+        }
+    }
+}
+
+/// Result of a workflow run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Wall-clock makespan in seconds.
+    pub makespan_secs: f64,
+    pub total_tasks: usize,
+    pub executed_tasks: u64,
+    pub failed_tasks: u64,
+    pub claim_races_lost: u64,
+    /// Sum of all DBMS access times across nodes.
+    pub dbms_total_secs: f64,
+    /// The paper's Experiment-5 metric: max per-node sum of access times.
+    pub dbms_max_node_secs: f64,
+    /// Per-kind access stats (Figure 12).
+    pub access_stats: Vec<(AccessKind, AccessStat)>,
+    /// Database resident size at completion.
+    pub db_bytes: usize,
+    /// Whether the primary supervisor was failed over during the run.
+    pub supervisor_failovers: usize,
+}
+
+impl RunReport {
+    /// Percentage of total DBMS time spent in `kind`.
+    pub fn pct(&self, kind: AccessKind) -> f64 {
+        if self.dbms_total_secs <= 0.0 {
+            return 0.0;
+        }
+        self.access_stats
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, s)| 100.0 * s.total_secs / self.dbms_total_secs)
+            .unwrap_or(0.0)
+    }
+}
+
+/// A running workflow: join it for the report, or query `db` live for
+/// steering while it executes.
+pub struct RunningWorkflow {
+    pub db: Arc<DbCluster>,
+    pub done: Arc<AtomicBool>,
+    primary_alive: Arc<AtomicBool>,
+    failovers: Arc<std::sync::atomic::AtomicUsize>,
+    worker_counters: Vec<Arc<WorkerCounters>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    total_tasks: usize,
+    t0: Instant,
+}
+
+impl RunningWorkflow {
+    /// Kill the primary supervisor (failure injection for Experiment-style
+    /// failover demos). The secondary takes over on heartbeat timeout.
+    pub fn kill_primary_supervisor(&self) {
+        self.primary_alive.store(false, Ordering::SeqCst);
+    }
+
+    /// Block until the workflow completes; collect the report.
+    pub fn join(self) -> Result<RunReport> {
+        for h in self.threads {
+            h.join().map_err(|_| crate::Error::Engine("engine thread panicked".into()))?;
+        }
+        let makespan = self.t0.elapsed().as_secs_f64();
+        let executed: u64 = self
+            .worker_counters
+            .iter()
+            .map(|c| c.executed.load(Ordering::Relaxed))
+            .sum();
+        let races: u64 = self
+            .worker_counters
+            .iter()
+            .map(|c| c.claim_races_lost.load(Ordering::Relaxed))
+            .sum();
+        let failures: u64 = self
+            .worker_counters
+            .iter()
+            .map(|c| c.failures.load(Ordering::Relaxed))
+            .sum();
+        Ok(RunReport {
+            makespan_secs: makespan,
+            total_tasks: self.total_tasks,
+            executed_tasks: executed,
+            failed_tasks: failures,
+            claim_races_lost: races,
+            dbms_total_secs: self.db.stats.total_secs(),
+            dbms_max_node_secs: self.db.stats.max_node_secs(),
+            access_stats: self.db.stats.snapshot(),
+            db_bytes: self.db.total_bytes(),
+            supervisor_failovers: self.failovers.load(Ordering::Relaxed),
+        })
+    }
+}
+
+/// The engine itself.
+pub struct DChironEngine {
+    pub config: EngineConfig,
+    pub registry: Arc<RunnerRegistry>,
+}
+
+impl DChironEngine {
+    pub fn new(config: EngineConfig) -> DChironEngine {
+        DChironEngine { config, registry: Arc::new(RunnerRegistry::new()) }
+    }
+
+    pub fn with_registry(config: EngineConfig, registry: RunnerRegistry) -> DChironEngine {
+        DChironEngine { config, registry: Arc::new(registry) }
+    }
+
+    /// Start `wf` with the given activity-1 input tuples; returns a handle
+    /// for live steering plus joining.
+    pub fn start(
+        &self,
+        wf: WorkflowSpec,
+        inputs: Vec<Vec<(String, f64)>>,
+    ) -> Result<RunningWorkflow> {
+        wf.validate()?;
+        let cfg = &self.config;
+
+        // DBManager --start: cluster + schema.
+        let db = DbCluster::start(ClusterConfig {
+            data_nodes: cfg.data_nodes,
+            replication: cfg.replication,
+            clock: clock::wall(),
+        })?;
+        schema::create_schema(&db, cfg.workers)?;
+        schema::register_nodes(&db, cfg.workers, cfg.threads_per_worker)?;
+        failover::register_supervisor_nodes(&db)?;
+
+        // Connectors + worker links (paper's co-location + round-robin).
+        let connectors: Vec<_> = (0..cfg.connectors.max(1) as u32)
+            .map(|i| Connector::new(i, i, db.clone()))
+            .collect();
+        let worker_ids: Vec<u32> = (0..cfg.workers as u32).collect();
+        let links = assign_links(&worker_ids, &connectors)?;
+
+        // Shared state.
+        let ids = Arc::new(IdGen::default());
+        ids.task.store(1, Ordering::Relaxed);
+        ids.field.store(1, Ordering::Relaxed);
+        ids.file.store(1, Ordering::Relaxed);
+        ids.prov.store(1, Ordering::Relaxed);
+        ids.dep.store(1, Ordering::Relaxed);
+        let done = Arc::new(AtomicBool::new(false));
+        let primary_alive = Arc::new(AtomicBool::new(true));
+        let failovers = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let payloads: Arc<Vec<Payload>> =
+            Arc::new(wf.activities.iter().map(|a| a.payload.clone()).collect());
+        let total_tasks = wf.planned_total_tasks();
+
+        // Primary supervisor bootstraps before workers start. It shares the
+        // engine-wide `done` flag so workers stop when it declares
+        // completion.
+        let mut sup = Supervisor::new(db.clone(), wf.clone(), cfg.workers, ids.clone(), cfg.seed);
+        sup.done = done.clone();
+        sup.bootstrap(&inputs)?;
+
+        let t0 = Instant::now();
+        let mut threads = Vec::new();
+
+        // Primary supervisor loop.
+        {
+            let done = done.clone();
+            let alive = primary_alive.clone();
+            let poll = cfg.supervisor_poll_secs;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("supervisor".into())
+                    .spawn(move || {
+                        failover::run_supervisor_loop(
+                            &mut sup,
+                            SupervisorRole::Primary,
+                            done,
+                            alive,
+                            poll,
+                        );
+                    })
+                    .expect("spawn supervisor"),
+            );
+        }
+        // Secondary supervisor: watches the heartbeat, takes over on loss.
+        {
+            let db2 = db.clone();
+            let wf2 = wf.clone();
+            let ids2 = ids.clone();
+            let done = done.clone();
+            let alive = primary_alive.clone();
+            let failovers = failovers.clone();
+            let workers = cfg.workers;
+            let seed = cfg.seed ^ 0x5EC0_5EC0;
+            let poll = cfg.supervisor_poll_secs;
+            let timeout = cfg.heartbeat_timeout_secs;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("secondary-supervisor".into())
+                    .spawn(move || {
+                        failover::run_secondary_loop(
+                            db2, wf2, workers, ids2, seed, done, alive, failovers, poll, timeout,
+                        );
+                    })
+                    .expect("spawn secondary supervisor"),
+            );
+        }
+
+        // Worker nodes.
+        let mut worker_counters = Vec::new();
+        for (w, link) in links.into_iter().enumerate() {
+            let wn = Arc::new(WorkerNode::new(
+                WorkerConfig {
+                    worker_id: w as u32,
+                    threads: cfg.threads_per_worker,
+                    claim_batch: cfg.claim_batch,
+                    time_scale: cfg.time_scale,
+                    idle_backoff_secs: (cfg.supervisor_poll_secs / 2.0).max(0.0005),
+                    max_failtries: 3,
+                    seed: cfg.seed.wrapping_add(w as u64),
+                },
+                Arc::new(link),
+                payloads.clone(),
+                self.registry.clone(),
+                ids.clone(),
+                done.clone(),
+            ));
+            worker_counters.push(wn.counters.clone());
+            threads.extend(wn.spawn());
+        }
+
+        Ok(RunningWorkflow {
+            db,
+            done,
+            primary_alive,
+            failovers,
+            worker_counters,
+            threads,
+            total_tasks,
+            t0,
+        })
+    }
+
+    /// Run to completion (start + join).
+    pub fn run(&self, wf: WorkflowSpec, inputs: Vec<Vec<(String, f64)>>) -> Result<RunReport> {
+        self.start(wf, inputs)?.join()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::payload::SyntheticKind;
+    use crate::coordinator::workflow::{ActivitySpec, Operator};
+    use crate::storage::value::Value;
+
+    fn fast_cfg(workers: usize, threads: usize) -> EngineConfig {
+        EngineConfig {
+            workers,
+            threads_per_worker: threads,
+            time_scale: 0.001,
+            supervisor_poll_secs: 0.001,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn end_to_end_sleep_workflow() {
+        let wf = WorkflowSpec::new("sleepy", 24)
+            .activity(ActivitySpec::new("a1", Operator::Map, Payload::Sleep { mean_secs: 1.0 }))
+            .activity(ActivitySpec::new("a2", Operator::Map, Payload::Sleep { mean_secs: 1.0 }));
+        let engine = DChironEngine::new(fast_cfg(3, 2));
+        let report = engine.run(wf, vec![vec![]; 24]).unwrap();
+        assert_eq!(report.total_tasks, 48);
+        assert_eq!(report.executed_tasks, 48);
+        assert_eq!(report.failed_tasks, 0);
+        assert_eq!(report.supervisor_failovers, 0);
+        assert!(report.dbms_total_secs > 0.0);
+        assert!(report.db_bytes > 0);
+    }
+
+    #[test]
+    fn end_to_end_domain_dataflow() {
+        // quadratic sweep -> filter on y -> reduce
+        let wf = WorkflowSpec::new("quad", 12)
+            .activity(
+                ActivitySpec::new(
+                    "sweep",
+                    Operator::Map,
+                    Payload::Synthetic { kind: SyntheticKind::Quadratic },
+                )
+                .with_fields(&["x", "y"]),
+            )
+            .activity(ActivitySpec::new(
+                "gather",
+                Operator::Reduce { fanin: 4 },
+                Payload::Sleep { mean_secs: 0.5 },
+            ));
+        let engine = DChironEngine::new(fast_cfg(2, 2));
+        let running = engine
+            .start(
+                wf,
+                (0..12)
+                    .map(|i| vec![("a".into(), 1.0), ("b".into(), i as f64), ("c".into(), 0.0)])
+                    .collect(),
+            )
+            .unwrap();
+        let db = running.db.clone();
+        let report = running.join().unwrap();
+        assert_eq!(report.executed_tasks, 15); // 12 + 3 reducers
+        // every sweep task produced x and y
+        let rs = db
+            .query(
+                "SELECT COUNT(*) FROM taskfield WHERE direction = 'out' AND actid = 1",
+            )
+            .unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(24));
+        // reducers received inputs from all 4 producers
+        let rs = db
+            .query(
+                "SELECT taskid, COUNT(*) n FROM taskfield WHERE direction = 'in' AND actid = 2 \
+                 GROUP BY taskid ORDER BY taskid",
+            )
+            .unwrap();
+        assert_eq!(rs.rows.len(), 3);
+        for r in &rs.rows {
+            assert_eq!(r.values[1], Value::Int(8)); // 4 producers x (x, y)
+        }
+        // provenance chain is queryable
+        let rs = db
+            .query(
+                "SELECT COUNT(*) FROM provenance p JOIN workqueue t ON p.taskid = t.taskid \
+                 WHERE p.kind = 'wasGeneratedBy' AND t.actid = 1",
+            )
+            .unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(24));
+    }
+
+    #[test]
+    fn live_steering_queries_during_run() {
+        let wf = WorkflowSpec::new("live", 32).activity(ActivitySpec::new(
+            "a1",
+            Operator::Map,
+            Payload::Sleep { mean_secs: 5.0 },
+        ));
+        let engine = DChironEngine::new(EngineConfig {
+            time_scale: 0.004, // 20ms tasks
+            ..fast_cfg(2, 2)
+        });
+        let running = engine.start(wf, vec![vec![]; 32]).unwrap();
+        // monitor while running (Q4-style: how many tasks left?)
+        let mut saw_inflight = false;
+        for _ in 0..200 {
+            let rs = running
+                .db
+                .query(
+                    "SELECT COUNT(*) FROM workqueue WHERE status != 'FINISHED'",
+                )
+                .unwrap();
+            let left = rs.rows[0].values[0].as_i64().unwrap();
+            if left > 0 && left < 32 {
+                saw_inflight = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let report = running.join().unwrap();
+        assert!(saw_inflight, "steering query never observed the run in flight");
+        assert_eq!(report.executed_tasks, 32);
+    }
+}

@@ -1,0 +1,170 @@
+//! Supervisor failover: heartbeats and secondary takeover.
+//!
+//! The primary supervisor updates its heartbeat row on every poll. The
+//! secondary watches that row; when it goes stale past the timeout it
+//! rebuilds the dependency graph from the database ([`Supervisor::
+//! rebuild_from_db`]) and becomes the active supervisor — the paper's
+//! "secondary supervisor eliminates the single point of failure".
+
+use crate::coordinator::supervisor::{IdGen, Supervisor};
+use crate::coordinator::workflow::WorkflowSpec;
+use crate::storage::DbCluster;
+use crate::Result;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// node-table row ids for the two supervisors.
+pub const PRIMARY_NODE_ROW: i64 = 100_000;
+pub const SECONDARY_NODE_ROW: i64 = 100_001;
+
+/// Which supervisor a loop is running as.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SupervisorRole {
+    Primary,
+    Secondary,
+}
+
+/// Register the supervisor and secondary-supervisor rows in `node`.
+pub fn register_supervisor_nodes(db: &DbCluster) -> Result<()> {
+    let now = db.clock.now();
+    db.execute(&format!(
+        "INSERT INTO node (nodeid, hostname, cores, role, status, heartbeat) VALUES \
+         ({PRIMARY_NODE_ROW}, 'supervisor', 1, 'supervisor', 'UP', {now}), \
+         ({SECONDARY_NODE_ROW}, 'secondary-supervisor', 1, 'secondary_supervisor', 'UP', {now})"
+    ))?;
+    Ok(())
+}
+
+/// Primary (or promoted secondary) supervisor loop: poll readiness, beat the
+/// heart, exit when the workflow completes or `alive` is flipped off
+/// (failure injection).
+pub fn run_supervisor_loop(
+    sup: &mut Supervisor,
+    role: SupervisorRole,
+    done: Arc<AtomicBool>,
+    alive: Arc<AtomicBool>,
+    poll_secs: f64,
+) {
+    let node_row = match role {
+        SupervisorRole::Primary => PRIMARY_NODE_ROW,
+        SupervisorRole::Secondary => SECONDARY_NODE_ROW,
+    };
+    while !done.load(Ordering::SeqCst) {
+        if role == SupervisorRole::Primary && !alive.load(Ordering::SeqCst) {
+            // crashed: stop polling AND stop heartbeating
+            return;
+        }
+        match sup.poll() {
+            Ok(r) => {
+                if r.workflow_done {
+                    return;
+                }
+            }
+            Err(e) => log::error!("supervisor poll: {e}"),
+        }
+        let _ = sup.heartbeat(node_row);
+        std::thread::sleep(std::time::Duration::from_secs_f64(poll_secs));
+    }
+}
+
+/// Secondary supervisor loop: watch the primary's heartbeat; on timeout,
+/// rebuild state from the database and take over as the active supervisor.
+#[allow(clippy::too_many_arguments)]
+pub fn run_secondary_loop(
+    db: Arc<DbCluster>,
+    wf: WorkflowSpec,
+    workers: usize,
+    ids: Arc<IdGen>,
+    seed: u64,
+    done: Arc<AtomicBool>,
+    primary_alive: Arc<AtomicBool>,
+    failovers: Arc<AtomicUsize>,
+    poll_secs: f64,
+    timeout_secs: f64,
+) {
+    loop {
+        if done.load(Ordering::SeqCst) {
+            return;
+        }
+        // Heartbeat staleness check against DB time.
+        let stale = match db.query(&format!(
+            "SELECT heartbeat FROM node WHERE nodeid = {PRIMARY_NODE_ROW}"
+        )) {
+            Ok(rs) => {
+                let hb = rs
+                    .rows
+                    .first()
+                    .and_then(|r| r.values[0].as_f64())
+                    .unwrap_or(0.0);
+                db.clock.now() - hb > timeout_secs
+            }
+            Err(_) => false,
+        };
+        // Heartbeat staleness is the trigger (a genuinely crashed primary
+        // cannot flip any flag); `primary_alive` only makes the injected-kill
+        // tests deterministic by letting the secondary react immediately.
+        if stale || !primary_alive.load(Ordering::SeqCst) {
+            failovers.fetch_add(1, Ordering::SeqCst);
+            log::warn!("secondary supervisor taking over");
+            let _ = db.execute(&format!(
+                "UPDATE node SET status = 'DOWN' WHERE nodeid = {PRIMARY_NODE_ROW}"
+            ));
+            let mut sup = Supervisor::new(db.clone(), wf.clone(), workers, ids.clone(), seed);
+            sup.done = done.clone();
+            if let Err(e) = sup.rebuild_from_db() {
+                log::error!("secondary rebuild failed: {e}");
+                continue;
+            }
+            run_supervisor_loop(
+                &mut sup,
+                SupervisorRole::Secondary,
+                done.clone(),
+                Arc::new(AtomicBool::new(true)),
+                poll_secs,
+            );
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(poll_secs * 2.0));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{DChironEngine, EngineConfig};
+    use crate::coordinator::payload::Payload;
+    use crate::coordinator::workflow::{ActivitySpec, Operator};
+    use crate::storage::value::Value;
+
+    /// Kill the primary supervisor mid-run: the secondary must take over and
+    /// the workflow must still complete.
+    #[test]
+    fn secondary_takes_over_and_finishes() {
+        let wf = WorkflowSpec::new("failover", 30)
+            .activity(ActivitySpec::new("a1", Operator::Map, Payload::Sleep { mean_secs: 2.0 }))
+            .activity(ActivitySpec::new("a2", Operator::Map, Payload::Sleep { mean_secs: 2.0 }));
+        let engine = DChironEngine::new(EngineConfig {
+            workers: 2,
+            threads_per_worker: 2,
+            time_scale: 0.005, // 10ms tasks
+            supervisor_poll_secs: 0.002,
+            heartbeat_timeout_secs: 0.05,
+            ..Default::default()
+        });
+        let running = engine.start(wf, vec![vec![]; 30]).unwrap();
+        // let activity 1 get going, then kill the primary
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        running.kill_primary_supervisor();
+        let db = running.db.clone();
+        let report = running.join().unwrap();
+        assert_eq!(report.supervisor_failovers, 1);
+        assert_eq!(report.executed_tasks, 60);
+        let rs = db.query("SELECT status FROM workflow").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::str("FINISHED"));
+        // primary marked DOWN in the node table
+        let rs = db
+            .query(&format!("SELECT status FROM node WHERE nodeid = {PRIMARY_NODE_ROW}"))
+            .unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::str("DOWN"));
+    }
+}

@@ -1,0 +1,45 @@
+//! The d-Chiron workflow engine: SchalaDB's coordinator layer.
+//!
+//! Everything the paper's §4 describes lives here:
+//!
+//! - [`schema`]: the d-Chiron database (workqueue per Figure 3, activity and
+//!   workflow catalogs, domain `taskfield`s, file pointers, provenance, node
+//!   heartbeats), created with `PARTITION BY HASH(workerid) PARTITIONS W`.
+//! - [`workflow`]: workflow specifications — chained activities with
+//!   Chiron's algebraic operators (Map / SplitMap / Reduce / Filter) and a
+//!   per-activity *payload* describing the actual scientific computation.
+//! - [`supervisor`]: generates tasks, assigns `worker_id` circularly,
+//!   propagates readiness along the dependency graph, detects activity and
+//!   workflow completion; the *secondary supervisor* takes over on
+//!   heartbeat loss ([`failover`]).
+//! - [`worker`]: worker nodes — `T` threads each pulling tasks straight from
+//!   the DBMS (`getREADYtasks` → claim → run → `updateToFINISHED`), with
+//!   domain-data and provenance capture on the way.
+//! - [`engine`]: wires cluster + connectors + supervisor + workers into a
+//!   run-to-completion driver and produces a [`engine::RunReport`].
+
+pub mod engine;
+pub mod failover;
+pub mod payload;
+pub mod schema;
+pub mod supervisor;
+pub mod worker;
+pub mod workflow;
+
+pub use engine::{DChironEngine, EngineConfig, RunReport};
+pub use payload::{Payload, TaskOutput};
+pub use workflow::{ActivitySpec, Operator, WorkflowSpec};
+
+/// Task lifecycle states as stored in `workqueue.status`.
+pub mod status {
+    /// Dependencies not yet satisfied.
+    pub const WAITING: &str = "WAITING";
+    /// Eligible to be claimed by its worker.
+    pub const READY: &str = "READY";
+    /// Claimed and executing.
+    pub const RUNNING: &str = "RUNNING";
+    /// Completed successfully.
+    pub const FINISHED: &str = "FINISHED";
+    /// Failed after exhausting retries.
+    pub const FAILED: &str = "FAILED";
+}

@@ -1,0 +1,320 @@
+//! Task payloads: what a task actually computes.
+//!
+//! The paper's synthetic workloads only need controllable durations
+//! ([`Payload::Sleep`], [`Payload::Busy`]); the real Risers case study runs
+//! the AOT-compiled JAX/Pallas fatigue computation through a
+//! [`TaskRunner`] registered by the runtime layer (keeps `coordinator`
+//! decoupled from PJRT so unit tests never need artifacts).
+
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+use rustc_hash::FxHashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// What each task of an activity computes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Sleep for ~`mean_secs` (scaled by the engine's `time_scale`). This is
+    /// how the paper's synthetic workloads model "application computation".
+    Sleep { mean_secs: f64 },
+    /// Spin the CPU for ~`mean_secs` (scaled): contention-realistic variant.
+    Busy { mean_secs: f64 },
+    /// Pure-Rust analytic payload: evaluates a deterministic function of the
+    /// task's numeric inputs and produces named outputs. Used for workflows
+    /// exercising steering on domain values without PJRT.
+    Synthetic { kind: SyntheticKind },
+    /// Run an AOT-compiled artifact through a registered [`TaskRunner`]
+    /// (the riser fatigue kernel in the end-to-end example).
+    Artifact { runner: String },
+}
+
+/// Built-in synthetic computations.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SyntheticKind {
+    /// Copies inputs to outputs unchanged (staging/gathering activities
+    /// that must preserve the dataflow).
+    PassThrough,
+    /// y = a*x^2 + b*x + c over the inputs (quickstart-style sweep).
+    Quadratic,
+    /// Cheap stand-in for the riser stress response: combines environment
+    /// inputs (wind, wave, depth) into curvature components cx, cy, cz.
+    RiserStress,
+    /// Wear-and-tear factor f1 from curvature components.
+    WearTear,
+}
+
+/// Inputs handed to a runner: the task row basics plus its domain inputs.
+#[derive(Clone, Debug)]
+pub struct TaskCtx {
+    pub taskid: i64,
+    pub actid: i64,
+    pub workerid: i64,
+    /// Input fields (from `taskfield` rows with direction 'in').
+    pub inputs: Vec<(String, f64)>,
+    /// Deterministic per-task seed.
+    pub seed: u64,
+    /// Nominal duration from the workqueue row (seconds, unscaled).
+    pub duration: f64,
+    /// Engine time scale (1.0 = real time).
+    pub time_scale: f64,
+}
+
+impl TaskCtx {
+    pub fn input(&self, name: &str) -> Option<f64> {
+        self.inputs.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+}
+
+/// What a task produced.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TaskOutput {
+    /// Named numeric outputs (ingested into `taskfield`, direction 'out').
+    pub fields: Vec<(String, f64)>,
+    /// Raw output files (path, bytes) registered in `file`.
+    pub files: Vec<(String, i64)>,
+    /// One-line stdout summary stored in the WQ row (paper Figure 3).
+    pub stdout: String,
+}
+
+/// Executes one task. Implementations must be thread-safe: every worker
+/// thread calls into the same runner.
+pub trait TaskRunner: Send + Sync {
+    fn run(&self, ctx: &TaskCtx) -> Result<TaskOutput>;
+}
+
+/// Registry mapping runner names to implementations.
+#[derive(Default, Clone)]
+pub struct RunnerRegistry {
+    runners: FxHashMap<String, Arc<dyn TaskRunner>>,
+}
+
+impl RunnerRegistry {
+    pub fn new() -> RunnerRegistry {
+        RunnerRegistry::default()
+    }
+
+    pub fn register(&mut self, name: &str, runner: Arc<dyn TaskRunner>) {
+        self.runners.insert(name.to_string(), runner);
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<dyn TaskRunner>> {
+        self.runners
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::Engine(format!("no task runner registered as '{name}'")))
+    }
+}
+
+/// Execute a payload. `Sleep`/`Busy`/`Synthetic` are handled inline;
+/// `Artifact` dispatches through the registry.
+pub fn execute(payload: &Payload, ctx: &TaskCtx, registry: &RunnerRegistry) -> Result<TaskOutput> {
+    match payload {
+        Payload::Sleep { .. } => {
+            let secs = (ctx.duration * ctx.time_scale).max(0.0);
+            if secs > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+            }
+            Ok(TaskOutput {
+                fields: vec![],
+                files: vec![],
+                stdout: format!("slept {:.3}s (nominal {:.1}s)", secs, ctx.duration),
+            })
+        }
+        Payload::Busy { .. } => {
+            let secs = (ctx.duration * ctx.time_scale).max(0.0);
+            let t0 = Instant::now();
+            let mut acc = ctx.seed;
+            while t0.elapsed().as_secs_f64() < secs {
+                // branch-free mixing loop; cheap but not optimizable away
+                for _ in 0..512 {
+                    acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                }
+                std::hint::black_box(acc);
+            }
+            Ok(TaskOutput {
+                fields: vec![],
+                files: vec![],
+                stdout: format!("burned {:.3}s", secs),
+            })
+        }
+        Payload::Synthetic { kind } => run_synthetic(*kind, ctx),
+        Payload::Artifact { runner } => registry.get(runner)?.run(ctx),
+    }
+}
+
+fn run_synthetic(kind: SyntheticKind, ctx: &TaskCtx) -> Result<TaskOutput> {
+    let mut rng = Rng::new(ctx.seed);
+    match kind {
+        SyntheticKind::PassThrough => Ok(TaskOutput {
+            fields: ctx.inputs.clone(),
+            files: vec![],
+            stdout: format!("passed {} fields", ctx.inputs.len()),
+        }),
+        SyntheticKind::Quadratic => {
+            let a = ctx.input("a").unwrap_or_else(|| rng.uniform(0.0, 3.0));
+            let b = ctx.input("b").unwrap_or_else(|| rng.uniform(0.0, 40.0));
+            let c = ctx.input("c").unwrap_or_else(|| rng.uniform(0.0, 30.0));
+            let x = rng.uniform(0.0, 10.0);
+            let y = a * x * x + b * x + c;
+            Ok(TaskOutput {
+                fields: vec![("x".into(), x), ("y".into(), y)],
+                files: vec![],
+                stdout: format!("x={x:.2} y={y:.2}"),
+            })
+        }
+        SyntheticKind::RiserStress => {
+            let wind = ctx.input("wind").unwrap_or_else(|| rng.uniform(0.0, 30.0));
+            let wave = ctx.input("wave").unwrap_or_else(|| rng.uniform(0.05, 0.4));
+            let depth = ctx.input("depth").unwrap_or_else(|| rng.uniform(500.0, 2500.0));
+            // toy mode-superposition: curvature components from the inputs
+            let cx = (wind * wave).sin().abs() * depth.sqrt() / 50.0;
+            let cy = (wind + 1.0).ln() * wave * 2.0;
+            let cz = (depth / 1000.0) * wave.powi(2) * 10.0;
+            Ok(TaskOutput {
+                fields: vec![("cx".into(), cx), ("cy".into(), cy), ("cz".into(), cz)],
+                files: vec![(
+                    format!("/data/riser/stress_{:06}.seg", ctx.taskid),
+                    (4096.0 + depth) as i64,
+                )],
+                stdout: format!("cx={cx:.3} cy={cy:.3} cz={cz:.3}"),
+            })
+        }
+        SyntheticKind::WearTear => {
+            let cx = ctx.input("cx").unwrap_or(0.1);
+            let cy = ctx.input("cy").unwrap_or(0.1);
+            let cz = ctx.input("cz").unwrap_or(0.1);
+            let f1 = 1.0 - (-(cx * cx + cy * cy + cz * cz)).exp();
+            Ok(TaskOutput {
+                fields: vec![("f1".into(), f1)],
+                files: vec![],
+                stdout: format!("f1={f1:.4}"),
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(inputs: Vec<(String, f64)>) -> TaskCtx {
+        TaskCtx {
+            taskid: 1,
+            actid: 1,
+            workerid: 0,
+            inputs,
+            seed: 42,
+            duration: 0.01,
+            time_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn sleep_payload_sleeps_scaled() {
+        let mut c = ctx(vec![]);
+        c.duration = 0.05;
+        c.time_scale = 0.1; // 5ms
+        let t0 = Instant::now();
+        let out =
+            execute(&Payload::Sleep { mean_secs: 0.05 }, &c, &RunnerRegistry::new()).unwrap();
+        assert!(t0.elapsed().as_secs_f64() >= 0.004);
+        assert!(out.stdout.contains("slept"));
+    }
+
+    #[test]
+    fn busy_payload_burns_cpu() {
+        let mut c = ctx(vec![]);
+        c.duration = 0.01;
+        let t0 = Instant::now();
+        execute(&Payload::Busy { mean_secs: 0.01 }, &c, &RunnerRegistry::new()).unwrap();
+        assert!(t0.elapsed().as_secs_f64() >= 0.009);
+    }
+
+    #[test]
+    fn quadratic_uses_inputs() {
+        let c = ctx(vec![("a".into(), 1.0), ("b".into(), 0.0), ("c".into(), 0.0)]);
+        let out = execute(
+            &Payload::Synthetic { kind: SyntheticKind::Quadratic },
+            &c,
+            &RunnerRegistry::new(),
+        )
+        .unwrap();
+        let x = out.fields.iter().find(|(n, _)| n == "x").unwrap().1;
+        let y = out.fields.iter().find(|(n, _)| n == "y").unwrap().1;
+        assert!((y - x * x).abs() < 1e-9);
+    }
+
+    #[test]
+    fn riser_chain_produces_expected_fields() {
+        let c = ctx(vec![("wind".into(), 10.0), ("wave".into(), 0.2), ("depth".into(), 1000.0)]);
+        let stress = execute(
+            &Payload::Synthetic { kind: SyntheticKind::RiserStress },
+            &c,
+            &RunnerRegistry::new(),
+        )
+        .unwrap();
+        let names: Vec<&str> = stress.fields.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["cx", "cy", "cz"]);
+        assert_eq!(stress.files.len(), 1);
+
+        let c2 = ctx(stress.fields.clone());
+        let wear = execute(
+            &Payload::Synthetic { kind: SyntheticKind::WearTear },
+            &c2,
+            &RunnerRegistry::new(),
+        )
+        .unwrap();
+        let f1 = wear.fields[0].1;
+        assert!((0.0..=1.0).contains(&f1));
+    }
+
+    #[test]
+    fn determinism_by_seed() {
+        let c = ctx(vec![]);
+        let a = execute(
+            &Payload::Synthetic { kind: SyntheticKind::Quadratic },
+            &c,
+            &RunnerRegistry::new(),
+        )
+        .unwrap();
+        let b = execute(
+            &Payload::Synthetic { kind: SyntheticKind::Quadratic },
+            &c,
+            &RunnerRegistry::new(),
+        )
+        .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn missing_runner_is_an_error() {
+        let c = ctx(vec![]);
+        let e = execute(
+            &Payload::Artifact { runner: "riser".into() },
+            &c,
+            &RunnerRegistry::new(),
+        );
+        assert!(e.is_err());
+    }
+
+    struct Echo;
+    impl TaskRunner for Echo {
+        fn run(&self, ctx: &TaskCtx) -> Result<TaskOutput> {
+            Ok(TaskOutput {
+                fields: vec![("echo".into(), ctx.taskid as f64)],
+                files: vec![],
+                stdout: "echo".into(),
+            })
+        }
+    }
+
+    #[test]
+    fn registry_dispatch() {
+        let mut reg = RunnerRegistry::new();
+        reg.register("echo", Arc::new(Echo));
+        let c = ctx(vec![]);
+        let out = execute(&Payload::Artifact { runner: "echo".into() }, &c, &reg).unwrap();
+        assert_eq!(out.fields[0].1, 1.0);
+    }
+}

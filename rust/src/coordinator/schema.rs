@@ -1,0 +1,121 @@
+//! The d-Chiron database schema.
+//!
+//! One database integrates execution, domain, and provenance data — the
+//! paper's central design point. The `workqueue` relation mirrors Figure 3;
+//! `taskfield` carries extracted domain values (the paper's "registering
+//! pointers to raw data files with some relevant raw data"); `file` holds
+//! the raw-file pointers; `provenance` is the W3C-PROV-style activity/entity
+//! record; `node` powers the monitoring queries (Q1–Q3).
+
+use crate::storage::DbCluster;
+use crate::Result;
+
+/// Create all d-Chiron relations for a deployment with `workers` worker
+/// nodes. The WQ is hash-partitioned on `workerid` into exactly `workers`
+/// partitions (paper §3.2: "WQ has W partitions").
+pub fn create_schema(db: &DbCluster, workers: usize) -> Result<()> {
+    let w = workers.max(1);
+    db.exec(
+        "CREATE TABLE workflow (wfid INT NOT NULL, name TEXT, status TEXT, \
+         starttime FLOAT, endtime FLOAT) PRIMARY KEY (wfid)",
+    )?;
+    db.exec(
+        "CREATE TABLE activity (actid INT NOT NULL, wfid INT NOT NULL, name TEXT, \
+         operator TEXT, ord INT, status TEXT, tasks_total INT, tasks_done INT) \
+         PRIMARY KEY (actid)",
+    )?;
+    db.exec(&format!(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, actid INT NOT NULL, \
+         wfid INT NOT NULL, workerid INT NOT NULL, coreid INT, cmd TEXT, \
+         workspace TEXT, failtries INT, stdout TEXT, status TEXT, \
+         duration FLOAT, starttime FLOAT, endtime FLOAT) \
+         PARTITION BY HASH(workerid) PARTITIONS {w} \
+         PRIMARY KEY (taskid) INDEX (status)"
+    ))?;
+    // Domain data: field values consumed/produced by tasks. Partitioned by
+    // taskid so ingestion from many workers spreads across data nodes.
+    db.exec(&format!(
+        "CREATE TABLE taskfield (fieldid INT NOT NULL, taskid INT NOT NULL, \
+         actid INT, field TEXT, value FLOAT, direction TEXT) \
+         PARTITION BY HASH(taskid) PARTITIONS {w} \
+         PRIMARY KEY (fieldid) INDEX (taskid)"
+    ))?;
+    // Raw data file pointers (paper §2.3).
+    db.exec(&format!(
+        "CREATE TABLE file (fileid INT NOT NULL, taskid INT NOT NULL, path TEXT, \
+         size_bytes INT, direction TEXT) \
+         PARTITION BY HASH(taskid) PARTITIONS {w} \
+         PRIMARY KEY (fileid) INDEX (taskid)"
+    ))?;
+    // W3C-PROV-style records: used / wasGeneratedBy / wasDerivedFrom edges.
+    db.exec(&format!(
+        "CREATE TABLE provenance (pid INT NOT NULL, taskid INT NOT NULL, \
+         actid INT, kind TEXT, entity TEXT, at FLOAT) \
+         PARTITION BY HASH(taskid) PARTITIONS {w} \
+         PRIMARY KEY (pid) INDEX (taskid)"
+    ))?;
+    // Computing nodes + heartbeats (availability + monitoring queries).
+    db.exec(
+        "CREATE TABLE node (nodeid INT NOT NULL, hostname TEXT, cores INT, \
+         role TEXT, status TEXT, heartbeat FLOAT) PRIMARY KEY (nodeid)",
+    )?;
+    // Task dependency edges (fan-in > 1 needs more than `dependson`).
+    db.exec(&format!(
+        "CREATE TABLE taskdep (depid INT NOT NULL, taskid INT NOT NULL, dep INT NOT NULL) \
+         PARTITION BY HASH(taskid) PARTITIONS {w} \
+         PRIMARY KEY (depid) INDEX (taskid)"
+    ))?;
+    Ok(())
+}
+
+/// Register the computing nodes of the deployment in the `node` relation.
+pub fn register_nodes(db: &DbCluster, workers: usize, threads_per_worker: usize) -> Result<()> {
+    let now = db.clock.now();
+    let mut values = Vec::with_capacity(workers);
+    for wid in 0..workers {
+        values.push(format!(
+            "({wid}, 'node{wid:03}', {threads_per_worker}, 'worker', 'UP', {now})"
+        ));
+    }
+    db.execute(&format!(
+        "INSERT INTO node (nodeid, hostname, cores, role, status, heartbeat) VALUES {}",
+        values.join(", ")
+    ))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::cluster::ClusterConfig;
+    use crate::storage::value::Value;
+
+    #[test]
+    fn schema_creates_all_relations_with_w_partitions() {
+        let db = DbCluster::start(ClusterConfig::default()).unwrap();
+        create_schema(&db, 8).unwrap();
+        let tables = db.tables();
+        for t in ["workflow", "activity", "workqueue", "taskfield", "file", "provenance", "node", "taskdep"] {
+            assert!(tables.contains(&t.to_string()), "missing table {t}");
+        }
+        assert_eq!(db.table_def("workqueue").unwrap().num_partitions(), 8);
+        assert_eq!(db.table_def("workflow").unwrap().num_partitions(), 1);
+    }
+
+    #[test]
+    fn node_registration() {
+        let db = DbCluster::start(ClusterConfig::default()).unwrap();
+        create_schema(&db, 3).unwrap();
+        register_nodes(&db, 3, 24).unwrap();
+        let rs = db.query("SELECT COUNT(*), MIN(cores) FROM node WHERE status = 'UP'").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(3));
+        assert_eq!(rs.rows[0].values[1], Value::Int(24));
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one_partition() {
+        let db = DbCluster::start(ClusterConfig::default()).unwrap();
+        create_schema(&db, 0).unwrap();
+        assert_eq!(db.table_def("workqueue").unwrap().num_partitions(), 1);
+    }
+}

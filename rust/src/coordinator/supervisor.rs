@@ -1,0 +1,719 @@
+//! The supervisor: task generation, dependency-driven readiness, completion
+//! detection, heartbeats.
+//!
+//! Paper §3.1: "*Supervisor* is responsible for adding tasks to the WQ.
+//! *Secondary supervisor* eliminates the single point of failure by becoming
+//! the main supervisor in case the original main supervisor crashes."
+//!
+//! The supervisor generates the whole task graph up front (so the WQ shows
+//! WAITING/READY rows for downstream activities while earlier ones run,
+//! exactly like the paper's Figure 3 excerpt), assigns `worker_id`
+//! circularly (§4 "the supervisor circularly assigns a worker id to each
+//! task"), and then drives readiness: when a task finishes, its dependents'
+//! counters drop; at zero the dependent's inputs are ingested (producer
+//! outputs become consumer inputs in `taskfield`) and its WQ row flips to
+//! READY. All of that state is *also* persisted (`taskdep`), so a secondary
+//! supervisor can rebuild the graph from the database and take over.
+
+use crate::coordinator::payload::Payload;
+use crate::coordinator::status;
+use crate::coordinator::workflow::{Operator, WorkflowSpec};
+use crate::storage::{AccessKind, DbCluster};
+use crate::util::rng::Rng;
+use crate::Result;
+use rustc_hash::{FxHashMap, FxHashSet};
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::Arc;
+
+/// Monotone id generators shared by supervisor and workers.
+#[derive(Default)]
+pub struct IdGen {
+    pub task: AtomicI64,
+    pub field: AtomicI64,
+    pub file: AtomicI64,
+    pub prov: AtomicI64,
+    pub dep: AtomicI64,
+}
+
+impl IdGen {
+    pub fn next(counter: &AtomicI64) -> i64 {
+        counter.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+/// In-memory dependency graph (rebuildable from `taskdep`).
+#[derive(Default)]
+struct DepGraph {
+    /// task -> number of unfinished dependencies
+    remaining: FxHashMap<i64, usize>,
+    /// task -> dependents
+    dependents: FxHashMap<i64, Vec<i64>>,
+    /// task -> its dependencies (for input ingestion)
+    deps: FxHashMap<i64, Vec<i64>>,
+    /// task -> activity index (0-based)
+    task_act: FxHashMap<i64, usize>,
+    finished: FxHashSet<i64>,
+}
+
+/// The supervisor. Drive it with [`Supervisor::bootstrap`] (primary only)
+/// then repeated [`Supervisor::poll`] calls until it reports completion.
+pub struct Supervisor {
+    db: Arc<DbCluster>,
+    wf: WorkflowSpec,
+    workers: usize,
+    node_id: u32,
+    rng: Rng,
+    graph: DepGraph,
+    wfid: i64,
+    ids: Arc<IdGen>,
+    /// Flipped when the workflow reaches a terminal state.
+    pub done: Arc<AtomicBool>,
+    /// Tasks that finished but whose dependents' bookkeeping isn't flushed.
+    batch_limit: usize,
+}
+
+/// Per-poll progress summary.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PollReport {
+    pub newly_finished: usize,
+    pub newly_ready: usize,
+    pub filtered_out: usize,
+    pub workflow_done: bool,
+}
+
+impl Supervisor {
+    pub fn new(
+        db: Arc<DbCluster>,
+        wf: WorkflowSpec,
+        workers: usize,
+        ids: Arc<IdGen>,
+        seed: u64,
+    ) -> Supervisor {
+        Supervisor {
+            db,
+            wf,
+            workers: workers.max(1),
+            node_id: u32::MAX, // supervisor's stat bucket
+            rng: Rng::new(seed),
+            graph: DepGraph::default(),
+            wfid: 1,
+            ids,
+            done: Arc::new(AtomicBool::new(false)),
+            batch_limit: 256,
+        }
+    }
+
+    pub fn wfid(&self) -> i64 {
+        self.wfid
+    }
+
+    /// Mean nominal duration for tasks of an activity.
+    fn activity_mean(&self, act: usize) -> f64 {
+        match self.wf.activities[act].payload {
+            Payload::Sleep { mean_secs } | Payload::Busy { mean_secs } => mean_secs,
+            _ => 0.0,
+        }
+    }
+
+    /// Generate the workflow, activity, task, dependency, and input rows.
+    ///
+    /// `inputs` are the parameter tuples of activity 1 (may be empty vecs
+    /// for purely synthetic duration workloads); its length must equal the
+    /// spec's input cardinality.
+    pub fn bootstrap(&mut self, inputs: &[Vec<(String, f64)>]) -> Result<()> {
+        self.wf.validate()?;
+        assert_eq!(
+            inputs.len(),
+            self.wf.input_cardinality,
+            "input tuples must match the spec cardinality"
+        );
+        let now = self.db.clock.now();
+        self.db.execute(&format!(
+            "INSERT INTO workflow (wfid, name, status, starttime) \
+             VALUES ({}, '{}', 'RUNNING', {now})",
+            self.wfid, self.wf.name
+        ))?;
+
+        // Activity rows.
+        let counts = self.wf.planned_task_counts();
+        let mut act_values = Vec::new();
+        for (i, a) in self.wf.activities.iter().enumerate() {
+            act_values.push(format!(
+                "({}, {}, '{}', '{}', {}, '{}', {}, 0)",
+                i + 1,
+                self.wfid,
+                a.name,
+                a.operator.name(),
+                i + 1,
+                if i == 0 { "RUNNING" } else { "WAITING" },
+                counts[i]
+            ));
+        }
+        self.db.execute(&format!(
+            "INSERT INTO activity (actid, wfid, name, operator, ord, status, tasks_total, tasks_done) VALUES {}",
+            act_values.join(", ")
+        ))?;
+
+        // Task graph, activity by activity.
+        let mut worker_cursor = 0usize;
+        let mut prev_tasks: Vec<i64> = Vec::new();
+        for (ai, act) in self.wf.activities.iter().enumerate().collect::<Vec<_>>() {
+            let n_tasks = counts[ai];
+            let mean = self.activity_mean(ai);
+            let mut tids = Vec::with_capacity(n_tasks);
+            let mut task_rows = Vec::with_capacity(n_tasks);
+            let mut dep_rows: Vec<String> = Vec::new();
+            for j in 0..n_tasks {
+                let tid = IdGen::next(&self.ids.task);
+                tids.push(tid);
+                let wid = worker_cursor % self.workers;
+                worker_cursor += 1;
+                let dur = if mean > 0.0 { self.rng.task_duration(mean, 0.05) } else { 0.0 };
+                let st = if ai == 0 { status::READY } else { status::WAITING };
+                task_rows.push(format!(
+                    "({tid}, {act_id}, {wf}, {wid}, NULL, './run {name} id={tid}', \
+                     '/data/{name}', 0, NULL, '{st}', {dur}, NULL, NULL)",
+                    act_id = ai + 1,
+                    wf = self.wfid,
+                    name = act.name,
+                ));
+                // dependencies on the previous activity
+                let deps: Vec<i64> = if ai == 0 {
+                    vec![]
+                } else {
+                    match act.operator {
+                        Operator::Map | Operator::Filter { .. } => {
+                            vec![prev_tasks[j.min(prev_tasks.len() - 1)]]
+                        }
+                        Operator::SplitMap { fanout } => {
+                            vec![prev_tasks[(j / fanout).min(prev_tasks.len() - 1)]]
+                        }
+                        Operator::Reduce { fanin } => {
+                            let lo = j * fanin;
+                            let hi = ((j + 1) * fanin).min(prev_tasks.len());
+                            prev_tasks[lo..hi].to_vec()
+                        }
+                        Operator::MrQuery => prev_tasks.clone(),
+                    }
+                };
+                for d in &deps {
+                    let depid = IdGen::next(&self.ids.dep);
+                    dep_rows.push(format!("({depid}, {tid}, {d})"));
+                }
+                self.graph.remaining.insert(tid, deps.len());
+                for d in &deps {
+                    self.graph.dependents.entry(*d).or_default().push(tid);
+                }
+                self.graph.deps.insert(tid, deps);
+                self.graph.task_act.insert(tid, ai);
+            }
+            for chunk in task_rows.chunks(self.batch_limit) {
+                self.db.exec_tagged(
+                    self.node_id,
+                    AccessKind::InsertTasks,
+                    &format!(
+                        "INSERT INTO workqueue (taskid, actid, wfid, workerid, coreid, cmd, \
+                         workspace, failtries, stdout, status, duration, starttime, endtime) \
+                         VALUES {}",
+                        chunk.join(", ")
+                    ),
+                )?;
+            }
+            for chunk in dep_rows.chunks(self.batch_limit) {
+                self.db.exec_tagged(
+                    self.node_id,
+                    AccessKind::InsertTasks,
+                    &format!("INSERT INTO taskdep (depid, taskid, dep) VALUES {}", chunk.join(", ")),
+                )?;
+            }
+            prev_tasks = tids;
+        }
+
+        // Activity-1 input fields.
+        let mut field_rows = Vec::new();
+        let first_act_tasks: Vec<i64> = self
+            .graph
+            .task_act
+            .iter()
+            .filter(|(_, a)| **a == 0)
+            .map(|(t, _)| *t)
+            .collect();
+        let mut sorted_first = first_act_tasks;
+        sorted_first.sort();
+        for (tid, tuple) in sorted_first.iter().zip(inputs.iter()) {
+            for (name, val) in tuple {
+                let fid = IdGen::next(&self.ids.field);
+                field_rows.push(format!("({fid}, {tid}, 1, '{name}', {val}, 'in')"));
+            }
+        }
+        for chunk in field_rows.chunks(self.batch_limit) {
+            self.db.exec_tagged(
+                self.node_id,
+                AccessKind::InsertDomainData,
+                &format!(
+                    "INSERT INTO taskfield (fieldid, taskid, actid, field, value, direction) VALUES {}",
+                    chunk.join(", ")
+                ),
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Rebuild the in-memory graph from the database — the secondary
+    /// supervisor's takeover path. Tasks whose dependencies all completed
+    /// during the takeover gap (still WAITING with zero remaining deps) are
+    /// promoted immediately so no readiness is lost.
+    pub fn rebuild_from_db(&mut self) -> Result<()> {
+        self.graph = DepGraph::default();
+        let tasks = self.db.query("SELECT taskid, actid, status FROM workqueue")?;
+        let (ti, ai, si) = (
+            tasks.col("taskid").unwrap(),
+            tasks.col("actid").unwrap(),
+            tasks.col("status").unwrap(),
+        );
+        let mut waiting: FxHashSet<i64> = FxHashSet::default();
+        for r in &tasks.rows {
+            let tid = r.values[ti].as_i64().unwrap();
+            let act = r.values[ai].as_i64().unwrap() as usize - 1;
+            self.graph.task_act.insert(tid, act);
+            self.graph.remaining.insert(tid, 0);
+            self.graph.deps.insert(tid, vec![]);
+            let st = r.values[si].as_str().unwrap_or("");
+            if st == status::FINISHED || st == status::FAILED {
+                self.graph.finished.insert(tid);
+            } else if st == status::WAITING {
+                waiting.insert(tid);
+            }
+        }
+        let deps = self.db.query("SELECT taskid, dep FROM taskdep")?;
+        for r in &deps.rows {
+            let tid = r.values[0].as_i64().unwrap();
+            let dep = r.values[1].as_i64().unwrap();
+            self.graph.deps.get_mut(&tid).unwrap().push(dep);
+            self.graph.dependents.entry(dep).or_default().push(tid);
+            if !self.graph.finished.contains(&dep) {
+                *self.graph.remaining.get_mut(&tid).unwrap() += 1;
+            }
+        }
+        // keep the task-id allocator ahead of everything persisted
+        let max_tid = self
+            .graph
+            .task_act
+            .keys()
+            .max()
+            .copied()
+            .unwrap_or(0);
+        self.ids.task.fetch_max(max_tid + 1, Ordering::Relaxed);
+
+        // close the takeover gap: WAITING tasks with no unfinished deps
+        let mut stranded: Vec<i64> = waiting
+            .into_iter()
+            .filter(|t| self.graph.remaining.get(t).copied() == Some(0))
+            .collect();
+        stranded.sort_unstable();
+        if !stranded.is_empty() {
+            let (_, filtered) = self.promote(stranded)?;
+            // filtered-out stranded tasks may unlock further tasks
+            self.cascade(filtered)?;
+        }
+        Ok(())
+    }
+
+    /// One readiness/completion sweep.
+    pub fn poll(&mut self) -> Result<PollReport> {
+        let mut report = PollReport::default();
+
+        // 1. who finished since last poll?
+        let rs = self.db.exec_tagged(
+            self.node_id,
+            AccessKind::UpdateActivityStatus,
+            "SELECT taskid FROM workqueue WHERE status = 'FINISHED' OR status = 'FAILED'",
+        )?;
+        let rs = match rs {
+            crate::storage::StatementResult::Rows(r) => r,
+            _ => unreachable!(),
+        };
+        let mut newly: Vec<i64> = Vec::new();
+        for r in &rs.rows {
+            let tid = r.values[0].as_i64().unwrap();
+            if self.graph.finished.insert(tid) {
+                newly.push(tid);
+            }
+        }
+        report.newly_finished = newly.len();
+
+        // 2. decrement dependents, collect newly-ready, and promote them.
+        let (n_ready, n_filtered) = self.cascade(newly)?;
+        report.newly_ready = n_ready;
+        report.filtered_out = n_filtered;
+
+        // 6. activity + workflow bookkeeping.
+        if report.newly_finished > 0 || report.filtered_out > 0 {
+            self.db.exec_tagged(
+                self.node_id,
+                AccessKind::UpdateActivityStatus,
+                "UPDATE activity SET status = 'RUNNING' WHERE status = 'WAITING'",
+            )?;
+        }
+        let total: usize = self.graph.task_act.len();
+        if self.graph.finished.len() == total && total > 0 {
+            let now = self.db.clock.now();
+            self.db.execute(&format!(
+                "UPDATE workflow SET status = 'FINISHED', endtime = {now} WHERE wfid = {}",
+                self.wfid
+            ))?;
+            self.db.execute("UPDATE activity SET status = 'FINISHED'")?;
+            self.done.store(true, Ordering::SeqCst);
+            report.workflow_done = true;
+        }
+        Ok(report)
+    }
+
+    /// Propagate completion of `frontier` through the dependency graph:
+    /// decrement dependents, promote the ones that become ready, and keep
+    /// cascading — filtered-out tasks complete instantly, which can unlock
+    /// tasks further down the chain within the same sweep. Returns
+    /// `(newly_ready, filtered_out)` totals.
+    fn cascade(&mut self, mut frontier: Vec<i64>) -> Result<(usize, usize)> {
+        let mut total_ready = 0;
+        let mut total_filtered = 0;
+        while !frontier.is_empty() {
+            let mut ready: Vec<i64> = Vec::new();
+            for tid in &frontier {
+                let Some(deps) = self.graph.dependents.get(tid) else { continue };
+                for d in deps.clone() {
+                    let rem = self.graph.remaining.get_mut(&d).expect("dependent tracked");
+                    if *rem > 0 {
+                        *rem -= 1;
+                        if *rem == 0 {
+                            ready.push(d);
+                        }
+                    }
+                }
+            }
+            if ready.is_empty() {
+                break;
+            }
+            let (n_ready, filtered) = self.promote(ready)?;
+            total_ready += n_ready;
+            total_filtered += filtered.len();
+            frontier = filtered;
+        }
+        Ok((total_ready, total_filtered))
+    }
+
+    /// Promote dependency-satisfied tasks: apply Filter predicates, ingest
+    /// producer outputs as inputs, flip WQ statuses. Returns the count of
+    /// newly READY tasks and the list of filtered-out (auto-finished) ones.
+    fn promote(&mut self, ready: Vec<i64>) -> Result<(usize, Vec<i64>)> {
+        {
+            // 3. ingest inputs: producer 'out' fields become consumer 'in'.
+            let mut all_deps: Vec<i64> = ready
+                .iter()
+                .flat_map(|t| self.graph.deps.get(t).cloned().unwrap_or_default())
+                .collect();
+            all_deps.sort_unstable();
+            all_deps.dedup();
+            let mut outputs: FxHashMap<i64, Vec<(String, f64)>> = FxHashMap::default();
+            if !all_deps.is_empty() {
+                let id_list =
+                    all_deps.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ");
+                let rs = self.db.query(&format!(
+                    "SELECT taskid, field, value FROM taskfield \
+                     WHERE direction = 'out' AND taskid IN ({id_list})"
+                ))?;
+                for r in &rs.rows {
+                    let tid = r.values[0].as_i64().unwrap();
+                    let f = r.values[1].as_str().unwrap_or("").to_string();
+                    let v = r.values[2].as_f64().unwrap_or(0.0);
+                    outputs.entry(tid).or_default().push((f, v));
+                }
+            }
+
+            // 4. apply Filter operators: drop tasks whose producer output
+            // fails the predicate — they finish instantly, unexecuted.
+            let mut to_ready: Vec<i64> = Vec::new();
+            let mut filtered: Vec<i64> = Vec::new();
+            for t in ready {
+                let act = self.graph.task_act[&t];
+                let keep = match self.wf.activities.get(act).map(|a| a.operator) {
+                    Some(Operator::Filter { field, min }) => {
+                        let deps = &self.graph.deps[&t];
+                        deps.iter().any(|d| {
+                            outputs
+                                .get(d)
+                                .map(|fs| {
+                                    fs.iter().any(|(n, v)| n == field && *v >= min)
+                                })
+                                .unwrap_or(false)
+                        })
+                    }
+                    _ => true,
+                };
+                if keep {
+                    to_ready.push(t);
+                } else {
+                    filtered.push(t);
+                }
+            }
+            // input ingestion rows for kept tasks
+            let mut field_rows = Vec::new();
+            for t in &to_ready {
+                let act = self.graph.task_act[&t] as i64 + 1;
+                for d in &self.graph.deps[t] {
+                    if let Some(fs) = outputs.get(d) {
+                        for (name, val) in fs {
+                            let fid = IdGen::next(&self.ids.field);
+                            field_rows.push(format!("({fid}, {t}, {act}, '{name}', {val}, 'in')"));
+                        }
+                    }
+                }
+            }
+            for chunk in field_rows.chunks(self.batch_limit) {
+                self.db.exec_tagged(
+                    self.node_id,
+                    AccessKind::InsertDomainData,
+                    &format!(
+                        "INSERT INTO taskfield (fieldid, taskid, actid, field, value, direction) VALUES {}",
+                        chunk.join(", ")
+                    ),
+                )?;
+            }
+
+            // 5. flip statuses.
+            for (list, new_status, note) in [
+                (&to_ready, status::READY, None),
+                (&filtered, status::FINISHED, Some("filtered-out")),
+            ] {
+                if list.is_empty() {
+                    continue;
+                }
+                for chunk in list.chunks(self.batch_limit) {
+                    let ids = chunk.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(", ");
+                    let extra = match note {
+                        Some(n) => format!(", stdout = '{n}', starttime = NOW(), endtime = NOW()"),
+                        None => String::new(),
+                    };
+                    self.db.exec_tagged(
+                        self.node_id,
+                        AccessKind::UpdateActivityStatus,
+                        &format!(
+                            "UPDATE workqueue SET status = '{new_status}'{extra} WHERE taskid IN ({ids})"
+                        ),
+                    )?;
+                }
+                if note.is_some() {
+                    // filtered tasks count as finished for dependency purposes
+                    for t in list.iter() {
+                        if self.graph.finished.insert(*t) {
+                            // propagate on the next poll
+                        }
+                    }
+                }
+            }
+            Ok((to_ready.len(), filtered))
+        }
+    }
+
+    /// Touch this supervisor's heartbeat row.
+    pub fn heartbeat(&self, node_row: i64) -> Result<()> {
+        let now = self.db.clock.now();
+        self.db.exec_tagged(
+            self.node_id,
+            AccessKind::UpdateWorkerHeartbeat,
+            &format!("UPDATE node SET heartbeat = {now} WHERE nodeid = {node_row}"),
+        )?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::payload::Payload;
+    use crate::coordinator::schema;
+    use crate::coordinator::workflow::ActivitySpec;
+    use crate::storage::cluster::ClusterConfig;
+    use crate::storage::value::Value;
+
+    fn setup(wf: WorkflowSpec, workers: usize) -> (Arc<DbCluster>, Supervisor) {
+        let db = DbCluster::start(ClusterConfig::default()).unwrap();
+        schema::create_schema(&db, workers).unwrap();
+        let ids = Arc::new(IdGen::default());
+        ids.task.store(1, Ordering::Relaxed);
+        let sup = Supervisor::new(db.clone(), wf, workers, ids, 7);
+        (db, sup)
+    }
+
+    fn chain2(n: usize) -> WorkflowSpec {
+        WorkflowSpec::new("t", n)
+            .activity(ActivitySpec::new("a1", Operator::Map, Payload::Sleep { mean_secs: 1.0 }))
+            .activity(ActivitySpec::new("a2", Operator::Map, Payload::Sleep { mean_secs: 1.0 }))
+    }
+
+    fn finish_all_running_or_ready(db: &DbCluster, act: i64) {
+        db.execute(&format!(
+            "UPDATE workqueue SET status = 'FINISHED', endtime = NOW() \
+             WHERE actid = {act} AND status = 'READY'"
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn bootstrap_generates_figure3_shape() {
+        let (db, mut sup) = setup(chain2(6), 2);
+        sup.bootstrap(&vec![vec![]; 6]).unwrap();
+        // 12 tasks total; act1 READY, act2 WAITING
+        assert_eq!(db.table_rows("workqueue").unwrap(), 12);
+        let rs = db
+            .query("SELECT status, COUNT(*) AS n FROM workqueue GROUP BY status ORDER BY status")
+            .unwrap();
+        let m: Vec<(String, i64)> = rs
+            .rows
+            .iter()
+            .map(|r| {
+                (r.values[0].as_str().unwrap().to_string(), r.values[1].as_i64().unwrap())
+            })
+            .collect();
+        assert_eq!(m, vec![("READY".to_string(), 6), ("WAITING".to_string(), 6)]);
+        // circular worker assignment: 6 tasks per worker over 2 workers
+        let rs = db
+            .query("SELECT workerid, COUNT(*) n FROM workqueue GROUP BY workerid ORDER BY workerid")
+            .unwrap();
+        assert_eq!(rs.rows[0].values[1], Value::Int(6));
+        assert_eq!(rs.rows[1].values[1], Value::Int(6));
+        // dependencies persisted
+        assert_eq!(db.table_rows("taskdep").unwrap(), 6);
+    }
+
+    #[test]
+    fn poll_propagates_readiness_and_completion() {
+        let (db, mut sup) = setup(chain2(4), 2);
+        sup.bootstrap(&vec![vec![]; 4]).unwrap();
+        // nothing finished -> nothing changes
+        let r = sup.poll().unwrap();
+        assert_eq!(r, PollReport::default());
+
+        finish_all_running_or_ready(&db, 1);
+        let r = sup.poll().unwrap();
+        assert_eq!(r.newly_finished, 4);
+        assert_eq!(r.newly_ready, 4);
+        assert!(!r.workflow_done);
+        let rs = db
+            .query("SELECT COUNT(*) FROM workqueue WHERE actid = 2 AND status = 'READY'")
+            .unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(4));
+
+        finish_all_running_or_ready(&db, 2);
+        let r = sup.poll().unwrap();
+        assert!(r.workflow_done);
+        assert!(sup.done.load(Ordering::SeqCst));
+        let rs = db.query("SELECT status FROM workflow").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::str("FINISHED"));
+    }
+
+    #[test]
+    fn input_ingestion_copies_producer_outputs() {
+        let (db, mut sup) = setup(chain2(2), 1);
+        sup.bootstrap(&[vec![("a".into(), 1.5)], vec![("a".into(), 2.5)]]).unwrap();
+        // activity-1 inputs present
+        let rs = db
+            .query("SELECT COUNT(*) FROM taskfield WHERE direction = 'in' AND actid = 1")
+            .unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(2));
+        // simulate act-1 tasks producing outputs, then finishing
+        db.execute(
+            "INSERT INTO taskfield (fieldid, taskid, actid, field, value, direction) \
+             VALUES (1000, 1, 1, 'y', 42.0, 'out'), (1001, 2, 1, 'y', 43.0, 'out')",
+        )
+        .unwrap();
+        finish_all_running_or_ready(&db, 1);
+        sup.poll().unwrap();
+        // act-2 tasks received 'y' as input
+        let rs = db
+            .query(
+                "SELECT COUNT(*) FROM taskfield WHERE direction = 'in' AND actid = 2 AND field = 'y'",
+            )
+            .unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(2));
+    }
+
+    #[test]
+    fn filter_operator_drops_failing_tuples() {
+        let wf = WorkflowSpec::new("t", 2)
+            .activity(ActivitySpec::new("gen", Operator::Map, Payload::Sleep { mean_secs: 1.0 }))
+            .activity(ActivitySpec::new(
+                "filt",
+                Operator::Filter { field: "y", min: 10.0 },
+                Payload::Sleep { mean_secs: 1.0 },
+            ));
+        let (db, mut sup) = setup(wf, 1);
+        sup.bootstrap(&vec![vec![]; 2]).unwrap();
+        db.execute(
+            "INSERT INTO taskfield (fieldid, taskid, actid, field, value, direction) \
+             VALUES (1000, 1, 1, 'y', 5.0, 'out'), (1001, 2, 1, 'y', 15.0, 'out')",
+        )
+        .unwrap();
+        finish_all_running_or_ready(&db, 1);
+        let r = sup.poll().unwrap();
+        assert_eq!(r.newly_ready, 1);
+        assert_eq!(r.filtered_out, 1);
+        let rs = db
+            .query("SELECT stdout FROM workqueue WHERE actid = 2 AND stdout IS NOT NULL")
+            .unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::str("filtered-out"));
+        // finish the surviving task; the next poll completes the workflow
+        // (the filtered task already counts as done)
+        finish_all_running_or_ready(&db, 2);
+        let r2 = sup.poll().unwrap();
+        assert!(r2.workflow_done, "{r2:?}");
+    }
+
+    #[test]
+    fn secondary_rebuilds_graph_from_db() {
+        let (db, mut sup) = setup(chain2(4), 2);
+        sup.bootstrap(&vec![vec![]; 4]).unwrap();
+        finish_all_running_or_ready(&db, 1);
+        // a fresh supervisor (the secondary) rebuilds from the database
+        let ids = Arc::new(IdGen::default());
+        let mut sec = Supervisor::new(db.clone(), chain2(4), 2, ids, 8);
+        sec.rebuild_from_db().unwrap();
+        // rebuild itself closes the takeover gap: the stranded WAITING tasks
+        // of activity 2 are promoted without waiting for a poll
+        let rs = db
+            .query("SELECT COUNT(*) FROM workqueue WHERE actid = 2 AND status = 'READY'")
+            .unwrap();
+        assert_eq!(
+            rs.rows[0].values[0],
+            Value::Int(4),
+            "secondary must resume readiness propagation"
+        );
+        finish_all_running_or_ready(&db, 2);
+        let r = sec.poll().unwrap();
+        assert!(r.workflow_done);
+    }
+
+    #[test]
+    fn reduce_waits_for_all_inputs() {
+        let wf = WorkflowSpec::new("t", 4)
+            .activity(ActivitySpec::new("gen", Operator::Map, Payload::Sleep { mean_secs: 1.0 }))
+            .activity(ActivitySpec::new(
+                "red",
+                Operator::Reduce { fanin: 4 },
+                Payload::Sleep { mean_secs: 1.0 },
+            ));
+        let (db, mut sup) = setup(wf, 2);
+        sup.bootstrap(&vec![vec![]; 4]).unwrap();
+        // finish 3 of 4 producers: reducer must stay WAITING
+        db.execute(
+            "UPDATE workqueue SET status = 'FINISHED' WHERE actid = 1 AND taskid IN (1, 2, 3)",
+        )
+        .unwrap();
+        let r = sup.poll().unwrap();
+        assert_eq!(r.newly_ready, 0);
+        db.execute("UPDATE workqueue SET status = 'FINISHED' WHERE actid = 1 AND taskid = 4")
+            .unwrap();
+        let r = sup.poll().unwrap();
+        assert_eq!(r.newly_ready, 1);
+    }
+}

@@ -1,0 +1,483 @@
+//! Worker nodes: DBMS-driven task execution.
+//!
+//! A worker node runs `T` threads. Each thread pulls from *its own* WQ
+//! partition (`where worker_id = i`, paper §3.2), claims a task with an
+//! atomic conditional update, fetches the task's domain inputs, executes the
+//! payload, then writes outputs, files, provenance, and the FINISHED status
+//! back — all directly against the DBMS, with no master in the path
+//! (Figure 6-A).
+
+use crate::coordinator::payload::{self, Payload, RunnerRegistry, TaskCtx};
+use crate::coordinator::supervisor::IdGen;
+use crate::storage::connector::WorkerLink;
+use crate::storage::AccessKind;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Worker configuration (per worker node).
+#[derive(Clone)]
+pub struct WorkerConfig {
+    pub worker_id: u32,
+    pub threads: usize,
+    /// How many candidate tasks one `getREADYtasks` fetches.
+    pub claim_batch: usize,
+    /// Multiplier applied to nominal task durations (1.0 = real time).
+    pub time_scale: f64,
+    /// Idle backoff between empty polls, in (already scaled) seconds.
+    pub idle_backoff_secs: f64,
+    /// Retries before a failing task is marked FAILED.
+    pub max_failtries: i64,
+    pub seed: u64,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            worker_id: 0,
+            threads: 2,
+            claim_batch: 4,
+            time_scale: 1.0,
+            idle_backoff_secs: 0.002,
+            max_failtries: 3,
+            seed: 0,
+        }
+    }
+}
+
+/// Shared worker-side counters (monitoring / reports).
+#[derive(Default)]
+pub struct WorkerCounters {
+    pub executed: AtomicU64,
+    pub claim_races_lost: AtomicU64,
+    pub failures: AtomicU64,
+}
+
+/// One worker node. [`WorkerNode::run_thread`] is the body each of its `T`
+/// threads executes until `done` flips.
+pub struct WorkerNode {
+    pub cfg: WorkerConfig,
+    link: Arc<WorkerLink>,
+    /// Payload per activity (index = actid - 1).
+    payloads: Arc<Vec<Payload>>,
+    registry: Arc<RunnerRegistry>,
+    ids: Arc<IdGen>,
+    done: Arc<AtomicBool>,
+    pub counters: Arc<WorkerCounters>,
+}
+
+impl WorkerNode {
+    pub fn new(
+        cfg: WorkerConfig,
+        link: Arc<WorkerLink>,
+        payloads: Arc<Vec<Payload>>,
+        registry: Arc<RunnerRegistry>,
+        ids: Arc<IdGen>,
+        done: Arc<AtomicBool>,
+    ) -> WorkerNode {
+        WorkerNode {
+            cfg,
+            link,
+            payloads,
+            registry,
+            ids,
+            done,
+            counters: Arc::new(WorkerCounters::default()),
+        }
+    }
+
+    /// Spawn this node's threads; returns their join handles.
+    pub fn spawn(self: Arc<Self>) -> Vec<std::thread::JoinHandle<()>> {
+        (0..self.cfg.threads)
+            .map(|t| {
+                let me = self.clone();
+                std::thread::Builder::new()
+                    .name(format!("worker{}-t{t}", me.cfg.worker_id))
+                    .spawn(move || me.run_thread(t as i64))
+                    .expect("spawn worker thread")
+            })
+            .collect()
+    }
+
+    /// Thread body: claim → run → record, until the engine signals done.
+    pub fn run_thread(&self, core: i64) {
+        while !self.done.load(Ordering::SeqCst) {
+            match self.step(core) {
+                Ok(did_work) => {
+                    if !did_work {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(
+                            self.cfg.idle_backoff_secs,
+                        ));
+                    }
+                }
+                Err(Error::Unavailable(_)) => {
+                    // connector/data-node outage: back off and retry; the
+                    // availability manager will repair placement
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        self.cfg.idle_backoff_secs * 5.0,
+                    ));
+                }
+                Err(e) => {
+                    log::error!("worker {} thread {core}: {e}", self.cfg.worker_id);
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        self.cfg.idle_backoff_secs * 5.0,
+                    ));
+                }
+            }
+        }
+    }
+
+    /// One scheduling step. Returns whether a task was executed.
+    pub fn step(&self, core: i64) -> Result<bool> {
+        let w = self.cfg.worker_id;
+
+        // getREADYtasks: candidates from this worker's partition.
+        let cands = self
+            .link
+            .exec(
+                AccessKind::GetReadyTasks,
+                &format!(
+                    "SELECT taskid, actid, duration FROM workqueue \
+                     WHERE workerid = {w} AND status = 'READY' \
+                     ORDER BY taskid LIMIT {}",
+                    self.cfg.claim_batch
+                ),
+            )?
+            .rows();
+        if cands.rows.is_empty() {
+            return Ok(false);
+        }
+
+        for cand in &cands.rows {
+            let taskid = cand.values[0].as_i64().unwrap();
+            let actid = cand.values[1].as_i64().unwrap();
+            let duration = cand.values[2].as_f64().unwrap_or(0.0);
+
+            // updateToRUNNING: atomic claim (threads of this node race).
+            let claimed = self
+                .link
+                .exec(
+                    AccessKind::UpdateToRunning,
+                    &format!(
+                        "UPDATE workqueue SET status = 'RUNNING', starttime = NOW(), \
+                         coreid = {core} WHERE taskid = {taskid} AND status = 'READY'"
+                    ),
+                )?
+                .affected();
+            if claimed == 0 {
+                self.counters.claim_races_lost.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+
+            self.execute_claimed(core, taskid, actid, duration)?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Run a claimed task to completion (or failure/retry).
+    fn execute_claimed(&self, _core: i64, taskid: i64, actid: i64, duration: f64) -> Result<()> {
+        let w = self.cfg.worker_id;
+
+        // getFileFields: the task's domain inputs.
+        let inputs = self
+            .link
+            .exec(
+                AccessKind::GetFileFields,
+                &format!(
+                    "SELECT field, value FROM taskfield \
+                     WHERE taskid = {taskid} AND direction = 'in'"
+                ),
+            )?
+            .rows();
+        let inputs: Vec<(String, f64)> = inputs
+            .rows
+            .iter()
+            .map(|r| {
+                (
+                    r.values[0].as_str().unwrap_or("").to_string(),
+                    r.values[1].as_f64().unwrap_or(0.0),
+                )
+            })
+            .collect();
+
+        let payload = self
+            .payloads
+            .get((actid - 1) as usize)
+            .cloned()
+            .ok_or_else(|| Error::Engine(format!("no payload for activity {actid}")))?;
+        let ctx = TaskCtx {
+            taskid,
+            actid,
+            workerid: w as i64,
+            inputs: inputs.clone(),
+            seed: self.cfg.seed ^ (taskid as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            duration,
+            time_scale: self.cfg.time_scale,
+        };
+
+        match payload::execute(&payload, &ctx, &self.registry) {
+            Ok(out) => {
+                // Domain outputs.
+                if !out.fields.is_empty() {
+                    let rows: Vec<String> = out
+                        .fields
+                        .iter()
+                        .map(|(f, v)| {
+                            let fid = IdGen::next(&self.ids.field);
+                            format!("({fid}, {taskid}, {actid}, '{f}', {v}, 'out')")
+                        })
+                        .collect();
+                    self.link.exec(
+                        AccessKind::InsertDomainData,
+                        &format!(
+                            "INSERT INTO taskfield (fieldid, taskid, actid, field, value, direction) VALUES {}",
+                            rows.join(", ")
+                        ),
+                    )?;
+                }
+                // Raw file pointers.
+                if !out.files.is_empty() {
+                    let rows: Vec<String> = out
+                        .files
+                        .iter()
+                        .map(|(p, sz)| {
+                            let fid = IdGen::next(&self.ids.file);
+                            format!("({fid}, {taskid}, '{p}', {sz}, 'out')")
+                        })
+                        .collect();
+                    self.link.exec(
+                        AccessKind::InsertDomainData,
+                        &format!(
+                            "INSERT INTO file (fileid, taskid, path, size_bytes, direction) VALUES {}",
+                            rows.join(", ")
+                        ),
+                    )?;
+                }
+                // Provenance: used(inputs) + wasGeneratedBy(outputs).
+                let mut prov_rows = Vec::new();
+                for (f, _) in &inputs {
+                    let pid = IdGen::next(&self.ids.prov);
+                    prov_rows.push(format!("({pid}, {taskid}, {actid}, 'used', '{f}', NOW())"));
+                }
+                for (f, _) in &out.fields {
+                    let pid = IdGen::next(&self.ids.prov);
+                    prov_rows.push(format!(
+                        "({pid}, {taskid}, {actid}, 'wasGeneratedBy', '{f}', NOW())"
+                    ));
+                }
+                for (p, _) in &out.files {
+                    let pid = IdGen::next(&self.ids.prov);
+                    prov_rows.push(format!(
+                        "({pid}, {taskid}, {actid}, 'wasGeneratedBy', '{p}', NOW())"
+                    ));
+                }
+                if !prov_rows.is_empty() {
+                    self.link.exec(
+                        AccessKind::InsertProvenance,
+                        &format!(
+                            "INSERT INTO provenance (pid, taskid, actid, kind, entity, at) VALUES {}",
+                            prov_rows.join(", ")
+                        ),
+                    )?;
+                }
+                // updateToFINISHED.
+                let stdout = out.stdout.replace('\'', "''");
+                self.link.exec(
+                    AccessKind::UpdateToFinished,
+                    &format!(
+                        "UPDATE workqueue SET status = 'FINISHED', endtime = NOW(), \
+                         stdout = '{stdout}' WHERE taskid = {taskid}"
+                    ),
+                )?;
+                self.counters.executed.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                self.counters.failures.fetch_add(1, Ordering::Relaxed);
+                // retry or fail permanently
+                let msg = e.to_string().replace('\'', "''");
+                self.link.exec(
+                    AccessKind::UpdateTaskOutput,
+                    &format!(
+                        "UPDATE workqueue SET failtries = failtries + 1, stdout = '{msg}', \
+                         status = CASE WHEN failtries + 1 >= {} THEN 'FAILED' ELSE 'READY' END \
+                         WHERE taskid = {taskid}",
+                        self.cfg.max_failtries
+                    ),
+                )?;
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::payload::{SyntheticKind, TaskOutput, TaskRunner};
+    use crate::coordinator::schema;
+    use crate::coordinator::supervisor::Supervisor;
+    use crate::coordinator::workflow::{ActivitySpec, Operator, WorkflowSpec};
+    use crate::storage::cluster::ClusterConfig;
+    use crate::storage::connector::{assign_links, Connector};
+    use crate::storage::value::Value;
+    use crate::storage::DbCluster;
+
+    fn setup(wf: WorkflowSpec, workers: usize) -> (Arc<DbCluster>, Supervisor, Arc<IdGen>) {
+        let db = DbCluster::start(ClusterConfig::default()).unwrap();
+        schema::create_schema(&db, workers).unwrap();
+        let ids = Arc::new(IdGen::default());
+        ids.task.store(1, std::sync::atomic::Ordering::Relaxed);
+        ids.field.store(100_000, std::sync::atomic::Ordering::Relaxed);
+        let sup = Supervisor::new(db.clone(), wf.clone(), workers, ids.clone(), 7);
+        (db, sup, ids)
+    }
+
+    fn node(
+        db: &Arc<DbCluster>,
+        w: u32,
+        payloads: Vec<Payload>,
+        ids: Arc<IdGen>,
+        done: Arc<AtomicBool>,
+    ) -> WorkerNode {
+        let conn = Connector::new(0, 0, db.clone());
+        let links = assign_links(&[w], &[conn]).unwrap();
+        let link = Arc::new(links.into_iter().next().unwrap());
+        WorkerNode::new(
+            WorkerConfig { worker_id: w, time_scale: 0.0, ..Default::default() },
+            link,
+            Arc::new(payloads),
+            Arc::new(RunnerRegistry::new()),
+            ids,
+            done,
+        )
+    }
+
+    #[test]
+    fn step_claims_runs_and_finishes_a_task() {
+        let wf = WorkflowSpec::new("t", 3).activity(ActivitySpec::new(
+            "a1",
+            Operator::Map,
+            Payload::Synthetic { kind: SyntheticKind::Quadratic },
+        ));
+        let (db, mut sup, ids) = setup(wf.clone(), 1);
+        sup.bootstrap(&vec![vec![("a".into(), 1.0), ("b".into(), 2.0), ("c".into(), 3.0)]; 3])
+            .unwrap();
+        let done = Arc::new(AtomicBool::new(false));
+        let wn = node(&db, 0, vec![wf.activities[0].payload.clone()], ids, done);
+
+        assert!(wn.step(0).unwrap());
+        let rs = db
+            .query("SELECT COUNT(*) FROM workqueue WHERE status = 'FINISHED'")
+            .unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(1));
+        // outputs + provenance landed
+        let rs = db
+            .query("SELECT COUNT(*) FROM taskfield WHERE direction = 'out'")
+            .unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(2)); // x and y
+        let rs = db
+            .query("SELECT COUNT(*) FROM provenance WHERE kind = 'wasGeneratedBy'")
+            .unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(2));
+        let rs = db
+            .query("SELECT COUNT(*) FROM provenance WHERE kind = 'used'")
+            .unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(3)); // a, b, c
+
+        // two more steps drain the queue; a fourth finds nothing
+        assert!(wn.step(0).unwrap());
+        assert!(wn.step(1).unwrap());
+        assert!(!wn.step(0).unwrap());
+    }
+
+    #[test]
+    fn workers_only_see_their_partition() {
+        let wf = WorkflowSpec::new("t", 4).activity(ActivitySpec::new(
+            "a1",
+            Operator::Map,
+            Payload::Sleep { mean_secs: 1.0 },
+        ));
+        let (db, mut sup, ids) = setup(wf.clone(), 2);
+        sup.bootstrap(&vec![vec![]; 4]).unwrap();
+        let done = Arc::new(AtomicBool::new(false));
+        let w1 = node(&db, 1, vec![wf.activities[0].payload.clone()], ids, done);
+        // worker 1 executes its 2 tasks then stalls, leaving worker 0's alone
+        assert!(w1.step(0).unwrap());
+        assert!(w1.step(0).unwrap());
+        assert!(!w1.step(0).unwrap());
+        let rs = db
+            .query("SELECT COUNT(*) FROM workqueue WHERE status = 'READY' AND workerid = 0")
+            .unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(2));
+    }
+
+    struct AlwaysFails;
+    impl TaskRunner for AlwaysFails {
+        fn run(&self, _ctx: &TaskCtx) -> crate::Result<TaskOutput> {
+            Err(Error::Engine("injected failure".into()))
+        }
+    }
+
+    #[test]
+    fn failing_tasks_retry_then_fail_permanently() {
+        let wf = WorkflowSpec::new("t", 1).activity(ActivitySpec::new(
+            "a1",
+            Operator::Map,
+            Payload::Artifact { runner: "boom".into() },
+        ));
+        let (db, mut sup, ids) = setup(wf.clone(), 1);
+        sup.bootstrap(&vec![vec![]; 1]).unwrap();
+        let done = Arc::new(AtomicBool::new(false));
+        let conn = Connector::new(0, 0, db.clone());
+        let links = assign_links(&[0], &[conn]).unwrap();
+        let mut reg = RunnerRegistry::new();
+        reg.register("boom", Arc::new(AlwaysFails));
+        let wn = WorkerNode::new(
+            WorkerConfig { worker_id: 0, max_failtries: 2, time_scale: 0.0, ..Default::default() },
+            Arc::new(links.into_iter().next().unwrap()),
+            Arc::new(vec![wf.activities[0].payload.clone()]),
+            Arc::new(reg),
+            ids,
+            done,
+        );
+        // failtries: 0 -> 1 (back to READY) -> 2 (FAILED)
+        wn.step(0).unwrap();
+        let rs = db.query("SELECT status, failtries FROM workqueue").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::str("READY"));
+        assert_eq!(rs.rows[0].values[1], Value::Int(1));
+        wn.step(0).unwrap();
+        let rs = db.query("SELECT status, failtries FROM workqueue").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::str("FAILED"));
+        assert_eq!(wn.counters.failures.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn concurrent_threads_never_double_execute() {
+        let wf = WorkflowSpec::new("t", 40).activity(ActivitySpec::new(
+            "a1",
+            Operator::Map,
+            Payload::Sleep { mean_secs: 1.0 },
+        ));
+        let (db, mut sup, ids) = setup(wf.clone(), 1);
+        sup.bootstrap(&vec![vec![]; 40]).unwrap();
+        let done = Arc::new(AtomicBool::new(false));
+        let wn = Arc::new(node(&db, 0, vec![wf.activities[0].payload.clone()], ids, done));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let wn = wn.clone();
+            handles.push(std::thread::spawn(move || {
+                while wn.step(t).unwrap() {}
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(wn.counters.executed.load(Ordering::Relaxed), 40);
+        let rs = db
+            .query("SELECT COUNT(*) FROM workqueue WHERE status = 'FINISHED'")
+            .unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(40));
+    }
+}

@@ -1,0 +1,185 @@
+//! Workflow specifications: Chiron's algebraic activity model.
+//!
+//! A workflow is a chain of activities; each activity applies an algebraic
+//! operator to its input relation (Ogasawara et al., PVLDB 2011 — the
+//! algebra Chiron executes) and carries a payload describing the actual
+//! scientific computation of each task.
+
+use crate::coordinator::payload::Payload;
+use crate::{Error, Result};
+
+/// Chiron's algebraic operators, defining how task counts map across an
+/// activity boundary.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Operator {
+    /// 1:1 — each input tuple yields one task depending on its producer.
+    Map,
+    /// 1:N — each input tuple yields `fanout` tasks.
+    SplitMap { fanout: usize },
+    /// N:1 — groups of `fanin` consecutive tuples reduce into one task.
+    Reduce { fanin: usize },
+    /// 1:{0,1} — tasks whose predecessor output fails the predicate are
+    /// dropped. The predicate is evaluated by the supervisor on the
+    /// producer's domain outputs: `field >= threshold` keeps the tuple.
+    Filter { field: &'static str, min: f64 },
+    /// Query over the task relation itself (used by monitoring activities);
+    /// scheduled as a single task regardless of input cardinality.
+    MrQuery,
+}
+
+impl Operator {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Operator::Map => "MAP",
+            Operator::SplitMap { .. } => "SPLIT_MAP",
+            Operator::Reduce { .. } => "REDUCE",
+            Operator::Filter { .. } => "FILTER",
+            Operator::MrQuery => "MRQUERY",
+        }
+    }
+}
+
+/// One activity of a workflow.
+#[derive(Clone, Debug)]
+pub struct ActivitySpec {
+    pub name: String,
+    pub operator: Operator,
+    /// What each task computes.
+    pub payload: Payload,
+    /// Names of the domain fields this activity's tasks produce (ingested
+    /// into `taskfield` with direction 'out').
+    pub out_fields: Vec<String>,
+}
+
+impl ActivitySpec {
+    pub fn new(name: &str, operator: Operator, payload: Payload) -> ActivitySpec {
+        ActivitySpec {
+            name: name.to_string(),
+            operator,
+            payload,
+            out_fields: vec![],
+        }
+    }
+
+    pub fn with_fields(mut self, fields: &[&str]) -> ActivitySpec {
+        self.out_fields = fields.iter().map(|s| s.to_string()).collect();
+        self
+    }
+}
+
+/// A workflow: named chain of activities plus the cardinality of the first
+/// activity's input (the parameter sweep size).
+#[derive(Clone, Debug)]
+pub struct WorkflowSpec {
+    pub name: String,
+    pub activities: Vec<ActivitySpec>,
+    /// Number of input tuples feeding activity 1.
+    pub input_cardinality: usize,
+}
+
+impl WorkflowSpec {
+    pub fn new(name: &str, input_cardinality: usize) -> WorkflowSpec {
+        WorkflowSpec { name: name.to_string(), activities: vec![], input_cardinality }
+    }
+
+    pub fn activity(mut self, a: ActivitySpec) -> WorkflowSpec {
+        self.activities.push(a);
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.activities.is_empty() {
+            return Err(Error::Engine("workflow has no activities".into()));
+        }
+        if self.input_cardinality == 0 {
+            return Err(Error::Engine("workflow input cardinality is 0".into()));
+        }
+        for a in &self.activities {
+            match a.operator {
+                Operator::SplitMap { fanout } if fanout == 0 => {
+                    return Err(Error::Engine(format!("activity '{}' fanout 0", a.name)))
+                }
+                Operator::Reduce { fanin } if fanin == 0 => {
+                    return Err(Error::Engine(format!("activity '{}' fanin 0", a.name)))
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Task count of each activity given the input cardinality and the
+    /// operator chain (Filter counted at full cardinality — the filter is
+    /// applied at runtime on produced values).
+    pub fn planned_task_counts(&self) -> Vec<usize> {
+        let mut n = self.input_cardinality;
+        let mut counts = Vec::with_capacity(self.activities.len());
+        for a in &self.activities {
+            n = match a.operator {
+                Operator::Map | Operator::Filter { .. } => n,
+                Operator::SplitMap { fanout } => n * fanout,
+                Operator::Reduce { fanin } => n.div_ceil(fanin),
+                Operator::MrQuery => 1,
+            };
+            counts.push(n.max(1));
+        }
+        counts
+    }
+
+    /// Total planned tasks across activities.
+    pub fn planned_total_tasks(&self) -> usize {
+        self.planned_task_counts().iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::payload::Payload;
+
+    fn map(name: &str) -> ActivitySpec {
+        ActivitySpec::new(name, Operator::Map, Payload::Sleep { mean_secs: 1.0 })
+    }
+
+    #[test]
+    fn task_count_planning_across_operators() {
+        let wf = WorkflowSpec::new("t", 100)
+            .activity(map("a1"))
+            .activity(ActivitySpec::new(
+                "a2",
+                Operator::SplitMap { fanout: 3 },
+                Payload::Sleep { mean_secs: 1.0 },
+            ))
+            .activity(ActivitySpec::new(
+                "a3",
+                Operator::Reduce { fanin: 10 },
+                Payload::Sleep { mean_secs: 1.0 },
+            ))
+            .activity(ActivitySpec::new("a4", Operator::MrQuery, Payload::Sleep { mean_secs: 1.0 }));
+        assert_eq!(wf.planned_task_counts(), vec![100, 300, 30, 1]);
+        assert_eq!(wf.planned_total_tasks(), 431);
+        wf.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_degenerate_specs() {
+        assert!(WorkflowSpec::new("x", 10).validate().is_err());
+        assert!(WorkflowSpec::new("x", 0).activity(map("a")).validate().is_err());
+        let bad = WorkflowSpec::new("x", 10).activity(ActivitySpec::new(
+            "a",
+            Operator::SplitMap { fanout: 0 },
+            Payload::Sleep { mean_secs: 1.0 },
+        ));
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn reduce_rounds_up() {
+        let wf = WorkflowSpec::new("t", 25).activity(ActivitySpec::new(
+            "r",
+            Operator::Reduce { fanin: 10 },
+            Payload::Sleep { mean_secs: 1.0 },
+        ));
+        assert_eq!(wf.planned_task_counts(), vec![3]);
+    }
+}

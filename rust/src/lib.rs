@@ -1,0 +1,70 @@
+//! # SchalaDB — distributed in-memory data management for workflow executions
+//!
+//! Reproduction of Souza et al., *Distributed In-memory Data Management for
+//! Workflow Executions* (PeerJ CS, 2021). The crate provides:
+//!
+//! - [`storage`]: a from-scratch distributed in-memory relational engine
+//!   (partitioned, replicated, transactional, SQL-subset) standing in for
+//!   MySQL Cluster — the substrate SchalaDB assumes.
+//! - [`coordinator`]: the d-Chiron workflow engine built on SchalaDB
+//!   principles — supervisor/secondary-supervisor, DBMS-driven worker
+//!   scheduling, provenance + domain data capture.
+//! - [`steering`]: runtime analytical queries (Table 2, Q1–Q8) and dynamic
+//!   workflow adaptation.
+//! - [`baseline`]: centralized Chiron (master–worker over message passing
+//!   with a centralized DBMS) used as the Experiment-8 comparator.
+//! - [`sim`]: a calibrated discrete-event simulator of the paper's
+//!   960-core Grid5000 testbed, used by the `exp*` benches.
+//! - [`runtime`]: PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   riser-fatigue payload (`artifacts/*.hlo.txt`).
+//! - [`workload`]: the Risers Fatigue Analysis workflow and synthetic
+//!   workload generators.
+//!
+//! See `DESIGN.md` for the substitution table and the per-experiment index.
+
+pub mod baseline;
+pub mod coordinator;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod steering;
+pub mod storage;
+pub mod util;
+pub mod workload;
+
+pub use storage::cluster::DbCluster;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// SQL lexing/parsing failure with position information.
+    #[error("sql parse error: {0}")]
+    Parse(String),
+    /// Catalog-level failure (unknown table/column, duplicate create, ...).
+    #[error("catalog error: {0}")]
+    Catalog(String),
+    /// Type mismatch or unsupported operation during evaluation.
+    #[error("type error: {0}")]
+    Type(String),
+    /// Constraint violation (primary key, not-null, ...).
+    #[error("constraint violation: {0}")]
+    Constraint(String),
+    /// Transaction aborted (conflict, explicit rollback, node failure).
+    #[error("transaction aborted: {0}")]
+    TxnAborted(String),
+    /// A data node (or all replicas of a partition) is unavailable.
+    #[error("node unavailable: {0}")]
+    Unavailable(String),
+    /// Workflow-engine level failure.
+    #[error("engine error: {0}")]
+    Engine(String),
+    /// PJRT runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// I/O failure (WAL, checkpoints, artifacts).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,186 @@
+//! `dchiron` — the d-Chiron launcher CLI.
+//!
+//! Subcommands (args are `--key value` pairs; no external CLI crate is
+//! available offline, so parsing is hand-rolled):
+//!
+//! ```text
+//! dchiron run      [--tasks N] [--duration SECS] [--workers W] [--threads T]
+//!                  [--time-scale S] [--engine dchiron|chiron] [--seed S]
+//!     run a synthetic workload on the real engine and print the report
+//! dchiron risers   [--conditions N] [--pjrt] [--workers W] [--threads T]
+//!     run the Risers Fatigue Analysis workflow (--pjrt uses the AOT
+//!     artifacts; otherwise synthetic physics)
+//! dchiron bench-sim [--experiment expN] [--json FILE]
+//!     regenerate the paper's tables/figures on the calibrated simulator
+//! dchiron sql
+//!     run the steering SQL demo on a seeded risers database
+//! ```
+
+use schaladb::coordinator::payload::RunnerRegistry;
+use schaladb::coordinator::{DChironEngine, EngineConfig};
+use schaladb::metrics;
+use schaladb::runtime::{self, riser, PjrtService};
+use schaladb::sim::experiments;
+use schaladb::util::json::Json;
+use schaladb::workload::{self, SyntheticWorkload};
+use std::collections::HashMap;
+use std::io::Write as _;
+
+fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
+    let mut flags = HashMap::new();
+    let mut positional = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (flags, positional)
+}
+
+fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if args.len() > 1 { &args[1..] } else { &[] };
+    let (flags, _pos) = parse_flags(rest);
+
+    match cmd {
+        "run" => cmd_run(&flags),
+        "risers" => cmd_risers(&flags),
+        "bench-sim" => cmd_bench_sim(&flags),
+        "sql" => cmd_sql(),
+        _ => {
+            println!("dchiron — SchalaDB / d-Chiron reproduction");
+            println!("commands: run | risers | bench-sim | sql (see README.md)");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let tasks: usize = get(flags, "tasks", 300);
+    let duration: f64 = get(flags, "duration", 1.0);
+    let workers: usize = get(flags, "workers", 4);
+    let threads: usize = get(flags, "threads", 2);
+    let time_scale: f64 = get(flags, "time-scale", 0.01);
+    let seed: u64 = get(flags, "seed", 42);
+    let engine_kind = flags.get("engine").map(|s| s.as_str()).unwrap_or("dchiron");
+
+    let w = SyntheticWorkload { total_tasks: tasks, mean_task_secs: duration, activities: 3, seed };
+    println!(
+        "synthetic workload: {} tasks @ {duration}s mean (scaled x{time_scale}), engine={engine_kind}",
+        w.planned_tasks()
+    );
+    let report = match engine_kind {
+        "chiron" => {
+            use schaladb::baseline::{ChironConfig, ChironEngine};
+            ChironEngine::new(ChironConfig {
+                workers,
+                threads_per_worker: threads,
+                time_scale,
+                seed,
+                ..Default::default()
+            })
+            .run(w.workflow(), w.inputs())?
+        }
+        _ => DChironEngine::new(EngineConfig {
+            workers,
+            threads_per_worker: threads,
+            time_scale,
+            seed,
+            ..Default::default()
+        })
+        .run(w.workflow(), w.inputs())?,
+    };
+    println!("{}", metrics::format_report("synthetic run", &report));
+    Ok(())
+}
+
+fn cmd_risers(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let conditions: usize = get(flags, "conditions", 64);
+    let workers: usize = get(flags, "workers", 4);
+    let threads: usize = get(flags, "threads", 2);
+    let use_pjrt = flags.contains_key("pjrt");
+
+    let mut registry = RunnerRegistry::new();
+    let wf = if use_pjrt {
+        if !runtime::artifacts_available() {
+            anyhow::bail!("--pjrt needs artifacts; run `make artifacts`");
+        }
+        let svc = PjrtService::start(runtime::default_artifact_dir())?;
+        riser::register_riser_runners(&mut registry, &svc);
+        workload::risers_workflow_with(conditions, Some("riser"))
+    } else {
+        workload::risers_workflow(conditions)
+    };
+    let engine = DChironEngine::with_registry(
+        EngineConfig {
+            workers,
+            threads_per_worker: threads,
+            time_scale: 0.01,
+            ..Default::default()
+        },
+        registry,
+    );
+    let inputs = workload::risers_inputs(conditions, get(flags, "seed", 42));
+    let report = engine.run(wf, inputs)?;
+    println!("{}", metrics::format_report("risers", &report));
+    Ok(())
+}
+
+fn cmd_bench_sim(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let which = flags.get("experiment").cloned();
+    let mut outputs = Vec::new();
+    match which {
+        Some(id) => outputs.push(experiments::run(&id)?),
+        None => {
+            for f in experiments::all() {
+                outputs.push(f()?);
+            }
+        }
+    }
+    let mut all_json = Vec::new();
+    for out in &outputs {
+        out.print();
+        all_json.push(out.json.clone());
+    }
+    if let Some(path) = flags.get("json") {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", Json::Arr(all_json).to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_sql() -> anyhow::Result<()> {
+    use schaladb::steering::SteeringClient;
+    // Seed a small risers database, then run the Table-2 query set.
+    let engine = DChironEngine::new(EngineConfig {
+        workers: 2,
+        threads_per_worker: 2,
+        time_scale: 0.0,
+        ..Default::default()
+    });
+    let running =
+        engine.start(workload::risers_workflow(24), workload::risers_inputs(24, 3))?;
+    let db = running.db.clone();
+    running.join()?;
+    let client = SteeringClient::new(db);
+    println!("Q1:\n{}", client.q1_recent_status_by_node()?.render());
+    println!("Q6:\n{}", client.q6_activity_times()?.render());
+    println!("Q7:\n{}", client.q7_wear_outliers("calculate_wear_and_tear", 0.2)?.render());
+    Ok(())
+}

@@ -1,0 +1,212 @@
+//! Reporting helpers: run-report rendering, latency histograms, and the
+//! machine-readable JSON emitted next to every bench table.
+
+use crate::coordinator::engine::RunReport;
+use crate::util::json::Json;
+use crate::util::{fmt_secs, render_table};
+
+/// Render a [`RunReport`] as the text block printed by examples and benches.
+pub fn format_report(title: &str, r: &RunReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("== {title} ==\n"));
+    s.push_str(&format!(
+        "makespan {}  tasks {}/{} executed  failures {}  claim-races {}\n",
+        fmt_secs(r.makespan_secs),
+        r.executed_tasks,
+        r.total_tasks,
+        r.failed_tasks,
+        r.claim_races_lost
+    ));
+    s.push_str(&format!(
+        "DBMS: total {}  max-node {}  share-of-makespan {:.1}%  db {} KB  sup-failovers {}\n",
+        fmt_secs(r.dbms_total_secs),
+        fmt_secs(r.dbms_max_node_secs),
+        100.0 * r.dbms_max_node_secs / r.makespan_secs.max(1e-12),
+        r.db_bytes / 1024,
+        r.supervisor_failovers
+    ));
+    let rows: Vec<Vec<String>> = r
+        .access_stats
+        .iter()
+        .map(|(k, st)| {
+            vec![
+                k.label().to_string(),
+                st.count.to_string(),
+                fmt_secs(st.total_secs),
+                fmt_secs(st.mean_secs()),
+                format!("{:.1}%", 100.0 * st.total_secs / r.dbms_total_secs.max(1e-12)),
+            ]
+        })
+        .collect();
+    s.push_str(&render_table(&["access", "count", "total", "mean", "share"], &rows));
+    s
+}
+
+/// JSON form of a run report (for plotting scripts).
+pub fn report_json(label: &str, r: &RunReport) -> Json {
+    let mut accesses = Json::obj();
+    for (k, st) in &r.access_stats {
+        accesses = accesses.set(
+            k.label(),
+            Json::obj()
+                .set("count", st.count as i64)
+                .set("total_secs", st.total_secs)
+                .set("mean_secs", st.mean_secs()),
+        );
+    }
+    Json::obj()
+        .set("label", label)
+        .set("makespan_secs", r.makespan_secs)
+        .set("total_tasks", r.total_tasks)
+        .set("executed_tasks", r.executed_tasks as i64)
+        .set("dbms_total_secs", r.dbms_total_secs)
+        .set("dbms_max_node_secs", r.dbms_max_node_secs)
+        .set("db_bytes", r.db_bytes)
+        .set("accesses", accesses)
+}
+
+/// Fixed-bucket latency histogram (log2 buckets from 1 µs to ~1 min).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    const BUCKETS: usize = 28;
+
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: vec![0; Self::BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+
+    fn bucket_of(secs: f64) -> usize {
+        // bucket 0: < 1us; each bucket doubles
+        let us = secs * 1e6;
+        if us < 1.0 {
+            return 0;
+        }
+        (us.log2().floor() as usize + 1).min(Self::BUCKETS - 1)
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.buckets[Self::bucket_of(secs)] += 1;
+        self.count += 1;
+        self.sum += secs;
+        self.min = self.min.min(secs);
+        self.max = self.max.max(secs);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of bucket).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                // upper edge of bucket i in seconds
+                return if i == 0 { 1e-6 } else { (1u64 << (i - 1)) as f64 * 1e-6 * 2.0 };
+            }
+        }
+        self.max
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p99={} min={} max={}",
+            self.count,
+            fmt_secs(self.mean()),
+            fmt_secs(self.quantile(0.5)),
+            fmt_secs(self.quantile(0.99)),
+            fmt_secs(if self.min.is_finite() { self.min } else { 0.0 }),
+            fmt_secs(self.max)
+        )
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::stats::{AccessKind, AccessStat};
+
+    fn fake_report() -> RunReport {
+        RunReport {
+            makespan_secs: 10.0,
+            total_tasks: 100,
+            executed_tasks: 100,
+            failed_tasks: 0,
+            claim_races_lost: 3,
+            dbms_total_secs: 2.0,
+            dbms_max_node_secs: 0.8,
+            access_stats: vec![(
+                AccessKind::GetReadyTasks,
+                AccessStat { count: 100, total_secs: 1.2, min_secs: 0.001, max_secs: 0.1 },
+            )],
+            db_bytes: 4096,
+            supervisor_failovers: 0,
+        }
+    }
+
+    #[test]
+    fn report_rendering_contains_key_figures() {
+        let s = format_report("test", &fake_report());
+        assert!(s.contains("makespan 10.00s"));
+        assert!(s.contains("getREADYtasks"));
+        assert!(s.contains("60.0%")); // 1.2 / 2.0
+        let j = report_json("x", &fake_report()).to_string();
+        assert!(j.contains("\"makespan_secs\":10"));
+        assert!(j.contains("getREADYtasks"));
+    }
+
+    #[test]
+    fn histogram_quantiles_are_ordered() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-5); // 10us .. 10ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(h.mean() > 0.0);
+        assert!(h.summary().contains("n=1000"));
+    }
+
+    #[test]
+    fn histogram_extremes() {
+        let mut h = Histogram::new();
+        h.record(1e-9);
+        h.record(120.0);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.0) <= h.quantile(1.0));
+    }
+}

@@ -1,0 +1,263 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts (produced once by
+//! `python/compile/aot.py`) and executes them from the Rust hot path.
+//! Python never runs at request time.
+//!
+//! The `xla` crate's PJRT handles are `Rc`-based (neither `Send` nor
+//! `Sync`), so the runtime runs a dedicated executor thread that owns the
+//! client and the compile-once executable cache; worker threads submit
+//! requests over a channel. One compiled executable per model variant.
+
+pub mod riser;
+
+use crate::{Error, Result};
+use rustc_hash::FxHashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+/// A float tensor crossing the service boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub dims: Vec<i64>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, dims: Vec<i64>) -> Tensor {
+        debug_assert_eq!(
+            data.len() as i64,
+            dims.iter().product::<i64>(),
+            "tensor data/dims mismatch"
+        );
+        Tensor { data, dims }
+    }
+}
+
+enum Request {
+    Execute {
+        artifact: String,
+        inputs: Vec<Tensor>,
+        reply: Sender<Result<Vec<Tensor>>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the PJRT executor thread. Cheap to clone; thread-safe.
+#[derive(Clone)]
+pub struct PjrtService {
+    tx: Sender<Request>,
+    // joined on drop of the last handle
+    _joiner: Arc<Joiner>,
+}
+
+struct Joiner {
+    tx: Sender<Request>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for Joiner {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl PjrtService {
+    /// Start the executor thread over an artifact directory containing
+    /// `<name>.hlo.txt` files.
+    pub fn start(artifact_dir: impl Into<PathBuf>) -> Result<PjrtService> {
+        let dir = artifact_dir.into();
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || {
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => {
+                        let _ = ready_tx.send(Ok(()));
+                        c
+                    }
+                    Err(e) => {
+                        let _ =
+                            ready_tx.send(Err(Error::Runtime(format!("PJRT client: {e}"))));
+                        return;
+                    }
+                };
+                let mut exes: FxHashMap<String, xla::PjRtLoadedExecutable> =
+                    FxHashMap::default();
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Shutdown => break,
+                        Request::Execute { artifact, inputs, reply } => {
+                            let r = execute_one(&client, &mut exes, &dir, &artifact, inputs);
+                            let _ = reply.send(r);
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn pjrt thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("pjrt thread died during startup".into()))??;
+        Ok(PjrtService {
+            tx: tx.clone(),
+            _joiner: Arc::new(Joiner { tx, handle: Mutex::new(Some(handle)) }),
+        })
+    }
+
+    /// Execute `artifact` with the given inputs; blocks for the result.
+    pub fn execute(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Execute { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| Error::Runtime("pjrt executor is gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("pjrt executor dropped the request".into()))?
+    }
+}
+
+/// Executor-thread body for one request: compile-once, run, unpack.
+fn execute_one(
+    client: &xla::PjRtClient,
+    exes: &mut FxHashMap<String, xla::PjRtLoadedExecutable>,
+    dir: &Path,
+    artifact: &str,
+    inputs: Vec<Tensor>,
+) -> Result<Vec<Tensor>> {
+    if !exes.contains_key(artifact) {
+        let path = dir.join(format!("{artifact}.hlo.txt"));
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {path:?} not found — run `make artifacts` first"
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {artifact}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {artifact}: {e}")))?;
+        exes.insert(artifact.to_string(), exe);
+    }
+    let exe = exes.get(artifact).expect("just inserted");
+
+    let literals: Vec<xla::Literal> = inputs
+        .iter()
+        .map(|t| {
+            xla::Literal::vec1(&t.data)
+                .reshape(&t.dims)
+                .map_err(|e| Error::Runtime(format!("input reshape: {e}")))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| Error::Runtime(format!("execute {artifact}: {e}")))?;
+    let first = result
+        .first()
+        .and_then(|d| d.first())
+        .ok_or_else(|| Error::Runtime("no output buffer".into()))?;
+    let lit = first
+        .to_literal_sync()
+        .map_err(|e| Error::Runtime(format!("fetch output: {e}")))?;
+    // aot.py lowers with return_tuple=True: unpack the tuple elements.
+    let elems = lit
+        .to_tuple()
+        .map_err(|e| Error::Runtime(format!("untuple output: {e}")))?;
+    elems
+        .into_iter()
+        .map(|l| {
+            let dims: Vec<i64> = l
+                .array_shape()
+                .map_err(|e| Error::Runtime(format!("output shape: {e}")))?
+                .dims()
+                .to_vec();
+            let data = l
+                .to_vec::<f32>()
+                .map_err(|e| Error::Runtime(format!("output data: {e}")))?;
+            Ok(Tensor { data, dims })
+        })
+        .collect()
+}
+
+/// Default artifact directory: `$SCHALADB_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("SCHALADB_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Whether the riser artifacts exist (tests skip PJRT paths otherwise).
+pub fn artifacts_available() -> bool {
+    let d = default_artifact_dir();
+    d.join("riser_stress.hlo.txt").exists() && d.join("riser_wear.hlo.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_invariant() {
+        let t = Tensor::new(vec![0.0; 6], vec![2, 3]);
+        assert_eq!(t.dims, vec![2, 3]);
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let svc = PjrtService::start("/nonexistent-dir").unwrap();
+        let e = svc.execute("nope", vec![]);
+        match e {
+            Err(Error::Runtime(msg)) => assert!(msg.contains("make artifacts"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn service_survives_concurrent_clients() {
+        // even without artifacts, concurrent requests must not wedge
+        let svc = PjrtService::start("/nonexistent-dir").unwrap();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..5 {
+                    let _ = svc.execute("nope", vec![]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    /// Full PJRT round trip (needs `make artifacts`; skips otherwise).
+    #[test]
+    fn riser_stress_artifact_roundtrip() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let svc = PjrtService::start(default_artifact_dir()).unwrap();
+        let b = riser::BATCH as i64;
+        let env = Tensor::new(
+            (0..riser::BATCH)
+                .flat_map(|i| [10.0 + i as f32 * 0.1, 0.2, 1000.0])
+                .collect(),
+            vec![b, 3],
+        );
+        let out = svc.execute("riser_stress", vec![env.clone()]).unwrap();
+        assert_eq!(out.len(), 2, "curv + damage");
+        assert_eq!(out[0].dims, vec![b, 3]);
+        assert_eq!(out[1].dims, vec![b]);
+        assert!(out[0].data.iter().all(|x| x.is_finite()));
+        // deterministic across calls
+        let out2 = svc.execute("riser_stress", vec![env]).unwrap();
+        assert_eq!(out[0], out2[0]);
+        assert_eq!(out[1], out2[1]);
+    }
+}

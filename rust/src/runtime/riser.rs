@@ -1,0 +1,170 @@
+//! Task runners backed by the AOT-compiled riser fatigue artifacts.
+//!
+//! `riser_stress`: environmental conditions → curvature components
+//! (cx, cy, cz) + accumulated modal damage — the Pallas kernel lives inside
+//! this artifact. `riser_wear`: curvature → wear factor f1.
+//!
+//! The artifacts are compiled for a fixed batch `BATCH`; a task carries one
+//! condition, so the runner broadcasts it across the batch and reads row 0
+//! (the batch dimension exists to keep the kernel MXU-shaped, and lets a
+//! future batching scheduler amortize calls).
+
+use crate::coordinator::payload::{TaskCtx, TaskOutput, TaskRunner};
+use crate::runtime::{PjrtService, Tensor};
+use crate::{Error, Result};
+
+/// Batch size the artifacts were lowered with (must match
+/// `python/compile/model.py::BATCH`).
+pub const BATCH: usize = 64;
+
+/// Stress-analysis runner: inputs `wind`, `wave`, `depth` → outputs
+/// `cx`, `cy`, `cz` (+ a raw stress file pointer).
+pub struct RiserStressRunner {
+    svc: PjrtService,
+}
+
+impl RiserStressRunner {
+    pub fn new(svc: PjrtService) -> RiserStressRunner {
+        RiserStressRunner { svc }
+    }
+}
+
+fn broadcast_env(ctx: &TaskCtx, fields: [&str; 3]) -> Result<Tensor> {
+    let mut vals = [0.0f32; 3];
+    for (i, f) in fields.iter().enumerate() {
+        vals[i] = ctx
+            .input(f)
+            .ok_or_else(|| Error::Engine(format!("task {} missing input '{f}'", ctx.taskid)))?
+            as f32;
+    }
+    let mut data = Vec::with_capacity(BATCH * 3);
+    for _ in 0..BATCH {
+        data.extend_from_slice(&vals);
+    }
+    Ok(Tensor::new(data, vec![BATCH as i64, 3]))
+}
+
+impl TaskRunner for RiserStressRunner {
+    fn run(&self, ctx: &TaskCtx) -> Result<TaskOutput> {
+        let env = broadcast_env(ctx, ["wind", "wave", "depth"])?;
+        let out = self.svc.execute("riser_stress", vec![env])?;
+        if out.len() != 2 {
+            return Err(Error::Runtime(format!(
+                "riser_stress returned {} outputs, expected 2",
+                out.len()
+            )));
+        }
+        let curv = &out[0]; // (BATCH, 3)
+        let (cx, cy, cz) =
+            (curv.data[0] as f64, curv.data[1] as f64, curv.data[2] as f64);
+        let damage = out[1].data[0] as f64;
+        Ok(TaskOutput {
+            fields: vec![
+                ("cx".into(), cx),
+                ("cy".into(), cy),
+                ("cz".into(), cz),
+                ("damage".into(), damage),
+            ],
+            files: vec![(
+                format!("/data/riser/stress_{:06}.seg", ctx.taskid),
+                4096 + (damage.abs() * 1e3) as i64,
+            )],
+            stdout: format!("cx={cx:.4} cy={cy:.4} cz={cz:.4} damage={damage:.4}"),
+        })
+    }
+}
+
+/// Wear-and-tear runner: inputs `cx`, `cy`, `cz` → output `f1`.
+pub struct RiserWearRunner {
+    svc: PjrtService,
+}
+
+impl RiserWearRunner {
+    pub fn new(svc: PjrtService) -> RiserWearRunner {
+        RiserWearRunner { svc }
+    }
+}
+
+impl TaskRunner for RiserWearRunner {
+    fn run(&self, ctx: &TaskCtx) -> Result<TaskOutput> {
+        let curv = broadcast_env(ctx, ["cx", "cy", "cz"])?;
+        let out = self.svc.execute("riser_wear", vec![curv])?;
+        let f1 = out
+            .first()
+            .and_then(|t| t.data.first())
+            .copied()
+            .ok_or_else(|| Error::Runtime("riser_wear returned no data".into()))?
+            as f64;
+        Ok(TaskOutput {
+            fields: vec![("f1".into(), f1)],
+            files: vec![],
+            stdout: format!("f1={f1:.5}"),
+        })
+    }
+}
+
+/// Register both riser runners on a registry under the names the
+/// `workload::risers_workflow_with(n, Some("riser"))` spec expects.
+pub fn register_riser_runners(
+    registry: &mut crate::coordinator::payload::RunnerRegistry,
+    svc: &PjrtService,
+) {
+    registry.register("riser", std::sync::Arc::new(RiserStressRunner::new(svc.clone())));
+    registry.register("riser_wear", std::sync::Arc::new(RiserWearRunner::new(svc.clone())));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifact_dir};
+
+    fn ctx(inputs: Vec<(String, f64)>) -> TaskCtx {
+        TaskCtx {
+            taskid: 7,
+            actid: 2,
+            workerid: 0,
+            inputs,
+            seed: 1,
+            duration: 0.0,
+            time_scale: 0.0,
+        }
+    }
+
+    #[test]
+    fn missing_inputs_are_reported() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let svc = PjrtService::start(default_artifact_dir()).unwrap();
+        let r = RiserStressRunner::new(svc);
+        let e = r.run(&ctx(vec![("wind".into(), 1.0)]));
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn stress_then_wear_chain() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let svc = PjrtService::start(default_artifact_dir()).unwrap();
+        let stress = RiserStressRunner::new(svc.clone());
+        let out = stress
+            .run(&ctx(vec![
+                ("wind".into(), 12.0),
+                ("wave".into(), 0.25),
+                ("depth".into(), 1500.0),
+            ]))
+            .unwrap();
+        assert_eq!(out.fields.len(), 4);
+        assert_eq!(out.files.len(), 1);
+
+        let wear = RiserWearRunner::new(svc);
+        let wout = wear
+            .run(&ctx(out.fields[..3].to_vec()))
+            .unwrap();
+        let f1 = wout.fields[0].1;
+        assert!((0.0..=1.0).contains(&f1), "f1={f1}");
+    }
+}

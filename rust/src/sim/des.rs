@@ -1,0 +1,454 @@
+//! The discrete-event simulator core.
+
+use crate::sim::params::{OpSpec, SimParams};
+use crate::util::rng::Rng;
+use crate::Result;
+use rustc_hash::FxHashMap;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Which engine architecture to simulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// SchalaDB/d-Chiron: workers talk to the distributed DBMS directly.
+    DChiron,
+    /// Original Chiron: every access hops through a single master and a
+    /// centralized single-partition DBMS (Figure 6-B).
+    Chiron,
+}
+
+/// Simulation output.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub makespan_secs: f64,
+    pub tasks: usize,
+    /// Per worker node: sum of its DBMS access elapsed times (Experiment 5
+    /// metric is the max of these).
+    pub dbms_node_sums: Vec<f64>,
+    pub dbms_total_secs: f64,
+    /// Per access-kind elapsed totals (Experiment 6 breakdown).
+    pub per_kind_secs: Vec<(String, f64)>,
+    /// Total compute (task duration) consumed.
+    pub compute_secs: f64,
+    /// Steering queries issued (Experiment 7).
+    pub steering_queries: u64,
+}
+
+impl SimReport {
+    pub fn dbms_max_node_secs(&self) -> f64 {
+        self.dbms_node_sums.iter().fold(0.0f64, |a, b| a.max(*b))
+    }
+
+    pub fn kind_pct(&self, kind: &str) -> f64 {
+        let total: f64 = self.per_kind_secs.iter().map(|(_, s)| s).sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.per_kind_secs
+            .iter()
+            .find(|(k, _)| k == kind)
+            .map(|(_, s)| 100.0 * s / total)
+            .unwrap_or(0.0)
+    }
+}
+
+/// Event heap entry: min-ordered by time.
+struct Ev {
+    t: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+enum EvKind {
+    /// Thread (worker, thread) enters the given phase.
+    Thread { worker: usize, phase: Phase },
+    /// Supervisor readiness sweep.
+    SupervisorScan,
+    /// Steering query batch.
+    Steering,
+}
+
+#[derive(Clone, Copy)]
+enum Phase {
+    /// Execute claim-phase op `i` of the profile; at the end of the claim
+    /// ops, pop a task and run it.
+    Claim(usize),
+    /// Compute finished; execute finish-phase op `i`.
+    Finish { op: usize, dur: f64 },
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed for a min-heap on (t, seq)
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct State<'a> {
+    p: &'a SimParams,
+    kind: EngineKind,
+    rng: Rng,
+    heap: BinaryHeap<Ev>,
+    seq: u64,
+    /// Remaining tasks per worker's partition of the bag.
+    bags: Vec<usize>,
+    remaining_total: usize,
+    /// One DBMS session per worker node.
+    session_free: Vec<f64>,
+    /// Data node core pools.
+    node_cores: Vec<Vec<f64>>,
+    /// Centralized pieces (Chiron).
+    master_free: f64,
+    central_db_free: f64,
+    /// Exclusive WQ window taken by the supervisor sweep.
+    scan_until: f64,
+    /// Accounting.
+    node_sums: Vec<f64>,
+    per_kind: FxHashMap<&'static str, f64>,
+    compute: f64,
+    thread_end: f64,
+    steering_queries: u64,
+    claim_ops: Vec<OpSpec>,
+    finish_ops: Vec<OpSpec>,
+}
+
+impl<'a> State<'a> {
+    fn push(&mut self, t: f64, kind: EvKind) {
+        self.seq += 1;
+        self.heap.push(Ev { t, seq: self.seq, kind });
+    }
+
+    /// Simulate one DBMS access issued by worker `w` at time `t`; returns
+    /// the completion time seen by the client.
+    ///
+    /// Accounting note: the recorded "time spent accessing the DBMS" runs
+    /// from *session acquisition* (the paper instruments each query's
+    /// elapsed time; waiting for the node's connection is client-side), so
+    /// node sums stay comparable to Figure 11 while session contention
+    /// still shapes the makespan.
+    fn db_op(&mut self, w: usize, t: f64, op: &OpSpec) -> f64 {
+        let (measured_from, end) = match self.kind {
+            EngineKind::DChiron => {
+                // session serialization per worker node
+                let s0 = t.max(self.session_free[w]);
+                // supervisor sweep holds the WQ briefly
+                let s0 = if s0 < self.scan_until { self.scan_until } else { s0 };
+                let n = w % self.p.data_nodes;
+                // one data-node core serves the op; write service times
+                // already include the synchronous backup apply (see
+                // SimParams docs), so replication adds no extra core claim
+                let end = {
+                    let pool = &mut self.node_cores[n];
+                    let (ci, _) = pool
+                        .iter()
+                        .enumerate()
+                        .min_by(|a, b| a.1.total_cmp(b.1))
+                        .expect("non-empty pool");
+                    let start = s0.max(pool[ci]);
+                    let end = start + op.service_secs;
+                    pool[ci] = end;
+                    end
+                };
+                let end = end + self.p.net_rtt_secs;
+                self.session_free[w] = end;
+                (s0, end)
+            }
+            EngineKind::Chiron => {
+                // request → master queue → central DB → reply (+ack hop on
+                // writes: the master must confirm)
+                let s0 = t + self.p.msg_latency_secs;
+                let m = s0.max(self.master_free);
+                let m_end = m + self.p.master_service_secs;
+                self.master_free = m_end;
+                let db_start = m_end.max(self.central_db_free);
+                let db_end = db_start + op.service_secs * self.p.central_db_factor;
+                self.central_db_free = db_end;
+                let mut end = db_end + self.p.msg_latency_secs;
+                if op.write {
+                    end += self.p.msg_latency_secs; // the ack the paper counts
+                }
+                // Chiron's figure-6B costs are exactly the point: measure
+                // the whole master-mediated round trip.
+                (t, end)
+            }
+        };
+        let elapsed = end - measured_from;
+        self.node_sums[w] += elapsed;
+        // The per-kind breakdown (Figure 12) reflects where the DBMS spends
+        // its time — service, not queueing, which is shared overhead.
+        *self.per_kind.entry(op.kind).or_insert(0.0) +=
+            op.service_secs + self.p.net_rtt_secs;
+        end
+    }
+
+    fn wall_duration(&mut self, mean: f64) -> f64 {
+        let dur = if mean > 0.0 { self.rng.task_duration(mean, 0.05) } else { 0.0 };
+        let ratio = self.p.threads as f64 / self.p.cores_per_worker as f64;
+        if ratio > 1.0 {
+            dur * ratio * (1.0 + self.p.oversub_tax * (ratio - 1.0))
+        } else {
+            dur
+        }
+    }
+}
+
+/// Run the simulation: `n_tasks` independent tasks with the given mean
+/// duration (the paper's synthetic workload model), circularly sharded over
+/// the workers.
+pub fn simulate(
+    kind: EngineKind,
+    n_tasks: usize,
+    mean_task_secs: f64,
+    p: &SimParams,
+) -> Result<SimReport> {
+    let w = p.workers.max(1);
+    let mut bags = vec![n_tasks / w; w];
+    for extra in bags.iter_mut().take(n_tasks % w) {
+        *extra += 1;
+    }
+    let claim_ops: Vec<OpSpec> = p.profile.iter().filter(|o| o.claim_phase).copied().collect();
+    let finish_ops: Vec<OpSpec> = p.profile.iter().filter(|o| !o.claim_phase).copied().collect();
+    let mut st = State {
+        p,
+        kind,
+        rng: Rng::new(p.seed),
+        heap: BinaryHeap::new(),
+        seq: 0,
+        remaining_total: n_tasks,
+        bags,
+        session_free: vec![0.0; w],
+        node_cores: vec![vec![0.0; p.cores_per_data_node]; p.data_nodes.max(1)],
+        master_free: 0.0,
+        central_db_free: 0.0,
+        scan_until: 0.0,
+        node_sums: vec![0.0; w],
+        per_kind: FxHashMap::default(),
+        compute: 0.0,
+        thread_end: 0.0,
+        steering_queries: 0,
+        claim_ops,
+        finish_ops,
+    };
+
+    // Seed thread events (stagger initial claims a little, as real startup
+    // does).
+    let mut startup = Rng::new(p.seed ^ 0xDEAD);
+    for worker in 0..w {
+        for _ in 0..p.threads {
+            let jitter = startup.uniform(0.0, 0.010);
+            st.push(jitter, EvKind::Thread { worker, phase: Phase::Claim(0) });
+        }
+    }
+    if matches!(kind, EngineKind::DChiron) && p.sup_scan_secs_per_task > 0.0 {
+        st.push(p.sup_poll_secs, EvKind::SupervisorScan);
+    }
+    if let Some(every) = p.steering_every_secs {
+        st.push(every, EvKind::Steering);
+    }
+
+    while let Some(ev) = st.heap.pop() {
+        let t = ev.t;
+        match ev.kind {
+            EvKind::Thread { worker, phase } => match phase {
+                Phase::Claim(i) => {
+                    if st.bags[worker] == 0 {
+                        // partition drained; thread retires
+                        st.thread_end = st.thread_end.max(t);
+                        continue;
+                    }
+                    if i == 0 && st.remaining_total == 0 {
+                        st.thread_end = st.thread_end.max(t);
+                        continue;
+                    }
+                    let op = st.claim_ops[i];
+                    let end = st.db_op(worker, t, &op);
+                    if i + 1 < st.claim_ops.len() {
+                        st.push(end, EvKind::Thread { worker, phase: Phase::Claim(i + 1) });
+                    } else {
+                        // claim complete: pop a task and compute
+                        st.bags[worker] -= 1;
+                        st.remaining_total -= 1;
+                        let dur = st.wall_duration(mean_task_secs);
+                        st.compute += dur;
+                        st.push(
+                            end + dur,
+                            EvKind::Thread { worker, phase: Phase::Finish { op: 0, dur } },
+                        );
+                    }
+                }
+                Phase::Finish { op, dur } => {
+                    let spec = st.finish_ops[op];
+                    let end = st.db_op(worker, t, &spec);
+                    if op + 1 < st.finish_ops.len() {
+                        st.push(
+                            end,
+                            EvKind::Thread { worker, phase: Phase::Finish { op: op + 1, dur } },
+                        );
+                    } else {
+                        st.thread_end = st.thread_end.max(end);
+                        st.push(end, EvKind::Thread { worker, phase: Phase::Claim(0) });
+                    }
+                }
+            },
+            EvKind::SupervisorScan => {
+                if st.remaining_total > 0 {
+                    let dur = p.sup_scan_secs_per_task * st.remaining_total as f64;
+                    st.scan_until = t + dur;
+                    st.push(t + p.sup_poll_secs.max(dur), EvKind::SupervisorScan);
+                }
+            }
+            EvKind::Steering => {
+                if st.remaining_total > 0 {
+                    // 7-query monitoring mix, each occupying one data-node
+                    // core (they are reads; no WQ exclusion)
+                    for q in 0..7usize {
+                        let n = q % p.data_nodes.max(1);
+                        let pool = &mut st.node_cores[n];
+                        let (ci, _) = pool
+                            .iter()
+                            .enumerate()
+                            .min_by(|a, b| a.1.total_cmp(b.1))
+                            .expect("non-empty pool");
+                        let start = t.max(pool[ci]);
+                        pool[ci] = start + p.steering_query_secs;
+                    }
+                    st.steering_queries += 7;
+                    st.push(
+                        t + p.steering_every_secs.unwrap_or(15.0),
+                        EvKind::Steering,
+                    );
+                }
+            }
+        }
+    }
+
+    let mut per_kind: Vec<(String, f64)> =
+        st.per_kind.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+    per_kind.sort_by(|a, b| b.1.total_cmp(&a.1));
+    Ok(SimReport {
+        makespan_secs: st.thread_end,
+        tasks: n_tasks,
+        dbms_total_secs: st.node_sums.iter().sum(),
+        dbms_node_sums: st.node_sums,
+        per_kind_secs: per_kind,
+        compute_secs: st.compute,
+        steering_queries: st.steering_queries,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(cores: usize, threads: usize) -> SimParams {
+        SimParams::default().with_cores(cores, threads)
+    }
+
+    #[test]
+    fn long_tasks_scale_nearly_linearly() {
+        // Experiment-1 shape: doubling cores ~halves makespan for 60 s tasks
+        let m120 = simulate(EngineKind::DChiron, 13_000, 60.0, &params(120, 24))
+            .unwrap()
+            .makespan_secs;
+        let m960 = simulate(EngineKind::DChiron, 13_000, 60.0, &params(960, 24))
+            .unwrap()
+            .makespan_secs;
+        let speedup = m120 / m960;
+        assert!(
+            (5.0..9.5).contains(&speedup),
+            "8x cores gave {speedup:.2}x speedup (m120={m120:.0}s m960={m960:.0}s)"
+        );
+    }
+
+    #[test]
+    fn short_tasks_are_dbms_bound_long_tasks_are_not() {
+        // Experiment-5 shape
+        let p = params(936, 24);
+        let short = simulate(EngineKind::DChiron, 23_400, 1.0, &p).unwrap();
+        let long = simulate(EngineKind::DChiron, 23_400, 60.0, &p).unwrap();
+        let short_ratio = short.dbms_max_node_secs() / short.makespan_secs;
+        let long_ratio = long.dbms_max_node_secs() / long.makespan_secs;
+        assert!(short_ratio > 0.7, "1s tasks should be DBMS-dominated: {short_ratio:.2}");
+        assert!(long_ratio < 0.5, "60s tasks should not be: {long_ratio:.2}");
+        // flat region: DBMS time roughly duration-independent for >= 5s
+        let five = simulate(EngineKind::DChiron, 23_400, 5.0, &p).unwrap();
+        let r = five.dbms_max_node_secs() / long.dbms_max_node_secs();
+        assert!((0.5..2.0).contains(&r), "flat-region drifted: {r:.2}");
+    }
+
+    #[test]
+    fn figure12_breakdown_shape() {
+        let p = params(936, 24);
+        let r = simulate(EngineKind::DChiron, 23_400, 10.0, &p).unwrap();
+        let ready = r.kind_pct("getREADYtasks");
+        assert!(ready > 35.0, "getREADYtasks share {ready:.1}%");
+        let updates: f64 = ["updateToRUNNING", "updateToFINISHED", "insertDomainData", "insertProvenance"]
+            .iter()
+            .map(|k| r.kind_pct(k))
+            .sum();
+        assert!(updates > 45.0, "update share {updates:.1}%");
+    }
+
+    #[test]
+    fn chiron_is_flat_and_much_slower_on_short_tasks() {
+        // Experiment-8 shape
+        let p = params(936, 24);
+        let d_short = simulate(EngineKind::DChiron, 20_000, 1.0, &p).unwrap().makespan_secs;
+        let c_short = simulate(EngineKind::Chiron, 20_000, 1.0, &p).unwrap().makespan_secs;
+        let c_long = simulate(EngineKind::Chiron, 20_000, 16.0, &p).unwrap().makespan_secs;
+        assert!(
+            c_short / d_short > 5.0,
+            "Chiron should be many times slower: {c_short:.0} vs {d_short:.0}"
+        );
+        // Chiron insensitive to duration (its bottleneck is the master+DB)
+        let flatness = c_long / c_short;
+        assert!(flatness < 1.6, "Chiron should be flat-ish: {flatness:.2}");
+    }
+
+    #[test]
+    fn steering_overhead_is_negligible() {
+        // Experiment-7 shape
+        let base = simulate(EngineKind::DChiron, 23_400, 5.0, &params(936, 24)).unwrap();
+        let mut p = params(936, 24);
+        p.steering_every_secs = Some(15.0);
+        let steered = simulate(EngineKind::DChiron, 23_400, 5.0, &p).unwrap();
+        assert!(steered.steering_queries > 0);
+        let overhead = steered.makespan_secs / base.makespan_secs - 1.0;
+        assert!(overhead < 0.05, "steering overhead {:.1}%", overhead * 100.0);
+    }
+
+    #[test]
+    fn determinism() {
+        let p = params(240, 24);
+        let a = simulate(EngineKind::DChiron, 6_000, 60.0, &p).unwrap();
+        let b = simulate(EngineKind::DChiron, 6_000, 60.0, &p).unwrap();
+        assert_eq!(a.makespan_secs, b.makespan_secs);
+        assert_eq!(a.dbms_total_secs, b.dbms_total_secs);
+    }
+
+    #[test]
+    fn oversubscription_taxes_48_threads() {
+        let m24 = simulate(EngineKind::DChiron, 13_000, 60.0, &params(960, 24))
+            .unwrap()
+            .makespan_secs;
+        let m48 = simulate(EngineKind::DChiron, 13_000, 60.0, &params(960, 48))
+            .unwrap()
+            .makespan_secs;
+        // 48 threads on 24 cores: no throughput win, a visible tax
+        assert!(m48 > m24 * 1.02, "expected oversubscription tax: {m24:.0} vs {m48:.0}");
+    }
+}

@@ -1,0 +1,357 @@
+//! Experiment harnesses: one function per paper table/figure, each
+//! regenerating the corresponding rows/series. Shared by the `exp*` bench
+//! binaries and the `dchiron bench-sim` CLI.
+
+use crate::sim::des::{simulate, EngineKind};
+use crate::sim::params::SimParams;
+use crate::util::json::Json;
+use crate::util::{fmt_secs, render_table};
+use crate::Result;
+
+/// A rendered experiment: title, aligned text table, machine-readable JSON.
+pub struct ExperimentOutput {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub table: String,
+    pub json: Json,
+}
+
+impl ExperimentOutput {
+    pub fn print(&self) {
+        println!("== {} — {} ==", self.id, self.title);
+        println!("{}", self.table);
+    }
+}
+
+fn mk(id: &'static str, title: &'static str, header: &[&str], rows: Vec<Vec<String>>, json: Json) -> ExperimentOutput {
+    ExperimentOutput { id, title, table: render_table(header, &rows), json }
+}
+
+/// Experiment 1 / Figure 9(a): strong scaling, 13k tasks @ 60 s, cores in
+/// {120, 240, 480, 960} × threads {12, 24, 48}; linear reference from the
+/// 120-core base.
+pub fn exp1_strong_scaling() -> Result<ExperimentOutput> {
+    let tasks = 13_000;
+    let dur = 60.0;
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    for threads in [12usize, 24, 48] {
+        let base = simulate(
+            EngineKind::DChiron,
+            tasks,
+            dur,
+            &SimParams::default().with_cores(120, threads),
+        )?
+        .makespan_secs;
+        for cores in [120usize, 240, 480, 960] {
+            let p = SimParams::default().with_cores(cores, threads);
+            let r = simulate(EngineKind::DChiron, tasks, dur, &p)?;
+            let linear = base * 120.0 / cores as f64;
+            let eff = linear / r.makespan_secs;
+            rows.push(vec![
+                cores.to_string(),
+                threads.to_string(),
+                fmt_secs(r.makespan_secs),
+                fmt_secs(linear),
+                format!("{:.2}", eff),
+            ]);
+            series.push(
+                Json::obj()
+                    .set("cores", cores)
+                    .set("threads", threads)
+                    .set("makespan_secs", r.makespan_secs)
+                    .set("linear_secs", linear)
+                    .set("efficiency", eff),
+            );
+        }
+    }
+    Ok(mk(
+        "exp1",
+        "strong scaling (Fig 9a): 13k tasks @ 60s",
+        &["cores", "threads", "makespan", "linear", "efficiency"],
+        rows,
+        Json::obj().set("experiment", "exp1").set("series", Json::Arr(series)),
+    ))
+}
+
+/// Experiment 2 / Figure 9(b): weak scaling — 6k/12k/23.4k tasks @ 60 s on
+/// 240/480/936 cores, 24 threads.
+pub fn exp2_weak_scaling() -> Result<ExperimentOutput> {
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    let mut base = None;
+    for (cores, tasks) in [(240usize, 6_000usize), (480, 12_000), (936, 23_400)] {
+        let p = SimParams::default().with_cores(cores, 24);
+        let r = simulate(EngineKind::DChiron, tasks, 60.0, &p)?;
+        let b = *base.get_or_insert(r.makespan_secs);
+        rows.push(vec![
+            cores.to_string(),
+            tasks.to_string(),
+            format!("{:.1}min", r.makespan_secs / 60.0),
+            format!("{:.1}min", b / 60.0),
+            format!("{:+.1}%", 100.0 * (r.makespan_secs / b - 1.0)),
+        ]);
+        series.push(
+            Json::obj()
+                .set("cores", cores)
+                .set("tasks", tasks)
+                .set("makespan_secs", r.makespan_secs)
+                .set("inflation_pct", 100.0 * (r.makespan_secs / b - 1.0)),
+        );
+    }
+    Ok(mk(
+        "exp2",
+        "weak scaling (Fig 9b): tasks grow with cores @ 60s",
+        &["cores", "tasks", "makespan", "ideal", "inflation"],
+        rows,
+        Json::obj().set("experiment", "exp2").set("series", Json::Arr(series)),
+    ))
+}
+
+/// Experiment 3 / Figure 10(a): fixed duration {5 s, 60 s}, tasks in
+/// {4.6k, 12k, 23.4k}, 936 cores; linear reference from the smallest count.
+pub fn exp3_tasks_scaling() -> Result<ExperimentOutput> {
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    for dur in [5.0f64, 60.0] {
+        let mut base: Option<(usize, f64)> = None;
+        for tasks in [4_600usize, 12_000, 23_400] {
+            let p = SimParams::default().with_cores(936, 24);
+            let r = simulate(EngineKind::DChiron, tasks, dur, &p)?;
+            let (bt, bm) = *base.get_or_insert((tasks, r.makespan_secs));
+            let linear = bm * tasks as f64 / bt as f64;
+            let away = 100.0 * (r.makespan_secs / linear - 1.0);
+            rows.push(vec![
+                format!("{dur}s"),
+                tasks.to_string(),
+                fmt_secs(r.makespan_secs),
+                fmt_secs(linear),
+                format!("{away:+.1}%"),
+            ]);
+            series.push(
+                Json::obj()
+                    .set("duration_secs", dur)
+                    .set("tasks", tasks)
+                    .set("makespan_secs", r.makespan_secs)
+                    .set("pct_from_linear", away),
+            );
+        }
+    }
+    Ok(mk(
+        "exp3",
+        "workload scaling by task count (Fig 10a), 936 cores",
+        &["duration", "tasks", "makespan", "linear", "from linear"],
+        rows,
+        Json::obj().set("experiment", "exp3").set("series", Json::Arr(series)),
+    ))
+}
+
+/// Experiment 4 / Figure 10(b): fixed task counts {4.6k, 23.4k}, duration
+/// sweep {5..120 s}, 936 cores; linear reference anchored at 120 s.
+pub fn exp4_duration_scaling() -> Result<ExperimentOutput> {
+    let durations = [5.0f64, 15.0, 30.0, 60.0, 120.0];
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    for tasks in [4_600usize, 23_400] {
+        let p = SimParams::default().with_cores(936, 24);
+        let base = simulate(EngineKind::DChiron, tasks, 120.0, &p)?.makespan_secs;
+        for dur in durations {
+            let r = simulate(EngineKind::DChiron, tasks, dur, &p)?;
+            let linear = base * dur / 120.0;
+            let away = 100.0 * (r.makespan_secs / linear - 1.0);
+            rows.push(vec![
+                tasks.to_string(),
+                format!("{dur}s"),
+                fmt_secs(r.makespan_secs),
+                fmt_secs(linear),
+                format!("{away:+.1}%"),
+            ]);
+            series.push(
+                Json::obj()
+                    .set("tasks", tasks)
+                    .set("duration_secs", dur)
+                    .set("makespan_secs", r.makespan_secs)
+                    .set("pct_from_linear", away),
+            );
+        }
+    }
+    Ok(mk(
+        "exp4",
+        "workload scaling by duration (Fig 10b), 936 cores",
+        &["tasks", "duration", "makespan", "linear", "from linear"],
+        rows,
+        Json::obj().set("experiment", "exp4").set("series", Json::Arr(series)),
+    ))
+}
+
+/// Experiment 5 / Figure 11: DBMS access time vs total time, 23.4k tasks,
+/// durations {1..60 s}, 936 cores.
+pub fn exp5_dbms_impact() -> Result<ExperimentOutput> {
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    for dur in [1.0f64, 2.0, 3.0, 4.0, 5.0, 10.0, 30.0, 60.0] {
+        let p = SimParams::default().with_cores(936, 24);
+        let r = simulate(EngineKind::DChiron, 23_400, dur, &p)?;
+        let dbms = r.dbms_max_node_secs();
+        rows.push(vec![
+            format!("{dur}s"),
+            fmt_secs(r.makespan_secs),
+            fmt_secs(dbms),
+            format!("{:.0}%", 100.0 * dbms / r.makespan_secs),
+        ]);
+        series.push(
+            Json::obj()
+                .set("duration_secs", dur)
+                .set("total_secs", r.makespan_secs)
+                .set("dbms_secs", dbms)
+                .set("dbms_share_pct", 100.0 * dbms / r.makespan_secs),
+        );
+    }
+    Ok(mk(
+        "exp5",
+        "DBMS access time vs total (Fig 11): 23.4k tasks, 936 cores",
+        &["mean duration", "total", "DBMS (max node)", "share"],
+        rows,
+        Json::obj().set("experiment", "exp5").set("series", Json::Arr(series)),
+    ))
+}
+
+/// Experiment 6 / Figure 12: per-query-kind share of DBMS time, 23.4k tasks
+/// @ 10 s, 936 cores.
+pub fn exp6_query_breakdown() -> Result<ExperimentOutput> {
+    let p = SimParams::default().with_cores(936, 24);
+    let r = simulate(EngineKind::DChiron, 23_400, 10.0, &p)?;
+    let mut rows = Vec::new();
+    let mut obj = Json::obj().set("experiment", "exp6");
+    for (kind, secs) in &r.per_kind_secs {
+        let pct = r.kind_pct(kind);
+        rows.push(vec![kind.clone(), fmt_secs(*secs), format!("{pct:.1}%")]);
+        obj = obj.set(kind, pct);
+    }
+    Ok(mk(
+        "exp6",
+        "DBMS access breakdown (Fig 12): 23.4k tasks @ 10s",
+        &["access", "total", "share"],
+        rows,
+        obj,
+    ))
+}
+
+/// Experiment 7 / Figure 13: steering-query overhead — 23.4k tasks @ 5 s
+/// with and without the Q1–Q7 monitoring mix every 15 s.
+pub fn exp7_steering_overhead() -> Result<ExperimentOutput> {
+    let base_p = SimParams::default().with_cores(936, 24);
+    let base = simulate(EngineKind::DChiron, 23_400, 5.0, &base_p)?;
+    let mut steer_p = base_p.clone();
+    steer_p.steering_every_secs = Some(15.0);
+    let steered = simulate(EngineKind::DChiron, 23_400, 5.0, &steer_p)?;
+    let overhead = 100.0 * (steered.makespan_secs / base.makespan_secs - 1.0);
+    let rows = vec![
+        vec!["without queries".into(), fmt_secs(base.makespan_secs), "-".into()],
+        vec![
+            "with queries @15s".into(),
+            fmt_secs(steered.makespan_secs),
+            format!("{overhead:+.2}%"),
+        ],
+    ];
+    Ok(mk(
+        "exp7",
+        "steering overhead (Fig 13): 23.4k tasks @ 5s",
+        &["scenario", "makespan", "overhead"],
+        rows,
+        Json::obj()
+            .set("experiment", "exp7")
+            .set("base_secs", base.makespan_secs)
+            .set("steered_secs", steered.makespan_secs)
+            .set("overhead_pct", overhead)
+            .set("queries", steered.steering_queries as i64),
+    ))
+}
+
+/// Experiment 8 / Figure 14: Chiron vs d-Chiron on {5k, 20k} tasks ×
+/// {1 s, 16 s}, 936 cores.
+pub fn exp8_chiron_vs_dchiron() -> Result<ExperimentOutput> {
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    for (label, tasks, dur) in [
+        ("(a) 5k x 1s", 5_000usize, 1.0f64),
+        ("(b) 5k x 16s", 5_000, 16.0),
+        ("(c) 20k x 1s", 20_000, 1.0),
+        ("(d) 20k x 16s", 20_000, 16.0),
+    ] {
+        let p = SimParams::default().with_cores(936, 24);
+        let d = simulate(EngineKind::DChiron, tasks, dur, &p)?.makespan_secs;
+        let c = simulate(EngineKind::Chiron, tasks, dur, &p)?.makespan_secs;
+        rows.push(vec![
+            label.to_string(),
+            fmt_secs(d),
+            fmt_secs(c),
+            format!("{:.1}x", c / d),
+            format!("{:.0}%", 100.0 * (1.0 - d / c)),
+        ]);
+        series.push(
+            Json::obj()
+                .set("workload", label)
+                .set("dchiron_secs", d)
+                .set("chiron_secs", c)
+                .set("speedup", c / d),
+        );
+    }
+    Ok(mk(
+        "exp8",
+        "Chiron vs d-Chiron (Fig 14), 936 cores",
+        &["workload", "d-Chiron", "Chiron", "speedup", "faster by"],
+        rows,
+        Json::obj().set("experiment", "exp8").set("series", Json::Arr(series)),
+    ))
+}
+
+/// All experiments in paper order.
+pub fn all() -> Vec<fn() -> Result<ExperimentOutput>> {
+    vec![
+        exp1_strong_scaling,
+        exp2_weak_scaling,
+        exp3_tasks_scaling,
+        exp4_duration_scaling,
+        exp5_dbms_impact,
+        exp6_query_breakdown,
+        exp7_steering_overhead,
+        exp8_chiron_vs_dchiron,
+    ]
+}
+
+/// Run one experiment by id.
+pub fn run(id: &str) -> Result<ExperimentOutput> {
+    match id {
+        "exp1" => exp1_strong_scaling(),
+        "exp2" => exp2_weak_scaling(),
+        "exp3" => exp3_tasks_scaling(),
+        "exp4" => exp4_duration_scaling(),
+        "exp5" => exp5_dbms_impact(),
+        "exp6" => exp6_query_breakdown(),
+        "exp7" => exp7_steering_overhead(),
+        "exp8" => exp8_chiron_vs_dchiron(),
+        other => Err(crate::Error::Engine(format!("unknown experiment '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_experiment_produces_rows_and_json() {
+        for f in all() {
+            let out = f().unwrap();
+            assert!(out.table.lines().count() >= 3, "{} table too small", out.id);
+            let js = out.json.to_string();
+            assert!(js.contains("experiment"), "{} json missing tag", out.id);
+        }
+    }
+
+    #[test]
+    fn run_by_id_and_unknown() {
+        assert!(run("exp5").is_ok());
+        assert!(run("nope").is_err());
+    }
+}

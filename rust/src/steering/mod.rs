@@ -1,0 +1,356 @@
+//! User steering: the Table-2 analytical queries (Q1–Q8) and runtime
+//! workflow adaptation, issued against the live d-Chiron database.
+//!
+//! These run *while the workflow executes* — the integration the paper
+//! argues for: execution, domain, and provenance data in one DBMS means a
+//! monitoring query can join the scheduler's workqueue with domain values
+//! and provenance edges with no export step.
+
+use crate::storage::{AccessKind, DbCluster, ResultSet};
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A steering client bound to a (possibly running) d-Chiron database.
+pub struct SteeringClient {
+    db: Arc<DbCluster>,
+}
+
+impl SteeringClient {
+    pub fn new(db: Arc<DbCluster>) -> SteeringClient {
+        SteeringClient { db }
+    }
+
+    fn q(&self, sql: &str) -> Result<ResultSet> {
+        match self.db.exec_tagged(u32::MAX - 1, AccessKind::Steering, sql)? {
+            crate::storage::StatementResult::Rows(r) => Ok(r),
+            other => Err(Error::Engine(format!("steering query returned {other:?}"))),
+        }
+    }
+
+    /// Q1: per node, task status counts and failure tries for tasks started
+    /// in the last minute.
+    pub fn q1_recent_status_by_node(&self) -> Result<ResultSet> {
+        self.q(
+            "SELECT n.hostname, t.status, COUNT(*) AS tasks, SUM(t.failtries) AS failure_tries \
+             FROM workqueue t JOIN node n ON t.workerid = n.nodeid \
+             WHERE t.starttime >= NOW() - 60 \
+             GROUP BY n.hostname, t.status \
+             ORDER BY n.hostname, t.status",
+        )
+    }
+
+    /// Q2: for one node, per task finished in the last minute: status and
+    /// total bytes of its files, heaviest first.
+    pub fn q2_bytes_by_task(&self, hostname: &str) -> Result<ResultSet> {
+        self.q(&format!(
+            "SELECT t.taskid, t.status, SUM(f.size_bytes) AS bytes \
+             FROM workqueue t \
+             JOIN file f ON f.taskid = t.taskid \
+             JOIN node n ON t.workerid = n.nodeid \
+             WHERE n.hostname = '{hostname}' AND t.endtime >= NOW() - 60 \
+             GROUP BY t.taskid, t.status \
+             ORDER BY bytes DESC, t.status ASC"
+        ))
+    }
+
+    /// Q3: node(s) with the most aborted/failed tasks in the last minute.
+    pub fn q3_worst_nodes(&self) -> Result<ResultSet> {
+        self.q(
+            "SELECT n.hostname, COUNT(*) AS failed \
+             FROM workqueue t JOIN node n ON t.workerid = n.nodeid \
+             WHERE t.status = 'FAILED' AND t.endtime >= NOW() - 60 \
+             GROUP BY n.hostname ORDER BY failed DESC, n.hostname LIMIT 3",
+        )
+    }
+
+    /// Q4: tasks left to execute for a workflow.
+    pub fn q4_tasks_left(&self, wfid: i64) -> Result<i64> {
+        let rs = self.q(&format!(
+            "SELECT COUNT(*) AS remaining FROM workqueue \
+             WHERE wfid = {wfid} AND status != 'FINISHED' AND status != 'FAILED'"
+        ))?;
+        Ok(rs.rows[0].values[0].as_i64().unwrap_or(0))
+    }
+
+    /// Q5: for workflows running > 1 minute, the activity with the most
+    /// unfinished tasks.
+    pub fn q5_busiest_activity(&self) -> Result<ResultSet> {
+        self.q(
+            "SELECT a.name, COUNT(*) AS unfinished \
+             FROM workqueue t \
+             JOIN activity a ON t.actid = a.actid \
+             JOIN workflow w ON t.wfid = w.wfid \
+             WHERE w.status = 'RUNNING' AND w.starttime <= NOW() - 60 \
+               AND t.status != 'FINISHED' AND t.status != 'FAILED' \
+             GROUP BY a.name ORDER BY unfinished DESC LIMIT 1",
+        )
+    }
+
+    /// Q6: average and maximum execution time of finished tasks per
+    /// unfinished activity.
+    pub fn q6_activity_times(&self) -> Result<ResultSet> {
+        self.q(
+            "SELECT a.name, AVG(t.endtime - t.starttime) AS avg_secs, \
+                    MAX(t.endtime - t.starttime) AS max_secs \
+             FROM workqueue t JOIN activity a ON t.actid = a.actid \
+             WHERE t.status = 'FINISHED' AND a.status != 'FINISHED' \
+               AND t.starttime IS NOT NULL AND t.endtime IS NOT NULL \
+             GROUP BY a.name ORDER BY avg_secs DESC, max_secs DESC",
+        )
+    }
+
+    /// Q7: cross activity dataflow query — curvature components (produced by
+    /// the pre-processing activity and consumed downstream) plus the raw
+    /// stress file path, for wear-and-tear tasks whose `f1 > threshold` and
+    /// whose runtime exceeded their activity's average. Assembled from three
+    /// statements, as a steering client would.
+    pub fn q7_wear_outliers(&self, wear_activity: &str, threshold: f64) -> Result<ResultSet> {
+        // average runtime of the wear activity's finished tasks
+        let avg = self.q(&format!(
+            "SELECT AVG(t.endtime - t.starttime) AS a FROM workqueue t \
+             JOIN activity ac ON t.actid = ac.actid \
+             WHERE ac.name = '{wear_activity}' AND t.status = 'FINISHED'"
+        ))?;
+        let avg_secs = avg
+            .rows
+            .first()
+            .and_then(|r| r.values[0].as_f64())
+            .unwrap_or(f64::INFINITY);
+        // wear tasks over both thresholds, with their consumed curvature
+        self.q(&format!(
+            "SELECT t.taskid, fx.value AS cx, fy.value AS cy, fz.value AS cz, \
+                    ff.value AS f1, rf.path \
+             FROM workqueue t \
+             JOIN activity ac ON t.actid = ac.actid \
+             JOIN taskfield ff ON ff.taskid = t.taskid \
+             JOIN taskfield fx ON fx.taskid = t.taskid \
+             JOIN taskfield fy ON fy.taskid = t.taskid \
+             JOIN taskfield fz ON fz.taskid = t.taskid \
+             LEFT JOIN taskdep d ON d.taskid = t.taskid \
+             LEFT JOIN file rf ON rf.taskid = d.dep \
+             WHERE ac.name = '{wear_activity}' AND t.status = 'FINISHED' \
+               AND ff.field = 'f1' AND ff.direction = 'out' AND ff.value > {threshold} \
+               AND fx.field = 'cx' AND fx.direction = 'in' \
+               AND fy.field = 'cy' AND fy.direction = 'in' \
+               AND fz.field = 'cz' AND fz.direction = 'in' \
+               AND t.endtime - t.starttime > {avg_secs} \
+             ORDER BY f1 DESC"
+        ))
+    }
+
+    /// Q8: steering *adaptation* — rewrite an input field of the next READY
+    /// tasks of an activity (the paper's "modify the input data for the next
+    /// ready tasks for Analyze Risers"). Returns how many fields changed.
+    /// Runs as one atomic transaction so workers never see half an update.
+    pub fn q8_adapt_ready_inputs(
+        &self,
+        activity: &str,
+        field: &str,
+        new_value: f64,
+        limit: usize,
+    ) -> Result<usize> {
+        // find target tasks (READY, of the activity)
+        let rs = self.q(&format!(
+            "SELECT t.taskid FROM workqueue t JOIN activity a ON t.actid = a.actid \
+             WHERE a.name = '{activity}' AND t.status = 'READY' \
+             ORDER BY t.taskid LIMIT {limit}"
+        ))?;
+        if rs.rows.is_empty() {
+            return Ok(0);
+        }
+        let ids: Vec<String> =
+            rs.rows.iter().map(|r| r.values[0].as_i64().unwrap().to_string()).collect();
+        let id_list = ids.join(", ");
+        let n = self
+            .db
+            .exec_tagged(
+                u32::MAX - 1,
+                AccessKind::Steering,
+                &format!(
+                    "UPDATE taskfield SET value = {new_value} \
+                     WHERE field = '{field}' AND direction = 'in' AND taskid IN ({id_list})"
+                ),
+            )?
+            .affected();
+        Ok(n)
+    }
+
+    /// Provenance derivation query: everything a task used and generated.
+    pub fn provenance_of(&self, taskid: i64) -> Result<ResultSet> {
+        self.q(&format!(
+            "SELECT kind, entity, at FROM provenance WHERE taskid = {taskid} ORDER BY at, kind, entity"
+        ))
+    }
+
+    /// Database footprint summary (the paper's "tens of MB" observation).
+    pub fn db_footprint(&self) -> (usize, Vec<(String, usize)>) {
+        let tables = self.db.tables();
+        let per: Vec<(String, usize)> = tables
+            .iter()
+            .map(|t| (t.clone(), self.db.table_bytes(t).unwrap_or(0)))
+            .collect();
+        (per.iter().map(|(_, b)| b).sum(), per)
+    }
+}
+
+/// A monitoring loop issuing the steering query mix every `interval_secs`
+/// until stopped — Experiment 7's "running each query in intervals of 15 s".
+pub struct Monitor {
+    pub queries_run: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Monitor {
+    /// Spawn a monitor thread over `db` firing the full Q1–Q7 mix each
+    /// interval (Q8 is an adaptation, not monitoring).
+    pub fn spawn(db: Arc<DbCluster>, interval_secs: f64, wfid: i64) -> Monitor {
+        let stop = Arc::new(AtomicBool::new(false));
+        let queries_run = Arc::new(AtomicU64::new(0));
+        let s2 = stop.clone();
+        let q2 = queries_run.clone();
+        let handle = std::thread::Builder::new()
+            .name("steering-monitor".into())
+            .spawn(move || {
+                let client = SteeringClient::new(db);
+                while !s2.load(Ordering::SeqCst) {
+                    let _ = client.q1_recent_status_by_node();
+                    let _ = client.q2_bytes_by_task("node000");
+                    let _ = client.q3_worst_nodes();
+                    let _ = client.q4_tasks_left(wfid);
+                    let _ = client.q5_busiest_activity();
+                    let _ = client.q6_activity_times();
+                    let _ = client.q7_wear_outliers("calculate_wear_and_tear", 0.5);
+                    q2.fetch_add(7, Ordering::Relaxed);
+                    std::thread::sleep(std::time::Duration::from_secs_f64(interval_secs));
+                }
+            })
+            .expect("spawn monitor");
+        Monitor { queries_run, stop, handle: Some(handle) }
+    }
+
+    /// Stop and join the monitor; returns how many queries it issued.
+    pub fn stop(mut self) -> u64 {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.queries_run.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Monitor {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{DChironEngine, EngineConfig};
+    use crate::coordinator::payload::{Payload, SyntheticKind};
+    use crate::coordinator::workflow::{ActivitySpec, Operator, WorkflowSpec};
+    use crate::workload;
+
+    /// Build a finished risers-style database to steer against.
+    fn run_risers() -> Arc<DbCluster> {
+        let wf = workload::risers_workflow(12);
+        let inputs = workload::risers_inputs(12, 99);
+        let engine = DChironEngine::new(EngineConfig {
+            workers: 2,
+            threads_per_worker: 2,
+            time_scale: 0.0,
+            supervisor_poll_secs: 0.001,
+            ..Default::default()
+        });
+        let running = engine.start(wf, inputs).unwrap();
+        let db = running.db.clone();
+        running.join().unwrap();
+        db
+    }
+
+    #[test]
+    fn q1_to_q6_shapes() {
+        let db = run_risers();
+        let c = SteeringClient::new(db);
+        let q1 = c.q1_recent_status_by_node().unwrap();
+        assert_eq!(q1.columns, vec!["hostname", "status", "tasks", "failure_tries"]);
+        assert!(!q1.rows.is_empty());
+        let q2 = c.q2_bytes_by_task("node000").unwrap();
+        assert_eq!(q2.columns, vec!["taskid", "status", "bytes"]);
+        assert!(!q2.rows.is_empty(), "preprocessing emitted files on node000");
+        // bytes ordered descending
+        let bytes: Vec<f64> =
+            q2.rows.iter().map(|r| r.values[2].as_f64().unwrap()).collect();
+        assert!(bytes.windows(2).all(|w| w[0] >= w[1]));
+        let q3 = c.q3_worst_nodes().unwrap();
+        assert!(q3.rows.is_empty(), "no failures expected");
+        assert_eq!(c.q4_tasks_left(1).unwrap(), 0);
+        // finished workflow -> q5/q6 empty but valid
+        c.q5_busiest_activity().unwrap();
+        c.q6_activity_times().unwrap();
+    }
+
+    #[test]
+    fn q7_joins_domain_execution_and_files() {
+        let db = run_risers();
+        let c = SteeringClient::new(db);
+        // threshold 0 + avg gate means "slower than average" only; shape check
+        let q7 = c.q7_wear_outliers("calculate_wear_and_tear", 0.0).unwrap();
+        assert_eq!(q7.columns, vec!["taskid", "cx", "cy", "cz", "f1", "path"]);
+        for r in &q7.rows {
+            let f1 = r.values[4].as_f64().unwrap();
+            assert!(f1 > 0.0);
+        }
+    }
+
+    #[test]
+    fn q8_rewrites_ready_inputs_atomically() {
+        // build a db with a workflow still waiting: run only bootstrap
+        use crate::coordinator::schema;
+        use crate::coordinator::supervisor::{IdGen, Supervisor};
+        let db = DbCluster::start(crate::storage::cluster::ClusterConfig::default()).unwrap();
+        schema::create_schema(&db, 2).unwrap();
+        let wf = WorkflowSpec::new("adapt", 4).activity(
+            ActivitySpec::new(
+                "analyze_risers",
+                Operator::Map,
+                Payload::Synthetic { kind: SyntheticKind::Quadratic },
+            ),
+        );
+        let ids = Arc::new(IdGen::default());
+        ids.task.store(1, std::sync::atomic::Ordering::Relaxed);
+        let mut sup = Supervisor::new(db.clone(), wf, 2, ids, 3);
+        sup.bootstrap(&vec![vec![("a".into(), 1.0)]; 4]).unwrap();
+
+        let c = SteeringClient::new(db.clone());
+        let changed = c.q8_adapt_ready_inputs("analyze_risers", "a", 9.5, 2).unwrap();
+        assert_eq!(changed, 2);
+        let rs = db
+            .query("SELECT COUNT(*) FROM taskfield WHERE field = 'a' AND value = 9.5")
+            .unwrap();
+        assert_eq!(rs.rows[0].values[0].as_i64().unwrap(), 2);
+    }
+
+    #[test]
+    fn provenance_and_footprint() {
+        let db = run_risers();
+        let c = SteeringClient::new(db);
+        // pick a preprocessing task (activity 2): it generated cx/cy/cz
+        let rs = c
+            .q("SELECT taskid FROM workqueue WHERE actid = 2 ORDER BY taskid LIMIT 1")
+            .unwrap();
+        let tid = rs.rows[0].values[0].as_i64().unwrap();
+        let prov = c.provenance_of(tid).unwrap();
+        assert!(prov.rows.iter().any(|r| r.values[0].as_str() == Some("wasGeneratedBy")));
+        assert!(prov.rows.iter().any(|r| r.values[0].as_str() == Some("used")));
+        let (total, per) = c.db_footprint();
+        assert!(total > 0);
+        assert!(per.iter().any(|(t, _)| t == "workqueue"));
+    }
+}

@@ -1,0 +1,277 @@
+//! On-disk checkpoints and recovery.
+//!
+//! The paper runs the DBMS "in-memory ... with occasional on-disk
+//! checkpoints". A checkpoint serializes the catalog (table definitions +
+//! partitioning) and every partition's rows to a directory; recovery
+//! rebuilds a fresh cluster from it. Format is the same line encoding the
+//! WAL uses, so the two durability paths share code.
+
+use crate::storage::cluster::{ClusterConfig, DbCluster};
+use crate::storage::table_def::{Partitioning, TableDef};
+use crate::storage::value::{Column, ColumnType, Row, Schema};
+use crate::storage::wal::{decode_value, encode_value};
+use crate::{Error, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Write a checkpoint of every table to `dir` (one `.tbl` file per table).
+///
+/// Each file: a header line describing the definition, then one line per
+/// row. Rows are read under per-partition read locks, so the checkpoint of
+/// each partition is internally consistent.
+pub fn checkpoint(cluster: &DbCluster, dir: &Path) -> Result<usize> {
+    std::fs::create_dir_all(dir)?;
+    let mut files = 0;
+    for table in cluster.tables() {
+        let rs = cluster.query(&format!("SELECT * FROM {table}"))?;
+        let def = cluster_def(cluster, &table)?;
+        let path = dir.join(format!("{table}.tbl"));
+        let f = std::fs::File::create(&path)?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "{}", def_header(&def))?;
+        for row in &rs.rows {
+            let line: Vec<String> = row.values.iter().map(encode_value).collect();
+            writeln!(w, "{}", line.join("\t"))?;
+        }
+        w.flush()?;
+        files += 1;
+    }
+    Ok(files)
+}
+
+/// Rebuild a cluster from a checkpoint directory.
+pub fn recover(dir: &Path, config: ClusterConfig) -> Result<Arc<DbCluster>> {
+    let cluster = DbCluster::start(config)?;
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map_or(false, |x| x == "tbl"))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let f = std::fs::File::open(&path)?;
+        let mut lines = BufReader::new(f).lines();
+        let header = lines
+            .next()
+            .ok_or_else(|| Error::Parse(format!("empty checkpoint file {path:?}")))??;
+        let def = parse_def_header(&header)?;
+        let table = def.name.clone();
+        let ncols = def.schema.len();
+        cluster.create_table(def)?;
+        // Bulk insert via the SQL path would re-parse every value; go
+        // through INSERT statements built from decoded values instead.
+        let mut batch: Vec<String> = Vec::new();
+        for line in lines {
+            let line = line?;
+            if line.is_empty() {
+                continue;
+            }
+            let vals = line.split('\t').map(decode_value).collect::<Result<Vec<_>>>()?;
+            if vals.len() != ncols {
+                return Err(Error::Parse(format!(
+                    "checkpoint row arity {} != {} in {path:?}",
+                    vals.len(),
+                    ncols
+                )));
+            }
+            let rendered: Vec<String> = vals
+                .iter()
+                .map(|v| match v {
+                    crate::storage::value::Value::Null => "NULL".to_string(),
+                    crate::storage::value::Value::Int(i) => i.to_string(),
+                    crate::storage::value::Value::Float(f) => {
+                        if f.is_finite() {
+                            format!("{f:?}")
+                        } else {
+                            "NULL".to_string()
+                        }
+                    }
+                    crate::storage::value::Value::Bool(b) => b.to_string().to_uppercase(),
+                    crate::storage::value::Value::Str(s) => {
+                        format!("'{}'", s.replace('\'', "''"))
+                    }
+                })
+                .collect();
+            batch.push(format!("({})", rendered.join(", ")));
+            if batch.len() >= 256 {
+                cluster.execute(&format!("INSERT INTO {table} VALUES {}", batch.join(", ")))?;
+                batch.clear();
+            }
+        }
+        if !batch.is_empty() {
+            cluster.execute(&format!("INSERT INTO {table} VALUES {}", batch.join(", ")))?;
+        }
+    }
+    Ok(cluster)
+}
+
+fn cluster_def(cluster: &DbCluster, table: &str) -> Result<TableDefView> {
+    // The cluster doesn't expose TableDef directly; reconstruct what the
+    // header needs from a probing SELECT plus the catalog surface we do
+    // have. To keep this honest we add an accessor instead:
+    cluster.table_def(table)
+}
+
+/// Borrowed alias so the header helpers read naturally.
+type TableDefView = Arc<TableDef>;
+
+fn def_header(def: &TableDef) -> String {
+    let mut s = String::new();
+    s.push_str(&def.name);
+    s.push('\x1f');
+    let cols: Vec<String> = def
+        .schema
+        .columns
+        .iter()
+        .map(|c| format!("{}:{}:{}", c.name, c.ty.name(), u8::from(c.nullable)))
+        .collect();
+    s.push_str(&cols.join(","));
+    s.push('\x1f');
+    match &def.partitioning {
+        Partitioning::Single => s.push('-'),
+        Partitioning::Hash { column, partitions } => {
+            s.push_str(&format!("{column}:{partitions}"))
+        }
+    }
+    s.push('\x1f');
+    s.push_str(def.primary_key.as_deref().unwrap_or("-"));
+    s.push('\x1f');
+    s.push_str(&def.indexes.join(","));
+    s
+}
+
+fn parse_def_header(h: &str) -> Result<TableDef> {
+    let parts: Vec<&str> = h.split('\x1f').collect();
+    if parts.len() != 5 {
+        return Err(Error::Parse(format!("bad checkpoint header: {h}")));
+    }
+    let name = parts[0].to_string();
+    let columns = parts[1]
+        .split(',')
+        .map(|c| {
+            let bits: Vec<&str> = c.split(':').collect();
+            if bits.len() != 3 {
+                return Err(Error::Parse(format!("bad column spec '{c}'")));
+            }
+            Ok(Column {
+                name: bits[0].to_string(),
+                ty: ColumnType::parse(bits[1])?,
+                nullable: bits[2] == "1",
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut def = TableDef::new(name, Schema::new(columns)?);
+    if parts[2] != "-" {
+        let bits: Vec<&str> = parts[2].split(':').collect();
+        let n: usize = bits
+            .get(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Parse(format!("bad partition spec '{}'", parts[2])))?;
+        def = def.partition_by_hash(bits[0], n)?;
+    }
+    if parts[3] != "-" {
+        def = def.with_primary_key(parts[3])?;
+    }
+    if !parts[4].is_empty() {
+        for ix in parts[4].split(',') {
+            def = def.with_index(ix)?;
+        }
+    }
+    Ok(def)
+}
+
+// Row is referenced by the doc comment narrative; silence unused import on
+// some cfgs.
+#[allow(unused)]
+fn _t(_r: Row) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::value::Value;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("schaladb-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn checkpoint_recover_roundtrip() {
+        let c = DbCluster::start(ClusterConfig::default()).unwrap();
+        c.exec(
+            "CREATE TABLE wq (taskid INT NOT NULL, wid INT NOT NULL, status TEXT, dur FLOAT) \
+             PARTITION BY HASH(wid) PARTITIONS 4 PRIMARY KEY (taskid) INDEX (status)",
+        )
+        .unwrap();
+        c.exec("CREATE TABLE meta (k TEXT, v TEXT)").unwrap();
+        for i in 0..40 {
+            c.execute(&format!(
+                "INSERT INTO wq (taskid, wid, status, dur) VALUES ({i}, {}, 'READY', {}.25)",
+                i % 4,
+                i
+            ))
+            .unwrap();
+        }
+        c.execute("INSERT INTO meta (k, v) VALUES ('wf', 'risers'), ('note', 'it''s ok')")
+            .unwrap();
+
+        let dir = tmpdir("roundtrip");
+        let files = checkpoint(&c, &dir).unwrap();
+        assert_eq!(files, 2);
+
+        let r = recover(&dir, ClusterConfig::default()).unwrap();
+        assert_eq!(r.table_rows("wq").unwrap(), 40);
+        assert_eq!(r.table_rows("meta").unwrap(), 2);
+        // partitioning preserved: worker-pinned query routes correctly
+        let rs = r.query("SELECT COUNT(*) FROM wq WHERE wid = 2").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(10));
+        // quoted string survived
+        let rs = r.query("SELECT v FROM meta WHERE k = 'note'").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::str("it's ok"));
+        // PK constraint re-armed after recovery
+        assert!(r
+            .execute("INSERT INTO wq (taskid, wid, status, dur) VALUES (0, 0, 'X', 1.0)")
+            .is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_empty_table() {
+        let c = DbCluster::start(ClusterConfig::default()).unwrap();
+        c.exec("CREATE TABLE empty (a INT, b TEXT)").unwrap();
+        let dir = tmpdir("empty");
+        checkpoint(&c, &dir).unwrap();
+        let r = recover(&dir, ClusterConfig::default()).unwrap();
+        assert_eq!(r.table_rows("empty").unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let def = TableDef::new(
+            "t",
+            Schema::of(&[("a", ColumnType::Int), ("b", ColumnType::Str)]),
+        )
+        .partition_by_hash("a", 8)
+        .unwrap()
+        .with_primary_key("a")
+        .unwrap()
+        .with_index("b")
+        .unwrap();
+        let h = def_header(&def);
+        let back = parse_def_header(&h).unwrap();
+        assert_eq!(back.name, "t");
+        assert_eq!(back.num_partitions(), 8);
+        assert_eq!(back.primary_key.as_deref(), Some("a"));
+        assert_eq!(back.indexes, vec!["b".to_string()]);
+    }
+
+    #[test]
+    fn bad_headers_rejected() {
+        assert!(parse_def_header("no-separators").is_err());
+        assert!(parse_def_header("t\x1fbad-col\x1f-\x1f-\x1f").is_err());
+    }
+}

@@ -1,0 +1,1599 @@
+//! The database cluster: catalog, partition placement, replication, and the
+//! statement/transaction executor.
+//!
+//! This is the component the paper calls "the distributed in-memory DBMS"
+//! plus its *DBManager*. Everything the WMS and the steering layer do goes
+//! through [`DbCluster::exec_tagged`] (single statements, auto-commit) or
+//! [`DbCluster::exec_txn`] (atomic multi-statement transactions with
+//! two-phase locking across partitions and synchronous replica apply —
+//! the in-process analogue of NDB's 2PC).
+
+use crate::storage::datanode::DataNode;
+use crate::storage::partition::PartitionStore;
+use crate::storage::sql::exec::{run_select, TableInput};
+use crate::storage::sql::expr::{bind, EvalCtx, Layout};
+use crate::storage::sql::{self, Expr, SelectItem, SelectStmt, Statement, TableRef};
+use crate::storage::stats::{AccessKind, StatsRegistry};
+use crate::storage::table_def::TableDef;
+use crate::storage::value::{Column, Row, Schema, Value};
+use crate::storage::wal::LogOp;
+use crate::storage::{ResultSet, StatementResult};
+use crate::util::clock::{self, SharedClock};
+use crate::{Error, Result};
+use rustc_hash::FxHashMap;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Instant;
+
+/// Cluster construction parameters.
+#[derive(Clone)]
+pub struct ClusterConfig {
+    /// Number of data nodes (the paper uses 2 in all experiments).
+    pub data_nodes: usize,
+    /// Keep one backup replica per partition (paper: replication factor 1,
+    /// "each relation has one replica"). Requires `data_nodes >= 2`.
+    pub replication: bool,
+    /// Time source for `NOW()` and timestamps.
+    pub clock: SharedClock,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { data_nodes: 2, replication: true, clock: clock::wall() }
+    }
+}
+
+/// Placement of one partition: which nodes host its primary and backup.
+#[derive(Clone, Copy, Debug)]
+pub struct Placement {
+    pub primary: u32,
+    pub backup: Option<u32>,
+}
+
+struct TableMeta {
+    def: Arc<TableDef>,
+    placements: Vec<Placement>,
+}
+
+/// The cluster facade.
+pub struct DbCluster {
+    nodes: Vec<Arc<DataNode>>,
+    catalog: RwLock<FxHashMap<String, Arc<TableMeta>>>,
+    pub clock: SharedClock,
+    pub stats: Arc<StatsRegistry>,
+    replication: bool,
+    place_cursor: AtomicUsize,
+}
+
+// ---------- lock plumbing ----------
+
+/// Which replica a lock request targets.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug, Hash)]
+enum Role {
+    Primary,
+    Backup,
+}
+
+/// One entry of a statement's lock set.
+struct LockReq {
+    table: String,
+    pidx: usize,
+    node: u32,
+    role: Role,
+    write: bool,
+    store: Arc<RwLock<PartitionStore>>,
+}
+
+enum Guard<'a> {
+    R(RwLockReadGuard<'a, PartitionStore>),
+    W(RwLockWriteGuard<'a, PartitionStore>),
+}
+
+/// Executor context: held guards indexed by (table, pidx, role).
+struct ExecCtx<'a> {
+    guards: Vec<Guard<'a>>,
+    index: FxHashMap<(String, usize, Role), usize>,
+    placements: FxHashMap<String, Arc<TableMeta>>,
+    now: f64,
+    /// Redo ops of this transaction, with undo info.
+    applied: Vec<(LogOp, Undo)>,
+}
+
+/// Inverse of an applied primary mutation.
+enum Undo {
+    Remove { table: String, pidx: usize, slot: usize },
+    Restore { table: String, pidx: usize, slot: usize, row: Row },
+    Reinsert { table: String, pidx: usize, slot: usize, row: Row },
+}
+
+impl<'a> ExecCtx<'a> {
+    fn store(&self, table: &str, pidx: usize, role: Role) -> Result<&PartitionStore> {
+        let i = self
+            .index
+            .get(&(table.to_string(), pidx, role))
+            .copied()
+            .ok_or_else(|| Error::Engine(format!("partition {table}[{pidx}] not locked")))?;
+        Ok(match &self.guards[i] {
+            Guard::R(g) => g,
+            Guard::W(g) => g,
+        })
+    }
+
+    fn store_mut(&mut self, table: &str, pidx: usize, role: Role) -> Result<&mut PartitionStore> {
+        let i = self
+            .index
+            .get(&(table.to_string(), pidx, role))
+            .copied()
+            .ok_or_else(|| Error::Engine(format!("partition {table}[{pidx}] not locked")))?;
+        match &mut self.guards[i] {
+            Guard::R(_) => Err(Error::Engine(format!(
+                "partition {table}[{pidx}] locked for read, write needed"
+            ))),
+            Guard::W(g) => Ok(g),
+        }
+    }
+
+    fn has(&self, table: &str, pidx: usize, role: Role) -> bool {
+        self.index.contains_key(&(table.to_string(), pidx, role))
+    }
+
+    fn ectx(&self) -> EvalCtx {
+        EvalCtx { now: self.now }
+    }
+}
+
+impl DbCluster {
+    /// Start a cluster (`DBManager --start`).
+    pub fn start(config: ClusterConfig) -> Result<Arc<DbCluster>> {
+        if config.data_nodes == 0 {
+            return Err(Error::Catalog("need at least one data node".into()));
+        }
+        if config.replication && config.data_nodes < 2 {
+            return Err(Error::Catalog("replication needs >= 2 data nodes".into()));
+        }
+        let nodes = (0..config.data_nodes as u32).map(|i| Arc::new(DataNode::new(i))).collect();
+        Ok(Arc::new(DbCluster {
+            nodes,
+            catalog: RwLock::new(FxHashMap::default()),
+            clock: config.clock,
+            stats: Arc::new(StatsRegistry::new()),
+            replication: config.replication,
+            place_cursor: AtomicUsize::new(0),
+        }))
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node(&self, id: u32) -> Option<&Arc<DataNode>> {
+        self.nodes.get(id as usize)
+    }
+
+    /// Kill a data node (failure injection).
+    pub fn kill_node(&self, id: u32) -> Result<()> {
+        let n = self.node(id).ok_or_else(|| Error::Unavailable(format!("no node {id}")))?;
+        n.kill();
+        Ok(())
+    }
+
+    /// Revive a node. Its replicas are stale; callers should re-seed via
+    /// [`DbCluster::heal`].
+    pub fn revive_node(&self, id: u32) -> Result<()> {
+        let n = self.node(id).ok_or_else(|| Error::Unavailable(format!("no node {id}")))?;
+        n.revive();
+        Ok(())
+    }
+
+    // ---------- DDL ----------
+
+    /// Create a table from a definition, assigning partition placements
+    /// round-robin over alive nodes (backup on a different node).
+    pub fn create_table(&self, def: TableDef) -> Result<()> {
+        let name = def.name.to_lowercase();
+        let mut cat = self.catalog.write().unwrap();
+        if cat.contains_key(&name) {
+            return Err(Error::Catalog(format!("table '{}' already exists", def.name)));
+        }
+        let def = Arc::new(def);
+        let alive: Vec<&Arc<DataNode>> = self.nodes.iter().filter(|n| n.is_alive()).collect();
+        if alive.is_empty() {
+            return Err(Error::Unavailable("no alive data nodes".into()));
+        }
+        let mut placements = Vec::with_capacity(def.num_partitions());
+        for pidx in 0..def.num_partitions() {
+            let c = self.place_cursor.fetch_add(1, AtomicOrdering::SeqCst);
+            let p = alive[c % alive.len()];
+            p.host_partition(def.clone(), pidx)?;
+            let backup = if self.replication && alive.len() > 1 {
+                let b = alive[(c + 1) % alive.len()];
+                b.host_partition(def.clone(), pidx)?;
+                Some(b.id)
+            } else {
+                None
+            };
+            placements.push(Placement { primary: p.id, backup });
+        }
+        cat.insert(name, Arc::new(TableMeta { def, placements }));
+        Ok(())
+    }
+
+    fn meta(&self, table: &str) -> Result<Arc<TableMeta>> {
+        self.catalog
+            .read()
+            .unwrap()
+            .get(&table.to_lowercase())
+            .cloned()
+            .ok_or_else(|| Error::Catalog(format!("unknown table '{table}'")))
+    }
+
+    /// Definition of a table (checkpointing, schema introspection).
+    pub fn table_def(&self, table: &str) -> Result<Arc<TableDef>> {
+        Ok(self.meta(table)?.def.clone())
+    }
+
+    /// Table names in the catalog (sorted).
+    pub fn tables(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.catalog.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Approximate resident bytes of one table across primaries.
+    pub fn table_bytes(&self, table: &str) -> Result<usize> {
+        let meta = self.meta(table)?;
+        let mut total = 0;
+        for (pidx, pl) in meta.placements.iter().enumerate() {
+            let store = self.replica_store(&meta, pidx, pl, false)?.0;
+            total += store.read().unwrap().approx_bytes();
+        }
+        Ok(total)
+    }
+
+    /// Approximate resident bytes of the whole database (primaries only).
+    pub fn total_bytes(&self) -> usize {
+        self.tables().iter().filter_map(|t| self.table_bytes(t).ok()).sum()
+    }
+
+    /// Row count of a table (test/monitoring helper).
+    pub fn table_rows(&self, table: &str) -> Result<usize> {
+        let meta = self.meta(table)?;
+        let mut total = 0;
+        for (pidx, pl) in meta.placements.iter().enumerate() {
+            let store = self.replica_store(&meta, pidx, pl, false)?.0;
+            total += store.read().unwrap().len();
+        }
+        Ok(total)
+    }
+
+    // ---------- replica selection ----------
+
+    /// Store for reading or writing partition `pidx`, honoring failover:
+    /// if the primary's node is dead, fall back to the backup (Role is
+    /// reported so the caller locks the right entry).
+    fn replica_store(
+        &self,
+        meta: &TableMeta,
+        pidx: usize,
+        pl: &Placement,
+        _write: bool,
+    ) -> Result<(Arc<RwLock<PartitionStore>>, u32, Role)> {
+        let primary = self
+            .node(pl.primary)
+            .ok_or_else(|| Error::Unavailable(format!("no node {}", pl.primary)))?;
+        if primary.is_alive() {
+            let s = primary.partition(&meta.def.name, pidx)?;
+            return Ok((s, pl.primary, Role::Primary));
+        }
+        if let Some(b) = pl.backup {
+            let backup = self
+                .node(b)
+                .ok_or_else(|| Error::Unavailable(format!("no node {b}")))?;
+            if backup.is_alive() {
+                let s = backup.partition(&meta.def.name, pidx)?;
+                return Ok((s, b, Role::Backup));
+            }
+        }
+        Err(Error::Unavailable(format!(
+            "all replicas of {}[{pidx}] are down",
+            meta.def.name
+        )))
+    }
+
+    /// Promote backups of every partition whose primary is dead. Returns
+    /// the number of promotions. (NDB does this automatically on heartbeat
+    /// loss; our tests call it explicitly after `kill_node`.)
+    pub fn promote_dead_primaries(&self) -> usize {
+        let mut promoted = 0;
+        let mut cat = self.catalog.write().unwrap();
+        let metas: Vec<(String, Arc<TableMeta>)> =
+            cat.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        for (name, meta) in metas {
+            let mut placements = meta.placements.clone();
+            let mut changed = false;
+            for pl in placements.iter_mut() {
+                let primary_dead = self.node(pl.primary).map_or(true, |n| !n.is_alive());
+                if primary_dead {
+                    if let Some(b) = pl.backup {
+                        if self.node(b).map_or(false, |n| n.is_alive()) {
+                            // swap roles; old primary becomes (stale) backup
+                            let old = pl.primary;
+                            pl.primary = b;
+                            pl.backup = Some(old);
+                            changed = true;
+                            promoted += 1;
+                        }
+                    }
+                }
+            }
+            if changed {
+                cat.insert(name, Arc::new(TableMeta { def: meta.def.clone(), placements }));
+            }
+        }
+        promoted
+    }
+
+    /// Re-seed stale replicas on revived nodes from the current primaries,
+    /// restoring full redundancy after a failure. Returns partitions healed.
+    pub fn heal(&self) -> Result<usize> {
+        let mut healed = 0;
+        let cat = self.catalog.read().unwrap();
+        for meta in cat.values() {
+            for (pidx, pl) in meta.placements.iter().enumerate() {
+                let Some(bid) = pl.backup else { continue };
+                let (Some(pn), Some(bn)) = (self.node(pl.primary), self.node(bid)) else {
+                    continue;
+                };
+                if !pn.is_alive() || !bn.is_alive() {
+                    continue;
+                }
+                let ps = pn.partition(&meta.def.name, pidx)?;
+                let bs = bn.partition(&meta.def.name, pidx)?;
+                let (pv, rows) = {
+                    let g = ps.read().unwrap();
+                    (g.version, g.snapshot_rows())
+                };
+                let mut bg = bs.write().unwrap();
+                if bg.version != pv || bg.len() != rows.len() {
+                    bg.load_rows(rows)?;
+                    bg.version = pv;
+                    healed += 1;
+                }
+            }
+        }
+        Ok(healed)
+    }
+
+    // ---------- statement entry points ----------
+
+    /// Execute one statement, auto-commit, untagged (steering/CLI default).
+    pub fn exec(&self, sql_text: &str) -> Result<StatementResult> {
+        self.exec_tagged(0, AccessKind::Other, sql_text)
+    }
+
+    /// Execute one statement, recording latency under (node, kind).
+    pub fn exec_tagged(
+        &self,
+        node: u32,
+        kind: AccessKind,
+        sql_text: &str,
+    ) -> Result<StatementResult> {
+        let stmt = sql::parse(sql_text)?;
+        self.exec_stmt(node, kind, &stmt)
+    }
+
+    /// Execute one pre-parsed statement.
+    pub fn exec_stmt(
+        &self,
+        node: u32,
+        kind: AccessKind,
+        stmt: &Statement,
+    ) -> Result<StatementResult> {
+        let t0 = Instant::now();
+        let r = self.exec_txn_inner(std::slice::from_ref(stmt));
+        self.stats.record(node, kind, t0.elapsed().as_secs_f64());
+        Ok(r?.pop().expect("one result per statement"))
+    }
+
+    /// Execute a batch of statements atomically (all-or-nothing), 2PL over
+    /// the union of their partition lock sets.
+    pub fn exec_txn(
+        &self,
+        node: u32,
+        kind: AccessKind,
+        stmts: &[Statement],
+    ) -> Result<Vec<StatementResult>> {
+        let t0 = Instant::now();
+        let r = self.exec_txn_inner(stmts);
+        self.stats.record(node, kind, t0.elapsed().as_secs_f64());
+        r
+    }
+
+    /// Convenience: SELECT returning rows.
+    pub fn query(&self, sql_text: &str) -> Result<ResultSet> {
+        match self.exec(sql_text)? {
+            StatementResult::Rows(r) => Ok(r),
+            other => Err(Error::Engine(format!("expected rows, got {other:?}"))),
+        }
+    }
+
+    /// Convenience: DML returning affected-row count.
+    pub fn execute(&self, sql_text: &str) -> Result<usize> {
+        match self.exec(sql_text)? {
+            StatementResult::Affected(n) => Ok(n),
+            StatementResult::Ok => Ok(0),
+            other => Err(Error::Engine(format!("expected affected count, got {other:?}"))),
+        }
+    }
+
+    // ---------- the transaction engine ----------
+
+    fn exec_txn_inner(&self, stmts: &[Statement]) -> Result<Vec<StatementResult>> {
+        // DDL runs outside the lock machinery (catalog has its own lock).
+        if stmts.len() == 1 {
+            if let Statement::CreateTable { .. } = &stmts[0] {
+                return Ok(vec![self.exec_create(&stmts[0])?]);
+            }
+        }
+
+        // Phase 0: compute the union lock set.
+        let mut reqs: FxHashMap<(String, usize, Role), LockReq> = FxHashMap::default();
+        let mut placements: FxHashMap<String, Arc<TableMeta>> = FxHashMap::default();
+        for s in stmts {
+            self.collect_locks(s, &mut reqs, &mut placements)?;
+        }
+        let mut ordered: Vec<LockReq> = reqs.into_values().collect();
+        ordered.sort_by(|a, b| {
+            (&a.table, a.pidx, a.role, a.node).cmp(&(&b.table, b.pidx, b.role, b.node))
+        });
+
+        // Phase 1 (2PL growing): acquire all guards in canonical order.
+        let guards: Vec<Guard<'_>> = ordered
+            .iter()
+            .map(|r| {
+                if r.write {
+                    Guard::W(r.store.write().unwrap())
+                } else {
+                    Guard::R(r.store.read().unwrap())
+                }
+            })
+            .collect();
+        let index: FxHashMap<(String, usize, Role), usize> = ordered
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ((r.table.clone(), r.pidx, r.role), i))
+            .collect();
+        let mut ctx = ExecCtx {
+            guards,
+            index,
+            placements,
+            now: self.clock.now(),
+            applied: Vec::new(),
+        };
+
+        // Execute statements against locked primaries, collecting undo info.
+        let mut results = Vec::with_capacity(stmts.len());
+        let mut failed: Option<Error> = None;
+        for s in stmts {
+            match self.exec_one(&mut ctx, s) {
+                Ok(r) => results.push(r),
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            }
+        }
+
+        if let Some(e) = failed {
+            // Rollback: undo primary mutations in reverse order.
+            let undos: Vec<Undo> = ctx.applied.drain(..).map(|(_, u)| u).rev().collect();
+            for u in undos {
+                let r = match &u {
+                    Undo::Remove { table, pidx, slot } => {
+                        let (t, p, s) = (table.clone(), *pidx, *slot);
+                        ctx.store_mut(&t, p, Role::Primary).and_then(|st| st.delete(s).map(|_| ()))
+                    }
+                    Undo::Restore { table, pidx, slot, row } => {
+                        let (t, p, s, r2) = (table.clone(), *pidx, *slot, row.clone());
+                        ctx.store_mut(&t, p, Role::Primary).and_then(|st| st.update(s, r2))
+                    }
+                    Undo::Reinsert { table, pidx, slot, row } => {
+                        let (t, p, s, r2) = (table.clone(), *pidx, *slot, row.clone());
+                        ctx.store_mut(&t, p, Role::Primary).and_then(|st| {
+                            let got = st.insert(r2)?;
+                            if got != s {
+                                return Err(Error::Engine(format!(
+                                    "rollback slot mismatch {got} != {s}"
+                                )));
+                            }
+                            Ok(())
+                        })
+                    }
+                };
+                if let Err(e2) = r {
+                    // A failing rollback is unrecoverable corruption.
+                    panic!("rollback failed: {e2} (original error: {e})");
+                }
+            }
+            return Err(Error::TxnAborted(e.to_string()));
+        }
+
+        // Phase 2 (commit): apply redo ops to backups (whose write guards we
+        // already hold) and append to the primary node's WAL.
+        let ops: Vec<LogOp> = ctx.applied.iter().map(|(op, _)| op.clone()).collect();
+        for op in &ops {
+            let table = op.table().to_string();
+            let (pidx, mirror) = match op {
+                LogOp::Insert { pidx, .. } | LogOp::Update { pidx, .. } | LogOp::Delete { pidx, .. } => {
+                    (*pidx, ())
+                }
+            };
+            let _ = mirror;
+            if ctx.has(&table, pidx, Role::Backup) {
+                let store = ctx.store_mut(&table, pidx, Role::Backup)?;
+                match op {
+                    LogOp::Insert { slot, row, .. } => {
+                        let got = store.insert(row.clone())?;
+                        if got != *slot {
+                            panic!("replica divergence on {table}[{pidx}]: {got} != {slot}");
+                        }
+                    }
+                    LogOp::Update { slot, row, .. } => store.update(*slot, row.clone())?,
+                    LogOp::Delete { slot, .. } => {
+                        store.delete(*slot)?;
+                    }
+                }
+            }
+        }
+        drop(ctx);
+        // WAL append after releasing row locks (commit record).
+        for op in ops {
+            let meta = self.meta(op.table())?;
+            let pidx = match &op {
+                LogOp::Insert { pidx, .. } | LogOp::Update { pidx, .. } | LogOp::Delete { pidx, .. } => *pidx,
+            };
+            let pl = &meta.placements[pidx];
+            if let Some(n) = self.node(pl.primary) {
+                if n.is_alive() {
+                    n.log(op)?;
+                    continue;
+                }
+            }
+            if let Some(b) = pl.backup.and_then(|b| self.node(b)) {
+                if b.is_alive() {
+                    b.log(op)?;
+                }
+            }
+        }
+        Ok(results)
+    }
+
+    /// Add a statement's lock requirements to `reqs`.
+    fn collect_locks(
+        &self,
+        stmt: &Statement,
+        reqs: &mut FxHashMap<(String, usize, Role), LockReq>,
+        placements: &mut FxHashMap<String, Arc<TableMeta>>,
+    ) -> Result<()> {
+        let mut add = |cluster: &DbCluster,
+                       table: &str,
+                       parts: Vec<usize>,
+                       write: bool|
+         -> Result<()> {
+            let meta = cluster.meta(table)?;
+            let key = meta.def.name.to_lowercase();
+            placements.entry(key.clone()).or_insert_with(|| meta.clone());
+            for pidx in parts {
+                let pl = &meta.placements[pidx];
+                let (store, node, role) = cluster.replica_store(&meta, pidx, pl, write)?;
+                let entry_key = (key.clone(), pidx, role);
+                let e = reqs.entry(entry_key).or_insert(LockReq {
+                    table: key.clone(),
+                    pidx,
+                    node,
+                    role,
+                    write,
+                    store,
+                });
+                e.write |= write;
+                // Writes also lock the backup replica (synchronous apply
+                // happens under the same critical section).
+                if write && role == Role::Primary {
+                    if let Some(bid) = pl.backup {
+                        if let Some(bn) = cluster.node(bid) {
+                            if bn.is_alive() {
+                                let bstore = bn.partition(&meta.def.name, pidx)?;
+                                let bkey = (key.clone(), pidx, Role::Backup);
+                                let be = reqs.entry(bkey).or_insert(LockReq {
+                                    table: key.clone(),
+                                    pidx,
+                                    node: bid,
+                                    role: Role::Backup,
+                                    write: true,
+                                    store: bstore,
+                                });
+                                be.write = true;
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        };
+
+        match stmt {
+            Statement::Select(s) => {
+                let meta = self.meta(&s.from.table)?;
+                let parts = prune_partitions(&meta.def, s.from.binding(), s.where_.as_ref());
+                add(self, &s.from.table, parts, false)?;
+                for j in &s.joins {
+                    let jm = self.meta(&j.table.table)?;
+                    add(self, &j.table.table, (0..jm.def.num_partitions()).collect(), false)?;
+                }
+            }
+            Statement::Insert { table, .. } => {
+                let meta = self.meta(table)?;
+                // Partition routing needs evaluated rows; to keep the lock
+                // set superset-safe, lock all partitions for writes when the
+                // table is multi-partition, plus all partitions for the
+                // cross-partition PK check. Single-partition tables lock one.
+                add(self, table, (0..meta.def.num_partitions()).collect(), true)?;
+            }
+            Statement::Update { table, sets, where_, .. } => {
+                let meta = self.meta(&table.table)?;
+                let moves_partition = meta
+                    .def
+                    .partition_col_idx()
+                    .map(|ci| {
+                        let pname = &meta.def.schema.columns[ci].name;
+                        sets.iter().any(|(c, _)| c.eq_ignore_ascii_case(pname))
+                    })
+                    .unwrap_or(false);
+                let parts = if moves_partition {
+                    (0..meta.def.num_partitions()).collect()
+                } else {
+                    prune_partitions(&meta.def, table.binding(), where_.as_ref())
+                };
+                add(self, &table.table, parts, true)?;
+            }
+            Statement::Delete { table, where_ } => {
+                let meta = self.meta(&table.table)?;
+                let parts = prune_partitions(&meta.def, table.binding(), where_.as_ref());
+                add(self, &table.table, parts, true)?;
+            }
+            Statement::CreateTable { .. } => {
+                return Err(Error::Engine("DDL inside transaction".into()))
+            }
+        }
+        Ok(())
+    }
+
+    // ---------- per-statement executors ----------
+
+    fn exec_one(&self, ctx: &mut ExecCtx<'_>, stmt: &Statement) -> Result<StatementResult> {
+        match stmt {
+            Statement::Select(s) => self.exec_select(ctx, s).map(StatementResult::Rows),
+            Statement::Insert { table, columns, values } => {
+                self.exec_insert(ctx, table, columns, values).map(StatementResult::Affected)
+            }
+            Statement::Update { table, sets, where_, order_by, limit, returning } => {
+                self.exec_update(ctx, table, sets, where_, order_by, *limit, returning)
+            }
+            Statement::Delete { table, where_ } => {
+                self.exec_delete(ctx, table, where_).map(StatementResult::Affected)
+            }
+            Statement::CreateTable { .. } => Err(Error::Engine("DDL inside transaction".into())),
+        }
+    }
+
+    fn exec_create(&self, stmt: &Statement) -> Result<StatementResult> {
+        let Statement::CreateTable { name, columns, partition_by, primary_key, indexes } = stmt
+        else {
+            unreachable!()
+        };
+        let schema = Schema::new(
+            columns
+                .iter()
+                .map(|c| Column { name: c.name.clone(), ty: c.ty, nullable: !c.not_null })
+                .collect(),
+        )?;
+        let mut def = TableDef::new(name.clone(), schema);
+        if let Some((col, n)) = partition_by {
+            def = def.partition_by_hash(col, *n)?;
+        }
+        if let Some(pk) = primary_key {
+            def = def.with_primary_key(pk)?;
+        }
+        for ix in indexes {
+            def = def.with_index(ix)?;
+        }
+        self.create_table(def)?;
+        Ok(StatementResult::Ok)
+    }
+
+    /// Scan a table's locked partitions into a `TableInput`, using a
+    /// secondary/PK index when a `col = literal` conjunct allows it, and
+    /// applying `filter` (a pre-extracted single-table predicate) row by
+    /// row so join inputs stay small.
+    fn scan_input(
+        &self,
+        ctx: &ExecCtx<'_>,
+        table: &str,
+        binding: &str,
+        where_: Option<&Expr>,
+        filter: Option<&Expr>,
+    ) -> Result<TableInput> {
+        let meta = ctx
+            .placements
+            .get(&table.to_lowercase())
+            .cloned()
+            .ok_or_else(|| Error::Engine(format!("table '{table}' not in txn scope")))?;
+        let def = &meta.def;
+        let parts = prune_partitions(def, binding, where_);
+        let index_probe = where_.and_then(|w| index_probe_for(def, binding, w));
+        let layout =
+            Layout::of_table(binding, def.schema.columns.iter().map(|c| c.name.clone()));
+        let fb = match filter {
+            Some(f) => Some(bind(f, &layout)?),
+            None => None,
+        };
+        let ectx = ctx.ectx();
+        let mut rows = Vec::new();
+        let mut push = |r: &Row| -> Result<()> {
+            let keep = match &fb {
+                Some(b) => b.matches(&r.values, &ectx)?,
+                None => true,
+            };
+            if keep {
+                rows.push(r.clone());
+            }
+            Ok(())
+        };
+        for pidx in parts {
+            // read whichever role is locked (primary normally, backup in
+            // failover)
+            let role = if ctx.has(&def.name.to_lowercase(), pidx, Role::Primary) {
+                Role::Primary
+            } else {
+                Role::Backup
+            };
+            let store = ctx.store(&def.name.to_lowercase(), pidx, role)?;
+            match &index_probe {
+                Some((ci, v)) => {
+                    if let Some(slots) = store.slots_by_index(*ci, v) {
+                        let mut slots = slots;
+                        slots.sort_unstable();
+                        for s in slots {
+                            if let Some(r) = store.get(s) {
+                                push(r)?;
+                            }
+                        }
+                    } else if let Some(pk_ci) = def.pk_idx().filter(|pi| pi == ci) {
+                        let _ = pk_ci;
+                        if let Some(k) = v.as_i64() {
+                            if let Some(s) = store.slot_by_pk(k) {
+                                if let Some(r) = store.get(s) {
+                                    push(r)?;
+                                }
+                            }
+                        }
+                    } else {
+                        for (_, r) in store.iter() {
+                            push(r)?;
+                        }
+                    }
+                }
+                None => {
+                    for (_, r) in store.iter() {
+                        push(r)?;
+                    }
+                }
+            }
+        }
+        Ok(TableInput {
+            binding: binding.to_string(),
+            columns: def.schema.columns.iter().map(|c| c.name.clone()).collect(),
+            rows,
+        })
+    }
+
+    /// Top-N fast path for `SELECT ... FROM t WHERE ... ORDER BY ... LIMIT n`
+    /// (the `getREADYtasks` pattern): evaluate predicate and sort keys on
+    /// borrowed rows, keep a bounded working set, clone only the survivors.
+    /// Returns `None` when the statement doesn't fit the pattern (joins,
+    /// aggregates, alias-only order keys, ...), falling back to the general
+    /// pipeline.
+    fn try_topn_select(&self, ctx: &ExecCtx<'_>, s: &SelectStmt) -> Result<Option<ResultSet>> {
+        let Some(limit) = s.limit else { return Ok(None) };
+        if !s.joins.is_empty()
+            || !s.group_by.is_empty()
+            || s.having.is_some()
+            || s.order_by.is_empty()
+        {
+            return Ok(None);
+        }
+        let has_agg = s
+            .items
+            .iter()
+            .any(|it| matches!(it, SelectItem::Expr { expr, .. } if expr.has_aggregate()))
+            || s.order_by.iter().any(|(e, _)| e.has_aggregate());
+        if has_agg {
+            return Ok(None);
+        }
+        let Some(meta) = ctx.placements.get(&s.from.table.to_lowercase()).cloned() else {
+            return Ok(None);
+        };
+        let def = meta.def.clone();
+        let tkey = def.name.to_lowercase();
+        let binding = s.from.binding();
+        let layout =
+            Layout::of_table(binding, def.schema.columns.iter().map(|c| c.name.clone()));
+        // order keys must bind against base columns (aliases fall back)
+        let Ok(order_bound) = s
+            .order_by
+            .iter()
+            .map(|(e, asc)| Ok((bind(e, &layout)?, *asc)))
+            .collect::<Result<Vec<_>>>()
+        else {
+            return Ok(None);
+        };
+        let wb = match &s.where_ {
+            Some(w) => match bind(w, &layout) {
+                Ok(b) => Some(b),
+                Err(_) => return Ok(None),
+            },
+            None => None,
+        };
+        let ectx = ctx.ectx();
+        let parts = prune_partitions(&def, binding, s.where_.as_ref());
+        let index_probe = s.where_.as_ref().and_then(|w| index_probe_for(&def, binding, w));
+        let cap = ((limit as usize) * 4).max(512);
+        let dirs: Vec<bool> = order_bound.iter().map(|(_, asc)| *asc).collect();
+        fn cmp_keys(ka: &[Value], kb: &[Value], dirs: &[bool]) -> std::cmp::Ordering {
+            for ((a, b), asc) in ka.iter().zip(kb.iter()).zip(dirs.iter()) {
+                let o = a.total_cmp(b);
+                let o = if *asc { o } else { o.reverse() };
+                if o != std::cmp::Ordering::Equal {
+                    return o;
+                }
+            }
+            std::cmp::Ordering::Equal
+        }
+        let mut kept: Vec<(Vec<Value>, Row)> = Vec::new();
+        // once the working set has been compacted, rows sorting after the
+        // current n-th key can be skipped without cloning
+        let mut threshold: Option<Vec<Value>> = None;
+        for pidx in parts {
+            let role = if ctx.has(&tkey, pidx, Role::Primary) { Role::Primary } else { Role::Backup };
+            let store = ctx.store(&tkey, pidx, role)?;
+            let mut consider = |row: &Row| -> Result<()> {
+                let ok = match &wb {
+                    Some(b) => b.matches(&row.values, &ectx)?,
+                    None => true,
+                };
+                if ok {
+                    let key = order_bound
+                        .iter()
+                        .map(|(b, _)| b.eval(&row.values, &ectx))
+                        .collect::<Result<Vec<_>>>()?;
+                    if let Some(t) = &threshold {
+                        if cmp_keys(&key, t, &dirs) != std::cmp::Ordering::Less {
+                            return Ok(());
+                        }
+                    }
+                    kept.push((key, row.clone()));
+                    if kept.len() >= cap {
+                        kept.sort_by(|(ka, _), (kb, _)| cmp_keys(ka, kb, &dirs));
+                        kept.truncate(limit as usize);
+                        threshold = kept.last().map(|(k, _)| k.clone());
+                    }
+                }
+                Ok(())
+            };
+            match &index_probe {
+                Some((ci, v)) => match store.slots_by_index(*ci, v) {
+                    Some(slots) => {
+                        for slot in slots {
+                            if let Some(r) = store.get(slot) {
+                                consider(r)?;
+                            }
+                        }
+                    }
+                    None if def.pk_idx() == Some(*ci) => {
+                        if let Some(k) = v.as_i64() {
+                            if let Some(slot) = store.slot_by_pk(k) {
+                                if let Some(r) = store.get(slot) {
+                                    consider(r)?;
+                                }
+                            }
+                        }
+                    }
+                    None => {
+                        for (_, r) in store.iter() {
+                            consider(r)?;
+                        }
+                    }
+                },
+                None => {
+                    for (_, r) in store.iter() {
+                        consider(r)?;
+                    }
+                }
+            }
+        }
+        kept.sort_by(|(ka, _), (kb, _)| cmp_keys(ka, kb, &dirs));
+        kept.truncate(limit as usize);
+        let input = TableInput {
+            binding: binding.to_string(),
+            columns: def.schema.columns.iter().map(|c| c.name.clone()).collect(),
+            rows: kept.into_iter().map(|(_, r)| r).collect(),
+        };
+        run_select(s, vec![input], &ectx).map(Some)
+    }
+
+    fn exec_select(&self, ctx: &mut ExecCtx<'_>, s: &SelectStmt) -> Result<ResultSet> {
+        if let Some(rs) = self.try_topn_select(ctx, s)? {
+            return Ok(rs);
+        }
+        // WHERE pushdown: a conjunct that resolves entirely against one
+        // table's columns filters that table's scan. Legal for the base
+        // table and inner-join tables; pushing into the right side of a
+        // LEFT JOIN would change its padding semantics, so those scan full.
+        let single_table_filter = |table: &str, binding: &str| -> Result<Option<Expr>> {
+            let Some(w) = &s.where_ else { return Ok(None) };
+            let meta = ctx
+                .placements
+                .get(&table.to_lowercase())
+                .cloned()
+                .ok_or_else(|| Error::Engine(format!("table '{table}' not in txn scope")))?;
+            let layout = Layout::of_table(
+                binding,
+                meta.def.schema.columns.iter().map(|c| c.name.clone()),
+            );
+            let mut kept: Option<Expr> = None;
+            for c in w.conjuncts() {
+                if !c.has_aggregate() && bind(c, &layout).is_ok() {
+                    kept = Some(match kept {
+                        None => c.clone(),
+                        Some(prev) => Expr::Binary(
+                            sql::Op::And,
+                            Box::new(prev),
+                            Box::new(c.clone()),
+                        ),
+                    });
+                }
+            }
+            Ok(kept)
+        };
+
+        let mut inputs = Vec::with_capacity(1 + s.joins.len());
+        let base_filter = single_table_filter(&s.from.table, s.from.binding())?;
+        inputs.push(self.scan_input(
+            ctx,
+            &s.from.table,
+            s.from.binding(),
+            s.where_.as_ref(),
+            base_filter.as_ref(),
+        )?);
+        for j in &s.joins {
+            let filter = if j.left_outer {
+                None
+            } else {
+                single_table_filter(&j.table.table, j.table.binding())?
+            };
+            inputs.push(self.scan_input(
+                ctx,
+                &j.table.table,
+                j.table.binding(),
+                filter.as_ref(),
+                filter.as_ref(),
+            )?);
+        }
+        run_select(s, inputs, &ctx.ectx())
+    }
+
+    fn exec_insert(
+        &self,
+        ctx: &mut ExecCtx<'_>,
+        table: &str,
+        columns: &[String],
+        values: &[Vec<Expr>],
+    ) -> Result<usize> {
+        let meta = ctx
+            .placements
+            .get(&table.to_lowercase())
+            .cloned()
+            .ok_or_else(|| Error::Engine(format!("table '{table}' not in txn scope")))?;
+        let def = meta.def.clone();
+        let schema = def.schema.clone();
+        let tkey = def.name.to_lowercase();
+
+        // Column list: explicit or full schema order.
+        let col_indices: Vec<usize> = if columns.is_empty() {
+            (0..schema.len()).collect()
+        } else {
+            columns
+                .iter()
+                .map(|c| {
+                    schema
+                        .index_of(c)
+                        .ok_or_else(|| Error::Catalog(format!("unknown column '{c}' in INSERT")))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+
+        let empty_layout = Layout::default();
+        let ectx = ctx.ectx();
+        let mut n = 0;
+        for tuple in values {
+            if tuple.len() != col_indices.len() {
+                return Err(Error::Type(format!(
+                    "INSERT arity mismatch: {} values for {} columns",
+                    tuple.len(),
+                    col_indices.len()
+                )));
+            }
+            let mut vals = vec![Value::Null; schema.len()];
+            for (e, ci) in tuple.iter().zip(&col_indices) {
+                let b = bind(e, &empty_layout)?;
+                vals[*ci] = b.eval(&[], &ectx)?;
+            }
+            let row = schema.coerce_row(Row::new(vals))?;
+            let pidx = def.partition_of_row(&row.values)?;
+
+            // Cross-partition PK uniqueness (PK != partition key).
+            if let Some(pk_ci) = def.pk_idx() {
+                if def.partition_col_idx() != Some(pk_ci) && def.num_partitions() > 1 {
+                    if let Some(k) = row.values[pk_ci].as_i64() {
+                        for other in 0..def.num_partitions() {
+                            if other == pidx {
+                                continue;
+                            }
+                            let role = if ctx.has(&tkey, other, Role::Primary) {
+                                Role::Primary
+                            } else {
+                                Role::Backup
+                            };
+                            let store = ctx.store(&tkey, other, role)?;
+                            if store.slot_by_pk(k).is_some() {
+                                return Err(Error::Constraint(format!(
+                                    "duplicate primary key {k} in '{}'",
+                                    def.name
+                                )));
+                            }
+                        }
+                    }
+                }
+            }
+
+            let store = ctx.store_mut(&tkey, pidx, Role::Primary)?;
+            let slot = store.insert(row.clone())?;
+            ctx.applied.push((
+                LogOp::Insert { table: tkey.clone(), pidx, slot, row },
+                Undo::Remove { table: tkey.clone(), pidx, slot },
+            ));
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_update(
+        &self,
+        ctx: &mut ExecCtx<'_>,
+        table: &TableRef,
+        sets: &[(String, Expr)],
+        where_: &Option<Expr>,
+        order_by: &[(Expr, bool)],
+        limit: Option<u64>,
+        returning: &Option<Vec<SelectItem>>,
+    ) -> Result<StatementResult> {
+        let meta = ctx
+            .placements
+            .get(&table.table.to_lowercase())
+            .cloned()
+            .ok_or_else(|| Error::Engine(format!("table '{}' not in txn scope", table.table)))?;
+        let def = meta.def.clone();
+        let tkey = def.name.to_lowercase();
+        let binding = table.binding();
+        let layout =
+            Layout::of_table(binding, def.schema.columns.iter().map(|c| c.name.clone()));
+        let ectx = ctx.ectx();
+
+        let wb = match where_ {
+            Some(w) => Some(bind(w, &layout)?),
+            None => None,
+        };
+        let order_bound: Vec<(crate::storage::sql::expr::Bound, bool)> = order_by
+            .iter()
+            .map(|(e, asc)| Ok((bind(e, &layout)?, *asc)))
+            .collect::<Result<Vec<_>>>()?;
+        let set_bound: Vec<(usize, crate::storage::sql::expr::Bound)> = sets
+            .iter()
+            .map(|(c, e)| {
+                let ci = def
+                    .schema
+                    .index_of(c)
+                    .ok_or_else(|| Error::Catalog(format!("unknown column '{c}' in UPDATE")))?;
+                Ok((ci, bind(e, &layout)?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        // Gather matches across locked partitions (with index probe).
+        let parts = prune_partitions(&def, binding, where_.as_ref());
+        let index_probe = where_.as_ref().and_then(|w| index_probe_for(&def, binding, w));
+        let sort_matches = |matches: &mut Vec<(usize, usize, Vec<Value>)>| {
+            matches.sort_by(|(_, _, ka), (_, _, kb)| {
+                for ((a, b), (_, asc)) in ka.iter().zip(kb.iter()).zip(order_bound.iter()) {
+                    let o = a.total_cmp(b);
+                    let o = if *asc { o } else { o.reverse() };
+                    if o != std::cmp::Ordering::Equal {
+                        return o;
+                    }
+                }
+                std::cmp::Ordering::Equal
+            });
+        };
+        let mut matches: Vec<(usize, usize, Vec<Value>)> = Vec::new(); // (pidx, slot, order key)
+        // top-N compaction: with ORDER BY + LIMIT (the claim pattern) we
+        // never keep more than a bounded working set of candidates
+        let compact_at = match (limit, order_bound.is_empty()) {
+            (Some(n), false) => Some(((n as usize) * 4).max(512)),
+            _ => None,
+        };
+        for pidx in &parts {
+            let store = ctx.store(&tkey, *pidx, Role::Primary)?;
+            let candidates: Vec<usize> = match &index_probe {
+                // candidate order is irrelevant: ORDER BY sorting (or the
+                // unordered-update semantics) decides the outcome
+                Some((ci, v)) => match store.slots_by_index(*ci, v) {
+                    Some(s) => s,
+                    // PK fast path: `WHERE taskid = N` is a point lookup,
+                    // not a partition scan (updateToFINISHED hot path).
+                    None if def.pk_idx() == Some(*ci) => match v.as_i64() {
+                        Some(k) => store.slot_by_pk(k).into_iter().collect(),
+                        None => vec![],
+                    },
+                    None => store.iter().map(|(s, _)| s).collect(),
+                },
+                None => store.iter().map(|(s, _)| s).collect(),
+            };
+            for slot in candidates {
+                let Some(row) = store.get(slot) else { continue };
+                let ok = match &wb {
+                    Some(b) => b.matches(&row.values, &ectx)?,
+                    None => true,
+                };
+                if ok {
+                    let key = order_bound
+                        .iter()
+                        .map(|(b, _)| b.eval(&row.values, &ectx))
+                        .collect::<Result<Vec<_>>>()?;
+                    matches.push((*pidx, slot, key));
+                    if let Some(cap) = compact_at {
+                        if matches.len() >= cap {
+                            sort_matches(&mut matches);
+                            matches.truncate(limit.unwrap_or(0) as usize);
+                        }
+                    }
+                }
+            }
+        }
+        if !order_bound.is_empty() {
+            sort_matches(&mut matches);
+        }
+        if let Some(n) = limit {
+            matches.truncate(n as usize);
+        }
+
+        // Apply.
+        let mut new_rows = Vec::with_capacity(matches.len());
+        for (pidx, slot, _) in &matches {
+            let old = {
+                let store = ctx.store(&tkey, *pidx, Role::Primary)?;
+                store.get(*slot).cloned().ok_or_else(|| {
+                    Error::Engine(format!("matched slot {slot} vanished mid-statement"))
+                })?
+            };
+            let mut new_vals = old.values.clone();
+            for (ci, b) in &set_bound {
+                new_vals[*ci] = b.eval(&old.values, &ectx)?;
+            }
+            let new_row = def.schema.coerce_row(Row::new(new_vals))?;
+            let new_pidx = def.partition_of_row(&new_row.values)?;
+            if new_pidx == *pidx {
+                let store = ctx.store_mut(&tkey, *pidx, Role::Primary)?;
+                store.update(*slot, new_row.clone())?;
+                ctx.applied.push((
+                    LogOp::Update { table: tkey.clone(), pidx: *pidx, slot: *slot, row: new_row.clone() },
+                    Undo::Restore { table: tkey.clone(), pidx: *pidx, slot: *slot, row: old },
+                ));
+            } else {
+                // Row moves partitions (e.g. work stealing rewrites
+                // worker_id): delete + insert.
+                {
+                    let store = ctx.store_mut(&tkey, *pidx, Role::Primary)?;
+                    store.delete(*slot)?;
+                }
+                ctx.applied.push((
+                    LogOp::Delete { table: tkey.clone(), pidx: *pidx, slot: *slot },
+                    Undo::Reinsert {
+                        table: tkey.clone(),
+                        pidx: *pidx,
+                        slot: *slot,
+                        row: old,
+                    },
+                ));
+                let store = ctx.store_mut(&tkey, new_pidx, Role::Primary)?;
+                let new_slot = store.insert(new_row.clone())?;
+                ctx.applied.push((
+                    LogOp::Insert {
+                        table: tkey.clone(),
+                        pidx: new_pidx,
+                        slot: new_slot,
+                        row: new_row.clone(),
+                    },
+                    Undo::Remove { table: tkey.clone(), pidx: new_pidx, slot: new_slot },
+                ));
+            }
+            new_rows.push(new_row);
+        }
+
+        // RETURNING projection over the new rows.
+        if let Some(items) = returning {
+            let input = TableInput {
+                binding: binding.to_string(),
+                columns: def.schema.columns.iter().map(|c| c.name.clone()).collect(),
+                rows: new_rows,
+            };
+            let pseudo = SelectStmt {
+                items: items.clone(),
+                from: TableRef { table: def.name.clone(), alias: Some(binding.to_string()) },
+                joins: vec![],
+                where_: None,
+                group_by: vec![],
+                having: None,
+                order_by: vec![],
+                limit: None,
+            };
+            return run_select(&pseudo, vec![input], &ectx).map(StatementResult::Rows);
+        }
+        Ok(StatementResult::Affected(matches.len()))
+    }
+
+    fn exec_delete(
+        &self,
+        ctx: &mut ExecCtx<'_>,
+        table: &TableRef,
+        where_: &Option<Expr>,
+    ) -> Result<usize> {
+        let meta = ctx
+            .placements
+            .get(&table.table.to_lowercase())
+            .cloned()
+            .ok_or_else(|| Error::Engine(format!("table '{}' not in txn scope", table.table)))?;
+        let def = meta.def.clone();
+        let tkey = def.name.to_lowercase();
+        let binding = table.binding();
+        let layout =
+            Layout::of_table(binding, def.schema.columns.iter().map(|c| c.name.clone()));
+        let ectx = ctx.ectx();
+        let wb = match where_ {
+            Some(w) => Some(bind(w, &layout)?),
+            None => None,
+        };
+        let parts = prune_partitions(&def, binding, where_.as_ref());
+        let mut victims: Vec<(usize, usize)> = Vec::new();
+        for pidx in &parts {
+            let store = ctx.store(&tkey, *pidx, Role::Primary)?;
+            for (slot, row) in store.iter() {
+                let ok = match &wb {
+                    Some(b) => b.matches(&row.values, &ectx)?,
+                    None => true,
+                };
+                if ok {
+                    victims.push((*pidx, slot));
+                }
+            }
+        }
+        for (pidx, slot) in &victims {
+            let store = ctx.store_mut(&tkey, *pidx, Role::Primary)?;
+            let old = store.delete(*slot)?;
+            ctx.applied.push((
+                LogOp::Delete { table: tkey.clone(), pidx: *pidx, slot: *slot },
+                Undo::Reinsert { table: tkey.clone(), pidx: *pidx, slot: *slot, row: old },
+            ));
+        }
+        Ok(victims.len())
+    }
+}
+
+/// Partitions that can possibly match `where_` for a table bound as
+/// `binding`: a conjunct `partition_col = <int literal>` (unqualified or
+/// qualified with the binding) prunes to exactly one partition.
+fn prune_partitions(def: &TableDef, binding: &str, where_: Option<&Expr>) -> Vec<usize> {
+    if let (Some(ci), Some(w)) = (def.partition_col_idx(), where_) {
+        let pcol = &def.schema.columns[ci].name;
+        for c in w.conjuncts() {
+            if let Expr::Binary(sql::Op::Eq, a, b) = c {
+                let pair = match (a.as_ref(), b.as_ref()) {
+                    (Expr::Col { table, name }, Expr::Lit(Value::Int(k)))
+                    | (Expr::Lit(Value::Int(k)), Expr::Col { table, name }) => {
+                        Some((table.as_deref(), name.as_str(), *k))
+                    }
+                    _ => None,
+                };
+                if let Some((qual, name, k)) = pair {
+                    let qual_ok = qual.map_or(true, |q| q.eq_ignore_ascii_case(binding));
+                    if qual_ok && name.eq_ignore_ascii_case(pcol) {
+                        return vec![def.partition_of_key(k)];
+                    }
+                }
+            }
+        }
+    }
+    (0..def.num_partitions()).collect()
+}
+
+/// If some conjunct pins an indexed (or PK) column to a literal, return
+/// (schema column index, literal) for an index probe.
+fn index_probe_for(def: &TableDef, binding: &str, where_: &Expr) -> Option<(usize, Value)> {
+    for c in where_.conjuncts() {
+        if let Expr::Binary(sql::Op::Eq, a, b) = c {
+            let pair = match (a.as_ref(), b.as_ref()) {
+                (Expr::Col { table, name }, Expr::Lit(v))
+                | (Expr::Lit(v), Expr::Col { table, name }) => {
+                    Some((table.as_deref(), name.as_str(), v))
+                }
+                _ => None,
+            };
+            if let Some((qual, name, v)) = pair {
+                let qual_ok = qual.map_or(true, |q| q.eq_ignore_ascii_case(binding));
+                if !qual_ok {
+                    continue;
+                }
+                if let Some(ci) = def.schema.index_of(name) {
+                    let indexed = def.indexes.iter().any(|x| x.eq_ignore_ascii_case(name));
+                    let is_pk = def.pk_idx() == Some(ci);
+                    if indexed || is_pk {
+                        return Some((ci, v.clone()));
+                    }
+                }
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> Arc<DbCluster> {
+        let c = DbCluster::start(ClusterConfig::default()).unwrap();
+        c.exec(
+            "CREATE TABLE workqueue (taskid INT NOT NULL, actid INT, workerid INT NOT NULL, \
+             status TEXT, dur FLOAT, starttime FLOAT, endtime FLOAT) \
+             PARTITION BY HASH(workerid) PARTITIONS 4 PRIMARY KEY (taskid) INDEX (status)",
+        )
+        .unwrap();
+        c.exec(
+            "CREATE TABLE workers (id INT NOT NULL, host TEXT) PRIMARY KEY (id)",
+        )
+        .unwrap();
+        c
+    }
+
+    fn seed(c: &DbCluster, n: usize, workers: i64) {
+        for i in 0..n {
+            c.execute(&format!(
+                "INSERT INTO workqueue (taskid, actid, workerid, status, dur) \
+                 VALUES ({}, {}, {}, 'READY', {}.0)",
+                i,
+                i % 3,
+                i as i64 % workers,
+                i % 7
+            ))
+            .unwrap();
+        }
+        for w in 0..workers {
+            c.execute(&format!("INSERT INTO workers (id, host) VALUES ({w}, 'node{w}')"))
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn create_insert_select_roundtrip() {
+        let c = cluster();
+        seed(&c, 20, 4);
+        assert_eq!(c.table_rows("workqueue").unwrap(), 20);
+        let rs = c
+            .query("SELECT taskid FROM workqueue WHERE workerid = 1 AND status = 'READY' ORDER BY taskid")
+            .unwrap();
+        assert_eq!(rs.rows.len(), 5);
+        assert_eq!(rs.rows[0].values[0], Value::Int(1));
+    }
+
+    #[test]
+    fn update_limit_returning_dequeues_atomically() {
+        let c = cluster();
+        seed(&c, 20, 4);
+        let r = c
+            .exec(
+                "UPDATE workqueue SET status = 'RUNNING', starttime = NOW() \
+                 WHERE workerid = 2 AND status = 'READY' ORDER BY taskid LIMIT 3 \
+                 RETURNING taskid, status",
+            )
+            .unwrap()
+            .rows();
+        assert_eq!(r.rows.len(), 3);
+        assert_eq!(r.rows[0].values[0], Value::Int(2)); // smallest taskid with workerid=2 still READY
+        assert_eq!(r.rows[0].values[1], Value::str("RUNNING"));
+        // 5 tasks had workerid=2; 3 claimed, 2 left
+        let left = c
+            .query("SELECT COUNT(*) FROM workqueue WHERE workerid = 2 AND status = 'READY'")
+            .unwrap();
+        assert_eq!(left.rows[0].values[0], Value::Int(2));
+    }
+
+    #[test]
+    fn pk_uniqueness_across_partitions() {
+        let c = cluster();
+        c.execute("INSERT INTO workqueue (taskid, workerid, status) VALUES (1, 0, 'READY')")
+            .unwrap();
+        // same taskid, different partition (workerid 1) must still fail
+        let e = c.execute("INSERT INTO workqueue (taskid, workerid, status) VALUES (1, 1, 'READY')");
+        assert!(e.is_err(), "cross-partition duplicate PK accepted");
+        assert_eq!(c.table_rows("workqueue").unwrap(), 1);
+    }
+
+    #[test]
+    fn update_moving_partition_key_relocates_row() {
+        let c = cluster();
+        c.execute("INSERT INTO workqueue (taskid, workerid, status) VALUES (1, 0, 'READY')")
+            .unwrap();
+        let n = c
+            .execute("UPDATE workqueue SET workerid = 3 WHERE taskid = 1")
+            .unwrap();
+        assert_eq!(n, 1);
+        let rs = c.query("SELECT workerid FROM workqueue WHERE workerid = 3").unwrap();
+        assert_eq!(rs.rows.len(), 1);
+        let rs = c.query("SELECT COUNT(*) FROM workqueue WHERE workerid = 0").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(0));
+        // row is findable by PK afterwards
+        let rs = c.query("SELECT workerid FROM workqueue WHERE taskid = 1").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(3));
+    }
+
+    #[test]
+    fn join_across_tables() {
+        let c = cluster();
+        seed(&c, 12, 4);
+        let rs = c
+            .query(
+                "SELECT w.host, COUNT(*) AS n FROM workqueue t JOIN workers w \
+                 ON t.workerid = w.id GROUP BY w.host ORDER BY w.host",
+            )
+            .unwrap();
+        assert_eq!(rs.rows.len(), 4);
+        assert_eq!(rs.rows[0].values[1], Value::Int(3));
+    }
+
+    #[test]
+    fn delete_with_predicate() {
+        let c = cluster();
+        seed(&c, 12, 4);
+        let n = c.execute("DELETE FROM workqueue WHERE actid = 0").unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(c.table_rows("workqueue").unwrap(), 8);
+    }
+
+    #[test]
+    fn txn_atomicity_rolls_back_all_statements() {
+        let c = cluster();
+        seed(&c, 4, 4);
+        let stmts = vec![
+            sql::parse("UPDATE workqueue SET status = 'RUNNING' WHERE taskid = 0").unwrap(),
+            // second statement violates NOT NULL on workerid -> whole txn aborts
+            sql::parse("UPDATE workqueue SET workerid = NULL WHERE taskid = 1").unwrap(),
+        ];
+        let e = c.exec_txn(0, AccessKind::Other, &stmts);
+        assert!(e.is_err());
+        // first statement's effect must be rolled back
+        let rs = c.query("SELECT status FROM workqueue WHERE taskid = 0").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::str("READY"));
+    }
+
+    #[test]
+    fn replica_failover_serves_reads_and_writes() {
+        let c = cluster();
+        seed(&c, 16, 4);
+        let before = c.table_rows("workqueue").unwrap();
+        // Find which node holds a primary and kill it.
+        c.kill_node(0).unwrap();
+        let promoted = c.promote_dead_primaries();
+        assert!(promoted > 0, "some primaries lived on node 0");
+        // reads and writes still work against promoted backups
+        assert_eq!(c.table_rows("workqueue").unwrap(), before);
+        let n = c
+            .execute("UPDATE workqueue SET status = 'RUNNING' WHERE workerid = 1")
+            .unwrap();
+        assert!(n > 0);
+        // revive + heal restores redundancy
+        c.revive_node(0).unwrap();
+        let healed = c.heal().unwrap();
+        assert!(healed > 0);
+    }
+
+    #[test]
+    fn stats_are_recorded_per_kind() {
+        let c = cluster();
+        seed(&c, 4, 4);
+        c.exec_tagged(2, AccessKind::GetReadyTasks, "SELECT * FROM workqueue WHERE workerid = 1")
+            .unwrap();
+        let s = c.stats.get(AccessKind::GetReadyTasks);
+        assert_eq!(s.count, 1);
+        assert!(s.total_secs > 0.0);
+    }
+
+    #[test]
+    fn db_size_accounting() {
+        let c = cluster();
+        assert_eq!(c.total_bytes(), 0);
+        seed(&c, 50, 4);
+        let b = c.total_bytes();
+        assert!(b > 1000, "50 rows should be > 1KB, got {b}");
+        assert!(c.table_bytes("workqueue").unwrap() > c.table_bytes("workers").unwrap());
+    }
+
+    #[test]
+    fn unknown_tables_and_columns_error() {
+        let c = cluster();
+        assert!(c.query("SELECT * FROM nope").is_err());
+        assert!(c.execute("INSERT INTO workers (nope) VALUES (1)").is_err());
+        assert!(c.execute("UPDATE workers SET nope = 1").is_err());
+        assert!(c.exec("CREATE TABLE workers (id INT)").is_err(), "duplicate table");
+    }
+
+    #[test]
+    fn select_sees_snapshot_under_concurrent_writers() {
+        // smoke test: 4 writer threads + 4 reader threads on the same WQ
+        let c = cluster();
+        seed(&c, 100, 4);
+        let mut handles = Vec::new();
+        for w in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                loop {
+                    let r = c
+                        .exec(&format!(
+                            "UPDATE workqueue SET status = 'RUNNING' \
+                             WHERE workerid = {w} AND status = 'READY' ORDER BY taskid LIMIT 1 \
+                             RETURNING taskid"
+                        ))
+                        .unwrap()
+                        .rows();
+                    if r.rows.is_empty() {
+                        break;
+                    }
+                }
+            }));
+        }
+        for _ in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..20 {
+                    let rs = c
+                        .query("SELECT COUNT(*) FROM workqueue")
+                        .unwrap();
+                    assert_eq!(rs.rows[0].values[0], Value::Int(100));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let rs = c.query("SELECT COUNT(*) FROM workqueue WHERE status = 'RUNNING'").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(100));
+    }
+}

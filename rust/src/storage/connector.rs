@@ -1,0 +1,215 @@
+//! Connectors: the brokers between worker nodes and the DBMS.
+//!
+//! Paper §3.1: "*Connectors* are brokers that intermediate the communication
+//! between the DBMS and other components... If a connector fails, all worker
+//! nodes connected to it are switched to their secondary ones." and the
+//! distribution rule: a worker co-located with a connector uses it as
+//! primary; remaining workers are assigned round-robin.
+
+use crate::storage::cluster::DbCluster;
+use crate::storage::stats::AccessKind;
+use crate::storage::StatementResult;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A connector (DBMS driver endpoint). Carries an `alive` flag for failure
+/// injection and counts the statements it brokered.
+pub struct Connector {
+    pub id: u32,
+    /// Physical node hosting this connector (for co-location assignment).
+    pub physical_node: u32,
+    cluster: Arc<DbCluster>,
+    alive: AtomicBool,
+    pub brokered: AtomicU64,
+}
+
+impl Connector {
+    pub fn new(id: u32, physical_node: u32, cluster: Arc<DbCluster>) -> Arc<Connector> {
+        Arc::new(Connector {
+            id,
+            physical_node,
+            cluster,
+            alive: AtomicBool::new(true),
+            brokered: AtomicU64::new(0),
+        })
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    pub fn kill(&self) {
+        self.alive.store(false, Ordering::SeqCst);
+    }
+
+    pub fn revive(&self) {
+        self.alive.store(true, Ordering::SeqCst);
+    }
+
+    /// Broker one statement for a worker node.
+    pub fn exec(&self, worker_node: u32, kind: AccessKind, sql: &str) -> Result<StatementResult> {
+        if !self.is_alive() {
+            return Err(Error::Unavailable(format!("connector {} is down", self.id)));
+        }
+        self.brokered.fetch_add(1, Ordering::Relaxed);
+        self.cluster.exec_tagged(worker_node, kind, sql)
+    }
+
+    /// Broker a pre-parsed statement (hot path).
+    pub fn exec_stmt(
+        &self,
+        worker_node: u32,
+        kind: AccessKind,
+        stmt: &crate::storage::sql::Statement,
+    ) -> Result<StatementResult> {
+        if !self.is_alive() {
+            return Err(Error::Unavailable(format!("connector {} is down", self.id)));
+        }
+        self.brokered.fetch_add(1, Ordering::Relaxed);
+        self.cluster.exec_stmt(worker_node, kind, stmt)
+    }
+}
+
+/// A worker's view of the connector fabric: a primary link and a secondary
+/// to fail over to (paper Figure 2: full vs dashed gray lines).
+pub struct WorkerLink {
+    pub worker_node: u32,
+    pub primary: Arc<Connector>,
+    pub secondary: Option<Arc<Connector>>,
+}
+
+impl WorkerLink {
+    /// Execute with failover: try primary, fall back to secondary if the
+    /// primary connector is down.
+    pub fn exec(&self, kind: AccessKind, sql: &str) -> Result<StatementResult> {
+        match self.primary.exec(self.worker_node, kind, sql) {
+            Err(Error::Unavailable(_)) if self.secondary.is_some() => {
+                self.secondary.as_ref().unwrap().exec(self.worker_node, kind, sql)
+            }
+            other => other,
+        }
+    }
+
+    /// Pre-parsed variant of [`WorkerLink::exec`].
+    pub fn exec_stmt(
+        &self,
+        kind: AccessKind,
+        stmt: &crate::storage::sql::Statement,
+    ) -> Result<StatementResult> {
+        match self.primary.exec_stmt(self.worker_node, kind, stmt) {
+            Err(Error::Unavailable(_)) if self.secondary.is_some() => {
+                self.secondary.as_ref().unwrap().exec_stmt(self.worker_node, kind, stmt)
+            }
+            other => other,
+        }
+    }
+
+    /// Which connector would serve right now (monitoring).
+    pub fn active_connector(&self) -> u32 {
+        if self.primary.is_alive() {
+            self.primary.id
+        } else if let Some(s) = &self.secondary {
+            s.id
+        } else {
+            self.primary.id
+        }
+    }
+}
+
+/// Assign workers to connectors per the paper's strategy:
+/// 1. a worker sharing a physical node with a connector gets it as primary;
+/// 2. remaining workers are distributed round-robin;
+/// 3. the secondary is the next connector in ring order (never the primary).
+pub fn assign_links(
+    worker_nodes: &[u32],
+    connectors: &[Arc<Connector>],
+) -> Result<Vec<WorkerLink>> {
+    if connectors.is_empty() {
+        return Err(Error::Catalog("need at least one connector".into()));
+    }
+    let mut links = Vec::with_capacity(worker_nodes.len());
+    let mut rr = 0usize;
+    for &w in worker_nodes {
+        let co_located = connectors.iter().position(|c| c.physical_node == w);
+        let pi = match co_located {
+            Some(i) => i,
+            None => {
+                let i = rr % connectors.len();
+                rr += 1;
+                i
+            }
+        };
+        let si = if connectors.len() > 1 { Some((pi + 1) % connectors.len()) } else { None };
+        links.push(WorkerLink {
+            worker_node: w,
+            primary: connectors[pi].clone(),
+            secondary: si.map(|i| connectors[i].clone()),
+        });
+    }
+    Ok(links)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::cluster::ClusterConfig;
+
+    fn setup() -> (Arc<DbCluster>, Vec<Arc<Connector>>) {
+        let c = DbCluster::start(ClusterConfig::default()).unwrap();
+        c.exec("CREATE TABLE t (id INT NOT NULL, v FLOAT) PRIMARY KEY (id)").unwrap();
+        let conns = vec![
+            Connector::new(0, 0, c.clone()),
+            Connector::new(1, 1, c.clone()),
+            Connector::new(2, 2, c.clone()),
+        ];
+        (c, conns)
+    }
+
+    #[test]
+    fn colocated_worker_gets_local_connector() {
+        let (_c, conns) = setup();
+        let links = assign_links(&[0, 1, 5, 6], &conns).unwrap();
+        assert_eq!(links[0].primary.id, 0); // worker 0 co-located with connector 0
+        assert_eq!(links[1].primary.id, 1);
+        // workers 5, 6 round-robin over connectors 0, 1
+        assert_eq!(links[2].primary.id, 0);
+        assert_eq!(links[3].primary.id, 1);
+        // secondary is the ring successor, never the primary
+        for l in &links {
+            assert_ne!(l.primary.id, l.secondary.as_ref().unwrap().id);
+        }
+    }
+
+    #[test]
+    fn link_fails_over_to_secondary() {
+        let (_c, conns) = setup();
+        let links = assign_links(&[0], &conns).unwrap();
+        let l = &links[0];
+        l.exec(AccessKind::Other, "INSERT INTO t (id, v) VALUES (1, 1.0)").unwrap();
+        assert_eq!(l.active_connector(), 0);
+        conns[0].kill();
+        assert_eq!(l.active_connector(), 1);
+        // statement still succeeds through the secondary
+        l.exec(AccessKind::Other, "INSERT INTO t (id, v) VALUES (2, 2.0)").unwrap();
+        assert_eq!(conns[1].brokered.load(std::sync::atomic::Ordering::Relaxed), 1);
+        conns[0].revive();
+        l.exec(AccessKind::Other, "INSERT INTO t (id, v) VALUES (3, 3.0)").unwrap();
+        assert_eq!(l.active_connector(), 0);
+    }
+
+    #[test]
+    fn dead_connector_without_secondary_errors() {
+        let (c, _) = setup();
+        let only = Connector::new(9, 0, c);
+        let links = assign_links(&[4], &[only.clone()]).unwrap();
+        only.kill();
+        let e = links[0].exec(AccessKind::Other, "SELECT * FROM t");
+        assert!(matches!(e, Err(Error::Unavailable(_))));
+    }
+
+    #[test]
+    fn no_connectors_is_an_error() {
+        assert!(assign_links(&[0], &[]).is_err());
+    }
+}

@@ -1,0 +1,90 @@
+//! The distributed in-memory relational engine underpinning SchalaDB.
+//!
+//! This is our from-scratch substitute for MySQL Cluster (see DESIGN.md
+//! §Substitutions): tables are hash-partitioned on a declared column, each
+//! partition has one primary and one backup replica assigned to *data
+//! nodes*, statements route through *connectors*, point transactions take
+//! per-partition latches, multi-partition writes go through a two-phase
+//! commit, and all of it sits behind a small SQL dialect so the workflow
+//! engine and the steering layer share one query path — exactly the
+//! integration the paper argues for.
+
+pub mod checkpoint;
+pub mod cluster;
+pub mod connector;
+pub mod datanode;
+pub mod partition;
+pub mod replication;
+pub mod sql;
+pub mod stats;
+
+pub mod table_def;
+pub mod txn;
+pub mod value;
+pub mod wal;
+
+pub use cluster::{ClusterConfig, DbCluster};
+pub use connector::Connector;
+pub use stats::{AccessKind, StatsRegistry};
+pub use table_def::TableDef;
+pub use value::{ColumnType, Row, Schema, Value};
+
+/// Result set returned by `SELECT`; column names plus materialized rows.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ResultSet {
+    pub columns: Vec<String>,
+    pub rows: Vec<Row>,
+}
+
+impl ResultSet {
+    /// Index of a named output column.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == name)
+    }
+
+    /// Value at (row, named column); `None` when either is missing.
+    pub fn get(&self, row: usize, name: &str) -> Option<&Value> {
+        let c = self.col(name)?;
+        self.rows.get(row)?.values.get(c)
+    }
+
+    /// Render as an aligned text table (steering CLI output).
+    pub fn render(&self) -> String {
+        let header: Vec<&str> = self.columns.iter().map(|s| s.as_str()).collect();
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| r.values.iter().map(|v| v.to_string()).collect())
+            .collect();
+        crate::util::render_table(&header, &rows)
+    }
+}
+
+/// Outcome of any SQL statement.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StatementResult {
+    /// Rows from a SELECT.
+    Rows(ResultSet),
+    /// Row count affected by INSERT/UPDATE/DELETE.
+    Affected(usize),
+    /// DDL acknowledgement.
+    Ok,
+}
+
+impl StatementResult {
+    /// Unwrap rows, panicking with context otherwise (test/driver helper).
+    pub fn rows(self) -> ResultSet {
+        match self {
+            StatementResult::Rows(r) => r,
+            other => panic!("expected rows, got {other:?}"),
+        }
+    }
+
+    /// Unwrap affected-row count.
+    pub fn affected(self) -> usize {
+        match self {
+            StatementResult::Affected(n) => n,
+            other => panic!("expected affected count, got {other:?}"),
+        }
+    }
+}

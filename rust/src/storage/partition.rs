@@ -1,0 +1,346 @@
+//! A single table partition: slab-allocated rows plus hash indexes.
+//!
+//! Partitions are the unit of locking, replication and placement. The store
+//! itself is lock-free-agnostic — concurrency control wraps it at the data
+//! node (`RwLock<PartitionStore>`), mirroring how NDB data nodes own
+//! fragments.
+
+use crate::storage::table_def::TableDef;
+use crate::storage::value::{Row, Value};
+use crate::{Error, Result};
+use rustc_hash::FxHashMap;
+use std::sync::Arc;
+
+/// Slot handle inside a partition (stable until the row is deleted).
+pub type Slot = usize;
+
+/// In-memory storage for one partition of one table.
+pub struct PartitionStore {
+    def: Arc<TableDef>,
+    /// Slab: `None` = free slot (reusable).
+    rows: Vec<Option<Row>>,
+    free: Vec<Slot>,
+    live: usize,
+    /// Primary-key hash index (unique within the partition; the cluster
+    /// routes equal keys to one partition so per-partition uniqueness is
+    /// table-wide for partition-aligned keys, and the cluster additionally
+    /// checks across partitions on insert when PK != partition key).
+    pk: FxHashMap<i64, Slot>,
+    /// Secondary indexes: column schema idx -> (value hash -> slots).
+    secondary: Vec<(usize, FxHashMap<u64, Vec<Slot>>)>,
+    /// Monotone version, bumped on every mutation (replication + checkpoint
+    /// consistency checks).
+    pub version: u64,
+    approx_bytes: usize,
+}
+
+impl PartitionStore {
+    pub fn new(def: Arc<TableDef>) -> PartitionStore {
+        let secondary = def
+            .indexes
+            .iter()
+            .filter_map(|c| def.schema.index_of(c))
+            .map(|ci| (ci, FxHashMap::default()))
+            .collect();
+        PartitionStore {
+            def,
+            rows: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            pk: FxHashMap::default(),
+            secondary,
+            version: 0,
+            approx_bytes: 0,
+        }
+    }
+
+    pub fn def(&self) -> &Arc<TableDef> {
+        &self.def
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Approximate resident bytes (rows only, indexes excluded).
+    pub fn approx_bytes(&self) -> usize {
+        self.approx_bytes
+    }
+
+    fn pk_of(&self, row: &Row) -> Option<i64> {
+        let i = self.def.pk_idx()?;
+        row.values[i].as_i64()
+    }
+
+    fn index_insert(&mut self, slot: Slot, row: &Row) {
+        for (ci, map) in &mut self.secondary {
+            map.entry(row.values[*ci].hash_key()).or_default().push(slot);
+        }
+    }
+
+    fn index_remove(&mut self, slot: Slot, row: &Row) {
+        for (ci, map) in &mut self.secondary {
+            let key = row.values[*ci].hash_key();
+            if let Some(v) = map.get_mut(&key) {
+                if let Some(p) = v.iter().position(|s| *s == slot) {
+                    v.swap_remove(p);
+                }
+                if v.is_empty() {
+                    map.remove(&key);
+                }
+            }
+        }
+    }
+
+    /// Insert a validated row; returns its slot.
+    pub fn insert(&mut self, row: Row) -> Result<Slot> {
+        let row = self.def.schema.coerce_row(row)?;
+        if let Some(k) = self.pk_of(&row) {
+            if self.pk.contains_key(&k) {
+                return Err(Error::Constraint(format!(
+                    "duplicate primary key {k} in '{}'",
+                    self.def.name
+                )));
+            }
+        }
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.rows.push(None);
+                self.rows.len() - 1
+            }
+        };
+        self.approx_bytes += row.approx_bytes();
+        if let Some(k) = self.pk_of(&row) {
+            self.pk.insert(k, slot);
+        }
+        self.index_insert(slot, &row);
+        self.rows[slot] = Some(row);
+        self.live += 1;
+        self.version += 1;
+        Ok(slot)
+    }
+
+    /// Read a row by slot.
+    pub fn get(&self, slot: Slot) -> Option<&Row> {
+        self.rows.get(slot).and_then(|r| r.as_ref())
+    }
+
+    /// Slot for a primary-key value.
+    pub fn slot_by_pk(&self, key: i64) -> Option<Slot> {
+        self.pk.get(&key).copied()
+    }
+
+    /// Candidate slots where `column == value`, using a secondary index if
+    /// one exists. Returns `None` when the column is not indexed (caller
+    /// must scan); `Some(slots)` may contain hash-collision false positives,
+    /// so callers still re-check the predicate.
+    pub fn slots_by_index(&self, col_idx: usize, value: &Value) -> Option<Vec<Slot>> {
+        let (_, map) = self.secondary.iter().find(|(ci, _)| *ci == col_idx)?;
+        Some(map.get(&value.hash_key()).cloned().unwrap_or_default())
+    }
+
+    /// Overwrite the row at `slot` with a validated new row.
+    pub fn update(&mut self, slot: Slot, new_row: Row) -> Result<()> {
+        let new_row = self.def.schema.coerce_row(new_row)?;
+        let old = self
+            .rows
+            .get(slot)
+            .and_then(|r| r.clone())
+            .ok_or_else(|| Error::Constraint(format!("update of dead slot {slot}")))?;
+        // Primary key immutability keeps the index trivially consistent;
+        // the workflow engine never rewrites task ids.
+        if let (Some(a), Some(b)) = (self.pk_of(&old), self.pk_of(&new_row)) {
+            if a != b {
+                return Err(Error::Constraint(format!(
+                    "primary key is immutable ({a} -> {b})"
+                )));
+            }
+        }
+        self.index_remove(slot, &old);
+        self.approx_bytes = self.approx_bytes - old.approx_bytes() + new_row.approx_bytes();
+        self.index_insert(slot, &new_row);
+        self.rows[slot] = Some(new_row);
+        self.version += 1;
+        Ok(())
+    }
+
+    /// Delete the row at `slot`; returns the removed row.
+    pub fn delete(&mut self, slot: Slot) -> Result<Row> {
+        let old = self
+            .rows
+            .get_mut(slot)
+            .and_then(|r| r.take())
+            .ok_or_else(|| Error::Constraint(format!("delete of dead slot {slot}")))?;
+        if let Some(k) = self.pk_of(&old) {
+            self.pk.remove(&k);
+        }
+        self.index_remove(slot, &old);
+        self.approx_bytes -= old.approx_bytes();
+        self.free.push(slot);
+        self.live -= 1;
+        self.version += 1;
+        Ok(old)
+    }
+
+    /// Iterate live `(slot, row)` pairs in slot order.
+    pub fn iter(&self) -> impl Iterator<Item = (Slot, &Row)> {
+        self.rows
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.as_ref().map(|row| (i, row)))
+    }
+
+    /// Deep copy of all live rows (checkpointing / replica seeding).
+    pub fn snapshot_rows(&self) -> Vec<Row> {
+        self.iter().map(|(_, r)| r.clone()).collect()
+    }
+
+    /// Rebuild the store from a row list (recovery / replica seeding).
+    pub fn load_rows(&mut self, rows: Vec<Row>) -> Result<()> {
+        self.rows.clear();
+        self.free.clear();
+        self.pk.clear();
+        for (_, m) in &mut self.secondary {
+            m.clear();
+        }
+        self.live = 0;
+        self.approx_bytes = 0;
+        for r in rows {
+            self.insert(r)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::value::{ColumnType, Schema};
+
+    fn store() -> PartitionStore {
+        let schema = Schema::of(&[
+            ("taskid", ColumnType::Int),
+            ("workerid", ColumnType::Int),
+            ("status", ColumnType::Str),
+            ("dur", ColumnType::Float),
+        ]);
+        let def = TableDef::new("wq", schema)
+            .with_primary_key("taskid")
+            .unwrap()
+            .with_index("status")
+            .unwrap();
+        PartitionStore::new(Arc::new(def))
+    }
+
+    fn row(id: i64, w: i64, st: &str) -> Row {
+        Row::new(vec![Value::Int(id), Value::Int(w), Value::str(st), Value::Float(1.0)])
+    }
+
+    #[test]
+    fn insert_get_update_delete_cycle() {
+        let mut p = store();
+        let s0 = p.insert(row(1, 0, "READY")).unwrap();
+        let s1 = p.insert(row(2, 0, "READY")).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.get(s0).unwrap().values[0], Value::Int(1));
+
+        p.update(s1, row(2, 0, "RUNNING")).unwrap();
+        assert_eq!(p.get(s1).unwrap().values[2], Value::str("RUNNING"));
+
+        let old = p.delete(s0).unwrap();
+        assert_eq!(old.values[0], Value::Int(1));
+        assert_eq!(p.len(), 1);
+        assert!(p.get(s0).is_none());
+
+        // slot reuse
+        let s2 = p.insert(row(3, 1, "READY")).unwrap();
+        assert_eq!(s2, s0);
+    }
+
+    #[test]
+    fn pk_uniqueness_and_lookup() {
+        let mut p = store();
+        p.insert(row(7, 0, "READY")).unwrap();
+        assert!(matches!(p.insert(row(7, 1, "READY")), Err(Error::Constraint(_))));
+        let slot = p.slot_by_pk(7).unwrap();
+        assert_eq!(p.get(slot).unwrap().values[1], Value::Int(0));
+        assert!(p.slot_by_pk(99).is_none());
+    }
+
+    #[test]
+    fn pk_is_immutable_via_update() {
+        let mut p = store();
+        let s = p.insert(row(1, 0, "READY")).unwrap();
+        assert!(p.update(s, row(2, 0, "READY")).is_err());
+    }
+
+    #[test]
+    fn secondary_index_tracks_mutations() {
+        let mut p = store();
+        let s0 = p.insert(row(1, 0, "READY")).unwrap();
+        let s1 = p.insert(row(2, 0, "READY")).unwrap();
+        p.insert(row(3, 0, "RUNNING")).unwrap();
+        let status_ci = 2;
+        let ready = p.slots_by_index(status_ci, &Value::str("READY")).unwrap();
+        assert_eq!(ready.len(), 2);
+        assert!(ready.contains(&s0) && ready.contains(&s1));
+
+        p.update(s0, row(1, 0, "FINISHED")).unwrap();
+        let ready = p.slots_by_index(status_ci, &Value::str("READY")).unwrap();
+        assert_eq!(ready, vec![s1]);
+        let fin = p.slots_by_index(status_ci, &Value::str("FINISHED")).unwrap();
+        assert_eq!(fin, vec![s0]);
+
+        p.delete(s1).unwrap();
+        assert!(p.slots_by_index(status_ci, &Value::str("READY")).unwrap().is_empty());
+        // unindexed column -> None
+        assert!(p.slots_by_index(0, &Value::Int(1)).is_none());
+    }
+
+    #[test]
+    fn snapshot_and_reload() {
+        let mut p = store();
+        for i in 0..10 {
+            p.insert(row(i, i % 3, "READY")).unwrap();
+        }
+        p.delete(p.slot_by_pk(4).unwrap()).unwrap();
+        let snap = p.snapshot_rows();
+        assert_eq!(snap.len(), 9);
+
+        let mut q = store();
+        q.load_rows(snap).unwrap();
+        assert_eq!(q.len(), 9);
+        assert!(q.slot_by_pk(4).is_none());
+        assert!(q.slot_by_pk(5).is_some());
+        // indexes rebuilt
+        assert_eq!(q.slots_by_index(2, &Value::str("READY")).unwrap().len(), 9);
+    }
+
+    #[test]
+    fn byte_accounting_moves_with_rows() {
+        let mut p = store();
+        assert_eq!(p.approx_bytes(), 0);
+        let s = p.insert(row(1, 0, "READY")).unwrap();
+        let b1 = p.approx_bytes();
+        assert!(b1 > 0);
+        p.update(s, row(1, 0, "a-much-longer-status-string")).unwrap();
+        assert!(p.approx_bytes() > b1);
+        p.delete(s).unwrap();
+        assert_eq!(p.approx_bytes(), 0);
+    }
+
+    #[test]
+    fn version_bumps_on_every_mutation() {
+        let mut p = store();
+        let v0 = p.version;
+        let s = p.insert(row(1, 0, "READY")).unwrap();
+        p.update(s, row(1, 0, "RUNNING")).unwrap();
+        p.delete(s).unwrap();
+        assert_eq!(p.version, v0 + 3);
+    }
+}

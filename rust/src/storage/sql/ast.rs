@@ -1,0 +1,275 @@
+//! SQL abstract syntax tree.
+
+use crate::storage::value::{ColumnType, Value};
+
+/// Binary/unary operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+    Not,
+    Neg,
+}
+
+/// Aggregate functions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggFunc {
+    Count,
+    Sum,
+    Avg,
+    Min,
+    Max,
+}
+
+impl AggFunc {
+    pub fn name(self) -> &'static str {
+        match self {
+            AggFunc::Count => "COUNT",
+            AggFunc::Sum => "SUM",
+            AggFunc::Avg => "AVG",
+            AggFunc::Min => "MIN",
+            AggFunc::Max => "MAX",
+        }
+    }
+}
+
+/// Expression tree.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Lit(Value),
+    /// Column reference, optionally qualified: `t.col` or `col`.
+    Col { table: Option<String>, name: String },
+    Unary(Op, Box<Expr>),
+    Binary(Op, Box<Expr>, Box<Expr>),
+    /// Scalar function call: NOW(), COALESCE(a,b), ABS(x), ROUND(x, n),
+    /// LENGTH(s), UPPER(s), LOWER(s).
+    Func { name: String, args: Vec<Expr> },
+    /// Aggregate call; `arg = None` means `COUNT(*)`.
+    Agg { func: AggFunc, arg: Option<Box<Expr>>, distinct: bool },
+    /// `e [NOT] IN (v1, v2, ...)`
+    InList { expr: Box<Expr>, list: Vec<Expr>, negated: bool },
+    /// `e [NOT] BETWEEN lo AND hi`
+    Between { expr: Box<Expr>, lo: Box<Expr>, hi: Box<Expr>, negated: bool },
+    /// `e IS [NOT] NULL`
+    IsNull { expr: Box<Expr>, negated: bool },
+    /// `e [NOT] LIKE 'pat%'`
+    Like { expr: Box<Expr>, pattern: String, negated: bool },
+    /// `CASE WHEN c THEN v [WHEN ...] [ELSE v] END`
+    Case { arms: Vec<(Expr, Expr)>, else_: Option<Box<Expr>> },
+}
+
+impl Expr {
+    pub fn col(name: &str) -> Expr {
+        Expr::Col { table: None, name: name.to_string() }
+    }
+
+    pub fn lit(v: Value) -> Expr {
+        Expr::Lit(v)
+    }
+
+    /// Does the expression contain any aggregate call?
+    pub fn has_aggregate(&self) -> bool {
+        match self {
+            Expr::Agg { .. } => true,
+            Expr::Lit(_) | Expr::Col { .. } => false,
+            Expr::Unary(_, e) => e.has_aggregate(),
+            Expr::Binary(_, a, b) => a.has_aggregate() || b.has_aggregate(),
+            Expr::Func { args, .. } => args.iter().any(|e| e.has_aggregate()),
+            Expr::InList { expr, list, .. } => {
+                expr.has_aggregate() || list.iter().any(|e| e.has_aggregate())
+            }
+            Expr::Between { expr, lo, hi, .. } => {
+                expr.has_aggregate() || lo.has_aggregate() || hi.has_aggregate()
+            }
+            Expr::IsNull { expr, .. } => expr.has_aggregate(),
+            Expr::Like { expr, .. } => expr.has_aggregate(),
+            Expr::Case { arms, else_ } => {
+                arms.iter().any(|(c, v)| c.has_aggregate() || v.has_aggregate())
+                    || else_.as_ref().map_or(false, |e| e.has_aggregate())
+            }
+        }
+    }
+
+    /// Collect the conjuncts of a top-level AND chain (for partition
+    /// pruning and index selection).
+    pub fn conjuncts(&self) -> Vec<&Expr> {
+        match self {
+            Expr::Binary(Op::And, a, b) => {
+                let mut v = a.conjuncts();
+                v.extend(b.conjuncts());
+                v
+            }
+            e => vec![e],
+        }
+    }
+
+    /// If this conjunct pins `column = <int literal>`, return (name, key).
+    /// Used for routing `worker_id = i` to its partition.
+    pub fn as_int_eq(&self) -> Option<(&str, i64)> {
+        if let Expr::Binary(Op::Eq, a, b) = self {
+            let (col, lit) = match (a.as_ref(), b.as_ref()) {
+                (Expr::Col { name, .. }, Expr::Lit(Value::Int(k))) => (name.as_str(), *k),
+                (Expr::Lit(Value::Int(k)), Expr::Col { name, .. }) => (name.as_str(), *k),
+                _ => return None,
+            };
+            return Some((col, lit));
+        }
+        None
+    }
+
+    /// If this conjunct pins `column = <literal>` (any literal type),
+    /// return (name, value). Used for secondary-index lookups.
+    pub fn as_lit_eq(&self) -> Option<(&str, &Value)> {
+        if let Expr::Binary(Op::Eq, a, b) = self {
+            let (col, lit) = match (a.as_ref(), b.as_ref()) {
+                (Expr::Col { name, .. }, Expr::Lit(v)) => (name.as_str(), v),
+                (Expr::Lit(v), Expr::Col { name, .. }) => (name.as_str(), v),
+                _ => return None,
+            };
+            return Some((col, lit));
+        }
+        None
+    }
+}
+
+/// One output item of a SELECT list.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SelectItem {
+    /// `*` (optionally `t.*`)
+    Wildcard(Option<String>),
+    Expr { expr: Expr, alias: Option<String> },
+}
+
+/// Table reference with optional alias.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TableRef {
+    pub table: String,
+    pub alias: Option<String>,
+}
+
+impl TableRef {
+    /// Name the reference binds to in scope (alias wins).
+    pub fn binding(&self) -> &str {
+        self.alias.as_deref().unwrap_or(&self.table)
+    }
+}
+
+/// Join clause.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Join {
+    pub table: TableRef,
+    pub on: Expr,
+    pub left_outer: bool,
+}
+
+/// `SELECT` statement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SelectStmt {
+    pub items: Vec<SelectItem>,
+    pub from: TableRef,
+    pub joins: Vec<Join>,
+    pub where_: Option<Expr>,
+    pub group_by: Vec<Expr>,
+    pub having: Option<Expr>,
+    pub order_by: Vec<(Expr, bool)>, // (expr, ascending)
+    pub limit: Option<u64>,
+}
+
+/// Column clause of CREATE TABLE.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColumnDecl {
+    pub name: String,
+    pub ty: ColumnType,
+    pub not_null: bool,
+}
+
+/// Any statement.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Statement {
+    CreateTable {
+        name: String,
+        columns: Vec<ColumnDecl>,
+        /// PARTITION BY HASH(col) PARTITIONS n
+        partition_by: Option<(String, usize)>,
+        primary_key: Option<String>,
+        indexes: Vec<String>,
+    },
+    Insert {
+        table: String,
+        columns: Vec<String>,
+        values: Vec<Vec<Expr>>,
+    },
+    Select(SelectStmt),
+    Update {
+        table: TableRef,
+        sets: Vec<(String, Expr)>,
+        where_: Option<Expr>,
+        order_by: Vec<(Expr, bool)>,
+        limit: Option<u64>,
+        returning: Option<Vec<SelectItem>>,
+    },
+    Delete {
+        table: TableRef,
+        where_: Option<Expr>,
+    },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conjuncts_flatten_and_chain() {
+        let e = Expr::Binary(
+            Op::And,
+            Box::new(Expr::Binary(
+                Op::And,
+                Box::new(Expr::col("a")),
+                Box::new(Expr::col("b")),
+            )),
+            Box::new(Expr::col("c")),
+        );
+        assert_eq!(e.conjuncts().len(), 3);
+    }
+
+    #[test]
+    fn int_eq_detection_both_orders() {
+        let e = Expr::Binary(
+            Op::Eq,
+            Box::new(Expr::col("workerid")),
+            Box::new(Expr::Lit(Value::Int(7))),
+        );
+        assert_eq!(e.as_int_eq(), Some(("workerid", 7)));
+        let e2 = Expr::Binary(
+            Op::Eq,
+            Box::new(Expr::Lit(Value::Int(7))),
+            Box::new(Expr::col("workerid")),
+        );
+        assert_eq!(e2.as_int_eq(), Some(("workerid", 7)));
+        let ne = Expr::Binary(
+            Op::Ne,
+            Box::new(Expr::col("workerid")),
+            Box::new(Expr::Lit(Value::Int(7))),
+        );
+        assert_eq!(ne.as_int_eq(), None);
+    }
+
+    #[test]
+    fn aggregate_detection_recurses() {
+        let agg = Expr::Agg { func: AggFunc::Count, arg: None, distinct: false };
+        let e = Expr::Binary(Op::Gt, Box::new(agg), Box::new(Expr::Lit(Value::Int(2))));
+        assert!(e.has_aggregate());
+        assert!(!Expr::col("x").has_aggregate());
+    }
+}

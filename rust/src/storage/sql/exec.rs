@@ -1,0 +1,816 @@
+//! SELECT pipeline: join → filter → group/aggregate → having → order →
+//! project → limit.
+//!
+//! The cluster layer is responsible for *getting rows out of partitions*
+//! (pruning, index probes, replica choice, locking); this module implements
+//! the relational algebra over materialized row streams. Steering queries
+//! (Table 2 of the paper) exercise every stage.
+
+use super::ast::*;
+use super::expr::{bind, Bound, EvalCtx, Layout};
+use crate::storage::value::{Row, Value};
+use crate::storage::ResultSet;
+use crate::{Error, Result};
+use rustc_hash::FxHashMap;
+
+/// Materialized input relation for one table reference.
+pub struct TableInput {
+    /// Binding name (alias or table name) qualifying its columns.
+    pub binding: String,
+    /// Column names (unqualified).
+    pub columns: Vec<String>,
+    pub rows: Vec<Row>,
+}
+
+impl TableInput {
+    pub fn layout(&self) -> Layout {
+        Layout::of_table(&self.binding, self.columns.iter().cloned())
+    }
+}
+
+/// Run a SELECT over the supplied inputs. `inputs[0]` is the FROM table;
+/// `inputs[1..]` line up with `stmt.joins`.
+pub fn run_select(stmt: &SelectStmt, inputs: Vec<TableInput>, ctx: &EvalCtx) -> Result<ResultSet> {
+    if inputs.len() != stmt.joins.len() + 1 {
+        return Err(Error::Engine(format!(
+            "select needs {} inputs, got {}",
+            stmt.joins.len() + 1,
+            inputs.len()
+        )));
+    }
+
+    // 1. joins
+    let mut layout = inputs[0].layout();
+    let mut rows: Vec<Row> = inputs[0].rows.clone();
+    for (join, input) in stmt.joins.iter().zip(inputs[1..].iter()) {
+        let right_layout = input.layout();
+        let (next_rows, next_layout) =
+            join_rows(&rows, &layout, &input.rows, &right_layout, join, ctx)?;
+        rows = next_rows;
+        layout = next_layout;
+    }
+
+    // 2. WHERE
+    if let Some(w) = &stmt.where_ {
+        let b = bind(w, &layout)?;
+        let mut kept = Vec::with_capacity(rows.len());
+        for r in rows {
+            if b.matches(&r.values, ctx)? {
+                kept.push(r);
+            }
+        }
+        rows = kept;
+    }
+
+    // 3. alias substitution: ORDER BY / HAVING may reference select aliases.
+    let aliases: Vec<(String, Expr)> = stmt
+        .items
+        .iter()
+        .filter_map(|it| match it {
+            SelectItem::Expr { expr, alias: Some(a) } => Some((a.clone(), expr.clone())),
+            _ => None,
+        })
+        .collect();
+    let subst = |e: &Expr| substitute_aliases(e, &aliases);
+    let having = stmt.having.as_ref().map(&subst);
+    let order_by: Vec<(Expr, bool)> =
+        stmt.order_by.iter().map(|(e, asc)| (subst(e), *asc)).collect();
+    // MySQL-style: GROUP BY may reference select aliases too
+    let group_by: Vec<Expr> = stmt.group_by.iter().map(&subst).collect();
+    let items: Vec<SelectItem> = stmt
+        .items
+        .iter()
+        .map(|it| match it {
+            SelectItem::Expr { expr, alias } => {
+                SelectItem::Expr { expr: expr.clone(), alias: alias.clone() }
+            }
+            w => w.clone(),
+        })
+        .collect();
+
+    // 4. aggregation
+    let needs_agg = !stmt.group_by.is_empty()
+        || items.iter().any(|it| matches!(it, SelectItem::Expr { expr, .. } if expr.has_aggregate()))
+        || having.as_ref().map_or(false, |e| e.has_aggregate())
+        || order_by.iter().any(|(e, _)| e.has_aggregate());
+
+    let (rows, layout, items, having, order_by) = if needs_agg {
+        aggregate(rows, layout, &group_by, items, having, order_by, ctx)?
+    } else {
+        (rows, layout, items, having, order_by)
+    };
+
+    // 5. HAVING (after aggregation; without aggregation it acts as a second
+    //    WHERE, matching MySQL's permissiveness)
+    let mut rows = rows;
+    if let Some(h) = &having {
+        let b = bind(h, &layout)?;
+        let mut kept = Vec::with_capacity(rows.len());
+        for r in rows {
+            if b.matches(&r.values, ctx)? {
+                kept.push(r);
+            }
+        }
+        rows = kept;
+    }
+
+    // 6. ORDER BY
+    if !order_by.is_empty() {
+        let keys: Vec<(Bound, bool)> = order_by
+            .iter()
+            .map(|(e, asc)| Ok((bind(e, &layout)?, *asc)))
+            .collect::<Result<Vec<_>>>()?;
+        let mut decorated: Vec<(Vec<Value>, Row)> = rows
+            .into_iter()
+            .map(|r| {
+                let k = keys
+                    .iter()
+                    .map(|(b, _)| b.eval(&r.values, ctx))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok((k, r))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        decorated.sort_by(|(ka, _), (kb, _)| {
+            for ((a, b), (_, asc)) in ka.iter().zip(kb.iter()).zip(keys.iter()) {
+                let o = a.total_cmp(b);
+                let o = if *asc { o } else { o.reverse() };
+                if o != std::cmp::Ordering::Equal {
+                    return o;
+                }
+            }
+            std::cmp::Ordering::Equal
+        });
+        rows = decorated.into_iter().map(|(_, r)| r).collect();
+    }
+
+    // 7. LIMIT
+    if let Some(n) = stmt.limit {
+        rows.truncate(n as usize);
+    }
+
+    // 8. projection
+    project(&items, &layout, rows, ctx)
+}
+
+/// Substitute bare column refs that name a select alias with the aliased
+/// expression (SQL's ORDER BY/HAVING alias visibility).
+fn substitute_aliases(e: &Expr, aliases: &[(String, Expr)]) -> Expr {
+    match e {
+        Expr::Col { table: None, name } => {
+            for (a, ex) in aliases {
+                if a.eq_ignore_ascii_case(name) {
+                    return ex.clone();
+                }
+            }
+            e.clone()
+        }
+        Expr::Unary(op, x) => Expr::Unary(*op, Box::new(substitute_aliases(x, aliases))),
+        Expr::Binary(op, a, b) => Expr::Binary(
+            *op,
+            Box::new(substitute_aliases(a, aliases)),
+            Box::new(substitute_aliases(b, aliases)),
+        ),
+        Expr::Func { name, args } => Expr::Func {
+            name: name.clone(),
+            args: args.iter().map(|a| substitute_aliases(a, aliases)).collect(),
+        },
+        Expr::InList { expr, list, negated } => Expr::InList {
+            expr: Box::new(substitute_aliases(expr, aliases)),
+            list: list.iter().map(|a| substitute_aliases(a, aliases)).collect(),
+            negated: *negated,
+        },
+        Expr::Between { expr, lo, hi, negated } => Expr::Between {
+            expr: Box::new(substitute_aliases(expr, aliases)),
+            lo: Box::new(substitute_aliases(lo, aliases)),
+            hi: Box::new(substitute_aliases(hi, aliases)),
+            negated: *negated,
+        },
+        Expr::IsNull { expr, negated } => Expr::IsNull {
+            expr: Box::new(substitute_aliases(expr, aliases)),
+            negated: *negated,
+        },
+        Expr::Like { expr, pattern, negated } => Expr::Like {
+            expr: Box::new(substitute_aliases(expr, aliases)),
+            pattern: pattern.clone(),
+            negated: *negated,
+        },
+        Expr::Case { arms, else_ } => Expr::Case {
+            arms: arms
+                .iter()
+                .map(|(c, v)| (substitute_aliases(c, aliases), substitute_aliases(v, aliases)))
+                .collect(),
+            else_: else_.as_ref().map(|x| Box::new(substitute_aliases(x, aliases))),
+        },
+        other => other.clone(),
+    }
+}
+
+// ---------------- joins ----------------
+
+fn join_rows(
+    left: &[Row],
+    left_layout: &Layout,
+    right: &[Row],
+    right_layout: &Layout,
+    join: &Join,
+    ctx: &EvalCtx,
+) -> Result<(Vec<Row>, Layout)> {
+    let out_layout = left_layout.join(right_layout);
+    // Equi-join detection: ON a.x = b.y with one side in each layout.
+    let equi = match &join.on {
+        Expr::Binary(Op::Eq, a, b) => {
+            let try_pair = |x: &Expr, y: &Expr| -> Option<(usize, usize)> {
+                if let (Expr::Col { table: tx, name: nx }, Expr::Col { table: ty, name: ny }) =
+                    (x, y)
+                {
+                    let li = left_layout.resolve(tx.as_deref(), nx).ok()?;
+                    let ri = right_layout.resolve(ty.as_deref(), ny).ok()?;
+                    Some((li, ri))
+                } else {
+                    None
+                }
+            };
+            try_pair(a, b).or_else(|| try_pair(b, a).map(|(l, r)| (l, r)))
+        }
+        _ => None,
+    };
+
+    let mut out = Vec::new();
+    if let Some((li, ri)) = equi {
+        // hash join on the right side
+        let mut table: FxHashMap<u64, Vec<usize>> = FxHashMap::default();
+        for (i, r) in right.iter().enumerate() {
+            let v = &r.values[ri];
+            if !v.is_null() {
+                table.entry(v.hash_key()).or_default().push(i);
+            }
+        }
+        for l in left {
+            let lv = &l.values[li];
+            let mut matched = false;
+            if !lv.is_null() {
+                if let Some(cands) = table.get(&lv.hash_key()) {
+                    for &i in cands {
+                        // re-check equality (hash collisions)
+                        if lv.sql_eq(&right[i].values[ri]) == Some(true) {
+                            let mut vals = l.values.clone();
+                            vals.extend(right[i].values.iter().cloned());
+                            out.push(Row::new(vals));
+                            matched = true;
+                        }
+                    }
+                }
+            }
+            if !matched && join.left_outer {
+                let mut vals = l.values.clone();
+                vals.extend(std::iter::repeat(Value::Null).take(right_layout.len()));
+                out.push(Row::new(vals));
+            }
+        }
+    } else {
+        // general nested-loop join on the bound ON expression
+        let b = bind(&join.on, &out_layout)?;
+        for l in left {
+            let mut matched = false;
+            for r in right {
+                let mut vals = l.values.clone();
+                vals.extend(r.values.iter().cloned());
+                if b.matches(&vals, ctx)? {
+                    out.push(Row::new(vals));
+                    matched = true;
+                }
+            }
+            if !matched && join.left_outer {
+                let mut vals = l.values.clone();
+                vals.extend(std::iter::repeat(Value::Null).take(right_layout.len()));
+                out.push(Row::new(vals));
+            }
+        }
+    }
+    Ok((out, out_layout))
+}
+
+// ---------------- aggregation ----------------
+
+/// Aggregate accumulator.
+struct AggState {
+    func: AggFunc,
+    distinct: bool,
+    count: u64,
+    sum: f64,
+    all_int: bool,
+    min: Option<Value>,
+    max: Option<Value>,
+    seen: FxHashMap<u64, Vec<Value>>,
+}
+
+impl AggState {
+    fn new(func: AggFunc, distinct: bool) -> AggState {
+        AggState {
+            func,
+            distinct,
+            count: 0,
+            sum: 0.0,
+            all_int: true,
+            min: None,
+            max: None,
+            seen: FxHashMap::default(),
+        }
+    }
+
+    fn push(&mut self, v: Option<Value>) -> Result<()> {
+        // v = None means COUNT(*) (count the row unconditionally)
+        let Some(v) = v else {
+            self.count += 1;
+            return Ok(());
+        };
+        if v.is_null() {
+            return Ok(()); // aggregates skip NULLs
+        }
+        if self.distinct {
+            let bucket = self.seen.entry(v.hash_key()).or_default();
+            if bucket.iter().any(|x| x.sql_eq(&v) == Some(true)) {
+                return Ok(());
+            }
+            bucket.push(v.clone());
+        }
+        self.count += 1;
+        match self.func {
+            AggFunc::Count => {}
+            AggFunc::Sum | AggFunc::Avg => {
+                let f = v
+                    .as_f64()
+                    .ok_or_else(|| Error::Type(format!("{} on non-numeric {v}", self.func.name())))?;
+                self.sum += f;
+                if !matches!(v, Value::Int(_)) {
+                    self.all_int = false;
+                }
+            }
+            AggFunc::Min => {
+                if self.min.as_ref().map_or(true, |m| v.sql_cmp(m) == Some(std::cmp::Ordering::Less))
+                {
+                    self.min = Some(v);
+                }
+            }
+            AggFunc::Max => {
+                if self
+                    .max
+                    .as_ref()
+                    .map_or(true, |m| v.sql_cmp(m) == Some(std::cmp::Ordering::Greater))
+                {
+                    self.max = Some(v);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&self) -> Value {
+        match self.func {
+            AggFunc::Count => Value::Int(self.count as i64),
+            AggFunc::Sum => {
+                if self.count == 0 {
+                    Value::Null
+                } else if self.all_int && self.sum.abs() < 9e15 {
+                    Value::Int(self.sum as i64)
+                } else {
+                    Value::Float(self.sum)
+                }
+            }
+            AggFunc::Avg => {
+                if self.count == 0 {
+                    Value::Null
+                } else {
+                    Value::Float(self.sum / self.count as f64)
+                }
+            }
+            AggFunc::Min => self.min.clone().unwrap_or(Value::Null),
+            AggFunc::Max => self.max.clone().unwrap_or(Value::Null),
+        }
+    }
+}
+
+/// Rewrite aggregate calls in an expression into references to synthetic
+/// columns `#.aggN`, registering each distinct aggregate in `aggs`.
+fn rewrite_aggregates(e: &Expr, aggs: &mut Vec<Expr>) -> Expr {
+    match e {
+        Expr::Agg { .. } => {
+            let idx = match aggs.iter().position(|a| a == e) {
+                Some(i) => i,
+                None => {
+                    aggs.push(e.clone());
+                    aggs.len() - 1
+                }
+            };
+            Expr::Col { table: Some("#".into()), name: format!("agg{idx}") }
+        }
+        Expr::Unary(op, x) => Expr::Unary(*op, Box::new(rewrite_aggregates(x, aggs))),
+        Expr::Binary(op, a, b) => Expr::Binary(
+            *op,
+            Box::new(rewrite_aggregates(a, aggs)),
+            Box::new(rewrite_aggregates(b, aggs)),
+        ),
+        Expr::Func { name, args } => Expr::Func {
+            name: name.clone(),
+            args: args.iter().map(|a| rewrite_aggregates(a, aggs)).collect(),
+        },
+        Expr::InList { expr, list, negated } => Expr::InList {
+            expr: Box::new(rewrite_aggregates(expr, aggs)),
+            list: list.iter().map(|a| rewrite_aggregates(a, aggs)).collect(),
+            negated: *negated,
+        },
+        Expr::Between { expr, lo, hi, negated } => Expr::Between {
+            expr: Box::new(rewrite_aggregates(expr, aggs)),
+            lo: Box::new(rewrite_aggregates(lo, aggs)),
+            hi: Box::new(rewrite_aggregates(hi, aggs)),
+            negated: *negated,
+        },
+        Expr::IsNull { expr, negated } => Expr::IsNull {
+            expr: Box::new(rewrite_aggregates(expr, aggs)),
+            negated: *negated,
+        },
+        Expr::Like { expr, pattern, negated } => Expr::Like {
+            expr: Box::new(rewrite_aggregates(expr, aggs)),
+            pattern: pattern.clone(),
+            negated: *negated,
+        },
+        Expr::Case { arms, else_ } => Expr::Case {
+            arms: arms
+                .iter()
+                .map(|(c, v)| (rewrite_aggregates(c, aggs), rewrite_aggregates(v, aggs)))
+                .collect(),
+            else_: else_.as_ref().map(|x| Box::new(rewrite_aggregates(x, aggs))),
+        },
+        other => other.clone(),
+    }
+}
+
+type AggOut = (Vec<Row>, Layout, Vec<SelectItem>, Option<Expr>, Vec<(Expr, bool)>);
+
+/// Group rows, compute aggregates, and rewrite items/having/order to refer
+/// to the extended layout (base columns of a representative row + one
+/// synthetic column per aggregate).
+fn aggregate(
+    rows: Vec<Row>,
+    layout: Layout,
+    group_by: &[Expr],
+    items: Vec<SelectItem>,
+    having: Option<Expr>,
+    order_by: Vec<(Expr, bool)>,
+    ctx: &EvalCtx,
+) -> Result<AggOut> {
+    let mut aggs: Vec<Expr> = Vec::new();
+    let items: Vec<SelectItem> = items
+        .into_iter()
+        .map(|it| match it {
+            SelectItem::Expr { expr, alias } => {
+                SelectItem::Expr { expr: rewrite_aggregates(&expr, &mut aggs), alias }
+            }
+            w => w,
+        })
+        .collect();
+    let having = having.map(|h| rewrite_aggregates(&h, &mut aggs));
+    let order_by: Vec<(Expr, bool)> = order_by
+        .into_iter()
+        .map(|(e, asc)| (rewrite_aggregates(&e, &mut aggs), asc))
+        .collect();
+
+    // Bind group keys and aggregate arguments against the base layout.
+    let key_bound: Vec<Bound> =
+        group_by.iter().map(|e| bind(e, &layout)).collect::<Result<Vec<_>>>()?;
+    struct AggSpec {
+        func: AggFunc,
+        distinct: bool,
+        arg: Option<Bound>,
+    }
+    let agg_specs: Vec<AggSpec> = aggs
+        .iter()
+        .map(|a| match a {
+            Expr::Agg { func, arg, distinct } => Ok(AggSpec {
+                func: *func,
+                distinct: *distinct,
+                arg: match arg {
+                    Some(e) => Some(bind(e, &layout)?),
+                    None => None,
+                },
+            }),
+            _ => unreachable!("aggs only collects Agg nodes"),
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    // Group. Key identity uses the rendered total-order form of the values.
+    struct Group {
+        rep: Row,
+        states: Vec<AggState>,
+    }
+    let mut groups: FxHashMap<Vec<u64>, Group> = FxHashMap::default();
+    let mut order: Vec<Vec<u64>> = Vec::new(); // first-seen group order
+    for r in rows {
+        let key: Vec<u64> = key_bound
+            .iter()
+            .map(|b| Ok(b.eval(&r.values, ctx)?.hash_key()))
+            .collect::<Result<Vec<_>>>()?;
+        let g = match groups.get_mut(&key) {
+            Some(g) => g,
+            None => {
+                order.push(key.clone());
+                groups.entry(key).or_insert_with(|| Group {
+                    rep: r.clone(),
+                    states: agg_specs
+                        .iter()
+                        .map(|s| AggState::new(s.func, s.distinct))
+                        .collect(),
+                })
+            }
+        };
+        for (st, spec) in g.states.iter_mut().zip(&agg_specs) {
+            let v = match &spec.arg {
+                Some(b) => Some(b.eval(&r.values, ctx)?),
+                None => None,
+            };
+            st.push(v)?;
+        }
+    }
+    // Global aggregate over empty input still yields one group.
+    if groups.is_empty() && group_by.is_empty() {
+        let key: Vec<u64> = vec![];
+        order.push(key.clone());
+        groups.insert(
+            key,
+            Group {
+                rep: Row::new(vec![Value::Null; layout.len()]),
+                states: agg_specs.iter().map(|s| AggState::new(s.func, s.distinct)).collect(),
+            },
+        );
+    }
+
+    // Extended layout: base columns + synthetic "#.aggN".
+    let mut ext = layout.clone();
+    for i in 0..aggs.len() {
+        ext.cols.push((Some("#".into()), format!("agg{i}")));
+    }
+    let mut out_rows = Vec::with_capacity(groups.len());
+    for key in order {
+        let g = &groups[&key];
+        let mut vals = g.rep.values.clone();
+        vals.extend(g.states.iter().map(|s| s.finish()));
+        out_rows.push(Row::new(vals));
+    }
+    Ok((out_rows, ext, items, having, order_by))
+}
+
+// ---------------- projection ----------------
+
+fn project(
+    items: &[SelectItem],
+    layout: &Layout,
+    rows: Vec<Row>,
+    ctx: &EvalCtx,
+) -> Result<ResultSet> {
+    // Build (output name, bound expr or passthrough index) list.
+    enum Out {
+        Col(usize),
+        Expr(Bound),
+    }
+    let mut names = Vec::new();
+    let mut outs = Vec::new();
+    for (i, it) in items.iter().enumerate() {
+        match it {
+            SelectItem::Wildcard(qual) => {
+                for (ci, (q, n)) in layout.cols.iter().enumerate() {
+                    // hide synthetic aggregate columns from `*`
+                    if q.as_deref() == Some("#") {
+                        continue;
+                    }
+                    let include = match qual {
+                        None => true,
+                        Some(t) => q.as_deref().map_or(false, |x| x.eq_ignore_ascii_case(t)),
+                    };
+                    if include {
+                        names.push(n.clone());
+                        outs.push(Out::Col(ci));
+                    }
+                }
+                if let Some(t) = qual {
+                    if !layout
+                        .cols
+                        .iter()
+                        .any(|(q, _)| q.as_deref().map_or(false, |x| x.eq_ignore_ascii_case(t)))
+                    {
+                        return Err(Error::Type(format!("unknown table '{t}' in {t}.*")));
+                    }
+                }
+            }
+            SelectItem::Expr { expr, alias } => {
+                let name = alias.clone().unwrap_or_else(|| default_name(expr, i));
+                names.push(name);
+                outs.push(Out::Expr(bind(expr, layout)?));
+            }
+        }
+    }
+    let mut out_rows = Vec::with_capacity(rows.len());
+    for r in rows {
+        let mut vals = Vec::with_capacity(outs.len());
+        for o in &outs {
+            vals.push(match o {
+                Out::Col(i) => r.values[*i].clone(),
+                Out::Expr(b) => b.eval(&r.values, ctx)?,
+            });
+        }
+        out_rows.push(Row::new(vals));
+    }
+    Ok(ResultSet { columns: names, rows: out_rows })
+}
+
+/// Output column name for an unaliased item.
+fn default_name(e: &Expr, idx: usize) -> String {
+    match e {
+        Expr::Col { name, .. } => name.clone(),
+        Expr::Func { name, .. } => name.to_lowercase(),
+        // rewritten aggregates keep a stable name via their position
+        _ => format!("expr{idx}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::sql::parse;
+    use crate::storage::sql::Statement;
+
+    fn ctx() -> EvalCtx {
+        EvalCtx { now: 100.0 }
+    }
+
+    fn tasks_input(binding: &str) -> TableInput {
+        // taskid, wid, status, dur
+        let mk = |id: i64, w: i64, st: &str, d: f64| {
+            Row::new(vec![Value::Int(id), Value::Int(w), Value::str(st), Value::Float(d)])
+        };
+        TableInput {
+            binding: binding.into(),
+            columns: vec!["taskid".into(), "wid".into(), "status".into(), "dur".into()],
+            rows: vec![
+                mk(1, 0, "FINISHED", 10.0),
+                mk(2, 0, "RUNNING", 5.0),
+                mk(3, 1, "FINISHED", 20.0),
+                mk(4, 1, "FINISHED", 30.0),
+                mk(5, 2, "READY", 0.0),
+            ],
+        }
+    }
+
+    fn workers_input() -> TableInput {
+        let mk = |id: i64, host: &str| Row::new(vec![Value::Int(id), Value::str(host)]);
+        TableInput {
+            binding: "w".into(),
+            columns: vec!["id".into(), "host".into()],
+            rows: vec![mk(0, "n0"), mk(1, "n1"), mk(3, "n3")],
+        }
+    }
+
+    fn select(sql: &str) -> SelectStmt {
+        match parse(sql).unwrap() {
+            Statement::Select(s) => s,
+            _ => panic!(),
+        }
+    }
+
+    fn run(sql: &str, inputs: Vec<TableInput>) -> ResultSet {
+        run_select(&select(sql), inputs, &ctx()).unwrap()
+    }
+
+    #[test]
+    fn filter_order_limit_project() {
+        let rs = run(
+            "SELECT taskid, dur FROM t WHERE status = 'FINISHED' ORDER BY dur DESC LIMIT 2",
+            vec![tasks_input("t")],
+        );
+        assert_eq!(rs.columns, vec!["taskid", "dur"]);
+        assert_eq!(rs.rows.len(), 2);
+        assert_eq!(rs.rows[0].values[0], Value::Int(4));
+        assert_eq!(rs.rows[1].values[0], Value::Int(3));
+    }
+
+    #[test]
+    fn wildcard_and_qualified_wildcard() {
+        let rs = run("SELECT * FROM t LIMIT 1", vec![tasks_input("t")]);
+        assert_eq!(rs.columns.len(), 4);
+        let rs = run(
+            "SELECT t.* FROM t JOIN w ON t.wid = w.id LIMIT 1",
+            vec![tasks_input("t"), workers_input()],
+        );
+        assert_eq!(rs.columns.len(), 4);
+    }
+
+    #[test]
+    fn group_by_with_aggregates_and_having() {
+        let rs = run(
+            "SELECT wid, COUNT(*) AS n, AVG(dur) a, MAX(dur), MIN(dur), SUM(taskid) \
+             FROM t WHERE status = 'FINISHED' GROUP BY wid HAVING n >= 1 ORDER BY wid",
+            vec![tasks_input("t")],
+        );
+        assert_eq!(rs.rows.len(), 2);
+        // wid 0: one finished task (id 1, dur 10)
+        assert_eq!(rs.rows[0].values[0], Value::Int(0));
+        assert_eq!(rs.rows[0].values[1], Value::Int(1));
+        assert_eq!(rs.rows[0].values[2], Value::Float(10.0));
+        // wid 1: two finished (dur 20,30; ids 3,4)
+        assert_eq!(rs.rows[1].values[1], Value::Int(2));
+        assert_eq!(rs.rows[1].values[2], Value::Float(25.0));
+        assert_eq!(rs.rows[1].values[3], Value::Float(30.0));
+        assert_eq!(rs.rows[1].values[4], Value::Float(20.0));
+        assert_eq!(rs.rows[1].values[5], Value::Int(7));
+    }
+
+    #[test]
+    fn having_filters_groups() {
+        let rs = run(
+            "SELECT wid, COUNT(*) n FROM t GROUP BY wid HAVING COUNT(*) > 1 ORDER BY wid",
+            vec![tasks_input("t")],
+        );
+        assert_eq!(rs.rows.len(), 2); // wid 0 and 1 have 2 tasks each
+    }
+
+    #[test]
+    fn global_aggregate_without_group_by() {
+        let rs = run("SELECT COUNT(*), AVG(dur) FROM t", vec![tasks_input("t")]);
+        assert_eq!(rs.rows.len(), 1);
+        assert_eq!(rs.rows[0].values[0], Value::Int(5));
+        assert_eq!(rs.rows[0].values[1], Value::Float(13.0));
+    }
+
+    #[test]
+    fn global_aggregate_over_empty_input() {
+        let mut t = tasks_input("t");
+        t.rows.clear();
+        let rs = run("SELECT COUNT(*), SUM(dur), MIN(dur) FROM t", vec![t]);
+        assert_eq!(rs.rows.len(), 1);
+        assert_eq!(rs.rows[0].values[0], Value::Int(0));
+        assert_eq!(rs.rows[0].values[1], Value::Null);
+        assert_eq!(rs.rows[0].values[2], Value::Null);
+    }
+
+    #[test]
+    fn count_distinct() {
+        let rs = run("SELECT COUNT(DISTINCT status) FROM t", vec![tasks_input("t")]);
+        assert_eq!(rs.rows[0].values[0], Value::Int(3));
+    }
+
+    #[test]
+    fn inner_join_hash_path() {
+        let rs = run(
+            "SELECT t.taskid, w.host FROM t JOIN w ON t.wid = w.id ORDER BY t.taskid",
+            vec![tasks_input("t"), workers_input()],
+        );
+        // wid=2 task has no worker row -> excluded
+        assert_eq!(rs.rows.len(), 4);
+        assert_eq!(rs.rows[0].values[1], Value::str("n0"));
+    }
+
+    #[test]
+    fn left_join_pads_nulls() {
+        let rs = run(
+            "SELECT t.taskid, w.host FROM t LEFT JOIN w ON t.wid = w.id ORDER BY t.taskid",
+            vec![tasks_input("t"), workers_input()],
+        );
+        assert_eq!(rs.rows.len(), 5);
+        assert_eq!(rs.rows[4].values[1], Value::Null); // wid=2 unmatched
+    }
+
+    #[test]
+    fn nested_loop_join_on_inequality() {
+        let rs = run(
+            "SELECT COUNT(*) FROM t JOIN w ON t.wid < w.id",
+            vec![tasks_input("t"), workers_input()],
+        );
+        // pairs with wid < id: wid0 x {1,3}=2 rows*2 tasks=4, wid1 x {3}=2, wid2 x {3}=1 → 7
+        assert_eq!(rs.rows[0].values[0], Value::Int(7));
+    }
+
+    #[test]
+    fn order_by_alias_and_aggregate() {
+        let rs = run(
+            "SELECT wid, COUNT(*) AS n FROM t GROUP BY wid ORDER BY n DESC, wid ASC",
+            vec![tasks_input("t")],
+        );
+        assert_eq!(rs.rows[0].values[0], Value::Int(0)); // n=2, wid 0 before wid 1
+        assert_eq!(rs.rows[2].values[0], Value::Int(2)); // n=1 last
+    }
+
+    #[test]
+    fn expression_projection_with_now() {
+        let rs = run(
+            "SELECT taskid, NOW() - dur AS remaining FROM t WHERE taskid = 1",
+            vec![tasks_input("t")],
+        );
+        assert_eq!(rs.columns[1], "remaining");
+        assert_eq!(rs.rows[0].values[1], Value::Float(90.0));
+    }
+
+    #[test]
+    fn arity_mismatch_is_engine_error() {
+        let s = select("SELECT * FROM t JOIN w ON t.wid = w.id");
+        assert!(run_select(&s, vec![tasks_input("t")], &ctx()).is_err());
+    }
+}

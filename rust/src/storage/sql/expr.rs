@@ -1,0 +1,678 @@
+//! Expression binding and evaluation.
+//!
+//! Expressions are *bound* once per statement against a column [`Layout`]
+//! (name → position), producing a [`Bound`] tree that evaluates over plain
+//! `&[Value]` slices with no name lookups — scans evaluate the predicate per
+//! row, so this is the engine's innermost loop.
+
+use super::ast::{Expr, Op};
+use crate::storage::value::Value;
+use crate::{Error, Result};
+use regex::Regex;
+use std::cmp::Ordering;
+
+/// Column layout of the row stream an expression runs against. Each column
+/// has an optional binding qualifier (table name or alias) plus its name;
+/// join outputs concatenate the layouts of their inputs.
+#[derive(Clone, Debug, Default)]
+pub struct Layout {
+    pub cols: Vec<(Option<String>, String)>,
+}
+
+impl Layout {
+    pub fn new(cols: Vec<(Option<String>, String)>) -> Layout {
+        Layout { cols }
+    }
+
+    /// Layout of a single table: every column qualified by `binding`.
+    pub fn of_table(binding: &str, col_names: impl IntoIterator<Item = String>) -> Layout {
+        Layout {
+            cols: col_names
+                .into_iter()
+                .map(|c| (Some(binding.to_string()), c))
+                .collect(),
+        }
+    }
+
+    /// Concatenate (join output).
+    pub fn join(&self, other: &Layout) -> Layout {
+        let mut cols = self.cols.clone();
+        cols.extend(other.cols.iter().cloned());
+        Layout { cols }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty()
+    }
+
+    /// Resolve a column reference; ambiguity and misses are errors.
+    pub fn resolve(&self, table: Option<&str>, name: &str) -> Result<usize> {
+        let mut hit = None;
+        for (i, (q, c)) in self.cols.iter().enumerate() {
+            let name_ok = c.eq_ignore_ascii_case(name);
+            let qual_ok = match (table, q) {
+                (Some(t), Some(q)) => t.eq_ignore_ascii_case(q),
+                (Some(_), None) => false,
+                (None, _) => true,
+            };
+            if name_ok && qual_ok {
+                if hit.is_some() {
+                    return Err(Error::Type(format!("ambiguous column '{name}'")));
+                }
+                hit = Some(i);
+            }
+        }
+        hit.ok_or_else(|| {
+            let q = table.map(|t| format!("{t}.")).unwrap_or_default();
+            Error::Type(format!("unknown column '{q}{name}'"))
+        })
+    }
+}
+
+/// Evaluation context (values that are per-statement, not per-row).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalCtx {
+    /// Statement start time in engine seconds; `NOW()` is stable within a
+    /// statement, as in real DBMSs.
+    pub now: f64,
+}
+
+/// Scalar functions known to the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FuncKind {
+    Now,
+    Coalesce,
+    Abs,
+    Round,
+    Length,
+    Upper,
+    Lower,
+    Sqrt,
+    Floor,
+    Ceil,
+    Concat,
+}
+
+/// A bound (name-resolved, pattern-compiled) expression.
+pub enum Bound {
+    Lit(Value),
+    Col(usize),
+    /// Fast path for `column <op> literal` — the scheduler's hot predicates
+    /// (`workerid = i AND status = 'READY'`) evaluate without cloning
+    /// either side.
+    ColCmp { col: usize, op: Op, lit: Value },
+    Unary(Op, Box<Bound>),
+    Binary(Op, Box<Bound>, Box<Bound>),
+    Func(FuncKindBox),
+    InList { expr: Box<Bound>, list: Vec<Bound>, negated: bool },
+    Between { expr: Box<Bound>, lo: Box<Bound>, hi: Box<Bound>, negated: bool },
+    IsNull { expr: Box<Bound>, negated: bool },
+    Like { expr: Box<Bound>, re: Regex, negated: bool },
+    Case { arms: Vec<(Bound, Bound)>, else_: Option<Box<Bound>> },
+}
+
+/// Function call payload (kept out of the enum for readability).
+pub struct FuncKindBox {
+    kind: FuncKind,
+    args: Vec<Bound>,
+}
+
+/// Bind `expr` against `layout`. Aggregate nodes must have been rewritten
+/// into column references beforehand (see `exec::rewrite_aggregates`);
+/// encountering one here is an internal error.
+pub fn bind(expr: &Expr, layout: &Layout) -> Result<Bound> {
+    Ok(match expr {
+        Expr::Lit(v) => Bound::Lit(v.clone()),
+        Expr::Col { table, name } => Bound::Col(layout.resolve(table.as_deref(), name)?),
+        Expr::Unary(op, e) => Bound::Unary(*op, Box::new(bind(e, layout)?)),
+        Expr::Binary(op, a, b) => {
+            // comparison against a literal compiles to the no-clone form
+            if matches!(op, Op::Eq | Op::Ne | Op::Lt | Op::Le | Op::Gt | Op::Ge) {
+                match (a.as_ref(), b.as_ref()) {
+                    (Expr::Col { table, name }, Expr::Lit(v)) => {
+                        return Ok(Bound::ColCmp {
+                            col: layout.resolve(table.as_deref(), name)?,
+                            op: *op,
+                            lit: v.clone(),
+                        })
+                    }
+                    (Expr::Lit(v), Expr::Col { table, name }) => {
+                        return Ok(Bound::ColCmp {
+                            col: layout.resolve(table.as_deref(), name)?,
+                            op: flip(*op),
+                            lit: v.clone(),
+                        })
+                    }
+                    _ => {}
+                }
+            }
+            Bound::Binary(*op, Box::new(bind(a, layout)?), Box::new(bind(b, layout)?))
+        }
+        Expr::Func { name, args } => {
+            let kind = match name.as_str() {
+                "NOW" => FuncKind::Now,
+                "COALESCE" | "IFNULL" => FuncKind::Coalesce,
+                "ABS" => FuncKind::Abs,
+                "ROUND" => FuncKind::Round,
+                "LENGTH" => FuncKind::Length,
+                "UPPER" => FuncKind::Upper,
+                "LOWER" => FuncKind::Lower,
+                "SQRT" => FuncKind::Sqrt,
+                "FLOOR" => FuncKind::Floor,
+                "CEIL" => FuncKind::Ceil,
+                "CONCAT" => FuncKind::Concat,
+                other => return Err(Error::Type(format!("unknown function {other}()"))),
+            };
+            let args = args.iter().map(|a| bind(a, layout)).collect::<Result<Vec<_>>>()?;
+            Bound::Func(FuncKindBox { kind, args })
+        }
+        Expr::Agg { .. } => {
+            return Err(Error::Type(
+                "aggregate in row context (missing GROUP BY rewrite)".into(),
+            ))
+        }
+        Expr::InList { expr, list, negated } => Bound::InList {
+            expr: Box::new(bind(expr, layout)?),
+            list: list.iter().map(|e| bind(e, layout)).collect::<Result<Vec<_>>>()?,
+            negated: *negated,
+        },
+        Expr::Between { expr, lo, hi, negated } => Bound::Between {
+            expr: Box::new(bind(expr, layout)?),
+            lo: Box::new(bind(lo, layout)?),
+            hi: Box::new(bind(hi, layout)?),
+            negated: *negated,
+        },
+        Expr::IsNull { expr, negated } => {
+            Bound::IsNull { expr: Box::new(bind(expr, layout)?), negated: *negated }
+        }
+        Expr::Like { expr, pattern, negated } => Bound::Like {
+            expr: Box::new(bind(expr, layout)?),
+            re: like_to_regex(pattern)?,
+            negated: *negated,
+        },
+        Expr::Case { arms, else_ } => Bound::Case {
+            arms: arms
+                .iter()
+                .map(|(c, v)| Ok((bind(c, layout)?, bind(v, layout)?)))
+                .collect::<Result<Vec<_>>>()?,
+            else_: match else_ {
+                Some(e) => Some(Box::new(bind(e, layout)?)),
+                None => None,
+            },
+        },
+    })
+}
+
+/// Mirror a comparison operator (for `lit op col` → `col op' lit`).
+fn flip(op: Op) -> Op {
+    match op {
+        Op::Lt => Op::Gt,
+        Op::Le => Op::Ge,
+        Op::Gt => Op::Lt,
+        Op::Ge => Op::Le,
+        other => other,
+    }
+}
+
+/// Translate a SQL LIKE pattern to an anchored regex.
+fn like_to_regex(pattern: &str) -> Result<Regex> {
+    let mut re = String::with_capacity(pattern.len() + 8);
+    re.push('^');
+    for c in pattern.chars() {
+        match c {
+            '%' => re.push_str(".*"),
+            '_' => re.push('.'),
+            c => re.push_str(&regex::escape(&c.to_string())),
+        }
+    }
+    re.push('$');
+    Regex::new(&re).map_err(|e| Error::Parse(format!("bad LIKE pattern '{pattern}': {e}")))
+}
+
+impl Bound {
+    /// Evaluate over one row.
+    pub fn eval(&self, row: &[Value], ctx: &EvalCtx) -> Result<Value> {
+        Ok(match self {
+            Bound::Lit(v) => v.clone(),
+            Bound::Col(i) => row[*i].clone(),
+            Bound::ColCmp { col, op, lit } => match row[*col].sql_cmp(lit) {
+                None => Value::Null,
+                Some(o) => Value::Bool(match op {
+                    Op::Eq => o == Ordering::Equal,
+                    Op::Ne => o != Ordering::Equal,
+                    Op::Lt => o == Ordering::Less,
+                    Op::Le => o != Ordering::Greater,
+                    Op::Gt => o == Ordering::Greater,
+                    Op::Ge => o != Ordering::Less,
+                    _ => unreachable!("non-comparison in ColCmp"),
+                }),
+            },
+            Bound::Unary(op, e) => {
+                let v = e.eval(row, ctx)?;
+                match op {
+                    Op::Not => match truthy(&v)? {
+                        None => Value::Null,
+                        Some(b) => Value::Bool(!b),
+                    },
+                    Op::Neg => match v {
+                        Value::Null => Value::Null,
+                        Value::Int(i) => Value::Int(-i),
+                        Value::Float(f) => Value::Float(-f),
+                        other => return Err(Error::Type(format!("cannot negate {other}"))),
+                    },
+                    other => return Err(Error::Type(format!("bad unary op {other:?}"))),
+                }
+            }
+            Bound::Binary(op, a, b) => {
+                match op {
+                    Op::And => {
+                        // 3VL short-circuit: false AND x = false
+                        let l = truthy(&a.eval(row, ctx)?)?;
+                        if l == Some(false) {
+                            return Ok(Value::Bool(false));
+                        }
+                        let r = truthy(&b.eval(row, ctx)?)?;
+                        return Ok(match (l, r) {
+                            (_, Some(false)) => Value::Bool(false),
+                            (Some(true), Some(true)) => Value::Bool(true),
+                            _ => Value::Null,
+                        });
+                    }
+                    Op::Or => {
+                        let l = truthy(&a.eval(row, ctx)?)?;
+                        if l == Some(true) {
+                            return Ok(Value::Bool(true));
+                        }
+                        let r = truthy(&b.eval(row, ctx)?)?;
+                        return Ok(match (l, r) {
+                            (_, Some(true)) => Value::Bool(true),
+                            (Some(false), Some(false)) => Value::Bool(false),
+                            _ => Value::Null,
+                        });
+                    }
+                    _ => {}
+                }
+                let l = a.eval(row, ctx)?;
+                let r = b.eval(row, ctx)?;
+                match op {
+                    Op::Add | Op::Sub | Op::Mul | Op::Div | Op::Mod => arith(*op, &l, &r)?,
+                    Op::Eq | Op::Ne | Op::Lt | Op::Le | Op::Gt | Op::Ge => {
+                        match l.sql_cmp(&r) {
+                            None => Value::Null,
+                            Some(o) => Value::Bool(match op {
+                                Op::Eq => o == Ordering::Equal,
+                                Op::Ne => o != Ordering::Equal,
+                                Op::Lt => o == Ordering::Less,
+                                Op::Le => o != Ordering::Greater,
+                                Op::Gt => o == Ordering::Greater,
+                                Op::Ge => o != Ordering::Less,
+                                _ => unreachable!(),
+                            }),
+                        }
+                    }
+                    other => return Err(Error::Type(format!("bad binary op {other:?}"))),
+                }
+            }
+            Bound::Func(f) => eval_func(f, row, ctx)?,
+            Bound::InList { expr, list, negated } => {
+                let v = expr.eval(row, ctx)?;
+                if v.is_null() {
+                    return Ok(Value::Null);
+                }
+                let mut saw_null = false;
+                let mut found = false;
+                for item in list {
+                    let iv = item.eval(row, ctx)?;
+                    match v.sql_eq(&iv) {
+                        None => saw_null = true,
+                        Some(true) => {
+                            found = true;
+                            break;
+                        }
+                        Some(false) => {}
+                    }
+                }
+                if found {
+                    Value::Bool(!negated)
+                } else if saw_null {
+                    Value::Null
+                } else {
+                    Value::Bool(*negated)
+                }
+            }
+            Bound::Between { expr, lo, hi, negated } => {
+                let v = expr.eval(row, ctx)?;
+                let l = lo.eval(row, ctx)?;
+                let h = hi.eval(row, ctx)?;
+                match (v.sql_cmp(&l), v.sql_cmp(&h)) {
+                    (Some(a), Some(b)) => {
+                        let inside = a != Ordering::Less && b != Ordering::Greater;
+                        Value::Bool(inside != *negated)
+                    }
+                    _ => Value::Null,
+                }
+            }
+            Bound::IsNull { expr, negated } => {
+                let v = expr.eval(row, ctx)?;
+                Value::Bool(v.is_null() != *negated)
+            }
+            Bound::Like { expr, re, negated } => {
+                let v = expr.eval(row, ctx)?;
+                match v {
+                    Value::Null => Value::Null,
+                    Value::Str(s) => Value::Bool(re.is_match(&s) != *negated),
+                    other => return Err(Error::Type(format!("LIKE on non-string {other}"))),
+                }
+            }
+            Bound::Case { arms, else_ } => {
+                for (c, v) in arms {
+                    if truthy(&c.eval(row, ctx)?)? == Some(true) {
+                        return v.eval(row, ctx);
+                    }
+                }
+                match else_ {
+                    Some(e) => e.eval(row, ctx)?,
+                    None => Value::Null,
+                }
+            }
+        })
+    }
+
+    /// Evaluate as a WHERE predicate: NULL counts as not-matching.
+    pub fn matches(&self, row: &[Value], ctx: &EvalCtx) -> Result<bool> {
+        Ok(truthy(&self.eval(row, ctx)?)? == Some(true))
+    }
+}
+
+/// SQL truthiness: Bool→Some(b), Null→None, anything else is a type error.
+fn truthy(v: &Value) -> Result<Option<bool>> {
+    match v {
+        Value::Bool(b) => Ok(Some(*b)),
+        Value::Null => Ok(None),
+        other => Err(Error::Type(format!("expected boolean, got {other}"))),
+    }
+}
+
+fn arith(op: Op, l: &Value, r: &Value) -> Result<Value> {
+    if l.is_null() || r.is_null() {
+        return Ok(Value::Null);
+    }
+    // CONCAT-style string + is not supported; arithmetic is numeric only.
+    let both_int = matches!(l, Value::Int(_)) && matches!(r, Value::Int(_));
+    let (a, b) = match (l.as_f64(), r.as_f64()) {
+        (Some(a), Some(b)) => (a, b),
+        _ => return Err(Error::Type(format!("arithmetic on non-numeric: {l} {op:?} {r}"))),
+    };
+    Ok(match op {
+        Op::Add if both_int => Value::Int(l.as_i64().unwrap().wrapping_add(r.as_i64().unwrap())),
+        Op::Sub if both_int => Value::Int(l.as_i64().unwrap().wrapping_sub(r.as_i64().unwrap())),
+        Op::Mul if both_int => Value::Int(l.as_i64().unwrap().wrapping_mul(r.as_i64().unwrap())),
+        Op::Add => Value::Float(a + b),
+        Op::Sub => Value::Float(a - b),
+        Op::Mul => Value::Float(a * b),
+        // Division is always float (MySQL semantics); x/0 is NULL.
+        Op::Div => {
+            if b == 0.0 {
+                Value::Null
+            } else {
+                Value::Float(a / b)
+            }
+        }
+        Op::Mod => {
+            if both_int {
+                let bi = r.as_i64().unwrap();
+                if bi == 0 {
+                    Value::Null
+                } else {
+                    Value::Int(l.as_i64().unwrap().rem_euclid(bi))
+                }
+            } else if b == 0.0 {
+                Value::Null
+            } else {
+                Value::Float(a.rem_euclid(b))
+            }
+        }
+        _ => unreachable!(),
+    })
+}
+
+fn eval_func(f: &FuncKindBox, row: &[Value], ctx: &EvalCtx) -> Result<Value> {
+    let need = |n: usize| -> Result<()> {
+        if f.args.len() == n {
+            Ok(())
+        } else {
+            Err(Error::Type(format!("{:?} wants {n} args, got {}", f.kind, f.args.len())))
+        }
+    };
+    Ok(match f.kind {
+        FuncKind::Now => {
+            need(0)?;
+            Value::Float(ctx.now)
+        }
+        FuncKind::Coalesce => {
+            for a in &f.args {
+                let v = a.eval(row, ctx)?;
+                if !v.is_null() {
+                    return Ok(v);
+                }
+            }
+            Value::Null
+        }
+        FuncKind::Abs => {
+            need(1)?;
+            match f.args[0].eval(row, ctx)? {
+                Value::Null => Value::Null,
+                Value::Int(i) => Value::Int(i.abs()),
+                Value::Float(x) => Value::Float(x.abs()),
+                other => return Err(Error::Type(format!("ABS on {other}"))),
+            }
+        }
+        FuncKind::Round => {
+            if f.args.is_empty() || f.args.len() > 2 {
+                return Err(Error::Type("ROUND wants 1 or 2 args".into()));
+            }
+            let v = f.args[0].eval(row, ctx)?;
+            let digits = if f.args.len() == 2 {
+                f.args[1].eval(row, ctx)?.as_i64().unwrap_or(0)
+            } else {
+                0
+            };
+            match v {
+                Value::Null => Value::Null,
+                v => {
+                    let x = v
+                        .as_f64()
+                        .ok_or_else(|| Error::Type(format!("ROUND on {v}")))?;
+                    let m = 10f64.powi(digits as i32);
+                    Value::Float((x * m).round() / m)
+                }
+            }
+        }
+        FuncKind::Length => {
+            need(1)?;
+            match f.args[0].eval(row, ctx)? {
+                Value::Null => Value::Null,
+                Value::Str(s) => Value::Int(s.chars().count() as i64),
+                other => return Err(Error::Type(format!("LENGTH on {other}"))),
+            }
+        }
+        FuncKind::Upper | FuncKind::Lower => {
+            need(1)?;
+            match f.args[0].eval(row, ctx)? {
+                Value::Null => Value::Null,
+                Value::Str(s) => {
+                    if f.kind == FuncKind::Upper {
+                        Value::str(s.to_uppercase())
+                    } else {
+                        Value::str(s.to_lowercase())
+                    }
+                }
+                other => return Err(Error::Type(format!("case function on {other}"))),
+            }
+        }
+        FuncKind::Sqrt | FuncKind::Floor | FuncKind::Ceil => {
+            need(1)?;
+            let v = f.args[0].eval(row, ctx)?;
+            if v.is_null() {
+                return Ok(Value::Null);
+            }
+            let x = v
+                .as_f64()
+                .ok_or_else(|| Error::Type(format!("{:?} on {v}", f.kind)))?;
+            match f.kind {
+                FuncKind::Sqrt => Value::Float(x.sqrt()),
+                FuncKind::Floor => Value::Float(x.floor()),
+                FuncKind::Ceil => Value::Float(x.ceil()),
+                _ => unreachable!(),
+            }
+        }
+        FuncKind::Concat => {
+            let mut s = String::new();
+            for a in &f.args {
+                let v = a.eval(row, ctx)?;
+                if v.is_null() {
+                    return Ok(Value::Null);
+                }
+                s.push_str(&v.to_string());
+            }
+            Value::str(s)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::sql::parse;
+    use crate::storage::sql::Statement;
+
+    fn ctx() -> EvalCtx {
+        EvalCtx { now: 1000.0 }
+    }
+
+    /// Parse `SELECT <expr> FROM t`, bind against the given layout, eval.
+    fn eval_expr(src: &str, layout: &Layout, row: &[Value]) -> Result<Value> {
+        let sql = format!("SELECT {src} FROM t");
+        let stmt = parse(&sql)?;
+        let e = match stmt {
+            Statement::Select(s) => match s.items.into_iter().next().unwrap() {
+                super::super::ast::SelectItem::Expr { expr, .. } => expr,
+                _ => panic!(),
+            },
+            _ => panic!(),
+        };
+        bind(&e, layout)?.eval(row, &ctx())
+    }
+
+    fn layout() -> Layout {
+        Layout::of_table("t", ["a", "b", "s"].map(String::from))
+    }
+
+    #[test]
+    fn arithmetic_int_float_and_nulls() {
+        let l = layout();
+        let row = [Value::Int(6), Value::Float(1.5), Value::str("READY")];
+        assert_eq!(eval_expr("a + 2", &l, &row).unwrap(), Value::Int(8));
+        assert_eq!(eval_expr("a + b", &l, &row).unwrap(), Value::Float(7.5));
+        assert_eq!(eval_expr("a / 4", &l, &row).unwrap(), Value::Float(1.5));
+        assert_eq!(eval_expr("a / 0", &l, &row).unwrap(), Value::Null);
+        assert_eq!(eval_expr("a % 4", &l, &row).unwrap(), Value::Int(2));
+        assert_eq!(eval_expr("NULL + 1", &l, &row).unwrap(), Value::Null);
+        assert_eq!(eval_expr("-a", &l, &row).unwrap(), Value::Int(-6));
+    }
+
+    #[test]
+    fn comparisons_and_3vl() {
+        let l = layout();
+        let row = [Value::Int(6), Value::Null, Value::str("READY")];
+        assert_eq!(eval_expr("a > 5", &l, &row).unwrap(), Value::Bool(true));
+        assert_eq!(eval_expr("b > 5", &l, &row).unwrap(), Value::Null);
+        // false AND null = false; true OR null = true
+        assert_eq!(eval_expr("a < 5 AND b > 5", &l, &row).unwrap(), Value::Bool(false));
+        assert_eq!(eval_expr("a > 5 OR b > 5", &l, &row).unwrap(), Value::Bool(true));
+        assert_eq!(eval_expr("a > 5 AND b > 5", &l, &row).unwrap(), Value::Null);
+        assert_eq!(eval_expr("NOT (a > 5)", &l, &row).unwrap(), Value::Bool(false));
+    }
+
+    #[test]
+    fn predicates() {
+        let l = layout();
+        let row = [Value::Int(3), Value::Float(2.0), Value::str("READY")];
+        assert_eq!(eval_expr("a IN (1, 3, 5)", &l, &row).unwrap(), Value::Bool(true));
+        assert_eq!(eval_expr("a NOT IN (1, 3)", &l, &row).unwrap(), Value::Bool(false));
+        assert_eq!(eval_expr("a BETWEEN 1 AND 5", &l, &row).unwrap(), Value::Bool(true));
+        assert_eq!(eval_expr("a NOT BETWEEN 4 AND 5", &l, &row).unwrap(), Value::Bool(true));
+        assert_eq!(eval_expr("s LIKE 'REA%'", &l, &row).unwrap(), Value::Bool(true));
+        assert_eq!(eval_expr("s LIKE 'R_A%'", &l, &row).unwrap(), Value::Bool(true));
+        assert_eq!(eval_expr("s NOT LIKE '%Z'", &l, &row).unwrap(), Value::Bool(true));
+        assert_eq!(eval_expr("b IS NULL", &l, &row).unwrap(), Value::Bool(false));
+        assert_eq!(eval_expr("b IS NOT NULL", &l, &row).unwrap(), Value::Bool(true));
+    }
+
+    #[test]
+    fn like_escapes_regex_metachars() {
+        let l = layout();
+        let row = [Value::Int(0), Value::Float(0.0), Value::str("a.b(c)")];
+        assert_eq!(eval_expr("s LIKE 'a.b(c)'", &l, &row).unwrap(), Value::Bool(true));
+        assert_eq!(eval_expr("s LIKE 'axb(c)'", &l, &row).unwrap(), Value::Bool(false));
+    }
+
+    #[test]
+    fn functions() {
+        let l = layout();
+        let row = [Value::Int(-3), Value::Null, Value::str("Ready")];
+        assert_eq!(eval_expr("NOW()", &l, &row).unwrap(), Value::Float(1000.0));
+        assert_eq!(eval_expr("ABS(a)", &l, &row).unwrap(), Value::Int(3));
+        assert_eq!(eval_expr("COALESCE(b, a, 9)", &l, &row).unwrap(), Value::Int(-3));
+        assert_eq!(eval_expr("LENGTH(s)", &l, &row).unwrap(), Value::Int(5));
+        assert_eq!(eval_expr("UPPER(s)", &l, &row).unwrap(), Value::str("READY"));
+        assert_eq!(eval_expr("ROUND(2.567, 1)", &l, &row).unwrap(), Value::Float(2.6));
+        assert_eq!(eval_expr("SQRT(9)", &l, &row).unwrap(), Value::Float(3.0));
+        assert_eq!(
+            eval_expr("CONCAT('x=', a)", &l, &row).unwrap(),
+            Value::str("x=-3")
+        );
+    }
+
+    #[test]
+    fn case_expr_eval() {
+        let l = layout();
+        let row = [Value::Int(0), Value::Float(0.0), Value::str("x")];
+        assert_eq!(
+            eval_expr("CASE WHEN a > 0 THEN 'p' WHEN a < 0 THEN 'n' ELSE 'z' END", &l, &row)
+                .unwrap(),
+            Value::str("z")
+        );
+    }
+
+    #[test]
+    fn resolution_errors() {
+        let l = Layout::new(vec![
+            (Some("a".into()), "x".into()),
+            (Some("b".into()), "x".into()),
+        ]);
+        // unqualified 'x' is ambiguous
+        assert!(l.resolve(None, "x").is_err());
+        assert_eq!(l.resolve(Some("a"), "x").unwrap(), 0);
+        assert_eq!(l.resolve(Some("b"), "x").unwrap(), 1);
+        assert!(l.resolve(Some("c"), "x").is_err());
+        assert!(l.resolve(None, "nope").is_err());
+    }
+
+    #[test]
+    fn where_matches_treats_null_as_false() {
+        let l = layout();
+        let row = [Value::Int(1), Value::Null, Value::str("x")];
+        let sql = parse("SELECT * FROM t WHERE b > 0").unwrap();
+        let w = match sql {
+            Statement::Select(s) => s.where_.unwrap(),
+            _ => panic!(),
+        };
+        let b = bind(&w, &l).unwrap();
+        assert!(!b.matches(&row, &ctx()).unwrap());
+    }
+}

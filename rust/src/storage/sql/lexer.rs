@@ -1,0 +1,228 @@
+//! SQL tokenizer.
+
+use crate::{Error, Result};
+
+/// A lexical token. Keywords are not distinguished here — the parser
+/// matches identifiers case-insensitively against keyword names, which keeps
+/// the lexer small and lets column names shadow nothing.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    /// Symbols: ( ) , . * = != <> < <= > >= + - / %
+    Sym(&'static str),
+    Eof,
+}
+
+impl Tok {
+    pub fn describe(&self) -> String {
+        match self {
+            Tok::Ident(s) => format!("identifier '{s}'"),
+            Tok::Int(i) => format!("integer {i}"),
+            Tok::Float(f) => format!("float {f}"),
+            Tok::Str(s) => format!("string '{s}'"),
+            Tok::Sym(s) => format!("'{s}'"),
+            Tok::Eof => "end of input".into(),
+        }
+    }
+}
+
+/// Tokenize a full statement. Positions are tracked for error messages.
+pub fn lex(input: &str) -> Result<Vec<Tok>> {
+    let b = input.as_bytes();
+    let mut i = 0;
+    let mut out = Vec::new();
+    while i < b.len() {
+        let c = b[i] as char;
+        match c {
+            ' ' | '\t' | '\n' | '\r' => i += 1,
+            '-' if i + 1 < b.len() && b[i + 1] == b'-' => {
+                // line comment
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            '\'' => {
+                // string literal with '' escaping
+                let mut s = String::new();
+                i += 1;
+                loop {
+                    if i >= b.len() {
+                        return Err(Error::Parse("unterminated string literal".into()));
+                    }
+                    if b[i] == b'\'' {
+                        if i + 1 < b.len() && b[i + 1] == b'\'' {
+                            s.push('\'');
+                            i += 2;
+                        } else {
+                            i += 1;
+                            break;
+                        }
+                    } else {
+                        // handle multi-byte UTF-8 safely by slicing chars
+                        let ch_len = utf8_len(b[i]);
+                        s.push_str(&input[i..i + ch_len]);
+                        i += ch_len;
+                    }
+                }
+                out.push(Tok::Str(s));
+            }
+            '0'..='9' => {
+                let start = i;
+                while i < b.len() && (b[i] as char).is_ascii_digit() {
+                    i += 1;
+                }
+                let mut is_float = false;
+                if i < b.len() && b[i] == b'.' && i + 1 < b.len() && (b[i + 1] as char).is_ascii_digit()
+                {
+                    is_float = true;
+                    i += 1;
+                    while i < b.len() && (b[i] as char).is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+                if i < b.len() && (b[i] == b'e' || b[i] == b'E') {
+                    let mut j = i + 1;
+                    if j < b.len() && (b[j] == b'+' || b[j] == b'-') {
+                        j += 1;
+                    }
+                    if j < b.len() && (b[j] as char).is_ascii_digit() {
+                        is_float = true;
+                        i = j;
+                        while i < b.len() && (b[i] as char).is_ascii_digit() {
+                            i += 1;
+                        }
+                    }
+                }
+                let text = &input[start..i];
+                if is_float {
+                    out.push(Tok::Float(text.parse().map_err(|e| {
+                        Error::Parse(format!("bad float '{text}': {e}"))
+                    })?));
+                } else {
+                    out.push(Tok::Int(text.parse().map_err(|e| {
+                        Error::Parse(format!("bad integer '{text}': {e}"))
+                    })?));
+                }
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len() {
+                    let c = b[i] as char;
+                    if c.is_ascii_alphanumeric() || c == '_' {
+                        i += 1;
+                    } else {
+                        break;
+                    }
+                }
+                out.push(Tok::Ident(input[start..i].to_string()));
+            }
+            '!' if i + 1 < b.len() && b[i + 1] == b'=' => {
+                out.push(Tok::Sym("!="));
+                i += 2;
+            }
+            '<' => {
+                if i + 1 < b.len() && b[i + 1] == b'=' {
+                    out.push(Tok::Sym("<="));
+                    i += 2;
+                } else if i + 1 < b.len() && b[i + 1] == b'>' {
+                    out.push(Tok::Sym("!="));
+                    i += 2;
+                } else {
+                    out.push(Tok::Sym("<"));
+                    i += 1;
+                }
+            }
+            '>' => {
+                if i + 1 < b.len() && b[i + 1] == b'=' {
+                    out.push(Tok::Sym(">="));
+                    i += 2;
+                } else {
+                    out.push(Tok::Sym(">"));
+                    i += 1;
+                }
+            }
+            '(' | ')' | ',' | '.' | '*' | '=' | '+' | '-' | '/' | '%' | ';' => {
+                out.push(Tok::Sym(match c {
+                    '(' => "(",
+                    ')' => ")",
+                    ',' => ",",
+                    '.' => ".",
+                    '*' => "*",
+                    '=' => "=",
+                    '+' => "+",
+                    '-' => "-",
+                    '/' => "/",
+                    '%' => "%",
+                    ';' => ";",
+                    _ => unreachable!(),
+                }));
+                i += 1;
+            }
+            other => {
+                return Err(Error::Parse(format!(
+                    "unexpected character '{other}' at byte {i}"
+                )))
+            }
+        }
+    }
+    out.push(Tok::Eof);
+    Ok(out)
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lex_basic_statement() {
+        let toks = lex("SELECT a, b FROM t WHERE x >= 1.5 AND s = 'it''s'").unwrap();
+        assert!(toks.contains(&Tok::Ident("SELECT".into())));
+        assert!(toks.contains(&Tok::Sym(">=")));
+        assert!(toks.contains(&Tok::Float(1.5)));
+        assert!(toks.contains(&Tok::Str("it's".into())));
+        assert_eq!(*toks.last().unwrap(), Tok::Eof);
+    }
+
+    #[test]
+    fn lex_numbers() {
+        assert_eq!(lex("42").unwrap()[0], Tok::Int(42));
+        assert_eq!(lex("4.25").unwrap()[0], Tok::Float(4.25));
+        assert_eq!(lex("1e3").unwrap()[0], Tok::Float(1000.0));
+        assert_eq!(lex("2.5e-2").unwrap()[0], Tok::Float(0.025));
+        // '4.' is Int then Sym(".") — qualified-name dots must survive
+        let t = lex("t.col").unwrap();
+        assert_eq!(t[0], Tok::Ident("t".into()));
+        assert_eq!(t[1], Tok::Sym("."));
+        assert_eq!(t[2], Tok::Ident("col".into()));
+    }
+
+    #[test]
+    fn lex_comments_and_neq_forms() {
+        let t = lex("a <> b -- comment\n != c").unwrap();
+        assert_eq!(t.iter().filter(|x| **x == Tok::Sym("!=")).count(), 2);
+    }
+
+    #[test]
+    fn lex_rejects_garbage_and_unterminated() {
+        assert!(lex("select #").is_err());
+        assert!(lex("'abc").is_err());
+    }
+
+    #[test]
+    fn lex_utf8_in_strings() {
+        let t = lex("'café ✓'").unwrap();
+        assert_eq!(t[0], Tok::Str("café ✓".into()));
+    }
+}

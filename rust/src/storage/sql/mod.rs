@@ -1,0 +1,59 @@
+//! SQL dialect for the engine.
+//!
+//! A deliberately small but real subset, enough for everything the paper's
+//! workloads need: the scheduling point queries (`select/update ... where
+//! worker_id = i`), the Table-2 steering analytics (multi-join, GROUP BY,
+//! HAVING, ORDER BY, subquery-free aggregates), and DDL for the d-Chiron
+//! database:
+//!
+//! ```sql
+//! CREATE TABLE t (a INT NOT NULL, b FLOAT, c TEXT)
+//!   [PARTITION BY HASH(a) PARTITIONS n] [PRIMARY KEY (a)] [INDEX (c)]
+//! INSERT INTO t (a, b) VALUES (1, 2.0), (3, 4.0)
+//! SELECT x.a, COUNT(*) AS n FROM t x JOIN u ON x.a = u.a
+//!   WHERE b > 1 AND c LIKE 'RE%' GROUP BY x.a HAVING n > 2
+//!   ORDER BY n DESC LIMIT 5
+//! UPDATE t SET b = b + 1 WHERE a IN (1, 2) [ORDER BY a] [LIMIT k] [RETURNING a, b]
+//! DELETE FROM t WHERE ...
+//! ```
+//!
+//! `UPDATE ... LIMIT k RETURNING` is the atomic task-dequeue primitive
+//! (equivalent to `SELECT ... FOR UPDATE` + `UPDATE` in MySQL Cluster): a
+//! worker claims `k` READY tasks and learns which ones in a single
+//! partition-local transaction.
+
+pub mod ast;
+pub mod exec;
+pub mod expr;
+pub mod lexer;
+pub mod parser;
+
+pub use ast::*;
+pub use parser::parse_statement;
+
+use crate::Result;
+
+/// Parse exactly one statement from `sql`.
+pub fn parse(sql: &str) -> Result<Statement> {
+    parse_statement(sql)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_smoke() {
+        for sql in [
+            "SELECT * FROM workqueue",
+            "select taskid, status from workqueue where workerid = 3 and status = 'READY' order by taskid limit 16",
+            "INSERT INTO t (a,b) VALUES (1, 'x'), (2, 'y')",
+            "UPDATE t SET s = 'RUNNING', st = NOW() WHERE wid = 2 AND s = 'READY' ORDER BY id LIMIT 4 RETURNING id, cmd",
+            "DELETE FROM t WHERE a BETWEEN 1 AND 5",
+            "CREATE TABLE t (a INT NOT NULL, b FLOAT, c TEXT) PARTITION BY HASH(a) PARTITIONS 8 PRIMARY KEY (a) INDEX (c)",
+            "SELECT w.node, COUNT(*) AS n, AVG(t.dur) FROM tasks t JOIN workers w ON t.wid = w.id WHERE t.endt >= NOW() - 60 GROUP BY w.node HAVING COUNT(*) > 1 ORDER BY n DESC, w.node ASC LIMIT 10",
+        ] {
+            parse(sql).unwrap_or_else(|e| panic!("failed on {sql}: {e}"));
+        }
+    }
+}

@@ -1,0 +1,780 @@
+//! Recursive-descent SQL parser with precedence climbing for expressions.
+
+use super::ast::*;
+use super::lexer::{lex, Tok};
+use crate::storage::value::{ColumnType, Value};
+use crate::{Error, Result};
+
+/// Parse exactly one statement (a trailing `;` is tolerated).
+pub fn parse_statement(sql: &str) -> Result<Statement> {
+    let toks = lex(sql)?;
+    let mut p = Parser { toks, pos: 0 };
+    let stmt = p.statement()?;
+    p.eat_sym(";"); // optional
+    p.expect_eof()?;
+    Ok(stmt)
+}
+
+struct Parser {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos]
+    }
+
+    fn next(&mut self) -> Tok {
+        let t = self.toks[self.pos].clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    /// Case-insensitive keyword check without consuming.
+    fn peek_kw(&self, kw: &str) -> bool {
+        matches!(self.peek(), Tok::Ident(s) if s.eq_ignore_ascii_case(kw))
+    }
+
+    /// Consume a keyword if present.
+    fn eat_kw(&mut self, kw: &str) -> bool {
+        if self.peek_kw(kw) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_kw(&mut self, kw: &str) -> Result<()> {
+        if self.eat_kw(kw) {
+            Ok(())
+        } else {
+            Err(Error::Parse(format!(
+                "expected keyword {kw}, found {}",
+                self.peek().describe()
+            )))
+        }
+    }
+
+    fn eat_sym(&mut self, s: &str) -> bool {
+        if matches!(self.peek(), Tok::Sym(x) if *x == s) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_sym(&mut self, s: &str) -> Result<()> {
+        if self.eat_sym(s) {
+            Ok(())
+        } else {
+            Err(Error::Parse(format!(
+                "expected '{s}', found {}",
+                self.peek().describe()
+            )))
+        }
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.next() {
+            Tok::Ident(s) => Ok(s),
+            t => Err(Error::Parse(format!("expected identifier, found {}", t.describe()))),
+        }
+    }
+
+    fn expect_eof(&mut self) -> Result<()> {
+        match self.peek() {
+            Tok::Eof => Ok(()),
+            t => Err(Error::Parse(format!("trailing input: {}", t.describe()))),
+        }
+    }
+
+    fn statement(&mut self) -> Result<Statement> {
+        if self.peek_kw("SELECT") {
+            Ok(Statement::Select(self.select()?))
+        } else if self.eat_kw("INSERT") {
+            self.insert()
+        } else if self.eat_kw("UPDATE") {
+            self.update()
+        } else if self.eat_kw("DELETE") {
+            self.delete()
+        } else if self.eat_kw("CREATE") {
+            self.create_table()
+        } else {
+            Err(Error::Parse(format!(
+                "expected statement, found {}",
+                self.peek().describe()
+            )))
+        }
+    }
+
+    // ---------- SELECT ----------
+
+    fn select(&mut self) -> Result<SelectStmt> {
+        self.expect_kw("SELECT")?;
+        let items = self.select_items()?;
+        self.expect_kw("FROM")?;
+        let from = self.table_ref()?;
+        let mut joins = Vec::new();
+        loop {
+            let left_outer = if self.eat_kw("LEFT") {
+                self.eat_kw("OUTER");
+                self.expect_kw("JOIN")?;
+                true
+            } else if self.eat_kw("INNER") {
+                self.expect_kw("JOIN")?;
+                false
+            } else if self.eat_kw("JOIN") {
+                false
+            } else {
+                break;
+            };
+            let table = self.table_ref()?;
+            self.expect_kw("ON")?;
+            let on = self.expr()?;
+            joins.push(Join { table, on, left_outer });
+        }
+        let where_ = if self.eat_kw("WHERE") { Some(self.expr()?) } else { None };
+        let mut group_by = Vec::new();
+        if self.eat_kw("GROUP") {
+            self.expect_kw("BY")?;
+            loop {
+                group_by.push(self.expr()?);
+                if !self.eat_sym(",") {
+                    break;
+                }
+            }
+        }
+        let having = if self.eat_kw("HAVING") { Some(self.expr()?) } else { None };
+        let order_by = self.order_by()?;
+        let limit = self.limit()?;
+        Ok(SelectStmt { items, from, joins, where_, group_by, having, order_by, limit })
+    }
+
+    fn select_items(&mut self) -> Result<Vec<SelectItem>> {
+        let mut items = Vec::new();
+        loop {
+            if self.eat_sym("*") {
+                items.push(SelectItem::Wildcard(None));
+            } else {
+                // `t.*` looks like Col path; detect before general expr
+                let save = self.pos;
+                if let Tok::Ident(t) = self.peek().clone() {
+                    self.pos += 1;
+                    if self.eat_sym(".") && self.eat_sym("*") {
+                        items.push(SelectItem::Wildcard(Some(t)));
+                        if !self.eat_sym(",") {
+                            break;
+                        }
+                        continue;
+                    }
+                    self.pos = save;
+                }
+                let expr = self.expr()?;
+                let alias = if self.eat_kw("AS") {
+                    Some(self.ident()?)
+                } else if matches!(self.peek(), Tok::Ident(s) if !is_clause_kw(s)) {
+                    Some(self.ident()?)
+                } else {
+                    None
+                };
+                items.push(SelectItem::Expr { expr, alias });
+            }
+            if !self.eat_sym(",") {
+                break;
+            }
+        }
+        Ok(items)
+    }
+
+    fn table_ref(&mut self) -> Result<TableRef> {
+        let table = self.ident()?;
+        let alias = if self.eat_kw("AS") {
+            Some(self.ident()?)
+        } else if matches!(self.peek(), Tok::Ident(s) if !is_clause_kw(s)) {
+            Some(self.ident()?)
+        } else {
+            None
+        };
+        Ok(TableRef { table, alias })
+    }
+
+    fn order_by(&mut self) -> Result<Vec<(Expr, bool)>> {
+        let mut order = Vec::new();
+        if self.eat_kw("ORDER") {
+            self.expect_kw("BY")?;
+            loop {
+                let e = self.expr()?;
+                let asc = if self.eat_kw("DESC") {
+                    false
+                } else {
+                    self.eat_kw("ASC");
+                    true
+                };
+                order.push((e, asc));
+                if !self.eat_sym(",") {
+                    break;
+                }
+            }
+        }
+        Ok(order)
+    }
+
+    fn limit(&mut self) -> Result<Option<u64>> {
+        if self.eat_kw("LIMIT") {
+            match self.next() {
+                Tok::Int(n) if n >= 0 => Ok(Some(n as u64)),
+                t => Err(Error::Parse(format!("LIMIT wants a non-negative integer, found {}", t.describe()))),
+            }
+        } else {
+            Ok(None)
+        }
+    }
+
+    // ---------- INSERT ----------
+
+    fn insert(&mut self) -> Result<Statement> {
+        self.expect_kw("INTO")?;
+        let table = self.ident()?;
+        let mut columns = Vec::new();
+        if self.eat_sym("(") {
+            loop {
+                columns.push(self.ident()?);
+                if !self.eat_sym(",") {
+                    break;
+                }
+            }
+            self.expect_sym(")")?;
+        }
+        self.expect_kw("VALUES")?;
+        let mut values = Vec::new();
+        loop {
+            self.expect_sym("(")?;
+            let mut row = Vec::new();
+            loop {
+                row.push(self.expr()?);
+                if !self.eat_sym(",") {
+                    break;
+                }
+            }
+            self.expect_sym(")")?;
+            values.push(row);
+            if !self.eat_sym(",") {
+                break;
+            }
+        }
+        Ok(Statement::Insert { table, columns, values })
+    }
+
+    // ---------- UPDATE ----------
+
+    fn update(&mut self) -> Result<Statement> {
+        let table = self.table_ref()?;
+        self.expect_kw("SET")?;
+        let mut sets = Vec::new();
+        loop {
+            let col = self.ident()?;
+            self.expect_sym("=")?;
+            let e = self.expr()?;
+            sets.push((col, e));
+            if !self.eat_sym(",") {
+                break;
+            }
+        }
+        let where_ = if self.eat_kw("WHERE") { Some(self.expr()?) } else { None };
+        let order_by = self.order_by()?;
+        let limit = self.limit()?;
+        let returning = if self.eat_kw("RETURNING") {
+            Some(self.select_items()?)
+        } else {
+            None
+        };
+        Ok(Statement::Update { table, sets, where_, order_by, limit, returning })
+    }
+
+    // ---------- DELETE ----------
+
+    fn delete(&mut self) -> Result<Statement> {
+        self.expect_kw("FROM")?;
+        let table = self.table_ref()?;
+        let where_ = if self.eat_kw("WHERE") { Some(self.expr()?) } else { None };
+        Ok(Statement::Delete { table, where_ })
+    }
+
+    // ---------- CREATE TABLE ----------
+
+    fn create_table(&mut self) -> Result<Statement> {
+        self.expect_kw("TABLE")?;
+        let name = self.ident()?;
+        self.expect_sym("(")?;
+        let mut columns = Vec::new();
+        loop {
+            let cname = self.ident()?;
+            let tyname = self.ident()?;
+            let ty = ColumnType::parse(&tyname)?;
+            let mut not_null = false;
+            if self.eat_kw("NOT") {
+                self.expect_kw("NULL")?;
+                not_null = true;
+            } else {
+                self.eat_kw("NULL");
+            }
+            columns.push(ColumnDecl { name: cname, ty, not_null });
+            if !self.eat_sym(",") {
+                break;
+            }
+        }
+        self.expect_sym(")")?;
+        let mut partition_by = None;
+        let mut primary_key = None;
+        let mut indexes = Vec::new();
+        loop {
+            if self.eat_kw("PARTITION") {
+                self.expect_kw("BY")?;
+                self.expect_kw("HASH")?;
+                self.expect_sym("(")?;
+                let col = self.ident()?;
+                self.expect_sym(")")?;
+                self.expect_kw("PARTITIONS")?;
+                let n = match self.next() {
+                    Tok::Int(n) if n >= 1 => n as usize,
+                    t => {
+                        return Err(Error::Parse(format!(
+                            "PARTITIONS wants a positive integer, found {}",
+                            t.describe()
+                        )))
+                    }
+                };
+                partition_by = Some((col, n));
+            } else if self.eat_kw("PRIMARY") {
+                self.expect_kw("KEY")?;
+                self.expect_sym("(")?;
+                primary_key = Some(self.ident()?);
+                self.expect_sym(")")?;
+            } else if self.eat_kw("INDEX") {
+                self.expect_sym("(")?;
+                indexes.push(self.ident()?);
+                self.expect_sym(")")?;
+            } else {
+                break;
+            }
+        }
+        Ok(Statement::CreateTable { name, columns, partition_by, primary_key, indexes })
+    }
+
+    // ---------- expressions ----------
+
+    fn expr(&mut self) -> Result<Expr> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<Expr> {
+        let mut e = self.and_expr()?;
+        while self.eat_kw("OR") {
+            let rhs = self.and_expr()?;
+            e = Expr::Binary(Op::Or, Box::new(e), Box::new(rhs));
+        }
+        Ok(e)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr> {
+        let mut e = self.not_expr()?;
+        while self.eat_kw("AND") {
+            let rhs = self.not_expr()?;
+            e = Expr::Binary(Op::And, Box::new(e), Box::new(rhs));
+        }
+        Ok(e)
+    }
+
+    fn not_expr(&mut self) -> Result<Expr> {
+        if self.eat_kw("NOT") {
+            let e = self.not_expr()?;
+            Ok(Expr::Unary(Op::Not, Box::new(e)))
+        } else {
+            self.predicate()
+        }
+    }
+
+    /// Comparison layer plus IN / BETWEEN / IS NULL / LIKE postfix forms.
+    fn predicate(&mut self) -> Result<Expr> {
+        let e = self.add_expr()?;
+        // postfix predicates
+        let negated = {
+            let save = self.pos;
+            if self.eat_kw("NOT") {
+                if self.peek_kw("IN") || self.peek_kw("BETWEEN") || self.peek_kw("LIKE") {
+                    true
+                } else {
+                    self.pos = save;
+                    false
+                }
+            } else {
+                false
+            }
+        };
+        if self.eat_kw("IN") {
+            self.expect_sym("(")?;
+            let mut list = Vec::new();
+            loop {
+                list.push(self.expr()?);
+                if !self.eat_sym(",") {
+                    break;
+                }
+            }
+            self.expect_sym(")")?;
+            return Ok(Expr::InList { expr: Box::new(e), list, negated });
+        }
+        if self.eat_kw("BETWEEN") {
+            let lo = self.add_expr()?;
+            self.expect_kw("AND")?;
+            let hi = self.add_expr()?;
+            return Ok(Expr::Between {
+                expr: Box::new(e),
+                lo: Box::new(lo),
+                hi: Box::new(hi),
+                negated,
+            });
+        }
+        if self.eat_kw("LIKE") {
+            let pattern = match self.next() {
+                Tok::Str(s) => s,
+                t => {
+                    return Err(Error::Parse(format!(
+                        "LIKE wants a string literal, found {}",
+                        t.describe()
+                    )))
+                }
+            };
+            return Ok(Expr::Like { expr: Box::new(e), pattern, negated });
+        }
+        if self.eat_kw("IS") {
+            let negated = self.eat_kw("NOT");
+            self.expect_kw("NULL")?;
+            return Ok(Expr::IsNull { expr: Box::new(e), negated });
+        }
+        if negated {
+            return Err(Error::Parse("dangling NOT".into()));
+        }
+        // comparison operators
+        let op = if self.eat_sym("=") {
+            Some(Op::Eq)
+        } else if self.eat_sym("!=") {
+            Some(Op::Ne)
+        } else if self.eat_sym("<=") {
+            Some(Op::Le)
+        } else if self.eat_sym("<") {
+            Some(Op::Lt)
+        } else if self.eat_sym(">=") {
+            Some(Op::Ge)
+        } else if self.eat_sym(">") {
+            Some(Op::Gt)
+        } else {
+            None
+        };
+        if let Some(op) = op {
+            let rhs = self.add_expr()?;
+            return Ok(Expr::Binary(op, Box::new(e), Box::new(rhs)));
+        }
+        Ok(e)
+    }
+
+    fn add_expr(&mut self) -> Result<Expr> {
+        let mut e = self.mul_expr()?;
+        loop {
+            let op = if self.eat_sym("+") {
+                Op::Add
+            } else if self.eat_sym("-") {
+                Op::Sub
+            } else {
+                break;
+            };
+            let rhs = self.mul_expr()?;
+            e = Expr::Binary(op, Box::new(e), Box::new(rhs));
+        }
+        Ok(e)
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr> {
+        let mut e = self.unary_expr()?;
+        loop {
+            let op = if self.eat_sym("*") {
+                Op::Mul
+            } else if self.eat_sym("/") {
+                Op::Div
+            } else if self.eat_sym("%") {
+                Op::Mod
+            } else {
+                break;
+            };
+            let rhs = self.unary_expr()?;
+            e = Expr::Binary(op, Box::new(e), Box::new(rhs));
+        }
+        Ok(e)
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr> {
+        if self.eat_sym("-") {
+            let e = self.unary_expr()?;
+            return Ok(Expr::Unary(Op::Neg, Box::new(e)));
+        }
+        if self.eat_sym("+") {
+            return self.unary_expr();
+        }
+        self.primary()
+    }
+
+    fn primary(&mut self) -> Result<Expr> {
+        match self.next() {
+            Tok::Int(i) => Ok(Expr::Lit(Value::Int(i))),
+            Tok::Float(f) => Ok(Expr::Lit(Value::Float(f))),
+            Tok::Str(s) => Ok(Expr::Lit(Value::str(s))),
+            Tok::Sym("(") => {
+                let e = self.expr()?;
+                self.expect_sym(")")?;
+                Ok(e)
+            }
+            Tok::Ident(id) => self.ident_expr(id),
+            t => Err(Error::Parse(format!("expected expression, found {}", t.describe()))),
+        }
+    }
+
+    /// An identifier can begin: NULL/TRUE/FALSE literals, CASE, an aggregate,
+    /// a scalar function call, or a (qualified) column reference.
+    fn ident_expr(&mut self, id: String) -> Result<Expr> {
+        let upper = id.to_ascii_uppercase();
+        match upper.as_str() {
+            "NULL" => return Ok(Expr::Lit(Value::Null)),
+            "TRUE" => return Ok(Expr::Lit(Value::Bool(true))),
+            "FALSE" => return Ok(Expr::Lit(Value::Bool(false))),
+            "CASE" => return self.case_expr(),
+            _ => {}
+        }
+        // aggregate?
+        let agg = match upper.as_str() {
+            "COUNT" => Some(AggFunc::Count),
+            "SUM" => Some(AggFunc::Sum),
+            "AVG" => Some(AggFunc::Avg),
+            "MIN" => Some(AggFunc::Min),
+            "MAX" => Some(AggFunc::Max),
+            _ => None,
+        };
+        if let Some(func) = agg {
+            if self.eat_sym("(") {
+                let distinct = self.eat_kw("DISTINCT");
+                if self.eat_sym("*") {
+                    self.expect_sym(")")?;
+                    if func != AggFunc::Count {
+                        return Err(Error::Parse(format!("{}(*) is not valid", func.name())));
+                    }
+                    return Ok(Expr::Agg { func, arg: None, distinct });
+                }
+                let arg = self.expr()?;
+                self.expect_sym(")")?;
+                return Ok(Expr::Agg { func, arg: Some(Box::new(arg)), distinct });
+            }
+        }
+        // scalar function?
+        if matches!(self.peek(), Tok::Sym("(")) {
+            self.expect_sym("(")?;
+            let mut args = Vec::new();
+            if !self.eat_sym(")") {
+                loop {
+                    args.push(self.expr()?);
+                    if !self.eat_sym(",") {
+                        break;
+                    }
+                }
+                self.expect_sym(")")?;
+            }
+            return Ok(Expr::Func { name: upper, args });
+        }
+        // qualified column?
+        if self.eat_sym(".") {
+            let col = self.ident()?;
+            return Ok(Expr::Col { table: Some(id), name: col });
+        }
+        Ok(Expr::Col { table: None, name: id })
+    }
+
+    fn case_expr(&mut self) -> Result<Expr> {
+        let mut arms = Vec::new();
+        while self.eat_kw("WHEN") {
+            let c = self.expr()?;
+            self.expect_kw("THEN")?;
+            let v = self.expr()?;
+            arms.push((c, v));
+        }
+        if arms.is_empty() {
+            return Err(Error::Parse("CASE needs at least one WHEN arm".into()));
+        }
+        let else_ = if self.eat_kw("ELSE") { Some(Box::new(self.expr()?)) } else { None };
+        self.expect_kw("END")?;
+        Ok(Expr::Case { arms, else_ })
+    }
+}
+
+/// Keywords that terminate an implicit alias position.
+fn is_clause_kw(s: &str) -> bool {
+    const KWS: &[&str] = &[
+        "FROM", "WHERE", "GROUP", "HAVING", "ORDER", "LIMIT", "JOIN", "LEFT", "INNER", "OUTER",
+        "ON", "SET", "VALUES", "RETURNING", "AND", "OR", "NOT", "AS", "ASC", "DESC", "BY",
+        "PARTITION", "PRIMARY", "INDEX", "UNION",
+    ];
+    KWS.iter().any(|k| s.eq_ignore_ascii_case(k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sel(sql: &str) -> SelectStmt {
+        match parse_statement(sql).unwrap() {
+            Statement::Select(s) => s,
+            other => panic!("not a select: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn select_with_everything() {
+        let s = sel(
+            "SELECT w.node AS host, COUNT(*) n, AVG(t.dur) FROM tasks t \
+             LEFT JOIN workers w ON t.wid = w.id \
+             WHERE t.status = 'FINISHED' AND t.endt >= NOW() - 60 \
+             GROUP BY w.node HAVING COUNT(*) > 1 \
+             ORDER BY n DESC, host LIMIT 5",
+        );
+        assert_eq!(s.items.len(), 3);
+        assert_eq!(s.joins.len(), 1);
+        assert!(s.joins[0].left_outer);
+        assert_eq!(s.group_by.len(), 1);
+        assert!(s.having.is_some());
+        assert_eq!(s.order_by.len(), 2);
+        assert!(!s.order_by[0].1); // DESC
+        assert!(s.order_by[1].1); // implicit ASC
+        assert_eq!(s.limit, Some(5));
+    }
+
+    #[test]
+    fn implicit_and_explicit_alias() {
+        let s = sel("SELECT a x, b AS y FROM t");
+        match &s.items[0] {
+            SelectItem::Expr { alias, .. } => assert_eq!(alias.as_deref(), Some("x")),
+            _ => panic!(),
+        }
+        match &s.items[1] {
+            SelectItem::Expr { alias, .. } => assert_eq!(alias.as_deref(), Some("y")),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn qualified_wildcard() {
+        let s = sel("SELECT t.*, u.a FROM t JOIN u ON t.x = u.x");
+        assert!(matches!(&s.items[0], SelectItem::Wildcard(Some(q)) if q == "t"));
+    }
+
+    #[test]
+    fn update_with_limit_returning() {
+        let st = parse_statement(
+            "UPDATE workqueue SET status = 'RUNNING', starttime = NOW() \
+             WHERE workerid = 3 AND status = 'READY' ORDER BY taskid LIMIT 4 \
+             RETURNING taskid, cmd",
+        )
+        .unwrap();
+        match st {
+            Statement::Update { sets, where_, order_by, limit, returning, .. } => {
+                assert_eq!(sets.len(), 2);
+                assert!(where_.is_some());
+                assert_eq!(order_by.len(), 1);
+                assert_eq!(limit, Some(4));
+                assert_eq!(returning.unwrap().len(), 2);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn create_table_full_clause() {
+        let st = parse_statement(
+            "CREATE TABLE wq (taskid INT NOT NULL, wid INT, s TEXT) \
+             PARTITION BY HASH(wid) PARTITIONS 8 PRIMARY KEY (taskid) INDEX (s)",
+        )
+        .unwrap();
+        match st {
+            Statement::CreateTable { name, columns, partition_by, primary_key, indexes } => {
+                assert_eq!(name, "wq");
+                assert_eq!(columns.len(), 3);
+                assert!(columns[0].not_null);
+                assert_eq!(partition_by, Some(("wid".into(), 8)));
+                assert_eq!(primary_key.as_deref(), Some("taskid"));
+                assert_eq!(indexes, vec!["s".to_string()]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn expression_precedence() {
+        // a + b * c parses as a + (b*c)
+        let s = sel("SELECT a + b * c FROM t");
+        match &s.items[0] {
+            SelectItem::Expr { expr: Expr::Binary(Op::Add, _, rhs), .. } => {
+                assert!(matches!(rhs.as_ref(), Expr::Binary(Op::Mul, _, _)));
+            }
+            other => panic!("{other:?}"),
+        }
+        // OR binds looser than AND
+        let s = sel("SELECT * FROM t WHERE a AND b OR c");
+        match s.where_.unwrap() {
+            Expr::Binary(Op::Or, lhs, _) => {
+                assert!(matches!(lhs.as_ref(), Expr::Binary(Op::And, _, _)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn predicates_in_between_like_isnull_not() {
+        parse_statement("SELECT * FROM t WHERE a IN (1,2,3) AND b NOT IN (4)").unwrap();
+        parse_statement("SELECT * FROM t WHERE a BETWEEN 1 AND 5 OR a NOT BETWEEN 8 AND 9")
+            .unwrap();
+        parse_statement("SELECT * FROM t WHERE s LIKE 'REA%' AND u NOT LIKE '%x_'").unwrap();
+        parse_statement("SELECT * FROM t WHERE e IS NULL AND f IS NOT NULL").unwrap();
+        parse_statement("SELECT * FROM t WHERE NOT (a = 1)").unwrap();
+    }
+
+    #[test]
+    fn case_expression() {
+        let s = sel("SELECT CASE WHEN a > 0 THEN 'pos' WHEN a < 0 THEN 'neg' ELSE 'zero' END FROM t");
+        match &s.items[0] {
+            SelectItem::Expr { expr: Expr::Case { arms, else_ }, .. } => {
+                assert_eq!(arms.len(), 2);
+                assert!(else_.is_some());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_errors_are_reported() {
+        assert!(parse_statement("SELECT FROM t").is_err());
+        assert!(parse_statement("UPDATE t").is_err());
+        assert!(parse_statement("SELECT * FROM t WHERE a LIKE 5").is_err());
+        assert!(parse_statement("SELECT * FROM t LIMIT -1").is_err());
+        assert!(parse_statement("SELECT * FROM t extra garbage !").is_err());
+        assert!(parse_statement("SELECT SUM(*) FROM t").is_err());
+    }
+
+    #[test]
+    fn count_distinct() {
+        let s = sel("SELECT COUNT(DISTINCT wid) FROM t");
+        match &s.items[0] {
+            SelectItem::Expr { expr: Expr::Agg { distinct, .. }, .. } => assert!(distinct),
+            other => panic!("{other:?}"),
+        }
+    }
+}

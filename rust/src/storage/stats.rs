@@ -1,0 +1,229 @@
+//! Per-access-kind latency accounting.
+//!
+//! Experiments 5 and 6 of the paper measure "time spent accessing the DBMS"
+//! overall and broken down per query kind (`getREADYtasks`,
+//! `updateToRUNNING`, ...). Every statement executed through a
+//! [`crate::storage::Connector`] carries an [`AccessKind`] tag and lands
+//! here. The same numbers calibrate the discrete-event simulator.
+
+use rustc_hash::FxHashMap;
+use std::sync::Mutex;
+
+/// Well-known access tags used by the d-Chiron engine. Matches the labels
+/// of paper Figure 12. `Other` covers ad-hoc/steering SQL.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AccessKind {
+    GetReadyTasks,
+    GetFileFields,
+    UpdateToRunning,
+    UpdateToFinished,
+    UpdateTaskOutput,
+    InsertTasks,
+    UpdateWorkerHeartbeat,
+    UpdateActivityStatus,
+    InsertProvenance,
+    InsertDomainData,
+    Steering,
+    Other,
+}
+
+impl AccessKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            AccessKind::GetReadyTasks => "getREADYtasks",
+            AccessKind::GetFileFields => "getFileFields",
+            AccessKind::UpdateToRunning => "updateToRUNNING",
+            AccessKind::UpdateToFinished => "updateToFINISHED",
+            AccessKind::UpdateTaskOutput => "updateTaskOutput",
+            AccessKind::InsertTasks => "insertTasks",
+            AccessKind::UpdateWorkerHeartbeat => "updateWorkerHeartbeat",
+            AccessKind::UpdateActivityStatus => "updateActivityStatus",
+            AccessKind::InsertProvenance => "insertProvenance",
+            AccessKind::InsertDomainData => "insertDomainData",
+            AccessKind::Steering => "steeringQuery",
+            AccessKind::Other => "other",
+        }
+    }
+
+    /// Read-only kinds (Figure 12 splits read vs update time).
+    pub fn is_read(self) -> bool {
+        matches!(
+            self,
+            AccessKind::GetReadyTasks | AccessKind::GetFileFields | AccessKind::Steering
+        )
+    }
+
+    pub fn all() -> &'static [AccessKind] {
+        use AccessKind::*;
+        &[
+            GetReadyTasks,
+            GetFileFields,
+            UpdateToRunning,
+            UpdateToFinished,
+            UpdateTaskOutput,
+            InsertTasks,
+            UpdateWorkerHeartbeat,
+            UpdateActivityStatus,
+            InsertProvenance,
+            InsertDomainData,
+            Steering,
+            Other,
+        ]
+    }
+}
+
+/// Aggregate statistics for one access kind.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AccessStat {
+    pub count: u64,
+    pub total_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+impl AccessStat {
+    fn record(&mut self, secs: f64) {
+        if self.count == 0 {
+            self.min_secs = secs;
+            self.max_secs = secs;
+        } else {
+            self.min_secs = self.min_secs.min(secs);
+            self.max_secs = self.max_secs.max(secs);
+        }
+        self.count += 1;
+        self.total_secs += secs;
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_secs / self.count as f64
+        }
+    }
+}
+
+/// Registry of access statistics, cheap to share across worker threads.
+///
+/// Also tracks the per-node sums the paper uses for Experiment 5: "for each
+/// node, we add up all elapsed times [and] consider the time spent accessing
+/// the DBMS in a workflow execution as the maximum sum obtained this way".
+#[derive(Default)]
+pub struct StatsRegistry {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    by_kind: FxHashMap<AccessKind, AccessStat>,
+    by_node: FxHashMap<u32, f64>,
+}
+
+impl StatsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one access of `kind` from worker node `node` taking `secs`.
+    pub fn record(&self, node: u32, kind: AccessKind, secs: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.by_kind.entry(kind).or_default().record(secs);
+        *g.by_node.entry(node).or_insert(0.0) += secs;
+    }
+
+    /// Stats for one kind.
+    pub fn get(&self, kind: AccessKind) -> AccessStat {
+        self.inner.lock().unwrap().by_kind.get(&kind).copied().unwrap_or_default()
+    }
+
+    /// Snapshot of all kinds with at least one access.
+    pub fn snapshot(&self) -> Vec<(AccessKind, AccessStat)> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<_> = g.by_kind.iter().map(|(k, s)| (*k, *s)).collect();
+        v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
+        v
+    }
+
+    /// Total time across all kinds.
+    pub fn total_secs(&self) -> f64 {
+        self.inner.lock().unwrap().by_kind.values().map(|s| s.total_secs).sum()
+    }
+
+    /// The paper's Experiment-5 metric: max over nodes of that node's summed
+    /// DBMS access time.
+    pub fn max_node_secs(&self) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .by_node
+            .values()
+            .fold(0.0f64, |a, b| a.max(*b))
+    }
+
+    /// Percentage breakdown by kind relative to total (Figure 12 rows).
+    pub fn percentages(&self) -> Vec<(AccessKind, f64)> {
+        let total = self.total_secs();
+        if total <= 0.0 {
+            return vec![];
+        }
+        self.snapshot()
+            .into_iter()
+            .map(|(k, s)| (k, 100.0 * s.total_secs / total))
+            .collect()
+    }
+
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.by_kind.clear();
+        g.by_node.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_aggregate() {
+        let r = StatsRegistry::new();
+        r.record(0, AccessKind::GetReadyTasks, 0.010);
+        r.record(0, AccessKind::GetReadyTasks, 0.030);
+        r.record(1, AccessKind::UpdateToRunning, 0.005);
+        let g = r.get(AccessKind::GetReadyTasks);
+        assert_eq!(g.count, 2);
+        assert!((g.total_secs - 0.040).abs() < 1e-12);
+        assert!((g.mean_secs() - 0.020).abs() < 1e-12);
+        assert_eq!(g.min_secs, 0.010);
+        assert_eq!(g.max_secs, 0.030);
+        assert!((r.total_secs() - 0.045).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_node_metric() {
+        let r = StatsRegistry::new();
+        r.record(0, AccessKind::GetReadyTasks, 0.5);
+        r.record(1, AccessKind::GetReadyTasks, 0.2);
+        r.record(1, AccessKind::UpdateToFinished, 0.4);
+        assert!((r.max_node_secs() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentages_sum_to_100() {
+        let r = StatsRegistry::new();
+        r.record(0, AccessKind::GetReadyTasks, 3.0);
+        r.record(0, AccessKind::UpdateToFinished, 1.0);
+        let p = r.percentages();
+        let total: f64 = p.iter().map(|(_, pc)| pc).sum();
+        assert!((total - 100.0).abs() < 1e-9);
+        assert_eq!(p[0].0, AccessKind::GetReadyTasks);
+        assert!((p[0].1 - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kind_labels_and_read_split() {
+        assert_eq!(AccessKind::GetReadyTasks.label(), "getREADYtasks");
+        assert!(AccessKind::GetReadyTasks.is_read());
+        assert!(!AccessKind::UpdateToRunning.is_read());
+        assert_eq!(AccessKind::all().len(), 12);
+    }
+}

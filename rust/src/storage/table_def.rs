@@ -1,0 +1,180 @@
+//! Table definitions: schema + partitioning + keys.
+
+use crate::storage::value::{ColumnType, Schema, Value};
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// How a table's rows are spread over partitions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Partitioning {
+    /// Single partition (small catalog-style relations: activities,
+    /// workflows, nodes).
+    Single,
+    /// Hash on one integer column into `n` partitions. SchalaDB's WQ design:
+    /// hash on `worker_id` with `n = W` so each worker's lookups touch
+    /// exactly one partition (paper §3.2).
+    Hash { column: String, partitions: usize },
+}
+
+/// Definition of one table.
+#[derive(Clone, Debug)]
+pub struct TableDef {
+    pub name: String,
+    pub schema: Arc<Schema>,
+    pub partitioning: Partitioning,
+    /// Optional integer primary key column; maintained as a hash index in
+    /// every partition and enforced unique *within* the table.
+    pub primary_key: Option<String>,
+    /// Secondary (non-unique) indexed columns per partition.
+    pub indexes: Vec<String>,
+}
+
+impl TableDef {
+    pub fn new(name: impl Into<String>, schema: Schema) -> TableDef {
+        TableDef {
+            name: name.into(),
+            schema: Arc::new(schema),
+            partitioning: Partitioning::Single,
+            primary_key: None,
+            indexes: vec![],
+        }
+    }
+
+    /// Declare hash partitioning on an integer column.
+    pub fn partition_by_hash(mut self, column: &str, partitions: usize) -> Result<TableDef> {
+        let col = self
+            .schema
+            .column(column)
+            .ok_or_else(|| Error::Catalog(format!("partition column '{column}' not in schema")))?;
+        if col.ty != ColumnType::Int {
+            return Err(Error::Catalog(format!(
+                "partition column '{column}' must be INT, is {}",
+                col.ty.name()
+            )));
+        }
+        if partitions == 0 {
+            return Err(Error::Catalog("partitions must be >= 1".into()));
+        }
+        self.partitioning = Partitioning::Hash { column: column.into(), partitions };
+        Ok(self)
+    }
+
+    pub fn with_primary_key(mut self, column: &str) -> Result<TableDef> {
+        let col = self
+            .schema
+            .column(column)
+            .ok_or_else(|| Error::Catalog(format!("pk column '{column}' not in schema")))?;
+        if col.ty != ColumnType::Int {
+            return Err(Error::Catalog("primary key must be INT".into()));
+        }
+        self.primary_key = Some(column.into());
+        Ok(self)
+    }
+
+    pub fn with_index(mut self, column: &str) -> Result<TableDef> {
+        if self.schema.column(column).is_none() {
+            return Err(Error::Catalog(format!("index column '{column}' not in schema")));
+        }
+        self.indexes.push(column.into());
+        Ok(self)
+    }
+
+    /// Number of partitions.
+    pub fn num_partitions(&self) -> usize {
+        match &self.partitioning {
+            Partitioning::Single => 1,
+            Partitioning::Hash { partitions, .. } => *partitions,
+        }
+    }
+
+    /// Schema index of the partition column, if hash-partitioned.
+    pub fn partition_col_idx(&self) -> Option<usize> {
+        match &self.partitioning {
+            Partitioning::Single => None,
+            Partitioning::Hash { column, .. } => self.schema.index_of(column),
+        }
+    }
+
+    /// Partition index for a row (by its partition-column value).
+    pub fn partition_of_row(&self, row: &[Value]) -> Result<usize> {
+        match self.partition_col_idx() {
+            None => Ok(0),
+            Some(ci) => match &row[ci] {
+                Value::Int(k) => Ok(self.partition_of_key(*k)),
+                v => Err(Error::Type(format!(
+                    "partition column of '{}' must be non-null INT, got {v}",
+                    self.name
+                ))),
+            },
+        }
+    }
+
+    /// Partition index for a key value.
+    ///
+    /// Identity-mod hashing, exactly the paper's design: `worker_id = i`
+    /// lands in partition `i mod W`; with `partitions == W` each worker owns
+    /// one partition.
+    pub fn partition_of_key(&self, key: i64) -> usize {
+        let n = self.num_partitions();
+        (key.rem_euclid(n as i64)) as usize
+    }
+
+    /// Schema index of the primary key column.
+    pub fn pk_idx(&self) -> Option<usize> {
+        self.primary_key.as_deref().and_then(|c| self.schema.index_of(c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::value::Schema;
+
+    fn def() -> TableDef {
+        let schema = Schema::of(&[
+            ("taskid", ColumnType::Int),
+            ("workerid", ColumnType::Int),
+            ("status", ColumnType::Str),
+        ]);
+        TableDef::new("workqueue", schema)
+            .partition_by_hash("workerid", 4)
+            .unwrap()
+            .with_primary_key("taskid")
+            .unwrap()
+            .with_index("status")
+            .unwrap()
+    }
+
+    #[test]
+    fn partition_routing_identity_mod() {
+        let d = def();
+        assert_eq!(d.num_partitions(), 4);
+        assert_eq!(d.partition_of_key(0), 0);
+        assert_eq!(d.partition_of_key(5), 1);
+        assert_eq!(d.partition_of_key(-1), 3); // rem_euclid keeps it in range
+        let row = vec![Value::Int(9), Value::Int(2), Value::str("READY")];
+        assert_eq!(d.partition_of_row(&row).unwrap(), 2);
+    }
+
+    #[test]
+    fn partition_column_must_be_int() {
+        let schema = Schema::of(&[("s", ColumnType::Str)]);
+        let e = TableDef::new("t", schema).partition_by_hash("s", 2);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn unknown_columns_rejected() {
+        let schema = Schema::of(&[("id", ColumnType::Int)]);
+        assert!(TableDef::new("t", schema.clone()).partition_by_hash("nope", 2).is_err());
+        assert!(TableDef::new("t", schema.clone()).with_primary_key("nope").is_err());
+        assert!(TableDef::new("t", schema).with_index("nope").is_err());
+    }
+
+    #[test]
+    fn null_partition_key_rejected() {
+        let d = def();
+        let row = vec![Value::Int(1), Value::Null, Value::str("READY")];
+        assert!(d.partition_of_row(&row).is_err());
+    }
+}

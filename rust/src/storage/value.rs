@@ -1,0 +1,424 @@
+//! Typed values, rows, and schemas for the relational engine.
+
+use crate::{Error, Result};
+use rustc_hash::FxHashMap;
+use std::cmp::Ordering;
+use std::fmt;
+use std::sync::Arc;
+
+/// Column types supported by the engine. The WQ relation (paper Figure 3)
+/// needs integers (ids, counters), floats (times, domain values), strings
+/// (command lines, status) and booleans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ColumnType {
+    Int,
+    Float,
+    Str,
+    Bool,
+}
+
+impl ColumnType {
+    pub fn name(self) -> &'static str {
+        match self {
+            ColumnType::Int => "INT",
+            ColumnType::Float => "FLOAT",
+            ColumnType::Str => "TEXT",
+            ColumnType::Bool => "BOOL",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ColumnType> {
+        match s.to_ascii_uppercase().as_str() {
+            "INT" | "INTEGER" | "BIGINT" => Ok(ColumnType::Int),
+            "FLOAT" | "DOUBLE" | "REAL" => Ok(ColumnType::Float),
+            "TEXT" | "VARCHAR" | "STRING" => Ok(ColumnType::Str),
+            "BOOL" | "BOOLEAN" => Ok(ColumnType::Bool),
+            other => Err(Error::Parse(format!("unknown column type '{other}'"))),
+        }
+    }
+}
+
+/// A single typed value. `Str` is refcounted: command lines and workspace
+/// paths are duplicated across many tasks and flow through scans, sorts and
+/// joins — cloning must be O(1).
+#[derive(Clone, Debug)]
+pub enum Value {
+    Null,
+    Int(i64),
+    Float(f64),
+    Str(Arc<str>),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn str(s: impl AsRef<str>) -> Value {
+        Value::Str(Arc::from(s.as_ref()))
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    pub fn type_of(&self) -> Option<ColumnType> {
+        match self {
+            Value::Null => None,
+            Value::Int(_) => Some(ColumnType::Int),
+            Value::Float(_) => Some(ColumnType::Float),
+            Value::Str(_) => Some(ColumnType::Str),
+            Value::Bool(_) => Some(ColumnType::Bool),
+        }
+    }
+
+    /// Numeric view (ints widen to float); `None` for non-numeric.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// SQL three-valued-logic equality: any comparison with NULL is `None`.
+    pub fn sql_eq(&self, other: &Value) -> Option<bool> {
+        self.sql_cmp(other).map(|o| o == Ordering::Equal)
+    }
+
+    /// SQL comparison with numeric coercion between Int and Float.
+    /// Cross-type comparisons (e.g. Str vs Int) are a type error at the
+    /// expression layer; here they yield `None` like NULL.
+    pub fn sql_cmp(&self, other: &Value) -> Option<Ordering> {
+        use Value::*;
+        match (self, other) {
+            (Null, _) | (_, Null) => None,
+            (Int(a), Int(b)) => Some(a.cmp(b)),
+            (Str(a), Str(b)) => Some(a.as_ref().cmp(b.as_ref())),
+            (Bool(a), Bool(b)) => Some(a.cmp(b)),
+            _ => {
+                let (a, b) = (self.as_f64()?, other.as_f64()?);
+                a.partial_cmp(&b)
+            }
+        }
+    }
+
+    /// Total order for ORDER BY / index keys: NULLs first, then by type
+    /// class, then by value. NaN sorts after all other floats.
+    pub fn total_cmp(&self, other: &Value) -> Ordering {
+        fn class(v: &Value) -> u8 {
+            match v {
+                Value::Null => 0,
+                Value::Bool(_) => 1,
+                Value::Int(_) | Value::Float(_) => 2,
+                Value::Str(_) => 3,
+            }
+        }
+        if let Some(o) = self.sql_cmp(other) {
+            return o;
+        }
+        match (self, other) {
+            (Value::Null, Value::Null) => Ordering::Equal,
+            (Value::Float(a), Value::Float(b)) => a.total_cmp(b),
+            (Value::Float(a), Value::Int(b)) => a.total_cmp(&(*b as f64)),
+            (Value::Int(a), Value::Float(b)) => (*a as f64).total_cmp(b),
+            _ => class(self).cmp(&class(other)),
+        }
+    }
+
+    /// Hash key for group-by / hash-join. Floats with integral value hash
+    /// like the equal Int so coercing joins group correctly.
+    pub fn hash_key(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = rustc_hash::FxHasher::default();
+        match self {
+            Value::Null => 0u8.hash(&mut h),
+            Value::Bool(b) => {
+                1u8.hash(&mut h);
+                b.hash(&mut h);
+            }
+            Value::Int(i) => {
+                2u8.hash(&mut h);
+                i.hash(&mut h);
+            }
+            Value::Float(f) => {
+                if f.fract() == 0.0 && f.abs() < 9e15 {
+                    2u8.hash(&mut h);
+                    (*f as i64).hash(&mut h);
+                } else {
+                    3u8.hash(&mut h);
+                    f.to_bits().hash(&mut h);
+                }
+            }
+            Value::Str(s) => {
+                4u8.hash(&mut h);
+                s.hash(&mut h);
+            }
+        }
+        h.finish()
+    }
+}
+
+impl PartialEq for Value {
+    fn eq(&self, other: &Self) -> bool {
+        self.total_cmp(other) == Ordering::Equal
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Null => write!(f, "NULL"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    write!(f, "{:.1}", x)
+                } else {
+                    write!(f, "{x}")
+                }
+            }
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+/// A column definition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Column {
+    pub name: String,
+    pub ty: ColumnType,
+    pub nullable: bool,
+}
+
+/// Table schema: ordered columns + name→index map.
+#[derive(Clone, Debug)]
+pub struct Schema {
+    pub columns: Vec<Column>,
+    by_name: FxHashMap<String, usize>,
+}
+
+impl PartialEq for Schema {
+    fn eq(&self, other: &Self) -> bool {
+        self.columns == other.columns
+    }
+}
+
+impl Schema {
+    pub fn new(columns: Vec<Column>) -> Result<Schema> {
+        let mut by_name = FxHashMap::default();
+        for (i, c) in columns.iter().enumerate() {
+            if by_name.insert(c.name.clone(), i).is_some() {
+                return Err(Error::Catalog(format!("duplicate column '{}'", c.name)));
+            }
+        }
+        Ok(Schema { columns, by_name })
+    }
+
+    /// Builder from `(name, type)` pairs; all columns nullable except as
+    /// adjusted later. Convenience for tests and internal schemas.
+    pub fn of(cols: &[(&str, ColumnType)]) -> Schema {
+        Schema::new(
+            cols.iter()
+                .map(|(n, t)| Column { name: n.to_string(), ty: *t, nullable: true })
+                .collect(),
+        )
+        .expect("static schema")
+    }
+
+    pub fn len(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.columns.is_empty()
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn column(&self, name: &str) -> Option<&Column> {
+        self.index_of(name).map(|i| &self.columns[i])
+    }
+
+    /// Validate a row against the schema: arity, types (with int→float
+    /// widening), nullability.
+    pub fn check_row(&self, row: &Row) -> Result<()> {
+        if row.values.len() != self.columns.len() {
+            return Err(Error::Type(format!(
+                "row arity {} != schema arity {}",
+                row.values.len(),
+                self.columns.len()
+            )));
+        }
+        for (v, c) in row.values.iter().zip(&self.columns) {
+            match v {
+                Value::Null => {
+                    if !c.nullable {
+                        return Err(Error::Constraint(format!(
+                            "column '{}' is NOT NULL",
+                            c.name
+                        )));
+                    }
+                }
+                v => {
+                    let vt = v.type_of().unwrap();
+                    let ok = vt == c.ty || (vt == ColumnType::Int && c.ty == ColumnType::Float);
+                    if !ok {
+                        return Err(Error::Type(format!(
+                            "column '{}' expects {}, got {}",
+                            c.name,
+                            c.ty.name(),
+                            vt.name()
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Coerce Int literals into Float columns so inserted rows are
+    /// uniformly typed in storage.
+    pub fn coerce_row(&self, mut row: Row) -> Result<Row> {
+        self.check_row(&row)?;
+        for (v, c) in row.values.iter_mut().zip(&self.columns) {
+            if c.ty == ColumnType::Float {
+                if let Value::Int(i) = v {
+                    *v = Value::Float(*i as f64);
+                }
+            }
+        }
+        Ok(row)
+    }
+}
+
+/// A row of values. Kept as a plain struct (not an alias) so we can hang
+/// helpers off it and later add hidden columns without touching call sites.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Row {
+    pub values: Vec<Value>,
+}
+
+impl Row {
+    pub fn new(values: Vec<Value>) -> Row {
+        Row { values }
+    }
+
+    pub fn get(&self, i: usize) -> &Value {
+        &self.values[i]
+    }
+
+    /// Approximate in-memory footprint in bytes (for DB-size reporting,
+    /// paper §5.1 "tens of MB for large workloads").
+    pub fn approx_bytes(&self) -> usize {
+        let mut n = std::mem::size_of::<Row>() + self.values.capacity() * std::mem::size_of::<Value>();
+        for v in &self.values {
+            if let Value::Str(s) = v {
+                n += s.len();
+            }
+        }
+        n
+    }
+}
+
+impl From<Vec<Value>> for Row {
+    fn from(values: Vec<Value>) -> Row {
+        Row { values }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sql_cmp_coerces_numerics() {
+        assert_eq!(Value::Int(2).sql_cmp(&Value::Float(2.0)), Some(Ordering::Equal));
+        assert_eq!(Value::Int(2).sql_cmp(&Value::Float(2.5)), Some(Ordering::Less));
+        assert_eq!(Value::Null.sql_cmp(&Value::Int(1)), None);
+        assert_eq!(Value::str("a").sql_cmp(&Value::str("b")), Some(Ordering::Less));
+        assert_eq!(Value::str("a").sql_cmp(&Value::Int(1)), None);
+    }
+
+    #[test]
+    fn total_cmp_orders_nulls_first() {
+        let mut vs = vec![Value::Int(3), Value::Null, Value::Float(1.5), Value::str("x")];
+        vs.sort_by(|a, b| a.total_cmp(b));
+        assert!(vs[0].is_null());
+        assert_eq!(vs[1], Value::Float(1.5));
+        assert_eq!(vs[2], Value::Int(3));
+        assert_eq!(vs[3], Value::str("x"));
+    }
+
+    #[test]
+    fn hash_key_coerces_integral_floats() {
+        assert_eq!(Value::Int(7).hash_key(), Value::Float(7.0).hash_key());
+        assert_ne!(Value::Int(7).hash_key(), Value::Float(7.5).hash_key());
+    }
+
+    #[test]
+    fn schema_checks_types_and_nulls() {
+        let mut s = Schema::of(&[("id", ColumnType::Int), ("v", ColumnType::Float)]);
+        s.columns[0].nullable = false;
+        assert!(s.check_row(&Row::new(vec![Value::Int(1), Value::Float(2.0)])).is_ok());
+        // int widens into float column
+        assert!(s.check_row(&Row::new(vec![Value::Int(1), Value::Int(2)])).is_ok());
+        // null into NOT NULL
+        assert!(matches!(
+            s.check_row(&Row::new(vec![Value::Null, Value::Null])),
+            Err(Error::Constraint(_))
+        ));
+        // wrong type
+        assert!(matches!(
+            s.check_row(&Row::new(vec![Value::str("x"), Value::Null])),
+            Err(Error::Type(_))
+        ));
+        // arity
+        assert!(matches!(s.check_row(&Row::new(vec![])), Err(Error::Type(_))));
+    }
+
+    #[test]
+    fn coerce_widens_int_literals() {
+        let s = Schema::of(&[("v", ColumnType::Float)]);
+        let r = s.coerce_row(Row::new(vec![Value::Int(3)])).unwrap();
+        assert_eq!(r.values[0], Value::Float(3.0));
+    }
+
+    #[test]
+    fn schema_rejects_duplicate_columns() {
+        let cols = vec![
+            Column { name: "a".into(), ty: ColumnType::Int, nullable: true },
+            Column { name: "a".into(), ty: ColumnType::Int, nullable: true },
+        ];
+        assert!(Schema::new(cols).is_err());
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(Value::Float(2.0).to_string(), "2.0");
+        assert_eq!(Value::Float(2.25).to_string(), "2.25");
+        assert_eq!(Value::Null.to_string(), "NULL");
+        assert_eq!(Value::str("hi").to_string(), "hi");
+    }
+}

@@ -1,0 +1,124 @@
+//! Clock abstraction shared by the real engine and the simulator.
+//!
+//! The WQ relation stores task start/end times and the steering queries use
+//! predicates like "started in the last minute" (`NOW() - 60`). To keep one
+//! SQL code path for both the real engine (wall clock) and the
+//! discrete-event simulator (virtual clock), time is always `f64` seconds
+//! since an epoch chosen by the clock implementation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A monotonic source of seconds-since-epoch.
+pub trait Clock: Send + Sync {
+    /// Current time in seconds.
+    fn now(&self) -> f64;
+}
+
+/// Wall clock measured from process-local epoch (first use).
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { start: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Manually-advanced clock used by the discrete-event simulator and by
+/// deterministic tests. Stores seconds as an `f64` bit pattern in an atomic.
+pub struct ManualClock {
+    bits: AtomicU64,
+}
+
+impl ManualClock {
+    pub fn new(start: f64) -> Self {
+        ManualClock { bits: AtomicU64::new(start.to_bits()) }
+    }
+
+    /// Jump to an absolute time. Panics when moving backwards, which would
+    /// indicate a broken event loop.
+    pub fn set(&self, t: f64) {
+        let prev = f64::from_bits(self.bits.swap(t.to_bits(), Ordering::SeqCst));
+        assert!(t + 1e-12 >= prev, "clock moved backwards: {prev} -> {t}");
+    }
+
+    /// Advance by a delta and return the new time.
+    pub fn advance(&self, dt: f64) -> f64 {
+        assert!(dt >= 0.0);
+        let t = self.now() + dt;
+        self.set(t);
+        t
+    }
+}
+
+impl Clock for ManualClock {
+    fn now(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::SeqCst))
+    }
+}
+
+/// Shared, dyn-erased clock handle used throughout the storage engine.
+pub type SharedClock = Arc<dyn Clock>;
+
+/// Convenience constructor for a shared wall clock.
+pub fn wall() -> SharedClock {
+    Arc::new(WallClock::new())
+}
+
+/// Convenience constructor for a shared manual clock starting at `t0`.
+pub fn manual(t0: f64) -> (SharedClock, Arc<ManualClock>) {
+    let c = Arc::new(ManualClock::new(t0));
+    (c.clone() as SharedClock, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotonic() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn manual_clock_set_advance() {
+        let c = ManualClock::new(10.0);
+        assert_eq!(c.now(), 10.0);
+        c.advance(5.5);
+        assert_eq!(c.now(), 15.5);
+        c.set(20.0);
+        assert_eq!(c.now(), 20.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "clock moved backwards")]
+    fn manual_clock_rejects_backwards() {
+        let c = ManualClock::new(10.0);
+        c.set(5.0);
+    }
+
+    #[test]
+    fn shared_handles() {
+        let (shared, ctl) = manual(0.0);
+        ctl.advance(3.0);
+        assert_eq!(shared.now(), 3.0);
+    }
+}

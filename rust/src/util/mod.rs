@@ -1,0 +1,92 @@
+//! Small self-contained utilities: deterministic RNG, a clock abstraction
+//! shared by the real engine and the discrete-event simulator, a mini
+//! property-testing harness (stand-in for `proptest`, which is not available
+//! offline), and a tiny JSON writer for machine-readable bench reports.
+
+pub mod clock;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Format a duration in seconds with adaptive units, e.g. `1.50ms`, `39.0min`.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 0.0 {
+        return format!("-{}", fmt_secs(-s));
+    }
+    if s < 1e-6 {
+        format!("{:.0}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2}s", s)
+    } else if s < 7200.0 {
+        format!("{:.1}min", s / 60.0)
+    } else {
+        format!("{:.2}h", s / 3600.0)
+    }
+}
+
+/// Render an aligned text table (used by the bench harness to print the
+/// paper-style rows). `rows` must all have `header.len()` cells.
+pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        assert_eq!(r.len(), ncol, "row arity mismatch");
+        for (i, c) in r.iter().enumerate() {
+            widths[i] = widths[i].max(c.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: Vec<&str>| {
+        for (i, c) in cells.iter().enumerate() {
+            out.push_str(&format!("{:<w$}", c, w = widths[i] + 2));
+        }
+        while out.ends_with(' ') {
+            out.pop();
+        }
+        out.push('\n');
+    };
+    line(&mut out, header.to_vec());
+    let total: usize = widths.iter().map(|w| w + 2).sum();
+    out.push_str(&"-".repeat(total.saturating_sub(2)));
+    out.push('\n');
+    for r in rows {
+        line(&mut out, r.iter().map(|s| s.as_str()).collect());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_units() {
+        assert_eq!(fmt_secs(0.0000000005), "0ns");
+        assert_eq!(fmt_secs(0.0000025), "2.50us");
+        assert_eq!(fmt_secs(0.0015), "1.50ms");
+        assert_eq!(fmt_secs(1.5), "1.50s");
+        assert_eq!(fmt_secs(180.0), "3.0min");
+        assert_eq!(fmt_secs(7200.0), "2.00h");
+    }
+
+    #[test]
+    fn fmt_secs_negative() {
+        assert_eq!(fmt_secs(-1.5), "-1.50s");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["a", "longer"],
+            &[vec!["xx".into(), "y".into()], vec!["1".into(), "2".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("a"));
+        assert!(lines[0].contains("longer"));
+    }
+}

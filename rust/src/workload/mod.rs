@@ -1,0 +1,196 @@
+//! Workload definitions: the Risers Fatigue Analysis workflow (paper §5.1,
+//! Figure 8) and the synthetic workloads derived from it for Experiments
+//! 1–8.
+
+use crate::coordinator::payload::{Payload, SyntheticKind};
+use crate::coordinator::workflow::{ActivitySpec, Operator, WorkflowSpec};
+use crate::util::rng::Rng;
+
+/// The seven linked activities of the Risers Fatigue Analysis workflow.
+/// Environmental conditions (wind, wave, depth) flow through preprocessing,
+/// stress analysis, curvature selection, wear-and-tear calculation, riser
+/// analysis (the activity users steer, Q8), result compression, and final
+/// gathering.
+pub fn risers_activity_names() -> [&'static str; 7] {
+    [
+        "data_gathering",
+        "preprocessing",
+        "stress_analysis",
+        "stress_critical_case",
+        "calculate_wear_and_tear",
+        "analyze_risers",
+        "compress_results",
+    ]
+}
+
+/// Risers workflow with pure-Rust synthetic physics (no PJRT needed): use
+/// for unit/integration tests and the steering example.
+pub fn risers_workflow(conditions: usize) -> WorkflowSpec {
+    risers_workflow_with(conditions, None)
+}
+
+/// Risers workflow whose stress/wear hot spot runs through a registered
+/// artifact runner (the AOT-compiled JAX/Pallas kernel) when `runner` is
+/// given.
+pub fn risers_workflow_with(conditions: usize, runner: Option<&str>) -> WorkflowSpec {
+    let stress_payload = match runner {
+        Some(r) => Payload::Artifact { runner: r.to_string() },
+        None => Payload::Synthetic { kind: SyntheticKind::RiserStress },
+    };
+    let wear_payload = match runner {
+        Some(r) => Payload::Artifact { runner: format!("{r}_wear") },
+        None => Payload::Synthetic { kind: SyntheticKind::WearTear },
+    };
+    WorkflowSpec::new("risers_fatigue_analysis", conditions)
+        .activity(
+            ActivitySpec::new(
+                "data_gathering",
+                Operator::Map,
+                Payload::Synthetic { kind: SyntheticKind::PassThrough },
+            )
+            .with_fields(&["wind", "wave", "depth"]),
+        )
+        .activity(
+            // Pre-Processing produces the curvature components (paper Q7:
+            // "cx, cy, cz ... output parameters produced in Pre-Processing")
+            ActivitySpec::new("preprocessing", Operator::Map, stress_payload)
+                .with_fields(&["cx", "cy", "cz"]),
+        )
+        .activity(
+            // stress analysis consumes and forwards the curvature values
+            // (its own heavy lifting happened inside the stress kernel)
+            ActivitySpec::new(
+                "stress_analysis",
+                Operator::Map,
+                Payload::Synthetic { kind: SyntheticKind::PassThrough },
+            )
+            .with_fields(&["cx", "cy", "cz"]),
+        )
+        .activity(
+            // keeps only critical cases (cx above threshold) and forwards
+            // the curvature of the survivors to the wear calculation
+            ActivitySpec::new(
+                "stress_critical_case",
+                Operator::Filter { field: "cx", min: 0.0 },
+                Payload::Synthetic { kind: SyntheticKind::PassThrough },
+            )
+            .with_fields(&["cx", "cy", "cz"]),
+        )
+        .activity(
+            ActivitySpec::new("calculate_wear_and_tear", Operator::Map, wear_payload)
+                .with_fields(&["f1"]),
+        )
+        .activity(
+            ActivitySpec::new(
+                "analyze_risers",
+                Operator::Map,
+                Payload::Synthetic { kind: SyntheticKind::Quadratic },
+            )
+            .with_fields(&["x", "y"]),
+        )
+        .activity(ActivitySpec::new(
+            "compress_results",
+            Operator::Reduce { fanin: 8 },
+            Payload::Sleep { mean_secs: 0.2 },
+        ))
+}
+
+/// Environmental-condition input tuples for the risers workflow.
+pub fn risers_inputs(conditions: usize, seed: u64) -> Vec<Vec<(String, f64)>> {
+    let mut rng = Rng::new(seed);
+    (0..conditions)
+        .map(|_| {
+            vec![
+                ("wind".to_string(), rng.uniform(0.0, 30.0)),
+                ("wave".to_string(), rng.uniform(0.05, 0.4)),
+                ("depth".to_string(), rng.uniform(500.0, 2500.0)),
+            ]
+        })
+        .collect()
+}
+
+/// A synthetic workload in the paper's two dimensions: total task count and
+/// mean task duration (§5.2: "we consider a workload as composed of two
+/// factors: task duration and number of tasks").
+#[derive(Clone, Copy, Debug)]
+pub struct SyntheticWorkload {
+    pub total_tasks: usize,
+    pub mean_task_secs: f64,
+    pub activities: usize,
+    pub seed: u64,
+}
+
+impl SyntheticWorkload {
+    pub fn new(total_tasks: usize, mean_task_secs: f64) -> SyntheticWorkload {
+        SyntheticWorkload { total_tasks, mean_task_secs, activities: 3, seed: 1234 }
+    }
+
+    /// Build the workflow spec: a chain of Map activities sized so the total
+    /// task count matches (the risers workflow's structure, durations
+    /// synthesized — exactly how the paper generated its workloads).
+    pub fn workflow(&self) -> WorkflowSpec {
+        let acts = self.activities.max(1);
+        let per_activity = (self.total_tasks / acts).max(1);
+        let mut wf = WorkflowSpec::new("synthetic_risers", per_activity);
+        for i in 0..acts {
+            wf = wf.activity(ActivitySpec::new(
+                &format!("activity_{}", i + 1),
+                Operator::Map,
+                Payload::Sleep { mean_secs: self.mean_task_secs },
+            ));
+        }
+        wf
+    }
+
+    /// Empty input tuples (duration-only workload).
+    pub fn inputs(&self) -> Vec<Vec<(String, f64)>> {
+        vec![vec![]; (self.total_tasks / self.activities.max(1)).max(1)]
+    }
+
+    /// Actual planned task count (after integer division).
+    pub fn planned_tasks(&self) -> usize {
+        self.workflow().planned_total_tasks()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn risers_has_seven_activities() {
+        let wf = risers_workflow(100);
+        assert_eq!(wf.activities.len(), 7);
+        assert_eq!(wf.activities[1].out_fields, vec!["cx", "cy", "cz"]);
+        wf.validate().unwrap();
+        // planned: 100 per map activity, filter keeps 100 planned, reduce /8
+        let counts = wf.planned_task_counts();
+        assert_eq!(counts[0], 100);
+        assert_eq!(counts[6], 13);
+    }
+
+    #[test]
+    fn risers_inputs_are_deterministic_and_bounded() {
+        let a = risers_inputs(10, 5);
+        let b = risers_inputs(10, 5);
+        assert_eq!(a, b);
+        for tuple in &a {
+            let wind = tuple[0].1;
+            let wave = tuple[1].1;
+            let depth = tuple[2].1;
+            assert!((0.0..30.0).contains(&wind));
+            assert!((0.05..0.4).contains(&wave));
+            assert!((500.0..2500.0).contains(&depth));
+        }
+    }
+
+    #[test]
+    fn synthetic_workload_matches_paper_dimensions() {
+        let w = SyntheticWorkload::new(23_400, 5.0);
+        let wf = w.workflow();
+        assert_eq!(wf.planned_total_tasks(), 23_400);
+        let w = SyntheticWorkload::new(13_000, 60.0);
+        // 13000/3 = 4333 per activity, 3 activities = 12999
+        assert!((w.planned_tasks() as i64 - 13_000).abs() < 3);
+    }
+}

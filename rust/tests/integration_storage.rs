@@ -1,0 +1,307 @@
+//! Integration tests over the storage engine as a whole: SQL surface,
+//! concurrency invariants, durability, failover — the behaviours the
+//! workflow layers rely on.
+
+use schaladb::storage::cluster::ClusterConfig;
+use schaladb::storage::replication::AvailabilityManager;
+use schaladb::storage::value::Value;
+use schaladb::storage::{checkpoint, AccessKind, DbCluster};
+use schaladb::util::prop;
+use std::sync::Arc;
+
+fn wq(workers: usize) -> Arc<DbCluster> {
+    let c = DbCluster::start(ClusterConfig::default()).unwrap();
+    c.exec(&format!(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
+         status TEXT, dur FLOAT) PARTITION BY HASH(workerid) PARTITIONS {workers} \
+         PRIMARY KEY (taskid) INDEX (status)"
+    ))
+    .unwrap();
+    c
+}
+
+fn seed(c: &DbCluster, n: usize, workers: usize) {
+    let mut vals = Vec::new();
+    for i in 0..n {
+        vals.push(format!("({i}, {}, 'READY', 1.0)", i % workers));
+        if vals.len() == 256 {
+            c.execute(&format!(
+                "INSERT INTO workqueue (taskid, workerid, status, dur) VALUES {}",
+                vals.join(", ")
+            ))
+            .unwrap();
+            vals.clear();
+        }
+    }
+    if !vals.is_empty() {
+        c.execute(&format!(
+            "INSERT INTO workqueue (taskid, workerid, status, dur) VALUES {}",
+            vals.join(", ")
+        ))
+        .unwrap();
+    }
+}
+
+/// The fundamental scheduling invariant: N threads claiming concurrently
+/// never double-claim and never lose a task.
+#[test]
+fn concurrent_claims_are_exactly_once() {
+    let workers = 6;
+    let c = wq(workers);
+    seed(&c, 1200, workers);
+    let mut handles = Vec::new();
+    for w in 0..workers {
+        for _ in 0..2 {
+            // two threads per partition: intra-partition racing
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut claimed = Vec::new();
+                loop {
+                    let rs = c
+                        .exec(&format!(
+                            "UPDATE workqueue SET status = 'RUNNING' \
+                             WHERE workerid = {w} AND status = 'READY' \
+                             ORDER BY taskid LIMIT 1 RETURNING taskid"
+                        ))
+                        .unwrap()
+                        .rows();
+                    match rs.rows.first() {
+                        Some(r) => claimed.push(r.values[0].as_i64().unwrap()),
+                        None => break,
+                    }
+                }
+                claimed
+            }));
+        }
+    }
+    let mut all: Vec<i64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    all.sort_unstable();
+    let before = all.len();
+    all.dedup();
+    assert_eq!(before, all.len(), "a task was claimed twice");
+    assert_eq!(all.len(), 1200, "tasks lost");
+}
+
+/// Claims keep working while a data node dies and comes back mid-stream.
+#[test]
+fn claims_survive_data_node_failure() {
+    let workers = 4;
+    let c = wq(workers);
+    seed(&c, 400, workers);
+    let am = AvailabilityManager::new(c.clone());
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for w in 0..workers {
+        let c = c.clone();
+        let stop = stop.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut n = 0;
+            while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                match c.exec(&format!(
+                    "UPDATE workqueue SET status = 'RUNNING' \
+                     WHERE workerid = {w} AND status = 'READY' \
+                     ORDER BY taskid LIMIT 1 RETURNING taskid"
+                )) {
+                    Ok(rs) => {
+                        if rs.rows().rows.is_empty() {
+                            break;
+                        }
+                        n += 1;
+                    }
+                    Err(_) => std::thread::sleep(std::time::Duration::from_micros(200)),
+                }
+            }
+            n
+        }));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    c.kill_node(0).unwrap();
+    am.sweep().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    c.revive_node(0).unwrap();
+    am.sweep().unwrap();
+    let total: i64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    assert!(total > 0);
+    let rs = c
+        .query("SELECT COUNT(*) FROM workqueue WHERE status = 'RUNNING'")
+        .unwrap();
+    assert_eq!(rs.rows[0].values[0].as_i64().unwrap(), total, "claims lost or duplicated");
+}
+
+/// Checkpoint mid-workload, recover into a fresh cluster, totals match.
+#[test]
+fn checkpoint_recovery_preserves_scheduler_state() {
+    let workers = 4;
+    let c = wq(workers);
+    seed(&c, 500, workers);
+    c.execute("UPDATE workqueue SET status = 'RUNNING' WHERE taskid < 100").unwrap();
+    c.execute("UPDATE workqueue SET status = 'FINISHED' WHERE taskid < 50").unwrap();
+
+    let dir = std::env::temp_dir().join(format!("schaladb-it-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    checkpoint::checkpoint(&c, &dir).unwrap();
+    let r = checkpoint::recover(&dir, ClusterConfig::default()).unwrap();
+
+    for status in ["READY", "RUNNING", "FINISHED"] {
+        let a = c
+            .query(&format!("SELECT COUNT(*) FROM workqueue WHERE status = '{status}'"))
+            .unwrap();
+        let b = r
+            .query(&format!("SELECT COUNT(*) FROM workqueue WHERE status = '{status}'"))
+            .unwrap();
+        assert_eq!(a.rows[0].values[0], b.rows[0].values[0], "{status} count drifted");
+    }
+    // scheduling continues on the recovered cluster
+    let rs = r
+        .exec(
+            "UPDATE workqueue SET status = 'RUNNING' WHERE workerid = 1 AND status = 'READY' \
+             ORDER BY taskid LIMIT 1 RETURNING taskid",
+        )
+        .unwrap()
+        .rows();
+    assert_eq!(rs.rows.len(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Property: any interleaving of claims/finishes keeps status counts
+/// consistent with the number of operations applied.
+#[test]
+fn prop_status_transitions_conserve_rows() {
+    prop::check("status transitions conserve rows", 15, |g| {
+        let workers = g.usize(1, 4);
+        let n = g.usize(10, 60);
+        let c = wq(workers);
+        seed(&c, n, workers);
+        let mut claims = 0;
+        let mut finishes = 0;
+        for _ in 0..g.usize(5, 40) {
+            let w = g.usize(0, workers - 1);
+            if g.bool() {
+                let got = c
+                    .exec(&format!(
+                        "UPDATE workqueue SET status = 'RUNNING' \
+                         WHERE workerid = {w} AND status = 'READY' \
+                         ORDER BY taskid LIMIT 1 RETURNING taskid"
+                    ))
+                    .unwrap()
+                    .rows()
+                    .rows
+                    .len();
+                claims += got;
+            } else {
+                let got = c
+                    .execute(&format!(
+                        "UPDATE workqueue SET status = 'FINISHED' \
+                         WHERE workerid = {w} AND status = 'RUNNING' LIMIT 1"
+                    ))
+                    .unwrap();
+                finishes += got;
+            }
+        }
+        let count = |s: &str| -> i64 {
+            c.query(&format!("SELECT COUNT(*) FROM workqueue WHERE status = '{s}'"))
+                .unwrap()
+                .rows[0]
+                .values[0]
+                .as_i64()
+                .unwrap()
+        };
+        assert_eq!(count("FINISHED"), finishes as i64);
+        assert_eq!(count("RUNNING"), (claims - finishes) as i64);
+        assert_eq!(count("READY"), (n - claims) as i64);
+    });
+}
+
+/// Property: hash partition routing is total and stable — every row lands
+/// in exactly one partition and is findable both by partition-pinned and
+/// unpinned queries.
+#[test]
+fn prop_partition_routing_total() {
+    prop::check("partition routing total", 15, |g| {
+        let workers = g.usize(1, 6);
+        let c = wq(workers);
+        let n = g.usize(1, 50);
+        let mut expected_per_worker = vec![0i64; workers];
+        for i in 0..n {
+            let w = g.usize(0, workers * 3); // ids beyond partition count too
+            c.execute(&format!(
+                "INSERT INTO workqueue (taskid, workerid, status, dur) \
+                 VALUES ({i}, {w}, 'READY', 1.0)"
+            ))
+            .unwrap();
+            expected_per_worker[w % workers] += 0; // routing is internal
+            let _ = w;
+        }
+        let total = c
+            .query("SELECT COUNT(*) FROM workqueue")
+            .unwrap()
+            .rows[0]
+            .values[0]
+            .as_i64()
+            .unwrap();
+        assert_eq!(total, n as i64);
+        // every row is findable by its workerid-pinned query
+        let rs = c.query("SELECT taskid, workerid FROM workqueue").unwrap();
+        for row in &rs.rows {
+            let tid = row.values[0].as_i64().unwrap();
+            let wid = row.values[1].as_i64().unwrap();
+            let hit = c
+                .query(&format!(
+                    "SELECT taskid FROM workqueue WHERE workerid = {wid} AND taskid = {tid}"
+                ))
+                .unwrap();
+            assert_eq!(hit.rows.len(), 1);
+        }
+    });
+}
+
+/// Tagged stats land under the right access kind (the instrument the whole
+/// Experiment 5/6 pipeline depends on).
+#[test]
+fn stats_tags_route_correctly() {
+    let c = wq(2);
+    seed(&c, 10, 2);
+    c.exec_tagged(0, AccessKind::GetReadyTasks, "SELECT * FROM workqueue WHERE workerid = 0")
+        .unwrap();
+    c.exec_tagged(1, AccessKind::UpdateToFinished, "UPDATE workqueue SET status = 'FINISHED' WHERE taskid = 1")
+        .unwrap();
+    assert_eq!(c.stats.get(AccessKind::GetReadyTasks).count, 1);
+    assert_eq!(c.stats.get(AccessKind::UpdateToFinished).count, 1);
+    assert!(c.stats.max_node_secs() > 0.0);
+    let pct: f64 = c.stats.percentages().iter().map(|(_, p)| p).sum();
+    assert!((pct - 100.0).abs() < 1e-9);
+}
+
+/// SQL surface smoke over every clause the steering queries use.
+#[test]
+fn steering_sql_surface() {
+    let c = wq(3);
+    seed(&c, 30, 3);
+    c.exec("CREATE TABLE node (nodeid INT NOT NULL, hostname TEXT) PRIMARY KEY (nodeid)")
+        .unwrap();
+    for w in 0..3 {
+        c.execute(&format!("INSERT INTO node (nodeid, hostname) VALUES ({w}, 'node{w}')"))
+            .unwrap();
+    }
+    let rs = c
+        .query(
+            "SELECT n.hostname, t.status, COUNT(*) AS n_tasks, SUM(t.dur) AS total_dur \
+             FROM workqueue t JOIN node n ON t.workerid = n.nodeid \
+             WHERE t.taskid BETWEEN 0 AND 100 AND t.status LIKE 'REA%' \
+             GROUP BY n.hostname, t.status HAVING COUNT(*) > 1 \
+             ORDER BY n_tasks DESC, n.hostname LIMIT 10",
+        )
+        .unwrap();
+    assert_eq!(rs.rows.len(), 3);
+    assert_eq!(rs.rows[0].values[2], Value::Int(10));
+    // CASE + IN + IS NULL
+    let rs = c
+        .query(
+            "SELECT CASE WHEN taskid IN (1, 2) THEN 'special' ELSE 'normal' END AS kind, \
+             COUNT(*) FROM workqueue WHERE dur IS NOT NULL GROUP BY kind ORDER BY kind",
+        )
+        .unwrap();
+    assert_eq!(rs.rows.len(), 2);
+}
