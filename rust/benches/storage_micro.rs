@@ -7,7 +7,7 @@
 
 use schaladb::metrics::Histogram;
 use schaladb::storage::cluster::ClusterConfig;
-use schaladb::storage::DbCluster;
+use schaladb::storage::{AccessKind, DbCluster, Value};
 use schaladb::util::fmt_secs;
 use std::sync::Arc;
 use std::time::Instant;
@@ -184,6 +184,85 @@ fn main() {
             .commit()
             .unwrap();
         }));
+    }
+
+    // prepared vs parse-per-call — the prepared-statement API's headline
+    // number. A point SELECT by PK makes statement processing (format! +
+    // lex + parse versus a cached plan + value binding) the dominant cost,
+    // which is exactly the overhead the prepared path removes from every
+    // per-task round-trip.
+    {
+        let c = wq_cluster(workers, rows);
+        let iters = 20_000;
+        let parse_bench = Bench::run("point SELECT (parse per call)", iters, |i| {
+            c.query(&format!(
+                "SELECT taskid, actid, workerid, status, dur, starttime, endtime \
+                 FROM workqueue WHERE taskid = {} AND status != 'NOPE' AND dur >= 0.0",
+                i % rows
+            ))
+            .unwrap();
+        });
+        let p = c
+            .prepare(
+                "SELECT taskid, actid, workerid, status, dur, starttime, endtime \
+                 FROM workqueue WHERE taskid = ? AND status != 'NOPE' AND dur >= 0.0",
+            )
+            .unwrap();
+        let prep_bench = Bench::run("point SELECT (prepared)", iters, |i| {
+            c.query_prepared(&p, &[Value::Int((i % rows) as i64)]).unwrap();
+        });
+        let speedup = parse_bench.hist.mean() / prep_bench.hist.mean();
+        println!("prepared speedup over parse-per-call (point SELECT): {speedup:.1}x\n");
+        benches.push(parse_bench);
+        benches.push(prep_bench);
+    }
+
+    // batched bind: one prepared row template expanded 64x vs assembling
+    // and parsing a 64-row INSERT string per call (the supervisor's old
+    // task-generation path).
+    {
+        let batch = 64usize;
+        let c = wq_cluster(workers, 0);
+        let mut next = 0i64;
+        let parse_bench = Bench::run("64-row INSERT (format!+parse)", 300, |_| {
+            let mut vals = Vec::with_capacity(batch);
+            for _ in 0..batch {
+                vals.push(format!("({next}, 1, {}, 'READY', 1.0)", next % workers as i64));
+                next += 1;
+            }
+            c.execute(&format!(
+                "INSERT INTO workqueue (taskid, actid, workerid, status, dur) VALUES {}",
+                vals.join(", ")
+            ))
+            .unwrap();
+        });
+        let c2 = wq_cluster(workers, 0);
+        let p = c2
+            .prepare(
+                "INSERT INTO workqueue (taskid, actid, workerid, status, dur) \
+                 VALUES (?, ?, ?, 'READY', ?)",
+            )
+            .unwrap();
+        let mut next2 = 0i64;
+        let prep_bench = Bench::run("64-row INSERT (prepared batch)", 300, |_| {
+            let bound: Vec<Vec<Value>> = (0..batch)
+                .map(|_| {
+                    let id = next2;
+                    next2 += 1;
+                    vec![
+                        Value::Int(id),
+                        Value::Int(1),
+                        Value::Int(id % workers as i64),
+                        Value::Float(1.0),
+                    ]
+                })
+                .collect();
+            c2.exec_prepared_batch(0, AccessKind::InsertTasks, &p, &bound).unwrap();
+        });
+        let speedup = parse_bench.hist.mean() / prep_bench.hist.mean();
+        println!("prepared speedup over parse-per-call (64-row INSERT): {speedup:.1}x\n");
+        benches.push(parse_bench);
+        benches.push(prep_bench);
     }
 
     // concurrent claims: 8 threads hammering distinct partitions

@@ -6,7 +6,8 @@ use crate::coordinator::supervisor::{IdGen, Supervisor};
 use crate::coordinator::workflow::WorkflowSpec;
 use crate::coordinator::{schema, status};
 use crate::storage::cluster::ClusterConfig;
-use crate::storage::{AccessKind, DbCluster};
+use crate::storage::prepared::Prepared;
+use crate::storage::{AccessKind, DbCluster, Value};
 use crate::util::clock;
 use crate::Result;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -173,6 +174,44 @@ impl ChironEngine {
     }
 }
 
+/// The master's per-message statement set, prepared once against the
+/// centralized DB (values bound per message; the master is the only DB
+/// client, so these cover every statement on the Figure 6-B path).
+struct MasterStmts {
+    claim: Prepared,
+    get_inputs: Prepared,
+    insert_field: Prepared,
+    insert_file: Prepared,
+    finish: Prepared,
+}
+
+impl MasterStmts {
+    fn prepare(db: &DbCluster) -> Result<MasterStmts> {
+        Ok(MasterStmts {
+            claim: db.prepare(
+                "UPDATE workqueue SET status = 'RUNNING', starttime = NOW(), coreid = ? \
+                 WHERE status = 'READY' \
+                 ORDER BY taskid LIMIT 1 RETURNING taskid, actid, duration",
+            )?,
+            get_inputs: db.prepare(
+                "SELECT field, value FROM taskfield WHERE taskid = ? AND direction = 'in'",
+            )?,
+            insert_field: db.prepare(
+                "INSERT INTO taskfield (fieldid, taskid, actid, field, value, direction) \
+                 VALUES (?, ?, ?, ?, ?, 'out')",
+            )?,
+            insert_file: db.prepare(
+                "INSERT INTO file (fileid, taskid, path, size_bytes, direction) \
+                 VALUES (?, ?, ?, ?, 'out')",
+            )?,
+            finish: db.prepare(
+                "UPDATE workqueue SET status = 'FINISHED', endtime = NOW(), stdout = ? \
+                 WHERE taskid = ?",
+            )?,
+        })
+    }
+}
+
 /// Master event loop: drain the auxiliary request queue, touch the DB on the
 /// workers' behalf, run readiness polls.
 fn master_loop(
@@ -184,18 +223,22 @@ fn master_loop(
     poll_secs: f64,
     latency: f64,
 ) {
+    // The schema exists before the master thread starts, and the statement
+    // texts are static, so preparation cannot fail outside of programmer
+    // error — surface that loudly.
+    let stmts = MasterStmts::prepare(&db).expect("prepare master statements");
     let mut last_poll = Instant::now();
     loop {
         if done.load(Ordering::SeqCst) {
             // drain any straggler messages so workers don't block on replies
             while let Ok(msg) = rx.try_recv() {
-                answer(&db, &ids, msg, latency, true);
+                answer(&db, &ids, &stmts, msg, latency, true);
             }
             return;
         }
         // auxiliary queue: serve at most a small batch, then poll readiness
         match rx.recv_timeout(std::time::Duration::from_secs_f64(poll_secs)) {
-            Ok(msg) => answer(&db, &ids, msg, latency, false),
+            Ok(msg) => answer(&db, &ids, &stmts, msg, latency, false),
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
         }
@@ -204,7 +247,7 @@ fn master_loop(
                 if r.workflow_done {
                     // drain remaining requests with "no task"
                     while let Ok(msg) = rx.try_recv() {
-                        answer(&db, &ids, msg, latency, true);
+                        answer(&db, &ids, &stmts, msg, latency, true);
                     }
                     return;
                 }
@@ -215,7 +258,14 @@ fn master_loop(
 }
 
 /// Serve one worker message against the centralized DB.
-fn answer(db: &DbCluster, ids: &IdGen, msg: Msg, latency: f64, draining: bool) {
+fn answer(
+    db: &DbCluster,
+    ids: &IdGen,
+    stmts: &MasterStmts,
+    msg: Msg,
+    latency: f64,
+    draining: bool,
+) {
     if latency > 0.0 {
         std::thread::sleep(std::time::Duration::from_secs_f64(latency));
     }
@@ -227,14 +277,11 @@ fn answer(db: &DbCluster, ids: &IdGen, msg: Msg, latency: f64, draining: bool) {
             }
             // master claims a task on the worker's behalf (steps 2-3)
             let claimed = db
-                .exec_tagged(
+                .exec_prepared(
                     worker,
                     AccessKind::GetReadyTasks,
-                    &format!(
-                        "UPDATE workqueue SET status = 'RUNNING', starttime = NOW(), \
-                         coreid = {worker} WHERE status = 'READY' \
-                         ORDER BY taskid LIMIT 1 RETURNING taskid, actid, duration"
-                    ),
+                    &stmts.claim,
+                    &[Value::Int(worker as i64)],
                 )
                 .map(|r| r.rows());
             let assignment = match claimed {
@@ -243,13 +290,11 @@ fn answer(db: &DbCluster, ids: &IdGen, msg: Msg, latency: f64, draining: bool) {
                     let actid = rs.rows[0].values[1].as_i64().unwrap();
                     let duration = rs.rows[0].values[2].as_f64().unwrap_or(0.0);
                     let inputs = db
-                        .exec_tagged(
+                        .exec_prepared(
                             worker,
                             AccessKind::GetFileFields,
-                            &format!(
-                                "SELECT field, value FROM taskfield \
-                                 WHERE taskid = {taskid} AND direction = 'in'"
-                            ),
+                            &stmts.get_inputs,
+                            &[Value::Int(taskid)],
                         )
                         .map(|r| r.rows())
                         .map(|rs| {
@@ -273,47 +318,46 @@ fn answer(db: &DbCluster, ids: &IdGen, msg: Msg, latency: f64, draining: bool) {
         Msg::TaskDone { worker, taskid, actid, out_fields, out_files, stdout, ack } => {
             // steps 6-7: master records outputs + completion
             if !out_fields.is_empty() {
-                let rows: Vec<String> = out_fields
+                let rows: Vec<Vec<Value>> = out_fields
                     .iter()
                     .map(|(f, v)| {
                         let fid = IdGen::next(&ids.field);
-                        format!("({fid}, {taskid}, {actid}, '{f}', {v}, 'out')")
+                        vec![
+                            Value::Int(fid),
+                            Value::Int(taskid),
+                            Value::Int(actid),
+                            Value::str(f),
+                            Value::Float(*v),
+                        ]
                     })
                     .collect();
-                let _ = db.exec_tagged(
+                let _ = db.exec_prepared_batch(
                     worker,
                     AccessKind::InsertDomainData,
-                    &format!(
-                        "INSERT INTO taskfield (fieldid, taskid, actid, field, value, direction) VALUES {}",
-                        rows.join(", ")
-                    ),
+                    &stmts.insert_field,
+                    &rows,
                 );
             }
             if !out_files.is_empty() {
-                let rows: Vec<String> = out_files
+                let rows: Vec<Vec<Value>> = out_files
                     .iter()
                     .map(|(p, sz)| {
                         let fid = IdGen::next(&ids.file);
-                        format!("({fid}, {taskid}, '{p}', {sz}, 'out')")
+                        vec![Value::Int(fid), Value::Int(taskid), Value::str(p), Value::Int(*sz)]
                     })
                     .collect();
-                let _ = db.exec_tagged(
+                let _ = db.exec_prepared_batch(
                     worker,
                     AccessKind::InsertDomainData,
-                    &format!(
-                        "INSERT INTO file (fileid, taskid, path, size_bytes, direction) VALUES {}",
-                        rows.join(", ")
-                    ),
+                    &stmts.insert_file,
+                    &rows,
                 );
             }
-            let stdout = stdout.replace('\'', "''");
-            let _ = db.exec_tagged(
+            let _ = db.exec_prepared(
                 worker,
                 AccessKind::UpdateToFinished,
-                &format!(
-                    "UPDATE workqueue SET status = 'FINISHED', endtime = NOW(), \
-                     stdout = '{stdout}' WHERE taskid = {taskid}"
-                ),
+                &stmts.finish,
+                &[Value::str(&stdout), Value::Int(taskid)],
             );
             // step 8: the extra acknowledgement the paper calls out
             let _ = ack.send(());

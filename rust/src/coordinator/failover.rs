@@ -8,7 +8,7 @@
 
 use crate::coordinator::supervisor::{IdGen, Supervisor};
 use crate::coordinator::workflow::WorkflowSpec;
-use crate::storage::DbCluster;
+use crate::storage::{AccessKind, DbCluster, Value};
 use crate::Result;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -27,11 +27,29 @@ pub enum SupervisorRole {
 /// Register the supervisor and secondary-supervisor rows in `node`.
 pub fn register_supervisor_nodes(db: &DbCluster) -> Result<()> {
     let now = db.clock.now();
-    db.execute(&format!(
-        "INSERT INTO node (nodeid, hostname, cores, role, status, heartbeat) VALUES \
-         ({PRIMARY_NODE_ROW}, 'supervisor', 1, 'supervisor', 'UP', {now}), \
-         ({SECONDARY_NODE_ROW}, 'secondary-supervisor', 1, 'secondary_supervisor', 'UP', {now})"
-    ))?;
+    let ins = db.prepare(
+        "INSERT INTO node (nodeid, hostname, cores, role, status, heartbeat) \
+         VALUES (?, ?, 1, ?, 'UP', ?)",
+    )?;
+    db.exec_prepared_batch(
+        0,
+        AccessKind::Other,
+        &ins,
+        &[
+            vec![
+                Value::Int(PRIMARY_NODE_ROW),
+                Value::str("supervisor"),
+                Value::str("supervisor"),
+                Value::Float(now),
+            ],
+            vec![
+                Value::Int(SECONDARY_NODE_ROW),
+                Value::str("secondary-supervisor"),
+                Value::str("secondary_supervisor"),
+                Value::Float(now),
+            ],
+        ],
+    )?;
     Ok(())
 }
 
@@ -86,10 +104,12 @@ pub fn run_secondary_loop(
         if done.load(Ordering::SeqCst) {
             return;
         }
-        // Heartbeat staleness check against DB time.
-        let stale = match db.query(&format!(
-            "SELECT heartbeat FROM node WHERE nodeid = {PRIMARY_NODE_ROW}"
-        )) {
+        // Heartbeat staleness check against DB time (prepared point read;
+        // this fires every watch interval for the whole run).
+        let stale = match db
+            .prepare("SELECT heartbeat FROM node WHERE nodeid = ?")
+            .and_then(|p| db.query_prepared(&p, &[Value::Int(PRIMARY_NODE_ROW)]))
+        {
             Ok(rs) => {
                 let hb = rs
                     .rows
@@ -106,9 +126,11 @@ pub fn run_secondary_loop(
         if stale || !primary_alive.load(Ordering::SeqCst) {
             failovers.fetch_add(1, Ordering::SeqCst);
             log::warn!("secondary supervisor taking over");
-            let _ = db.execute(&format!(
-                "UPDATE node SET status = 'DOWN' WHERE nodeid = {PRIMARY_NODE_ROW}"
-            ));
+            let _ = db
+                .prepare("UPDATE node SET status = 'DOWN' WHERE nodeid = ?")
+                .and_then(|p| {
+                    db.exec_prepared(0, AccessKind::Other, &p, &[Value::Int(PRIMARY_NODE_ROW)])
+                });
             let mut sup = Supervisor::new(db.clone(), wf.clone(), workers, ids.clone(), seed);
             sup.done = done.clone();
             if let Err(e) = sup.rebuild_from_db() {

@@ -7,7 +7,7 @@
 //! the raw-file pointers; `provenance` is the W3C-PROV-style activity/entity
 //! record; `node` powers the monitoring queries (Q1–Q3).
 
-use crate::storage::DbCluster;
+use crate::storage::{AccessKind, DbCluster, Value};
 use crate::Result;
 
 /// Create all d-Chiron relations for a deployment with `workers` worker
@@ -71,16 +71,23 @@ pub fn create_schema(db: &DbCluster, workers: usize) -> Result<()> {
 /// Register the computing nodes of the deployment in the `node` relation.
 pub fn register_nodes(db: &DbCluster, workers: usize, threads_per_worker: usize) -> Result<()> {
     let now = db.clock.now();
-    let mut values = Vec::with_capacity(workers);
-    for wid in 0..workers {
-        values.push(format!(
-            "({wid}, 'node{wid:03}', {threads_per_worker}, 'worker', 'UP', {now})"
-        ));
+    let ins = db.prepare(
+        "INSERT INTO node (nodeid, hostname, cores, role, status, heartbeat) \
+         VALUES (?, ?, ?, 'worker', 'UP', ?)",
+    )?;
+    let rows: Vec<Vec<Value>> = (0..workers)
+        .map(|wid| {
+            vec![
+                Value::Int(wid as i64),
+                Value::str(format!("node{wid:03}")),
+                Value::Int(threads_per_worker as i64),
+                Value::Float(now),
+            ]
+        })
+        .collect();
+    if !rows.is_empty() {
+        db.exec_prepared_batch(0, AccessKind::Other, &ins, &rows)?;
     }
-    db.execute(&format!(
-        "INSERT INTO node (nodeid, hostname, cores, role, status, heartbeat) VALUES {}",
-        values.join(", ")
-    ))?;
     Ok(())
 }
 

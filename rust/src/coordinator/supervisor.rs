@@ -18,12 +18,74 @@
 use crate::coordinator::payload::Payload;
 use crate::coordinator::status;
 use crate::coordinator::workflow::{Operator, WorkflowSpec};
-use crate::storage::{AccessKind, DbCluster};
+use crate::storage::prepared::{in_placeholders, padded_chunks, IN_CHUNK};
+use crate::storage::{AccessKind, DbCluster, StatementResult, Value};
 use crate::util::rng::Rng;
 use crate::Result;
 use rustc_hash::{FxHashMap, FxHashSet};
 use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+
+/// Single-row templates the supervisor binds per task/row; prepared once
+/// per cluster via the shared plan cache, values never pass through SQL
+/// text.
+const INSERT_WORKFLOW: &str =
+    "INSERT INTO workflow (wfid, name, status, starttime) VALUES (?, ?, 'RUNNING', ?)";
+const INSERT_ACTIVITY: &str =
+    "INSERT INTO activity (actid, wfid, name, operator, ord, status, tasks_total, tasks_done) \
+     VALUES (?, ?, ?, ?, ?, ?, ?, 0)";
+const INSERT_TASK: &str =
+    "INSERT INTO workqueue (taskid, actid, wfid, workerid, coreid, cmd, workspace, failtries, \
+     stdout, status, duration, starttime, endtime) \
+     VALUES (?, ?, ?, ?, NULL, ?, ?, 0, NULL, ?, ?, NULL, NULL)";
+const INSERT_DEP: &str = "INSERT INTO taskdep (depid, taskid, dep) VALUES (?, ?, ?)";
+const INSERT_FIELD_IN: &str =
+    "INSERT INTO taskfield (fieldid, taskid, actid, field, value, direction) \
+     VALUES (?, ?, ?, ?, ?, 'in')";
+const SELECT_DONE: &str =
+    "SELECT taskid FROM workqueue WHERE status = 'FINISHED' OR status = 'FAILED'";
+const ACTIVITY_TO_RUNNING: &str =
+    "UPDATE activity SET status = 'RUNNING' WHERE status = 'WAITING'";
+const WORKFLOW_FINISH: &str =
+    "UPDATE workflow SET status = 'FINISHED', endtime = ? WHERE wfid = ?";
+const ACTIVITY_FINISH_ALL: &str = "UPDATE activity SET status = 'FINISHED'";
+const HEARTBEAT: &str = "UPDATE node SET heartbeat = ? WHERE nodeid = ?";
+
+/// Fixed-width IN-clause texts, rendered once per process (the skeleton is
+/// invariant; only the bound ids change per call).
+fn select_out_fields_in_sql() -> &'static str {
+    static SQL: OnceLock<String> = OnceLock::new();
+    SQL.get_or_init(|| {
+        format!(
+            "SELECT taskid, field, value FROM taskfield \
+             WHERE direction = 'out' AND taskid IN ({})",
+            in_placeholders(IN_CHUNK)
+        )
+    })
+}
+
+fn flip_ready_in_sql() -> &'static str {
+    static SQL: OnceLock<String> = OnceLock::new();
+    SQL.get_or_init(|| {
+        format!(
+            "UPDATE workqueue SET status = '{}' WHERE taskid IN ({})",
+            status::READY,
+            in_placeholders(IN_CHUNK)
+        )
+    })
+}
+
+fn flip_filtered_in_sql() -> &'static str {
+    static SQL: OnceLock<String> = OnceLock::new();
+    SQL.get_or_init(|| {
+        format!(
+            "UPDATE workqueue SET status = '{}', stdout = 'filtered-out', \
+             starttime = NOW(), endtime = NOW() WHERE taskid IN ({})",
+            status::FINISHED,
+            in_placeholders(IN_CHUNK)
+        )
+    })
+}
 
 /// Monotone id generators shared by supervisor and workers.
 #[derive(Default)]
@@ -107,6 +169,36 @@ impl Supervisor {
         self.wfid
     }
 
+    /// Prepare (plan-cache hit after the first call) and execute with bound
+    /// parameters under this supervisor's stats bucket.
+    fn exec_p(&self, kind: AccessKind, sql: &str, params: &[Value]) -> Result<StatementResult> {
+        let p = self.db.prepare(sql)?;
+        self.db.exec_prepared(self.node_id, kind, &p, params)
+    }
+
+    /// Execute a prepared single-row INSERT template over `rows`, chunked
+    /// into atomic multi-row inserts of at most `batch_limit`.
+    fn exec_batch(&self, kind: AccessKind, sql: &str, rows: &[Vec<Value>]) -> Result<()> {
+        if rows.is_empty() {
+            return Ok(());
+        }
+        let p = self.db.prepare(sql)?;
+        for chunk in rows.chunks(self.batch_limit) {
+            self.db.exec_prepared_batch(self.node_id, kind, &p, chunk)?;
+        }
+        Ok(())
+    }
+
+    /// Run `sql_of_chunk` (a statement ending in `IN (<IN_CHUNK> ?s)`) over
+    /// every padded chunk of `ids`.
+    fn exec_in_chunks(&self, kind: AccessKind, sql: &str, ids: &[i64]) -> Result<()> {
+        let p = self.db.prepare(sql)?;
+        for chunk in padded_chunks(ids, IN_CHUNK) {
+            self.db.exec_prepared(self.node_id, kind, &p, &chunk)?;
+        }
+        Ok(())
+    }
+
     /// Mean nominal duration for tasks of an activity.
     fn activity_mean(&self, act: usize) -> f64 {
         match self.wf.activities[act].payload {
@@ -128,31 +220,27 @@ impl Supervisor {
             "input tuples must match the spec cardinality"
         );
         let now = self.db.clock.now();
-        self.db.execute(&format!(
-            "INSERT INTO workflow (wfid, name, status, starttime) \
-             VALUES ({}, '{}', 'RUNNING', {now})",
-            self.wfid, self.wf.name
-        ))?;
+        self.exec_p(
+            AccessKind::Other,
+            INSERT_WORKFLOW,
+            &[Value::Int(self.wfid), Value::str(&self.wf.name), Value::Float(now)],
+        )?;
 
         // Activity rows.
         let counts = self.wf.planned_task_counts();
-        let mut act_values = Vec::new();
+        let mut act_rows: Vec<Vec<Value>> = Vec::new();
         for (i, a) in self.wf.activities.iter().enumerate() {
-            act_values.push(format!(
-                "({}, {}, '{}', '{}', {}, '{}', {}, 0)",
-                i + 1,
-                self.wfid,
-                a.name,
-                a.operator.name(),
-                i + 1,
-                if i == 0 { "RUNNING" } else { "WAITING" },
-                counts[i]
-            ));
+            act_rows.push(vec![
+                Value::Int(i as i64 + 1),
+                Value::Int(self.wfid),
+                Value::str(&a.name),
+                Value::str(a.operator.name()),
+                Value::Int(i as i64 + 1),
+                Value::str(if i == 0 { "RUNNING" } else { "WAITING" }),
+                Value::Int(counts[i] as i64),
+            ]);
         }
-        self.db.execute(&format!(
-            "INSERT INTO activity (actid, wfid, name, operator, ord, status, tasks_total, tasks_done) VALUES {}",
-            act_values.join(", ")
-        ))?;
+        self.exec_batch(AccessKind::Other, INSERT_ACTIVITY, &act_rows)?;
 
         // Task graph, activity by activity.
         let mut worker_cursor = 0usize;
@@ -161,8 +249,8 @@ impl Supervisor {
             let n_tasks = counts[ai];
             let mean = self.activity_mean(ai);
             let mut tids = Vec::with_capacity(n_tasks);
-            let mut task_rows = Vec::with_capacity(n_tasks);
-            let mut dep_rows: Vec<String> = Vec::new();
+            let mut task_rows: Vec<Vec<Value>> = Vec::with_capacity(n_tasks);
+            let mut dep_rows: Vec<Vec<Value>> = Vec::new();
             for j in 0..n_tasks {
                 let tid = IdGen::next(&self.ids.task);
                 tids.push(tid);
@@ -170,13 +258,16 @@ impl Supervisor {
                 worker_cursor += 1;
                 let dur = if mean > 0.0 { self.rng.task_duration(mean, 0.05) } else { 0.0 };
                 let st = if ai == 0 { status::READY } else { status::WAITING };
-                task_rows.push(format!(
-                    "({tid}, {act_id}, {wf}, {wid}, NULL, './run {name} id={tid}', \
-                     '/data/{name}', 0, NULL, '{st}', {dur}, NULL, NULL)",
-                    act_id = ai + 1,
-                    wf = self.wfid,
-                    name = act.name,
-                ));
+                task_rows.push(vec![
+                    Value::Int(tid),
+                    Value::Int(ai as i64 + 1),
+                    Value::Int(self.wfid),
+                    Value::Int(wid as i64),
+                    Value::str(format!("./run {} id={tid}", act.name)),
+                    Value::str(format!("/data/{}", act.name)),
+                    Value::str(st),
+                    Value::Float(dur),
+                ]);
                 // dependencies on the previous activity
                 let deps: Vec<i64> = if ai == 0 {
                     vec![]
@@ -198,7 +289,7 @@ impl Supervisor {
                 };
                 for d in &deps {
                     let depid = IdGen::next(&self.ids.dep);
-                    dep_rows.push(format!("({depid}, {tid}, {d})"));
+                    dep_rows.push(vec![Value::Int(depid), Value::Int(tid), Value::Int(*d)]);
                 }
                 self.graph.remaining.insert(tid, deps.len());
                 for d in &deps {
@@ -207,30 +298,13 @@ impl Supervisor {
                 self.graph.deps.insert(tid, deps);
                 self.graph.task_act.insert(tid, ai);
             }
-            for chunk in task_rows.chunks(self.batch_limit) {
-                self.db.exec_tagged(
-                    self.node_id,
-                    AccessKind::InsertTasks,
-                    &format!(
-                        "INSERT INTO workqueue (taskid, actid, wfid, workerid, coreid, cmd, \
-                         workspace, failtries, stdout, status, duration, starttime, endtime) \
-                         VALUES {}",
-                        chunk.join(", ")
-                    ),
-                )?;
-            }
-            for chunk in dep_rows.chunks(self.batch_limit) {
-                self.db.exec_tagged(
-                    self.node_id,
-                    AccessKind::InsertTasks,
-                    &format!("INSERT INTO taskdep (depid, taskid, dep) VALUES {}", chunk.join(", ")),
-                )?;
-            }
+            self.exec_batch(AccessKind::InsertTasks, INSERT_TASK, &task_rows)?;
+            self.exec_batch(AccessKind::InsertTasks, INSERT_DEP, &dep_rows)?;
             prev_tasks = tids;
         }
 
         // Activity-1 input fields.
-        let mut field_rows = Vec::new();
+        let mut field_rows: Vec<Vec<Value>> = Vec::new();
         let first_act_tasks: Vec<i64> = self
             .graph
             .task_act
@@ -243,19 +317,16 @@ impl Supervisor {
         for (tid, tuple) in sorted_first.iter().zip(inputs.iter()) {
             for (name, val) in tuple {
                 let fid = IdGen::next(&self.ids.field);
-                field_rows.push(format!("({fid}, {tid}, 1, '{name}', {val}, 'in')"));
+                field_rows.push(vec![
+                    Value::Int(fid),
+                    Value::Int(*tid),
+                    Value::Int(1),
+                    Value::str(name),
+                    Value::Float(*val),
+                ]);
             }
         }
-        for chunk in field_rows.chunks(self.batch_limit) {
-            self.db.exec_tagged(
-                self.node_id,
-                AccessKind::InsertDomainData,
-                &format!(
-                    "INSERT INTO taskfield (fieldid, taskid, actid, field, value, direction) VALUES {}",
-                    chunk.join(", ")
-                ),
-            )?;
-        }
+        self.exec_batch(AccessKind::InsertDomainData, INSERT_FIELD_IN, &field_rows)?;
         Ok(())
     }
 
@@ -324,13 +395,9 @@ impl Supervisor {
         let mut report = PollReport::default();
 
         // 1. who finished since last poll?
-        let rs = self.db.exec_tagged(
-            self.node_id,
-            AccessKind::UpdateActivityStatus,
-            "SELECT taskid FROM workqueue WHERE status = 'FINISHED' OR status = 'FAILED'",
-        )?;
+        let rs = self.exec_p(AccessKind::UpdateActivityStatus, SELECT_DONE, &[])?;
         let rs = match rs {
-            crate::storage::StatementResult::Rows(r) => r,
+            StatementResult::Rows(r) => r,
             _ => unreachable!(),
         };
         let mut newly: Vec<i64> = Vec::new();
@@ -349,20 +416,17 @@ impl Supervisor {
 
         // 6. activity + workflow bookkeeping.
         if report.newly_finished > 0 || report.filtered_out > 0 {
-            self.db.exec_tagged(
-                self.node_id,
-                AccessKind::UpdateActivityStatus,
-                "UPDATE activity SET status = 'RUNNING' WHERE status = 'WAITING'",
-            )?;
+            self.exec_p(AccessKind::UpdateActivityStatus, ACTIVITY_TO_RUNNING, &[])?;
         }
         let total: usize = self.graph.task_act.len();
         if self.graph.finished.len() == total && total > 0 {
             let now = self.db.clock.now();
-            self.db.execute(&format!(
-                "UPDATE workflow SET status = 'FINISHED', endtime = {now} WHERE wfid = {}",
-                self.wfid
-            ))?;
-            self.db.execute("UPDATE activity SET status = 'FINISHED'")?;
+            self.exec_p(
+                AccessKind::Other,
+                WORKFLOW_FINISH,
+                &[Value::Float(now), Value::Int(self.wfid)],
+            )?;
+            self.exec_p(AccessKind::Other, ACTIVITY_FINISH_ALL, &[])?;
             self.done.store(true, Ordering::SeqCst);
             report.workflow_done = true;
         }
@@ -416,17 +480,20 @@ impl Supervisor {
             all_deps.dedup();
             let mut outputs: FxHashMap<i64, Vec<(String, f64)>> = FxHashMap::default();
             if !all_deps.is_empty() {
-                let id_list =
-                    all_deps.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ");
-                let rs = self.db.query(&format!(
-                    "SELECT taskid, field, value FROM taskfield \
-                     WHERE direction = 'out' AND taskid IN ({id_list})"
-                ))?;
-                for r in &rs.rows {
-                    let tid = r.values[0].as_i64().unwrap();
-                    let f = r.values[1].as_str().unwrap_or("").to_string();
-                    let v = r.values[2].as_f64().unwrap_or(0.0);
-                    outputs.entry(tid).or_default().push((f, v));
+                // Fixed-width IN probe: one cached plan covers every list
+                // length (padding duplicates the last id, harmless in IN).
+                let p = self.db.prepare(select_out_fields_in_sql())?;
+                for chunk in padded_chunks(&all_deps, IN_CHUNK) {
+                    let rs = self
+                        .db
+                        .exec_prepared(self.node_id, AccessKind::Other, &p, &chunk)?
+                        .rows();
+                    for r in &rs.rows {
+                        let tid = r.values[0].as_i64().unwrap();
+                        let f = r.values[1].as_str().unwrap_or("").to_string();
+                        let v = r.values[2].as_f64().unwrap_or(0.0);
+                        outputs.entry(tid).or_default().push((f, v));
+                    }
                 }
             }
 
@@ -457,58 +524,45 @@ impl Supervisor {
                 }
             }
             // input ingestion rows for kept tasks
-            let mut field_rows = Vec::new();
+            let mut field_rows: Vec<Vec<Value>> = Vec::new();
             for t in &to_ready {
                 let act = self.graph.task_act[&t] as i64 + 1;
                 for d in &self.graph.deps[t] {
                     if let Some(fs) = outputs.get(d) {
                         for (name, val) in fs {
                             let fid = IdGen::next(&self.ids.field);
-                            field_rows.push(format!("({fid}, {t}, {act}, '{name}', {val}, 'in')"));
+                            field_rows.push(vec![
+                                Value::Int(fid),
+                                Value::Int(*t),
+                                Value::Int(act),
+                                Value::str(name),
+                                Value::Float(*val),
+                            ]);
                         }
                     }
                 }
             }
-            for chunk in field_rows.chunks(self.batch_limit) {
-                self.db.exec_tagged(
-                    self.node_id,
-                    AccessKind::InsertDomainData,
-                    &format!(
-                        "INSERT INTO taskfield (fieldid, taskid, actid, field, value, direction) VALUES {}",
-                        chunk.join(", ")
-                    ),
+            self.exec_batch(AccessKind::InsertDomainData, INSERT_FIELD_IN, &field_rows)?;
+
+            // 5. flip statuses (fixed-width IN updates; padding repeats an
+            // id, which an UPDATE applies once).
+            if !to_ready.is_empty() {
+                self.exec_in_chunks(
+                    AccessKind::UpdateActivityStatus,
+                    flip_ready_in_sql(),
+                    &to_ready,
                 )?;
             }
-
-            // 5. flip statuses.
-            for (list, new_status, note) in [
-                (&to_ready, status::READY, None),
-                (&filtered, status::FINISHED, Some("filtered-out")),
-            ] {
-                if list.is_empty() {
-                    continue;
-                }
-                for chunk in list.chunks(self.batch_limit) {
-                    let ids = chunk.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(", ");
-                    let extra = match note {
-                        Some(n) => format!(", stdout = '{n}', starttime = NOW(), endtime = NOW()"),
-                        None => String::new(),
-                    };
-                    self.db.exec_tagged(
-                        self.node_id,
-                        AccessKind::UpdateActivityStatus,
-                        &format!(
-                            "UPDATE workqueue SET status = '{new_status}'{extra} WHERE taskid IN ({ids})"
-                        ),
-                    )?;
-                }
-                if note.is_some() {
-                    // filtered tasks count as finished for dependency purposes
-                    for t in list.iter() {
-                        if self.graph.finished.insert(*t) {
-                            // propagate on the next poll
-                        }
-                    }
+            if !filtered.is_empty() {
+                self.exec_in_chunks(
+                    AccessKind::UpdateActivityStatus,
+                    flip_filtered_in_sql(),
+                    &filtered,
+                )?;
+                // filtered tasks count as finished for dependency purposes;
+                // they propagate on the next poll
+                for t in filtered.iter() {
+                    self.graph.finished.insert(*t);
                 }
             }
             Ok((to_ready.len(), filtered))
@@ -518,10 +572,10 @@ impl Supervisor {
     /// Touch this supervisor's heartbeat row.
     pub fn heartbeat(&self, node_row: i64) -> Result<()> {
         let now = self.db.clock.now();
-        self.db.exec_tagged(
-            self.node_id,
+        self.exec_p(
             AccessKind::UpdateWorkerHeartbeat,
-            &format!("UPDATE node SET heartbeat = {now} WHERE nodeid = {node_row}"),
+            HEARTBEAT,
+            &[Value::Float(now), Value::Int(node_row)],
         )?;
         Ok(())
     }
@@ -552,11 +606,13 @@ mod tests {
     }
 
     fn finish_all_running_or_ready(db: &DbCluster, act: i64) {
-        db.execute(&format!(
-            "UPDATE workqueue SET status = 'FINISHED', endtime = NOW() \
-             WHERE actid = {act} AND status = 'READY'"
-        ))
-        .unwrap();
+        let p = db
+            .prepare(
+                "UPDATE workqueue SET status = 'FINISHED', endtime = NOW() \
+                 WHERE actid = ? AND status = 'READY'",
+            )
+            .unwrap();
+        db.exec_prepared(0, AccessKind::Other, &p, &[Value::Int(act)]).unwrap();
     }
 
     #[test]

@@ -10,10 +10,79 @@
 use crate::coordinator::payload::{self, Payload, RunnerRegistry, TaskCtx};
 use crate::coordinator::supervisor::IdGen;
 use crate::storage::connector::WorkerLink;
-use crate::storage::AccessKind;
+use crate::storage::prepared::Prepared;
+use crate::storage::{AccessKind, Value};
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+
+/// The worker's per-task statement set, prepared once per node through its
+/// [`WorkerLink`] (plan-only handles: they keep executing through the
+/// secondary connector after the primary dies, and against promoted
+/// backups after a data-node failure). Values are always bound — stdout
+/// and field names never touch SQL text, so embedded quotes are inert.
+struct WorkerStmts {
+    /// `getREADYtasks`: candidates from this worker's WQ partition.
+    get_ready: Prepared,
+    /// `updateToRUNNING`: the atomic claim.
+    claim: Prepared,
+    /// `getFileFields`: the task's domain inputs.
+    get_inputs: Prepared,
+    /// Domain outputs (single-row template, bound per field).
+    insert_field: Prepared,
+    /// Raw file pointers.
+    insert_file: Prepared,
+    /// W3C-PROV edges.
+    insert_prov: Prepared,
+    /// `updateToFINISHED`.
+    finish: Prepared,
+    /// Retry-or-fail bookkeeping.
+    fail: Prepared,
+}
+
+impl WorkerStmts {
+    fn prepare(link: &WorkerLink, claim_batch: usize) -> Result<WorkerStmts> {
+        // LIMIT is not a parameter position in the dialect; the batch size
+        // is fixed per worker config, so it is rendered once here at
+        // prepare time (never per call, and never a value).
+        let get_ready_sql = format!(
+            "SELECT taskid, actid, duration FROM workqueue \
+             WHERE workerid = ? AND status = 'READY' ORDER BY taskid LIMIT {}",
+            claim_batch.max(1)
+        );
+        Ok(WorkerStmts {
+            get_ready: link.prepare(&get_ready_sql)?,
+            claim: link.prepare(
+                "UPDATE workqueue SET status = 'RUNNING', starttime = NOW(), coreid = ? \
+                 WHERE taskid = ? AND status = 'READY'",
+            )?,
+            get_inputs: link.prepare(
+                "SELECT field, value FROM taskfield WHERE taskid = ? AND direction = 'in'",
+            )?,
+            insert_field: link.prepare(
+                "INSERT INTO taskfield (fieldid, taskid, actid, field, value, direction) \
+                 VALUES (?, ?, ?, ?, ?, 'out')",
+            )?,
+            insert_file: link.prepare(
+                "INSERT INTO file (fileid, taskid, path, size_bytes, direction) \
+                 VALUES (?, ?, ?, ?, 'out')",
+            )?,
+            insert_prov: link.prepare(
+                "INSERT INTO provenance (pid, taskid, actid, kind, entity, at) \
+                 VALUES (?, ?, ?, ?, ?, NOW())",
+            )?,
+            finish: link.prepare(
+                "UPDATE workqueue SET status = 'FINISHED', endtime = NOW(), stdout = ? \
+                 WHERE taskid = ?",
+            )?,
+            fail: link.prepare(
+                "UPDATE workqueue SET failtries = failtries + 1, stdout = ?, \
+                 status = CASE WHEN failtries + 1 >= ? THEN 'FAILED' ELSE 'READY' END \
+                 WHERE taskid = ?",
+            )?,
+        })
+    }
+}
 
 /// Worker configuration (per worker node).
 #[derive(Clone)]
@@ -64,6 +133,9 @@ pub struct WorkerNode {
     ids: Arc<IdGen>,
     done: Arc<AtomicBool>,
     pub counters: Arc<WorkerCounters>,
+    /// Prepared per-task statements, initialized lazily on the first step
+    /// (the schema must exist by then; node construction stays infallible).
+    stmts: OnceLock<WorkerStmts>,
 }
 
 impl WorkerNode {
@@ -83,7 +155,19 @@ impl WorkerNode {
             ids,
             done,
             counters: Arc::new(WorkerCounters::default()),
+            stmts: OnceLock::new(),
         }
+    }
+
+    /// The node's prepared statement set (prepared on first use; a losing
+    /// racer's set is dropped — the plan cache makes re-preparation a
+    /// lookup, not a parse).
+    fn stmts(&self) -> Result<&WorkerStmts> {
+        if self.stmts.get().is_none() {
+            let prepared = WorkerStmts::prepare(&self.link, self.cfg.claim_batch)?;
+            let _ = self.stmts.set(prepared);
+        }
+        Ok(self.stmts.get().expect("statement set just initialized"))
     }
 
     /// Spawn this node's threads; returns their join handles.
@@ -130,18 +214,15 @@ impl WorkerNode {
     /// One scheduling step. Returns whether a task was executed.
     pub fn step(&self, core: i64) -> Result<bool> {
         let w = self.cfg.worker_id;
+        let stmts = self.stmts()?;
 
         // getREADYtasks: candidates from this worker's partition.
         let cands = self
             .link
-            .exec(
+            .exec_prepared(
                 AccessKind::GetReadyTasks,
-                &format!(
-                    "SELECT taskid, actid, duration FROM workqueue \
-                     WHERE workerid = {w} AND status = 'READY' \
-                     ORDER BY taskid LIMIT {}",
-                    self.cfg.claim_batch
-                ),
+                &stmts.get_ready,
+                &[Value::Int(w as i64)],
             )?
             .rows();
         if cands.rows.is_empty() {
@@ -156,12 +237,10 @@ impl WorkerNode {
             // updateToRUNNING: atomic claim (threads of this node race).
             let claimed = self
                 .link
-                .exec(
+                .exec_prepared(
                     AccessKind::UpdateToRunning,
-                    &format!(
-                        "UPDATE workqueue SET status = 'RUNNING', starttime = NOW(), \
-                         coreid = {core} WHERE taskid = {taskid} AND status = 'READY'"
-                    ),
+                    &stmts.claim,
+                    &[Value::Int(core), Value::Int(taskid)],
                 )?
                 .affected();
             if claimed == 0 {
@@ -178,17 +257,12 @@ impl WorkerNode {
     /// Run a claimed task to completion (or failure/retry).
     fn execute_claimed(&self, _core: i64, taskid: i64, actid: i64, duration: f64) -> Result<()> {
         let w = self.cfg.worker_id;
+        let stmts = self.stmts()?;
 
         // getFileFields: the task's domain inputs.
         let inputs = self
             .link
-            .exec(
-                AccessKind::GetFileFields,
-                &format!(
-                    "SELECT field, value FROM taskfield \
-                     WHERE taskid = {taskid} AND direction = 'in'"
-                ),
-            )?
+            .exec_prepared(AccessKind::GetFileFields, &stmts.get_inputs, &[Value::Int(taskid)])?
             .rows();
         let inputs: Vec<(String, f64)> = inputs
             .rows
@@ -218,77 +292,84 @@ impl WorkerNode {
 
         match payload::execute(&payload, &ctx, &self.registry) {
             Ok(out) => {
-                // Domain outputs.
+                // Domain outputs (one batched insert, values bound).
                 if !out.fields.is_empty() {
-                    let rows: Vec<String> = out
+                    let rows: Vec<Vec<Value>> = out
                         .fields
                         .iter()
                         .map(|(f, v)| {
                             let fid = IdGen::next(&self.ids.field);
-                            format!("({fid}, {taskid}, {actid}, '{f}', {v}, 'out')")
+                            vec![
+                                Value::Int(fid),
+                                Value::Int(taskid),
+                                Value::Int(actid),
+                                Value::str(f),
+                                Value::Float(*v),
+                            ]
                         })
                         .collect();
-                    self.link.exec(
+                    self.link.exec_prepared_batch(
                         AccessKind::InsertDomainData,
-                        &format!(
-                            "INSERT INTO taskfield (fieldid, taskid, actid, field, value, direction) VALUES {}",
-                            rows.join(", ")
-                        ),
+                        &stmts.insert_field,
+                        &rows,
                     )?;
                 }
                 // Raw file pointers.
                 if !out.files.is_empty() {
-                    let rows: Vec<String> = out
+                    let rows: Vec<Vec<Value>> = out
                         .files
                         .iter()
                         .map(|(p, sz)| {
                             let fid = IdGen::next(&self.ids.file);
-                            format!("({fid}, {taskid}, '{p}', {sz}, 'out')")
+                            vec![
+                                Value::Int(fid),
+                                Value::Int(taskid),
+                                Value::str(p),
+                                Value::Int(*sz),
+                            ]
                         })
                         .collect();
-                    self.link.exec(
+                    self.link.exec_prepared_batch(
                         AccessKind::InsertDomainData,
-                        &format!(
-                            "INSERT INTO file (fileid, taskid, path, size_bytes, direction) VALUES {}",
-                            rows.join(", ")
-                        ),
+                        &stmts.insert_file,
+                        &rows,
                     )?;
                 }
                 // Provenance: used(inputs) + wasGeneratedBy(outputs).
-                let mut prov_rows = Vec::new();
+                let mut prov_rows: Vec<Vec<Value>> = Vec::new();
+                let prov =
+                    |ids: &Arc<IdGen>, kind: &str, entity: &str, rows: &mut Vec<Vec<Value>>| {
+                        let pid = IdGen::next(&ids.prov);
+                        rows.push(vec![
+                            Value::Int(pid),
+                            Value::Int(taskid),
+                            Value::Int(actid),
+                            Value::str(kind),
+                            Value::str(entity),
+                        ]);
+                    };
                 for (f, _) in &inputs {
-                    let pid = IdGen::next(&self.ids.prov);
-                    prov_rows.push(format!("({pid}, {taskid}, {actid}, 'used', '{f}', NOW())"));
+                    prov(&self.ids, "used", f, &mut prov_rows);
                 }
                 for (f, _) in &out.fields {
-                    let pid = IdGen::next(&self.ids.prov);
-                    prov_rows.push(format!(
-                        "({pid}, {taskid}, {actid}, 'wasGeneratedBy', '{f}', NOW())"
-                    ));
+                    prov(&self.ids, "wasGeneratedBy", f, &mut prov_rows);
                 }
                 for (p, _) in &out.files {
-                    let pid = IdGen::next(&self.ids.prov);
-                    prov_rows.push(format!(
-                        "({pid}, {taskid}, {actid}, 'wasGeneratedBy', '{p}', NOW())"
-                    ));
+                    prov(&self.ids, "wasGeneratedBy", p, &mut prov_rows);
                 }
                 if !prov_rows.is_empty() {
-                    self.link.exec(
+                    self.link.exec_prepared_batch(
                         AccessKind::InsertProvenance,
-                        &format!(
-                            "INSERT INTO provenance (pid, taskid, actid, kind, entity, at) VALUES {}",
-                            prov_rows.join(", ")
-                        ),
+                        &stmts.insert_prov,
+                        &prov_rows,
                     )?;
                 }
-                // updateToFINISHED.
-                let stdout = out.stdout.replace('\'', "''");
-                self.link.exec(
+                // updateToFINISHED: stdout is bound, so quotes and any other
+                // payload output are inert data, not SQL.
+                self.link.exec_prepared(
                     AccessKind::UpdateToFinished,
-                    &format!(
-                        "UPDATE workqueue SET status = 'FINISHED', endtime = NOW(), \
-                         stdout = '{stdout}' WHERE taskid = {taskid}"
-                    ),
+                    &stmts.finish,
+                    &[Value::str(&out.stdout), Value::Int(taskid)],
                 )?;
                 self.counters.executed.fetch_add(1, Ordering::Relaxed);
                 Ok(())
@@ -296,15 +377,14 @@ impl WorkerNode {
             Err(e) => {
                 self.counters.failures.fetch_add(1, Ordering::Relaxed);
                 // retry or fail permanently
-                let msg = e.to_string().replace('\'', "''");
-                self.link.exec(
+                self.link.exec_prepared(
                     AccessKind::UpdateTaskOutput,
-                    &format!(
-                        "UPDATE workqueue SET failtries = failtries + 1, stdout = '{msg}', \
-                         status = CASE WHEN failtries + 1 >= {} THEN 'FAILED' ELSE 'READY' END \
-                         WHERE taskid = {taskid}",
-                        self.cfg.max_failtries
-                    ),
+                    &stmts.fail,
+                    &[
+                        Value::str(e.to_string()),
+                        Value::Int(self.cfg.max_failtries),
+                        Value::Int(taskid),
+                    ],
                 )?;
                 Ok(())
             }

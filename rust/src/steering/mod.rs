@@ -6,12 +6,22 @@
 //! monitoring query can join the scheduler's workqueue with domain values
 //! and provenance edges with no export step.
 
-use crate::storage::{AccessKind, DbCluster, ResultSet};
+use crate::storage::prepared::{in_placeholders, padded_chunks, IN_CHUNK};
+use crate::storage::{AccessKind, DbCluster, ResultSet, Value};
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
+/// Stats bucket for steering clients.
+const STEERING_NODE: u32 = u32::MAX - 1;
+
 /// A steering client bound to a (possibly running) d-Chiron database.
+///
+/// Every query goes through the cluster's prepared-statement API: the
+/// monitor loop re-issues Q1–Q7 every interval, so each query text is
+/// parsed once per cluster and user-supplied values (hostnames, activity
+/// names, thresholds) are bound, never interpolated — a hostname like
+/// `o'brien-03` steers, it does not break the lexer.
 pub struct SteeringClient {
     db: Arc<DbCluster>,
 }
@@ -22,7 +32,14 @@ impl SteeringClient {
     }
 
     fn q(&self, sql: &str) -> Result<ResultSet> {
-        match self.db.exec_tagged(u32::MAX - 1, AccessKind::Steering, sql)? {
+        self.q_params(sql, &[])
+    }
+
+    /// Prepare (cache-hit after the first call), bind, and execute one
+    /// steering query.
+    fn q_params(&self, sql: &str, params: &[Value]) -> Result<ResultSet> {
+        let p = self.db.prepare(sql)?;
+        match self.db.exec_prepared(STEERING_NODE, AccessKind::Steering, &p, params)? {
             crate::storage::StatementResult::Rows(r) => Ok(r),
             other => Err(Error::Engine(format!("steering query returned {other:?}"))),
         }
@@ -43,15 +60,16 @@ impl SteeringClient {
     /// Q2: for one node, per task finished in the last minute: status and
     /// total bytes of its files, heaviest first.
     pub fn q2_bytes_by_task(&self, hostname: &str) -> Result<ResultSet> {
-        self.q(&format!(
+        self.q_params(
             "SELECT t.taskid, t.status, SUM(f.size_bytes) AS bytes \
              FROM workqueue t \
              JOIN file f ON f.taskid = t.taskid \
              JOIN node n ON t.workerid = n.nodeid \
-             WHERE n.hostname = '{hostname}' AND t.endtime >= NOW() - 60 \
+             WHERE n.hostname = ? AND t.endtime >= NOW() - 60 \
              GROUP BY t.taskid, t.status \
-             ORDER BY bytes DESC, t.status ASC"
-        ))
+             ORDER BY bytes DESC, t.status ASC",
+            &[Value::str(hostname)],
+        )
     }
 
     /// Q3: node(s) with the most aborted/failed tasks in the last minute.
@@ -66,10 +84,11 @@ impl SteeringClient {
 
     /// Q4: tasks left to execute for a workflow.
     pub fn q4_tasks_left(&self, wfid: i64) -> Result<i64> {
-        let rs = self.q(&format!(
+        let rs = self.q_params(
             "SELECT COUNT(*) AS remaining FROM workqueue \
-             WHERE wfid = {wfid} AND status != 'FINISHED' AND status != 'FAILED'"
-        ))?;
+             WHERE wfid = ? AND status != 'FINISHED' AND status != 'FAILED'",
+            &[Value::Int(wfid)],
+        )?;
         Ok(rs.rows[0].values[0].as_i64().unwrap_or(0))
     }
 
@@ -107,18 +126,21 @@ impl SteeringClient {
     /// statements, as a steering client would.
     pub fn q7_wear_outliers(&self, wear_activity: &str, threshold: f64) -> Result<ResultSet> {
         // average runtime of the wear activity's finished tasks
-        let avg = self.q(&format!(
+        let avg = self.q_params(
             "SELECT AVG(t.endtime - t.starttime) AS a FROM workqueue t \
              JOIN activity ac ON t.actid = ac.actid \
-             WHERE ac.name = '{wear_activity}' AND t.status = 'FINISHED'"
-        ))?;
+             WHERE ac.name = ? AND t.status = 'FINISHED'",
+            &[Value::str(wear_activity)],
+        )?;
         let avg_secs = avg
             .rows
             .first()
             .and_then(|r| r.values[0].as_f64())
             .unwrap_or(f64::INFINITY);
         // wear tasks over both thresholds, with their consumed curvature
-        self.q(&format!(
+        // (note: a non-finite avg_secs is only representable as a bound
+        // value — rendered into SQL text it would not even lex)
+        self.q_params(
             "SELECT t.taskid, fx.value AS cx, fy.value AS cy, fz.value AS cz, \
                     ff.value AS f1, rf.path \
              FROM workqueue t \
@@ -129,14 +151,19 @@ impl SteeringClient {
              JOIN taskfield fz ON fz.taskid = t.taskid \
              LEFT JOIN taskdep d ON d.taskid = t.taskid \
              LEFT JOIN file rf ON rf.taskid = d.dep \
-             WHERE ac.name = '{wear_activity}' AND t.status = 'FINISHED' \
-               AND ff.field = 'f1' AND ff.direction = 'out' AND ff.value > {threshold} \
+             WHERE ac.name = ? AND t.status = 'FINISHED' \
+               AND ff.field = 'f1' AND ff.direction = 'out' AND ff.value > ? \
                AND fx.field = 'cx' AND fx.direction = 'in' \
                AND fy.field = 'cy' AND fy.direction = 'in' \
                AND fz.field = 'cz' AND fz.direction = 'in' \
-               AND t.endtime - t.starttime > {avg_secs} \
-             ORDER BY f1 DESC"
-        ))
+               AND t.endtime - t.starttime > ? \
+             ORDER BY f1 DESC",
+            &[
+                Value::str(wear_activity),
+                Value::Float(threshold),
+                Value::Float(avg_secs),
+            ],
+        )
     }
 
     /// Q8: steering *adaptation* — rewrite an input field of the next READY
@@ -150,37 +177,46 @@ impl SteeringClient {
         new_value: f64,
         limit: usize,
     ) -> Result<usize> {
-        // find target tasks (READY, of the activity)
-        let rs = self.q(&format!(
+        // find target tasks (READY, of the activity). LIMIT is not a
+        // parameter position in the dialect, so only the bound count is
+        // rendered into the (cached) statement skeleton; the activity name
+        // stays a bound value.
+        let sel = format!(
             "SELECT t.taskid FROM workqueue t JOIN activity a ON t.actid = a.actid \
-             WHERE a.name = '{activity}' AND t.status = 'READY' \
+             WHERE a.name = ? AND t.status = 'READY' \
              ORDER BY t.taskid LIMIT {limit}"
-        ))?;
+        );
+        let rs = self.q_params(&sel, &[Value::str(activity)])?;
         if rs.rows.is_empty() {
             return Ok(0);
         }
-        let ids: Vec<String> =
-            rs.rows.iter().map(|r| r.values[0].as_i64().unwrap().to_string()).collect();
-        let id_list = ids.join(", ");
-        let n = self
-            .db
-            .exec_tagged(
-                u32::MAX - 1,
-                AccessKind::Steering,
-                &format!(
-                    "UPDATE taskfield SET value = {new_value} \
-                     WHERE field = '{field}' AND direction = 'in' AND taskid IN ({id_list})"
-                ),
-            )?
-            .affected();
+        let ids: Vec<i64> =
+            rs.rows.iter().map(|r| r.values[0].as_i64().unwrap()).collect();
+        let upd = self.db.prepare(&format!(
+            "UPDATE taskfield SET value = ? \
+             WHERE field = ? AND direction = 'in' AND taskid IN ({})",
+            in_placeholders(IN_CHUNK)
+        ))?;
+        let mut n = 0;
+        for chunk in padded_chunks(&ids, IN_CHUNK) {
+            let mut params = Vec::with_capacity(2 + IN_CHUNK);
+            params.push(Value::Float(new_value));
+            params.push(Value::str(field));
+            params.extend(chunk);
+            n += self
+                .db
+                .exec_prepared(STEERING_NODE, AccessKind::Steering, &upd, &params)?
+                .affected();
+        }
         Ok(n)
     }
 
     /// Provenance derivation query: everything a task used and generated.
     pub fn provenance_of(&self, taskid: i64) -> Result<ResultSet> {
-        self.q(&format!(
-            "SELECT kind, entity, at FROM provenance WHERE taskid = {taskid} ORDER BY at, kind, entity"
-        ))
+        self.q_params(
+            "SELECT kind, entity, at FROM provenance WHERE taskid = ? ORDER BY at, kind, entity",
+            &[Value::Int(taskid)],
+        )
     }
 
     /// Database footprint summary (the paper's "tens of MB" observation).
@@ -294,6 +330,19 @@ mod tests {
         // finished workflow -> q5/q6 empty but valid
         c.q5_busiest_activity().unwrap();
         c.q6_activity_times().unwrap();
+    }
+
+    #[test]
+    fn quoted_user_input_is_data_not_sql() {
+        let db = run_risers();
+        let c = SteeringClient::new(db);
+        // historical hazard: a single quote in an interpolated hostname or
+        // activity name broke the lexer; bound parameters make it inert
+        let rs = c.q2_bytes_by_task("o'brien-03").unwrap();
+        assert!(rs.rows.is_empty());
+        let q7 = c.q7_wear_outliers("it's-not-an-activity", 0.5).unwrap();
+        assert!(q7.rows.is_empty());
+        assert_eq!(c.q8_adapt_ready_inputs("o'hara", "x", 1.0, 4).unwrap(), 0);
     }
 
     #[test]

@@ -89,7 +89,7 @@ pub fn recover(dir: &Path, config: ClusterConfig) -> Result<Arc<DbCluster>> {
                     }
                     crate::storage::value::Value::Bool(b) => b.to_string().to_uppercase(),
                     crate::storage::value::Value::Str(s) => {
-                        format!("'{}'", s.replace('\'', "''"))
+                        format!("'{}'", crate::storage::sql::escape_sql_str(s))
                     }
                 })
                 .collect();

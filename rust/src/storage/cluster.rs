@@ -10,6 +10,7 @@
 
 use crate::storage::datanode::DataNode;
 use crate::storage::partition::PartitionStore;
+use crate::storage::prepared::{Prepared, PreparedPlan};
 use crate::storage::sql::exec::{run_select, TableInput};
 use crate::storage::sql::expr::{bind, EvalCtx, Layout};
 use crate::storage::sql::{self, Expr, SelectItem, SelectStmt, Statement, TableRef};
@@ -55,6 +56,11 @@ struct TableMeta {
     placements: Vec<Placement>,
 }
 
+/// Upper bound on cached plans; at the bound, each new statement evicts one
+/// arbitrary cached entry (the working set of a workflow run is a few dozen
+/// statements, so eviction never triggers outside adversarial use).
+const PLAN_CACHE_MAX: usize = 1024;
+
 /// The cluster facade.
 pub struct DbCluster {
     nodes: Vec<Arc<DataNode>>,
@@ -63,6 +69,10 @@ pub struct DbCluster {
     pub stats: Arc<StatsRegistry>,
     replication: bool,
     place_cursor: AtomicUsize,
+    /// Shared plan cache: statement text → prepared plan. Every client of
+    /// the cluster (supervisors, workers via connectors, steering) shares
+    /// it, so each distinct statement is parsed once per cluster lifetime.
+    plans: RwLock<FxHashMap<String, Arc<PreparedPlan>>>,
 }
 
 // ---------- lock plumbing ----------
@@ -159,6 +169,7 @@ impl DbCluster {
             stats: Arc::new(StatsRegistry::new()),
             replication: config.replication,
             place_cursor: AtomicUsize::new(0),
+            plans: RwLock::new(FxHashMap::default()),
         }))
     }
 
@@ -362,6 +373,125 @@ impl DbCluster {
             }
         }
         Ok(healed)
+    }
+
+    // ---------- prepared statements ----------
+
+    /// Prepare a statement: lex + parse once, resolve the referenced
+    /// tables/columns against the catalog, and cache the plan so every
+    /// later `prepare` of the same text is a map lookup. The returned
+    /// handle is executor-independent — bind and run it through this
+    /// cluster, any [`Connector`](crate::storage::connector::Connector),
+    /// or a `WorkerLink`, before and after failover.
+    pub fn prepare(&self, sql_text: &str) -> Result<Prepared> {
+        if let Some(plan) = self.plans.read().unwrap().get(sql_text) {
+            return Ok(Prepared::from_plan(plan.clone()));
+        }
+        let (stmt, params) = sql::parse_prepared(sql_text)?;
+        self.validate_against_catalog(&stmt)?;
+        let plan = Arc::new(PreparedPlan { sql: sql_text.to_string(), stmt, params });
+        let mut cache = self.plans.write().unwrap();
+        if cache.len() >= PLAN_CACHE_MAX {
+            // evict one arbitrary entry; clearing everything would force a
+            // cluster-wide re-parse of the hot statements mid-run
+            if let Some(k) = cache.keys().next().cloned() {
+                cache.remove(&k);
+            }
+        }
+        let entry = cache
+            .entry(sql_text.to_string())
+            .or_insert_with(|| plan.clone())
+            .clone();
+        Ok(Prepared::from_plan(entry))
+    }
+
+    /// Number of plans currently cached (monitoring/tests).
+    pub fn cached_plans(&self) -> usize {
+        self.plans.read().unwrap().len()
+    }
+
+    /// Prepare-time catalog resolution: every referenced table must exist,
+    /// and INSERT/UPDATE column lists must resolve against its schema, so
+    /// typos surface at prepare time rather than on the Nth execution.
+    /// (SELECT output columns resolve at execution against join layouts —
+    /// alias scoping makes them a runtime concern.)
+    fn validate_against_catalog(&self, stmt: &Statement) -> Result<()> {
+        match stmt {
+            Statement::Select(s) => {
+                self.meta(&s.from.table)?;
+                for j in &s.joins {
+                    self.meta(&j.table.table)?;
+                }
+            }
+            Statement::Insert { table, columns, values } => {
+                let meta = self.meta(table)?;
+                for c in columns {
+                    if meta.def.schema.index_of(c).is_none() {
+                        return Err(Error::Catalog(format!(
+                            "unknown column '{c}' in INSERT INTO {table}"
+                        )));
+                    }
+                }
+                let arity = if columns.is_empty() { meta.def.schema.len() } else { columns.len() };
+                for row in values {
+                    if row.len() != arity {
+                        return Err(Error::Type(format!(
+                            "INSERT arity mismatch: {} values for {arity} columns",
+                            row.len()
+                        )));
+                    }
+                }
+            }
+            Statement::Update { table, sets, .. } => {
+                let meta = self.meta(&table.table)?;
+                for (c, _) in sets {
+                    if meta.def.schema.index_of(c).is_none() {
+                        return Err(Error::Catalog(format!(
+                            "unknown column '{c}' in UPDATE {}",
+                            table.table
+                        )));
+                    }
+                }
+            }
+            Statement::Delete { table, .. } => {
+                self.meta(&table.table)?;
+            }
+            Statement::CreateTable { .. } => {}
+        }
+        Ok(())
+    }
+
+    /// Execute a prepared statement with one value bound per placeholder.
+    pub fn exec_prepared(
+        &self,
+        node: u32,
+        kind: AccessKind,
+        prepared: &Prepared,
+        params: &[Value],
+    ) -> Result<StatementResult> {
+        let stmt = prepared.bind(params)?;
+        self.exec_stmt(node, kind, &stmt)
+    }
+
+    /// Execute a prepared single-row INSERT template once per entry of
+    /// `rows`, as one atomic multi-row insert.
+    pub fn exec_prepared_batch(
+        &self,
+        node: u32,
+        kind: AccessKind,
+        prepared: &Prepared,
+        rows: &[Vec<Value>],
+    ) -> Result<StatementResult> {
+        let stmt = prepared.bind_batch(rows)?;
+        self.exec_stmt(node, kind, &stmt)
+    }
+
+    /// Convenience: prepared SELECT returning rows.
+    pub fn query_prepared(&self, prepared: &Prepared, params: &[Value]) -> Result<ResultSet> {
+        match self.exec_prepared(0, AccessKind::Other, prepared, params)? {
+            StatementResult::Rows(r) => Ok(r),
+            other => Err(Error::Engine(format!("expected rows, got {other:?}"))),
+        }
     }
 
     // ---------- statement entry points ----------
@@ -1553,6 +1683,114 @@ mod tests {
         assert!(c.execute("INSERT INTO workers (nope) VALUES (1)").is_err());
         assert!(c.execute("UPDATE workers SET nope = 1").is_err());
         assert!(c.exec("CREATE TABLE workers (id INT)").is_err(), "duplicate table");
+    }
+
+    #[test]
+    fn prepare_bind_execute_roundtrip() {
+        let c = cluster();
+        seed(&c, 20, 4);
+        let sel = c
+            .prepare(
+                "SELECT taskid FROM workqueue WHERE workerid = ? AND status = ? ORDER BY taskid",
+            )
+            .unwrap();
+        assert_eq!(sel.param_count(), 2);
+        let rs = c.query_prepared(&sel, &[Value::Int(1), Value::str("READY")]).unwrap();
+        assert_eq!(rs.rows.len(), 5);
+        // same handle, different binding
+        let rs = c.query_prepared(&sel, &[Value::Int(1), Value::str("RUNNING")]).unwrap();
+        assert!(rs.rows.is_empty());
+        // prepared update with string + numeric params
+        let upd = c
+            .prepare("UPDATE workqueue SET status = ?, endtime = ? WHERE taskid = ?")
+            .unwrap();
+        let n = c
+            .exec_prepared(
+                0,
+                AccessKind::UpdateToFinished,
+                &upd,
+                &[Value::str("FINISHED"), Value::Float(9.5), Value::Int(3)],
+            )
+            .unwrap()
+            .affected();
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn prepare_is_cached_and_validated() {
+        let c = cluster();
+        let sql = "SELECT taskid FROM workqueue WHERE taskid = ?";
+        c.prepare(sql).unwrap();
+        let before = c.cached_plans();
+        c.prepare(sql).unwrap();
+        assert_eq!(c.cached_plans(), before, "re-prepare must hit the cache");
+        // catalog misses surface at prepare time
+        assert!(c.prepare("SELECT * FROM nope WHERE a = ?").is_err());
+        assert!(c.prepare("INSERT INTO workers (nope) VALUES (?)").is_err());
+        assert!(c.prepare("UPDATE workers SET nope = ? WHERE id = 1").is_err());
+        // arity mismatches too
+        assert!(c.prepare("INSERT INTO workers (id, host) VALUES (?)").is_err());
+    }
+
+    #[test]
+    fn prepared_strings_need_no_escaping() {
+        let c = cluster();
+        let ins = c
+            .prepare("INSERT INTO workers (id, host) VALUES (?, ?)")
+            .unwrap();
+        let hostile = "it's; DROP TABLE workers -- '";
+        c.exec_prepared(0, AccessKind::Other, &ins, &[Value::Int(1), Value::str(hostile)])
+            .unwrap();
+        let sel = c.prepare("SELECT host FROM workers WHERE host = ?").unwrap();
+        let rs = c.query_prepared(&sel, &[Value::str(hostile)]).unwrap();
+        assert_eq!(rs.rows.len(), 1);
+        assert_eq!(rs.rows[0].values[0], Value::str(hostile));
+    }
+
+    #[test]
+    fn prepared_batch_insert_is_atomic() {
+        let c = cluster();
+        let ins = c
+            .prepare(
+                "INSERT INTO workqueue (taskid, actid, workerid, status, dur) \
+                 VALUES (?, ?, ?, 'READY', ?)",
+            )
+            .unwrap();
+        let rows: Vec<Vec<Value>> = (0..10)
+            .map(|i| vec![Value::Int(i), Value::Int(1), Value::Int(i % 4), Value::Float(1.0)])
+            .collect();
+        let n = c
+            .exec_prepared_batch(0, AccessKind::InsertTasks, &ins, &rows)
+            .unwrap()
+            .affected();
+        assert_eq!(n, 10);
+        assert_eq!(c.table_rows("workqueue").unwrap(), 10);
+        // duplicate PK anywhere in the batch aborts the whole batch
+        let dup: Vec<Vec<Value>> = [100, 101, 5].iter()
+            .map(|i| vec![Value::Int(*i), Value::Int(1), Value::Int(0), Value::Float(1.0)])
+            .collect();
+        assert!(c.exec_prepared_batch(0, AccessKind::InsertTasks, &ins, &dup).is_err());
+        assert_eq!(c.table_rows("workqueue").unwrap(), 10, "aborted batch left rows behind");
+    }
+
+    #[test]
+    fn prepared_statement_prunes_partitions_like_literals() {
+        // `workerid = ?` must route to one partition after binding: the
+        // claim pattern's partition-locality is the paper's §3.2 point.
+        let c = cluster();
+        seed(&c, 16, 4);
+        let upd = c
+            .prepare(
+                "UPDATE workqueue SET status = ? WHERE workerid = ? AND status = 'READY' \
+                 ORDER BY taskid LIMIT 1 RETURNING taskid",
+            )
+            .unwrap();
+        let rs = c
+            .exec_prepared(0, AccessKind::UpdateToRunning, &upd, &[Value::str("RUNNING"), Value::Int(2)])
+            .unwrap()
+            .rows();
+        assert_eq!(rs.rows.len(), 1);
+        assert_eq!(rs.rows[0].values[0], Value::Int(2));
     }
 
     #[test]

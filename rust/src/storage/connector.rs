@@ -7,7 +7,9 @@
 //! primary; remaining workers are assigned round-robin.
 
 use crate::storage::cluster::DbCluster;
+use crate::storage::prepared::Prepared;
 use crate::storage::stats::AccessKind;
+use crate::storage::value::Value;
 use crate::storage::StatementResult;
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -69,6 +71,46 @@ impl Connector {
         self.brokered.fetch_add(1, Ordering::Relaxed);
         self.cluster.exec_stmt(worker_node, kind, stmt)
     }
+
+    /// Prepare a statement through this connector. The handle it returns is
+    /// plan-only (no connection state), so it remains valid on the sibling
+    /// connectors of the same cluster — the basis of prepared failover.
+    pub fn prepare(&self, sql: &str) -> Result<Prepared> {
+        if !self.is_alive() {
+            return Err(Error::Unavailable(format!("connector {} is down", self.id)));
+        }
+        self.cluster.prepare(sql)
+    }
+
+    /// Broker one prepared execution.
+    pub fn exec_prepared(
+        &self,
+        worker_node: u32,
+        kind: AccessKind,
+        prepared: &Prepared,
+        params: &[Value],
+    ) -> Result<StatementResult> {
+        if !self.is_alive() {
+            return Err(Error::Unavailable(format!("connector {} is down", self.id)));
+        }
+        self.brokered.fetch_add(1, Ordering::Relaxed);
+        self.cluster.exec_prepared(worker_node, kind, prepared, params)
+    }
+
+    /// Broker one prepared batched insert.
+    pub fn exec_prepared_batch(
+        &self,
+        worker_node: u32,
+        kind: AccessKind,
+        prepared: &Prepared,
+        rows: &[Vec<Value>],
+    ) -> Result<StatementResult> {
+        if !self.is_alive() {
+            return Err(Error::Unavailable(format!("connector {} is down", self.id)));
+        }
+        self.brokered.fetch_add(1, Ordering::Relaxed);
+        self.cluster.exec_prepared_batch(worker_node, kind, prepared, rows)
+    }
 }
 
 /// A worker's view of the connector fabric: a primary link and a secondary
@@ -101,6 +143,53 @@ impl WorkerLink {
             Err(Error::Unavailable(_)) if self.secondary.is_some() => {
                 self.secondary.as_ref().unwrap().exec_stmt(self.worker_node, kind, stmt)
             }
+            other => other,
+        }
+    }
+
+    /// Prepare through the active connector (failover like `exec`). The
+    /// returned handle is shared-plan only, so it keeps executing through
+    /// whichever connector is alive at each call.
+    pub fn prepare(&self, sql: &str) -> Result<Prepared> {
+        match self.primary.prepare(sql) {
+            Err(Error::Unavailable(_)) if self.secondary.is_some() => {
+                self.secondary.as_ref().unwrap().prepare(sql)
+            }
+            other => other,
+        }
+    }
+
+    /// Prepared variant of [`WorkerLink::exec`]: primary first, secondary on
+    /// connector outage — the same handle works on both.
+    pub fn exec_prepared(
+        &self,
+        kind: AccessKind,
+        prepared: &Prepared,
+        params: &[Value],
+    ) -> Result<StatementResult> {
+        match self.primary.exec_prepared(self.worker_node, kind, prepared, params) {
+            Err(Error::Unavailable(_)) if self.secondary.is_some() => self
+                .secondary
+                .as_ref()
+                .unwrap()
+                .exec_prepared(self.worker_node, kind, prepared, params),
+            other => other,
+        }
+    }
+
+    /// Prepared batched-insert variant of [`WorkerLink::exec`].
+    pub fn exec_prepared_batch(
+        &self,
+        kind: AccessKind,
+        prepared: &Prepared,
+        rows: &[Vec<Value>],
+    ) -> Result<StatementResult> {
+        match self.primary.exec_prepared_batch(self.worker_node, kind, prepared, rows) {
+            Err(Error::Unavailable(_)) if self.secondary.is_some() => self
+                .secondary
+                .as_ref()
+                .unwrap()
+                .exec_prepared_batch(self.worker_node, kind, prepared, rows),
             other => other,
         }
     }

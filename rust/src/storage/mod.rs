@@ -14,6 +14,7 @@ pub mod cluster;
 pub mod connector;
 pub mod datanode;
 pub mod partition;
+pub mod prepared;
 pub mod replication;
 pub mod sql;
 pub mod stats;
@@ -25,6 +26,7 @@ pub mod wal;
 
 pub use cluster::{ClusterConfig, DbCluster};
 pub use connector::Connector;
+pub use prepared::Prepared;
 pub use stats::{AccessKind, StatsRegistry};
 pub use table_def::TableDef;
 pub use value::{ColumnType, Row, Schema, Value};

@@ -1,0 +1,409 @@
+//! Prepared statements: parse once, bind typed values per execution.
+//!
+//! The engine's hot paths (`getREADYtasks`, the atomic claim,
+//! `updateToFINISHED`, provenance inserts) repeat the same handful of
+//! statements millions of times per run. Re-lexing and re-parsing the SQL
+//! text for every call — and worse, splicing values into the text with
+//! `format!`, which breaks on embedded quotes — is pure overhead on the
+//! transaction-oriented path the paper says must stay thin (§3.1).
+//!
+//! A [`Prepared`] handle wraps an [`Arc<PreparedPlan>`]: the statement is
+//! lexed, parsed and catalog-checked exactly once (see
+//! [`DbCluster::prepare`](crate::storage::cluster::DbCluster::prepare),
+//! which also serves handles out of a cluster-wide plan cache).
+//! [`Prepared::bind`] substitutes the bound [`Value`]s for the `?`
+//! placeholders in a fresh copy of the AST, so the executor — partition
+//! pruning and index-probe selection included — sees ordinary literals.
+//! Values never travel through SQL text, which closes the quoting hazard
+//! by construction.
+//!
+//! Handles carry **no connection state**: a `Prepared` is just a parsed
+//! plan, so the same handle keeps working across
+//! [`Connector`](crate::storage::connector::Connector) failover and data
+//! node promotion (see `tests/prepared_failover.rs`).
+//!
+//! Limitations of the placeholder grammar: `?` stands for a *value*
+//! position only — table/column names, `LIMIT` counts, and `LIKE` patterns
+//! cannot be parameters.
+
+use crate::storage::sql::ast::{Expr, SelectItem, SelectStmt, Statement};
+use crate::storage::value::Value;
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// Fixed width used when folding variable-length id sets into `IN (...)`
+/// lists: callers prepare one statement with [`IN_CHUNK`] placeholders and
+/// feed it [`padded_chunks`], so the plan cache holds a single plan per
+/// statement shape instead of one per list length.
+pub const IN_CHUNK: usize = 64;
+
+/// `"?, ?, ..., ?"` with `n` placeholders (building the skeleton of an
+/// `IN (...)` clause; the values themselves are always bound, never
+/// interpolated).
+pub fn in_placeholders(n: usize) -> String {
+    let mut s = String::with_capacity(n * 3);
+    for i in 0..n {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push('?');
+    }
+    s
+}
+
+/// Split `ids` into chunks of exactly `chunk` values, padding the last
+/// chunk by repeating its final id. Duplicates are harmless inside an
+/// `IN (...)` predicate, so a single fixed-width prepared statement covers
+/// every list length.
+pub fn padded_chunks(ids: &[i64], chunk: usize) -> Vec<Vec<Value>> {
+    assert!(chunk > 0, "chunk width must be positive");
+    let mut out = Vec::new();
+    for group in ids.chunks(chunk) {
+        let mut vals: Vec<Value> = group.iter().map(|i| Value::Int(*i)).collect();
+        if let Some(last) = vals.last().cloned() {
+            while vals.len() < chunk {
+                vals.push(last.clone());
+            }
+            out.push(vals);
+        }
+    }
+    out
+}
+
+/// The immutable, shareable product of preparing one statement.
+pub struct PreparedPlan {
+    /// Original statement text (plan-cache key, diagnostics).
+    pub sql: String,
+    /// Parsed AST with `Expr::Param` placeholders left in place.
+    pub stmt: Statement,
+    /// Number of `?` placeholders.
+    pub params: usize,
+}
+
+/// A prepared-statement handle. Cheap to clone; independent of any
+/// connector or data node, so it survives failover unchanged.
+#[derive(Clone)]
+pub struct Prepared {
+    plan: Arc<PreparedPlan>,
+}
+
+impl Prepared {
+    pub fn from_plan(plan: Arc<PreparedPlan>) -> Prepared {
+        Prepared { plan }
+    }
+
+    /// Statement text this handle was prepared from.
+    pub fn sql(&self) -> &str {
+        &self.plan.sql
+    }
+
+    /// Number of `?` placeholders to bind.
+    pub fn param_count(&self) -> usize {
+        self.plan.params
+    }
+
+    /// The cached parse (placeholders still in place).
+    pub fn statement(&self) -> &Statement {
+        &self.plan.stmt
+    }
+
+    /// Bind one value per placeholder, producing an executable statement.
+    pub fn bind(&self, params: &[Value]) -> Result<Statement> {
+        if params.len() != self.plan.params {
+            return Err(Error::Type(format!(
+                "statement wants {} parameters, got {} ({})",
+                self.plan.params,
+                params.len(),
+                self.plan.sql
+            )));
+        }
+        subst_stmt(&self.plan.stmt, params)
+    }
+
+    /// Batched bind for bulk inserts: the plan must be an `INSERT` with a
+    /// single row template; each entry of `rows` binds one copy of that
+    /// template, yielding a single atomic multi-row insert.
+    pub fn bind_batch(&self, rows: &[Vec<Value>]) -> Result<Statement> {
+        let Statement::Insert { table, columns, values } = &self.plan.stmt else {
+            return Err(Error::Type(format!(
+                "bind_batch needs an INSERT statement ({})",
+                self.plan.sql
+            )));
+        };
+        if values.len() != 1 {
+            return Err(Error::Type(format!(
+                "bind_batch needs a single row template, found {} rows ({})",
+                values.len(),
+                self.plan.sql
+            )));
+        }
+        if rows.is_empty() {
+            return Err(Error::Type("bind_batch with zero rows".into()));
+        }
+        let template = &values[0];
+        let mut bound = Vec::with_capacity(rows.len());
+        for row in rows {
+            if row.len() != self.plan.params {
+                return Err(Error::Type(format!(
+                    "row binds {} parameters, template wants {} ({})",
+                    row.len(),
+                    self.plan.params,
+                    self.plan.sql
+                )));
+            }
+            bound.push(
+                template
+                    .iter()
+                    .map(|e| subst_expr(e, row))
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+        Ok(Statement::Insert {
+            table: table.clone(),
+            columns: columns.clone(),
+            values: bound,
+        })
+    }
+}
+
+/// Replace every `Expr::Param` in `stmt` with the matching bound literal.
+fn subst_stmt(stmt: &Statement, params: &[Value]) -> Result<Statement> {
+    Ok(match stmt {
+        Statement::Select(s) => Statement::Select(subst_select(s, params)?),
+        Statement::Insert { table, columns, values } => Statement::Insert {
+            table: table.clone(),
+            columns: columns.clone(),
+            values: values
+                .iter()
+                .map(|row| row.iter().map(|e| subst_expr(e, params)).collect())
+                .collect::<Result<Vec<_>>>()?,
+        },
+        Statement::Update { table, sets, where_, order_by, limit, returning } => {
+            Statement::Update {
+                table: table.clone(),
+                sets: sets
+                    .iter()
+                    .map(|(c, e)| Ok((c.clone(), subst_expr(e, params)?)))
+                    .collect::<Result<Vec<_>>>()?,
+                where_: subst_opt(where_, params)?,
+                order_by: subst_order(order_by, params)?,
+                limit: *limit,
+                returning: match returning {
+                    Some(items) => Some(subst_items(items, params)?),
+                    None => None,
+                },
+            }
+        }
+        Statement::Delete { table, where_ } => Statement::Delete {
+            table: table.clone(),
+            where_: subst_opt(where_, params)?,
+        },
+        Statement::CreateTable { .. } => stmt.clone(),
+    })
+}
+
+fn subst_select(s: &SelectStmt, params: &[Value]) -> Result<SelectStmt> {
+    Ok(SelectStmt {
+        items: subst_items(&s.items, params)?,
+        from: s.from.clone(),
+        joins: s
+            .joins
+            .iter()
+            .map(|j| {
+                Ok(crate::storage::sql::ast::Join {
+                    table: j.table.clone(),
+                    on: subst_expr(&j.on, params)?,
+                    left_outer: j.left_outer,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+        where_: subst_opt(&s.where_, params)?,
+        group_by: s
+            .group_by
+            .iter()
+            .map(|e| subst_expr(e, params))
+            .collect::<Result<Vec<_>>>()?,
+        having: subst_opt(&s.having, params)?,
+        order_by: subst_order(&s.order_by, params)?,
+        limit: s.limit,
+    })
+}
+
+fn subst_items(items: &[SelectItem], params: &[Value]) -> Result<Vec<SelectItem>> {
+    items
+        .iter()
+        .map(|it| {
+            Ok(match it {
+                SelectItem::Wildcard(q) => SelectItem::Wildcard(q.clone()),
+                SelectItem::Expr { expr, alias } => SelectItem::Expr {
+                    expr: subst_expr(expr, params)?,
+                    alias: alias.clone(),
+                },
+            })
+        })
+        .collect()
+}
+
+fn subst_opt(e: &Option<Expr>, params: &[Value]) -> Result<Option<Expr>> {
+    match e {
+        Some(x) => Ok(Some(subst_expr(x, params)?)),
+        None => Ok(None),
+    }
+}
+
+fn subst_order(order: &[(Expr, bool)], params: &[Value]) -> Result<Vec<(Expr, bool)>> {
+    order
+        .iter()
+        .map(|(e, asc)| Ok((subst_expr(e, params)?, *asc)))
+        .collect()
+}
+
+/// Structural copy of `e` with `Param(i)` replaced by `Lit(params[i])`.
+fn subst_expr(e: &Expr, params: &[Value]) -> Result<Expr> {
+    Ok(match e {
+        Expr::Param(i) => {
+            let v = params.get(*i).ok_or_else(|| {
+                Error::Type(format!("parameter ?{i} out of range ({} bound)", params.len()))
+            })?;
+            Expr::Lit(v.clone())
+        }
+        Expr::Lit(_) | Expr::Col { .. } => e.clone(),
+        Expr::Unary(op, x) => Expr::Unary(*op, Box::new(subst_expr(x, params)?)),
+        Expr::Binary(op, a, b) => Expr::Binary(
+            *op,
+            Box::new(subst_expr(a, params)?),
+            Box::new(subst_expr(b, params)?),
+        ),
+        Expr::Func { name, args } => Expr::Func {
+            name: name.clone(),
+            args: args
+                .iter()
+                .map(|a| subst_expr(a, params))
+                .collect::<Result<Vec<_>>>()?,
+        },
+        Expr::Agg { func, arg, distinct } => Expr::Agg {
+            func: *func,
+            arg: match arg {
+                Some(a) => Some(Box::new(subst_expr(a, params)?)),
+                None => None,
+            },
+            distinct: *distinct,
+        },
+        Expr::InList { expr, list, negated } => Expr::InList {
+            expr: Box::new(subst_expr(expr, params)?),
+            list: list
+                .iter()
+                .map(|a| subst_expr(a, params))
+                .collect::<Result<Vec<_>>>()?,
+            negated: *negated,
+        },
+        Expr::Between { expr, lo, hi, negated } => Expr::Between {
+            expr: Box::new(subst_expr(expr, params)?),
+            lo: Box::new(subst_expr(lo, params)?),
+            hi: Box::new(subst_expr(hi, params)?),
+            negated: *negated,
+        },
+        Expr::IsNull { expr, negated } => Expr::IsNull {
+            expr: Box::new(subst_expr(expr, params)?),
+            negated: *negated,
+        },
+        Expr::Like { expr, pattern, negated } => Expr::Like {
+            expr: Box::new(subst_expr(expr, params)?),
+            pattern: pattern.clone(),
+            negated: *negated,
+        },
+        Expr::Case { arms, else_ } => Expr::Case {
+            arms: arms
+                .iter()
+                .map(|(c, v)| Ok((subst_expr(c, params)?, subst_expr(v, params)?)))
+                .collect::<Result<Vec<_>>>()?,
+            else_: match else_ {
+                Some(x) => Some(Box::new(subst_expr(x, params)?)),
+                None => None,
+            },
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::sql::parser::parse_prepared;
+
+    fn prep(sql: &str) -> Prepared {
+        let (stmt, params) = parse_prepared(sql).unwrap();
+        Prepared::from_plan(Arc::new(PreparedPlan { sql: sql.to_string(), stmt, params }))
+    }
+
+    #[test]
+    fn bind_replaces_placeholders_with_literals() {
+        let p = prep("SELECT a FROM t WHERE b = ? AND s = ?");
+        assert_eq!(p.param_count(), 2);
+        let stmt = p.bind(&[Value::Int(7), Value::str("it's")]).unwrap();
+        match stmt {
+            Statement::Select(s) => {
+                let w = s.where_.unwrap();
+                let lits: Vec<&Expr> = w.conjuncts();
+                assert!(lits.iter().any(|c| matches!(
+                    c,
+                    Expr::Binary(_, _, b) if **b == Expr::Lit(Value::Int(7))
+                )));
+                // the quoted string arrives intact, no escaping involved
+                assert!(lits.iter().any(|c| matches!(
+                    c,
+                    Expr::Binary(_, _, b) if **b == Expr::Lit(Value::str("it's"))
+                )));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bind_checks_arity() {
+        let p = prep("SELECT a FROM t WHERE b = ?");
+        assert!(p.bind(&[]).is_err());
+        assert!(p.bind(&[Value::Int(1), Value::Int(2)]).is_err());
+        assert!(p.bind(&[Value::Int(1)]).is_ok());
+    }
+
+    #[test]
+    fn bind_batch_expands_insert_template() {
+        let p = prep("INSERT INTO t (a, b, d) VALUES (?, ?, 'out')");
+        let stmt = p
+            .bind_batch(&[
+                vec![Value::Int(1), Value::str("x")],
+                vec![Value::Int(2), Value::str("y")],
+            ])
+            .unwrap();
+        match stmt {
+            Statement::Insert { values, .. } => {
+                assert_eq!(values.len(), 2);
+                assert_eq!(values[0][0], Expr::Lit(Value::Int(1)));
+                assert_eq!(values[1][1], Expr::Lit(Value::str("y")));
+                // the constant column survives in every expanded row
+                assert_eq!(values[1][2], Expr::Lit(Value::str("out")));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bind_batch_rejects_non_insert_and_bad_rows() {
+        let p = prep("UPDATE t SET a = ? WHERE b = ?");
+        assert!(p.bind_batch(&[vec![Value::Int(1), Value::Int(2)]]).is_err());
+        let p = prep("INSERT INTO t (a) VALUES (?)");
+        assert!(p.bind_batch(&[]).is_err());
+        assert!(p.bind_batch(&[vec![Value::Int(1), Value::Int(2)]]).is_err());
+    }
+
+    #[test]
+    fn padded_chunks_fill_fixed_width() {
+        let chunks = padded_chunks(&[1, 2, 3], 2);
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[0], vec![Value::Int(1), Value::Int(2)]);
+        assert_eq!(chunks[1], vec![Value::Int(3), Value::Int(3)]);
+        assert!(padded_chunks(&[], 4).is_empty());
+        assert_eq!(in_placeholders(3), "?, ?, ?");
+        assert_eq!(in_placeholders(0), "");
+    }
+}

@@ -48,6 +48,11 @@ impl AggFunc {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Expr {
     Lit(Value),
+    /// `?` placeholder of a prepared statement; the ordinal is assigned
+    /// left-to-right at parse time (0-based). `Prepared::bind` replaces
+    /// every `Param` with the bound literal before execution, so partition
+    /// pruning and index probes see plain `Lit` nodes.
+    Param(usize),
     /// Column reference, optionally qualified: `t.col` or `col`.
     Col { table: Option<String>, name: String },
     Unary(Op, Box<Expr>),
@@ -82,7 +87,7 @@ impl Expr {
     pub fn has_aggregate(&self) -> bool {
         match self {
             Expr::Agg { .. } => true,
-            Expr::Lit(_) | Expr::Col { .. } => false,
+            Expr::Lit(_) | Expr::Param(_) | Expr::Col { .. } => false,
             Expr::Unary(_, e) => e.has_aggregate(),
             Expr::Binary(_, a, b) => a.has_aggregate() || b.has_aggregate(),
             Expr::Func { args, .. } => args.iter().any(|e| e.has_aggregate()),

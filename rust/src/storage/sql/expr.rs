@@ -127,6 +127,14 @@ pub struct FuncKindBox {
 pub fn bind(expr: &Expr, layout: &Layout) -> Result<Bound> {
     Ok(match expr {
         Expr::Lit(v) => Bound::Lit(v.clone()),
+        Expr::Param(i) => {
+            // Parameters are substituted with bound literals by
+            // `Prepared::bind` before execution; one reaching the row
+            // evaluator means the statement was executed unbound.
+            return Err(Error::Type(format!(
+                "unbound parameter ?{i} (prepare the statement and bind values before executing)"
+            )));
+        }
         Expr::Col { table, name } => Bound::Col(layout.resolve(table.as_deref(), name)?),
         Expr::Unary(op, e) => Bound::Unary(*op, Box::new(bind(e, layout)?)),
         Expr::Binary(op, a, b) => {
@@ -661,6 +669,18 @@ mod tests {
         assert_eq!(l.resolve(Some("b"), "x").unwrap(), 1);
         assert!(l.resolve(Some("c"), "x").is_err());
         assert!(l.resolve(None, "nope").is_err());
+    }
+
+    #[test]
+    fn unbound_parameter_is_a_clear_error() {
+        let l = layout();
+        let e = Expr::Binary(
+            Op::Eq,
+            Box::new(Expr::Col { table: None, name: "a".into() }),
+            Box::new(Expr::Param(0)),
+        );
+        let err = bind(&e, &l).unwrap_err();
+        assert!(err.to_string().contains("unbound parameter"), "{err}");
     }
 
     #[test]

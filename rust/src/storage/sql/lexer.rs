@@ -11,7 +11,7 @@ pub enum Tok {
     Int(i64),
     Float(f64),
     Str(String),
-    /// Symbols: ( ) , . * = != <> < <= > >= + - / %
+    /// Symbols: ( ) , . * = != <> < <= > >= + - / % ? ;
     Sym(&'static str),
     Eof,
 }
@@ -144,7 +144,7 @@ pub fn lex(input: &str) -> Result<Vec<Tok>> {
                     i += 1;
                 }
             }
-            '(' | ')' | ',' | '.' | '*' | '=' | '+' | '-' | '/' | '%' | ';' => {
+            '(' | ')' | ',' | '.' | '*' | '=' | '+' | '-' | '/' | '%' | ';' | '?' => {
                 out.push(Tok::Sym(match c {
                     '(' => "(",
                     ')' => ")",
@@ -157,6 +157,7 @@ pub fn lex(input: &str) -> Result<Vec<Tok>> {
                     '/' => "/",
                     '%' => "%",
                     ';' => ";",
+                    '?' => "?",
                     _ => unreachable!(),
                 }));
                 i += 1;
@@ -218,6 +219,12 @@ mod tests {
     fn lex_rejects_garbage_and_unterminated() {
         assert!(lex("select #").is_err());
         assert!(lex("'abc").is_err());
+    }
+
+    #[test]
+    fn lex_parameter_placeholders() {
+        let t = lex("SELECT a FROM t WHERE b = ? AND c = ?").unwrap();
+        assert_eq!(t.iter().filter(|x| **x == Tok::Sym("?")).count(), 2);
     }
 
     #[test]

@@ -29,7 +29,7 @@ pub mod lexer;
 pub mod parser;
 
 pub use ast::*;
-pub use parser::parse_statement;
+pub use parser::{parse_prepared, parse_statement};
 
 use crate::Result;
 
@@ -38,9 +38,43 @@ pub fn parse(sql: &str) -> Result<Statement> {
     parse_statement(sql)
 }
 
+/// Escape a string for embedding inside a single-quoted SQL literal: the
+/// dialect's only escape is quote doubling (`''`), so this is the complete
+/// rule. Prefer `?` parameters on anything resembling a hot path — this
+/// helper exists for the few places that must render literal SQL text
+/// (checkpoint dumps, ad-hoc CLI statements).
+pub fn escape_sql_str(s: &str) -> String {
+    s.replace('\'', "''")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn escape_sql_str_round_trips_through_the_lexer() {
+        for raw in ["it's", "O'Brien said ''hi''", "no quotes", "'", "''"] {
+            let sql = format!("SELECT * FROM t WHERE s = '{}'", escape_sql_str(raw));
+            let stmt = parse(&sql).unwrap_or_else(|e| panic!("failed on {raw:?}: {e}"));
+            let Statement::Select(s) = stmt else { panic!("not a select") };
+            match s.where_.unwrap() {
+                Expr::Binary(_, _, rhs) => {
+                    assert_eq!(
+                        *rhs,
+                        Expr::Lit(crate::storage::value::Value::str(raw)),
+                        "round-trip mangled {raw:?}"
+                    );
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn unescaped_quote_is_rejected_not_misparsed() {
+        // the historical hazard: a raw quote inside an interpolated value
+        assert!(parse("UPDATE t SET stdout = 'it's' WHERE id = 1").is_err());
+    }
 
     #[test]
     fn parse_roundtrip_smoke() {

@@ -7,17 +7,25 @@ use crate::{Error, Result};
 
 /// Parse exactly one statement (a trailing `;` is tolerated).
 pub fn parse_statement(sql: &str) -> Result<Statement> {
+    parse_prepared(sql).map(|(stmt, _)| stmt)
+}
+
+/// Parse one statement that may contain `?` placeholders; returns the
+/// statement plus the number of parameters (ordinals assigned left-to-right).
+pub fn parse_prepared(sql: &str) -> Result<(Statement, usize)> {
     let toks = lex(sql)?;
-    let mut p = Parser { toks, pos: 0 };
+    let mut p = Parser { toks, pos: 0, params: 0 };
     let stmt = p.statement()?;
     p.eat_sym(";"); // optional
     p.expect_eof()?;
-    Ok(stmt)
+    Ok((stmt, p.params))
 }
 
 struct Parser {
     toks: Vec<Tok>,
     pos: usize,
+    /// Number of `?` placeholders seen so far (next ordinal to assign).
+    params: usize,
 }
 
 impl Parser {
@@ -532,6 +540,11 @@ impl Parser {
             Tok::Int(i) => Ok(Expr::Lit(Value::Int(i))),
             Tok::Float(f) => Ok(Expr::Lit(Value::Float(f))),
             Tok::Str(s) => Ok(Expr::Lit(Value::str(s))),
+            Tok::Sym("?") => {
+                let ordinal = self.params;
+                self.params += 1;
+                Ok(Expr::Param(ordinal))
+            }
             Tok::Sym("(") => {
                 let e = self.expr()?;
                 self.expect_sym(")")?;
@@ -767,6 +780,47 @@ mod tests {
         assert!(parse_statement("SELECT * FROM t LIMIT -1").is_err());
         assert!(parse_statement("SELECT * FROM t extra garbage !").is_err());
         assert!(parse_statement("SELECT SUM(*) FROM t").is_err());
+    }
+
+    #[test]
+    fn parameters_get_sequential_ordinals() {
+        let (stmt, n) = parse_prepared(
+            "UPDATE workqueue SET status = ?, starttime = NOW() \
+             WHERE workerid = ? AND status = ? ORDER BY taskid LIMIT 4",
+        )
+        .unwrap();
+        assert_eq!(n, 3);
+        match stmt {
+            Statement::Update { sets, where_, .. } => {
+                assert_eq!(sets[0].1, Expr::Param(0));
+                let conj = where_.unwrap();
+                let cs = conj.conjuncts().into_iter().cloned().collect::<Vec<_>>();
+                assert!(cs.iter().any(|c| matches!(
+                    c,
+                    Expr::Binary(Op::Eq, _, b) if **b == Expr::Param(1)
+                )));
+                assert!(cs.iter().any(|c| matches!(
+                    c,
+                    Expr::Binary(Op::Eq, _, b) if **b == Expr::Param(2)
+                )));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parameters_span_multi_row_insert() {
+        let (stmt, n) =
+            parse_prepared("INSERT INTO t (a, b) VALUES (?, ?), (?, ?)").unwrap();
+        assert_eq!(n, 4);
+        match stmt {
+            Statement::Insert { values, .. } => {
+                assert_eq!(values.len(), 2);
+                assert_eq!(values[1][0], Expr::Param(2));
+                assert_eq!(values[1][1], Expr::Param(3));
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

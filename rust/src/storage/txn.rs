@@ -7,8 +7,10 @@
 //! must be atomic so workers never observe half-generated activities).
 
 use crate::storage::cluster::DbCluster;
+use crate::storage::prepared::Prepared;
 use crate::storage::sql::{self, Statement};
 use crate::storage::stats::AccessKind;
+use crate::storage::value::Value;
 use crate::storage::StatementResult;
 use crate::Result;
 use std::sync::Arc;
@@ -36,6 +38,19 @@ impl TxnBuilder {
     pub fn statement(mut self, s: Statement) -> TxnBuilder {
         self.stmts.push(s);
         self
+    }
+
+    /// Add a prepared statement with its bound parameters (no SQL text is
+    /// rebuilt; the plan's placeholders are substituted with the values).
+    pub fn prepared(mut self, p: &Prepared, params: &[Value]) -> Result<TxnBuilder> {
+        self.stmts.push(p.bind(params)?);
+        Ok(self)
+    }
+
+    /// Add a prepared single-row INSERT template expanded over `rows`.
+    pub fn prepared_batch(mut self, p: &Prepared, rows: &[Vec<Value>]) -> Result<TxnBuilder> {
+        self.stmts.push(p.bind_batch(rows)?);
+        Ok(self)
     }
 
     pub fn len(&self) -> usize {
@@ -101,6 +116,24 @@ mod tests {
         assert!(e.is_err());
         let rs = c.query("SELECT bal FROM acct WHERE id = 1").unwrap();
         assert_eq!(rs.rows[0].values[0], Value::Int(100));
+    }
+
+    #[test]
+    fn prepared_statements_compose_into_txns() {
+        let c = cluster();
+        let debit = c.prepare("UPDATE acct SET bal = bal - ? WHERE id = ?").unwrap();
+        let credit = c.prepare("UPDATE acct SET bal = bal + ? WHERE id = ?").unwrap();
+        TxnBuilder::new(c.clone(), 0, AccessKind::Other)
+            .prepared(&debit, &[Value::Int(25), Value::Int(1)])
+            .unwrap()
+            .prepared(&credit, &[Value::Int(25), Value::Int(2)])
+            .unwrap()
+            .commit()
+            .unwrap();
+        let rs = c.query("SELECT bal FROM acct WHERE id = 2").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(125));
+        let rs = c.query("SELECT SUM(bal) FROM acct").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(800));
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Prepared statements across failure injection: a `Prepared` handle is a
+//! cached plan, not a connection, so it must keep executing after the
+//! primary connector dies (WorkerLink secondary failover) and after a data
+//! node is killed and its backups promoted.
+
+use schaladb::storage::cluster::ClusterConfig;
+use schaladb::storage::connector::{assign_links, Connector, WorkerLink};
+use schaladb::storage::{AccessKind, DbCluster, Value};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn wq_cluster() -> Arc<DbCluster> {
+    let c = DbCluster::start(ClusterConfig::default()).unwrap();
+    c.exec(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
+         status TEXT, stdout TEXT) \
+         PARTITION BY HASH(workerid) PARTITIONS 4 \
+         PRIMARY KEY (taskid) INDEX (status)",
+    )
+    .unwrap();
+    c
+}
+
+fn seed(c: &DbCluster, n: i64) {
+    let ins = c
+        .prepare("INSERT INTO workqueue (taskid, workerid, status) VALUES (?, ?, 'READY')")
+        .unwrap();
+    let rows: Vec<Vec<Value>> =
+        (0..n).map(|i| vec![Value::Int(i), Value::Int(i % 4)]).collect();
+    c.exec_prepared_batch(0, AccessKind::InsertTasks, &ins, &rows).unwrap();
+}
+
+fn link_with_two_connectors(c: &Arc<DbCluster>) -> (WorkerLink, Arc<Connector>, Arc<Connector>) {
+    let conns = vec![Connector::new(0, 0, c.clone()), Connector::new(1, 1, c.clone())];
+    let links = assign_links(&[0], &conns).unwrap();
+    let link = links.into_iter().next().unwrap();
+    (link, conns[0].clone(), conns[1].clone())
+}
+
+#[test]
+fn prepared_handle_survives_connector_kill() {
+    let c = wq_cluster();
+    seed(&c, 16);
+    let (link, primary, secondary) = link_with_two_connectors(&c);
+
+    let claim = link
+        .prepare(
+            "UPDATE workqueue SET status = 'RUNNING' \
+             WHERE workerid = ? AND status = 'READY' ORDER BY taskid LIMIT 1 \
+             RETURNING taskid",
+        )
+        .unwrap();
+
+    // claims flow through the primary while it lives
+    let rs = link
+        .exec_prepared(AccessKind::UpdateToRunning, &claim, &[Value::Int(1)])
+        .unwrap()
+        .rows();
+    assert_eq!(rs.rows.len(), 1);
+    assert_eq!(primary.brokered.load(Ordering::Relaxed), 1);
+
+    // kill the primary connector: the *same handle* keeps claiming via the
+    // secondary, with no re-prepare
+    primary.kill();
+    let rs = link
+        .exec_prepared(AccessKind::UpdateToRunning, &claim, &[Value::Int(1)])
+        .unwrap()
+        .rows();
+    assert_eq!(rs.rows.len(), 1);
+    assert_eq!(secondary.brokered.load(Ordering::Relaxed), 1);
+
+    // and back again after revival
+    primary.revive();
+    link.exec_prepared(AccessKind::UpdateToRunning, &claim, &[Value::Int(1)])
+        .unwrap()
+        .rows();
+    assert_eq!(primary.brokered.load(Ordering::Relaxed), 2);
+
+    // 3 claims happened exactly once each
+    let left = c
+        .query("SELECT COUNT(*) FROM workqueue WHERE status = 'RUNNING'")
+        .unwrap();
+    assert_eq!(left.rows[0].values[0], Value::Int(3));
+}
+
+#[test]
+fn prepared_batch_survives_connector_kill() {
+    let c = wq_cluster();
+    let (link, primary, _secondary) = link_with_two_connectors(&c);
+    let ins = link
+        .prepare("INSERT INTO workqueue (taskid, workerid, status) VALUES (?, ?, 'READY')")
+        .unwrap();
+    let rows: Vec<Vec<Value>> =
+        (0..8).map(|i| vec![Value::Int(i), Value::Int(i % 4)]).collect();
+    link.exec_prepared_batch(AccessKind::InsertTasks, &ins, &rows).unwrap();
+    primary.kill();
+    let rows2: Vec<Vec<Value>> =
+        (8..16).map(|i| vec![Value::Int(i), Value::Int(i % 4)]).collect();
+    link.exec_prepared_batch(AccessKind::InsertTasks, &ins, &rows2).unwrap();
+    assert_eq!(c.table_rows("workqueue").unwrap(), 16);
+}
+
+#[test]
+fn prepared_handle_survives_data_node_failover() {
+    let c = wq_cluster();
+    seed(&c, 32);
+    let sel = c
+        .prepare("SELECT COUNT(*) FROM workqueue WHERE workerid = ? AND status = ?")
+        .unwrap();
+    let finish = c
+        .prepare(
+            "UPDATE workqueue SET status = 'FINISHED', stdout = ? WHERE taskid = ?",
+        )
+        .unwrap();
+
+    let before = c.query_prepared(&sel, &[Value::Int(2), Value::str("READY")]).unwrap();
+    assert_eq!(before.rows[0].values[0], Value::Int(8));
+
+    // kill a data node and promote its backups; the handles were prepared
+    // before the failure and must keep working against promoted replicas
+    c.kill_node(0).unwrap();
+    assert!(c.promote_dead_primaries() > 0);
+
+    let after = c.query_prepared(&sel, &[Value::Int(2), Value::str("READY")]).unwrap();
+    assert_eq!(after.rows[0].values[0], Value::Int(8));
+
+    // writes too — including a value that would have broken the old
+    // format!-built SQL
+    let n = c
+        .exec_prepared(
+            0,
+            AccessKind::UpdateToFinished,
+            &finish,
+            &[Value::str("task said: 'done'"), Value::Int(2)],
+        )
+        .unwrap()
+        .affected();
+    assert_eq!(n, 1);
+    let rs = c.query("SELECT stdout FROM workqueue WHERE taskid = 2").unwrap();
+    assert_eq!(rs.rows[0].values[0], Value::str("task said: 'done'"));
+
+    // heal path: revive the node, reseed replicas, handle still valid
+    c.revive_node(0).unwrap();
+    c.heal().unwrap();
+    let healed = c.query_prepared(&sel, &[Value::Int(2), Value::str("READY")]).unwrap();
+    assert_eq!(healed.rows[0].values[0], Value::Int(7));
+}
+
+#[test]
+fn prepare_after_failover_reuses_the_shared_plan_cache() {
+    let c = wq_cluster();
+    seed(&c, 8);
+    let sql = "SELECT taskid FROM workqueue WHERE taskid = ?";
+    c.prepare(sql).unwrap();
+    let cached = c.cached_plans();
+    c.kill_node(1).unwrap();
+    c.promote_dead_primaries();
+    // preparing the same text after failover is a cache hit, and the plan
+    // still executes
+    let p = c.prepare(sql).unwrap();
+    assert_eq!(c.cached_plans(), cached);
+    let rs = c.query_prepared(&p, &[Value::Int(3)]).unwrap();
+    assert_eq!(rs.rows.len(), 1);
+}
