@@ -75,16 +75,23 @@ fn wq_cluster(workers: usize, rows: usize) -> Arc<DbCluster> {
 }
 
 fn main() {
+    // STORAGE_MICRO_QUICK=1: CI smoke mode — same benches, ~5% of the
+    // iterations, so the workflow exercises every path in seconds.
+    let quick = std::env::var("STORAGE_MICRO_QUICK").map_or(false, |v| v != "0");
+    let it = |n: usize| if quick { (n / 20).max(10) } else { n };
     let workers = 8;
-    let rows = 20_000;
-    println!("storage_micro: {rows} WQ rows, {workers} partitions, 2 data nodes, replication on\n");
+    let rows = if quick { 4_000 } else { 20_000 };
+    println!(
+        "storage_micro: {rows} WQ rows, {workers} partitions, 2 data nodes, replication on{}\n",
+        if quick { " (quick mode)" } else { "" }
+    );
     let mut benches = Vec::new();
 
     // point insert (supervisor task generation path)
     {
         let c = wq_cluster(workers, rows);
         let base = rows as i64 + 1_000_000;
-        benches.push(Bench::run("insert 1 row", 2_000, |i| {
+        benches.push(Bench::run("insert 1 row", it(2_000), |i| {
             c.execute(&format!(
                 "INSERT INTO workqueue (taskid, actid, workerid, status, dur) \
                  VALUES ({}, 1, {}, 'READY', 1.0)",
@@ -98,7 +105,7 @@ fn main() {
     // getREADYtasks: the paper's hottest query (indexed + partition-pruned)
     {
         let c = wq_cluster(workers, rows);
-        benches.push(Bench::run("getREADYtasks (LIMIT 4)", 5_000, |i| {
+        benches.push(Bench::run("getREADYtasks (LIMIT 4)", it(5_000), |i| {
             c.query(&format!(
                 "SELECT taskid, actid, dur FROM workqueue \
                  WHERE workerid = {} AND status = 'READY' ORDER BY taskid LIMIT 4",
@@ -111,7 +118,7 @@ fn main() {
     // the atomic claim (UPDATE ... LIMIT 1 RETURNING)
     {
         let c = wq_cluster(workers, rows);
-        benches.push(Bench::run("claim (UPDATE..RETURNING)", 5_000, |i| {
+        benches.push(Bench::run("claim (UPDATE..RETURNING)", it(5_000), |i| {
             c.exec(&format!(
                 "UPDATE workqueue SET status = 'RUNNING', starttime = NOW() \
                  WHERE workerid = {} AND status = 'READY' ORDER BY taskid LIMIT 1 \
@@ -125,7 +132,7 @@ fn main() {
     // point status update by PK
     {
         let c = wq_cluster(workers, rows);
-        benches.push(Bench::run("updateToFINISHED (by PK)", 5_000, |i| {
+        benches.push(Bench::run("updateToFINISHED (by PK)", it(5_000), |i| {
             c.execute(&format!(
                 "UPDATE workqueue SET status = 'FINISHED', endtime = NOW() WHERE taskid = {}",
                 i % rows
@@ -137,7 +144,7 @@ fn main() {
     // analytical aggregate over the whole WQ (monitoring-style)
     {
         let c = wq_cluster(workers, rows);
-        benches.push(Bench::run("full-WQ GROUP BY status", 200, |_| {
+        benches.push(Bench::run("full-WQ GROUP BY status", it(200), |_| {
             c.query("SELECT status, COUNT(*) FROM workqueue GROUP BY status").unwrap();
         }));
     }
@@ -151,7 +158,7 @@ fn main() {
             c.execute(&format!("INSERT INTO node (nodeid, hostname) VALUES ({w}, 'n{w}')"))
                 .unwrap();
         }
-        benches.push(Bench::run("join WQ x node + GROUP BY", 200, |_| {
+        benches.push(Bench::run("join WQ x node + GROUP BY", it(200), |_| {
             c.query(
                 "SELECT n.hostname, COUNT(*) FROM workqueue t JOIN node n \
                  ON t.workerid = n.nodeid GROUP BY n.hostname",
@@ -163,7 +170,7 @@ fn main() {
     // multi-statement transaction (2 partitions, 2PC + replica apply)
     {
         let c = wq_cluster(workers, rows);
-        benches.push(Bench::run("txn: 2 updates, 2 partitions", 2_000, |i| {
+        benches.push(Bench::run("txn: 2 updates, 2 partitions", it(2_000), |i| {
             let a = i % workers;
             let b = (i + 1) % workers;
             schaladb::storage::txn::TxnBuilder::new(
@@ -193,7 +200,7 @@ fn main() {
     // per-task round-trip.
     {
         let c = wq_cluster(workers, rows);
-        let iters = 20_000;
+        let iters = it(20_000);
         let parse_bench = Bench::run("point SELECT (parse per call)", iters, |i| {
             c.query(&format!(
                 "SELECT taskid, actid, workerid, status, dur, starttime, endtime \
@@ -224,7 +231,7 @@ fn main() {
         let batch = 64usize;
         let c = wq_cluster(workers, 0);
         let mut next = 0i64;
-        let parse_bench = Bench::run("64-row INSERT (format!+parse)", 300, |_| {
+        let parse_bench = Bench::run("64-row INSERT (format!+parse)", it(300), |_| {
             let mut vals = Vec::with_capacity(batch);
             for _ in 0..batch {
                 vals.push(format!("({next}, 1, {}, 'READY', 1.0)", next % workers as i64));
@@ -244,7 +251,7 @@ fn main() {
             )
             .unwrap();
         let mut next2 = 0i64;
-        let prep_bench = Bench::run("64-row INSERT (prepared batch)", 300, |_| {
+        let prep_bench = Bench::run("64-row INSERT (prepared batch)", it(300), |_| {
             let bound: Vec<Vec<Value>> = (0..batch)
                 .map(|_| {
                     let id = next2;
@@ -269,7 +276,7 @@ fn main() {
     {
         let c = wq_cluster(workers, rows);
         let t0 = Instant::now();
-        let claims = 1_000;
+        let claims = it(1_000);
         let mut handles = Vec::new();
         for w in 0..workers {
             let c = c.clone();
@@ -295,6 +302,76 @@ fn main() {
             fmt_secs(dt),
             total / dt
         );
+    }
+
+    // scatter-gather vs centralized: the steering analytics that motivated
+    // the query subsystem. Each iteration first touches one row so the
+    // versioned snapshot cache is invalidated — both paths pay the same
+    // staleness, as in a live hybrid workload. Emits BENCH_scatter.json.
+    {
+        let c = wq_cluster(workers, rows);
+        c.exec("CREATE TABLE node (nodeid INT NOT NULL, hostname TEXT) PRIMARY KEY (nodeid)")
+            .unwrap();
+        for w in 0..workers {
+            c.execute(&format!("INSERT INTO node (nodeid, hostname) VALUES ({w}, 'n{w}')"))
+                .unwrap();
+        }
+        let q_group = "SELECT status, COUNT(*) AS n, AVG(dur), MIN(dur), MAX(dur) \
+                       FROM workqueue GROUP BY status ORDER BY status";
+        let q_join = "SELECT n.hostname, COUNT(*) AS c FROM workqueue t \
+                      JOIN node n ON t.workerid = n.nodeid \
+                      GROUP BY n.hostname ORDER BY c DESC, n.hostname";
+        let iters = it(200);
+        let dirty = |c: &DbCluster, i: usize| {
+            c.execute(&format!(
+                "UPDATE workqueue SET dur = dur + 0.0 WHERE taskid = {}",
+                i % rows
+            ))
+            .unwrap();
+        };
+        let central_group = Bench::run("steering GROUP BY (centralized 2PL)", iters, |i| {
+            dirty(&c, i);
+            c.query_centralized(q_group).unwrap();
+        });
+        let scatter_group = Bench::run("steering GROUP BY (scatter-gather)", iters, |i| {
+            dirty(&c, i);
+            c.query(q_group).unwrap();
+        });
+        let central_join = Bench::run("steering join (centralized 2PL)", iters, |i| {
+            dirty(&c, i);
+            c.query_centralized(q_join).unwrap();
+        });
+        let scatter_join = Bench::run("steering join (snapshot-join)", iters, |i| {
+            dirty(&c, i);
+            c.query(q_join).unwrap();
+        });
+        let group_speedup = central_group.hist.mean() / scatter_group.hist.mean();
+        let join_speedup = central_join.hist.mean() / scatter_join.hist.mean();
+        println!(
+            "scatter-gather vs centralized (steering queries): \
+             GROUP BY {group_speedup:.2}x, join {join_speedup:.2}x\n"
+        );
+        std::fs::create_dir_all("target/bench-results").ok();
+        let mut obj = schaladb::util::json::Json::obj()
+            .set("wq_rows", rows as f64)
+            .set("partitions", workers as f64)
+            .set("group_by_speedup", group_speedup)
+            .set("join_speedup", join_speedup);
+        for b in [&central_group, &scatter_group, &central_join, &scatter_join] {
+            obj = obj.set(
+                b.name,
+                schaladb::util::json::Json::obj()
+                    .set("mean_secs", b.hist.mean())
+                    .set("p50_secs", b.hist.quantile(0.5))
+                    .set("p99_secs", b.hist.quantile(0.99)),
+            );
+        }
+        std::fs::write("target/bench-results/BENCH_scatter.json", obj.to_string()).unwrap();
+        println!("json: target/bench-results/BENCH_scatter.json");
+        benches.push(central_group);
+        benches.push(scatter_group);
+        benches.push(central_join);
+        benches.push(scatter_join);
     }
 
     let rows_out: Vec<Vec<String>> = benches.iter().map(|b| b.row()).collect();

@@ -6,6 +6,10 @@
 //! - [`storage`]: a from-scratch distributed in-memory relational engine
 //!   (partitioned, replicated, transactional, SQL-subset) standing in for
 //!   MySQL Cluster — the substrate SchalaDB assumes.
+//! - [`query`]: the parallel scatter-gather executor for read-only
+//!   SELECTs — partial-aggregate pushdown to partitions, lock-free
+//!   versioned snapshot reads, merge at the coordinator — so steering
+//!   analytics never contend with scheduling transactions.
 //! - [`coordinator`]: the d-Chiron workflow engine built on SchalaDB
 //!   principles — supervisor/secondary-supervisor, DBMS-driven worker
 //!   scheduling, provenance + domain data capture.
@@ -25,6 +29,7 @@
 pub mod baseline;
 pub mod coordinator;
 pub mod metrics;
+pub mod query;
 pub mod runtime;
 pub mod sim;
 pub mod steering;

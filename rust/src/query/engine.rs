@@ -1,0 +1,373 @@
+//! Scatter-gather execution over lock-free partition snapshots.
+//!
+//! Two shapes, both taken by every auto-commit SELECT that the router in
+//! [`DbCluster`](crate::storage::cluster::DbCluster) deems eligible:
+//!
+//! - **scatter-gather** ([`scatter_gather`]): join-free SELECTs. Each
+//!   (pruned) partition runs the partial plan on the scan pool — filter,
+//!   then per-group [`AggState`] partials or a filtered/top-k row set —
+//!   and the coordinator merges partials and finishes with the shared
+//!   HAVING/ORDER BY/LIMIT/project tail. Only partial states cross the
+//!   partition boundary, not rows.
+//! - **snapshot-join** ([`snapshot_join`]): SELECTs with joins. Every
+//!   involved partition is scanned in parallel with that table's
+//!   single-table WHERE conjuncts pushed into the scan; the relational
+//!   pipeline (`run_select`) then runs once at the coordinator.
+//!
+//! Either way the inputs are versioned partition snapshots acquired under
+//! a brief read latch (see `PartitionStore::snapshot`), so the steering
+//! analytics never hold 2PL partition locks while executing — the paper's
+//! Experiment-7 requirement that monitoring not perturb scheduling.
+
+use crate::query::plan::ScatterPlan;
+use crate::query::pool::{ScanPool, ScanTask};
+use crate::storage::sql::exec::{finish_groups, finish_select, run_select, AggState, TableInput};
+use crate::storage::sql::expr::{bind, EvalCtx, Layout};
+use crate::storage::sql::{AggFunc, Expr, Op, SelectStmt};
+use crate::storage::table_def::TableDef;
+use crate::storage::value::{Row, Value};
+use crate::storage::ResultSet;
+use crate::Result;
+use rustc_hash::FxHashMap;
+use std::sync::Arc;
+
+/// Snapshots of one table's target partitions: `(pidx, rows)` in ascending
+/// partition order, each an immutable shared view taken at a single
+/// consistent cut (all latches held together during acquisition).
+pub(crate) struct TableSnapshots {
+    pub def: Arc<TableDef>,
+    pub parts: Vec<(usize, Arc<Vec<Row>>)>,
+}
+
+// ---------------- partial plans (run per partition, on the pool) ----------------
+
+/// Shared context of an aggregate-shape partial plan.
+struct AggPartialCtx {
+    layout: Layout,
+    where_: Option<Expr>,
+    group_by: Vec<Expr>,
+    aggs: Vec<(AggFunc, bool, Option<Expr>)>,
+    now: f64,
+}
+
+/// One partition's partial aggregation output: groups in first-seen order,
+/// each with a representative row and one partial state per aggregate.
+struct PartialGroups {
+    order: Vec<Vec<u64>>,
+    groups: FxHashMap<Vec<u64>, (Row, Vec<AggState>)>,
+}
+
+fn partial_aggregate(ctx: &AggPartialCtx, rows: &[Row]) -> Result<PartialGroups> {
+    let ectx = EvalCtx { now: ctx.now };
+    let wb = match &ctx.where_ {
+        Some(w) => Some(bind(w, &ctx.layout)?),
+        None => None,
+    };
+    let key_bound = ctx
+        .group_by
+        .iter()
+        .map(|e| bind(e, &ctx.layout))
+        .collect::<Result<Vec<_>>>()?;
+    let arg_bound = ctx
+        .aggs
+        .iter()
+        .map(|(_, _, arg)| match arg {
+            Some(e) => bind(e, &ctx.layout).map(Some),
+            None => Ok(None),
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut pg = PartialGroups { order: Vec::new(), groups: FxHashMap::default() };
+    for r in rows {
+        let keep = match &wb {
+            Some(b) => b.matches(&r.values, &ectx)?,
+            None => true,
+        };
+        if !keep {
+            continue;
+        }
+        let key: Vec<u64> = key_bound
+            .iter()
+            .map(|b| Ok(b.eval(&r.values, &ectx)?.hash_key()))
+            .collect::<Result<Vec<_>>>()?;
+        let g = match pg.groups.get_mut(&key) {
+            Some(g) => g,
+            None => {
+                pg.order.push(key.clone());
+                pg.groups.entry(key).or_insert_with(|| {
+                    (
+                        r.clone(),
+                        ctx.aggs
+                            .iter()
+                            .map(|(f, d, _)| AggState::new(*f, *d))
+                            .collect(),
+                    )
+                })
+            }
+        };
+        for (st, arg) in g.1.iter_mut().zip(&arg_bound) {
+            let v = match arg {
+                Some(b) => Some(b.eval(&r.values, &ectx)?),
+                None => None,
+            };
+            st.push(v)?;
+        }
+    }
+    Ok(pg)
+}
+
+/// Shared context of a scan-shape partial plan.
+struct ScanPartialCtx {
+    layout: Layout,
+    where_: Option<Expr>,
+    /// `Some((order keys, k))`: keep only each partition's top-k under the
+    /// final sort order (sound because the coordinator re-sorts stably and
+    /// truncates to the same k; only pushed down when no HAVING runs).
+    topk: Option<(Vec<(Expr, bool)>, usize)>,
+    /// LIMIT without ORDER BY: first-k rows per partition suffice.
+    limit_only: Option<usize>,
+    now: f64,
+}
+
+fn partial_scan(ctx: &ScanPartialCtx, rows: &[Row]) -> Result<Vec<Row>> {
+    let ectx = EvalCtx { now: ctx.now };
+    let wb = match &ctx.where_ {
+        Some(w) => Some(bind(w, &ctx.layout)?),
+        None => None,
+    };
+    let mut out = Vec::new();
+    for r in rows {
+        let keep = match &wb {
+            Some(b) => b.matches(&r.values, &ectx)?,
+            None => true,
+        };
+        if keep {
+            out.push(r.clone());
+        }
+    }
+    if let Some((keys, k)) = &ctx.topk {
+        // bind failures fall through untruncated: the coordinator's ORDER
+        // BY will surface the real error (or handle the alias case)
+        if out.len() > *k {
+            if let Ok(bound) = keys
+                .iter()
+                .map(|(e, asc)| Ok((bind(e, &ctx.layout)?, *asc)))
+                .collect::<Result<Vec<_>>>()
+            {
+                let mut decorated: Vec<(Vec<Value>, Row)> = Vec::with_capacity(out.len());
+                for r in out {
+                    let key = bound
+                        .iter()
+                        .map(|(b, _)| b.eval(&r.values, &ectx))
+                        .collect::<Result<Vec<_>>>()?;
+                    decorated.push((key, r));
+                }
+                decorated.sort_by(|(ka, _), (kb, _)| {
+                    for ((a, b), (_, asc)) in ka.iter().zip(kb.iter()).zip(bound.iter()) {
+                        let o = a.total_cmp(b);
+                        let o = if *asc { o } else { o.reverse() };
+                        if o != std::cmp::Ordering::Equal {
+                            return o;
+                        }
+                    }
+                    std::cmp::Ordering::Equal
+                });
+                decorated.truncate(*k);
+                return Ok(decorated.into_iter().map(|(_, r)| r).collect());
+            }
+        }
+    } else if let Some(k) = ctx.limit_only {
+        out.truncate(k);
+    }
+    Ok(out)
+}
+
+// ---------------- coordinator merge ----------------
+
+/// Execute a split join-free SELECT: partials on the pool, merge inline.
+pub(crate) fn scatter_gather(
+    pool: &ScanPool,
+    plan: &ScatterPlan,
+    binding: &str,
+    snaps: &TableSnapshots,
+    now: f64,
+) -> Result<ResultSet> {
+    let layout = Layout::of_table(
+        binding,
+        snaps.def.schema.columns.iter().map(|c| c.name.clone()),
+    );
+    let ectx = EvalCtx { now };
+
+    if plan.aggregated {
+        let ctx = Arc::new(AggPartialCtx {
+            layout: layout.clone(),
+            where_: plan.where_.clone(),
+            group_by: plan.group_by.clone(),
+            aggs: plan.agg_specs(),
+            now,
+        });
+        let tasks: Vec<ScanTask<PartialGroups>> = snaps
+            .parts
+            .iter()
+            .map(|(_, rows)| -> ScanTask<PartialGroups> {
+                let ctx = ctx.clone();
+                let rows = rows.clone();
+                Box::new(move || partial_aggregate(&ctx, &rows))
+            })
+            .collect();
+
+        // Merge partials in ascending-partition order so group first-seen
+        // order (and thus unordered output order) matches the centralized
+        // single-pass scan exactly.
+        let mut order: Vec<Vec<u64>> = Vec::new();
+        let mut groups: FxHashMap<Vec<u64>, (Row, Vec<AggState>)> = FxHashMap::default();
+        for partial in pool.run(tasks) {
+            let mut partial = partial?;
+            for key in partial.order.drain(..) {
+                let (rep, states) = partial.groups.remove(&key).expect("ordered key present");
+                match groups.get_mut(&key) {
+                    Some((_, acc)) => {
+                        for (a, s) in acc.iter_mut().zip(states) {
+                            a.merge(s)?;
+                        }
+                    }
+                    None => {
+                        order.push(key.clone());
+                        groups.insert(key, (rep, states));
+                    }
+                }
+            }
+        }
+        // Shared epilogue: empty-group synthesis, `#.aggN` layout, output
+        // rows — one implementation for both executors (see exec.rs).
+        let spec_pairs: Vec<(AggFunc, bool)> =
+            plan.agg_specs().iter().map(|(f, d, _)| (*f, *d)).collect();
+        let (out_rows, ext) =
+            finish_groups(order, groups, &spec_pairs, &layout, plan.group_by.is_empty());
+        return finish_select(
+            out_rows,
+            &ext,
+            &plan.items,
+            plan.having.as_ref(),
+            &plan.order_by,
+            plan.limit,
+            &ectx,
+        );
+    }
+
+    // Scan shape: filter (+ top-k) partials, concatenate, shared tail.
+    // Per-partition truncation is only sound when no HAVING re-filters.
+    let pushdown_limit = plan.limit.filter(|_| plan.having.is_none()).map(|k| k as usize);
+    let ctx = Arc::new(ScanPartialCtx {
+        layout: layout.clone(),
+        where_: plan.where_.clone(),
+        topk: match (&pushdown_limit, plan.order_by.is_empty()) {
+            (Some(k), false) => Some((plan.order_by.clone(), *k)),
+            _ => None,
+        },
+        limit_only: match (&pushdown_limit, plan.order_by.is_empty()) {
+            (Some(k), true) => Some(*k),
+            _ => None,
+        },
+        now,
+    });
+    let tasks: Vec<ScanTask<Vec<Row>>> = snaps
+        .parts
+        .iter()
+        .map(|(_, rows)| -> ScanTask<Vec<Row>> {
+            let ctx = ctx.clone();
+            let rows = rows.clone();
+            Box::new(move || partial_scan(&ctx, &rows))
+        })
+        .collect();
+    let mut rows = Vec::new();
+    for partial in pool.run(tasks) {
+        rows.extend(partial?);
+    }
+    finish_select(
+        rows,
+        &layout,
+        &plan.items,
+        plan.having.as_ref(),
+        &plan.order_by,
+        plan.limit,
+        &ectx,
+    )
+}
+
+// ---------------- snapshot-join ----------------
+
+/// The conjuncts of `where_` that resolve entirely against `layout` —
+/// the single-table filter pushed into that table's scan. Mirrors the
+/// centralized planner's pushdown (left-outer right sides get none).
+pub(crate) fn single_table_filter(where_: Option<&Expr>, layout: &Layout) -> Option<Expr> {
+    let w = where_?;
+    let mut kept: Option<Expr> = None;
+    for c in w.conjuncts() {
+        if !c.has_aggregate() && bind(c, layout).is_ok() {
+            kept = Some(match kept {
+                None => c.clone(),
+                Some(prev) => Expr::Binary(Op::And, Box::new(prev), Box::new(c.clone())),
+            });
+        }
+    }
+    kept
+}
+
+/// Execute a SELECT with joins: all partitions of all involved tables are
+/// filtered in parallel over their snapshots, then the full relational
+/// pipeline runs once at the coordinator. No 2PL locks are taken.
+pub(crate) fn snapshot_join(
+    pool: &ScanPool,
+    s: &SelectStmt,
+    snaps: &[TableSnapshots],
+    now: f64,
+) -> Result<ResultSet> {
+    let ectx = EvalCtx { now };
+    fn binding_of(s: &SelectStmt, ti: usize) -> &str {
+        if ti == 0 {
+            s.from.binding()
+        } else {
+            s.joins[ti - 1].table.binding()
+        }
+    }
+    let mut specs: Vec<Arc<ScanPartialCtx>> = Vec::with_capacity(snaps.len());
+    for (ti, snap) in snaps.iter().enumerate() {
+        let layout = Layout::of_table(
+            binding_of(s, ti),
+            snap.def.schema.columns.iter().map(|c| c.name.clone()),
+        );
+        // Pushing a filter into the right side of a LEFT JOIN would change
+        // its padding semantics, so those scan full (as centralized does).
+        let push = ti == 0 || !s.joins[ti - 1].left_outer;
+        let filter = if push { single_table_filter(s.where_.as_ref(), &layout) } else { None };
+        specs.push(Arc::new(ScanPartialCtx {
+            layout,
+            where_: filter,
+            topk: None,
+            limit_only: None,
+            now,
+        }));
+    }
+    let mut tasks: Vec<ScanTask<Vec<Row>>> = Vec::new();
+    for (ti, snap) in snaps.iter().enumerate() {
+        for (_, rows) in &snap.parts {
+            let spec = specs[ti].clone();
+            let rows = rows.clone();
+            tasks.push(Box::new(move || partial_scan(&spec, &rows)));
+        }
+    }
+    let mut results = pool.run(tasks).into_iter();
+    let mut inputs = Vec::with_capacity(snaps.len());
+    for (ti, snap) in snaps.iter().enumerate() {
+        let mut rows = Vec::new();
+        for _ in &snap.parts {
+            rows.extend(results.next().expect("one result per partition task")?);
+        }
+        inputs.push(TableInput {
+            binding: binding_of(s, ti).to_string(),
+            columns: snap.def.schema.columns.iter().map(|c| c.name.clone()).collect(),
+            rows,
+        });
+    }
+    run_select(s, inputs, &ectx)
+}

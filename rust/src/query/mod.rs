@@ -1,0 +1,35 @@
+//! Parallel scatter-gather query engine for read-only SELECTs.
+//!
+//! The paper's central claim (§4–5, Experiment 7) is that transaction-
+//! oriented scheduling and online-analytical steering can share one
+//! in-memory database with negligible interference. The centralized
+//! executor undermines that in-process: every SELECT took 2PL read locks
+//! on its partitions and ran single-threaded at the coordinator, so the
+//! steering `Monitor` contended head-on with worker claims. This subsystem
+//! restores the paper's property:
+//!
+//! - [`plan`]: splits a join-free SELECT into a per-partition **partial
+//!   plan** (filter + partial aggregates + top-k) and a coordinator
+//!   **merge plan** (combine `AggState` partials, then HAVING/ORDER
+//!   BY/LIMIT/project), plus the EXPLAIN renderer behind
+//!   `Prepared::describe()`.
+//! - [`engine`]: executes partials concurrently on the scan pool over
+//!   **versioned partition snapshots** — acquired under a brief read
+//!   latch, released before any work runs — honoring failover replica
+//!   selection. Join shapes run as parallel snapshot scans with the join
+//!   at the coordinator.
+//! - [`pool`]: the fixed-size scan pool standing in for data-node-local
+//!   query threads.
+//!
+//! Routing lives in `DbCluster::exec_stmt`: auto-commit SELECTs go through
+//! this engine unless they prune to a single partition without aggregates
+//! (the `getREADYtasks` point pattern, where the centralized index-probe
+//! path is faster). SELECTs inside multi-statement transactions always
+//! stay on the 2PL path so they read their own writes.
+
+pub mod engine;
+pub mod plan;
+pub mod pool;
+
+pub use plan::{explain, ScatterPlan, TableInfo};
+pub use pool::ScanPool;

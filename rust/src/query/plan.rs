@@ -1,0 +1,379 @@
+//! Plan split for the scatter-gather engine.
+//!
+//! A read-only, join-free `SELECT` splits into:
+//!
+//! - a **partial plan**, shipped to every (pruned) partition: evaluate the
+//!   WHERE predicate against the partition snapshot, then either fold rows
+//!   into per-group [`AggState`](crate::storage::sql::exec::AggState)
+//!   partials (aggregate shape) or keep the filtered rows, truncated to a
+//!   per-partition top-k when ORDER BY + LIMIT allow (scan shape);
+//! - a **merge plan**, run once at the coordinator: combine partial
+//!   aggregate states group by group (`AggState::merge`), then apply
+//!   HAVING, ORDER BY, LIMIT and projection — the exact same tail stages
+//!   the centralized pipeline runs
+//!   ([`finish_select`](crate::storage::sql::exec::finish_select)), which
+//!   is what makes the two paths result-identical by construction.
+//!
+//! Join shapes don't split (the coordinator joins over parallel snapshot
+//! scans instead — see `crate::query::engine`), and DML never comes here.
+
+use crate::storage::sql::exec::{rewrite_aggregates, substitute_aliases};
+use crate::storage::sql::{AggFunc, Expr, Op, SelectItem, SelectStmt, Statement, TableRef};
+use crate::storage::value::Value;
+
+/// The split product for one join-free SELECT. Expressions in `items`,
+/// `having` and `order_by` have aggregate calls rewritten to `#.aggN`
+/// references into the merge layout; `aggs[N]` is the aggregate each
+/// synthetic column stands for.
+#[derive(Clone, Debug)]
+pub struct ScatterPlan {
+    /// Alias-substituted GROUP BY keys (bound per partition).
+    pub group_by: Vec<Expr>,
+    /// Distinct aggregate calls, in `#.aggN` order (the pushed-down part).
+    pub aggs: Vec<Expr>,
+    /// Select items with aggregates rewritten (the merge projection).
+    pub items: Vec<SelectItem>,
+    /// Alias-substituted, aggregate-rewritten HAVING (merge stage).
+    pub having: Option<Expr>,
+    /// Alias-substituted, aggregate-rewritten ORDER BY (merge stage).
+    pub order_by: Vec<(Expr, bool)>,
+    pub limit: Option<u64>,
+    /// WHERE predicate, evaluated inside every partial (filter pushdown).
+    pub where_: Option<Expr>,
+    /// True when any GROUP BY/aggregate runs (partial-aggregate shape);
+    /// false means pure filter/top-k scan partials.
+    pub aggregated: bool,
+}
+
+impl ScatterPlan {
+    /// Split a SELECT. Returns `None` for join shapes — those execute as
+    /// parallel snapshot scans with the join at the coordinator instead.
+    pub fn build(s: &SelectStmt) -> Option<ScatterPlan> {
+        if !s.joins.is_empty() {
+            return None;
+        }
+        // Mirror of run_select stages 3–4: alias substitution, then
+        // aggregate rewrite. Any divergence here would break the
+        // scatter == centralized equivalence the tests pin down.
+        let aliases: Vec<(String, Expr)> = s
+            .items
+            .iter()
+            .filter_map(|it| match it {
+                SelectItem::Expr { expr, alias: Some(a) } => Some((a.clone(), expr.clone())),
+                _ => None,
+            })
+            .collect();
+        let subst = |e: &Expr| substitute_aliases(e, &aliases);
+        let having = s.having.as_ref().map(&subst);
+        let order_by: Vec<(Expr, bool)> =
+            s.order_by.iter().map(|(e, asc)| (subst(e), *asc)).collect();
+        let group_by: Vec<Expr> = s.group_by.iter().map(&subst).collect();
+
+        let mut aggs: Vec<Expr> = Vec::new();
+        let items: Vec<SelectItem> = s
+            .items
+            .iter()
+            .map(|it| match it {
+                SelectItem::Expr { expr, alias } => SelectItem::Expr {
+                    expr: rewrite_aggregates(expr, &mut aggs),
+                    alias: alias.clone(),
+                },
+                w => w.clone(),
+            })
+            .collect();
+        let having = having.map(|h| rewrite_aggregates(&h, &mut aggs));
+        let order_by: Vec<(Expr, bool)> = order_by
+            .into_iter()
+            .map(|(e, asc)| (rewrite_aggregates(&e, &mut aggs), asc))
+            .collect();
+        let aggregated = !group_by.is_empty() || !aggs.is_empty();
+        Some(ScatterPlan {
+            group_by,
+            aggs,
+            items,
+            having,
+            order_by,
+            limit: s.limit,
+            where_: s.where_.clone(),
+            aggregated,
+        })
+    }
+
+    /// (function, distinct, argument) triple per pushed-down aggregate.
+    pub fn agg_specs(&self) -> Vec<(AggFunc, bool, Option<Expr>)> {
+        self.aggs
+            .iter()
+            .map(|a| match a {
+                Expr::Agg { func, arg, distinct } => {
+                    (*func, *distinct, arg.as_deref().cloned())
+                }
+                _ => unreachable!("aggs only collects Agg nodes"),
+            })
+            .collect()
+    }
+}
+
+/// Catalog facts `explain` needs about one table; the caller supplies a
+/// lookup so the renderer works both with a live cluster catalog and
+/// standalone (tests, offline plan inspection).
+#[derive(Clone, Debug)]
+pub struct TableInfo {
+    pub partitions: usize,
+    pub partition_col: Option<String>,
+}
+
+/// Render an EXPLAIN-style description of how the engine will execute
+/// `stmt`: chosen path (scatter-gather aggregate / scatter scan /
+/// snapshot-join / centralized), pushed-down aggregates, group keys, and
+/// partition pruning. This is what `Prepared::describe()` returns.
+pub fn explain<F>(stmt: &Statement, table_info: F) -> String
+where
+    F: Fn(&str) -> Option<TableInfo>,
+{
+    match stmt {
+        Statement::Select(s) => explain_select(s, &table_info),
+        Statement::Insert { table, .. } => format!(
+            "plan: centralized transactional write (2PL + synchronous replica apply)\n  table: {}\n",
+            table_label(table, &table_info)
+        ),
+        Statement::Update { table, .. } | Statement::Delete { table, .. } => format!(
+            "plan: centralized transactional write (2PL + synchronous replica apply)\n  table: {}\n",
+            table_label(&table.table, &table_info)
+        ),
+        Statement::CreateTable { name, .. } => {
+            format!("plan: DDL (catalog update)\n  table: {name}\n")
+        }
+    }
+}
+
+fn table_label<F>(table: &str, info: &F) -> String
+where
+    F: Fn(&str) -> Option<TableInfo>,
+{
+    match info(table) {
+        Some(ti) => format!("{table} ({} partitions)", ti.partitions),
+        None => table.to_string(),
+    }
+}
+
+fn explain_select<F>(s: &SelectStmt, info: &F) -> String
+where
+    F: Fn(&str) -> Option<TableInfo>,
+{
+    let mut out = String::new();
+    if !s.joins.is_empty() {
+        out.push_str(
+            "plan: snapshot-join (lock-free parallel partition scans, join at coordinator)\n",
+        );
+        let mut tables = vec![table_label(&s.from.table, info)];
+        for j in &s.joins {
+            tables.push(table_label(&j.table.table, info));
+        }
+        out.push_str(&format!("  tables: {}\n", tables.join(", ")));
+        out.push_str(
+            "  pushdown: single-table WHERE conjuncts filter each scan (inner sides only)\n",
+        );
+        out.push_str(&pruning_line(s, &s.from, info));
+        return out;
+    }
+    let plan = ScatterPlan::build(s).expect("join-free SELECT always splits");
+    if plan.aggregated {
+        out.push_str("plan: scatter-gather aggregate (partial aggregates merged at coordinator)\n");
+        out.push_str(&format!("  table: {}\n", table_label(&s.from.table, info)));
+        let rendered: Vec<String> = plan.aggs.iter().map(render_expr).collect();
+        out.push_str(&format!("  pushdown: filter + partial [{}]\n", rendered.join(", ")));
+        if !plan.group_by.is_empty() {
+            let keys: Vec<String> = plan.group_by.iter().map(render_expr).collect();
+            out.push_str(&format!("  group keys: [{}]\n", keys.join(", ")));
+        }
+        out.push_str("  merge: AggState::merge per group, then HAVING / ORDER BY / LIMIT / project\n");
+    } else {
+        out.push_str("plan: scatter scan (lock-free parallel filter");
+        if plan.limit.is_some() && !plan.order_by.is_empty() {
+            out.push_str(" + per-partition top-k");
+        } else if plan.limit.is_some() {
+            out.push_str(" + per-partition limit");
+        }
+        out.push_str(")\n");
+        out.push_str(&format!("  table: {}\n", table_label(&s.from.table, info)));
+        out.push_str(
+            "  note: when pruning resolves to a single partition at bind time, the \
+             centralized index-probe path runs instead\n",
+        );
+    }
+    out.push_str(&pruning_line(s, &s.from, info));
+    out.push_str("  reads: versioned partition snapshots, failover-aware, no 2PL locks\n");
+    out
+}
+
+fn pruning_line<F>(s: &SelectStmt, from: &TableRef, info: &F) -> String
+where
+    F: Fn(&str) -> Option<TableInfo>,
+{
+    let Some(ti) = info(&from.table) else {
+        return "  pruning: unknown (no catalog)\n".to_string();
+    };
+    let n = ti.partitions;
+    let Some(pcol) = &ti.partition_col else {
+        return format!("  pruning: none (table has {n} partition(s), no partition column)\n");
+    };
+    if let Some(w) = &s.where_ {
+        for c in w.conjuncts() {
+            if let Expr::Binary(Op::Eq, a, b) = c {
+                let pair = match (a.as_ref(), b.as_ref()) {
+                    (Expr::Col { name, .. }, Expr::Lit(Value::Int(k)))
+                    | (Expr::Lit(Value::Int(k)), Expr::Col { name, .. }) => {
+                        Some((name.as_str(), Some(*k), None))
+                    }
+                    (Expr::Col { name, .. }, Expr::Param(i))
+                    | (Expr::Param(i), Expr::Col { name, .. }) => {
+                        Some((name.as_str(), None, Some(*i)))
+                    }
+                    _ => None,
+                };
+                if let Some((name, lit, param)) = pair {
+                    if name.eq_ignore_ascii_case(pcol) {
+                        return match (lit, param) {
+                            (Some(k), _) => format!(
+                                "  pruning: {pcol} = {k} -> 1 of {n} partitions\n"
+                            ),
+                            (_, Some(i)) => format!(
+                                "  pruning: {pcol} = ?{i} -> 1 of {n} partitions (resolved at bind)\n"
+                            ),
+                            _ => unreachable!("pair carries a literal or a param"),
+                        };
+                    }
+                }
+            }
+        }
+    }
+    format!("  pruning: none (scatter across all {n} partitions)\n")
+}
+
+/// Compact SQL-ish rendering of an expression for plan output.
+pub fn render_expr(e: &Expr) -> String {
+    match e {
+        Expr::Lit(v) => v.to_string(),
+        Expr::Param(i) => format!("?{i}"),
+        Expr::Col { table, name } => match table {
+            Some(t) => format!("{t}.{name}"),
+            None => name.clone(),
+        },
+        Expr::Agg { func, arg, distinct } => {
+            let inner = match arg {
+                Some(a) => render_expr(a),
+                None => "*".to_string(),
+            };
+            if *distinct {
+                format!("{}(DISTINCT {inner})", func.name())
+            } else {
+                format!("{}({inner})", func.name())
+            }
+        }
+        Expr::Unary(op, x) => format!("{}{}", op_str(*op), render_expr(x)),
+        Expr::Binary(op, a, b) => {
+            format!("{} {} {}", render_expr(a), op_str(*op), render_expr(b))
+        }
+        Expr::Func { name, args } => {
+            let rendered: Vec<String> = args.iter().map(render_expr).collect();
+            format!("{}({})", name, rendered.join(", "))
+        }
+        other => format!("{other:?}"),
+    }
+}
+
+fn op_str(op: Op) -> &'static str {
+    match op {
+        Op::Add => "+",
+        Op::Sub => "-",
+        Op::Mul => "*",
+        Op::Div => "/",
+        Op::Mod => "%",
+        Op::Eq => "=",
+        Op::Ne => "!=",
+        Op::Lt => "<",
+        Op::Le => "<=",
+        Op::Gt => ">",
+        Op::Ge => ">=",
+        Op::And => "AND",
+        Op::Or => "OR",
+        Op::Not => "NOT ",
+        Op::Neg => "-",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::sql::parse;
+
+    fn select(sql: &str) -> SelectStmt {
+        match parse(sql).unwrap() {
+            Statement::Select(s) => s,
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn split_collects_aggregates_and_rewrites_references() {
+        let s = select(
+            "SELECT wid, COUNT(*) AS n, AVG(dur) FROM t WHERE status = 'F' \
+             GROUP BY wid HAVING n > 1 ORDER BY n DESC, wid",
+        );
+        let p = ScatterPlan::build(&s).unwrap();
+        assert!(p.aggregated);
+        assert_eq!(p.aggs.len(), 2, "COUNT(*) and AVG(dur)");
+        assert_eq!(p.group_by.len(), 1);
+        assert!(p.where_.is_some());
+        // HAVING `n > 1` resolved through the alias to the rewritten agg ref
+        let h = p.having.as_ref().unwrap();
+        assert!(
+            matches!(h, Expr::Binary(Op::Gt, a, _)
+                if matches!(a.as_ref(), Expr::Col { table: Some(t), name } if t == "#" && name == "agg0")),
+            "alias-substituted HAVING must reference #.agg0, got {h:?}"
+        );
+    }
+
+    #[test]
+    fn scan_shape_has_no_aggregates() {
+        let s = select("SELECT taskid FROM t WHERE wid = 3 ORDER BY taskid LIMIT 5");
+        let p = ScatterPlan::build(&s).unwrap();
+        assert!(!p.aggregated);
+        assert!(p.aggs.is_empty());
+        assert_eq!(p.limit, Some(5));
+    }
+
+    #[test]
+    fn joins_do_not_split() {
+        let s = select("SELECT COUNT(*) FROM t JOIN u ON t.a = u.a");
+        assert!(ScatterPlan::build(&s).is_none());
+    }
+
+    #[test]
+    fn explain_renders_each_shape() {
+        let info = |t: &str| {
+            Some(TableInfo {
+                partitions: if t == "t" { 8 } else { 1 },
+                partition_col: if t == "t" { Some("wid".into()) } else { None },
+            })
+        };
+        let agg = parse("SELECT status, COUNT(*) FROM t GROUP BY status").unwrap();
+        let txt = explain(&agg, info);
+        assert!(txt.contains("scatter-gather aggregate"), "{txt}");
+        assert!(txt.contains("COUNT(*)"), "{txt}");
+        assert!(txt.contains("all 8 partitions"), "{txt}");
+
+        let pruned = parse("SELECT COUNT(*) FROM t WHERE wid = ?").unwrap();
+        let txt = explain(&pruned, info);
+        assert!(txt.contains("wid = ?0"), "{txt}");
+        assert!(txt.contains("resolved at bind"), "{txt}");
+
+        let join = parse("SELECT COUNT(*) FROM t JOIN u ON t.a = u.a").unwrap();
+        let txt = explain(&join, info);
+        assert!(txt.contains("snapshot-join"), "{txt}");
+
+        let dml = parse("UPDATE t SET a = 1 WHERE wid = 2").unwrap();
+        let txt = explain(&dml, info);
+        assert!(txt.contains("centralized transactional write"), "{txt}");
+    }
+}

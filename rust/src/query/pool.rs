@@ -1,0 +1,149 @@
+//! The scan pool: a small fixed-size thread pool executing per-partition
+//! partial plans concurrently.
+//!
+//! The paper's data nodes each own their partitions and scan them with
+//! local CPU; in this in-process reproduction the pool plays that role —
+//! one scatter task per partition replica, all running in parallel, with
+//! the caller thread pitching in so a single-partition query pays no
+//! dispatch latency at all. The pool is created lazily by the first
+//! scatter-gather query and lives as long as its
+//! [`DbCluster`](crate::storage::cluster::DbCluster).
+
+use crate::{Error, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// One scatter task: runs on a pool worker (or inline on the caller) and
+/// returns its partial result.
+pub type ScanTask<T> = Box<dyn FnOnce() -> Result<T> + Send + 'static>;
+
+/// Fixed-size worker pool with a shared job queue. Dropping the pool closes
+/// the queue and the workers exit.
+pub struct ScanPool {
+    tx: Mutex<Sender<Job>>,
+    size: usize,
+}
+
+impl ScanPool {
+    /// Pool sized for the machine: one worker per available core, clamped
+    /// to a sane range (partition counts in the paper's deployments are
+    /// single-digit to low-double-digit).
+    pub fn with_default_size() -> ScanPool {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        ScanPool::new(n.clamp(2, 16))
+    }
+
+    pub fn new(size: usize) -> ScanPool {
+        assert!(size > 0, "scan pool needs at least one worker");
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..size {
+            let rx = rx.clone();
+            std::thread::Builder::new()
+                .name(format!("schaladb-scan-{i}"))
+                .spawn(move || loop {
+                    // hold the queue lock only for the dequeue, not the job
+                    let job = {
+                        let g = rx.lock().unwrap();
+                        g.recv()
+                    };
+                    match job {
+                        Ok(j) => j(),
+                        Err(_) => break, // pool dropped
+                    }
+                })
+                .expect("spawn scan worker");
+        }
+        ScanPool { tx: Mutex::new(tx), size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run every task, returning results in input order. All tasks but the
+    /// last are dispatched to the pool; the last runs inline on the caller
+    /// thread, so a one-task batch never crosses a thread boundary. Panics
+    /// inside a task are caught and surfaced as `Error::Engine` so a bad
+    /// task can't wedge the collector.
+    pub fn run<T>(&self, tasks: Vec<ScanTask<T>>) -> Vec<Result<T>>
+    where
+        T: Send + 'static,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut tasks = tasks;
+        let last = tasks.pop().expect("n > 0");
+        let (rtx, rrx) = channel::<(usize, Result<T>)>();
+        {
+            let tx = self.tx.lock().unwrap();
+            for (i, f) in tasks.into_iter().enumerate() {
+                let rtx = rtx.clone();
+                tx.send(Box::new(move || {
+                    let r = catch_unwind(AssertUnwindSafe(f))
+                        .unwrap_or_else(|_| Err(Error::Engine("scan task panicked".into())));
+                    let _ = rtx.send((i, r));
+                }))
+                .expect("scan pool workers alive");
+            }
+        }
+        let mut out: Vec<Option<Result<T>>> = (0..n).map(|_| None).collect();
+        out[n - 1] = Some(
+            catch_unwind(AssertUnwindSafe(last))
+                .unwrap_or_else(|_| Err(Error::Engine("scan task panicked".into()))),
+        );
+        for _ in 0..n - 1 {
+            let (i, r) = rrx.recv().expect("scan pool result");
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|o| o.expect("every slot filled")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_tasks_and_preserves_order() {
+        let pool = ScanPool::new(3);
+        let tasks: Vec<ScanTask<usize>> = (0..10)
+            .map(|i| {
+                let f: ScanTask<usize> = Box::new(move || Ok(i * i));
+                f
+            })
+            .collect();
+        let got: Vec<usize> = pool.run(tasks).into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(got, (0..10).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn errors_and_panics_are_isolated_per_task() {
+        let pool = ScanPool::new(2);
+        let tasks: Vec<ScanTask<i32>> = vec![
+            Box::new(|| Ok(1)),
+            Box::new(|| Err(Error::Engine("boom".into()))),
+            Box::new(|| panic!("scan bug")),
+            Box::new(|| Ok(4)),
+        ];
+        let got = pool.run(tasks);
+        assert_eq!(*got[0].as_ref().unwrap(), 1);
+        assert!(got[1].is_err());
+        assert!(got[2].is_err(), "panic must surface as an error, not a hang");
+        assert_eq!(*got[3].as_ref().unwrap(), 4);
+    }
+
+    #[test]
+    fn empty_and_single_batches() {
+        let pool = ScanPool::new(2);
+        let none: Vec<ScanTask<u8>> = vec![];
+        assert!(pool.run(none).is_empty());
+        let one: Vec<ScanTask<u8>> = vec![Box::new(|| Ok(7))];
+        assert_eq!(*pool.run(one)[0].as_ref().unwrap(), 7);
+    }
+}

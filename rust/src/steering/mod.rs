@@ -5,6 +5,12 @@
 //! argues for: execution, domain, and provenance data in one DBMS means a
 //! monitoring query can join the scheduler's workqueue with domain values
 //! and provenance edges with no export step.
+//!
+//! All of Q1–Q7 execute on the scatter-gather engine (`crate::query`):
+//! lock-free partition snapshots, parallel partial plans, merge at the
+//! coordinator — so a monitor polling every few seconds never holds 2PL
+//! partition locks against the scheduler's claim transactions
+//! (Experiment 7's "negligible steering overhead").
 
 use crate::storage::prepared::{in_placeholders, padded_chunks, IN_CHUNK};
 use crate::storage::{AccessKind, DbCluster, ResultSet, Value};
@@ -330,6 +336,35 @@ mod tests {
         // finished workflow -> q5/q6 empty but valid
         c.q5_busiest_activity().unwrap();
         c.q6_activity_times().unwrap();
+    }
+
+    #[test]
+    fn steering_mix_takes_lock_free_paths() {
+        // The Table-2 mix must run on the scatter-gather engine: join
+        // queries via parallel snapshot scans, single-table aggregates via
+        // partial-aggregate pushdown — never on the 2PL read path that
+        // contends with scheduling.
+        let db = run_risers();
+        let (s0, j0, _) = db.route_counts();
+        let c = SteeringClient::new(db.clone());
+        c.q1_recent_status_by_node().unwrap();
+        c.q2_bytes_by_task("node000").unwrap();
+        c.q3_worst_nodes().unwrap();
+        c.q4_tasks_left(1).unwrap();
+        c.q5_busiest_activity().unwrap();
+        c.q6_activity_times().unwrap();
+        c.q7_wear_outliers("calculate_wear_and_tear", 0.5).unwrap();
+        let (s1, j1, _) = db.route_counts();
+        assert!(
+            j1 - j0 >= 6,
+            "Q1–Q3 and Q5–Q7 are joins and must snapshot-join (got {})",
+            j1 - j0
+        );
+        assert!(
+            s1 - s0 >= 1,
+            "Q4 is a single-table aggregate and must scatter (got {})",
+            s1 - s0
+        );
     }
 
     #[test]

@@ -8,6 +8,9 @@
 //! two-phase locking across partitions and synchronous replica apply —
 //! the in-process analogue of NDB's 2PC).
 
+use crate::query::engine::{self as query_engine, TableSnapshots};
+use crate::query::plan::{self as query_plan, ScatterPlan, TableInfo};
+use crate::query::pool::ScanPool;
 use crate::storage::datanode::DataNode;
 use crate::storage::partition::PartitionStore;
 use crate::storage::prepared::{Prepared, PreparedPlan};
@@ -22,8 +25,8 @@ use crate::storage::{ResultSet, StatementResult};
 use crate::util::clock::{self, SharedClock};
 use crate::{Error, Result};
 use rustc_hash::FxHashMap;
-use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
-use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::{Arc, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::Instant;
 
 /// Cluster construction parameters.
@@ -61,6 +64,18 @@ struct TableMeta {
 /// statements, so eviction never triggers outside adversarial use).
 const PLAN_CACHE_MAX: usize = 1024;
 
+/// Which execution path served each SELECT (scatter-gather adoption
+/// telemetry; tests assert the steering mix runs lock-free).
+#[derive(Default)]
+pub struct RouteCounters {
+    /// Join-free SELECTs served by partial-aggregate / top-k pushdown.
+    pub scatter: AtomicU64,
+    /// Join SELECTs served by parallel snapshot scans + coordinator join.
+    pub snapshot_join: AtomicU64,
+    /// SELECTs that fell back to the centralized 2PL path (point reads).
+    pub centralized: AtomicU64,
+}
+
 /// The cluster facade.
 pub struct DbCluster {
     nodes: Vec<Arc<DataNode>>,
@@ -73,6 +88,9 @@ pub struct DbCluster {
     /// the cluster (supervisors, workers via connectors, steering) shares
     /// it, so each distinct statement is parsed once per cluster lifetime.
     plans: RwLock<FxHashMap<String, Arc<PreparedPlan>>>,
+    /// Scan pool for the scatter-gather engine, created on first use.
+    pool: OnceLock<ScanPool>,
+    routes: RouteCounters,
 }
 
 // ---------- lock plumbing ----------
@@ -170,7 +188,23 @@ impl DbCluster {
             replication: config.replication,
             place_cursor: AtomicUsize::new(0),
             plans: RwLock::new(FxHashMap::default()),
+            pool: OnceLock::new(),
+            routes: RouteCounters::default(),
         }))
+    }
+
+    /// The scan pool backing scatter-gather execution (lazily created).
+    pub(crate) fn scan_pool(&self) -> &ScanPool {
+        self.pool.get_or_init(ScanPool::with_default_size)
+    }
+
+    /// `(scatter, snapshot_join, centralized)` SELECT counts since start.
+    pub fn route_counts(&self) -> (u64, u64, u64) {
+        (
+            self.routes.scatter.load(AtomicOrdering::Relaxed),
+            self.routes.snapshot_join.load(AtomicOrdering::Relaxed),
+            self.routes.centralized.load(AtomicOrdering::Relaxed),
+        )
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -250,28 +284,38 @@ impl DbCluster {
         v
     }
 
-    /// Approximate resident bytes of one table across primaries.
+    /// Approximate resident bytes of one table across its reachable
+    /// replicas. Partitions whose every replica is down are skipped (they
+    /// contribute 0) rather than aborting the walk: footprint reporting
+    /// must degrade under failure, not erase whole tables. Only an unknown
+    /// table name errors.
     pub fn table_bytes(&self, table: &str) -> Result<usize> {
         let meta = self.meta(table)?;
         let mut total = 0;
         for (pidx, pl) in meta.placements.iter().enumerate() {
-            let store = self.replica_store(&meta, pidx, pl, false)?.0;
+            let Ok((store, _, _)) = self.replica_store(&meta, pidx, pl, false) else {
+                continue; // all replicas down: skip, keep counting the rest
+            };
             total += store.read().unwrap().approx_bytes();
         }
         Ok(total)
     }
 
-    /// Approximate resident bytes of the whole database (primaries only).
+    /// Approximate resident bytes of the whole database across reachable
+    /// replicas (dead partitions degrade the number, never drop a table).
     pub fn total_bytes(&self) -> usize {
-        self.tables().iter().filter_map(|t| self.table_bytes(t).ok()).sum()
+        self.tables().iter().map(|t| self.table_bytes(t).unwrap_or(0)).sum()
     }
 
-    /// Row count of a table (test/monitoring helper).
+    /// Row count of a table (test/monitoring helper); like
+    /// [`DbCluster::table_bytes`], unreachable partitions are skipped.
     pub fn table_rows(&self, table: &str) -> Result<usize> {
         let meta = self.meta(table)?;
         let mut total = 0;
         for (pidx, pl) in meta.placements.iter().enumerate() {
-            let store = self.replica_store(&meta, pidx, pl, false)?.0;
+            let Ok((store, _, _)) = self.replica_store(&meta, pidx, pl, false) else {
+                continue;
+            };
             total += store.read().unwrap().len();
         }
         Ok(total)
@@ -389,7 +433,19 @@ impl DbCluster {
         }
         let (stmt, params) = sql::parse_prepared(sql_text)?;
         self.validate_against_catalog(&stmt)?;
-        let plan = Arc::new(PreparedPlan { sql: sql_text.to_string(), stmt, params });
+        // EXPLAIN-style plan summary, rendered once against the live
+        // catalog (partition counts, partition columns) — what
+        // `Prepared::describe()` returns.
+        let describe = query_plan::explain(&stmt, |t: &str| {
+            self.meta(t).ok().map(|m| TableInfo {
+                partitions: m.def.num_partitions(),
+                partition_col: m
+                    .def
+                    .partition_col_idx()
+                    .map(|ci| m.def.schema.columns[ci].name.clone()),
+            })
+        });
+        let plan = Arc::new(PreparedPlan { sql: sql_text.to_string(), stmt, params, describe });
         let mut cache = self.plans.write().unwrap();
         if cache.len() >= PLAN_CACHE_MAX {
             // evict one arbitrary entry; clearing everything would force a
@@ -512,7 +568,11 @@ impl DbCluster {
         self.exec_stmt(node, kind, &stmt)
     }
 
-    /// Execute one pre-parsed statement.
+    /// Execute one pre-parsed statement. Auto-commit SELECTs route through
+    /// the scatter-gather engine (lock-free snapshot reads, parallel
+    /// partials) when eligible; everything else — DML, DDL, and the point
+    /// SELECTs where a single pruned partition plus index probe wins —
+    /// takes the centralized 2PL path.
     pub fn exec_stmt(
         &self,
         node: u32,
@@ -520,9 +580,161 @@ impl DbCluster {
         stmt: &Statement,
     ) -> Result<StatementResult> {
         let t0 = Instant::now();
-        let r = self.exec_txn_inner(std::slice::from_ref(stmt));
+        let r = self.exec_stmt_routed(stmt);
         self.stats.record(node, kind, t0.elapsed().as_secs_f64());
-        Ok(r?.pop().expect("one result per statement"))
+        r
+    }
+
+    fn exec_stmt_routed(&self, stmt: &Statement) -> Result<StatementResult> {
+        if let Statement::Select(s) = stmt {
+            if let Some(rs) = self.try_scatter_select(s)? {
+                return Ok(StatementResult::Rows(rs));
+            }
+            self.routes.centralized.fetch_add(1, AtomicOrdering::Relaxed);
+        }
+        Ok(self
+            .exec_txn_inner(std::slice::from_ref(stmt))?
+            .pop()
+            .expect("one result per statement"))
+    }
+
+    /// Execute one SELECT through the centralized 2PL path, bypassing the
+    /// scatter-gather router. Used by the equivalence tests and benchmarks
+    /// to compare both executors on identical statements; not a hot path.
+    pub fn query_centralized(&self, sql_text: &str) -> Result<ResultSet> {
+        let stmt = sql::parse(sql_text)?;
+        let r = self
+            .exec_txn_inner(std::slice::from_ref(&stmt))?
+            .pop()
+            .expect("one result per statement");
+        match r {
+            StatementResult::Rows(rs) => Ok(rs),
+            other => Err(Error::Engine(format!("expected rows, got {other:?}"))),
+        }
+    }
+
+    // ---------- the scatter-gather read path ----------
+
+    /// Route one auto-commit SELECT. `Ok(Some(rows))` means the
+    /// scatter-gather engine served it off partition snapshots without
+    /// taking 2PL locks; `Ok(None)` means the centralized path should run
+    /// (single pruned partition without aggregates, where index probes and
+    /// the bounded top-n working set are the better plan).
+    fn try_scatter_select(&self, s: &SelectStmt) -> Result<Option<ResultSet>> {
+        let now = self.clock.now();
+        if s.joins.is_empty() {
+            let meta = self.meta(&s.from.table)?;
+            let parts = prune_partitions(&meta.def, s.from.binding(), s.where_.as_ref());
+            // Cheap pre-check so the claim/point hot path skips the plan
+            // split entirely. (Aggregates hidden behind a select alias in
+            // ORDER BY/HAVING are caught by the full split below; a
+            // single-partition alias case harmlessly runs centralized.)
+            let has_agg = !s.group_by.is_empty()
+                || s.items.iter().any(
+                    |it| matches!(it, SelectItem::Expr { expr, .. } if expr.has_aggregate()),
+                )
+                || s.having.as_ref().map_or(false, |e| e.has_aggregate())
+                || s.order_by.iter().any(|(e, _)| e.has_aggregate());
+            if !has_agg && parts.len() <= 1 {
+                return Ok(None);
+            }
+            // `has_agg` implies `plan.aggregated` (alias substitution can
+            // only add aggregate nodes, never remove them), so the
+            // single-partition fallback above is the complete routing rule.
+            let Some(plan) = ScatterPlan::build(s) else {
+                return Ok(None);
+            };
+            let snaps = self.partition_snapshots(&[(s.from.table.clone(), parts)])?;
+            let rs = query_engine::scatter_gather(
+                self.scan_pool(),
+                &plan,
+                s.from.binding(),
+                &snaps[0],
+                now,
+            )?;
+            self.routes.scatter.fetch_add(1, AtomicOrdering::Relaxed);
+            return Ok(Some(rs));
+        }
+        // Join shape: snapshot every involved partition in one consistent
+        // cut, filter them in parallel, join at the coordinator. Inner-join
+        // sides prune on the WHERE clause like the base table; left-outer
+        // right sides must scan full to keep padding semantics.
+        let mut specs: Vec<(String, Vec<usize>)> = Vec::with_capacity(1 + s.joins.len());
+        let base_meta = self.meta(&s.from.table)?;
+        specs.push((
+            s.from.table.clone(),
+            prune_partitions(&base_meta.def, s.from.binding(), s.where_.as_ref()),
+        ));
+        for j in &s.joins {
+            let jm = self.meta(&j.table.table)?;
+            let parts = if j.left_outer {
+                (0..jm.def.num_partitions()).collect()
+            } else {
+                prune_partitions(&jm.def, j.table.binding(), s.where_.as_ref())
+            };
+            specs.push((j.table.table.clone(), parts));
+        }
+        let snaps = self.partition_snapshots(&specs)?;
+        let rs = query_engine::snapshot_join(self.scan_pool(), s, &snaps, now)?;
+        self.routes.snapshot_join.fetch_add(1, AtomicOrdering::Relaxed);
+        Ok(Some(rs))
+    }
+
+    /// Acquire versioned snapshots of the listed `(table, partitions)`
+    /// targets at one consistent cut: resolve each partition to its live
+    /// replica (primary, or backup under failover), take every read latch
+    /// in the canonical `(table, pidx)` order the 2PL executor also uses
+    /// (so this can never deadlock against a writing transaction), clone
+    /// each partition's snapshot `Arc`, and release all latches. Writers
+    /// are blocked only for the duration of the `Arc` clones — not for the
+    /// query's execution, which is the whole point.
+    pub(crate) fn partition_snapshots(
+        &self,
+        specs: &[(String, Vec<usize>)],
+    ) -> Result<Vec<TableSnapshots>> {
+        let mut metas: Vec<Arc<TableMeta>> = Vec::with_capacity(specs.len());
+        for (table, _) in specs {
+            metas.push(self.meta(table)?);
+        }
+        // Dedup (table, pidx): self-joins reference the same partition more
+        // than once, and re-locking the same RwLock on one thread can
+        // deadlock against a queued writer.
+        let mut uniq: Vec<(String, usize, Arc<RwLock<PartitionStore>>)> = Vec::new();
+        let mut seen: rustc_hash::FxHashSet<(String, usize)> = rustc_hash::FxHashSet::default();
+        for (meta, (_, parts)) in metas.iter().zip(specs) {
+            let key = meta.def.name.to_lowercase();
+            for &pidx in parts {
+                if !seen.insert((key.clone(), pidx)) {
+                    continue;
+                }
+                let pl = &meta.placements[pidx];
+                let (store, _, _) = self.replica_store(meta, pidx, pl, false)?;
+                uniq.push((key.clone(), pidx, store));
+            }
+        }
+        uniq.sort_by(|a, b| (a.0.as_str(), a.1).cmp(&(b.0.as_str(), b.1)));
+        let pos: FxHashMap<(String, usize), usize> = uniq
+            .iter()
+            .enumerate()
+            .map(|(i, e)| ((e.0.clone(), e.1), i))
+            .collect();
+        let snapshots: Vec<Arc<Vec<Row>>> = {
+            let guards: Vec<RwLockReadGuard<'_, PartitionStore>> =
+                uniq.iter().map(|e| e.2.read().unwrap()).collect();
+            guards.iter().map(|g| g.snapshot()).collect()
+            // guards drop here: latches held only across the Arc clones
+        };
+        let mut out = Vec::with_capacity(specs.len());
+        for (meta, (_, parts)) in metas.iter().zip(specs) {
+            let key = meta.def.name.to_lowercase();
+            let mut tp: Vec<(usize, Arc<Vec<Row>>)> = parts
+                .iter()
+                .map(|&pidx| (pidx, snapshots[pos[&(key.clone(), pidx)]].clone()))
+                .collect();
+            tp.sort_by_key(|(p, _)| *p);
+            out.push(TableSnapshots { def: meta.def.clone(), parts: tp });
+        }
+        Ok(out)
     }
 
     /// Execute a batch of statements atomically (all-or-nothing), 2PL over
@@ -1791,6 +2003,106 @@ mod tests {
             .rows();
         assert_eq!(rs.rows.len(), 1);
         assert_eq!(rs.rows[0].values[0], Value::Int(2));
+    }
+
+    #[test]
+    fn aggregate_selects_route_through_scatter_gather() {
+        let c = cluster();
+        seed(&c, 40, 4);
+        let q = "SELECT status, COUNT(*) AS n, AVG(dur) FROM workqueue \
+                 GROUP BY status ORDER BY status";
+        let scattered = c.query(q).unwrap();
+        let central = c.query_centralized(q).unwrap();
+        assert_eq!(scattered, central, "scatter-gather must match centralized");
+        let (scatter, _, _) = c.route_counts();
+        assert!(scatter >= 1, "aggregate query must take the scatter path");
+    }
+
+    #[test]
+    fn join_selects_route_through_snapshot_join() {
+        let c = cluster();
+        seed(&c, 12, 4);
+        let q = "SELECT w.host, COUNT(*) AS n FROM workqueue t JOIN workers w \
+                 ON t.workerid = w.id GROUP BY w.host ORDER BY w.host";
+        let a = c.query(q).unwrap();
+        let b = c.query_centralized(q).unwrap();
+        assert_eq!(a, b);
+        let (_, join, _) = c.route_counts();
+        assert!(join >= 1, "join query must take the snapshot-join path");
+    }
+
+    #[test]
+    fn point_reads_stay_on_the_centralized_index_path() {
+        let c = cluster();
+        seed(&c, 16, 4);
+        c.query(
+            "SELECT taskid FROM workqueue WHERE workerid = 1 AND status = 'READY' \
+             ORDER BY taskid LIMIT 4",
+        )
+        .unwrap();
+        let (scatter, join, central) = c.route_counts();
+        assert_eq!(scatter, 0, "single pruned partition must not scatter");
+        assert_eq!(join, 0);
+        assert!(central >= 1);
+    }
+
+    #[test]
+    fn prepared_describe_renders_the_chosen_plan() {
+        let c = cluster();
+        let p = c
+            .prepare("SELECT status, COUNT(*) FROM workqueue WHERE workerid = ? GROUP BY status")
+            .unwrap();
+        let d = p.describe();
+        assert!(d.contains("scatter-gather aggregate"), "{d}");
+        assert!(d.contains("COUNT(*)"), "{d}");
+        assert!(d.contains("workerid = ?0"), "{d}");
+        assert!(d.contains("resolved at bind"), "{d}");
+        let p = c
+            .prepare("SELECT t.taskid FROM workqueue t JOIN workers w ON t.workerid = w.id")
+            .unwrap();
+        assert!(p.describe().contains("snapshot-join"), "{}", p.describe());
+        let p = c.prepare("UPDATE workqueue SET status = ? WHERE taskid = ?").unwrap();
+        assert!(
+            p.describe().contains("centralized transactional write"),
+            "{}",
+            p.describe()
+        );
+    }
+
+    #[test]
+    fn footprint_counts_survive_dead_partitions() {
+        // No replication: killing a node makes its partitions unreachable,
+        // which used to abort table_bytes and erase whole tables from
+        // total_bytes. Now dead partitions are skipped, live ones counted.
+        let c = DbCluster::start(ClusterConfig {
+            data_nodes: 2,
+            replication: false,
+            clock: clock::wall(),
+        })
+        .unwrap();
+        c.exec(
+            "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
+             status TEXT) PARTITION BY HASH(workerid) PARTITIONS 4 PRIMARY KEY (taskid)",
+        )
+        .unwrap();
+        for i in 0..40 {
+            c.execute(&format!(
+                "INSERT INTO workqueue (taskid, workerid, status) VALUES ({i}, {}, 'READY')",
+                i % 4
+            ))
+            .unwrap();
+        }
+        let full_bytes = c.table_bytes("workqueue").unwrap();
+        let full_rows = c.table_rows("workqueue").unwrap();
+        assert!(full_bytes > 0);
+        assert_eq!(full_rows, 40);
+        c.kill_node(1).unwrap();
+        let part_bytes = c.table_bytes("workqueue").unwrap();
+        let part_rows = c.table_rows("workqueue").unwrap();
+        assert!(part_bytes > 0 && part_bytes < full_bytes, "live partitions still counted");
+        assert!(part_rows > 0 && part_rows < full_rows);
+        assert!(c.total_bytes() > 0, "total_bytes must not drop the whole table");
+        assert!(c.table_bytes("nope").is_err(), "unknown table still errors");
     }
 
     #[test]

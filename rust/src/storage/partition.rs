@@ -9,7 +9,7 @@ use crate::storage::table_def::TableDef;
 use crate::storage::value::{Row, Value};
 use crate::{Error, Result};
 use rustc_hash::FxHashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Slot handle inside a partition (stable until the row is deleted).
 pub type Slot = usize;
@@ -32,6 +32,11 @@ pub struct PartitionStore {
     /// consistency checks).
     pub version: u64,
     approx_bytes: usize,
+    /// Cached clone-on-read snapshot, keyed by the version it was taken at.
+    /// Serving the scatter-gather read path: readers clone the `Arc` and
+    /// release the partition latch immediately, so analytical scans never
+    /// hold partition locks while they execute (see [`PartitionStore::snapshot`]).
+    snap: Mutex<Option<(u64, Arc<Vec<Row>>)>>,
 }
 
 impl PartitionStore {
@@ -51,6 +56,7 @@ impl PartitionStore {
             secondary,
             version: 0,
             approx_bytes: 0,
+            snap: Mutex::new(None),
         }
     }
 
@@ -200,8 +206,34 @@ impl PartitionStore {
         self.iter().map(|(_, r)| r.clone()).collect()
     }
 
+    /// Versioned snapshot of the live rows in slot order, shared via `Arc`.
+    ///
+    /// The rows are materialized at most once per partition version: repeat
+    /// readers between mutations get the same `Arc` back for the cost of a
+    /// clone. Callers hold the partition's read latch only long enough to
+    /// call this; query execution then proceeds against the immutable
+    /// snapshot with **no partition lock held**, which is what keeps the
+    /// steering analytics off the scheduler's 2PL critical path.
+    pub fn snapshot(&self) -> Arc<Vec<Row>> {
+        let mut g = self.snap.lock().unwrap();
+        if let Some((v, rows)) = g.as_ref() {
+            if *v == self.version {
+                return rows.clone();
+            }
+        }
+        let rows = Arc::new(self.snapshot_rows());
+        *g = Some((self.version, rows.clone()));
+        rows
+    }
+
     /// Rebuild the store from a row list (recovery / replica seeding).
+    ///
+    /// Drops any cached snapshot: callers (e.g. `DbCluster::heal`) may
+    /// assign `version` non-monotonically after a reload, so a stale cache
+    /// entry could otherwise collide with a future version of different
+    /// content.
     pub fn load_rows(&mut self, rows: Vec<Row>) -> Result<()> {
+        *self.snap.lock().unwrap() = None;
         self.rows.clear();
         self.free.clear();
         self.pk.clear();
@@ -332,6 +364,21 @@ mod tests {
         assert!(p.approx_bytes() > b1);
         p.delete(s).unwrap();
         assert_eq!(p.approx_bytes(), 0);
+    }
+
+    #[test]
+    fn snapshot_is_cached_per_version() {
+        let mut p = store();
+        p.insert(row(1, 0, "READY")).unwrap();
+        let s1 = p.snapshot();
+        let s2 = p.snapshot();
+        assert!(Arc::ptr_eq(&s1, &s2), "unchanged partition must reuse the snapshot");
+        assert_eq!(s1.len(), 1);
+        p.insert(row(2, 0, "READY")).unwrap();
+        let s3 = p.snapshot();
+        assert!(!Arc::ptr_eq(&s1, &s3), "mutation must invalidate the cache");
+        assert_eq!(s3.len(), 2);
+        assert_eq!(s1.len(), 1, "an already-taken snapshot stays immutable");
     }
 
     #[test]

@@ -78,6 +78,20 @@ pub struct PreparedPlan {
     pub stmt: Statement,
     /// Number of `?` placeholders.
     pub params: usize,
+    /// EXPLAIN-style plan summary (see [`Prepared::describe`]), rendered
+    /// at prepare time — against the live catalog when prepared through
+    /// `DbCluster::prepare`, without partition facts otherwise.
+    pub describe: String,
+}
+
+impl PreparedPlan {
+    /// Build a plan outside a cluster (tests, offline tooling): the plan
+    /// summary is rendered without catalog access, so partition counts and
+    /// pruning targets read as unknown.
+    pub fn new(sql: String, stmt: Statement, params: usize) -> PreparedPlan {
+        let describe = crate::query::plan::explain(&stmt, |_| None);
+        PreparedPlan { sql, stmt, params, describe }
+    }
 }
 
 /// A prepared-statement handle. Cheap to clone; independent of any
@@ -105,6 +119,15 @@ impl Prepared {
     /// The cached parse (placeholders still in place).
     pub fn statement(&self) -> &Statement {
         &self.plan.stmt
+    }
+
+    /// EXPLAIN-style description of how the engine will execute this
+    /// statement: chosen path (scatter-gather aggregate, scatter scan,
+    /// snapshot-join, or centralized 2PL), the aggregates pushed down to
+    /// partitions, group keys, and partition pruning. Debugging aid — see
+    /// DESIGN.md §"The scatter-gather query engine" for examples.
+    pub fn describe(&self) -> &str {
+        &self.plan.describe
     }
 
     /// Bind one value per placeholder, producing an executable statement.
@@ -332,7 +355,7 @@ mod tests {
 
     fn prep(sql: &str) -> Prepared {
         let (stmt, params) = parse_prepared(sql).unwrap();
-        Prepared::from_plan(Arc::new(PreparedPlan { sql: sql.to_string(), stmt, params }))
+        Prepared::from_plan(Arc::new(PreparedPlan::new(sql.to_string(), stmt, params)))
     }
 
     #[test]

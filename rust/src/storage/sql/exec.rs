@@ -100,11 +100,31 @@ pub fn run_select(stmt: &SelectStmt, inputs: Vec<TableInput>, ctx: &EvalCtx) -> 
         (rows, layout, items, having, order_by)
     };
 
-    // 5. HAVING (after aggregation; without aggregation it acts as a second
-    //    WHERE, matching MySQL's permissiveness)
+    // 5.–8. HAVING / ORDER BY / LIMIT / projection (shared with the
+    // scatter-gather merge stage, so both paths finish identically).
+    finish_select(rows, &layout, &items, having.as_ref(), &order_by, stmt.limit, ctx)
+}
+
+/// Pipeline stages 5–8 — HAVING filter, ORDER BY, LIMIT, projection — over
+/// an already joined/filtered/aggregated row stream. `having`/`order_by`
+/// must already have aggregates rewritten to `#.aggN` references when
+/// `layout` is an aggregate output layout. Shared by [`run_select`] and the
+/// scatter-gather engine's coordinator merge (`crate::query`), which is
+/// what guarantees the two paths produce identical results.
+pub fn finish_select(
+    rows: Vec<Row>,
+    layout: &Layout,
+    items: &[SelectItem],
+    having: Option<&Expr>,
+    order_by: &[(Expr, bool)],
+    limit: Option<u64>,
+    ctx: &EvalCtx,
+) -> Result<ResultSet> {
+    // HAVING (after aggregation; without aggregation it acts as a second
+    // WHERE, matching MySQL's permissiveness)
     let mut rows = rows;
-    if let Some(h) = &having {
-        let b = bind(h, &layout)?;
+    if let Some(h) = having {
+        let b = bind(h, layout)?;
         let mut kept = Vec::with_capacity(rows.len());
         for r in rows {
             if b.matches(&r.values, ctx)? {
@@ -114,11 +134,11 @@ pub fn run_select(stmt: &SelectStmt, inputs: Vec<TableInput>, ctx: &EvalCtx) -> 
         rows = kept;
     }
 
-    // 6. ORDER BY
+    // ORDER BY
     if !order_by.is_empty() {
         let keys: Vec<(Bound, bool)> = order_by
             .iter()
-            .map(|(e, asc)| Ok((bind(e, &layout)?, *asc)))
+            .map(|(e, asc)| Ok((bind(e, layout)?, *asc)))
             .collect::<Result<Vec<_>>>()?;
         let mut decorated: Vec<(Vec<Value>, Row)> = rows
             .into_iter()
@@ -143,18 +163,20 @@ pub fn run_select(stmt: &SelectStmt, inputs: Vec<TableInput>, ctx: &EvalCtx) -> 
         rows = decorated.into_iter().map(|(_, r)| r).collect();
     }
 
-    // 7. LIMIT
-    if let Some(n) = stmt.limit {
+    // LIMIT
+    if let Some(n) = limit {
         rows.truncate(n as usize);
     }
 
-    // 8. projection
-    project(&items, &layout, rows, ctx)
+    // projection
+    project(items, layout, rows, ctx)
 }
 
 /// Substitute bare column refs that name a select alias with the aliased
-/// expression (SQL's ORDER BY/HAVING alias visibility).
-fn substitute_aliases(e: &Expr, aliases: &[(String, Expr)]) -> Expr {
+/// expression (SQL's ORDER BY/HAVING alias visibility). Public because the
+/// scatter-gather planner performs the same rewrite when splitting a SELECT
+/// into partial and merge plans.
+pub fn substitute_aliases(e: &Expr, aliases: &[(String, Expr)]) -> Expr {
     match e {
         Expr::Col { table: None, name } => {
             for (a, ex) in aliases {
@@ -293,7 +315,20 @@ fn join_rows(
 // ---------------- aggregation ----------------
 
 /// Aggregate accumulator.
-struct AggState {
+///
+/// The state is *mergeable*: two accumulators for the same aggregate over
+/// disjoint row sets combine losslessly via [`AggState::merge`], which is
+/// the algebraic property the scatter-gather engine pushes down — every
+/// partition computes a partial `AggState` per group, and the coordinator
+/// merges partials instead of shipping rows:
+///
+/// | aggregate        | partial state      | merge                      |
+/// |------------------|--------------------|----------------------------|
+/// | COUNT            | count              | add counts                 |
+/// | SUM / AVG        | sum, count, is-int | add sums and counts        |
+/// | MIN / MAX        | extremum           | take extremum of extrema   |
+/// | any DISTINCT agg | value set          | union sets, re-accumulate  |
+pub struct AggState {
     func: AggFunc,
     distinct: bool,
     count: u64,
@@ -305,7 +340,7 @@ struct AggState {
 }
 
 impl AggState {
-    fn new(func: AggFunc, distinct: bool) -> AggState {
+    pub fn new(func: AggFunc, distinct: bool) -> AggState {
         AggState {
             func,
             distinct,
@@ -318,7 +353,9 @@ impl AggState {
         }
     }
 
-    fn push(&mut self, v: Option<Value>) -> Result<()> {
+    /// Fold one input value into the accumulator. `v = None` means
+    /// `COUNT(*)` (count the row unconditionally).
+    pub fn push(&mut self, v: Option<Value>) -> Result<()> {
         // v = None means COUNT(*) (count the row unconditionally)
         let Some(v) = v else {
             self.count += 1;
@@ -365,7 +402,45 @@ impl AggState {
         Ok(())
     }
 
-    fn finish(&self) -> Value {
+    /// Merge another partial accumulator for the *same* aggregate spec into
+    /// this one. Non-distinct states combine algebraically; DISTINCT states
+    /// re-push the other side's value set so dedup and re-accumulation stay
+    /// consistent with the single-pass path.
+    pub fn merge(&mut self, other: AggState) -> Result<()> {
+        if self.distinct {
+            for vals in other.seen.into_values() {
+                for v in vals {
+                    self.push(Some(v))?;
+                }
+            }
+            return Ok(());
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.all_int &= other.all_int;
+        if let Some(v) = other.min {
+            if self
+                .min
+                .as_ref()
+                .map_or(true, |m| v.sql_cmp(m) == Some(std::cmp::Ordering::Less))
+            {
+                self.min = Some(v);
+            }
+        }
+        if let Some(v) = other.max {
+            if self
+                .max
+                .as_ref()
+                .map_or(true, |m| v.sql_cmp(m) == Some(std::cmp::Ordering::Greater))
+            {
+                self.max = Some(v);
+            }
+        }
+        Ok(())
+    }
+
+    /// Final value of the accumulated aggregate.
+    pub fn finish(&self) -> Value {
         match self.func {
             AggFunc::Count => Value::Int(self.count as i64),
             AggFunc::Sum => {
@@ -391,8 +466,11 @@ impl AggState {
 }
 
 /// Rewrite aggregate calls in an expression into references to synthetic
-/// columns `#.aggN`, registering each distinct aggregate in `aggs`.
-fn rewrite_aggregates(e: &Expr, aggs: &mut Vec<Expr>) -> Expr {
+/// columns `#.aggN`, registering each distinct aggregate in `aggs`. Public
+/// because the scatter-gather planner performs the same rewrite: the agg
+/// list becomes the pushed-down partial plan, the rewritten expressions
+/// become the coordinator merge plan.
+pub fn rewrite_aggregates(e: &Expr, aggs: &mut Vec<Expr>) -> Expr {
     match e {
         Expr::Agg { .. } => {
             let idx = match aggs.iter().position(|a| a == e) {
@@ -499,11 +577,7 @@ fn aggregate(
         .collect::<Result<Vec<_>>>()?;
 
     // Group. Key identity uses the rendered total-order form of the values.
-    struct Group {
-        rep: Row,
-        states: Vec<AggState>,
-    }
-    let mut groups: FxHashMap<Vec<u64>, Group> = FxHashMap::default();
+    let mut groups: FxHashMap<Vec<u64>, (Row, Vec<AggState>)> = FxHashMap::default();
     let mut order: Vec<Vec<u64>> = Vec::new(); // first-seen group order
     for r in rows {
         let key: Vec<u64> = key_bound
@@ -514,16 +588,18 @@ fn aggregate(
             Some(g) => g,
             None => {
                 order.push(key.clone());
-                groups.entry(key).or_insert_with(|| Group {
-                    rep: r.clone(),
-                    states: agg_specs
-                        .iter()
-                        .map(|s| AggState::new(s.func, s.distinct))
-                        .collect(),
+                groups.entry(key).or_insert_with(|| {
+                    (
+                        r.clone(),
+                        agg_specs
+                            .iter()
+                            .map(|s| AggState::new(s.func, s.distinct))
+                            .collect(),
+                    )
                 })
             }
         };
-        for (st, spec) in g.states.iter_mut().zip(&agg_specs) {
+        for (st, spec) in g.1.iter_mut().zip(&agg_specs) {
             let v = match &spec.arg {
                 Some(b) => Some(b.eval(&r.values, ctx)?),
                 None => None,
@@ -531,32 +607,53 @@ fn aggregate(
             st.push(v)?;
         }
     }
+    let spec_pairs: Vec<(AggFunc, bool)> =
+        agg_specs.iter().map(|s| (s.func, s.distinct)).collect();
+    let (out_rows, ext) = finish_groups(order, groups, &spec_pairs, &layout, group_by.is_empty());
+    Ok((out_rows, ext, items, having, order_by))
+}
+
+/// Grouped-aggregation epilogue shared by the centralized pipeline and the
+/// scatter-gather coordinator merge: synthesize the single all-NULL global
+/// group when a `GROUP BY`-less aggregate saw no input, extend the layout
+/// with one synthetic `#.aggN` column per aggregate, and emit one row per
+/// group (representative values + finished aggregates) in first-seen order.
+/// Keeping this in one place is what keeps the two paths' aggregate output
+/// layouts identical by construction.
+pub fn finish_groups(
+    order: Vec<Vec<u64>>,
+    groups: FxHashMap<Vec<u64>, (Row, Vec<AggState>)>,
+    agg_specs: &[(AggFunc, bool)],
+    layout: &Layout,
+    group_by_is_empty: bool,
+) -> (Vec<Row>, Layout) {
+    let mut order = order;
+    let mut groups = groups;
     // Global aggregate over empty input still yields one group.
-    if groups.is_empty() && group_by.is_empty() {
+    if groups.is_empty() && group_by_is_empty {
         let key: Vec<u64> = vec![];
         order.push(key.clone());
         groups.insert(
             key,
-            Group {
-                rep: Row::new(vec![Value::Null; layout.len()]),
-                states: agg_specs.iter().map(|s| AggState::new(s.func, s.distinct)).collect(),
-            },
+            (
+                Row::new(vec![Value::Null; layout.len()]),
+                agg_specs.iter().map(|(f, d)| AggState::new(*f, *d)).collect(),
+            ),
         );
     }
-
     // Extended layout: base columns + synthetic "#.aggN".
     let mut ext = layout.clone();
-    for i in 0..aggs.len() {
+    for i in 0..agg_specs.len() {
         ext.cols.push((Some("#".into()), format!("agg{i}")));
     }
-    let mut out_rows = Vec::with_capacity(groups.len());
+    let mut out_rows = Vec::with_capacity(order.len());
     for key in order {
-        let g = &groups[&key];
-        let mut vals = g.rep.values.clone();
-        vals.extend(g.states.iter().map(|s| s.finish()));
+        let (rep, states) = groups.remove(&key).expect("ordered group present");
+        let mut vals = rep.values;
+        vals.extend(states.iter().map(|s| s.finish()));
         out_rows.push(Row::new(vals));
     }
-    Ok((out_rows, ext, items, having, order_by))
+    (out_rows, ext)
 }
 
 // ---------------- projection ----------------
@@ -812,5 +909,58 @@ mod tests {
     fn arity_mismatch_is_engine_error() {
         let s = select("SELECT * FROM t JOIN w ON t.wid = w.id");
         assert!(run_select(&s, vec![tasks_input("t")], &ctx()).is_err());
+    }
+
+    #[test]
+    fn agg_state_merge_matches_single_pass() {
+        let vals: Vec<Value> = (0..20)
+            .map(|i| if i % 5 == 0 { Value::Null } else { Value::Int(i % 7) })
+            .collect();
+        for (func, distinct) in [
+            (AggFunc::Count, false),
+            (AggFunc::Count, true),
+            (AggFunc::Sum, false),
+            (AggFunc::Sum, true),
+            (AggFunc::Avg, false),
+            (AggFunc::Avg, true),
+            (AggFunc::Min, false),
+            (AggFunc::Min, true),
+            (AggFunc::Max, false),
+            (AggFunc::Max, true),
+        ] {
+            let mut whole = AggState::new(func, distinct);
+            for v in &vals {
+                whole.push(Some(v.clone())).unwrap();
+            }
+            let mut left = AggState::new(func, distinct);
+            let mut right = AggState::new(func, distinct);
+            for (i, v) in vals.iter().enumerate() {
+                let side = if i < 7 { &mut left } else { &mut right };
+                side.push(Some(v.clone())).unwrap();
+            }
+            left.merge(right).unwrap();
+            assert_eq!(
+                left.finish(),
+                whole.finish(),
+                "merged partials diverge for {func:?} distinct={distinct}"
+            );
+        }
+        // COUNT(*) partials (no argument) add row counts
+        let mut a = AggState::new(AggFunc::Count, false);
+        let mut b = AggState::new(AggFunc::Count, false);
+        for _ in 0..3 {
+            a.push(None).unwrap();
+        }
+        for _ in 0..4 {
+            b.push(None).unwrap();
+        }
+        a.merge(b).unwrap();
+        assert_eq!(a.finish(), Value::Int(7));
+        // merging an empty partial is the identity
+        let mut empty = AggState::new(AggFunc::Sum, false);
+        let fresh = AggState::new(AggFunc::Sum, false);
+        empty.push(Some(Value::Int(5))).unwrap();
+        empty.merge(fresh).unwrap();
+        assert_eq!(empty.finish(), Value::Int(5));
     }
 }
