@@ -304,6 +304,146 @@ fn main() {
         );
     }
 
+    // compiled DML fast path vs interpreted: the claim-loop numbers this
+    // optimization exists for. The worker's point claim (conditional UPDATE
+    // by PK, partition pinned) runs through exec_prepared (compiled plan)
+    // and exec_prepared_interpreted (AST reference) on identical clusters,
+    // at 1/4/8 worker threads. Emits BENCH_dml_fastpath.json.
+    {
+        let point_sql = "UPDATE workqueue SET status = 'RUNNING', starttime = NOW() \
+                         WHERE taskid = ? AND status = 'READY' AND workerid = ?";
+        let per_thread = it(2_000);
+        let run_claims = |threads: usize, fast: bool| -> f64 {
+            let c = wq_cluster(workers, rows);
+            let p = c.prepare(point_sql).unwrap();
+            let t0 = Instant::now();
+            let mut handles = Vec::new();
+            for t in 0..threads {
+                let c = c.clone();
+                let p = p.clone();
+                handles.push(std::thread::spawn(move || {
+                    let w = t % workers;
+                    for i in 0..per_thread {
+                        // distinct READY taskids inside this worker's
+                        // partition: taskid = w + i*workers
+                        let tid = (w + i * workers) as i64;
+                        let params = [Value::Int(tid), Value::Int(w as i64)];
+                        let r = if fast {
+                            c.exec_prepared(
+                                t as u32,
+                                AccessKind::UpdateToRunning,
+                                &p,
+                                &params,
+                            )
+                        } else {
+                            c.exec_prepared_interpreted(
+                                t as u32,
+                                AccessKind::UpdateToRunning,
+                                &p,
+                                &params,
+                            )
+                        };
+                        r.unwrap();
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            (threads * per_thread) as f64 / t0.elapsed().as_secs_f64()
+        };
+        let mut obj = schaladb::util::json::Json::obj()
+            .set("wq_rows", rows as f64)
+            .set("partitions", workers as f64)
+            .set("claims_per_thread", per_thread as f64);
+        for &threads in &[1usize, 4, 8] {
+            let interp = run_claims(threads, false);
+            let fastr = run_claims(threads, true);
+            let speedup = fastr / interp;
+            println!(
+                "claim loop (point update), {threads} thread(s): \
+                 interpreted {interp:.0}/s, fast {fastr:.0}/s -> {speedup:.2}x"
+            );
+            obj = obj
+                .set(&format!("claims_per_sec_interpreted_{threads}t"), interp)
+                .set(&format!("claims_per_sec_fast_{threads}t"), fastr)
+                .set(&format!("speedup_{threads}t"), speedup);
+        }
+        println!();
+
+        // latency view of the same statement, plus the LIMIT-1 claim shape
+        let c = wq_cluster(workers, rows);
+        let p = c.prepare(point_sql).unwrap();
+        let interp_bench = Bench::run("point claim (interpreted)", it(5_000), |i| {
+            let tid = (i % rows) as i64;
+            c.exec_prepared_interpreted(
+                0,
+                AccessKind::UpdateToRunning,
+                &p,
+                &[Value::Int(tid), Value::Int(tid % workers as i64)],
+            )
+            .unwrap();
+        });
+        let c2 = wq_cluster(workers, rows);
+        let p2 = c2.prepare(point_sql).unwrap();
+        let fast_bench = Bench::run("point claim (compiled fast path)", it(5_000), |i| {
+            let tid = (i % rows) as i64;
+            c2.exec_prepared(
+                0,
+                AccessKind::UpdateToRunning,
+                &p2,
+                &[Value::Int(tid), Value::Int(tid % workers as i64)],
+            )
+            .unwrap();
+        });
+        let point_speedup = interp_bench.hist.mean() / fast_bench.hist.mean();
+        println!("compiled fast path speedup (point claim latency): {point_speedup:.1}x\n");
+
+        let claim_sql = "UPDATE workqueue SET status = 'RUNNING', starttime = NOW() \
+                         WHERE workerid = ? AND status = 'READY' ORDER BY taskid LIMIT 1 \
+                         RETURNING taskid";
+        let c3 = wq_cluster(workers, rows);
+        let p3 = c3.prepare(claim_sql).unwrap();
+        let interp_limit = Bench::run("claim LIMIT 1 (interpreted)", it(2_000), |i| {
+            c3.exec_prepared_interpreted(
+                0,
+                AccessKind::UpdateToRunning,
+                &p3,
+                &[Value::Int((i % workers) as i64)],
+            )
+            .unwrap();
+        });
+        let c4 = wq_cluster(workers, rows);
+        let p4 = c4.prepare(claim_sql).unwrap();
+        let fast_limit = Bench::run("claim LIMIT 1 (compiled fast path)", it(2_000), |i| {
+            c4.exec_prepared(
+                0,
+                AccessKind::UpdateToRunning,
+                &p4,
+                &[Value::Int((i % workers) as i64)],
+            )
+            .unwrap();
+        });
+        for b in [&interp_bench, &fast_bench, &interp_limit, &fast_limit] {
+            obj = obj.set(
+                b.name,
+                schaladb::util::json::Json::obj()
+                    .set("mean_secs", b.hist.mean())
+                    .set("p50_secs", b.hist.quantile(0.5))
+                    .set("p99_secs", b.hist.quantile(0.99)),
+            );
+        }
+        obj = obj.set("point_claim_latency_speedup", point_speedup);
+        std::fs::create_dir_all("target/bench-results").ok();
+        std::fs::write("target/bench-results/BENCH_dml_fastpath.json", obj.to_string())
+            .unwrap();
+        println!("json: target/bench-results/BENCH_dml_fastpath.json");
+        benches.push(interp_bench);
+        benches.push(fast_bench);
+        benches.push(interp_limit);
+        benches.push(fast_limit);
+    }
+
     // scatter-gather vs centralized: the steering analytics that motivated
     // the query subsystem. Each iteration first touches one row so the
     // versioned snapshot cache is invalidated — both paths pay the same

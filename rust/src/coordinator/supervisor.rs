@@ -28,7 +28,12 @@ use std::sync::{Arc, OnceLock};
 
 /// Single-row templates the supervisor binds per task/row; prepared once
 /// per cluster via the shared plan cache, values never pass through SQL
-/// text.
+/// text. Most of these classify into compiled fast plans at prepare time
+/// (`storage::dml_plan`): the INSERT templates apply rows directly with the
+/// batch landing partitions write-locked (siblings only read-latched for
+/// the PK probe), and `WORKFLOW_FINISH`/`HEARTBEAT` are point updates by
+/// primary key. `SELECT_DONE` (an OR predicate) and the `IN (...)` chunk
+/// statements stay on the interpreted path by design.
 const INSERT_WORKFLOW: &str =
     "INSERT INTO workflow (wfid, name, status, starttime) VALUES (?, ?, 'RUNNING', ?)";
 const INSERT_ACTIVITY: &str =

@@ -50,11 +50,17 @@ impl WorkerStmts {
              WHERE workerid = ? AND status = 'READY' ORDER BY taskid LIMIT {}",
             claim_batch.max(1)
         );
+        // The claim/finish/fail transitions pin `workerid` alongside the
+        // task id. Tasks never change workers mid-flight, so the predicate
+        // is redundant for correctness — but it pins the statement to this
+        // worker's WQ partition, which lets the compiled DML fast path
+        // route each transition to exactly one partition lock instead of
+        // the whole table (the paper's §3.2 partition-locality argument).
         Ok(WorkerStmts {
             get_ready: link.prepare(&get_ready_sql)?,
             claim: link.prepare(
                 "UPDATE workqueue SET status = 'RUNNING', starttime = NOW(), coreid = ? \
-                 WHERE taskid = ? AND status = 'READY'",
+                 WHERE taskid = ? AND status = 'READY' AND workerid = ?",
             )?,
             get_inputs: link.prepare(
                 "SELECT field, value FROM taskfield WHERE taskid = ? AND direction = 'in'",
@@ -73,12 +79,12 @@ impl WorkerStmts {
             )?,
             finish: link.prepare(
                 "UPDATE workqueue SET status = 'FINISHED', endtime = NOW(), stdout = ? \
-                 WHERE taskid = ?",
+                 WHERE taskid = ? AND workerid = ?",
             )?,
             fail: link.prepare(
                 "UPDATE workqueue SET failtries = failtries + 1, stdout = ?, \
                  status = CASE WHEN failtries + 1 >= ? THEN 'FAILED' ELSE 'READY' END \
-                 WHERE taskid = ?",
+                 WHERE taskid = ? AND workerid = ?",
             )?,
         })
     }
@@ -240,7 +246,7 @@ impl WorkerNode {
                 .exec_prepared(
                     AccessKind::UpdateToRunning,
                     &stmts.claim,
-                    &[Value::Int(core), Value::Int(taskid)],
+                    &[Value::Int(core), Value::Int(taskid), Value::Int(w as i64)],
                 )?
                 .affected();
             if claimed == 0 {
@@ -369,7 +375,7 @@ impl WorkerNode {
                 self.link.exec_prepared(
                     AccessKind::UpdateToFinished,
                     &stmts.finish,
-                    &[Value::str(&out.stdout), Value::Int(taskid)],
+                    &[Value::str(&out.stdout), Value::Int(taskid), Value::Int(w as i64)],
                 )?;
                 self.counters.executed.fetch_add(1, Ordering::Relaxed);
                 Ok(())
@@ -384,6 +390,7 @@ impl WorkerNode {
                         Value::str(e.to_string()),
                         Value::Int(self.cfg.max_failtries),
                         Value::Int(taskid),
+                        Value::Int(w as i64),
                     ],
                 )?;
                 Ok(())

@@ -345,7 +345,8 @@ mod tests {
         // partial-aggregate pushdown — never on the 2PL read path that
         // contends with scheduling.
         let db = run_risers();
-        let (s0, j0, _) = db.route_counts();
+        let before = db.route_counts();
+        let (s0, j0) = (before.scatter, before.snapshot_join);
         let c = SteeringClient::new(db.clone());
         c.q1_recent_status_by_node().unwrap();
         c.q2_bytes_by_task("node000").unwrap();
@@ -354,7 +355,8 @@ mod tests {
         c.q5_busiest_activity().unwrap();
         c.q6_activity_times().unwrap();
         c.q7_wear_outliers("calculate_wear_and_tear", 0.5).unwrap();
-        let (s1, j1, _) = db.route_counts();
+        let after = db.route_counts();
+        let (s1, j1) = (after.scatter, after.snapshot_join);
         assert!(
             j1 - j0 >= 6,
             "Q1–Q3 and Q5–Q7 are joins and must snapshot-join (got {})",

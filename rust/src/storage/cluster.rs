@@ -12,7 +12,10 @@ use crate::query::engine::{self as query_engine, TableSnapshots};
 use crate::query::plan::{self as query_plan, ScatterPlan, TableInfo};
 use crate::query::pool::ScanPool;
 use crate::storage::datanode::DataNode;
-use crate::storage::partition::PartitionStore;
+use crate::storage::dml_plan::{
+    self, DeletePlan, DmlPlan, InsertPlan, Probe, SelectPlan, UpdatePlan,
+};
+use crate::storage::partition::{PartitionStore, Slot};
 use crate::storage::prepared::{Prepared, PreparedPlan};
 use crate::storage::sql::exec::{run_select, TableInput};
 use crate::storage::sql::expr::{bind, EvalCtx, Layout};
@@ -64,8 +67,9 @@ struct TableMeta {
 /// statements, so eviction never triggers outside adversarial use).
 const PLAN_CACHE_MAX: usize = 1024;
 
-/// Which execution path served each SELECT (scatter-gather adoption
-/// telemetry; tests assert the steering mix runs lock-free).
+/// Which execution path served each statement (adoption telemetry; tests
+/// assert the steering mix runs lock-free and that the claim loop takes the
+/// compiled fast path).
 #[derive(Default)]
 pub struct RouteCounters {
     /// Join-free SELECTs served by partial-aggregate / top-k pushdown.
@@ -74,6 +78,18 @@ pub struct RouteCounters {
     pub snapshot_join: AtomicU64,
     /// SELECTs that fell back to the centralized 2PL path (point reads).
     pub centralized: AtomicU64,
+    /// Prepared statements served by the compiled DML fast path (no AST,
+    /// no interpreter — see `storage::dml_plan`).
+    pub fast_dml: AtomicU64,
+}
+
+/// Snapshot of [`RouteCounters`] (see [`DbCluster::route_counts`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RouteCounts {
+    pub scatter: u64,
+    pub snapshot_join: u64,
+    pub centralized: u64,
+    pub fast_dml: u64,
 }
 
 /// The cluster facade.
@@ -198,13 +214,15 @@ impl DbCluster {
         self.pool.get_or_init(ScanPool::with_default_size)
     }
 
-    /// `(scatter, snapshot_join, centralized)` SELECT counts since start.
-    pub fn route_counts(&self) -> (u64, u64, u64) {
-        (
-            self.routes.scatter.load(AtomicOrdering::Relaxed),
-            self.routes.snapshot_join.load(AtomicOrdering::Relaxed),
-            self.routes.centralized.load(AtomicOrdering::Relaxed),
-        )
+    /// Routing counters since start: scatter / snapshot-join / centralized
+    /// SELECT service plus compiled-fast-path DML executions.
+    pub fn route_counts(&self) -> RouteCounts {
+        RouteCounts {
+            scatter: self.routes.scatter.load(AtomicOrdering::Relaxed),
+            snapshot_join: self.routes.snapshot_join.load(AtomicOrdering::Relaxed),
+            centralized: self.routes.centralized.load(AtomicOrdering::Relaxed),
+            fast_dml: self.routes.fast_dml.load(AtomicOrdering::Relaxed),
+        }
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -445,7 +463,15 @@ impl DbCluster {
                     .map(|ci| m.def.schema.columns[ci].name.clone()),
             })
         });
-        let plan = Arc::new(PreparedPlan { sql: sql_text.to_string(), stmt, params, describe });
+        // Classify into a compiled physical plan when the statement fits a
+        // fast point-DML shape; `None` keeps every execution interpreted.
+        let dml = dml_plan::compile(&stmt, |t: &str| self.meta(t).ok().map(|m| m.def.clone()));
+        let describe = match &dml {
+            Some(d) => format!("{describe}\ncompiled: {}", d.kind()),
+            None => describe,
+        };
+        let plan =
+            Arc::new(PreparedPlan { sql: sql_text.to_string(), stmt, params, describe, dml });
         let mut cache = self.plans.write().unwrap();
         if cache.len() >= PLAN_CACHE_MAX {
             // evict one arbitrary entry; clearing everything would force a
@@ -518,7 +544,46 @@ impl DbCluster {
     }
 
     /// Execute a prepared statement with one value bound per placeholder.
+    ///
+    /// Statements whose prepare-time classification produced a compiled
+    /// physical plan (see [`crate::storage::dml_plan`]) run through the
+    /// fast path: bound values route straight to the pruned partition, no
+    /// AST clone, no per-call lock-set map. Everything else — and any
+    /// binding the fast path cannot route (e.g. a non-integer partition
+    /// key) — binds and executes through the interpreted reference path.
     pub fn exec_prepared(
+        &self,
+        node: u32,
+        kind: AccessKind,
+        prepared: &Prepared,
+        params: &[Value],
+    ) -> Result<StatementResult> {
+        if let Some(plan) = prepared.fast_plan() {
+            if params.len() == prepared.param_count() {
+                let t0 = Instant::now();
+                match self.exec_fast(plan, params) {
+                    Ok(Some(r)) => {
+                        self.routes.fast_dml.fetch_add(1, AtomicOrdering::Relaxed);
+                        self.stats.record(node, kind, t0.elapsed().as_secs_f64());
+                        return Ok(r);
+                    }
+                    Ok(None) => {} // runtime shape mismatch: interpret
+                    Err(e) => {
+                        self.stats.record(node, kind, t0.elapsed().as_secs_f64());
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        self.exec_prepared_interpreted(node, kind, prepared, params)
+    }
+
+    /// Execute a prepared statement through the interpreted reference path,
+    /// bypassing the compiled fast path. This is the semantic baseline the
+    /// differential tests (`tests/dml_fastpath.rs`) and the claim-loop
+    /// microbenchmark compare against; it is also the fallback `exec_prepared`
+    /// takes for unsupported shapes.
+    pub fn exec_prepared_interpreted(
         &self,
         node: u32,
         kind: AccessKind,
@@ -530,7 +595,10 @@ impl DbCluster {
     }
 
     /// Execute a prepared single-row INSERT template once per entry of
-    /// `rows`, as one atomic multi-row insert.
+    /// `rows`, as one atomic multi-row insert. Fast-classified inserts
+    /// apply each row directly (write-locking only the partitions the
+    /// batch actually lands in); other shapes expand the template and run
+    /// interpreted.
     pub fn exec_prepared_batch(
         &self,
         node: u32,
@@ -538,6 +606,24 @@ impl DbCluster {
         prepared: &Prepared,
         rows: &[Vec<Value>],
     ) -> Result<StatementResult> {
+        if let Some(DmlPlan::Insert(p)) = prepared.fast_plan() {
+            if !rows.is_empty() && rows.iter().all(|r| r.len() == prepared.param_count()) {
+                let refs: Vec<&[Value]> = rows.iter().map(|r| r.as_slice()).collect();
+                let t0 = Instant::now();
+                match self.fast_insert(p, &refs) {
+                    Ok(Some(r)) => {
+                        self.routes.fast_dml.fetch_add(1, AtomicOrdering::Relaxed);
+                        self.stats.record(node, kind, t0.elapsed().as_secs_f64());
+                        return Ok(r);
+                    }
+                    Ok(None) => {}
+                    Err(e) => {
+                        self.stats.record(node, kind, t0.elapsed().as_secs_f64());
+                        return Err(e);
+                    }
+                }
+            }
+        }
         let stmt = prepared.bind_batch(rows)?;
         self.exec_stmt(node, kind, &stmt)
     }
@@ -548,6 +634,585 @@ impl DbCluster {
             StatementResult::Rows(r) => Ok(r),
             other => Err(Error::Engine(format!("expected rows, got {other:?}"))),
         }
+    }
+
+    // ---------- the compiled DML fast path ----------
+
+    /// Execute a compiled plan. `Ok(None)` means this particular binding
+    /// cannot be fast-routed (non-integer partition key, unpromoted dead
+    /// primary); the caller falls back to the interpreted path, which
+    /// remains the semantic reference.
+    fn exec_fast(&self, plan: &DmlPlan, params: &[Value]) -> Result<Option<StatementResult>> {
+        match plan {
+            DmlPlan::Update(p) => self.fast_update(p, params),
+            DmlPlan::Delete(p) => self.fast_delete(p, params),
+            DmlPlan::Insert(p) => self.fast_insert(p, &[params]),
+            DmlPlan::Select(p) => self.fast_select(p, params),
+        }
+    }
+
+    /// Acquire the fast path's latch set for a write statement: for every
+    /// target partition (ascending — the same canonical order the 2PL
+    /// executor sorts into, so the two paths can never deadlock against
+    /// each other) the live primary plus, when alive, its backup, both
+    /// write-locked. With `read_rest`, every non-target partition is
+    /// read-locked too (the cross-partition PK probe of fast inserts — the
+    /// interpreter write-locks the whole table for this). Returns `None`
+    /// when a target's live replica is serving in the backup role (dead
+    /// primary not yet promoted): that corner stays interpreted.
+    fn fast_lock(
+        &self,
+        meta: &TableMeta,
+        parts: &[usize],
+        read_rest: bool,
+    ) -> Result<Option<FastLockSet>> {
+        let n = meta.def.num_partitions();
+        let mut locks: Vec<(bool, Arc<RwLock<PartitionStore>>)> = Vec::new();
+        let mut targets: Vec<FastTarget> = Vec::new();
+        let mut live_of: Vec<Option<usize>> = vec![None; n];
+        for pidx in 0..n {
+            let is_target = parts.binary_search(&pidx).is_ok();
+            if !is_target && !read_rest {
+                continue;
+            }
+            let pl = &meta.placements[pidx];
+            if is_target {
+                let (store, _, role) = self.replica_store(meta, pidx, pl, true)?;
+                if role != Role::Primary {
+                    return Ok(None);
+                }
+                locks.push((true, store));
+                let prim = locks.len() - 1;
+                live_of[pidx] = Some(prim);
+                let mut backup = None;
+                if let Some(bid) = pl.backup {
+                    if let Some(bn) = self.node(bid) {
+                        if bn.is_alive() {
+                            locks.push((true, bn.partition(&meta.def.name, pidx)?));
+                            backup = Some(locks.len() - 1);
+                        }
+                    }
+                }
+                targets.push(FastTarget { pidx, prim, backup });
+            } else {
+                let (store, _, _) = self.replica_store(meta, pidx, pl, false)?;
+                locks.push((false, store));
+                live_of[pidx] = Some(locks.len() - 1);
+            }
+        }
+        Ok(Some(FastLockSet { locks, targets, live_of }))
+    }
+
+    /// Compiled point/batch UPDATE: route → probe → re-check → apply in
+    /// place, mirroring the interpreted executor's observable behavior
+    /// (match order, ORDER BY + LIMIT compaction, RETURNING projection,
+    /// abort semantics) without touching the AST.
+    fn fast_update(&self, p: &UpdatePlan, params: &[Value]) -> Result<Option<StatementResult>> {
+        let meta = self.meta(&p.table)?;
+        let def = meta.def.clone();
+        let Some(parts) = p.route.resolve(&def, params) else { return Ok(None) };
+        let now = self.clock.now();
+        let Some(set) = self.fast_lock(&meta, &parts, false)? else {
+            return Ok(None);
+        };
+        let (locks, targets) = (set.locks, set.targets);
+        let mut guards: Vec<Guard<'_>> = locks
+            .iter()
+            .map(|(w, s)| if *w { Guard::W(s.write().unwrap()) } else { Guard::R(s.read().unwrap()) })
+            .collect();
+
+        // Match phase: probe candidates under the held latches, re-checking
+        // the full predicate (index buckets may contain hash collisions).
+        // With ORDER BY + LIMIT (the claim pattern) the working set is
+        // periodically compacted, exactly like the interpreted executor.
+        let dirs: Vec<bool> = p.order.iter().map(|(_, asc)| *asc).collect();
+        let mut matches: Vec<(usize, Slot, Vec<Value>)> = Vec::new();
+        let compact_at = match (p.limit, p.order.is_empty()) {
+            (Some(n), false) => Some(topn_cap(n)),
+            _ => None,
+        };
+        for (ti, t) in targets.iter().enumerate() {
+            let store = store_of(&guards, t.prim);
+            let mut consider = |slot: Slot, row: &Row| {
+                if !p.preds.iter().all(|c| c.matches(&row.values, params)) {
+                    return;
+                }
+                let key: Vec<Value> =
+                    p.order.iter().map(|(ci, _)| row.values[*ci].clone()).collect();
+                matches.push((ti, slot, key));
+                if let Some(cap) = compact_at {
+                    if matches.len() >= cap {
+                        matches.sort_by(|(_, _, ka), (_, _, kb)| cmp_order_keys(ka, kb, &dirs));
+                        matches.truncate(p.limit.unwrap_or(0) as usize);
+                    }
+                }
+            };
+            probe_candidates(store, &p.probe, params, &mut consider);
+        }
+        if !p.order.is_empty() {
+            matches.sort_by(|(_, _, ka), (_, _, kb)| cmp_order_keys(ka, kb, &dirs));
+        }
+        if let Some(n) = p.limit {
+            matches.truncate(n as usize);
+        }
+
+        // Apply phase: one in-place update per matched row on the primary,
+        // mirrored synchronously to the backup; the displaced old row is
+        // kept (moved, not cloned) as undo state.
+        let mut applied: Vec<(usize, Slot, Row, Arc<Row>)> = Vec::new();
+        let mut failure: Option<Error> = None;
+        for (ti, slot, _) in &matches {
+            let t = &targets[*ti];
+            let built: Result<Row> = (|| {
+                let store = store_of(&guards, t.prim);
+                let old = store.get(*slot).ok_or_else(|| {
+                    Error::Engine(format!("matched slot {slot} vanished mid-statement"))
+                })?;
+                let mut vals = old.values.clone();
+                for (ci, e) in &p.sets {
+                    vals[*ci] = e.eval(&old.values, params, now)?;
+                }
+                def.schema.coerce_row(Row::new(vals))
+            })();
+            let new_row = match built {
+                Ok(r) => r,
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            };
+            let new_arc = Arc::new(new_row);
+            match store_of_mut(&mut guards, t.prim)
+                .and_then(|s| s.update_in_place(*slot, new_arc.as_ref().clone()))
+            {
+                Ok(old) => {
+                    let mut backup_err = None;
+                    if let Some(bi) = t.backup {
+                        if let Err(e) = store_of_mut(&mut guards, bi)
+                            .and_then(|s| s.update_in_place(*slot, new_arc.as_ref().clone()))
+                        {
+                            backup_err = Some(e);
+                        }
+                    }
+                    if let Some(e) = backup_err {
+                        // restore the primary before unwinding
+                        store_of_mut(&mut guards, t.prim)
+                            .and_then(|s| s.update(*slot, old.clone()))
+                            .unwrap_or_else(|e2| {
+                                panic!("fast-path rollback failed: {e2} (original error: {e})")
+                            });
+                        failure = Some(e);
+                        break;
+                    }
+                    applied.push((*ti, *slot, old, new_arc));
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failure {
+            for (ti, slot, old, _) in applied.into_iter().rev() {
+                let t = &targets[ti];
+                if let Some(bi) = t.backup {
+                    store_of_mut(&mut guards, bi)
+                        .and_then(|s| s.update(slot, old.clone()))
+                        .unwrap_or_else(|e2| {
+                            panic!("fast-path rollback failed: {e2} (original error: {e})")
+                        });
+                }
+                store_of_mut(&mut guards, t.prim)
+                    .and_then(|s| s.update(slot, old))
+                    .unwrap_or_else(|e2| {
+                        panic!("fast-path rollback failed: {e2} (original error: {e})")
+                    });
+            }
+            return Err(Error::TxnAborted(e.to_string()));
+        }
+
+        let result = match &p.returning {
+            Some(cols) => {
+                let columns: Vec<String> = cols.iter().map(|(_, name)| name.clone()).collect();
+                let rows: Vec<Row> = applied
+                    .iter()
+                    .map(|(_, _, _, new)| {
+                        Row::new(cols.iter().map(|(ci, _)| new.values[*ci].clone()).collect())
+                    })
+                    .collect();
+                StatementResult::Rows(ResultSet { columns, rows })
+            }
+            None => StatementResult::Affected(applied.len()),
+        };
+        // Redo ops share the applied row via `Arc`; the WAL append happens
+        // after the latches drop, like the interpreted commit.
+        let ops: Vec<LogOp> = applied
+            .iter()
+            .map(|(ti, slot, _, new)| LogOp::Update {
+                table: p.table.clone(),
+                pidx: targets[*ti].pidx,
+                slot: *slot,
+                row: new.clone(),
+            })
+            .collect();
+        drop(guards);
+        self.append_committed(ops)?;
+        Ok(Some(result))
+    }
+
+    /// Compiled point DELETE (probe + re-check; the interpreter full-scans).
+    fn fast_delete(&self, p: &DeletePlan, params: &[Value]) -> Result<Option<StatementResult>> {
+        let meta = self.meta(&p.table)?;
+        let def = meta.def.clone();
+        let Some(parts) = p.route.resolve(&def, params) else { return Ok(None) };
+        let Some(set) = self.fast_lock(&meta, &parts, false)? else {
+            return Ok(None);
+        };
+        let (locks, targets) = (set.locks, set.targets);
+        let mut guards: Vec<Guard<'_>> = locks
+            .iter()
+            .map(|(w, s)| if *w { Guard::W(s.write().unwrap()) } else { Guard::R(s.read().unwrap()) })
+            .collect();
+
+        // Victims in ascending slot order per partition: matches the
+        // interpreted scan and keeps slab free-list evolution (and thus
+        // replica slot assignment) deterministic.
+        let mut victims: Vec<(usize, Slot)> = Vec::new();
+        for (ti, t) in targets.iter().enumerate() {
+            let store = store_of(&guards, t.prim);
+            let start = victims.len();
+            let mut consider = |slot: Slot, row: &Row| {
+                if p.preds.iter().all(|c| c.matches(&row.values, params)) {
+                    victims.push((ti, slot));
+                }
+            };
+            probe_candidates(store, &p.probe, params, &mut consider);
+            victims[start..].sort_unstable_by_key(|(_, s)| *s);
+        }
+
+        let mut applied: Vec<(usize, Slot, Row)> = Vec::new();
+        let mut failure: Option<Error> = None;
+        for (ti, slot) in &victims {
+            let t = &targets[*ti];
+            match store_of_mut(&mut guards, t.prim).and_then(|s| s.delete(*slot)) {
+                Ok(old) => {
+                    let mut backup_err = None;
+                    if let Some(bi) = t.backup {
+                        if let Err(e) =
+                            store_of_mut(&mut guards, bi).and_then(|s| s.delete(*slot).map(|_| ()))
+                        {
+                            backup_err = Some(e);
+                        }
+                    }
+                    if let Some(e) = backup_err {
+                        store_of_mut(&mut guards, t.prim)
+                            .and_then(|s| s.insert(old.clone()).map(|_| ()))
+                            .unwrap_or_else(|e2| {
+                                panic!("fast-path rollback failed: {e2} (original error: {e})")
+                            });
+                        failure = Some(e);
+                        break;
+                    }
+                    applied.push((*ti, *slot, old));
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failure {
+            // Reverse order re-inserts pop the slab free list LIFO, landing
+            // every row back in its original slot (asserted, like the
+            // interpreted rollback).
+            for (ti, slot, old) in applied.into_iter().rev() {
+                let t = &targets[ti];
+                if let Some(bi) = t.backup {
+                    let got = store_of_mut(&mut guards, bi)
+                        .and_then(|s| s.insert(old.clone()))
+                        .unwrap_or_else(|e2| {
+                            panic!("fast-path rollback failed: {e2} (original error: {e})")
+                        });
+                    if got != slot {
+                        panic!("fast-path rollback slot mismatch {got} != {slot}");
+                    }
+                }
+                let got = store_of_mut(&mut guards, t.prim)
+                    .and_then(|s| s.insert(old))
+                    .unwrap_or_else(|e2| {
+                        panic!("fast-path rollback failed: {e2} (original error: {e})")
+                    });
+                if got != slot {
+                    panic!("fast-path rollback slot mismatch {got} != {slot}");
+                }
+            }
+            return Err(Error::TxnAborted(e.to_string()));
+        }
+
+        let ops: Vec<LogOp> = applied
+            .iter()
+            .map(|(ti, slot, _)| LogOp::Delete {
+                table: p.table.clone(),
+                pidx: targets[*ti].pidx,
+                slot: *slot,
+            })
+            .collect();
+        let n = applied.len();
+        drop(guards);
+        self.append_committed(ops)?;
+        Ok(Some(StatementResult::Affected(n)))
+    }
+
+    /// Compiled single-row / batch INSERT. Rows are evaluated and routed
+    /// before locking; only the partitions the batch lands in are
+    /// write-locked (the interpreter write-locks every partition), with
+    /// sibling partitions read-latched just for the cross-partition PK
+    /// probe when the table needs it.
+    fn fast_insert(&self, p: &InsertPlan, rows: &[&[Value]]) -> Result<Option<StatementResult>> {
+        let meta = self.meta(&p.table)?;
+        let def = meta.def.clone();
+        let now = self.clock.now();
+        let mut built: Vec<(usize, Row)> = Vec::with_capacity(rows.len());
+        for &params in rows {
+            let build: Result<(usize, Row)> = (|| {
+                let vals = p
+                    .row
+                    .iter()
+                    .map(|e| e.eval(&[], params, now))
+                    .collect::<Result<Vec<Value>>>()?;
+                let row = def.schema.coerce_row(Row::new(vals))?;
+                let pidx = def.partition_of_row(&row.values)?;
+                Ok((pidx, row))
+            })();
+            match build {
+                Ok(x) => built.push(x),
+                // nothing is applied yet: aborting here leaves the same
+                // no-trace state as the interpreted rollback
+                Err(e) => return Err(Error::TxnAborted(e.to_string())),
+            }
+        }
+        let mut parts: Vec<usize> = built.iter().map(|(pidx, _)| *pidx).collect();
+        parts.sort_unstable();
+        parts.dedup();
+        let Some(set) = self.fast_lock(&meta, &parts, p.cross_partition_pk)? else {
+            return Ok(None);
+        };
+        let (locks, targets, live_of) = (set.locks, set.targets, set.live_of);
+        let mut guards: Vec<Guard<'_>> = locks
+            .iter()
+            .map(|(w, s)| if *w { Guard::W(s.write().unwrap()) } else { Guard::R(s.read().unwrap()) })
+            .collect();
+        let mut target_of: Vec<Option<usize>> = vec![None; def.num_partitions()];
+        for (ti, t) in targets.iter().enumerate() {
+            target_of[t.pidx] = Some(ti);
+        }
+        let pk_ci = def.pk_idx();
+
+        let mut applied: Vec<(usize, Slot, Arc<Row>)> = Vec::new();
+        let mut failure: Option<Error> = None;
+        'rows: for (pidx, row) in &built {
+            if p.cross_partition_pk {
+                if let Some(k) = pk_ci.and_then(|ci| row.values[ci].as_i64()) {
+                    for other in 0..def.num_partitions() {
+                        if other == *pidx {
+                            continue;
+                        }
+                        let Some(gi) = live_of[other] else { continue };
+                        if store_of(&guards, gi).slot_by_pk(k).is_some() {
+                            failure = Some(Error::Constraint(format!(
+                                "duplicate primary key {k} in '{}'",
+                                def.name
+                            )));
+                            break 'rows;
+                        }
+                    }
+                }
+            }
+            let ti = target_of[*pidx].expect("row routed to an unlocked partition");
+            let t = &targets[ti];
+            let arc = Arc::new(row.clone());
+            match store_of_mut(&mut guards, t.prim).and_then(|s| s.insert(arc.as_ref().clone())) {
+                Ok(slot) => {
+                    if let Some(bi) = t.backup {
+                        match store_of_mut(&mut guards, bi)
+                            .and_then(|s| s.insert(arc.as_ref().clone()))
+                        {
+                            Ok(got) => {
+                                if got != slot {
+                                    panic!(
+                                        "replica divergence on {}[{pidx}]: {got} != {slot}",
+                                        p.table
+                                    );
+                                }
+                            }
+                            Err(e) => {
+                                store_of_mut(&mut guards, t.prim)
+                                    .and_then(|s| s.delete(slot).map(|_| ()))
+                                    .unwrap_or_else(|e2| {
+                                        panic!(
+                                            "fast-path rollback failed: {e2} (original error: {e})"
+                                        )
+                                    });
+                                failure = Some(e);
+                                break 'rows;
+                            }
+                        }
+                    }
+                    applied.push((ti, slot, arc));
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break 'rows;
+                }
+            }
+        }
+        if let Some(e) = failure {
+            for (ti, slot, _) in applied.into_iter().rev() {
+                let t = &targets[ti];
+                if let Some(bi) = t.backup {
+                    store_of_mut(&mut guards, bi)
+                        .and_then(|s| s.delete(slot).map(|_| ()))
+                        .unwrap_or_else(|e2| {
+                            panic!("fast-path rollback failed: {e2} (original error: {e})")
+                        });
+                }
+                store_of_mut(&mut guards, t.prim)
+                    .and_then(|s| s.delete(slot).map(|_| ()))
+                    .unwrap_or_else(|e2| {
+                        panic!("fast-path rollback failed: {e2} (original error: {e})")
+                    });
+            }
+            return Err(Error::TxnAborted(e.to_string()));
+        }
+
+        let ops: Vec<LogOp> = applied
+            .iter()
+            .map(|(ti, slot, row)| LogOp::Insert {
+                table: p.table.clone(),
+                pidx: targets[*ti].pidx,
+                slot: *slot,
+                row: row.clone(),
+            })
+            .collect();
+        let n = applied.len();
+        drop(guards);
+        self.append_committed(ops)?;
+        Ok(Some(StatementResult::Affected(n)))
+    }
+
+    /// Compiled indexed-equality SELECT (the `getREADYtasks` shape): one
+    /// pruned partition, index probe, bounded top-n working set — the
+    /// interpreted centralized plan, minus the interpreter.
+    fn fast_select(&self, p: &SelectPlan, params: &[Value]) -> Result<Option<StatementResult>> {
+        let meta = self.meta(&p.table)?;
+        let def = meta.def.clone();
+        let Some(parts) = p.route.resolve(&def, params) else { return Ok(None) };
+        let mut locks: Vec<Arc<RwLock<PartitionStore>>> = Vec::with_capacity(parts.len());
+        for &pidx in &parts {
+            let pl = &meta.placements[pidx];
+            let (store, _, _) = self.replica_store(&meta, pidx, pl, false)?;
+            locks.push(store);
+        }
+        let guards: Vec<RwLockReadGuard<'_, PartitionStore>> =
+            locks.iter().map(|s| s.read().unwrap()).collect();
+
+        let dirs: Vec<bool> = p.order.iter().map(|(_, asc)| *asc).collect();
+        let selected: Vec<Row> = if let (Some(limit), false) = (p.limit, p.order.is_empty()) {
+            // top-n mirror: bounded working set with threshold pruning,
+            // candidates in index-bucket order (same tie-breaking as the
+            // interpreted top-n executor)
+            let cap = topn_cap(limit);
+            let mut kept: Vec<(Vec<Value>, Row)> = Vec::new();
+            let mut threshold: Option<Vec<Value>> = None;
+            for g in &guards {
+                let store: &PartitionStore = g;
+                let mut consider = |_slot: Slot, row: &Row| {
+                    if !p.preds.iter().all(|c| c.matches(&row.values, params)) {
+                        return;
+                    }
+                    let key: Vec<Value> =
+                        p.order.iter().map(|(ci, _)| row.values[*ci].clone()).collect();
+                    if let Some(th) = &threshold {
+                        if cmp_order_keys(&key, th, &dirs) != std::cmp::Ordering::Less {
+                            return;
+                        }
+                    }
+                    kept.push((key, row.clone()));
+                    if kept.len() >= cap {
+                        kept.sort_by(|(ka, _), (kb, _)| cmp_order_keys(ka, kb, &dirs));
+                        kept.truncate(limit as usize);
+                        threshold = kept.last().map(|(k, _)| k.clone());
+                    }
+                };
+                probe_candidates(store, &p.probe, params, &mut consider);
+            }
+            kept.sort_by(|(ka, _), (kb, _)| cmp_order_keys(ka, kb, &dirs));
+            kept.truncate(limit as usize);
+            kept.into_iter().map(|(_, r)| r).collect()
+        } else {
+            // general mirror: candidates in ascending slot order, full
+            // collection, stable sort when ORDER BY is present
+            let mut rows_keys: Vec<(Vec<Value>, Row)> = Vec::new();
+            'parts: for g in &guards {
+                let store: &PartitionStore = g;
+                for slot in sorted_candidates(store, &p.probe, params) {
+                    let Some(row) = store.get(slot) else { continue };
+                    if !p.preds.iter().all(|c| c.matches(&row.values, params)) {
+                        continue;
+                    }
+                    let key: Vec<Value> =
+                        p.order.iter().map(|(ci, _)| row.values[*ci].clone()).collect();
+                    rows_keys.push((key, row.clone()));
+                    if p.order.is_empty() {
+                        if let Some(n) = p.limit {
+                            if rows_keys.len() >= n as usize {
+                                break 'parts;
+                            }
+                        }
+                    }
+                }
+            }
+            if !p.order.is_empty() {
+                rows_keys.sort_by(|(ka, _), (kb, _)| cmp_order_keys(ka, kb, &dirs));
+            }
+            if let Some(n) = p.limit {
+                rows_keys.truncate(n as usize);
+            }
+            rows_keys.into_iter().map(|(_, r)| r).collect()
+        };
+        drop(guards);
+        let columns: Vec<String> = p.cols.iter().map(|(_, n)| n.clone()).collect();
+        let rows = selected
+            .into_iter()
+            .map(|r| Row::new(p.cols.iter().map(|(ci, _)| r.values[*ci].clone()).collect()))
+            .collect();
+        Ok(Some(StatementResult::Rows(ResultSet { columns, rows })))
+    }
+
+    /// Append committed redo ops to the owning nodes' WALs (after latches
+    /// drop). Shared by the interpreted commit and every fast executor.
+    fn append_committed(&self, ops: Vec<LogOp>) -> Result<()> {
+        for op in ops {
+            let meta = self.meta(op.table())?;
+            let pidx = match &op {
+                LogOp::Insert { pidx, .. }
+                | LogOp::Update { pidx, .. }
+                | LogOp::Delete { pidx, .. } => *pidx,
+            };
+            let pl = &meta.placements[pidx];
+            if let Some(n) = self.node(pl.primary) {
+                if n.is_alive() {
+                    n.log(op)?;
+                    continue;
+                }
+            }
+            if let Some(b) = pl.backup.and_then(|b| self.node(b)) {
+                if b.is_alive() {
+                    b.log(op)?;
+                }
+            }
+        }
+        Ok(())
     }
 
     // ---------- statement entry points ----------
@@ -875,12 +1540,12 @@ impl DbCluster {
                 let store = ctx.store_mut(&table, pidx, Role::Backup)?;
                 match op {
                     LogOp::Insert { slot, row, .. } => {
-                        let got = store.insert(row.clone())?;
+                        let got = store.insert(row.as_ref().clone())?;
                         if got != *slot {
                             panic!("replica divergence on {table}[{pidx}]: {got} != {slot}");
                         }
                     }
-                    LogOp::Update { slot, row, .. } => store.update(*slot, row.clone())?,
+                    LogOp::Update { slot, row, .. } => store.update(*slot, row.as_ref().clone())?,
                     LogOp::Delete { slot, .. } => {
                         store.delete(*slot)?;
                     }
@@ -889,24 +1554,7 @@ impl DbCluster {
         }
         drop(ctx);
         // WAL append after releasing row locks (commit record).
-        for op in ops {
-            let meta = self.meta(op.table())?;
-            let pidx = match &op {
-                LogOp::Insert { pidx, .. } | LogOp::Update { pidx, .. } | LogOp::Delete { pidx, .. } => *pidx,
-            };
-            let pl = &meta.placements[pidx];
-            if let Some(n) = self.node(pl.primary) {
-                if n.is_alive() {
-                    n.log(op)?;
-                    continue;
-                }
-            }
-            if let Some(b) = pl.backup.and_then(|b| self.node(b)) {
-                if b.is_alive() {
-                    b.log(op)?;
-                }
-            }
-        }
+        self.append_committed(ops)?;
         Ok(results)
     }
 
@@ -1103,7 +1751,7 @@ impl DbCluster {
             match &index_probe {
                 Some((ci, v)) => {
                     if let Some(slots) = store.slots_by_index(*ci, v) {
-                        let mut slots = slots;
+                        let mut slots = slots.to_vec();
                         slots.sort_unstable();
                         for s in slots {
                             if let Some(r) = store.get(s) {
@@ -1189,18 +1837,8 @@ impl DbCluster {
         let ectx = ctx.ectx();
         let parts = prune_partitions(&def, binding, s.where_.as_ref());
         let index_probe = s.where_.as_ref().and_then(|w| index_probe_for(&def, binding, w));
-        let cap = ((limit as usize) * 4).max(512);
+        let cap = topn_cap(limit);
         let dirs: Vec<bool> = order_bound.iter().map(|(_, asc)| *asc).collect();
-        fn cmp_keys(ka: &[Value], kb: &[Value], dirs: &[bool]) -> std::cmp::Ordering {
-            for ((a, b), asc) in ka.iter().zip(kb.iter()).zip(dirs.iter()) {
-                let o = a.total_cmp(b);
-                let o = if *asc { o } else { o.reverse() };
-                if o != std::cmp::Ordering::Equal {
-                    return o;
-                }
-            }
-            std::cmp::Ordering::Equal
-        }
         let mut kept: Vec<(Vec<Value>, Row)> = Vec::new();
         // once the working set has been compacted, rows sorting after the
         // current n-th key can be skipped without cloning
@@ -1219,13 +1857,13 @@ impl DbCluster {
                         .map(|(b, _)| b.eval(&row.values, &ectx))
                         .collect::<Result<Vec<_>>>()?;
                     if let Some(t) = &threshold {
-                        if cmp_keys(&key, t, &dirs) != std::cmp::Ordering::Less {
+                        if cmp_order_keys(&key, t, &dirs) != std::cmp::Ordering::Less {
                             return Ok(());
                         }
                     }
                     kept.push((key, row.clone()));
                     if kept.len() >= cap {
-                        kept.sort_by(|(ka, _), (kb, _)| cmp_keys(ka, kb, &dirs));
+                        kept.sort_by(|(ka, _), (kb, _)| cmp_order_keys(ka, kb, &dirs));
                         kept.truncate(limit as usize);
                         threshold = kept.last().map(|(k, _)| k.clone());
                     }
@@ -1235,7 +1873,7 @@ impl DbCluster {
             match &index_probe {
                 Some((ci, v)) => match store.slots_by_index(*ci, v) {
                     Some(slots) => {
-                        for slot in slots {
+                        for &slot in slots {
                             if let Some(r) = store.get(slot) {
                                 consider(r)?;
                             }
@@ -1263,7 +1901,7 @@ impl DbCluster {
                 }
             }
         }
-        kept.sort_by(|(ka, _), (kb, _)| cmp_keys(ka, kb, &dirs));
+        kept.sort_by(|(ka, _), (kb, _)| cmp_order_keys(ka, kb, &dirs));
         kept.truncate(limit as usize);
         let input = TableInput {
             binding: binding.to_string(),
@@ -1411,7 +2049,7 @@ impl DbCluster {
             let store = ctx.store_mut(&tkey, pidx, Role::Primary)?;
             let slot = store.insert(row.clone())?;
             ctx.applied.push((
-                LogOp::Insert { table: tkey.clone(), pidx, slot, row },
+                LogOp::Insert { table: tkey.clone(), pidx, slot, row: Arc::new(row) },
                 Undo::Remove { table: tkey.clone(), pidx, slot },
             ));
             n += 1;
@@ -1464,44 +2102,21 @@ impl DbCluster {
         // Gather matches across locked partitions (with index probe).
         let parts = prune_partitions(&def, binding, where_.as_ref());
         let index_probe = where_.as_ref().and_then(|w| index_probe_for(&def, binding, w));
+        let dirs: Vec<bool> = order_bound.iter().map(|(_, asc)| *asc).collect();
         let sort_matches = |matches: &mut Vec<(usize, usize, Vec<Value>)>| {
-            matches.sort_by(|(_, _, ka), (_, _, kb)| {
-                for ((a, b), (_, asc)) in ka.iter().zip(kb.iter()).zip(order_bound.iter()) {
-                    let o = a.total_cmp(b);
-                    let o = if *asc { o } else { o.reverse() };
-                    if o != std::cmp::Ordering::Equal {
-                        return o;
-                    }
-                }
-                std::cmp::Ordering::Equal
-            });
+            matches.sort_by(|(_, _, ka), (_, _, kb)| cmp_order_keys(ka, kb, &dirs));
         };
         let mut matches: Vec<(usize, usize, Vec<Value>)> = Vec::new(); // (pidx, slot, order key)
         // top-N compaction: with ORDER BY + LIMIT (the claim pattern) we
         // never keep more than a bounded working set of candidates
         let compact_at = match (limit, order_bound.is_empty()) {
-            (Some(n), false) => Some(((n as usize) * 4).max(512)),
+            (Some(n), false) => Some(topn_cap(n)),
             _ => None,
         };
         for pidx in &parts {
             let store = ctx.store(&tkey, *pidx, Role::Primary)?;
-            let candidates: Vec<usize> = match &index_probe {
-                // candidate order is irrelevant: ORDER BY sorting (or the
-                // unordered-update semantics) decides the outcome
-                Some((ci, v)) => match store.slots_by_index(*ci, v) {
-                    Some(s) => s,
-                    // PK fast path: `WHERE taskid = N` is a point lookup,
-                    // not a partition scan (updateToFINISHED hot path).
-                    None if def.pk_idx() == Some(*ci) => match v.as_i64() {
-                        Some(k) => store.slot_by_pk(k).into_iter().collect(),
-                        None => vec![],
-                    },
-                    None => store.iter().map(|(s, _)| s).collect(),
-                },
-                None => store.iter().map(|(s, _)| s).collect(),
-            };
-            for slot in candidates {
-                let Some(row) = store.get(slot) else { continue };
+            let mut consider = |slot: usize| -> Result<()> {
+                let Some(row) = store.get(slot) else { return Ok(()) };
                 let ok = match &wb {
                     Some(b) => b.matches(&row.values, &ectx)?,
                     None => true,
@@ -1517,6 +2132,39 @@ impl DbCluster {
                             sort_matches(&mut matches);
                             matches.truncate(limit.unwrap_or(0) as usize);
                         }
+                    }
+                }
+                Ok(())
+            };
+            match &index_probe {
+                // candidate order is irrelevant: ORDER BY sorting (or the
+                // unordered-update semantics) decides the outcome
+                Some((ci, v)) => match store.slots_by_index(*ci, v) {
+                    // borrowed bucket: no per-probe allocation on the
+                    // claim loop even when `READY` spans the partition
+                    Some(slots) => {
+                        for &slot in slots {
+                            consider(slot)?;
+                        }
+                    }
+                    // PK fast path: `WHERE taskid = N` is a point lookup,
+                    // not a partition scan (updateToFINISHED hot path).
+                    None if def.pk_idx() == Some(*ci) => {
+                        if let Some(k) = v.as_i64() {
+                            if let Some(slot) = store.slot_by_pk(k) {
+                                consider(slot)?;
+                            }
+                        }
+                    }
+                    None => {
+                        for (slot, _) in store.iter() {
+                            consider(slot)?;
+                        }
+                    }
+                },
+                None => {
+                    for (slot, _) in store.iter() {
+                        consider(slot)?;
                     }
                 }
             }
@@ -1547,7 +2195,12 @@ impl DbCluster {
                 let store = ctx.store_mut(&tkey, *pidx, Role::Primary)?;
                 store.update(*slot, new_row.clone())?;
                 ctx.applied.push((
-                    LogOp::Update { table: tkey.clone(), pidx: *pidx, slot: *slot, row: new_row.clone() },
+                    LogOp::Update {
+                        table: tkey.clone(),
+                        pidx: *pidx,
+                        slot: *slot,
+                        row: Arc::new(new_row.clone()),
+                    },
                     Undo::Restore { table: tkey.clone(), pidx: *pidx, slot: *slot, row: old },
                 ));
             } else {
@@ -1573,7 +2226,7 @@ impl DbCluster {
                         table: tkey.clone(),
                         pidx: new_pidx,
                         slot: new_slot,
-                        row: new_row.clone(),
+                        row: Arc::new(new_row.clone()),
                     },
                     Undo::Remove { table: tkey.clone(), pidx: new_pidx, slot: new_slot },
                 ));
@@ -1648,6 +2301,119 @@ impl DbCluster {
         }
         Ok(victims.len())
     }
+}
+
+// ---------- fast-path plumbing ----------
+
+/// One write-locked partition of a fast statement: its index plus the
+/// guard positions of the live primary and (when mirrored) backup replica.
+struct FastTarget {
+    pidx: usize,
+    prim: usize,
+    backup: Option<usize>,
+}
+
+/// The latch set of one fast statement: `(write, store)` pairs in canonical
+/// acquisition order, the write targets, and the live-replica guard index
+/// per partition (for the cross-partition PK probe).
+struct FastLockSet {
+    locks: Vec<(bool, Arc<RwLock<PartitionStore>>)>,
+    targets: Vec<FastTarget>,
+    live_of: Vec<Option<usize>>,
+}
+
+/// Immutable view of a held fast-path guard.
+fn store_of<'g>(guards: &'g [Guard<'_>], i: usize) -> &'g PartitionStore {
+    match &guards[i] {
+        Guard::R(g) => g,
+        Guard::W(g) => g,
+    }
+}
+
+/// Mutable view of a held fast-path guard; targets are always write-locked.
+fn store_of_mut<'g>(guards: &'g mut [Guard<'_>], i: usize) -> Result<&'g mut PartitionStore> {
+    match &mut guards[i] {
+        Guard::W(g) => Ok(g),
+        Guard::R(_) => Err(Error::Engine("fast path write through a read latch".into())),
+    }
+}
+
+/// Feed the probe's candidate rows to `consider`, in the same order the
+/// interpreted executors visit them (index bucket order / PK point / slab
+/// order). Candidates are a superset of the matches — callers re-check the
+/// full predicate.
+fn probe_candidates(
+    store: &PartitionStore,
+    probe: &Probe,
+    params: &[Value],
+    consider: &mut dyn FnMut(Slot, &Row),
+) {
+    match probe {
+        Probe::Pk(v) => {
+            if let Some(k) = v.get(params).as_i64() {
+                if let Some(slot) = store.slot_by_pk(k) {
+                    if let Some(row) = store.get(slot) {
+                        consider(slot, row);
+                    }
+                }
+            }
+        }
+        Probe::Index { col, val } => {
+            if let Some(slots) = store.slots_by_index(*col, val.get(params)) {
+                for &slot in slots {
+                    if let Some(row) = store.get(slot) {
+                        consider(slot, row);
+                    }
+                }
+            }
+        }
+        Probe::Scan => {
+            for (slot, row) in store.iter() {
+                consider(slot, row);
+            }
+        }
+    }
+}
+
+/// The probe's candidate slots in ascending order (mirror of the
+/// interpreted general scan, whose probe slots are sorted).
+fn sorted_candidates(store: &PartitionStore, probe: &Probe, params: &[Value]) -> Vec<Slot> {
+    match probe {
+        Probe::Pk(v) => match v.get(params).as_i64().and_then(|k| store.slot_by_pk(k)) {
+            Some(s) => vec![s],
+            None => Vec::new(),
+        },
+        Probe::Index { col, val } => {
+            let mut slots: Vec<Slot> = store
+                .slots_by_index(*col, val.get(params))
+                .map(|s| s.to_vec())
+                .unwrap_or_default();
+            slots.sort_unstable();
+            slots
+        }
+        Probe::Scan => store.iter().map(|(s, _)| s).collect(),
+    }
+}
+
+/// Compare two ORDER BY key tuples under per-key sort directions. This is
+/// the one comparator shared by the interpreted executors and the compiled
+/// fast path — tie-breaking can never drift between them.
+fn cmp_order_keys(ka: &[Value], kb: &[Value], dirs: &[bool]) -> std::cmp::Ordering {
+    for ((a, b), asc) in ka.iter().zip(kb.iter()).zip(dirs.iter()) {
+        let o = a.total_cmp(b);
+        let o = if *asc { o } else { o.reverse() };
+        if o != std::cmp::Ordering::Equal {
+            return o;
+        }
+    }
+    std::cmp::Ordering::Equal
+}
+
+/// Bounded working-set size for ORDER BY + LIMIT match compaction, shared
+/// by the interpreted executors and the compiled fast path for the same
+/// reason as [`cmp_order_keys`].
+fn topn_cap(limit: u64) -> usize {
+    ((limit as usize) * 4).max(512)
 }
 
 /// Partitions that can possibly match `where_` for a table bound as
@@ -2014,7 +2780,7 @@ mod tests {
         let scattered = c.query(q).unwrap();
         let central = c.query_centralized(q).unwrap();
         assert_eq!(scattered, central, "scatter-gather must match centralized");
-        let (scatter, _, _) = c.route_counts();
+        let scatter = c.route_counts().scatter;
         assert!(scatter >= 1, "aggregate query must take the scatter path");
     }
 
@@ -2027,7 +2793,7 @@ mod tests {
         let a = c.query(q).unwrap();
         let b = c.query_centralized(q).unwrap();
         assert_eq!(a, b);
-        let (_, join, _) = c.route_counts();
+        let join = c.route_counts().snapshot_join;
         assert!(join >= 1, "join query must take the snapshot-join path");
     }
 
@@ -2040,10 +2806,10 @@ mod tests {
              ORDER BY taskid LIMIT 4",
         )
         .unwrap();
-        let (scatter, join, central) = c.route_counts();
-        assert_eq!(scatter, 0, "single pruned partition must not scatter");
-        assert_eq!(join, 0);
-        assert!(central >= 1);
+        let counts = c.route_counts();
+        assert_eq!(counts.scatter, 0, "single pruned partition must not scatter");
+        assert_eq!(counts.snapshot_join, 0);
+        assert!(counts.centralized >= 1);
     }
 
     #[test]

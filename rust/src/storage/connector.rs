@@ -82,7 +82,8 @@ impl Connector {
         self.cluster.prepare(sql)
     }
 
-    /// Broker one prepared execution.
+    /// Broker one prepared execution (compiled fast path when the plan
+    /// classified as a fast shape, interpreted otherwise).
     pub fn exec_prepared(
         &self,
         worker_node: u32,
@@ -95,6 +96,22 @@ impl Connector {
         }
         self.brokered.fetch_add(1, Ordering::Relaxed);
         self.cluster.exec_prepared(worker_node, kind, prepared, params)
+    }
+
+    /// Broker one prepared execution through the interpreted reference
+    /// path, bypassing the compiled fast path (differential testing).
+    pub fn exec_prepared_interpreted(
+        &self,
+        worker_node: u32,
+        kind: AccessKind,
+        prepared: &Prepared,
+        params: &[Value],
+    ) -> Result<StatementResult> {
+        if !self.is_alive() {
+            return Err(Error::Unavailable(format!("connector {} is down", self.id)));
+        }
+        self.brokered.fetch_add(1, Ordering::Relaxed);
+        self.cluster.exec_prepared_interpreted(worker_node, kind, prepared, params)
     }
 
     /// Broker one prepared batched insert.
@@ -173,6 +190,24 @@ impl WorkerLink {
                 .as_ref()
                 .unwrap()
                 .exec_prepared(self.worker_node, kind, prepared, params),
+            other => other,
+        }
+    }
+
+    /// Interpreted-reference variant of [`WorkerLink::exec_prepared`]
+    /// (differential testing of the compiled fast path under failover).
+    pub fn exec_prepared_interpreted(
+        &self,
+        kind: AccessKind,
+        prepared: &Prepared,
+        params: &[Value],
+    ) -> Result<StatementResult> {
+        match self.primary.exec_prepared_interpreted(self.worker_node, kind, prepared, params) {
+            Err(Error::Unavailable(_)) if self.secondary.is_some() => self
+                .secondary
+                .as_ref()
+                .unwrap()
+                .exec_prepared_interpreted(self.worker_node, kind, prepared, params),
             other => other,
         }
     }

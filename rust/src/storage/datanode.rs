@@ -130,7 +130,7 @@ impl DataNode {
             LogOp::Insert { table, pidx, slot, row } => {
                 let part = self.partition_even_if_dead(table, *pidx)?;
                 let mut p = part.write().unwrap();
-                let got = p.insert(row.clone())?;
+                let got = p.insert(row.as_ref().clone())?;
                 if got != *slot {
                     return Err(Error::TxnAborted(format!(
                         "replica slot divergence on {table}[{pidx}]: {got} != {slot}"
@@ -140,7 +140,7 @@ impl DataNode {
             }
             LogOp::Update { table, pidx, slot, row } => {
                 let part = self.partition_even_if_dead(table, *pidx)?;
-                let r = part.write().unwrap().update(*slot, row.clone());
+                let r = part.write().unwrap().update(*slot, row.as_ref().clone());
                 r
             }
             LogOp::Delete { table, pidx, slot } => {
@@ -216,7 +216,7 @@ mod tests {
         let row = Row::new(vec![Value::Int(7), Value::Float(3.0)]);
         let part = primary.partition("t", 0).unwrap();
         let slot = part.write().unwrap().insert(row.clone()).unwrap();
-        let op = LogOp::Insert { table: "t".into(), pidx: 0, slot, row };
+        let op = LogOp::Insert { table: "t".into(), pidx: 0, slot, row: Arc::new(row) };
         backup.apply(&op).unwrap();
         let bp = backup.partition("t", 0).unwrap();
         assert_eq!(bp.read().unwrap().len(), 1);

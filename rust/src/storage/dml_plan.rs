@@ -1,0 +1,820 @@
+//! Compiled DML physical plans: bind-to-plan execution for point operations.
+//!
+//! The paper's scheduling transitions (`updateToRUNNING`, `updateToFINISHED`,
+//! the provenance inserts, `getREADYtasks`) are *transaction-oriented point
+//! operations*: a predictable statement shape executed millions of times with
+//! only the bound values changing. Re-walking the AST for every call — clone
+//! + parameter substitution, per-call lock-set hashmaps, per-call expression
+//! binding — is pure interpretive overhead on exactly the path the paper says
+//! must stay negligible (§3.2, up to 960 concurrent cores). MySQL Cluster
+//! sidesteps it with NDB's precompiled key-operation API; this module is our
+//! equivalent.
+//!
+//! At [`DbCluster::prepare`](crate::storage::cluster::DbCluster::prepare)
+//! time, [`compile`] classifies the statement shape:
+//!
+//! | shape                                                | plan             |
+//! |------------------------------------------------------|------------------|
+//! | `UPDATE t SET c = e, ... WHERE conj [ORDER BY cols] [LIMIT n] [RETURNING cols]` | [`UpdatePlan`] |
+//! | `DELETE FROM t WHERE conj`                           | [`DeletePlan`]   |
+//! | `INSERT INTO t (...) VALUES (tuple)` (single row)    | [`InsertPlan`]   |
+//! | `SELECT cols FROM t WHERE conj [ORDER BY cols] [LIMIT n]` (single-partition routable) | [`SelectPlan`] |
+//!
+//! where `conj` is a conjunction of `col <cmp> literal-or-param` predicates.
+//! The compiled plan holds resolved column indices, a [`Conjunct`] predicate
+//! evaluator, compiled [`CExpr`] assignment expressions, and a partition
+//! [`Route`] over parameter positions — everything the executor needs to go
+//! from bound values straight to the pruned partition with no AST in sight.
+//!
+//! Statements that do not fit a fast shape compile to `None` and keep
+//! executing through the interpreted `exec_txn` path, which remains the
+//! semantic reference (see `tests/dml_fastpath.rs` for the differential
+//! property tests, and DESIGN.md §"The compiled DML fast path" for the
+//! fallback rules).
+
+use crate::storage::sql::ast::{Expr, Op, SelectItem, SelectStmt, Statement, TableRef};
+use crate::storage::sql::expr::{arith, truthy};
+use crate::storage::table_def::TableDef;
+use crate::storage::value::Value;
+use crate::{Error, Result};
+use std::cmp::Ordering;
+
+/// A compiled operand: a literal frozen at prepare time, or a parameter
+/// position resolved against the bound values at execution.
+#[derive(Clone, Debug)]
+pub enum CVal {
+    Lit(Value),
+    Param(usize),
+}
+
+impl CVal {
+    /// The concrete value for this execution. Out-of-range parameters
+    /// resolve to NULL (the dispatcher checks arity before running a plan,
+    /// so this is purely defensive — NULL makes every comparison miss).
+    pub fn get<'a>(&'a self, params: &'a [Value]) -> &'a Value {
+        match self {
+            CVal::Lit(v) => v,
+            CVal::Param(i) => params.get(*i).unwrap_or(&Value::Null),
+        }
+    }
+}
+
+/// One compiled WHERE conjunct: `row[col] <op> rhs` with SQL 3VL semantics
+/// (a NULL comparison does not match), byte-for-byte the behavior of the
+/// interpreter's `Bound::ColCmp` fast form.
+#[derive(Clone, Debug)]
+pub struct Conjunct {
+    pub col: usize,
+    pub op: Op,
+    pub rhs: CVal,
+}
+
+impl Conjunct {
+    pub fn matches(&self, row: &[Value], params: &[Value]) -> bool {
+        match row[self.col].sql_cmp(self.rhs.get(params)) {
+            None => false,
+            Some(o) => match self.op {
+                Op::Eq => o == Ordering::Equal,
+                Op::Ne => o != Ordering::Equal,
+                Op::Lt => o == Ordering::Less,
+                Op::Le => o != Ordering::Greater,
+                Op::Gt => o == Ordering::Greater,
+                Op::Ge => o != Ordering::Less,
+                _ => false,
+            },
+        }
+    }
+}
+
+/// A compiled scalar expression for SET clauses and INSERT templates.
+/// Column references are pre-resolved schema indices; parameters read
+/// straight from the bound slice. Semantics delegate to the interpreter's
+/// `arith`/`truthy`/`sql_cmp` so both paths compute identical values.
+#[derive(Clone, Debug)]
+pub enum CExpr {
+    Lit(Value),
+    Param(usize),
+    Col(usize),
+    /// `NOW()` — evaluates to the statement's start time.
+    Now,
+    Unary(Op, Box<CExpr>),
+    Binary(Op, Box<CExpr>, Box<CExpr>),
+    Case { arms: Vec<(CExpr, CExpr)>, else_: Option<Box<CExpr>> },
+}
+
+impl CExpr {
+    pub fn eval(&self, row: &[Value], params: &[Value], now: f64) -> Result<Value> {
+        Ok(match self {
+            CExpr::Lit(v) => v.clone(),
+            CExpr::Param(i) => params.get(*i).cloned().ok_or_else(|| {
+                Error::Type(format!("parameter ?{i} out of range ({} bound)", params.len()))
+            })?,
+            CExpr::Col(i) => row[*i].clone(),
+            CExpr::Now => Value::Float(now),
+            CExpr::Unary(op, e) => {
+                let v = e.eval(row, params, now)?;
+                match op {
+                    Op::Not => match truthy(&v)? {
+                        None => Value::Null,
+                        Some(b) => Value::Bool(!b),
+                    },
+                    Op::Neg => match v {
+                        Value::Null => Value::Null,
+                        Value::Int(i) => Value::Int(-i),
+                        Value::Float(f) => Value::Float(-f),
+                        other => return Err(Error::Type(format!("cannot negate {other}"))),
+                    },
+                    other => return Err(Error::Type(format!("bad unary op {other:?}"))),
+                }
+            }
+            CExpr::Binary(op, a, b) => {
+                match op {
+                    Op::And => {
+                        let l = truthy(&a.eval(row, params, now)?)?;
+                        if l == Some(false) {
+                            return Ok(Value::Bool(false));
+                        }
+                        let r = truthy(&b.eval(row, params, now)?)?;
+                        return Ok(match (l, r) {
+                            (_, Some(false)) => Value::Bool(false),
+                            (Some(true), Some(true)) => Value::Bool(true),
+                            _ => Value::Null,
+                        });
+                    }
+                    Op::Or => {
+                        let l = truthy(&a.eval(row, params, now)?)?;
+                        if l == Some(true) {
+                            return Ok(Value::Bool(true));
+                        }
+                        let r = truthy(&b.eval(row, params, now)?)?;
+                        return Ok(match (l, r) {
+                            (_, Some(true)) => Value::Bool(true),
+                            (Some(false), Some(false)) => Value::Bool(false),
+                            _ => Value::Null,
+                        });
+                    }
+                    _ => {}
+                }
+                let l = a.eval(row, params, now)?;
+                let r = b.eval(row, params, now)?;
+                match op {
+                    Op::Add | Op::Sub | Op::Mul | Op::Div | Op::Mod => arith(*op, &l, &r)?,
+                    Op::Eq | Op::Ne | Op::Lt | Op::Le | Op::Gt | Op::Ge => match l.sql_cmp(&r) {
+                        None => Value::Null,
+                        Some(o) => Value::Bool(match op {
+                            Op::Eq => o == Ordering::Equal,
+                            Op::Ne => o != Ordering::Equal,
+                            Op::Lt => o == Ordering::Less,
+                            Op::Le => o != Ordering::Greater,
+                            Op::Gt => o == Ordering::Greater,
+                            Op::Ge => o != Ordering::Less,
+                            _ => unreachable!(),
+                        }),
+                    },
+                    other => return Err(Error::Type(format!("bad binary op {other:?}"))),
+                }
+            }
+            CExpr::Case { arms, else_ } => {
+                for (c, v) in arms {
+                    if truthy(&c.eval(row, params, now)?)? == Some(true) {
+                        return v.eval(row, params, now);
+                    }
+                }
+                match else_ {
+                    Some(e) => e.eval(row, params, now)?,
+                    None => Value::Null,
+                }
+            }
+        })
+    }
+}
+
+/// The partition-routing recipe: how bound values select the partitions a
+/// plan touches. Mirrors the interpreter's `prune_partitions` (which only
+/// prunes on an integer pin of the partition column).
+#[derive(Clone, Debug)]
+pub enum Route {
+    /// Single-partition table: always partition 0.
+    Single,
+    /// `partition_col = <int literal>` — partition precomputed at prepare.
+    Pinned(usize),
+    /// `partition_col = ?i` — partition computed from the bound value.
+    ByParam(usize),
+    /// No pinning conjunct: every partition (writes lock all of them, like
+    /// the interpreter; SELECT plans never compile to this on
+    /// multi-partition tables — those route to the scatter engine instead).
+    All,
+}
+
+impl Route {
+    /// Resolve to a sorted partition list, or `None` when a `ByParam` bind
+    /// is not an integer (the caller falls back to the interpreted path,
+    /// which handles the degenerate cases).
+    pub fn resolve(&self, def: &TableDef, params: &[Value]) -> Option<Vec<usize>> {
+        Some(match self {
+            Route::Single => vec![0],
+            Route::Pinned(p) => vec![*p],
+            Route::ByParam(i) => match params.get(*i) {
+                Some(Value::Int(k)) => vec![def.partition_of_key(*k)],
+                _ => return None,
+            },
+            Route::All => (0..def.num_partitions()).collect(),
+        })
+    }
+}
+
+/// The index access path used to find candidate rows within a partition.
+#[derive(Clone, Debug)]
+pub enum Probe {
+    /// Primary-key point lookup.
+    Pk(CVal),
+    /// Secondary-index equality on schema column `col`.
+    Index { col: usize, val: CVal },
+    /// No usable equality conjunct: scan the routed partitions.
+    Scan,
+}
+
+/// Compiled point/batch UPDATE.
+#[derive(Clone, Debug)]
+pub struct UpdatePlan {
+    /// Catalog key (lowercased table name).
+    pub table: String,
+    pub route: Route,
+    pub probe: Probe,
+    /// Full WHERE re-check (probe candidates may be hash-collision
+    /// superset).
+    pub preds: Vec<Conjunct>,
+    /// `(schema column, value expression)` per SET clause; never touches
+    /// the partition column (those statements stay interpreted).
+    pub sets: Vec<(usize, CExpr)>,
+    /// ORDER BY over plain columns (schema index, ascending).
+    pub order: Vec<(usize, bool)>,
+    pub limit: Option<u64>,
+    /// RETURNING projection: `(schema column, output name)`.
+    pub returning: Option<Vec<(usize, String)>>,
+}
+
+/// Compiled point DELETE.
+#[derive(Clone, Debug)]
+pub struct DeletePlan {
+    pub table: String,
+    pub route: Route,
+    pub probe: Probe,
+    pub preds: Vec<Conjunct>,
+}
+
+/// Compiled single-row INSERT template (also executed per row for prepared
+/// batches).
+#[derive(Clone, Debug)]
+pub struct InsertPlan {
+    pub table: String,
+    /// One expression per schema column (unlisted columns insert NULL).
+    pub row: Vec<CExpr>,
+    /// PK uniqueness must be checked in sibling partitions (PK is not the
+    /// partition key on a multi-partition table). The fast path takes
+    /// *read* latches on the sibling partitions for the check, where the
+    /// interpreter write-locks the whole table.
+    pub cross_partition_pk: bool,
+}
+
+/// Compiled indexed-equality SELECT (the `getREADYtasks` shape). Only
+/// single-partition-routable statements compile — multi-partition reads
+/// belong to the scatter-gather engine.
+#[derive(Clone, Debug)]
+pub struct SelectPlan {
+    pub table: String,
+    pub route: Route,
+    pub probe: Probe,
+    pub preds: Vec<Conjunct>,
+    /// Projection: `(schema column, output name)`.
+    pub cols: Vec<(usize, String)>,
+    pub order: Vec<(usize, bool)>,
+    pub limit: Option<u64>,
+}
+
+/// A compiled physical plan for one fast statement shape.
+#[derive(Clone, Debug)]
+pub enum DmlPlan {
+    Update(UpdatePlan),
+    Delete(DeletePlan),
+    Insert(InsertPlan),
+    Select(SelectPlan),
+}
+
+impl DmlPlan {
+    /// Short tag for diagnostics and `Prepared::describe`.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            DmlPlan::Update(_) => "fast point update",
+            DmlPlan::Delete(_) => "fast point delete",
+            DmlPlan::Insert(_) => "fast insert",
+            DmlPlan::Select(_) => "fast indexed select",
+        }
+    }
+}
+
+/// Classify `stmt` into a fast physical plan, or `None` when it must run
+/// interpreted. `lookup` resolves a table name against the live catalog.
+pub fn compile(
+    stmt: &Statement,
+    lookup: impl Fn(&str) -> Option<std::sync::Arc<TableDef>>,
+) -> Option<DmlPlan> {
+    match stmt {
+        Statement::Update { table, sets, where_, order_by, limit, returning } => {
+            let def = lookup(&table.table)?;
+            compile_update(&def, table, sets, where_, order_by, *limit, returning)
+        }
+        Statement::Delete { table, where_ } => {
+            let def = lookup(&table.table)?;
+            compile_delete(&def, table, where_)
+        }
+        Statement::Insert { table, columns, values } => {
+            let def = lookup(table)?;
+            compile_insert(&def, columns, values)
+        }
+        Statement::Select(s) => {
+            let def = lookup(&s.from.table)?;
+            compile_select(&def, s)
+        }
+        Statement::CreateTable { .. } => None,
+    }
+}
+
+/// Resolve a possibly-qualified column reference against the table schema,
+/// mirroring `Layout::resolve` (case-insensitive, ambiguity → give up).
+fn resolve_col(def: &TableDef, binding: &str, qual: &Option<String>, name: &str) -> Option<usize> {
+    if let Some(q) = qual {
+        if !q.eq_ignore_ascii_case(binding) {
+            return None;
+        }
+    }
+    let mut hit = None;
+    for (i, c) in def.schema.columns.iter().enumerate() {
+        if c.name.eq_ignore_ascii_case(name) {
+            if hit.is_some() {
+                return None; // ambiguous: let the interpreter raise its error
+            }
+            hit = Some(i);
+        }
+    }
+    hit
+}
+
+fn compile_rhs(e: &Expr) -> Option<CVal> {
+    match e {
+        Expr::Lit(v) => Some(CVal::Lit(v.clone())),
+        Expr::Param(i) => Some(CVal::Param(*i)),
+        _ => None,
+    }
+}
+
+fn is_cmp(op: Op) -> bool {
+    matches!(op, Op::Eq | Op::Ne | Op::Lt | Op::Le | Op::Gt | Op::Ge)
+}
+
+fn flip_cmp(op: Op) -> Op {
+    match op {
+        Op::Lt => Op::Gt,
+        Op::Le => Op::Ge,
+        Op::Gt => Op::Lt,
+        Op::Ge => Op::Le,
+        other => other,
+    }
+}
+
+/// Compile a WHERE clause into simple conjuncts; `None` when any conjunct
+/// is not of the `col <cmp> literal-or-param` form.
+fn compile_where(w: Option<&Expr>, def: &TableDef, binding: &str) -> Option<Vec<Conjunct>> {
+    let Some(w) = w else { return Some(Vec::new()) };
+    let mut out = Vec::new();
+    for c in w.conjuncts() {
+        let Expr::Binary(op, a, b) = c else { return None };
+        if !is_cmp(*op) {
+            return None;
+        }
+        let conjunct = match (a.as_ref(), b.as_ref()) {
+            (Expr::Col { table, name }, rhs) => Conjunct {
+                col: resolve_col(def, binding, table, name)?,
+                op: *op,
+                rhs: compile_rhs(rhs)?,
+            },
+            (lhs, Expr::Col { table, name }) => Conjunct {
+                col: resolve_col(def, binding, table, name)?,
+                op: flip_cmp(*op),
+                rhs: compile_rhs(lhs)?,
+            },
+            _ => return None,
+        };
+        out.push(conjunct);
+    }
+    Some(out)
+}
+
+/// Routing recipe from the compiled conjuncts (mirrors `prune_partitions`:
+/// only an integer pin of the partition column prunes).
+fn route_of(def: &TableDef, preds: &[Conjunct]) -> Route {
+    if def.num_partitions() <= 1 {
+        return Route::Single;
+    }
+    if let Some(ci) = def.partition_col_idx() {
+        for c in preds {
+            if c.col == ci && c.op == Op::Eq {
+                match &c.rhs {
+                    CVal::Lit(Value::Int(k)) => return Route::Pinned(def.partition_of_key(*k)),
+                    CVal::Param(i) => return Route::ByParam(*i),
+                    CVal::Lit(_) => {}
+                }
+            }
+        }
+    }
+    Route::All
+}
+
+/// Access-path choice from the compiled conjuncts (mirrors
+/// `index_probe_for`: the first equality pin of an indexed-or-PK column).
+fn probe_of(def: &TableDef, preds: &[Conjunct]) -> Probe {
+    for c in preds {
+        if c.op != Op::Eq {
+            continue;
+        }
+        let name = &def.schema.columns[c.col].name;
+        if def.indexes.iter().any(|x| x.eq_ignore_ascii_case(name)) {
+            return Probe::Index { col: c.col, val: c.rhs.clone() };
+        }
+        if def.pk_idx() == Some(c.col) {
+            return Probe::Pk(c.rhs.clone());
+        }
+    }
+    Probe::Scan
+}
+
+/// Compile a scalar expression. `cols` enables column references (UPDATE
+/// SET reads the old row); INSERT templates pass `None`, since the
+/// interpreter evaluates them against an empty layout.
+fn compile_expr(e: &Expr, cols: Option<(&TableDef, &str)>) -> Option<CExpr> {
+    Some(match e {
+        Expr::Lit(v) => CExpr::Lit(v.clone()),
+        Expr::Param(i) => CExpr::Param(*i),
+        Expr::Col { table, name } => {
+            let (def, binding) = cols?;
+            CExpr::Col(resolve_col(def, binding, table, name)?)
+        }
+        Expr::Func { name, args } if name == "NOW" && args.is_empty() => CExpr::Now,
+        Expr::Unary(op, x) => match op {
+            Op::Not | Op::Neg => CExpr::Unary(*op, Box::new(compile_expr(x, cols)?)),
+            _ => return None,
+        },
+        Expr::Binary(op, a, b) => match op {
+            Op::Add
+            | Op::Sub
+            | Op::Mul
+            | Op::Div
+            | Op::Mod
+            | Op::Eq
+            | Op::Ne
+            | Op::Lt
+            | Op::Le
+            | Op::Gt
+            | Op::Ge
+            | Op::And
+            | Op::Or => CExpr::Binary(
+                *op,
+                Box::new(compile_expr(a, cols)?),
+                Box::new(compile_expr(b, cols)?),
+            ),
+            _ => return None,
+        },
+        Expr::Case { arms, else_ } => CExpr::Case {
+            arms: arms
+                .iter()
+                .map(|(c, v)| Some((compile_expr(c, cols)?, compile_expr(v, cols)?)))
+                .collect::<Option<Vec<_>>>()?,
+            else_: match else_ {
+                Some(x) => Some(Box::new(compile_expr(x, cols)?)),
+                None => None,
+            },
+        },
+        _ => return None,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn compile_update(
+    def: &TableDef,
+    table: &TableRef,
+    sets: &[(String, Expr)],
+    where_: &Option<Expr>,
+    order_by: &[(Expr, bool)],
+    limit: Option<u64>,
+    returning: &Option<Vec<SelectItem>>,
+) -> Option<DmlPlan> {
+    let binding = table.binding();
+    let preds = compile_where(where_.as_ref(), def, binding)?;
+    let mut csets = Vec::with_capacity(sets.len());
+    for (name, e) in sets {
+        // exact-name resolution like the interpreter's executor: a miss
+        // there is a catalog error, so a miss here must fall back.
+        let ci = def.schema.index_of(name)?;
+        if def.partition_col_idx() == Some(ci) {
+            // rewriting the partition key can move rows across partitions;
+            // that machinery stays on the interpreted path
+            return None;
+        }
+        csets.push((ci, compile_expr(e, Some((def, binding)))?));
+    }
+    let mut order = Vec::with_capacity(order_by.len());
+    for (e, asc) in order_by {
+        let Expr::Col { table: q, name } = e else { return None };
+        order.push((resolve_col(def, binding, q, name)?, *asc));
+    }
+    let ret = match returning {
+        None => None,
+        Some(items) => Some(compile_projection(def, binding, items, None)?),
+    };
+    Some(DmlPlan::Update(UpdatePlan {
+        table: def.name.to_lowercase(),
+        route: route_of(def, &preds),
+        probe: probe_of(def, &preds),
+        preds,
+        sets: csets,
+        order,
+        limit,
+        returning: ret,
+    }))
+}
+
+fn compile_delete(def: &TableDef, table: &TableRef, where_: &Option<Expr>) -> Option<DmlPlan> {
+    let binding = table.binding();
+    let preds = compile_where(where_.as_ref(), def, binding)?;
+    Some(DmlPlan::Delete(DeletePlan {
+        table: def.name.to_lowercase(),
+        route: route_of(def, &preds),
+        probe: probe_of(def, &preds),
+        preds,
+    }))
+}
+
+fn compile_insert(def: &TableDef, columns: &[String], values: &[Vec<Expr>]) -> Option<DmlPlan> {
+    if values.len() != 1 {
+        return None;
+    }
+    let schema = &def.schema;
+    let col_indices: Vec<usize> = if columns.is_empty() {
+        (0..schema.len()).collect()
+    } else {
+        columns
+            .iter()
+            .map(|c| schema.index_of(c))
+            .collect::<Option<Vec<_>>>()?
+    };
+    let tuple = &values[0];
+    if tuple.len() != col_indices.len() {
+        return None; // arity error: let the interpreter raise it
+    }
+    let mut row: Vec<CExpr> = (0..schema.len()).map(|_| CExpr::Lit(Value::Null)).collect();
+    for (e, ci) in tuple.iter().zip(&col_indices) {
+        row[*ci] = compile_expr(e, None)?;
+    }
+    let cross_partition_pk = match def.pk_idx() {
+        Some(pk) => def.num_partitions() > 1 && def.partition_col_idx() != Some(pk),
+        None => false,
+    };
+    Some(DmlPlan::Insert(InsertPlan {
+        table: def.name.to_lowercase(),
+        row,
+        cross_partition_pk,
+    }))
+}
+
+fn compile_select(def: &TableDef, s: &SelectStmt) -> Option<DmlPlan> {
+    if !s.joins.is_empty() || !s.group_by.is_empty() || s.having.is_some() {
+        return None;
+    }
+    let binding = s.from.binding();
+    let preds = compile_where(s.where_.as_ref(), def, binding)?;
+    let route = route_of(def, &preds);
+    if matches!(route, Route::All) && def.num_partitions() > 1 {
+        // multi-partition reads belong to the scatter-gather engine
+        return None;
+    }
+    // select aliases are visible to ORDER BY in the interpreter; collect
+    // them so alias-shadowed order keys fall back rather than mis-sort
+    let mut aliases: Vec<&str> = Vec::new();
+    let cols = compile_projection(def, binding, &s.items, Some(&mut aliases))?;
+    let mut order = Vec::with_capacity(s.order_by.len());
+    for (e, asc) in &s.order_by {
+        let Expr::Col { table: q, name } = e else { return None };
+        if q.is_none() && aliases.iter().any(|a| a.eq_ignore_ascii_case(name)) {
+            return None;
+        }
+        order.push((resolve_col(def, binding, q, name)?, *asc));
+    }
+    Some(DmlPlan::Select(SelectPlan {
+        table: def.name.to_lowercase(),
+        route,
+        probe: probe_of(def, &preds),
+        preds,
+        cols,
+        order,
+        limit: s.limit,
+    }))
+}
+
+/// Compile a projection of plain columns / wildcards, mirroring the
+/// interpreter's output naming (alias wins, else the name as written;
+/// wildcards expand to schema order). Aliases are collected into the
+/// caller's sink when one is provided (SELECT needs them for the ORDER BY
+/// alias-shadowing check; UPDATE RETURNING does not).
+fn compile_projection<'a>(
+    def: &TableDef,
+    binding: &str,
+    items: &'a [SelectItem],
+    mut aliases: Option<&mut Vec<&'a str>>,
+) -> Option<Vec<(usize, String)>> {
+    let mut cols = Vec::new();
+    for it in items {
+        match it {
+            SelectItem::Wildcard(q) => {
+                if let Some(q) = q {
+                    if !q.eq_ignore_ascii_case(binding) {
+                        return None;
+                    }
+                }
+                for (ci, c) in def.schema.columns.iter().enumerate() {
+                    cols.push((ci, c.name.clone()));
+                }
+            }
+            SelectItem::Expr { expr: Expr::Col { table: q, name }, alias } => {
+                let ci = resolve_col(def, binding, q, name)?;
+                if let Some(sink) = aliases.as_mut() {
+                    if let Some(a) = alias.as_deref() {
+                        sink.push(a);
+                    }
+                }
+                cols.push((ci, alias.clone().unwrap_or_else(|| name.clone())));
+            }
+            _ => return None,
+        }
+    }
+    Some(cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::sql::parse_prepared;
+    use crate::storage::value::{ColumnType, Schema};
+    use std::sync::Arc;
+
+    fn wq_def() -> Arc<TableDef> {
+        let schema = Schema::of(&[
+            ("taskid", ColumnType::Int),
+            ("workerid", ColumnType::Int),
+            ("status", ColumnType::Str),
+            ("failtries", ColumnType::Int),
+            ("starttime", ColumnType::Float),
+        ]);
+        Arc::new(
+            TableDef::new("workqueue", schema)
+                .partition_by_hash("workerid", 4)
+                .unwrap()
+                .with_primary_key("taskid")
+                .unwrap()
+                .with_index("status")
+                .unwrap(),
+        )
+    }
+
+    fn compile_sql(sql: &str) -> Option<DmlPlan> {
+        let (stmt, _) = parse_prepared(sql).unwrap();
+        compile(&stmt, |_| Some(wq_def()))
+    }
+
+    #[test]
+    fn claim_shape_compiles_to_point_update() {
+        let plan = compile_sql(
+            "UPDATE workqueue SET status = 'RUNNING', starttime = NOW() \
+             WHERE taskid = ? AND status = 'READY' AND workerid = ?",
+        )
+        .expect("claim must classify");
+        let DmlPlan::Update(u) = plan else { panic!("expected update plan") };
+        assert!(matches!(u.probe, Probe::Pk(CVal::Param(0))), "{:?}", u.probe);
+        assert!(matches!(u.route, Route::ByParam(1)), "{:?}", u.route);
+        assert_eq!(u.preds.len(), 3);
+        assert_eq!(u.sets.len(), 2);
+        assert!(u.returning.is_none());
+    }
+
+    #[test]
+    fn get_ready_shape_compiles_to_indexed_select() {
+        let plan = compile_sql(
+            "SELECT taskid, status FROM workqueue \
+             WHERE workerid = ? AND status = 'READY' ORDER BY taskid LIMIT 4",
+        )
+        .expect("getREADYtasks must classify");
+        let DmlPlan::Select(s) = plan else { panic!("expected select plan") };
+        assert!(matches!(s.route, Route::ByParam(0)), "{:?}", s.route);
+        assert!(matches!(s.probe, Probe::Index { col: 2, .. }), "{:?}", s.probe);
+        assert_eq!(s.order, vec![(0, true)]);
+        assert_eq!(s.limit, Some(4));
+        assert_eq!(s.cols.len(), 2);
+        assert_eq!(s.cols[0].1, "taskid");
+    }
+
+    #[test]
+    fn insert_template_compiles_with_cross_partition_pk() {
+        let plan = compile_sql(
+            "INSERT INTO workqueue (taskid, workerid, status) VALUES (?, ?, 'READY')",
+        )
+        .expect("single-row insert must classify");
+        let DmlPlan::Insert(i) = plan else { panic!("expected insert plan") };
+        assert!(i.cross_partition_pk, "pk != partition key on 4 partitions");
+        assert_eq!(i.row.len(), 5, "template covers the whole schema");
+    }
+
+    #[test]
+    fn unsupported_shapes_fall_back() {
+        // OR is not a conjunction of simple predicates
+        assert!(compile_sql(
+            "UPDATE workqueue SET status = 'X' WHERE taskid = ? OR workerid = ?"
+        )
+        .is_none());
+        // IN lists stay interpreted
+        assert!(
+            compile_sql("UPDATE workqueue SET status = 'X' WHERE taskid IN (?, ?)").is_none()
+        );
+        // rewriting the partition column can move rows across partitions
+        assert!(compile_sql("UPDATE workqueue SET workerid = ? WHERE taskid = ?").is_none());
+        // aggregates belong to the scatter engine
+        assert!(compile_sql("SELECT COUNT(*) FROM workqueue WHERE workerid = ?").is_none());
+        // multi-partition scans are the scatter engine's job too
+        assert!(compile_sql("SELECT taskid FROM workqueue WHERE status = ?").is_none());
+        // scalar functions other than NOW() stay interpreted
+        assert!(
+            compile_sql("UPDATE workqueue SET status = UPPER(status) WHERE taskid = ?").is_none()
+        );
+        // multi-row VALUES lists stay interpreted
+        assert!(compile_sql(
+            "INSERT INTO workqueue (taskid, workerid, status) VALUES (1, 1, 'R'), (2, 2, 'R')"
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn order_by_alias_shadowing_falls_back() {
+        // `ORDER BY status` names the alias, which the interpreter
+        // substitutes with `taskid`; the fast path must refuse the shape
+        // rather than sort by the real `status` column.
+        assert!(compile_sql(
+            "SELECT taskid AS status FROM workqueue WHERE workerid = ? ORDER BY status"
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn compiled_case_and_arith_match_interpreter_semantics() {
+        let plan = compile_sql(
+            "UPDATE workqueue SET failtries = failtries + 1, \
+             status = CASE WHEN failtries + 1 >= ? THEN 'FAILED' ELSE 'READY' END \
+             WHERE taskid = ? AND workerid = ?",
+        )
+        .expect("retry bookkeeping must classify");
+        let DmlPlan::Update(u) = plan else { panic!("expected update plan") };
+        let row = vec![
+            Value::Int(7),
+            Value::Int(1),
+            Value::str("RUNNING"),
+            Value::Int(2),
+            Value::Null,
+        ];
+        let params = vec![Value::Int(3), Value::Int(7), Value::Int(1)];
+        // failtries 2 -> 3; 3 >= 3 -> FAILED
+        let (ci0, e0) = &u.sets[0];
+        assert_eq!(*ci0, 3);
+        assert_eq!(e0.eval(&row, &params, 0.0).unwrap(), Value::Int(3));
+        let (ci1, e1) = &u.sets[1];
+        assert_eq!(*ci1, 2);
+        assert_eq!(e1.eval(&row, &params, 0.0).unwrap(), Value::str("FAILED"));
+        // one retry earlier: 1 + 1 < 3 -> READY
+        let row2 = vec![
+            Value::Int(7),
+            Value::Int(1),
+            Value::str("RUNNING"),
+            Value::Int(1),
+            Value::Null,
+        ];
+        assert_eq!(e1.eval(&row2, &params, 0.0).unwrap(), Value::str("READY"));
+    }
+
+    #[test]
+    fn conjuncts_use_sql_3vl() {
+        let plan =
+            compile_sql("UPDATE workqueue SET status = 'X' WHERE taskid = ? AND workerid = ?")
+                .unwrap();
+        let DmlPlan::Update(u) = plan else { panic!() };
+        let row = vec![Value::Int(1), Value::Null, Value::str("R"), Value::Int(0), Value::Null];
+        let params = vec![Value::Int(1), Value::Int(0)];
+        assert!(u.preds[0].matches(&row, &params), "taskid pins");
+        assert!(!u.preds[1].matches(&row, &params), "NULL never matches");
+    }
+}

@@ -13,6 +13,7 @@ pub mod checkpoint;
 pub mod cluster;
 pub mod connector;
 pub mod datanode;
+pub mod dml_plan;
 pub mod partition;
 pub mod prepared;
 pub mod replication;

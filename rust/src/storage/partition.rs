@@ -102,6 +102,30 @@ impl PartitionStore {
         }
     }
 
+    /// Index maintenance for an in-place row replacement: only buckets whose
+    /// key actually changed are touched. On the task-claim hot loop the
+    /// typical update rewrites `status` plus a couple of unindexed columns,
+    /// so every other secondary index is left alone. Shared by
+    /// [`PartitionStore::update`] and [`PartitionStore::update_in_place`].
+    fn index_update(&mut self, slot: Slot, old: &Row, new: &Row) {
+        for (ci, map) in &mut self.secondary {
+            let ok = old.values[*ci].hash_key();
+            let nk = new.values[*ci].hash_key();
+            if ok == nk {
+                continue;
+            }
+            if let Some(v) = map.get_mut(&ok) {
+                if let Some(p) = v.iter().position(|s| *s == slot) {
+                    v.swap_remove(p);
+                }
+                if v.is_empty() {
+                    map.remove(&ok);
+                }
+            }
+            map.entry(nk).or_default().push(slot);
+        }
+    }
+
     /// Insert a validated row; returns its slot.
     pub fn insert(&mut self, row: Row) -> Result<Slot> {
         let row = self.def.schema.coerce_row(row)?;
@@ -143,36 +167,50 @@ impl PartitionStore {
 
     /// Candidate slots where `column == value`, using a secondary index if
     /// one exists. Returns `None` when the column is not indexed (caller
-    /// must scan); `Some(slots)` may contain hash-collision false positives,
-    /// so callers still re-check the predicate.
-    pub fn slots_by_index(&self, col_idx: usize, value: &Value) -> Option<Vec<Slot>> {
+    /// must scan); the borrowed slice may contain hash-collision false
+    /// positives, so callers still re-check the predicate. Borrowing (rather
+    /// than cloning the bucket) matters on the claim loop, where the `READY`
+    /// bucket can span most of a partition.
+    pub fn slots_by_index(&self, col_idx: usize, value: &Value) -> Option<&[Slot]> {
         let (_, map) = self.secondary.iter().find(|(ci, _)| *ci == col_idx)?;
-        Some(map.get(&value.hash_key()).cloned().unwrap_or_default())
+        Some(match map.get(&value.hash_key()) {
+            Some(v) => v.as_slice(),
+            None => &[],
+        })
     }
 
     /// Overwrite the row at `slot` with a validated new row.
     pub fn update(&mut self, slot: Slot, new_row: Row) -> Result<()> {
+        self.update_in_place(slot, new_row).map(|_| ())
+    }
+
+    /// Overwrite the row at `slot` and hand the displaced old row back to
+    /// the caller **without cloning it** (the caller typically keeps it as
+    /// undo state and for change detection). Secondary indexes are only
+    /// rewritten for columns whose value actually changed — the fast DML
+    /// path's point updates flip `status` and leave the rest alone.
+    pub fn update_in_place(&mut self, slot: Slot, new_row: Row) -> Result<Row> {
         let new_row = self.def.schema.coerce_row(new_row)?;
         let old = self
             .rows
-            .get(slot)
-            .and_then(|r| r.clone())
+            .get_mut(slot)
+            .and_then(|r| r.take())
             .ok_or_else(|| Error::Constraint(format!("update of dead slot {slot}")))?;
         // Primary key immutability keeps the index trivially consistent;
         // the workflow engine never rewrites task ids.
         if let (Some(a), Some(b)) = (self.pk_of(&old), self.pk_of(&new_row)) {
             if a != b {
+                self.rows[slot] = Some(old);
                 return Err(Error::Constraint(format!(
                     "primary key is immutable ({a} -> {b})"
                 )));
             }
         }
-        self.index_remove(slot, &old);
+        self.index_update(slot, &old, &new_row);
         self.approx_bytes = self.approx_bytes - old.approx_bytes() + new_row.approx_bytes();
-        self.index_insert(slot, &new_row);
         self.rows[slot] = Some(new_row);
         self.version += 1;
-        Ok(())
+        Ok(old)
     }
 
     /// Delete the row at `slot`; returns the removed row.
@@ -351,6 +389,45 @@ mod tests {
         assert!(q.slot_by_pk(5).is_some());
         // indexes rebuilt
         assert_eq!(q.slots_by_index(2, &Value::str("READY")).unwrap().len(), 9);
+    }
+
+    #[test]
+    fn update_in_place_returns_old_row_and_skips_unchanged_indexes() {
+        let mut p = store();
+        let s0 = p.insert(row(1, 0, "READY")).unwrap();
+        let s1 = p.insert(row(2, 0, "READY")).unwrap();
+        let status_ci = 2;
+        // rewriting an unindexed column must leave the status bucket's
+        // order untouched (no remove+reinsert churn)
+        let before: Vec<Slot> =
+            p.slots_by_index(status_ci, &Value::str("READY")).unwrap().to_vec();
+        let old = p
+            .update_in_place(s0, Row::new(vec![
+                Value::Int(1),
+                Value::Int(7),
+                Value::str("READY"),
+                Value::Float(2.0),
+            ]))
+            .unwrap();
+        assert_eq!(old.values[1], Value::Int(0), "old row handed back");
+        assert_eq!(old.values[3], Value::Float(1.0));
+        let after: Vec<Slot> =
+            p.slots_by_index(status_ci, &Value::str("READY")).unwrap().to_vec();
+        assert_eq!(before, after, "unchanged index key must not be rewritten");
+        // changing the indexed column still moves the slot between buckets
+        p.update_in_place(s0, row(1, 7, "RUNNING")).unwrap();
+        assert_eq!(
+            p.slots_by_index(status_ci, &Value::str("READY")).unwrap(),
+            &[s1][..]
+        );
+        assert_eq!(
+            p.slots_by_index(status_ci, &Value::str("RUNNING")).unwrap(),
+            &[s0][..]
+        );
+        // pk immutability enforced, store left intact on the error
+        assert!(p.update_in_place(s0, row(9, 7, "RUNNING")).is_err());
+        assert_eq!(p.get(s0).unwrap().values[0], Value::Int(1));
+        assert_eq!(p.len(), 2);
     }
 
     #[test]

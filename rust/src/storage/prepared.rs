@@ -26,6 +26,7 @@
 //! position only — table/column names, `LIMIT` counts, and `LIKE` patterns
 //! cannot be parameters.
 
+use crate::storage::dml_plan::DmlPlan;
 use crate::storage::sql::ast::{Expr, SelectItem, SelectStmt, Statement};
 use crate::storage::value::Value;
 use crate::{Error, Result};
@@ -82,15 +83,20 @@ pub struct PreparedPlan {
     /// at prepare time — against the live catalog when prepared through
     /// `DbCluster::prepare`, without partition facts otherwise.
     pub describe: String,
+    /// Compiled physical plan for fast point-DML shapes (see
+    /// [`crate::storage::dml_plan`]); `None` means every execution takes
+    /// the interpreted path. Compiled against the live catalog by
+    /// `DbCluster::prepare`; plans built outside a cluster have none.
+    pub dml: Option<DmlPlan>,
 }
 
 impl PreparedPlan {
     /// Build a plan outside a cluster (tests, offline tooling): the plan
     /// summary is rendered without catalog access, so partition counts and
-    /// pruning targets read as unknown.
+    /// pruning targets read as unknown and no fast DML plan is compiled.
     pub fn new(sql: String, stmt: Statement, params: usize) -> PreparedPlan {
         let describe = crate::query::plan::explain(&stmt, |_| None);
-        PreparedPlan { sql, stmt, params, describe }
+        PreparedPlan { sql, stmt, params, describe, dml: None }
     }
 }
 
@@ -119,6 +125,14 @@ impl Prepared {
     /// The cached parse (placeholders still in place).
     pub fn statement(&self) -> &Statement {
         &self.plan.stmt
+    }
+
+    /// The compiled fast physical plan, when this statement fits one of the
+    /// point-DML shapes (see [`crate::storage::dml_plan`]). The cluster's
+    /// `exec_prepared` consults this to skip the SQL interpreter entirely;
+    /// `None` means every execution binds and runs interpreted.
+    pub fn fast_plan(&self) -> Option<&DmlPlan> {
+        self.plan.dml.as_ref()
     }
 
     /// EXPLAIN-style description of how the engine will execute this

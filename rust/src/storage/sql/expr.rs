@@ -397,7 +397,9 @@ impl Bound {
 }
 
 /// SQL truthiness: Bool→Some(b), Null→None, anything else is a type error.
-fn truthy(v: &Value) -> Result<Option<bool>> {
+/// Shared with the compiled DML evaluator (`storage::dml_plan`), which must
+/// agree with the interpreter on 3VL semantics.
+pub(crate) fn truthy(v: &Value) -> Result<Option<bool>> {
     match v {
         Value::Bool(b) => Ok(Some(*b)),
         Value::Null => Ok(None),
@@ -405,7 +407,10 @@ fn truthy(v: &Value) -> Result<Option<bool>> {
     }
 }
 
-fn arith(op: Op, l: &Value, r: &Value) -> Result<Value> {
+/// Arithmetic with MySQL-style coercions. Shared with the compiled DML
+/// evaluator so `SET failtries = failtries + 1` computes identically on
+/// both execution paths.
+pub(crate) fn arith(op: Op, l: &Value, r: &Value) -> Result<Value> {
     if l.is_null() || r.is_null() {
         return Ok(Value::Null);
     }

@@ -15,12 +15,20 @@ use crate::storage::StatementResult;
 use crate::Result;
 use std::sync::Arc;
 
+/// One queued statement: parsed SQL, or a prepared handle whose binding is
+/// deferred to commit (so a single-statement "transaction" can skip the
+/// AST substitution entirely and take the compiled DML fast path).
+enum TxnStmt {
+    Parsed(Statement),
+    Prepared { p: Prepared, params: Vec<Value> },
+}
+
 /// Builder for an atomic statement batch.
 pub struct TxnBuilder {
     cluster: Arc<DbCluster>,
     node: u32,
     kind: AccessKind,
-    stmts: Vec<Statement>,
+    stmts: Vec<TxnStmt>,
 }
 
 impl TxnBuilder {
@@ -30,26 +38,31 @@ impl TxnBuilder {
 
     /// Add a statement (parsed now so syntax errors surface before commit).
     pub fn stmt(mut self, sql_text: &str) -> Result<TxnBuilder> {
-        self.stmts.push(sql::parse(sql_text)?);
+        self.stmts.push(TxnStmt::Parsed(sql::parse(sql_text)?));
         Ok(self)
     }
 
     /// Add a pre-parsed statement.
     pub fn statement(mut self, s: Statement) -> TxnBuilder {
-        self.stmts.push(s);
+        self.stmts.push(TxnStmt::Parsed(s));
         self
     }
 
     /// Add a prepared statement with its bound parameters (no SQL text is
-    /// rebuilt; the plan's placeholders are substituted with the values).
+    /// rebuilt). Binding is deferred to commit; the arity check still
+    /// happens here so mistakes surface at the call site.
     pub fn prepared(mut self, p: &Prepared, params: &[Value]) -> Result<TxnBuilder> {
-        self.stmts.push(p.bind(params)?);
+        if params.len() != p.param_count() {
+            // surface the same arity error bind would raise
+            p.bind(params)?;
+        }
+        self.stmts.push(TxnStmt::Prepared { p: p.clone(), params: params.to_vec() });
         Ok(self)
     }
 
     /// Add a prepared single-row INSERT template expanded over `rows`.
     pub fn prepared_batch(mut self, p: &Prepared, rows: &[Vec<Value>]) -> Result<TxnBuilder> {
-        self.stmts.push(p.bind_batch(rows)?);
+        self.stmts.push(TxnStmt::Parsed(p.bind_batch(rows)?));
         Ok(self)
     }
 
@@ -61,9 +74,25 @@ impl TxnBuilder {
         self.stmts.is_empty()
     }
 
-    /// Execute all statements atomically.
+    /// Execute all statements atomically. A batch of exactly one prepared
+    /// statement is an auto-commit point operation: it routes through the
+    /// cluster's prepared entry point, where fast-classified shapes skip
+    /// the interpreter (multi-statement batches always run under the union
+    /// 2PL lock set).
     pub fn commit(self) -> Result<Vec<StatementResult>> {
-        self.cluster.exec_txn(self.node, self.kind, &self.stmts)
+        let TxnBuilder { cluster, node, kind, mut stmts } = self;
+        if stmts.len() == 1 && matches!(stmts[0], TxnStmt::Prepared { .. }) {
+            let TxnStmt::Prepared { p, params } = stmts.remove(0) else { unreachable!() };
+            return cluster.exec_prepared(node, kind, &p, &params).map(|r| vec![r]);
+        }
+        let bound: Vec<Statement> = stmts
+            .into_iter()
+            .map(|s| match s {
+                TxnStmt::Parsed(st) => Ok(st),
+                TxnStmt::Prepared { p, params } => p.bind(&params),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        cluster.exec_txn(node, kind, &bound)
     }
 }
 

@@ -1,0 +1,328 @@
+//! Differential property tests for the compiled DML fast path.
+//!
+//! Two clusters share one manual clock and receive the identical statement
+//! stream: one executes through `exec_prepared` (compiled fast plans where
+//! the shape allows), the other through `exec_prepared_interpreted` (the
+//! AST-walking reference executor). Every per-statement result and the full
+//! post-state must match — across partition counts, concurrent claim races,
+//! dead-primary failover, and abort paths. Unsupported shapes must fall
+//! back, observable through the `fast_dml` route counter.
+
+use schaladb::storage::cluster::{ClusterConfig, DbCluster};
+use schaladb::storage::{AccessKind, Value};
+use schaladb::util::clock::{self, ManualClock, SharedClock};
+use schaladb::util::rng::Rng;
+use std::sync::Arc;
+
+const CLAIM: &str = "UPDATE workqueue SET status = 'RUNNING', starttime = NOW() \
+                     WHERE workerid = ? AND status = 'READY' ORDER BY taskid LIMIT 1 \
+                     RETURNING taskid";
+const CLAIM_BY_PK: &str = "UPDATE workqueue SET status = 'RUNNING', starttime = NOW() \
+                           WHERE taskid = ? AND status = 'READY' AND workerid = ?";
+const FINISH: &str = "UPDATE workqueue SET status = 'FINISHED', dur = ? \
+                      WHERE taskid = ? AND workerid = ?";
+const FAIL: &str = "UPDATE workqueue SET failtries = failtries + 1, \
+                    status = CASE WHEN failtries + 1 >= ? THEN 'FAILED' ELSE 'READY' END \
+                    WHERE taskid = ? AND workerid = ?";
+const INSERT: &str = "INSERT INTO workqueue (taskid, workerid, status, failtries, dur) \
+                      VALUES (?, ?, 'READY', 0, ?)";
+const GET_READY: &str = "SELECT taskid, status FROM workqueue \
+                         WHERE workerid = ? AND status = 'READY' ORDER BY taskid LIMIT 3";
+const DELETE: &str = "DELETE FROM workqueue WHERE taskid = ? AND workerid = ?";
+const IN_LIST: &str = "UPDATE workqueue SET dur = ? WHERE taskid IN (?, ?)";
+const BREAK_NOT_NULL: &str = "UPDATE workqueue SET failtries = NULL \
+                              WHERE taskid = ? AND workerid = ?";
+
+fn cluster(parts: usize, clock: SharedClock) -> Arc<DbCluster> {
+    let c = DbCluster::start(ClusterConfig { data_nodes: 2, replication: true, clock }).unwrap();
+    c.exec(&format!(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
+         status TEXT, failtries INT NOT NULL, dur FLOAT, starttime FLOAT) \
+         PARTITION BY HASH(workerid) PARTITIONS {parts} \
+         PRIMARY KEY (taskid) INDEX (status)"
+    ))
+    .unwrap();
+    c
+}
+
+struct Pair {
+    fast: Arc<DbCluster>,
+    reference: Arc<DbCluster>,
+    clock: Arc<ManualClock>,
+}
+
+fn pair(parts: usize) -> Pair {
+    let (shared, manual) = clock::manual(0.0);
+    Pair {
+        fast: cluster(parts, shared.clone()),
+        reference: cluster(parts, shared),
+        clock: manual,
+    }
+}
+
+impl Pair {
+    /// Run one statement on both executors and demand identical outcomes
+    /// (result rows / affected counts, or identical error text).
+    fn exec_both(&self, sql: &str, params: &[Value]) {
+        let pf = self.fast.prepare(sql).unwrap();
+        let pr = self.reference.prepare(sql).unwrap();
+        let a = self.fast.exec_prepared(0, AccessKind::Other, &pf, params);
+        let b = self.reference.exec_prepared_interpreted(0, AccessKind::Other, &pr, params);
+        match (a, b) {
+            (Ok(x), Ok(y)) => assert_eq!(x, y, "result mismatch: {sql} {params:?}"),
+            (Err(x), Err(y)) => assert_eq!(
+                x.to_string(),
+                y.to_string(),
+                "error mismatch: {sql} {params:?}"
+            ),
+            (a, b) => panic!("divergent outcome for {sql} {params:?}: fast={a:?} ref={b:?}"),
+        }
+    }
+
+    /// Compare the full table contents via the shared interpreted read
+    /// path (fair to both sides).
+    fn assert_same_state(&self, ctx: &str) {
+        let q = "SELECT * FROM workqueue ORDER BY taskid";
+        let a = self.fast.query_centralized(q).unwrap();
+        let b = self.reference.query_centralized(q).unwrap();
+        assert_eq!(a, b, "post-state diverged ({ctx})");
+    }
+
+    /// One random point operation mirrored to both executors.
+    fn random_op(&self, rng: &mut Rng, parts: usize, next_id: &mut i64) {
+        self.clock.advance(0.25);
+        let w = rng.index(parts) as i64;
+        let tid = if *next_id > 0 { rng.range(0, *next_id) } else { 0 };
+        let tw = tid % parts as i64;
+        match rng.index(10) {
+            0 | 1 => self.exec_both(CLAIM, &[Value::Int(w)]),
+            2 => self.exec_both(CLAIM_BY_PK, &[Value::Int(tid), Value::Int(tw)]),
+            3 => self.exec_both(
+                FINISH,
+                &[Value::Float(rng.uniform(0.1, 5.0)), Value::Int(tid), Value::Int(tw)],
+            ),
+            4 => self.exec_both(FAIL, &[Value::Int(3), Value::Int(tid), Value::Int(tw)]),
+            5 | 6 => {
+                let id = *next_id;
+                *next_id += 1;
+                self.exec_both(
+                    INSERT,
+                    &[
+                        Value::Int(id),
+                        Value::Int(id % parts as i64),
+                        Value::Float(rng.uniform(0.1, 2.0)),
+                    ],
+                );
+            }
+            7 => self.exec_both(GET_READY, &[Value::Int(w)]),
+            8 => self.exec_both(DELETE, &[Value::Int(tid), Value::Int(tw)]),
+            _ => {
+                // unsupported shape: both sides interpret (fallback parity)
+                let other = rng.range(0, (*next_id).max(1));
+                self.exec_both(
+                    IN_LIST,
+                    &[Value::Float(9.9), Value::Int(tid), Value::Int(other)],
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_path_equals_interpreted_across_partition_counts() {
+    for parts in [1usize, 2, 3, 8] {
+        let p = pair(parts);
+        let mut rng = Rng::new(42 + parts as u64);
+        let mut next_id = 0i64;
+        // seed through the same mirrored path
+        for _ in 0..30 {
+            let id = next_id;
+            next_id += 1;
+            p.exec_both(
+                INSERT,
+                &[Value::Int(id), Value::Int(id % parts as i64), Value::Float(1.0)],
+            );
+        }
+        for _ in 0..250 {
+            p.random_op(&mut rng, parts, &mut next_id);
+        }
+        p.assert_same_state(&format!("{parts} partitions"));
+        // the fast executor actually served the stream; the reference
+        // never touched it
+        assert!(
+            p.fast.route_counts().fast_dml > 0,
+            "fast path unused at {parts} partitions"
+        );
+        assert_eq!(p.reference.route_counts().fast_dml, 0);
+    }
+}
+
+#[test]
+fn abort_paths_leave_identical_state() {
+    let p = pair(4);
+    let mut next_id = 0i64;
+    for _ in 0..12 {
+        let id = next_id;
+        next_id += 1;
+        p.exec_both(INSERT, &[Value::Int(id), Value::Int(id % 4), Value::Float(1.0)]);
+    }
+    // NOT NULL violation aborts the statement on both executors
+    p.exec_both(BREAK_NOT_NULL, &[Value::Int(3), Value::Int(3)]);
+    // duplicate-PK batch insert aborts atomically on both executors
+    let rows: Vec<Vec<Value>> = [100i64, 101, 5]
+        .iter()
+        .map(|i| vec![Value::Int(*i), Value::Int(0), Value::Float(1.0)])
+        .collect();
+    let pf = p.fast.prepare(INSERT).unwrap();
+    let pr = p.reference.prepare(INSERT).unwrap();
+    let a = p.fast.exec_prepared_batch(0, AccessKind::InsertTasks, &pf, &rows);
+    let stmt = pr.bind_batch(&rows).unwrap();
+    let b = p.reference.exec_stmt(0, AccessKind::InsertTasks, &stmt);
+    assert!(a.is_err() && b.is_err(), "duplicate PK must abort both paths");
+    p.assert_same_state("after aborts");
+    // and a successful batch lands identically
+    let ok_rows: Vec<Vec<Value>> = (200..230)
+        .map(|i| vec![Value::Int(i), Value::Int(i % 4), Value::Float(0.5)])
+        .collect();
+    let a = p
+        .fast
+        .exec_prepared_batch(0, AccessKind::InsertTasks, &pf, &ok_rows)
+        .unwrap();
+    let stmt = pr.bind_batch(&ok_rows).unwrap();
+    let b = p.reference.exec_stmt(0, AccessKind::InsertTasks, &stmt).unwrap();
+    assert_eq!(a, b);
+    p.assert_same_state("after batch insert");
+}
+
+#[test]
+fn fast_path_equals_interpreted_under_dead_primary_failover() {
+    let p = pair(4);
+    let mut rng = Rng::new(7);
+    let mut next_id = 0i64;
+    for _ in 0..40 {
+        let id = next_id;
+        next_id += 1;
+        p.exec_both(INSERT, &[Value::Int(id), Value::Int(id % 4), Value::Float(1.0)]);
+    }
+    for _ in 0..60 {
+        p.random_op(&mut rng, 4, &mut next_id);
+    }
+    // identical DDL order means identical placements: kill the same node
+    // on both sides and promote
+    p.fast.kill_node(0).unwrap();
+    p.reference.kill_node(0).unwrap();
+    let a = p.fast.promote_dead_primaries();
+    let b = p.reference.promote_dead_primaries();
+    assert_eq!(a, b, "promotion counts must match");
+    assert!(a > 0, "some primaries lived on node 0");
+    for _ in 0..80 {
+        p.random_op(&mut rng, 4, &mut next_id);
+    }
+    p.assert_same_state("under failover");
+    // revive + heal, keep going
+    p.fast.revive_node(0).unwrap();
+    p.reference.revive_node(0).unwrap();
+    assert_eq!(p.fast.heal().unwrap(), p.reference.heal().unwrap());
+    for _ in 0..40 {
+        p.random_op(&mut rng, 4, &mut next_id);
+    }
+    p.assert_same_state("after heal");
+    assert!(p.fast.route_counts().fast_dml > 0);
+}
+
+#[test]
+fn concurrent_fast_claims_never_double_claim() {
+    let parts = 4usize;
+    let c = cluster(parts, clock::wall());
+    let ins = c.prepare(INSERT).unwrap();
+    let rows: Vec<Vec<Value>> = (0..200)
+        .map(|i| vec![Value::Int(i), Value::Int(i % parts as i64), Value::Float(1.0)])
+        .collect();
+    c.exec_prepared_batch(0, AccessKind::InsertTasks, &ins, &rows).unwrap();
+
+    // 8 threads over 4 partitions: two threads race on every partition
+    let mut handles = Vec::new();
+    for t in 0..8u32 {
+        let c = c.clone();
+        handles.push(std::thread::spawn(move || {
+            let claim = c.prepare(CLAIM).unwrap();
+            let w = (t % parts as u32) as i64;
+            let mut got = Vec::new();
+            loop {
+                let rs = c
+                    .exec_prepared(t, AccessKind::UpdateToRunning, &claim, &[Value::Int(w)])
+                    .unwrap()
+                    .rows();
+                match rs.rows.first() {
+                    Some(r) => got.push(r.values[0].as_i64().unwrap()),
+                    None => break,
+                }
+            }
+            got
+        }));
+    }
+    let mut all: Vec<i64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    assert_eq!(all.len(), 200, "every task claimed");
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len(), 200, "no task claimed twice");
+    assert!(
+        c.route_counts().fast_dml >= 200,
+        "claims must take the compiled fast path"
+    );
+    let rs = c
+        .query_centralized("SELECT COUNT(*) FROM workqueue WHERE status = 'RUNNING'")
+        .unwrap();
+    assert_eq!(rs.rows[0].values[0], Value::Int(200));
+}
+
+#[test]
+fn unsupported_shapes_fall_back_and_the_router_counts_adoption() {
+    let c = cluster(4, clock::wall());
+    let ins = c.prepare(INSERT).unwrap();
+    assert!(ins.fast_plan().is_some(), "single-row insert classifies");
+    for i in 0..8i64 {
+        c.exec_prepared(
+            0,
+            AccessKind::InsertTasks,
+            &ins,
+            &[Value::Int(i), Value::Int(i % 4), Value::Float(1.0)],
+        )
+        .unwrap();
+    }
+    let after_seed = c.route_counts().fast_dml;
+    assert_eq!(after_seed, 8, "each fast insert counts once");
+
+    // OR predicates do not classify: the handle has no fast plan, the
+    // statement still works, and the counter does not move
+    let or_upd = c
+        .prepare("UPDATE workqueue SET dur = ? WHERE taskid = ? OR taskid = ?")
+        .unwrap();
+    assert!(or_upd.fast_plan().is_none(), "OR predicate must not classify");
+    let n = c
+        .exec_prepared(
+            0,
+            AccessKind::Other,
+            &or_upd,
+            &[Value::Float(2.0), Value::Int(1), Value::Int(2)],
+        )
+        .unwrap()
+        .affected();
+    assert_eq!(n, 2);
+    assert_eq!(c.route_counts().fast_dml, after_seed, "fallback must not count");
+
+    // the claim classifies and counts
+    let claim = c.prepare(CLAIM).unwrap();
+    assert!(claim.fast_plan().is_some());
+    let rs = c
+        .exec_prepared(0, AccessKind::UpdateToRunning, &claim, &[Value::Int(1)])
+        .unwrap()
+        .rows();
+    assert_eq!(rs.rows.len(), 1);
+    assert_eq!(c.route_counts().fast_dml, after_seed + 1);
+
+    // interpreted-reference executions never count
+    c.exec_prepared_interpreted(0, AccessKind::UpdateToRunning, &claim, &[Value::Int(2)])
+        .unwrap();
+    assert_eq!(c.route_counts().fast_dml, after_seed + 1);
+}

@@ -147,7 +147,8 @@ fn steering_reads_are_consistent_snapshots_under_writes() {
         .query("SELECT COUNT(*) FROM workqueue WHERE status = 'FINISHED'")
         .unwrap();
     assert_eq!(rs.rows[0].values[0].as_i64().unwrap(), tasks as i64);
-    let (scatter, join, _) = db.route_counts();
+    let counts = db.route_counts();
+    let (scatter, join) = (counts.scatter, counts.snapshot_join);
     assert!(
         scatter >= steering_iters * 2,
         "steering aggregates must take the scatter path ({scatter} < {steering_iters} * 2)"

@@ -119,9 +119,15 @@ fn scatter_gather_equals_centralized_across_partition_counts() {
         let c = cluster(parts);
         assert_equivalent(&c, &format!("{parts} partitions"));
         if parts > 1 {
-            let (scatter, join, _) = c.route_counts();
-            assert!(scatter > 0, "aggregate queries must scatter at {parts} partitions");
-            assert!(join > 0, "join queries must snapshot-join at {parts} partitions");
+            let counts = c.route_counts();
+            assert!(
+                counts.scatter > 0,
+                "aggregate queries must scatter at {parts} partitions"
+            );
+            assert!(
+                counts.snapshot_join > 0,
+                "join queries must snapshot-join at {parts} partitions"
+            );
         }
     }
 }
