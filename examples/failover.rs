@@ -14,7 +14,7 @@ use schaladb::coordinator::{ActivitySpec, DChironEngine, EngineConfig, Operator,
 use schaladb::storage::replication::AvailabilityManager;
 use std::sync::atomic::Ordering;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let tasks = 120;
     let wf = WorkflowSpec::new("failover_demo", tasks)
         .activity(ActivitySpec::new("phase1", Operator::Map, Payload::Sleep { mean_secs: 2.0 }))

@@ -10,7 +10,7 @@ use schaladb::coordinator::{ActivitySpec, DChironEngine, EngineConfig, Operator,
 use schaladb::metrics;
 use schaladb::steering::SteeringClient;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // A parameter sweep: activity 1 computes y = a x^2 + b x + c per tuple,
     // activity 2 filters out small results, activity 3 gathers per group.
     let wf = WorkflowSpec::new("quickstart_sweep", 24)

@@ -21,17 +21,18 @@ use schaladb::storage::AccessKind;
 use schaladb::workload;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let conditions: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(96);
 
     if !runtime::artifacts_available() {
-        anyhow::bail!(
+        return Err(format!(
             "artifacts not found in {:?} — run `make artifacts` first",
             runtime::default_artifact_dir()
-        );
+        )
+        .into());
     }
 
     // L1/L2: PJRT service + riser runners over the AOT artifacts.
@@ -145,7 +146,7 @@ fn main() -> anyhow::Result<()> {
     println!("database size         : {} KB", report.db_bytes / 1024);
 
     if report.executed_tasks < report.total_tasks as u64 {
-        anyhow::bail!("not all tasks executed");
+        return Err("not all tasks executed".into());
     }
     Ok(())
 }

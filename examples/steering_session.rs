@@ -10,7 +10,7 @@ use schaladb::coordinator::{DChironEngine, EngineConfig};
 use schaladb::steering::SteeringClient;
 use schaladb::workload;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let conditions = 64;
     let engine = DChironEngine::new(EngineConfig {
         workers: 3,

@@ -6,8 +6,11 @@
 //! `cargo bench --bench storage_micro`
 
 use schaladb::metrics::Histogram;
-use schaladb::storage::cluster::ClusterConfig;
+use schaladb::storage::checkpoint::checkpoint_node;
+use schaladb::storage::cluster::{ClusterConfig, DurabilityConfig};
+use schaladb::storage::replication::AvailabilityManager;
 use schaladb::storage::{AccessKind, DbCluster, Value};
+use schaladb::util::clock;
 use schaladb::util::fmt_secs;
 use std::sync::Arc;
 use std::time::Instant;
@@ -442,6 +445,151 @@ fn main() {
         benches.push(fast_bench);
         benches.push(interp_limit);
         benches.push(fast_limit);
+    }
+
+    // durability & recovery: (a) group-commit throughput against per-op
+    // flushing on the point-insert commit stream, (b) time-to-rejoin after
+    // a kill + process restart (checkpoint load, WAL replay, redo-ship
+    // catch-up, hand-off). Emits BENCH_recovery.json.
+    {
+        let bench_dir = std::path::PathBuf::from("target/bench-recovery");
+        let _ = std::fs::remove_dir_all(&bench_dir);
+        let durable_wq = |tag: &str, group: usize, seed_rows: usize| -> Arc<DbCluster> {
+            let c = DbCluster::start(ClusterConfig {
+                data_nodes: 2,
+                replication: true,
+                clock: clock::wall(),
+                durability: Some(DurabilityConfig {
+                    dir: bench_dir.join(tag),
+                    group_commit: group,
+                }),
+            })
+            .unwrap();
+            c.exec(&format!(
+                "CREATE TABLE workqueue (taskid INT NOT NULL, actid INT, workerid INT NOT NULL, \
+                 status TEXT, dur FLOAT, starttime FLOAT, endtime FLOAT) \
+                 PARTITION BY HASH(workerid) PARTITIONS {workers} \
+                 PRIMARY KEY (taskid) INDEX (status)"
+            ))
+            .unwrap();
+            let ins = c
+                .prepare(
+                    "INSERT INTO workqueue (taskid, actid, workerid, status, dur) \
+                     VALUES (?, ?, ?, 'READY', ?)",
+                )
+                .unwrap();
+            let rows_bound: Vec<Vec<Value>> = (0..seed_rows)
+                .map(|i| {
+                    vec![
+                        Value::Int(i as i64),
+                        Value::Int((i % 3) as i64),
+                        Value::Int((i % workers) as i64),
+                        Value::Float(1.0),
+                    ]
+                })
+                .collect();
+            for chunk in rows_bound.chunks(512) {
+                if !chunk.is_empty() {
+                    c.exec_prepared_batch(0, AccessKind::InsertTasks, &ins, chunk).unwrap();
+                }
+            }
+            c
+        };
+
+        // (a) group commit vs per-op flush: one-commit point inserts
+        let insert_rate = |tag: &str, group: usize| -> f64 {
+            let c = durable_wq(tag, group, 0);
+            let p = c
+                .prepare(
+                    "INSERT INTO workqueue (taskid, actid, workerid, status, dur) \
+                     VALUES (?, 1, ?, 'READY', 1.0)",
+                )
+                .unwrap();
+            let n = it(4_000);
+            let t0 = Instant::now();
+            for i in 0..n {
+                c.exec_prepared(
+                    0,
+                    AccessKind::InsertTasks,
+                    &p,
+                    &[Value::Int(i as i64), Value::Int((i % workers) as i64)],
+                )
+                .unwrap();
+            }
+            n as f64 / t0.elapsed().as_secs_f64()
+        };
+        let per_op_flush = insert_rate("gc1", 1);
+        let grouped = insert_rate("gc64", 64);
+        let gc_speedup = grouped / per_op_flush;
+        println!(
+            "group commit (64) vs per-op flush: {grouped:.0}/s vs {per_op_flush:.0}/s \
+             -> {gc_speedup:.2}x\n"
+        );
+
+        // (b) time-to-rejoin: checkpoint, keep writing, kill, restart,
+        // sweep until the node serves again
+        let c = durable_wq("rejoin", 8, rows);
+        let am = AvailabilityManager::new(c.clone());
+        checkpoint_node(&c, 0).unwrap();
+        checkpoint_node(&c, 1).unwrap();
+        let upd = c
+            .prepare("UPDATE workqueue SET dur = dur + 1.0 WHERE taskid = ? AND workerid = ?")
+            .unwrap();
+        let touch = |n: usize| {
+            for i in 0..n {
+                let tid = (i % rows.max(1)) as i64;
+                c.exec_prepared(
+                    0,
+                    AccessKind::Other,
+                    &upd,
+                    &[Value::Int(tid), Value::Int(tid % workers as i64)],
+                )
+                .unwrap();
+            }
+        };
+        touch(it(2_000)); // WAL tail past the checkpoints
+        c.kill_node(1).unwrap();
+        am.sweep().unwrap();
+        touch(it(1_000)); // writes the rejoiner must catch up on
+        let t0 = Instant::now();
+        let start = c.restart_node(1).unwrap();
+        let mut shipped = 0u64;
+        let mut reseeded = 0usize;
+        let mut done = false;
+        for _ in 0..100 {
+            let r = am.sweep().unwrap();
+            shipped += r.shipped_ops;
+            reseeded += r.reseeded_parts;
+            if r.rejoined > 0 {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "rejoin did not complete within 100 sweeps");
+        let rejoin_secs = t0.elapsed().as_secs_f64();
+        println!(
+            "time-to-rejoin ({} partitions restored, {} wal records replayed locally, \
+             {shipped} shipped, {reseeded} reseeded): {}\n",
+            start.partitions,
+            start.replayed,
+            fmt_secs(rejoin_secs)
+        );
+
+        std::fs::create_dir_all("target/bench-results").ok();
+        let obj = schaladb::util::json::Json::obj()
+            .set("wq_rows", rows as f64)
+            .set("partitions", workers as f64)
+            .set("inserts_per_sec_per_op_flush", per_op_flush)
+            .set("inserts_per_sec_group_commit_64", grouped)
+            .set("group_commit_speedup", gc_speedup)
+            .set("rejoin_secs", rejoin_secs)
+            .set("rejoin_partitions", start.partitions as f64)
+            .set("rejoin_local_replayed", start.replayed as f64)
+            .set("rejoin_shipped_ops", shipped as f64)
+            .set("rejoin_reseeded_parts", reseeded as f64);
+        std::fs::write("target/bench-results/BENCH_recovery.json", obj.to_string()).unwrap();
+        println!("json: target/bench-results/BENCH_recovery.json");
+        let _ = std::fs::remove_dir_all(&bench_dir);
     }
 
     // scatter-gather vs centralized: the steering analytics that motivated

@@ -88,6 +88,7 @@ impl ChironEngine {
             data_nodes: 1,
             replication: false,
             clock: clock::wall(),
+            durability: None,
         })?;
         schema::create_schema(&db, 1)?;
         schema::register_nodes(&db, cfg.workers, cfg.threads_per_worker)?;

@@ -6,7 +6,7 @@ use crate::coordinator::payload::{Payload, RunnerRegistry};
 use crate::coordinator::supervisor::{IdGen, Supervisor};
 use crate::coordinator::worker::{WorkerConfig, WorkerCounters, WorkerNode};
 use crate::coordinator::{schema, workflow::WorkflowSpec};
-use crate::storage::cluster::ClusterConfig;
+use crate::storage::cluster::{ClusterConfig, DurabilityConfig};
 use crate::storage::connector::{assign_links, Connector};
 use crate::storage::stats::{AccessKind, AccessStat};
 use crate::storage::DbCluster;
@@ -39,6 +39,14 @@ pub struct EngineConfig {
     /// Secondary supervisor heartbeat timeout in wall seconds.
     pub heartbeat_timeout_secs: f64,
     pub seed: u64,
+    /// When > 0, the engine runs a background availability sweeper at this
+    /// cadence: dead-primary promotion, replica healing, and rejoin
+    /// catch-up all happen automatically while the workflow runs. 0
+    /// disables it (tests that drive sweeps explicitly).
+    pub availability_sweep_secs: f64,
+    /// Durable-logging configuration passed through to the cluster
+    /// (per-partition WAL segments + checkpoints; `None` = in-memory).
+    pub durability: Option<DurabilityConfig>,
 }
 
 impl Default for EngineConfig {
@@ -54,6 +62,8 @@ impl Default for EngineConfig {
             supervisor_poll_secs: 0.002,
             heartbeat_timeout_secs: 0.5,
             seed: 42,
+            availability_sweep_secs: 0.0,
+            durability: None,
         }
     }
 }
@@ -179,6 +189,7 @@ impl DChironEngine {
             data_nodes: cfg.data_nodes,
             replication: cfg.replication,
             clock: clock::wall(),
+            durability: cfg.durability.clone(),
         })?;
         schema::create_schema(&db, cfg.workers)?;
         schema::register_nodes(&db, cfg.workers, cfg.threads_per_worker)?;
@@ -257,6 +268,16 @@ impl DChironEngine {
                     })
                     .expect("spawn secondary supervisor"),
             );
+        }
+
+        // Availability sweeper: promotes, heals, and drives rejoins in the
+        // background so data-node failures self-repair mid-run.
+        if cfg.availability_sweep_secs > 0.0 {
+            threads.push(failover::run_availability_loop(
+                db.clone(),
+                cfg.availability_sweep_secs,
+                done.clone(),
+            ));
         }
 
         // Worker nodes.

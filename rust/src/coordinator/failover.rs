@@ -1,13 +1,20 @@
-//! Supervisor failover: heartbeats and secondary takeover.
+//! Supervisor failover: heartbeats and secondary takeover — plus the
+//! engine-side availability loop for the data tier.
 //!
 //! The primary supervisor updates its heartbeat row on every poll. The
 //! secondary watches that row; when it goes stale past the timeout it
-//! rebuilds the dependency graph from the database ([`Supervisor::
-//! rebuild_from_db`]) and becomes the active supervisor — the paper's
-//! "secondary supervisor eliminates the single point of failure".
+//! rebuilds the dependency graph from the database
+//! (`Supervisor::rebuild_from_db`) and becomes the active supervisor — the
+//! paper's "secondary supervisor eliminates the single point of failure".
+//!
+//! [`run_availability_loop`] is the data-tier counterpart: a background
+//! sweeper that promotes backups of dead data nodes, heals stale replicas,
+//! and drives restarted nodes through the rejoin state machine while the
+//! workflow keeps executing.
 
 use crate::coordinator::supervisor::{IdGen, Supervisor};
 use crate::coordinator::workflow::WorkflowSpec;
+use crate::storage::replication::AvailabilityManager;
 use crate::storage::{AccessKind, DbCluster, Value};
 use crate::Result;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -150,6 +157,33 @@ pub fn run_secondary_loop(
     }
 }
 
+/// Background availability sweeper for the data tier: periodically
+/// promote / heal / rejoin until `done` flips. Returns the join handle so
+/// the engine can collect it with its other threads.
+pub fn run_availability_loop(
+    db: Arc<DbCluster>,
+    interval_secs: f64,
+    done: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("availability".into())
+        .spawn(move || {
+            let am = AvailabilityManager::new(db);
+            while !done.load(Ordering::SeqCst) {
+                match am.sweep() {
+                    Ok(r) => {
+                        if r.promoted > 0 || r.healed > 0 || r.rejoined > 0 {
+                            log::info!("availability sweep: {r:?}");
+                        }
+                    }
+                    Err(e) => log::warn!("availability sweep: {e}"),
+                }
+                std::thread::sleep(std::time::Duration::from_secs_f64(interval_secs));
+            }
+        })
+        .expect("spawn availability loop")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,5 +222,33 @@ mod tests {
             .query(&format!("SELECT status FROM node WHERE nodeid = {PRIMARY_NODE_ROW}"))
             .unwrap();
         assert_eq!(rs.rows[0].values[0], Value::str("DOWN"));
+    }
+
+    /// Kill a data node mid-run with the background availability loop on:
+    /// the sweeper promotes its backups and the workflow still completes.
+    #[test]
+    fn availability_loop_repairs_data_node_failure_mid_run() {
+        let tasks = 24;
+        let wf = WorkflowSpec::new("av_loop", tasks)
+            .activity(ActivitySpec::new("a1", Operator::Map, Payload::Sleep { mean_secs: 2.0 }))
+            .activity(ActivitySpec::new("a2", Operator::Map, Payload::Sleep { mean_secs: 2.0 }));
+        let engine = DChironEngine::new(EngineConfig {
+            workers: 2,
+            threads_per_worker: 2,
+            time_scale: 0.005, // 10ms tasks
+            supervisor_poll_secs: 0.002,
+            availability_sweep_secs: 0.002,
+            ..Default::default()
+        });
+        let running = engine.start(wf, vec![vec![]; tasks]).unwrap();
+        let db = running.db.clone();
+        std::thread::sleep(std::time::Duration::from_millis(25));
+        db.kill_node(1).unwrap();
+        let report = running.join().unwrap();
+        assert_eq!(report.executed_tasks, tasks as u64 * 2);
+        let rs = db.query("SELECT status FROM workflow").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::str("FINISHED"));
+        // the loop promoted node 1's primaries while workers kept claiming
+        assert!(db.cluster_epoch() > 0, "promotion must have opened a new epoch");
     }
 }

@@ -3,13 +3,13 @@
 //! Two shapes, both taken by every auto-commit SELECT that the router in
 //! [`DbCluster`](crate::storage::cluster::DbCluster) deems eligible:
 //!
-//! - **scatter-gather** ([`scatter_gather`]): join-free SELECTs. Each
+//! - **scatter-gather** (`scatter_gather`): join-free SELECTs. Each
 //!   (pruned) partition runs the partial plan on the scan pool — filter,
 //!   then per-group [`AggState`] partials or a filtered/top-k row set —
 //!   and the coordinator merges partials and finishes with the shared
 //!   HAVING/ORDER BY/LIMIT/project tail. Only partial states cross the
 //!   partition boundary, not rows.
-//! - **snapshot-join** ([`snapshot_join`]): SELECTs with joins. Every
+//! - **snapshot-join** (`snapshot_join`): SELECTs with joins. Every
 //!   involved partition is scanned in parallel with that table's
 //!   single-table WHERE conjuncts pushed into the scan; the relational
 //!   pipeline (`run_select`) then runs once at the coordinator.

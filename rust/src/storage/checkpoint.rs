@@ -1,10 +1,22 @@
 //! On-disk checkpoints and recovery.
 //!
-//! The paper runs the DBMS "in-memory ... with occasional on-disk
-//! checkpoints". A checkpoint serializes the catalog (table definitions +
-//! partitioning) and every partition's rows to a directory; recovery
-//! rebuilds a fresh cluster from it. Format is the same line encoding the
-//! WAL uses, so the two durability paths share code.
+//! Two granularities share one line encoding (the WAL's):
+//!
+//! 1. **Whole-cluster checkpoints** ([`checkpoint`] / [`recover`]): the
+//!    original export/import path — serialize the catalog and every table's
+//!    rows to a directory, rebuild a fresh cluster from it. Still the right
+//!    tool for backups and migrations.
+//! 2. **Per-partition fuzzy checkpoints** ([`checkpoint_node`]): the
+//!    durability path. Each hosted partition replica is dumped on its own —
+//!    slot-preserving rows plus the partition's LSN (`version`), epoch and
+//!    slab capacity — under nothing more than that partition's read latch
+//!    (no 2PL freeze; "fuzzy" across partitions, consistent within one).
+//!    Cutting a partition checkpoint truncates its WAL segment, so the
+//!    retained redo tail stays bounded. Recovery loads the checkpoint and
+//!    replays the tail (`DbCluster::restart_node`).
+//!
+//! Checkpoints are incremental per partition: a partition whose version
+//! already matches its on-disk checkpoint is skipped.
 
 use crate::storage::cluster::{ClusterConfig, DbCluster};
 use crate::storage::table_def::{Partitioning, TableDef};
@@ -106,6 +118,158 @@ pub fn recover(dir: &Path, config: ClusterConfig) -> Result<Arc<DbCluster>> {
     Ok(cluster)
 }
 
+// ---------- per-partition fuzzy checkpoints (the durability path) ----------
+
+/// Outcome of one [`checkpoint_node`] pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NodeCheckpointReport {
+    /// Partition checkpoints (re)written this pass.
+    pub written: usize,
+    /// Partitions skipped because their on-disk checkpoint already covers
+    /// the current version (the incremental rule).
+    pub skipped: usize,
+}
+
+/// A loaded per-partition checkpoint.
+pub struct PartitionCheckpoint {
+    pub def: TableDef,
+    pub pidx: usize,
+    /// Partition LSN at the cut.
+    pub version: u64,
+    /// Epoch fence at the cut.
+    pub epoch: u64,
+    /// Slab capacity at the cut (holes included).
+    pub cap: usize,
+    /// Live rows with their slots.
+    pub rows: Vec<(usize, Row)>,
+}
+
+/// Checkpoint file name of one partition replica inside a node directory.
+pub fn partition_ckpt_name(table: &str, pidx: usize) -> String {
+    format!("{}.p{pidx}.ckpt", table.to_lowercase())
+}
+
+/// WAL segment file name of one partition replica inside a node directory.
+pub fn partition_wal_name(table: &str, pidx: usize) -> String {
+    format!("{}.p{pidx}.wal", table.to_lowercase())
+}
+
+/// Cut incremental, fuzzy checkpoints of every partition replica hosted by
+/// `node_id`, into the node's durability directory. Each partition is
+/// dumped under its own read latch (workers keep claiming throughout — no
+/// global freeze), written to a temp file and renamed into place, and its
+/// WAL segment is truncated up to the checkpointed LSN.
+pub fn checkpoint_node(cluster: &DbCluster, node_id: u32) -> Result<NodeCheckpointReport> {
+    let d = cluster
+        .durability()
+        .ok_or_else(|| Error::Engine("checkpoint_node requires a durability dir".into()))?;
+    let dir = d.dir.join(format!("node{node_id}"));
+    std::fs::create_dir_all(&dir)?;
+    let node = cluster
+        .node(node_id)
+        .ok_or_else(|| Error::Unavailable(format!("no node {node_id}")))?
+        .clone();
+    let mut report = NodeCheckpointReport::default();
+    let mut keys = node.hosted_keys();
+    keys.sort();
+    for (table, pidx) in keys {
+        let store = node.partition_even_if_dead(&table, pidx)?;
+        let fname = dir.join(partition_ckpt_name(&table, pidx));
+        let dumped = {
+            let g = store.read().unwrap();
+            if read_ckpt_version(&fname) == Some(g.version) {
+                None // incremental: nothing changed since the last cut
+            } else {
+                let (cap, rows) = g.snapshot_slotted();
+                Some((g.def().clone(), g.version, g.epoch, cap, rows))
+            }
+            // read latch drops here: the dump below runs without it
+        };
+        let Some((def, version, epoch, cap, rows)) = dumped else {
+            report.skipped += 1;
+            continue;
+        };
+        let tmp = dir.join(format!("{}.tmp", partition_ckpt_name(&table, pidx)));
+        {
+            let f = std::fs::File::create(&tmp)?;
+            let mut w = BufWriter::new(f);
+            writeln!(w, "{}", def_header(&def))?;
+            writeln!(w, "{pidx}\x1f{version}\x1f{epoch}\x1f{cap}")?;
+            for (slot, row) in &rows {
+                let vals: Vec<String> = row.values.iter().map(encode_value).collect();
+                writeln!(w, "{slot}\t{}", vals.join("\t"))?;
+            }
+            w.flush()?;
+        }
+        std::fs::rename(&tmp, &fname)?;
+        // the cut: redo at or below `version` is covered by the checkpoint
+        node.wal.lock().unwrap().truncate_upto(&table, pidx, version)?;
+        report.written += 1;
+    }
+    Ok(report)
+}
+
+/// Load one per-partition checkpoint file.
+pub fn load_partition_checkpoint(path: &Path) -> Result<PartitionCheckpoint> {
+    let f = std::fs::File::open(path)?;
+    let mut lines = BufReader::new(f).lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::Parse(format!("empty partition checkpoint {path:?}")))??;
+    let def = parse_def_header(&header)?;
+    let meta = lines
+        .next()
+        .ok_or_else(|| Error::Parse(format!("partition checkpoint missing meta {path:?}")))??;
+    let parts: Vec<&str> = meta.split('\x1f').collect();
+    if parts.len() != 4 {
+        return Err(Error::Parse(format!("bad partition checkpoint meta: {meta}")));
+    }
+    let pidx: usize = parts[0]
+        .parse()
+        .map_err(|e| Error::Parse(format!("bad ckpt pidx: {e}")))?;
+    let version: u64 = parts[1]
+        .parse()
+        .map_err(|e| Error::Parse(format!("bad ckpt version: {e}")))?;
+    let epoch: u64 = parts[2]
+        .parse()
+        .map_err(|e| Error::Parse(format!("bad ckpt epoch: {e}")))?;
+    let cap: usize = parts[3]
+        .parse()
+        .map_err(|e| Error::Parse(format!("bad ckpt cap: {e}")))?;
+    let ncols = def.schema.len();
+    let mut rows = Vec::new();
+    for line in lines {
+        let line = line?;
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split('\t');
+        let slot: usize = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Parse("checkpoint row missing slot".into()))?;
+        let vals = it.map(decode_value).collect::<Result<Vec<_>>>()?;
+        if vals.len() != ncols {
+            return Err(Error::Parse(format!(
+                "checkpoint row arity {} != {ncols} in {path:?}",
+                vals.len()
+            )));
+        }
+        rows.push((slot, Row::new(vals)));
+    }
+    Ok(PartitionCheckpoint { def, pidx, version, epoch, cap, rows })
+}
+
+/// Version recorded in an existing partition checkpoint (the incremental
+/// skip check); `None` when the file is missing or unreadable.
+fn read_ckpt_version(path: &Path) -> Option<u64> {
+    let f = std::fs::File::open(path).ok()?;
+    let mut lines = BufReader::new(f).lines();
+    let _header = lines.next()?.ok()?;
+    let meta = lines.next()?.ok()?;
+    meta.split('\x1f').nth(1)?.parse().ok()
+}
+
 fn cluster_def(cluster: &DbCluster, table: &str) -> Result<TableDefView> {
     // The cluster doesn't expose TableDef directly; reconstruct what the
     // header needs from a probing SELECT plus the catalog surface we do
@@ -181,15 +345,12 @@ fn parse_def_header(h: &str) -> Result<TableDef> {
     Ok(def)
 }
 
-// Row is referenced by the doc comment narrative; silence unused import on
-// some cfgs.
-#[allow(unused)]
-fn _t(_r: Row) {}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::storage::cluster::DurabilityConfig;
     use crate::storage::value::Value;
+    use crate::util::clock;
 
     fn tmpdir(tag: &str) -> std::path::PathBuf {
         let d = std::env::temp_dir().join(format!("schaladb-ckpt-{tag}-{}", std::process::id()));
@@ -250,6 +411,61 @@ mod tests {
     }
 
     #[test]
+    fn partition_checkpoints_are_incremental_and_slot_exact() {
+        let dir = tmpdir("partial");
+        let c = DbCluster::start(ClusterConfig {
+            data_nodes: 2,
+            replication: true,
+            clock: clock::wall(),
+            durability: Some(DurabilityConfig { dir: dir.clone(), group_commit: 4 }),
+        })
+        .unwrap();
+        c.exec(
+            "CREATE TABLE wq (taskid INT NOT NULL, wid INT NOT NULL, status TEXT) \
+             PARTITION BY HASH(wid) PARTITIONS 2 PRIMARY KEY (taskid)",
+        )
+        .unwrap();
+        for i in 0..20 {
+            c.execute(&format!(
+                "INSERT INTO wq (taskid, wid, status) VALUES ({i}, {}, 'READY')",
+                i % 2
+            ))
+            .unwrap();
+        }
+        // a hole so the slot-preserving format has something to preserve
+        c.execute("DELETE FROM wq WHERE taskid = 4").unwrap();
+
+        let r = checkpoint_node(&c, 0).unwrap();
+        assert!(r.written > 0);
+        assert_eq!(r.skipped, 0);
+        // second pass with no writes in between: everything skips
+        let r2 = checkpoint_node(&c, 0).unwrap();
+        assert_eq!(r2.written, 0);
+        assert_eq!(r2.skipped, r.written);
+        // a write dirties exactly one partition
+        c.execute("UPDATE wq SET status = 'RUNNING' WHERE taskid = 7").unwrap();
+        let r3 = checkpoint_node(&c, 0).unwrap();
+        assert_eq!(r3.written + r3.skipped, r.written);
+        assert!(r3.written >= 1);
+
+        // the file round-trips with slots, version, epoch and capacity
+        let node_dir = dir.join("node0");
+        let mut found = false;
+        for e in std::fs::read_dir(&node_dir).unwrap() {
+            let p = e.unwrap().path();
+            if p.extension().map_or(false, |x| x == "ckpt") {
+                let ck = load_partition_checkpoint(&p).unwrap();
+                assert_eq!(ck.def.name, "wq");
+                assert!(ck.cap >= ck.rows.len());
+                assert!(ck.version > 0);
+                found = true;
+            }
+        }
+        assert!(found, "node0 must have at least one partition checkpoint");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn header_roundtrip() {
         let def = TableDef::new(
             "t",
@@ -273,5 +489,6 @@ mod tests {
     fn bad_headers_rejected() {
         assert!(parse_def_header("no-separators").is_err());
         assert!(parse_def_header("t\x1fbad-col\x1f-\x1f-\x1f").is_err());
+        assert!(load_partition_checkpoint(Path::new("/nonexistent/x.ckpt")).is_err());
     }
 }

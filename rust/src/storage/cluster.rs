@@ -11,7 +11,8 @@
 use crate::query::engine::{self as query_engine, TableSnapshots};
 use crate::query::plan::{self as query_plan, ScatterPlan, TableInfo};
 use crate::query::pool::ScanPool;
-use crate::storage::datanode::DataNode;
+use crate::storage::checkpoint;
+use crate::storage::datanode::{DataNode, NodeState};
 use crate::storage::dml_plan::{
     self, DeletePlan, DmlPlan, InsertPlan, Probe, SelectPlan, UpdatePlan,
 };
@@ -23,14 +24,26 @@ use crate::storage::sql::{self, Expr, SelectItem, SelectStmt, Statement, TableRe
 use crate::storage::stats::{AccessKind, StatsRegistry};
 use crate::storage::table_def::TableDef;
 use crate::storage::value::{Column, Row, Schema, Value};
-use crate::storage::wal::LogOp;
+use crate::storage::wal::{encode_value, read_segment_file, LogOp, NodeWal};
 use crate::storage::{ResultSet, StatementResult};
 use crate::util::clock::{self, SharedClock};
 use crate::{Error, Result};
 use rustc_hash::FxHashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::{Arc, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::Instant;
+
+/// Durable-logging parameters: where WAL segments and partition
+/// checkpoints live, and how commits batch their sink flushes.
+#[derive(Clone)]
+pub struct DurabilityConfig {
+    /// Data directory; each node logs under `<dir>/node<id>/`.
+    pub dir: PathBuf,
+    /// Group-commit window: flush the buffered WAL sinks once every this
+    /// many commits (1 = flush per commit).
+    pub group_commit: usize,
+}
 
 /// Cluster construction parameters.
 #[derive(Clone)]
@@ -42,11 +55,21 @@ pub struct ClusterConfig {
     pub replication: bool,
     /// Time source for `NOW()` and timestamps.
     pub clock: SharedClock,
+    /// When set, committed redo is logged to per-partition WAL segment
+    /// files (group-committed) and per-partition checkpoints become
+    /// available — the substrate of `DbCluster::restart_node`. `None`
+    /// keeps the WAL in memory only (tests, benchmarks).
+    pub durability: Option<DurabilityConfig>,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        ClusterConfig { data_nodes: 2, replication: true, clock: clock::wall() }
+        ClusterConfig {
+            data_nodes: 2,
+            replication: true,
+            clock: clock::wall(),
+            durability: None,
+        }
     }
 }
 
@@ -92,6 +115,18 @@ pub struct RouteCounts {
     pub fast_dml: u64,
 }
 
+/// What [`DbCluster::restart_node`] reconstructed locally before the
+/// catch-up phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RejoinStart {
+    /// Hosted partition replicas that restarted (all of them, empty).
+    pub partitions: usize,
+    /// Replicas restored from a per-partition checkpoint.
+    pub from_checkpoint: usize,
+    /// WAL records replayed on top of the checkpoints.
+    pub replayed: u64,
+}
+
 /// The cluster facade.
 pub struct DbCluster {
     nodes: Vec<Arc<DataNode>>,
@@ -99,6 +134,11 @@ pub struct DbCluster {
     pub clock: SharedClock,
     pub stats: Arc<StatsRegistry>,
     replication: bool,
+    durability: Option<DurabilityConfig>,
+    /// Cluster epoch: bumped on every failover promotion. Committed redo
+    /// records carry the epoch they committed under; replicas fence
+    /// applies from older epochs (see `PartitionStore::apply_redo`).
+    epoch: AtomicU64,
     place_cursor: AtomicUsize,
     /// Shared plan cache: statement text → prepared plan. Every client of
     /// the cluster (supervisors, workers via connectors, steering) shares
@@ -139,8 +179,14 @@ struct ExecCtx<'a> {
     index: FxHashMap<(String, usize, Role), usize>,
     placements: FxHashMap<String, Arc<TableMeta>>,
     now: f64,
-    /// Redo ops of this transaction, with undo info.
-    applied: Vec<(LogOp, Undo)>,
+    /// Redo ops of this transaction — `(partition LSN after apply, op,
+    /// undo)`.
+    applied: Vec<(u64, LogOp, Undo)>,
+    /// Version of each touched primary partition before the transaction
+    /// first mutated it. A rollback restores these, keeping the partition
+    /// LSN sequence dense (aborted work never consumes LSNs) and the
+    /// primary/backup versions in lockstep.
+    pre_versions: FxHashMap<(String, usize), u64>,
 }
 
 /// Inverse of an applied primary mutation.
@@ -181,6 +227,17 @@ impl<'a> ExecCtx<'a> {
         self.index.contains_key(&(table.to_string(), pidx, role))
     }
 
+    /// Remember the primary partition's version before its first mutation
+    /// in this transaction (rollback restores it — see `pre_versions`).
+    fn note_pre_version(&mut self, table: &str, pidx: usize) -> Result<()> {
+        let key = (table.to_string(), pidx);
+        if !self.pre_versions.contains_key(&key) {
+            let v = self.store(table, pidx, Role::Primary)?.version;
+            self.pre_versions.insert(key, v);
+        }
+        Ok(())
+    }
+
     fn ectx(&self) -> EvalCtx {
         EvalCtx { now: self.now }
     }
@@ -195,18 +252,45 @@ impl DbCluster {
         if config.replication && config.data_nodes < 2 {
             return Err(Error::Catalog("replication needs >= 2 data nodes".into()));
         }
-        let nodes = (0..config.data_nodes as u32).map(|i| Arc::new(DataNode::new(i))).collect();
+        let nodes: Vec<Arc<DataNode>> =
+            (0..config.data_nodes as u32).map(|i| Arc::new(DataNode::new(i))).collect();
+        if let Some(d) = &config.durability {
+            for n in &nodes {
+                let ndir = d.dir.join(format!("node{}", n.id));
+                // A *fresh* cluster is authoritative: stale segments and
+                // checkpoints from a previous process under the same dir
+                // would interleave two unrelated LSN histories. (Cold-start
+                // recovery of a whole cluster from its partition
+                // checkpoints is a ROADMAP open item; per-node recovery
+                // goes through `restart_node`, which never reaches here.)
+                let _ = std::fs::remove_dir_all(&ndir);
+                std::fs::create_dir_all(&ndir)?;
+                n.attach_durability(ndir, d.group_commit);
+            }
+        }
         Ok(Arc::new(DbCluster {
             nodes,
             catalog: RwLock::new(FxHashMap::default()),
             clock: config.clock,
             stats: Arc::new(StatsRegistry::new()),
             replication: config.replication,
+            durability: config.durability,
+            epoch: AtomicU64::new(0),
             place_cursor: AtomicUsize::new(0),
             plans: RwLock::new(FxHashMap::default()),
             pool: OnceLock::new(),
             routes: RouteCounters::default(),
         }))
+    }
+
+    /// The durability configuration this cluster runs with, if any.
+    pub fn durability(&self) -> Option<&DurabilityConfig> {
+        self.durability.as_ref()
+    }
+
+    /// Current cluster epoch (bumped on every failover promotion).
+    pub fn cluster_epoch(&self) -> u64 {
+        self.epoch.load(AtomicOrdering::SeqCst)
     }
 
     /// The scan pool backing scatter-gather execution (lazily created).
@@ -403,13 +487,24 @@ impl DbCluster {
                 cat.insert(name, Arc::new(TableMeta { def: meta.def.clone(), placements }));
             }
         }
+        if promoted > 0 {
+            // A promotion opens a new epoch: anything a stale replica logged
+            // before the failover must not clobber post-promotion writes.
+            self.epoch.fetch_add(1, AtomicOrdering::SeqCst);
+        }
         promoted
     }
 
     /// Re-seed stale replicas on revived nodes from the current primaries,
     /// restoring full redundancy after a failure. Returns partitions healed.
+    ///
+    /// The re-seed is **slot-preserving** (`snapshot_slotted`): the backup
+    /// reproduces the primary's slab layout, holes included, so the two
+    /// replicas keep making identical canonical slot choices and
+    /// slot-addressed redo stays applicable on both sides.
     pub fn heal(&self) -> Result<usize> {
         let mut healed = 0;
+        let epoch = self.cluster_epoch();
         let cat = self.catalog.read().unwrap();
         for meta in cat.values() {
             for (pidx, pl) in meta.placements.iter().enumerate() {
@@ -422,19 +517,261 @@ impl DbCluster {
                 }
                 let ps = pn.partition(&meta.def.name, pidx)?;
                 let bs = bn.partition(&meta.def.name, pidx)?;
-                let (pv, rows) = {
+                let (pv, cap, rows) = {
                     let g = ps.read().unwrap();
-                    (g.version, g.snapshot_rows())
+                    let (cap, rows) = g.snapshot_slotted();
+                    (g.version, cap, rows)
                 };
                 let mut bg = bs.write().unwrap();
                 if bg.version != pv || bg.len() != rows.len() {
-                    bg.load_rows(rows)?;
+                    bg.load_slotted(cap, rows)?;
                     bg.version = pv;
+                    bg.epoch = epoch;
+                    // the backup's redo tail restarts at the seeded LSN
+                    bn.wal.lock().unwrap().reset_segment(&meta.def.name, pidx, pv);
                     healed += 1;
                 }
             }
         }
         Ok(healed)
+    }
+
+    // ---------- online recovery: restart + rejoin ----------
+
+    /// Simulate a **process restart** of a dead node and enter the rejoin
+    /// state machine. Unlike [`DbCluster::revive_node`] (a transient outage
+    /// with memory intact), this wipes the node's in-memory partitions and
+    /// rebuilds what it can locally:
+    ///
+    /// 1. every hosted replica restarts empty;
+    /// 2. with a durability dir, its latest per-partition checkpoint is
+    ///    loaded (slot-preserving, with the LSN/epoch of the cut);
+    /// 3. its WAL segment file is replayed on top, in LSN order, stopping
+    ///    cleanly at a torn tail.
+    ///
+    /// The node is then `Rejoining`: it serves nothing until an
+    /// availability sweep drives the bounded redo-ship catch-up from the
+    /// current primaries and flips it back to `Alive`
+    /// (`AvailabilityManager::sweep` → `DbCluster::rejoin_final_cut`).
+    /// Workers keep claiming tasks throughout — reads and writes stay on
+    /// the promoted replicas until the hand-off.
+    pub fn restart_node(&self, id: u32) -> Result<RejoinStart> {
+        let node = self
+            .node(id)
+            .ok_or_else(|| Error::Unavailable(format!("no node {id}")))?
+            .clone();
+        if node.state() != NodeState::Dead {
+            return Err(Error::Engine(format!(
+                "restart_node({id}): node must be dead, is {:?}",
+                node.state()
+            )));
+        }
+        node.begin_rejoin();
+        let ndir = self.durability.as_ref().map(|d| d.dir.join(format!("node{id}")));
+        // A restart loses the in-memory WAL buffers: start from a fresh
+        // NodeWal over the same directory.
+        {
+            let mut w = node.wal.lock().unwrap();
+            *w = match (&ndir, &self.durability) {
+                (Some(dir), Some(d)) => NodeWal::with_dir(dir.clone(), d.group_commit),
+                _ => NodeWal::new(),
+            };
+        }
+        let mut report = RejoinStart::default();
+        let mut keys = node.hosted_keys();
+        keys.sort();
+        for (table, pidx) in keys {
+            let store = node.partition_even_if_dead(&table, pidx)?;
+            let def = store.read().unwrap().def().clone();
+            let mut g = store.write().unwrap();
+            *g = PartitionStore::new(def);
+            report.partitions += 1;
+            if let Some(dir) = &ndir {
+                let ckpt = dir.join(checkpoint::partition_ckpt_name(&table, pidx));
+                if ckpt.exists() {
+                    let ck = checkpoint::load_partition_checkpoint(&ckpt)?;
+                    g.load_slotted(ck.cap, ck.rows)?;
+                    g.version = ck.version;
+                    g.epoch = ck.epoch;
+                    report.from_checkpoint += 1;
+                }
+                let walp = dir.join(checkpoint::partition_wal_name(&table, pidx));
+                let mut recs = read_segment_file(&walp)?;
+                recs.sort_by_key(|r| r.lsn);
+                for rec in recs {
+                    match g.apply_redo(&rec) {
+                        Ok(true) => report.replayed += 1,
+                        Ok(false) => {}
+                        // gap or fence: local history ends here, the rest
+                        // arrives via the redo-ship catch-up
+                        Err(_) => break,
+                    }
+                }
+                node.wal.lock().unwrap().reset_segment(&table, pidx, g.version);
+            }
+        }
+        Ok(report)
+    }
+
+    /// One opportunistic catch-up round for a rejoining node: for every
+    /// hosted partition, copy the serving replica's retained redo tail
+    /// (brief wal lock, no partition latch held during the apply) and
+    /// replay it locally. Returns the number of records shipped. The last
+    /// stretch — and anything the tail cannot cover — is handled by
+    /// [`DbCluster::rejoin_final_cut`].
+    pub(crate) fn rejoin_catchup_round(&self, id: u32) -> Result<u64> {
+        let node = self
+            .node(id)
+            .ok_or_else(|| Error::Unavailable(format!("no node {id}")))?
+            .clone();
+        if node.state() != NodeState::Rejoining {
+            return Ok(0);
+        }
+        let mut shipped = 0u64;
+        for (table, pidx) in node.hosted_keys() {
+            let Ok(meta) = self.meta(&table) else { continue };
+            let pl = &meta.placements[pidx];
+            let Ok((_, src_node, _)) = self.replica_store(&meta, pidx, pl, false) else {
+                continue; // no serving replica right now; the sweep retries
+            };
+            if src_node == id {
+                continue;
+            }
+            let store = node.partition_even_if_dead(&table, pidx)?;
+            let myv = store.read().unwrap().version;
+            let tail = self
+                .node(src_node)
+                .and_then(|n| n.wal.lock().unwrap().tail_since(&table, pidx, myv));
+            let Some(recs) = tail else { continue };
+            if recs.is_empty() {
+                continue;
+            }
+            let mut g = store.write().unwrap();
+            for rec in recs {
+                match g.apply_redo(&rec) {
+                    Ok(true) => shipped += 1,
+                    Ok(false) => {}
+                    Err(_) => break,
+                }
+            }
+        }
+        Ok(shipped)
+    }
+
+    /// The rejoin hand-off. Takes a read latch on the serving replica of
+    /// **every** partition the rejoining node hosts (canonical order, so
+    /// this cannot deadlock against the 2PL executor), finishes each
+    /// partition — remaining redo tail when the segment covers it, full
+    /// slot-preserving re-seed otherwise — stamps the current epoch, and
+    /// flips the node to `Alive` before releasing the latches. Commits
+    /// blocked on those latches resume with the node serving and in sync.
+    ///
+    /// Returns `(records shipped, partitions re-seeded)`.
+    pub(crate) fn rejoin_final_cut(&self, id: u32) -> Result<(u64, usize)> {
+        let node = self
+            .node(id)
+            .ok_or_else(|| Error::Unavailable(format!("no node {id}")))?
+            .clone();
+        if node.state() != NodeState::Rejoining {
+            return Err(Error::Engine(format!("node {id} is not rejoining")));
+        }
+        let epoch = self.cluster_epoch();
+        // (table, pidx, serving replica) — `None` for a sole-replica
+        // partition (no backup, primary is the rejoiner): there is no peer
+        // to catch up from, and the local recovery *is* the authoritative
+        // copy, so the hand-off must not wedge on it.
+        type SrcItem = (String, usize, Option<(Arc<RwLock<PartitionStore>>, u32)>);
+        let mut items: Vec<SrcItem> = Vec::new();
+        for (table, pidx) in node.hosted_keys() {
+            let meta = self.meta(&table)?;
+            let pl = &meta.placements[pidx];
+            if pl.primary == id && pl.backup.is_none() {
+                items.push((table, pidx, None));
+                continue;
+            }
+            let (src, src_node, _) = self.replica_store(&meta, pidx, pl, false)?;
+            if src_node == id {
+                return Err(Error::Engine(format!(
+                    "rejoining node {id} is still listed as serving {table}[{pidx}]"
+                )));
+            }
+            items.push((table, pidx, Some((src, src_node))));
+        }
+        items.sort_by(|a, b| (a.0.to_lowercase(), a.1).cmp(&(b.0.to_lowercase(), b.1)));
+        let src_guards: Vec<Option<RwLockReadGuard<'_, PartitionStore>>> = items
+            .iter()
+            .map(|e| e.2.as_ref().map(|(s, _)| s.read().unwrap()))
+            .collect();
+        let mut shipped = 0u64;
+        let mut reseeded = 0usize;
+        for (i, (table, pidx, src)) in items.iter().enumerate() {
+            let mystore = node.partition_even_if_dead(table, *pidx)?;
+            let mut mine = mystore.write().unwrap();
+            if let (Some(srcg), Some((_, src_node))) = (&src_guards[i], src) {
+                if mine.version != srcg.version {
+                    let tail = self
+                        .node(*src_node)
+                        .and_then(|n| n.wal.lock().unwrap().tail_since(table, *pidx, mine.version));
+                    if let Some(recs) = tail {
+                        for rec in recs {
+                            match mine.apply_redo(&rec) {
+                                Ok(true) => shipped += 1,
+                                Ok(false) => {}
+                                Err(_) => break,
+                            }
+                        }
+                    }
+                }
+                if mine.version != srcg.version || mine.len() != srcg.len() {
+                    // the tail could not close the gap: full re-seed
+                    let (cap, rows) = srcg.snapshot_slotted();
+                    mine.load_slotted(cap, rows)?;
+                    mine.version = srcg.version;
+                    reseeded += 1;
+                }
+            }
+            mine.epoch = epoch;
+            node.wal.lock().unwrap().reset_segment(table, *pidx, mine.version);
+        }
+        node.finish_rejoin(epoch);
+        drop(src_guards);
+        // Fresh durable baseline: the in-memory segments were rebased, so
+        // cut checkpoints now and let them truncate the on-disk tails.
+        if self.durability.is_some() {
+            if let Err(e) = checkpoint::checkpoint_node(self, id) {
+                log::warn!("post-rejoin checkpoint of node {id} failed: {e}");
+            }
+        }
+        Ok((shipped, reseeded))
+    }
+
+    /// Canonical, order-independent serialization of every table's
+    /// committed rows (read from the serving replicas). Two clusters fed
+    /// the identical committed stream — e.g. a kill/rejoin survivor and a
+    /// never-killed twin — must produce byte-equal fingerprints; the chaos
+    /// tests enforce exactly that.
+    pub fn fingerprint(&self) -> Result<String> {
+        let mut out = String::new();
+        for table in self.tables() {
+            let meta = self.meta(&table)?;
+            let mut lines: Vec<String> = Vec::new();
+            for (pidx, pl) in meta.placements.iter().enumerate() {
+                let (store, _, _) = self.replica_store(&meta, pidx, pl, false)?;
+                let g = store.read().unwrap();
+                for (_, row) in g.iter() {
+                    let vals: Vec<String> = row.values.iter().map(encode_value).collect();
+                    lines.push(vals.join("\t"));
+                }
+            }
+            lines.sort();
+            out.push_str(&table);
+            out.push('\n');
+            for l in lines {
+                out.push_str(&l);
+                out.push('\n');
+            }
+        }
+        Ok(out)
     }
 
     // ---------- prepared statements ----------
@@ -720,6 +1057,7 @@ impl DbCluster {
             .iter()
             .map(|(w, s)| if *w { Guard::W(s.write().unwrap()) } else { Guard::R(s.read().unwrap()) })
             .collect();
+        let pre_versions = fast_pre_versions(&guards, &targets);
 
         // Match phase: probe candidates under the held latches, re-checking
         // the full predicate (index buckets may contain hash collisions).
@@ -759,7 +1097,7 @@ impl DbCluster {
         // Apply phase: one in-place update per matched row on the primary,
         // mirrored synchronously to the backup; the displaced old row is
         // kept (moved, not cloned) as undo state.
-        let mut applied: Vec<(usize, Slot, Row, Arc<Row>)> = Vec::new();
+        let mut applied: Vec<(usize, Slot, Row, Arc<Row>, u64)> = Vec::new();
         let mut failure: Option<Error> = None;
         for (ti, slot, _) in &matches {
             let t = &targets[*ti];
@@ -786,6 +1124,7 @@ impl DbCluster {
                 .and_then(|s| s.update_in_place(*slot, new_arc.as_ref().clone()))
             {
                 Ok(old) => {
+                    let lsn = store_of(&guards, t.prim).version;
                     let mut backup_err = None;
                     if let Some(bi) = t.backup {
                         if let Err(e) = store_of_mut(&mut guards, bi)
@@ -804,7 +1143,7 @@ impl DbCluster {
                         failure = Some(e);
                         break;
                     }
-                    applied.push((*ti, *slot, old, new_arc));
+                    applied.push((*ti, *slot, old, new_arc, lsn));
                 }
                 Err(e) => {
                     failure = Some(e);
@@ -813,7 +1152,7 @@ impl DbCluster {
             }
         }
         if let Some(e) = failure {
-            for (ti, slot, old, _) in applied.into_iter().rev() {
+            for (ti, slot, old, _, _) in applied.into_iter().rev() {
                 let t = &targets[ti];
                 if let Some(bi) = t.backup {
                     store_of_mut(&mut guards, bi)
@@ -828,6 +1167,7 @@ impl DbCluster {
                         panic!("fast-path rollback failed: {e2} (original error: {e})")
                     });
             }
+            fast_restore_versions(&mut guards, &pre_versions);
             return Err(Error::TxnAborted(e.to_string()));
         }
 
@@ -836,7 +1176,7 @@ impl DbCluster {
                 let columns: Vec<String> = cols.iter().map(|(_, name)| name.clone()).collect();
                 let rows: Vec<Row> = applied
                     .iter()
-                    .map(|(_, _, _, new)| {
+                    .map(|(_, _, _, new, _)| {
                         Row::new(cols.iter().map(|(ci, _)| new.values[*ci].clone()).collect())
                     })
                     .collect();
@@ -846,13 +1186,18 @@ impl DbCluster {
         };
         // Redo ops share the applied row via `Arc`; the WAL append happens
         // after the latches drop, like the interpreted commit.
-        let ops: Vec<LogOp> = applied
+        let ops: Vec<(u64, LogOp)> = applied
             .iter()
-            .map(|(ti, slot, _, new)| LogOp::Update {
-                table: p.table.clone(),
-                pidx: targets[*ti].pidx,
-                slot: *slot,
-                row: new.clone(),
+            .map(|(ti, slot, _, new, lsn)| {
+                (
+                    *lsn,
+                    LogOp::Update {
+                        table: p.table.clone(),
+                        pidx: targets[*ti].pidx,
+                        slot: *slot,
+                        row: new.clone(),
+                    },
+                )
             })
             .collect();
         drop(guards);
@@ -873,6 +1218,7 @@ impl DbCluster {
             .iter()
             .map(|(w, s)| if *w { Guard::W(s.write().unwrap()) } else { Guard::R(s.read().unwrap()) })
             .collect();
+        let pre_versions = fast_pre_versions(&guards, &targets);
 
         // Victims in ascending slot order per partition: matches the
         // interpreted scan and keeps slab free-list evolution (and thus
@@ -890,12 +1236,13 @@ impl DbCluster {
             victims[start..].sort_unstable_by_key(|(_, s)| *s);
         }
 
-        let mut applied: Vec<(usize, Slot, Row)> = Vec::new();
+        let mut applied: Vec<(usize, Slot, Row, u64)> = Vec::new();
         let mut failure: Option<Error> = None;
         for (ti, slot) in &victims {
             let t = &targets[*ti];
             match store_of_mut(&mut guards, t.prim).and_then(|s| s.delete(*slot)) {
                 Ok(old) => {
+                    let lsn = store_of(&guards, t.prim).version;
                     let mut backup_err = None;
                     if let Some(bi) = t.backup {
                         if let Err(e) =
@@ -906,14 +1253,14 @@ impl DbCluster {
                     }
                     if let Some(e) = backup_err {
                         store_of_mut(&mut guards, t.prim)
-                            .and_then(|s| s.insert(old.clone()).map(|_| ()))
+                            .and_then(|s| s.insert_at(*slot, old.clone()))
                             .unwrap_or_else(|e2| {
                                 panic!("fast-path rollback failed: {e2} (original error: {e})")
                             });
                         failure = Some(e);
                         break;
                     }
-                    applied.push((*ti, *slot, old));
+                    applied.push((*ti, *slot, old, lsn));
                 }
                 Err(e) => {
                     failure = Some(e);
@@ -922,39 +1269,34 @@ impl DbCluster {
             }
         }
         if let Some(e) = failure {
-            // Reverse order re-inserts pop the slab free list LIFO, landing
-            // every row back in its original slot (asserted, like the
-            // interpreted rollback).
-            for (ti, slot, old) in applied.into_iter().rev() {
+            // Slot-addressed re-inserts land every row back exactly where
+            // it was, like the interpreted rollback.
+            for (ti, slot, old, _) in applied.into_iter().rev() {
                 let t = &targets[ti];
                 if let Some(bi) = t.backup {
-                    let got = store_of_mut(&mut guards, bi)
-                        .and_then(|s| s.insert(old.clone()))
+                    store_of_mut(&mut guards, bi)
+                        .and_then(|s| s.insert_at(slot, old.clone()))
                         .unwrap_or_else(|e2| {
                             panic!("fast-path rollback failed: {e2} (original error: {e})")
                         });
-                    if got != slot {
-                        panic!("fast-path rollback slot mismatch {got} != {slot}");
-                    }
                 }
-                let got = store_of_mut(&mut guards, t.prim)
-                    .and_then(|s| s.insert(old))
+                store_of_mut(&mut guards, t.prim)
+                    .and_then(|s| s.insert_at(slot, old))
                     .unwrap_or_else(|e2| {
                         panic!("fast-path rollback failed: {e2} (original error: {e})")
                     });
-                if got != slot {
-                    panic!("fast-path rollback slot mismatch {got} != {slot}");
-                }
             }
+            fast_restore_versions(&mut guards, &pre_versions);
             return Err(Error::TxnAborted(e.to_string()));
         }
 
-        let ops: Vec<LogOp> = applied
+        let ops: Vec<(u64, LogOp)> = applied
             .iter()
-            .map(|(ti, slot, _)| LogOp::Delete {
-                table: p.table.clone(),
-                pidx: targets[*ti].pidx,
-                slot: *slot,
+            .map(|(ti, slot, _, lsn)| {
+                (
+                    *lsn,
+                    LogOp::Delete { table: p.table.clone(), pidx: targets[*ti].pidx, slot: *slot },
+                )
             })
             .collect();
         let n = applied.len();
@@ -1002,13 +1344,14 @@ impl DbCluster {
             .iter()
             .map(|(w, s)| if *w { Guard::W(s.write().unwrap()) } else { Guard::R(s.read().unwrap()) })
             .collect();
+        let pre_versions = fast_pre_versions(&guards, &targets);
         let mut target_of: Vec<Option<usize>> = vec![None; def.num_partitions()];
         for (ti, t) in targets.iter().enumerate() {
             target_of[t.pidx] = Some(ti);
         }
         let pk_ci = def.pk_idx();
 
-        let mut applied: Vec<(usize, Slot, Arc<Row>)> = Vec::new();
+        let mut applied: Vec<(usize, Slot, Arc<Row>, u64)> = Vec::new();
         let mut failure: Option<Error> = None;
         'rows: for (pidx, row) in &built {
             if p.cross_partition_pk {
@@ -1033,32 +1376,26 @@ impl DbCluster {
             let arc = Arc::new(row.clone());
             match store_of_mut(&mut guards, t.prim).and_then(|s| s.insert(arc.as_ref().clone())) {
                 Ok(slot) => {
+                    let lsn = store_of(&guards, t.prim).version;
                     if let Some(bi) = t.backup {
-                        match store_of_mut(&mut guards, bi)
-                            .and_then(|s| s.insert(arc.as_ref().clone()))
+                        // slot-addressed apply: canonical allocation means
+                        // the backup lands the row in the same slot, or
+                        // divergence surfaces right here
+                        if let Err(e) = store_of_mut(&mut guards, bi)
+                            .and_then(|s| s.insert_at(slot, arc.as_ref().clone()))
                         {
-                            Ok(got) => {
-                                if got != slot {
+                            store_of_mut(&mut guards, t.prim)
+                                .and_then(|s| s.delete(slot).map(|_| ()))
+                                .unwrap_or_else(|e2| {
                                     panic!(
-                                        "replica divergence on {}[{pidx}]: {got} != {slot}",
-                                        p.table
-                                    );
-                                }
-                            }
-                            Err(e) => {
-                                store_of_mut(&mut guards, t.prim)
-                                    .and_then(|s| s.delete(slot).map(|_| ()))
-                                    .unwrap_or_else(|e2| {
-                                        panic!(
-                                            "fast-path rollback failed: {e2} (original error: {e})"
-                                        )
-                                    });
-                                failure = Some(e);
-                                break 'rows;
-                            }
+                                        "fast-path rollback failed: {e2} (original error: {e})"
+                                    )
+                                });
+                            failure = Some(e);
+                            break 'rows;
                         }
                     }
-                    applied.push((ti, slot, arc));
+                    applied.push((ti, slot, arc, lsn));
                 }
                 Err(e) => {
                     failure = Some(e);
@@ -1067,7 +1404,7 @@ impl DbCluster {
             }
         }
         if let Some(e) = failure {
-            for (ti, slot, _) in applied.into_iter().rev() {
+            for (ti, slot, _, _) in applied.into_iter().rev() {
                 let t = &targets[ti];
                 if let Some(bi) = t.backup {
                     store_of_mut(&mut guards, bi)
@@ -1082,16 +1419,22 @@ impl DbCluster {
                         panic!("fast-path rollback failed: {e2} (original error: {e})")
                     });
             }
+            fast_restore_versions(&mut guards, &pre_versions);
             return Err(Error::TxnAborted(e.to_string()));
         }
 
-        let ops: Vec<LogOp> = applied
+        let ops: Vec<(u64, LogOp)> = applied
             .iter()
-            .map(|(ti, slot, row)| LogOp::Insert {
-                table: p.table.clone(),
-                pidx: targets[*ti].pidx,
-                slot: *slot,
-                row: row.clone(),
+            .map(|(ti, slot, row, lsn)| {
+                (
+                    *lsn,
+                    LogOp::Insert {
+                        table: p.table.clone(),
+                        pidx: targets[*ti].pidx,
+                        slot: *slot,
+                        row: row.clone(),
+                    },
+                )
             })
             .collect();
         let n = applied.len();
@@ -1189,27 +1532,31 @@ impl DbCluster {
         Ok(Some(StatementResult::Rows(ResultSet { columns, rows })))
     }
 
-    /// Append committed redo ops to the owning nodes' WALs (after latches
-    /// drop). Shared by the interpreted commit and every fast executor.
-    fn append_committed(&self, ops: Vec<LogOp>) -> Result<()> {
-        for op in ops {
+    /// Append one commit's redo records — `(partition LSN, op)` pairs — to
+    /// the WAL segments of **every alive node hosting the partition**
+    /// (primary and backup both log, as NDB fragments do), after latches
+    /// drop. Shared by the interpreted commit and every fast executor; this
+    /// is the commit stream the group-commit window batches.
+    fn append_committed(&self, ops: Vec<(u64, LogOp)>) -> Result<()> {
+        if ops.is_empty() {
+            return Ok(());
+        }
+        let epoch = self.cluster_epoch();
+        let mut per_node: FxHashMap<u32, Vec<(u64, LogOp)>> = FxHashMap::default();
+        for (lsn, op) in ops {
             let meta = self.meta(op.table())?;
-            let pidx = match &op {
-                LogOp::Insert { pidx, .. }
-                | LogOp::Update { pidx, .. }
-                | LogOp::Delete { pidx, .. } => *pidx,
-            };
-            let pl = &meta.placements[pidx];
-            if let Some(n) = self.node(pl.primary) {
-                if n.is_alive() {
-                    n.log(op)?;
-                    continue;
+            let pl = &meta.placements[op.pidx()];
+            for nid in [Some(pl.primary), pl.backup].into_iter().flatten() {
+                if let Some(n) = self.node(nid) {
+                    if n.is_alive() {
+                        per_node.entry(nid).or_default().push((lsn, op.clone()));
+                    }
                 }
             }
-            if let Some(b) = pl.backup.and_then(|b| self.node(b)) {
-                if b.is_alive() {
-                    b.log(op)?;
-                }
+        }
+        for (nid, nops) in per_node {
+            if let Some(n) = self.node(nid) {
+                n.log_commit(epoch, &nops)?;
             }
         }
         Ok(())
@@ -1476,6 +1823,7 @@ impl DbCluster {
             placements,
             now: self.clock.now(),
             applied: Vec::new(),
+            pre_versions: FxHashMap::default(),
         };
 
         // Execute statements against locked primaries, collecting undo info.
@@ -1493,7 +1841,7 @@ impl DbCluster {
 
         if let Some(e) = failed {
             // Rollback: undo primary mutations in reverse order.
-            let undos: Vec<Undo> = ctx.applied.drain(..).map(|(_, u)| u).rev().collect();
+            let undos: Vec<Undo> = ctx.applied.drain(..).map(|(_, _, u)| u).rev().collect();
             for u in undos {
                 let r = match &u {
                     Undo::Remove { table, pidx, slot } => {
@@ -1506,15 +1854,7 @@ impl DbCluster {
                     }
                     Undo::Reinsert { table, pidx, slot, row } => {
                         let (t, p, s, r2) = (table.clone(), *pidx, *slot, row.clone());
-                        ctx.store_mut(&t, p, Role::Primary).and_then(|st| {
-                            let got = st.insert(r2)?;
-                            if got != s {
-                                return Err(Error::Engine(format!(
-                                    "rollback slot mismatch {got} != {s}"
-                                )));
-                            }
-                            Ok(())
-                        })
+                        ctx.store_mut(&t, p, Role::Primary).and_then(|st| st.insert_at(s, r2))
                     }
                 };
                 if let Err(e2) = r {
@@ -1522,28 +1862,32 @@ impl DbCluster {
                     panic!("rollback failed: {e2} (original error: {e})");
                 }
             }
+            // Aborted work must not consume partition LSNs: restore every
+            // touched primary's version so the redo sequence stays dense.
+            let restore: Vec<((String, usize), u64)> = ctx.pre_versions.drain().collect();
+            for ((t, p), v) in restore {
+                match ctx.store_mut(&t, p, Role::Primary) {
+                    Ok(st) => st.version = v,
+                    Err(e2) => panic!("rollback version restore failed: {e2}"),
+                }
+            }
             return Err(Error::TxnAborted(e.to_string()));
         }
 
         // Phase 2 (commit): apply redo ops to backups (whose write guards we
-        // already hold) and append to the primary node's WAL.
-        let ops: Vec<LogOp> = ctx.applied.iter().map(|(op, _)| op.clone()).collect();
-        for op in &ops {
+        // already hold) and append to the hosting nodes' WAL segments.
+        let ops: Vec<(u64, LogOp)> =
+            ctx.applied.iter().map(|(lsn, op, _)| (*lsn, op.clone())).collect();
+        for (_, op) in &ops {
             let table = op.table().to_string();
-            let (pidx, mirror) = match op {
-                LogOp::Insert { pidx, .. } | LogOp::Update { pidx, .. } | LogOp::Delete { pidx, .. } => {
-                    (*pidx, ())
-                }
-            };
-            let _ = mirror;
+            let pidx = op.pidx();
             if ctx.has(&table, pidx, Role::Backup) {
                 let store = ctx.store_mut(&table, pidx, Role::Backup)?;
                 match op {
                     LogOp::Insert { slot, row, .. } => {
-                        let got = store.insert(row.as_ref().clone())?;
-                        if got != *slot {
-                            panic!("replica divergence on {table}[{pidx}]: {got} != {slot}");
-                        }
+                        store.insert_at(*slot, row.as_ref().clone()).unwrap_or_else(|e| {
+                            panic!("replica divergence on {table}[{pidx}]: {e}")
+                        });
                     }
                     LogOp::Update { slot, row, .. } => store.update(*slot, row.as_ref().clone())?,
                     LogOp::Delete { slot, .. } => {
@@ -2046,9 +2390,12 @@ impl DbCluster {
                 }
             }
 
+            ctx.note_pre_version(&tkey, pidx)?;
             let store = ctx.store_mut(&tkey, pidx, Role::Primary)?;
             let slot = store.insert(row.clone())?;
+            let lsn = store.version;
             ctx.applied.push((
+                lsn,
                 LogOp::Insert { table: tkey.clone(), pidx, slot, row: Arc::new(row) },
                 Undo::Remove { table: tkey.clone(), pidx, slot },
             ));
@@ -2192,9 +2539,12 @@ impl DbCluster {
             let new_row = def.schema.coerce_row(Row::new(new_vals))?;
             let new_pidx = def.partition_of_row(&new_row.values)?;
             if new_pidx == *pidx {
+                ctx.note_pre_version(&tkey, *pidx)?;
                 let store = ctx.store_mut(&tkey, *pidx, Role::Primary)?;
                 store.update(*slot, new_row.clone())?;
+                let lsn = store.version;
                 ctx.applied.push((
+                    lsn,
                     LogOp::Update {
                         table: tkey.clone(),
                         pidx: *pidx,
@@ -2206,11 +2556,15 @@ impl DbCluster {
             } else {
                 // Row moves partitions (e.g. work stealing rewrites
                 // worker_id): delete + insert.
-                {
+                ctx.note_pre_version(&tkey, *pidx)?;
+                ctx.note_pre_version(&tkey, new_pidx)?;
+                let lsn = {
                     let store = ctx.store_mut(&tkey, *pidx, Role::Primary)?;
                     store.delete(*slot)?;
-                }
+                    store.version
+                };
                 ctx.applied.push((
+                    lsn,
                     LogOp::Delete { table: tkey.clone(), pidx: *pidx, slot: *slot },
                     Undo::Reinsert {
                         table: tkey.clone(),
@@ -2221,7 +2575,9 @@ impl DbCluster {
                 ));
                 let store = ctx.store_mut(&tkey, new_pidx, Role::Primary)?;
                 let new_slot = store.insert(new_row.clone())?;
+                let lsn = store.version;
                 ctx.applied.push((
+                    lsn,
                     LogOp::Insert {
                         table: tkey.clone(),
                         pidx: new_pidx,
@@ -2292,9 +2648,12 @@ impl DbCluster {
             }
         }
         for (pidx, slot) in &victims {
+            ctx.note_pre_version(&tkey, *pidx)?;
             let store = ctx.store_mut(&tkey, *pidx, Role::Primary)?;
             let old = store.delete(*slot)?;
+            let lsn = store.version;
             ctx.applied.push((
+                lsn,
                 LogOp::Delete { table: tkey.clone(), pidx: *pidx, slot: *slot },
                 Undo::Reinsert { table: tkey.clone(), pidx: *pidx, slot: *slot, row: old },
             ));
@@ -2335,6 +2694,29 @@ fn store_of_mut<'g>(guards: &'g mut [Guard<'_>], i: usize) -> Result<&'g mut Par
     match &mut guards[i] {
         Guard::W(g) => Ok(g),
         Guard::R(_) => Err(Error::Engine("fast path write through a read latch".into())),
+    }
+}
+
+/// Pre-statement versions of every write-locked replica (primary and
+/// backup) of a fast statement, captured right after latch acquisition.
+/// Restored on abort so aborted work never consumes partition LSNs.
+fn fast_pre_versions(guards: &[Guard<'_>], targets: &[FastTarget]) -> Vec<(usize, u64)> {
+    let mut pre = Vec::with_capacity(targets.len() * 2);
+    for t in targets {
+        pre.push((t.prim, store_of(guards, t.prim).version));
+        if let Some(bi) = t.backup {
+            pre.push((bi, store_of(guards, bi).version));
+        }
+    }
+    pre
+}
+
+/// Abort tail of the fast paths: put every touched replica's version back.
+fn fast_restore_versions(guards: &mut [Guard<'_>], pre: &[(usize, u64)]) {
+    for (gi, v) in pre {
+        if let Ok(s) = store_of_mut(guards, *gi) {
+            s.version = *v;
+        }
     }
 }
 
@@ -2844,6 +3226,7 @@ mod tests {
             data_nodes: 2,
             replication: false,
             clock: clock::wall(),
+            durability: None,
         })
         .unwrap();
         c.exec(

@@ -41,6 +41,14 @@ impl Connector {
         self.alive.load(Ordering::SeqCst)
     }
 
+    /// The cluster this connector brokers for. Chaos drivers and the
+    /// availability machinery reach through here to inject data-node
+    /// failures (`kill_node`) and drive recovery (`restart_node`,
+    /// availability sweeps) on the same cluster the workers are using.
+    pub fn cluster(&self) -> &Arc<DbCluster> {
+        &self.cluster
+    }
+
     pub fn kill(&self) {
         self.alive.store(false, Ordering::SeqCst);
     }
@@ -227,6 +235,12 @@ impl WorkerLink {
                 .exec_prepared_batch(self.worker_node, kind, prepared, rows),
             other => other,
         }
+    }
+
+    /// The cluster behind this link (either connector brokers the same
+    /// one).
+    pub fn cluster(&self) -> &Arc<DbCluster> {
+        self.primary.cluster()
     }
 
     /// Which connector would serve right now (monitoring).

@@ -3,56 +3,120 @@
 //! In SchalaDB terminology (paper Figure 2), *data nodes* run the DBMS and
 //! hold the distributed memory; *worker nodes* are clients. Here a data node
 //! owns a set of partition replicas (primary or backup role is tracked by
-//! the cluster catalog, not the node), a redo WAL, and an `alive` flag used
-//! by the failure-injection tests and the availability machinery.
+//! the cluster catalog, not the node), a per-partition segmented redo WAL
+//! ([`NodeWal`]), and a lifecycle state used by failure injection and the
+//! availability machinery:
+//!
+//! ```text
+//!        kill                restart_node              sweep (final cut)
+//! Alive ------> Dead ------------------------> Rejoining ---------------> Alive
+//!        revive (in-memory state intact: heal re-seeds stale replicas)
+//! ```
+//!
+//! `revive` models a transient network partition (memory survives);
+//! `restart_node` models a real process restart (memory wiped, state comes
+//! back from checkpoints + WAL tails + primary catch-up).
 
 use crate::storage::partition::PartitionStore;
 use crate::storage::table_def::TableDef;
-use crate::storage::wal::{LogOp, Wal};
+use crate::storage::wal::{LogOp, NodeWal};
 use crate::{Error, Result};
 use rustc_hash::FxHashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 /// Key of a partition replica within a node.
 pub type PartKey = (String, usize);
 
+/// Lifecycle state of a data node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeState {
+    /// Serving reads/writes and receiving replica applies.
+    Alive,
+    /// Crashed / partitioned away; serves nothing.
+    Dead,
+    /// Restarted after a crash and catching up; serves nothing until the
+    /// availability sweep's final cut flips it back to [`NodeState::Alive`].
+    Rejoining,
+}
+
+const STATE_ALIVE: u8 = 0;
+const STATE_DEAD: u8 = 1;
+const STATE_REJOINING: u8 = 2;
+
 /// One data node.
 pub struct DataNode {
     pub id: u32,
-    alive: AtomicBool,
+    state: AtomicU8,
+    /// Cluster epoch this node last joined under (stamped by the rejoin
+    /// hand-off; replicas carry their own fence in `PartitionStore::epoch`).
+    pub epoch: AtomicU64,
     /// Partition replicas hosted by this node. The outer lock only guards
     /// the map shape (DDL, replica placement); row access goes through the
     /// per-partition `RwLock`, which is the concurrency unit the paper's
     /// design leans on.
     parts: RwLock<FxHashMap<PartKey, Arc<RwLock<PartitionStore>>>>,
-    /// Redo log of committed ops on primaries hosted here.
-    pub wal: Mutex<Wal>,
+    /// Per-partition segmented redo log of committed ops on replicas
+    /// hosted here (primary *and* backup — every replica can recover
+    /// locally and serve a redo-ship tail).
+    pub wal: Mutex<NodeWal>,
 }
 
 impl DataNode {
     pub fn new(id: u32) -> DataNode {
         DataNode {
             id,
-            alive: AtomicBool::new(true),
+            state: AtomicU8::new(STATE_ALIVE),
+            epoch: AtomicU64::new(0),
             parts: RwLock::new(FxHashMap::default()),
-            wal: Mutex::new(Wal::new()),
+            wal: Mutex::new(NodeWal::new()),
+        }
+    }
+
+    /// Current lifecycle state.
+    pub fn state(&self) -> NodeState {
+        match self.state.load(Ordering::SeqCst) {
+            STATE_ALIVE => NodeState::Alive,
+            STATE_DEAD => NodeState::Dead,
+            _ => NodeState::Rejoining,
         }
     }
 
     pub fn is_alive(&self) -> bool {
-        self.alive.load(Ordering::SeqCst)
+        self.state() == NodeState::Alive
     }
 
     /// Simulate a crash: the node stops serving. Its in-memory state is
-    /// retained so tests can also exercise "restart" (recover + rejoin).
+    /// retained so tests can exercise both "network blip" (`revive`) and
+    /// "process restart" (`DbCluster::restart_node`, which wipes it).
     pub fn kill(&self) {
-        self.alive.store(false, Ordering::SeqCst);
+        self.state.store(STATE_DEAD, Ordering::SeqCst);
     }
 
-    /// Bring the node back (after recovery re-seeds its replicas).
+    /// Bring the node back with memory intact (after a transient outage;
+    /// heal re-seeds whatever went stale).
     pub fn revive(&self) {
-        self.alive.store(true, Ordering::SeqCst);
+        self.state.store(STATE_ALIVE, Ordering::SeqCst);
+    }
+
+    /// Enter the rejoin state machine (wiped state, catching up).
+    pub fn begin_rejoin(&self) {
+        self.state.store(STATE_REJOINING, Ordering::SeqCst);
+    }
+
+    /// Rejoin hand-off: stamp the epoch the node caught up under and start
+    /// serving again.
+    pub fn finish_rejoin(&self, epoch: u64) {
+        self.epoch.store(epoch, Ordering::SeqCst);
+        self.state.store(STATE_ALIVE, Ordering::SeqCst);
+    }
+
+    /// Route durable logging under `dir` (one file per partition segment),
+    /// flushing every `group_commit` commits. Called at cluster start and
+    /// on restart, before any commit traffic reaches the node.
+    pub fn attach_durability(&self, dir: PathBuf, group_commit: usize) {
+        *self.wal.lock().unwrap() = NodeWal::with_dir(dir, group_commit);
     }
 
     fn check_alive(&self) -> Result<()> {
@@ -89,7 +153,8 @@ impl DataNode {
         self.partition_even_if_dead(table, pidx)
     }
 
-    /// Same as [`partition`] but usable on a dead node (recovery path).
+    /// Same as [`DataNode::partition`] but usable on a dead or rejoining
+    /// node (recovery path).
     pub fn partition_even_if_dead(
         &self,
         table: &str,
@@ -115,28 +180,28 @@ impl DataNode {
         self.parts.read().unwrap().keys().cloned().collect()
     }
 
-    /// Append a committed op to the node WAL.
-    pub fn log(&self, op: LogOp) -> Result<u64> {
-        self.wal.lock().unwrap().append(op)
+    /// Append one commit's redo records to the node WAL (both replica
+    /// roles log; group commit batches the sink flush).
+    pub fn log_commit(&self, epoch: u64, ops: &[(u64, LogOp)]) -> Result<()> {
+        self.wal.lock().unwrap().commit(epoch, ops)
     }
 
     /// Apply a redo op to the local replica (replication / recovery).
     ///
     /// Slot-addressed: the WAL records the slot chosen by the primary, and
-    /// the replica's slab must land the row in the same slot — asserted so
-    /// replica divergence is caught immediately rather than silently.
+    /// the replica's slab must land the row in the same slot — enforced by
+    /// `insert_at`, so replica divergence is caught immediately rather than
+    /// silently.
     pub fn apply(&self, op: &LogOp) -> Result<()> {
         match op {
             LogOp::Insert { table, pidx, slot, row } => {
                 let part = self.partition_even_if_dead(table, *pidx)?;
                 let mut p = part.write().unwrap();
-                let got = p.insert(row.as_ref().clone())?;
-                if got != *slot {
-                    return Err(Error::TxnAborted(format!(
-                        "replica slot divergence on {table}[{pidx}]: {got} != {slot}"
-                    )));
-                }
-                Ok(())
+                p.insert_at(*slot, row.as_ref().clone()).map_err(|e| {
+                    Error::TxnAborted(format!(
+                        "replica apply divergence on {table}[{pidx}]: {e}"
+                    ))
+                })
             }
             LogOp::Update { table, pidx, slot, row } => {
                 let part = self.partition_even_if_dead(table, *pidx)?;
@@ -188,6 +253,21 @@ mod tests {
     }
 
     #[test]
+    fn state_machine_transitions() {
+        let n = DataNode::new(3);
+        assert_eq!(n.state(), NodeState::Alive);
+        n.kill();
+        assert_eq!(n.state(), NodeState::Dead);
+        assert!(!n.is_alive());
+        n.begin_rejoin();
+        assert_eq!(n.state(), NodeState::Rejoining);
+        assert!(!n.is_alive(), "a rejoining node must not serve");
+        n.finish_rejoin(7);
+        assert_eq!(n.state(), NodeState::Alive);
+        assert_eq!(n.epoch.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
     fn kill_blocks_access_but_preserves_state() {
         let n = DataNode::new(1);
         n.host_partition(def(), 0).unwrap();
@@ -226,9 +306,12 @@ mod tests {
     }
 
     #[test]
-    fn wal_appends_through_node() {
+    fn wal_commits_through_node() {
         let n = DataNode::new(0);
-        n.log(LogOp::Delete { table: "t".into(), pidx: 0, slot: 3 }).unwrap();
-        assert_eq!(n.wal.lock().unwrap().len(), 1);
+        n.log_commit(0, &[(1, LogOp::Delete { table: "t".into(), pidx: 0, slot: 3 })])
+            .unwrap();
+        let w = n.wal.lock().unwrap();
+        assert_eq!(w.total_records(), 1);
+        assert_eq!(w.segment("t", 0).unwrap().max_lsn(), 1);
     }
 }

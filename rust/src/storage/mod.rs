@@ -25,9 +25,11 @@ pub mod txn;
 pub mod value;
 pub mod wal;
 
-pub use cluster::{ClusterConfig, DbCluster};
+pub use cluster::{ClusterConfig, DbCluster, DurabilityConfig, RejoinStart};
 pub use connector::Connector;
+pub use datanode::NodeState;
 pub use prepared::Prepared;
+pub use replication::{AvailabilityManager, SweepReport};
 pub use stats::{AccessKind, StatsRegistry};
 pub use table_def::TableDef;
 pub use value::{ColumnType, Row, Schema, Value};

@@ -1,14 +1,24 @@
 //! A single table partition: slab-allocated rows plus hash indexes.
 //!
-//! Partitions are the unit of locking, replication and placement. The store
-//! itself is lock-free-agnostic — concurrency control wraps it at the data
-//! node (`RwLock<PartitionStore>`), mirroring how NDB data nodes own
-//! fragments.
+//! Partitions are the unit of locking, replication, placement — and, since
+//! the durability rework, of *logging*: every committed mutation carries
+//! the partition's dense log sequence number (its `version` right after
+//! the op applied), so a replica can be reconstructed from a checkpoint
+//! plus a redo tail and then audited against the primary by LSN alone.
+//!
+//! Slot allocation is **canonical**: an insert always takes the smallest
+//! free slot. That makes the slab layout a pure function of the committed
+//! op history — two replicas that applied the same ops agree on every
+//! future slot choice, which is what lets redo records address rows by
+//! slot (and lets the chaos tests demand byte-equality between a rejoined
+//! node and a never-killed twin).
 
 use crate::storage::table_def::TableDef;
 use crate::storage::value::{Row, Value};
+use crate::storage::wal::{LogOp, WalRecord};
 use crate::{Error, Result};
 use rustc_hash::FxHashMap;
+use std::collections::BTreeSet;
 use std::sync::{Arc, Mutex};
 
 /// Slot handle inside a partition (stable until the row is deleted).
@@ -19,7 +29,8 @@ pub struct PartitionStore {
     def: Arc<TableDef>,
     /// Slab: `None` = free slot (reusable).
     rows: Vec<Option<Row>>,
-    free: Vec<Slot>,
+    /// Free slots, allocated smallest-first (canonical — see module docs).
+    free: BTreeSet<Slot>,
     live: usize,
     /// Primary-key hash index (unique within the partition; the cluster
     /// routes equal keys to one partition so per-partition uniqueness is
@@ -28,9 +39,17 @@ pub struct PartitionStore {
     pk: FxHashMap<i64, Slot>,
     /// Secondary indexes: column schema idx -> (value hash -> slots).
     secondary: Vec<(usize, FxHashMap<u64, Vec<Slot>>)>,
-    /// Monotone version, bumped on every mutation (replication + checkpoint
-    /// consistency checks).
+    /// Monotone version, bumped on every mutation. This doubles as the
+    /// partition's **log sequence number**: redo records store the version
+    /// right after their op applied, and replicas advance in lockstep
+    /// (aborted transactions restore the pre-transaction version, so the
+    /// sequence stays dense).
     pub version: u64,
+    /// Epoch fence: the cluster epoch this replica last (re)joined under.
+    /// Redo records from an older epoch are rejected by
+    /// [`PartitionStore::apply_redo`] — a stale rejoiner cannot clobber
+    /// writes committed after a promotion it never saw.
+    pub epoch: u64,
     approx_bytes: usize,
     /// Cached clone-on-read snapshot, keyed by the version it was taken at.
     /// Serving the scatter-gather read path: readers clone the `Arc` and
@@ -50,11 +69,12 @@ impl PartitionStore {
         PartitionStore {
             def,
             rows: Vec::new(),
-            free: Vec::new(),
+            free: BTreeSet::new(),
             live: 0,
             pk: FxHashMap::default(),
             secondary,
             version: 0,
+            epoch: 0,
             approx_bytes: 0,
             snap: Mutex::new(None),
         }
@@ -70,6 +90,13 @@ impl PartitionStore {
 
     pub fn is_empty(&self) -> bool {
         self.live == 0
+    }
+
+    /// Slab capacity (live rows + free holes). Checkpoints record it so a
+    /// reconstructed replica reproduces the hole set exactly — including
+    /// trailing holes, which influence future canonical slot choices.
+    pub fn slab_cap(&self) -> usize {
+        self.rows.len()
     }
 
     /// Approximate resident bytes (rows only, indexes excluded).
@@ -126,7 +153,22 @@ impl PartitionStore {
         }
     }
 
-    /// Insert a validated row; returns its slot.
+    /// Place a validated row at a specific slot. Shared tail of
+    /// [`PartitionStore::insert`] and [`PartitionStore::insert_at`]; the
+    /// slot must already be carved out of the free set / slab.
+    fn place(&mut self, slot: Slot, row: Row) {
+        self.approx_bytes += row.approx_bytes();
+        if let Some(k) = self.pk_of(&row) {
+            self.pk.insert(k, slot);
+        }
+        self.index_insert(slot, &row);
+        self.rows[slot] = Some(row);
+        self.live += 1;
+        self.version += 1;
+    }
+
+    /// Insert a validated row; returns its slot (always the smallest free
+    /// one — canonical allocation, see module docs).
     pub fn insert(&mut self, row: Row) -> Result<Slot> {
         let row = self.def.schema.coerce_row(row)?;
         if let Some(k) = self.pk_of(&row) {
@@ -137,22 +179,46 @@ impl PartitionStore {
                 )));
             }
         }
-        let slot = match self.free.pop() {
+        let slot = match self.free.pop_first() {
             Some(s) => s,
             None => {
                 self.rows.push(None);
                 self.rows.len() - 1
             }
         };
-        self.approx_bytes += row.approx_bytes();
-        if let Some(k) = self.pk_of(&row) {
-            self.pk.insert(k, slot);
-        }
-        self.index_insert(slot, &row);
-        self.rows[slot] = Some(row);
-        self.live += 1;
-        self.version += 1;
+        self.place(slot, row);
         Ok(slot)
+    }
+
+    /// Insert a validated row at a **specific** slot, growing the slab if
+    /// needed (intermediate slots become free holes). This is the
+    /// slot-addressed form used by replica apply, redo replay, and
+    /// transaction rollback — every path where the slot was chosen
+    /// elsewhere and divergence must surface as an error, not a silent
+    /// relocation.
+    pub fn insert_at(&mut self, slot: Slot, row: Row) -> Result<()> {
+        let row = self.def.schema.coerce_row(row)?;
+        if let Some(k) = self.pk_of(&row) {
+            if self.pk.contains_key(&k) {
+                return Err(Error::Constraint(format!(
+                    "duplicate primary key {k} in '{}'",
+                    self.def.name
+                )));
+            }
+        }
+        while self.rows.len() <= slot {
+            self.free.insert(self.rows.len());
+            self.rows.push(None);
+        }
+        if self.rows[slot].is_some() {
+            return Err(Error::Constraint(format!(
+                "slot {slot} already occupied in '{}'",
+                self.def.name
+            )));
+        }
+        self.free.remove(&slot);
+        self.place(slot, row);
+        Ok(())
     }
 
     /// Read a row by slot.
@@ -225,10 +291,50 @@ impl PartitionStore {
         }
         self.index_remove(slot, &old);
         self.approx_bytes -= old.approx_bytes();
-        self.free.push(slot);
+        self.free.insert(slot);
         self.live -= 1;
         self.version += 1;
         Ok(old)
+    }
+
+    /// Apply one redo record (replica catch-up / WAL replay), idempotently:
+    ///
+    /// - a record at or below the current version was already applied —
+    ///   skipped, `Ok(false)`;
+    /// - the next record in sequence (`lsn == version + 1`) applies and
+    ///   advances the version to exactly `lsn`, `Ok(true)`;
+    /// - a gap (`lsn > version + 1`) is unrecoverable from this stream —
+    ///   the caller falls back to a snapshot re-seed;
+    /// - a record from an **older epoch** than this replica's fence is
+    ///   rejected outright: a stale rejoiner replaying its pre-crash log
+    ///   must not clobber rows committed after the promotion it missed.
+    pub fn apply_redo(&mut self, rec: &WalRecord) -> Result<bool> {
+        if rec.lsn <= self.version {
+            // already applied (idempotent skip) — checked before the fence
+            // so a late duplicate from an old epoch cannot halt replay
+            return Ok(false);
+        }
+        if rec.epoch < self.epoch {
+            return Err(Error::TxnAborted(format!(
+                "fenced: redo record epoch {} below replica epoch {} on '{}'",
+                rec.epoch, self.epoch, self.def.name
+            )));
+        }
+        if rec.lsn > self.version + 1 {
+            return Err(Error::TxnAborted(format!(
+                "redo gap on '{}': have lsn {}, next record is {}",
+                self.def.name, self.version, rec.lsn
+            )));
+        }
+        match &rec.op {
+            LogOp::Insert { slot, row, .. } => self.insert_at(*slot, row.as_ref().clone())?,
+            LogOp::Update { slot, row, .. } => self.update(*slot, row.as_ref().clone())?,
+            LogOp::Delete { slot, .. } => {
+                self.delete(*slot)?;
+            }
+        }
+        debug_assert_eq!(self.version, rec.lsn, "mutations bump the version by exactly one");
+        Ok(true)
     }
 
     /// Iterate live `(slot, row)` pairs in slot order.
@@ -239,9 +345,17 @@ impl PartitionStore {
             .filter_map(|(i, r)| r.as_ref().map(|row| (i, row)))
     }
 
-    /// Deep copy of all live rows (checkpointing / replica seeding).
+    /// Deep copy of all live rows (legacy checkpointing / bulk export).
     pub fn snapshot_rows(&self) -> Vec<Row> {
         self.iter().map(|(_, r)| r.clone()).collect()
+    }
+
+    /// Deep, **slot-preserving** copy: `(slab capacity, live rows with
+    /// their slots)`. This is the replica-seeding format — reloading it via
+    /// [`PartitionStore::load_slotted`] reproduces the slab layout (holes
+    /// included) so slot-addressed redo keeps applying cleanly afterwards.
+    pub fn snapshot_slotted(&self) -> (usize, Vec<(Slot, Row)>) {
+        (self.rows.len(), self.iter().map(|(s, r)| (s, r.clone())).collect())
     }
 
     /// Versioned snapshot of the live rows in slot order, shared via `Arc`.
@@ -264,13 +378,44 @@ impl PartitionStore {
         rows
     }
 
-    /// Rebuild the store from a row list (recovery / replica seeding).
+    /// Rebuild the store from a row list (compacting; legacy recovery and
+    /// test seeding — replica seeding uses [`PartitionStore::load_slotted`]).
     ///
-    /// Drops any cached snapshot: callers (e.g. `DbCluster::heal`) may
-    /// assign `version` non-monotonically after a reload, so a stale cache
-    /// entry could otherwise collide with a future version of different
-    /// content.
+    /// Drops any cached snapshot: callers may assign `version`
+    /// non-monotonically after a reload, so a stale cache entry could
+    /// otherwise collide with a future version of different content.
     pub fn load_rows(&mut self, rows: Vec<Row>) -> Result<()> {
+        self.wipe();
+        for r in rows {
+            self.insert(r)?;
+        }
+        Ok(())
+    }
+
+    /// Rebuild the store from a slot-preserving snapshot (replica seeding,
+    /// checkpoint load): the slab is sized to `cap` and every hole the
+    /// source had — including trailing ones — is reproduced, so canonical
+    /// slot allocation continues identically on both sides. The caller
+    /// assigns `version` (and `epoch`) afterwards.
+    pub fn load_slotted(&mut self, cap: usize, rows: Vec<(Slot, Row)>) -> Result<()> {
+        self.wipe();
+        for s in 0..cap {
+            self.free.insert(s);
+            self.rows.push(None);
+        }
+        for (slot, row) in rows {
+            if slot >= cap {
+                return Err(Error::Constraint(format!(
+                    "slotted load: slot {slot} outside slab capacity {cap}"
+                )));
+            }
+            self.insert_at(slot, row)?;
+        }
+        Ok(())
+    }
+
+    /// Reset to empty (shared by the bulk loaders).
+    fn wipe(&mut self) {
         *self.snap.lock().unwrap() = None;
         self.rows.clear();
         self.free.clear();
@@ -280,10 +425,6 @@ impl PartitionStore {
         }
         self.live = 0;
         self.approx_bytes = 0;
-        for r in rows {
-            self.insert(r)?;
-        }
-        Ok(())
     }
 }
 
@@ -330,6 +471,37 @@ mod tests {
         // slot reuse
         let s2 = p.insert(row(3, 1, "READY")).unwrap();
         assert_eq!(s2, s0);
+    }
+
+    #[test]
+    fn canonical_allocation_takes_smallest_free_slot() {
+        let mut p = store();
+        for i in 0..5 {
+            p.insert(row(i, 0, "READY")).unwrap();
+        }
+        // free slots {1, 3} in delete order 3, then 1
+        p.delete(3).unwrap();
+        p.delete(1).unwrap();
+        // allocation is by slot number, not LIFO delete order
+        assert_eq!(p.insert(row(10, 0, "READY")).unwrap(), 1);
+        assert_eq!(p.insert(row(11, 0, "READY")).unwrap(), 3);
+        assert_eq!(p.insert(row(12, 0, "READY")).unwrap(), 5);
+    }
+
+    #[test]
+    fn insert_at_reconstructs_exact_layout() {
+        let mut p = store();
+        p.insert_at(2, row(1, 0, "READY")).unwrap();
+        assert_eq!(p.slab_cap(), 3, "slab grew to cover the slot");
+        assert_eq!(p.len(), 1);
+        // slots 0 and 1 are holes; canonical allocation fills them first
+        assert_eq!(p.insert(row(2, 0, "READY")).unwrap(), 0);
+        assert_eq!(p.insert(row(3, 0, "READY")).unwrap(), 1);
+        // occupied slot is a hard error
+        assert!(p.insert_at(2, row(9, 0, "READY")).is_err());
+        // duplicate PK caught before any slab mutation
+        assert!(p.insert_at(7, row(1, 0, "READY")).is_err());
+        assert_eq!(p.slab_cap(), 3);
     }
 
     #[test]
@@ -389,6 +561,98 @@ mod tests {
         assert!(q.slot_by_pk(5).is_some());
         // indexes rebuilt
         assert_eq!(q.slots_by_index(2, &Value::str("READY")).unwrap().len(), 9);
+    }
+
+    #[test]
+    fn slotted_snapshot_reproduces_holes_and_allocation() {
+        let mut p = store();
+        for i in 0..6 {
+            p.insert(row(i, 0, "READY")).unwrap();
+        }
+        p.delete(1).unwrap();
+        p.delete(4).unwrap();
+        p.delete(5).unwrap(); // trailing hole
+        let (cap, rows) = p.snapshot_slotted();
+        assert_eq!(cap, 6);
+        assert_eq!(rows.len(), 3);
+
+        let mut q = store();
+        q.load_slotted(cap, rows).unwrap();
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.slab_cap(), 6);
+        // both replicas now make identical canonical choices
+        assert_eq!(p.insert(row(10, 0, "READY")).unwrap(), 1);
+        assert_eq!(q.insert(row(10, 0, "READY")).unwrap(), 1);
+        assert_eq!(p.insert(row(11, 0, "READY")).unwrap(), 4);
+        assert_eq!(q.insert(row(11, 0, "READY")).unwrap(), 4);
+        // out-of-cap slot rejected
+        let mut r = store();
+        assert!(r.load_slotted(2, vec![(5, row(1, 0, "X"))]).is_err());
+    }
+
+    #[test]
+    fn apply_redo_is_idempotent_and_gap_checked() {
+        let mut primary = store();
+        let mut replica = store();
+        let mut recs: Vec<WalRecord> = Vec::new();
+        for i in 0..4 {
+            let slot = primary.insert(row(i, 0, "READY")).unwrap();
+            recs.push(WalRecord {
+                lsn: primary.version,
+                epoch: 0,
+                op: LogOp::Insert {
+                    table: "wq".into(),
+                    pidx: 0,
+                    slot,
+                    row: Arc::new(primary.get(slot).unwrap().clone()),
+                },
+            });
+        }
+        let s1 = primary.slot_by_pk(1).unwrap();
+        primary.delete(s1).unwrap();
+        recs.push(WalRecord {
+            lsn: primary.version,
+            epoch: 0,
+            op: LogOp::Delete { table: "wq".into(), pidx: 0, slot: s1 },
+        });
+        for rec in &recs {
+            assert!(replica.apply_redo(rec).unwrap());
+        }
+        assert_eq!(replica.version, primary.version);
+        assert_eq!(replica.len(), primary.len());
+        // replaying the same records is a no-op
+        for rec in &recs {
+            assert!(!replica.apply_redo(rec).unwrap());
+        }
+        assert_eq!(replica.version, primary.version);
+        // a gap is an error, not silent corruption
+        let gap = WalRecord {
+            lsn: primary.version + 5,
+            epoch: 0,
+            op: LogOp::Delete { table: "wq".into(), pidx: 0, slot: 0 },
+        };
+        assert!(replica.apply_redo(&gap).is_err());
+    }
+
+    #[test]
+    fn apply_redo_fences_stale_epochs() {
+        let mut p = store();
+        p.epoch = 2;
+        let stale = WalRecord {
+            lsn: 1,
+            epoch: 1,
+            op: LogOp::Insert {
+                table: "wq".into(),
+                pidx: 0,
+                slot: 0,
+                row: Arc::new(row(1, 0, "READY")),
+            },
+        };
+        let e = p.apply_redo(&stale);
+        assert!(e.is_err(), "stale-epoch record must be fenced");
+        assert_eq!(p.len(), 0, "fenced record must not touch the store");
+        let current = WalRecord { epoch: 2, ..stale };
+        assert!(p.apply_redo(&current).unwrap());
     }
 
     #[test]

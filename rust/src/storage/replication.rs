@@ -1,14 +1,32 @@
 //! Availability management: heartbeat-style liveness watching plus the
-//! promote/heal cycle.
+//! promote / heal / **rejoin** cycle.
 //!
-//! The mechanics (backup promotion, replica re-seeding) live on
-//! [`DbCluster`]; this module packages them behind a watcher that the
-//! engine runs periodically, mirroring how NDB's arbitrator reacts to
-//! missed heartbeats.
+//! The mechanics (backup promotion, replica re-seeding, the rejoin
+//! catch-up and hand-off) live on [`DbCluster`]; this module packages them
+//! behind a watcher that the engine runs periodically, mirroring how NDB's
+//! arbitrator reacts to missed heartbeats and how a restarted NDB node
+//! walks its node-recovery protocol before serving again.
+//!
+//! One sweep:
+//!
+//! 1. count dead nodes (monitoring);
+//! 2. promote backups whose primary died (opens a new cluster epoch);
+//! 3. heal stale-but-alive replicas (slot-preserving re-seed);
+//! 4. drive every `Rejoining` node through catch-up: a few opportunistic
+//!    redo-ship rounds (no serving-side write block), then the final cut
+//!    that freezes each partition briefly, closes the remaining gap, and
+//!    flips the node back to serving.
 
 use crate::storage::cluster::DbCluster;
+use crate::storage::datanode::NodeState;
 use crate::Result;
 use std::sync::Arc;
+
+/// How many opportunistic catch-up rounds a sweep runs before the final
+/// cut. Each round ships the tail that accumulated during the previous
+/// one, so by the cut the remaining gap is whatever committed in the last
+/// few microseconds.
+const CATCHUP_ROUNDS: usize = 2;
 
 /// Outcome of one availability sweep.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -19,6 +37,15 @@ pub struct SweepReport {
     pub promoted: usize,
     /// Stale replicas re-seeded from primaries this sweep.
     pub healed: usize,
+    /// Nodes observed in the rejoin state machine when the sweep started.
+    pub rejoining: usize,
+    /// Nodes whose rejoin completed this sweep (now serving again).
+    pub rejoined: usize,
+    /// Redo records shipped to rejoining nodes this sweep.
+    pub shipped_ops: u64,
+    /// Partitions that needed a full snapshot re-seed because the retained
+    /// redo tail could not cover their gap.
+    pub reseeded_parts: usize,
 }
 
 /// Watches data-node liveness and repairs placement.
@@ -27,6 +54,7 @@ pub struct AvailabilityManager {
     /// Cumulative counters across sweeps (monitoring).
     pub total_promoted: std::sync::atomic::AtomicUsize,
     pub total_healed: std::sync::atomic::AtomicUsize,
+    pub total_rejoined: std::sync::atomic::AtomicUsize,
 }
 
 impl AvailabilityManager {
@@ -35,28 +63,60 @@ impl AvailabilityManager {
             cluster,
             total_promoted: std::sync::atomic::AtomicUsize::new(0),
             total_healed: std::sync::atomic::AtomicUsize::new(0),
+            total_rejoined: std::sync::atomic::AtomicUsize::new(0),
         }
     }
 
     /// One sweep: count dead nodes, promote backups whose primary is dead,
-    /// re-seed stale replicas where both sides are alive again.
+    /// re-seed stale replicas where both sides are alive again, and drive
+    /// rejoining nodes through catch-up to the serving hand-off.
     pub fn sweep(&self) -> Result<SweepReport> {
-        let dead_nodes = (0..self.cluster.num_nodes() as u32)
-            .filter(|i| self.cluster.node(*i).map_or(false, |n| !n.is_alive()))
-            .count();
-        let promoted = self.cluster.promote_dead_primaries();
-        let healed = self.cluster.heal()?;
-        self.total_promoted.fetch_add(promoted, std::sync::atomic::Ordering::Relaxed);
-        self.total_healed.fetch_add(healed, std::sync::atomic::Ordering::Relaxed);
-        Ok(SweepReport { dead_nodes, promoted, healed })
+        let mut r = SweepReport::default();
+        let n = self.cluster.num_nodes() as u32;
+        for i in 0..n {
+            match self.cluster.node(i).map(|nd| nd.state()) {
+                Some(NodeState::Dead) => r.dead_nodes += 1,
+                Some(NodeState::Rejoining) => r.rejoining += 1,
+                _ => {}
+            }
+        }
+        r.promoted = self.cluster.promote_dead_primaries();
+        r.healed = self.cluster.heal()?;
+        for i in 0..n {
+            let rejoining = self
+                .cluster
+                .node(i)
+                .map_or(false, |nd| nd.state() == NodeState::Rejoining);
+            if !rejoining {
+                continue;
+            }
+            for _ in 0..CATCHUP_ROUNDS {
+                r.shipped_ops += self.cluster.rejoin_catchup_round(i)?;
+            }
+            match self.cluster.rejoin_final_cut(i) {
+                Ok((shipped, reseeded)) => {
+                    r.shipped_ops += shipped;
+                    r.reseeded_parts += reseeded;
+                    r.rejoined += 1;
+                }
+                // e.g. the peer hosting the serving replica is down too:
+                // leave the node rejoining, a later sweep retries
+                Err(e) => log::warn!("rejoin of node {i} incomplete: {e}"),
+            }
+        }
+        self.total_promoted.fetch_add(r.promoted, std::sync::atomic::Ordering::Relaxed);
+        self.total_healed.fetch_add(r.healed, std::sync::atomic::Ordering::Relaxed);
+        self.total_rejoined.fetch_add(r.rejoined, std::sync::atomic::Ordering::Relaxed);
+        Ok(r)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::storage::cluster::ClusterConfig;
+    use crate::storage::cluster::{ClusterConfig, DurabilityConfig};
     use crate::storage::value::Value;
+    use crate::util::clock;
 
     fn cluster() -> Arc<DbCluster> {
         let c = DbCluster::start(ClusterConfig::default()).unwrap();
@@ -71,20 +131,49 @@ mod tests {
         c
     }
 
+    fn durable_cluster(tag: &str) -> (Arc<DbCluster>, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "schaladb-repl-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = DbCluster::start(ClusterConfig {
+            data_nodes: 2,
+            replication: true,
+            clock: clock::wall(),
+            durability: Some(DurabilityConfig { dir: dir.clone(), group_commit: 4 }),
+        })
+        .unwrap();
+        c.exec(
+            "CREATE TABLE t (id INT NOT NULL, v FLOAT) \
+             PARTITION BY HASH(id) PARTITIONS 4 PRIMARY KEY (id)",
+        )
+        .unwrap();
+        for i in 0..20 {
+            c.execute(&format!("INSERT INTO t (id, v) VALUES ({i}, {i}.5)")).unwrap();
+        }
+        (c, dir)
+    }
+
     #[test]
-    fn kill_promote_revive_heal_cycle() {
+    fn healthy_sweep_is_a_noop() {
+        let c = cluster();
+        let am = AvailabilityManager::new(c);
+        let r = am.sweep().unwrap();
+        assert_eq!(r, SweepReport::default());
+    }
+
+    #[test]
+    fn sweep_detects_dead_primary_and_promotes() {
         let c = cluster();
         let am = AvailabilityManager::new(c.clone());
-
-        // healthy sweep: nothing to do
-        let r = am.sweep().unwrap();
-        assert_eq!(r, SweepReport { dead_nodes: 0, promoted: 0, healed: 0 });
-
-        // kill node 0: its primaries get promoted
+        let epoch0 = c.cluster_epoch();
         c.kill_node(0).unwrap();
         let r = am.sweep().unwrap();
         assert_eq!(r.dead_nodes, 1);
-        assert!(r.promoted > 0);
+        assert!(r.promoted > 0, "node 0 hosted primaries that must be promoted");
+        assert_eq!(r.rejoined, 0);
+        assert!(c.cluster_epoch() > epoch0, "promotion must open a new epoch");
 
         // data fully available during the outage
         let rs = c.query("SELECT COUNT(*) FROM t").unwrap();
@@ -92,8 +181,19 @@ mod tests {
         // and writable (writes land on promoted primaries, with the backup
         // side degraded)
         c.execute("UPDATE t SET v = 99.0 WHERE id = 3").unwrap();
+    }
 
-        // revive: heal re-seeds the stale replicas on node 0
+    #[test]
+    fn kill_promote_revive_heal_cycle() {
+        let c = cluster();
+        let am = AvailabilityManager::new(c.clone());
+
+        c.kill_node(0).unwrap();
+        let r = am.sweep().unwrap();
+        assert!(r.promoted > 0);
+        c.execute("UPDATE t SET v = 99.0 WHERE id = 3").unwrap();
+
+        // revive (memory intact): heal re-seeds the stale replicas
         c.revive_node(0).unwrap();
         let r = am.sweep().unwrap();
         assert!(r.healed > 0, "stale replicas on revived node must be re-seeded");
@@ -104,6 +204,125 @@ mod tests {
         assert!(r.promoted > 0);
         let rs = c.query("SELECT v FROM t WHERE id = 3").unwrap();
         assert_eq!(rs.rows[0].values[0], Value::Float(99.0));
+    }
+
+    #[test]
+    fn sweep_drives_restart_rejoin_handoff() {
+        let (c, dir) = durable_cluster("rejoin");
+        let am = AvailabilityManager::new(c.clone());
+        let fp_before_kill = c.fingerprint().unwrap();
+
+        c.kill_node(1).unwrap();
+        let r = am.sweep().unwrap();
+        assert!(r.promoted > 0);
+        // writes continue against the survivor while node 1 is down
+        c.execute("UPDATE t SET v = -1.0 WHERE id = 5").unwrap();
+        c.execute("INSERT INTO t (id, v) VALUES (100, 0.5)").unwrap();
+
+        // process restart: wiped memory, local recovery, rejoin state
+        let start = c.restart_node(1).unwrap();
+        assert!(start.partitions > 0);
+        let sr = am.sweep().unwrap();
+        assert_eq!(sr.rejoining, 1);
+        assert_eq!(sr.rejoined, 1, "one sweep must complete the hand-off");
+        assert!(c.node(1).unwrap().is_alive(), "node serves again after the cut");
+        assert!(
+            sr.shipped_ops > 0 || sr.reseeded_parts > 0,
+            "catch-up must have moved data: {sr:?}"
+        );
+        assert_eq!(
+            am.total_rejoined.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+
+        // the rejoined node is a faithful replica: kill the survivor and
+        // serve everything from the rejoined one
+        c.kill_node(0).unwrap();
+        let r = am.sweep().unwrap();
+        assert!(r.promoted > 0);
+        let rs = c.query("SELECT COUNT(*) FROM t").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(21));
+        let rs = c.query("SELECT v FROM t WHERE id = 5").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Float(-1.0));
+        assert_ne!(c.fingerprint().unwrap(), fp_before_kill, "writes visible");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejoin_without_peer_stays_pending() {
+        let (c, dir) = durable_cluster("pending");
+        let am = AvailabilityManager::new(c.clone());
+        c.kill_node(0).unwrap();
+        am.sweep().unwrap();
+        c.kill_node(1).unwrap();
+        // node 0 restarts while node 1 (now sole serving replica) is dead:
+        // the hand-off cannot complete, the sweep must not flip it alive
+        c.restart_node(0).unwrap();
+        let r = am.sweep().unwrap();
+        assert_eq!(r.rejoined, 0);
+        assert_eq!(r.rejoining, 1);
+        assert!(!c.node(0).unwrap().is_alive());
+        // once the peer revives, the next sweep completes the rejoin
+        c.revive_node(1).unwrap();
+        let r = am.sweep().unwrap();
+        assert_eq!(r.rejoined, 1);
+        assert!(c.node(0).unwrap().is_alive());
+        let rs = c.query("SELECT COUNT(*) FROM t").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(20));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `replication: false` means some partitions have exactly one
+    /// replica. A restart of their node must still complete the rejoin:
+    /// there is no peer to catch up from, so the local checkpoint + WAL
+    /// recovery is authoritative and the sweep flips the node back alive.
+    #[test]
+    fn sole_replica_rejoin_completes_from_local_recovery() {
+        use crate::storage::checkpoint::checkpoint_node;
+        let dir = std::env::temp_dir().join(format!(
+            "schaladb-repl-sole-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = DbCluster::start(ClusterConfig {
+            data_nodes: 2,
+            replication: false,
+            clock: clock::wall(),
+            durability: Some(DurabilityConfig { dir: dir.clone(), group_commit: 4 }),
+        })
+        .unwrap();
+        c.exec(
+            "CREATE TABLE t (id INT NOT NULL, v FLOAT) \
+             PARTITION BY HASH(id) PARTITIONS 4 PRIMARY KEY (id)",
+        )
+        .unwrap();
+        for i in 0..20 {
+            c.execute(&format!("INSERT INTO t (id, v) VALUES ({i}, {i}.5)")).unwrap();
+        }
+        checkpoint_node(&c, 1).unwrap();
+        for i in 20..30 {
+            c.execute(&format!("INSERT INTO t (id, v) VALUES ({i}, {i}.5)")).unwrap();
+        }
+        let before = c.table_rows("t").unwrap();
+        assert_eq!(before, 30);
+
+        let am = AvailabilityManager::new(c.clone());
+        c.kill_node(1).unwrap();
+        let r = am.sweep().unwrap();
+        assert_eq!(r.promoted, 0, "nothing to promote without backups");
+        assert!(c.table_rows("t").unwrap() < before, "sole replicas are down");
+
+        let start = c.restart_node(1).unwrap();
+        assert!(start.from_checkpoint > 0);
+        let r = am.sweep().unwrap();
+        assert_eq!(r.rejoined, 1, "sole-replica node must not wedge in Rejoining");
+        assert!(c.node(1).unwrap().is_alive());
+        assert_eq!(
+            c.table_rows("t").unwrap(),
+            before,
+            "checkpoint + WAL tail must restore every sole replica"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,16 +1,36 @@
-//! Redo logging for data nodes.
+//! Redo logging for data nodes: per-partition WAL segments with group
+//! commit.
 //!
 //! The paper runs MySQL Cluster fully in-memory with "occasional on-disk
-//! checkpoints". We mirror that: every committed mutation appends a redo
-//! record to the node's WAL buffer; the buffer is only flushed to disk when
-//! a checkpoint is cut (or when the caller opts into eager flushing, used by
-//! the durability tests). Recovery = load checkpoint + replay the WAL tail.
+//! checkpoints"; NDB's durability unit is the *fragment* (our partition).
+//! Earlier revisions kept one flat per-node log; that made checkpointing a
+//! stop-the-world affair and gave a restarting node no way to reason about
+//! how far each of its partitions had progressed. The log is now organized
+//! as one [`Segment`] per hosted `(table, partition)`:
+//!
+//! - every committed mutation is a [`WalRecord`]: the redo op plus the
+//!   partition's **log sequence number** (the partition version right after
+//!   the op applied — dense, per partition) and the **cluster epoch** it
+//!   committed under (bumped on every failover promotion; see
+//!   `PartitionStore::apply_redo` for the fencing rule);
+//! - a commit appends its records to the owning segments and counts one
+//!   commit toward the **group commit** window: the buffered sink writers
+//!   are flushed once every `group_commit` commits rather than per record,
+//!   so the claim loop's point commits amortize the file write;
+//! - a checkpoint cut truncates a segment up to the checkpointed LSN; the
+//!   retained tail doubles as the **redo-ship stream** a rejoining node
+//!   catches up from ([`Segment::tail_since`]).
+//!
+//! Recovery = load the partition checkpoint + replay the segment tail,
+//! stopping cleanly at a torn final line (a crash mid-append must not turn
+//! into a parse error).
 
 use crate::storage::value::{Row, Value};
 use crate::{Error, Result};
+use rustc_hash::FxHashMap;
 use std::fmt::Write as _;
 use std::io::{BufWriter, Write as _};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 /// One redo record: a row-level mutation on a (table, partition).
@@ -32,6 +52,15 @@ impl LogOp {
             LogOp::Insert { table, .. } | LogOp::Update { table, .. } | LogOp::Delete { table, .. } => {
                 table
             }
+        }
+    }
+
+    /// Partition index the op applies to.
+    pub fn pidx(&self) -> usize {
+        match self {
+            LogOp::Insert { pidx, .. }
+            | LogOp::Update { pidx, .. }
+            | LogOp::Delete { pidx, .. } => *pidx,
         }
     }
 
@@ -151,101 +180,355 @@ pub fn decode_value(tok: &str) -> Result<Value> {
     })
 }
 
-/// Per-node write-ahead log: an in-memory buffer with an optional file sink.
-pub struct Wal {
-    buffer: Vec<LogOp>,
-    /// Sequence number of the first op in `buffer` (ops before it were
-    /// truncated by a checkpoint).
-    base_seq: u64,
-    sink: Option<PathBuf>,
-    /// Persistent handle to the sink file. The log used to reopen the file
-    /// for every appended record — a syscall triplet (open/write/close) on
-    /// each committed transaction. The handle is now opened once on first
-    /// append and writes go through a `BufWriter` that is flushed at
-    /// checkpoint cuts ([`Wal::truncate_before`] / [`Wal::flush_sink`]) and
-    /// on drop, matching the paper's "in-memory with occasional on-disk
-    /// checkpoints" durability model.
+/// One redo record as it travels through a segment: the op, the partition
+/// LSN right after it applied, and the cluster epoch it committed under.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WalRecord {
+    pub lsn: u64,
+    pub epoch: u64,
+    pub op: LogOp,
+}
+
+impl WalRecord {
+    /// One line: `lsn\tepoch\t<op line>\t#<fnv1a32>`. The trailing checksum
+    /// exists for torn-tail detection: a crash can cut the final line at
+    /// any byte, and without it a tear inside the last token could still
+    /// parse as a valid, shorter record.
+    pub fn to_line(&self) -> String {
+        let payload = format!("{}\t{}\t{}", self.lsn, self.epoch, self.op.to_line());
+        let sum = line_checksum(payload.as_bytes());
+        format!("{payload}\t#{sum:08x}")
+    }
+
+    /// Parse one serialized record line, verifying the checksum.
+    pub fn from_line(line: &str) -> Result<WalRecord> {
+        let (payload, tail) = line
+            .rsplit_once('\t')
+            .ok_or_else(|| Error::Parse("WAL record missing checksum".into()))?;
+        let sum = tail
+            .strip_prefix('#')
+            .ok_or_else(|| Error::Parse("WAL record missing checksum tag".into()))?;
+        let want = u32::from_str_radix(sum, 16)
+            .map_err(|e| Error::Parse(format!("bad WAL checksum: {e}")))?;
+        let got = line_checksum(payload.as_bytes());
+        if got != want {
+            return Err(Error::Parse(format!(
+                "WAL checksum mismatch ({got:08x} != {want:08x})"
+            )));
+        }
+        let mut it = payload.splitn(3, '\t');
+        let lsn: u64 = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Parse("WAL record missing lsn".into()))?;
+        let epoch: u64 = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Parse("WAL record missing epoch".into()))?;
+        let rest = it
+            .next()
+            .ok_or_else(|| Error::Parse("WAL record missing op".into()))?;
+        Ok(WalRecord { lsn, epoch, op: LogOp::from_line(rest)? })
+    }
+}
+
+/// FNV-1a over a record line's payload (fast, no tables, good enough to
+/// catch arbitrary-byte tears).
+fn line_checksum(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= u32::from(b);
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Upper bound on records a segment retains **in memory**. The retained
+/// tail is the rejoin redo-ship source; beyond the cap the oldest half is
+/// dropped (advancing `base_lsn`), and a replica that fell further behind
+/// re-seeds from a snapshot instead. This bounds memory on long-running
+/// clusters that never cut checkpoints (the `durability: None` default);
+/// the on-disk sink, where configured, keeps everything until a
+/// checkpoint truncates it.
+const SEGMENT_RETAIN_CAP: usize = 8192;
+
+/// The redo log of one `(table, partition)` replica on one node.
+///
+/// In memory it retains the recent record tail since the last checkpoint
+/// cut (the rejoin catch-up source, bounded by [`SEGMENT_RETAIN_CAP`]); on
+/// disk — when the cluster runs with a durability dir — it appends records
+/// to `<table>.p<idx>.wal` through a buffered writer that the owning
+/// [`NodeWal`] flushes on group-commit boundaries.
+pub struct Segment {
+    records: Vec<WalRecord>,
+    /// Every record with `lsn <= base_lsn` has been truncated by a
+    /// checkpoint cut or evicted by the retention cap (or never existed on
+    /// this node: a rejoined replica starts its segment at the LSN it
+    /// rejoined at).
+    base_lsn: u64,
+    path: Option<PathBuf>,
     writer: Option<BufWriter<std::fs::File>>,
 }
 
-impl Wal {
-    pub fn new() -> Wal {
-        Wal { buffer: Vec::new(), base_seq: 0, sink: None, writer: None }
+impl Segment {
+    fn new(path: Option<PathBuf>) -> Segment {
+        Segment { records: Vec::new(), base_lsn: 0, path, writer: None }
     }
 
-    /// Enable writing appended records to `path` (buffered; see `writer`).
-    pub fn with_sink(path: PathBuf) -> Wal {
-        Wal { buffer: Vec::new(), base_seq: 0, sink: Some(path), writer: None }
-    }
-
-    /// Append a committed op. Returns its sequence number.
-    pub fn append(&mut self, op: LogOp) -> Result<u64> {
-        if let Some(path) = &self.sink {
+    fn append(&mut self, rec: WalRecord) -> Result<()> {
+        if let Some(p) = &self.path {
             if self.writer.is_none() {
-                let f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+                let f = std::fs::OpenOptions::new().create(true).append(true).open(p)?;
                 self.writer = Some(BufWriter::new(f));
             }
-            let w = self.writer.as_mut().expect("sink writer just opened");
-            writeln!(w, "{}", op.to_line())?;
+            let w = self.writer.as_mut().expect("segment writer just opened");
+            writeln!(w, "{}", rec.to_line())?;
         }
-        self.buffer.push(op);
-        Ok(self.base_seq + self.buffer.len() as u64 - 1)
+        self.records.push(rec);
+        if self.records.len() > SEGMENT_RETAIN_CAP {
+            // retention cap: drop the oldest half of the in-memory tail
+            // (amortized O(1) per append), keeping base_lsn honest so
+            // tail_since reports the gap instead of serving a hole
+            self.records.sort_by_key(|r| r.lsn);
+            let drop = self.records.len() - SEGMENT_RETAIN_CAP / 2;
+            self.base_lsn = self.base_lsn.max(self.records[drop - 1].lsn);
+            self.records.drain(..drop);
+        }
+        Ok(())
     }
 
-    /// Flush buffered sink writes to the file (no-op without a sink).
-    pub fn flush_sink(&mut self) -> Result<()> {
+    fn flush(&mut self) -> Result<()> {
         if let Some(w) = self.writer.as_mut() {
             w.flush()?;
         }
         Ok(())
     }
 
-    /// Next sequence number to be assigned.
-    pub fn next_seq(&self) -> u64 {
-        self.base_seq + self.buffer.len() as u64
+    /// LSN below which nothing is retained.
+    pub fn base_lsn(&self) -> u64 {
+        self.base_lsn
     }
 
-    /// Ops with sequence numbers >= `from_seq` (the tail to replay on top of
-    /// a checkpoint cut at `from_seq`).
-    pub fn tail(&self, from_seq: u64) -> &[LogOp] {
-        let skip = from_seq.saturating_sub(self.base_seq) as usize;
-        &self.buffer[skip.min(self.buffer.len())..]
+    /// Highest retained LSN (the base when the tail is empty).
+    pub fn max_lsn(&self) -> u64 {
+        self.records.iter().map(|r| r.lsn).max().unwrap_or(self.base_lsn)
     }
 
-    /// Drop ops covered by a checkpoint cut at `seq` (all ops < seq). A
-    /// checkpoint cut is the durability boundary, so the sink is flushed
-    /// first — and a flush failure aborts the cut *before* the in-memory
-    /// buffer (the only other copy of those records) is drained.
-    pub fn truncate_before(&mut self, seq: u64) -> Result<()> {
-        self.flush_sink()?;
-        let drop = seq.saturating_sub(self.base_seq) as usize;
-        let drop = drop.min(self.buffer.len());
-        self.buffer.drain(..drop);
-        self.base_seq += drop as u64;
-        Ok(())
-    }
-
+    /// Retained record count.
     pub fn len(&self) -> usize {
-        self.buffer.len()
+        self.records.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.buffer.is_empty()
+        self.records.is_empty()
+    }
+
+    /// The redo-ship stream for a replica whose partition is at `lsn`:
+    /// every retained record with a higher LSN, in LSN order. Returns
+    /// `None` when the segment cannot cover the gap (the records below
+    /// `base_lsn` were truncated by a checkpoint) — the caller must fall
+    /// back to a full snapshot re-seed.
+    pub fn tail_since(&self, lsn: u64) -> Option<Vec<WalRecord>> {
+        if lsn < self.base_lsn {
+            return None;
+        }
+        let mut out: Vec<WalRecord> =
+            self.records.iter().filter(|r| r.lsn > lsn).cloned().collect();
+        out.sort_by_key(|r| r.lsn);
+        Some(out)
+    }
+
+    /// Checkpoint cut: drop records with `lsn <= cut`. The sink file is
+    /// flushed and rewritten with the retained tail — via a temp file and
+    /// an atomic rename, so a crash mid-rewrite leaves either the old or
+    /// the new segment file, never a truncated one.
+    fn truncate_upto(&mut self, cut: u64) -> Result<()> {
+        self.flush()?;
+        self.records.retain(|r| r.lsn > cut);
+        self.base_lsn = self.base_lsn.max(cut);
+        if let Some(p) = &self.path {
+            let tmp = p.with_extension("wal.tmp");
+            {
+                let f = std::fs::File::create(&tmp)?;
+                let mut w = BufWriter::new(f);
+                for r in &self.records {
+                    writeln!(w, "{}", r.to_line())?;
+                }
+                w.flush()?;
+            }
+            self.writer = None; // close the old handle before the swap
+            std::fs::rename(&tmp, p)?;
+            let f = std::fs::OpenOptions::new().create(true).append(true).open(p)?;
+            self.writer = Some(BufWriter::new(f));
+        }
+        Ok(())
+    }
+
+    /// Drop the in-memory tail and rebase at `base` without touching the
+    /// sink file (rejoin: the file's history was already replayed; the
+    /// post-rejoin checkpoint cut rewrites it).
+    fn reset(&mut self, base: u64) {
+        self.records.clear();
+        self.base_lsn = base;
     }
 }
 
-impl Default for Wal {
+/// A node's write-ahead log: one [`Segment`] per hosted `(table, partition)`
+/// plus the group-commit machinery.
+///
+/// Group commit rule: a commit's records are appended to the in-memory
+/// segments immediately (they must be visible to the redo-ship stream), but
+/// the buffered sink writers are only flushed once `group_commit` commits
+/// have accumulated — batching many small commits into one file write. A
+/// checkpoint cut always flushes first (it is the durability boundary).
+pub struct NodeWal {
+    segments: FxHashMap<(String, usize), Segment>,
+    dir: Option<PathBuf>,
+    group_commit: usize,
+    pending: usize,
+    /// Commits appended since start (monitoring).
+    pub commits: u64,
+    /// Sink flushes performed (monitoring; the group-commit ratio).
+    pub flushes: u64,
+}
+
+impl NodeWal {
+    /// Memory-only log (no durability dir configured).
+    pub fn new() -> NodeWal {
+        NodeWal {
+            segments: FxHashMap::default(),
+            dir: None,
+            group_commit: 1,
+            pending: 0,
+            commits: 0,
+            flushes: 0,
+        }
+    }
+
+    /// Log with file sinks under `dir` (one file per segment), flushing
+    /// every `group_commit` commits.
+    pub fn with_dir(dir: PathBuf, group_commit: usize) -> NodeWal {
+        NodeWal {
+            segments: FxHashMap::default(),
+            dir: Some(dir),
+            group_commit: group_commit.max(1),
+            pending: 0,
+            commits: 0,
+            flushes: 0,
+        }
+    }
+
+    fn segment_mut(&mut self, table: &str, pidx: usize) -> &mut Segment {
+        let key = (table.to_lowercase(), pidx);
+        let dir = self.dir.as_deref();
+        self.segments.entry(key).or_insert_with_key(|k| {
+            Segment::new(dir.map(|d| d.join(format!("{}.p{}.wal", k.0, k.1))))
+        })
+    }
+
+    /// Segment of one partition, if any commit or cut created it.
+    pub fn segment(&self, table: &str, pidx: usize) -> Option<&Segment> {
+        self.segments.get(&(table.to_lowercase(), pidx))
+    }
+
+    /// Append one commit's records (`(lsn, op)` pairs, all partitions the
+    /// commit touched on this node) under `epoch`, then apply the group
+    /// commit rule.
+    pub fn commit(&mut self, epoch: u64, ops: &[(u64, LogOp)]) -> Result<()> {
+        for (lsn, op) in ops {
+            let rec = WalRecord { lsn: *lsn, epoch, op: op.clone() };
+            self.segment_mut(op.table(), op.pidx()).append(rec)?;
+        }
+        self.commits += 1;
+        self.pending += 1;
+        if self.pending >= self.group_commit {
+            self.flush_all()?;
+        }
+        Ok(())
+    }
+
+    /// Flush every segment's sink writer (group-commit boundary, shutdown,
+    /// checkpoint cut).
+    pub fn flush_all(&mut self) -> Result<()> {
+        for s in self.segments.values_mut() {
+            s.flush()?;
+        }
+        if self.dir.is_some() && self.pending > 0 {
+            self.flushes += 1;
+        }
+        self.pending = 0;
+        Ok(())
+    }
+
+    /// Redo-ship stream for `(table, pidx)` from `lsn` (see
+    /// [`Segment::tail_since`]); `None` when the segment does not exist or
+    /// cannot cover the gap.
+    pub fn tail_since(&self, table: &str, pidx: usize, lsn: u64) -> Option<Vec<WalRecord>> {
+        self.segments.get(&(table.to_lowercase(), pidx))?.tail_since(lsn)
+    }
+
+    /// Checkpoint cut for one partition: flush, drop records with
+    /// `lsn <= cut`, rewrite the sink with the retained tail.
+    pub fn truncate_upto(&mut self, table: &str, pidx: usize, cut: u64) -> Result<()> {
+        self.flush_all()?;
+        self.segment_mut(table, pidx).truncate_upto(cut)
+    }
+
+    /// Rebase one partition's segment at `base` with an empty tail
+    /// (rejoin hand-off; the sink file is left for the next checkpoint cut
+    /// to rewrite).
+    pub fn reset_segment(&mut self, table: &str, pidx: usize, base: u64) {
+        self.segment_mut(table, pidx).reset(base);
+    }
+
+    /// Retained records across all segments (tests/monitoring).
+    pub fn total_records(&self) -> usize {
+        self.segments.values().map(|s| s.len()).sum()
+    }
+}
+
+impl Default for NodeWal {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl Drop for Wal {
+impl Drop for NodeWal {
     fn drop(&mut self) {
         // Best-effort: `BufWriter`'s own drop also flushes, but doing it
         // here surfaces the intent (flush on checkpoint *and* shutdown).
-        let _ = self.flush_sink();
+        let _ = self.flush_all();
     }
+}
+
+/// Read a segment file back, stopping **cleanly** at a torn tail: a crash
+/// can truncate the final line mid-byte, and recovery must treat that as
+/// "the log ends here", not as corruption. A parse failure that is *not*
+/// on the final line is real corruption and errors out.
+pub fn read_segment_file(path: &Path) -> Result<Vec<WalRecord>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e.into()),
+    };
+    let lines: Vec<&str> = text.split('\n').collect();
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        match WalRecord::from_line(line) {
+            Ok(r) => out.push(r),
+            Err(e) => {
+                let rest_is_tail = lines[i + 1..].iter().all(|l| l.is_empty());
+                if rest_is_tail {
+                    break; // torn tail: replay stops here
+                }
+                return Err(e);
+            }
+        }
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -260,6 +543,13 @@ mod tests {
             Value::Null,
             Value::Bool(true),
         ]))
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("schaladb-wal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
     }
 
     #[test]
@@ -277,10 +567,70 @@ mod tests {
     }
 
     #[test]
-    fn float_bits_roundtrip_exactly() {
-        for f in [0.1, -0.0, f64::MAX, f64::MIN_POSITIVE, 1e-300] {
-            let v = decode_value(&encode_value(&Value::Float(f))).unwrap();
-            assert_eq!(v, Value::Float(f));
+    fn walrecord_line_roundtrip() {
+        let rec = WalRecord {
+            lsn: 42,
+            epoch: 3,
+            op: LogOp::Insert { table: "wq".into(), pidx: 1, slot: 0, row: row() },
+        };
+        let back = WalRecord::from_line(&rec.to_line()).unwrap();
+        assert_eq!(rec, back);
+        assert!(WalRecord::from_line("notanumber\t0\tD\tt\t0\t0").is_err());
+        assert!(WalRecord::from_line("1\t0").is_err());
+    }
+
+    /// Property-style round-trip across every `Value` variant, including
+    /// the quoting/escape edge cases the text format has to survive.
+    #[test]
+    fn value_roundtrip_all_variants() {
+        let mut vals = vec![
+            Value::Null,
+            Value::Int(0),
+            Value::Int(i64::MIN),
+            Value::Int(i64::MAX),
+            Value::Bool(true),
+            Value::Bool(false),
+            Value::Float(0.0),
+            Value::Float(-0.0),
+            Value::Float(f64::INFINITY),
+            Value::Float(f64::NEG_INFINITY),
+            Value::Float(f64::MAX),
+            Value::Float(f64::MIN_POSITIVE),
+            Value::Float(1e-300),
+            Value::str(""),
+            Value::str("plain"),
+            Value::str("tab\tnewline\nback\\slash"),
+            Value::str("\\t literal backslash-t"),
+            Value::str("trailing backslash \\"),
+            Value::str("\t\n\\"),
+            Value::str("quote ' and double \" and unicode s\u{00e9}quen\u{00e7}e \u{2603}"),
+            Value::str("it's; DROP TABLE x -- '"),
+        ];
+        // a deterministic pseudo-random sweep over escape-heavy strings
+        let mut x: u64 = 0x9e3779b97f4a7c15;
+        for _ in 0..200 {
+            let mut s = String::new();
+            for _ in 0..(x % 17) {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let c = match x % 7 {
+                    0 => '\t',
+                    1 => '\n',
+                    2 => '\\',
+                    3 => 't',
+                    4 => 'n',
+                    5 => '\u{00e9}',
+                    _ => 'a',
+                };
+                s.push(c);
+            }
+            vals.push(Value::str(s));
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        }
+        for v in vals {
+            let tok = encode_value(&v);
+            assert!(!tok.contains('\t') && !tok.contains('\n'), "token must stay one field");
+            let back = decode_value(&tok).unwrap();
+            assert_eq!(v, back, "round-trip failed for {v:?}");
         }
         // NaN round-trips by bits
         let v = decode_value(&encode_value(&Value::Float(f64::NAN))).unwrap();
@@ -291,62 +641,159 @@ mod tests {
     }
 
     #[test]
-    fn wal_seq_tail_truncate() {
-        let mut w = Wal::new();
-        for i in 0..5 {
-            let seq = w
-                .append(LogOp::Delete { table: "t".into(), pidx: 0, slot: i })
-                .unwrap();
-            assert_eq!(seq, i as u64);
+    fn segment_tail_and_truncate() {
+        let mut s = Segment::new(None);
+        for lsn in 1..=5u64 {
+            s.append(WalRecord {
+                lsn,
+                epoch: 0,
+                op: LogOp::Delete { table: "t".into(), pidx: 0, slot: lsn as usize },
+            })
+            .unwrap();
         }
-        assert_eq!(w.next_seq(), 5);
-        assert_eq!(w.tail(2).len(), 3);
-        w.truncate_before(3).unwrap();
-        assert_eq!(w.len(), 2);
-        assert_eq!(w.next_seq(), 5);
-        assert_eq!(w.tail(3).len(), 2);
-        assert_eq!(w.tail(0).len(), 2); // clamped
+        assert_eq!(s.max_lsn(), 5);
+        let tail = s.tail_since(2).unwrap();
+        assert_eq!(tail.len(), 3);
+        assert_eq!(tail[0].lsn, 3);
+        assert_eq!(s.tail_since(5).unwrap().len(), 0);
+        s.truncate_upto(3).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.base_lsn(), 3);
+        // a replica below the base cannot be served from this segment
+        assert!(s.tail_since(2).is_none());
+        assert_eq!(s.tail_since(3).unwrap().len(), 2);
     }
 
     #[test]
-    fn wal_file_sink_appends_lines() {
-        let dir = std::env::temp_dir().join(format!("schaladb-wal-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("node0.wal");
-        let _ = std::fs::remove_file(&path);
-        {
-            let mut w = Wal::with_sink(path.clone());
-            w.append(LogOp::Delete { table: "t".into(), pidx: 0, slot: 1 }).unwrap();
-            w.append(LogOp::Insert { table: "t".into(), pidx: 0, slot: 1, row: row() })
-                .unwrap();
+    fn group_commit_batches_flushes() {
+        let dir = tmpdir("group");
+        let mut w = NodeWal::with_dir(dir.clone(), 4);
+        let op = |lsn: u64| {
+            (lsn, LogOp::Delete { table: "t".into(), pidx: 0, slot: lsn as usize })
+        };
+        for lsn in 1..=3u64 {
+            w.commit(0, &[op(lsn)]).unwrap();
         }
-        let text = std::fs::read_to_string(&path).unwrap();
-        let lines: Vec<&str> = text.lines().collect();
-        assert_eq!(lines.len(), 2);
-        assert!(lines[0].starts_with("D\t"));
-        assert!(lines[1].starts_with("I\t"));
-        let _ = std::fs::remove_file(&path);
+        assert_eq!(w.flushes, 0, "3 commits under a group of 4 must not flush");
+        w.commit(0, &[op(4)]).unwrap();
+        assert_eq!(w.flushes, 1, "4th commit closes the group");
+        let text = std::fs::read_to_string(dir.join("t.p0.wal")).unwrap();
+        assert_eq!(text.lines().count(), 4);
+        // per-op mode flushes every commit
+        let dir2 = tmpdir("group1");
+        let mut w1 = NodeWal::with_dir(dir2.clone(), 1);
+        w1.commit(0, &[op(1)]).unwrap();
+        w1.commit(0, &[op(2)]).unwrap();
+        assert_eq!(w1.flushes, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir2);
     }
 
     #[test]
-    fn sink_flushes_on_checkpoint_cut_and_explicitly() {
-        let dir = std::env::temp_dir().join(format!("schaladb-walbuf-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("buf.wal");
-        let _ = std::fs::remove_file(&path);
-        let mut w = Wal::with_sink(path.clone());
-        w.append(LogOp::Delete { table: "t".into(), pidx: 0, slot: 1 }).unwrap();
-        // a checkpoint cut is a durability boundary: the record must be on
-        // disk afterwards even though the writer is buffered
-        w.truncate_before(1).unwrap();
-        let text = std::fs::read_to_string(&path).unwrap();
-        assert_eq!(text.lines().count(), 1);
-        w.append(LogOp::Delete { table: "t".into(), pidx: 0, slot: 2 }).unwrap();
-        w.flush_sink().unwrap();
-        let text = std::fs::read_to_string(&path).unwrap();
+    fn commits_split_per_partition_segment() {
+        let mut w = NodeWal::new();
+        w.commit(
+            0,
+            &[
+                (1, LogOp::Delete { table: "t".into(), pidx: 0, slot: 1 }),
+                (1, LogOp::Delete { table: "t".into(), pidx: 2, slot: 1 }),
+                (1, LogOp::Delete { table: "u".into(), pidx: 0, slot: 1 }),
+            ],
+        )
+        .unwrap();
+        assert_eq!(w.segment("t", 0).unwrap().len(), 1);
+        assert_eq!(w.segment("t", 2).unwrap().len(), 1);
+        assert_eq!(w.segment("u", 0).unwrap().len(), 1);
+        assert!(w.segment("t", 1).is_none());
+        assert_eq!(w.total_records(), 3);
+        // table keys are case-insensitive
+        assert_eq!(w.segment("T", 0).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn truncate_rewrites_sink_with_retained_tail() {
+        let dir = tmpdir("trunc");
+        let mut w = NodeWal::with_dir(dir.clone(), 1);
+        for lsn in 1..=4u64 {
+            w.commit(0, &[(lsn, LogOp::Delete { table: "t".into(), pidx: 0, slot: 0 })])
+                .unwrap();
+        }
+        w.truncate_upto("t", 0, 3).unwrap();
+        let text = std::fs::read_to_string(dir.join("t.p0.wal")).unwrap();
+        assert_eq!(text.lines().count(), 1, "only the post-cut tail survives on disk");
+        assert!(text.starts_with("4\t"));
+        // appends continue into the rewritten file
+        w.commit(0, &[(5, LogOp::Delete { table: "t".into(), pidx: 0, slot: 0 })]).unwrap();
+        w.flush_all().unwrap();
+        let text = std::fs::read_to_string(dir.join("t.p0.wal")).unwrap();
         assert_eq!(text.lines().count(), 2);
-        drop(w);
-        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_stops_replay_cleanly() {
+        let dir = tmpdir("torn");
+        let path = dir.join("t.p0.wal");
+        let good1 = WalRecord {
+            lsn: 1,
+            epoch: 0,
+            op: LogOp::Insert { table: "t".into(), pidx: 0, slot: 0, row: row() },
+        };
+        let good2 = WalRecord {
+            lsn: 2,
+            epoch: 0,
+            op: LogOp::Delete { table: "t".into(), pidx: 0, slot: 0 },
+        };
+        // a full line, then a line torn mid-record (no trailing newline)
+        let torn = format!("{}\n{}\n3\t0\tI\tt\t0", good1.to_line(), good2.to_line());
+        std::fs::write(&path, torn).unwrap();
+        let recs = read_segment_file(&path).unwrap();
+        assert_eq!(recs.len(), 2, "replay must stop at the torn tail, not error");
+        assert_eq!(recs[0], good1);
+        assert_eq!(recs[1], good2);
+        // corruption *before* the tail is a real error
+        let bad = format!("{}\nGARBAGE LINE\n{}\n", good1.to_line(), good2.to_line());
+        std::fs::write(&path, bad).unwrap();
+        assert!(read_segment_file(&path).is_err());
+        // a missing file is an empty log
+        assert!(read_segment_file(&dir.join("absent.wal")).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checksum_catches_inner_tears() {
+        let rec = WalRecord {
+            lsn: 12,
+            epoch: 0,
+            op: LogOp::Insert { table: "wq".into(), pidx: 0, slot: 5, row: row() },
+        };
+        let line = rec.to_line();
+        assert_eq!(WalRecord::from_line(&line).unwrap(), rec);
+        // a tear that still looks like a structurally valid, shorter line
+        // must fail the checksum, not parse as a different record
+        let torn = &line[..line.len() - 12];
+        assert!(WalRecord::from_line(torn).is_err());
+        // flipping one payload byte is caught too
+        let corrupt = line.replacen("wq", "wx", 1);
+        assert!(WalRecord::from_line(&corrupt).is_err());
+    }
+
+    #[test]
+    fn retention_cap_bounds_memory_and_reports_gap() {
+        let mut s = Segment::new(None);
+        for lsn in 1..=(SEGMENT_RETAIN_CAP as u64 + 1) {
+            s.append(WalRecord {
+                lsn,
+                epoch: 0,
+                op: LogOp::Delete { table: "t".into(), pidx: 0, slot: 0 },
+            })
+            .unwrap();
+        }
+        assert!(s.len() <= SEGMENT_RETAIN_CAP, "cap must bound the retained tail");
+        assert!(s.base_lsn() > 0, "eviction must advance the base");
+        assert!(s.tail_since(0).is_none(), "an evicted range must read as a gap");
+        let tail = s.tail_since(s.base_lsn()).unwrap();
+        assert_eq!(tail.len(), s.len());
     }
 
     #[test]

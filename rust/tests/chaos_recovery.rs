@@ -1,0 +1,408 @@
+//! Chaos / recovery gate: kill a data node mid-workload, restart it from
+//! its per-partition checkpoints + WAL segment tails, let the availability
+//! sweep drive the redo-ship catch-up and the serving hand-off — and
+//! demand that the surviving cluster's state is **byte-equal** to a
+//! never-killed twin cluster fed the identical committed stream.
+//!
+//! The twin protocol: every operation is applied to cluster A (the chaos
+//! victim, running with durable per-partition WAL segments) and, iff A
+//! committed it, to cluster B (plain, never touched). Since both clusters
+//! use canonical slot allocation and the same deterministic op stream,
+//! their `fingerprint()` — a sorted serialization of all committed rows —
+//! must match at every quiescent point, including after kill → restart →
+//! rejoin → re-promotion.
+//!
+//! The CI `chaos-recovery` job runs this under a seed × partition matrix
+//! via `CHAOS_SEED` / `CHAOS_PARTITIONS`; a plain `cargo test` sweeps a
+//! small built-in matrix.
+
+use schaladb::storage::checkpoint::checkpoint_node;
+use schaladb::storage::cluster::{ClusterConfig, DurabilityConfig};
+use schaladb::storage::replication::AvailabilityManager;
+use schaladb::storage::{AccessKind, DbCluster, Prepared, Value};
+use schaladb::util::clock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Deterministic LCG so every (seed, partitions) cell replays identically.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 11
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n.max(1)
+    }
+}
+
+fn schema(c: &DbCluster, parts: usize) {
+    c.exec(&format!(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
+         status TEXT, dur FLOAT) \
+         PARTITION BY HASH(workerid) PARTITIONS {parts} \
+         PRIMARY KEY (taskid) INDEX (status)"
+    ))
+    .unwrap();
+    c.exec("CREATE TABLE prov (provid INT NOT NULL, taskid INT, note TEXT) PRIMARY KEY (provid)")
+        .unwrap();
+}
+
+/// The prepared statement set one cluster runs the stream through.
+struct Stmts {
+    insert: Prepared,
+    claim: Prepared,
+    finish: Prepared,
+    delete: Prepared,
+    prov: Prepared,
+}
+
+impl Stmts {
+    fn prepare(c: &DbCluster) -> Stmts {
+        Stmts {
+            insert: c
+                .prepare(
+                    "INSERT INTO workqueue (taskid, workerid, status, dur) \
+                     VALUES (?, ?, 'READY', ?)",
+                )
+                .unwrap(),
+            claim: c
+                .prepare(
+                    "UPDATE workqueue SET status = 'RUNNING' \
+                     WHERE taskid = ? AND workerid = ? AND status = 'READY'",
+                )
+                .unwrap(),
+            finish: c
+                .prepare(
+                    "UPDATE workqueue SET status = 'FINISHED', dur = dur + 1.5 \
+                     WHERE taskid = ? AND workerid = ?",
+                )
+                .unwrap(),
+            delete: c
+                .prepare("DELETE FROM workqueue WHERE taskid = ? AND workerid = ?")
+                .unwrap(),
+            prov: c
+                .prepare("INSERT INTO prov (provid, taskid, note) VALUES (?, ?, ?)")
+                .unwrap(),
+        }
+    }
+}
+
+/// One op of the committed stream.
+#[derive(Clone, Debug)]
+enum Op {
+    Insert { id: i64, worker: i64, dur: f64 },
+    Claim { id: i64, worker: i64 },
+    Finish { id: i64, worker: i64 },
+    Delete { id: i64, worker: i64 },
+    Prov { id: i64, task: i64, note: String },
+}
+
+fn apply(c: &DbCluster, s: &Stmts, op: &Op) -> schaladb::Result<usize> {
+    let r = match op {
+        Op::Insert { id, worker, dur } => c.exec_prepared(
+            0,
+            AccessKind::InsertTasks,
+            &s.insert,
+            &[Value::Int(*id), Value::Int(*worker), Value::Float(*dur)],
+        )?,
+        Op::Claim { id, worker } => c.exec_prepared(
+            0,
+            AccessKind::UpdateToRunning,
+            &s.claim,
+            &[Value::Int(*id), Value::Int(*worker)],
+        )?,
+        Op::Finish { id, worker } => c.exec_prepared(
+            0,
+            AccessKind::UpdateToFinished,
+            &s.finish,
+            &[Value::Int(*id), Value::Int(*worker)],
+        )?,
+        Op::Delete { id, worker } => c.exec_prepared(
+            0,
+            AccessKind::Other,
+            &s.delete,
+            &[Value::Int(*id), Value::Int(*worker)],
+        )?,
+        Op::Prov { id, task, note } => c.exec_prepared(
+            0,
+            AccessKind::InsertProvenance,
+            &s.prov,
+            &[Value::Int(*id), Value::Int(*task), Value::str(note.clone())],
+        )?,
+    };
+    Ok(r.affected())
+}
+
+/// The chaos driver: streams ops into A; every op A commits is mirrored to
+/// B (the never-killed twin). Tracks live task ids so later ops reference
+/// real rows.
+struct Driver {
+    a: Arc<DbCluster>,
+    b: Arc<DbCluster>,
+    sa: Stmts,
+    sb: Stmts,
+    rng: Rng,
+    parts: i64,
+    next_id: i64,
+    next_prov: i64,
+    /// (taskid, workerid) of rows believed live on both clusters.
+    live: Vec<(i64, i64)>,
+}
+
+impl Driver {
+    fn new(a: Arc<DbCluster>, b: Arc<DbCluster>, seed: u64, parts: usize) -> Driver {
+        let sa = Stmts::prepare(&a);
+        let sb = Stmts::prepare(&b);
+        Driver {
+            a,
+            b,
+            sa,
+            sb,
+            rng: Rng(seed.wrapping_mul(0x9e3779b97f4a7c15) | 1),
+            parts: parts as i64,
+            next_id: 0,
+            next_prov: 0,
+            live: Vec::new(),
+        }
+    }
+
+    fn gen(&mut self) -> Op {
+        let roll = self.rng.below(10);
+        if self.live.is_empty() || roll < 4 {
+            let id = self.next_id;
+            self.next_id += 1;
+            return Op::Insert {
+                id,
+                worker: self.rng.below(self.parts as u64) as i64,
+                dur: (self.rng.below(1000) as f64) / 8.0,
+            };
+        }
+        let pick = self.rng.below(self.live.len() as u64) as usize;
+        let (id, worker) = self.live[pick];
+        match roll {
+            4 | 5 => Op::Claim { id, worker },
+            6 => Op::Finish { id, worker },
+            7 => Op::Delete { id, worker },
+            _ => {
+                let pid = self.next_prov;
+                self.next_prov += 1;
+                Op::Prov {
+                    id: pid,
+                    task: id,
+                    note: format!("tab\there 'n {} \\slash\nline", pid),
+                }
+            }
+        }
+    }
+
+    /// Apply `n` generated ops. Ops that fail on A with an availability
+    /// error (a kill window) are dropped from the stream entirely — they
+    /// committed nowhere, so the twin must not see them either.
+    fn drive(&mut self, n: usize) {
+        for _ in 0..n {
+            let op = self.gen();
+            match apply(&self.a, &self.sa, &op) {
+                Ok(affected_a) => {
+                    let affected_b =
+                        apply(&self.b, &self.sb, &op).expect("twin must accept mirrored op");
+                    assert_eq!(
+                        affected_a, affected_b,
+                        "twin diverged on {op:?}: {affected_a} != {affected_b}"
+                    );
+                    match &op {
+                        Op::Insert { id, worker, .. } => self.live.push((*id, *worker)),
+                        Op::Delete { id, .. } => self.live.retain(|(i, _)| i != id),
+                        _ => {}
+                    }
+                }
+                Err(schaladb::Error::Unavailable(_)) => { /* nothing committed */ }
+                Err(e) => panic!("unexpected failure on {op:?}: {e}"),
+            }
+        }
+    }
+}
+
+fn fingerprints_equal(a: &DbCluster, b: &DbCluster) {
+    let fa = a.fingerprint().unwrap();
+    let fb = b.fingerprint().unwrap();
+    assert!(!fa.is_empty());
+    assert_eq!(fa, fb, "chaos cluster state diverged from the never-killed twin");
+}
+
+fn run_cell(seed: u64, parts: usize) {
+    let dir = std::env::temp_dir().join(format!(
+        "schaladb-chaos-s{seed}-p{parts}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let a = DbCluster::start(ClusterConfig {
+        data_nodes: 2,
+        replication: true,
+        clock: clock::wall(),
+        durability: Some(DurabilityConfig { dir: dir.clone(), group_commit: 8 }),
+    })
+    .unwrap();
+    let b = DbCluster::start(ClusterConfig::default()).unwrap();
+    schema(&a, parts);
+    schema(&b, parts);
+    let am = AvailabilityManager::new(a.clone());
+    let mut d = Driver::new(a.clone(), b.clone(), seed, parts);
+
+    // Phase 1: a healthy prefix, then cut per-partition checkpoints.
+    d.drive(300);
+    // reserved rows for the concurrent claimers during the rejoin window
+    let reserved: Vec<(i64, i64)> = (0..40)
+        .map(|k| (1_000_000 + k, k % parts as i64))
+        .collect();
+    for (id, w) in &reserved {
+        let op = Op::Insert { id: *id, worker: *w, dur: 1.0 };
+        assert_eq!(apply(&a, &d.sa, &op).unwrap(), 1);
+        assert_eq!(apply(&b, &d.sb, &op).unwrap(), 1);
+    }
+    fingerprints_equal(&a, &b);
+    assert!(checkpoint_node(&a, 0).unwrap().written > 0);
+    assert!(checkpoint_node(&a, 1).unwrap().written > 0);
+
+    // Phase 2: build a WAL tail past the checkpoints.
+    d.drive(200);
+
+    // Phase 3: kill node 1; the sweep promotes its backups (new epoch) and
+    // the stream keeps committing against the survivor.
+    let epoch0 = a.cluster_epoch();
+    a.kill_node(1).unwrap();
+    let r = am.sweep().unwrap();
+    assert!(r.promoted > 0, "node 1 must have hosted primaries");
+    assert!(a.cluster_epoch() > epoch0);
+    d.drive(150);
+    fingerprints_equal(&a, &b);
+
+    // Phase 4: process restart — local recovery from checkpoint + torn-tail
+    // WAL replay, then online catch-up while claims keep flowing.
+    let start = a.restart_node(1).unwrap();
+    assert!(start.partitions > 0);
+    assert!(
+        start.from_checkpoint > 0,
+        "phase-1 checkpoints must be found: {start:?}"
+    );
+    assert!(start.replayed > 0, "the phase-2 tail must replay locally: {start:?}");
+
+    let stop_claims = Arc::new(AtomicU64::new(0));
+    let claimer = {
+        let a = a.clone();
+        let b = b.clone();
+        let reserved = reserved.clone();
+        let claimed = stop_claims.clone();
+        std::thread::spawn(move || {
+            let sa = Stmts::prepare(&a);
+            let sb = Stmts::prepare(&b);
+            for (id, w) in reserved {
+                let op = Op::Claim { id, worker: w };
+                // retry through any transient unavailability: the cluster
+                // must keep serving claims throughout the rejoin
+                let na = loop {
+                    match apply(&a, &sa, &op) {
+                        Ok(n) => break n,
+                        Err(schaladb::Error::Unavailable(_)) => {
+                            std::thread::sleep(std::time::Duration::from_micros(200));
+                        }
+                        Err(e) => panic!("claim failed during rejoin: {e}"),
+                    }
+                };
+                let nb = apply(&b, &sb, &op).unwrap();
+                assert_eq!(na, nb);
+                assert_eq!(na, 1, "reserved row must be claimable exactly once");
+                claimed.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_micros(100));
+            }
+        })
+    };
+
+    let mut rejoined = false;
+    for _ in 0..200 {
+        let r = am.sweep().unwrap();
+        if r.rejoined > 0 {
+            rejoined = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert!(rejoined, "node 1 must finish rejoining while claims run");
+    assert!(a.node(1).unwrap().is_alive());
+    claimer.join().unwrap();
+    assert_eq!(stop_claims.load(Ordering::SeqCst), 40);
+
+    // Phase 5: quiesce — a couple of sweeps heal any replica a commit
+    // missed in the hand-off window — then the byte-equality gate.
+    am.sweep().unwrap();
+    am.sweep().unwrap();
+    d.drive(100);
+    am.sweep().unwrap();
+    fingerprints_equal(&a, &b);
+
+    // Phase 6: re-promotion — kill the never-restarted node so the
+    // rejoined one serves everything. Still byte-equal to the twin, which
+    // proves the rejoined replicas (not just the survivors) are faithful.
+    a.kill_node(0).unwrap();
+    let r = am.sweep().unwrap();
+    assert!(r.promoted > 0, "rejoined node must be promotable");
+    fingerprints_equal(&a, &b);
+    assert!(a.cluster_epoch() >= 2);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Seed matrix: one cell from the environment (the CI job matrix), or a
+/// small built-in sweep for plain `cargo test`.
+fn matrix() -> Vec<(u64, usize)> {
+    let seed = std::env::var("CHAOS_SEED").ok().and_then(|s| s.parse().ok());
+    let parts = std::env::var("CHAOS_PARTITIONS").ok().and_then(|s| s.parse().ok());
+    match (seed, parts) {
+        (Some(s), Some(p)) => vec![(s, p)],
+        _ => vec![(1, 2), (2, 4), (3, 2)],
+    }
+}
+
+#[test]
+fn chaos_kill_restart_rejoin_equals_twin() {
+    for (seed, parts) in matrix() {
+        run_cell(seed, parts);
+    }
+}
+
+/// Without a durability dir a restart has nothing local to recover from:
+/// every partition re-seeds over the redo-ship path, and the cluster still
+/// converges to the twin.
+#[test]
+fn restart_without_durability_reseeds_everything() {
+    let a = DbCluster::start(ClusterConfig::default()).unwrap();
+    let b = DbCluster::start(ClusterConfig::default()).unwrap();
+    schema(&a, 2);
+    schema(&b, 2);
+    let am = AvailabilityManager::new(a.clone());
+    let mut d = Driver::new(a.clone(), b.clone(), 7, 2);
+    d.drive(200);
+    a.kill_node(0).unwrap();
+    am.sweep().unwrap();
+    d.drive(100);
+    let start = a.restart_node(0).unwrap();
+    assert_eq!(start.from_checkpoint, 0);
+    assert_eq!(start.replayed, 0);
+    let r = am.sweep().unwrap();
+    assert_eq!(r.rejoined, 1);
+    // a memory-only restart recovers purely over the redo-ship stream:
+    // either the peers' retained tails replay from LSN 0, or partitions
+    // whose tail was truncated re-seed from snapshots
+    assert!(
+        r.shipped_ops > 0 || r.reseeded_parts > 0,
+        "memory-only restart must recover over the wire: {r:?}"
+    );
+    am.sweep().unwrap();
+    fingerprints_equal(&a, &b);
+    // and the reseeded node can take over
+    a.kill_node(1).unwrap();
+    am.sweep().unwrap();
+    fingerprints_equal(&a, &b);
+}

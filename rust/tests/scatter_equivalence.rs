@@ -18,6 +18,7 @@ fn cluster(parts: usize) -> Arc<DbCluster> {
         data_nodes: 2,
         replication: true,
         clock: shared,
+        durability: None,
     })
     .unwrap();
     ctl.set(1_000.0);
