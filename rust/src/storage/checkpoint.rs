@@ -177,7 +177,11 @@ pub fn checkpoint_node(cluster: &DbCluster, node_id: u32) -> Result<NodeCheckpoi
         let fname = dir.join(partition_ckpt_name(&table, pidx));
         let dumped = {
             let g = store.read().unwrap();
-            if read_ckpt_version(&fname) == Some(g.version) {
+            // Incremental skip needs version *and* epoch to match: a
+            // rejoin hand-off (or heal) can re-stamp a partition's epoch
+            // fence without any write, and a checkpoint that kept the old
+            // epoch would weaken fencing on the next restart.
+            if read_ckpt_meta(&fname) == Some((g.version, g.epoch)) {
                 None // incremental: nothing changed since the last cut
             } else {
                 let (cap, rows) = g.snapshot_slotted();
@@ -260,14 +264,17 @@ pub fn load_partition_checkpoint(path: &Path) -> Result<PartitionCheckpoint> {
     Ok(PartitionCheckpoint { def, pidx, version, epoch, cap, rows })
 }
 
-/// Version recorded in an existing partition checkpoint (the incremental
-/// skip check); `None` when the file is missing or unreadable.
-fn read_ckpt_version(path: &Path) -> Option<u64> {
+/// `(version, epoch)` recorded in an existing partition checkpoint (the
+/// incremental skip check); `None` when the file is missing or unreadable.
+fn read_ckpt_meta(path: &Path) -> Option<(u64, u64)> {
     let f = std::fs::File::open(path).ok()?;
     let mut lines = BufReader::new(f).lines();
     let _header = lines.next()?.ok()?;
     let meta = lines.next()?.ok()?;
-    meta.split('\x1f').nth(1)?.parse().ok()
+    let mut it = meta.split('\x1f').skip(1);
+    let version: u64 = it.next()?.parse().ok()?;
+    let epoch: u64 = it.next()?.parse().ok()?;
+    Some((version, epoch))
 }
 
 fn cluster_def(cluster: &DbCluster, table: &str) -> Result<TableDefView> {
@@ -462,6 +469,62 @@ mod tests {
             }
         }
         assert!(found, "node0 must have at least one partition checkpoint");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A rejoin hand-off re-stamps partition epochs without changing
+    /// versions; the post-rejoin checkpoint must rewrite the files (not
+    /// skip on the matching version), or a later restart loads a stale
+    /// epoch fence.
+    #[test]
+    fn epoch_only_change_rewrites_checkpoint() {
+        use crate::storage::replication::AvailabilityManager;
+        let dir = tmpdir("epoch-skip");
+        let c = DbCluster::start(ClusterConfig {
+            data_nodes: 2,
+            replication: true,
+            clock: clock::wall(),
+            durability: Some(DurabilityConfig { dir: dir.clone(), group_commit: 1 }),
+        })
+        .unwrap();
+        c.exec(
+            "CREATE TABLE wq (taskid INT NOT NULL, wid INT NOT NULL, status TEXT) \
+             PARTITION BY HASH(wid) PARTITIONS 2 PRIMARY KEY (taskid)",
+        )
+        .unwrap();
+        for i in 0..10 {
+            c.execute(&format!(
+                "INSERT INTO wq (taskid, wid, status) VALUES ({i}, {}, 'READY')",
+                i % 2
+            ))
+            .unwrap();
+        }
+        // baseline checkpoints at epoch 0
+        assert!(checkpoint_node(&c, 0).unwrap().written > 0);
+        // promotion bumps the epoch; node 0 rejoins with unchanged
+        // versions, and the final cut's checkpoint must re-stamp the disk
+        let am = AvailabilityManager::new(c.clone());
+        c.kill_node(0).unwrap();
+        am.sweep().unwrap();
+        let epoch = c.cluster_epoch();
+        assert!(epoch > 0);
+        c.restart_node(0).unwrap();
+        let r = am.sweep().unwrap();
+        assert_eq!(r.rejoined, 1);
+        let node_dir = dir.join("node0");
+        let mut checked = 0;
+        for e in std::fs::read_dir(&node_dir).unwrap() {
+            let p = e.unwrap().path();
+            if p.extension().map_or(false, |x| x == "ckpt") {
+                let ck = load_partition_checkpoint(&p).unwrap();
+                assert_eq!(
+                    ck.epoch, epoch,
+                    "checkpoint must be rewritten when only the epoch moved"
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -504,7 +504,6 @@ impl DbCluster {
     /// slot-addressed redo stays applicable on both sides.
     pub fn heal(&self) -> Result<usize> {
         let mut healed = 0;
-        let epoch = self.cluster_epoch();
         let cat = self.catalog.read().unwrap();
         for meta in cat.values() {
             for (pidx, pl) in meta.placements.iter().enumerate() {
@@ -517,18 +516,26 @@ impl DbCluster {
                 }
                 let ps = pn.partition(&meta.def.name, pidx)?;
                 let bs = bn.partition(&meta.def.name, pidx)?;
-                let (pv, cap, rows) = {
-                    let g = ps.read().unwrap();
-                    let (cap, rows) = g.snapshot_slotted();
-                    (g.version, cap, rows)
-                };
+                // Primary read latch and backup write latch held *together*
+                // (primary before backup — the executor's canonical order,
+                // so no deadlock). Snapshotting the primary under a latch
+                // released before the backup latch let a commit land on
+                // both replicas in the gap; the version mismatch would then
+                // "heal" the backup back to the stale snapshot, erasing an
+                // acked mirrored write from its store and WAL segment.
+                // Comparing under the pair also means a healthy partition
+                // costs two version reads per sweep, not a full row clone.
+                let g = ps.read().unwrap();
                 let mut bg = bs.write().unwrap();
-                if bg.version != pv || bg.len() != rows.len() {
+                if bg.version != g.version || bg.len() != g.len() {
+                    let (cap, rows) = g.snapshot_slotted();
                     bg.load_slotted(cap, rows)?;
-                    bg.version = pv;
-                    bg.epoch = epoch;
+                    bg.version = g.version;
+                    // fence stamped under the write latch (like the rejoin
+                    // cut), not from a pre-walk epoch sample
+                    bg.epoch = self.cluster_epoch();
                     // the backup's redo tail restarts at the seeded LSN
-                    bn.wal.lock().unwrap().reset_segment(&meta.def.name, pidx, pv);
+                    bn.wal.lock().unwrap().reset_segment(&meta.def.name, pidx, g.version);
                     healed += 1;
                 }
             }
@@ -568,10 +575,15 @@ impl DbCluster {
         }
         node.begin_rejoin();
         let ndir = self.durability.as_ref().map(|d| d.dir.join(format!("node{id}")));
-        // A restart loses the in-memory WAL buffers: start from a fresh
-        // NodeWal over the same directory.
+        // A restart loses the in-memory WAL buffers *and* whatever the
+        // group-commit window had buffered but not yet flushed: discard
+        // the old log (replacing it without `discard` would run NodeWal's
+        // drop-flush and silently upgrade the crash to a clean shutdown —
+        // recovery would then verify durability the code doesn't provide),
+        // then start from a fresh NodeWal over the same directory.
         {
             let mut w = node.wal.lock().unwrap();
+            w.discard();
             *w = match (&ndir, &self.durability) {
                 (Some(dir), Some(d)) => NodeWal::with_dir(dir.clone(), d.group_commit),
                 _ => NodeWal::new(),
@@ -675,7 +687,6 @@ impl DbCluster {
         if node.state() != NodeState::Rejoining {
             return Err(Error::Engine(format!("node {id} is not rejoining")));
         }
-        let epoch = self.cluster_epoch();
         // (table, pidx, serving replica) — `None` for a sole-replica
         // partition (no backup, primary is the rejoiner): there is no peer
         // to catch up from, and the local recovery *is* the authoritative
@@ -702,6 +713,9 @@ impl DbCluster {
             .iter()
             .map(|e| e.2.as_ref().map(|(s, _)| s.read().unwrap()))
             .collect();
+        // Epoch stamped under the held latches, so commits serialized
+        // before this cut were stamped at or below it.
+        let epoch = self.cluster_epoch();
         let mut shipped = 0u64;
         let mut reseeded = 0usize;
         for (i, (table, pidx, src)) in items.iter().enumerate() {
@@ -1014,7 +1028,7 @@ impl DbCluster {
             }
             let pl = &meta.placements[pidx];
             if is_target {
-                let (store, _, role) = self.replica_store(meta, pidx, pl, true)?;
+                let (store, prim_node, role) = self.replica_store(meta, pidx, pl, true)?;
                 if role != Role::Primary {
                     return Ok(None);
                 }
@@ -1022,15 +1036,17 @@ impl DbCluster {
                 let prim = locks.len() - 1;
                 live_of[pidx] = Some(prim);
                 let mut backup = None;
+                let mut backup_node = None;
                 if let Some(bid) = pl.backup {
                     if let Some(bn) = self.node(bid) {
                         if bn.is_alive() {
                             locks.push((true, bn.partition(&meta.def.name, pidx)?));
                             backup = Some(locks.len() - 1);
+                            backup_node = Some(bid);
                         }
                     }
                 }
-                targets.push(FastTarget { pidx, prim, backup });
+                targets.push(FastTarget { pidx, prim, backup, prim_node, backup_node });
             } else {
                 let (store, _, _) = self.replica_store(meta, pidx, pl, false)?;
                 locks.push((false, store));
@@ -1038,6 +1054,26 @@ impl DbCluster {
             }
         }
         Ok(Some(FastLockSet { locks, targets, live_of }))
+    }
+
+    /// Re-check, **under the held latches**, that every fast target's
+    /// backup-mirror decision still matches node liveness. `fast_lock`
+    /// decides inclusion from `is_alive()` before the latches are taken; a
+    /// node that changes state in between — it dies, or it is a rejoiner
+    /// whose final cut we were queued behind and which flipped `Alive`
+    /// while we waited — would make the statement apply to one replica set
+    /// while `append_committed` logs to another, silently diverging a
+    /// fresh replica's store from its WAL. On mismatch the caller returns
+    /// `Ok(None)` and the statement falls back to the interpreted path,
+    /// whose lock machinery revalidates and rebuilds its lock set.
+    fn fast_mirror_valid(&self, meta: &TableMeta, targets: &[FastTarget]) -> bool {
+        targets.iter().all(|t| {
+            let backup_alive = meta.placements[t.pidx]
+                .backup
+                .and_then(|b| self.node(b))
+                .map_or(false, |n| n.is_alive());
+            backup_alive == t.backup.is_some()
+        })
     }
 
     /// Compiled point/batch UPDATE: route → probe → re-check → apply in
@@ -1057,6 +1093,9 @@ impl DbCluster {
             .iter()
             .map(|(w, s)| if *w { Guard::W(s.write().unwrap()) } else { Guard::R(s.read().unwrap()) })
             .collect();
+        if !self.fast_mirror_valid(&meta, &targets) {
+            return Ok(None); // node state changed while we queued for latches
+        }
         let pre_versions = fast_pre_versions(&guards, &targets);
 
         // Match phase: probe candidates under the held latches, re-checking
@@ -1185,7 +1224,8 @@ impl DbCluster {
             None => StatementResult::Affected(applied.len()),
         };
         // Redo ops share the applied row via `Arc`; the WAL append happens
-        // after the latches drop, like the interpreted commit.
+        // after the latches drop, like the interpreted commit, but its
+        // epoch and node targets are captured here, under them.
         let ops: Vec<(u64, LogOp)> = applied
             .iter()
             .map(|(ti, slot, _, new, lsn)| {
@@ -1200,8 +1240,9 @@ impl DbCluster {
                 )
             })
             .collect();
+        let epoch = self.cluster_epoch();
         drop(guards);
-        self.append_committed(ops)?;
+        self.append_committed_fast(epoch, &ops, &targets)?;
         Ok(Some(result))
     }
 
@@ -1218,6 +1259,9 @@ impl DbCluster {
             .iter()
             .map(|(w, s)| if *w { Guard::W(s.write().unwrap()) } else { Guard::R(s.read().unwrap()) })
             .collect();
+        if !self.fast_mirror_valid(&meta, &targets) {
+            return Ok(None); // node state changed while we queued for latches
+        }
         let pre_versions = fast_pre_versions(&guards, &targets);
 
         // Victims in ascending slot order per partition: matches the
@@ -1300,8 +1344,9 @@ impl DbCluster {
             })
             .collect();
         let n = applied.len();
+        let epoch = self.cluster_epoch();
         drop(guards);
-        self.append_committed(ops)?;
+        self.append_committed_fast(epoch, &ops, &targets)?;
         Ok(Some(StatementResult::Affected(n)))
     }
 
@@ -1344,6 +1389,9 @@ impl DbCluster {
             .iter()
             .map(|(w, s)| if *w { Guard::W(s.write().unwrap()) } else { Guard::R(s.read().unwrap()) })
             .collect();
+        if !self.fast_mirror_valid(&meta, &targets) {
+            return Ok(None); // node state changed while we queued for latches
+        }
         let pre_versions = fast_pre_versions(&guards, &targets);
         let mut target_of: Vec<Option<usize>> = vec![None; def.num_partitions()];
         for (ti, t) in targets.iter().enumerate() {
@@ -1438,8 +1486,9 @@ impl DbCluster {
             })
             .collect();
         let n = applied.len();
+        let epoch = self.cluster_epoch();
         drop(guards);
-        self.append_committed(ops)?;
+        self.append_committed_fast(epoch, &ops, &targets)?;
         Ok(Some(StatementResult::Affected(n)))
     }
 
@@ -1533,28 +1582,88 @@ impl DbCluster {
     }
 
     /// Append one commit's redo records — `(partition LSN, op)` pairs — to
-    /// the WAL segments of **every alive node hosting the partition**
-    /// (primary and backup both log, as NDB fragments do), after latches
-    /// drop. Shared by the interpreted commit and every fast executor; this
-    /// is the commit stream the group-commit window batches.
-    fn append_committed(&self, ops: Vec<(u64, LogOp)>) -> Result<()> {
+    /// the WAL segments of the nodes the commit **actually applied to**
+    /// (primary and mirrored backup both log, as NDB fragments do), after
+    /// latches drop. Shared by the interpreted commit and every fast
+    /// executor; this is the commit stream the group-commit window batches.
+    ///
+    /// Both `epoch` and `targets` are captured by the executor while its
+    /// write latches are held, together with the mirror decision itself:
+    /// store contents, WAL contents and epoch stamps all derive from one
+    /// liveness observation. Re-checking `is_alive()` here used to let a
+    /// commit racing a rejoin hand-off log to a replica whose store it had
+    /// excluded (store/WAL divergence on the fresh replica), and sampling
+    /// the epoch here let a commit be stamped arbitrarily later than it
+    /// ran. (Under-latch capture orders the stamp against heal/rejoin
+    /// fence stamps, which take the same latches; a commit racing a
+    /// *promotion* can still come out one epoch high — see the note in
+    /// `exec_txn_inner` for why that direction is benign.)
+    fn append_committed(
+        &self,
+        epoch: u64,
+        ops: Vec<(u64, LogOp)>,
+        targets: &FxHashMap<(String, usize), Vec<u32>>,
+    ) -> Result<()> {
         if ops.is_empty() {
             return Ok(());
         }
-        let epoch = self.cluster_epoch();
         let mut per_node: FxHashMap<u32, Vec<(u64, LogOp)>> = FxHashMap::default();
         for (lsn, op) in ops {
-            let meta = self.meta(op.table())?;
-            let pl = &meta.placements[op.pidx()];
-            for nid in [Some(pl.primary), pl.backup].into_iter().flatten() {
-                if let Some(n) = self.node(nid) {
-                    if n.is_alive() {
-                        per_node.entry(nid).or_default().push((lsn, op.clone()));
-                    }
-                }
+            let key = (op.table().to_lowercase(), op.pidx());
+            let nids = targets.get(&key).ok_or_else(|| {
+                Error::Engine(format!("commit has no WAL target set for {}[{}]", key.0, key.1))
+            })?;
+            for nid in nids {
+                per_node.entry(*nid).or_default().push((lsn, op.clone()));
             }
         }
         for (nid, nops) in per_node {
+            if let Some(n) = self.node(nid) {
+                n.log_commit(epoch, &nops)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Lean append for the compiled fast paths: one table, and the node
+    /// target set is exactly what the [`FastTarget`]s captured under the
+    /// write latches — no per-call maps or key strings on the claim loop
+    /// (PR 3's constraint). Group-commit accounting matches
+    /// `append_committed`: one `log_commit` per node carrying all of the
+    /// commit's ops for that node.
+    fn append_committed_fast(
+        &self,
+        epoch: u64,
+        ops: &[(u64, LogOp)],
+        targets: &[FastTarget],
+    ) -> Result<()> {
+        if ops.is_empty() {
+            return Ok(());
+        }
+        let mut nodes: Vec<u32> = Vec::with_capacity(2 * targets.len());
+        for t in targets {
+            if !nodes.contains(&t.prim_node) {
+                nodes.push(t.prim_node);
+            }
+            if let Some(b) = t.backup_node {
+                if !nodes.contains(&b) {
+                    nodes.push(b);
+                }
+            }
+        }
+        for nid in nodes {
+            let nops: Vec<(u64, LogOp)> = ops
+                .iter()
+                .filter(|(_, op)| {
+                    targets.iter().any(|t| {
+                        t.pidx == op.pidx() && (t.prim_node == nid || t.backup_node == Some(nid))
+                    })
+                })
+                .cloned()
+                .collect();
+            if nops.is_empty() {
+                continue; // a target that matched no rows involves its nodes in nothing
+            }
             if let Some(n) = self.node(nid) {
                 n.log_commit(epoch, &nops)?;
             }
@@ -1790,28 +1899,67 @@ impl DbCluster {
             }
         }
 
-        // Phase 0: compute the union lock set.
-        let mut reqs: FxHashMap<(String, usize, Role), LockReq> = FxHashMap::default();
-        let mut placements: FxHashMap<String, Arc<TableMeta>> = FxHashMap::default();
-        for s in stmts {
-            self.collect_locks(s, &mut reqs, &mut placements)?;
-        }
-        let mut ordered: Vec<LockReq> = reqs.into_values().collect();
-        ordered.sort_by(|a, b| {
-            (&a.table, a.pidx, a.role, a.node).cmp(&(&b.table, b.pidx, b.role, b.node))
-        });
-
+        // Phase 0: compute the union lock set (canonical order).
+        let build = || -> Result<(Vec<LockReq>, FxHashMap<String, Arc<TableMeta>>)> {
+            let mut reqs: FxHashMap<(String, usize, Role), LockReq> = FxHashMap::default();
+            let mut placements: FxHashMap<String, Arc<TableMeta>> = FxHashMap::default();
+            for s in stmts {
+                self.collect_locks(s, &mut reqs, &mut placements)?;
+            }
+            let mut ordered: Vec<LockReq> = reqs.into_values().collect();
+            ordered.sort_by(|a, b| {
+                (&a.table, a.pidx, a.role, a.node).cmp(&(&b.table, b.pidx, b.role, b.node))
+            });
+            Ok((ordered, placements))
+        };
         // Phase 1 (2PL growing): acquire all guards in canonical order.
-        let guards: Vec<Guard<'_>> = ordered
-            .iter()
-            .map(|r| {
-                if r.write {
-                    Guard::W(r.store.write().unwrap())
-                } else {
-                    Guard::R(r.store.read().unwrap())
-                }
-            })
-            .collect();
+        fn acquire(ordered: &[LockReq]) -> Vec<Guard<'_>> {
+            ordered
+                .iter()
+                .map(|r| {
+                    if r.write {
+                        Guard::W(r.store.write().unwrap())
+                    } else {
+                        Guard::R(r.store.read().unwrap())
+                    }
+                })
+                .collect()
+        }
+        let (mut ordered, mut placements) = build()?;
+        let mut guards = acquire(&ordered);
+
+        // The lock set's backup-mirror decisions were made from
+        // `is_alive()` *before* the latches were acquired. A node that
+        // changed state while we queued — it died, or it is a rejoiner
+        // whose final cut held these latches and flipped it `Alive` — would
+        // let the transaction apply to one replica set while logging to
+        // another, silently diverging the fresh replica. Re-check under the
+        // held latches and rebuild the lock set on mismatch; state flips
+        // are rare, so this converges immediately in practice (the bound
+        // only guards against a flapping failure injector).
+        let mut attempts = 0usize;
+        while !self.mirror_set_valid(&ordered, &placements) {
+            attempts += 1;
+            if attempts > 16 {
+                return Err(Error::Unavailable(
+                    "cluster membership kept changing during lock acquisition".into(),
+                ));
+            }
+            drop(guards);
+            (ordered, placements) = build()?;
+            guards = acquire(&ordered);
+        }
+
+        // WAL target set: the nodes each written partition actually
+        // applies to, captured from the validated (latched) lock set so
+        // the commit's append cannot disagree with its apply.
+        let mut wal_targets: FxHashMap<(String, usize), Vec<u32>> = FxHashMap::default();
+        for r in &ordered {
+            if r.write {
+                wal_targets.entry((r.table.clone(), r.pidx)).or_default().push(r.node);
+            }
+        }
+
         let index: FxHashMap<(String, usize, Role), usize> = ordered
             .iter()
             .enumerate()
@@ -1896,10 +2044,49 @@ impl DbCluster {
                 }
             }
         }
+        // The commit's epoch stamp is sampled while the write latches are
+        // still held. Heal and the rejoin cut stamp replica fences under
+        // these same latches, so a fence can no longer leapfrog a commit
+        // it serialized after (the spurious-fencing direction). Promotion
+        // itself bumps the epoch under only the catalog lock, so a commit
+        // racing one can still be stamped one epoch high — benign: every
+        // replica in the commit's target set applied the write, and a
+        // too-new stamp only passes fences the record never needed to
+        // cross.
+        let epoch = self.cluster_epoch();
         drop(ctx);
         // WAL append after releasing row locks (commit record).
-        self.append_committed(ops)?;
+        self.append_committed(epoch, ops, &wal_targets)?;
         Ok(results)
+    }
+
+    /// Validation half of the mirror-set rule (see `exec_txn_inner`):
+    /// under the held latches, every write-locked primary must mirror to
+    /// its backup exactly when that backup's node is alive *now*. The
+    /// check runs against the same catalog snapshot the lock set was built
+    /// from, so it detects node-state changes, not catalog swaps (a
+    /// concurrent promotion re-resolves on the retry's `collect_locks`).
+    fn mirror_set_valid(
+        &self,
+        ordered: &[LockReq],
+        placements: &FxHashMap<String, Arc<TableMeta>>,
+    ) -> bool {
+        let mirrored: rustc_hash::FxHashSet<(&str, usize)> = ordered
+            .iter()
+            .filter(|r| r.role == Role::Backup && r.write)
+            .map(|r| (r.table.as_str(), r.pidx))
+            .collect();
+        ordered.iter().all(|r| {
+            if !r.write || r.role != Role::Primary {
+                return true;
+            }
+            let backup_alive = placements
+                .get(&r.table)
+                .and_then(|m| m.placements[r.pidx].backup)
+                .and_then(|b| self.node(b))
+                .map_or(false, |n| n.is_alive());
+            backup_alive == mirrored.contains(&(r.table.as_str(), r.pidx))
+        })
     }
 
     /// Add a statement's lock requirements to `reqs`.
@@ -2666,10 +2853,14 @@ impl DbCluster {
 
 /// One write-locked partition of a fast statement: its index plus the
 /// guard positions of the live primary and (when mirrored) backup replica.
+/// The node ids behind those guards are the partition's WAL target set —
+/// `append_committed` logs to exactly the nodes the write applied to.
 struct FastTarget {
     pidx: usize,
     prim: usize,
     backup: Option<usize>,
+    prim_node: u32,
+    backup_node: Option<u32>,
 }
 
 /// The latch set of one fast statement: `(write, store)` pairs in canonical

@@ -276,6 +276,12 @@ mod tests {
     /// replica. A restart of their node must still complete the rejoin:
     /// there is no peer to catch up from, so the local checkpoint + WAL
     /// recovery is authoritative and the sweep flips the node back alive.
+    ///
+    /// `group_commit: 1` (per-commit flush) on purpose: a crash loses the
+    /// buffered group-commit tail, and a sole-replica partition has no
+    /// peer to recover it from — full recovery is only guaranteed at
+    /// window size 1 (see `restart_recovers_only_the_flushed_prefix` for
+    /// the loss-window semantics at larger windows).
     #[test]
     fn sole_replica_rejoin_completes_from_local_recovery() {
         use crate::storage::checkpoint::checkpoint_node;
@@ -288,7 +294,7 @@ mod tests {
             data_nodes: 2,
             replication: false,
             clock: clock::wall(),
-            durability: Some(DurabilityConfig { dir: dir.clone(), group_commit: 4 }),
+            durability: Some(DurabilityConfig { dir: dir.clone(), group_commit: 1 }),
         })
         .unwrap();
         c.exec(
@@ -323,6 +329,133 @@ mod tests {
             "checkpoint + WAL tail must restore every sole replica"
         );
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A simulated process crash must lose the buffered group-commit tail
+    /// (up to `group_commit - 1` commits per node) — the restart used to
+    /// flush the dying node's buffers to disk first, making recovery
+    /// tests verify durability the code does not provide. With no peer
+    /// (replication off) and no checkpoint, the restart recovers exactly
+    /// the flushed prefix: consistent, but strictly short of the full
+    /// committed stream.
+    #[test]
+    fn restart_recovers_only_the_flushed_prefix() {
+        let dir = std::env::temp_dir().join(format!(
+            "schaladb-repl-lossy-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let group_commit = 8;
+        let c = DbCluster::start(ClusterConfig {
+            data_nodes: 2,
+            replication: false,
+            clock: clock::wall(),
+            durability: Some(DurabilityConfig { dir: dir.clone(), group_commit }),
+        })
+        .unwrap();
+        c.exec(
+            "CREATE TABLE t (id INT NOT NULL, v FLOAT) \
+             PARTITION BY HASH(id) PARTITIONS 4 PRIMARY KEY (id)",
+        )
+        .unwrap();
+        // node 1 hosts partitions 1 and 3 → 15 of these 30 single-row
+        // commits land on it; 15 % 8 != 0, so its last sub-group is
+        // buffered and must die with the crash
+        for i in 0..30 {
+            c.execute(&format!("INSERT INTO t (id, v) VALUES ({i}, {i}.5)")).unwrap();
+        }
+        let before = c.table_rows("t").unwrap();
+        assert_eq!(before, 30);
+
+        let am = AvailabilityManager::new(c.clone());
+        c.kill_node(1).unwrap();
+        c.restart_node(1).unwrap();
+        let r = am.sweep().unwrap();
+        assert_eq!(r.rejoined, 1);
+        let after = c.table_rows("t").unwrap();
+        assert!(
+            after < before,
+            "the unflushed group-commit tail must be lost in a crash, got {after}"
+        );
+        assert!(
+            after >= before - (group_commit - 1),
+            "loss must be bounded by the group-commit window: {after}"
+        );
+        // the recovered prefix is a live, consistent state: new writes work
+        c.execute("INSERT INTO t (id, v) VALUES (100, 1.0)").unwrap();
+        assert_eq!(c.table_rows("t").unwrap(), after + 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Regression for the rejoin hand-off race: a write that built its
+    /// lock set while a node was `Rejoining` but acquired its latches only
+    /// after the final cut flipped it `Alive` used to apply to the primary
+    /// alone while still logging to the rejoined node's WAL — the fresh
+    /// replica silently missed the write. The mirror set is now
+    /// re-validated under the held latches, so writes racing the hand-off
+    /// land on both replicas: after the writer quiesces, the two nodes'
+    /// stores must be identical with **no** extra heal sweep.
+    #[test]
+    fn writes_racing_the_rejoin_handoff_reach_both_replicas() {
+        for round in 0..4 {
+            let (c, dir) = durable_cluster(&format!("handoff-race-{round}"));
+            let am = AvailabilityManager::new(c.clone());
+            c.kill_node(1).unwrap();
+            am.sweep().unwrap();
+            c.execute("UPDATE t SET v = -2.0 WHERE id = 7").unwrap();
+            c.restart_node(1).unwrap();
+
+            let writer = {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for i in 0..300i64 {
+                        let id = i % 20;
+                        loop {
+                            match c.execute(&format!("UPDATE t SET v = {i}.0 WHERE id = {id}")) {
+                                Ok(_) => break,
+                                Err(crate::Error::Unavailable(_)) => {
+                                    std::thread::sleep(std::time::Duration::from_micros(50));
+                                }
+                                Err(e) => panic!("writer failed mid-handoff: {e}"),
+                            }
+                        }
+                    }
+                })
+            };
+            // drive the rejoin while the writer hammers the same partitions
+            let mut rejoined = false;
+            for _ in 0..200 {
+                if am.sweep().unwrap().rejoined > 0 {
+                    rejoined = true;
+                    break;
+                }
+            }
+            writer.join().unwrap();
+            assert!(rejoined, "node 1 must rejoin under write load");
+
+            // byte-equal replicas, without any post-hoc heal sweep
+            let n0 = c.node(0).unwrap().clone();
+            let n1 = c.node(1).unwrap().clone();
+            for (table, pidx) in n1.hosted_keys() {
+                let a = n0.partition_even_if_dead(&table, pidx).unwrap();
+                let b = n1.partition_even_if_dead(&table, pidx).unwrap();
+                let (ag, bg) = (a.read().unwrap(), b.read().unwrap());
+                assert_eq!(
+                    ag.version, bg.version,
+                    "replica LSNs diverged on {table}[{pidx}] across the hand-off"
+                );
+                assert_eq!(
+                    ag.snapshot_slotted(),
+                    bg.snapshot_slotted(),
+                    "replica rows diverged on {table}[{pidx}] across the hand-off"
+                );
+            }
+            // and the rejoined replica keeps accepting mirrored redo (the
+            // divergence symptom was a slot-occupied panic right here)
+            c.execute("INSERT INTO t (id, v) VALUES (500, 5.0)").unwrap();
+            c.execute("DELETE FROM t WHERE id = 3").unwrap();
+            let _ = std::fs::remove_dir_all(&dir);
+        }
     }
 
     #[test]

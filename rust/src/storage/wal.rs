@@ -371,6 +371,15 @@ impl Segment {
         self.records.clear();
         self.base_lsn = base;
     }
+
+    /// Drop the sink writer **without flushing** its buffered bytes
+    /// (`BufWriter`'s own drop would flush them). Crash simulation only —
+    /// see [`NodeWal::discard`].
+    fn discard_writer(&mut self) {
+        if let Some(w) = self.writer.take() {
+            let _ = w.into_parts(); // hands the File back unflushed
+        }
+    }
 }
 
 /// A node's write-ahead log: one [`Segment`] per hosted `(table, partition)`
@@ -382,7 +391,10 @@ impl Segment {
 /// have accumulated — batching many small commits into one file write. A
 /// checkpoint cut always flushes first (it is the durability boundary).
 pub struct NodeWal {
-    segments: FxHashMap<(String, usize), Segment>,
+    /// Outer key: the **lowercased** table name (commit streams pass the
+    /// lowercased catalog key already, so the hot path looks segments up
+    /// by borrowed `&str` with no per-op key allocation).
+    segments: FxHashMap<String, FxHashMap<usize, Segment>>,
     dir: Option<PathBuf>,
     group_commit: usize,
     pending: usize,
@@ -418,17 +430,38 @@ impl NodeWal {
         }
     }
 
+    // contains_key+insert instead of the entry API on purpose: entry()
+    // demands an owned String on every call, which is exactly the per-op
+    // allocation this path exists to avoid.
+    #[allow(clippy::map_entry)]
     fn segment_mut(&mut self, table: &str, pidx: usize) -> &mut Segment {
-        let key = (table.to_lowercase(), pidx);
+        // Commit streams pass the lowercased catalog key, so the common
+        // path is borrowed lookups only — no per-op key allocation on the
+        // claim loop (PR 3's constraint); mixed-case callers normalize.
+        let lower;
+        let key: &str = if table.chars().any(char::is_uppercase) {
+            lower = table.to_lowercase();
+            &lower
+        } else {
+            table
+        };
+        if !self.segments.contains_key(key) {
+            self.segments.insert(key.to_string(), FxHashMap::default());
+        }
         let dir = self.dir.as_deref();
-        self.segments.entry(key).or_insert_with_key(|k| {
-            Segment::new(dir.map(|d| d.join(format!("{}.p{}.wal", k.0, k.1))))
+        let per_table = self.segments.get_mut(key).expect("ensured above");
+        per_table.entry(pidx).or_insert_with(|| {
+            Segment::new(dir.map(|d| d.join(format!("{key}.p{pidx}.wal"))))
         })
     }
 
     /// Segment of one partition, if any commit or cut created it.
     pub fn segment(&self, table: &str, pidx: usize) -> Option<&Segment> {
-        self.segments.get(&(table.to_lowercase(), pidx))
+        match self.segments.get(table) {
+            Some(m) => m.get(&pidx),
+            // keys are always lowercase; a miss may be a mixed-case alias
+            None => self.segments.get(&table.to_lowercase())?.get(&pidx),
+        }
     }
 
     /// Append one commit's records (`(lsn, op)` pairs, all partitions the
@@ -450,8 +483,10 @@ impl NodeWal {
     /// Flush every segment's sink writer (group-commit boundary, shutdown,
     /// checkpoint cut).
     pub fn flush_all(&mut self) -> Result<()> {
-        for s in self.segments.values_mut() {
-            s.flush()?;
+        for m in self.segments.values_mut() {
+            for s in m.values_mut() {
+                s.flush()?;
+            }
         }
         if self.dir.is_some() && self.pending > 0 {
             self.flushes += 1;
@@ -464,7 +499,7 @@ impl NodeWal {
     /// [`Segment::tail_since`]); `None` when the segment does not exist or
     /// cannot cover the gap.
     pub fn tail_since(&self, table: &str, pidx: usize, lsn: u64) -> Option<Vec<WalRecord>> {
-        self.segments.get(&(table.to_lowercase(), pidx))?.tail_since(lsn)
+        self.segment(table, pidx)?.tail_since(lsn)
     }
 
     /// Checkpoint cut for one partition: flush, drop records with
@@ -483,7 +518,26 @@ impl NodeWal {
 
     /// Retained records across all segments (tests/monitoring).
     pub fn total_records(&self) -> usize {
-        self.segments.values().map(|s| s.len()).sum()
+        self.segments.values().flat_map(|m| m.values()).map(|s| s.len()).sum()
+    }
+
+    /// Simulate a **process crash**: throw away every segment's buffered
+    /// sink bytes and in-memory tail without flushing anything to disk.
+    ///
+    /// A real crash loses whatever the group-commit window had buffered
+    /// (up to `group_commit - 1` commits); both this struct's `Drop` and
+    /// `BufWriter`'s drop flush best-effort, which models a *clean
+    /// shutdown*. `DbCluster::restart_node` calls this before replacing
+    /// the log so the recovery it then exercises is the one a crash
+    /// actually leaves behind, not a silently upgraded stronger one.
+    pub fn discard(&mut self) {
+        for m in self.segments.values_mut() {
+            for s in m.values_mut() {
+                s.discard_writer();
+            }
+        }
+        self.segments.clear();
+        self.pending = 0;
     }
 }
 
@@ -685,6 +739,38 @@ mod tests {
         w1.commit(0, &[op(1)]).unwrap();
         w1.commit(0, &[op(2)]).unwrap();
         assert_eq!(w1.flushes, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir2);
+    }
+
+    /// `discard` models a crash: buffered-but-unflushed commits must be
+    /// lost, while a plain drop (clean shutdown) flushes them. The two
+    /// must differ, or restart simulations verify durability the code
+    /// does not provide.
+    #[test]
+    fn discard_loses_the_buffered_tail_drop_keeps_it() {
+        let op = |lsn: u64| (lsn, LogOp::Delete { table: "t".into(), pidx: 0, slot: 0 });
+        // clean shutdown: Drop's best-effort flush lands all 3 pending
+        let dir = tmpdir("drop-flush");
+        {
+            let mut w = NodeWal::with_dir(dir.clone(), 8);
+            for lsn in 1..=3u64 {
+                w.commit(0, &[op(lsn)]).unwrap();
+            }
+        }
+        let text = std::fs::read_to_string(dir.join("t.p0.wal")).unwrap();
+        assert_eq!(text.lines().count(), 3, "clean shutdown flushes the pending group");
+        // crash: only the closed group-commit boundary (8 commits) is on
+        // disk; the 2 buffered commits after it are gone
+        let dir2 = tmpdir("discard");
+        let mut w = NodeWal::with_dir(dir2.clone(), 8);
+        for lsn in 1..=10u64 {
+            w.commit(0, &[op(lsn)]).unwrap();
+        }
+        w.discard();
+        drop(w);
+        let text = std::fs::read_to_string(dir2.join("t.p0.wal")).unwrap();
+        assert_eq!(text.lines().count(), 8, "a crash must lose the unflushed tail, not persist it");
         let _ = std::fs::remove_dir_all(&dir);
         let _ = std::fs::remove_dir_all(&dir2);
     }

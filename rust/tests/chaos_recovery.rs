@@ -334,8 +334,11 @@ fn run_cell(seed: u64, parts: usize) {
     claimer.join().unwrap();
     assert_eq!(stop_claims.load(Ordering::SeqCst), 40);
 
-    // Phase 5: quiesce — a couple of sweeps heal any replica a commit
-    // missed in the hand-off window — then the byte-equality gate.
+    // Phase 5: the byte-equality gate. Commits racing the hand-off are
+    // covered by the under-latch mirror-set validation (they land on both
+    // replicas or are shipped by the final cut), so no heal sweep is
+    // *required* here; the sweeps only assert that a healthy cluster
+    // sweep is harmless after a rejoin.
     am.sweep().unwrap();
     am.sweep().unwrap();
     d.drive(100);
