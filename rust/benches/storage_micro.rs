@@ -459,10 +459,7 @@ fn main() {
                 data_nodes: 2,
                 replication: true,
                 clock: clock::wall(),
-                durability: Some(DurabilityConfig {
-                    dir: bench_dir.join(tag),
-                    group_commit: group,
-                }),
+                durability: Some(DurabilityConfig::new(bench_dir.join(tag), group)),
             })
             .unwrap();
             c.exec(&format!(
@@ -590,6 +587,189 @@ fn main() {
         std::fs::write("target/bench-results/BENCH_recovery.json", obj.to_string()).unwrap();
         println!("json: target/bench-results/BENCH_recovery.json");
         let _ = std::fs::remove_dir_all(&bench_dir);
+    }
+
+    // Snapshot representation (exp7 shape): copy-on-write chunked
+    // snapshots vs the seed clone-the-world path on a 100k-row partition
+    // with one dirty chunk; snapshot-acquire latency while claim-style
+    // writers hammer the same partition latch; and zone-map pruning on a
+    // selective steering scan. Emits BENCH_snapshot.json — CI gates on
+    // the acquire-under-writers p50 against the recorded baseline.
+    {
+        use schaladb::storage::partition::{PartitionStore, CHUNK_SLOTS};
+        use schaladb::storage::table_def::TableDef;
+        use schaladb::storage::{ColumnType, Row, Schema};
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::RwLock;
+
+        let n_rows: usize = 100_000; // the acceptance floor, even in quick mode
+        let schema = Schema::of(&[
+            ("taskid", ColumnType::Int),
+            ("actid", ColumnType::Int),
+            ("workerid", ColumnType::Int),
+            ("status", ColumnType::Str),
+            ("dur", ColumnType::Float),
+        ]);
+        let def = TableDef::new("wq_snap", schema)
+            .with_primary_key("taskid")
+            .unwrap()
+            .with_index("status")
+            .unwrap();
+        let store = Arc::new(RwLock::new(PartitionStore::new(Arc::new(def))));
+        {
+            let mut g = store.write().unwrap();
+            for i in 0..n_rows {
+                g.insert(Row::new(vec![
+                    Value::Int(i as i64),
+                    Value::Int((i % 3) as i64),
+                    Value::Int(0),
+                    Value::str("READY"),
+                    Value::Float(1.0),
+                ]))
+                .unwrap();
+            }
+        }
+        let touch = {
+            let store = store.clone();
+            move |i: usize| {
+                let slot = i % n_rows;
+                let mut g = store.write().unwrap();
+                g.update(
+                    slot,
+                    Row::new(vec![
+                        Value::Int(slot as i64),
+                        Value::Int(1),
+                        Value::Int(0),
+                        Value::str("RUNNING"),
+                        Value::Float(2.0),
+                    ]),
+                )
+                .unwrap();
+            }
+        };
+        // one dirty row per iteration, then take the snapshot under the
+        // read latch — exactly what each steering read pays per commit
+        let t1 = touch.clone();
+        let s1 = store.clone();
+        let clone_world = Bench::run("snapshot 100k (seed deep clone)", it(200), move |i| {
+            t1(i);
+            let g = s1.read().unwrap();
+            std::hint::black_box(g.snapshot_rows().len());
+        });
+        let t2 = touch.clone();
+        let s2 = store.clone();
+        let chunked = Bench::run("snapshot 100k (CoW, 1 dirty chunk)", it(200), move |i| {
+            t2(i);
+            let g = s2.read().unwrap();
+            std::hint::black_box(g.snapshot().len());
+        });
+        let snap_speedup = clone_world.hist.quantile(0.5) / chunked.hist.quantile(0.5);
+        println!(
+            "chunked snapshot vs clone-the-world (100k rows, 1 of {} chunks dirty): {:.1}x",
+            n_rows.div_ceil(CHUNK_SLOTS),
+            snap_speedup
+        );
+        assert!(
+            snap_speedup >= 10.0,
+            "chunked snapshot must be >= 10x the seed deep-clone path, got {snap_speedup:.1}x"
+        );
+
+        // acquire latency while 4 claim-style writers contend on the same
+        // partition latch (the exp7 interference shape)
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut writer_handles = Vec::new();
+        for t in 0..4usize {
+            let store = store.clone();
+            let stop = stop.clone();
+            writer_handles.push(std::thread::spawn(move || {
+                let mut i = t;
+                while !stop.load(Ordering::Relaxed) {
+                    let slot = i % n_rows;
+                    {
+                        let mut g = store.write().unwrap();
+                        g.update(
+                            slot,
+                            Row::new(vec![
+                                Value::Int(slot as i64),
+                                Value::Int(2),
+                                Value::Int(0),
+                                Value::str("RUNNING"),
+                                Value::Float(3.0),
+                            ]),
+                        )
+                        .unwrap();
+                    }
+                    i += 7;
+                }
+            }));
+        }
+        let s3 = store.clone();
+        let acquire = Bench::run("snapshot acquire under 4 writers", it(2_000), move |_| {
+            let g = s3.read().unwrap();
+            std::hint::black_box(g.snapshot().len());
+        });
+        stop.store(true, Ordering::Relaxed);
+        for h in writer_handles {
+            h.join().unwrap();
+        }
+        println!(
+            "snapshot acquire under writers: p50 {} p99 {}\n",
+            fmt_secs(acquire.hist.quantile(0.5)),
+            fmt_secs(acquire.hist.quantile(0.99))
+        );
+
+        // zone-map pruning on a selective steering scan (cluster level):
+        // taskids are inserted round-robin, so chunk zone maps carry tight
+        // taskid ranges and `taskid >= hi` excludes all but the tail chunk
+        let c = wq_cluster(workers, rows);
+        let before = c.route_counts();
+        let hi = rows as i64 - 10;
+        let pruned_scan = Bench::run("steering scan (zone-pruned)", it(300), {
+            let c = c.clone();
+            move |_| {
+                c.query(&format!(
+                    "SELECT taskid, dur FROM workqueue WHERE taskid >= {hi}"
+                ))
+                .unwrap();
+            }
+        });
+        let unpruned_scan = Bench::run("steering scan (unprunable)", it(300), {
+            let c = c.clone();
+            move |_| {
+                c.query("SELECT taskid, dur FROM workqueue WHERE status = 'NOPE'").unwrap();
+            }
+        });
+        let after = c.route_counts();
+        let pruned = after.chunks_pruned - before.chunks_pruned;
+        let scanned = after.chunks_scanned - before.chunks_scanned;
+        assert!(pruned > 0, "selective steering scan must prune chunks via zone maps");
+        println!(
+            "zone pruning on selective scan: {pruned} chunks pruned, {scanned} scanned \
+             (pruned p50 {}, unprunable p50 {})\n",
+            fmt_secs(pruned_scan.hist.quantile(0.5)),
+            fmt_secs(unpruned_scan.hist.quantile(0.5))
+        );
+
+        std::fs::create_dir_all("target/bench-results").ok();
+        let obj = schaladb::util::json::Json::obj()
+            .set("partition_rows", n_rows as f64)
+            .set("chunk_slots", CHUNK_SLOTS as f64)
+            .set("clone_world_p50_secs", clone_world.hist.quantile(0.5))
+            .set("chunked_p50_secs", chunked.hist.quantile(0.5))
+            .set("snapshot_speedup_p50", snap_speedup)
+            .set("acquire_under_writers_p50_secs", acquire.hist.quantile(0.5))
+            .set("acquire_under_writers_p99_secs", acquire.hist.quantile(0.99))
+            .set("pruned_scan_p50_secs", pruned_scan.hist.quantile(0.5))
+            .set("unpruned_scan_p50_secs", unpruned_scan.hist.quantile(0.5))
+            .set("chunks_pruned", pruned as f64)
+            .set("chunks_scanned", scanned as f64);
+        std::fs::write("target/bench-results/BENCH_snapshot.json", obj.to_string()).unwrap();
+        println!("json: target/bench-results/BENCH_snapshot.json");
+        benches.push(clone_world);
+        benches.push(chunked);
+        benches.push(acquire);
+        benches.push(pruned_scan);
+        benches.push(unpruned_scan);
     }
 
     // scatter-gather vs centralized: the steering analytics that motivated

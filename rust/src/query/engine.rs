@@ -1,4 +1,4 @@
-//! Scatter-gather execution over lock-free partition snapshots.
+//! Scatter-gather execution over lock-free chunked partition snapshots.
 //!
 //! Two shapes, both taken by every auto-commit SELECT that the router in
 //! [`DbCluster`](crate::storage::cluster::DbCluster) deems eligible:
@@ -14,29 +14,136 @@
 //!   single-table WHERE conjuncts pushed into the scan; the relational
 //!   pipeline (`run_select`) then runs once at the coordinator.
 //!
-//! Either way the inputs are versioned partition snapshots acquired under
-//! a brief read latch (see `PartitionStore::snapshot`), so the steering
-//! analytics never hold 2PL partition locks while executing — the paper's
-//! Experiment-7 requirement that monitoring not perturb scheduling.
+//! Either way the inputs are versioned copy-on-write chunk snapshots
+//! acquired under a brief read latch (see `PartitionStore::snapshot` —
+//! an `Arc` bump per clean chunk), so the steering analytics never hold
+//! 2PL partition locks while executing — the paper's Experiment-7
+//! requirement that monitoring not perturb scheduling.
+//!
+//! ## The compiled scan path
+//!
+//! Before the partials run, the WHERE clause is classified against the
+//! table schema (see `ScanFilter`): every conjunct of the
+//! `col <cmp> literal` shape compiles into the shared
+//! [`Conjunct`](crate::storage::cexpr::Conjunct) evaluator from the DML
+//! fast path. Compiled conjuncts serve two purposes:
+//!
+//! 1. **zone-map pruning** — a chunk whose per-column min/max bounds
+//!    cannot satisfy some conjunct is skipped whole
+//!    ([`Chunk::may_match`](crate::storage::partition::Chunk::may_match));
+//!    sound for any compilable *subset* of the
+//!    conjunction, since a chunk with no row matching one conjunct has no
+//!    row matching the whole AND;
+//! 2. **interpreter bypass** — when the *entire* WHERE compiles, the row
+//!    filter runs on `Conjunct::matches` alone (`sql_cmp` three-valued
+//!    logic, byte-for-byte the interpreter's `Bound::ColCmp` form) and
+//!    `bind` is never called. Any uncompilable conjunct keeps the
+//!    interpreted evaluator for row filtering (with subset pruning still
+//!    active), and binding errors (unknown columns, unbound parameters)
+//!    surface exactly as centralized raises them. Like the interpreter's
+//!    left-to-right AND short-circuit, skipping a chunk also skips
+//!    per-row *evaluation* errors a sibling conjunct would have raised on
+//!    its rows — matched results are always identical.
 
 use crate::query::plan::ScatterPlan;
 use crate::query::pool::{ScanPool, ScanTask};
+use crate::query::ScanMetrics;
+use crate::storage::cexpr::{compile_conjunct, Conjunct, CVal};
+use crate::storage::partition::ChunkSnapshot;
 use crate::storage::sql::exec::{finish_groups, finish_select, run_select, AggState, TableInput};
-use crate::storage::sql::expr::{bind, EvalCtx, Layout};
+use crate::storage::sql::expr::{bind, Bound, EvalCtx, Layout};
 use crate::storage::sql::{AggFunc, Expr, Op, SelectStmt};
 use crate::storage::table_def::TableDef;
 use crate::storage::value::{Row, Value};
 use crate::storage::ResultSet;
 use crate::Result;
 use rustc_hash::FxHashMap;
+use std::sync::atomic::Ordering as AtomicOrdering;
 use std::sync::Arc;
 
-/// Snapshots of one table's target partitions: `(pidx, rows)` in ascending
-/// partition order, each an immutable shared view taken at a single
-/// consistent cut (all latches held together during acquisition).
+/// Snapshots of one table's target partitions: `(pidx, chunks)` in
+/// ascending partition order, each an immutable shared view taken at a
+/// single consistent cut (all latches held together during acquisition).
 pub(crate) struct TableSnapshots {
     pub def: Arc<TableDef>,
-    pub parts: Vec<(usize, Arc<Vec<Row>>)>,
+    pub parts: Vec<(usize, ChunkSnapshot)>,
+}
+
+/// The compiled form of one table's scan predicate.
+pub(crate) struct ScanFilter {
+    /// Conjuncts of the `col <cmp> literal` shape — the zone-map pruning
+    /// set (always a sound subset of the WHERE conjunction).
+    preds: Vec<Conjunct>,
+    /// True when `preds` covers the *whole* WHERE clause (or there is
+    /// none): row filtering runs on the compiled conjuncts alone and the
+    /// interpreter is never consulted.
+    full: bool,
+}
+
+/// Classify a WHERE clause against `def` (bound as `binding`). Parameters
+/// must have been substituted before the scan engine runs; a stray
+/// `?`-conjunct is treated as uncompilable so the interpreted evaluator
+/// raises its usual unbound-parameter error.
+pub(crate) fn compile_scan_filter(
+    where_: Option<&Expr>,
+    def: &TableDef,
+    binding: &str,
+) -> ScanFilter {
+    let Some(w) = where_ else {
+        return ScanFilter { preds: Vec::new(), full: true };
+    };
+    let mut preds = Vec::new();
+    let mut full = true;
+    for c in w.conjuncts() {
+        match compile_conjunct(c, def, binding) {
+            Some(cj) if !matches!(cj.rhs, CVal::Param(_)) => preds.push(cj),
+            _ => full = false,
+        }
+    }
+    ScanFilter { preds, full }
+}
+
+/// Drive `per_row` over every matching live row of a chunk snapshot: skip
+/// empty chunks, zone-prune on the compiled conjuncts (with the shared
+/// scanned/pruned accounting), and apply the compiled-or-interpreted keep
+/// test. This is the one scan preamble both partial shapes share — the
+/// aggregate and scan partials must never diverge on what "matching"
+/// means.
+fn scan_matching_rows<F>(
+    snap: &ChunkSnapshot,
+    filter: &ScanFilter,
+    wb: Option<&Bound>,
+    metrics: &ScanMetrics,
+    ectx: &EvalCtx,
+    mut per_row: F,
+) -> Result<()>
+where
+    F: FnMut(&Row) -> Result<()>,
+{
+    for chunk in snap.chunks() {
+        if chunk.live == 0 {
+            continue;
+        }
+        if !filter.preds.is_empty() && !chunk.may_match(&filter.preds, &[]) {
+            metrics.chunks_pruned.fetch_add(1, AtomicOrdering::Relaxed);
+            continue;
+        }
+        metrics.chunks_scanned.fetch_add(1, AtomicOrdering::Relaxed);
+        for r in chunk.rows() {
+            let keep = if filter.full {
+                filter.preds.iter().all(|c| c.matches(&r.values, &[]))
+            } else {
+                match wb {
+                    Some(b) => b.matches(&r.values, ectx)?,
+                    None => true,
+                }
+            };
+            if keep {
+                per_row(r)?;
+            }
+        }
+    }
+    Ok(())
 }
 
 // ---------------- partial plans (run per partition, on the pool) ----------------
@@ -45,6 +152,8 @@ pub(crate) struct TableSnapshots {
 struct AggPartialCtx {
     layout: Layout,
     where_: Option<Expr>,
+    filter: ScanFilter,
+    metrics: Arc<ScanMetrics>,
     group_by: Vec<Expr>,
     aggs: Vec<(AggFunc, bool, Option<Expr>)>,
     now: f64,
@@ -57,11 +166,12 @@ struct PartialGroups {
     groups: FxHashMap<Vec<u64>, (Row, Vec<AggState>)>,
 }
 
-fn partial_aggregate(ctx: &AggPartialCtx, rows: &[Row]) -> Result<PartialGroups> {
+fn partial_aggregate(ctx: &AggPartialCtx, snap: &ChunkSnapshot) -> Result<PartialGroups> {
     let ectx = EvalCtx { now: ctx.now };
-    let wb = match &ctx.where_ {
-        Some(w) => Some(bind(w, &ctx.layout)?),
-        None => None,
+    // interpreted residual filter only when the compiled set is partial
+    let wb = match (&ctx.where_, ctx.filter.full) {
+        (Some(w), false) => Some(bind(w, &ctx.layout)?),
+        _ => None,
     };
     let key_bound = ctx
         .group_by
@@ -77,14 +187,7 @@ fn partial_aggregate(ctx: &AggPartialCtx, rows: &[Row]) -> Result<PartialGroups>
         })
         .collect::<Result<Vec<_>>>()?;
     let mut pg = PartialGroups { order: Vec::new(), groups: FxHashMap::default() };
-    for r in rows {
-        let keep = match &wb {
-            Some(b) => b.matches(&r.values, &ectx)?,
-            None => true,
-        };
-        if !keep {
-            continue;
-        }
+    scan_matching_rows(snap, &ctx.filter, wb.as_ref(), &ctx.metrics, &ectx, |r| {
         let key: Vec<u64> = key_bound
             .iter()
             .map(|b| Ok(b.eval(&r.values, &ectx)?.hash_key()))
@@ -111,7 +214,8 @@ fn partial_aggregate(ctx: &AggPartialCtx, rows: &[Row]) -> Result<PartialGroups>
             };
             st.push(v)?;
         }
-    }
+        Ok(())
+    })?;
     Ok(pg)
 }
 
@@ -119,6 +223,8 @@ fn partial_aggregate(ctx: &AggPartialCtx, rows: &[Row]) -> Result<PartialGroups>
 struct ScanPartialCtx {
     layout: Layout,
     where_: Option<Expr>,
+    filter: ScanFilter,
+    metrics: Arc<ScanMetrics>,
     /// `Some((order keys, k))`: keep only each partition's top-k under the
     /// final sort order (sound because the coordinator re-sorts stably and
     /// truncates to the same k; only pushed down when no HAVING runs).
@@ -128,22 +234,17 @@ struct ScanPartialCtx {
     now: f64,
 }
 
-fn partial_scan(ctx: &ScanPartialCtx, rows: &[Row]) -> Result<Vec<Row>> {
+fn partial_scan(ctx: &ScanPartialCtx, snap: &ChunkSnapshot) -> Result<Vec<Row>> {
     let ectx = EvalCtx { now: ctx.now };
-    let wb = match &ctx.where_ {
-        Some(w) => Some(bind(w, &ctx.layout)?),
-        None => None,
+    let wb = match (&ctx.where_, ctx.filter.full) {
+        (Some(w), false) => Some(bind(w, &ctx.layout)?),
+        _ => None,
     };
     let mut out = Vec::new();
-    for r in rows {
-        let keep = match &wb {
-            Some(b) => b.matches(&r.values, &ectx)?,
-            None => true,
-        };
-        if keep {
-            out.push(r.clone());
-        }
-    }
+    scan_matching_rows(snap, &ctx.filter, wb.as_ref(), &ctx.metrics, &ectx, |r| {
+        out.push(r.clone());
+        Ok(())
+    })?;
     if let Some((keys, k)) = &ctx.topk {
         // bind failures fall through untruncated: the coordinator's ORDER
         // BY will surface the real error (or handle the alias case)
@@ -189,6 +290,7 @@ pub(crate) fn scatter_gather(
     plan: &ScatterPlan,
     binding: &str,
     snaps: &TableSnapshots,
+    metrics: &Arc<ScanMetrics>,
     now: f64,
 ) -> Result<ResultSet> {
     let layout = Layout::of_table(
@@ -196,11 +298,14 @@ pub(crate) fn scatter_gather(
         snaps.def.schema.columns.iter().map(|c| c.name.clone()),
     );
     let ectx = EvalCtx { now };
+    let filter = compile_scan_filter(plan.where_.as_ref(), &snaps.def, binding);
 
     if plan.aggregated {
         let ctx = Arc::new(AggPartialCtx {
             layout: layout.clone(),
             where_: plan.where_.clone(),
+            filter,
+            metrics: metrics.clone(),
             group_by: plan.group_by.clone(),
             aggs: plan.agg_specs(),
             now,
@@ -208,10 +313,10 @@ pub(crate) fn scatter_gather(
         let tasks: Vec<ScanTask<PartialGroups>> = snaps
             .parts
             .iter()
-            .map(|(_, rows)| -> ScanTask<PartialGroups> {
+            .map(|(_, snap)| -> ScanTask<PartialGroups> {
                 let ctx = ctx.clone();
-                let rows = rows.clone();
-                Box::new(move || partial_aggregate(&ctx, &rows))
+                let snap = snap.clone();
+                Box::new(move || partial_aggregate(&ctx, &snap))
             })
             .collect();
 
@@ -260,6 +365,8 @@ pub(crate) fn scatter_gather(
     let ctx = Arc::new(ScanPartialCtx {
         layout: layout.clone(),
         where_: plan.where_.clone(),
+        filter,
+        metrics: metrics.clone(),
         topk: match (&pushdown_limit, plan.order_by.is_empty()) {
             (Some(k), false) => Some((plan.order_by.clone(), *k)),
             _ => None,
@@ -273,10 +380,10 @@ pub(crate) fn scatter_gather(
     let tasks: Vec<ScanTask<Vec<Row>>> = snaps
         .parts
         .iter()
-        .map(|(_, rows)| -> ScanTask<Vec<Row>> {
+        .map(|(_, snap)| -> ScanTask<Vec<Row>> {
             let ctx = ctx.clone();
-            let rows = rows.clone();
-            Box::new(move || partial_scan(&ctx, &rows))
+            let snap = snap.clone();
+            Box::new(move || partial_scan(&ctx, &snap))
         })
         .collect();
     let mut rows = Vec::new();
@@ -320,6 +427,7 @@ pub(crate) fn snapshot_join(
     pool: &ScanPool,
     s: &SelectStmt,
     snaps: &[TableSnapshots],
+    metrics: &Arc<ScanMetrics>,
     now: f64,
 ) -> Result<ResultSet> {
     let ectx = EvalCtx { now };
@@ -332,17 +440,21 @@ pub(crate) fn snapshot_join(
     }
     let mut specs: Vec<Arc<ScanPartialCtx>> = Vec::with_capacity(snaps.len());
     for (ti, snap) in snaps.iter().enumerate() {
+        let binding = binding_of(s, ti);
         let layout = Layout::of_table(
-            binding_of(s, ti),
+            binding,
             snap.def.schema.columns.iter().map(|c| c.name.clone()),
         );
         // Pushing a filter into the right side of a LEFT JOIN would change
         // its padding semantics, so those scan full (as centralized does).
         let push = ti == 0 || !s.joins[ti - 1].left_outer;
         let filter = if push { single_table_filter(s.where_.as_ref(), &layout) } else { None };
+        let compiled = compile_scan_filter(filter.as_ref(), &snap.def, binding);
         specs.push(Arc::new(ScanPartialCtx {
             layout,
             where_: filter,
+            filter: compiled,
+            metrics: metrics.clone(),
             topk: None,
             limit_only: None,
             now,
@@ -350,10 +462,10 @@ pub(crate) fn snapshot_join(
     }
     let mut tasks: Vec<ScanTask<Vec<Row>>> = Vec::new();
     for (ti, snap) in snaps.iter().enumerate() {
-        for (_, rows) in &snap.parts {
+        for (_, part) in &snap.parts {
             let spec = specs[ti].clone();
-            let rows = rows.clone();
-            tasks.push(Box::new(move || partial_scan(&spec, &rows)));
+            let part = part.clone();
+            tasks.push(Box::new(move || partial_scan(&spec, &part)));
         }
     }
     let mut results = pool.run(tasks).into_iter();

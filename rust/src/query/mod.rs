@@ -14,10 +14,14 @@
 //!   BY/LIMIT/project), plus the EXPLAIN renderer behind
 //!   `Prepared::describe()`.
 //! - [`engine`]: executes partials concurrently on the scan pool over
-//!   **versioned partition snapshots** — acquired under a brief read
-//!   latch, released before any work runs — honoring failover replica
-//!   selection. Join shapes run as parallel snapshot scans with the join
-//!   at the coordinator.
+//!   **versioned copy-on-write chunk snapshots** — acquired under a brief
+//!   read latch (an `Arc` bump per clean chunk), released before any work
+//!   runs — honoring failover replica selection. Scans compile eligible
+//!   WHERE conjuncts into the shared [`Conjunct`](crate::storage::cexpr)
+//!   form and consult per-chunk **zone maps** to skip whole chunks that
+//!   cannot match; [`ScanMetrics`] counts scanned vs pruned chunks
+//!   (surfaced through `DbCluster::route_counts`). Join shapes run as
+//!   parallel snapshot scans with the join at the coordinator.
 //! - [`pool`]: the fixed-size scan pool standing in for data-node-local
 //!   query threads.
 //!
@@ -33,3 +37,17 @@ pub mod pool;
 
 pub use plan::{explain, ScatterPlan, TableInfo};
 pub use pool::ScanPool;
+
+use std::sync::atomic::AtomicU64;
+
+/// Chunk-granularity scan telemetry, shared by every partial task of a
+/// cluster's scatter/snapshot-join executions. `chunks_pruned` counts
+/// chunks a zone map excluded before any row was touched; `chunks_scanned`
+/// counts chunks whose rows actually ran through the filter. Exposed via
+/// `DbCluster::route_counts` so tests (and steering dashboards) can see
+/// pruning take effect.
+#[derive(Default)]
+pub struct ScanMetrics {
+    pub chunks_scanned: AtomicU64,
+    pub chunks_pruned: AtomicU64,
+}

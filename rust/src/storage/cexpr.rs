@@ -1,0 +1,318 @@
+//! Compiled predicate/expression evaluators, shared by the DML fast path
+//! and the scatter-gather scan engine.
+//!
+//! [`Conjunct`] and [`CExpr`] started life inside `storage::dml_plan` as
+//! the claim loop's bind-to-physical-plan evaluators. The chunked-snapshot
+//! work gave the analytical scan path a second consumer: steering scans
+//! compile their WHERE conjuncts into the same `Conjunct` form so that
+//! (a) row evaluation skips the interpreter on the hot filter shapes and
+//! (b) per-chunk **zone maps** can exclude whole chunks before any row is
+//! touched (see `PartitionStore` / `Chunk::may_match`). Extracting the
+//! evaluators here keeps one implementation of the comparison semantics —
+//! `sql_cmp` three-valued logic, byte-for-byte the interpreter's
+//! `Bound::ColCmp` fast form — under both executors.
+
+use crate::storage::sql::ast::{Expr, Op};
+use crate::storage::sql::expr::{arith, truthy};
+use crate::storage::table_def::TableDef;
+use crate::storage::value::Value;
+use crate::{Error, Result};
+use std::cmp::Ordering;
+
+/// A compiled operand: a literal frozen at prepare time, or a parameter
+/// position resolved against the bound values at execution.
+#[derive(Clone, Debug)]
+pub enum CVal {
+    Lit(Value),
+    Param(usize),
+}
+
+impl CVal {
+    /// The concrete value for this execution. Out-of-range parameters
+    /// resolve to NULL (the dispatcher checks arity before running a plan,
+    /// so this is purely defensive — NULL makes every comparison miss).
+    pub fn get<'a>(&'a self, params: &'a [Value]) -> &'a Value {
+        match self {
+            CVal::Lit(v) => v,
+            CVal::Param(i) => params.get(*i).unwrap_or(&Value::Null),
+        }
+    }
+}
+
+/// One compiled WHERE conjunct: `row[col] <op> rhs` with SQL 3VL semantics
+/// (a NULL comparison does not match), byte-for-byte the behavior of the
+/// interpreter's `Bound::ColCmp` fast form.
+#[derive(Clone, Debug)]
+pub struct Conjunct {
+    pub col: usize,
+    pub op: Op,
+    pub rhs: CVal,
+}
+
+impl Conjunct {
+    pub fn matches(&self, row: &[Value], params: &[Value]) -> bool {
+        match row[self.col].sql_cmp(self.rhs.get(params)) {
+            None => false,
+            Some(o) => match self.op {
+                Op::Eq => o == Ordering::Equal,
+                Op::Ne => o != Ordering::Equal,
+                Op::Lt => o == Ordering::Less,
+                Op::Le => o != Ordering::Greater,
+                Op::Gt => o == Ordering::Greater,
+                Op::Ge => o != Ordering::Less,
+                _ => false,
+            },
+        }
+    }
+}
+
+/// A compiled scalar expression for SET clauses and INSERT templates.
+/// Column references are pre-resolved schema indices; parameters read
+/// straight from the bound slice. Semantics delegate to the interpreter's
+/// `arith`/`truthy`/`sql_cmp` so both paths compute identical values.
+#[derive(Clone, Debug)]
+pub enum CExpr {
+    Lit(Value),
+    Param(usize),
+    Col(usize),
+    /// `NOW()` — evaluates to the statement's start time.
+    Now,
+    Unary(Op, Box<CExpr>),
+    Binary(Op, Box<CExpr>, Box<CExpr>),
+    Case { arms: Vec<(CExpr, CExpr)>, else_: Option<Box<CExpr>> },
+}
+
+impl CExpr {
+    pub fn eval(&self, row: &[Value], params: &[Value], now: f64) -> Result<Value> {
+        Ok(match self {
+            CExpr::Lit(v) => v.clone(),
+            CExpr::Param(i) => params.get(*i).cloned().ok_or_else(|| {
+                Error::Type(format!("parameter ?{i} out of range ({} bound)", params.len()))
+            })?,
+            CExpr::Col(i) => row[*i].clone(),
+            CExpr::Now => Value::Float(now),
+            CExpr::Unary(op, e) => {
+                let v = e.eval(row, params, now)?;
+                match op {
+                    Op::Not => match truthy(&v)? {
+                        None => Value::Null,
+                        Some(b) => Value::Bool(!b),
+                    },
+                    Op::Neg => match v {
+                        Value::Null => Value::Null,
+                        Value::Int(i) => Value::Int(-i),
+                        Value::Float(f) => Value::Float(-f),
+                        other => return Err(Error::Type(format!("cannot negate {other}"))),
+                    },
+                    other => return Err(Error::Type(format!("bad unary op {other:?}"))),
+                }
+            }
+            CExpr::Binary(op, a, b) => {
+                match op {
+                    Op::And => {
+                        let l = truthy(&a.eval(row, params, now)?)?;
+                        if l == Some(false) {
+                            return Ok(Value::Bool(false));
+                        }
+                        let r = truthy(&b.eval(row, params, now)?)?;
+                        return Ok(match (l, r) {
+                            (_, Some(false)) => Value::Bool(false),
+                            (Some(true), Some(true)) => Value::Bool(true),
+                            _ => Value::Null,
+                        });
+                    }
+                    Op::Or => {
+                        let l = truthy(&a.eval(row, params, now)?)?;
+                        if l == Some(true) {
+                            return Ok(Value::Bool(true));
+                        }
+                        let r = truthy(&b.eval(row, params, now)?)?;
+                        return Ok(match (l, r) {
+                            (_, Some(true)) => Value::Bool(true),
+                            (Some(false), Some(false)) => Value::Bool(false),
+                            _ => Value::Null,
+                        });
+                    }
+                    _ => {}
+                }
+                let l = a.eval(row, params, now)?;
+                let r = b.eval(row, params, now)?;
+                match op {
+                    Op::Add | Op::Sub | Op::Mul | Op::Div | Op::Mod => arith(*op, &l, &r)?,
+                    Op::Eq | Op::Ne | Op::Lt | Op::Le | Op::Gt | Op::Ge => match l.sql_cmp(&r) {
+                        None => Value::Null,
+                        Some(o) => Value::Bool(match op {
+                            Op::Eq => o == Ordering::Equal,
+                            Op::Ne => o != Ordering::Equal,
+                            Op::Lt => o == Ordering::Less,
+                            Op::Le => o != Ordering::Greater,
+                            Op::Gt => o == Ordering::Greater,
+                            Op::Ge => o != Ordering::Less,
+                            _ => unreachable!(),
+                        }),
+                    },
+                    other => return Err(Error::Type(format!("bad binary op {other:?}"))),
+                }
+            }
+            CExpr::Case { arms, else_ } => {
+                for (c, v) in arms {
+                    if truthy(&c.eval(row, params, now)?)? == Some(true) {
+                        return v.eval(row, params, now);
+                    }
+                }
+                match else_ {
+                    Some(e) => e.eval(row, params, now)?,
+                    None => Value::Null,
+                }
+            }
+        })
+    }
+}
+
+/// Is `op` a row comparison usable in a [`Conjunct`]?
+pub fn is_cmp(op: Op) -> bool {
+    matches!(op, Op::Eq | Op::Ne | Op::Lt | Op::Le | Op::Gt | Op::Ge)
+}
+
+/// Mirror a comparison operator (for `lit op col` → `col op' lit`).
+pub fn flip_cmp(op: Op) -> Op {
+    match op {
+        Op::Lt => Op::Gt,
+        Op::Le => Op::Ge,
+        Op::Gt => Op::Lt,
+        Op::Ge => Op::Le,
+        other => other,
+    }
+}
+
+/// Compile a comparison operand: literal or parameter, nothing else.
+pub fn compile_rhs(e: &Expr) -> Option<CVal> {
+    match e {
+        Expr::Lit(v) => Some(CVal::Lit(v.clone())),
+        Expr::Param(i) => Some(CVal::Param(*i)),
+        _ => None,
+    }
+}
+
+/// Resolve a possibly-qualified column reference against a table schema,
+/// mirroring `Layout::resolve` (case-insensitive, ambiguity → give up).
+pub fn resolve_col(
+    def: &TableDef,
+    binding: &str,
+    qual: &Option<String>,
+    name: &str,
+) -> Option<usize> {
+    if let Some(q) = qual {
+        if !q.eq_ignore_ascii_case(binding) {
+            return None;
+        }
+    }
+    let mut hit = None;
+    for (i, c) in def.schema.columns.iter().enumerate() {
+        if c.name.eq_ignore_ascii_case(name) {
+            if hit.is_some() {
+                return None; // ambiguous: let the interpreter raise its error
+            }
+            hit = Some(i);
+        }
+    }
+    hit
+}
+
+/// Compile one expression into a [`Conjunct`] if it has the
+/// `col <cmp> literal-or-param` shape against `def` (bound as `binding`).
+pub fn compile_conjunct(e: &Expr, def: &TableDef, binding: &str) -> Option<Conjunct> {
+    let Expr::Binary(op, a, b) = e else { return None };
+    if !is_cmp(*op) {
+        return None;
+    }
+    match (a.as_ref(), b.as_ref()) {
+        (Expr::Col { table, name }, rhs) => Some(Conjunct {
+            col: resolve_col(def, binding, table, name)?,
+            op: *op,
+            rhs: compile_rhs(rhs)?,
+        }),
+        (lhs, Expr::Col { table, name }) => Some(Conjunct {
+            col: resolve_col(def, binding, table, name)?,
+            op: flip_cmp(*op),
+            rhs: compile_rhs(lhs)?,
+        }),
+        _ => None,
+    }
+}
+
+/// Compile a WHERE clause into simple conjuncts; `None` when any conjunct
+/// is not of the `col <cmp> literal-or-param` form. (The fast DML path
+/// needs all-or-nothing: a partially compiled predicate cannot replace the
+/// full statement. The scan engine instead collects the compilable subset
+/// for zone pruning — see `query::engine`.)
+pub fn compile_where(w: Option<&Expr>, def: &TableDef, binding: &str) -> Option<Vec<Conjunct>> {
+    let Some(w) = w else { return Some(Vec::new()) };
+    let mut out = Vec::new();
+    for c in w.conjuncts() {
+        out.push(compile_conjunct(c, def, binding)?);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::value::{ColumnType, Schema};
+
+    fn def() -> TableDef {
+        TableDef::new(
+            "t",
+            Schema::of(&[("a", ColumnType::Int), ("b", ColumnType::Float), ("s", ColumnType::Str)]),
+        )
+    }
+
+    #[test]
+    fn conjuncts_match_with_3vl() {
+        let c = Conjunct { col: 0, op: Op::Ge, rhs: CVal::Lit(Value::Int(3)) };
+        assert!(c.matches(&[Value::Int(3)], &[]));
+        assert!(!c.matches(&[Value::Int(2)], &[]));
+        assert!(!c.matches(&[Value::Null], &[]), "NULL never matches");
+        // cross-type comparison yields None, i.e. no match
+        assert!(!c.matches(&[Value::str("x")], &[]));
+    }
+
+    #[test]
+    fn compile_conjunct_handles_both_operand_orders() {
+        use crate::storage::sql::parse;
+        use crate::storage::sql::Statement;
+        let d = def();
+        let stmt = parse("SELECT a FROM t WHERE 5 > a AND b <= 2.5 AND s = 'x'").unwrap();
+        let Statement::Select(s) = stmt else { panic!() };
+        let w = s.where_.unwrap();
+        let cs: Vec<Conjunct> =
+            w.conjuncts().into_iter().map(|c| compile_conjunct(c, &d, "t").unwrap()).collect();
+        assert_eq!(cs.len(), 3);
+        // `5 > a` flips into `a < 5`
+        assert_eq!(cs[0].col, 0);
+        assert!(matches!(cs[0].op, Op::Lt));
+        assert!(cs[0].matches(&[Value::Int(4), Value::Null, Value::Null], &[]));
+        assert!(!cs[0].matches(&[Value::Int(5), Value::Null, Value::Null], &[]));
+    }
+
+    #[test]
+    fn compile_where_is_all_or_nothing() {
+        use crate::storage::sql::parse;
+        use crate::storage::sql::Statement;
+        let d = def();
+        let shapes = [
+            ("SELECT a FROM t WHERE a = 1 AND s = 'x'", true),
+            ("SELECT a FROM t WHERE a = 1 OR s = 'x'", false),
+            ("SELECT a FROM t WHERE a IN (1, 2)", false),
+            ("SELECT a FROM t WHERE nope = 1", false),
+        ];
+        for (sql, ok) in shapes {
+            let Statement::Select(s) = parse(sql).unwrap() else { panic!() };
+            assert_eq!(
+                compile_where(s.where_.as_ref(), &d, "t").is_some(),
+                ok,
+                "{sql}"
+            );
+        }
+    }
+}

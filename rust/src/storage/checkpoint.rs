@@ -424,7 +424,7 @@ mod tests {
             data_nodes: 2,
             replication: true,
             clock: clock::wall(),
-            durability: Some(DurabilityConfig { dir: dir.clone(), group_commit: 4 }),
+            durability: Some(DurabilityConfig::new(dir.clone(), 4)),
         })
         .unwrap();
         c.exec(
@@ -484,7 +484,7 @@ mod tests {
             data_nodes: 2,
             replication: true,
             clock: clock::wall(),
-            durability: Some(DurabilityConfig { dir: dir.clone(), group_commit: 1 }),
+            durability: Some(DurabilityConfig::new(dir.clone(), 1)),
         })
         .unwrap();
         c.exec(

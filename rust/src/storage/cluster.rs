@@ -11,12 +11,13 @@
 use crate::query::engine::{self as query_engine, TableSnapshots};
 use crate::query::plan::{self as query_plan, ScatterPlan, TableInfo};
 use crate::query::pool::ScanPool;
+use crate::query::ScanMetrics;
 use crate::storage::checkpoint;
 use crate::storage::datanode::{DataNode, NodeState};
 use crate::storage::dml_plan::{
     self, DeletePlan, DmlPlan, InsertPlan, Probe, SelectPlan, UpdatePlan,
 };
-use crate::storage::partition::{PartitionStore, Slot};
+use crate::storage::partition::{ChunkSnapshot, PartitionStore, Slot};
 use crate::storage::prepared::{Prepared, PreparedPlan};
 use crate::storage::sql::exec::{run_select, TableInput};
 use crate::storage::sql::expr::{bind, EvalCtx, Layout};
@@ -43,6 +44,27 @@ pub struct DurabilityConfig {
     /// Group-commit window: flush the buffered WAL sinks once every this
     /// many commits (1 = flush per commit).
     pub group_commit: usize,
+    /// Automatic checkpoint cadence: every this many availability sweeps,
+    /// `AvailabilityManager::sweep` cuts incremental per-partition
+    /// checkpoints on every serving node (truncating the WAL segments at
+    /// the cut). 0 disables the cadence — cuts then happen only when
+    /// requested explicitly or after a rejoin hand-off.
+    pub checkpoint_every_sweeps: usize,
+}
+
+impl DurabilityConfig {
+    /// Durability under `dir` with the given group-commit window and no
+    /// automatic checkpoint cadence.
+    pub fn new(dir: PathBuf, group_commit: usize) -> DurabilityConfig {
+        DurabilityConfig { dir, group_commit, checkpoint_every_sweeps: 0 }
+    }
+
+    /// Builder: cut per-partition checkpoints every `n` availability
+    /// sweeps (0 disables).
+    pub fn with_checkpoint_cadence(mut self, n: usize) -> DurabilityConfig {
+        self.checkpoint_every_sweeps = n;
+        self
+    }
 }
 
 /// Cluster construction parameters.
@@ -113,6 +135,11 @@ pub struct RouteCounts {
     pub snapshot_join: u64,
     pub centralized: u64,
     pub fast_dml: u64,
+    /// Chunks whose rows actually ran through a scatter/snapshot-join
+    /// partial filter.
+    pub chunks_scanned: u64,
+    /// Chunks a zone map excluded before any row was touched.
+    pub chunks_pruned: u64,
 }
 
 /// What [`DbCluster::restart_node`] reconstructed locally before the
@@ -147,6 +174,9 @@ pub struct DbCluster {
     /// Scan pool for the scatter-gather engine, created on first use.
     pool: OnceLock<ScanPool>,
     routes: RouteCounters,
+    /// Chunk scan/prune telemetry, shared with every partial task the
+    /// scatter engine spawns (see `query::ScanMetrics`).
+    scan_metrics: Arc<ScanMetrics>,
 }
 
 // ---------- lock plumbing ----------
@@ -189,11 +219,13 @@ struct ExecCtx<'a> {
     pre_versions: FxHashMap<(String, usize), u64>,
 }
 
-/// Inverse of an applied primary mutation.
+/// Inverse of an applied primary mutation. Rows are shared handles: undo
+/// state aliases the displaced row instead of cloning it (the chunked
+/// slab hands the old `Arc<Row>` back on update/delete).
 enum Undo {
     Remove { table: String, pidx: usize, slot: usize },
-    Restore { table: String, pidx: usize, slot: usize, row: Row },
-    Reinsert { table: String, pidx: usize, slot: usize, row: Row },
+    Restore { table: String, pidx: usize, slot: usize, row: Arc<Row> },
+    Reinsert { table: String, pidx: usize, slot: usize, row: Arc<Row> },
 }
 
 impl<'a> ExecCtx<'a> {
@@ -280,6 +312,7 @@ impl DbCluster {
             plans: RwLock::new(FxHashMap::default()),
             pool: OnceLock::new(),
             routes: RouteCounters::default(),
+            scan_metrics: Arc::new(ScanMetrics::default()),
         }))
     }
 
@@ -299,13 +332,16 @@ impl DbCluster {
     }
 
     /// Routing counters since start: scatter / snapshot-join / centralized
-    /// SELECT service plus compiled-fast-path DML executions.
+    /// SELECT service, compiled-fast-path DML executions, and the scan
+    /// engine's chunk-granularity telemetry (zone-map pruning adoption).
     pub fn route_counts(&self) -> RouteCounts {
         RouteCounts {
             scatter: self.routes.scatter.load(AtomicOrdering::Relaxed),
             snapshot_join: self.routes.snapshot_join.load(AtomicOrdering::Relaxed),
             centralized: self.routes.centralized.load(AtomicOrdering::Relaxed),
             fast_dml: self.routes.fast_dml.load(AtomicOrdering::Relaxed),
+            chunks_scanned: self.scan_metrics.chunks_scanned.load(AtomicOrdering::Relaxed),
+            chunks_pruned: self.scan_metrics.chunks_pruned.load(AtomicOrdering::Relaxed),
         }
     }
 
@@ -501,7 +537,9 @@ impl DbCluster {
     /// The re-seed is **slot-preserving** (`snapshot_slotted`): the backup
     /// reproduces the primary's slab layout, holes included, so the two
     /// replicas keep making identical canonical slot choices and
-    /// slot-addressed redo stays applicable on both sides.
+    /// slot-addressed redo stays applicable on both sides. Rows ship as
+    /// shared `Arc<Row>` handles — a heal aliases the primary's
+    /// materializations rather than deep-copying every live row.
     pub fn heal(&self) -> Result<usize> {
         let mut healed = 0;
         let cat = self.catalog.read().unwrap();
@@ -602,7 +640,8 @@ impl DbCluster {
                 let ckpt = dir.join(checkpoint::partition_ckpt_name(&table, pidx));
                 if ckpt.exists() {
                     let ck = checkpoint::load_partition_checkpoint(&ckpt)?;
-                    g.load_slotted(ck.cap, ck.rows)?;
+                    let rows = ck.rows.into_iter().map(|(s, r)| (s, Arc::new(r))).collect();
+                    g.load_slotted(ck.cap, rows)?;
                     g.version = ck.version;
                     g.epoch = ck.epoch;
                     report.from_checkpoint += 1;
@@ -1135,8 +1174,9 @@ impl DbCluster {
 
         // Apply phase: one in-place update per matched row on the primary,
         // mirrored synchronously to the backup; the displaced old row is
-        // kept (moved, not cloned) as undo state.
-        let mut applied: Vec<(usize, Slot, Row, Arc<Row>, u64)> = Vec::new();
+        // kept as undo state and both replicas share the new row's single
+        // materialization (handles, not clones).
+        let mut applied: Vec<(usize, Slot, Arc<Row>, Arc<Row>, u64)> = Vec::new();
         let mut failure: Option<Error> = None;
         for (ti, slot, _) in &matches {
             let t = &targets[*ti];
@@ -1160,14 +1200,14 @@ impl DbCluster {
             };
             let new_arc = Arc::new(new_row);
             match store_of_mut(&mut guards, t.prim)
-                .and_then(|s| s.update_in_place(*slot, new_arc.as_ref().clone()))
+                .and_then(|s| s.update_arc(*slot, new_arc.clone()))
             {
                 Ok(old) => {
                     let lsn = store_of(&guards, t.prim).version;
                     let mut backup_err = None;
                     if let Some(bi) = t.backup {
                         if let Err(e) = store_of_mut(&mut guards, bi)
-                            .and_then(|s| s.update_in_place(*slot, new_arc.as_ref().clone()))
+                            .and_then(|s| s.update_arc(*slot, new_arc.clone()))
                         {
                             backup_err = Some(e);
                         }
@@ -1175,7 +1215,7 @@ impl DbCluster {
                     if let Some(e) = backup_err {
                         // restore the primary before unwinding
                         store_of_mut(&mut guards, t.prim)
-                            .and_then(|s| s.update(*slot, old.clone()))
+                            .and_then(|s| s.update_arc(*slot, old.clone()).map(|_| ()))
                             .unwrap_or_else(|e2| {
                                 panic!("fast-path rollback failed: {e2} (original error: {e})")
                             });
@@ -1195,13 +1235,13 @@ impl DbCluster {
                 let t = &targets[ti];
                 if let Some(bi) = t.backup {
                     store_of_mut(&mut guards, bi)
-                        .and_then(|s| s.update(slot, old.clone()))
+                        .and_then(|s| s.update_arc(slot, old.clone()).map(|_| ()))
                         .unwrap_or_else(|e2| {
                             panic!("fast-path rollback failed: {e2} (original error: {e})")
                         });
                 }
                 store_of_mut(&mut guards, t.prim)
-                    .and_then(|s| s.update(slot, old))
+                    .and_then(|s| s.update_arc(slot, old).map(|_| ()))
                     .unwrap_or_else(|e2| {
                         panic!("fast-path rollback failed: {e2} (original error: {e})")
                     });
@@ -1280,7 +1320,7 @@ impl DbCluster {
             victims[start..].sort_unstable_by_key(|(_, s)| *s);
         }
 
-        let mut applied: Vec<(usize, Slot, Row, u64)> = Vec::new();
+        let mut applied: Vec<(usize, Slot, Arc<Row>, u64)> = Vec::new();
         let mut failure: Option<Error> = None;
         for (ti, slot) in &victims {
             let t = &targets[*ti];
@@ -1297,7 +1337,7 @@ impl DbCluster {
                     }
                     if let Some(e) = backup_err {
                         store_of_mut(&mut guards, t.prim)
-                            .and_then(|s| s.insert_at(*slot, old.clone()))
+                            .and_then(|s| s.insert_at_arc(*slot, old.clone()))
                             .unwrap_or_else(|e2| {
                                 panic!("fast-path rollback failed: {e2} (original error: {e})")
                             });
@@ -1319,13 +1359,13 @@ impl DbCluster {
                 let t = &targets[ti];
                 if let Some(bi) = t.backup {
                     store_of_mut(&mut guards, bi)
-                        .and_then(|s| s.insert_at(slot, old.clone()))
+                        .and_then(|s| s.insert_at_arc(slot, old.clone()))
                         .unwrap_or_else(|e2| {
                             panic!("fast-path rollback failed: {e2} (original error: {e})")
                         });
                 }
                 store_of_mut(&mut guards, t.prim)
-                    .and_then(|s| s.insert_at(slot, old))
+                    .and_then(|s| s.insert_at_arc(slot, old))
                     .unwrap_or_else(|e2| {
                         panic!("fast-path rollback failed: {e2} (original error: {e})")
                     });
@@ -1422,15 +1462,16 @@ impl DbCluster {
             let ti = target_of[*pidx].expect("row routed to an unlocked partition");
             let t = &targets[ti];
             let arc = Arc::new(row.clone());
-            match store_of_mut(&mut guards, t.prim).and_then(|s| s.insert(arc.as_ref().clone())) {
+            match store_of_mut(&mut guards, t.prim).and_then(|s| s.insert_arc(arc.clone())) {
                 Ok(slot) => {
                     let lsn = store_of(&guards, t.prim).version;
                     if let Some(bi) = t.backup {
                         // slot-addressed apply: canonical allocation means
                         // the backup lands the row in the same slot, or
-                        // divergence surfaces right here
+                        // divergence surfaces right here — and both
+                        // replicas share the one materialization
                         if let Err(e) = store_of_mut(&mut guards, bi)
-                            .and_then(|s| s.insert_at(slot, arc.as_ref().clone()))
+                            .and_then(|s| s.insert_at_arc(slot, arc.clone()))
                         {
                             store_of_mut(&mut guards, t.prim)
                                 .and_then(|s| s.delete(slot).map(|_| ()))
@@ -1771,6 +1812,7 @@ impl DbCluster {
                 &plan,
                 s.from.binding(),
                 &snaps[0],
+                &self.scan_metrics,
                 now,
             )?;
             self.routes.scatter.fetch_add(1, AtomicOrdering::Relaxed);
@@ -1796,7 +1838,8 @@ impl DbCluster {
             specs.push((j.table.table.clone(), parts));
         }
         let snaps = self.partition_snapshots(&specs)?;
-        let rs = query_engine::snapshot_join(self.scan_pool(), s, &snaps, now)?;
+        let rs =
+            query_engine::snapshot_join(self.scan_pool(), s, &snaps, &self.scan_metrics, now)?;
         self.routes.snapshot_join.fetch_add(1, AtomicOrdering::Relaxed);
         Ok(Some(rs))
     }
@@ -1805,9 +1848,11 @@ impl DbCluster {
     /// targets at one consistent cut: resolve each partition to its live
     /// replica (primary, or backup under failover), take every read latch
     /// in the canonical `(table, pidx)` order the 2PL executor also uses
-    /// (so this can never deadlock against a writing transaction), clone
-    /// each partition's snapshot `Arc`, and release all latches. Writers
-    /// are blocked only for the duration of the `Arc` clones — not for the
+    /// (so this can never deadlock against a writing transaction), take
+    /// each partition's chunk snapshot, and release all latches. Writers
+    /// are blocked only for the duration of the snapshot calls — an `Arc`
+    /// bump per clean chunk plus a re-seal of chunks dirtied since the
+    /// last snapshot, O(changed) rather than O(partition) — not for the
     /// query's execution, which is the whole point.
     pub(crate) fn partition_snapshots(
         &self,
@@ -1839,16 +1884,16 @@ impl DbCluster {
             .enumerate()
             .map(|(i, e)| ((e.0.clone(), e.1), i))
             .collect();
-        let snapshots: Vec<Arc<Vec<Row>>> = {
+        let snapshots: Vec<ChunkSnapshot> = {
             let guards: Vec<RwLockReadGuard<'_, PartitionStore>> =
                 uniq.iter().map(|e| e.2.read().unwrap()).collect();
             guards.iter().map(|g| g.snapshot()).collect()
-            // guards drop here: latches held only across the Arc clones
+            // guards drop here: latches held only across the chunk bumps
         };
         let mut out = Vec::with_capacity(specs.len());
         for (meta, (_, parts)) in metas.iter().zip(specs) {
             let key = meta.def.name.to_lowercase();
-            let mut tp: Vec<(usize, Arc<Vec<Row>>)> = parts
+            let mut tp: Vec<(usize, ChunkSnapshot)> = parts
                 .iter()
                 .map(|&pidx| (pidx, snapshots[pos[&(key.clone(), pidx)]].clone()))
                 .collect();
@@ -1998,11 +2043,13 @@ impl DbCluster {
                     }
                     Undo::Restore { table, pidx, slot, row } => {
                         let (t, p, s, r2) = (table.clone(), *pidx, *slot, row.clone());
-                        ctx.store_mut(&t, p, Role::Primary).and_then(|st| st.update(s, r2))
+                        ctx.store_mut(&t, p, Role::Primary)
+                            .and_then(|st| st.update_arc(s, r2).map(|_| ()))
                     }
                     Undo::Reinsert { table, pidx, slot, row } => {
                         let (t, p, s, r2) = (table.clone(), *pidx, *slot, row.clone());
-                        ctx.store_mut(&t, p, Role::Primary).and_then(|st| st.insert_at(s, r2))
+                        ctx.store_mut(&t, p, Role::Primary)
+                            .and_then(|st| st.insert_at_arc(s, r2))
                     }
                 };
                 if let Err(e2) = r {
@@ -2031,13 +2078,18 @@ impl DbCluster {
             let pidx = op.pidx();
             if ctx.has(&table, pidx, Role::Backup) {
                 let store = ctx.store_mut(&table, pidx, Role::Backup)?;
+                // shared handles: the backup aliases the primary's row
+                // materialization (one allocation per committed row across
+                // both replicas and the WAL)
                 match op {
                     LogOp::Insert { slot, row, .. } => {
-                        store.insert_at(*slot, row.as_ref().clone()).unwrap_or_else(|e| {
+                        store.insert_at_arc(*slot, row.clone()).unwrap_or_else(|e| {
                             panic!("replica divergence on {table}[{pidx}]: {e}")
                         });
                     }
-                    LogOp::Update { slot, row, .. } => store.update(*slot, row.as_ref().clone())?,
+                    LogOp::Update { slot, row, .. } => {
+                        store.update_arc(*slot, row.clone())?;
+                    }
                     LogOp::Delete { slot, .. } => {
                         store.delete(*slot)?;
                     }
@@ -2579,11 +2631,12 @@ impl DbCluster {
 
             ctx.note_pre_version(&tkey, pidx)?;
             let store = ctx.store_mut(&tkey, pidx, Role::Primary)?;
-            let slot = store.insert(row.clone())?;
+            let arc = Arc::new(row);
+            let slot = store.insert_arc(arc.clone())?;
             let lsn = store.version;
             ctx.applied.push((
                 lsn,
-                LogOp::Insert { table: tkey.clone(), pidx, slot, row: Arc::new(row) },
+                LogOp::Insert { table: tkey.clone(), pidx, slot, row: arc },
                 Undo::Remove { table: tkey.clone(), pidx, slot },
             ));
             n += 1;
@@ -2710,12 +2763,14 @@ impl DbCluster {
             matches.truncate(n as usize);
         }
 
-        // Apply.
-        let mut new_rows = Vec::with_capacity(matches.len());
+        // Apply. Old and new rows travel as shared handles: the undo
+        // state, the redo list, the backup apply and the WAL all alias one
+        // materialization per row version.
+        let mut new_rows: Vec<Arc<Row>> = Vec::with_capacity(matches.len());
         for (pidx, slot, _) in &matches {
             let old = {
                 let store = ctx.store(&tkey, *pidx, Role::Primary)?;
-                store.get(*slot).cloned().ok_or_else(|| {
+                store.get_arc(*slot).ok_or_else(|| {
                     Error::Engine(format!("matched slot {slot} vanished mid-statement"))
                 })?
             };
@@ -2723,12 +2778,12 @@ impl DbCluster {
             for (ci, b) in &set_bound {
                 new_vals[*ci] = b.eval(&old.values, &ectx)?;
             }
-            let new_row = def.schema.coerce_row(Row::new(new_vals))?;
+            let new_row = Arc::new(def.schema.coerce_row(Row::new(new_vals))?);
             let new_pidx = def.partition_of_row(&new_row.values)?;
             if new_pidx == *pidx {
                 ctx.note_pre_version(&tkey, *pidx)?;
                 let store = ctx.store_mut(&tkey, *pidx, Role::Primary)?;
-                store.update(*slot, new_row.clone())?;
+                store.update_arc(*slot, new_row.clone())?;
                 let lsn = store.version;
                 ctx.applied.push((
                     lsn,
@@ -2736,7 +2791,7 @@ impl DbCluster {
                         table: tkey.clone(),
                         pidx: *pidx,
                         slot: *slot,
-                        row: Arc::new(new_row.clone()),
+                        row: new_row.clone(),
                     },
                     Undo::Restore { table: tkey.clone(), pidx: *pidx, slot: *slot, row: old },
                 ));
@@ -2761,7 +2816,7 @@ impl DbCluster {
                     },
                 ));
                 let store = ctx.store_mut(&tkey, new_pidx, Role::Primary)?;
-                let new_slot = store.insert(new_row.clone())?;
+                let new_slot = store.insert_arc(new_row.clone())?;
                 let lsn = store.version;
                 ctx.applied.push((
                     lsn,
@@ -2769,7 +2824,7 @@ impl DbCluster {
                         table: tkey.clone(),
                         pidx: new_pidx,
                         slot: new_slot,
-                        row: Arc::new(new_row.clone()),
+                        row: new_row.clone(),
                     },
                     Undo::Remove { table: tkey.clone(), pidx: new_pidx, slot: new_slot },
                 ));
@@ -2782,7 +2837,7 @@ impl DbCluster {
             let input = TableInput {
                 binding: binding.to_string(),
                 columns: def.schema.columns.iter().map(|c| c.name.clone()).collect(),
-                rows: new_rows,
+                rows: new_rows.iter().map(|r| r.as_ref().clone()).collect(),
             };
             let pseudo = SelectStmt {
                 items: items.clone(),

@@ -197,7 +197,7 @@ impl DataNode {
             LogOp::Insert { table, pidx, slot, row } => {
                 let part = self.partition_even_if_dead(table, *pidx)?;
                 let mut p = part.write().unwrap();
-                p.insert_at(*slot, row.as_ref().clone()).map_err(|e| {
+                p.insert_at_arc(*slot, row.clone()).map_err(|e| {
                     Error::TxnAborted(format!(
                         "replica apply divergence on {table}[{pidx}]: {e}"
                     ))
@@ -205,7 +205,7 @@ impl DataNode {
             }
             LogOp::Update { table, pidx, slot, row } => {
                 let part = self.partition_even_if_dead(table, *pidx)?;
-                let r = part.write().unwrap().update(*slot, row.as_ref().clone());
+                let r = part.write().unwrap().update_arc(*slot, row.clone()).map(|_| ());
                 r
             }
             LogOp::Delete { table, pidx, slot } => {

@@ -32,162 +32,16 @@
 //! property tests, and DESIGN.md §"The compiled DML fast path" for the
 //! fallback rules).
 
+use crate::storage::cexpr::{compile_where, resolve_col};
 use crate::storage::sql::ast::{Expr, Op, SelectItem, SelectStmt, Statement, TableRef};
-use crate::storage::sql::expr::{arith, truthy};
 use crate::storage::table_def::TableDef;
 use crate::storage::value::Value;
-use crate::{Error, Result};
-use std::cmp::Ordering;
 
-/// A compiled operand: a literal frozen at prepare time, or a parameter
-/// position resolved against the bound values at execution.
-#[derive(Clone, Debug)]
-pub enum CVal {
-    Lit(Value),
-    Param(usize),
-}
-
-impl CVal {
-    /// The concrete value for this execution. Out-of-range parameters
-    /// resolve to NULL (the dispatcher checks arity before running a plan,
-    /// so this is purely defensive — NULL makes every comparison miss).
-    pub fn get<'a>(&'a self, params: &'a [Value]) -> &'a Value {
-        match self {
-            CVal::Lit(v) => v,
-            CVal::Param(i) => params.get(*i).unwrap_or(&Value::Null),
-        }
-    }
-}
-
-/// One compiled WHERE conjunct: `row[col] <op> rhs` with SQL 3VL semantics
-/// (a NULL comparison does not match), byte-for-byte the behavior of the
-/// interpreter's `Bound::ColCmp` fast form.
-#[derive(Clone, Debug)]
-pub struct Conjunct {
-    pub col: usize,
-    pub op: Op,
-    pub rhs: CVal,
-}
-
-impl Conjunct {
-    pub fn matches(&self, row: &[Value], params: &[Value]) -> bool {
-        match row[self.col].sql_cmp(self.rhs.get(params)) {
-            None => false,
-            Some(o) => match self.op {
-                Op::Eq => o == Ordering::Equal,
-                Op::Ne => o != Ordering::Equal,
-                Op::Lt => o == Ordering::Less,
-                Op::Le => o != Ordering::Greater,
-                Op::Gt => o == Ordering::Greater,
-                Op::Ge => o != Ordering::Less,
-                _ => false,
-            },
-        }
-    }
-}
-
-/// A compiled scalar expression for SET clauses and INSERT templates.
-/// Column references are pre-resolved schema indices; parameters read
-/// straight from the bound slice. Semantics delegate to the interpreter's
-/// `arith`/`truthy`/`sql_cmp` so both paths compute identical values.
-#[derive(Clone, Debug)]
-pub enum CExpr {
-    Lit(Value),
-    Param(usize),
-    Col(usize),
-    /// `NOW()` — evaluates to the statement's start time.
-    Now,
-    Unary(Op, Box<CExpr>),
-    Binary(Op, Box<CExpr>, Box<CExpr>),
-    Case { arms: Vec<(CExpr, CExpr)>, else_: Option<Box<CExpr>> },
-}
-
-impl CExpr {
-    pub fn eval(&self, row: &[Value], params: &[Value], now: f64) -> Result<Value> {
-        Ok(match self {
-            CExpr::Lit(v) => v.clone(),
-            CExpr::Param(i) => params.get(*i).cloned().ok_or_else(|| {
-                Error::Type(format!("parameter ?{i} out of range ({} bound)", params.len()))
-            })?,
-            CExpr::Col(i) => row[*i].clone(),
-            CExpr::Now => Value::Float(now),
-            CExpr::Unary(op, e) => {
-                let v = e.eval(row, params, now)?;
-                match op {
-                    Op::Not => match truthy(&v)? {
-                        None => Value::Null,
-                        Some(b) => Value::Bool(!b),
-                    },
-                    Op::Neg => match v {
-                        Value::Null => Value::Null,
-                        Value::Int(i) => Value::Int(-i),
-                        Value::Float(f) => Value::Float(-f),
-                        other => return Err(Error::Type(format!("cannot negate {other}"))),
-                    },
-                    other => return Err(Error::Type(format!("bad unary op {other:?}"))),
-                }
-            }
-            CExpr::Binary(op, a, b) => {
-                match op {
-                    Op::And => {
-                        let l = truthy(&a.eval(row, params, now)?)?;
-                        if l == Some(false) {
-                            return Ok(Value::Bool(false));
-                        }
-                        let r = truthy(&b.eval(row, params, now)?)?;
-                        return Ok(match (l, r) {
-                            (_, Some(false)) => Value::Bool(false),
-                            (Some(true), Some(true)) => Value::Bool(true),
-                            _ => Value::Null,
-                        });
-                    }
-                    Op::Or => {
-                        let l = truthy(&a.eval(row, params, now)?)?;
-                        if l == Some(true) {
-                            return Ok(Value::Bool(true));
-                        }
-                        let r = truthy(&b.eval(row, params, now)?)?;
-                        return Ok(match (l, r) {
-                            (_, Some(true)) => Value::Bool(true),
-                            (Some(false), Some(false)) => Value::Bool(false),
-                            _ => Value::Null,
-                        });
-                    }
-                    _ => {}
-                }
-                let l = a.eval(row, params, now)?;
-                let r = b.eval(row, params, now)?;
-                match op {
-                    Op::Add | Op::Sub | Op::Mul | Op::Div | Op::Mod => arith(*op, &l, &r)?,
-                    Op::Eq | Op::Ne | Op::Lt | Op::Le | Op::Gt | Op::Ge => match l.sql_cmp(&r) {
-                        None => Value::Null,
-                        Some(o) => Value::Bool(match op {
-                            Op::Eq => o == Ordering::Equal,
-                            Op::Ne => o != Ordering::Equal,
-                            Op::Lt => o == Ordering::Less,
-                            Op::Le => o != Ordering::Greater,
-                            Op::Gt => o == Ordering::Greater,
-                            Op::Ge => o != Ordering::Less,
-                            _ => unreachable!(),
-                        }),
-                    },
-                    other => return Err(Error::Type(format!("bad binary op {other:?}"))),
-                }
-            }
-            CExpr::Case { arms, else_ } => {
-                for (c, v) in arms {
-                    if truthy(&c.eval(row, params, now)?)? == Some(true) {
-                        return v.eval(row, params, now);
-                    }
-                }
-                match else_ {
-                    Some(e) => e.eval(row, params, now)?,
-                    None => Value::Null,
-                }
-            }
-        })
-    }
-}
+// The compiled evaluators were extracted to `storage::cexpr` when the
+// scatter-gather scan engine became their second consumer (zone-map chunk
+// pruning + compiled row filters); re-exported here so the fast-path plan
+// types keep reading naturally.
+pub use crate::storage::cexpr::{CExpr, CVal, Conjunct};
 
 /// The partition-routing recipe: how bound values select the partitions a
 /// plan touches. Mirrors the interpreter's `prune_partitions` (which only
@@ -338,76 +192,6 @@ pub fn compile(
         }
         Statement::CreateTable { .. } => None,
     }
-}
-
-/// Resolve a possibly-qualified column reference against the table schema,
-/// mirroring `Layout::resolve` (case-insensitive, ambiguity → give up).
-fn resolve_col(def: &TableDef, binding: &str, qual: &Option<String>, name: &str) -> Option<usize> {
-    if let Some(q) = qual {
-        if !q.eq_ignore_ascii_case(binding) {
-            return None;
-        }
-    }
-    let mut hit = None;
-    for (i, c) in def.schema.columns.iter().enumerate() {
-        if c.name.eq_ignore_ascii_case(name) {
-            if hit.is_some() {
-                return None; // ambiguous: let the interpreter raise its error
-            }
-            hit = Some(i);
-        }
-    }
-    hit
-}
-
-fn compile_rhs(e: &Expr) -> Option<CVal> {
-    match e {
-        Expr::Lit(v) => Some(CVal::Lit(v.clone())),
-        Expr::Param(i) => Some(CVal::Param(*i)),
-        _ => None,
-    }
-}
-
-fn is_cmp(op: Op) -> bool {
-    matches!(op, Op::Eq | Op::Ne | Op::Lt | Op::Le | Op::Gt | Op::Ge)
-}
-
-fn flip_cmp(op: Op) -> Op {
-    match op {
-        Op::Lt => Op::Gt,
-        Op::Le => Op::Ge,
-        Op::Gt => Op::Lt,
-        Op::Ge => Op::Le,
-        other => other,
-    }
-}
-
-/// Compile a WHERE clause into simple conjuncts; `None` when any conjunct
-/// is not of the `col <cmp> literal-or-param` form.
-fn compile_where(w: Option<&Expr>, def: &TableDef, binding: &str) -> Option<Vec<Conjunct>> {
-    let Some(w) = w else { return Some(Vec::new()) };
-    let mut out = Vec::new();
-    for c in w.conjuncts() {
-        let Expr::Binary(op, a, b) = c else { return None };
-        if !is_cmp(*op) {
-            return None;
-        }
-        let conjunct = match (a.as_ref(), b.as_ref()) {
-            (Expr::Col { table, name }, rhs) => Conjunct {
-                col: resolve_col(def, binding, table, name)?,
-                op: *op,
-                rhs: compile_rhs(rhs)?,
-            },
-            (lhs, Expr::Col { table, name }) => Conjunct {
-                col: resolve_col(def, binding, table, name)?,
-                op: flip_cmp(*op),
-                rhs: compile_rhs(lhs)?,
-            },
-            _ => return None,
-        };
-        out.push(conjunct);
-    }
-    Some(out)
 }
 
 /// Routing recipe from the compiled conjuncts (mirrors `prune_partitions`:

@@ -9,6 +9,7 @@
 //! engine and the steering layer share one query path — exactly the
 //! integration the paper argues for.
 
+pub mod cexpr;
 pub mod checkpoint;
 pub mod cluster;
 pub mod connector;

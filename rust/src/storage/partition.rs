@@ -1,4 +1,5 @@
-//! A single table partition: slab-allocated rows plus hash indexes.
+//! A single table partition: a chunked copy-on-write slab of shared rows
+//! plus hash indexes.
 //!
 //! Partitions are the unit of locking, replication, placement — and, since
 //! the durability rework, of *logging*: every committed mutation carries
@@ -12,23 +13,227 @@
 //! future slot choice, which is what lets redo records address rows by
 //! slot (and lets the chaos tests demand byte-equality between a rejoined
 //! node and a never-killed twin).
+//!
+//! ## Snapshot representation (copy-on-write chunks)
+//!
+//! Rows are stored as `Arc<Row>` and grouped into fixed spans of
+//! [`CHUNK_SLOTS`] slots. For each span the store keeps a **sealed**
+//! immutable [`Chunk`] (shared via `Arc`) that it invalidates whenever a
+//! slot inside the span mutates — that `None` entry *is* the per-chunk
+//! dirty bit. [`PartitionStore::snapshot`] therefore costs an `Arc` bump
+//! per clean chunk plus a re-seal of only the dirty ones (and re-sealing
+//! is itself `Arc` bumps of the span's rows, never row deep-copies):
+//! O(changed), where the previous representation deep-cloned every live
+//! row under the partition read latch on every version change —
+//! O(partition) paid by each steering read while 2PL writers stalled.
+//!
+//! Sealing a chunk also computes its **zone maps**: per numeric column,
+//! the min/max over comparable non-NULL values plus a NULL count. The
+//! scan engine uses them to skip whole chunks whose bounds cannot satisfy
+//! a compiled WHERE conjunct ([`Chunk::may_match`]). Zone maps are
+//! **conservative only**: they may fail to prune, never prune a chunk
+//! that could match, and they are never consulted for point-read
+//! correctness (index probes and the 2PL executors read the slab
+//! directly).
 
+use crate::storage::cexpr::Conjunct;
+use crate::storage::sql::ast::Op;
 use crate::storage::table_def::TableDef;
-use crate::storage::value::{Row, Value};
+use crate::storage::value::{ColumnType, Row, Value};
 use crate::storage::wal::{LogOp, WalRecord};
 use crate::{Error, Result};
 use rustc_hash::FxHashMap;
+use std::cmp::Ordering;
 use std::collections::BTreeSet;
 use std::sync::{Arc, Mutex};
 
 /// Slot handle inside a partition (stable until the row is deleted).
 pub type Slot = usize;
 
+/// Slots per copy-on-write chunk. Claim-loop point writes dirty one chunk;
+/// a 100k-row partition re-seals 1 of ~400 chunks per steering snapshot.
+pub const CHUNK_SLOTS: usize = 256;
+
+/// Number of chunks covering a slab of `cap` slots.
+fn chunk_count(cap: usize) -> usize {
+    cap.div_ceil(CHUNK_SLOTS)
+}
+
+/// Zone map of one numeric column within one sealed chunk: bounds over the
+/// values that can participate in a comparison, plus a NULL census.
+#[derive(Clone, Debug)]
+pub struct Zone {
+    /// Smallest comparable value in the chunk (`Null` when `bounded == 0`).
+    pub min: Value,
+    /// Largest comparable value in the chunk (`Null` when `bounded == 0`).
+    pub max: Value,
+    /// NULL values seen (they never match a comparison).
+    pub nulls: usize,
+    /// Values inside `[min, max]` — non-NULL values that order under
+    /// `sql_cmp`. NaN is excluded: it compares as `None` against
+    /// everything, so it can never satisfy a conjunct and must not poison
+    /// the bounds.
+    pub bounded: usize,
+}
+
+impl Default for Zone {
+    fn default() -> Zone {
+        Zone { min: Value::Null, max: Value::Null, nulls: 0, bounded: 0 }
+    }
+}
+
+impl Zone {
+    fn fold(&mut self, v: &Value) {
+        if v.is_null() {
+            self.nulls += 1;
+            return;
+        }
+        if v.sql_cmp(v).is_none() {
+            // NaN: unordered under sql_cmp, never matches any conjunct
+            return;
+        }
+        if self.bounded == 0 {
+            self.min = v.clone();
+            self.max = v.clone();
+        } else {
+            if v.sql_cmp(&self.min) == Some(Ordering::Less) {
+                self.min = v.clone();
+            }
+            if v.sql_cmp(&self.max) == Some(Ordering::Greater) {
+                self.max = v.clone();
+            }
+        }
+        self.bounded += 1;
+    }
+
+    /// Can no row of this chunk satisfy `column <op> v`? Decisions reuse
+    /// `sql_cmp` — the exact comparison the row filter runs — so pruning
+    /// is sound by construction: `true` here means every per-row compare
+    /// would come out `false`.
+    pub fn excludes(&self, op: Op, v: &Value) -> bool {
+        if self.bounded == 0 {
+            // only NULLs / NaNs in this column: no comparison matches
+            return true;
+        }
+        let (vs_min, vs_max) = match (v.sql_cmp(&self.min), v.sql_cmp(&self.max)) {
+            (Some(a), Some(b)) => (a, b),
+            // v does not order against the column's values (e.g. a string
+            // against numerics): every row compare yields None
+            _ => return true,
+        };
+        match op {
+            Op::Eq => vs_min == Ordering::Less || vs_max == Ordering::Greater,
+            // min == v == max: every bounded value equals v, nothing differs
+            Op::Ne => vs_min == Ordering::Equal && vs_max == Ordering::Equal,
+            // a row < v exists only when min < v
+            Op::Lt => vs_min != Ordering::Greater,
+            Op::Le => vs_min == Ordering::Less,
+            // a row > v exists only when max > v
+            Op::Gt => vs_max != Ordering::Less,
+            Op::Ge => vs_max == Ordering::Greater,
+            _ => false,
+        }
+    }
+}
+
+/// One sealed, immutable span of [`CHUNK_SLOTS`] slots: shared row handles
+/// in slot order plus per-column zone maps. Chunks are shared by `Arc`
+/// between the store's seal cache and every snapshot taken while they stay
+/// clean.
+pub struct Chunk {
+    rows: Vec<Option<Arc<Row>>>,
+    /// Live rows in the span.
+    pub live: usize,
+    /// One entry per schema column; `None` for columns zone maps do not
+    /// track (non-numeric types).
+    zones: Vec<Option<Zone>>,
+}
+
+impl Chunk {
+    /// Live rows in slot order.
+    pub fn rows(&self) -> impl Iterator<Item = &Row> {
+        self.rows.iter().filter_map(|r| r.as_deref())
+    }
+
+    /// Zone map of schema column `col`, when tracked.
+    pub fn zone(&self, col: usize) -> Option<&Zone> {
+        self.zones.get(col).and_then(|z| z.as_ref())
+    }
+
+    /// Conservative pre-filter: `false` means **no** row in this chunk can
+    /// satisfy the conjunction, so the scan may skip it entirely. `true`
+    /// promises nothing — callers still evaluate the predicate per row.
+    pub fn may_match(&self, preds: &[Conjunct], params: &[Value]) -> bool {
+        if self.live == 0 {
+            return false;
+        }
+        for c in preds {
+            let v = c.rhs.get(params);
+            if v.is_null() {
+                // a NULL comparison matches no row at all
+                return false;
+            }
+            if let Some(Some(z)) = self.zones.get(c.col) {
+                if z.excludes(c.op, v) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// An immutable, shareable snapshot of one partition: its sealed chunks at
+/// a single version. Cloning is one `Arc` bump; iteration yields live rows
+/// in slot order, exactly like the slab itself.
+#[derive(Clone)]
+pub struct ChunkSnapshot(Arc<SnapInner>);
+
+struct SnapInner {
+    chunks: Vec<Arc<Chunk>>,
+    live: usize,
+    version: u64,
+}
+
+impl ChunkSnapshot {
+    /// The sealed chunks, in slab order.
+    pub fn chunks(&self) -> &[Arc<Chunk>] {
+        &self.0.chunks
+    }
+
+    /// Live rows across all chunks.
+    pub fn len(&self) -> usize {
+        self.0.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.live == 0
+    }
+
+    /// Partition version (== LSN) the snapshot was taken at.
+    pub fn version(&self) -> u64 {
+        self.0.version
+    }
+
+    /// Live rows in slot order.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &Row> {
+        self.0.chunks.iter().flat_map(|c| c.rows())
+    }
+
+    /// Do two snapshots share the same assembled state? (Repeat snapshots
+    /// between mutations return the identical object.)
+    pub fn ptr_eq(a: &ChunkSnapshot, b: &ChunkSnapshot) -> bool {
+        Arc::ptr_eq(&a.0, &b.0)
+    }
+}
+
 /// In-memory storage for one partition of one table.
 pub struct PartitionStore {
     def: Arc<TableDef>,
-    /// Slab: `None` = free slot (reusable).
-    rows: Vec<Option<Row>>,
+    /// Slab of shared row handles: `None` = free slot (reusable). The
+    /// `Arc` is what makes snapshots, WAL records, and the mirrored backup
+    /// apply alias one row materialization instead of deep-copying it.
+    rows: Vec<Option<Arc<Row>>>,
     /// Free slots, allocated smallest-first (canonical — see module docs).
     free: BTreeSet<Slot>,
     live: usize,
@@ -51,11 +256,16 @@ pub struct PartitionStore {
     /// writes committed after a promotion it never saw.
     pub epoch: u64,
     approx_bytes: usize,
-    /// Cached clone-on-read snapshot, keyed by the version it was taken at.
-    /// Serving the scatter-gather read path: readers clone the `Arc` and
-    /// release the partition latch immediately, so analytical scans never
-    /// hold partition locks while they execute (see [`PartitionStore::snapshot`]).
-    snap: Mutex<Option<(u64, Arc<Vec<Row>>)>>,
+    /// Seal cache: one slot per chunk span; `Some` holds the immutable
+    /// sealed chunk shared with snapshots, `None` is the dirty bit set by
+    /// any mutation inside the span. Interior mutability because sealing
+    /// happens under the partition *read* latch (`snapshot(&self)`), which
+    /// excludes writers but not fellow readers.
+    sealed: Mutex<Vec<Option<Arc<Chunk>>>>,
+    /// Assembled snapshot cache, keyed by the version it was taken at:
+    /// repeat readers between mutations get the same handle back for the
+    /// cost of an `Arc` clone (see [`PartitionStore::snapshot`]).
+    snap: Mutex<Option<(u64, ChunkSnapshot)>>,
 }
 
 impl PartitionStore {
@@ -76,6 +286,7 @@ impl PartitionStore {
             version: 0,
             epoch: 0,
             approx_bytes: 0,
+            sealed: Mutex::new(Vec::new()),
             snap: Mutex::new(None),
         }
     }
@@ -99,14 +310,56 @@ impl PartitionStore {
         self.rows.len()
     }
 
-    /// Approximate resident bytes (rows only, indexes excluded).
+    /// Approximate resident bytes of the rows this store **owns** (indexes
+    /// excluded). Each row is counted exactly once no matter how many
+    /// `Arc` aliases of it exist — cached snapshot chunks, in-flight WAL
+    /// records, and scans hold handles, not copies, so they add nothing
+    /// here. (The mirrored backup replica counts its own handles: the two
+    /// stores report independently even when they share row allocations.)
     pub fn approx_bytes(&self) -> usize {
         self.approx_bytes
+    }
+
+    /// Keep the seal cache sized to the slab (one entry per chunk span).
+    fn sync_sealed_len(&mut self) {
+        let n = chunk_count(self.rows.len());
+        let s = self.sealed.get_mut().unwrap();
+        if s.len() < n {
+            s.resize(n, None);
+        }
+    }
+
+    /// Mark the chunk containing `slot` dirty (drops its sealed form; the
+    /// next snapshot re-seals it from the slab).
+    fn mark_dirty(&mut self, slot: Slot) {
+        let s = self.sealed.get_mut().unwrap();
+        let ci = slot / CHUNK_SLOTS;
+        if ci < s.len() {
+            s[ci] = None;
+        }
     }
 
     fn pk_of(&self, row: &Row) -> Option<i64> {
         let i = self.def.pk_idx()?;
         row.values[i].as_i64()
+    }
+
+    /// Validate a shared row against the schema. Rows that need the
+    /// Int→Float widening are re-materialized; already-canonical rows
+    /// (everything coming out of another store, the WAL, or a checkpoint)
+    /// keep their allocation and just bump the refcount.
+    fn coerce_shared(&self, row: Arc<Row>) -> Result<Arc<Row>> {
+        self.def.schema.check_row(&row)?;
+        let needs_widening = row
+            .values
+            .iter()
+            .zip(&self.def.schema.columns)
+            .any(|(v, c)| c.ty == ColumnType::Float && matches!(v, Value::Int(_)));
+        if needs_widening {
+            Ok(Arc::new(self.def.schema.coerce_row(row.as_ref().clone())?))
+        } else {
+            Ok(row)
+        }
     }
 
     fn index_insert(&mut self, slot: Slot, row: &Row) {
@@ -153,10 +406,9 @@ impl PartitionStore {
         }
     }
 
-    /// Place a validated row at a specific slot. Shared tail of
-    /// [`PartitionStore::insert`] and [`PartitionStore::insert_at`]; the
-    /// slot must already be carved out of the free set / slab.
-    fn place(&mut self, slot: Slot, row: Row) {
+    /// Place a validated row at a specific slot. Shared tail of the insert
+    /// paths; the slot must already be carved out of the free set / slab.
+    fn place(&mut self, slot: Slot, row: Arc<Row>) {
         self.approx_bytes += row.approx_bytes();
         if let Some(k) = self.pk_of(&row) {
             self.pk.insert(k, slot);
@@ -165,12 +417,25 @@ impl PartitionStore {
         self.rows[slot] = Some(row);
         self.live += 1;
         self.version += 1;
+        self.mark_dirty(slot);
     }
 
     /// Insert a validated row; returns its slot (always the smallest free
     /// one — canonical allocation, see module docs).
     pub fn insert(&mut self, row: Row) -> Result<Slot> {
         let row = self.def.schema.coerce_row(row)?;
+        self.insert_valid(Arc::new(row))
+    }
+
+    /// [`PartitionStore::insert`] over a shared handle: the row keeps its
+    /// allocation (backup apply, redo replay — one materialization per
+    /// committed row across every replica and the WAL).
+    pub fn insert_arc(&mut self, row: Arc<Row>) -> Result<Slot> {
+        let row = self.coerce_shared(row)?;
+        self.insert_valid(row)
+    }
+
+    fn insert_valid(&mut self, row: Arc<Row>) -> Result<Slot> {
         if let Some(k) = self.pk_of(&row) {
             if self.pk.contains_key(&k) {
                 return Err(Error::Constraint(format!(
@@ -183,6 +448,7 @@ impl PartitionStore {
             Some(s) => s,
             None => {
                 self.rows.push(None);
+                self.sync_sealed_len();
                 self.rows.len() - 1
             }
         };
@@ -198,6 +464,17 @@ impl PartitionStore {
     /// relocation.
     pub fn insert_at(&mut self, slot: Slot, row: Row) -> Result<()> {
         let row = self.def.schema.coerce_row(row)?;
+        self.insert_at_valid(slot, Arc::new(row))
+    }
+
+    /// [`PartitionStore::insert_at`] over a shared handle (replica apply /
+    /// replay share the primary's materialization).
+    pub fn insert_at_arc(&mut self, slot: Slot, row: Arc<Row>) -> Result<()> {
+        let row = self.coerce_shared(row)?;
+        self.insert_at_valid(slot, row)
+    }
+
+    fn insert_at_valid(&mut self, slot: Slot, row: Arc<Row>) -> Result<()> {
         if let Some(k) = self.pk_of(&row) {
             if self.pk.contains_key(&k) {
                 return Err(Error::Constraint(format!(
@@ -210,6 +487,7 @@ impl PartitionStore {
             self.free.insert(self.rows.len());
             self.rows.push(None);
         }
+        self.sync_sealed_len();
         if self.rows[slot].is_some() {
             return Err(Error::Constraint(format!(
                 "slot {slot} already occupied in '{}'",
@@ -223,7 +501,12 @@ impl PartitionStore {
 
     /// Read a row by slot.
     pub fn get(&self, slot: Slot) -> Option<&Row> {
-        self.rows.get(slot).and_then(|r| r.as_ref())
+        self.rows.get(slot).and_then(|r| r.as_deref())
+    }
+
+    /// Shared handle to the row at `slot` (an `Arc` bump, not a copy).
+    pub fn get_arc(&self, slot: Slot) -> Option<Arc<Row>> {
+        self.rows.get(slot).and_then(|r| r.clone())
     }
 
     /// Slot for a primary-key value.
@@ -250,13 +533,26 @@ impl PartitionStore {
         self.update_in_place(slot, new_row).map(|_| ())
     }
 
-    /// Overwrite the row at `slot` and hand the displaced old row back to
-    /// the caller **without cloning it** (the caller typically keeps it as
-    /// undo state and for change detection). Secondary indexes are only
-    /// rewritten for columns whose value actually changed — the fast DML
-    /// path's point updates flip `status` and leave the rest alone.
-    pub fn update_in_place(&mut self, slot: Slot, new_row: Row) -> Result<Row> {
+    /// Overwrite the row at `slot` and hand the displaced old row's handle
+    /// back to the caller (the caller typically keeps it as undo state and
+    /// for change detection — an `Arc` bump, never a clone). Secondary
+    /// indexes are only rewritten for columns whose value actually changed
+    /// — the fast DML path's point updates flip `status` and leave the
+    /// rest alone.
+    pub fn update_in_place(&mut self, slot: Slot, new_row: Row) -> Result<Arc<Row>> {
         let new_row = self.def.schema.coerce_row(new_row)?;
+        self.update_valid(slot, Arc::new(new_row))
+    }
+
+    /// [`PartitionStore::update_in_place`] over a shared handle: the
+    /// primary's materialization is applied to the backup and logged
+    /// without re-cloning the row.
+    pub fn update_arc(&mut self, slot: Slot, new_row: Arc<Row>) -> Result<Arc<Row>> {
+        let new_row = self.coerce_shared(new_row)?;
+        self.update_valid(slot, new_row)
+    }
+
+    fn update_valid(&mut self, slot: Slot, new_row: Arc<Row>) -> Result<Arc<Row>> {
         let old = self
             .rows
             .get_mut(slot)
@@ -276,11 +572,12 @@ impl PartitionStore {
         self.approx_bytes = self.approx_bytes - old.approx_bytes() + new_row.approx_bytes();
         self.rows[slot] = Some(new_row);
         self.version += 1;
+        self.mark_dirty(slot);
         Ok(old)
     }
 
-    /// Delete the row at `slot`; returns the removed row.
-    pub fn delete(&mut self, slot: Slot) -> Result<Row> {
+    /// Delete the row at `slot`; returns the removed row's handle.
+    pub fn delete(&mut self, slot: Slot) -> Result<Arc<Row>> {
         let old = self
             .rows
             .get_mut(slot)
@@ -294,6 +591,7 @@ impl PartitionStore {
         self.free.insert(slot);
         self.live -= 1;
         self.version += 1;
+        self.mark_dirty(slot);
         Ok(old)
     }
 
@@ -327,8 +625,10 @@ impl PartitionStore {
             )));
         }
         match &rec.op {
-            LogOp::Insert { slot, row, .. } => self.insert_at(*slot, row.as_ref().clone())?,
-            LogOp::Update { slot, row, .. } => self.update(*slot, row.as_ref().clone())?,
+            LogOp::Insert { slot, row, .. } => self.insert_at_arc(*slot, row.clone())?,
+            LogOp::Update { slot, row, .. } => {
+                self.update_arc(*slot, row.clone())?;
+            }
             LogOp::Delete { slot, .. } => {
                 self.delete(*slot)?;
             }
@@ -342,46 +642,115 @@ impl PartitionStore {
         self.rows
             .iter()
             .enumerate()
-            .filter_map(|(i, r)| r.as_ref().map(|row| (i, row)))
+            .filter_map(|(i, r)| r.as_deref().map(|row| (i, row)))
     }
 
-    /// Deep copy of all live rows (legacy checkpointing / bulk export).
+    /// Deep copy of all live rows (legacy checkpointing / bulk export —
+    /// and the baseline the snapshot microbenchmark compares the chunked
+    /// path against).
     pub fn snapshot_rows(&self) -> Vec<Row> {
         self.iter().map(|(_, r)| r.clone()).collect()
     }
 
-    /// Deep, **slot-preserving** copy: `(slab capacity, live rows with
-    /// their slots)`. This is the replica-seeding format — reloading it via
-    /// [`PartitionStore::load_slotted`] reproduces the slab layout (holes
-    /// included) so slot-addressed redo keeps applying cleanly afterwards.
-    pub fn snapshot_slotted(&self) -> (usize, Vec<(Slot, Row)>) {
-        (self.rows.len(), self.iter().map(|(s, r)| (s, r.clone())).collect())
+    /// **Slot-preserving** snapshot of shared row handles: `(slab
+    /// capacity, live rows with their slots)`. This is the replica-seeding
+    /// format — reloading it via [`PartitionStore::load_slotted`]
+    /// reproduces the slab layout (holes included) so slot-addressed redo
+    /// keeps applying cleanly afterwards. Rows ship as `Arc` handles: a
+    /// heal or rejoin re-seed aliases the primary's materializations
+    /// instead of deep-copying every live row.
+    pub fn snapshot_slotted(&self) -> (usize, Vec<(Slot, Arc<Row>)>) {
+        (
+            self.rows.len(),
+            self.rows
+                .iter()
+                .enumerate()
+                .filter_map(|(i, r)| r.clone().map(|row| (i, row)))
+                .collect(),
+        )
     }
 
-    /// Versioned snapshot of the live rows in slot order, shared via `Arc`.
+    /// Versioned copy-on-write snapshot: clean chunks are `Arc`-bumped,
+    /// dirty ones re-sealed from the slab (row-handle bumps + zone-map
+    /// computation — never row deep-copies), so the cost under the
+    /// partition read latch is O(changed chunks), not O(partition).
     ///
-    /// The rows are materialized at most once per partition version: repeat
-    /// readers between mutations get the same `Arc` back for the cost of a
+    /// The assembled snapshot is cached per version: repeat readers
+    /// between mutations get the same handle back for the cost of a
     /// clone. Callers hold the partition's read latch only long enough to
     /// call this; query execution then proceeds against the immutable
     /// snapshot with **no partition lock held**, which is what keeps the
     /// steering analytics off the scheduler's 2PL critical path.
-    pub fn snapshot(&self) -> Arc<Vec<Row>> {
-        let mut g = self.snap.lock().unwrap();
-        if let Some((v, rows)) = g.as_ref() {
-            if *v == self.version {
-                return rows.clone();
+    pub fn snapshot(&self) -> ChunkSnapshot {
+        {
+            let g = self.snap.lock().unwrap();
+            if let Some((v, s)) = g.as_ref() {
+                if *v == self.version {
+                    return s.clone();
+                }
             }
         }
-        let rows = Arc::new(self.snapshot_rows());
-        *g = Some((self.version, rows.clone()));
-        rows
+        let nchunks = chunk_count(self.rows.len());
+        let chunks: Vec<Arc<Chunk>> = {
+            let mut sealed = self.sealed.lock().unwrap();
+            if sealed.len() < nchunks {
+                // defensive: mutation paths keep this in sync
+                sealed.resize(nchunks, None);
+            }
+            let mut chunks = Vec::with_capacity(nchunks);
+            for ci in 0..nchunks {
+                let c = if let Some(c) = sealed[ci].as_ref() {
+                    c.clone()
+                } else {
+                    let c = Arc::new(self.seal_chunk(ci));
+                    sealed[ci] = Some(c.clone());
+                    c
+                };
+                chunks.push(c);
+            }
+            chunks
+        };
+        let snap = ChunkSnapshot(Arc::new(SnapInner {
+            chunks,
+            live: self.live,
+            version: self.version,
+        }));
+        *self.snap.lock().unwrap() = Some((self.version, snap.clone()));
+        snap
+    }
+
+    /// Seal chunk `ci` from the slab: bump the span's row handles and fold
+    /// the zone maps.
+    fn seal_chunk(&self, ci: usize) -> Chunk {
+        let base = ci * CHUNK_SLOTS;
+        let end = ((ci + 1) * CHUNK_SLOTS).min(self.rows.len());
+        let rows: Vec<Option<Arc<Row>>> = self.rows[base..end].to_vec();
+        let mut zones: Vec<Option<Zone>> = self
+            .def
+            .schema
+            .columns
+            .iter()
+            .map(|c| match c.ty {
+                ColumnType::Int | ColumnType::Float => Some(Zone::default()),
+                _ => None,
+            })
+            .collect();
+        let mut live = 0;
+        for r in rows.iter().flatten() {
+            live += 1;
+            for (v, z) in r.values.iter().zip(zones.iter_mut()) {
+                if let Some(z) = z {
+                    z.fold(v);
+                }
+            }
+        }
+        Chunk { rows, live, zones }
     }
 
     /// Rebuild the store from a row list (compacting; legacy recovery and
     /// test seeding — replica seeding uses [`PartitionStore::load_slotted`]).
     ///
-    /// Drops any cached snapshot: callers may assign `version`
+    /// Drops any cached snapshot state: callers may assign `version`
     /// non-monotonically after a reload, so a stale cache entry could
     /// otherwise collide with a future version of different content.
     pub fn load_rows(&mut self, rows: Vec<Row>) -> Result<()> {
@@ -395,28 +764,31 @@ impl PartitionStore {
     /// Rebuild the store from a slot-preserving snapshot (replica seeding,
     /// checkpoint load): the slab is sized to `cap` and every hole the
     /// source had — including trailing ones — is reproduced, so canonical
-    /// slot allocation continues identically on both sides. The caller
-    /// assigns `version` (and `epoch`) afterwards.
-    pub fn load_slotted(&mut self, cap: usize, rows: Vec<(Slot, Row)>) -> Result<()> {
+    /// slot allocation continues identically on both sides. Rows are
+    /// shared handles (the re-seed aliases the source's allocations). The
+    /// caller assigns `version` (and `epoch`) afterwards.
+    pub fn load_slotted(&mut self, cap: usize, rows: Vec<(Slot, Arc<Row>)>) -> Result<()> {
         self.wipe();
         for s in 0..cap {
             self.free.insert(s);
             self.rows.push(None);
         }
+        self.sync_sealed_len();
         for (slot, row) in rows {
             if slot >= cap {
                 return Err(Error::Constraint(format!(
                     "slotted load: slot {slot} outside slab capacity {cap}"
                 )));
             }
-            self.insert_at(slot, row)?;
+            self.insert_at_arc(slot, row)?;
         }
         Ok(())
     }
 
     /// Reset to empty (shared by the bulk loaders).
     fn wipe(&mut self) {
-        *self.snap.lock().unwrap() = None;
+        *self.snap.get_mut().unwrap() = None;
+        self.sealed.get_mut().unwrap().clear();
         self.rows.clear();
         self.free.clear();
         self.pk.clear();
@@ -431,6 +803,7 @@ impl PartitionStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::storage::cexpr::CVal;
     use crate::storage::value::{ColumnType, Schema};
 
     fn store() -> PartitionStore {
@@ -587,7 +960,24 @@ mod tests {
         assert_eq!(q.insert(row(11, 0, "READY")).unwrap(), 4);
         // out-of-cap slot rejected
         let mut r = store();
-        assert!(r.load_slotted(2, vec![(5, row(1, 0, "X"))]).is_err());
+        assert!(r.load_slotted(2, vec![(5, Arc::new(row(1, 0, "X")))]).is_err());
+    }
+
+    #[test]
+    fn slotted_snapshot_shares_row_allocations() {
+        let mut p = store();
+        for i in 0..4 {
+            p.insert(row(i, 0, "READY")).unwrap();
+        }
+        let (cap, rows) = p.snapshot_slotted();
+        let mut q = store();
+        q.load_slotted(cap, rows).unwrap();
+        // the re-seed aliases the source rows, it does not copy them
+        for (slot, _) in p.iter().collect::<Vec<_>>() {
+            let a = p.get_arc(slot).unwrap();
+            let b = q.get_arc(slot).unwrap();
+            assert!(Arc::ptr_eq(&a, &b), "slot {slot} was deep-copied");
+        }
     }
 
     #[test]
@@ -604,7 +994,7 @@ mod tests {
                     table: "wq".into(),
                     pidx: 0,
                     slot,
-                    row: Arc::new(primary.get(slot).unwrap().clone()),
+                    row: primary.get_arc(slot).unwrap(),
                 },
             });
         }
@@ -707,19 +1097,206 @@ mod tests {
         assert_eq!(p.approx_bytes(), 0);
     }
 
+    /// Regression for the accounting rule under the chunked `Arc<Row>`
+    /// representation: snapshots (and their sealed chunks) alias the
+    /// store's rows, so taking any number of them must not change
+    /// `approx_bytes`, and the number must always equal the sum over the
+    /// *owned* live rows — aliases held by old snapshots don't count.
+    #[test]
+    fn byte_accounting_counts_unique_rows_not_snapshot_aliases() {
+        let mut p = store();
+        for i in 0..600 {
+            p.insert(row(i, 0, "READY")).unwrap();
+        }
+        let owned: usize = p.iter().map(|(_, r)| r.approx_bytes()).sum();
+        assert_eq!(p.approx_bytes(), owned);
+        let before = p.approx_bytes();
+        let s1 = p.snapshot();
+        let s2 = p.snapshot();
+        assert_eq!(
+            p.approx_bytes(),
+            before,
+            "snapshots are aliases, not copies — accounting must not move"
+        );
+        // replace a row while snapshots still alias the old one: the store
+        // accounts the new row only; the old row's memory is the
+        // snapshots' to keep alive, not the store's to report
+        p.update(0, row(0, 0, "a-significantly-longer-status-string")).unwrap();
+        let owned_after: usize = p.iter().map(|(_, r)| r.approx_bytes()).sum();
+        assert_eq!(p.approx_bytes(), owned_after);
+        assert_eq!(s1.len(), 600);
+        drop((s1, s2));
+        let owned_final: usize = p.iter().map(|(_, r)| r.approx_bytes()).sum();
+        assert_eq!(p.approx_bytes(), owned_final);
+    }
+
     #[test]
     fn snapshot_is_cached_per_version() {
         let mut p = store();
         p.insert(row(1, 0, "READY")).unwrap();
         let s1 = p.snapshot();
         let s2 = p.snapshot();
-        assert!(Arc::ptr_eq(&s1, &s2), "unchanged partition must reuse the snapshot");
+        assert!(
+            ChunkSnapshot::ptr_eq(&s1, &s2),
+            "unchanged partition must reuse the snapshot"
+        );
         assert_eq!(s1.len(), 1);
         p.insert(row(2, 0, "READY")).unwrap();
         let s3 = p.snapshot();
-        assert!(!Arc::ptr_eq(&s1, &s3), "mutation must invalidate the cache");
+        assert!(!ChunkSnapshot::ptr_eq(&s1, &s3), "mutation must invalidate the cache");
         assert_eq!(s3.len(), 2);
         assert_eq!(s1.len(), 1, "an already-taken snapshot stays immutable");
+    }
+
+    /// The tentpole property: a point write dirties exactly one chunk, and
+    /// the next snapshot re-seals only that chunk — every clean chunk is
+    /// the *same* `Arc` as in the previous snapshot.
+    #[test]
+    fn snapshot_reseals_only_dirty_chunks() {
+        let mut p = store();
+        let n = CHUNK_SLOTS * 4 + 17; // 5 chunks, ragged tail
+        for i in 0..n as i64 {
+            p.insert(row(i, 0, "READY")).unwrap();
+        }
+        let s1 = p.snapshot();
+        assert_eq!(s1.chunks().len(), 5);
+        assert_eq!(s1.len(), n);
+
+        // dirty exactly chunk 2
+        let slot = CHUNK_SLOTS * 2 + 3;
+        p.update(slot, row(slot as i64, 0, "RUNNING")).unwrap();
+        let s2 = p.snapshot();
+        assert!(!ChunkSnapshot::ptr_eq(&s1, &s2));
+        for ci in 0..5 {
+            let shared = Arc::ptr_eq(&s1.chunks()[ci], &s2.chunks()[ci]);
+            if ci == 2 {
+                assert!(!shared, "dirty chunk must be re-sealed");
+            } else {
+                assert!(shared, "clean chunk {ci} must be an Arc bump, not a rebuild");
+            }
+        }
+        // row identity: even the re-sealed chunk shares the untouched rows
+        let s1_rows: Vec<&Row> = s1.iter_rows().collect();
+        let s2_rows: Vec<&Row> = s2.iter_rows().collect();
+        assert_eq!(s1_rows.len(), s2_rows.len());
+        assert_eq!(s1_rows[0], s2_rows[0]);
+        assert_eq!(s1_rows[slot].values[2], Value::str("READY"), "old snapshot frozen");
+        assert_eq!(s2_rows[slot].values[2], Value::str("RUNNING"));
+    }
+
+    #[test]
+    fn snapshot_rows_in_slot_order_across_chunk_boundaries() {
+        let mut p = store();
+        let n = CHUNK_SLOTS + 10;
+        for i in 0..n as i64 {
+            p.insert(row(i, 0, "READY")).unwrap();
+        }
+        // holes on both sides of the chunk boundary
+        p.delete(CHUNK_SLOTS - 1).unwrap();
+        p.delete(CHUNK_SLOTS).unwrap();
+        let s = p.snapshot();
+        let ids: Vec<i64> = s
+            .iter_rows()
+            .map(|r| r.values[0].as_i64().unwrap())
+            .collect();
+        let mut expect: Vec<i64> = (0..n as i64).collect();
+        expect.retain(|&i| i != (CHUNK_SLOTS - 1) as i64 && i != CHUNK_SLOTS as i64);
+        assert_eq!(ids, expect, "chunked iteration must preserve slot order");
+        assert_eq!(s.len(), n - 2);
+    }
+
+    #[test]
+    fn zone_maps_bound_numeric_columns_and_prune_soundly() {
+        let mut p = store();
+        for i in 0..(CHUNK_SLOTS as i64 * 2) {
+            p.insert(row(i, i % 4, "READY")).unwrap();
+        }
+        let s = p.snapshot();
+        assert_eq!(s.chunks().len(), 2);
+        let c0 = &s.chunks()[0];
+        let z = c0.zone(0).expect("taskid is numeric");
+        assert_eq!(z.min, Value::Int(0));
+        assert_eq!(z.max, Value::Int(CHUNK_SLOTS as i64 - 1));
+        assert!(c0.zone(2).is_none(), "string column has no zone map");
+
+        let pred = |op: Op, v: i64| {
+            vec![Conjunct { col: 0, op, rhs: CVal::Lit(Value::Int(v)) }]
+        };
+        // chunk 0 holds taskid 0..256, chunk 1 holds 256..512
+        assert!(c0.may_match(&pred(Op::Eq, 5), &[]));
+        assert!(!c0.may_match(&pred(Op::Eq, 300), &[]));
+        assert!(!c0.may_match(&pred(Op::Gt, 255), &[]));
+        assert!(c0.may_match(&pred(Op::Gt, 254), &[]));
+        assert!(!c0.may_match(&pred(Op::Lt, 0), &[]));
+        assert!(c0.may_match(&pred(Op::Le, 0), &[]));
+        assert!(!c0.may_match(&pred(Op::Ge, 256), &[]));
+        let c1 = &s.chunks()[1];
+        assert!(c1.may_match(&pred(Op::Eq, 300), &[]));
+        assert!(!c1.may_match(&pred(Op::Lt, 256), &[]));
+        // NULL rhs never matches anything
+        assert!(!c0.may_match(
+            &[Conjunct { col: 0, op: Op::Eq, rhs: CVal::Lit(Value::Null) }],
+            &[]
+        ));
+        // a string rhs cannot order against numerics: prune
+        assert!(!c0.may_match(
+            &[Conjunct { col: 0, op: Op::Eq, rhs: CVal::Lit(Value::str("x")) }],
+            &[]
+        ));
+        // conservative on untracked columns: a status conjunct never prunes
+        assert!(c0.may_match(
+            &[Conjunct { col: 2, op: Op::Eq, rhs: CVal::Lit(Value::str("NOPE")) }],
+            &[]
+        ));
+    }
+
+    #[test]
+    fn zone_maps_handle_nulls_and_nan() {
+        let mut p = store();
+        // dur column: one NaN, one NULL, two ordinary values
+        p.insert(Row::new(vec![
+            Value::Int(1),
+            Value::Int(0),
+            Value::str("R"),
+            Value::Float(f64::NAN),
+        ]))
+        .unwrap();
+        p.insert(Row::new(vec![Value::Int(2), Value::Int(0), Value::str("R"), Value::Null]))
+            .unwrap();
+        p.insert(row(3, 0, "R")).unwrap(); // dur 1.0
+        p.insert(Row::new(vec![
+            Value::Int(4),
+            Value::Int(0),
+            Value::str("R"),
+            Value::Float(5.0),
+        ]))
+        .unwrap();
+        let s = p.snapshot();
+        let z = s.chunks()[0].zone(3).unwrap();
+        assert_eq!(z.nulls, 1);
+        assert_eq!(z.bounded, 2, "NaN must not enter the bounds");
+        assert_eq!(z.min, Value::Float(1.0));
+        assert_eq!(z.max, Value::Float(5.0));
+        // bounds stay usable despite the NaN row
+        let c = &s.chunks()[0];
+        assert!(!c.may_match(
+            &[Conjunct { col: 3, op: Op::Gt, rhs: CVal::Lit(Value::Float(5.0)) }],
+            &[]
+        ));
+        assert!(c.may_match(
+            &[Conjunct { col: 3, op: Op::Ge, rhs: CVal::Lit(Value::Float(5.0)) }],
+            &[]
+        ));
+
+        // an all-NULL/NaN column prunes every comparison
+        let mut q = store();
+        q.insert(Row::new(vec![Value::Int(1), Value::Int(0), Value::str("R"), Value::Null]))
+            .unwrap();
+        let qs = q.snapshot();
+        assert!(!qs.chunks()[0].may_match(
+            &[Conjunct { col: 3, op: Op::Ne, rhs: CVal::Lit(Value::Float(0.0)) }],
+            &[]
+        ));
     }
 
     #[test]
@@ -730,5 +1307,24 @@ mod tests {
         p.update(s, row(1, 0, "RUNNING")).unwrap();
         p.delete(s).unwrap();
         assert_eq!(p.version, v0 + 3);
+    }
+
+    #[test]
+    fn arc_native_ops_share_the_materialization() {
+        let mut a = store();
+        let mut b = store();
+        let r = Arc::new(a.def().schema.coerce_row(row(1, 0, "READY")).unwrap());
+        let slot = a.insert_arc(r.clone()).unwrap();
+        b.insert_at_arc(slot, r.clone()).unwrap();
+        assert!(Arc::ptr_eq(&a.get_arc(slot).unwrap(), &b.get_arc(slot).unwrap()));
+        // widening still happens when needed (Int literal into FLOAT col)
+        let raw = Arc::new(Row::new(vec![
+            Value::Int(2),
+            Value::Int(0),
+            Value::str("R"),
+            Value::Int(3),
+        ]));
+        let s2 = a.insert_arc(raw).unwrap();
+        assert_eq!(a.get(s2).unwrap().values[3], Value::Float(3.0));
     }
 }

@@ -15,11 +15,18 @@
 //! 4. drive every `Rejoining` node through catch-up: a few opportunistic
 //!    redo-ship rounds (no serving-side write block), then the final cut
 //!    that freezes each partition briefly, closes the remaining gap, and
-//!    flips the node back to serving.
+//!    flips the node back to serving;
+//! 5. on the configured cadence (`DurabilityConfig::checkpoint_every_sweeps`),
+//!    cut incremental per-partition checkpoints on every serving node —
+//!    the automatic counterpart of NDB's periodic local checkpoints, so
+//!    WAL segments are truncated (and restart recovery stays bounded)
+//!    without anyone calling `checkpoint_node` by hand.
 
+use crate::storage::checkpoint;
 use crate::storage::cluster::DbCluster;
 use crate::storage::datanode::NodeState;
 use crate::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// How many opportunistic catch-up rounds a sweep runs before the final
@@ -46,24 +53,33 @@ pub struct SweepReport {
     /// Partitions that needed a full snapshot re-seed because the retained
     /// redo tail could not cover their gap.
     pub reseeded_parts: usize,
+    /// Partition checkpoints (re)written by this sweep's cadence-driven
+    /// cut (0 when the cadence is off, the sweep is off-cadence, or every
+    /// partition checkpoint was already current).
+    pub checkpointed: usize,
 }
 
 /// Watches data-node liveness and repairs placement.
 pub struct AvailabilityManager {
     cluster: Arc<DbCluster>,
+    /// Sweeps run so far (drives the checkpoint cadence).
+    sweeps: AtomicUsize,
     /// Cumulative counters across sweeps (monitoring).
     pub total_promoted: std::sync::atomic::AtomicUsize,
     pub total_healed: std::sync::atomic::AtomicUsize,
     pub total_rejoined: std::sync::atomic::AtomicUsize,
+    pub total_checkpointed: std::sync::atomic::AtomicUsize,
 }
 
 impl AvailabilityManager {
     pub fn new(cluster: Arc<DbCluster>) -> AvailabilityManager {
         AvailabilityManager {
             cluster,
+            sweeps: AtomicUsize::new(0),
             total_promoted: std::sync::atomic::AtomicUsize::new(0),
             total_healed: std::sync::atomic::AtomicUsize::new(0),
             total_rejoined: std::sync::atomic::AtomicUsize::new(0),
+            total_checkpointed: std::sync::atomic::AtomicUsize::new(0),
         }
     }
 
@@ -104,9 +120,32 @@ impl AvailabilityManager {
                 Err(e) => log::warn!("rejoin of node {i} incomplete: {e}"),
             }
         }
+        // Automatic checkpoint cadence: every `checkpoint_every_sweeps`
+        // sweeps, cut incremental per-partition checkpoints on every
+        // serving node. Incremental means a quiet partition skips (its
+        // on-disk cut already matches `(version, epoch)`), so an
+        // on-cadence sweep over an idle cluster is still cheap.
+        let sweep_no = self.sweeps.fetch_add(1, Ordering::Relaxed) + 1;
+        let cadence = self
+            .cluster
+            .durability()
+            .map_or(0, |d| d.checkpoint_every_sweeps);
+        if cadence > 0 && sweep_no % cadence == 0 {
+            for i in 0..n {
+                let alive = self.cluster.node(i).map_or(false, |nd| nd.is_alive());
+                if !alive {
+                    continue; // dead/rejoining state is not a valid cut
+                }
+                match checkpoint::checkpoint_node(&self.cluster, i) {
+                    Ok(cr) => r.checkpointed += cr.written,
+                    Err(e) => log::warn!("cadence checkpoint of node {i} failed: {e}"),
+                }
+            }
+        }
         self.total_promoted.fetch_add(r.promoted, std::sync::atomic::Ordering::Relaxed);
         self.total_healed.fetch_add(r.healed, std::sync::atomic::Ordering::Relaxed);
         self.total_rejoined.fetch_add(r.rejoined, std::sync::atomic::Ordering::Relaxed);
+        self.total_checkpointed.fetch_add(r.checkpointed, std::sync::atomic::Ordering::Relaxed);
         Ok(r)
     }
 }
@@ -141,7 +180,7 @@ mod tests {
             data_nodes: 2,
             replication: true,
             clock: clock::wall(),
-            durability: Some(DurabilityConfig { dir: dir.clone(), group_commit: 4 }),
+            durability: Some(DurabilityConfig::new(dir.clone(), 4)),
         })
         .unwrap();
         c.exec(
@@ -294,7 +333,7 @@ mod tests {
             data_nodes: 2,
             replication: false,
             clock: clock::wall(),
-            durability: Some(DurabilityConfig { dir: dir.clone(), group_commit: 1 }),
+            durability: Some(DurabilityConfig::new(dir.clone(), 1)),
         })
         .unwrap();
         c.exec(
@@ -350,7 +389,7 @@ mod tests {
             data_nodes: 2,
             replication: false,
             clock: clock::wall(),
-            durability: Some(DurabilityConfig { dir: dir.clone(), group_commit }),
+            durability: Some(DurabilityConfig::new(dir.clone(), group_commit)),
         })
         .unwrap();
         c.exec(
@@ -456,6 +495,75 @@ mod tests {
             c.execute("DELETE FROM t WHERE id = 3").unwrap();
             let _ = std::fs::remove_dir_all(&dir);
         }
+    }
+
+    /// The automatic checkpoint cadence: every Nth sweep cuts incremental
+    /// per-partition checkpoints on every serving node; off-cadence sweeps
+    /// cut nothing, and an on-cadence sweep over an unchanged cluster
+    /// skips every partition (the incremental rule).
+    #[test]
+    fn sweep_cuts_checkpoints_on_cadence() {
+        let dir = std::env::temp_dir().join(format!(
+            "schaladb-repl-cadence-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = DbCluster::start(ClusterConfig {
+            data_nodes: 2,
+            replication: true,
+            clock: clock::wall(),
+            durability: Some(
+                DurabilityConfig::new(dir.clone(), 4).with_checkpoint_cadence(2),
+            ),
+        })
+        .unwrap();
+        c.exec(
+            "CREATE TABLE t (id INT NOT NULL, v FLOAT) \
+             PARTITION BY HASH(id) PARTITIONS 4 PRIMARY KEY (id)",
+        )
+        .unwrap();
+        for i in 0..20 {
+            c.execute(&format!("INSERT INTO t (id, v) VALUES ({i}, {i}.5)")).unwrap();
+        }
+        let am = AvailabilityManager::new(c.clone());
+        // sweep 1: off-cadence, no cut
+        assert_eq!(am.sweep().unwrap().checkpointed, 0);
+        // sweep 2: on-cadence, every hosted partition replica gets a cut
+        let r = am.sweep().unwrap();
+        assert!(r.checkpointed > 0, "on-cadence sweep must cut checkpoints");
+        let first = r.checkpointed;
+        // sweeps 3+4 with no writes: the on-cadence cut skips everything
+        assert_eq!(am.sweep().unwrap().checkpointed, 0);
+        assert_eq!(
+            am.sweep().unwrap().checkpointed,
+            0,
+            "unchanged partitions must be skipped by the incremental rule"
+        );
+        // one write dirties one partition (on both of its replicas)
+        c.execute("UPDATE t SET v = -1.0 WHERE id = 3").unwrap();
+        am.sweep().unwrap();
+        let r = am.sweep().unwrap();
+        assert!(
+            r.checkpointed >= 1 && r.checkpointed < first,
+            "only the dirtied partition's replicas re-cut, got {}",
+            r.checkpointed
+        );
+        assert!(
+            am.total_checkpointed.load(std::sync::atomic::Ordering::Relaxed)
+                >= first + r.checkpointed
+        );
+        // the cadence-driven cut is a real, loadable checkpoint
+        let node_dir = dir.join("node0");
+        let mut found = 0;
+        for e in std::fs::read_dir(&node_dir).unwrap() {
+            let p = e.unwrap().path();
+            if p.extension().map_or(false, |x| x == "ckpt") {
+                crate::storage::checkpoint::load_partition_checkpoint(&p).unwrap();
+                found += 1;
+            }
+        }
+        assert!(found > 0, "node0 must hold cadence-cut checkpoint files");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -242,7 +242,7 @@ fn run_cell(seed: u64, parts: usize) {
         data_nodes: 2,
         replication: true,
         clock: clock::wall(),
-        durability: Some(DurabilityConfig { dir: dir.clone(), group_commit: 8 }),
+        durability: Some(DurabilityConfig::new(dir.clone(), 8)),
     })
     .unwrap();
     let b = DbCluster::start(ClusterConfig::default()).unwrap();

@@ -6,8 +6,11 @@
 //! (backup reads).
 
 use schaladb::storage::cluster::ClusterConfig;
-use schaladb::storage::{DbCluster, ResultSet};
+use schaladb::storage::replication::AvailabilityManager;
+use schaladb::storage::{AccessKind, DbCluster, DurabilityConfig, ResultSet, Value};
 use schaladb::util::clock;
+use schaladb::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// Cluster with `parts` WQ partitions, deterministic data, frozen clock
@@ -144,6 +147,303 @@ fn scatter_gather_equals_centralized_under_dead_primary() {
     let promoted = c.promote_dead_primaries();
     assert!(promoted > 0, "node 0 hosted some primaries");
     assert_equivalent(&c, "promoted backups");
+}
+
+/// Grow every partition past the chunk boundary (CHUNK_SLOTS = 256) so
+/// the copy-on-write snapshots span multiple chunks per partition and
+/// inserts/deletes exercise seal/reseal across boundaries.
+fn grow(c: &DbCluster, parts: usize, base: i64, rows_per_part: usize) {
+    let ins = c
+        .prepare(
+            "INSERT INTO workqueue (taskid, actid, workerid, status, dur, starttime) \
+             VALUES (?, ?, ?, ?, ?, 950.0)",
+        )
+        .unwrap();
+    let statuses = ["READY", "RUNNING", "FINISHED"];
+    let batch: Vec<Vec<Value>> = (0..(rows_per_part * parts) as i64)
+        .map(|i| {
+            vec![
+                Value::Int(base + i),
+                Value::Int(i % 3),
+                Value::Int(i % parts as i64),
+                Value::str(statuses[(i % 3) as usize]),
+                Value::Float((i % 13) as f64 + 0.5),
+            ]
+        })
+        .collect();
+    for chunk in batch.chunks(512) {
+        c.exec_prepared_batch(0, AccessKind::InsertTasks, &ins, chunk).unwrap();
+    }
+}
+
+/// Mutate-while-scanning property stream: claim-loop writers race steering
+/// scans over the chunked snapshots across 1..8 partitions, including
+/// inserts/deletes that cross chunk boundaries; at every quiesce point the
+/// routed results must be byte-equal to the centralized executor's.
+#[test]
+fn mutate_while_scanning_matches_centralized() {
+    for parts in [1usize, 2, 4, 8] {
+        let c = cluster(parts);
+        let base = 100_000;
+        grow(&c, parts, base, 300); // > CHUNK_SLOTS rows per partition
+
+        for round in 0..2u64 {
+            // the row population is invariant through Phase A (updates
+            // only), so every consistent snapshot must sum to this
+            let total = c.table_rows("workqueue").unwrap() as i64;
+            // Phase A: status-flipping claim writers (updates only, so the
+            // row population is invariant) racing a steering reader that
+            // checks every scan stays internally consistent.
+            let stop = Arc::new(AtomicBool::new(false));
+            let reader = {
+                let c = c.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut scans = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        // one scatter aggregate runs over one consistent
+                        // snapshot cut: group counts must sum to the fixed
+                        // population even mid-claim-storm
+                        let rs = c
+                            .query("SELECT status, COUNT(*) FROM workqueue GROUP BY status")
+                            .unwrap();
+                        let sum: i64 = rs
+                            .rows
+                            .iter()
+                            .map(|r| r.values[1].as_i64().unwrap())
+                            .sum();
+                        assert_eq!(sum, total, "snapshot scan saw a torn population");
+                        // a selective scan (zone-prunable) must agree with
+                        // the same cut's bounds
+                        let rs = c
+                            .query(&format!(
+                                "SELECT COUNT(*) FROM workqueue WHERE taskid >= {base}"
+                            ))
+                            .unwrap();
+                        assert_eq!(rs.rows[0].values[0].as_i64().unwrap(), total - 60);
+                        scans += 1;
+                    }
+                    scans
+                })
+            };
+            let claim = c
+                .prepare(
+                    "UPDATE workqueue SET status = ?, starttime = NOW() \
+                     WHERE taskid = ? AND workerid = ?",
+                )
+                .unwrap();
+            let mut writers = Vec::new();
+            for w in 0..parts {
+                let c = c.clone();
+                let claim = claim.clone();
+                let mut rng = Rng::new(0xC0FFEE + round * 97 + w as u64);
+                writers.push(std::thread::spawn(move || {
+                    let statuses = ["READY", "RUNNING", "FINISHED"];
+                    for _ in 0..150 {
+                        let i = rng.range(0, 300 * parts as i64);
+                        let tid = base + i;
+                        let st = statuses[rng.index(3)];
+                        c.exec_prepared(
+                            w as u32,
+                            AccessKind::UpdateToRunning,
+                            &claim,
+                            &[Value::str(st), Value::Int(tid), Value::Int(i % parts as i64)],
+                        )
+                        .unwrap();
+                    }
+                }));
+            }
+            for h in writers {
+                h.join().unwrap();
+            }
+            stop.store(true, Ordering::Relaxed);
+            let scans = reader.join().unwrap();
+            assert!(scans > 0, "reader must have scanned during the claim storm");
+
+            // quiesce: routed must be byte-equal to centralized
+            assert_equivalent(&c, &format!("{parts} parts, round {round}, post-claims"));
+
+            // Phase B: structural churn — delete and re-insert rows whose
+            // canonical slots straddle the chunk boundary, plus brand-new
+            // rows that grow the slab into fresh chunks.
+            let del = c.prepare("DELETE FROM workqueue WHERE taskid = ?").unwrap();
+            let mut rng = Rng::new(0xBEEF + round);
+            let mut deleted: Vec<i64> = Vec::new();
+            for _ in 0..120 {
+                let tid = base + rng.range(0, 300 * parts as i64);
+                let n = c
+                    .exec_prepared(0, AccessKind::Other, &del, &[Value::Int(tid)])
+                    .unwrap();
+                if let schaladb::storage::StatementResult::Affected(1) = n {
+                    deleted.push(tid);
+                }
+            }
+            let ins = c
+                .prepare(
+                    "INSERT INTO workqueue (taskid, actid, workerid, status, dur) \
+                     VALUES (?, 0, ?, 'READY', 1.5)",
+                )
+                .unwrap();
+            // re-insert half the deleted rows (slot reuse inside sealed
+            // chunks) and add fresh ids (slab growth past the tail chunk)
+            for (k, tid) in deleted.iter().enumerate() {
+                if k % 2 == 0 {
+                    let i = tid - base;
+                    c.exec_prepared(
+                        0,
+                        AccessKind::InsertTasks,
+                        &ins,
+                        &[Value::Int(*tid), Value::Int(i % parts as i64)],
+                    )
+                    .unwrap();
+                }
+            }
+            grow(&c, parts, base + 10_000 * (round as i64 + 1), 40);
+            assert_equivalent(&c, &format!("{parts} parts, round {round}, post-churn"));
+        }
+
+        if parts > 1 {
+            let counts = c.route_counts();
+            assert!(counts.scatter > 0, "steering scans must have scattered");
+            assert!(
+                counts.chunks_scanned > 0,
+                "multi-chunk partitions must report scanned chunks"
+            );
+        }
+        // zone-map pruning is visible on a selective steering query (an
+        // aggregate, so it scatters even on a single partition)
+        let before = c.route_counts().chunks_pruned;
+        c.query("SELECT COUNT(*), AVG(dur) FROM workqueue WHERE taskid > 99000000").unwrap();
+        let after = c.route_counts().chunks_pruned;
+        assert!(
+            after > before,
+            "selective scan must prune chunks via zone maps ({before} -> {after})"
+        );
+    }
+}
+
+/// The same racing stream, with a node kill + process restart + rejoin in
+/// the middle: scans and claims keep running (retrying through the
+/// unavailable window), and after the hand-off the routed path — now
+/// partially served by the rejoined replicas — stays byte-equal to
+/// centralized.
+#[test]
+fn mutate_while_scanning_survives_rejoin_mid_stream() {
+    let parts = 4usize;
+    let dir = std::env::temp_dir().join(format!(
+        "schaladb-scatter-rejoin-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (shared, ctl) = clock::manual(1_000.0);
+    let c = DbCluster::start(ClusterConfig {
+        data_nodes: 2,
+        replication: true,
+        clock: shared,
+        durability: Some(DurabilityConfig::new(dir.clone(), 1)),
+    })
+    .unwrap();
+    ctl.set(1_000.0);
+    c.exec(&format!(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, actid INT, workerid INT NOT NULL, \
+         status TEXT, dur FLOAT, starttime FLOAT, endtime FLOAT) \
+         PARTITION BY HASH(workerid) PARTITIONS {parts} \
+         PRIMARY KEY (taskid) INDEX (status)"
+    ))
+    .unwrap();
+    c.exec("CREATE TABLE workers (id INT NOT NULL, host TEXT) PRIMARY KEY (id)")
+        .unwrap();
+    for w in 0..parts as i64 {
+        c.execute(&format!("INSERT INTO workers (id, host) VALUES ({w}, 'node{w:03}')"))
+            .unwrap();
+    }
+    grow(&c, parts, 0, 300);
+
+    let am = AvailabilityManager::new(c.clone());
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut threads = Vec::new();
+    // claim writers: retry through the failover/rejoin windows
+    for w in 0..parts {
+        let c = c.clone();
+        let stop = stop.clone();
+        threads.push(std::thread::spawn(move || {
+            let claim = c
+                .prepare(
+                    "UPDATE workqueue SET dur = dur + 1.0 \
+                     WHERE taskid = ? AND workerid = ?",
+                )
+                .unwrap();
+            let mut rng = Rng::new(0xABCD + w as u64);
+            while !stop.load(Ordering::Relaxed) {
+                let i = rng.range(0, 300 * parts as i64);
+                match c.exec_prepared(
+                    w as u32,
+                    AccessKind::UpdateToRunning,
+                    &claim,
+                    &[Value::Int(i), Value::Int(i % parts as i64)],
+                ) {
+                    Ok(_) => {}
+                    Err(schaladb::Error::Unavailable(_)) => {
+                        std::thread::sleep(std::time::Duration::from_micros(100));
+                    }
+                    Err(e) => panic!("writer failed mid-rejoin: {e}"),
+                }
+            }
+        }));
+    }
+    // steering reader: scatter scans keep serving (replica failover)
+    {
+        let c = c.clone();
+        let stop = stop.clone();
+        threads.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                match c.query("SELECT status, COUNT(*), SUM(dur) FROM workqueue GROUP BY status")
+                {
+                    Ok(rs) => {
+                        let sum: i64 = rs
+                            .rows
+                            .iter()
+                            .map(|r| r.values[1].as_i64().unwrap())
+                            .sum();
+                        assert_eq!(sum, 300 * parts as i64);
+                    }
+                    Err(schaladb::Error::Unavailable(_)) => {
+                        std::thread::sleep(std::time::Duration::from_micros(100));
+                    }
+                    Err(e) => panic!("reader failed mid-rejoin: {e}"),
+                }
+            }
+        }));
+    }
+
+    // the outage: kill, promote, let the storm run degraded, then restart
+    // and drive the rejoin while claims and scans keep racing
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    c.kill_node(1).unwrap();
+    am.sweep().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    c.restart_node(1).unwrap();
+    let mut rejoined = false;
+    for _ in 0..200 {
+        if am.sweep().unwrap().rejoined > 0 {
+            rejoined = true;
+            break;
+        }
+    }
+    assert!(rejoined, "node 1 must rejoin under the racing stream");
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    stop.store(true, Ordering::Relaxed);
+    for h in threads {
+        h.join().unwrap();
+    }
+
+    assert_equivalent(&c, "post-rejoin quiesce");
+    // the rejoined node is a faithful serving replica: fail the survivor
+    // over to it and the equivalence must still hold
+    c.kill_node(0).unwrap();
+    am.sweep().unwrap();
+    assert_equivalent(&c, "served by the rejoined node");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
