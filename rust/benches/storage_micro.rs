@@ -77,6 +77,166 @@ fn wq_cluster(workers: usize, rows: usize) -> Arc<DbCluster> {
     c
 }
 
+// Network front-end: the multi-client workload driver. The same claim
+// stream runs twice — 8 worker threads hitting DbCluster directly
+// (in-process baseline) and 8 wire-protocol clients + 2 remote steering
+// scanners through a spawned `server::Server` over loopback TCP. Both
+// runs are deterministic (`starttime = 0.0`, disjoint point claims), so
+// the two clusters must end byte-equal; the remote path must keep at
+// least 25% of the in-process claim throughput. Emits BENCH_server.json.
+fn bench_server(quick: bool, workers: usize, rows: usize) -> Vec<Bench> {
+    use schaladb::server::{Client, Server, ServerConfig};
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let it = |n: usize| if quick { (n / 20).max(10) } else { n };
+    let per_thread = it(1_000).min(rows / workers);
+    let n_scanners = 2usize;
+    let point_claim = "UPDATE workqueue SET status = 'RUNNING', starttime = 0.0 \
+                       WHERE taskid = ? AND status = 'READY' AND workerid = ?";
+
+    // in-process baseline: direct exec_prepared from 8 threads
+    let twin = wq_cluster(workers, rows);
+    let p = twin.prepare(point_claim).unwrap();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..workers {
+        let c = twin.clone();
+        let p = p.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut lat = Vec::with_capacity(per_thread);
+            for i in 0..per_thread {
+                let tid = (w + i * workers) as i64;
+                let t = Instant::now();
+                c.exec_prepared(
+                    w as u32,
+                    AccessKind::UpdateToRunning,
+                    &p,
+                    &[Value::Int(tid), Value::Int(w as i64)],
+                )
+                .unwrap();
+                lat.push(t.elapsed().as_secs_f64());
+            }
+            lat
+        }));
+    }
+    let mut inproc_hist = Histogram::new();
+    for h in handles {
+        for s in h.join().unwrap() {
+            inproc_hist.record(s);
+        }
+    }
+    let inproc_rate = (workers * per_thread) as f64 / t0.elapsed().as_secs_f64();
+
+    // remote: the identical stream through the wire protocol, with
+    // steering scanners reading concurrently over their own connections
+    let cluster = wq_cluster(workers, rows);
+    let server = Server::bind(
+        "127.0.0.1:0".parse().unwrap(),
+        cluster.clone(),
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut scan_handles = Vec::new();
+    for _ in 0..n_scanners {
+        let stop = stop.clone();
+        scan_handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr, 0, AccessKind::Steering).unwrap();
+            let mut lat = Vec::new();
+            while !stop.load(Ordering::SeqCst) {
+                let t = Instant::now();
+                c.query("SELECT status, COUNT(*) FROM workqueue GROUP BY status").unwrap();
+                lat.push(t.elapsed().as_secs_f64());
+            }
+            c.close().unwrap();
+            lat
+        }));
+    }
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..workers {
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr, w as u32, AccessKind::UpdateToRunning).unwrap();
+            let (stmt, _) = c.prepare(point_claim).unwrap();
+            let mut lat = Vec::with_capacity(per_thread);
+            for i in 0..per_thread {
+                let tid = (w + i * workers) as i64;
+                let t = Instant::now();
+                c.exec(stmt, &[Value::Int(tid), Value::Int(w as i64)]).unwrap();
+                lat.push(t.elapsed().as_secs_f64());
+            }
+            c.close().unwrap();
+            lat
+        }));
+    }
+    let mut remote_hist = Histogram::new();
+    for h in handles {
+        for s in h.join().unwrap() {
+            remote_hist.record(s);
+        }
+    }
+    let remote_rate = (workers * per_thread) as f64 / t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::SeqCst);
+    let mut scan_hist = Histogram::new();
+    for h in scan_handles {
+        for s in h.join().unwrap() {
+            scan_hist.record(s);
+        }
+    }
+    drop(server); // clean shutdown: accept loop joined, handlers reaped
+
+    assert_eq!(
+        cluster.fingerprint().unwrap(),
+        twin.fingerprint().unwrap(),
+        "remote claim stream must leave the cluster byte-equal to the in-process twin"
+    );
+    let ratio = remote_rate / inproc_rate;
+    println!(
+        "remote claims over TCP ({workers} clients + {n_scanners} scanners, \
+         {} scans): {remote_rate:.0}/s vs in-process {inproc_rate:.0}/s \
+         -> {:.0}% retained\n",
+        scan_hist.count(),
+        ratio * 100.0
+    );
+    assert!(
+        ratio >= 0.25,
+        "remote claim throughput must keep >= 25% of in-process, got {:.0}%",
+        ratio * 100.0
+    );
+
+    std::fs::create_dir_all("target/bench-results").ok();
+    let mut obj = schaladb::util::json::Json::obj()
+        .set("wq_rows", rows as f64)
+        .set("partitions", workers as f64)
+        .set("claim_clients", workers as f64)
+        .set("steering_scanners", n_scanners as f64)
+        .set("claims_per_client", per_thread as f64)
+        .set("claims_per_sec_remote", remote_rate)
+        .set("claims_per_sec_in_process", inproc_rate)
+        .set("remote_over_in_process_ratio", ratio)
+        .set("remote_scans", scan_hist.count() as f64);
+    let out = vec![
+        Bench { name: "claim (in-process twin)", hist: inproc_hist },
+        Bench { name: "remote claim (wire)", hist: remote_hist },
+        Bench { name: "remote steering scan (wire)", hist: scan_hist },
+    ];
+    for b in &out {
+        obj = obj.set(
+            b.name,
+            schaladb::util::json::Json::obj()
+                .set("mean_secs", b.hist.mean())
+                .set("p50_secs", b.hist.quantile(0.5))
+                .set("p99_secs", b.hist.quantile(0.99)),
+        );
+    }
+    std::fs::write("target/bench-results/BENCH_server.json", obj.to_string()).unwrap();
+    println!("json: target/bench-results/BENCH_server.json");
+    out
+}
+
 fn main() {
     // STORAGE_MICRO_QUICK=1: CI smoke mode — same benches, ~5% of the
     // iterations, so the workflow exercises every path in seconds.
@@ -89,6 +249,21 @@ fn main() {
         if quick { " (quick mode)" } else { "" }
     );
     let mut benches = Vec::new();
+
+    // STORAGE_MICRO_SECTION=server: only the network front-end section —
+    // the CI server-smoke job's quick gate.
+    if std::env::var("STORAGE_MICRO_SECTION").as_deref() == Ok("server") {
+        let server_benches = bench_server(quick, workers, rows);
+        let rows_out: Vec<Vec<String>> = server_benches.iter().map(|b| b.row()).collect();
+        println!(
+            "{}",
+            schaladb::util::render_table(
+                &["operation", "iters", "mean", "p50", "p99"],
+                &rows_out
+            )
+        );
+        return;
+    }
 
     // point insert (supervisor task generation path)
     {
@@ -841,6 +1016,9 @@ fn main() {
         benches.push(central_join);
         benches.push(scatter_join);
     }
+
+    // network front-end: remote vs in-process claim throughput
+    benches.extend(bench_server(quick, workers, rows));
 
     let rows_out: Vec<Vec<String>> = benches.iter().map(|b| b.row()).collect();
     println!(

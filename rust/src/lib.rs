@@ -17,6 +17,10 @@
 //!   workflow adaptation.
 //! - [`baseline`]: centralized Chiron (master–worker over message passing
 //!   with a centralized DBMS) used as the Experiment-8 comparator.
+//! - [`server`]: the network front-end — a hand-rolled length-prefixed
+//!   wire protocol, a transport-agnostic session layer, a bounded
+//!   thread-per-connection TCP server (`dchiron serve`), and a blocking
+//!   client for remote workers and steering analysts.
 //! - [`sim`]: a calibrated discrete-event simulator of the paper's
 //!   960-core Grid5000 testbed, used by the `exp*` benches.
 //! - [`runtime`]: PJRT loader/executor for the AOT-compiled JAX/Pallas
@@ -31,6 +35,7 @@ pub mod coordinator;
 pub mod metrics;
 pub mod query;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod steering;
 pub mod storage;

@@ -14,15 +14,31 @@
 //!     regenerate the paper's tables/figures on the calibrated simulator
 //! dchiron sql
 //!     run the steering SQL demo on a seeded risers database
+//! dchiron serve    [--addr HOST:PORT] [--max-conns N] [--data-nodes N]
+//!     start the wire-protocol server: a fresh SchalaDB cluster behind a
+//!     TCP front-end exposing the full prepared-statement API (blocks
+//!     until `dchiron shutdown` — the SIGTERM-equivalent — is received)
+//! dchiron stats    [--addr HOST:PORT] [--fingerprint] [--tables]
+//!     query a running server for route counts, plan cache, epoch and
+//!     live sessions; --fingerprint/--tables add the expensive extras
+//! dchiron shutdown [--addr HOST:PORT]
+//!     ask a running server to shut down cleanly
+//! dchiron drive    [--addr HOST:PORT] [--clients N] [--scanners M]
+//!                  [--tasks T]
+//!     remote multi-client workload: N claim workers + M steering
+//!     scanners against a running server, printing throughput
 //! ```
 
 use schaladb::coordinator::payload::RunnerRegistry;
 use schaladb::coordinator::{DChironEngine, EngineConfig};
 use schaladb::metrics;
 use schaladb::runtime::{self, riser, PjrtService};
+use schaladb::server::{parse_addr, Client, Server, ServerConfig};
 use schaladb::sim::experiments;
+use schaladb::storage::{AccessKind, ClusterConfig, Value};
 use schaladb::util::json::Json;
 use schaladb::workload::{self, SyntheticWorkload};
+use schaladb::DbCluster;
 use std::collections::HashMap;
 use std::io::Write as _;
 
@@ -62,9 +78,15 @@ fn main() -> anyhow::Result<()> {
         "risers" => cmd_risers(&flags),
         "bench-sim" => cmd_bench_sim(&flags),
         "sql" => cmd_sql(),
+        "serve" => cmd_serve(&flags),
+        "stats" => cmd_stats(&flags),
+        "shutdown" => cmd_shutdown(&flags),
+        "drive" => cmd_drive(&flags),
         _ => {
             println!("dchiron — SchalaDB / d-Chiron reproduction");
-            println!("commands: run | risers | bench-sim | sql (see README.md)");
+            println!(
+                "commands: run | risers | bench-sim | sql | serve | stats | shutdown | drive (see README.md)"
+            );
             Ok(())
         }
     }
@@ -182,5 +204,193 @@ fn cmd_sql() -> anyhow::Result<()> {
     println!("Q1:\n{}", client.q1_recent_status_by_node()?.render());
     println!("Q6:\n{}", client.q6_activity_times()?.render());
     println!("Q7:\n{}", client.q7_wear_outliers("calculate_wear_and_tear", 0.2)?.render());
+    Ok(())
+}
+
+/// Resolve the shared `--addr` flag (default loopback:7878) through the
+/// one validation helper every network subcommand uses.
+fn flag_addr(flags: &HashMap<String, String>) -> anyhow::Result<std::net::SocketAddr> {
+    let raw = flags.get("addr").map(String::as_str).unwrap_or("127.0.0.1:7878");
+    Ok(parse_addr(raw)?)
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let addr = flag_addr(flags)?;
+    let max_conns: usize = get(flags, "max-conns", 64);
+    let data_nodes: usize = get(flags, "data-nodes", 2);
+    let cluster = DbCluster::start(ClusterConfig {
+        data_nodes,
+        replication: data_nodes >= 2,
+        ..Default::default()
+    })?;
+    let mut server = Server::bind(addr, cluster, ServerConfig { max_conns })?;
+    println!(
+        "dchiron serve: listening on {} ({data_nodes} data nodes, max {max_conns} connections)",
+        server.local_addr()
+    );
+    println!("stop with: dchiron shutdown --addr {}", server.local_addr());
+    server.wait();
+    println!("dchiron serve: shut down cleanly");
+    Ok(())
+}
+
+fn cmd_stats(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let addr = flag_addr(flags)?;
+    let mut client = Client::connect(addr, 0, AccessKind::Steering)?;
+    let want_fp = flags.contains_key("fingerprint");
+    let want_tables = flags.contains_key("tables");
+    let s = client.stats(want_fp, want_tables)?;
+    let header = ["metric", "value"];
+    let rows: Vec<Vec<String>> = vec![
+        vec!["routes.scatter".into(), s.scatter.to_string()],
+        vec!["routes.snapshot_join".into(), s.snapshot_join.to_string()],
+        vec!["routes.centralized".into(), s.centralized.to_string()],
+        vec!["routes.fast_dml".into(), s.fast_dml.to_string()],
+        vec!["chunks.scanned".into(), s.chunks_scanned.to_string()],
+        vec!["chunks.pruned".into(), s.chunks_pruned.to_string()],
+        vec!["plan_cache.entries".into(), s.cached_plans.to_string()],
+        vec!["cluster.epoch".into(), s.epoch.to_string()],
+        vec!["server.sessions".into(), s.sessions.to_string()],
+    ];
+    println!("{}", schaladb::util::render_table(&header, &rows));
+    if let Some(fp) = &s.fingerprint {
+        // the full canonical serialization is large; the checksum is what
+        // byte-equality comparisons need at a glance
+        println!(
+            "fingerprint: {} bytes, fnv1a={:08x}",
+            fp.len(),
+            schaladb::server::wire::checksum(fp.as_bytes())
+        );
+    }
+    if want_tables {
+        let trows: Vec<Vec<String>> =
+            s.table_rows.iter().map(|(t, n)| vec![t.clone(), n.to_string()]).collect();
+        println!("{}", schaladb::util::render_table(&["table", "rows"], &trows));
+    }
+    client.close()?;
+    Ok(())
+}
+
+fn cmd_shutdown(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let addr = flag_addr(flags)?;
+    let mut client = Client::connect(addr, 0, AccessKind::Other)?;
+    client.shutdown_server()?;
+    println!("server at {addr} acknowledged shutdown");
+    Ok(())
+}
+
+/// Remote multi-client workload driver: N claim workers + M steering
+/// scanners against an already-running `dchiron serve` (the CI smoke job
+/// points this at a freshly started server).
+fn cmd_drive(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    let addr = flag_addr(flags)?;
+    let clients: usize = get(flags, "clients", 8);
+    let scanners: usize = get(flags, "scanners", 2);
+    let tasks: usize = get(flags, "tasks", clients * 50);
+    let clients = clients.max(1);
+
+    let mut admin = Client::connect(addr, 0, AccessKind::Other)?;
+    let create = format!(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, actid INT, workerid INT NOT NULL, \
+         status TEXT, dur FLOAT, starttime FLOAT, endtime FLOAT) \
+         PARTITION BY HASH(workerid) PARTITIONS {clients} \
+         PRIMARY KEY (taskid) INDEX (status)"
+    );
+    let base = match admin.exec_sql(&create) {
+        Ok(_) => 0i64,
+        // table exists from a previous drive against the same server:
+        // keep going, seeding above the current maximum task id
+        Err(schaladb::Error::Catalog(_)) => {
+            let rs = admin.query("SELECT MAX(taskid) FROM workqueue")?;
+            match rs.rows.first().and_then(|r| r.values.first()) {
+                Some(Value::Int(m)) => m + 1,
+                _ => 0,
+            }
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let (ins, _) = admin.prepare(
+        "INSERT INTO workqueue (taskid, actid, workerid, status, dur) \
+         VALUES (?, ?, ?, 'READY', ?)",
+    )?;
+    for chunk_start in (0..tasks).step_by(256) {
+        let rows: Vec<Vec<Value>> = (chunk_start..(chunk_start + 256).min(tasks))
+            .map(|i| {
+                vec![
+                    Value::Int(base + i as i64),
+                    Value::Int((i % 3) as i64),
+                    Value::Int((i % clients) as i64),
+                    Value::Float(1.0),
+                ]
+            })
+            .collect();
+        admin.exec_batch(ins, AccessKind::InsertTasks, &rows)?;
+    }
+    println!("seeded {tasks} READY tasks (taskid {base}..) across {clients} partitions");
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let scans = Arc::new(AtomicUsize::new(0));
+    let mut scan_handles = Vec::new();
+    for _ in 0..scanners {
+        let stop = stop.clone();
+        let scans = scans.clone();
+        scan_handles.push(std::thread::spawn(move || -> schaladb::Result<()> {
+            let mut c = Client::connect(addr, 0, AccessKind::Steering)?;
+            while !stop.load(Ordering::SeqCst) {
+                c.query("SELECT status, COUNT(*) FROM workqueue GROUP BY status")?;
+                scans.fetch_add(1, Ordering::Relaxed);
+            }
+            c.close()
+        }));
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut claim_handles = Vec::new();
+    for w in 0..clients {
+        claim_handles.push(std::thread::spawn(move || -> schaladb::Result<usize> {
+            let mut c = Client::connect(addr, w as u32, AccessKind::UpdateToRunning)?;
+            let (claim, _) = c.prepare(
+                "UPDATE workqueue SET status = 'RUNNING', starttime = 0.0 \
+                 WHERE workerid = ? AND status = 'READY' ORDER BY taskid LIMIT 1 \
+                 RETURNING taskid",
+            )?;
+            let mut claimed = 0;
+            loop {
+                match c.exec(claim, &[Value::Int(w as i64)])? {
+                    schaladb::storage::StatementResult::Rows(rs) if !rs.rows.is_empty() => {
+                        claimed += 1;
+                    }
+                    _ => break, // this worker's partition is drained
+                }
+            }
+            c.close()?;
+            Ok(claimed)
+        }));
+    }
+    let mut claimed = 0;
+    for h in claim_handles {
+        claimed += h.join().expect("claim worker panicked")?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::SeqCst);
+    let mut scan_total = 0;
+    for h in scan_handles {
+        h.join().expect("scanner panicked")?;
+        scan_total = scans.load(Ordering::Relaxed);
+    }
+
+    println!(
+        "claimed {claimed} tasks over TCP with {clients} workers in {dt:.2}s \
+         -> {:.0} claims/s; {scan_total} steering scans from {scanners} scanners",
+        claimed as f64 / dt.max(1e-9)
+    );
+    let s = admin.stats(false, true)?;
+    for (t, n) in &s.table_rows {
+        println!("table {t}: {n} rows");
+    }
+    admin.close()?;
     Ok(())
 }

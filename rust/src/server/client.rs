@@ -1,0 +1,229 @@
+//! Blocking wire-protocol client.
+//!
+//! Speaks the [`wire`](super::wire) frames over one `TcpStream`: every
+//! call writes a request frame and blocks for the matching response
+//! (strict request/response alternation — the protocol has no pipelining,
+//! which keeps the server's frame pump trivially correct). Used by
+//! `dchiron stats`/`dchiron drive`/`dchiron shutdown`, the multi-client
+//! benchmark driver, and the round-trip tests; it is the reference
+//! implementation a non-Rust client would be written against.
+
+use super::wire::{
+    decode_error, read_frame, write_frame, Request, Response, StatsReply, PROTO_VERSION,
+};
+use crate::storage::stats::AccessKind;
+use crate::storage::value::Value;
+use crate::storage::{ResultSet, StatementResult};
+use crate::{Error, Result};
+use std::net::{SocketAddr, TcpStream};
+
+/// Cluster introspection as observed over the wire (the decoded
+/// `Stats` response).
+pub type RemoteStats = StatsReply;
+
+/// One connection to a `dchiron serve` endpoint.
+pub struct Client {
+    stream: TcpStream,
+    session: u64,
+    node: u32,
+    kind: AccessKind,
+}
+
+impl Client {
+    /// Connect and handshake. `node` is the worker node this session
+    /// speaks for (stats attribution); `kind` is the default access kind
+    /// used by the untagged convenience calls.
+    pub fn connect(addr: SocketAddr, node: u32, kind: AccessKind) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let mut client = Client { stream, session: 0, node, kind };
+        let resp =
+            client.call(&Request::Hello { proto: PROTO_VERSION, node, kind })?;
+        match resp {
+            Response::HelloOk { proto, session } => {
+                if proto != PROTO_VERSION {
+                    return Err(Error::Engine(format!(
+                        "protocol version mismatch: server {proto}, client {PROTO_VERSION}"
+                    )));
+                }
+                client.session = session;
+                Ok(client)
+            }
+            other => Err(unexpected("HelloOk", &other)),
+        }
+    }
+
+    /// Server-assigned session id.
+    pub fn session_id(&self) -> u64 {
+        self.session
+    }
+
+    /// The worker node declared at connect.
+    pub fn node(&self) -> u32 {
+        self.node
+    }
+
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        write_frame(&mut self.stream, &req.encode())?;
+        let payload = read_frame(&mut self.stream)?.ok_or_else(|| {
+            Error::Unavailable("server closed the connection".into())
+        })?;
+        match Response::decode(&payload)? {
+            Response::Err { code, message } => Err(decode_error(code as u8, message)),
+            ok => Ok(ok),
+        }
+    }
+
+    /// Prepare a statement, returning `(stmt id, placeholder count)`.
+    pub fn prepare(&mut self, sql: &str) -> Result<(u32, usize)> {
+        match self.call(&Request::Prepare { sql: sql.to_string() })? {
+            Response::PrepareOk { stmt, params } => Ok((stmt, params as usize)),
+            other => Err(unexpected("PrepareOk", &other)),
+        }
+    }
+
+    /// Bind + execute a prepared stmt under the session's default kind.
+    pub fn exec(&mut self, stmt: u32, params: &[Value]) -> Result<StatementResult> {
+        self.exec_tagged(stmt, self.kind, params)
+    }
+
+    /// Bind + execute a prepared stmt under an explicit access kind.
+    pub fn exec_tagged(
+        &mut self,
+        stmt: u32,
+        kind: AccessKind,
+        params: &[Value],
+    ) -> Result<StatementResult> {
+        let req = Request::BindExec { stmt, kind, params: params.to_vec() };
+        match self.call(&req)? {
+            Response::Result(r) => Ok(r),
+            other => Err(unexpected("Result", &other)),
+        }
+    }
+
+    /// Execute a prepared single-row INSERT template over many rows.
+    pub fn exec_batch(
+        &mut self,
+        stmt: u32,
+        kind: AccessKind,
+        rows: &[Vec<Value>],
+    ) -> Result<StatementResult> {
+        let req = Request::BindExecBatch { stmt, kind, rows: rows.to_vec() };
+        match self.call(&req)? {
+            Response::Result(r) => Ok(r),
+            other => Err(unexpected("Result", &other)),
+        }
+    }
+
+    /// Parse + execute one SQL text under the session's default kind.
+    pub fn exec_sql(&mut self, sql: &str) -> Result<StatementResult> {
+        self.exec_sql_tagged(self.kind, sql)
+    }
+
+    /// Parse + execute one SQL text under an explicit access kind.
+    pub fn exec_sql_tagged(
+        &mut self,
+        kind: AccessKind,
+        sql: &str,
+    ) -> Result<StatementResult> {
+        let req = Request::ExecSql { kind, sql: sql.to_string() };
+        match self.call(&req)? {
+            Response::Result(r) => Ok(r),
+            other => Err(unexpected("Result", &other)),
+        }
+    }
+
+    /// Convenience: execute a SELECT and unwrap its rows.
+    pub fn query(&mut self, sql: &str) -> Result<ResultSet> {
+        match self.exec_sql_tagged(AccessKind::Steering, sql)? {
+            StatementResult::Rows(r) => Ok(r),
+            other => Err(Error::Engine(format!("expected rows, got {other:?}"))),
+        }
+    }
+
+    /// EXPLAIN-style plan summary of a prepared stmt.
+    pub fn describe(&mut self, stmt: u32) -> Result<String> {
+        match self.call(&Request::DescribeStmt { stmt })? {
+            Response::Describe(text) => Ok(text),
+            other => Err(unexpected("Describe", &other)),
+        }
+    }
+
+    /// Drop a prepared stmt from the server-side session table.
+    pub fn close_stmt(&mut self, stmt: u32) -> Result<()> {
+        match self.call(&Request::CloseStmt { stmt })? {
+            Response::Result(_) => Ok(()),
+            other => Err(unexpected("Result", &other)),
+        }
+    }
+
+    /// Fetch cluster stats; `fingerprint`/`tables` opt into the expensive
+    /// extras (full-state fingerprint, per-table row counts).
+    pub fn stats(&mut self, fingerprint: bool, tables: bool) -> Result<RemoteStats> {
+        match self.call(&Request::Stats { fingerprint, tables })? {
+            Response::Stats(s) => Ok(*s),
+            other => Err(unexpected("Stats", &other)),
+        }
+    }
+
+    /// Open a deferred transaction on the server-side session.
+    pub fn begin(&mut self) -> Result<()> {
+        match self.call(&Request::TxnBegin)? {
+            Response::Result(_) => Ok(()),
+            other => Err(unexpected("Result", &other)),
+        }
+    }
+
+    /// Queue a prepared statement into the open transaction.
+    pub fn txn_prepared(&mut self, stmt: u32, params: &[Value]) -> Result<()> {
+        let req = Request::TxnPrepared { stmt, params: params.to_vec() };
+        match self.call(&req)? {
+            Response::Result(_) => Ok(()),
+            other => Err(unexpected("Result", &other)),
+        }
+    }
+
+    /// Queue a SQL text statement into the open transaction.
+    pub fn txn_sql(&mut self, sql: &str) -> Result<()> {
+        match self.call(&Request::TxnSql { sql: sql.to_string() })? {
+            Response::Result(_) => Ok(()),
+            other => Err(unexpected("Result", &other)),
+        }
+    }
+
+    /// Atomically execute the queued statements.
+    pub fn commit(&mut self, kind: AccessKind) -> Result<Vec<StatementResult>> {
+        match self.call(&Request::TxnCommit { kind })? {
+            Response::TxnResults(rs) => Ok(rs),
+            other => Err(unexpected("TxnResults", &other)),
+        }
+    }
+
+    /// Discard the open transaction's queue.
+    pub fn rollback(&mut self) -> Result<()> {
+        match self.call(&Request::TxnRollback)? {
+            Response::Result(_) => Ok(()),
+            other => Err(unexpected("Result", &other)),
+        }
+    }
+
+    /// Graceful close: tell the server, then drop the stream.
+    pub fn close(mut self) -> Result<()> {
+        match self.call(&Request::Close)? {
+            Response::Result(_) => Ok(()),
+            other => Err(unexpected("Result", &other)),
+        }
+    }
+
+    /// Ask the server process to shut down (the SIGTERM-equivalent).
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        match self.call(&Request::Shutdown)? {
+            Response::ShutdownOk => Ok(()),
+            other => Err(unexpected("ShutdownOk", &other)),
+        }
+    }
+}
+
+fn unexpected(wanted: &str, got: &Response) -> Error {
+    Error::Engine(format!("expected {wanted} response, got {got:?}"))
+}

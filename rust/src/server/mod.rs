@@ -1,0 +1,92 @@
+//! The network front-end: a wire protocol, a transport-agnostic session
+//! layer, and a TCP server exposing the full prepared-statement API to
+//! remote clients.
+//!
+//! The paper's premise is that a WMS database must serve *two remote
+//! audiences at once*: hundreds of worker tasks hammering the task-claim
+//! transactions, and human analysts running steering queries against the
+//! same data mid-execution. Until this module existed, `DbCluster` was an
+//! in-process library — no socket anywhere. The front-end splits into
+//! three layers so neither audience is coupled to the transport:
+//!
+//! - [`wire`]: a hand-rolled length-prefixed binary protocol. Every frame
+//!   is `u32 len + u32 FNV-1a checksum + payload` (the same checksum
+//!   discipline the WAL applies to its record lines), and values reuse the
+//!   engine's [`Value`](crate::storage::Value) type with a compact binary
+//!   encoding. Errors travel as typed frames, never as closed sockets.
+//! - [`session`]: per-session state — the prepared-handle table mapping
+//!   client statement ids onto [`DbCluster::prepare`], open-transaction
+//!   state (deferred statement queue, the `TxnBuilder` model), and the
+//!   default [`AccessKind`](crate::storage::AccessKind) — behind a
+//!   [`SessionTransport`](session::SessionTransport) trait, so the
+//!   in-process path (`DbCluster` direct, or a `WorkerLink` with connector
+//!   failover) and the TCP path are two transports over one session object.
+//! - [`serve`]: `std::net::TcpListener` with a **bounded thread-per-
+//!   connection** accept loop (the build environment is offline — no tokio,
+//!   no async runtime). Connections beyond `--max-conns` are rejected with
+//!   a typed `Backpressure` error frame: that is the backpressure story.
+//! - [`client`]: a blocking Rust client speaking the same frames, used by
+//!   `dchiron stats`/`dchiron drive`, the multi-client benchmark driver,
+//!   and the round-trip tests.
+//!
+//! See DESIGN.md §"Network front-end & session layer" for the frame format
+//! table and the session state machine.
+
+pub mod client;
+pub mod serve;
+pub mod session;
+pub mod wire;
+
+pub use client::{Client, RemoteStats};
+pub use serve::{Server, ServerConfig};
+pub use session::{Session, SessionTransport};
+
+use crate::{Error, Result};
+use std::net::{SocketAddr, ToSocketAddrs};
+
+/// Parse and validate a `--addr HOST:PORT` flag value. Accepts literal
+/// socket addresses (`127.0.0.1:7878`, `[::1]:7878`) and resolvable host
+/// names (`localhost:7878`); shared by `dchiron serve`, `dchiron stats`,
+/// `dchiron shutdown` and `dchiron drive` so they reject bad input with
+/// one consistent message.
+pub fn parse_addr(s: &str) -> Result<SocketAddr> {
+    if let Ok(a) = s.parse::<SocketAddr>() {
+        return Ok(a);
+    }
+    match s.to_socket_addrs() {
+        Ok(mut addrs) => addrs.next().ok_or_else(|| {
+            Error::Parse(format!("--addr '{s}' resolved to no addresses"))
+        }),
+        Err(e) => Err(Error::Parse(format!(
+            "bad --addr '{s}': {e} (expected HOST:PORT, e.g. 127.0.0.1:7878)"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_addr_accepts_literals() {
+        assert_eq!(parse_addr("127.0.0.1:7878").unwrap().port(), 7878);
+        assert_eq!(parse_addr("0.0.0.0:0").unwrap().port(), 0);
+        assert!(parse_addr("[::1]:9000").unwrap().is_ipv6());
+    }
+
+    #[test]
+    fn parse_addr_resolves_hostnames() {
+        // loopback is resolvable everywhere CI runs
+        let a = parse_addr("localhost:7979").unwrap();
+        assert_eq!(a.port(), 7979);
+        assert!(a.ip().is_loopback());
+    }
+
+    #[test]
+    fn parse_addr_rejects_garbage() {
+        for bad in ["", "7878", "127.0.0.1", "no spaces here", "host:notaport"] {
+            let e = parse_addr(bad);
+            assert!(e.is_err(), "'{bad}' should not parse");
+        }
+    }
+}

@@ -1,0 +1,422 @@
+//! The TCP front-end: a bounded thread-per-connection accept loop.
+//!
+//! Why threads, not async: the build environment is offline, so tokio is
+//! unavailable — and the paper's workload shape doesn't need it. The two
+//! remote audiences are a few hundred worker tasks (each with one
+//! long-lived connection running short point transactions) and a handful
+//! of steering analysts; both are well inside what blocking threads
+//! handle, and a thread per connection keeps the engine's existing
+//! synchronous call tree unchanged. The async seam is the
+//! [`SessionTransport`](super::session::SessionTransport) trait plus this
+//! module: an async transport would replace only the accept loop and the
+//! frame pump, reusing `Session` and `wire` unchanged.
+//!
+//! Backpressure: the accept loop admits at most `max_conns` concurrent
+//! connections. Beyond that it *rejects* — one typed `Backpressure` error
+//! frame, then close — rather than queueing silently, so a saturated
+//! server is observable at the client instead of looking like latency.
+//!
+//! Shutdown: there is no signal handling in a pure-std build, so the
+//! SIGTERM-equivalent is the wire-level `Shutdown` frame (`dchiron
+//! shutdown --addr ...`). It flips the shutdown flag, wakes the accept
+//! loop with a loopback connect, closes every live connection's stream,
+//! and joins all threads — `dchiron serve` then exits 0.
+
+use super::session::Session;
+use super::wire::{
+    self, read_frame, write_frame, ErrCode, Request, Response, StatsReply, PROTO_VERSION,
+};
+use crate::storage::cluster::DbCluster;
+use crate::{Error, Result};
+use std::net::{Shutdown as NetShutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Server tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Concurrent-connection bound; connection N+1 gets a typed
+    /// `Backpressure` error frame and is closed.
+    pub max_conns: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig { max_conns: 64 }
+    }
+}
+
+/// State shared between the accept loop, connection handlers, and the
+/// [`Server`] handle.
+struct Shared {
+    cluster: Arc<DbCluster>,
+    addr: SocketAddr,
+    max_conns: usize,
+    /// Live connection count (backpressure bound, `Stats.sessions`).
+    active: AtomicUsize,
+    shutdown: AtomicBool,
+    next_session: AtomicU64,
+}
+
+impl Shared {
+    fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Wake the accept loop out of its blocking accept(): a loopback
+        // connect is accepted, sees the flag, and the loop exits.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// Decrements the live-connection count when a handler exits by any path
+/// (clean close, protocol error, panic unwinding through the frame pump).
+struct ActiveGuard(Arc<Shared>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// One registered connection: a clone of its stream (so shutdown can
+/// force-close it out from under a blocking read) and its handler thread.
+struct Conn {
+    stream: Option<TcpStream>,
+    handle: JoinHandle<()>,
+}
+
+/// A running wire-protocol server. Dropping it shuts it down.
+pub struct Server {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<Conn>>>,
+}
+
+impl Server {
+    /// Bind `addr` and start accepting. Port 0 picks a free port — read it
+    /// back with [`Server::local_addr`].
+    pub fn bind(
+        addr: SocketAddr,
+        cluster: Arc<DbCluster>,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            cluster,
+            addr: local,
+            max_conns: cfg.max_conns.max(1),
+            active: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            next_session: AtomicU64::new(1),
+        });
+        let conns: Arc<Mutex<Vec<Conn>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = shared.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name("dchiron-accept".into())
+                .spawn(move || accept_loop(listener, shared, conns))
+                .map_err(|e| Error::Engine(format!("spawn accept thread: {e}")))?
+        };
+        Ok(Server { shared, accept: Some(accept), conns })
+    }
+
+    /// The address actually bound (resolves `--addr host:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Live connection count.
+    pub fn active_conns(&self) -> usize {
+        self.shared.active.load(Ordering::SeqCst)
+    }
+
+    /// Block until the server shuts down (via a wire `Shutdown` frame or
+    /// a concurrent [`Server::shutdown`]), then reap every thread.
+    pub fn wait(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.reap_conns();
+    }
+
+    /// Stop accepting, force-close live connections, join every thread.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.shared.request_shutdown();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.reap_conns();
+    }
+
+    /// Reaping only happens once the accept loop has exited, i.e. the
+    /// server is shutting down — so live streams are force-closed to get
+    /// handlers out of blocking reads, then every thread is joined.
+    fn reap_conns(&self) {
+        let drained: Vec<Conn> = {
+            let mut g = self.conns.lock().unwrap();
+            g.drain(..).collect()
+        };
+        for c in drained {
+            if let Some(s) = &c.stream {
+                let _ = s.shutdown(NetShutdown::Both);
+            }
+            let _ = c.handle.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>, conns: Arc<Mutex<Vec<Conn>>>) {
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(a) => a,
+            Err(_) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+        };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break; // the wake-up connect (or a straggler) during shutdown
+        }
+        // Backpressure: reject above the bound with a typed error frame so
+        // the client sees "server full", not a mystery hangup.
+        let prior = shared.active.fetch_add(1, Ordering::SeqCst);
+        if prior >= shared.max_conns {
+            shared.active.fetch_sub(1, Ordering::SeqCst);
+            let mut stream = stream;
+            let resp = Response::Err {
+                code: ErrCode::Backpressure,
+                message: format!(
+                    "connection limit reached ({} active, max {})",
+                    prior, shared.max_conns
+                ),
+            };
+            let _ = write_frame(&mut stream, &resp.encode());
+            continue;
+        }
+        let guard = ActiveGuard(shared.clone());
+        let peer_stream = stream.try_clone().ok();
+        let handler = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("dchiron-conn".into())
+                .spawn(move || {
+                    let _guard = guard;
+                    handle_conn(stream, &shared);
+                })
+        };
+        match handler {
+            Ok(handle) => {
+                let mut g = conns.lock().unwrap();
+                // prune finished handlers so the registry doesn't grow
+                // unboundedly across many short-lived connections
+                let mut kept: Vec<Conn> = Vec::with_capacity(g.len() + 1);
+                for c in g.drain(..) {
+                    if c.handle.is_finished() {
+                        let _ = c.handle.join();
+                    } else {
+                        kept.push(c);
+                    }
+                }
+                kept.push(Conn { stream: peer_stream, handle });
+                *g = kept;
+            }
+            // spawn failure drops the closure, and with it the guard —
+            // the active count stays correct
+            Err(_) => {}
+        }
+    }
+}
+
+/// Map an engine error into a typed error frame.
+fn err_response(e: &Error) -> Response {
+    let (code, message) = wire::encode_error(e);
+    Response::Err { code, message }
+}
+
+/// Drive one connection: handshake, then a frame pump over one
+/// [`Session`]. Returning (for any reason) drops the session, which
+/// discards any open transaction — abrupt-disconnect rollback for free.
+fn handle_conn(mut stream: TcpStream, shared: &Arc<Shared>) {
+    let _ = stream.set_nodelay(true); // claim loops are latency-bound
+    // Handshake: the first frame must be a version-matched Hello.
+    let (node, kind) = match read_frame(&mut stream) {
+        Ok(Some(payload)) => match Request::decode(&payload) {
+            Ok(Request::Hello { proto, node, kind }) => {
+                if proto != PROTO_VERSION {
+                    let resp = Response::Err {
+                        code: ErrCode::Protocol,
+                        message: format!(
+                            "protocol version mismatch: client {proto}, server {PROTO_VERSION}"
+                        ),
+                    };
+                    let _ = write_frame(&mut stream, &resp.encode());
+                    return;
+                }
+                (node, kind)
+            }
+            Ok(_) | Err(_) => {
+                let resp = Response::Err {
+                    code: ErrCode::Protocol,
+                    message: "expected Hello as the first frame".into(),
+                };
+                let _ = write_frame(&mut stream, &resp.encode());
+                return;
+            }
+        },
+        _ => return, // closed or torn before the handshake
+    };
+    let session_id = shared.next_session.fetch_add(1, Ordering::SeqCst);
+    let hello = Response::HelloOk { proto: PROTO_VERSION, session: session_id };
+    if write_frame(&mut stream, &hello.encode()).is_err() {
+        return;
+    }
+
+    let mut session = Session::for_cluster(shared.cluster.clone(), node, kind);
+    loop {
+        let payload = match read_frame(&mut stream) {
+            Ok(Some(p)) => p,
+            Ok(None) => return, // clean disconnect; open txn discards with the session
+            Err(e) => {
+                // torn frame / checksum mismatch / oversize: the stream is
+                // unsynchronized — report once (best effort) and close
+                let _ = write_frame(&mut stream, &err_response(&e).encode());
+                return;
+            }
+        };
+        // A well-framed but undecodable payload leaves the stream
+        // synchronized: answer with a typed error and keep serving.
+        let req = match Request::decode(&payload) {
+            Ok(r) => r,
+            Err(e) => {
+                let resp = Response::Err {
+                    code: ErrCode::Protocol,
+                    message: e.to_string(),
+                };
+                if write_frame(&mut stream, &resp.encode()).is_err() {
+                    return;
+                }
+                continue;
+            }
+        };
+        let (resp, hangup) = respond(req, &mut session, shared);
+        if write_frame(&mut stream, &resp.encode()).is_err() {
+            return;
+        }
+        if hangup {
+            return;
+        }
+    }
+}
+
+/// Execute one decoded request against the session. Returns the response
+/// and whether the connection should close afterwards.
+fn respond(req: Request, session: &mut Session, shared: &Arc<Shared>) -> (Response, bool) {
+    let resp = match req {
+        Request::Hello { .. } => Response::Err {
+            code: ErrCode::Protocol,
+            message: "Hello is only valid as the first frame".into(),
+        },
+        Request::Prepare { sql } => match session.prepare(&sql) {
+            Ok((stmt, params)) => Response::PrepareOk { stmt, params: params as u16 },
+            Err(e) => err_response(&e),
+        },
+        Request::BindExec { stmt, kind, params } => {
+            match session.exec(stmt, kind, &params) {
+                Ok(r) => Response::Result(r),
+                Err(e) => err_response(&e),
+            }
+        }
+        Request::BindExecBatch { stmt, kind, rows } => {
+            match session.exec_batch(stmt, kind, &rows) {
+                Ok(r) => Response::Result(r),
+                Err(e) => err_response(&e),
+            }
+        }
+        Request::ExecSql { kind, sql } => match session.exec_sql(kind, &sql) {
+            Ok(r) => Response::Result(r),
+            Err(e) => err_response(&e),
+        },
+        Request::DescribeStmt { stmt } => match session.describe(stmt) {
+            Ok(text) => Response::Describe(text),
+            Err(e) => err_response(&e),
+        },
+        Request::CloseStmt { stmt } => match session.close_stmt(stmt) {
+            Ok(()) => Response::Result(crate::storage::StatementResult::Ok),
+            Err(e) => err_response(&e),
+        },
+        Request::Stats { fingerprint, tables } => {
+            match stats_reply(shared, fingerprint, tables) {
+                Ok(s) => Response::Stats(Box::new(s)),
+                Err(e) => err_response(&e),
+            }
+        }
+        Request::TxnBegin => match session.begin() {
+            Ok(()) => Response::Result(crate::storage::StatementResult::Ok),
+            Err(e) => err_response(&e),
+        },
+        Request::TxnPrepared { stmt, params } => {
+            match session.queue_prepared(stmt, &params) {
+                Ok(()) => Response::Result(crate::storage::StatementResult::Ok),
+                Err(e) => err_response(&e),
+            }
+        }
+        Request::TxnSql { sql } => match session.queue_sql(&sql) {
+            Ok(()) => Response::Result(crate::storage::StatementResult::Ok),
+            Err(e) => err_response(&e),
+        },
+        Request::TxnCommit { kind } => match session.commit(kind) {
+            Ok(rs) => Response::TxnResults(rs),
+            Err(e) => err_response(&e),
+        },
+        Request::TxnRollback => match session.rollback() {
+            Ok(()) => Response::Result(crate::storage::StatementResult::Ok),
+            Err(e) => err_response(&e),
+        },
+        Request::Close => {
+            return (Response::Result(crate::storage::StatementResult::Ok), true)
+        }
+        Request::Shutdown => {
+            shared.request_shutdown();
+            return (Response::ShutdownOk, true);
+        }
+    };
+    (resp, false)
+}
+
+fn stats_reply(shared: &Arc<Shared>, fingerprint: bool, tables: bool) -> Result<StatsReply> {
+    let c = &shared.cluster;
+    let rc = c.route_counts();
+    let mut reply = StatsReply {
+        scatter: rc.scatter,
+        snapshot_join: rc.snapshot_join,
+        centralized: rc.centralized,
+        fast_dml: rc.fast_dml,
+        chunks_scanned: rc.chunks_scanned,
+        chunks_pruned: rc.chunks_pruned,
+        cached_plans: c.cached_plans() as u64,
+        epoch: c.cluster_epoch(),
+        sessions: shared.active.load(Ordering::SeqCst) as u64,
+        fingerprint: None,
+        table_rows: Vec::new(),
+    };
+    if fingerprint {
+        reply.fingerprint = Some(c.fingerprint()?);
+    }
+    if tables {
+        for t in c.tables() {
+            reply.table_rows.push((t.clone(), c.table_rows(&t)? as u64));
+        }
+    }
+    Ok(reply)
+}

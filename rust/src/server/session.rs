@@ -1,0 +1,524 @@
+//! The transport-agnostic session layer.
+//!
+//! A [`Session`] owns everything that used to live implicitly in each
+//! caller of `Connector`/`WorkerLink`: the prepared-handle table mapping
+//! small client statement ids onto [`DbCluster::prepare`] handles, the
+//! open-transaction state (a deferred statement queue, the `TxnBuilder`
+//! model — nothing touches the data until commit, so rollback and abrupt
+//! disconnect are both "drop the queue"), and the session's default
+//! [`AccessKind`]. The engine is reached through a [`SessionTransport`]
+//! object, implemented both by [`Arc<DbCluster>`] (direct, in-process) and
+//! by [`WorkerLink`] (in-process with connector failover) — so the TCP
+//! server and an embedded caller drive the *same* session object over
+//! different transports, and byte-equality tests can run the identical
+//! statement stream down both paths.
+//!
+//! Failover: prepared handles are plan-only (no connection state), so a
+//! handle stays valid across connector failover and data-node promotion.
+//! The session adds one more layer of resilience on top: if a prepared
+//! execution returns [`Error::Unavailable`] (e.g. the failover window),
+//! it re-prepares the statement from its stored SQL text and retries once
+//! — the wire client's stmt id never changes, which is the PR 1
+//! failover-surviving-handle guarantee extended across the network.
+
+use crate::storage::cluster::DbCluster;
+use crate::storage::connector::WorkerLink;
+use crate::storage::prepared::Prepared;
+use crate::storage::sql::{self, Statement};
+use crate::storage::stats::AccessKind;
+use crate::storage::value::Value;
+use crate::storage::StatementResult;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// The engine surface a session needs, abstracted over how statements
+/// reach the cluster. This is also the seam where a future async or
+/// remote-forwarding transport would slot in: implement these seven
+/// methods and every session behavior (handle table, txn queue,
+/// re-resolve) comes along for free.
+pub trait SessionTransport: Send + Sync {
+    /// Parse + catalog-check once, yielding a plan-only handle.
+    fn prepare(&self, sql: &str) -> Result<Prepared>;
+    /// Execute one pre-parsed statement (auto-commit).
+    fn exec_stmt(&self, node: u32, kind: AccessKind, stmt: &Statement)
+        -> Result<StatementResult>;
+    /// Parse and execute one SQL text (auto-commit; DDL goes this way).
+    fn exec_sql(&self, node: u32, kind: AccessKind, sql: &str) -> Result<StatementResult>;
+    /// Execute a prepared handle (compiled fast path when available).
+    fn exec_prepared(
+        &self,
+        node: u32,
+        kind: AccessKind,
+        prepared: &Prepared,
+        params: &[Value],
+    ) -> Result<StatementResult>;
+    /// Execute a prepared single-row INSERT template over many rows.
+    fn exec_prepared_batch(
+        &self,
+        node: u32,
+        kind: AccessKind,
+        prepared: &Prepared,
+        rows: &[Vec<Value>],
+    ) -> Result<StatementResult>;
+    /// Execute a statement batch atomically (union 2PL lock set).
+    fn exec_txn(
+        &self,
+        node: u32,
+        kind: AccessKind,
+        stmts: &[Statement],
+    ) -> Result<Vec<StatementResult>>;
+    /// The cluster behind this transport (introspection: stats frames).
+    fn cluster(&self) -> &Arc<DbCluster>;
+}
+
+/// Direct in-process transport: the session talks straight to the cluster.
+impl SessionTransport for Arc<DbCluster> {
+    fn prepare(&self, sql: &str) -> Result<Prepared> {
+        DbCluster::prepare(self, sql)
+    }
+
+    fn exec_stmt(
+        &self,
+        node: u32,
+        kind: AccessKind,
+        stmt: &Statement,
+    ) -> Result<StatementResult> {
+        DbCluster::exec_stmt(self, node, kind, stmt)
+    }
+
+    fn exec_sql(&self, node: u32, kind: AccessKind, sql: &str) -> Result<StatementResult> {
+        self.exec_tagged(node, kind, sql)
+    }
+
+    fn exec_prepared(
+        &self,
+        node: u32,
+        kind: AccessKind,
+        prepared: &Prepared,
+        params: &[Value],
+    ) -> Result<StatementResult> {
+        DbCluster::exec_prepared(self, node, kind, prepared, params)
+    }
+
+    fn exec_prepared_batch(
+        &self,
+        node: u32,
+        kind: AccessKind,
+        prepared: &Prepared,
+        rows: &[Vec<Value>],
+    ) -> Result<StatementResult> {
+        DbCluster::exec_prepared_batch(self, node, kind, prepared, rows)
+    }
+
+    fn exec_txn(
+        &self,
+        node: u32,
+        kind: AccessKind,
+        stmts: &[Statement],
+    ) -> Result<Vec<StatementResult>> {
+        DbCluster::exec_txn(self, node, kind, stmts)
+    }
+
+    fn cluster(&self) -> &Arc<DbCluster> {
+        self
+    }
+}
+
+/// Connector-fabric transport: every statement brokers through the
+/// worker's primary connector with failover to its secondary (the `node`
+/// argument is ignored — a link is pinned to its worker node).
+impl SessionTransport for WorkerLink {
+    fn prepare(&self, sql: &str) -> Result<Prepared> {
+        WorkerLink::prepare(self, sql)
+    }
+
+    fn exec_stmt(
+        &self,
+        _node: u32,
+        kind: AccessKind,
+        stmt: &Statement,
+    ) -> Result<StatementResult> {
+        WorkerLink::exec_stmt(self, kind, stmt)
+    }
+
+    fn exec_sql(&self, _node: u32, kind: AccessKind, sql: &str) -> Result<StatementResult> {
+        WorkerLink::exec(self, kind, sql)
+    }
+
+    fn exec_prepared(
+        &self,
+        _node: u32,
+        kind: AccessKind,
+        prepared: &Prepared,
+        params: &[Value],
+    ) -> Result<StatementResult> {
+        WorkerLink::exec_prepared(self, kind, prepared, params)
+    }
+
+    fn exec_prepared_batch(
+        &self,
+        _node: u32,
+        kind: AccessKind,
+        prepared: &Prepared,
+        rows: &[Vec<Value>],
+    ) -> Result<StatementResult> {
+        WorkerLink::exec_prepared_batch(self, kind, prepared, rows)
+    }
+
+    fn exec_txn(
+        &self,
+        _node: u32,
+        kind: AccessKind,
+        stmts: &[Statement],
+    ) -> Result<Vec<StatementResult>> {
+        WorkerLink::exec_txn(self, kind, stmts)
+    }
+
+    fn cluster(&self) -> &Arc<DbCluster> {
+        WorkerLink::cluster(self)
+    }
+}
+
+struct PreparedEntry {
+    /// Statement text, kept for failover re-resolve.
+    sql: String,
+    handle: Prepared,
+}
+
+/// One statement queued in an open transaction (the `TxnBuilder` model:
+/// binding of prepared statements is deferred to commit so a
+/// single-prepared-statement transaction takes the compiled fast path).
+enum QueuedStmt {
+    Prepared { stmt: u32, params: Vec<Value> },
+    Sql(Statement),
+}
+
+/// Per-client session state over any [`SessionTransport`].
+pub struct Session {
+    transport: Box<dyn SessionTransport>,
+    node: u32,
+    kind: AccessKind,
+    stmts: HashMap<u32, PreparedEntry>,
+    next_stmt: u32,
+    txn: Option<Vec<QueuedStmt>>,
+}
+
+impl Session {
+    pub fn new(transport: Box<dyn SessionTransport>, node: u32, kind: AccessKind) -> Session {
+        Session { transport, node, kind, stmts: HashMap::new(), next_stmt: 1, txn: None }
+    }
+
+    /// Session over the direct in-process transport.
+    pub fn for_cluster(cluster: Arc<DbCluster>, node: u32, kind: AccessKind) -> Session {
+        Session::new(Box::new(cluster), node, kind)
+    }
+
+    /// The worker node this session speaks for (stats attribution).
+    pub fn node(&self) -> u32 {
+        self.node
+    }
+
+    /// The session's default access kind (from the handshake).
+    pub fn kind(&self) -> AccessKind {
+        self.kind
+    }
+
+    /// Number of live prepared handles (introspection).
+    pub fn stmt_count(&self) -> usize {
+        self.stmts.len()
+    }
+
+    /// Is a transaction open?
+    pub fn txn_open(&self) -> bool {
+        self.txn.is_some()
+    }
+
+    fn no_open_txn(&self, what: &str) -> Result<()> {
+        if self.txn.is_some() {
+            return Err(Error::Engine(format!(
+                "{what} while a transaction is open (commit or roll back first)"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Prepare a statement, returning its session-scoped id and the number
+    /// of `?` placeholders to bind.
+    pub fn prepare(&mut self, sql: &str) -> Result<(u32, usize)> {
+        let handle = self.transport.prepare(sql)?;
+        let params = handle.param_count();
+        let id = self.next_stmt;
+        self.next_stmt += 1;
+        self.stmts.insert(id, PreparedEntry { sql: sql.to_string(), handle });
+        Ok((id, params))
+    }
+
+    /// EXPLAIN-style plan summary of a prepared handle.
+    pub fn describe(&self, stmt: u32) -> Result<String> {
+        Ok(self.entry(stmt)?.handle.describe().to_string())
+    }
+
+    /// Drop a prepared handle from the session table.
+    pub fn close_stmt(&mut self, stmt: u32) -> Result<()> {
+        self.stmts
+            .remove(&stmt)
+            .map(|_| ())
+            .ok_or_else(|| Error::Engine(format!("no prepared statement #{stmt}")))
+    }
+
+    fn entry(&self, stmt: u32) -> Result<&PreparedEntry> {
+        self.stmts
+            .get(&stmt)
+            .ok_or_else(|| Error::Engine(format!("no prepared statement #{stmt}")))
+    }
+
+    /// Run `op` against a prepared handle; on [`Error::Unavailable`]
+    /// (failover window) re-prepare from the stored SQL text and retry
+    /// once, keeping the client's stmt id stable.
+    fn with_reresolve<T>(
+        &mut self,
+        stmt: u32,
+        op: impl Fn(&dyn SessionTransport, &Prepared) -> Result<T>,
+    ) -> Result<T> {
+        let handle = self.entry(stmt)?.handle.clone();
+        match op(self.transport.as_ref(), &handle) {
+            Err(Error::Unavailable(_)) => {
+                let sql = self.entry(stmt)?.sql.clone();
+                let fresh = self.transport.prepare(&sql)?;
+                let r = op(self.transport.as_ref(), &fresh);
+                if r.is_ok() {
+                    self.stmts.insert(stmt, PreparedEntry { sql, handle: fresh });
+                }
+                r
+            }
+            other => other,
+        }
+    }
+
+    /// Bind + execute a prepared handle (auto-commit).
+    pub fn exec(
+        &mut self,
+        stmt: u32,
+        kind: AccessKind,
+        params: &[Value],
+    ) -> Result<StatementResult> {
+        self.no_open_txn("exec")?;
+        let node = self.node;
+        self.with_reresolve(stmt, move |t, p| t.exec_prepared(node, kind, p, params))
+    }
+
+    /// Bind + execute a prepared INSERT template over many rows.
+    pub fn exec_batch(
+        &mut self,
+        stmt: u32,
+        kind: AccessKind,
+        rows: &[Vec<Value>],
+    ) -> Result<StatementResult> {
+        self.no_open_txn("exec_batch")?;
+        let node = self.node;
+        self.with_reresolve(stmt, move |t, p| t.exec_prepared_batch(node, kind, p, rows))
+    }
+
+    /// Parse + execute one SQL text (auto-commit).
+    pub fn exec_sql(&mut self, kind: AccessKind, sql: &str) -> Result<StatementResult> {
+        self.no_open_txn("exec_sql")?;
+        self.transport.exec_sql(self.node, kind, sql)
+    }
+
+    /// Open a deferred transaction. Statements queue until
+    /// [`Session::commit`]; nothing touches the data before that, so
+    /// dropping the session (abrupt disconnect) rolls back by discarding.
+    pub fn begin(&mut self) -> Result<()> {
+        self.no_open_txn("begin")?;
+        self.txn = Some(Vec::new());
+        Ok(())
+    }
+
+    /// Queue a prepared statement into the open transaction (arity checked
+    /// now, bound at commit).
+    pub fn queue_prepared(&mut self, stmt: u32, params: &[Value]) -> Result<()> {
+        let entry = self.entry(stmt)?;
+        if params.len() != entry.handle.param_count() {
+            // surface the same arity error bind would raise
+            entry.handle.bind(params)?;
+        }
+        let q = self
+            .txn
+            .as_mut()
+            .ok_or_else(|| Error::Engine("no open transaction".into()))?;
+        q.push(QueuedStmt::Prepared { stmt, params: params.to_vec() });
+        Ok(())
+    }
+
+    /// Queue a SQL text statement (parsed now so syntax errors surface at
+    /// the call, not at commit).
+    pub fn queue_sql(&mut self, sql_text: &str) -> Result<()> {
+        let parsed = sql::parse(sql_text)?;
+        let q = self
+            .txn
+            .as_mut()
+            .ok_or_else(|| Error::Engine("no open transaction".into()))?;
+        q.push(QueuedStmt::Sql(parsed));
+        Ok(())
+    }
+
+    /// Atomically execute the queued statements. A queue of exactly one
+    /// prepared statement routes through the prepared entry point (compiled
+    /// fast path); anything else binds and runs under the union 2PL lock
+    /// set via `exec_txn`.
+    pub fn commit(&mut self, kind: AccessKind) -> Result<Vec<StatementResult>> {
+        let queue =
+            self.txn.take().ok_or_else(|| Error::Engine("no open transaction".into()))?;
+        if queue.len() == 1 {
+            if let QueuedStmt::Prepared { stmt, params } = &queue[0] {
+                let (stmt, params) = (*stmt, params.clone());
+                let node = self.node;
+                return self
+                    .with_reresolve(stmt, move |t, p| {
+                        t.exec_prepared(node, kind, p, &params)
+                    })
+                    .map(|r| vec![r]);
+            }
+        }
+        let mut bound = Vec::with_capacity(queue.len());
+        for q in queue {
+            bound.push(match q {
+                QueuedStmt::Sql(s) => s,
+                QueuedStmt::Prepared { stmt, params } => {
+                    self.entry(stmt)?.handle.bind(&params)?
+                }
+            });
+        }
+        self.transport.exec_txn(self.node, kind, &bound)
+    }
+
+    /// Discard the open transaction's queue (nothing was applied).
+    pub fn rollback(&mut self) -> Result<()> {
+        self.txn
+            .take()
+            .map(|_| ())
+            .ok_or_else(|| Error::Engine("no open transaction".into()))
+    }
+
+    /// The cluster behind this session (introspection: stats frames).
+    pub fn cluster(&self) -> &Arc<DbCluster> {
+        self.transport.cluster()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::cluster::ClusterConfig;
+    use crate::storage::connector::{assign_links, Connector};
+
+    fn cluster() -> Arc<DbCluster> {
+        let c = DbCluster::start(ClusterConfig::default()).unwrap();
+        c.exec(
+            "CREATE TABLE acct (id INT NOT NULL, bal INT NOT NULL) \
+             PARTITION BY HASH(id) PARTITIONS 4 PRIMARY KEY (id)",
+        )
+        .unwrap();
+        for i in 0..8 {
+            c.execute(&format!("INSERT INTO acct (id, bal) VALUES ({i}, 100)")).unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn prepare_exec_roundtrip_and_handle_table() {
+        let c = cluster();
+        let mut s = Session::for_cluster(c.clone(), 0, AccessKind::Other);
+        let (id1, n1) = s.prepare("SELECT bal FROM acct WHERE id = ?").unwrap();
+        let (id2, n2) = s.prepare("UPDATE acct SET bal = ? WHERE id = ?").unwrap();
+        assert_ne!(id1, id2);
+        assert_eq!((n1, n2), (1, 2));
+        assert_eq!(s.stmt_count(), 2);
+        let r = s.exec(id1, AccessKind::Steering, &[Value::Int(3)]).unwrap();
+        assert_eq!(r.rows().rows[0].values[0], Value::Int(100));
+        s.exec(id2, AccessKind::Other, &[Value::Int(55), Value::Int(3)]).unwrap();
+        let r = s.exec(id1, AccessKind::Steering, &[Value::Int(3)]).unwrap();
+        assert_eq!(r.rows().rows[0].values[0], Value::Int(55));
+        assert!(s.describe(id1).unwrap().contains("acct"));
+        s.close_stmt(id1).unwrap();
+        assert!(s.exec(id1, AccessKind::Steering, &[Value::Int(3)]).is_err());
+        assert!(s.close_stmt(id1).is_err());
+    }
+
+    #[test]
+    fn txn_commits_atomically_and_rollback_discards() {
+        let c = cluster();
+        let mut s = Session::for_cluster(c.clone(), 0, AccessKind::Other);
+        let (debit, _) = s.prepare("UPDATE acct SET bal = bal - ? WHERE id = ?").unwrap();
+        s.begin().unwrap();
+        assert!(s.exec(debit, AccessKind::Other, &[Value::Int(1), Value::Int(0)]).is_err());
+        s.queue_prepared(debit, &[Value::Int(25), Value::Int(1)]).unwrap();
+        s.queue_sql("UPDATE acct SET bal = bal + 25 WHERE id = 2").unwrap();
+        let r = s.commit(AccessKind::Other).unwrap();
+        assert_eq!(r.len(), 2);
+        let rs = c.query("SELECT SUM(bal) FROM acct").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(800));
+
+        s.begin().unwrap();
+        s.queue_sql("UPDATE acct SET bal = 0 WHERE id = 5").unwrap();
+        s.rollback().unwrap();
+        let rs = c.query("SELECT bal FROM acct WHERE id = 5").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(100));
+        assert!(s.rollback().is_err());
+        assert!(s.commit(AccessKind::Other).is_err());
+    }
+
+    #[test]
+    fn single_prepared_txn_takes_fast_path_and_counts_fast_dml() {
+        let c = cluster();
+        let mut s = Session::for_cluster(c.clone(), 0, AccessKind::Other);
+        let (upd, _) =
+            s.prepare("UPDATE acct SET bal = ? WHERE id = ?").unwrap();
+        let before = c.route_counts().fast_dml;
+        s.begin().unwrap();
+        s.queue_prepared(upd, &[Value::Int(7), Value::Int(4)]).unwrap();
+        let r = s.commit(AccessKind::Other).unwrap();
+        assert_eq!(r.len(), 1);
+        assert!(
+            c.route_counts().fast_dml > before,
+            "single-prepared txn should take the compiled fast path"
+        );
+    }
+
+    #[test]
+    fn worker_link_transport_fails_over() {
+        let c = cluster();
+        let conns =
+            vec![Connector::new(0, 0, c.clone()), Connector::new(1, 1, c.clone())];
+        let links = assign_links(&[0], &conns).unwrap();
+        let link = links.into_iter().next().unwrap();
+        let mut s = Session::new(Box::new(link), 0, AccessKind::Other);
+        let (id, _) = s.prepare("SELECT bal FROM acct WHERE id = ?").unwrap();
+        s.exec(id, AccessKind::Steering, &[Value::Int(1)]).unwrap();
+        conns[0].kill();
+        // primary connector down: the link fails over, same handle, same id
+        let r = s.exec(id, AccessKind::Steering, &[Value::Int(1)]).unwrap();
+        assert_eq!(r.rows().rows[0].values[0], Value::Int(100));
+        // and an atomic batch brokered through the surviving connector
+        s.begin().unwrap();
+        s.queue_sql("UPDATE acct SET bal = bal - 5 WHERE id = 1").unwrap();
+        s.queue_sql("UPDATE acct SET bal = bal + 5 WHERE id = 2").unwrap();
+        s.commit(AccessKind::Other).unwrap();
+        let rs = c.query("SELECT SUM(bal) FROM acct").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(800));
+    }
+
+    #[test]
+    fn queue_checks_arity_and_syntax_up_front() {
+        let c = cluster();
+        let mut s = Session::for_cluster(c, 0, AccessKind::Other);
+        let (id, _) = s.prepare("UPDATE acct SET bal = ? WHERE id = ?").unwrap();
+        s.begin().unwrap();
+        assert!(s.queue_prepared(id, &[Value::Int(1)]).is_err());
+        assert!(s.queue_sql("UPDATE acct SET SET").is_err());
+        // the failed queues left nothing behind; commit of empty queue is a no-op
+        let r = s.commit(AccessKind::Other).unwrap();
+        assert!(r.is_empty());
+    }
+}

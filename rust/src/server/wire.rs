@@ -1,0 +1,873 @@
+//! The wire protocol: checksummed length-prefixed binary frames.
+//!
+//! Every frame on the socket is
+//!
+//! ```text
+//! +----------+--------------+-----------------------+
+//! | len: u32 | checksum:u32 | payload (len bytes)   |  all integers LE
+//! +----------+--------------+-----------------------+
+//! payload = tag: u8 + tag-specific body
+//! ```
+//!
+//! The checksum is FNV-1a over the payload — the same discipline the WAL
+//! applies to its record lines (`wal.rs`), for the same reason: a torn or
+//! corrupted frame must fail loudly as a checksum mismatch, never parse as
+//! a plausible shorter message. Frames above [`MAX_FRAME`] are rejected
+//! before the payload is read (the stream is then unsynchronized, so the
+//! connection must close). Values travel in a compact binary encoding of
+//! the engine's own [`Value`] type; result sets and errors are typed
+//! frames, so a protocol error is distinguishable from a SQL error and
+//! both are distinguishable from a dead peer.
+
+use crate::storage::stats::AccessKind;
+use crate::storage::value::{Row, Value};
+use crate::storage::{ResultSet, StatementResult};
+use crate::{Error, Result};
+use std::io::{Read, Write};
+
+/// Protocol version carried in `Hello`/`HelloOk`. Bump on any frame-format
+/// change; the server rejects mismatched clients with a typed error.
+pub const PROTO_VERSION: u16 = 1;
+
+/// Upper bound on one frame's payload. Large enough for any steering
+/// result set we produce, small enough that a hostile or corrupt length
+/// prefix cannot make the server allocate unbounded memory.
+pub const MAX_FRAME: usize = 16 * 1024 * 1024;
+
+/// FNV-1a over a frame payload (mirrors the WAL's record checksum).
+pub fn checksum(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= u32::from(b);
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Write one frame (header + payload).
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(Error::Engine(format!(
+            "outgoing frame of {} bytes exceeds MAX_FRAME ({MAX_FRAME})",
+            payload.len()
+        )));
+    }
+    let mut header = [0u8; 8];
+    header[..4].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    header[4..].copy_from_slice(&checksum(payload).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame's payload. `Ok(None)` means the peer closed the
+/// connection cleanly *between* frames; a close mid-frame, a checksum
+/// mismatch, or an oversize length prefix is an error (and the stream is
+/// no longer synchronized — the caller must drop the connection).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut header = [0u8; 8];
+    let mut got = 0;
+    while got < header.len() {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None), // clean EOF at a frame boundary
+            Ok(0) => {
+                return Err(Error::Engine("connection closed mid-frame header".into()))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+    let want = u32::from_le_bytes(header[4..].try_into().unwrap());
+    if len == 0 {
+        return Err(Error::Engine("empty frame (no tag byte)".into()));
+    }
+    if len > MAX_FRAME {
+        return Err(Error::Engine(format!(
+            "frame of {len} bytes exceeds MAX_FRAME ({MAX_FRAME})"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|_| Error::Engine("connection closed mid-frame payload".into()))?;
+    let got_sum = checksum(&payload);
+    if got_sum != want {
+        return Err(Error::Engine(format!(
+            "frame checksum mismatch ({got_sum:08x} != {want:08x})"
+        )));
+    }
+    Ok(Some(payload))
+}
+
+// ---------- primitive encoding ----------
+
+/// Sequential reader over a frame payload with typed, bounds-checked
+/// getters (a malformed body becomes `Error::Engine`, never a panic).
+pub struct Buf<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Buf<'a> {
+    pub fn new(data: &'a [u8]) -> Buf<'a> {
+        Buf { data, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.data.len() {
+            return Err(Error::Engine(format!(
+                "truncated frame body (wanted {n} bytes at offset {}, have {})",
+                self.pos,
+                self.data.len()
+            )));
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::Engine("non-UTF-8 string in frame".into()))
+    }
+
+    /// All bytes consumed? (trailing garbage is a protocol error)
+    pub fn finish(&self) -> Result<()> {
+        if self.pos != self.data.len() {
+            return Err(Error::Engine(format!(
+                "{} trailing bytes after frame body",
+                self.data.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+// ---------- Value / Row / ResultSet encoding ----------
+
+/// Binary encode one [`Value`] (tag byte + payload).
+pub fn put_value(out: &mut Vec<u8>, v: &Value) {
+    match v {
+        Value::Null => out.push(0),
+        Value::Int(i) => {
+            out.push(1);
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        Value::Float(f) => {
+            out.push(2);
+            out.extend_from_slice(&f.to_bits().to_le_bytes());
+        }
+        Value::Str(s) => {
+            out.push(3);
+            put_str(out, s);
+        }
+        Value::Bool(b) => {
+            out.push(4);
+            out.push(u8::from(*b));
+        }
+    }
+}
+
+/// Decode one [`Value`].
+pub fn get_value(b: &mut Buf) -> Result<Value> {
+    Ok(match b.u8()? {
+        0 => Value::Null,
+        1 => Value::Int(b.i64()?),
+        2 => Value::Float(b.f64()?),
+        3 => Value::Str(b.str()?.into()),
+        4 => Value::Bool(b.u8()? != 0),
+        t => return Err(Error::Engine(format!("bad value tag {t}"))),
+    })
+}
+
+fn put_params(out: &mut Vec<u8>, params: &[Value]) {
+    out.extend_from_slice(&(params.len() as u16).to_le_bytes());
+    for v in params {
+        put_value(out, v);
+    }
+}
+
+fn get_params(b: &mut Buf) -> Result<Vec<Value>> {
+    let n = b.u16()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(get_value(b)?);
+    }
+    Ok(out)
+}
+
+fn put_result_set(out: &mut Vec<u8>, rs: &ResultSet) {
+    out.extend_from_slice(&(rs.columns.len() as u16).to_le_bytes());
+    for c in &rs.columns {
+        put_str(out, c);
+    }
+    out.extend_from_slice(&(rs.rows.len() as u32).to_le_bytes());
+    for r in &rs.rows {
+        put_params(out, &r.values);
+    }
+}
+
+fn get_result_set(b: &mut Buf) -> Result<ResultSet> {
+    let ncols = b.u16()? as usize;
+    let mut columns = Vec::with_capacity(ncols);
+    for _ in 0..ncols {
+        columns.push(b.str()?);
+    }
+    let nrows = b.u32()? as usize;
+    let mut rows = Vec::with_capacity(nrows.min(65_536));
+    for _ in 0..nrows {
+        rows.push(Row::new(get_params(b)?));
+    }
+    Ok(ResultSet { columns, rows })
+}
+
+fn put_statement_result(out: &mut Vec<u8>, r: &StatementResult) {
+    match r {
+        StatementResult::Rows(rs) => {
+            out.push(0);
+            put_result_set(out, rs);
+        }
+        StatementResult::Affected(n) => {
+            out.push(1);
+            out.extend_from_slice(&(*n as u64).to_le_bytes());
+        }
+        StatementResult::Ok => out.push(2),
+    }
+}
+
+fn get_statement_result(b: &mut Buf) -> Result<StatementResult> {
+    Ok(match b.u8()? {
+        0 => StatementResult::Rows(get_result_set(b)?),
+        1 => StatementResult::Affected(b.u64()? as usize),
+        2 => StatementResult::Ok,
+        t => return Err(Error::Engine(format!("bad statement-result tag {t}"))),
+    })
+}
+
+// ---------- AccessKind encoding ----------
+
+/// Wire index of an access kind (position in [`AccessKind::all`]).
+pub fn kind_to_u8(kind: AccessKind) -> u8 {
+    AccessKind::all().iter().position(|k| *k == kind).expect("kind in all()") as u8
+}
+
+/// Access kind from its wire index.
+pub fn kind_from_u8(i: u8) -> Result<AccessKind> {
+    AccessKind::all()
+        .get(i as usize)
+        .copied()
+        .ok_or_else(|| Error::Engine(format!("bad access-kind index {i}")))
+}
+
+// ---------- error codes ----------
+
+/// Typed error codes so every [`Error`] variant round-trips the wire.
+/// `Backpressure` is server-only: the accept loop sends it when the
+/// connection limit is reached.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    Parse = 1,
+    Catalog = 2,
+    Type = 3,
+    Constraint = 4,
+    TxnAborted = 5,
+    Unavailable = 6,
+    Engine = 7,
+    Runtime = 8,
+    Io = 9,
+    Protocol = 10,
+    Backpressure = 11,
+}
+
+/// Split an engine error into its wire code + message.
+pub fn encode_error(e: &Error) -> (ErrCode, String) {
+    match e {
+        Error::Parse(m) => (ErrCode::Parse, m.clone()),
+        Error::Catalog(m) => (ErrCode::Catalog, m.clone()),
+        Error::Type(m) => (ErrCode::Type, m.clone()),
+        Error::Constraint(m) => (ErrCode::Constraint, m.clone()),
+        Error::TxnAborted(m) => (ErrCode::TxnAborted, m.clone()),
+        Error::Unavailable(m) => (ErrCode::Unavailable, m.clone()),
+        Error::Engine(m) => (ErrCode::Engine, m.clone()),
+        Error::Runtime(m) => (ErrCode::Runtime, m.clone()),
+        Error::Io(m) => (ErrCode::Io, m.to_string()),
+    }
+}
+
+/// Rebuild a client-side [`Error`] from a wire code + message.
+pub fn decode_error(code: u8, message: String) -> Error {
+    match code {
+        1 => Error::Parse(message),
+        2 => Error::Catalog(message),
+        3 => Error::Type(message),
+        4 => Error::Constraint(message),
+        5 => Error::TxnAborted(message),
+        6 => Error::Unavailable(message),
+        8 => Error::Runtime(message),
+        9 => Error::Io(std::io::Error::other(message)),
+        10 => Error::Engine(format!("protocol error: {message}")),
+        11 => Error::Unavailable(format!("server backpressure: {message}")),
+        _ => Error::Engine(message),
+    }
+}
+
+// ---------- requests ----------
+
+/// Client → server frames.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Handshake: protocol version, the worker node id this session speaks
+    /// for (stats attribution), and its default access kind.
+    Hello { proto: u16, node: u32, kind: AccessKind },
+    /// Prepare a statement; the reply carries the session-scoped stmt id.
+    Prepare { sql: String },
+    /// Bind params to a prepared stmt id and execute (auto-commit).
+    BindExec { stmt: u32, kind: AccessKind, params: Vec<Value> },
+    /// Bind a prepared single-row INSERT template over many rows and
+    /// execute as one atomic multi-row insert.
+    BindExecBatch { stmt: u32, kind: AccessKind, rows: Vec<Vec<Value>> },
+    /// Parse and execute one SQL text (auto-commit; DDL goes this way).
+    ExecSql { kind: AccessKind, sql: String },
+    /// EXPLAIN-style plan summary of a prepared stmt id.
+    DescribeStmt { stmt: u32 },
+    /// Drop a prepared stmt id from the session's handle table.
+    CloseStmt { stmt: u32 },
+    /// Cluster introspection: route counts, plan cache, epoch, sessions;
+    /// optionally the full state fingerprint and per-table row counts.
+    Stats { fingerprint: bool, tables: bool },
+    /// Open a deferred multi-statement transaction.
+    TxnBegin,
+    /// Queue a prepared statement into the open transaction.
+    TxnPrepared { stmt: u32, params: Vec<Value> },
+    /// Queue a SQL text statement into the open transaction.
+    TxnSql { sql: String },
+    /// Atomically execute the queued statements.
+    TxnCommit { kind: AccessKind },
+    /// Discard the queued statements.
+    TxnRollback,
+    /// Graceful session close.
+    Close,
+    /// Ask the server process to shut down (the SIGTERM-equivalent for
+    /// environments without signal handling).
+    Shutdown,
+}
+
+const REQ_HELLO: u8 = 0x01;
+const REQ_PREPARE: u8 = 0x02;
+const REQ_BIND_EXEC: u8 = 0x03;
+const REQ_EXEC_SQL: u8 = 0x04;
+const REQ_DESCRIBE: u8 = 0x05;
+const REQ_STATS: u8 = 0x06;
+const REQ_CLOSE: u8 = 0x07;
+const REQ_BIND_EXEC_BATCH: u8 = 0x08;
+const REQ_TXN_BEGIN: u8 = 0x09;
+const REQ_TXN_PREPARED: u8 = 0x0a;
+const REQ_TXN_SQL: u8 = 0x0b;
+const REQ_TXN_COMMIT: u8 = 0x0c;
+const REQ_TXN_ROLLBACK: u8 = 0x0d;
+const REQ_CLOSE_STMT: u8 = 0x0e;
+const REQ_SHUTDOWN: u8 = 0x0f;
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32);
+        match self {
+            Request::Hello { proto, node, kind } => {
+                out.push(REQ_HELLO);
+                out.extend_from_slice(&proto.to_le_bytes());
+                out.extend_from_slice(&node.to_le_bytes());
+                out.push(kind_to_u8(*kind));
+            }
+            Request::Prepare { sql } => {
+                out.push(REQ_PREPARE);
+                put_str(&mut out, sql);
+            }
+            Request::BindExec { stmt, kind, params } => {
+                out.push(REQ_BIND_EXEC);
+                out.extend_from_slice(&stmt.to_le_bytes());
+                out.push(kind_to_u8(*kind));
+                put_params(&mut out, params);
+            }
+            Request::BindExecBatch { stmt, kind, rows } => {
+                out.push(REQ_BIND_EXEC_BATCH);
+                out.extend_from_slice(&stmt.to_le_bytes());
+                out.push(kind_to_u8(*kind));
+                out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+                for r in rows {
+                    put_params(&mut out, r);
+                }
+            }
+            Request::ExecSql { kind, sql } => {
+                out.push(REQ_EXEC_SQL);
+                out.push(kind_to_u8(*kind));
+                put_str(&mut out, sql);
+            }
+            Request::DescribeStmt { stmt } => {
+                out.push(REQ_DESCRIBE);
+                out.extend_from_slice(&stmt.to_le_bytes());
+            }
+            Request::CloseStmt { stmt } => {
+                out.push(REQ_CLOSE_STMT);
+                out.extend_from_slice(&stmt.to_le_bytes());
+            }
+            Request::Stats { fingerprint, tables } => {
+                out.push(REQ_STATS);
+                let mut flags = 0u8;
+                if *fingerprint {
+                    flags |= 1;
+                }
+                if *tables {
+                    flags |= 2;
+                }
+                out.push(flags);
+            }
+            Request::TxnBegin => out.push(REQ_TXN_BEGIN),
+            Request::TxnPrepared { stmt, params } => {
+                out.push(REQ_TXN_PREPARED);
+                out.extend_from_slice(&stmt.to_le_bytes());
+                put_params(&mut out, params);
+            }
+            Request::TxnSql { sql } => {
+                out.push(REQ_TXN_SQL);
+                put_str(&mut out, sql);
+            }
+            Request::TxnCommit { kind } => {
+                out.push(REQ_TXN_COMMIT);
+                out.push(kind_to_u8(*kind));
+            }
+            Request::TxnRollback => out.push(REQ_TXN_ROLLBACK),
+            Request::Close => out.push(REQ_CLOSE),
+            Request::Shutdown => out.push(REQ_SHUTDOWN),
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Request> {
+        let mut b = Buf::new(payload);
+        let req = match b.u8()? {
+            REQ_HELLO => Request::Hello {
+                proto: b.u16()?,
+                node: b.u32()?,
+                kind: kind_from_u8(b.u8()?)?,
+            },
+            REQ_PREPARE => Request::Prepare { sql: b.str()? },
+            REQ_BIND_EXEC => Request::BindExec {
+                stmt: b.u32()?,
+                kind: kind_from_u8(b.u8()?)?,
+                params: get_params(&mut b)?,
+            },
+            REQ_BIND_EXEC_BATCH => {
+                let stmt = b.u32()?;
+                let kind = kind_from_u8(b.u8()?)?;
+                let n = b.u32()? as usize;
+                let mut rows = Vec::with_capacity(n.min(65_536));
+                for _ in 0..n {
+                    rows.push(get_params(&mut b)?);
+                }
+                Request::BindExecBatch { stmt, kind, rows }
+            }
+            REQ_EXEC_SQL => {
+                Request::ExecSql { kind: kind_from_u8(b.u8()?)?, sql: b.str()? }
+            }
+            REQ_DESCRIBE => Request::DescribeStmt { stmt: b.u32()? },
+            REQ_CLOSE_STMT => Request::CloseStmt { stmt: b.u32()? },
+            REQ_STATS => {
+                let flags = b.u8()?;
+                Request::Stats { fingerprint: flags & 1 != 0, tables: flags & 2 != 0 }
+            }
+            REQ_TXN_BEGIN => Request::TxnBegin,
+            REQ_TXN_PREPARED => {
+                Request::TxnPrepared { stmt: b.u32()?, params: get_params(&mut b)? }
+            }
+            REQ_TXN_SQL => Request::TxnSql { sql: b.str()? },
+            REQ_TXN_COMMIT => Request::TxnCommit { kind: kind_from_u8(b.u8()?)? },
+            REQ_TXN_ROLLBACK => Request::TxnRollback,
+            REQ_CLOSE => Request::Close,
+            REQ_SHUTDOWN => Request::Shutdown,
+            t => return Err(Error::Engine(format!("bad request tag 0x{t:02x}"))),
+        };
+        b.finish()?;
+        Ok(req)
+    }
+}
+
+// ---------- responses ----------
+
+/// Cluster introspection payload of [`Response::Stats`] — `route_counts()`,
+/// plan cache, epoch and session count, plus the optional byte-equality
+/// fingerprint and per-table row counts.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsReply {
+    pub scatter: u64,
+    pub snapshot_join: u64,
+    pub centralized: u64,
+    pub fast_dml: u64,
+    pub chunks_scanned: u64,
+    pub chunks_pruned: u64,
+    pub cached_plans: u64,
+    pub epoch: u64,
+    pub sessions: u64,
+    pub fingerprint: Option<String>,
+    pub table_rows: Vec<(String, u64)>,
+}
+
+/// Server → client frames.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    HelloOk { proto: u16, session: u64 },
+    PrepareOk { stmt: u32, params: u16 },
+    Result(StatementResult),
+    Describe(String),
+    Stats(Box<StatsReply>),
+    TxnResults(Vec<StatementResult>),
+    Err { code: ErrCode, message: String },
+    ShutdownOk,
+}
+
+const RESP_HELLO_OK: u8 = 0x81;
+const RESP_PREPARE_OK: u8 = 0x82;
+const RESP_RESULT: u8 = 0x83;
+const RESP_DESCRIBE: u8 = 0x84;
+const RESP_STATS: u8 = 0x85;
+const RESP_TXN_RESULTS: u8 = 0x86;
+const RESP_ERR: u8 = 0x87;
+const RESP_SHUTDOWN_OK: u8 = 0x88;
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32);
+        match self {
+            Response::HelloOk { proto, session } => {
+                out.push(RESP_HELLO_OK);
+                out.extend_from_slice(&proto.to_le_bytes());
+                out.extend_from_slice(&session.to_le_bytes());
+            }
+            Response::PrepareOk { stmt, params } => {
+                out.push(RESP_PREPARE_OK);
+                out.extend_from_slice(&stmt.to_le_bytes());
+                out.extend_from_slice(&params.to_le_bytes());
+            }
+            Response::Result(r) => {
+                out.push(RESP_RESULT);
+                put_statement_result(&mut out, r);
+            }
+            Response::Describe(text) => {
+                out.push(RESP_DESCRIBE);
+                put_str(&mut out, text);
+            }
+            Response::Stats(s) => {
+                out.push(RESP_STATS);
+                for v in [
+                    s.scatter,
+                    s.snapshot_join,
+                    s.centralized,
+                    s.fast_dml,
+                    s.chunks_scanned,
+                    s.chunks_pruned,
+                    s.cached_plans,
+                    s.epoch,
+                    s.sessions,
+                ] {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                match &s.fingerprint {
+                    Some(f) => {
+                        out.push(1);
+                        put_str(&mut out, f);
+                    }
+                    None => out.push(0),
+                }
+                out.extend_from_slice(&(s.table_rows.len() as u16).to_le_bytes());
+                for (t, n) in &s.table_rows {
+                    put_str(&mut out, t);
+                    out.extend_from_slice(&n.to_le_bytes());
+                }
+            }
+            Response::TxnResults(rs) => {
+                out.push(RESP_TXN_RESULTS);
+                out.extend_from_slice(&(rs.len() as u32).to_le_bytes());
+                for r in rs {
+                    put_statement_result(&mut out, r);
+                }
+            }
+            Response::Err { code, message } => {
+                out.push(RESP_ERR);
+                out.push(*code as u8);
+                put_str(&mut out, message);
+            }
+            Response::ShutdownOk => out.push(RESP_SHUTDOWN_OK),
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Response> {
+        let mut b = Buf::new(payload);
+        let resp = match b.u8()? {
+            RESP_HELLO_OK => Response::HelloOk { proto: b.u16()?, session: b.u64()? },
+            RESP_PREPARE_OK => Response::PrepareOk { stmt: b.u32()?, params: b.u16()? },
+            RESP_RESULT => Response::Result(get_statement_result(&mut b)?),
+            RESP_DESCRIBE => Response::Describe(b.str()?),
+            RESP_STATS => {
+                // struct fields evaluate in source order, matching encode()
+                let mut s = StatsReply {
+                    scatter: b.u64()?,
+                    snapshot_join: b.u64()?,
+                    centralized: b.u64()?,
+                    fast_dml: b.u64()?,
+                    chunks_scanned: b.u64()?,
+                    chunks_pruned: b.u64()?,
+                    cached_plans: b.u64()?,
+                    epoch: b.u64()?,
+                    sessions: b.u64()?,
+                    fingerprint: None,
+                    table_rows: Vec::new(),
+                };
+                if b.u8()? != 0 {
+                    s.fingerprint = Some(b.str()?);
+                }
+                let nt = b.u16()? as usize;
+                for _ in 0..nt {
+                    let t = b.str()?;
+                    let n = b.u64()?;
+                    s.table_rows.push((t, n));
+                }
+                Response::Stats(Box::new(s))
+            }
+            RESP_TXN_RESULTS => {
+                let n = b.u32()? as usize;
+                let mut rs = Vec::with_capacity(n.min(65_536));
+                for _ in 0..n {
+                    rs.push(get_statement_result(&mut b)?);
+                }
+                Response::TxnResults(rs)
+            }
+            RESP_ERR => {
+                let code = b.u8()?;
+                let message = b.str()?;
+                // decode through the error mapper and back so unknown codes
+                // degrade to Engine instead of failing the decode
+                let e = decode_error(code, message);
+                let (code, message) = encode_error(&e);
+                Response::Err { code, message }
+            }
+            RESP_SHUTDOWN_OK => Response::ShutdownOk,
+            t => return Err(Error::Engine(format!("bad response tag 0x{t:02x}"))),
+        };
+        b.finish()?;
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(r: Request) {
+        let enc = r.encode();
+        assert_eq!(Request::decode(&enc).unwrap(), r);
+    }
+
+    fn roundtrip_resp(r: Response) {
+        let enc = r.encode();
+        assert_eq!(Response::decode(&enc).unwrap(), r);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_req(Request::Hello {
+            proto: PROTO_VERSION,
+            node: 7,
+            kind: AccessKind::Steering,
+        });
+        roundtrip_req(Request::Prepare { sql: "SELECT * FROM t WHERE a = ?".into() });
+        roundtrip_req(Request::BindExec {
+            stmt: 3,
+            kind: AccessKind::UpdateToRunning,
+            params: vec![
+                Value::Int(-5),
+                Value::Float(2.5),
+                Value::str("it's a \t string\n"),
+                Value::Bool(true),
+                Value::Null,
+            ],
+        });
+        roundtrip_req(Request::BindExecBatch {
+            stmt: 9,
+            kind: AccessKind::InsertTasks,
+            rows: vec![vec![Value::Int(1)], vec![Value::Int(2)]],
+        });
+        roundtrip_req(Request::ExecSql {
+            kind: AccessKind::Other,
+            sql: "CREATE TABLE t (id INT NOT NULL) PRIMARY KEY (id)".into(),
+        });
+        roundtrip_req(Request::DescribeStmt { stmt: 1 });
+        roundtrip_req(Request::CloseStmt { stmt: 2 });
+        roundtrip_req(Request::Stats { fingerprint: true, tables: false });
+        roundtrip_req(Request::Stats { fingerprint: false, tables: true });
+        roundtrip_req(Request::TxnBegin);
+        roundtrip_req(Request::TxnPrepared { stmt: 4, params: vec![Value::Int(1)] });
+        roundtrip_req(Request::TxnSql { sql: "DELETE FROM t".into() });
+        roundtrip_req(Request::TxnCommit { kind: AccessKind::Other });
+        roundtrip_req(Request::TxnRollback);
+        roundtrip_req(Request::Close);
+        roundtrip_req(Request::Shutdown);
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        roundtrip_resp(Response::HelloOk { proto: 1, session: 42 });
+        roundtrip_resp(Response::PrepareOk { stmt: 8, params: 2 });
+        roundtrip_resp(Response::Result(StatementResult::Affected(11)));
+        roundtrip_resp(Response::Result(StatementResult::Ok));
+        roundtrip_resp(Response::Result(StatementResult::Rows(ResultSet {
+            columns: vec!["a".into(), "b".into()],
+            rows: vec![
+                Row::new(vec![Value::Int(1), Value::str("x")]),
+                Row::new(vec![Value::Null, Value::Float(f64::NAN)]),
+            ],
+        })));
+        roundtrip_resp(Response::Describe("scatter-gather: ...".into()));
+        roundtrip_resp(Response::Stats(Box::new(StatsReply {
+            scatter: 1,
+            fast_dml: 9,
+            fingerprint: Some("workqueue\nI1\tSREADY\n".into()),
+            table_rows: vec![("workqueue".into(), 100)],
+            ..Default::default()
+        })));
+        roundtrip_resp(Response::TxnResults(vec![
+            StatementResult::Affected(1),
+            StatementResult::Ok,
+        ]));
+        roundtrip_resp(Response::Err {
+            code: ErrCode::Constraint,
+            message: "column 'id' is NOT NULL".into(),
+        });
+        roundtrip_resp(Response::ShutdownOk);
+    }
+
+    #[test]
+    fn nan_float_roundtrips_by_bits() {
+        // Value::PartialEq uses total_cmp, under which NaN == NaN — but make
+        // sure the bits really survive, not just the comparison.
+        let mut out = Vec::new();
+        put_value(&mut out, &Value::Float(f64::NAN));
+        let v = get_value(&mut Buf::new(&out)).unwrap();
+        match v {
+            Value::Float(f) => assert!(f.is_nan()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_over_a_pipe() {
+        let payload = Request::Prepare { sql: "SELECT 1".into() }.encode();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        let got = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(got, payload);
+        // clean EOF after the frame
+        assert!(read_frame(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_payload_fails_checksum() {
+        let payload = Request::Prepare { sql: "SELECT 1".into() }.encode();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0xff;
+        let e = read_frame(&mut std::io::Cursor::new(buf));
+        assert!(matches!(e, Err(Error::Engine(m)) if m.contains("checksum")));
+    }
+
+    #[test]
+    fn torn_frame_is_an_error_not_a_hang_or_panic() {
+        let payload = Request::Prepare { sql: "SELECT 1".into() }.encode();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        // cut mid-payload
+        buf.truncate(buf.len() - 3);
+        let e = read_frame(&mut std::io::Cursor::new(buf));
+        assert!(matches!(e, Err(Error::Engine(m)) if m.contains("mid-frame")));
+        // cut mid-header
+        let e = read_frame(&mut std::io::Cursor::new(vec![1u8, 2, 3]));
+        assert!(matches!(e, Err(Error::Engine(m)) if m.contains("mid-frame")));
+    }
+
+    #[test]
+    fn oversize_length_prefix_is_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        let e = read_frame(&mut std::io::Cursor::new(buf));
+        assert!(matches!(e, Err(Error::Engine(m)) if m.contains("MAX_FRAME")));
+    }
+
+    #[test]
+    fn trailing_garbage_is_a_decode_error() {
+        let mut enc = Request::TxnBegin.encode();
+        enc.push(0x99);
+        assert!(Request::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn error_codes_roundtrip_every_variant() {
+        let cases: Vec<Error> = vec![
+            Error::Parse("p".into()),
+            Error::Catalog("c".into()),
+            Error::Type("t".into()),
+            Error::Constraint("n".into()),
+            Error::TxnAborted("a".into()),
+            Error::Unavailable("u".into()),
+            Error::Engine("e".into()),
+            Error::Runtime("r".into()),
+        ];
+        for e in cases {
+            let (code, msg) = encode_error(&e);
+            let back = decode_error(code as u8, msg);
+            assert_eq!(std::mem::discriminant(&e), std::mem::discriminant(&back));
+        }
+    }
+
+    #[test]
+    fn kind_index_roundtrips() {
+        for &k in AccessKind::all() {
+            assert_eq!(kind_from_u8(kind_to_u8(k)).unwrap(), k);
+        }
+        assert!(kind_from_u8(200).is_err());
+    }
+}

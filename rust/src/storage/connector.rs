@@ -136,6 +136,20 @@ impl Connector {
         self.brokered.fetch_add(1, Ordering::Relaxed);
         self.cluster.exec_prepared_batch(worker_node, kind, prepared, rows)
     }
+
+    /// Broker one atomic statement batch (union 2PL lock set).
+    pub fn exec_txn(
+        &self,
+        worker_node: u32,
+        kind: AccessKind,
+        stmts: &[crate::storage::sql::Statement],
+    ) -> Result<Vec<StatementResult>> {
+        if !self.is_alive() {
+            return Err(Error::Unavailable(format!("connector {} is down", self.id)));
+        }
+        self.brokered.fetch_add(1, Ordering::Relaxed);
+        self.cluster.exec_txn(worker_node, kind, stmts)
+    }
 }
 
 /// A worker's view of the connector fabric: a primary link and a secondary
@@ -233,6 +247,24 @@ impl WorkerLink {
                 .as_ref()
                 .unwrap()
                 .exec_prepared_batch(self.worker_node, kind, prepared, rows),
+            other => other,
+        }
+    }
+
+    /// Atomic-batch variant of [`WorkerLink::exec`]: primary first,
+    /// secondary on connector outage. The batch either commits through
+    /// whichever connector brokered it or not at all — failover between
+    /// the attempts cannot half-apply it, because nothing is applied
+    /// until the brokered `exec_txn` commits.
+    pub fn exec_txn(
+        &self,
+        kind: AccessKind,
+        stmts: &[crate::storage::sql::Statement],
+    ) -> Result<Vec<StatementResult>> {
+        match self.primary.exec_txn(self.worker_node, kind, stmts) {
+            Err(Error::Unavailable(_)) if self.secondary.is_some() => {
+                self.secondary.as_ref().unwrap().exec_txn(self.worker_node, kind, stmts)
+            }
             other => other,
         }
     }

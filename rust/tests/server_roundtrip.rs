@@ -1,0 +1,463 @@
+//! Wire-protocol round-trip gate: concurrent TCP clients (claim workers,
+//! steering scanners, and an open multi-statement transaction) against a
+//! `server::Server`, with an in-process twin cluster fed the identical
+//! committed stream — final `fingerprint()` must be byte-equal. Plus the
+//! hostile-input suite (malformed, oversize, and torn frames; abrupt
+//! disconnect with an open txn) proving the server never panics and the
+//! dropped session's transaction rolls back, and the failover regression:
+//! prepared handles held by remote sessions keep working across a data
+//! node kill → promotion → restart → rejoin.
+
+use schaladb::server::wire::{self, Request, Response};
+use schaladb::server::{Client, Server, ServerConfig};
+use schaladb::storage::cluster::{ClusterConfig, DurabilityConfig};
+use schaladb::storage::replication::AvailabilityManager;
+use schaladb::storage::{AccessKind, DbCluster, StatementResult, Value};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+const WORKERS: usize = 8;
+const TASKS_PER_WORKER: usize = 25;
+
+fn any_addr() -> std::net::SocketAddr {
+    "127.0.0.1:0".parse().unwrap()
+}
+
+fn schema_sql() -> String {
+    format!(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
+         status TEXT, dur FLOAT, starttime FLOAT) \
+         PARTITION BY HASH(workerid) PARTITIONS {WORKERS} \
+         PRIMARY KEY (taskid) INDEX (status)"
+    )
+}
+
+fn seed_rows() -> Vec<Vec<Value>> {
+    (0..WORKERS * TASKS_PER_WORKER)
+        .map(|i| {
+            vec![
+                Value::Int(i as i64),
+                Value::Int((i % WORKERS) as i64),
+                Value::Float(1.0),
+            ]
+        })
+        .collect()
+}
+
+const SEED_SQL: &str =
+    "INSERT INTO workqueue (taskid, workerid, status, dur) VALUES (?, ?, 'READY', ?)";
+
+const CLAIM_SQL: &str = "UPDATE workqueue SET status = 'RUNNING', starttime = 0.0 \
+     WHERE workerid = ? AND status = 'READY' ORDER BY taskid LIMIT 1 \
+     RETURNING taskid";
+
+/// The tentpole gate: 8 remote claim workers + 2 remote steering scanners
+/// + 1 remote multi-statement transaction, all concurrent, against an
+/// in-process twin running the identical committed stream. Byte-equal at
+/// the end, observed *over the wire* via the Stats fingerprint.
+#[test]
+fn remote_multi_client_run_matches_in_process_twin() {
+    let cluster = DbCluster::start(ClusterConfig::default()).unwrap();
+    let server = Server::bind(any_addr(), cluster, ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let twin = DbCluster::start(ClusterConfig::default()).unwrap();
+
+    // identical schema + seed on both sides; the server side entirely
+    // over the wire (DDL via ExecSql, seed via prepared batch insert)
+    let mut admin = Client::connect(addr, 0, AccessKind::Other).unwrap();
+    admin.exec_sql(&schema_sql()).unwrap();
+    let (ins, nparams) = admin.prepare(SEED_SQL).unwrap();
+    assert_eq!(nparams, 3);
+    let r = admin.exec_batch(ins, AccessKind::InsertTasks, &seed_rows()).unwrap();
+    assert_eq!(r.affected(), WORKERS * TASKS_PER_WORKER);
+
+    twin.exec(&schema_sql()).unwrap();
+    let tins = twin.prepare(SEED_SQL).unwrap();
+    twin.exec_prepared_batch(0, AccessKind::InsertTasks, &tins, &seed_rows()).unwrap();
+
+    // steering scanners: read-only, run until the claims are done
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut scanners = Vec::new();
+    for _ in 0..2 {
+        let stop = stop.clone();
+        scanners.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr, 0, AccessKind::Steering).unwrap();
+            let mut scans = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                let rs = c
+                    .query("SELECT status, COUNT(*) FROM workqueue GROUP BY status")
+                    .unwrap();
+                assert!(!rs.rows.is_empty());
+                scans += 1;
+            }
+            c.close().unwrap();
+            scans
+        }));
+    }
+
+    // one client holds an open multi-statement txn concurrent with the
+    // claims; it touches only `dur` (commutes with the status claims) so
+    // the twin can apply it at any point in its sequential stream
+    let txn_client = std::thread::spawn(move || {
+        let mut c = Client::connect(addr, 0, AccessKind::Other).unwrap();
+        // a rolled-back txn first: must leave no trace in the fingerprint
+        c.begin().unwrap();
+        c.txn_sql("UPDATE workqueue SET dur = 999.0 WHERE taskid = 0").unwrap();
+        c.rollback().unwrap();
+        c.begin().unwrap();
+        let (bump, _) =
+            c.prepare("UPDATE workqueue SET dur = dur + ? WHERE taskid = ?").unwrap();
+        c.txn_prepared(bump, &[Value::Float(1.0), Value::Int(0)]).unwrap();
+        c.txn_prepared(bump, &[Value::Float(2.0), Value::Int(1)]).unwrap();
+        c.txn_sql("UPDATE workqueue SET dur = dur + 4.0 WHERE taskid = 2").unwrap();
+        let results = c.commit(AccessKind::Other).unwrap();
+        assert_eq!(results.len(), 3);
+        c.close().unwrap();
+    });
+
+    // 8 concurrent claim workers, each draining its own partition
+    let mut claimers = Vec::new();
+    for w in 0..WORKERS {
+        claimers.push(std::thread::spawn(move || {
+            let mut c =
+                Client::connect(addr, w as u32, AccessKind::UpdateToRunning).unwrap();
+            let (claim, _) = c.prepare(CLAIM_SQL).unwrap();
+            let mut claimed = 0usize;
+            loop {
+                match c.exec(claim, &[Value::Int(w as i64)]).unwrap() {
+                    StatementResult::Rows(rs) if !rs.rows.is_empty() => claimed += 1,
+                    _ => break,
+                }
+            }
+            c.close().unwrap();
+            claimed
+        }));
+    }
+    let claimed: usize = claimers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(claimed, WORKERS * TASKS_PER_WORKER);
+    txn_client.join().unwrap();
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    for s in scanners {
+        assert!(s.join().unwrap() > 0, "scanner never completed a scan");
+    }
+
+    // the twin replays the same committed stream sequentially
+    let tclaim = twin.prepare(CLAIM_SQL).unwrap();
+    for w in 0..WORKERS {
+        loop {
+            let r = twin
+                .exec_prepared(
+                    w as u32,
+                    AccessKind::UpdateToRunning,
+                    &tclaim,
+                    &[Value::Int(w as i64)],
+                )
+                .unwrap();
+            match r {
+                StatementResult::Rows(rs) if !rs.rows.is_empty() => {}
+                _ => break,
+            }
+        }
+    }
+    let tbump = twin.prepare("UPDATE workqueue SET dur = dur + ? WHERE taskid = ?").unwrap();
+    let tbump4 =
+        twin.prepare("UPDATE workqueue SET dur = dur + 4.0 WHERE taskid = 2").unwrap();
+    twin.exec_txn(
+        0,
+        AccessKind::Other,
+        &[
+            tbump.bind(&[Value::Float(1.0), Value::Int(0)]).unwrap(),
+            tbump.bind(&[Value::Float(2.0), Value::Int(1)]).unwrap(),
+            tbump4.bind(&[]).unwrap(),
+        ],
+    )
+    .unwrap();
+
+    // byte-equality, observed over the wire
+    let stats = admin.stats(true, true).unwrap();
+    assert_eq!(stats.fingerprint.as_deref(), Some(twin.fingerprint().unwrap().as_str()));
+    assert_eq!(
+        stats.table_rows,
+        vec![("workqueue".to_string(), (WORKERS * TASKS_PER_WORKER) as u64)]
+    );
+    // adoption telemetry crossed the wire too: the remote claim loop must
+    // have driven the compiled DML fast path
+    assert!(stats.fast_dml > 0, "remote claims should take the fast path");
+    assert!(stats.scatter > 0, "remote steering scans should scatter-gather");
+    admin.close().unwrap();
+}
+
+/// Malformed and hostile frames: typed errors or clean closes, never a
+/// panic, and the server keeps serving other clients afterwards.
+#[test]
+fn hostile_frames_never_kill_the_server() {
+    let cluster = DbCluster::start(ClusterConfig::default()).unwrap();
+    let server = Server::bind(any_addr(), cluster, ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    // (a) first frame with a corrupted checksum: the stream is
+    // unsynchronized, the server just closes it
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let payload = Request::Hello {
+            proto: wire::PROTO_VERSION,
+            node: 0,
+            kind: AccessKind::Other,
+        }
+        .encode();
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&(wire::checksum(&payload) ^ 0xdead_beef).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        use std::io::Write as _;
+        s.write_all(&buf).unwrap();
+        // server closes without a panic: read drains to EOF
+        let got = wire::read_frame(&mut s);
+        assert!(matches!(got, Ok(None) | Err(_)), "got {got:?}");
+    }
+
+    // (b) a well-framed garbage payload after a valid handshake: typed
+    // protocol error, connection stays usable
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let hello = Request::Hello {
+            proto: wire::PROTO_VERSION,
+            node: 0,
+            kind: AccessKind::Other,
+        };
+        wire::write_frame(&mut s, &hello.encode()).unwrap();
+        let resp = wire::read_frame(&mut s).unwrap().unwrap();
+        assert!(matches!(
+            Response::decode(&resp).unwrap(),
+            Response::HelloOk { .. }
+        ));
+        wire::write_frame(&mut s, &[0x7f, 1, 2, 3]).unwrap(); // unknown tag
+        let resp = Response::decode(&wire::read_frame(&mut s).unwrap().unwrap()).unwrap();
+        assert!(matches!(resp, Response::Err { code: wire::ErrCode::Protocol, .. }));
+        // same connection still serves real requests
+        wire::write_frame(
+            &mut s,
+            &Request::Stats { fingerprint: false, tables: false }.encode(),
+        )
+        .unwrap();
+        let resp = Response::decode(&wire::read_frame(&mut s).unwrap().unwrap()).unwrap();
+        assert!(matches!(resp, Response::Stats(_)));
+    }
+
+    // (c) an oversize length prefix: one typed error frame, then close
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let hello = Request::Hello {
+            proto: wire::PROTO_VERSION,
+            node: 0,
+            kind: AccessKind::Other,
+        };
+        wire::write_frame(&mut s, &hello.encode()).unwrap();
+        wire::read_frame(&mut s).unwrap().unwrap();
+        use std::io::Write as _;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        s.write_all(&buf).unwrap();
+        let resp = Response::decode(&wire::read_frame(&mut s).unwrap().unwrap()).unwrap();
+        assert!(matches!(resp, Response::Err { .. }));
+        assert!(wire::read_frame(&mut s).unwrap().is_none(), "server must hang up");
+    }
+
+    // (d) wrong protocol version: typed error, not a hang
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let hello = Request::Hello { proto: 999, node: 0, kind: AccessKind::Other };
+        wire::write_frame(&mut s, &hello.encode()).unwrap();
+        let resp = Response::decode(&wire::read_frame(&mut s).unwrap().unwrap()).unwrap();
+        match resp {
+            Response::Err { code, message } => {
+                assert_eq!(code, wire::ErrCode::Protocol);
+                assert!(message.contains("version"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    // after all of that, a normal client still gets served
+    let mut c = Client::connect(addr, 0, AccessKind::Other).unwrap();
+    c.exec_sql("CREATE TABLE t (id INT NOT NULL) PRIMARY KEY (id)").unwrap();
+    c.exec_sql("INSERT INTO t (id) VALUES (1)").unwrap();
+    let rs = c.query("SELECT COUNT(*) FROM t").unwrap();
+    assert_eq!(rs.rows[0].values[0], Value::Int(1));
+    c.close().unwrap();
+}
+
+/// Abrupt disconnect with an open transaction: the deferred queue dies
+/// with the session and nothing was applied — rollback by construction.
+#[test]
+fn abrupt_disconnect_rolls_back_the_open_txn() {
+    let cluster = DbCluster::start(ClusterConfig::default()).unwrap();
+    let server = Server::bind(any_addr(), cluster.clone(), ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    let mut admin = Client::connect(addr, 0, AccessKind::Other).unwrap();
+    admin
+        .exec_sql("CREATE TABLE acct (id INT NOT NULL, bal INT NOT NULL) PRIMARY KEY (id)")
+        .unwrap();
+    admin.exec_sql("INSERT INTO acct (id, bal) VALUES (1, 100)").unwrap();
+
+    let doomed = {
+        let mut c = Client::connect(addr, 3, AccessKind::Other).unwrap();
+        c.begin().unwrap();
+        // acked by the server, so it is queued server-side before the drop
+        c.txn_sql("UPDATE acct SET bal = 0 WHERE id = 1").unwrap();
+        c.txn_sql("DELETE FROM acct WHERE id = 1").unwrap();
+        c
+    };
+    drop(doomed); // vanish without Close, txn still open
+
+    // nothing was applied (deferred execution): state is untouched,
+    // regardless of how quickly the server notices the disconnect
+    let rs = admin.query("SELECT bal FROM acct WHERE id = 1").unwrap();
+    assert_eq!(rs.rows[0].values[0], Value::Int(100));
+
+    // and the handler thread exits: the session count drains to 1 (admin)
+    let mut drained = false;
+    for _ in 0..500 {
+        if admin.stats(false, false).unwrap().sessions <= 1 {
+            drained = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(drained, "disconnected session never reaped");
+    admin.close().unwrap();
+}
+
+/// The backpressure rule: beyond `max_conns` concurrent connections the
+/// accept loop answers with a typed error frame instead of queueing.
+#[test]
+fn connections_beyond_max_conns_are_rejected_with_backpressure() {
+    let cluster = DbCluster::start(ClusterConfig::default()).unwrap();
+    let server = Server::bind(any_addr(), cluster, ServerConfig { max_conns: 1 }).unwrap();
+    let addr = server.local_addr();
+
+    let held = Client::connect(addr, 0, AccessKind::Other).unwrap();
+    let rejected = Client::connect(addr, 1, AccessKind::Other);
+    match rejected {
+        Err(schaladb::Error::Unavailable(msg)) => {
+            assert!(msg.contains("backpressure"), "unexpected message: {msg}")
+        }
+        other => panic!("expected backpressure rejection, got {other:?}"),
+    }
+
+    // freeing the slot re-admits new clients
+    held.close().unwrap();
+    let mut ok = None;
+    for _ in 0..500 {
+        match Client::connect(addr, 1, AccessKind::Other) {
+            Ok(c) => {
+                ok = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    ok.expect("slot never freed after close").close().unwrap();
+}
+
+/// Failover regression (the PR 1 guarantee, across the wire): a remote
+/// session's prepared stmt ids keep working through data node kill →
+/// backup promotion → process restart → online rejoin, and the surviving
+/// state stays byte-equal to a never-killed twin.
+#[test]
+fn remote_prepared_handles_survive_node_kill_and_rejoin() {
+    let dir = std::env::temp_dir()
+        .join(format!("schaladb-server-failover-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cluster = DbCluster::start(ClusterConfig {
+        data_nodes: 2,
+        replication: true,
+        durability: Some(DurabilityConfig::new(dir.clone(), 8)),
+        ..Default::default()
+    })
+    .unwrap();
+    let am = AvailabilityManager::new(cluster.clone());
+    let server = Server::bind(any_addr(), cluster.clone(), ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let twin = DbCluster::start(ClusterConfig::default()).unwrap();
+
+    let mut admin = Client::connect(addr, 0, AccessKind::Other).unwrap();
+    admin.exec_sql(&schema_sql()).unwrap();
+    let (ins, _) = admin.prepare(SEED_SQL).unwrap();
+    admin.exec_batch(ins, AccessKind::InsertTasks, &seed_rows()).unwrap();
+    twin.exec(&schema_sql()).unwrap();
+    let tins = twin.prepare(SEED_SQL).unwrap();
+    twin.exec_prepared_batch(0, AccessKind::InsertTasks, &tins, &seed_rows()).unwrap();
+
+    // the remote session prepares its claim ONCE; the same stmt id must
+    // keep executing through every failover phase below
+    let mut worker = Client::connect(addr, 1, AccessKind::UpdateToRunning).unwrap();
+    let (claim, _) = worker.prepare(
+        "UPDATE workqueue SET status = 'RUNNING', starttime = 0.0 \
+         WHERE taskid = ? AND workerid = ? AND status = 'READY'",
+    )
+    .unwrap();
+    let tclaim = twin
+        .prepare(
+            "UPDATE workqueue SET status = 'RUNNING', starttime = 0.0 \
+             WHERE taskid = ? AND workerid = ? AND status = 'READY'",
+        )
+        .unwrap();
+    let claim_on_both = |worker: &mut Client, tid: i64| {
+        let params = [Value::Int(tid), Value::Int(tid % WORKERS as i64)];
+        let n = worker.exec(claim, &params).unwrap().affected();
+        assert_eq!(n, 1, "remote claim of task {tid} must hit exactly one row");
+        twin.exec_prepared(1, AccessKind::UpdateToRunning, &tclaim, &params)
+            .unwrap()
+            .affected();
+    };
+
+    // healthy phase
+    for tid in 0..8 {
+        claim_on_both(&mut worker, tid);
+    }
+
+    // kill a data node, promote its backups; same remote stmt id
+    let epoch0 = cluster.cluster_epoch();
+    cluster.kill_node(1).unwrap();
+    let r = am.sweep().unwrap();
+    assert!(r.promoted > 0, "node 1 must have hosted primaries");
+    assert!(cluster.cluster_epoch() > epoch0);
+    for tid in 8..16 {
+        claim_on_both(&mut worker, tid);
+    }
+
+    // restart the dead node from checkpoints + WAL tail, sweep to rejoin
+    let start = cluster.restart_node(1).unwrap();
+    assert!(start.partitions > 0);
+    let mut rejoined = false;
+    for _ in 0..200 {
+        if am.sweep().unwrap().rejoined > 0 {
+            rejoined = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(rejoined, "node 1 never rejoined");
+    for tid in 16..24 {
+        claim_on_both(&mut worker, tid);
+    }
+
+    // byte-equality across kill → promote → restart → rejoin, observed
+    // over the wire
+    let stats = admin.stats(true, false).unwrap();
+    assert_eq!(stats.fingerprint.as_deref(), Some(twin.fingerprint().unwrap().as_str()));
+    assert!(stats.epoch > 0);
+
+    worker.close().unwrap();
+    admin.close().unwrap();
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+}
