@@ -237,6 +237,116 @@ fn bench_server(quick: bool, workers: usize, rows: usize) -> Vec<Bench> {
     out
 }
 
+// Observability overhead: the CI gate behind BENCH_obs.json. The same
+// point-claim stream runs with the obs registry live (spans, counters,
+// latch/WAL timing, slow-op ring) and quiesced via `set_enabled(false)` —
+// three interleaved rounds, best rate per arm, so scheduler noise does not
+// masquerade as instrumentation cost. The workflow gates overhead <= 5%.
+fn bench_obs(quick: bool, workers: usize, rows: usize) -> Vec<Bench> {
+    use schaladb::obs::Counter;
+
+    let threads = 4usize;
+    // a 5% gate needs a measurement window that dwarfs scheduler jitter,
+    // so quick mode keeps far more iterations here than the other sections
+    let per_thread = if quick { 500 } else { 2_000 }.min(rows / workers);
+    let point_sql = "UPDATE workqueue SET status = 'RUNNING', starttime = 0.0 \
+                     WHERE taskid = ? AND status = 'READY' AND workerid = ?";
+    let run = |enabled: bool| -> (f64, Histogram) {
+        let c = wq_cluster(workers, rows);
+        c.obs().set_enabled(enabled);
+        let p = c.prepare(point_sql).unwrap();
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let c = c.clone();
+            let p = p.clone();
+            handles.push(std::thread::spawn(move || {
+                let w = t % workers;
+                let mut lat = Vec::with_capacity(per_thread);
+                for i in 0..per_thread {
+                    // distinct READY taskids in this worker's partition
+                    let tid = (w + i * workers) as i64;
+                    let params = [Value::Int(tid), Value::Int(w as i64)];
+                    let t1 = Instant::now();
+                    c.exec_prepared(t as u32, AccessKind::UpdateToRunning, &p, &params)
+                        .unwrap();
+                    lat.push(t1.elapsed().as_secs_f64());
+                }
+                lat
+            }));
+        }
+        let mut hist = Histogram::new();
+        for h in handles {
+            for s in h.join().unwrap() {
+                hist.record(s);
+            }
+        }
+        let rate = (threads * per_thread) as f64 / t0.elapsed().as_secs_f64();
+        // the comparison is honest only if the instrumented arm really
+        // recorded and the quiesced arm really skipped
+        let counted = c.obs().counter(Counter::DmlFast);
+        if enabled {
+            assert!(
+                counted >= (threads * per_thread) as u64,
+                "instrumented arm must count every claim, saw {counted}"
+            );
+        } else {
+            assert_eq!(counted, 0, "quiesced registry must not count");
+        }
+        (rate, hist)
+    };
+
+    let mut best_on = 0.0f64;
+    let mut best_off = 0.0f64;
+    let mut hist_on = Histogram::new();
+    let mut hist_off = Histogram::new();
+    for round in 0..3 {
+        let (r_off, h_off) = run(false);
+        let (r_on, h_on) = run(true);
+        println!("obs overhead round {round}: quiesced {r_off:.0}/s, instrumented {r_on:.0}/s");
+        if r_off > best_off {
+            best_off = r_off;
+            hist_off = h_off;
+        }
+        if r_on > best_on {
+            best_on = r_on;
+            hist_on = h_on;
+        }
+    }
+    let overhead_frac = ((best_off - best_on) / best_off).max(0.0);
+    println!(
+        "obs overhead (best of 3): instrumented {best_on:.0}/s vs quiesced {best_off:.0}/s \
+         -> {:.2}% overhead\n",
+        overhead_frac * 100.0
+    );
+
+    std::fs::create_dir_all("target/bench-results").ok();
+    let mut obj = schaladb::util::json::Json::obj()
+        .set("wq_rows", rows as f64)
+        .set("partitions", workers as f64)
+        .set("claim_threads", threads as f64)
+        .set("claims_per_thread", per_thread as f64)
+        .set("claims_per_sec_instrumented", best_on)
+        .set("claims_per_sec_quiesced", best_off)
+        .set("overhead_frac", overhead_frac);
+    let out = vec![
+        Bench { name: "claim (obs instrumented)", hist: hist_on },
+        Bench { name: "claim (obs quiesced)", hist: hist_off },
+    ];
+    for b in &out {
+        obj = obj.set(
+            b.name,
+            schaladb::util::json::Json::obj()
+                .set("mean_secs", b.hist.mean())
+                .set("p50_secs", b.hist.quantile(0.5))
+                .set("p99_secs", b.hist.quantile(0.99)),
+        );
+    }
+    std::fs::write("target/bench-results/BENCH_obs.json", obj.to_string()).unwrap();
+    println!("json: target/bench-results/BENCH_obs.json");
+    out
+}
+
 fn main() {
     // STORAGE_MICRO_QUICK=1: CI smoke mode — same benches, ~5% of the
     // iterations, so the workflow exercises every path in seconds.
@@ -255,6 +365,21 @@ fn main() {
     if std::env::var("STORAGE_MICRO_SECTION").as_deref() == Ok("server") {
         let server_benches = bench_server(quick, workers, rows);
         let rows_out: Vec<Vec<String>> = server_benches.iter().map(|b| b.row()).collect();
+        println!(
+            "{}",
+            schaladb::util::render_table(
+                &["operation", "iters", "mean", "p50", "p99"],
+                &rows_out
+            )
+        );
+        return;
+    }
+
+    // STORAGE_MICRO_SECTION=obs: only the observability overhead section —
+    // the CI obs-smoke job's quick gate behind BENCH_obs.json.
+    if std::env::var("STORAGE_MICRO_SECTION").as_deref() == Ok("obs") {
+        let obs_benches = bench_obs(quick, workers, rows);
+        let rows_out: Vec<Vec<String>> = obs_benches.iter().map(|b| b.row()).collect();
         println!(
             "{}",
             schaladb::util::render_table(
@@ -1019,6 +1144,9 @@ fn main() {
 
     // network front-end: remote vs in-process claim throughput
     benches.extend(bench_server(quick, workers, rows));
+
+    // observability: instrumented vs quiesced claim throughput
+    benches.extend(bench_obs(quick, workers, rows));
 
     let rows_out: Vec<Vec<String>> = benches.iter().map(|b| b.row()).collect();
     println!(

@@ -21,6 +21,11 @@
 //!   wire protocol, a transport-agnostic session layer, a bounded
 //!   thread-per-connection TCP server (`dchiron serve`), and a blocking
 //!   client for remote workers and steering analysts.
+//! - [`obs`]: always-on observability — a sharded lock-free metrics
+//!   registry instrumented at every hot layer, per-request span tracing
+//!   with a bounded slow-op ring, a Prometheus-style text exposition, and
+//!   the system `monitoring` table that makes telemetry queryable through
+//!   the normal SQL path (the paper's "monitoring is just workflow data").
 //! - [`sim`]: a calibrated discrete-event simulator of the paper's
 //!   960-core Grid5000 testbed, used by the `exp*` benches.
 //! - [`runtime`]: PJRT loader/executor for the AOT-compiled JAX/Pallas
@@ -33,6 +38,7 @@
 pub mod baseline;
 pub mod coordinator;
 pub mod metrics;
+pub mod obs;
 pub mod query;
 pub mod runtime;
 pub mod server;

@@ -27,6 +27,15 @@
 //!                  [--tasks T]
 //!     remote multi-client workload: N claim workers + M steering
 //!     scanners against a running server, printing throughput
+//! dchiron query    [--addr HOST:PORT] [--sql "SELECT ..."]
+//!     run one steering SQL statement over the wire and print the rows
+//!     (default: the global rows of the system `monitoring` table)
+//! dchiron metrics  [--addr HOST:PORT] [--top K]
+//!     dump a running server's telemetry registry in Prometheus text
+//!     format, plus the K slowest traced ops with stage breakdowns
+//! dchiron top      [--addr HOST:PORT] [--interval SECS] [--iterations N]
+//!     live terminal view: per-interval claim/scan/WAL/frame rates and
+//!     the current slowest ops (N = 0 runs until interrupted)
 //! ```
 
 use schaladb::coordinator::payload::RunnerRegistry;
@@ -82,10 +91,14 @@ fn main() -> anyhow::Result<()> {
         "stats" => cmd_stats(&flags),
         "shutdown" => cmd_shutdown(&flags),
         "drive" => cmd_drive(&flags),
+        "query" => cmd_query(&flags),
+        "metrics" => cmd_metrics(&flags),
+        "top" => cmd_top(&flags),
         _ => {
             println!("dchiron — SchalaDB / d-Chiron reproduction");
             println!(
-                "commands: run | risers | bench-sim | sql | serve | stats | shutdown | drive (see README.md)"
+                "commands: run | risers | bench-sim | sql | serve | stats | shutdown | \
+                 drive | query | metrics | top (see README.md)"
             );
             Ok(())
         }
@@ -251,6 +264,14 @@ fn cmd_stats(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         vec!["plan_cache.entries".into(), s.cached_plans.to_string()],
         vec!["cluster.epoch".into(), s.epoch.to_string()],
         vec!["server.sessions".into(), s.sessions.to_string()],
+        vec!["obs.dml_interp".into(), s.dml_interp.to_string()],
+        vec!["obs.wal_records".into(), s.wal_records.to_string()],
+        vec!["obs.wal_flushes".into(), s.wal_flushes.to_string()],
+        vec!["obs.frames_in".into(), s.frames_in.to_string()],
+        vec!["obs.frames_out".into(), s.frames_out.to_string()],
+        vec!["obs.bytes_in".into(), s.bytes_in.to_string()],
+        vec!["obs.bytes_out".into(), s.bytes_out.to_string()],
+        vec!["obs.frame_errors".into(), s.frame_errors.to_string()],
     ];
     println!("{}", schaladb::util::render_table(&header, &rows));
     if let Some(fp) = &s.fingerprint {
@@ -392,5 +413,134 @@ fn cmd_drive(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         println!("table {t}: {n} rows");
     }
     admin.close()?;
+    Ok(())
+}
+
+/// Run one steering SQL statement over the wire and print the rows. The
+/// default statement reads the global rows of the system `monitoring`
+/// table — telemetry through the same SQL path as workflow data.
+fn cmd_query(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let addr = flag_addr(flags)?;
+    let sql = flags.get("sql").cloned().unwrap_or_else(|| {
+        "SELECT metric, value, cnt FROM monitoring WHERE part = -1 AND node = -1".into()
+    });
+    let mut client = Client::connect(addr, 0, AccessKind::Steering)?;
+    let rs = client.query(&sql)?;
+    let header: Vec<&str> = rs.columns.iter().map(String::as_str).collect();
+    let rows: Vec<Vec<String>> = rs
+        .rows
+        .iter()
+        .map(|r| r.values.iter().map(|v| v.to_string()).collect())
+        .collect();
+    println!("{}", schaladb::util::render_table(&header, &rows));
+    println!("{} rows", rows.len());
+    client.close()?;
+    Ok(())
+}
+
+/// Render a slow-op list as table rows (shared by `metrics` and `top`).
+fn slow_op_rows(ops: &[schaladb::server::SlowOpWire]) -> Vec<Vec<String>> {
+    ops.iter()
+        .map(|op| {
+            let stages = op
+                .stages
+                .iter()
+                .filter(|(_, n)| *n > 0)
+                .map(|(s, n)| format!("{s}={:.2}ms", *n as f64 / 1e6))
+                .collect::<Vec<_>>()
+                .join(" ");
+            vec![
+                op.span.to_string(),
+                op.label.clone(),
+                format!("{:.2}", op.total_nanos as f64 / 1e6),
+                stages,
+            ]
+        })
+        .collect()
+}
+
+fn cmd_metrics(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let addr = flag_addr(flags)?;
+    let top_k: u16 = get(flags, "top", 10);
+    let mut client = Client::connect(addr, 0, AccessKind::Steering)?;
+    let m = client.metrics(top_k)?;
+    print!("{}", m.text);
+    if !m.slow_ops.is_empty() {
+        println!();
+        println!(
+            "{}",
+            schaladb::util::render_table(
+                &["span", "op", "total_ms", "stages"],
+                &slow_op_rows(&m.slow_ops),
+            )
+        );
+    }
+    client.close()?;
+    Ok(())
+}
+
+/// Live terminal view of a running server: per-interval rates computed
+/// from successive `Stats` snapshots, plus the current slowest ops.
+fn cmd_top(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use std::io::IsTerminal;
+
+    let addr = flag_addr(flags)?;
+    let interval: f64 = get::<f64>(flags, "interval", 1.0).max(0.05);
+    let iterations: usize = get(flags, "iterations", 0);
+    let clear = std::io::stdout().is_terminal();
+    let mut client = Client::connect(addr, 0, AccessKind::Steering)?;
+    let mut prev: Option<schaladb::server::RemoteStats> = None;
+    let mut tick = 0usize;
+    loop {
+        let s = client.stats(false, false)?;
+        let m = client.metrics(5)?;
+        // first tick has no baseline: rates start at zero, totals are live
+        let p = prev.unwrap_or_else(|| s.clone());
+        let rate = |cur: u64, old: u64| cur.saturating_sub(old) as f64 / interval;
+        let row = |name: &str, cur: u64, old: u64| {
+            vec![name.to_string(), cur.to_string(), format!("{:.0}", rate(cur, old))]
+        };
+        let rows = vec![
+            row("claims.fast", s.fast_dml, p.fast_dml),
+            row("claims.interpreted", s.dml_interp, p.dml_interp),
+            row("selects.scatter", s.scatter, p.scatter),
+            row("selects.snapshot_join", s.snapshot_join, p.snapshot_join),
+            row("selects.centralized", s.centralized, p.centralized),
+            row("chunks.scanned", s.chunks_scanned, p.chunks_scanned),
+            row("chunks.pruned", s.chunks_pruned, p.chunks_pruned),
+            row("wal.records", s.wal_records, p.wal_records),
+            row("wal.flushes", s.wal_flushes, p.wal_flushes),
+            row("server.frames_in", s.frames_in, p.frames_in),
+            row("server.frames_out", s.frames_out, p.frames_out),
+            row("server.bytes_in", s.bytes_in, p.bytes_in),
+            row("server.bytes_out", s.bytes_out, p.bytes_out),
+            row("server.frame_errors", s.frame_errors, p.frame_errors),
+        ];
+        if clear {
+            print!("\x1b[2J\x1b[H");
+        }
+        println!(
+            "dchiron top — {addr} | epoch {} | {} sessions | every {interval}s",
+            s.epoch, s.sessions
+        );
+        println!("{}", schaladb::util::render_table(&["metric", "total", "per-sec"], &rows));
+        if !m.slow_ops.is_empty() {
+            println!("slowest ops:");
+            println!(
+                "{}",
+                schaladb::util::render_table(
+                    &["span", "op", "total_ms", "stages"],
+                    &slow_op_rows(&m.slow_ops),
+                )
+            );
+        }
+        prev = Some(s);
+        tick += 1;
+        if iterations > 0 && tick >= iterations {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval));
+    }
+    client.close()?;
     Ok(())
 }

@@ -76,7 +76,10 @@ pub struct Histogram {
 }
 
 impl Histogram {
-    const BUCKETS: usize = 28;
+    /// Bucket count shared with [`crate::obs::AtomicHistogram`], which must
+    /// place samples identically so `snapshot()` round-trips through
+    /// [`Histogram::from_parts`].
+    pub const BUCKETS: usize = 28;
 
     pub fn new() -> Histogram {
         Histogram {
@@ -88,7 +91,22 @@ impl Histogram {
         }
     }
 
-    fn bucket_of(secs: f64) -> usize {
+    /// Rebuild a histogram from raw parts (bucket counts plus the running
+    /// sum/min/max), e.g. from an atomic registry snapshot. `min`/`max` are
+    /// ignored when the buckets are empty.
+    pub fn from_parts(buckets: Vec<u64>, sum: f64, min: f64, max: f64) -> Histogram {
+        assert_eq!(buckets.len(), Self::BUCKETS, "bucket layout mismatch");
+        let count: u64 = buckets.iter().sum();
+        Histogram {
+            buckets,
+            count,
+            sum,
+            min: if count == 0 { f64::INFINITY } else { min },
+            max: if count == 0 { 0.0 } else { max },
+        }
+    }
+
+    pub(crate) fn bucket_of(secs: f64) -> usize {
         // bucket 0: < 1us; each bucket doubles
         let us = secs * 1e6;
         if us < 1.0 {
@@ -117,7 +135,35 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile from bucket boundaries (upper bound of bucket).
+    /// Smallest recorded sample, or 0 for an empty histogram.
+    pub fn min(&self) -> f64 {
+        if self.min.is_finite() {
+            self.min
+        } else {
+            0.0
+        }
+    }
+
+    /// Largest recorded sample, or 0 for an empty histogram.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Fold `other` into `self`; the result is indistinguishable from having
+    /// recorded both sample streams into a single histogram.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, ob) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += ob;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of bucket),
+    /// clamped into the observed `[min, max]` range so bucket 0 reports the
+    /// true smallest sample rather than a fixed 1 µs edge.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -128,7 +174,8 @@ impl Histogram {
             seen += b;
             if seen >= target {
                 // upper edge of bucket i in seconds
-                return if i == 0 { 1e-6 } else { (1u64 << (i - 1)) as f64 * 1e-6 * 2.0 };
+                let edge = if i == 0 { 1e-6 } else { (1u64 << (i - 1)) as f64 * 1e-6 * 2.0 };
+                return edge.clamp(self.min, self.max.max(self.min));
             }
         }
         self.max
@@ -141,7 +188,7 @@ impl Histogram {
             fmt_secs(self.mean()),
             fmt_secs(self.quantile(0.5)),
             fmt_secs(self.quantile(0.99)),
-            fmt_secs(if self.min.is_finite() { self.min } else { 0.0 }),
+            fmt_secs(self.min()),
             fmt_secs(self.max)
         )
     }
@@ -208,5 +255,78 @@ mod tests {
         h.record(120.0);
         assert_eq!(h.count(), 2);
         assert!(h.quantile(0.0) <= h.quantile(1.0));
+        // quantiles never escape the observed range
+        assert!(h.quantile(1.0) <= h.max());
+        assert!(h.quantile(0.0) >= h.min());
+    }
+
+    #[test]
+    fn histogram_bucket0_quantile_reports_true_min() {
+        let mut h = Histogram::new();
+        h.record(2e-7); // sub-microsecond: lands in bucket 0
+        h.record(4e-7);
+        assert!((h.quantile(0.5) - 4e-7).abs() < 1e-12, "p50 {}", h.quantile(0.5));
+        assert!(h.quantile(0.0) >= h.min());
+        assert!(h.summary().contains("n=2"));
+    }
+
+    #[test]
+    fn empty_histogram_is_sane() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert!(!h.summary().contains("inf"));
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let xs: Vec<f64> = (1..=500).map(|i| i as f64 * 7.3e-6).collect();
+        let ys: Vec<f64> = (1..=300).map(|i| i as f64 * 1.1e-4).collect();
+        let (mut a, mut b, mut both) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for &x in &xs {
+            a.record(x);
+            both.record(x);
+        }
+        for &y in &ys {
+            b.record(y);
+            both.record(y);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert!((a.mean() - both.mean()).abs() < 1e-12);
+        assert_eq!(a.min(), both.min());
+        assert_eq!(a.max(), both.max());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), both.quantile(q), "quantile {q} diverged");
+        }
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut a = Histogram::new();
+        a.record(3e-4);
+        let before = a.summary();
+        a.merge(&Histogram::new());
+        assert_eq!(a.summary(), before);
+        let mut e = Histogram::new();
+        e.merge(&a);
+        assert_eq!(e.summary(), before);
+    }
+
+    #[test]
+    fn from_parts_roundtrip() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 5e-6);
+        }
+        let rebuilt = Histogram::from_parts(h.buckets.clone(), h.sum, h.min, h.max);
+        assert_eq!(rebuilt.count(), h.count());
+        assert_eq!(rebuilt.quantile(0.5), h.quantile(0.5));
+        assert_eq!(rebuilt.min(), h.min());
+        let empty = Histogram::from_parts(vec![0; Histogram::BUCKETS], 0.0, 123.0, 456.0);
+        assert_eq!(empty.min(), 0.0);
+        assert_eq!(empty.max(), 0.0);
     }
 }

@@ -1,0 +1,702 @@
+//! Always-on cluster observability: a sharded lock-free metrics registry,
+//! atomic latency histograms, and per-request span tracing with a bounded
+//! slow-op ring.
+//!
+//! The paper's monitoring chapter stores execution telemetry as regular
+//! workflow tables so steering analysts query it through the same OLAP path;
+//! this module is the in-process half of that design. Hot paths record into
+//! relaxed atomics (claim fast path, 2PL latch waits, scatter scans, WAL
+//! group commits, availability sweeps, server frames); the registry is then
+//! materialized on demand into the system `monitoring` table by
+//! [`crate::storage::DbCluster::refresh_monitoring`] and dumped as
+//! Prometheus-style text by [`ObsRegistry::exposition`].
+//!
+//! Sharding rule: per-partition counters keep [`PART_SHARDS`] shard cells
+//! plus a running total, both bumped on every increment (`shard = pidx %
+//! PART_SHARDS`), so `total == sum(shards)` whenever writers are quiesced
+//! and no cross-shard aggregation is ever needed on the hot path.
+//! Per-node cells are exact (one per data node). The whole registry can be
+//! quiesced via [`ObsRegistry::set_enabled`]; while disabled the timing
+//! helpers return `None` so no `Instant::now()` syscalls are issued at all —
+//! that is the "quiesced" arm of the CI overhead gate (`BENCH_obs.json`).
+
+pub mod span;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::metrics::Histogram;
+use crate::storage::value::Value;
+
+/// Number of shard cells for per-partition counters. Partitions alias into
+/// shards by `pidx % PART_SHARDS`; real deployments in this repo use far
+/// fewer partitions than shards, so the mapping is 1:1 in practice.
+pub const PART_SHARDS: usize = 64;
+
+/// Capacity of the slow-op ring (top-K slowest spans retained).
+pub const SLOW_RING_K: usize = 16;
+
+/// Stage slots tracked per span (see [`Stage`]).
+pub const N_STAGES: usize = 4;
+
+/// Per-span stage breakdown slots. `Exec` absorbs the residual time not
+/// attributed to any measured stage when the span closes.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Stage {
+    Latch = 0,
+    Exec = 1,
+    Wal = 2,
+    Scan = 3,
+}
+
+impl Stage {
+    pub const ALL: [Stage; N_STAGES] = [Stage::Latch, Stage::Exec, Stage::Wal, Stage::Scan];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Latch => "latch",
+            Stage::Exec => "exec",
+            Stage::Wal => "wal",
+            Stage::Scan => "scan",
+        }
+    }
+}
+
+/// Global (cluster-wide) monotonic counters.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Counter {
+    /// Prepared DML executions that ran on the compiled fast path
+    /// (mirrors `RouteCounters::fast_dml`, including fast point SELECTs).
+    DmlFast = 0,
+    /// Prepared non-SELECT statements that fell back to the interpreted
+    /// 2PL executor (only counted via `exec_prepared`/`exec_prepared_batch`,
+    /// so `DmlFast + DmlInterp` reconciles with prepared DML traffic).
+    DmlInterp = 1,
+    /// SELECTs answered by the scatter-gather engine.
+    SelectScatter = 2,
+    /// SELECTs answered by the coordinator-side snapshot join.
+    SelectSnapshotJoin = 3,
+    /// SELECTs that fell back to the centralized 2PL executor.
+    SelectCentralized = 4,
+    /// Row operations appended to any node WAL.
+    WalRecords = 5,
+    /// Group-commit flush boundaries hit across all node WALs.
+    WalFlushes = 6,
+    /// Commits covered by those flushes (mean group size = commits/flushes).
+    WalFlushedCommits = 7,
+    /// Wire frames read from clients.
+    FramesIn = 8,
+    /// Wire frames written to clients.
+    FramesOut = 9,
+    /// Payload+header bytes read from clients.
+    BytesIn = 10,
+    /// Payload+header bytes written to clients.
+    BytesOut = 11,
+    /// Malformed/failed frame reads and undecodable requests.
+    FrameErrors = 12,
+    /// Availability sweeps completed.
+    SweepRuns = 13,
+    /// Node rejoins completed by the availability sweeper.
+    Rejoins = 14,
+    /// Times the `monitoring` table was re-materialized.
+    MonitoringRefreshes = 15,
+}
+
+const N_COUNTERS: usize = 16;
+
+impl Counter {
+    pub const ALL: [Counter; N_COUNTERS] = [
+        Counter::DmlFast,
+        Counter::DmlInterp,
+        Counter::SelectScatter,
+        Counter::SelectSnapshotJoin,
+        Counter::SelectCentralized,
+        Counter::WalRecords,
+        Counter::WalFlushes,
+        Counter::WalFlushedCommits,
+        Counter::FramesIn,
+        Counter::FramesOut,
+        Counter::BytesIn,
+        Counter::BytesOut,
+        Counter::FrameErrors,
+        Counter::SweepRuns,
+        Counter::Rejoins,
+        Counter::MonitoringRefreshes,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Counter::DmlFast => "dml_fast",
+            Counter::DmlInterp => "dml_interp",
+            Counter::SelectScatter => "select_scatter",
+            Counter::SelectSnapshotJoin => "select_snapshot_join",
+            Counter::SelectCentralized => "select_centralized",
+            Counter::WalRecords => "wal_records",
+            Counter::WalFlushes => "wal_flushes",
+            Counter::WalFlushedCommits => "wal_flushed_commits",
+            Counter::FramesIn => "server_frames_in",
+            Counter::FramesOut => "server_frames_out",
+            Counter::BytesIn => "server_bytes_in",
+            Counter::BytesOut => "server_bytes_out",
+            Counter::FrameErrors => "server_frame_errors",
+            Counter::SweepRuns => "sweep_runs",
+            Counter::Rejoins => "rejoins",
+            Counter::MonitoringRefreshes => "monitoring_refreshes",
+        }
+    }
+}
+
+/// Latency histograms kept by the registry, one [`AtomicHistogram`] each.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Hist {
+    /// Compiled-fast-path prepared DML latency (claim loop hot path).
+    ClaimFast = 0,
+    /// Interpreted-fallback prepared DML latency.
+    ClaimInterp = 1,
+    /// 2PL latch acquisition wait (growing phase, fast + interpreted paths).
+    LatchWait = 2,
+    /// Scatter-gather / snapshot-join scan latency.
+    ScatterScan = 3,
+    /// WAL commit-call latency when a group-commit flush boundary was hit.
+    WalFlush = 4,
+    /// Availability sweep duration.
+    Sweep = 5,
+    /// Per-node rejoin duration (catch-up rounds + final cut).
+    Rejoin = 6,
+}
+
+const N_HISTS: usize = 7;
+
+impl Hist {
+    pub const ALL: [Hist; N_HISTS] = [
+        Hist::ClaimFast,
+        Hist::ClaimInterp,
+        Hist::LatchWait,
+        Hist::ScatterScan,
+        Hist::WalFlush,
+        Hist::Sweep,
+        Hist::Rejoin,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Hist::ClaimFast => "claim_fast",
+            Hist::ClaimInterp => "claim_interp",
+            Hist::LatchWait => "latch_wait",
+            Hist::ScatterScan => "scatter_scan",
+            Hist::WalFlush => "wal_flush",
+            Hist::Sweep => "sweep",
+            Hist::Rejoin => "rejoin",
+        }
+    }
+}
+
+/// Per-partition counters (sharded; see module docs for the sharding rule).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PartMetric {
+    /// DML claims executed against the partition (compiled fast path).
+    Claims = 0,
+    /// Scatter/snapshot scans that touched the partition.
+    Scans = 1,
+    /// WAL row operations appended for the partition.
+    WalRecords = 2,
+}
+
+const N_PART_METRICS: usize = 3;
+
+impl PartMetric {
+    pub const ALL: [PartMetric; N_PART_METRICS] =
+        [PartMetric::Claims, PartMetric::Scans, PartMetric::WalRecords];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PartMetric::Claims => "part_claims",
+            PartMetric::Scans => "part_scans",
+            PartMetric::WalRecords => "part_wal_records",
+        }
+    }
+}
+
+/// Lock-free fixed-bucket latency histogram. Bucket layout is identical to
+/// [`Histogram`] (log2 µs buckets, bucket 0 = sub-µs), so [`snapshot`]
+/// round-trips losslessly through [`Histogram::from_parts`] and snapshots
+/// from different shards/nodes merge with [`Histogram::merge`].
+///
+/// [`snapshot`]: AtomicHistogram::snapshot
+pub struct AtomicHistogram {
+    buckets: Vec<AtomicU64>,
+    sum_nanos: AtomicU64,
+    min_nanos: AtomicU64,
+    max_nanos: AtomicU64,
+}
+
+impl AtomicHistogram {
+    pub fn new() -> AtomicHistogram {
+        AtomicHistogram {
+            buckets: (0..Histogram::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_nanos: AtomicU64::new(0),
+            min_nanos: AtomicU64::new(u64::MAX),
+            max_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Integer twin of `Histogram::bucket_of`: for whole-µs values the two
+    /// agree exactly because `floor(log2(floor(x))) == floor(log2(x))` for
+    /// `x >= 1` (a power of two can never sit strictly between `floor(x)`
+    /// and `x`).
+    fn bucket_of_nanos(nanos: u64) -> usize {
+        let us = nanos / 1_000;
+        if us == 0 {
+            return 0;
+        }
+        ((63 - us.leading_zeros()) as usize + 1).min(Histogram::BUCKETS - 1)
+    }
+
+    pub fn record_nanos(&self, nanos: u64) {
+        self.buckets[Self::bucket_of_nanos(nanos)].fetch_add(1, Relaxed);
+        self.sum_nanos.fetch_add(nanos, Relaxed);
+        self.min_nanos.fetch_min(nanos, Relaxed);
+        self.max_nanos.fetch_max(nanos, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Relaxed)).sum()
+    }
+
+    /// Materialize a point-in-time [`Histogram`] (exact when writers are
+    /// quiesced, approximate under concurrent recording).
+    pub fn snapshot(&self) -> Histogram {
+        let buckets: Vec<u64> = self.buckets.iter().map(|b| b.load(Relaxed)).collect();
+        let sum = self.sum_nanos.load(Relaxed) as f64 * 1e-9;
+        let min_n = self.min_nanos.load(Relaxed);
+        let min = if min_n == u64::MAX { f64::INFINITY } else { min_n as f64 * 1e-9 };
+        let max = self.max_nanos.load(Relaxed) as f64 * 1e-9;
+        Histogram::from_parts(buckets, sum, min, max)
+    }
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A per-partition counter: shard cells plus a running total, both bumped on
+/// every increment so the total needs no cross-shard fold on read.
+struct Sharded {
+    shards: Vec<AtomicU64>,
+    total: AtomicU64,
+}
+
+impl Sharded {
+    fn new() -> Sharded {
+        Sharded {
+            shards: (0..PART_SHARDS).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+        }
+    }
+
+    fn add(&self, pidx: usize, n: u64) {
+        self.shards[pidx % PART_SHARDS].fetch_add(n, Relaxed);
+        self.total.fetch_add(n, Relaxed);
+    }
+}
+
+/// One completed span retained by the slow-op ring.
+#[derive(Clone, Debug)]
+pub struct SlowOp {
+    pub span: u64,
+    pub label: &'static str,
+    pub total_nanos: u64,
+    /// Nanoseconds per [`Stage`], indexed by `Stage as usize`.
+    pub stages: [u64; N_STAGES],
+}
+
+/// Bounded top-K slowest-spans buffer. An atomic floor lets the hot path
+/// skip the mutex for ops that cannot possibly rank.
+struct SlowRing {
+    floor_nanos: AtomicU64,
+    ops: Mutex<Vec<SlowOp>>,
+}
+
+impl SlowRing {
+    fn new() -> SlowRing {
+        SlowRing { floor_nanos: AtomicU64::new(0), ops: Mutex::new(Vec::new()) }
+    }
+
+    fn note(&self, op: SlowOp) {
+        if op.total_nanos <= self.floor_nanos.load(Relaxed) {
+            return;
+        }
+        let mut ops = self.ops.lock().unwrap();
+        ops.push(op);
+        ops.sort_by(|a, b| b.total_nanos.cmp(&a.total_nanos));
+        ops.truncate(SLOW_RING_K);
+        if ops.len() == SLOW_RING_K {
+            self.floor_nanos.store(ops[SLOW_RING_K - 1].total_nanos, Relaxed);
+        }
+    }
+
+    fn top(&self, k: usize) -> Vec<SlowOp> {
+        let ops = self.ops.lock().unwrap();
+        ops.iter().take(k).cloned().collect()
+    }
+}
+
+/// The cluster-wide metrics registry. One instance lives on `DbCluster`
+/// (shared with every `DataNode` and the wire server) for the lifetime of
+/// the cluster; all mutation is relaxed-atomic.
+pub struct ObsRegistry {
+    enabled: AtomicBool,
+    counters: Vec<AtomicU64>,
+    hists: Vec<AtomicHistogram>,
+    parts: Vec<Sharded>,
+    node_wal_records: Vec<AtomicU64>,
+    node_wal_flushes: Vec<AtomicU64>,
+    slow: SlowRing,
+    next_span: AtomicU64,
+}
+
+impl ObsRegistry {
+    pub fn new(num_nodes: usize) -> ObsRegistry {
+        ObsRegistry {
+            enabled: AtomicBool::new(true),
+            counters: (0..N_COUNTERS).map(|_| AtomicU64::new(0)).collect(),
+            hists: (0..N_HISTS).map(|_| AtomicHistogram::new()).collect(),
+            parts: (0..N_PART_METRICS).map(|_| Sharded::new()).collect(),
+            node_wal_records: (0..num_nodes).map(|_| AtomicU64::new(0)).collect(),
+            node_wal_flushes: (0..num_nodes).map(|_| AtomicU64::new(0)).collect(),
+            slow: SlowRing::new(),
+            next_span: AtomicU64::new(1),
+        }
+    }
+
+    /// Quiesce (`false`) or re-enable (`true`) all instrumentation. While
+    /// quiesced, counters stop moving and the timing helpers skip their
+    /// `Instant::now()` calls entirely.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Relaxed);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Relaxed)
+    }
+
+    pub fn inc(&self, c: Counter) {
+        self.addc(c, 1);
+    }
+
+    pub fn addc(&self, c: Counter, n: u64) {
+        if self.is_enabled() {
+            self.counters[c as usize].fetch_add(n, Relaxed);
+        }
+    }
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize].load(Relaxed)
+    }
+
+    pub fn part_add(&self, m: PartMetric, pidx: usize, n: u64) {
+        if self.is_enabled() {
+            self.parts[m as usize].add(pidx, n);
+        }
+    }
+
+    pub fn part_add_list(&self, m: PartMetric, parts: &[usize]) {
+        if self.is_enabled() {
+            for &p in parts {
+                self.parts[m as usize].add(p, 1);
+            }
+        }
+    }
+
+    pub fn part_total(&self, m: PartMetric) -> u64 {
+        self.parts[m as usize].total.load(Relaxed)
+    }
+
+    pub fn part_shard(&self, m: PartMetric, shard: usize) -> u64 {
+        self.parts[m as usize].shards[shard % PART_SHARDS].load(Relaxed)
+    }
+
+    pub fn node_wal(&self, node: usize, records: u64, flushed: bool) {
+        if !self.is_enabled() {
+            return;
+        }
+        if let Some(c) = self.node_wal_records.get(node) {
+            c.fetch_add(records, Relaxed);
+        }
+        if flushed {
+            if let Some(c) = self.node_wal_flushes.get(node) {
+                c.fetch_add(1, Relaxed);
+            }
+        }
+    }
+
+    pub fn node_wal_records(&self, node: usize) -> u64 {
+        self.node_wal_records.get(node).map_or(0, |c| c.load(Relaxed))
+    }
+
+    pub fn node_wal_flushes(&self, node: usize) -> u64 {
+        self.node_wal_flushes.get(node).map_or(0, |c| c.load(Relaxed))
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.node_wal_records.len()
+    }
+
+    /// Start a latency measurement; `None` while quiesced (no clock read).
+    pub fn start(&self) -> Option<Instant> {
+        if self.is_enabled() {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Record the time elapsed since [`start`](ObsRegistry::start) into
+    /// histogram `h`; returns the elapsed nanos for span-stage attribution.
+    pub fn rec_since(&self, h: Hist, t0: Option<Instant>) -> Option<u64> {
+        let t0 = t0?;
+        let nanos = t0.elapsed().as_nanos() as u64;
+        self.rec_nanos(h, nanos);
+        Some(nanos)
+    }
+
+    pub fn rec_nanos(&self, h: Hist, nanos: u64) {
+        if self.is_enabled() {
+            self.hists[h as usize].record_nanos(nanos);
+        }
+    }
+
+    pub fn hist(&self, h: Hist) -> Histogram {
+        self.hists[h as usize].snapshot()
+    }
+
+    pub fn mint_span(&self) -> u64 {
+        self.next_span.fetch_add(1, Relaxed)
+    }
+
+    pub(crate) fn note_slow(&self, op: SlowOp) {
+        self.slow.note(op);
+    }
+
+    /// Top-`k` slowest completed spans, slowest first.
+    pub fn slow_ops(&self, k: usize) -> Vec<SlowOp> {
+        self.slow.top(k.min(SLOW_RING_K))
+    }
+
+    /// Prometheus-style text exposition of every counter, per-partition and
+    /// per-node cell, and histogram summary.
+    pub fn exposition(&self) -> String {
+        let mut s = String::new();
+        for c in Counter::ALL {
+            let name = format!("schaladb_{}_total", c.label());
+            s.push_str(&format!("# TYPE {name} counter\n"));
+            s.push_str(&format!("{name} {}\n", self.counter(c)));
+        }
+        for m in PartMetric::ALL {
+            let name = format!("schaladb_{}_total", m.label());
+            s.push_str(&format!("# TYPE {name} counter\n"));
+            s.push_str(&format!("{name} {}\n", self.part_total(m)));
+            for shard in 0..PART_SHARDS {
+                let v = self.part_shard(m, shard);
+                if v != 0 {
+                    s.push_str(&format!("{name}{{part=\"{shard}\"}} {v}\n"));
+                }
+            }
+        }
+        for node in 0..self.num_nodes() {
+            s.push_str(&format!(
+                "schaladb_node_wal_records_total{{node=\"{node}\"}} {}\n",
+                self.node_wal_records(node)
+            ));
+            s.push_str(&format!(
+                "schaladb_node_wal_flushes_total{{node=\"{node}\"}} {}\n",
+                self.node_wal_flushes(node)
+            ));
+        }
+        for h in Hist::ALL {
+            let snap = self.hist(h);
+            let name = format!("schaladb_{}_seconds", h.label());
+            s.push_str(&format!("# TYPE {name} summary\n"));
+            s.push_str(&format!("{name}{{quantile=\"0.5\"}} {:.9}\n", snap.quantile(0.5)));
+            s.push_str(&format!("{name}{{quantile=\"0.99\"}} {:.9}\n", snap.quantile(0.99)));
+            s.push_str(&format!("{name}_sum {:.9}\n", snap.mean() * snap.count() as f64));
+            s.push_str(&format!("{name}_count {}\n", snap.count()));
+        }
+        s
+    }
+
+    /// Rows for the system `monitoring` table, in column order
+    /// `(mid, metric, part, node, epoch, value, count)`. Global rows carry
+    /// `part = -1, node = -1`; per-partition rows carry the shard index in
+    /// `part`; per-node rows carry the node id in `node`. Exact when
+    /// writers are quiesced; internally consistent (each sharded metric's
+    /// global row equals the sum of its part rows) under the same condition.
+    pub fn monitoring_rows(&self, epoch: u64) -> Vec<Vec<Value>> {
+        let mut rows: Vec<Vec<Value>> = Vec::new();
+        let mut mid: i64 = 0;
+        let mut push = |metric: String, part: i64, node: i64, value: f64, count: u64| {
+            rows.push(vec![
+                Value::Int(mid),
+                Value::str(&metric),
+                Value::Int(part),
+                Value::Int(node),
+                Value::Int(epoch as i64),
+                Value::Float(value),
+                Value::Int(count as i64),
+            ]);
+            mid += 1;
+        };
+        for c in Counter::ALL {
+            let v = self.counter(c);
+            push(c.label().to_string(), -1, -1, v as f64, v);
+        }
+        for m in PartMetric::ALL {
+            let total = self.part_total(m);
+            push(m.label().to_string(), -1, -1, total as f64, total);
+            for shard in 0..PART_SHARDS {
+                let v = self.part_shard(m, shard);
+                if v != 0 {
+                    push(m.label().to_string(), shard as i64, -1, v as f64, v);
+                }
+            }
+        }
+        for node in 0..self.num_nodes() {
+            let r = self.node_wal_records(node);
+            push("node_wal_records".to_string(), -1, node as i64, r as f64, r);
+            let f = self.node_wal_flushes(node);
+            push("node_wal_flushes".to_string(), -1, node as i64, f as f64, f);
+        }
+        for h in Hist::ALL {
+            let snap = self.hist(h);
+            let n = snap.count();
+            push(format!("{}_p50_seconds", h.label()), -1, -1, snap.quantile(0.5), n);
+            push(format!("{}_p99_seconds", h.label()), -1, -1, snap.quantile(0.99), n);
+            push(format!("{}_mean_seconds", h.label()), -1, -1, snap.mean(), n);
+            push(format!("{}_max_seconds", h.label()), -1, -1, snap.max(), n);
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_histogram_matches_scalar_bucketing() {
+        let ah = AtomicHistogram::new();
+        let mut h = Histogram::new();
+        // spread across sub-µs, µs, ms, and multi-second buckets
+        for nanos in [1u64, 500, 999, 1_000, 1_500, 2_000, 65_000, 3_000_000, 2_500_000_000] {
+            ah.record_nanos(nanos);
+            h.record(nanos as f64 * 1e-9);
+        }
+        let snap = ah.snapshot();
+        assert_eq!(snap.count(), h.count());
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let (a, b) = (snap.quantile(q), h.quantile(q));
+            assert!((a - b).abs() < 1e-9, "q{q}: atomic {a} vs scalar {b}");
+        }
+        assert!((snap.mean() - h.mean()).abs() < 1e-12);
+        assert!((snap.min() - h.min()).abs() < 1e-12);
+        assert!((snap.max() - h.max()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sharded_total_equals_sum_of_shards() {
+        let reg = ObsRegistry::new(2);
+        for p in 0..10 {
+            reg.part_add(PartMetric::Claims, p, (p + 1) as u64);
+        }
+        reg.part_add_list(PartMetric::Claims, &[0, 1, 0]);
+        let sum: u64 = (0..PART_SHARDS).map(|s| reg.part_shard(PartMetric::Claims, s)).sum();
+        assert_eq!(reg.part_total(PartMetric::Claims), sum);
+        assert_eq!(sum, 55 + 3);
+    }
+
+    #[test]
+    fn quiesced_registry_records_nothing() {
+        let reg = ObsRegistry::new(1);
+        reg.set_enabled(false);
+        assert!(reg.start().is_none());
+        reg.inc(Counter::DmlFast);
+        reg.part_add(PartMetric::Scans, 0, 5);
+        reg.rec_nanos(Hist::ClaimFast, 1_000);
+        reg.node_wal(0, 3, true);
+        assert_eq!(reg.counter(Counter::DmlFast), 0);
+        assert_eq!(reg.part_total(PartMetric::Scans), 0);
+        assert_eq!(reg.hist(Hist::ClaimFast).count(), 0);
+        assert_eq!(reg.node_wal_records(0), 0);
+        reg.set_enabled(true);
+        reg.inc(Counter::DmlFast);
+        assert_eq!(reg.counter(Counter::DmlFast), 1);
+    }
+
+    #[test]
+    fn slow_ring_keeps_top_k() {
+        let ring = SlowRing::new();
+        for i in 0..100u64 {
+            ring.note(SlowOp { span: i, label: "op", total_nanos: i * 10, stages: [0; N_STAGES] });
+        }
+        let top = ring.top(SLOW_RING_K);
+        assert_eq!(top.len(), SLOW_RING_K);
+        assert_eq!(top[0].total_nanos, 990);
+        assert!(top.windows(2).all(|w| w[0].total_nanos >= w[1].total_nanos));
+        // floor prunes ops that cannot rank
+        ring.note(SlowOp { span: 200, label: "op", total_nanos: 1, stages: [0; N_STAGES] });
+        assert_eq!(ring.top(SLOW_RING_K)[SLOW_RING_K - 1].total_nanos, 990 - 10 * 15);
+    }
+
+    #[test]
+    fn exposition_lines_parse() {
+        let reg = ObsRegistry::new(2);
+        reg.inc(Counter::DmlFast);
+        reg.part_add(PartMetric::Claims, 3, 7);
+        reg.rec_nanos(Hist::ClaimFast, 12_345);
+        reg.node_wal(1, 4, true);
+        let text = reg.exposition();
+        assert!(text.contains("schaladb_dml_fast_total 1"));
+        assert!(text.contains("schaladb_part_claims_total{part=\"3\"} 7"));
+        assert!(text.contains("schaladb_node_wal_records_total{node=\"1\"} 4"));
+        assert!(text.contains("schaladb_claim_fast_seconds_count 1"));
+        for line in text.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+            let (name, value) = line.rsplit_once(' ').expect("name value");
+            assert!(!name.is_empty());
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+        }
+    }
+
+    #[test]
+    fn monitoring_rows_are_internally_consistent() {
+        let reg = ObsRegistry::new(2);
+        for p in 0..4 {
+            reg.part_add(PartMetric::Claims, p, 10 * (p as u64 + 1));
+        }
+        reg.inc(Counter::SelectScatter);
+        let rows = reg.monitoring_rows(7);
+        // mids are unique and sequential
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r[0], Value::Int(i as i64));
+            assert_eq!(r[4], Value::Int(7));
+        }
+        let claims: Vec<&Vec<Value>> = rows
+            .iter()
+            .filter(|r| r[1] == Value::str(PartMetric::Claims.label()))
+            .collect();
+        let global: i64 = claims
+            .iter()
+            .filter(|r| r[2] == Value::Int(-1))
+            .map(|r| r[6].as_i64().expect("count is int"))
+            .sum();
+        let parts: i64 = claims
+            .iter()
+            .filter(|r| r[2] != Value::Int(-1))
+            .map(|r| r[6].as_i64().expect("count is int"))
+            .sum();
+        assert_eq!(global, 100);
+        assert_eq!(parts, 100);
+    }
+}

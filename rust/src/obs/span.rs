@@ -1,0 +1,129 @@
+//! Per-request span tracing.
+//!
+//! A span id is minted at the outermost entry point of a request (session
+//! method, connector call, or direct `DbCluster` API) and lives in
+//! thread-local state while the request executes — valid because every
+//! execution path in this engine is synchronous on the calling thread (the
+//! scan pool runs leaf closures, but all instrumented stages are recorded by
+//! the coordinator thread). Inner layers attribute measured time to stages
+//! via [`stage_add`]; nested `begin` calls on the same thread are no-ops, so
+//! the outermost caller owns the span. When the guard drops, unattributed
+//! time is folded into [`Stage::Exec`] and the completed span competes for a
+//! slot in the registry's bounded slow-op ring.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::{ObsRegistry, SlowOp, Stage, N_STAGES};
+
+struct SpanState {
+    span: u64,
+    stages: [u64; N_STAGES],
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<SpanState>> = const { RefCell::new(None) };
+}
+
+/// RAII guard for an in-flight span. Inert (all fields `None`) when the
+/// registry is quiesced or an outer span already owns this thread.
+pub struct SpanGuard {
+    reg: Option<Arc<ObsRegistry>>,
+    label: &'static str,
+    t0: Option<Instant>,
+}
+
+/// Open a span if the registry is enabled and no span is active on this
+/// thread; otherwise return an inert guard.
+pub fn begin(reg: &Arc<ObsRegistry>, label: &'static str) -> SpanGuard {
+    if !reg.is_enabled() {
+        return SpanGuard { reg: None, label, t0: None };
+    }
+    let opened = ACTIVE.with(|a| {
+        let mut a = a.borrow_mut();
+        if a.is_some() {
+            false
+        } else {
+            *a = Some(SpanState { span: reg.mint_span(), stages: [0; N_STAGES] });
+            true
+        }
+    });
+    if !opened {
+        return SpanGuard { reg: None, label, t0: None };
+    }
+    SpanGuard { reg: Some(reg.clone()), label, t0: Some(Instant::now()) }
+}
+
+/// Attribute `nanos` to `stage` of the span active on this thread (no-op
+/// when none is).
+pub fn stage_add(stage: Stage, nanos: u64) {
+    ACTIVE.with(|a| {
+        if let Some(s) = a.borrow_mut().as_mut() {
+            s.stages[stage as usize] += nanos;
+        }
+    });
+}
+
+/// Span id active on this thread, if any (for log/debug correlation).
+pub fn current_span() -> Option<u64> {
+    ACTIVE.with(|a| a.borrow().as_ref().map(|s| s.span))
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(reg) = self.reg.take() else { return };
+        let total = self.t0.map_or(0, |t| t.elapsed().as_nanos() as u64);
+        let Some(mut st) = ACTIVE.with(|a| a.borrow_mut().take()) else { return };
+        let accounted: u64 = st.stages.iter().sum();
+        st.stages[Stage::Exec as usize] += total.saturating_sub(accounted);
+        reg.note_slow(SlowOp {
+            span: st.span,
+            label: self.label,
+            total_nanos: total,
+            stages: st.stages,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outermost_span_owns_thread_and_records_stages() {
+        let reg = Arc::new(ObsRegistry::new(1));
+        {
+            let _outer = begin(&reg, "outer");
+            assert!(current_span().is_some());
+            {
+                let _inner = begin(&reg, "inner"); // inert: outer owns thread
+                stage_add(Stage::Latch, 1_000);
+            }
+            // inner guard dropping must not close the outer span
+            assert!(current_span().is_some());
+            stage_add(Stage::Wal, 2_000);
+        }
+        assert!(current_span().is_none());
+        let ops = reg.slow_ops(super::super::SLOW_RING_K);
+        assert_eq!(ops.len(), 1);
+        let op = &ops[0];
+        assert_eq!(op.label, "outer");
+        assert_eq!(op.stages[Stage::Latch as usize], 1_000);
+        assert_eq!(op.stages[Stage::Wal as usize], 2_000);
+        // residual went to Exec; stage sum equals the total
+        assert_eq!(op.stages.iter().sum::<u64>(), op.total_nanos.max(3_000));
+    }
+
+    #[test]
+    fn quiesced_registry_opens_no_span() {
+        let reg = Arc::new(ObsRegistry::new(1));
+        reg.set_enabled(false);
+        {
+            let _g = begin(&reg, "noop");
+            assert!(current_span().is_none());
+            stage_add(Stage::Scan, 5_000);
+        }
+        assert!(reg.slow_ops(4).is_empty());
+    }
+}

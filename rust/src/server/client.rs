@@ -9,7 +9,8 @@
 //! implementation a non-Rust client would be written against.
 
 use super::wire::{
-    decode_error, read_frame, write_frame, Request, Response, StatsReply, PROTO_VERSION,
+    decode_error, read_frame, write_frame, MetricsReply, Request, Response, StatsReply,
+    PROTO_VERSION,
 };
 use crate::storage::stats::AccessKind;
 use crate::storage::value::Value;
@@ -163,6 +164,15 @@ impl Client {
         match self.call(&Request::Stats { fingerprint, tables })? {
             Response::Stats(s) => Ok(*s),
             other => Err(unexpected("Stats", &other)),
+        }
+    }
+
+    /// Fetch the telemetry snapshot: the Prometheus-style exposition text
+    /// plus the `top_k` slowest traced ops with stage breakdowns.
+    pub fn metrics(&mut self, top_k: u16) -> Result<MetricsReply> {
+        match self.call(&Request::Metrics { top_k })? {
+            Response::Metrics(m) => Ok(*m),
+            other => Err(unexpected("Metrics", &other)),
         }
     }
 

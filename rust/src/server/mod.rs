@@ -40,6 +40,7 @@ pub mod wire;
 pub use client::{Client, RemoteStats};
 pub use serve::{Server, ServerConfig};
 pub use session::{Session, SessionTransport};
+pub use wire::{MetricsReply, SlowOpWire};
 
 use crate::{Error, Result};
 use std::net::{SocketAddr, ToSocketAddrs};

@@ -24,8 +24,10 @@
 
 use super::session::Session;
 use super::wire::{
-    self, read_frame, write_frame, ErrCode, Request, Response, StatsReply, PROTO_VERSION,
+    self, read_frame, write_frame, ErrCode, MetricsReply, Request, Response, SlowOpWire,
+    StatsReply, PROTO_VERSION,
 };
+use crate::obs::{Counter, Stage};
 use crate::storage::cluster::DbCluster;
 use crate::{Error, Result};
 use std::net::{Shutdown as NetShutdown, SocketAddr, TcpListener, TcpStream};
@@ -201,7 +203,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, conns: Arc<Mutex<Vec<
                     prior, shared.max_conns
                 ),
             };
-            let _ = write_frame(&mut stream, &resp.encode());
+            send(&mut stream, &shared, &resp);
             continue;
         }
         let guard = ActiveGuard(shared.clone());
@@ -244,13 +246,43 @@ fn err_response(e: &Error) -> Response {
     Response::Err { code, message }
 }
 
+/// Write one response frame, counting it (payload + 8-byte header) in the
+/// observability registry. Returns `false` when the peer is gone.
+fn send(stream: &mut TcpStream, shared: &Shared, resp: &Response) -> bool {
+    let payload = resp.encode();
+    if write_frame(stream, &payload).is_err() {
+        return false;
+    }
+    let obs = shared.cluster.obs();
+    obs.inc(Counter::FramesOut);
+    obs.addc(Counter::BytesOut, (payload.len() + 8) as u64);
+    true
+}
+
+/// Read one request frame, counting traffic and malformed frames.
+fn recv(stream: &mut TcpStream, shared: &Shared) -> Result<Option<Vec<u8>>> {
+    let obs = shared.cluster.obs();
+    match read_frame(stream) {
+        Ok(Some(p)) => {
+            obs.inc(Counter::FramesIn);
+            obs.addc(Counter::BytesIn, (p.len() + 8) as u64);
+            Ok(Some(p))
+        }
+        Ok(None) => Ok(None),
+        Err(e) => {
+            obs.inc(Counter::FrameErrors);
+            Err(e)
+        }
+    }
+}
+
 /// Drive one connection: handshake, then a frame pump over one
 /// [`Session`]. Returning (for any reason) drops the session, which
 /// discards any open transaction — abrupt-disconnect rollback for free.
 fn handle_conn(mut stream: TcpStream, shared: &Arc<Shared>) {
     let _ = stream.set_nodelay(true); // claim loops are latency-bound
     // Handshake: the first frame must be a version-matched Hello.
-    let (node, kind) = match read_frame(&mut stream) {
+    let (node, kind) = match recv(&mut stream, shared) {
         Ok(Some(payload)) => match Request::decode(&payload) {
             Ok(Request::Hello { proto, node, kind }) => {
                 if proto != PROTO_VERSION {
@@ -260,7 +292,7 @@ fn handle_conn(mut stream: TcpStream, shared: &Arc<Shared>) {
                             "protocol version mismatch: client {proto}, server {PROTO_VERSION}"
                         ),
                     };
-                    let _ = write_frame(&mut stream, &resp.encode());
+                    send(&mut stream, shared, &resp);
                     return;
                 }
                 (node, kind)
@@ -270,7 +302,7 @@ fn handle_conn(mut stream: TcpStream, shared: &Arc<Shared>) {
                     code: ErrCode::Protocol,
                     message: "expected Hello as the first frame".into(),
                 };
-                let _ = write_frame(&mut stream, &resp.encode());
+                send(&mut stream, shared, &resp);
                 return;
             }
         },
@@ -278,19 +310,19 @@ fn handle_conn(mut stream: TcpStream, shared: &Arc<Shared>) {
     };
     let session_id = shared.next_session.fetch_add(1, Ordering::SeqCst);
     let hello = Response::HelloOk { proto: PROTO_VERSION, session: session_id };
-    if write_frame(&mut stream, &hello.encode()).is_err() {
+    if !send(&mut stream, shared, &hello) {
         return;
     }
 
     let mut session = Session::for_cluster(shared.cluster.clone(), node, kind);
     loop {
-        let payload = match read_frame(&mut stream) {
+        let payload = match recv(&mut stream, shared) {
             Ok(Some(p)) => p,
             Ok(None) => return, // clean disconnect; open txn discards with the session
             Err(e) => {
                 // torn frame / checksum mismatch / oversize: the stream is
                 // unsynchronized — report once (best effort) and close
-                let _ = write_frame(&mut stream, &err_response(&e).encode());
+                send(&mut stream, shared, &err_response(&e));
                 return;
             }
         };
@@ -299,18 +331,19 @@ fn handle_conn(mut stream: TcpStream, shared: &Arc<Shared>) {
         let req = match Request::decode(&payload) {
             Ok(r) => r,
             Err(e) => {
+                shared.cluster.obs().inc(Counter::FrameErrors);
                 let resp = Response::Err {
                     code: ErrCode::Protocol,
                     message: e.to_string(),
                 };
-                if write_frame(&mut stream, &resp.encode()).is_err() {
+                if !send(&mut stream, shared, &resp) {
                     return;
                 }
                 continue;
             }
         };
         let (resp, hangup) = respond(req, &mut session, shared);
-        if write_frame(&mut stream, &resp.encode()).is_err() {
+        if !send(&mut stream, shared, &resp) {
             return;
         }
         if hangup {
@@ -390,6 +423,23 @@ fn respond(req: Request, session: &mut Session, shared: &Arc<Shared>) -> (Respon
             shared.request_shutdown();
             return (Response::ShutdownOk, true);
         }
+        Request::Metrics { top_k } => {
+            let obs = shared.cluster.obs();
+            let slow_ops = obs
+                .slow_ops(top_k as usize)
+                .into_iter()
+                .map(|op| SlowOpWire {
+                    span: op.span,
+                    label: op.label.to_string(),
+                    total_nanos: op.total_nanos,
+                    stages: Stage::ALL
+                        .iter()
+                        .map(|s| (s.label().to_string(), op.stages[*s as usize]))
+                        .collect(),
+                })
+                .collect();
+            Response::Metrics(Box::new(MetricsReply { text: obs.exposition(), slow_ops }))
+        }
     };
     (resp, false)
 }
@@ -397,6 +447,7 @@ fn respond(req: Request, session: &mut Session, shared: &Arc<Shared>) -> (Respon
 fn stats_reply(shared: &Arc<Shared>, fingerprint: bool, tables: bool) -> Result<StatsReply> {
     let c = &shared.cluster;
     let rc = c.route_counts();
+    let obs = c.obs();
     let mut reply = StatsReply {
         scatter: rc.scatter,
         snapshot_join: rc.snapshot_join,
@@ -407,6 +458,14 @@ fn stats_reply(shared: &Arc<Shared>, fingerprint: bool, tables: bool) -> Result<
         cached_plans: c.cached_plans() as u64,
         epoch: c.cluster_epoch(),
         sessions: shared.active.load(Ordering::SeqCst) as u64,
+        dml_interp: obs.counter(Counter::DmlInterp),
+        wal_records: obs.counter(Counter::WalRecords),
+        wal_flushes: obs.counter(Counter::WalFlushes),
+        frames_in: obs.counter(Counter::FramesIn),
+        frames_out: obs.counter(Counter::FramesOut),
+        bytes_in: obs.counter(Counter::BytesIn),
+        bytes_out: obs.counter(Counter::BytesOut),
+        frame_errors: obs.counter(Counter::FrameErrors),
         fingerprint: None,
         table_rows: Vec::new(),
     };

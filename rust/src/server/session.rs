@@ -21,6 +21,7 @@
 //! — the wire client's stmt id never changes, which is the PR 1
 //! failover-surviving-handle guarantee extended across the network.
 
+use crate::obs::span;
 use crate::storage::cluster::DbCluster;
 use crate::storage::connector::WorkerLink;
 use crate::storage::prepared::Prepared;
@@ -304,6 +305,10 @@ impl Session {
         params: &[Value],
     ) -> Result<StatementResult> {
         self.no_open_txn("exec")?;
+        // Session-level span: the guard outlives the cluster call, so the
+        // slow-op ring attributes the whole request to this entry point
+        // (inner cluster spans are inert while this one owns the thread).
+        let _span = span::begin(self.transport.cluster().obs(), "session_exec");
         let node = self.node;
         self.with_reresolve(stmt, move |t, p| t.exec_prepared(node, kind, p, params))
     }
@@ -316,6 +321,7 @@ impl Session {
         rows: &[Vec<Value>],
     ) -> Result<StatementResult> {
         self.no_open_txn("exec_batch")?;
+        let _span = span::begin(self.transport.cluster().obs(), "session_exec_batch");
         let node = self.node;
         self.with_reresolve(stmt, move |t, p| t.exec_prepared_batch(node, kind, p, rows))
     }
@@ -323,6 +329,7 @@ impl Session {
     /// Parse + execute one SQL text (auto-commit).
     pub fn exec_sql(&mut self, kind: AccessKind, sql: &str) -> Result<StatementResult> {
         self.no_open_txn("exec_sql")?;
+        let _span = span::begin(self.transport.cluster().obs(), "session_exec_sql");
         self.transport.exec_sql(self.node, kind, sql)
     }
 
@@ -370,6 +377,7 @@ impl Session {
     pub fn commit(&mut self, kind: AccessKind) -> Result<Vec<StatementResult>> {
         let queue =
             self.txn.take().ok_or_else(|| Error::Engine("no open transaction".into()))?;
+        let _span = span::begin(self.transport.cluster().obs(), "session_commit");
         if queue.len() == 1 {
             if let QueuedStmt::Prepared { stmt, params } = &queue[0] {
                 let (stmt, params) = (*stmt, params.clone());

@@ -27,7 +27,9 @@ use std::io::{Read, Write};
 
 /// Protocol version carried in `Hello`/`HelloOk`. Bump on any frame-format
 /// change; the server rejects mismatched clients with a typed error.
-pub const PROTO_VERSION: u16 = 1;
+/// v2: `Metrics` request/response and the observability fields appended to
+/// `StatsReply`.
+pub const PROTO_VERSION: u16 = 2;
 
 /// Upper bound on one frame's payload. Large enough for any steering
 /// result set we produce, small enough that a hostile or corrupt length
@@ -383,6 +385,9 @@ pub enum Request {
     /// Ask the server process to shut down (the SIGTERM-equivalent for
     /// environments without signal handling).
     Shutdown,
+    /// Telemetry snapshot: the Prometheus-style exposition text plus the
+    /// `top_k` slowest traced ops with their stage breakdowns.
+    Metrics { top_k: u16 },
 }
 
 const REQ_HELLO: u8 = 0x01;
@@ -400,6 +405,7 @@ const REQ_TXN_COMMIT: u8 = 0x0c;
 const REQ_TXN_ROLLBACK: u8 = 0x0d;
 const REQ_CLOSE_STMT: u8 = 0x0e;
 const REQ_SHUTDOWN: u8 = 0x0f;
+const REQ_METRICS: u8 = 0x10;
 
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
@@ -471,6 +477,10 @@ impl Request {
             Request::TxnRollback => out.push(REQ_TXN_ROLLBACK),
             Request::Close => out.push(REQ_CLOSE),
             Request::Shutdown => out.push(REQ_SHUTDOWN),
+            Request::Metrics { top_k } => {
+                out.push(REQ_METRICS);
+                out.extend_from_slice(&top_k.to_le_bytes());
+            }
         }
         out
     }
@@ -517,6 +527,7 @@ impl Request {
             REQ_TXN_ROLLBACK => Request::TxnRollback,
             REQ_CLOSE => Request::Close,
             REQ_SHUTDOWN => Request::Shutdown,
+            REQ_METRICS => Request::Metrics { top_k: b.u16()? },
             t => return Err(Error::Engine(format!("bad request tag 0x{t:02x}"))),
         };
         b.finish()?;
@@ -540,8 +551,44 @@ pub struct StatsReply {
     pub cached_plans: u64,
     pub epoch: u64,
     pub sessions: u64,
+    /// Claims that fell back to the interpreted 2PL executor (obs).
+    pub dml_interp: u64,
+    /// Redo records appended across all node WALs (obs).
+    pub wal_records: u64,
+    /// Group-commit flush boundaries hit across all node WALs (obs).
+    pub wal_flushes: u64,
+    /// Request frames read by the server since start (obs).
+    pub frames_in: u64,
+    /// Response frames written by the server since start (obs).
+    pub frames_out: u64,
+    /// Bytes read off client sockets, headers included (obs).
+    pub bytes_in: u64,
+    /// Bytes written to client sockets, headers included (obs).
+    pub bytes_out: u64,
+    /// Malformed / failed frames observed by the server (obs).
+    pub frame_errors: u64,
     pub fingerprint: Option<String>,
     pub table_rows: Vec<(String, u64)>,
+}
+
+/// One slow-op ring entry as shipped by [`Response::Metrics`]: a traced
+/// request with its span id, total latency, and per-stage breakdown.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SlowOpWire {
+    pub span: u64,
+    pub label: String,
+    pub total_nanos: u64,
+    /// `(stage label, nanos)` pairs in the engine's stage order.
+    pub stages: Vec<(String, u64)>,
+}
+
+/// Telemetry payload of [`Response::Metrics`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsReply {
+    /// Prometheus-style text exposition of the whole registry.
+    pub text: String,
+    /// The slowest traced ops, worst first.
+    pub slow_ops: Vec<SlowOpWire>,
 }
 
 /// Server → client frames.
@@ -555,6 +602,7 @@ pub enum Response {
     TxnResults(Vec<StatementResult>),
     Err { code: ErrCode, message: String },
     ShutdownOk,
+    Metrics(Box<MetricsReply>),
 }
 
 const RESP_HELLO_OK: u8 = 0x81;
@@ -565,6 +613,7 @@ const RESP_STATS: u8 = 0x85;
 const RESP_TXN_RESULTS: u8 = 0x86;
 const RESP_ERR: u8 = 0x87;
 const RESP_SHUTDOWN_OK: u8 = 0x88;
+const RESP_METRICS: u8 = 0x89;
 
 impl Response {
     pub fn encode(&self) -> Vec<u8> {
@@ -600,6 +649,14 @@ impl Response {
                     s.cached_plans,
                     s.epoch,
                     s.sessions,
+                    s.dml_interp,
+                    s.wal_records,
+                    s.wal_flushes,
+                    s.frames_in,
+                    s.frames_out,
+                    s.bytes_in,
+                    s.bytes_out,
+                    s.frame_errors,
                 ] {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
@@ -629,6 +686,21 @@ impl Response {
                 put_str(&mut out, message);
             }
             Response::ShutdownOk => out.push(RESP_SHUTDOWN_OK),
+            Response::Metrics(m) => {
+                out.push(RESP_METRICS);
+                put_str(&mut out, &m.text);
+                out.extend_from_slice(&(m.slow_ops.len() as u16).to_le_bytes());
+                for op in &m.slow_ops {
+                    out.extend_from_slice(&op.span.to_le_bytes());
+                    put_str(&mut out, &op.label);
+                    out.extend_from_slice(&op.total_nanos.to_le_bytes());
+                    out.push(op.stages.len() as u8);
+                    for (stage, nanos) in &op.stages {
+                        put_str(&mut out, stage);
+                        out.extend_from_slice(&nanos.to_le_bytes());
+                    }
+                }
+            }
         }
         out
     }
@@ -652,6 +724,14 @@ impl Response {
                     cached_plans: b.u64()?,
                     epoch: b.u64()?,
                     sessions: b.u64()?,
+                    dml_interp: b.u64()?,
+                    wal_records: b.u64()?,
+                    wal_flushes: b.u64()?,
+                    frames_in: b.u64()?,
+                    frames_out: b.u64()?,
+                    bytes_in: b.u64()?,
+                    bytes_out: b.u64()?,
+                    frame_errors: b.u64()?,
                     fingerprint: None,
                     table_rows: Vec::new(),
                 };
@@ -684,6 +764,25 @@ impl Response {
                 Response::Err { code, message }
             }
             RESP_SHUTDOWN_OK => Response::ShutdownOk,
+            RESP_METRICS => {
+                let text = b.str()?;
+                let n = b.u16()? as usize;
+                let mut slow_ops = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    let span = b.u64()?;
+                    let label = b.str()?;
+                    let total_nanos = b.u64()?;
+                    let ns = b.u8()? as usize;
+                    let mut stages = Vec::with_capacity(ns);
+                    for _ in 0..ns {
+                        let stage = b.str()?;
+                        let nanos = b.u64()?;
+                        stages.push((stage, nanos));
+                    }
+                    slow_ops.push(SlowOpWire { span, label, total_nanos, stages });
+                }
+                Response::Metrics(Box::new(MetricsReply { text, slow_ops }))
+            }
             t => return Err(Error::Engine(format!("bad response tag 0x{t:02x}"))),
         };
         b.finish()?;
@@ -744,6 +843,7 @@ mod tests {
         roundtrip_req(Request::TxnRollback);
         roundtrip_req(Request::Close);
         roundtrip_req(Request::Shutdown);
+        roundtrip_req(Request::Metrics { top_k: 16 });
     }
 
     #[test]
@@ -776,6 +876,32 @@ mod tests {
             message: "column 'id' is NOT NULL".into(),
         });
         roundtrip_resp(Response::ShutdownOk);
+        roundtrip_resp(Response::Stats(Box::new(StatsReply {
+            dml_interp: 3,
+            wal_records: 400,
+            wal_flushes: 50,
+            frames_in: 6,
+            frames_out: 6,
+            bytes_in: 7_000,
+            bytes_out: 8_000,
+            frame_errors: 1,
+            ..Default::default()
+        })));
+        roundtrip_resp(Response::Metrics(Box::new(MetricsReply {
+            text: "# TYPE schaladb_dml_fast_total counter\n\
+                   schaladb_dml_fast_total 12\n"
+                .into(),
+            slow_ops: vec![
+                SlowOpWire {
+                    span: 9,
+                    label: "exec_prepared".into(),
+                    total_nanos: 1_234_567,
+                    stages: vec![("latch".into(), 1_000), ("exec".into(), 1_233_567)],
+                },
+                SlowOpWire::default(),
+            ],
+        })));
+        roundtrip_resp(Response::Metrics(Box::new(MetricsReply::default())));
     }
 
     #[test]

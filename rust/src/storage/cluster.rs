@@ -27,12 +27,13 @@ use crate::storage::table_def::TableDef;
 use crate::storage::value::{Column, Row, Schema, Value};
 use crate::storage::wal::{encode_value, read_segment_file, LogOp, NodeWal};
 use crate::storage::{ResultSet, StatementResult};
+use crate::obs::{span, Counter, Hist, ObsRegistry, PartMetric, Stage};
 use crate::util::clock::{self, SharedClock};
 use crate::{Error, Result};
 use rustc_hash::FxHashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
-use std::sync::{Arc, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{Arc, Mutex, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::Instant;
 
 /// Durable-logging parameters: where WAL segments and partition
@@ -177,6 +178,24 @@ pub struct DbCluster {
     /// Chunk scan/prune telemetry, shared with every partial task the
     /// scatter engine spawns (see `query::ScanMetrics`).
     scan_metrics: Arc<ScanMetrics>,
+    /// Always-on observability registry, shared with every data node and
+    /// the wire server (see `crate::obs`).
+    obs: Arc<ObsRegistry>,
+    /// Serializes `refresh_monitoring`: the delete+reinsert of the system
+    /// `monitoring` table must not interleave between concurrent readers.
+    monitoring_refresh: Mutex<()>,
+}
+
+/// Name of the system telemetry table (see
+/// [`DbCluster::refresh_monitoring`]). Created lazily on first reference;
+/// excluded from [`DbCluster::fingerprint`] so twin-cluster equivalence
+/// tests compare workflow state, not telemetry.
+pub const MONITORING_TABLE: &str = "monitoring";
+
+/// Does this SELECT read `table` (as base table or join side)?
+fn select_references(s: &SelectStmt, table: &str) -> bool {
+    s.from.table.eq_ignore_ascii_case(table)
+        || s.joins.iter().any(|j| j.table.table.eq_ignore_ascii_case(table))
 }
 
 // ---------- lock plumbing ----------
@@ -286,6 +305,10 @@ impl DbCluster {
         }
         let nodes: Vec<Arc<DataNode>> =
             (0..config.data_nodes as u32).map(|i| Arc::new(DataNode::new(i))).collect();
+        let obs = Arc::new(ObsRegistry::new(config.data_nodes));
+        for n in &nodes {
+            n.attach_obs(obs.clone());
+        }
         if let Some(d) = &config.durability {
             for n in &nodes {
                 let ndir = d.dir.join(format!("node{}", n.id));
@@ -313,7 +336,14 @@ impl DbCluster {
             pool: OnceLock::new(),
             routes: RouteCounters::default(),
             scan_metrics: Arc::new(ScanMetrics::default()),
+            obs,
+            monitoring_refresh: Mutex::new(()),
         }))
+    }
+
+    /// The cluster's observability registry (see `crate::obs`).
+    pub fn obs(&self) -> &Arc<ObsRegistry> {
+        &self.obs
     }
 
     /// The durability configuration this cluster runs with, if any.
@@ -402,12 +432,20 @@ impl DbCluster {
     }
 
     fn meta(&self, table: &str) -> Result<Arc<TableMeta>> {
-        self.catalog
-            .read()
-            .unwrap()
-            .get(&table.to_lowercase())
-            .cloned()
-            .ok_or_else(|| Error::Catalog(format!("unknown table '{table}'")))
+        let lookup = |name: &str| self.catalog.read().unwrap().get(name).cloned();
+        let name = table.to_lowercase();
+        if let Some(m) = lookup(&name) {
+            return Ok(m);
+        }
+        // The system `monitoring` table materializes lazily on first
+        // reference so fresh clusters pay nothing for it.
+        if name == MONITORING_TABLE {
+            self.ensure_monitoring()?;
+            if let Some(m) = lookup(&name) {
+                return Ok(m);
+            }
+        }
+        Err(Error::Catalog(format!("unknown table '{table}'")))
     }
 
     /// Definition of a table (checkpointing, schema introspection).
@@ -806,6 +844,10 @@ impl DbCluster {
     pub fn fingerprint(&self) -> Result<String> {
         let mut out = String::new();
         for table in self.tables() {
+            if table == MONITORING_TABLE {
+                // telemetry is per-cluster by construction; twins diverge
+                continue;
+            }
             let meta = self.meta(&table)?;
             let mut lines: Vec<String> = Vec::new();
             for (pidx, pl) in meta.placements.iter().enumerate() {
@@ -825,6 +867,52 @@ impl DbCluster {
             }
         }
         Ok(out)
+    }
+
+    // ---------- the system `monitoring` table ----------
+
+    /// Create the system `monitoring` table if it does not exist yet. Its
+    /// rows are keyed and hash-partitioned on a sequential row id (`mid`) —
+    /// *not* on the `part`/`node` data columns, which carry `-1` sentinels
+    /// for cluster-global metrics — so telemetry itself spreads over the
+    /// partitions and is served by the normal scatter-gather path.
+    fn ensure_monitoring(&self) -> Result<()> {
+        if self.catalog.read().unwrap().contains_key(MONITORING_TABLE) {
+            return Ok(());
+        }
+        let r = self.exec(&format!(
+            "CREATE TABLE {MONITORING_TABLE} (mid INT NOT NULL, metric TEXT NOT NULL, \
+             part INT NOT NULL, node INT NOT NULL, epoch INT NOT NULL, value FLOAT, \
+             cnt INT NOT NULL) \
+             PARTITION BY HASH(mid) PARTITIONS 4 PRIMARY KEY (mid) INDEX (metric)"
+        ));
+        match r {
+            Ok(_) => Ok(()),
+            // lost a create race: another reader materialized it first
+            Err(Error::Catalog(msg)) if msg.contains("already exists") => Ok(()),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// (Re)materialize the system `monitoring` table from the obs registry:
+    /// one row per metric (× partition shard / × node), epoch-stamped.
+    /// Serialized by an internal mutex; runs automatically before any
+    /// SELECT that references the table, so steering clients always read a
+    /// current snapshot through the ordinary SQL path. The row set is built
+    /// *before* the delete+reinsert, so with writers quiesced the table is
+    /// an exact, internally consistent image of the registry.
+    pub fn refresh_monitoring(&self) -> Result<()> {
+        let _g = self.monitoring_refresh.lock().unwrap();
+        self.ensure_monitoring()?;
+        let rows = self.obs.monitoring_rows(self.cluster_epoch());
+        self.exec_tagged(0, AccessKind::Other, &format!("DELETE FROM {MONITORING_TABLE}"))?;
+        let ins = self.prepare(&format!(
+            "INSERT INTO {MONITORING_TABLE} (mid, metric, part, node, epoch, value, cnt) \
+             VALUES (?, ?, ?, ?, ?, ?, ?)"
+        ))?;
+        self.exec_prepared_batch(0, AccessKind::Other, &ins, &rows)?;
+        self.obs.inc(Counter::MonitoringRefreshes);
+        Ok(())
     }
 
     // ---------- prepared statements ----------
@@ -948,13 +1036,17 @@ impl DbCluster {
         prepared: &Prepared,
         params: &[Value],
     ) -> Result<StatementResult> {
+        let _span = span::begin(&self.obs, "exec_prepared");
         if let Some(plan) = prepared.fast_plan() {
             if params.len() == prepared.param_count() {
                 let t0 = Instant::now();
                 match self.exec_fast(plan, params) {
                     Ok(Some(r)) => {
                         self.routes.fast_dml.fetch_add(1, AtomicOrdering::Relaxed);
-                        self.stats.record(node, kind, t0.elapsed().as_secs_f64());
+                        let el = t0.elapsed();
+                        self.obs.inc(Counter::DmlFast);
+                        self.obs.rec_nanos(Hist::ClaimFast, el.as_nanos() as u64);
+                        self.stats.record(node, kind, el.as_secs_f64());
                         return Ok(r);
                     }
                     Ok(None) => {} // runtime shape mismatch: interpret
@@ -965,7 +1057,14 @@ impl DbCluster {
                 }
             }
         }
-        self.exec_prepared_interpreted(node, kind, prepared, params)
+        let is_dml = !matches!(prepared.statement(), Statement::Select(_));
+        let t1 = self.obs.start();
+        let r = self.exec_prepared_interpreted(node, kind, prepared, params);
+        if is_dml && r.is_ok() {
+            self.obs.rec_since(Hist::ClaimInterp, t1);
+            self.obs.inc(Counter::DmlInterp);
+        }
+        r
     }
 
     /// Execute a prepared statement through the interpreted reference path,
@@ -996,6 +1095,7 @@ impl DbCluster {
         prepared: &Prepared,
         rows: &[Vec<Value>],
     ) -> Result<StatementResult> {
+        let _span = span::begin(&self.obs, "exec_prepared_batch");
         if let Some(DmlPlan::Insert(p)) = prepared.fast_plan() {
             if !rows.is_empty() && rows.iter().all(|r| r.len() == prepared.param_count()) {
                 let refs: Vec<&[Value]> = rows.iter().map(|r| r.as_slice()).collect();
@@ -1003,7 +1103,10 @@ impl DbCluster {
                 match self.fast_insert(p, &refs) {
                     Ok(Some(r)) => {
                         self.routes.fast_dml.fetch_add(1, AtomicOrdering::Relaxed);
-                        self.stats.record(node, kind, t0.elapsed().as_secs_f64());
+                        let el = t0.elapsed();
+                        self.obs.inc(Counter::DmlFast);
+                        self.obs.rec_nanos(Hist::ClaimFast, el.as_nanos() as u64);
+                        self.stats.record(node, kind, el.as_secs_f64());
                         return Ok(r);
                     }
                     Ok(None) => {}
@@ -1014,8 +1117,15 @@ impl DbCluster {
                 }
             }
         }
+        let t1 = self.obs.start();
         let stmt = prepared.bind_batch(rows)?;
-        self.exec_stmt(node, kind, &stmt)
+        let r = self.exec_stmt(node, kind, &stmt);
+        if r.is_ok() {
+            // bind_batch only accepts INSERT templates, so this is DML
+            self.obs.rec_since(Hist::ClaimInterp, t1);
+            self.obs.inc(Counter::DmlInterp);
+        }
+        r
     }
 
     /// Convenience: prepared SELECT returning rows.
@@ -1128,13 +1238,18 @@ impl DbCluster {
             return Ok(None);
         };
         let (locks, targets) = (set.locks, set.targets);
+        let t_latch = self.obs.start();
         let mut guards: Vec<Guard<'_>> = locks
             .iter()
             .map(|(w, s)| if *w { Guard::W(s.write().unwrap()) } else { Guard::R(s.read().unwrap()) })
             .collect();
+        if let Some(n) = self.obs.rec_since(Hist::LatchWait, t_latch) {
+            span::stage_add(Stage::Latch, n);
+        }
         if !self.fast_mirror_valid(&meta, &targets) {
             return Ok(None); // node state changed while we queued for latches
         }
+        self.obs.part_add_list(PartMetric::Claims, &parts);
         let pre_versions = fast_pre_versions(&guards, &targets);
 
         // Match phase: probe candidates under the held latches, re-checking
@@ -1295,13 +1410,18 @@ impl DbCluster {
             return Ok(None);
         };
         let (locks, targets) = (set.locks, set.targets);
+        let t_latch = self.obs.start();
         let mut guards: Vec<Guard<'_>> = locks
             .iter()
             .map(|(w, s)| if *w { Guard::W(s.write().unwrap()) } else { Guard::R(s.read().unwrap()) })
             .collect();
+        if let Some(n) = self.obs.rec_since(Hist::LatchWait, t_latch) {
+            span::stage_add(Stage::Latch, n);
+        }
         if !self.fast_mirror_valid(&meta, &targets) {
             return Ok(None); // node state changed while we queued for latches
         }
+        self.obs.part_add_list(PartMetric::Claims, &parts);
         let pre_versions = fast_pre_versions(&guards, &targets);
 
         // Victims in ascending slot order per partition: matches the
@@ -1425,13 +1545,18 @@ impl DbCluster {
             return Ok(None);
         };
         let (locks, targets, live_of) = (set.locks, set.targets, set.live_of);
+        let t_latch = self.obs.start();
         let mut guards: Vec<Guard<'_>> = locks
             .iter()
             .map(|(w, s)| if *w { Guard::W(s.write().unwrap()) } else { Guard::R(s.read().unwrap()) })
             .collect();
+        if let Some(n) = self.obs.rec_since(Hist::LatchWait, t_latch) {
+            span::stage_add(Stage::Latch, n);
+        }
         if !self.fast_mirror_valid(&meta, &targets) {
             return Ok(None); // node state changed while we queued for latches
         }
+        self.obs.part_add_list(PartMetric::Claims, &parts);
         let pre_versions = fast_pre_versions(&guards, &targets);
         let mut target_of: Vec<Option<usize>> = vec![None; def.num_partitions()];
         for (ti, t) in targets.iter().enumerate() {
@@ -1546,8 +1671,13 @@ impl DbCluster {
             let (store, _, _) = self.replica_store(&meta, pidx, pl, false)?;
             locks.push(store);
         }
+        let t_latch = self.obs.start();
         let guards: Vec<RwLockReadGuard<'_, PartitionStore>> =
             locks.iter().map(|s| s.read().unwrap()).collect();
+        if let Some(n) = self.obs.rec_since(Hist::LatchWait, t_latch) {
+            span::stage_add(Stage::Latch, n);
+        }
+        self.obs.part_add_list(PartMetric::Scans, &parts);
 
         let dirs: Vec<bool> = p.order.iter().map(|(_, asc)| *asc).collect();
         let selected: Vec<Row> = if let (Some(limit), false) = (p.limit, p.order.is_empty()) {
@@ -1741,6 +1871,7 @@ impl DbCluster {
         kind: AccessKind,
         stmt: &Statement,
     ) -> Result<StatementResult> {
+        let _span = span::begin(&self.obs, "exec_stmt");
         let t0 = Instant::now();
         let r = self.exec_stmt_routed(stmt);
         self.stats.record(node, kind, t0.elapsed().as_secs_f64());
@@ -1749,10 +1880,17 @@ impl DbCluster {
 
     fn exec_stmt_routed(&self, stmt: &Statement) -> Result<StatementResult> {
         if let Statement::Select(s) = stmt {
+            // System-table hook: a SELECT touching `monitoring` sees a
+            // fresh materialization of the registry. The refresh itself
+            // runs DELETE + prepared INSERTs, which never re-enter here.
+            if select_references(s, MONITORING_TABLE) {
+                self.refresh_monitoring()?;
+            }
             if let Some(rs) = self.try_scatter_select(s)? {
                 return Ok(StatementResult::Rows(rs));
             }
             self.routes.centralized.fetch_add(1, AtomicOrdering::Relaxed);
+            self.obs.inc(Counter::SelectCentralized);
         }
         Ok(self
             .exec_txn_inner(std::slice::from_ref(stmt))?
@@ -1806,6 +1944,8 @@ impl DbCluster {
             let Some(plan) = ScatterPlan::build(s) else {
                 return Ok(None);
             };
+            self.obs.part_add_list(PartMetric::Scans, &parts);
+            let t_scan = self.obs.start();
             let snaps = self.partition_snapshots(&[(s.from.table.clone(), parts)])?;
             let rs = query_engine::scatter_gather(
                 self.scan_pool(),
@@ -1815,7 +1955,11 @@ impl DbCluster {
                 &self.scan_metrics,
                 now,
             )?;
+            if let Some(n) = self.obs.rec_since(Hist::ScatterScan, t_scan) {
+                span::stage_add(Stage::Scan, n);
+            }
             self.routes.scatter.fetch_add(1, AtomicOrdering::Relaxed);
+            self.obs.inc(Counter::SelectScatter);
             return Ok(Some(rs));
         }
         // Join shape: snapshot every involved partition in one consistent
@@ -1837,10 +1981,18 @@ impl DbCluster {
             };
             specs.push((j.table.table.clone(), parts));
         }
+        for (_, parts) in &specs {
+            self.obs.part_add_list(PartMetric::Scans, parts);
+        }
+        let t_scan = self.obs.start();
         let snaps = self.partition_snapshots(&specs)?;
         let rs =
             query_engine::snapshot_join(self.scan_pool(), s, &snaps, &self.scan_metrics, now)?;
+        if let Some(n) = self.obs.rec_since(Hist::ScatterScan, t_scan) {
+            span::stage_add(Stage::Scan, n);
+        }
         self.routes.snapshot_join.fetch_add(1, AtomicOrdering::Relaxed);
+        self.obs.inc(Counter::SelectSnapshotJoin);
         Ok(Some(rs))
     }
 
@@ -1911,6 +2063,7 @@ impl DbCluster {
         kind: AccessKind,
         stmts: &[Statement],
     ) -> Result<Vec<StatementResult>> {
+        let _span = span::begin(&self.obs, "exec_txn");
         let t0 = Instant::now();
         let r = self.exec_txn_inner(stmts);
         self.stats.record(node, kind, t0.elapsed().as_secs_f64());
@@ -1971,6 +2124,7 @@ impl DbCluster {
                 .collect()
         }
         let (mut ordered, mut placements) = build()?;
+        let t_latch = self.obs.start();
         let mut guards = acquire(&ordered);
 
         // The lock set's backup-mirror decisions were made from
@@ -1993,6 +2147,10 @@ impl DbCluster {
             drop(guards);
             (ordered, placements) = build()?;
             guards = acquire(&ordered);
+        }
+        // growing phase complete (initial acquisition + rare rebuilds)
+        if let Some(n) = self.obs.rec_since(Hist::LatchWait, t_latch) {
+            span::stage_add(Stage::Latch, n);
         }
 
         // WAL target set: the nodes each written partition actually

@@ -17,6 +17,7 @@
 //! `restart_node` models a real process restart (memory wiped, state comes
 //! back from checkpoints + WAL tails + primary catch-up).
 
+use crate::obs::{span, Counter, Hist, ObsRegistry, PartMetric, Stage};
 use crate::storage::partition::PartitionStore;
 use crate::storage::table_def::TableDef;
 use crate::storage::wal::{LogOp, NodeWal};
@@ -24,7 +25,8 @@ use crate::{Error, Result};
 use rustc_hash::FxHashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::Instant;
 
 /// Key of a partition replica within a node.
 pub type PartKey = (String, usize);
@@ -61,6 +63,10 @@ pub struct DataNode {
     /// hosted here (primary *and* backup — every replica can recover
     /// locally and serve a redo-ship tail).
     pub wal: Mutex<NodeWal>,
+    /// Observability registry, attached once at cluster start. The node
+    /// outlives WAL replacement (`attach_durability`, `restart_node`), so
+    /// WAL metrics are recorded here rather than inside [`NodeWal`].
+    obs: OnceLock<Arc<ObsRegistry>>,
 }
 
 impl DataNode {
@@ -71,7 +77,14 @@ impl DataNode {
             epoch: AtomicU64::new(0),
             parts: RwLock::new(FxHashMap::default()),
             wal: Mutex::new(NodeWal::new()),
+            obs: OnceLock::new(),
         }
+    }
+
+    /// Share the cluster's observability registry with this node (called
+    /// once at cluster start; later calls are no-ops).
+    pub fn attach_obs(&self, obs: Arc<ObsRegistry>) {
+        let _ = self.obs.set(obs);
     }
 
     /// Current lifecycle state.
@@ -183,7 +196,33 @@ impl DataNode {
     /// Append one commit's redo records to the node WAL (both replica
     /// roles log; group commit batches the sink flush).
     pub fn log_commit(&self, epoch: u64, ops: &[(u64, LogOp)]) -> Result<()> {
-        self.wal.lock().unwrap().commit(epoch, ops)
+        let obs = self.obs.get().filter(|o| o.is_enabled());
+        let mut w = self.wal.lock().unwrap();
+        let Some(o) = obs else {
+            return w.commit(epoch, ops);
+        };
+        let pending_before = w.pending();
+        let t0 = Instant::now();
+        let r = w.commit(epoch, ops);
+        let nanos = t0.elapsed().as_nanos() as u64;
+        // commit() bumps pending by one, then flush_all() zeroes it when the
+        // group-commit window fills — so "did not grow" means a flush ran.
+        let flushed = w.pending() <= pending_before;
+        drop(w);
+        if r.is_ok() {
+            o.addc(Counter::WalRecords, ops.len() as u64);
+            for (_, op) in ops {
+                o.part_add(PartMetric::WalRecords, op.pidx(), 1);
+            }
+            o.node_wal(self.id as usize, ops.len() as u64, flushed);
+            if flushed {
+                o.inc(Counter::WalFlushes);
+                o.addc(Counter::WalFlushedCommits, (pending_before + 1) as u64);
+                o.rec_nanos(Hist::WalFlush, nanos);
+            }
+        }
+        span::stage_add(Stage::Wal, nanos);
+        r
     }
 
     /// Apply a redo op to the local replica (replication / recovery).

@@ -22,6 +22,7 @@
 //!    WAL segments are truncated (and restart recovery stays bounded)
 //!    without anyone calling `checkpoint_node` by hand.
 
+use crate::obs::{Counter, Hist};
 use crate::storage::checkpoint;
 use crate::storage::cluster::DbCluster;
 use crate::storage::datanode::NodeState;
@@ -87,6 +88,8 @@ impl AvailabilityManager {
     /// re-seed stale replicas where both sides are alive again, and drive
     /// rejoining nodes through catch-up to the serving hand-off.
     pub fn sweep(&self) -> Result<SweepReport> {
+        let obs = self.cluster.obs().clone();
+        let t_sweep = obs.start();
         let mut r = SweepReport::default();
         let n = self.cluster.num_nodes() as u32;
         for i in 0..n {
@@ -106,6 +109,7 @@ impl AvailabilityManager {
             if !rejoining {
                 continue;
             }
+            let t_rejoin = obs.start();
             for _ in 0..CATCHUP_ROUNDS {
                 r.shipped_ops += self.cluster.rejoin_catchup_round(i)?;
             }
@@ -114,6 +118,8 @@ impl AvailabilityManager {
                     r.shipped_ops += shipped;
                     r.reseeded_parts += reseeded;
                     r.rejoined += 1;
+                    obs.rec_since(Hist::Rejoin, t_rejoin);
+                    obs.inc(Counter::Rejoins);
                 }
                 // e.g. the peer hosting the serving replica is down too:
                 // leave the node rejoining, a later sweep retries
@@ -146,6 +152,8 @@ impl AvailabilityManager {
         self.total_healed.fetch_add(r.healed, std::sync::atomic::Ordering::Relaxed);
         self.total_rejoined.fetch_add(r.rejoined, std::sync::atomic::Ordering::Relaxed);
         self.total_checkpointed.fetch_add(r.checkpointed, std::sync::atomic::Ordering::Relaxed);
+        obs.rec_since(Hist::Sweep, t_sweep);
+        obs.inc(Counter::SweepRuns);
         Ok(r)
     }
 }

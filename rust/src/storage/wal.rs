@@ -480,6 +480,12 @@ impl NodeWal {
         Ok(())
     }
 
+    /// Commits appended since the last group-commit boundary (window
+    /// occupancy; monitoring).
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
     /// Flush every segment's sink writer (group-commit boundary, shutdown,
     /// checkpoint cut).
     pub fn flush_all(&mut self) -> Result<()> {

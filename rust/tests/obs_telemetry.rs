@@ -1,0 +1,369 @@
+//! Observability property gate: the obs registry must *reconcile* with the
+//! engine's own ground truth under concurrent load — obs counters equal the
+//! route counters, paired histograms hold exactly one sample per counted
+//! op, sharded per-partition totals equal their shard sums, and the
+//! materialized `monitoring` table is internally consistent (each global
+//! row equals the sum of its part rows within one SQL snapshot). Plus the
+//! wire-level half: a remote client fetches the Prometheus-style
+//! exposition, the slow-op ring with stage breakdowns, and SELECTs straight
+//! from `monitoring` over TCP.
+
+use schaladb::obs::{Counter, Hist, PartMetric, Stage, PART_SHARDS, SLOW_RING_K};
+use schaladb::server::{Client, Server, ServerConfig};
+use schaladb::storage::cluster::ClusterConfig;
+use schaladb::storage::{AccessKind, DbCluster, StatementResult, Value};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+const PARTS: usize = 4;
+const TASKS_PER_PART: usize = 30;
+
+const CLAIM: &str = "UPDATE workqueue SET status = 'RUNNING', starttime = 0.0 \
+                     WHERE workerid = ? AND status = 'READY' ORDER BY taskid LIMIT 1 \
+                     RETURNING taskid";
+// OR predicates never classify for the compiled fast path (see
+// tests/dml_fastpath.rs), so this shape is guaranteed interpreted DML.
+const OR_BUMP: &str = "UPDATE workqueue SET dur = ? WHERE taskid = ? OR taskid = ?";
+
+fn any_addr() -> std::net::SocketAddr {
+    "127.0.0.1:0".parse().unwrap()
+}
+
+fn workload_cluster() -> Arc<DbCluster> {
+    let c = DbCluster::start(ClusterConfig::default()).unwrap();
+    c.exec(&format!(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
+         status TEXT, dur FLOAT, starttime FLOAT) \
+         PARTITION BY HASH(workerid) PARTITIONS {PARTS} \
+         PRIMARY KEY (taskid) INDEX (status)"
+    ))
+    .unwrap();
+    c.exec("CREATE TABLE node (nodeid INT NOT NULL, hostname TEXT) PRIMARY KEY (nodeid)")
+        .unwrap();
+    // seed through the *text* path on purpose: text DML runs interpreted
+    // without touching the prepared-DML obs counters, so the reconciliation
+    // below accounts for every DmlFast/DmlInterp bump it observes
+    for w in 0..PARTS {
+        c.exec(&format!("INSERT INTO node (nodeid, hostname) VALUES ({w}, 'host{w}')")).unwrap();
+        for t in 0..TASKS_PER_PART {
+            let id = (w * TASKS_PER_PART + t) as i64;
+            let sql = format!(
+                "INSERT INTO workqueue (taskid, workerid, status, dur) \
+                 VALUES ({id}, {w}, 'READY', 1.0)"
+            );
+            c.exec(&sql).unwrap();
+        }
+    }
+    c
+}
+
+/// The tentpole property: run concurrent claim workers (compiled fast
+/// path), interpreted DML, and steering scanners, then demand that the obs
+/// registry reconciles *exactly* with the router's own counters and with
+/// the per-call tally the threads kept themselves.
+#[test]
+fn obs_counters_reconcile_with_route_counters_under_concurrent_load() {
+    let c = workload_cluster();
+    let obs = c.obs().clone();
+
+    // scanners: scatter aggregates + snapshot joins + centralized point
+    // reads, continuously, while the claims churn underneath
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut scanners = Vec::new();
+    for _ in 0..2 {
+        let c = c.clone();
+        let stop = stop.clone();
+        scanners.push(std::thread::spawn(move || {
+            let mut n = 0u64;
+            while !stop.load(Ordering::SeqCst) {
+                let rs = c
+                    .query("SELECT status, COUNT(*) FROM workqueue GROUP BY status")
+                    .unwrap();
+                assert!(!rs.rows.is_empty());
+                c.query(
+                    "SELECT n.hostname, COUNT(*) AS c FROM workqueue t \
+                     JOIN node n ON t.workerid = n.nodeid \
+                     GROUP BY n.hostname ORDER BY c DESC",
+                )
+                .unwrap();
+                // prunes to one partition, no aggregate: centralized route
+                c.query("SELECT status FROM workqueue WHERE workerid = 1").unwrap();
+                n += 1;
+            }
+            n
+        }));
+    }
+
+    // claim workers: every successful prepared DML call is tallied locally;
+    // the drained-partition probe (empty claim) counts too — it still runs
+    // the compiled plan
+    let mut claimers = Vec::new();
+    for w in 0..PARTS {
+        let c = c.clone();
+        claimers.push(std::thread::spawn(move || {
+            let claim = c.prepare(CLAIM).unwrap();
+            let bump = c.prepare(OR_BUMP).unwrap();
+            let mut dml_calls = 0u64;
+            let params = [Value::Int(w as i64)];
+            loop {
+                let r = c
+                    .exec_prepared(w as u32, AccessKind::UpdateToRunning, &claim, &params)
+                    .unwrap();
+                dml_calls += 1;
+                if r.rows().rows.is_empty() {
+                    break;
+                }
+            }
+            for i in 0..10i64 {
+                let base = (w * TASKS_PER_PART) as i64;
+                let params =
+                    [Value::Float(2.0), Value::Int(base + i), Value::Int(base + i + 1)];
+                c.exec_prepared(w as u32, AccessKind::Other, &bump, &params).unwrap();
+                dml_calls += 1;
+            }
+            dml_calls
+        }));
+    }
+    let dml_calls: u64 = claimers.into_iter().map(|h| h.join().unwrap()).sum();
+    stop.store(true, Ordering::SeqCst);
+    for s in scanners {
+        assert!(s.join().unwrap() > 0, "scanner never completed a pass");
+    }
+
+    // quiesced: obs counters equal the router's ground truth, exactly
+    let rc = c.route_counts();
+    assert_eq!(obs.counter(Counter::DmlFast), rc.fast_dml);
+    assert_eq!(obs.counter(Counter::SelectScatter), rc.scatter);
+    assert_eq!(obs.counter(Counter::SelectSnapshotJoin), rc.snapshot_join);
+    assert_eq!(obs.counter(Counter::SelectCentralized), rc.centralized);
+    assert!(rc.scatter > 0, "steering aggregates must scatter");
+    assert!(rc.snapshot_join > 0, "steering joins must snapshot-join");
+    assert!(rc.centralized > 0, "point reads must run centralized");
+
+    // every prepared DML call landed in exactly one of fast/interpreted
+    let (fast, interp) = (obs.counter(Counter::DmlFast), obs.counter(Counter::DmlInterp));
+    assert_eq!(fast + interp, dml_calls, "fast {fast} + interp {interp}");
+    assert!(fast >= (PARTS * TASKS_PER_PART) as u64, "claims must run compiled");
+    assert!(interp >= (PARTS * 10) as u64, "OR updates must interpret");
+
+    // paired histograms: exactly one sample per counted op
+    assert_eq!(obs.hist(Hist::ClaimFast).count(), fast);
+    assert_eq!(obs.hist(Hist::ClaimInterp).count(), interp);
+    assert_eq!(obs.hist(Hist::ScatterScan).count(), rc.scatter + rc.snapshot_join);
+    assert!(obs.hist(Hist::LatchWait).count() > 0, "latch waits must be timed");
+
+    // sharded per-partition counters: total equals the shard sum, and the
+    // claim traffic landed on every partition (workerid hashes to itself)
+    for m in [PartMetric::Claims, PartMetric::Scans, PartMetric::WalRecords] {
+        let sum: u64 = (0..PART_SHARDS).map(|s| obs.part_shard(m, s)).sum();
+        assert_eq!(obs.part_total(m), sum, "{}: total != shard sum", m.label());
+    }
+    for p in 0..PARTS {
+        assert!(obs.part_shard(PartMetric::Claims, p) > 0, "no claims on part {p}");
+        assert!(obs.part_shard(PartMetric::Scans, p) > 0, "no scans on part {p}");
+    }
+
+    // WAL accounting: the global counter, the per-partition ledger, and
+    // the per-node ledger all describe the same committed stream
+    let wal = obs.counter(Counter::WalRecords);
+    assert!(wal > 0, "committed DML must append WAL records");
+    assert_eq!(obs.part_total(PartMetric::WalRecords), wal);
+    let node_sum: u64 = (0..obs.num_nodes()).map(|n| obs.node_wal_records(n)).sum();
+    assert_eq!(node_sum, wal);
+    let flushes = obs.counter(Counter::WalFlushes);
+    assert!(flushes > 0, "group-commit boundaries must be observed");
+    assert!(obs.counter(Counter::WalFlushedCommits) >= flushes);
+    assert_eq!(obs.hist(Hist::WalFlush).count(), flushes);
+}
+
+/// The slow-op ring under real traffic: bounded, sorted, spans unique, and
+/// every retained op's stage breakdown covers its total (the residual is
+/// folded into `exec` when the span closes).
+#[test]
+fn slow_op_ring_retains_bounded_sorted_spans_with_stage_breakdowns() {
+    let c = workload_cluster();
+    let obs = c.obs().clone();
+    let claim = c.prepare(CLAIM).unwrap();
+    for w in 0..PARTS {
+        let params = [Value::Int(w as i64)];
+        loop {
+            let r =
+                c.exec_prepared(0, AccessKind::UpdateToRunning, &claim, &params).unwrap();
+            if r.rows().rows.is_empty() {
+                break;
+            }
+        }
+    }
+    c.query("SELECT status, COUNT(*) FROM workqueue GROUP BY status").unwrap();
+
+    let ops = obs.slow_ops(SLOW_RING_K);
+    assert!(!ops.is_empty(), "traced ops must populate the ring");
+    assert!(ops.len() <= SLOW_RING_K);
+    assert!(ops.windows(2).all(|w| w[0].total_nanos >= w[1].total_nanos));
+    let mut spans: Vec<u64> = ops.iter().map(|o| o.span).collect();
+    spans.sort_unstable();
+    spans.dedup();
+    assert_eq!(spans.len(), ops.len(), "span ids must be unique");
+    for op in &ops {
+        assert!(op.total_nanos > 0);
+        assert!(!op.label.is_empty());
+        let staged: u64 = op.stages.iter().sum();
+        assert!(
+            staged >= op.total_nanos,
+            "{}: stages {staged} must cover total {}",
+            op.label,
+            op.total_nanos
+        );
+        // residual folding: exec absorbs whatever the timed stages missed
+        assert!(op.stages[Stage::Exec as usize] > 0 || staged == op.total_nanos);
+    }
+}
+
+/// The paper's "monitoring is just workflow data" claim, checked for
+/// consistency: one SQL snapshot of the `monitoring` table must be
+/// internally consistent (each sharded metric's global row equals the sum
+/// of its part rows), stamped with the live cluster epoch, and re-reading
+/// re-materializes a fresh — still consistent — snapshot.
+#[test]
+fn monitoring_table_snapshots_are_internally_consistent() {
+    let c = workload_cluster();
+    let claim = c.prepare(CLAIM).unwrap();
+    for w in 0..PARTS {
+        let params = [Value::Int(w as i64)];
+        for _ in 0..5 {
+            c.exec_prepared(0, AccessKind::UpdateToRunning, &claim, &params).unwrap();
+        }
+    }
+
+    // ONE query per snapshot: each SELECT touching `monitoring` triggers a
+    // fresh materialization, and the refresh's own writes move the very
+    // counters being materialized — two queries see two snapshots
+    let check = |ctx: &str| {
+        let rs = c
+            .query("SELECT part, cnt, epoch FROM monitoring WHERE metric = 'part_claims'")
+            .unwrap();
+        let mut global: Option<i64> = None;
+        let mut part_sum = 0i64;
+        for row in &rs.rows {
+            let part = row.values[0].as_i64().unwrap();
+            let cnt = row.values[1].as_i64().unwrap();
+            assert_eq!(
+                row.values[2].as_i64().unwrap(),
+                c.cluster_epoch() as i64,
+                "{ctx}: epoch stamp"
+            );
+            if part == -1 {
+                assert!(global.is_none(), "{ctx}: exactly one global row");
+                global = Some(cnt);
+            } else {
+                assert!((0..PART_SHARDS as i64).contains(&part), "{ctx}: part {part}");
+                assert!(cnt > 0, "{ctx}: zero shards are omitted");
+                part_sum += cnt;
+            }
+        }
+        let global = global.unwrap_or_else(|| panic!("{ctx}: global row missing"));
+        assert_eq!(global, part_sum, "{ctx}: global row != sum of part rows");
+        assert!(global >= (PARTS * 5) as i64, "{ctx}: claims undercounted");
+    };
+    check("first snapshot");
+    // the refresh between these two snapshots bumps the claim counters
+    // itself (its INSERTs are prepared DML) — consistency must survive that
+    check("second snapshot");
+
+    let rs = c
+        .query(
+            "SELECT cnt FROM monitoring \
+             WHERE metric = 'monitoring_refreshes' AND part = -1 AND node = -1",
+        )
+        .unwrap();
+    assert_eq!(rs.rows.len(), 1);
+    // the row describes the registry as of *before* this query's refresh
+    assert!(rs.rows[0].values[0].as_i64().unwrap() >= 2);
+}
+
+/// The acceptance path: a remote client drives load over TCP, then reads
+/// the telemetry three ways — the extended `Stats` reply, the `Metrics`
+/// exposition + slow-op ring, and a plain SELECT on `monitoring`.
+#[test]
+fn remote_client_reads_metrics_and_monitoring_over_the_wire() {
+    let cluster = DbCluster::start(ClusterConfig::default()).unwrap();
+    let server = Server::bind(any_addr(), cluster, ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    let mut c = Client::connect(addr, 0, AccessKind::Other).unwrap();
+    c.exec_sql(&format!(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
+         status TEXT, dur FLOAT, starttime FLOAT) \
+         PARTITION BY HASH(workerid) PARTITIONS {PARTS} \
+         PRIMARY KEY (taskid) INDEX (status)"
+    ))
+    .unwrap();
+    let (ins, _) = c
+        .prepare("INSERT INTO workqueue (taskid, workerid, status, dur) VALUES (?, ?, 'READY', ?)")
+        .unwrap();
+    let rows: Vec<Vec<Value>> = (0..40i64)
+        .map(|i| vec![Value::Int(i), Value::Int(i % PARTS as i64), Value::Float(1.0)])
+        .collect();
+    c.exec_batch(ins, AccessKind::InsertTasks, &rows).unwrap();
+    let (claim, _) = c.prepare(CLAIM).unwrap();
+    for w in 0..PARTS {
+        loop {
+            match c.exec(claim, &[Value::Int(w as i64)]).unwrap() {
+                StatementResult::Rows(rs) if !rs.rows.is_empty() => {}
+                _ => break,
+            }
+        }
+    }
+    c.query("SELECT status, COUNT(*) FROM workqueue GROUP BY status").unwrap();
+
+    // (1) the extended Stats reply carries the obs counters
+    let stats = c.stats(false, false).unwrap();
+    assert!(stats.fast_dml >= 40, "claims crossed the wire on the fast path");
+    assert!(stats.wal_records > 0);
+    assert!(stats.wal_flushes > 0);
+    assert!(stats.frames_in > 0 && stats.frames_out > 0);
+    assert!(stats.bytes_in > stats.frames_in, "frames have headers");
+    assert!(stats.bytes_out > stats.frames_out);
+    assert_eq!(stats.frame_errors, 0);
+
+    // (2) the Metrics reply: parseable exposition + slow ops with the
+    // engine's stage vocabulary
+    let m = c.metrics(8).unwrap();
+    assert!(m.text.contains("schaladb_dml_fast_total"));
+    assert!(m.text.contains("schaladb_server_frames_in_total"));
+    for line in m.text.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (name, value) = line.rsplit_once(' ').expect("name value");
+        assert!(name.starts_with("schaladb_"), "bad series name in {line:?}");
+        assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+    }
+    assert!(!m.slow_ops.is_empty(), "remote traffic must populate the ring");
+    assert!(m.slow_ops.len() <= 8);
+    for op in &m.slow_ops {
+        assert!(op.total_nanos > 0);
+        let labels: Vec<&str> = op.stages.iter().map(|(s, _)| s.as_str()).collect();
+        assert_eq!(labels, ["latch", "exec", "wal", "scan"]);
+    }
+
+    // (3) the monitoring table is reachable through the ordinary remote
+    // SQL path — telemetry really is just workflow data
+    let rs = c
+        .query(
+            "SELECT metric, value, cnt FROM monitoring \
+             WHERE part = -1 AND node = -1 ORDER BY metric",
+        )
+        .unwrap();
+    assert!(!rs.rows.is_empty());
+    let fast = rs
+        .rows
+        .iter()
+        .find(|r| r.values[0] == Value::str("dml_fast"))
+        .expect("dml_fast row");
+    assert!(fast.values[2].as_i64().unwrap() >= 40);
+    let frames = rs
+        .rows
+        .iter()
+        .find(|r| r.values[0] == Value::str("server_frames_in"))
+        .expect("server_frames_in row");
+    assert!(frames.values[2].as_i64().unwrap() > 0);
+    c.close().unwrap();
+}
