@@ -7,7 +7,7 @@
 
 use schaladb::metrics::Histogram;
 use schaladb::storage::checkpoint::checkpoint_node;
-use schaladb::storage::cluster::{ClusterConfig, DurabilityConfig};
+use schaladb::storage::cluster::{ClusterConfig, ConcurrencyMode, DurabilityConfig};
 use schaladb::storage::replication::AvailabilityManager;
 use schaladb::storage::{AccessKind, DbCluster, Value};
 use schaladb::util::clock;
@@ -47,7 +47,11 @@ impl Bench {
 }
 
 fn wq_cluster(workers: usize, rows: usize) -> Arc<DbCluster> {
-    let c = DbCluster::start(ClusterConfig::default()).unwrap();
+    wq_cluster_mode(workers, rows, ConcurrencyMode::TwoPL)
+}
+
+fn wq_cluster_mode(workers: usize, rows: usize, mode: ConcurrencyMode) -> Arc<DbCluster> {
+    let c = DbCluster::start(ClusterConfig { concurrency: mode, ..Default::default() }).unwrap();
     c.exec(&format!(
         "CREATE TABLE workqueue (taskid INT NOT NULL, actid INT, workerid INT NOT NULL, \
          status TEXT, dur FLOAT, starttime FLOAT, endtime FLOAT) \
@@ -347,6 +351,199 @@ fn bench_obs(quick: bool, workers: usize, rows: usize) -> Vec<Bench> {
     out
 }
 
+// Optimistic concurrency for the claim loop: the same PK-probe point claim
+// that the DML fast-path section measures, swept across 1/2/4/8/16 worker
+// threads under the three execution tiers — OCC (read + compute off-lock,
+// validate-and-install under a short commit section), the 2PL compiled
+// fast path (write latches held for the whole statement), and the
+// interpreted executor. Claims are NOW()-free and disjoint (each thread
+// owns a lane of taskids inside its partition), so every arm does the same
+// logical work and the sweep isolates latch vs validation cost. A hot-row
+// arm hammers one row from 8 threads so the retry machinery shows up in
+// the numbers too. Emits BENCH_occ.json, including the machine's core
+// count so the CI gate knows which ratios are physically meaningful.
+fn bench_occ(quick: bool, workers: usize, rows: usize) -> Vec<Bench> {
+    let it = |n: usize| if quick { (n / 20).max(10) } else { n };
+    let point_sql = "UPDATE workqueue SET status = 'RUNNING', starttime = 1.0 \
+                     WHERE taskid = ? AND status = 'READY' AND workerid = ?";
+
+    #[derive(Clone, Copy)]
+    enum Arm {
+        Occ,
+        Fast,
+        Interp,
+    }
+
+    let run_claims = |threads: usize, arm: Arm| -> (f64, u64, u64, u64) {
+        let mode = match arm {
+            Arm::Occ => ConcurrencyMode::Occ,
+            _ => ConcurrencyMode::TwoPL,
+        };
+        // When threads > partitions, several threads share a partition;
+        // each walks its own lane of that partition's residue class so
+        // claims stay disjoint.
+        let lanes = (threads + workers - 1) / workers;
+        let per_thread = it(1_000).min(rows / (workers * lanes));
+        let c = wq_cluster_mode(workers, rows, mode);
+        let p = c.prepare(point_sql).unwrap();
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let c = c.clone();
+            let p = p.clone();
+            handles.push(std::thread::spawn(move || {
+                let w = t % workers;
+                let lane = t / workers;
+                for i in 0..per_thread {
+                    // partition w holds taskids congruent to w mod workers
+                    let tid = (w + (lane + i * lanes) * workers) as i64;
+                    let params = [Value::Int(tid), Value::Int(w as i64)];
+                    let r = match arm {
+                        Arm::Interp => c.exec_prepared_interpreted(
+                            t as u32,
+                            AccessKind::UpdateToRunning,
+                            &p,
+                            &params,
+                        ),
+                        _ => c.exec_prepared(t as u32, AccessKind::UpdateToRunning, &p, &params),
+                    };
+                    r.unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let rate = (threads * per_thread) as f64 / t0.elapsed().as_secs_f64();
+        let rc = c.route_counts();
+        (rate, rc.occ_dml, rc.occ_retries, rc.occ_fallbacks)
+    };
+
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    std::fs::create_dir_all("target/bench-results").ok();
+    let mut obj = schaladb::util::json::Json::obj()
+        .set("wq_rows", rows as f64)
+        .set("partitions", workers as f64)
+        .set("cores", cores as f64);
+    for &threads in &[1usize, 2, 4, 8, 16] {
+        let (interp, _, _, _) = run_claims(threads, Arm::Interp);
+        let (fast, _, _, _) = run_claims(threads, Arm::Fast);
+        let (occ, dml, retries, fallbacks) = run_claims(threads, Arm::Occ);
+        println!(
+            "occ claim loop, {threads} thread(s): interpreted {interp:.0}/s, \
+             2pl fast {fast:.0}/s, occ {occ:.0}/s ({:.2}x vs 2pl; \
+             {dml} occ commits, {retries} retries, {fallbacks} fallbacks)",
+            occ / fast
+        );
+        obj = obj
+            .set(&format!("claims_per_sec_interpreted_{threads}t"), interp)
+            .set(&format!("claims_per_sec_2pl_{threads}t"), fast)
+            .set(&format!("claims_per_sec_occ_{threads}t"), occ)
+            .set(&format!("occ_vs_2pl_{threads}t"), occ / fast)
+            .set(&format!("occ_dml_{threads}t"), dml as f64)
+            .set(&format!("occ_retries_{threads}t"), retries as f64)
+            .set(&format!("occ_fallbacks_{threads}t"), fallbacks as f64);
+    }
+    println!();
+
+    // hot-row contention: 8 threads bump one row's dur. Under 2PL the
+    // write latch serializes them; under OCC every loser revalidates, so
+    // this is the worst case for validation — and the arm that proves the
+    // retry counters move.
+    let bump_sql = "UPDATE workqueue SET dur = dur + 1.0 WHERE taskid = ? AND workerid = ?";
+    let run_hot = |mode: ConcurrencyMode| -> (f64, u64, u64, u64) {
+        let c = wq_cluster_mode(workers, rows, mode);
+        let p = c.prepare(bump_sql).unwrap();
+        let n = it(1_000);
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for t in 0..8u32 {
+            let c = c.clone();
+            let p = p.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..n {
+                    c.exec_prepared(
+                        t,
+                        AccessKind::Other,
+                        &p,
+                        &[Value::Int(0), Value::Int(0)],
+                    )
+                    .unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let rate = (8 * n) as f64 / t0.elapsed().as_secs_f64();
+        let rc = c.route_counts();
+        (rate, rc.occ_dml, rc.occ_retries, rc.occ_fallbacks)
+    };
+    let (hot_2pl, _, _, _) = run_hot(ConcurrencyMode::TwoPL);
+    let (hot_occ, hot_dml, hot_retries, hot_fallbacks) = run_hot(ConcurrencyMode::Occ);
+    println!(
+        "hot-row bump, 8 threads on 1 row: 2pl {hot_2pl:.0}/s, occ {hot_occ:.0}/s \
+         ({hot_dml} occ commits, {hot_retries} retries, {hot_fallbacks} fallbacks)\n"
+    );
+    obj = obj
+        .set("hot_row_per_sec_2pl", hot_2pl)
+        .set("hot_row_per_sec_occ", hot_occ)
+        .set("hot_row_occ_dml", hot_dml as f64)
+        .set("hot_row_occ_retries", hot_retries as f64)
+        .set("hot_row_occ_fallbacks", hot_fallbacks as f64);
+
+    // single-thread latency view of the three tiers
+    let mut out = Vec::new();
+    let c = wq_cluster_mode(workers, rows, ConcurrencyMode::Occ);
+    let p = c.prepare(point_sql).unwrap();
+    out.push(Bench::run("occ point claim (latency)", it(5_000), |i| {
+        let tid = (i % rows) as i64;
+        c.exec_prepared(
+            0,
+            AccessKind::UpdateToRunning,
+            &p,
+            &[Value::Int(tid), Value::Int(tid % workers as i64)],
+        )
+        .unwrap();
+    }));
+    let c2 = wq_cluster_mode(workers, rows, ConcurrencyMode::TwoPL);
+    let p2 = c2.prepare(point_sql).unwrap();
+    out.push(Bench::run("2pl point claim (latency)", it(5_000), |i| {
+        let tid = (i % rows) as i64;
+        c2.exec_prepared(
+            0,
+            AccessKind::UpdateToRunning,
+            &p2,
+            &[Value::Int(tid), Value::Int(tid % workers as i64)],
+        )
+        .unwrap();
+    }));
+    let c3 = wq_cluster_mode(workers, rows, ConcurrencyMode::TwoPL);
+    let p3 = c3.prepare(point_sql).unwrap();
+    out.push(Bench::run("interpreted point claim (latency)", it(5_000), |i| {
+        let tid = (i % rows) as i64;
+        c3.exec_prepared_interpreted(
+            0,
+            AccessKind::UpdateToRunning,
+            &p3,
+            &[Value::Int(tid), Value::Int(tid % workers as i64)],
+        )
+        .unwrap();
+    }));
+    for b in &out {
+        obj = obj.set(
+            b.name,
+            schaladb::util::json::Json::obj()
+                .set("mean_secs", b.hist.mean())
+                .set("p50_secs", b.hist.quantile(0.5))
+                .set("p99_secs", b.hist.quantile(0.99)),
+        );
+    }
+    std::fs::write("target/bench-results/BENCH_occ.json", obj.to_string()).unwrap();
+    println!("json: target/bench-results/BENCH_occ.json");
+    out
+}
+
 fn main() {
     // STORAGE_MICRO_QUICK=1: CI smoke mode — same benches, ~5% of the
     // iterations, so the workflow exercises every path in seconds.
@@ -380,6 +577,21 @@ fn main() {
     if std::env::var("STORAGE_MICRO_SECTION").as_deref() == Ok("obs") {
         let obs_benches = bench_obs(quick, workers, rows);
         let rows_out: Vec<Vec<String>> = obs_benches.iter().map(|b| b.row()).collect();
+        println!(
+            "{}",
+            schaladb::util::render_table(
+                &["operation", "iters", "mean", "p50", "p99"],
+                &rows_out
+            )
+        );
+        return;
+    }
+
+    // STORAGE_MICRO_SECTION=occ: only the OCC claim-loop sweep — the CI
+    // occ-bench job's quick gate behind BENCH_occ.json.
+    if std::env::var("STORAGE_MICRO_SECTION").as_deref() == Ok("occ") {
+        let occ_benches = bench_occ(quick, workers, rows);
+        let rows_out: Vec<Vec<String>> = occ_benches.iter().map(|b| b.row()).collect();
         println!(
             "{}",
             schaladb::util::render_table(
@@ -760,6 +972,7 @@ fn main() {
                 replication: true,
                 clock: clock::wall(),
                 durability: Some(DurabilityConfig::new(bench_dir.join(tag), group)),
+                ..Default::default()
             })
             .unwrap();
             c.exec(&format!(
@@ -1147,6 +1360,9 @@ fn main() {
 
     // observability: instrumented vs quiesced claim throughput
     benches.extend(bench_obs(quick, workers, rows));
+
+    // optimistic concurrency: OCC vs 2PL vs interpreted claim loop
+    benches.extend(bench_occ(quick, workers, rows));
 
     let rows_out: Vec<Vec<String>> = benches.iter().map(|b| b.row()).collect();
     println!(

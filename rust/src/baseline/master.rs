@@ -89,6 +89,7 @@ impl ChironEngine {
             replication: false,
             clock: clock::wall(),
             durability: None,
+            ..Default::default()
         })?;
         schema::create_schema(&db, 1)?;
         schema::register_nodes(&db, cfg.workers, cfg.threads_per_worker)?;

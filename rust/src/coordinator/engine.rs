@@ -6,7 +6,7 @@ use crate::coordinator::payload::{Payload, RunnerRegistry};
 use crate::coordinator::supervisor::{IdGen, Supervisor};
 use crate::coordinator::worker::{WorkerConfig, WorkerCounters, WorkerNode};
 use crate::coordinator::{schema, workflow::WorkflowSpec};
-use crate::storage::cluster::{ClusterConfig, DurabilityConfig};
+use crate::storage::cluster::{ClusterConfig, ConcurrencyMode, DurabilityConfig};
 use crate::storage::connector::{assign_links, Connector};
 use crate::storage::stats::{AccessKind, AccessStat};
 use crate::storage::DbCluster;
@@ -47,6 +47,9 @@ pub struct EngineConfig {
     /// Durable-logging configuration passed through to the cluster
     /// (per-partition WAL segments + checkpoints; `None` = in-memory).
     pub durability: Option<DurabilityConfig>,
+    /// Concurrency control for the claim loop's compiled point DML,
+    /// passed through to the cluster (default: 2PL latches).
+    pub concurrency: ConcurrencyMode,
 }
 
 impl Default for EngineConfig {
@@ -64,6 +67,7 @@ impl Default for EngineConfig {
             seed: 42,
             availability_sweep_secs: 0.0,
             durability: None,
+            concurrency: ConcurrencyMode::default(),
         }
     }
 }
@@ -190,6 +194,7 @@ impl DChironEngine {
             replication: cfg.replication,
             clock: clock::wall(),
             durability: cfg.durability.clone(),
+            concurrency: cfg.concurrency,
         })?;
         schema::create_schema(&db, cfg.workers)?;
         schema::register_nodes(&db, cfg.workers, cfg.threads_per_worker)?;

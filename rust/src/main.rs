@@ -15,9 +15,11 @@
 //! dchiron sql
 //!     run the steering SQL demo on a seeded risers database
 //! dchiron serve    [--addr HOST:PORT] [--max-conns N] [--data-nodes N]
+//!                  [--concurrency 2pl|occ]
 //!     start the wire-protocol server: a fresh SchalaDB cluster behind a
 //!     TCP front-end exposing the full prepared-statement API (blocks
-//!     until `dchiron shutdown` — the SIGTERM-equivalent — is received)
+//!     until `dchiron shutdown` — the SIGTERM-equivalent — is received);
+//!     --concurrency selects the point-DML discipline (default 2pl)
 //! dchiron stats    [--addr HOST:PORT] [--fingerprint] [--tables]
 //!     query a running server for route counts, plan cache, epoch and
 //!     live sessions; --fingerprint/--tables add the expensive extras
@@ -44,7 +46,7 @@ use schaladb::metrics;
 use schaladb::runtime::{self, riser, PjrtService};
 use schaladb::server::{parse_addr, Client, Server, ServerConfig};
 use schaladb::sim::experiments;
-use schaladb::storage::{AccessKind, ClusterConfig, Value};
+use schaladb::storage::{AccessKind, ClusterConfig, ConcurrencyMode, Value};
 use schaladb::util::json::Json;
 use schaladb::workload::{self, SyntheticWorkload};
 use schaladb::DbCluster;
@@ -231,14 +233,22 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let addr = flag_addr(flags)?;
     let max_conns: usize = get(flags, "max-conns", 64);
     let data_nodes: usize = get(flags, "data-nodes", 2);
+    let concurrency = match flags.get("concurrency") {
+        None => ConcurrencyMode::default(),
+        Some(name) => ConcurrencyMode::from_name(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown --concurrency mode {name:?} (expected 2pl or occ)")
+        })?,
+    };
     let cluster = DbCluster::start(ClusterConfig {
         data_nodes,
         replication: data_nodes >= 2,
+        concurrency,
         ..Default::default()
     })?;
     let mut server = Server::bind(addr, cluster, ServerConfig { max_conns })?;
     println!(
-        "dchiron serve: listening on {} ({data_nodes} data nodes, max {max_conns} connections)",
+        "dchiron serve: listening on {} ({data_nodes} data nodes, {concurrency:?} point DML, \
+         max {max_conns} connections)",
         server.local_addr()
     );
     println!("stop with: dchiron shutdown --addr {}", server.local_addr());
@@ -272,6 +282,9 @@ fn cmd_stats(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         vec!["obs.bytes_in".into(), s.bytes_in.to_string()],
         vec!["obs.bytes_out".into(), s.bytes_out.to_string()],
         vec!["obs.frame_errors".into(), s.frame_errors.to_string()],
+        vec!["occ.dml".into(), s.occ_dml.to_string()],
+        vec!["occ.retries".into(), s.occ_retries.to_string()],
+        vec!["occ.fallbacks".into(), s.occ_fallbacks.to_string()],
     ];
     println!("{}", schaladb::util::render_table(&header, &rows));
     if let Some(fp) = &s.fingerprint {
@@ -496,13 +509,22 @@ fn cmd_top(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         let m = client.metrics(5)?;
         // first tick has no baseline: rates start at zero, totals are live
         let p = prev.unwrap_or_else(|| s.clone());
+        // `saturating_sub`, not `-`: counters restart at zero when the
+        // registry is quiesced and re-enabled (`set_enabled(false)` →
+        // `true` resets the observation window), so a snapshot taken
+        // across that boundary can be *smaller* than the previous one. A
+        // negative delta is not a rate — clamp it to zero and let the
+        // next tick re-baseline.
         let rate = |cur: u64, old: u64| cur.saturating_sub(old) as f64 / interval;
         let row = |name: &str, cur: u64, old: u64| {
             vec![name.to_string(), cur.to_string(), format!("{:.0}", rate(cur, old))]
         };
         let rows = vec![
             row("claims.fast", s.fast_dml, p.fast_dml),
+            row("claims.occ", s.occ_dml, p.occ_dml),
             row("claims.interpreted", s.dml_interp, p.dml_interp),
+            row("occ.retries", s.occ_retries, p.occ_retries),
+            row("occ.fallbacks", s.occ_fallbacks, p.occ_fallbacks),
             row("selects.scatter", s.scatter, p.scatter),
             row("selects.snapshot_join", s.snapshot_join, p.snapshot_join),
             row("selects.centralized", s.centralized, p.centralized),

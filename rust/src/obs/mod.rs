@@ -101,9 +101,19 @@ pub enum Counter {
     Rejoins = 14,
     /// Times the `monitoring` table was re-materialized.
     MonitoringRefreshes = 15,
+    /// Point-DML commits installed by the optimistic (OCC) path's
+    /// validation (mirrors `RouteCounters::occ_dml`; no-match OCC reads
+    /// and contention fallbacks are not commits and do not count).
+    OccDml = 16,
+    /// OCC validation conflicts — each one is a retry of the read phase
+    /// (mirrors `RouteCounters::occ_retries`).
+    OccRetries = 17,
+    /// OCC statements that exhausted their retry budget and fell back to
+    /// the 2PL fast path (mirrors `RouteCounters::occ_fallbacks`).
+    OccFallbacks = 18,
 }
 
-const N_COUNTERS: usize = 16;
+const N_COUNTERS: usize = 19;
 
 impl Counter {
     pub const ALL: [Counter; N_COUNTERS] = [
@@ -123,6 +133,9 @@ impl Counter {
         Counter::SweepRuns,
         Counter::Rejoins,
         Counter::MonitoringRefreshes,
+        Counter::OccDml,
+        Counter::OccRetries,
+        Counter::OccFallbacks,
     ];
 
     pub fn label(self) -> &'static str {
@@ -143,6 +156,9 @@ impl Counter {
             Counter::SweepRuns => "sweep_runs",
             Counter::Rejoins => "rejoins",
             Counter::MonitoringRefreshes => "monitoring_refreshes",
+            Counter::OccDml => "occ_dml",
+            Counter::OccRetries => "occ_retries",
+            Counter::OccFallbacks => "occ_fallbacks",
         }
     }
 }
@@ -164,9 +180,20 @@ pub enum Hist {
     Sweep = 5,
     /// Per-node rejoin duration (catch-up rounds + final cut).
     Rejoin = 6,
+    /// OCC commit-critical-section latency (latch + stamp revalidation +
+    /// install), one sample per validation attempt. Structurally,
+    /// `count == OccDml + OccRetries`: every attempt either commits or
+    /// conflicts (`tests/obs_telemetry.rs` asserts this).
+    OccValidate = 7,
+    /// Retries-per-statement distribution for OCC statements that entered
+    /// the commit section, recorded at statement completion (commit or
+    /// fallback) through the same log2 buckets as the latency histograms
+    /// with 1 retry ≡ 1 µs — so bucket 0 is "committed first try".
+    /// Structurally, `count == OccDml + OccFallbacks`.
+    OccRetryDist = 8,
 }
 
-const N_HISTS: usize = 7;
+const N_HISTS: usize = 9;
 
 impl Hist {
     pub const ALL: [Hist; N_HISTS] = [
@@ -177,6 +204,8 @@ impl Hist {
         Hist::WalFlush,
         Hist::Sweep,
         Hist::Rejoin,
+        Hist::OccValidate,
+        Hist::OccRetryDist,
     ];
 
     pub fn label(self) -> &'static str {
@@ -188,6 +217,8 @@ impl Hist {
             Hist::WalFlush => "wal_flush",
             Hist::Sweep => "sweep",
             Hist::Rejoin => "rejoin",
+            Hist::OccValidate => "occ_validate",
+            Hist::OccRetryDist => "occ_retry_dist",
         }
     }
 }
@@ -264,6 +295,16 @@ impl AtomicHistogram {
         self.buckets.iter().map(|b| b.load(Relaxed)).sum()
     }
 
+    /// Zero all state (quiesce→resume restart of the observation window).
+    fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Relaxed);
+        }
+        self.sum_nanos.store(0, Relaxed);
+        self.min_nanos.store(u64::MAX, Relaxed);
+        self.max_nanos.store(0, Relaxed);
+    }
+
     /// Materialize a point-in-time [`Histogram`] (exact when writers are
     /// quiesced, approximate under concurrent recording).
     pub fn snapshot(&self) -> Histogram {
@@ -300,6 +341,13 @@ impl Sharded {
     fn add(&self, pidx: usize, n: u64) {
         self.shards[pidx % PART_SHARDS].fetch_add(n, Relaxed);
         self.total.fetch_add(n, Relaxed);
+    }
+
+    fn reset(&self) {
+        for s in &self.shards {
+            s.store(0, Relaxed);
+        }
+        self.total.store(0, Relaxed);
     }
 }
 
@@ -375,8 +423,31 @@ impl ObsRegistry {
     /// Quiesce (`false`) or re-enable (`true`) all instrumentation. While
     /// quiesced, counters stop moving and the timing helpers skip their
     /// `Instant::now()` calls entirely.
+    ///
+    /// Resuming from a quiesce **resets** every counter, histogram,
+    /// per-partition shard, and per-node WAL ledger: a quiesce window is a
+    /// hole in the observation stream, and restarting from zero keeps the
+    /// registry internally consistent (`count == sum of its histogram's
+    /// buckets`, counters == their paired histogram counts) instead of
+    /// resuming mid-stream with invariant-breaking gaps. Readers that
+    /// difference successive snapshots (`dchiron top`) must therefore
+    /// clamp negative deltas to zero — see `cmd_top`.
     pub fn set_enabled(&self, on: bool) {
-        self.enabled.store(on, Relaxed);
+        let was = self.enabled.swap(on, Relaxed);
+        if on && !was {
+            for c in &self.counters {
+                c.store(0, Relaxed);
+            }
+            for h in &self.hists {
+                h.reset();
+            }
+            for p in &self.parts {
+                p.reset();
+            }
+            for c in self.node_wal_records.iter().chain(self.node_wal_flushes.iter()) {
+                c.store(0, Relaxed);
+            }
+        }
     }
 
     pub fn is_enabled(&self) -> bool {
@@ -467,6 +538,13 @@ impl ObsRegistry {
         if self.is_enabled() {
             self.hists[h as usize].record_nanos(nanos);
         }
+    }
+
+    /// Record a unitless count `n` into histogram `h` under the
+    /// 1 count ≡ 1 µs convention (see [`Hist::OccRetryDist`]): bucket 0
+    /// holds the zeros and bucket `k` holds counts in `[2^(k-1), 2^k)`.
+    pub fn rec_count(&self, h: Hist, n: u64) {
+        self.rec_nanos(h, n.saturating_mul(1_000));
     }
 
     pub fn hist(&self, h: Hist) -> Histogram {
@@ -633,6 +711,45 @@ mod tests {
         reg.set_enabled(true);
         reg.inc(Counter::DmlFast);
         assert_eq!(reg.counter(Counter::DmlFast), 1);
+    }
+
+    #[test]
+    fn resume_from_quiesce_restarts_the_observation_window_at_zero() {
+        let reg = ObsRegistry::new(2);
+        reg.inc(Counter::DmlFast);
+        reg.addc(Counter::WalRecords, 7);
+        reg.rec_nanos(Hist::ClaimFast, 5_000);
+        reg.part_add(PartMetric::Claims, 1, 3);
+        reg.node_wal(1, 4, true);
+        reg.set_enabled(false);
+        reg.set_enabled(true); // resume: everything restarts from zero
+        assert_eq!(reg.counter(Counter::DmlFast), 0);
+        assert_eq!(reg.counter(Counter::WalRecords), 0);
+        assert_eq!(reg.hist(Hist::ClaimFast).count(), 0);
+        assert_eq!(reg.part_total(PartMetric::Claims), 0);
+        assert_eq!(reg.part_shard(PartMetric::Claims, 1), 0);
+        assert_eq!(reg.node_wal_records(1), 0);
+        assert_eq!(reg.node_wal_flushes(1), 0);
+        // and the window records normally afterwards
+        reg.inc(Counter::DmlFast);
+        reg.rec_nanos(Hist::ClaimFast, 2_000);
+        assert_eq!(reg.counter(Counter::DmlFast), 1);
+        assert_eq!(reg.hist(Hist::ClaimFast).count(), 1);
+        // enabling an already-enabled registry is a no-op, not a reset
+        reg.set_enabled(true);
+        assert_eq!(reg.counter(Counter::DmlFast), 1);
+    }
+
+    #[test]
+    fn rec_count_buckets_zero_separately_from_small_counts() {
+        let reg = ObsRegistry::new(1);
+        reg.rec_count(Hist::OccRetryDist, 0);
+        reg.rec_count(Hist::OccRetryDist, 1);
+        reg.rec_count(Hist::OccRetryDist, 3);
+        let h = reg.hist(Hist::OccRetryDist);
+        assert_eq!(h.count(), 3);
+        // mean in "seconds" is count * 1e-6: (0 + 1 + 3) / 3 µs
+        assert!((h.mean() - (4.0 / 3.0) * 1e-6).abs() < 1e-12);
     }
 
     #[test]

@@ -466,6 +466,9 @@ fn stats_reply(shared: &Arc<Shared>, fingerprint: bool, tables: bool) -> Result<
         bytes_in: obs.counter(Counter::BytesIn),
         bytes_out: obs.counter(Counter::BytesOut),
         frame_errors: obs.counter(Counter::FrameErrors),
+        occ_dml: rc.occ_dml,
+        occ_retries: rc.occ_retries,
+        occ_fallbacks: rc.occ_fallbacks,
         fingerprint: None,
         table_rows: Vec::new(),
     };

@@ -29,7 +29,7 @@ use std::io::{Read, Write};
 /// change; the server rejects mismatched clients with a typed error.
 /// v2: `Metrics` request/response and the observability fields appended to
 /// `StatsReply`.
-pub const PROTO_VERSION: u16 = 2;
+pub const PROTO_VERSION: u16 = 3;
 
 /// Upper bound on one frame's payload. Large enough for any steering
 /// result set we produce, small enough that a hostile or corrupt length
@@ -567,6 +567,13 @@ pub struct StatsReply {
     pub bytes_out: u64,
     /// Malformed / failed frames observed by the server (obs).
     pub frame_errors: u64,
+    /// Point claims committed by the optimistic (OCC) path.
+    pub occ_dml: u64,
+    /// OCC validation conflicts (each one is a retry of the claim).
+    pub occ_retries: u64,
+    /// OCC claims that exhausted their retry budget and fell back to the
+    /// 2PL fast path.
+    pub occ_fallbacks: u64,
     pub fingerprint: Option<String>,
     pub table_rows: Vec<(String, u64)>,
 }
@@ -657,6 +664,9 @@ impl Response {
                     s.bytes_in,
                     s.bytes_out,
                     s.frame_errors,
+                    s.occ_dml,
+                    s.occ_retries,
+                    s.occ_fallbacks,
                 ] {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
@@ -732,6 +742,9 @@ impl Response {
                     bytes_in: b.u64()?,
                     bytes_out: b.u64()?,
                     frame_errors: b.u64()?,
+                    occ_dml: b.u64()?,
+                    occ_retries: b.u64()?,
+                    occ_fallbacks: b.u64()?,
                     fingerprint: None,
                     table_rows: Vec::new(),
                 };
@@ -885,6 +898,9 @@ mod tests {
             bytes_in: 7_000,
             bytes_out: 8_000,
             frame_errors: 1,
+            occ_dml: 250,
+            occ_retries: 12,
+            occ_fallbacks: 2,
             ..Default::default()
         })));
         roundtrip_resp(Response::Metrics(Box::new(MetricsReply {

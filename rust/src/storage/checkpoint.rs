@@ -425,6 +425,7 @@ mod tests {
             replication: true,
             clock: clock::wall(),
             durability: Some(DurabilityConfig::new(dir.clone(), 4)),
+            ..Default::default()
         })
         .unwrap();
         c.exec(
@@ -485,6 +486,7 @@ mod tests {
             replication: true,
             clock: clock::wall(),
             durability: Some(DurabilityConfig::new(dir.clone(), 1)),
+            ..Default::default()
         })
         .unwrap();
         c.exec(

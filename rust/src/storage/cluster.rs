@@ -29,6 +29,7 @@ use crate::storage::wal::{encode_value, read_segment_file, LogOp, NodeWal};
 use crate::storage::{ResultSet, StatementResult};
 use crate::obs::{span, Counter, Hist, ObsRegistry, PartMetric, Stage};
 use crate::util::clock::{self, SharedClock};
+use crate::util::rng::Rng;
 use crate::{Error, Result};
 use rustc_hash::FxHashMap;
 use std::path::PathBuf;
@@ -68,6 +69,39 @@ impl DurabilityConfig {
     }
 }
 
+/// Concurrency-control discipline for compiled point DML (the claim loop).
+///
+/// Selects how `exec_prepared` executes fast-classified single-partition
+/// point UPDATE/DELETE statements; everything else (interpreted
+/// transactions, scatter reads, inserts) is unaffected. The two modes are
+/// byte-equivalent by construction — `tests/occ_equivalence.rs` and the
+/// chaos/scatter suites drive both against the same workload and require
+/// identical `fingerprint()`s.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ConcurrencyMode {
+    /// Pessimistic (the PR 3 fast path): probe, compute, and apply all
+    /// happen under the target partition's primary+backup write latches.
+    #[default]
+    TwoPL,
+    /// Optimistic: read the target row and its slot stamp without write
+    /// latches, compute the new row off-lock, then revalidate-and-install
+    /// under a short commit critical section, retrying with jittered
+    /// backoff on conflict and falling back to [`ConcurrencyMode::TwoPL`]
+    /// when the retry budget is exhausted (see `DbCluster::occ_update`).
+    Occ,
+}
+
+impl ConcurrencyMode {
+    /// Parse a mode name (env-var plumbing for benches/tests/CI matrices).
+    pub fn from_name(s: &str) -> Option<ConcurrencyMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "2pl" | "twopl" | "two_pl" => Some(ConcurrencyMode::TwoPL),
+            "occ" => Some(ConcurrencyMode::Occ),
+            _ => None,
+        }
+    }
+}
+
 /// Cluster construction parameters.
 #[derive(Clone)]
 pub struct ClusterConfig {
@@ -83,6 +117,8 @@ pub struct ClusterConfig {
     /// available — the substrate of `DbCluster::restart_node`. `None`
     /// keeps the WAL in memory only (tests, benchmarks).
     pub durability: Option<DurabilityConfig>,
+    /// Concurrency control for compiled point DML (default: 2PL latches).
+    pub concurrency: ConcurrencyMode,
 }
 
 impl Default for ClusterConfig {
@@ -92,6 +128,7 @@ impl Default for ClusterConfig {
             replication: true,
             clock: clock::wall(),
             durability: None,
+            concurrency: ConcurrencyMode::default(),
         }
     }
 }
@@ -127,6 +164,14 @@ pub struct RouteCounters {
     /// Prepared statements served by the compiled DML fast path (no AST,
     /// no interpreter — see `storage::dml_plan`).
     pub fast_dml: AtomicU64,
+    /// Point-DML commits installed by OCC validation (subset of
+    /// `fast_dml`; only meaningful under [`ConcurrencyMode::Occ`]).
+    pub occ_dml: AtomicU64,
+    /// OCC validation conflicts (each one re-ran the read phase).
+    pub occ_retries: AtomicU64,
+    /// OCC statements that exhausted the retry budget and completed on
+    /// the 2PL fast path instead.
+    pub occ_fallbacks: AtomicU64,
 }
 
 /// Snapshot of [`RouteCounters`] (see [`DbCluster::route_counts`]).
@@ -141,6 +186,13 @@ pub struct RouteCounts {
     pub chunks_scanned: u64,
     /// Chunks a zone map excluded before any row was touched.
     pub chunks_pruned: u64,
+    /// OCC-installed point-DML commits (see [`RouteCounters::occ_dml`]).
+    pub occ_dml: u64,
+    /// OCC validation conflicts (see [`RouteCounters::occ_retries`]).
+    pub occ_retries: u64,
+    /// OCC retry-budget exhaustions that completed via 2PL (see
+    /// [`RouteCounters::occ_fallbacks`]).
+    pub occ_fallbacks: u64,
 }
 
 /// What [`DbCluster::restart_node`] reconstructed locally before the
@@ -163,6 +215,8 @@ pub struct DbCluster {
     pub stats: Arc<StatsRegistry>,
     replication: bool,
     durability: Option<DurabilityConfig>,
+    /// Concurrency control for compiled point DML (see [`ConcurrencyMode`]).
+    concurrency: ConcurrencyMode,
     /// Cluster epoch: bumped on every failover promotion. Committed redo
     /// records carry the epoch they committed under; replicas fence
     /// applies from older epochs (see `PartitionStore::apply_redo`).
@@ -330,6 +384,7 @@ impl DbCluster {
             stats: Arc::new(StatsRegistry::new()),
             replication: config.replication,
             durability: config.durability,
+            concurrency: config.concurrency,
             epoch: AtomicU64::new(0),
             place_cursor: AtomicUsize::new(0),
             plans: RwLock::new(FxHashMap::default()),
@@ -349,6 +404,11 @@ impl DbCluster {
     /// The durability configuration this cluster runs with, if any.
     pub fn durability(&self) -> Option<&DurabilityConfig> {
         self.durability.as_ref()
+    }
+
+    /// The concurrency-control mode compiled point DML runs under.
+    pub fn concurrency(&self) -> ConcurrencyMode {
+        self.concurrency
     }
 
     /// Current cluster epoch (bumped on every failover promotion).
@@ -372,6 +432,9 @@ impl DbCluster {
             fast_dml: self.routes.fast_dml.load(AtomicOrdering::Relaxed),
             chunks_scanned: self.scan_metrics.chunks_scanned.load(AtomicOrdering::Relaxed),
             chunks_pruned: self.scan_metrics.chunks_pruned.load(AtomicOrdering::Relaxed),
+            occ_dml: self.routes.occ_dml.load(AtomicOrdering::Relaxed),
+            occ_retries: self.routes.occ_retries.load(AtomicOrdering::Relaxed),
+            occ_fallbacks: self.routes.occ_fallbacks.load(AtomicOrdering::Relaxed),
         }
     }
 
@@ -1142,12 +1205,355 @@ impl DbCluster {
     /// cannot be fast-routed (non-integer partition key, unpromoted dead
     /// primary); the caller falls back to the interpreted path, which
     /// remains the semantic reference.
+    ///
+    /// Under [`ConcurrencyMode::Occ`], eligible point writes try the
+    /// optimistic path first; its fallback chain lands back here on the
+    /// 2PL fast path (contention) or on `Ok(None)` (routing/mirror state
+    /// the optimistic path does not handle), so the three-tier structure
+    /// is OCC → 2PL fast → interpreted.
     fn exec_fast(&self, plan: &DmlPlan, params: &[Value]) -> Result<Option<StatementResult>> {
         match plan {
-            DmlPlan::Update(p) => self.fast_update(p, params),
-            DmlPlan::Delete(p) => self.fast_delete(p, params),
+            DmlPlan::Update(p) => {
+                if self.concurrency == ConcurrencyMode::Occ {
+                    match self.occ_update(p, params)? {
+                        OccOutcome::Done(r) => return Ok(Some(r)),
+                        OccOutcome::Interpret => return Ok(None),
+                        OccOutcome::TwoPL => {}
+                    }
+                }
+                self.fast_update(p, params)
+            }
+            DmlPlan::Delete(p) => {
+                if self.concurrency == ConcurrencyMode::Occ {
+                    match self.occ_delete(p, params)? {
+                        OccOutcome::Done(r) => return Ok(Some(r)),
+                        OccOutcome::Interpret => return Ok(None),
+                        OccOutcome::TwoPL => {}
+                    }
+                }
+                self.fast_delete(p, params)
+            }
             DmlPlan::Insert(p) => self.fast_insert(p, &[params]),
             DmlPlan::Select(p) => self.fast_select(p, params),
+        }
+    }
+
+    // ---------- the optimistic (OCC) point-DML path ----------
+
+    /// Optimistic point UPDATE (the claim-loop shape): read the target
+    /// row's handle and slot stamp under the partition **read** latch,
+    /// compute the new row entirely off-lock, then revalidate-and-install
+    /// under a short commit critical section. Only the install — not the
+    /// probe, predicate evaluation, expression evaluation, coercion, or
+    /// row allocation — serializes on the write latches, which is what
+    /// lets concurrent claimers of *different* rows in one partition
+    /// scale past the 2PL fast path.
+    ///
+    /// Validation rule: the slot's stamp must equal the stamp observed at
+    /// read time **and** the slot must still hold the very `Arc<Row>` we
+    /// read. The stamp catches every in-store rewrite (stamps are
+    /// monotone per store and never rewind, even on abort); the handle
+    /// identity closes the cross-store hole where a failover between read
+    /// and commit retargets validation at a re-seeded replica whose
+    /// independent stamp clock could coincide — we hold the observed
+    /// `Arc`, so its allocation cannot be reused while we compare.
+    ///
+    /// The commit section preserves every 2PL fast-path invariant: latch
+    /// order via `fast_lock`, `fast_mirror_valid` under the held latches,
+    /// dense LSNs (validation failure consumes none; aborts restore
+    /// pre-versions), epoch captured under the latches, and WAL append to
+    /// exactly the applied nodes.
+    fn occ_update(&self, p: &UpdatePlan, params: &[Value]) -> Result<OccOutcome> {
+        // Shape gate: single-row PK point updates. ORDER BY / LIMIT are
+        // meaningless on a one-row match but imply a scan-shaped plan;
+        // those and non-PK probes keep the 2PL fast path.
+        if !p.order.is_empty() || p.limit.is_some() {
+            return Ok(OccOutcome::TwoPL);
+        }
+        let Probe::Pk(pkv) = &p.probe else {
+            return Ok(OccOutcome::TwoPL);
+        };
+        let meta = self.meta(&p.table)?;
+        let def = meta.def.clone();
+        let Some(parts) = p.route.resolve(&def, params) else {
+            return Ok(OccOutcome::Interpret); // non-integer partition key
+        };
+        if parts.len() != 1 {
+            return Ok(OccOutcome::TwoPL);
+        }
+        let pidx = parts[0];
+        let mut retries: u64 = 0;
+        loop {
+            // ---- read phase: no write latches ----
+            let pl = &meta.placements[pidx];
+            let (store, _, role) = self.replica_store(&meta, pidx, pl, true)?;
+            if role != Role::Primary {
+                return Ok(OccOutcome::Interpret); // dead primary, unpromoted
+            }
+            let now = self.clock.now();
+            let observed = {
+                let g = store.read().unwrap();
+                match pkv.get(params).as_i64().and_then(|k| g.slot_by_pk(k)) {
+                    None => None,
+                    Some(slot) => g.get_arc(slot).and_then(|row| {
+                        p.preds
+                            .iter()
+                            .all(|c| c.matches(&row.values, params))
+                            .then(|| (slot, g.slot_stamp(slot), row))
+                    }),
+                }
+            };
+            let Some((slot, stamp, old)) = observed else {
+                // No match at the read latch — that latch hold is the
+                // linearization point, exactly as if the 2PL fast path had
+                // run then and found nothing. (Not an OCC commit: neither
+                // occ_dml nor the retry distribution records it, keeping
+                // the histogram-count invariants exact.)
+                self.obs.part_add_list(PartMetric::Claims, &parts);
+                return Ok(OccOutcome::Done(match &p.returning {
+                    Some(cols) => StatementResult::Rows(ResultSet {
+                        columns: cols.iter().map(|(_, n)| n.clone()).collect(),
+                        rows: Vec::new(),
+                    }),
+                    None => StatementResult::Affected(0),
+                }));
+            };
+
+            // ---- compute phase: off-lock ----
+            let built: Result<Row> = (|| {
+                let mut vals = old.values.clone();
+                for (ci, e) in &p.sets {
+                    vals[*ci] = e.eval(&old.values, params, now)?;
+                }
+                def.schema.coerce_row(Row::new(vals))
+            })();
+            let new_arc = match built {
+                Ok(r) => Arc::new(r),
+                // nothing applied: same no-trace abort as the 2PL path
+                Err(e) => return Err(Error::TxnAborted(e.to_string())),
+            };
+
+            // ---- commit critical section ----
+            let Some(set) = self.fast_lock(&meta, &parts, false)? else {
+                return Ok(OccOutcome::Interpret);
+            };
+            let (locks, targets) = (set.locks, set.targets);
+            let t_latch = self.obs.start();
+            let mut guards: Vec<Guard<'_>> = locks
+                .iter()
+                .map(|(w, s)| {
+                    if *w {
+                        Guard::W(s.write().unwrap())
+                    } else {
+                        Guard::R(s.read().unwrap())
+                    }
+                })
+                .collect();
+            if let Some(n) = self.obs.rec_since(Hist::LatchWait, t_latch) {
+                span::stage_add(Stage::Latch, n);
+            }
+            if !self.fast_mirror_valid(&meta, &targets) {
+                return Ok(OccOutcome::Interpret);
+            }
+            let t_validate = self.obs.start();
+            let t = &targets[0];
+            let valid = {
+                let prim = store_of(&guards, t.prim);
+                prim.slot_stamp(slot) == stamp
+                    && prim.get_arc(slot).map_or(false, |cur| Arc::ptr_eq(&cur, &old))
+            };
+            if !valid {
+                drop(guards);
+                self.routes.occ_retries.fetch_add(1, AtomicOrdering::Relaxed);
+                self.obs.inc(Counter::OccRetries);
+                self.obs.rec_since(Hist::OccValidate, t_validate);
+                retries += 1;
+                if retries >= OCC_MAX_RETRIES {
+                    self.routes.occ_fallbacks.fetch_add(1, AtomicOrdering::Relaxed);
+                    self.obs.inc(Counter::OccFallbacks);
+                    self.obs.rec_count(Hist::OccRetryDist, retries);
+                    return Ok(OccOutcome::TwoPL);
+                }
+                occ_backoff(retries);
+                continue;
+            }
+            self.obs.part_add_list(PartMetric::Claims, &parts);
+            let pre_versions = fast_pre_versions(&guards, &targets);
+            let lsn = match store_of_mut(&mut guards, t.prim)
+                .and_then(|s| s.update_arc(slot, new_arc.clone()))
+            {
+                Ok(displaced) => {
+                    let lsn = store_of(&guards, t.prim).version;
+                    let mut backup_err = None;
+                    if let Some(bi) = t.backup {
+                        if let Err(e) = store_of_mut(&mut guards, bi)
+                            .and_then(|s| s.update_arc(slot, new_arc.clone()))
+                        {
+                            backup_err = Some(e);
+                        }
+                    }
+                    if let Some(e) = backup_err {
+                        store_of_mut(&mut guards, t.prim)
+                            .and_then(|s| s.update_arc(slot, displaced.clone()).map(|_| ()))
+                            .unwrap_or_else(|e2| {
+                                panic!("occ rollback failed: {e2} (original error: {e})")
+                            });
+                        fast_restore_versions(&mut guards, &pre_versions);
+                        return Err(Error::TxnAborted(e.to_string()));
+                    }
+                    lsn
+                }
+                Err(e) => {
+                    fast_restore_versions(&mut guards, &pre_versions);
+                    return Err(Error::TxnAborted(e.to_string()));
+                }
+            };
+            let result = match &p.returning {
+                Some(cols) => StatementResult::Rows(ResultSet {
+                    columns: cols.iter().map(|(_, n)| n.clone()).collect(),
+                    rows: vec![Row::new(
+                        cols.iter().map(|(ci, _)| new_arc.values[*ci].clone()).collect(),
+                    )],
+                }),
+                None => StatementResult::Affected(1),
+            };
+            let ops = vec![(
+                lsn,
+                LogOp::Update { table: p.table.clone(), pidx, slot, row: new_arc.clone() },
+            )];
+            let epoch = self.cluster_epoch();
+            self.obs.rec_since(Hist::OccValidate, t_validate);
+            drop(guards);
+            self.append_committed_fast(epoch, &ops, &targets)?;
+            self.routes.occ_dml.fetch_add(1, AtomicOrdering::Relaxed);
+            self.obs.inc(Counter::OccDml);
+            self.obs.rec_count(Hist::OccRetryDist, retries);
+            return Ok(OccOutcome::Done(result));
+        }
+    }
+
+    /// Optimistic point DELETE: same protocol as [`DbCluster::occ_update`]
+    /// (read + stamp off-latch, revalidate-and-remove in the commit
+    /// section, slot-addressed reinsert on backup failure).
+    fn occ_delete(&self, p: &DeletePlan, params: &[Value]) -> Result<OccOutcome> {
+        let Probe::Pk(pkv) = &p.probe else {
+            return Ok(OccOutcome::TwoPL);
+        };
+        let meta = self.meta(&p.table)?;
+        let def = meta.def.clone();
+        let Some(parts) = p.route.resolve(&def, params) else {
+            return Ok(OccOutcome::Interpret);
+        };
+        if parts.len() != 1 {
+            return Ok(OccOutcome::TwoPL);
+        }
+        let pidx = parts[0];
+        let mut retries: u64 = 0;
+        loop {
+            let pl = &meta.placements[pidx];
+            let (store, _, role) = self.replica_store(&meta, pidx, pl, true)?;
+            if role != Role::Primary {
+                return Ok(OccOutcome::Interpret);
+            }
+            let observed = {
+                let g = store.read().unwrap();
+                match pkv.get(params).as_i64().and_then(|k| g.slot_by_pk(k)) {
+                    None => None,
+                    Some(slot) => g.get_arc(slot).and_then(|row| {
+                        p.preds
+                            .iter()
+                            .all(|c| c.matches(&row.values, params))
+                            .then(|| (slot, g.slot_stamp(slot), row))
+                    }),
+                }
+            };
+            let Some((slot, stamp, old)) = observed else {
+                self.obs.part_add_list(PartMetric::Claims, &parts);
+                return Ok(OccOutcome::Done(StatementResult::Affected(0)));
+            };
+
+            let Some(set) = self.fast_lock(&meta, &parts, false)? else {
+                return Ok(OccOutcome::Interpret);
+            };
+            let (locks, targets) = (set.locks, set.targets);
+            let t_latch = self.obs.start();
+            let mut guards: Vec<Guard<'_>> = locks
+                .iter()
+                .map(|(w, s)| {
+                    if *w {
+                        Guard::W(s.write().unwrap())
+                    } else {
+                        Guard::R(s.read().unwrap())
+                    }
+                })
+                .collect();
+            if let Some(n) = self.obs.rec_since(Hist::LatchWait, t_latch) {
+                span::stage_add(Stage::Latch, n);
+            }
+            if !self.fast_mirror_valid(&meta, &targets) {
+                return Ok(OccOutcome::Interpret);
+            }
+            let t_validate = self.obs.start();
+            let t = &targets[0];
+            let valid = {
+                let prim = store_of(&guards, t.prim);
+                prim.slot_stamp(slot) == stamp
+                    && prim.get_arc(slot).map_or(false, |cur| Arc::ptr_eq(&cur, &old))
+            };
+            if !valid {
+                drop(guards);
+                self.routes.occ_retries.fetch_add(1, AtomicOrdering::Relaxed);
+                self.obs.inc(Counter::OccRetries);
+                self.obs.rec_since(Hist::OccValidate, t_validate);
+                retries += 1;
+                if retries >= OCC_MAX_RETRIES {
+                    self.routes.occ_fallbacks.fetch_add(1, AtomicOrdering::Relaxed);
+                    self.obs.inc(Counter::OccFallbacks);
+                    self.obs.rec_count(Hist::OccRetryDist, retries);
+                    return Ok(OccOutcome::TwoPL);
+                }
+                occ_backoff(retries);
+                continue;
+            }
+            self.obs.part_add_list(PartMetric::Claims, &parts);
+            let pre_versions = fast_pre_versions(&guards, &targets);
+            let lsn = match store_of_mut(&mut guards, t.prim).and_then(|s| s.delete(slot)) {
+                Ok(removed) => {
+                    let lsn = store_of(&guards, t.prim).version;
+                    let mut backup_err = None;
+                    if let Some(bi) = t.backup {
+                        if let Err(e) =
+                            store_of_mut(&mut guards, bi).and_then(|s| s.delete(slot).map(|_| ()))
+                        {
+                            backup_err = Some(e);
+                        }
+                    }
+                    if let Some(e) = backup_err {
+                        store_of_mut(&mut guards, t.prim)
+                            .and_then(|s| s.insert_at_arc(slot, removed.clone()))
+                            .unwrap_or_else(|e2| {
+                                panic!("occ rollback failed: {e2} (original error: {e})")
+                            });
+                        fast_restore_versions(&mut guards, &pre_versions);
+                        return Err(Error::TxnAborted(e.to_string()));
+                    }
+                    lsn
+                }
+                Err(e) => {
+                    fast_restore_versions(&mut guards, &pre_versions);
+                    return Err(Error::TxnAborted(e.to_string()));
+                }
+            };
+            let ops =
+                vec![(lsn, LogOp::Delete { table: p.table.clone(), pidx, slot })];
+            let epoch = self.cluster_epoch();
+            self.obs.rec_since(Hist::OccValidate, t_validate);
+            drop(guards);
+            self.append_committed_fast(epoch, &ops, &targets)?;
+            self.routes.occ_dml.fetch_add(1, AtomicOrdering::Relaxed);
+            self.obs.inc(Counter::OccDml);
+            self.obs.rec_count(Hist::OccRetryDist, retries);
+            return Ok(OccOutcome::Done(StatementResult::Affected(1)));
         }
     }
 
@@ -3064,6 +3470,49 @@ impl DbCluster {
 
 // ---------- fast-path plumbing ----------
 
+/// How an OCC point-DML attempt resolved (see `DbCluster::occ_update`).
+enum OccOutcome {
+    /// Completed on the optimistic path (committed, or a clean no-match).
+    Done(StatementResult),
+    /// Hand the statement to the 2PL fast path: either the shape is not
+    /// OCC-eligible (non-PK probe, multi-partition route, scan-shaped
+    /// ORDER BY/LIMIT) or the retry budget was exhausted under conflict.
+    TwoPL,
+    /// Routing/mirror state the compiled paths do not handle (dead
+    /// unpromoted primary, liveness flip under the latches, non-integer
+    /// partition key): fall through to the interpreted executor, exactly
+    /// like the 2PL fast path's `Ok(None)`.
+    Interpret,
+}
+
+/// Validation-conflict budget before an OCC statement gives up and takes
+/// the 2PL fast path. Small on purpose: under sustained same-row conflict
+/// the pessimistic latch is the faster discipline, and the fallback keeps
+/// worst-case latency bounded instead of livelocking.
+const OCC_MAX_RETRIES: u64 = 4;
+
+/// Jittered exponential backoff between OCC validation conflicts. The
+/// jitter (a thread-local xoshiro stream, seeded per thread) decorrelates
+/// claimers that collided once so they do not collide again in lockstep;
+/// later attempts also yield the scheduler, which matters when the winner
+/// holds the commit latch but not a core.
+fn occ_backoff(attempt: u64) {
+    use std::cell::RefCell;
+    static SEED: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static RNG: RefCell<Rng> =
+            RefCell::new(Rng::new(SEED.fetch_add(1, AtomicOrdering::Relaxed)));
+    }
+    let cap = 32i64 << attempt.min(8);
+    let spins = RNG.with(|r| r.borrow_mut().range(cap / 2, cap + 1));
+    for _ in 0..spins {
+        std::hint::spin_loop();
+    }
+    if attempt >= 2 {
+        std::thread::yield_now();
+    }
+}
+
 /// One write-locked partition of a fast statement: its index plus the
 /// guard positions of the live primary and (when mirrored) backup replica.
 /// The node ids behind those guards are the partition's WAL target set —
@@ -3631,6 +4080,7 @@ mod tests {
             replication: false,
             clock: clock::wall(),
             durability: None,
+            ..Default::default()
         })
         .unwrap();
         c.exec(

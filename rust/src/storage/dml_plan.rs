@@ -26,11 +26,18 @@
 //! [`Route`] over parameter positions — everything the executor needs to go
 //! from bound values straight to the pruned partition with no AST in sight.
 //!
-//! Statements that do not fit a fast shape compile to `None` and keep
-//! executing through the interpreted `exec_txn` path, which remains the
-//! semantic reference (see `tests/dml_fastpath.rs` for the differential
-//! property tests, and DESIGN.md §"The compiled DML fast path" for the
-//! fallback rules).
+//! A compiled plan feeds two executors: the 2PL fast path (write latches
+//! held for the whole statement) and, when the cluster runs with
+//! [`ConcurrencyMode::Occ`](crate::storage::cluster::ConcurrencyMode) and
+//! the plan is a PK-probe point `UPDATE`/`DELETE` on a single partition,
+//! the optimistic path (read + compute off-lock, per-row versioned
+//! validation in a short commit section, 2PL fallback on repeated
+//! conflict). Statements that do not fit a fast shape compile to `None`
+//! and keep executing through the interpreted `exec_txn` path, which
+//! remains the semantic reference for both (see `tests/dml_fastpath.rs`
+//! and `tests/occ_equivalence.rs` for the differential property tests,
+//! and DESIGN.md §"Concurrency control" for tier dispatch and fallback
+//! rules).
 
 use crate::storage::cexpr::{compile_where, resolve_col};
 use crate::storage::sql::ast::{Expr, Op, SelectItem, SelectStmt, Statement, TableRef};

@@ -26,7 +26,7 @@ pub mod txn;
 pub mod value;
 pub mod wal;
 
-pub use cluster::{ClusterConfig, DbCluster, DurabilityConfig, RejoinStart};
+pub use cluster::{ClusterConfig, ConcurrencyMode, DbCluster, DurabilityConfig, RejoinStart};
 pub use connector::Connector;
 pub use datanode::NodeState;
 pub use prepared::Prepared;

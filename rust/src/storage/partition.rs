@@ -255,6 +255,19 @@ pub struct PartitionStore {
     /// [`PartitionStore::apply_redo`] — a stale rejoiner cannot clobber
     /// writes committed after a promotion it never saw.
     pub epoch: u64,
+    /// Per-slot OCC write stamps: `stamps[slot]` holds the value
+    /// `stamp_clock` had when the slot was last mutated (insert, update,
+    /// or delete). The optimistic point-DML path reads a stamp without
+    /// write latches and revalidates it in its commit critical section —
+    /// equality means the slot was untouched in between. The clock is
+    /// **node-local validation state**, deliberately kept out of
+    /// snapshots, checkpoints, and `fingerprint()`: it never rewinds (not
+    /// even on abort — aborts restore `version`, and a rewinding stamp
+    /// would reopen the ABA window the stamp exists to close), and
+    /// [`PartitionStore::wipe`] clears the slots but keeps the clock so a
+    /// re-seeded replica can never re-mint a previously observed stamp.
+    stamps: Vec<u64>,
+    stamp_clock: u64,
     approx_bytes: usize,
     /// Seal cache: one slot per chunk span; `Some` holds the immutable
     /// sealed chunk shared with snapshots, `None` is the dirty bit set by
@@ -285,6 +298,8 @@ impl PartitionStore {
             secondary,
             version: 0,
             epoch: 0,
+            stamps: Vec::new(),
+            stamp_clock: 0,
             approx_bytes: 0,
             sealed: Mutex::new(Vec::new()),
             snap: Mutex::new(None),
@@ -406,6 +421,24 @@ impl PartitionStore {
         }
     }
 
+    /// Advance the monotone stamp clock and stamp `slot` with it. Called
+    /// by every slot mutation (the shared insert tail, update, delete) so
+    /// an OCC validator that re-reads an equal stamp knows the slot saw no
+    /// intervening write.
+    fn bump_stamp(&mut self, slot: Slot) {
+        if self.stamps.len() < self.rows.len() {
+            self.stamps.resize(self.rows.len(), 0);
+        }
+        self.stamp_clock += 1;
+        self.stamps[slot] = self.stamp_clock;
+    }
+
+    /// The OCC write stamp of `slot` (0 = never written since the last
+    /// wipe). See the `stamps` field docs for the validation protocol.
+    pub fn slot_stamp(&self, slot: Slot) -> u64 {
+        self.stamps.get(slot).copied().unwrap_or(0)
+    }
+
     /// Place a validated row at a specific slot. Shared tail of the insert
     /// paths; the slot must already be carved out of the free set / slab.
     fn place(&mut self, slot: Slot, row: Arc<Row>) {
@@ -418,6 +451,7 @@ impl PartitionStore {
         self.live += 1;
         self.version += 1;
         self.mark_dirty(slot);
+        self.bump_stamp(slot);
     }
 
     /// Insert a validated row; returns its slot (always the smallest free
@@ -573,6 +607,7 @@ impl PartitionStore {
         self.rows[slot] = Some(new_row);
         self.version += 1;
         self.mark_dirty(slot);
+        self.bump_stamp(slot);
         Ok(old)
     }
 
@@ -592,6 +627,7 @@ impl PartitionStore {
         self.live -= 1;
         self.version += 1;
         self.mark_dirty(slot);
+        self.bump_stamp(slot);
         Ok(old)
     }
 
@@ -797,6 +833,10 @@ impl PartitionStore {
         }
         self.live = 0;
         self.approx_bytes = 0;
+        // Stamps are cleared with the slab, but the clock survives: a
+        // re-seeded replica re-stamps every row with strictly fresher
+        // values, so no stamp an OCC reader observed pre-wipe can recur.
+        self.stamps.clear();
     }
 }
 
@@ -1326,5 +1366,47 @@ mod tests {
         ]));
         let s2 = a.insert_arc(raw).unwrap();
         assert_eq!(a.get(s2).unwrap().values[3], Value::Float(3.0));
+    }
+
+    #[test]
+    fn slot_stamps_advance_on_every_mutation_and_never_rewind() {
+        let mut p = store();
+        let s = p.insert(row(1, 0, "READY")).unwrap();
+        let s1 = p.slot_stamp(s);
+        assert!(s1 > 0, "an inserted slot is stamped");
+        p.update(s, row(1, 0, "RUNNING")).unwrap();
+        let s2 = p.slot_stamp(s);
+        assert!(s2 > s1, "update re-stamps the slot");
+        // an unrelated slot's mutation leaves this stamp alone
+        let other = p.insert(row(2, 0, "READY")).unwrap();
+        assert_eq!(p.slot_stamp(s), s2);
+        assert!(p.slot_stamp(other) > s2, "the clock is store-wide monotone");
+        p.delete(s).unwrap();
+        assert!(p.slot_stamp(s) > s2, "delete re-stamps the vacated slot");
+        // an abort-style version rewind must NOT rewind stamps: restoring
+        // `version` is how the LSN sequence stays dense, but reusing an
+        // observed stamp value would reopen the OCC ABA window
+        let v = p.version;
+        let s3 = p.insert(row(3, 0, "READY")).unwrap();
+        let stamp3 = p.slot_stamp(s3);
+        p.delete(s3).unwrap();
+        p.version = v; // what fast_restore_versions does on abort
+        let s4 = p.insert(row(3, 0, "READY")).unwrap();
+        assert_eq!(s3, s4, "canonical allocation reuses the slot");
+        assert!(p.slot_stamp(s4) > stamp3, "stamp keeps rising through the rewind");
+    }
+
+    #[test]
+    fn reseed_stamps_are_fresher_than_anything_observed_before() {
+        let mut p = store();
+        let s = p.insert(row(1, 0, "READY")).unwrap();
+        p.update(s, row(1, 0, "RUNNING")).unwrap();
+        let observed = p.slot_stamp(s);
+        let (cap, rows) = p.snapshot_slotted();
+        p.load_slotted(cap, rows).unwrap();
+        assert!(
+            p.slot_stamp(s) > observed,
+            "wipe clears stamps but keeps the clock, so re-seeded rows re-stamp fresh"
+        );
     }
 }

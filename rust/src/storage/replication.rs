@@ -161,7 +161,8 @@ impl AvailabilityManager {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::storage::cluster::{ClusterConfig, DurabilityConfig};
+    use crate::storage::cluster::{ClusterConfig, ConcurrencyMode, DurabilityConfig};
+    use crate::storage::stats::AccessKind;
     use crate::storage::value::Value;
     use crate::util::clock;
 
@@ -189,6 +190,7 @@ mod tests {
             replication: true,
             clock: clock::wall(),
             durability: Some(DurabilityConfig::new(dir.clone(), 4)),
+            ..Default::default()
         })
         .unwrap();
         c.exec(
@@ -342,6 +344,7 @@ mod tests {
             replication: false,
             clock: clock::wall(),
             durability: Some(DurabilityConfig::new(dir.clone(), 1)),
+            ..Default::default()
         })
         .unwrap();
         c.exec(
@@ -398,6 +401,7 @@ mod tests {
             replication: false,
             clock: clock::wall(),
             durability: Some(DurabilityConfig::new(dir.clone(), group_commit)),
+            ..Default::default()
         })
         .unwrap();
         c.exec(
@@ -505,6 +509,99 @@ mod tests {
         }
     }
 
+    /// The same hand-off race with the claims on the **optimistic** path:
+    /// OCC's commit section derives its mirror set, WAL targets, and
+    /// epoch from the liveness observed under the held latches (exactly
+    /// like the 2PL fast path), so writes racing the rejoin flip must
+    /// land on both replicas — and the run must actually exercise OCC
+    /// commits, not silently fall back.
+    #[test]
+    fn occ_writes_racing_the_rejoin_handoff_reach_both_replicas() {
+        let dir = std::env::temp_dir().join(format!(
+            "schaladb-repl-occ-handoff-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = DbCluster::start(ClusterConfig {
+            data_nodes: 2,
+            replication: true,
+            clock: clock::wall(),
+            durability: Some(DurabilityConfig::new(dir.clone(), 4)),
+            concurrency: ConcurrencyMode::Occ,
+        })
+        .unwrap();
+        c.exec(
+            "CREATE TABLE t (id INT NOT NULL, v FLOAT) \
+             PARTITION BY HASH(id) PARTITIONS 4 PRIMARY KEY (id)",
+        )
+        .unwrap();
+        for i in 0..20 {
+            c.execute(&format!("INSERT INTO t (id, v) VALUES ({i}, {i}.5)")).unwrap();
+        }
+        let am = AvailabilityManager::new(c.clone());
+        c.kill_node(1).unwrap();
+        am.sweep().unwrap();
+        c.execute("UPDATE t SET v = -2.0 WHERE id = 7").unwrap();
+        c.restart_node(1).unwrap();
+
+        let writer = {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                // prepared PK point updates: the shape the OCC path takes
+                let upd = c.prepare("UPDATE t SET v = ? WHERE id = ?").unwrap();
+                for i in 0..300i64 {
+                    let id = i % 20;
+                    loop {
+                        match c.exec_prepared(
+                            0,
+                            AccessKind::UpdateToRunning,
+                            &upd,
+                            &[Value::Float(i as f64), Value::Int(id)],
+                        ) {
+                            Ok(_) => break,
+                            Err(crate::Error::Unavailable(_)) => {
+                                std::thread::sleep(std::time::Duration::from_micros(50));
+                            }
+                            Err(e) => panic!("occ writer failed mid-handoff: {e}"),
+                        }
+                    }
+                }
+            })
+        };
+        let mut rejoined = false;
+        for _ in 0..200 {
+            if am.sweep().unwrap().rejoined > 0 {
+                rejoined = true;
+                break;
+            }
+        }
+        writer.join().unwrap();
+        assert!(rejoined, "node 1 must rejoin under OCC write load");
+
+        let rc = c.route_counts();
+        assert!(
+            rc.occ_dml > 0,
+            "the run must commit through the OCC path, not fall back everywhere"
+        );
+        let n0 = c.node(0).unwrap().clone();
+        let n1 = c.node(1).unwrap().clone();
+        for (table, pidx) in n1.hosted_keys() {
+            let a = n0.partition_even_if_dead(&table, pidx).unwrap();
+            let b = n1.partition_even_if_dead(&table, pidx).unwrap();
+            let (ag, bg) = (a.read().unwrap(), b.read().unwrap());
+            assert_eq!(
+                ag.version, bg.version,
+                "replica LSNs diverged on {table}[{pidx}] across the OCC hand-off"
+            );
+            assert_eq!(
+                ag.snapshot_slotted(),
+                bg.snapshot_slotted(),
+                "replica rows diverged on {table}[{pidx}] across the OCC hand-off"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     /// The automatic checkpoint cadence: every Nth sweep cuts incremental
     /// per-partition checkpoints on every serving node; off-cadence sweeps
     /// cut nothing, and an on-cadence sweep over an unchanged cluster
@@ -523,6 +620,7 @@ mod tests {
             durability: Some(
                 DurabilityConfig::new(dir.clone(), 4).with_checkpoint_cadence(2),
             ),
+            ..Default::default()
         })
         .unwrap();
         c.exec(

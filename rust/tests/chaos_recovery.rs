@@ -12,12 +12,15 @@
 //! must match at every quiescent point, including after kill → restart →
 //! rejoin → re-promotion.
 //!
-//! The CI `chaos-recovery` job runs this under a seed × partition matrix
-//! via `CHAOS_SEED` / `CHAOS_PARTITIONS`; a plain `cargo test` sweeps a
-//! small built-in matrix.
+//! The CI `chaos-recovery` job runs this under a seed × partition ×
+//! concurrency-mode matrix via `CHAOS_SEED` / `CHAOS_PARTITIONS` /
+//! `CHAOS_MODE`; a plain `cargo test` sweeps a small built-in matrix.
+//! `CHAOS_MODE=occ` runs the chaos victim's point claims through the
+//! optimistic path while the twin stays on 2PL — byte-equality then also
+//! proves OCC commits are indistinguishable from pessimistic ones.
 
 use schaladb::storage::checkpoint::checkpoint_node;
-use schaladb::storage::cluster::{ClusterConfig, DurabilityConfig};
+use schaladb::storage::cluster::{ClusterConfig, ConcurrencyMode, DurabilityConfig};
 use schaladb::storage::replication::AvailabilityManager;
 use schaladb::storage::{AccessKind, DbCluster, Prepared, Value};
 use schaladb::util::clock;
@@ -243,8 +246,11 @@ fn run_cell(seed: u64, parts: usize) {
         replication: true,
         clock: clock::wall(),
         durability: Some(DurabilityConfig::new(dir.clone(), 8)),
+        concurrency: chaos_mode(),
     })
     .unwrap();
+    // The twin always runs pessimistic 2PL: under CHAOS_MODE=occ the
+    // byte-equality below is a cross-discipline proof, not a mirror test.
     let b = DbCluster::start(ClusterConfig::default()).unwrap();
     schema(&a, parts);
     schema(&b, parts);
@@ -355,6 +361,16 @@ fn run_cell(seed: u64, parts: usize) {
     assert!(a.cluster_epoch() >= 2);
 
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Point-DML concurrency mode for the chaos victim, from `CHAOS_MODE`
+/// (`2pl` | `occ`, default 2PL). The CI matrix sets it; local runs can
+/// flip it by hand.
+fn chaos_mode() -> ConcurrencyMode {
+    std::env::var("CHAOS_MODE")
+        .ok()
+        .and_then(|s| ConcurrencyMode::from_name(&s))
+        .unwrap_or_default()
 }
 
 /// Seed matrix: one cell from the environment (the CI job matrix), or a

@@ -39,6 +39,7 @@ fn cluster(parts: usize, clock: SharedClock) -> Arc<DbCluster> {
         replication: true,
         clock,
         durability: None,
+        ..Default::default()
     })
     .unwrap();
     c.exec(&format!(

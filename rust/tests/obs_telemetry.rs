@@ -10,7 +10,7 @@
 
 use schaladb::obs::{Counter, Hist, PartMetric, Stage, PART_SHARDS, SLOW_RING_K};
 use schaladb::server::{Client, Server, ServerConfig};
-use schaladb::storage::cluster::ClusterConfig;
+use schaladb::storage::cluster::{ClusterConfig, ConcurrencyMode};
 use schaladb::storage::{AccessKind, DbCluster, StatementResult, Value};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -30,7 +30,11 @@ fn any_addr() -> std::net::SocketAddr {
 }
 
 fn workload_cluster() -> Arc<DbCluster> {
-    let c = DbCluster::start(ClusterConfig::default()).unwrap();
+    workload_cluster_with(ClusterConfig::default())
+}
+
+fn workload_cluster_with(cfg: ClusterConfig) -> Arc<DbCluster> {
+    let c = DbCluster::start(cfg).unwrap();
     c.exec(&format!(
         "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
          status TEXT, dur FLOAT, starttime FLOAT) \
@@ -366,4 +370,115 @@ fn remote_client_reads_metrics_and_monitoring_over_the_wire() {
         .expect("server_frames_in row");
     assert!(frames.values[2].as_i64().unwrap() > 0);
     c.close().unwrap();
+}
+
+/// OCC telemetry end-to-end under `ConcurrencyMode::Occ`: racing PK-probe
+/// claims move the OCC counters and their paired histograms with the
+/// exact 1:1 pairing invariants, the router ledgers agree, the numbers
+/// surface in the `monitoring` table — and the eligibility gate holds:
+/// the index-probe `ORDER BY … LIMIT 1` claim shape never touches the
+/// OCC path even in Occ mode (it keeps the 2PL fast path).
+#[test]
+fn occ_telemetry_reconciles_and_reaches_the_monitoring_table() {
+    const PK_CLAIM: &str = "UPDATE workqueue SET status = 'RUNNING', starttime = 0.0 \
+                            WHERE taskid = ? AND workerid = ? AND status = 'READY'";
+    let c = workload_cluster_with(ClusterConfig {
+        concurrency: ConcurrencyMode::Occ,
+        ..Default::default()
+    });
+    let obs = c.obs().clone();
+
+    // phase 1: two racers per partition claim every task by PK
+    let mut handles = Vec::new();
+    for t in 0..(PARTS * 2) as u32 {
+        let c = c.clone();
+        handles.push(std::thread::spawn(move || {
+            let claim = c.prepare(PK_CLAIM).unwrap();
+            let w = t as usize % PARTS;
+            let mut won = 0u64;
+            for i in 0..TASKS_PER_PART {
+                let id = (w * TASKS_PER_PART + i) as i64;
+                let n = c
+                    .exec_prepared(
+                        t,
+                        AccessKind::UpdateToRunning,
+                        &claim,
+                        &[Value::Int(id), Value::Int(w as i64)],
+                    )
+                    .unwrap()
+                    .affected();
+                won += n as u64;
+            }
+            won
+        }));
+    }
+    let won: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(won, (PARTS * TASKS_PER_PART) as u64, "each task claimed exactly once");
+
+    // ledgers and pairing invariants, quiesced
+    let rc = c.route_counts();
+    assert!(rc.occ_dml > 0, "PK claims in Occ mode must commit through OCC");
+    assert_eq!(obs.counter(Counter::OccDml), rc.occ_dml);
+    assert_eq!(obs.counter(Counter::OccRetries), rc.occ_retries);
+    assert_eq!(obs.counter(Counter::OccFallbacks), rc.occ_fallbacks);
+    assert_eq!(
+        obs.hist(Hist::OccValidate).count(),
+        rc.occ_dml + rc.occ_retries,
+        "one occ_validate sample per validation attempt"
+    );
+    assert_eq!(
+        obs.hist(Hist::OccRetryDist).count(),
+        rc.occ_dml + rc.occ_fallbacks,
+        "one retry-distribution sample per OCC completion"
+    );
+    // OCC completions still count as fast DML (uniform adoption ledger)
+    assert_eq!(obs.counter(Counter::DmlFast), rc.fast_dml);
+    assert_eq!(obs.hist(Hist::ClaimFast).count(), rc.fast_dml);
+    assert!(rc.fast_dml >= rc.occ_dml);
+
+    // phase 2: the index-probe LIMIT 1 shape is OCC-ineligible — running
+    // it (empty result: everything is RUNNING) must not move occ_*
+    let before = (rc.occ_dml, rc.occ_retries, rc.occ_fallbacks);
+    let drain = c.prepare(CLAIM).unwrap();
+    for w in 0..PARTS {
+        let r = c
+            .exec_prepared(w as u32, AccessKind::UpdateToRunning, &drain, &[Value::Int(w as i64)])
+            .unwrap();
+        assert!(r.rows().rows.is_empty(), "everything was already claimed");
+    }
+    let rc2 = c.route_counts();
+    assert_eq!(
+        (rc2.occ_dml, rc2.occ_retries, rc2.occ_fallbacks),
+        before,
+        "the ORDER BY … LIMIT 1 claim shape must stay off the OCC path"
+    );
+
+    // phase 3: the numbers are queryable as workflow data
+    let rs = c
+        .query(
+            "SELECT cnt FROM monitoring \
+             WHERE metric = 'occ_dml' AND part = -1 AND node = -1",
+        )
+        .unwrap();
+    assert_eq!(rs.rows[0].values[0].as_i64().unwrap() as u64, rc2.occ_dml);
+    let rs = c
+        .query("SELECT cnt FROM monitoring WHERE metric = 'occ_validate_p50_seconds'")
+        .unwrap();
+    assert_eq!(
+        rs.rows[0].values[0].as_i64().unwrap() as u64,
+        rc2.occ_dml + rc2.occ_retries,
+        "occ_validate histogram must reach the monitoring table"
+    );
+    let rs = c
+        .query("SELECT cnt FROM monitoring WHERE metric = 'occ_retry_dist_p50_seconds'")
+        .unwrap();
+    assert_eq!(
+        rs.rows[0].values[0].as_i64().unwrap() as u64,
+        rc2.occ_dml + rc2.occ_fallbacks,
+        "the retry-count distribution must reach the monitoring table"
+    );
+    // and the Prometheus exposition carries the same ledger
+    let text = obs.exposition();
+    assert!(text.contains(&format!("schaladb_occ_dml_total {}", rc2.occ_dml)));
+    assert!(text.contains("schaladb_occ_validate_seconds_count"));
 }

@@ -1,0 +1,518 @@
+//! Differential property gate for the optimistic (OCC) point-DML path.
+//!
+//! The claim loop is the paper's hottest statement shape, and PR 8 gives
+//! it a third execution tier: OCC (validate-and-install) above the 2PL
+//! compiled fast path above the interpreted reference executor. This
+//! suite demands the tiers are *indistinguishable by state*: the same
+//! committed stream through OCC, through 2PL, and through the
+//! interpreter must leave byte-identical clusters (`fingerprint()`
+//! equality) — serially, under concurrent claim races across 1/2/4/8
+//! partitions, under dead-primary failover, and across a kill → restart
+//! → rejoin window. It also pins the OCC telemetry invariants:
+//!
+//! - `route_counts().occ_*` equals the obs registry's OCC counters;
+//! - `Hist::OccValidate` holds exactly one sample per validation attempt,
+//!   so its count is `occ_dml + occ_retries`;
+//! - `Hist::OccRetryDist` holds exactly one sample per OCC completion
+//!   (commit or fallback), so its count is `occ_dml + occ_fallbacks`.
+
+use schaladb::obs::{Counter, Hist};
+use schaladb::storage::cluster::{
+    ClusterConfig, ConcurrencyMode, DbCluster, DurabilityConfig,
+};
+use schaladb::storage::replication::AvailabilityManager;
+use schaladb::storage::{AccessKind, Value};
+use schaladb::util::clock::{self, ManualClock, SharedClock};
+use schaladb::util::rng::Rng;
+use std::sync::Arc;
+
+const CLAIM_BY_PK: &str = "UPDATE workqueue SET status = 'RUNNING', starttime = NOW() \
+                           WHERE taskid = ? AND workerid = ? AND status = 'READY'";
+/// NOW()-free claim for wall-clock tests that compare clusters executing
+/// at different instants.
+const CLAIM_FIXED: &str = "UPDATE workqueue SET status = 'RUNNING', starttime = 1.0 \
+                           WHERE taskid = ? AND workerid = ? AND status = 'READY'";
+const FINISH: &str = "UPDATE workqueue SET status = 'FINISHED', dur = dur + ? \
+                      WHERE taskid = ? AND workerid = ?";
+const DELETE: &str = "DELETE FROM workqueue WHERE taskid = ? AND workerid = ?";
+const INSERT: &str = "INSERT INTO workqueue (taskid, workerid, status, dur, starttime) \
+                      VALUES (?, ?, 'READY', ?, 0.0)";
+
+fn cluster(parts: usize, clock: SharedClock, mode: ConcurrencyMode) -> Arc<DbCluster> {
+    let c = DbCluster::start(ClusterConfig {
+        data_nodes: 2,
+        replication: true,
+        clock,
+        durability: None,
+        concurrency: mode,
+    })
+    .unwrap();
+    c.exec(&format!(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
+         status TEXT, dur FLOAT, starttime FLOAT) \
+         PARTITION BY HASH(workerid) PARTITIONS {parts} \
+         PRIMARY KEY (taskid) INDEX (status)"
+    ))
+    .unwrap();
+    c
+}
+
+fn seed(c: &DbCluster, tasks: i64, parts: usize) {
+    let ins = c.prepare(INSERT).unwrap();
+    let rows: Vec<Vec<Value>> = (0..tasks)
+        .map(|i| vec![Value::Int(i), Value::Int(i % parts as i64), Value::Float(1.0)])
+        .collect();
+    c.exec_prepared_batch(0, AccessKind::InsertTasks, &ins, &rows).unwrap();
+}
+
+/// Assert the OCC telemetry pairing invariants on one cluster.
+fn assert_occ_counters_consistent(c: &DbCluster, ctx: &str) {
+    let rc = c.route_counts();
+    let obs = c.obs();
+    assert_eq!(obs.counter(Counter::OccDml), rc.occ_dml, "occ_dml ledgers ({ctx})");
+    assert_eq!(
+        obs.counter(Counter::OccRetries),
+        rc.occ_retries,
+        "occ_retries ledgers ({ctx})"
+    );
+    assert_eq!(
+        obs.counter(Counter::OccFallbacks),
+        rc.occ_fallbacks,
+        "occ_fallbacks ledgers ({ctx})"
+    );
+    assert_eq!(
+        obs.hist(Hist::OccValidate).count(),
+        rc.occ_dml + rc.occ_retries,
+        "one occ_validate sample per validation attempt ({ctx})"
+    );
+    assert_eq!(
+        obs.hist(Hist::OccRetryDist).count(),
+        rc.occ_dml + rc.occ_fallbacks,
+        "one retry-distribution sample per OCC completion ({ctx})"
+    );
+}
+
+// ---------- serial three-tier equivalence ----------
+
+/// One statement stream mirrored across the three execution tiers, all on
+/// one frozen manual clock so `NOW()` is identical everywhere.
+struct Triple {
+    occ: Arc<DbCluster>,
+    twopl: Arc<DbCluster>,
+    interp: Arc<DbCluster>,
+    clock: Arc<ManualClock>,
+}
+
+impl Triple {
+    fn new(parts: usize) -> Triple {
+        let (shared, manual) = clock::manual(0.0);
+        Triple {
+            occ: cluster(parts, shared.clone(), ConcurrencyMode::Occ),
+            twopl: cluster(parts, shared.clone(), ConcurrencyMode::TwoPL),
+            interp: cluster(parts, shared, ConcurrencyMode::TwoPL),
+            clock: manual,
+        }
+    }
+
+    /// Run one statement on all three executors; every per-statement
+    /// outcome (rows / affected count / error text) must match.
+    fn exec_all(&self, sql: &str, params: &[Value]) {
+        let po = self.occ.prepare(sql).unwrap();
+        let pt = self.twopl.prepare(sql).unwrap();
+        let pi = self.interp.prepare(sql).unwrap();
+        let o = self.occ.exec_prepared(0, AccessKind::Other, &po, params);
+        let t = self.twopl.exec_prepared(0, AccessKind::Other, &pt, params);
+        let i = self.interp.exec_prepared_interpreted(0, AccessKind::Other, &pi, params);
+        match (&o, &t) {
+            (Ok(x), Ok(y)) => assert_eq!(x, y, "occ vs 2pl mismatch: {sql} {params:?}"),
+            (Err(x), Err(y)) => {
+                assert_eq!(x.to_string(), y.to_string(), "error mismatch: {sql}")
+            }
+            _ => panic!("divergent outcome for {sql} {params:?}: occ={o:?} 2pl={t:?}"),
+        }
+        match (&t, &i) {
+            (Ok(x), Ok(y)) => assert_eq!(x, y, "2pl vs interp mismatch: {sql} {params:?}"),
+            (Err(x), Err(y)) => {
+                assert_eq!(x.to_string(), y.to_string(), "error mismatch: {sql}")
+            }
+            _ => panic!("divergent outcome for {sql} {params:?}: 2pl={t:?} interp={i:?}"),
+        }
+    }
+
+    fn assert_fingerprints_equal(&self, ctx: &str) {
+        let fo = self.occ.fingerprint().unwrap();
+        let ft = self.twopl.fingerprint().unwrap();
+        let fi = self.interp.fingerprint().unwrap();
+        assert!(!fo.is_empty());
+        assert_eq!(fo, ft, "OCC state diverged from 2PL ({ctx})");
+        assert_eq!(ft, fi, "2PL state diverged from interpreted ({ctx})");
+    }
+}
+
+#[test]
+fn occ_equals_2pl_equals_interpreted_across_partition_counts() {
+    for parts in [1usize, 2, 4, 8] {
+        let t = Triple::new(parts);
+        let mut rng = Rng::new(0x0CC0 + parts as u64);
+        let mut next_id: i64 = 0;
+        for _ in 0..40i64 {
+            let id = next_id;
+            next_id += 1;
+            t.exec_all(
+                INSERT,
+                &[Value::Int(id), Value::Int(id % parts as i64), Value::Float(1.0)],
+            );
+        }
+        for _ in 0..250 {
+            t.clock.advance(0.25);
+            let tid = rng.range(0, next_id);
+            let tw = tid % parts as i64;
+            match rng.index(8) {
+                0 | 1 | 2 => t.exec_all(CLAIM_BY_PK, &[Value::Int(tid), Value::Int(tw)]),
+                3 => t.exec_all(
+                    FINISH,
+                    &[Value::Float(0.5), Value::Int(tid), Value::Int(tw)],
+                ),
+                4 => t.exec_all(DELETE, &[Value::Int(tid), Value::Int(tw)]),
+                5 | 6 => {
+                    let id = next_id;
+                    next_id += 1;
+                    t.exec_all(
+                        INSERT,
+                        &[Value::Int(id), Value::Int(id % parts as i64), Value::Float(2.0)],
+                    );
+                }
+                _ => {
+                    // a miss: PK exists but the partition-key pred fails
+                    t.exec_all(CLAIM_BY_PK, &[Value::Int(tid), Value::Int(tw + 1)]);
+                }
+            }
+        }
+        t.assert_fingerprints_equal(&format!("serial stream, {parts} partitions"));
+        assert!(
+            t.occ.route_counts().occ_dml > 0,
+            "the stream must actually commit through OCC at {parts} partitions"
+        );
+        assert_eq!(
+            t.twopl.route_counts().occ_dml,
+            0,
+            "a TwoPL-mode cluster must never touch the OCC path"
+        );
+        assert_occ_counters_consistent(&t.occ, "serial stream");
+    }
+}
+
+// ---------- concurrent claim races ----------
+
+/// Two threads per partition race PK claims over every task; exactly one
+/// racer wins each row. Afterwards the OCC cluster must be byte-equal to
+/// a 2PL cluster driven through the identical protocol, and the OCC
+/// telemetry must reconcile exactly.
+#[test]
+fn concurrent_occ_claim_races_match_2pl_state() {
+    for parts in [1usize, 2, 4, 8] {
+        let tasks = 40 * parts as i64;
+        let run = |mode: ConcurrencyMode| {
+            let c = cluster(parts, clock::wall(), mode);
+            seed(&c, tasks, parts);
+            let mut handles = Vec::new();
+            for t in 0..(parts * 2) as u32 {
+                let c = c.clone();
+                handles.push(std::thread::spawn(move || {
+                    let claim = c.prepare(CLAIM_FIXED).unwrap();
+                    let w = (t as usize % parts) as i64;
+                    let mut won = 0u64;
+                    // every task of this worker, attempted by both racers
+                    let mut id = w;
+                    while id < tasks {
+                        let n = c
+                            .exec_prepared(
+                                t,
+                                AccessKind::UpdateToRunning,
+                                &claim,
+                                &[Value::Int(id), Value::Int(w)],
+                            )
+                            .unwrap()
+                            .affected();
+                        won += n as u64;
+                        id += parts as i64;
+                    }
+                    won
+                }));
+            }
+            let won: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+            assert_eq!(
+                won, tasks as u64,
+                "every task claimed exactly once at {parts} partitions ({mode:?})"
+            );
+            c
+        };
+        let occ = run(ConcurrencyMode::Occ);
+        let twopl = run(ConcurrencyMode::TwoPL);
+        assert_eq!(
+            occ.fingerprint().unwrap(),
+            twopl.fingerprint().unwrap(),
+            "racing OCC claims diverged from racing 2PL claims at {parts} partitions"
+        );
+        let rc = occ.route_counts();
+        assert!(rc.occ_dml > 0, "races must commit through OCC at {parts} partitions");
+        assert_eq!(twopl.route_counts().occ_dml, 0);
+        assert_occ_counters_consistent(&occ, &format!("{parts}-partition race"));
+    }
+}
+
+// ---------- failover ----------
+
+/// Kill a node mid-stream, promote its backups, keep claiming: OCC and
+/// 2PL must stay byte-equal through the epoch bump, and claims issued
+/// while the primary is dead-but-unpromoted must still commit (OCC
+/// defers to the interpreted path rather than wedging).
+#[test]
+fn occ_equals_2pl_under_dead_primary_failover() {
+    let parts = 4usize;
+    let tasks = 80i64;
+    let run = |mode: ConcurrencyMode| {
+        let c = cluster(parts, clock::wall(), mode);
+        seed(&c, tasks, parts);
+        let claim = c.prepare(CLAIM_FIXED).unwrap();
+        let fin = c.prepare(FINISH).unwrap();
+        // healthy prefix
+        for id in 0..tasks / 2 {
+            c.exec_prepared(
+                0,
+                AccessKind::UpdateToRunning,
+                &claim,
+                &[Value::Int(id), Value::Int(id % parts as i64)],
+            )
+            .unwrap();
+        }
+        // node 1 dies; claims in the unpromoted window may or may not
+        // commit (OCC defers to the interpreted path there rather than
+        // wedging) — tolerate Unavailable, the re-drive below converges
+        c.kill_node(1).unwrap();
+        for id in tasks / 2..tasks {
+            let _ = c.exec_prepared(
+                0,
+                AccessKind::UpdateToRunning,
+                &claim,
+                &[Value::Int(id), Value::Int(id % parts as i64)],
+            );
+        }
+        assert!(c.promote_dead_primaries() > 0, "node 1 must have hosted primaries");
+        // re-drive against the promoted survivors: the `status = 'READY'`
+        // predicate makes this idempotent (0 if the window already
+        // claimed it), so both runs converge to the same final state
+        for id in tasks / 2..tasks {
+            let n = c
+                .exec_prepared(
+                    0,
+                    AccessKind::UpdateToRunning,
+                    &claim,
+                    &[Value::Int(id), Value::Int(id % parts as i64)],
+                )
+                .unwrap()
+                .affected();
+            assert!(n <= 1, "a claim can only land once ({mode:?})");
+        }
+        for id in 0..tasks / 4 {
+            c.exec_prepared(
+                0,
+                AccessKind::UpdateToFinished,
+                &fin,
+                &[Value::Float(0.5), Value::Int(id), Value::Int(id % parts as i64)],
+            )
+            .unwrap();
+        }
+        c
+    };
+    let occ = run(ConcurrencyMode::Occ);
+    let twopl = run(ConcurrencyMode::TwoPL);
+    assert_eq!(
+        occ.fingerprint().unwrap(),
+        twopl.fingerprint().unwrap(),
+        "OCC diverged from 2PL across dead-primary failover"
+    );
+    assert!(occ.route_counts().occ_dml > 0);
+    assert_occ_counters_consistent(&occ, "failover stream");
+}
+
+// ---------- kill / restart / rejoin mid-stream ----------
+
+/// The chaos shape, OCC edition: a durable OCC cluster loses a node,
+/// restarts it from checkpoint+WAL, and rejoins it while racing claimers
+/// keep committing; a never-killed 2PL twin fed the identical committed
+/// stream must stay byte-equal at the end. (The CI chaos matrix runs the
+/// full generated-stream version of this via `CHAOS_MODE=occ`.)
+#[test]
+fn occ_claims_survive_kill_restart_rejoin_mid_stream() {
+    let parts = 4usize;
+    let tasks = 60i64;
+    let dir = std::env::temp_dir().join(format!(
+        "schaladb-occ-rejoin-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let a = DbCluster::start(ClusterConfig {
+        data_nodes: 2,
+        replication: true,
+        clock: clock::wall(),
+        durability: Some(DurabilityConfig::new(dir.clone(), 4)),
+        concurrency: ConcurrencyMode::Occ,
+    })
+    .unwrap();
+    a.exec(&format!(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
+         status TEXT, dur FLOAT, starttime FLOAT) \
+         PARTITION BY HASH(workerid) PARTITIONS {parts} \
+         PRIMARY KEY (taskid) INDEX (status)"
+    ))
+    .unwrap();
+    let b = cluster(parts, clock::wall(), ConcurrencyMode::TwoPL);
+    seed(&a, tasks, parts);
+    seed(&b, tasks, parts);
+    let am = AvailabilityManager::new(a.clone());
+
+    // claim a prefix on both, then lose node 1
+    for id in 0..tasks / 3 {
+        for c in [&a, &b] {
+            let claim = c.prepare(CLAIM_FIXED).unwrap();
+            c.exec_prepared(
+                0,
+                AccessKind::UpdateToRunning,
+                &claim,
+                &[Value::Int(id), Value::Int(id % parts as i64)],
+            )
+            .unwrap();
+        }
+    }
+    a.kill_node(1).unwrap();
+    assert!(am.sweep().unwrap().promoted > 0);
+    a.restart_node(1).unwrap();
+
+    // racing claimers drain the remaining tasks on A while the rejoin
+    // runs; whatever A commits is replayed on the twin afterwards
+    let mut handles = Vec::new();
+    for t in 0..4u32 {
+        let a = a.clone();
+        handles.push(std::thread::spawn(move || {
+            let claim = a.prepare(CLAIM_FIXED).unwrap();
+            let mut won = Vec::new();
+            for id in tasks / 3..tasks {
+                let w = id % parts as i64;
+                loop {
+                    match a.exec_prepared(
+                        t,
+                        AccessKind::UpdateToRunning,
+                        &claim,
+                        &[Value::Int(id), Value::Int(w)],
+                    ) {
+                        Ok(r) => {
+                            if r.affected() == 1 {
+                                won.push(id);
+                            }
+                            break;
+                        }
+                        Err(schaladb::Error::Unavailable(_)) => {
+                            std::thread::sleep(std::time::Duration::from_micros(100));
+                        }
+                        Err(e) => panic!("claim failed during rejoin: {e}"),
+                    }
+                }
+            }
+            won
+        }));
+    }
+    let mut rejoined = false;
+    for _ in 0..200 {
+        if am.sweep().unwrap().rejoined > 0 {
+            rejoined = true;
+            break;
+        }
+    }
+    let mut all: Vec<i64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    assert!(rejoined, "node 1 must rejoin under OCC claim load");
+    all.sort_unstable();
+    let expect: Vec<i64> = (tasks / 3..tasks).collect();
+    assert_eq!(all, expect, "each remaining task claimed exactly once across racers");
+
+    // replay the committed tail on the twin, then demand byte-equality
+    let claim = b.prepare(CLAIM_FIXED).unwrap();
+    for id in tasks / 3..tasks {
+        let n = b
+            .exec_prepared(
+                0,
+                AccessKind::UpdateToRunning,
+                &claim,
+                &[Value::Int(id), Value::Int(id % parts as i64)],
+            )
+            .unwrap()
+            .affected();
+        assert_eq!(n, 1);
+    }
+    assert_eq!(
+        a.fingerprint().unwrap(),
+        b.fingerprint().unwrap(),
+        "OCC cluster diverged from the never-killed 2PL twin across kill/restart/rejoin"
+    );
+    assert!(a.route_counts().occ_dml > 0);
+    assert_occ_counters_consistent(&a, "rejoin stream");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------- fallback / retry accounting under contention ----------
+
+/// Hammer one row from many threads: every increment must land exactly
+/// once whatever mix of OCC commits, retries, and 2PL fallbacks the
+/// scheduler produces — and the telemetry must account for that mix
+/// exactly. (Whether `occ_retries` is nonzero depends on interleaving;
+/// the invariants must hold either way.)
+#[test]
+fn contended_single_row_updates_stay_exact_and_accounted() {
+    let c = cluster(1, clock::wall(), ConcurrencyMode::Occ);
+    seed(&c, 4, 1);
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 50;
+    let mut handles = Vec::new();
+    for t in 0..THREADS as u32 {
+        let c = c.clone();
+        handles.push(std::thread::spawn(move || {
+            let bump = c
+                .prepare("UPDATE workqueue SET dur = dur + ? WHERE taskid = ? AND workerid = ?")
+                .unwrap();
+            for _ in 0..PER_THREAD {
+                let n = c
+                    .exec_prepared(
+                        t,
+                        AccessKind::Other,
+                        &bump,
+                        &[Value::Float(1.0), Value::Int(2), Value::Int(0)],
+                    )
+                    .unwrap()
+                    .affected();
+                assert_eq!(n, 1);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let rs = c
+        .query_centralized("SELECT dur FROM workqueue WHERE taskid = 2")
+        .unwrap();
+    assert_eq!(
+        rs.rows[0].values[0],
+        Value::Float(1.0 + (THREADS * PER_THREAD) as f64),
+        "every contended increment must land exactly once"
+    );
+    let rc = c.route_counts();
+    assert!(rc.occ_dml > 0, "single-row contention must still commit via OCC");
+    // This shape is always OCC-eligible on a healthy cluster and the row
+    // always matches, so every statement completes as exactly one OCC
+    // commit or one counted fallback to 2PL — no third bucket.
+    assert_eq!(
+        rc.occ_dml + rc.occ_fallbacks,
+        (THREADS * PER_THREAD) as u64,
+        "each contended update is an OCC commit or a counted 2PL fallback"
+    );
+    assert_occ_counters_consistent(&c, "contended row");
+}

@@ -4,14 +4,27 @@
 //! over partition snapshots) must return exactly what the centralized 2PL
 //! executor returns, across 1..N partitions and under a dead primary
 //! (backup reads).
+//!
+//! `SCATTER_MODE=occ` reruns the whole suite with point claims on the
+//! optimistic path (the reference executions stay centralized/2PL), so
+//! scan-vs-write equivalence holds under either write discipline.
 
-use schaladb::storage::cluster::ClusterConfig;
+use schaladb::storage::cluster::{ClusterConfig, ConcurrencyMode};
 use schaladb::storage::replication::AvailabilityManager;
 use schaladb::storage::{AccessKind, DbCluster, DurabilityConfig, ResultSet, Value};
 use schaladb::util::clock;
 use schaladb::util::rng::Rng;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+
+/// Point-DML discipline for the cluster under test, from `SCATTER_MODE`
+/// (`2pl` | `occ`, default 2PL).
+fn scatter_mode() -> ConcurrencyMode {
+    std::env::var("SCATTER_MODE")
+        .ok()
+        .and_then(|s| ConcurrencyMode::from_name(&s))
+        .unwrap_or_default()
+}
 
 /// Cluster with `parts` WQ partitions, deterministic data, frozen clock
 /// (so `NOW()` is identical across both executions of a statement).
@@ -22,6 +35,7 @@ fn cluster(parts: usize) -> Arc<DbCluster> {
         replication: true,
         clock: shared,
         durability: None,
+        concurrency: scatter_mode(),
     })
     .unwrap();
     ctl.set(1_000.0);
@@ -341,6 +355,7 @@ fn mutate_while_scanning_survives_rejoin_mid_stream() {
         replication: true,
         clock: shared,
         durability: Some(DurabilityConfig::new(dir.clone(), 1)),
+        concurrency: scatter_mode(),
     })
     .unwrap();
     ctl.set(1_000.0);
