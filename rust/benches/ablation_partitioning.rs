@@ -21,7 +21,7 @@ use std::time::Instant;
 
 /// Claim throughput against a WQ with the given partition count.
 fn claim_throughput(partitions: usize, replication: bool, threads: usize) -> f64 {
-    let c = DbCluster::start(ClusterConfig { data_nodes: 2, replication, ..Default::default() })
+    let c = DbCluster::start(ClusterConfig::builder().replication(replication).build().unwrap())
         .unwrap();
     c.exec(&format!(
         "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, status TEXT) \

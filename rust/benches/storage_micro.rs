@@ -9,8 +9,7 @@ use schaladb::metrics::Histogram;
 use schaladb::storage::checkpoint::checkpoint_node;
 use schaladb::storage::cluster::{ClusterConfig, ConcurrencyMode, DurabilityConfig};
 use schaladb::storage::replication::AvailabilityManager;
-use schaladb::storage::{AccessKind, DbCluster, Value};
-use schaladb::util::clock;
+use schaladb::storage::{AccessKind, DbCluster, StatementResult, Value};
 use schaladb::util::fmt_secs;
 use std::sync::Arc;
 use std::time::Instant;
@@ -51,7 +50,7 @@ fn wq_cluster(workers: usize, rows: usize) -> Arc<DbCluster> {
 }
 
 fn wq_cluster_mode(workers: usize, rows: usize, mode: ConcurrencyMode) -> Arc<DbCluster> {
-    let c = DbCluster::start(ClusterConfig { concurrency: mode, ..Default::default() }).unwrap();
+    let c = DbCluster::start(ClusterConfig::builder().concurrency(mode).build().unwrap()).unwrap();
     c.exec(&format!(
         "CREATE TABLE workqueue (taskid INT NOT NULL, actid INT, workerid INT NOT NULL, \
          status TEXT, dur FLOAT, starttime FLOAT, endtime FLOAT) \
@@ -544,6 +543,189 @@ fn bench_occ(quick: bool, workers: usize, rows: usize) -> Vec<Bench> {
     out
 }
 
+// Elastic topology: live rebalance + split under a concurrent claim
+// stream — the CI gate behind BENCH_rebalance.json. Four claim threads
+// run the disjoint point-claim stream while the admin path registers a
+// fresh node and hands partition 0's primary to it; time-to-cut is the
+// rebalance call's wall time, and the claims that land inside that window
+// measure the throughput dip. Then the quiesced split of an untouched
+// partition times the re-deal. The claim id set is deterministic, so an
+// untouched twin replaying the same claims must end byte-equal: topology
+// surgery may slow the stream down, never change its content.
+fn bench_topology(workers: usize, rows: usize) -> Vec<Bench> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    let threads = 4usize.min(workers);
+    let cap = rows / workers; // READY taskids in each claimed partition lane
+    let per_steady = cap / 3;
+    let per_move = cap - per_steady;
+    let point_sql = "UPDATE workqueue SET status = 'RUNNING', starttime = 0.0 \
+                     WHERE taskid = ? AND status = 'READY' AND workerid = ?";
+
+    let c = wq_cluster(workers, rows);
+    let p = c.prepare(point_sql).unwrap();
+    let epoch0 = c.cluster_epoch();
+
+    // phase 1 — steady state: the same claim stream with no surgery, the
+    // denominator for the dip measurement
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let c = c.clone();
+        let p = p.clone();
+        handles.push(std::thread::spawn(move || {
+            let w = t % workers;
+            let mut lat = Vec::with_capacity(per_steady);
+            for i in 0..per_steady {
+                // partition w holds taskids congruent to w mod workers
+                let tid = (w + i * workers) as i64;
+                let params = [Value::Int(tid), Value::Int(w as i64)];
+                let t1 = Instant::now();
+                c.exec_prepared(t as u32, AccessKind::UpdateToRunning, &p, &params).unwrap();
+                lat.push(t1.elapsed().as_secs_f64());
+            }
+            lat
+        }));
+    }
+    let mut hist_steady = Histogram::new();
+    for h in handles {
+        for s in h.join().unwrap() {
+            hist_steady.record(s);
+        }
+    }
+    let steady_rate = (threads * per_steady) as f64 / t0.elapsed().as_secs_f64();
+
+    // phase 2 — the same stream keeps firing while a node joins and
+    // partition 0 (thread 0's lane) is handed to it mid-claim
+    let done = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let c = c.clone();
+        let p = p.clone();
+        let done = done.clone();
+        handles.push(std::thread::spawn(move || {
+            let w = t % workers;
+            let mut lat = Vec::with_capacity(per_move);
+            for i in per_steady..cap {
+                let tid = (w + i * workers) as i64;
+                let params = [Value::Int(tid), Value::Int(w as i64)];
+                let t1 = Instant::now();
+                loop {
+                    match c.exec_prepared(t as u32, AccessKind::UpdateToRunning, &p, &params) {
+                        Ok(StatementResult::Affected(n)) => {
+                            assert_eq!(n, 1, "claim of task {tid} must land exactly once");
+                            break;
+                        }
+                        Ok(other) => panic!("claim of task {tid} returned {other:?}"),
+                        // the latched final cut may bounce a claim; it
+                        // must succeed on retry, never vanish
+                        Err(schaladb::Error::Unavailable(_)) => continue,
+                        Err(e) => panic!("claim of task {tid} failed: {e}"),
+                    }
+                }
+                lat.push(t1.elapsed().as_secs_f64());
+                done.fetch_add(1, Ordering::Relaxed);
+            }
+            lat
+        }));
+    }
+    let new_node = c.add_node().unwrap();
+    let before_cut = done.load(Ordering::Relaxed);
+    let t_cut = Instant::now();
+    c.rebalance_partition("workqueue", 0, new_node).unwrap();
+    let time_to_cut = t_cut.elapsed().as_secs_f64();
+    let claims_during_cut = done.load(Ordering::Relaxed) - before_cut;
+    let mut hist_move = Histogram::new();
+    for h in handles {
+        for s in h.join().unwrap() {
+            hist_move.record(s);
+        }
+    }
+    let move_rate = (threads * per_move) as f64 / t0.elapsed().as_secs_f64();
+    let topo = c.topology();
+    let wq = topo.tables.iter().find(|t| t.table == "workqueue").unwrap();
+    assert_eq!(wq.partitions[0].primary, new_node, "rebalance must have flipped the primary");
+
+    // phase 3 — quiesced split of a partition the claim threads never
+    // touched: cap READY rows re-dealt across the doubled residue classes
+    let split_src = workers - 1;
+    let t_split = Instant::now();
+    let new_pidx = c.split_partition("workqueue", split_src).unwrap();
+    let split_secs = t_split.elapsed().as_secs_f64();
+    assert_eq!(new_pidx, workers, "split appends the new partition at the end");
+
+    // phase 4 — the untouched twin replays the identical claim set on the
+    // original topology; byte-equality proves surgery changed placement,
+    // not content
+    let twin = wq_cluster(workers, rows);
+    let tp = twin.prepare(point_sql).unwrap();
+    for t in 0..threads {
+        let w = t % workers;
+        for i in 0..cap {
+            let tid = (w + i * workers) as i64;
+            let params = [Value::Int(tid), Value::Int(w as i64)];
+            match twin.exec_prepared(0, AccessKind::UpdateToRunning, &tp, &params).unwrap() {
+                StatementResult::Affected(1) => {}
+                other => panic!("twin claim of task {tid} returned {other:?}"),
+            }
+        }
+    }
+    assert_eq!(
+        c.fingerprint().unwrap(),
+        twin.fingerprint().unwrap(),
+        "moved + split cluster must stay byte-equal to the untouched twin"
+    );
+
+    let cut_rate = claims_during_cut as f64 / time_to_cut.max(1e-9);
+    let retention = cut_rate / steady_rate;
+    println!(
+        "live rebalance under {threads} claim threads: steady {steady_rate:.0}/s, \
+         move window {move_rate:.0}/s; cut took {}, {claims_during_cut} claims landed \
+         during it ({:.0}% of steady rate); split of {cap} rows took {}\n",
+        fmt_secs(time_to_cut),
+        retention * 100.0,
+        fmt_secs(split_secs)
+    );
+
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    std::fs::create_dir_all("target/bench-results").ok();
+    let mut obj = schaladb::util::json::Json::obj()
+        .set("wq_rows", rows as f64)
+        .set("partitions", workers as f64)
+        .set("cores", cores as f64)
+        .set("claim_threads", threads as f64)
+        .set("claims_per_thread", cap as f64)
+        .set("claims_per_sec_steady", steady_rate)
+        .set("claims_per_sec_move_window", move_rate)
+        .set("claims_during_cut", claims_during_cut as f64)
+        .set("claims_per_sec_during_cut", cut_rate)
+        .set("cut_retention_frac", retention)
+        .set("time_to_cut_secs", time_to_cut)
+        .set("split_secs", split_secs)
+        .set("split_rows_redealt", cap as f64)
+        .set("epochs_advanced", (c.cluster_epoch() - epoch0) as f64)
+        .set("moved_ok", 1.0)
+        .set("split_ok", 1.0)
+        .set("fingerprint_equal", 1.0);
+    let out = vec![
+        Bench { name: "claim (steady state)", hist: hist_steady },
+        Bench { name: "claim (during topology change)", hist: hist_move },
+    ];
+    for b in &out {
+        obj = obj.set(
+            b.name,
+            schaladb::util::json::Json::obj()
+                .set("mean_secs", b.hist.mean())
+                .set("p50_secs", b.hist.quantile(0.5))
+                .set("p99_secs", b.hist.quantile(0.99)),
+        );
+    }
+    std::fs::write("target/bench-results/BENCH_rebalance.json", obj.to_string()).unwrap();
+    println!("json: target/bench-results/BENCH_rebalance.json");
+    out
+}
+
 fn main() {
     // STORAGE_MICRO_QUICK=1: CI smoke mode — same benches, ~5% of the
     // iterations, so the workflow exercises every path in seconds.
@@ -592,6 +774,21 @@ fn main() {
     if std::env::var("STORAGE_MICRO_SECTION").as_deref() == Ok("occ") {
         let occ_benches = bench_occ(quick, workers, rows);
         let rows_out: Vec<Vec<String>> = occ_benches.iter().map(|b| b.row()).collect();
+        println!(
+            "{}",
+            schaladb::util::render_table(
+                &["operation", "iters", "mean", "p50", "p99"],
+                &rows_out
+            )
+        );
+        return;
+    }
+
+    // STORAGE_MICRO_SECTION=topology: only the elastic-topology section —
+    // the CI topology-chaos job's quick gate behind BENCH_rebalance.json.
+    if std::env::var("STORAGE_MICRO_SECTION").as_deref() == Ok("topology") {
+        let topo_benches = bench_topology(workers, rows);
+        let rows_out: Vec<Vec<String>> = topo_benches.iter().map(|b| b.row()).collect();
         println!(
             "{}",
             schaladb::util::render_table(
@@ -967,13 +1164,12 @@ fn main() {
         let bench_dir = std::path::PathBuf::from("target/bench-recovery");
         let _ = std::fs::remove_dir_all(&bench_dir);
         let durable_wq = |tag: &str, group: usize, seed_rows: usize| -> Arc<DbCluster> {
-            let c = DbCluster::start(ClusterConfig {
-                data_nodes: 2,
-                replication: true,
-                clock: clock::wall(),
-                durability: Some(DurabilityConfig::new(bench_dir.join(tag), group)),
-                ..Default::default()
-            })
+            let c = DbCluster::start(
+                ClusterConfig::builder()
+                    .durability(DurabilityConfig::new(bench_dir.join(tag), group))
+                    .build()
+                    .unwrap(),
+            )
             .unwrap();
             c.exec(&format!(
                 "CREATE TABLE workqueue (taskid INT NOT NULL, actid INT, workerid INT NOT NULL, \
@@ -1363,6 +1559,9 @@ fn main() {
 
     // optimistic concurrency: OCC vs 2PL vs interpreted claim loop
     benches.extend(bench_occ(quick, workers, rows));
+
+    // elastic topology: live rebalance + split under the claim stream
+    benches.extend(bench_topology(workers, rows));
 
     let rows_out: Vec<Vec<String>> = benches.iter().map(|b| b.row()).collect();
     println!(

@@ -8,7 +8,6 @@ use crate::coordinator::{schema, status};
 use crate::storage::cluster::ClusterConfig;
 use crate::storage::prepared::Prepared;
 use crate::storage::{AccessKind, DbCluster, Value};
-use crate::util::clock;
 use crate::Result;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -84,13 +83,9 @@ impl ChironEngine {
 
         // Centralized DBMS: one data node, no replication, one partition per
         // table (create_schema with workers=1 collapses all partitioning).
-        let db = DbCluster::start(ClusterConfig {
-            data_nodes: 1,
-            replication: false,
-            clock: clock::wall(),
-            durability: None,
-            ..Default::default()
-        })?;
+        let db = DbCluster::start(
+            ClusterConfig::builder().data_nodes(1).replication(false).build()?,
+        )?;
         schema::create_schema(&db, 1)?;
         schema::register_nodes(&db, cfg.workers, cfg.threads_per_worker)?;
 

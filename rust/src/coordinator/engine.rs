@@ -10,7 +10,6 @@ use crate::storage::cluster::{ClusterConfig, ConcurrencyMode, DurabilityConfig};
 use crate::storage::connector::{assign_links, Connector};
 use crate::storage::stats::{AccessKind, AccessStat};
 use crate::storage::DbCluster;
-use crate::util::clock;
 use crate::Result;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -189,13 +188,14 @@ impl DChironEngine {
         let cfg = &self.config;
 
         // DBManager --start: cluster + schema.
-        let db = DbCluster::start(ClusterConfig {
-            data_nodes: cfg.data_nodes,
-            replication: cfg.replication,
-            clock: clock::wall(),
-            durability: cfg.durability.clone(),
-            concurrency: cfg.concurrency,
-        })?;
+        let mut b = ClusterConfig::builder()
+            .data_nodes(cfg.data_nodes)
+            .replication(cfg.replication)
+            .concurrency(cfg.concurrency);
+        if let Some(d) = cfg.durability.clone() {
+            b = b.durability(d);
+        }
+        let db = DbCluster::start(b.build()?)?;
         schema::create_schema(&db, cfg.workers)?;
         schema::register_nodes(&db, cfg.workers, cfg.threads_per_worker)?;
         failover::register_supervisor_nodes(&db)?;

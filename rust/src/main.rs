@@ -1,44 +1,20 @@
 //! `dchiron` — the d-Chiron launcher CLI.
 //!
-//! Subcommands (args are `--key value` pairs; no external CLI crate is
-//! available offline, so parsing is hand-rolled):
+//! Args are `--key value` pairs; no external CLI crate is available
+//! offline, so parsing is hand-rolled. The subcommand list lives in one
+//! place — the [`USAGE`] table — and `dchiron help` (or any unknown
+//! command) renders from it, so the help text cannot drift from the
+//! dispatch table the way a hand-written usage string can.
 //!
-//! ```text
-//! dchiron run      [--tasks N] [--duration SECS] [--workers W] [--threads T]
-//!                  [--time-scale S] [--engine dchiron|chiron] [--seed S]
-//!     run a synthetic workload on the real engine and print the report
-//! dchiron risers   [--conditions N] [--pjrt] [--workers W] [--threads T]
-//!     run the Risers Fatigue Analysis workflow (--pjrt uses the AOT
-//!     artifacts; otherwise synthetic physics)
-//! dchiron bench-sim [--experiment expN] [--json FILE]
-//!     regenerate the paper's tables/figures on the calibrated simulator
-//! dchiron sql
-//!     run the steering SQL demo on a seeded risers database
-//! dchiron serve    [--addr HOST:PORT] [--max-conns N] [--data-nodes N]
-//!                  [--concurrency 2pl|occ]
-//!     start the wire-protocol server: a fresh SchalaDB cluster behind a
-//!     TCP front-end exposing the full prepared-statement API (blocks
-//!     until `dchiron shutdown` — the SIGTERM-equivalent — is received);
-//!     --concurrency selects the point-DML discipline (default 2pl)
-//! dchiron stats    [--addr HOST:PORT] [--fingerprint] [--tables]
-//!     query a running server for route counts, plan cache, epoch and
-//!     live sessions; --fingerprint/--tables add the expensive extras
-//! dchiron shutdown [--addr HOST:PORT]
-//!     ask a running server to shut down cleanly
-//! dchiron drive    [--addr HOST:PORT] [--clients N] [--scanners M]
-//!                  [--tasks T]
-//!     remote multi-client workload: N claim workers + M steering
-//!     scanners against a running server, printing throughput
-//! dchiron query    [--addr HOST:PORT] [--sql "SELECT ..."]
-//!     run one steering SQL statement over the wire and print the rows
-//!     (default: the global rows of the system `monitoring` table)
-//! dchiron metrics  [--addr HOST:PORT] [--top K]
-//!     dump a running server's telemetry registry in Prometheus text
-//!     format, plus the K slowest traced ops with stage breakdowns
-//! dchiron top      [--addr HOST:PORT] [--interval SECS] [--iterations N]
-//!     live terminal view: per-interval claim/scan/WAL/frame rates and
-//!     the current slowest ops (N = 0 runs until interrupted)
-//! ```
+//! Run `dchiron help` for the full list; highlights:
+//!
+//! - `run` / `risers` / `bench-sim` / `sql` — in-process workloads.
+//! - `serve` — the wire-protocol server (`dchiron shutdown` stops it).
+//! - `stats` / `query` / `metrics` / `top` — remote introspection.
+//! - `drive` — remote multi-client claim + steering workload.
+//! - `topology` / `rebalance` — elastic-topology admin: inspect
+//!   placement, add a data node, move a partition's primary, or split a
+//!   hot partition, all against a live server.
 
 use schaladb::coordinator::payload::RunnerRegistry;
 use schaladb::coordinator::{DChironEngine, EngineConfig};
@@ -52,6 +28,87 @@ use schaladb::workload::{self, SyntheticWorkload};
 use schaladb::DbCluster;
 use std::collections::HashMap;
 use std::io::Write as _;
+
+/// One row per subcommand: `(name, flag summary, one-line description)`.
+/// The single source of truth for the CLI surface — `main`'s dispatch
+/// arms, the help output, and the module doc above all follow this table,
+/// so a new subcommand is added here first.
+const USAGE: &[(&str, &str, &str)] = &[
+    (
+        "run",
+        "[--tasks N] [--duration SECS] [--workers W] [--threads T] [--time-scale S] \
+         [--engine dchiron|chiron] [--seed S]",
+        "run a synthetic workload on the real engine and print the report",
+    ),
+    (
+        "risers",
+        "[--conditions N] [--pjrt] [--workers W] [--threads T]",
+        "run the Risers Fatigue Analysis workflow (--pjrt uses the AOT artifacts)",
+    ),
+    (
+        "bench-sim",
+        "[--experiment expN] [--json FILE]",
+        "regenerate the paper's tables/figures on the calibrated simulator",
+    ),
+    ("sql", "", "run the steering SQL demo on a seeded risers database"),
+    (
+        "serve",
+        "[--addr HOST:PORT] [--max-conns N] [--data-nodes N] [--concurrency 2pl|occ]",
+        "start the wire-protocol server (blocks until `dchiron shutdown`)",
+    ),
+    (
+        "stats",
+        "[--addr HOST:PORT] [--fingerprint] [--tables]",
+        "query a running server for route counts, plan cache, epoch, sessions",
+    ),
+    ("shutdown", "[--addr HOST:PORT]", "ask a running server to shut down cleanly"),
+    (
+        "drive",
+        "[--addr HOST:PORT] [--clients N] [--scanners M] [--tasks T]",
+        "remote multi-client workload: N claim workers + M steering scanners",
+    ),
+    (
+        "query",
+        "[--addr HOST:PORT] [--sql \"SELECT ...\"]",
+        "run one steering SQL statement over the wire and print the rows",
+    ),
+    (
+        "metrics",
+        "[--addr HOST:PORT] [--top K]",
+        "dump the telemetry registry (Prometheus text) and the K slowest ops",
+    ),
+    (
+        "top",
+        "[--addr HOST:PORT] [--interval SECS] [--iterations N]",
+        "live terminal view of claim/scan/WAL/frame rates and slowest ops",
+    ),
+    (
+        "topology",
+        "[--addr HOST:PORT]",
+        "print node states and each table's per-partition placement and size",
+    ),
+    (
+        "rebalance",
+        "[--addr HOST:PORT] (--add-node | --table T --partition P [--split | --to-node N])",
+        "elastic-topology admin: add a node, move a partition's primary, or split it",
+    ),
+];
+
+fn print_usage() {
+    println!("dchiron — SchalaDB / d-Chiron reproduction");
+    println!("usage: dchiron <command> [--key value ...]");
+    println!();
+    for (name, flags, desc) in USAGE {
+        if flags.is_empty() {
+            println!("  dchiron {name}");
+        } else {
+            println!("  dchiron {name} {flags}");
+        }
+        println!("      {desc}");
+    }
+    println!();
+    println!("see README.md for details");
+}
 
 fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
     let mut flags = HashMap::new();
@@ -96,12 +153,10 @@ fn main() -> anyhow::Result<()> {
         "query" => cmd_query(&flags),
         "metrics" => cmd_metrics(&flags),
         "top" => cmd_top(&flags),
+        "topology" => cmd_topology(&flags),
+        "rebalance" => cmd_rebalance(&flags),
         _ => {
-            println!("dchiron — SchalaDB / d-Chiron reproduction");
-            println!(
-                "commands: run | risers | bench-sim | sql | serve | stats | shutdown | \
-                 drive | query | metrics | top (see README.md)"
-            );
+            print_usage();
             Ok(())
         }
     }
@@ -239,12 +294,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             anyhow::anyhow!("unknown --concurrency mode {name:?} (expected 2pl or occ)")
         })?,
     };
-    let cluster = DbCluster::start(ClusterConfig {
-        data_nodes,
-        replication: data_nodes >= 2,
-        concurrency,
-        ..Default::default()
-    })?;
+    let cluster = DbCluster::start(
+        ClusterConfig::builder()
+            .data_nodes(data_nodes)
+            .replication(data_nodes >= 2)
+            .concurrency(concurrency)
+            .build()?,
+    )?;
     let mut server = Server::bind(addr, cluster, ServerConfig { max_conns })?;
     println!(
         "dchiron serve: listening on {} ({data_nodes} data nodes, {concurrency:?} point DML, \
@@ -562,6 +618,93 @@ fn cmd_top(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             break;
         }
         std::thread::sleep(std::time::Duration::from_secs_f64(interval));
+    }
+    client.close()?;
+    Ok(())
+}
+
+/// Print the cluster topology: node states, then each table's
+/// per-partition placement, size and congruence class.
+fn cmd_topology(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let addr = flag_addr(flags)?;
+    let mut client = Client::connect(addr, 0, AccessKind::Steering)?;
+    let t = client.topology()?;
+    println!("cluster epoch {}", t.epoch);
+    let nrows: Vec<Vec<String>> = t
+        .nodes
+        .iter()
+        .map(|n| vec![n.id.to_string(), format!("{:?}", n.state), n.partitions.to_string()])
+        .collect();
+    println!("{}", schaladb::util::render_table(&["node", "state", "replicas"], &nrows));
+    for (table, parts) in &t.tables {
+        let prows: Vec<Vec<String>> = parts
+            .iter()
+            .map(|p| {
+                let class = match p.class {
+                    Some((m, r)) => format!("{r} mod {m}"),
+                    None => "-".into(),
+                };
+                vec![
+                    p.pidx.to_string(),
+                    class,
+                    p.primary.to_string(),
+                    p.backup.map_or_else(|| "-".into(), |b| b.to_string()),
+                    p.rows.to_string(),
+                    p.bytes.to_string(),
+                    p.version.to_string(),
+                    p.store_epoch.to_string(),
+                ]
+            })
+            .collect();
+        println!("table {table}:");
+        println!(
+            "{}",
+            schaladb::util::render_table(
+                &["part", "class", "primary", "backup", "rows", "bytes", "lsn", "epoch"],
+                &prows,
+            )
+        );
+    }
+    client.close()?;
+    Ok(())
+}
+
+/// Elastic-topology admin against a running server: `--add-node`
+/// registers a fresh data node; `--table T --partition P --to-node N`
+/// moves a partition's primary live; `--table T --partition P --split`
+/// splits a hot partition in two.
+fn cmd_rebalance(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let addr = flag_addr(flags)?;
+    let mut client = Client::connect(addr, 0, AccessKind::Other)?;
+    if flags.contains_key("add-node") {
+        let id = client.add_node()?;
+        println!(
+            "node {id} joined (empty); move work onto it with: \
+             dchiron rebalance --addr {addr} --table T --partition P --to-node {id}"
+        );
+    } else {
+        let table = flags.get("table").ok_or_else(|| {
+            anyhow::anyhow!(
+                "rebalance needs --add-node, or --table with --partition and \
+                 either --split or --to-node"
+            )
+        })?;
+        let pidx: u32 = flags
+            .get("partition")
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("rebalance needs --partition INDEX"))?;
+        if flags.contains_key("split") {
+            let new_pidx = client.split(table, pidx)?;
+            println!("partition {table}[{pidx}] split; new partition {new_pidx}");
+        } else {
+            let to_node: u32 = flags
+                .get("to-node")
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("rebalance needs --to-node NODE (or --split/--add-node)")
+                })?;
+            println!("{}", client.rebalance(table, pidx, to_node)?);
+        }
     }
     client.close()?;
     Ok(())

@@ -9,8 +9,8 @@
 //! implementation a non-Rust client would be written against.
 
 use super::wire::{
-    decode_error, read_frame, write_frame, MetricsReply, Request, Response, StatsReply,
-    PROTO_VERSION,
+    decode_error, read_frame, write_frame, AdminCmd, MetricsReply, Request, Response,
+    StatsReply, TopologyReply, PROTO_VERSION,
 };
 use crate::storage::stats::AccessKind;
 use crate::storage::value::Value;
@@ -174,6 +174,44 @@ impl Client {
             Response::Metrics(m) => Ok(*m),
             other => Err(unexpected("Metrics", &other)),
         }
+    }
+
+    /// Fetch the cluster topology snapshot: nodes, per-partition placement
+    /// and sizes, and the cluster epoch.
+    pub fn topology(&mut self) -> Result<TopologyReply> {
+        match self.call(&Request::Topology)? {
+            Response::Topology(t) => Ok(*t),
+            other => Err(unexpected("Topology", &other)),
+        }
+    }
+
+    fn admin(&mut self, cmd: AdminCmd) -> Result<(String, u64, u64)> {
+        match self.call(&Request::Admin(cmd))? {
+            Response::AdminOk { message, value, epoch } => Ok((message, value, epoch)),
+            other => Err(unexpected("AdminOk", &other)),
+        }
+    }
+
+    /// Register a fresh, empty data node; returns its id. The node joins
+    /// in `Joining` state and becomes a rebalance target.
+    pub fn add_node(&mut self) -> Result<u32> {
+        let (_, id, _) = self.admin(AdminCmd::AddNode)?;
+        Ok(id as u32)
+    }
+
+    /// Move one partition's primary onto `to_node` (live hand-off).
+    /// Returns the server's human-readable ack message.
+    pub fn rebalance(&mut self, table: &str, pidx: u32, to_node: u32) -> Result<String> {
+        let cmd = AdminCmd::Rebalance { table: table.to_string(), pidx, to_node };
+        let (message, _, _) = self.admin(cmd)?;
+        Ok(message)
+    }
+
+    /// Split one partition in two; returns the new partition's index.
+    pub fn split(&mut self, table: &str, pidx: u32) -> Result<u32> {
+        let cmd = AdminCmd::Split { table: table.to_string(), pidx };
+        let (_, new_pidx, _) = self.admin(cmd)?;
+        Ok(new_pidx as u32)
     }
 
     /// Open a deferred transaction on the server-side session.

@@ -40,16 +40,16 @@ pub mod wire;
 pub use client::{Client, RemoteStats};
 pub use serve::{Server, ServerConfig};
 pub use session::{Session, SessionTransport};
-pub use wire::{MetricsReply, SlowOpWire};
+pub use wire::{AdminCmd, MetricsReply, NodeWire, PartWire, SlowOpWire, TopologyReply};
 
 use crate::{Error, Result};
 use std::net::{SocketAddr, ToSocketAddrs};
 
 /// Parse and validate a `--addr HOST:PORT` flag value. Accepts literal
 /// socket addresses (`127.0.0.1:7878`, `[::1]:7878`) and resolvable host
-/// names (`localhost:7878`); shared by `dchiron serve`, `dchiron stats`,
-/// `dchiron shutdown` and `dchiron drive` so they reject bad input with
-/// one consistent message.
+/// names (`localhost:7878`); shared by every network subcommand (`serve`,
+/// `stats`, `shutdown`, `drive`, `query`, `metrics`, `top`, `topology`,
+/// `rebalance`) so they all reject bad input with one consistent message.
 pub fn parse_addr(s: &str) -> Result<SocketAddr> {
     if let Ok(a) = s.parse::<SocketAddr>() {
         return Ok(a);

@@ -24,8 +24,8 @@
 
 use super::session::Session;
 use super::wire::{
-    self, read_frame, write_frame, ErrCode, MetricsReply, Request, Response, SlowOpWire,
-    StatsReply, PROTO_VERSION,
+    self, read_frame, write_frame, AdminCmd, ErrCode, MetricsReply, Request, Response,
+    SlowOpWire, StatsReply, TopologyReply, PROTO_VERSION,
 };
 use crate::obs::{Counter, Stage};
 use crate::storage::cluster::DbCluster;
@@ -440,8 +440,39 @@ fn respond(req: Request, session: &mut Session, shared: &Arc<Shared>) -> (Respon
                 .collect();
             Response::Metrics(Box::new(MetricsReply { text: obs.exposition(), slow_ops }))
         }
+        Request::Topology => {
+            let t = shared.cluster.topology();
+            Response::Topology(Box::new(TopologyReply::from(&t)))
+        }
+        Request::Admin(cmd) => match admin_reply(shared, cmd) {
+            Ok(r) => r,
+            Err(e) => err_response(&e),
+        },
     };
     (resp, false)
+}
+
+/// Execute one admin command against the cluster. Admin ops serialize on
+/// the cluster's admin mutex, so concurrent commands from different
+/// connections queue rather than interleave.
+fn admin_reply(shared: &Arc<Shared>, cmd: AdminCmd) -> Result<Response> {
+    let c = &shared.cluster;
+    let (message, value) = match cmd {
+        AdminCmd::AddNode => {
+            let id = c.add_node()?;
+            (format!("node {id} joined (empty; rebalance onto it)"), u64::from(id))
+        }
+        AdminCmd::Rebalance { table, pidx, to_node } => {
+            c.rebalance_partition(&table, pidx as usize, to_node)?;
+            (format!("partition {table}[{pidx}] now primary on node {to_node}"), 0)
+        }
+        AdminCmd::Split { table, pidx } => {
+            let new_pidx = c.split_partition(&table, pidx as usize)?;
+            let msg = format!("partition {table}[{pidx}] split; new partition {new_pidx}");
+            (msg, new_pidx as u64)
+        }
+    };
+    Ok(Response::AdminOk { message, value, epoch: c.cluster_epoch() })
 }
 
 fn stats_reply(shared: &Arc<Shared>, fingerprint: bool, tables: bool) -> Result<StatsReply> {

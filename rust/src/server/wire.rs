@@ -19,9 +19,10 @@
 //! frames, so a protocol error is distinguishable from a SQL error and
 //! both are distinguishable from a dead peer.
 
+use crate::storage::cluster::Topology;
 use crate::storage::stats::AccessKind;
 use crate::storage::value::{Row, Value};
-use crate::storage::{ResultSet, StatementResult};
+use crate::storage::{NodeState, ResultSet, StatementResult};
 use crate::{Error, Result};
 use std::io::{Read, Write};
 
@@ -29,7 +30,9 @@ use std::io::{Read, Write};
 /// change; the server rejects mismatched clients with a typed error.
 /// v2: `Metrics` request/response and the observability fields appended to
 /// `StatsReply`.
-pub const PROTO_VERSION: u16 = 3;
+/// v4: cluster-admin surface — `Topology` introspection and `Admin`
+/// (add-node / rebalance / split) requests with their replies.
+pub const PROTO_VERSION: u16 = 4;
 
 /// Upper bound on one frame's payload. Large enough for any steering
 /// result set we produce, small enough that a hostile or corrupt length
@@ -294,6 +297,27 @@ pub fn kind_from_u8(i: u8) -> Result<AccessKind> {
         .ok_or_else(|| Error::Engine(format!("bad access-kind index {i}")))
 }
 
+/// Wire index of a node state (carried by [`Response::Topology`]).
+pub fn state_to_u8(s: NodeState) -> u8 {
+    match s {
+        NodeState::Alive => 0,
+        NodeState::Dead => 1,
+        NodeState::Rejoining => 2,
+        NodeState::Joining => 3,
+    }
+}
+
+/// Node state from its wire index.
+pub fn state_from_u8(i: u8) -> Result<NodeState> {
+    Ok(match i {
+        0 => NodeState::Alive,
+        1 => NodeState::Dead,
+        2 => NodeState::Rejoining,
+        3 => NodeState::Joining,
+        t => return Err(Error::Engine(format!("bad node-state index {t}"))),
+    })
+}
+
 // ---------- error codes ----------
 
 /// Typed error codes so every [`Error`] variant round-trips the wire.
@@ -348,6 +372,21 @@ pub fn decode_error(code: u8, message: String) -> Error {
 
 // ---------- requests ----------
 
+/// Body of [`Request::Admin`] — the elastic-topology operations exposed
+/// over the wire (v4). Each maps 1:1 onto a `DbCluster` admin method and
+/// is serialized server-side by the cluster's admin mutex.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AdminCmd {
+    /// Register a fresh, empty data node. It joins in `Joining` state,
+    /// hosts nothing, and becomes an eligible rebalance target.
+    AddNode,
+    /// Move one partition's primary onto `to_node` (live redo-ship seed,
+    /// catch-up rounds, then a latched final cut).
+    Rebalance { table: String, pidx: u32, to_node: u32 },
+    /// Split one partition in two by doubling its congruence class.
+    Split { table: String, pidx: u32 },
+}
+
 /// Client → server frames.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
@@ -388,6 +427,10 @@ pub enum Request {
     /// Telemetry snapshot: the Prometheus-style exposition text plus the
     /// `top_k` slowest traced ops with their stage breakdowns.
     Metrics { top_k: u16 },
+    /// Cluster topology snapshot: nodes, per-partition placement and sizes.
+    Topology,
+    /// A cluster-admin command (add-node / rebalance / split).
+    Admin(AdminCmd),
 }
 
 const REQ_HELLO: u8 = 0x01;
@@ -406,6 +449,13 @@ const REQ_TXN_ROLLBACK: u8 = 0x0d;
 const REQ_CLOSE_STMT: u8 = 0x0e;
 const REQ_SHUTDOWN: u8 = 0x0f;
 const REQ_METRICS: u8 = 0x10;
+const REQ_TOPOLOGY: u8 = 0x11;
+const REQ_ADMIN: u8 = 0x12;
+
+// Subtags inside a REQ_ADMIN body.
+const ADMIN_ADD_NODE: u8 = 0;
+const ADMIN_REBALANCE: u8 = 1;
+const ADMIN_SPLIT: u8 = 2;
 
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
@@ -481,6 +531,24 @@ impl Request {
                 out.push(REQ_METRICS);
                 out.extend_from_slice(&top_k.to_le_bytes());
             }
+            Request::Topology => out.push(REQ_TOPOLOGY),
+            Request::Admin(cmd) => {
+                out.push(REQ_ADMIN);
+                match cmd {
+                    AdminCmd::AddNode => out.push(ADMIN_ADD_NODE),
+                    AdminCmd::Rebalance { table, pidx, to_node } => {
+                        out.push(ADMIN_REBALANCE);
+                        put_str(&mut out, table);
+                        out.extend_from_slice(&pidx.to_le_bytes());
+                        out.extend_from_slice(&to_node.to_le_bytes());
+                    }
+                    AdminCmd::Split { table, pidx } => {
+                        out.push(ADMIN_SPLIT);
+                        put_str(&mut out, table);
+                        out.extend_from_slice(&pidx.to_le_bytes());
+                    }
+                }
+            }
         }
         out
     }
@@ -528,6 +596,17 @@ impl Request {
             REQ_CLOSE => Request::Close,
             REQ_SHUTDOWN => Request::Shutdown,
             REQ_METRICS => Request::Metrics { top_k: b.u16()? },
+            REQ_TOPOLOGY => Request::Topology,
+            REQ_ADMIN => Request::Admin(match b.u8()? {
+                ADMIN_ADD_NODE => AdminCmd::AddNode,
+                ADMIN_REBALANCE => AdminCmd::Rebalance {
+                    table: b.str()?,
+                    pidx: b.u32()?,
+                    to_node: b.u32()?,
+                },
+                ADMIN_SPLIT => AdminCmd::Split { table: b.str()?, pidx: b.u32()? },
+                t => return Err(Error::Engine(format!("bad admin subtag {t}"))),
+            }),
             t => return Err(Error::Engine(format!("bad request tag 0x{t:02x}"))),
         };
         b.finish()?;
@@ -598,6 +677,80 @@ pub struct MetricsReply {
     pub slow_ops: Vec<SlowOpWire>,
 }
 
+/// One data node in a [`Response::Topology`] snapshot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeWire {
+    pub id: u32,
+    pub state: NodeState,
+    /// Partition replicas hosted (primary and backup roles both count).
+    pub partitions: u32,
+}
+
+/// One partition's placement and size in a [`Response::Topology`] snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PartWire {
+    pub pidx: u32,
+    pub primary: u32,
+    pub backup: Option<u32>,
+    pub rows: u64,
+    pub bytes: u64,
+    /// Partition LSN and epoch fence of the serving replica.
+    pub version: u64,
+    pub store_epoch: u64,
+    /// Congruence class `(modulus, residue)` owning this partition's keys
+    /// (`None` for single-partition tables).
+    pub class: Option<(i64, i64)>,
+}
+
+/// Cluster-topology payload of [`Response::Topology`] — the wire mirror of
+/// the engine's [`Topology`] snapshot.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TopologyReply {
+    /// Cluster epoch at the time of the snapshot.
+    pub epoch: u64,
+    pub nodes: Vec<NodeWire>,
+    /// `(table, partitions)` placement maps, sorted by table name.
+    pub tables: Vec<(String, Vec<PartWire>)>,
+}
+
+impl From<&Topology> for TopologyReply {
+    fn from(t: &Topology) -> TopologyReply {
+        TopologyReply {
+            epoch: t.epoch,
+            nodes: t
+                .nodes
+                .iter()
+                .map(|n| NodeWire {
+                    id: n.id,
+                    state: n.state,
+                    partitions: n.partitions as u32,
+                })
+                .collect(),
+            tables: t
+                .tables
+                .iter()
+                .map(|tt| {
+                    let parts = tt
+                        .partitions
+                        .iter()
+                        .map(|p| PartWire {
+                            pidx: p.pidx as u32,
+                            primary: p.primary,
+                            backup: p.backup,
+                            rows: p.rows as u64,
+                            bytes: p.bytes as u64,
+                            version: p.version,
+                            store_epoch: p.store_epoch,
+                            class: p.class,
+                        })
+                        .collect();
+                    (tt.table.clone(), parts)
+                })
+                .collect(),
+        }
+    }
+}
+
 /// Server → client frames.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
@@ -610,6 +763,11 @@ pub enum Response {
     Err { code: ErrCode, message: String },
     ShutdownOk,
     Metrics(Box<MetricsReply>),
+    Topology(Box<TopologyReply>),
+    /// Ack for [`Request::Admin`]. `value` is the operation's product —
+    /// the new node id for `AddNode`, the new partition index for `Split`,
+    /// `0` for `Rebalance`; `epoch` is the cluster epoch after the op.
+    AdminOk { message: String, value: u64, epoch: u64 },
 }
 
 const RESP_HELLO_OK: u8 = 0x81;
@@ -621,6 +779,8 @@ const RESP_TXN_RESULTS: u8 = 0x86;
 const RESP_ERR: u8 = 0x87;
 const RESP_SHUTDOWN_OK: u8 = 0x88;
 const RESP_METRICS: u8 = 0x89;
+const RESP_TOPOLOGY: u8 = 0x8a;
+const RESP_ADMIN_OK: u8 = 0x8b;
 
 impl Response {
     pub fn encode(&self) -> Vec<u8> {
@@ -711,6 +871,49 @@ impl Response {
                     }
                 }
             }
+            Response::Topology(t) => {
+                out.push(RESP_TOPOLOGY);
+                out.extend_from_slice(&t.epoch.to_le_bytes());
+                out.extend_from_slice(&(t.nodes.len() as u16).to_le_bytes());
+                for n in &t.nodes {
+                    out.extend_from_slice(&n.id.to_le_bytes());
+                    out.push(state_to_u8(n.state));
+                    out.extend_from_slice(&n.partitions.to_le_bytes());
+                }
+                out.extend_from_slice(&(t.tables.len() as u16).to_le_bytes());
+                for (name, parts) in &t.tables {
+                    put_str(&mut out, name);
+                    out.extend_from_slice(&(parts.len() as u32).to_le_bytes());
+                    for p in parts {
+                        out.extend_from_slice(&p.pidx.to_le_bytes());
+                        out.extend_from_slice(&p.primary.to_le_bytes());
+                        match p.backup {
+                            Some(bk) => {
+                                out.push(1);
+                                out.extend_from_slice(&bk.to_le_bytes());
+                            }
+                            None => out.push(0),
+                        }
+                        for v in [p.rows, p.bytes, p.version, p.store_epoch] {
+                            out.extend_from_slice(&v.to_le_bytes());
+                        }
+                        match p.class {
+                            Some((m, r)) => {
+                                out.push(1);
+                                out.extend_from_slice(&m.to_le_bytes());
+                                out.extend_from_slice(&r.to_le_bytes());
+                            }
+                            None => out.push(0),
+                        }
+                    }
+                }
+            }
+            Response::AdminOk { message, value, epoch } => {
+                out.push(RESP_ADMIN_OK);
+                put_str(&mut out, message);
+                out.extend_from_slice(&value.to_le_bytes());
+                out.extend_from_slice(&epoch.to_le_bytes());
+            }
         }
         out
     }
@@ -796,6 +999,52 @@ impl Response {
                 }
                 Response::Metrics(Box::new(MetricsReply { text, slow_ops }))
             }
+            RESP_TOPOLOGY => {
+                let epoch = b.u64()?;
+                let nn = b.u16()? as usize;
+                let mut nodes = Vec::with_capacity(nn.min(1024));
+                for _ in 0..nn {
+                    let id = b.u32()?;
+                    let state = state_from_u8(b.u8()?)?;
+                    let partitions = b.u32()?;
+                    nodes.push(NodeWire { id, state, partitions });
+                }
+                let nt = b.u16()? as usize;
+                let mut tables = Vec::with_capacity(nt.min(1024));
+                for _ in 0..nt {
+                    let name = b.str()?;
+                    let np = b.u32()? as usize;
+                    let mut parts = Vec::with_capacity(np.min(65_536));
+                    for _ in 0..np {
+                        let pidx = b.u32()?;
+                        let primary = b.u32()?;
+                        let backup = if b.u8()? != 0 { Some(b.u32()?) } else { None };
+                        let rows = b.u64()?;
+                        let bytes = b.u64()?;
+                        let version = b.u64()?;
+                        let store_epoch = b.u64()?;
+                        let class =
+                            if b.u8()? != 0 { Some((b.i64()?, b.i64()?)) } else { None };
+                        parts.push(PartWire {
+                            pidx,
+                            primary,
+                            backup,
+                            rows,
+                            bytes,
+                            version,
+                            store_epoch,
+                            class,
+                        });
+                    }
+                    tables.push((name, parts));
+                }
+                Response::Topology(Box::new(TopologyReply { epoch, nodes, tables }))
+            }
+            RESP_ADMIN_OK => Response::AdminOk {
+                message: b.str()?,
+                value: b.u64()?,
+                epoch: b.u64()?,
+            },
             t => return Err(Error::Engine(format!("bad response tag 0x{t:02x}"))),
         };
         b.finish()?;
@@ -857,6 +1106,17 @@ mod tests {
         roundtrip_req(Request::Close);
         roundtrip_req(Request::Shutdown);
         roundtrip_req(Request::Metrics { top_k: 16 });
+        roundtrip_req(Request::Topology);
+        roundtrip_req(Request::Admin(AdminCmd::AddNode));
+        roundtrip_req(Request::Admin(AdminCmd::Rebalance {
+            table: "workqueue".into(),
+            pidx: 3,
+            to_node: 2,
+        }));
+        roundtrip_req(Request::Admin(AdminCmd::Split {
+            table: "workqueue".into(),
+            pidx: 1,
+        }));
     }
 
     #[test]
@@ -918,6 +1178,48 @@ mod tests {
             ],
         })));
         roundtrip_resp(Response::Metrics(Box::new(MetricsReply::default())));
+        roundtrip_resp(Response::Topology(Box::new(TopologyReply {
+            epoch: 7,
+            nodes: vec![
+                NodeWire { id: 0, state: NodeState::Alive, partitions: 4 },
+                NodeWire { id: 2, state: NodeState::Joining, partitions: 0 },
+            ],
+            tables: vec![(
+                "workqueue".into(),
+                vec![
+                    PartWire {
+                        pidx: 0,
+                        primary: 0,
+                        backup: Some(1),
+                        rows: 25,
+                        bytes: 1_600,
+                        version: 25,
+                        store_epoch: 3,
+                        class: Some((4, 0)),
+                    },
+                    PartWire::default(),
+                ],
+            )],
+        })));
+        roundtrip_resp(Response::Topology(Box::new(TopologyReply::default())));
+        roundtrip_resp(Response::AdminOk {
+            message: "partition workqueue[1] split".into(),
+            value: 4,
+            epoch: 9,
+        });
+    }
+
+    #[test]
+    fn node_state_index_roundtrips() {
+        for s in [
+            NodeState::Alive,
+            NodeState::Dead,
+            NodeState::Rejoining,
+            NodeState::Joining,
+        ] {
+            assert_eq!(state_from_u8(state_to_u8(s)).unwrap(), s);
+        }
+        assert!(state_from_u8(9).is_err());
     }
 
     #[test]

@@ -302,7 +302,16 @@ fn def_header(def: &TableDef) -> String {
     match &def.partitioning {
         Partitioning::Single => s.push('-'),
         Partitioning::Hash { column, partitions } => {
-            s.push_str(&format!("{column}:{partitions}"))
+            s.push_str(&format!("{column}:{partitions}"));
+            if !def.split_classes.is_empty() {
+                // Optional third bit: post-split congruence classes
+                // "m.r;m.r;…" — absent for never-split tables so old
+                // checkpoints stay parseable.
+                let classes: Vec<String> =
+                    def.split_classes.iter().map(|(m, r)| format!("{m}.{r}")).collect();
+                s.push(':');
+                s.push_str(&classes.join(";"));
+            }
         }
     }
     s.push('\x1f');
@@ -340,6 +349,23 @@ fn parse_def_header(h: &str) -> Result<TableDef> {
             .and_then(|s| s.parse().ok())
             .ok_or_else(|| Error::Parse(format!("bad partition spec '{}'", parts[2])))?;
         def = def.partition_by_hash(bits[0], n)?;
+        if let Some(spec) = bits.get(2) {
+            let classes = spec
+                .split(';')
+                .map(|c| {
+                    let (m, r) = c
+                        .split_once('.')
+                        .ok_or_else(|| Error::Parse(format!("bad split class '{c}'")))?;
+                    Ok((
+                        m.parse()
+                            .map_err(|_| Error::Parse(format!("bad split class '{c}'")))?,
+                        r.parse()
+                            .map_err(|_| Error::Parse(format!("bad split class '{c}'")))?,
+                    ))
+                })
+                .collect::<Result<Vec<(i64, i64)>>>()?;
+            def = def.with_split_classes(classes)?;
+        }
     }
     if parts[3] != "-" {
         def = def.with_primary_key(parts[3])?;
@@ -357,7 +383,6 @@ mod tests {
     use super::*;
     use crate::storage::cluster::DurabilityConfig;
     use crate::storage::value::Value;
-    use crate::util::clock;
 
     fn tmpdir(tag: &str) -> std::path::PathBuf {
         let d = std::env::temp_dir().join(format!("schaladb-ckpt-{tag}-{}", std::process::id()));
@@ -420,13 +445,12 @@ mod tests {
     #[test]
     fn partition_checkpoints_are_incremental_and_slot_exact() {
         let dir = tmpdir("partial");
-        let c = DbCluster::start(ClusterConfig {
-            data_nodes: 2,
-            replication: true,
-            clock: clock::wall(),
-            durability: Some(DurabilityConfig::new(dir.clone(), 4)),
-            ..Default::default()
-        })
+        let c = DbCluster::start(
+            ClusterConfig::builder()
+                .durability(DurabilityConfig::new(dir.clone(), 4))
+                .build()
+                .unwrap(),
+        )
         .unwrap();
         c.exec(
             "CREATE TABLE wq (taskid INT NOT NULL, wid INT NOT NULL, status TEXT) \
@@ -481,13 +505,12 @@ mod tests {
     fn epoch_only_change_rewrites_checkpoint() {
         use crate::storage::replication::AvailabilityManager;
         let dir = tmpdir("epoch-skip");
-        let c = DbCluster::start(ClusterConfig {
-            data_nodes: 2,
-            replication: true,
-            clock: clock::wall(),
-            durability: Some(DurabilityConfig::new(dir.clone(), 1)),
-            ..Default::default()
-        })
+        let c = DbCluster::start(
+            ClusterConfig::builder()
+                .durability(DurabilityConfig::new(dir.clone(), 1))
+                .build()
+                .unwrap(),
+        )
         .unwrap();
         c.exec(
             "CREATE TABLE wq (taskid INT NOT NULL, wid INT NOT NULL, status TEXT) \

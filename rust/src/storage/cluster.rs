@@ -133,6 +133,77 @@ impl Default for ClusterConfig {
     }
 }
 
+impl ClusterConfig {
+    /// Fluent construction over the defaults (2 nodes, replication on,
+    /// wall clock, no durability, 2PL). The builder's `build()` validates
+    /// the knob combination up front, where the positional field-stuffing
+    /// pattern deferred every mistake to `DbCluster::start`.
+    pub fn builder() -> ClusterConfigBuilder {
+        ClusterConfigBuilder { cfg: ClusterConfig::default() }
+    }
+
+    /// Positional shim for the pre-builder construction pattern.
+    #[deprecated(note = "use ClusterConfig::builder()")]
+    pub fn positional(
+        data_nodes: usize,
+        replication: bool,
+        durability: Option<DurabilityConfig>,
+        concurrency: ConcurrencyMode,
+    ) -> ClusterConfig {
+        ClusterConfig { data_nodes, replication, clock: clock::wall(), durability, concurrency }
+    }
+}
+
+/// Builder for [`ClusterConfig`] (see [`ClusterConfig::builder`]).
+#[derive(Clone)]
+pub struct ClusterConfigBuilder {
+    cfg: ClusterConfig,
+}
+
+impl ClusterConfigBuilder {
+    /// Number of data nodes (more can be added online, `DbCluster::add_node`).
+    pub fn data_nodes(mut self, n: usize) -> Self {
+        self.cfg.data_nodes = n;
+        self
+    }
+
+    /// Keep one backup replica per partition (needs ≥ 2 nodes).
+    pub fn replication(mut self, on: bool) -> Self {
+        self.cfg.replication = on;
+        self
+    }
+
+    /// Time source for `NOW()` and timestamps.
+    pub fn clock(mut self, clock: SharedClock) -> Self {
+        self.cfg.clock = clock;
+        self
+    }
+
+    /// Enable durable logging (per-partition WAL segments + checkpoints).
+    pub fn durability(mut self, d: DurabilityConfig) -> Self {
+        self.cfg.durability = Some(d);
+        self
+    }
+
+    /// Concurrency control for compiled point DML.
+    pub fn concurrency(mut self, mode: ConcurrencyMode) -> Self {
+        self.cfg.concurrency = mode;
+        self
+    }
+
+    /// Validate and produce the config. The same invariants
+    /// `DbCluster::start` enforces, surfaced at construction time.
+    pub fn build(self) -> Result<ClusterConfig> {
+        if self.cfg.data_nodes == 0 {
+            return Err(Error::Catalog("need at least one data node".into()));
+        }
+        if self.cfg.replication && self.cfg.data_nodes < 2 {
+            return Err(Error::Catalog("replication needs >= 2 data nodes".into()));
+        }
+        Ok(self.cfg)
+    }
+}
+
 /// Placement of one partition: which nodes host its primary and backup.
 #[derive(Clone, Copy, Debug)]
 pub struct Placement {
@@ -207,9 +278,84 @@ pub struct RejoinStart {
     pub replayed: u64,
 }
 
+/// Point-in-time snapshot of the cluster topology (see
+/// [`DbCluster::topology`]): every node with its lifecycle state, and every
+/// `(table, partition)` with its placement, congruence class, and size.
+/// This is the introspection surface the admin CLI and the wire protocol's
+/// `Request::Topology` serve; it replaces ad-hoc stats spelunking.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    /// Cluster epoch at the time of the snapshot.
+    pub epoch: u64,
+    pub nodes: Vec<NodeInfo>,
+    /// Per-table placement maps, sorted by table name.
+    pub tables: Vec<TableTopology>,
+}
+
+/// One data node in a [`Topology`] snapshot.
+#[derive(Clone, Debug)]
+pub struct NodeInfo {
+    pub id: u32,
+    pub state: NodeState,
+    /// Partition replicas hosted (primary and backup roles both count).
+    pub partitions: usize,
+}
+
+/// One table's placement map in a [`Topology`] snapshot.
+#[derive(Clone, Debug)]
+pub struct TableTopology {
+    /// Catalog key (lowercased table name).
+    pub table: String,
+    pub partitions: Vec<PartitionInfo>,
+}
+
+/// One partition's placement and size in a [`Topology`] snapshot.
+#[derive(Clone, Debug)]
+pub struct PartitionInfo {
+    pub pidx: usize,
+    pub primary: u32,
+    pub backup: Option<u32>,
+    /// Row count / approximate bytes of the serving replica (0 when no
+    /// replica is reachable — the snapshot degrades, never errors).
+    pub rows: usize,
+    pub bytes: usize,
+    /// Partition LSN and epoch fence of the serving replica.
+    pub version: u64,
+    pub store_epoch: u64,
+    /// Congruence class `(modulus, residue)` owning this partition's keys
+    /// (`None` for single-partition tables).
+    pub class: Option<(i64, i64)>,
+}
+
+/// One recommendation from the hot-partition advisor
+/// (see [`DbCluster::advise_topology`]).
+#[derive(Clone, Debug)]
+pub struct TopologyAdvice {
+    pub table: String,
+    pub pidx: usize,
+    /// Claims + WAL records observed on the partition's obs shard cell.
+    /// Shards alias `pidx % 64` **across tables**, so heat is an upper
+    /// bound attributed to every partition sharing the cell.
+    pub heat: u64,
+    pub action: AdviceAction,
+}
+
+/// What the advisor suggests doing with a hot partition.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdviceAction {
+    /// Hot and larger than its table's average partition: halve it in
+    /// place (`DbCluster::split_partition`).
+    Split,
+    /// Hot but small: move its primary to the least-loaded eligible node
+    /// (`DbCluster::rebalance_partition`).
+    Move { to_node: u32 },
+}
+
 /// The cluster facade.
 pub struct DbCluster {
-    nodes: Vec<Arc<DataNode>>,
+    /// Data nodes, growable online (`add_node`). Lock order: a thread
+    /// holding `catalog` may take `nodes`, never the reverse.
+    nodes: RwLock<Vec<Arc<DataNode>>>,
     catalog: RwLock<FxHashMap<String, Arc<TableMeta>>>,
     pub clock: SharedClock,
     pub stats: Arc<StatsRegistry>,
@@ -238,6 +384,10 @@ pub struct DbCluster {
     /// Serializes `refresh_monitoring`: the delete+reinsert of the system
     /// `monitoring` table must not interleave between concurrent readers.
     monitoring_refresh: Mutex<()>,
+    /// Serializes topology-change operations (`add_node`,
+    /// `rebalance_partition`, `split_partition`) against each other; the
+    /// data path never takes it.
+    admin: Mutex<()>,
 }
 
 /// Name of the system telemetry table (see
@@ -378,7 +528,7 @@ impl DbCluster {
             }
         }
         Ok(Arc::new(DbCluster {
-            nodes,
+            nodes: RwLock::new(nodes),
             catalog: RwLock::new(FxHashMap::default()),
             clock: config.clock,
             stats: Arc::new(StatsRegistry::new()),
@@ -393,6 +543,7 @@ impl DbCluster {
             scan_metrics: Arc::new(ScanMetrics::default()),
             obs,
             monitoring_refresh: Mutex::new(()),
+            admin: Mutex::new(()),
         }))
     }
 
@@ -439,11 +590,11 @@ impl DbCluster {
     }
 
     pub fn num_nodes(&self) -> usize {
-        self.nodes.len()
+        self.nodes.read().unwrap().len()
     }
 
-    pub fn node(&self, id: u32) -> Option<&Arc<DataNode>> {
-        self.nodes.get(id as usize)
+    pub fn node(&self, id: u32) -> Option<Arc<DataNode>> {
+        self.nodes.read().unwrap().get(id as usize).cloned()
     }
 
     /// Kill a data node (failure injection).
@@ -472,7 +623,8 @@ impl DbCluster {
             return Err(Error::Catalog(format!("table '{}' already exists", def.name)));
         }
         let def = Arc::new(def);
-        let alive: Vec<&Arc<DataNode>> = self.nodes.iter().filter(|n| n.is_alive()).collect();
+        let nodes = self.nodes.read().unwrap();
+        let alive: Vec<&Arc<DataNode>> = nodes.iter().filter(|n| n.is_alive()).collect();
         if alive.is_empty() {
             return Err(Error::Unavailable("no alive data nodes".into()));
         }
@@ -643,8 +795,14 @@ impl DbCluster {
     /// materializations rather than deep-copying every live row.
     pub fn heal(&self) -> Result<usize> {
         let mut healed = 0;
-        let cat = self.catalog.read().unwrap();
-        for meta in cat.values() {
+        // Clone the metas and release the catalog lock before latching any
+        // partition: a topology cut takes partition latches first and the
+        // catalog lock second, so holding the catalog across a latch wait
+        // here would deadlock against a concurrent move/split.
+        let metas: Vec<Arc<TableMeta>> =
+            self.catalog.read().unwrap().values().cloned().collect();
+        for meta in metas {
+            let key = meta.def.name.to_lowercase();
             for (pidx, pl) in meta.placements.iter().enumerate() {
                 let Some(bid) = pl.backup else { continue };
                 let (Some(pn), Some(bn)) = (self.node(pl.primary), self.node(bid)) else {
@@ -653,8 +811,10 @@ impl DbCluster {
                 if !pn.is_alive() || !bn.is_alive() {
                     continue;
                 }
-                let ps = pn.partition(&meta.def.name, pidx)?;
-                let bs = bn.partition(&meta.def.name, pidx)?;
+                // A concurrent move may have dropped these replicas from
+                // their nodes; skip rather than abort the whole sweep.
+                let Ok(ps) = pn.partition(&meta.def.name, pidx) else { continue };
+                let Ok(bs) = bn.partition(&meta.def.name, pidx) else { continue };
                 // Primary read latch and backup write latch held *together*
                 // (primary before backup — the executor's canonical order,
                 // so no deadlock). Snapshotting the primary under a latch
@@ -666,6 +826,19 @@ impl DbCluster {
                 // costs two version reads per sweep, not a full row clone.
                 let g = ps.read().unwrap();
                 let mut bg = bs.write().unwrap();
+                // Under the held latch pair, verify this meta is still the
+                // installed catalog entry. A topology cut that retired
+                // these placements ran while we waited for the latches;
+                // re-seeding from the orphaned pre-cut store would
+                // resurrect state the cut already moved. Skip — the next
+                // sweep re-reads the catalog.
+                {
+                    let cat = self.catalog.read().unwrap();
+                    match cat.get(&key) {
+                        Some(cur) if Arc::ptr_eq(cur, &meta) => {}
+                        _ => continue,
+                    }
+                }
                 if bg.version != g.version || bg.len() != g.len() {
                     let (cap, rows) = g.snapshot_slotted();
                     bg.load_slotted(cap, rows)?;
@@ -897,6 +1070,590 @@ impl DbCluster {
             }
         }
         Ok((shipped, reseeded))
+    }
+
+    // ---------- elastic topology: add_node / rebalance / split ----------
+    //
+    // All three operations are serialized by `self.admin` and share the
+    // cut discipline the rejoin machinery established: latch the affected
+    // partition replicas first, then (still holding the latches) take the
+    // catalog write lock, verify the captured `TableMeta` is still the
+    // installed entry, re-stamp the epoch, and swap the catalog entry in.
+    // Writers that were queued on those latches revalidate by `Arc`
+    // identity (`fast_mirror_valid` / `mirror_set_valid`) and re-route.
+    // The inverse order — holding the catalog lock while *waiting* on a
+    // partition latch — exists nowhere in the executor, so this cannot
+    // deadlock.
+
+    /// Register a fresh data node with the running cluster and return its
+    /// id. The node starts [`NodeState::Joining`]: it hosts nothing and
+    /// serves nothing, but it is an eligible **rebalance target** — the
+    /// first completed [`DbCluster::rebalance_partition`] onto it flips it
+    /// to `Alive`. With durability configured the node gets its own
+    /// `node<id>/` directory and WAL segments, exactly like a start-time
+    /// node.
+    ///
+    /// Known limit: the obs registry's per-node WAL counter vectors are
+    /// sized at cluster start, so later-added nodes are not broken out in
+    /// the `node_wal_*` telemetry (lookups are bounds-checked; everything
+    /// else — per-partition cells, counters, tracing — covers them).
+    pub fn add_node(&self) -> Result<u32> {
+        let _admin = self.admin.lock().unwrap();
+        let mut nodes = self.nodes.write().unwrap();
+        let id = nodes.len() as u32;
+        let n = Arc::new(DataNode::new_joining(id));
+        n.attach_obs(self.obs.clone());
+        if let Some(d) = &self.durability {
+            let ndir = d.dir.join(format!("node{id}"));
+            let _ = std::fs::remove_dir_all(&ndir);
+            std::fs::create_dir_all(&ndir)?;
+            n.attach_durability(ndir, d.group_commit);
+        }
+        nodes.push(n);
+        Ok(id)
+    }
+
+    /// Snapshot the cluster topology: nodes with lifecycle states, and
+    /// per-(table, partition) placement, congruence class, LSN/epoch, and
+    /// size. Purely observational — unreachable partitions report zero
+    /// sizes rather than erroring.
+    pub fn topology(&self) -> Topology {
+        let metas: Vec<(String, Arc<TableMeta>)> = {
+            let cat = self.catalog.read().unwrap();
+            let mut v: Vec<_> = cat.iter().map(|(k, m)| (k.clone(), m.clone())).collect();
+            v.sort_by(|a, b| a.0.cmp(&b.0));
+            v
+        };
+        let mut tables = Vec::with_capacity(metas.len());
+        for (name, meta) in &metas {
+            let mut partitions = Vec::with_capacity(meta.placements.len());
+            for (pidx, pl) in meta.placements.iter().enumerate() {
+                let (rows, bytes, version, store_epoch) =
+                    match self.replica_store(meta, pidx, pl, false) {
+                        Ok((store, _, _)) => {
+                            let g = store.read().unwrap();
+                            (g.len(), g.approx_bytes(), g.version, g.epoch)
+                        }
+                        Err(_) => (0, 0, 0, 0),
+                    };
+                partitions.push(PartitionInfo {
+                    pidx,
+                    primary: pl.primary,
+                    backup: pl.backup,
+                    rows,
+                    bytes,
+                    version,
+                    store_epoch,
+                    class: meta.def.partition_class(pidx),
+                });
+            }
+            tables.push(TableTopology { table: name.clone(), partitions });
+        }
+        let nodes = self
+            .nodes
+            .read()
+            .unwrap()
+            .iter()
+            .map(|n| NodeInfo { id: n.id, state: n.state(), partitions: n.hosted_keys().len() })
+            .collect();
+        Topology { epoch: self.cluster_epoch(), nodes, tables }
+    }
+
+    /// Move the **primary replica** of `table[pidx]` onto `to_node`,
+    /// online, while claims keep committing. Three cases:
+    ///
+    /// - target already primary: no-op;
+    /// - target hosts the in-lockstep backup: a latched **role flip** —
+    ///   placement metadata only, no data movement;
+    /// - otherwise the rejoin pipeline, generalized: slot-preserving seed
+    ///   under a brief source read latch, two off-latch redo-ship
+    ///   catch-up rounds, then a final cut that read-latches *every* old
+    ///   replica (freezing writers wherever they are routed), ships the
+    ///   remaining tail, re-stamps the epoch, and swaps the placement.
+    ///   The donor's orphaned replica is dropped after the cut; the old
+    ///   backup (when present) stays the backup, so redundancy never dips.
+    ///
+    /// A [`NodeState::Joining`] target is flipped to `Alive` inside the
+    /// cut (before the new placement is published, so there is no window
+    /// where the new primary is unreachable).
+    pub fn rebalance_partition(&self, table: &str, pidx: usize, to_node: u32) -> Result<()> {
+        let _admin = self.admin.lock().unwrap();
+        let meta = self.meta(table)?;
+        let name = meta.def.name.clone();
+        let key = name.to_lowercase();
+        if pidx >= meta.placements.len() {
+            return Err(Error::Catalog(format!(
+                "partition {pidx} out of range for '{name}' ({} partitions)",
+                meta.placements.len()
+            )));
+        }
+        let pl = meta.placements[pidx];
+        if pl.primary == to_node {
+            return Ok(());
+        }
+        let target = self
+            .node(to_node)
+            .ok_or_else(|| Error::Unavailable(format!("no node {to_node}")))?;
+        if !matches!(target.state(), NodeState::Alive | NodeState::Joining) {
+            return Err(Error::Unavailable(format!(
+                "rebalance target node {to_node} is {:?}",
+                target.state()
+            )));
+        }
+        if pl.backup == Some(to_node) {
+            return self.flip_primary(&meta, &key, pidx, &target);
+        }
+        if target.hosts(&name, pidx) {
+            // debris from an earlier aborted attempt: restart from scratch
+            target.drop_partition(&name, pidx);
+        }
+        target.host_partition(meta.def.clone(), pidx)?;
+        let res = self.move_into(&meta, &key, pidx, &target);
+        if res.is_err() {
+            target.drop_partition(&name, pidx);
+        }
+        res
+    }
+
+    /// Latched role flip (rebalance onto the current backup): both
+    /// replicas already hold the rows in lockstep, so the cut is placement
+    /// metadata only. Write latches on both stores exclude every writer;
+    /// the epoch is bumped and stamped, and the catalog entry swapped,
+    /// under those latches.
+    fn flip_primary(
+        &self,
+        meta: &Arc<TableMeta>,
+        key: &str,
+        pidx: usize,
+        target: &Arc<DataNode>,
+    ) -> Result<()> {
+        let name = &meta.def.name;
+        let pl = meta.placements[pidx];
+        if !target.is_alive() {
+            return Err(Error::Unavailable(format!(
+                "backup node {} of {name}[{pidx}] is not serving",
+                target.id
+            )));
+        }
+        let pn = self
+            .node(pl.primary)
+            .ok_or_else(|| Error::Unavailable(format!("no node {}", pl.primary)))?;
+        let ps = pn.partition_even_if_dead(name, pidx)?;
+        let bs = target.partition_even_if_dead(name, pidx)?;
+        let mut g = ps.write().unwrap();
+        let mut bg = bs.write().unwrap();
+        let mut cat = self.catalog.write().unwrap();
+        match cat.get(key) {
+            Some(cur) if Arc::ptr_eq(cur, meta) => {}
+            _ => {
+                return Err(Error::Unavailable(
+                    "topology changed during rebalance; retry".into(),
+                ))
+            }
+        }
+        if pn.is_alive() && (bg.version != g.version || bg.len() != g.len()) {
+            return Err(Error::Unavailable(format!(
+                "backup of {name}[{pidx}] is not in lockstep; heal first"
+            )));
+        }
+        let epoch = self.epoch.fetch_add(1, AtomicOrdering::SeqCst) + 1;
+        g.epoch = epoch;
+        bg.epoch = epoch;
+        let mut placements = meta.placements.clone();
+        placements[pidx] = Placement { primary: target.id, backup: Some(pl.primary) };
+        cat.insert(key.to_string(), Arc::new(TableMeta { def: meta.def.clone(), placements }));
+        Ok(())
+    }
+
+    /// The full-move pipeline behind [`DbCluster::rebalance_partition`]:
+    /// the target already hosts a fresh (empty) replica; seed it, catch it
+    /// up off-latch, and cut.
+    fn move_into(
+        &self,
+        meta: &Arc<TableMeta>,
+        key: &str,
+        pidx: usize,
+        target: &Arc<DataNode>,
+    ) -> Result<()> {
+        let name = &meta.def.name;
+        let pl = meta.placements[pidx];
+        let dst = target.partition_even_if_dead(name, pidx)?;
+        // Phase 1: slot-preserving seed under a brief source read latch.
+        // Writers resume the moment it drops; the target reproduces the
+        // source's slab layout (holes included) so slot-addressed redo
+        // stays applicable.
+        {
+            let (src, _, _) = self.replica_store(meta, pidx, &pl, false)?;
+            let g = src.read().unwrap();
+            let (cap, rows) = g.snapshot_slotted();
+            let mut d = dst.write().unwrap();
+            d.load_slotted(cap, rows)?;
+            d.version = g.version;
+            d.epoch = g.epoch;
+        }
+        // Phase 2: bounded off-latch catch-up from the serving replica's
+        // retained redo tail (the rejoin loop, re-aimed). The serving
+        // replica is re-resolved each round so a donor death mid-move
+        // degrades to catch-up from the surviving backup.
+        for _ in 0..2 {
+            let Ok((_, src_node, _)) = self.replica_store(meta, pidx, &pl, false) else {
+                break;
+            };
+            let myv = dst.read().unwrap().version;
+            let tail = self
+                .node(src_node)
+                .and_then(|n| n.wal.lock().unwrap().tail_since(name, pidx, myv));
+            let Some(recs) = tail else { continue };
+            if recs.is_empty() {
+                continue;
+            }
+            let mut d = dst.write().unwrap();
+            for rec in recs {
+                if d.apply_redo(&rec).is_err() {
+                    break;
+                }
+            }
+        }
+        // Phase 3: final cut. Read latches on *every* old replica — not
+        // just the serving one — freeze writers wherever failover may have
+        // routed them; the serving replica is then chosen from liveness
+        // observed under those latches (the mirror-set rule, reused).
+        let pn = self
+            .node(pl.primary)
+            .ok_or_else(|| Error::Unavailable(format!("no node {}", pl.primary)))?;
+        let p_store = pn.partition_even_if_dead(name, pidx)?;
+        let b_node = pl.backup.and_then(|b| self.node(b));
+        let b_store = match &b_node {
+            Some(bn) => Some(bn.partition_even_if_dead(name, pidx)?),
+            None => None,
+        };
+        let pg = p_store.read().unwrap();
+        let bg = b_store.as_ref().map(|s| s.read().unwrap());
+        let (srcg, src_node): (&PartitionStore, u32) = if pn.is_alive() {
+            (&pg, pl.primary)
+        } else if let (Some(g), Some(bn)) = (bg.as_ref(), &b_node) {
+            if bn.is_alive() {
+                (g, bn.id)
+            } else {
+                return Err(Error::Unavailable(format!(
+                    "all replicas of {name}[{pidx}] are down"
+                )));
+            }
+        } else {
+            return Err(Error::Unavailable(format!(
+                "all replicas of {name}[{pidx}] are down"
+            )));
+        };
+        let mut d = dst.write().unwrap();
+        let mut cat = self.catalog.write().unwrap();
+        match cat.get(key) {
+            Some(cur) if Arc::ptr_eq(cur, meta) => {}
+            _ => {
+                return Err(Error::Unavailable(
+                    "topology changed during rebalance; retry".into(),
+                ))
+            }
+        }
+        if d.version != srcg.version {
+            let tail = self
+                .node(src_node)
+                .and_then(|n| n.wal.lock().unwrap().tail_since(name, pidx, d.version));
+            if let Some(recs) = tail {
+                for rec in recs {
+                    if d.apply_redo(&rec).is_err() {
+                        break;
+                    }
+                }
+            }
+        }
+        if d.version != srcg.version || d.len() != srcg.len() {
+            // the tail could not close the gap: full re-seed under the cut
+            let (cap, rows) = srcg.snapshot_slotted();
+            d.load_slotted(cap, rows)?;
+            d.version = srcg.version;
+        }
+        let epoch = self.epoch.fetch_add(1, AtomicOrdering::SeqCst) + 1;
+        d.epoch = epoch;
+        target.wal.lock().unwrap().reset_segment(name, pidx, d.version);
+        // Old backup stays the backup (no redundancy dip, no extra data
+        // movement); without one, the donor itself becomes the backup —
+        // its store is in lockstep at the cut by construction.
+        let backup = if self.replication {
+            match pl.backup {
+                Some(b) => Some(b),
+                None => Some(src_node),
+            }
+        } else {
+            None
+        };
+        // Flip a Joining target to Alive *before* publishing the
+        // placement, so the new primary is never published-but-unservable.
+        if target.state() == NodeState::Joining {
+            target.finish_join(epoch);
+        }
+        let mut placements = meta.placements.clone();
+        placements[pidx] = Placement { primary: target.id, backup };
+        cat.insert(key.to_string(), Arc::new(TableMeta { def: meta.def.clone(), placements }));
+        drop(cat);
+        drop(d);
+        drop(bg);
+        drop(pg);
+        // Drop replicas orphaned by the new placement (the donor, unless
+        // it became the backup).
+        let kept: Vec<u32> = std::iter::once(target.id).chain(backup).collect();
+        for nid in [Some(pl.primary), pl.backup].into_iter().flatten() {
+            if !kept.contains(&nid) {
+                if let Some(n) = self.node(nid) {
+                    n.drop_partition(name, pidx);
+                }
+            }
+        }
+        // Fresh durable baseline for the target's rebased segment.
+        if self.durability.is_some() {
+            if let Err(e) = checkpoint::checkpoint_node(self, target.id) {
+                log::warn!("post-rebalance checkpoint of node {} failed: {e}", target.id);
+            }
+        }
+        Ok(())
+    }
+
+    /// Split a hot partition of `table` in two, online. The partition's
+    /// congruence class `(m, r)` halves: the old index keeps
+    /// `key mod 2m == r`, and a **new partition index** (appended) takes
+    /// `key mod 2m == r + m` — see [`TableDef::split_partition`]. The new
+    /// partition is placed on the same nodes as the source, so the split
+    /// itself moves no data between nodes (chain a
+    /// [`DbCluster::rebalance_partition`] to relocate it).
+    ///
+    /// The cut runs entirely under **write latches** on both source
+    /// replicas: residue rows are re-dealt slot-preservingly into the four
+    /// stores (source keeps its slots and holes; the new partition
+    /// inherits the moved rows' slots, so primary and backup stay
+    /// identical), the epoch is bumped and stamped, the WAL segments of
+    /// all involved stores are rebased at the cut (the re-deal is a
+    /// structural rewrite, not logged redo), and the catalog entry —
+    /// including the new routing — is swapped before the latches drop.
+    /// In-flight claims that latched behind the cut revalidate by `Arc`
+    /// identity and re-route; analytics snapshots do the same.
+    ///
+    /// Returns the new partition's index.
+    pub fn split_partition(&self, table: &str, pidx: usize) -> Result<usize> {
+        let _admin = self.admin.lock().unwrap();
+        let meta = self.meta(table)?;
+        let name = meta.def.name.clone();
+        let key = name.to_lowercase();
+        let def2 = Arc::new(meta.def.split_partition(pidx)?);
+        let new_pidx = meta.def.num_partitions();
+        let pl = meta.placements[pidx];
+        let pn = self
+            .node(pl.primary)
+            .ok_or_else(|| Error::Unavailable(format!("no node {}", pl.primary)))?;
+        if !pn.is_alive() {
+            return Err(Error::Unavailable(format!(
+                "primary of {name}[{pidx}] is down; promote before splitting"
+            )));
+        }
+        let b_node = pl.backup.and_then(|b| self.node(b));
+        // Host the new partition's stores (invisible until the catalog
+        // swap). A dead backup gets one too — stale until `heal` re-seeds
+        // it, exactly like its stale source replica.
+        for n in std::iter::once(&pn).chain(b_node.iter()) {
+            if n.hosts(&name, new_pidx) {
+                // debris from an earlier aborted attempt
+                n.drop_partition(&name, new_pidx);
+            }
+            n.host_partition(def2.clone(), new_pidx)?;
+        }
+        let res = self.split_cut(&meta, &key, pidx, new_pidx, &def2, &pn, b_node.as_ref());
+        if res.is_err() {
+            pn.drop_partition(&name, new_pidx);
+            if let Some(bn) = &b_node {
+                bn.drop_partition(&name, new_pidx);
+            }
+        }
+        res.map(|_| new_pidx)
+    }
+
+    /// The latched re-deal behind [`DbCluster::split_partition`].
+    #[allow(clippy::too_many_arguments)]
+    fn split_cut(
+        &self,
+        meta: &Arc<TableMeta>,
+        key: &str,
+        pidx: usize,
+        new_pidx: usize,
+        def2: &Arc<TableDef>,
+        pn: &Arc<DataNode>,
+        b_node: Option<&Arc<DataNode>>,
+    ) -> Result<()> {
+        let name = &meta.def.name;
+        let src = pn.partition(name, pidx)?;
+        let ndst = pn.partition_even_if_dead(name, new_pidx)?;
+        let b_src = match b_node {
+            Some(bn) => Some(bn.partition_even_if_dead(name, pidx)?),
+            None => None,
+        };
+        let b_ndst = match b_node {
+            Some(bn) => Some(bn.partition_even_if_dead(name, new_pidx)?),
+            None => None,
+        };
+        // Write latches: source primary, source backup (canonical role
+        // order), then the still-invisible new stores (uncontended).
+        let mut g = src.write().unwrap();
+        let mut bg = b_src.as_ref().map(|s| s.write().unwrap());
+        let mut nd = ndst.write().unwrap();
+        let mut bnd = b_ndst.as_ref().map(|s| s.write().unwrap());
+        let mut cat = self.catalog.write().unwrap();
+        match cat.get(key) {
+            Some(cur) if Arc::ptr_eq(cur, meta) => {}
+            _ => {
+                return Err(Error::Unavailable("topology changed during split; retry".into()))
+            }
+        }
+        let v = g.version;
+        let pre_len = g.len();
+        // Re-deal the source rows by the post-split routing. Kept rows
+        // keep their slots (and the slab keeps its holes); moved rows keep
+        // their slots in the new partition's slab — both replicas of both
+        // partitions therefore reproduce identical layouts, and future
+        // canonical slot choices stay in lockstep.
+        let (cap, rows) = g.snapshot_slotted();
+        let mut kept: Vec<(Slot, Arc<Row>)> = Vec::with_capacity(rows.len());
+        let mut moved: Vec<(Slot, Arc<Row>)> = Vec::new();
+        for (slot, row) in rows {
+            match def2.partition_of_row(&row.values)? {
+                p if p == pidx => kept.push((slot, row)),
+                p if p == new_pidx => moved.push((slot, row)),
+                p => {
+                    return Err(Error::Engine(format!(
+                        "split of {name}[{pidx}] routed a row to foreign partition {p}"
+                    )))
+                }
+            }
+        }
+        let epoch = self.epoch.fetch_add(1, AtomicOrdering::SeqCst) + 1;
+        g.load_slotted(cap, kept.clone())?;
+        g.version = v;
+        g.epoch = epoch;
+        nd.load_slotted(cap, moved.clone())?;
+        nd.version = v;
+        nd.epoch = epoch;
+        // The backup mirrors the re-deal only when it is serving and in
+        // lockstep; a dead or stale backup keeps its stale stores and is
+        // re-seeded wholesale by the next heal sweep.
+        let backup_live = b_node.map_or(false, |bn| bn.is_alive())
+            && bg.as_ref().map_or(false, |b| b.version == v && b.len() == pre_len);
+        if backup_live {
+            if let (Some(b), Some(bn_store)) = (bg.as_mut(), bnd.as_mut()) {
+                b.load_slotted(cap, kept)?;
+                b.version = v;
+                b.epoch = epoch;
+                bn_store.load_slotted(cap, moved)?;
+                bn_store.version = v;
+                bn_store.epoch = epoch;
+            }
+        }
+        // Rebase the WAL segments of every store the cut touched: the
+        // re-deal is a structural rewrite outside the redo stream, so the
+        // segments restart at the cut version (dense from here on).
+        {
+            let mut w = pn.wal.lock().unwrap();
+            w.reset_segment(name, pidx, v);
+            w.reset_segment(name, new_pidx, v);
+        }
+        if backup_live {
+            if let Some(bn) = b_node {
+                let mut w = bn.wal.lock().unwrap();
+                w.reset_segment(name, pidx, v);
+                w.reset_segment(name, new_pidx, v);
+            }
+        }
+        let mut placements = meta.placements.clone();
+        let src_pl = meta.placements[pidx];
+        placements.push(Placement { primary: src_pl.primary, backup: src_pl.backup });
+        cat.insert(
+            key.to_string(),
+            Arc::new(TableMeta { def: def2.clone(), placements }),
+        );
+        drop(cat);
+        drop(bnd);
+        drop(nd);
+        drop(bg);
+        drop(g);
+        // Fresh durable baseline: the on-disk checkpoints predate the
+        // re-deal, and a crash before the next cut would otherwise replay
+        // pre-split history into post-split stores (the rejoin length
+        // check catches it, but a current checkpoint avoids the re-seed).
+        if self.durability.is_some() {
+            if let Err(e) = checkpoint::checkpoint_node(self, pn.id) {
+                log::warn!("post-split checkpoint of node {} failed: {e}", pn.id);
+            }
+            if let Some(bn) = b_node {
+                if bn.is_alive() {
+                    if let Err(e) = checkpoint::checkpoint_node(self, bn.id) {
+                        log::warn!("post-split checkpoint of node {} failed: {e}", bn.id);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Rank split/move candidates from the obs registry's 64-way sharded
+    /// per-partition cells (claims + WAL records — the write-side heat the
+    /// paper's skewed-workload concern is about). A partition is flagged
+    /// when its shard cell carries more than twice the median heat; large
+    /// ones (above their table's average rows) get [`AdviceAction::Split`],
+    /// small ones a [`AdviceAction::Move`] to the least-loaded eligible
+    /// node. Shard cells alias `pidx % 64` across tables, so treat heat as
+    /// an attribution upper bound, not an exact count.
+    pub fn advise_topology(&self) -> Vec<TopologyAdvice> {
+        let topo = self.topology();
+        // Least-loaded eligible target: Alive or Joining, fewest replicas.
+        let target = topo
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.state, NodeState::Alive | NodeState::Joining))
+            .min_by_key(|n| n.partitions)
+            .map(|n| n.id);
+        let mut heats: Vec<u64> = Vec::new();
+        let mut cand: Vec<(u64, &TableTopology, &PartitionInfo)> = Vec::new();
+        for t in &topo.tables {
+            if t.table == MONITORING_TABLE {
+                continue;
+            }
+            for p in &t.partitions {
+                let heat = self.obs.part_shard(PartMetric::Claims, p.pidx)
+                    + self.obs.part_shard(PartMetric::WalRecords, p.pidx);
+                heats.push(heat);
+                cand.push((heat, t, p));
+            }
+        }
+        if heats.len() < 2 {
+            return vec![];
+        }
+        heats.sort_unstable();
+        let median = heats[heats.len() / 2].max(1);
+        let mut out: Vec<TopologyAdvice> = Vec::new();
+        for (heat, t, p) in cand {
+            if heat <= median.saturating_mul(2) {
+                continue;
+            }
+            let avg_rows =
+                t.partitions.iter().map(|q| q.rows).sum::<usize>() / t.partitions.len().max(1);
+            let action = if p.rows > avg_rows && t.partitions.len() > 1 {
+                AdviceAction::Split
+            } else {
+                match target {
+                    Some(n) if n != p.primary => AdviceAction::Move { to_node: n },
+                    _ => continue,
+                }
+            };
+            out.push(TopologyAdvice { table: t.table.clone(), pidx: p.pidx, heat, action });
+        }
+        out.sort_by(|a, b| b.heat.cmp(&a.heat));
+        out.truncate(8);
+        out
     }
 
     /// Canonical, order-independent serialization of every table's
@@ -1621,7 +2378,23 @@ impl DbCluster {
     /// fresh replica's store from its WAL. On mismatch the caller returns
     /// `Ok(None)` and the statement falls back to the interpreted path,
     /// whose lock machinery revalidates and rebuilds its lock set.
+    ///
+    /// The check also re-fetches the catalog entry and compares it by
+    /// `Arc` identity: a topology cut (promotion, partition move, split)
+    /// swaps in a fresh `TableMeta` *while holding the partition latches
+    /// we just queued behind*, so observing the captured `Arc` still
+    /// installed proves the placements (and routing) the lock set was
+    /// built from are still current. A writer that latched after a cut
+    /// would otherwise apply to an orphaned store or mis-route a moved
+    /// key. (Safe to read the catalog here: no path holds the catalog
+    /// lock while waiting on a partition latch.)
     fn fast_mirror_valid(&self, meta: &TableMeta, targets: &[FastTarget]) -> bool {
+        let key = meta.def.name.to_lowercase();
+        let current = self.catalog.read().unwrap().get(&key).cloned();
+        match current {
+            Some(cur) if std::ptr::eq(Arc::as_ptr(&cur), meta as *const TableMeta) => {}
+            _ => return false,
+        }
         targets.iter().all(|t| {
             let backup_alive = meta.placements[t.pidx]
                 .backup
@@ -2083,6 +2856,19 @@ impl DbCluster {
         if let Some(n) = self.obs.rec_since(Hist::LatchWait, t_latch) {
             span::stage_add(Stage::Latch, n);
         }
+        // Under the held read latches, the captured meta must still be the
+        // installed catalog entry: an online split rewrote the routing the
+        // probe was resolved against (a moved key would probe the wrong —
+        // now residue-filtered — store and silently miss). Fall back to
+        // the interpreted path, which revalidates and rebuilds.
+        {
+            let key = def.name.to_lowercase();
+            let current = self.catalog.read().unwrap().get(&key).cloned();
+            match current {
+                Some(cur) if Arc::ptr_eq(&cur, &meta) => {}
+                _ => return Ok(None),
+            }
+        }
         self.obs.part_add_list(PartMetric::Scans, &parts);
 
         let dirs: Vec<bool> = p.order.iter().map(|(_, asc)| *asc).collect();
@@ -2352,7 +3138,7 @@ impl DbCluster {
             };
             self.obs.part_add_list(PartMetric::Scans, &parts);
             let t_scan = self.obs.start();
-            let snaps = self.partition_snapshots(&[(s.from.table.clone(), parts)])?;
+            let snaps = self.partition_snapshots(&[(meta.clone(), parts)])?;
             let rs = query_engine::scatter_gather(
                 self.scan_pool(),
                 &plan,
@@ -2372,12 +3158,10 @@ impl DbCluster {
         // cut, filter them in parallel, join at the coordinator. Inner-join
         // sides prune on the WHERE clause like the base table; left-outer
         // right sides must scan full to keep padding semantics.
-        let mut specs: Vec<(String, Vec<usize>)> = Vec::with_capacity(1 + s.joins.len());
+        let mut specs: Vec<(Arc<TableMeta>, Vec<usize>)> = Vec::with_capacity(1 + s.joins.len());
         let base_meta = self.meta(&s.from.table)?;
-        specs.push((
-            s.from.table.clone(),
-            prune_partitions(&base_meta.def, s.from.binding(), s.where_.as_ref()),
-        ));
+        let base_parts = prune_partitions(&base_meta.def, s.from.binding(), s.where_.as_ref());
+        specs.push((base_meta, base_parts));
         for j in &s.joins {
             let jm = self.meta(&j.table.table)?;
             let parts = if j.left_outer {
@@ -2385,7 +3169,7 @@ impl DbCluster {
             } else {
                 prune_partitions(&jm.def, j.table.binding(), s.where_.as_ref())
             };
-            specs.push((j.table.table.clone(), parts));
+            specs.push((jm, parts));
         }
         for (_, parts) in &specs {
             self.obs.part_add_list(PartMetric::Scans, parts);
@@ -2414,18 +3198,20 @@ impl DbCluster {
     /// query's execution, which is the whole point.
     pub(crate) fn partition_snapshots(
         &self,
-        specs: &[(String, Vec<usize>)],
+        specs: &[(Arc<TableMeta>, Vec<usize>)],
     ) -> Result<Vec<TableSnapshots>> {
-        let mut metas: Vec<Arc<TableMeta>> = Vec::with_capacity(specs.len());
-        for (table, _) in specs {
-            metas.push(self.meta(table)?);
-        }
+        // The caller resolved its partition lists against these same meta
+        // handles (`meta.def`), so the identity check under the latches
+        // below covers the pruning too: a split committed any time after
+        // the caller fetched a meta — not just during acquisition — is
+        // detected, instead of silently scanning the pre-split partition
+        // list and missing the rows the cut moved.
         // Dedup (table, pidx): self-joins reference the same partition more
         // than once, and re-locking the same RwLock on one thread can
         // deadlock against a queued writer.
         let mut uniq: Vec<(String, usize, Arc<RwLock<PartitionStore>>)> = Vec::new();
         let mut seen: rustc_hash::FxHashSet<(String, usize)> = rustc_hash::FxHashSet::default();
-        for (meta, (_, parts)) in metas.iter().zip(specs) {
+        for (meta, parts) in specs {
             let key = meta.def.name.to_lowercase();
             for &pidx in parts {
                 if !seen.insert((key.clone(), pidx)) {
@@ -2445,11 +3231,33 @@ impl DbCluster {
         let snapshots: Vec<ChunkSnapshot> = {
             let guards: Vec<RwLockReadGuard<'_, PartitionStore>> =
                 uniq.iter().map(|e| e.2.read().unwrap()).collect();
+            // Under the held latches, verify every meta is still the
+            // installed catalog entry. An online **split** rewrites rows
+            // under write latches on the affected partition and swaps the
+            // entry before releasing them, so a mismatch here means the
+            // partition list the stores were resolved from is stale and
+            // the snapshot could miss moved rows. (A pure move/flip is
+            // data-preserving, and its write-excluding cut can't overlap
+            // a split.) Error out; the caller's Unavailable path retries.
+            {
+                let cat = self.catalog.read().unwrap();
+                for (meta, _) in specs {
+                    let key = meta.def.name.to_lowercase();
+                    match cat.get(&key) {
+                        Some(cur) if Arc::ptr_eq(cur, meta) => {}
+                        _ => {
+                            return Err(Error::Unavailable(
+                                "topology changed during snapshot acquisition; retry".into(),
+                            ))
+                        }
+                    }
+                }
+            }
             guards.iter().map(|g| g.snapshot()).collect()
             // guards drop here: latches held only across the chunk bumps
         };
         let mut out = Vec::with_capacity(specs.len());
-        for (meta, (_, parts)) in metas.iter().zip(specs) {
+        for (meta, parts) in specs {
             let key = meta.def.name.to_lowercase();
             let mut tp: Vec<(usize, ChunkSnapshot)> = parts
                 .iter()
@@ -2678,15 +3486,29 @@ impl DbCluster {
 
     /// Validation half of the mirror-set rule (see `exec_txn_inner`):
     /// under the held latches, every write-locked primary must mirror to
-    /// its backup exactly when that backup's node is alive *now*. The
-    /// check runs against the same catalog snapshot the lock set was built
-    /// from, so it detects node-state changes, not catalog swaps (a
-    /// concurrent promotion re-resolves on the retry's `collect_locks`).
+    /// its backup exactly when that backup's node is alive *now*. Two
+    /// checks run under the latches:
+    ///
+    /// 1. every captured `TableMeta` is still the installed catalog entry
+    ///    (`Arc` identity) — a topology cut (promotion, partition move,
+    ///    split) swaps the entry while holding the partition latches, so a
+    ///    transaction that latched after the cut must rebuild its lock set
+    ///    against the new placements rather than write to orphaned stores;
+    /// 2. the backup-mirror decision still matches node liveness.
     fn mirror_set_valid(
         &self,
         ordered: &[LockReq],
         placements: &FxHashMap<String, Arc<TableMeta>>,
     ) -> bool {
+        {
+            let cat = self.catalog.read().unwrap();
+            for (key, captured) in placements {
+                match cat.get(key) {
+                    Some(cur) if Arc::ptr_eq(cur, captured) => {}
+                    _ => return false,
+                }
+            }
+        }
         let mirrored: rustc_hash::FxHashSet<(&str, usize)> = ordered
             .iter()
             .filter(|r| r.role == Role::Backup && r.write)
@@ -4075,13 +4897,9 @@ mod tests {
         // No replication: killing a node makes its partitions unreachable,
         // which used to abort table_bytes and erase whole tables from
         // total_bytes. Now dead partitions are skipped, live ones counted.
-        let c = DbCluster::start(ClusterConfig {
-            data_nodes: 2,
-            replication: false,
-            clock: clock::wall(),
-            durability: None,
-            ..Default::default()
-        })
+        let c = DbCluster::start(
+            ClusterConfig::builder().replication(false).build().unwrap(),
+        )
         .unwrap();
         c.exec(
             "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
@@ -4148,5 +4966,173 @@ mod tests {
         }
         let rs = c.query("SELECT COUNT(*) FROM workqueue WHERE status = 'RUNNING'").unwrap();
         assert_eq!(rs.rows[0].values[0], Value::Int(100));
+    }
+
+    #[test]
+    fn builder_validates_config() {
+        assert!(ClusterConfig::builder().data_nodes(0).build().is_err());
+        assert!(ClusterConfig::builder().data_nodes(1).replication(true).build().is_err());
+        let cfg = ClusterConfig::builder().data_nodes(1).replication(false).build().unwrap();
+        assert_eq!(cfg.data_nodes, 1);
+        assert!(!cfg.replication);
+    }
+
+    #[test]
+    fn topology_reports_placement_and_classes() {
+        let c = cluster();
+        seed(&c, 20, 4);
+        let t = c.topology();
+        assert_eq!(t.nodes.len(), 2);
+        assert!(t.nodes.iter().all(|n| n.state == NodeState::Alive));
+        let wq = t.tables.iter().find(|x| x.table == "workqueue").unwrap();
+        assert_eq!(wq.partitions.len(), 4);
+        assert_eq!(wq.partitions[1].class, Some((4, 1)));
+        assert_eq!(wq.partitions.iter().map(|p| p.rows).sum::<usize>(), 20);
+        for p in &wq.partitions {
+            assert_ne!(Some(p.primary), p.backup, "primary and backup must differ");
+        }
+    }
+
+    #[test]
+    fn add_node_then_rebalance_moves_primary() {
+        let c = cluster();
+        seed(&c, 40, 4);
+        let fp = c.fingerprint().unwrap();
+        let id = c.add_node().unwrap();
+        assert_eq!(id, 2);
+        assert_eq!(c.node(id).unwrap().state(), NodeState::Joining);
+        c.rebalance_partition("workqueue", 1, id).unwrap();
+        assert_eq!(c.node(id).unwrap().state(), NodeState::Alive);
+        let t = c.topology();
+        let wq = t.tables.iter().find(|x| x.table == "workqueue").unwrap();
+        assert_eq!(wq.partitions[1].primary, id);
+        assert_eq!(c.fingerprint().unwrap(), fp, "move must preserve every row");
+        // idempotent: moving again is a no-op
+        c.rebalance_partition("workqueue", 1, id).unwrap();
+        // the moved partition still serves claims end to end
+        let r = c
+            .exec(
+                "UPDATE workqueue SET status = 'RUNNING' \
+                 WHERE workerid = 1 AND status = 'READY' ORDER BY taskid LIMIT 2 \
+                 RETURNING taskid",
+            )
+            .unwrap()
+            .rows();
+        assert_eq!(r.rows.len(), 2);
+    }
+
+    #[test]
+    fn rebalance_onto_backup_is_role_flip() {
+        let c = cluster();
+        seed(&c, 12, 4);
+        let before = c.topology();
+        let wq = before.tables.iter().find(|x| x.table == "workqueue").unwrap();
+        let old = wq.partitions[2];
+        let to = old.backup.expect("default config replicates");
+        let fp = c.fingerprint().unwrap();
+        c.rebalance_partition("workqueue", 2, to).unwrap();
+        let after = c.topology();
+        let wq = after.tables.iter().find(|x| x.table == "workqueue").unwrap();
+        assert_eq!(wq.partitions[2].primary, to);
+        assert_eq!(wq.partitions[2].backup, Some(old.primary));
+        assert_eq!(c.fingerprint().unwrap(), fp);
+        assert!(after.epoch > before.epoch, "a cut must open a new epoch");
+    }
+
+    #[test]
+    fn split_partition_redistributes_rows() {
+        let c = cluster();
+        seed(&c, 40, 4);
+        // workerid 5 ≡ 1 (mod 4) routes to partition 1 pre-split and to the
+        // new residue class (mod 8 == 5) post-split
+        for i in 100..110 {
+            c.execute(&format!(
+                "INSERT INTO workqueue (taskid, workerid, status) VALUES ({i}, 5, 'READY')"
+            ))
+            .unwrap();
+        }
+        let fp = c.fingerprint().unwrap();
+        let new_pidx = c.split_partition("workqueue", 1).unwrap();
+        assert_eq!(new_pidx, 4);
+        let t = c.topology();
+        let wq = t.tables.iter().find(|x| x.table == "workqueue").unwrap();
+        assert_eq!(wq.partitions.len(), 5);
+        assert_eq!(wq.partitions[1].class, Some((8, 1)));
+        assert_eq!(wq.partitions[4].class, Some((8, 5)));
+        assert_eq!(wq.partitions[1].rows, 10, "workerid=1 rows stay");
+        assert_eq!(wq.partitions[4].rows, 10, "workerid=5 rows moved");
+        assert_eq!(c.fingerprint().unwrap(), fp, "split must preserve every row");
+        // routing to the new partition works for reads, point writes, and PK
+        let rs = c.query("SELECT COUNT(*) FROM workqueue WHERE workerid = 5").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(10));
+        let r = c
+            .exec(
+                "UPDATE workqueue SET status = 'RUNNING' \
+                 WHERE workerid = 5 AND status = 'READY' ORDER BY taskid LIMIT 1 \
+                 RETURNING taskid",
+            )
+            .unwrap()
+            .rows();
+        assert_eq!(r.rows.len(), 1);
+        assert_eq!(r.rows[0].values[0], Value::Int(100));
+        let rs = c.query("SELECT workerid FROM workqueue WHERE taskid = 105").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(5));
+        // scatter aggregate sees both halves of the old partition
+        let rs = c.query("SELECT COUNT(*) FROM workqueue").unwrap();
+        assert_eq!(rs.rows[0].values[0], Value::Int(50));
+    }
+
+    #[test]
+    fn split_survives_kill_and_rejoin() {
+        use crate::storage::replication::AvailabilityManager;
+        let c = cluster();
+        seed(&c, 24, 4);
+        let new_pidx = c.split_partition("workqueue", 3).unwrap();
+        let fp = c.fingerprint().unwrap();
+        let t = c.topology();
+        let wq = t.tables.iter().find(|x| x.table == "workqueue").unwrap();
+        let victim = wq.partitions[new_pidx].primary;
+        c.kill_node(victim).unwrap();
+        assert!(c.promote_dead_primaries() > 0);
+        assert_eq!(c.fingerprint().unwrap(), fp, "failover after split loses nothing");
+        c.restart_node(victim).unwrap();
+        let mgr = AvailabilityManager::new(c.clone());
+        for _ in 0..4 {
+            mgr.sweep().unwrap();
+        }
+        assert_eq!(c.node(victim).unwrap().state(), NodeState::Alive);
+        assert_eq!(c.fingerprint().unwrap(), fp);
+    }
+
+    #[test]
+    fn advise_topology_flags_hot_partition() {
+        let c = cluster();
+        // partition 1 gets most of the rows and all of the write traffic
+        for i in 0..24 {
+            c.execute(&format!(
+                "INSERT INTO workqueue (taskid, workerid, status) VALUES ({i}, 1, 'READY')"
+            ))
+            .unwrap();
+        }
+        for (i, w) in [(100, 0), (101, 2), (102, 3)] {
+            c.execute(&format!(
+                "INSERT INTO workqueue (taskid, workerid, status) VALUES ({i}, {w}, 'READY')"
+            ))
+            .unwrap();
+        }
+        for _ in 0..8 {
+            c.exec(
+                "UPDATE workqueue SET status = 'RUNNING' \
+                 WHERE workerid = 1 AND status = 'READY' ORDER BY taskid LIMIT 1 \
+                 RETURNING taskid",
+            )
+            .unwrap();
+        }
+        let advice = c.advise_topology();
+        let hot = advice
+            .iter()
+            .find(|a| a.table == "workqueue" && a.pidx == 1)
+            .expect("partition 1 must be flagged");
+        assert_eq!(hot.action, AdviceAction::Split);
     }
 }

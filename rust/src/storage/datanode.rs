@@ -41,11 +41,17 @@ pub enum NodeState {
     /// Restarted after a crash and catching up; serves nothing until the
     /// availability sweep's final cut flips it back to [`NodeState::Alive`].
     Rejoining,
+    /// Freshly added to a running cluster (`DbCluster::add_node`). Hosts
+    /// nothing yet and serves nothing; it is an eligible **rebalance
+    /// target**, and the first completed partition hand-off onto it flips
+    /// it to [`NodeState::Alive`].
+    Joining,
 }
 
 const STATE_ALIVE: u8 = 0;
 const STATE_DEAD: u8 = 1;
 const STATE_REJOINING: u8 = 2;
+const STATE_JOINING: u8 = 3;
 
 /// One data node.
 pub struct DataNode {
@@ -87,11 +93,20 @@ impl DataNode {
         let _ = self.obs.set(obs);
     }
 
+    /// Construct a node in the [`NodeState::Joining`] state (online node
+    /// addition — see `DbCluster::add_node`).
+    pub fn new_joining(id: u32) -> DataNode {
+        let n = DataNode::new(id);
+        n.state.store(STATE_JOINING, Ordering::SeqCst);
+        n
+    }
+
     /// Current lifecycle state.
     pub fn state(&self) -> NodeState {
         match self.state.load(Ordering::SeqCst) {
             STATE_ALIVE => NodeState::Alive,
             STATE_DEAD => NodeState::Dead,
+            STATE_JOINING => NodeState::Joining,
             _ => NodeState::Rejoining,
         }
     }
@@ -121,6 +136,14 @@ impl DataNode {
     /// Rejoin hand-off: stamp the epoch the node caught up under and start
     /// serving again.
     pub fn finish_rejoin(&self, epoch: u64) {
+        self.epoch.store(epoch, Ordering::SeqCst);
+        self.state.store(STATE_ALIVE, Ordering::SeqCst);
+    }
+
+    /// Join hand-off: a freshly added node received its first partition
+    /// through a completed rebalance cut and starts serving. Shares the
+    /// epoch-stamp semantics of [`DataNode::finish_rejoin`].
+    pub fn finish_join(&self, epoch: u64) {
         self.epoch.store(epoch, Ordering::SeqCst);
         self.state.store(STATE_ALIVE, Ordering::SeqCst);
     }

@@ -57,8 +57,11 @@ pub use crate::storage::cexpr::{CExpr, CVal, Conjunct};
 pub enum Route {
     /// Single-partition table: always partition 0.
     Single,
-    /// `partition_col = <int literal>` — partition precomputed at prepare.
-    Pinned(usize),
+    /// `partition_col = <int literal>` — the literal key is stored and the
+    /// partition computed against the **live** def at execution time, so a
+    /// cached plan keeps routing correctly after an online partition split
+    /// changes the key→partition map.
+    Pinned(i64),
     /// `partition_col = ?i` — partition computed from the bound value.
     ByParam(usize),
     /// No pinning conjunct: every partition (writes lock all of them, like
@@ -74,7 +77,7 @@ impl Route {
     pub fn resolve(&self, def: &TableDef, params: &[Value]) -> Option<Vec<usize>> {
         Some(match self {
             Route::Single => vec![0],
-            Route::Pinned(p) => vec![*p],
+            Route::Pinned(k) => vec![def.partition_of_key(*k)],
             Route::ByParam(i) => match params.get(*i) {
                 Some(Value::Int(k)) => vec![def.partition_of_key(*k)],
                 _ => return None,
@@ -211,7 +214,7 @@ fn route_of(def: &TableDef, preds: &[Conjunct]) -> Route {
         for c in preds {
             if c.col == ci && c.op == Op::Eq {
                 match &c.rhs {
-                    CVal::Lit(Value::Int(k)) => return Route::Pinned(def.partition_of_key(*k)),
+                    CVal::Lit(Value::Int(k)) => return Route::Pinned(*k),
                     CVal::Param(i) => return Route::ByParam(*i),
                     CVal::Lit(_) => {}
                 }

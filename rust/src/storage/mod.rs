@@ -26,7 +26,11 @@ pub mod txn;
 pub mod value;
 pub mod wal;
 
-pub use cluster::{ClusterConfig, ConcurrencyMode, DbCluster, DurabilityConfig, RejoinStart};
+pub use cluster::{
+    AdviceAction, ClusterConfig, ClusterConfigBuilder, ConcurrencyMode, DbCluster,
+    DurabilityConfig, NodeInfo, PartitionInfo, RejoinStart, TableTopology, Topology,
+    TopologyAdvice,
+};
 pub use connector::Connector;
 pub use datanode::NodeState;
 pub use prepared::Prepared;

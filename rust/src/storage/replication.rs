@@ -164,7 +164,6 @@ mod tests {
     use crate::storage::cluster::{ClusterConfig, ConcurrencyMode, DurabilityConfig};
     use crate::storage::stats::AccessKind;
     use crate::storage::value::Value;
-    use crate::util::clock;
 
     fn cluster() -> Arc<DbCluster> {
         let c = DbCluster::start(ClusterConfig::default()).unwrap();
@@ -185,13 +184,12 @@ mod tests {
             std::process::id()
         ));
         let _ = std::fs::remove_dir_all(&dir);
-        let c = DbCluster::start(ClusterConfig {
-            data_nodes: 2,
-            replication: true,
-            clock: clock::wall(),
-            durability: Some(DurabilityConfig::new(dir.clone(), 4)),
-            ..Default::default()
-        })
+        let c = DbCluster::start(
+            ClusterConfig::builder()
+                .durability(DurabilityConfig::new(dir.clone(), 4))
+                .build()
+                .unwrap(),
+        )
         .unwrap();
         c.exec(
             "CREATE TABLE t (id INT NOT NULL, v FLOAT) \
@@ -339,13 +337,13 @@ mod tests {
             std::process::id()
         ));
         let _ = std::fs::remove_dir_all(&dir);
-        let c = DbCluster::start(ClusterConfig {
-            data_nodes: 2,
-            replication: false,
-            clock: clock::wall(),
-            durability: Some(DurabilityConfig::new(dir.clone(), 1)),
-            ..Default::default()
-        })
+        let c = DbCluster::start(
+            ClusterConfig::builder()
+                .replication(false)
+                .durability(DurabilityConfig::new(dir.clone(), 1))
+                .build()
+                .unwrap(),
+        )
         .unwrap();
         c.exec(
             "CREATE TABLE t (id INT NOT NULL, v FLOAT) \
@@ -396,13 +394,13 @@ mod tests {
         ));
         let _ = std::fs::remove_dir_all(&dir);
         let group_commit = 8;
-        let c = DbCluster::start(ClusterConfig {
-            data_nodes: 2,
-            replication: false,
-            clock: clock::wall(),
-            durability: Some(DurabilityConfig::new(dir.clone(), group_commit)),
-            ..Default::default()
-        })
+        let c = DbCluster::start(
+            ClusterConfig::builder()
+                .replication(false)
+                .durability(DurabilityConfig::new(dir.clone(), group_commit))
+                .build()
+                .unwrap(),
+        )
         .unwrap();
         c.exec(
             "CREATE TABLE t (id INT NOT NULL, v FLOAT) \
@@ -522,13 +520,13 @@ mod tests {
             std::process::id()
         ));
         let _ = std::fs::remove_dir_all(&dir);
-        let c = DbCluster::start(ClusterConfig {
-            data_nodes: 2,
-            replication: true,
-            clock: clock::wall(),
-            durability: Some(DurabilityConfig::new(dir.clone(), 4)),
-            concurrency: ConcurrencyMode::Occ,
-        })
+        let c = DbCluster::start(
+            ClusterConfig::builder()
+                .durability(DurabilityConfig::new(dir.clone(), 4))
+                .concurrency(ConcurrencyMode::Occ)
+                .build()
+                .unwrap(),
+        )
         .unwrap();
         c.exec(
             "CREATE TABLE t (id INT NOT NULL, v FLOAT) \
@@ -613,15 +611,12 @@ mod tests {
             std::process::id()
         ));
         let _ = std::fs::remove_dir_all(&dir);
-        let c = DbCluster::start(ClusterConfig {
-            data_nodes: 2,
-            replication: true,
-            clock: clock::wall(),
-            durability: Some(
-                DurabilityConfig::new(dir.clone(), 4).with_checkpoint_cadence(2),
-            ),
-            ..Default::default()
-        })
+        let c = DbCluster::start(
+            ClusterConfig::builder()
+                .durability(DurabilityConfig::new(dir.clone(), 4).with_checkpoint_cadence(2))
+                .build()
+                .unwrap(),
+        )
         .unwrap();
         c.exec(
             "CREATE TABLE t (id INT NOT NULL, v FLOAT) \

@@ -27,6 +27,15 @@ pub struct TableDef {
     pub primary_key: Option<String>,
     /// Secondary (non-unique) indexed columns per partition.
     pub indexes: Vec<String>,
+    /// Congruence-class routing after **online partition splits**
+    /// (`DbCluster::split_partition`). Empty until the first split — the
+    /// uniform `key mod partitions` rule applies. Once populated,
+    /// `split_classes[i] = (modulus, residue)` means physical partition `i`
+    /// owns exactly the keys with `key mod modulus == residue`; splitting a
+    /// partition halves its class (`(m, r)` → `(2m, r)` kept in place and
+    /// `(2m, r + m)` appended as a new partition index), so the classes
+    /// always stay disjoint and cover every key.
+    pub split_classes: Vec<(i64, i64)>,
 }
 
 impl TableDef {
@@ -37,6 +46,7 @@ impl TableDef {
             partitioning: Partitioning::Single,
             primary_key: None,
             indexes: vec![],
+            split_classes: vec![],
         }
     }
 
@@ -79,12 +89,68 @@ impl TableDef {
         Ok(self)
     }
 
-    /// Number of partitions.
+    /// Number of partitions (post-split classes included).
     pub fn num_partitions(&self) -> usize {
+        if !self.split_classes.is_empty() {
+            return self.split_classes.len();
+        }
         match &self.partitioning {
             Partitioning::Single => 1,
             Partitioning::Hash { partitions, .. } => *partitions,
         }
+    }
+
+    /// The congruence class `(modulus, residue)` of physical partition
+    /// `pidx`: its rows are exactly the keys with
+    /// `key mod modulus == residue`. Before any split this is the uniform
+    /// `(partitions, pidx)`; `None` for single-partition tables or an
+    /// out-of-range index.
+    pub fn partition_class(&self, pidx: usize) -> Option<(i64, i64)> {
+        if !self.split_classes.is_empty() {
+            return self.split_classes.get(pidx).copied();
+        }
+        match &self.partitioning {
+            Partitioning::Single => None,
+            Partitioning::Hash { partitions, .. } if pidx < *partitions => {
+                Some((*partitions as i64, pidx as i64))
+            }
+            Partitioning::Hash { .. } => None,
+        }
+    }
+
+    /// Derive the definition after splitting partition `pidx` in two: the
+    /// old index keeps the keys with `key mod 2m == r` and a **new
+    /// partition index** (appended, `num_partitions()` of the old def)
+    /// takes `key mod 2m == r + m`. Routing state only — moving the rows
+    /// is the cluster's job (`DbCluster::split_partition`).
+    pub fn split_partition(&self, pidx: usize) -> Result<TableDef> {
+        let Partitioning::Hash { .. } = &self.partitioning else {
+            return Err(Error::Catalog(format!(
+                "table '{}' is single-partition; only hash-partitioned tables split",
+                self.name
+            )));
+        };
+        let n = self.num_partitions();
+        if pidx >= n {
+            return Err(Error::Catalog(format!(
+                "partition {pidx} out of range for '{}' ({n} partitions)",
+                self.name
+            )));
+        }
+        let mut classes: Vec<(i64, i64)> = if self.split_classes.is_empty() {
+            (0..n as i64).map(|r| (n as i64, r)).collect()
+        } else {
+            self.split_classes.clone()
+        };
+        let (m, r) = classes[pidx];
+        let m2 = m.checked_mul(2).ok_or_else(|| {
+            Error::Catalog(format!("partition {pidx} of '{}' cannot split further", self.name))
+        })?;
+        classes[pidx] = (m2, r);
+        classes.push((m2, r + m));
+        let mut def = self.clone();
+        def.split_classes = classes;
+        Ok(def)
     }
 
     /// Schema index of the partition column, if hash-partitioned.
@@ -113,10 +179,38 @@ impl TableDef {
     ///
     /// Identity-mod hashing, exactly the paper's design: `worker_id = i`
     /// lands in partition `i mod W`; with `partitions == W` each worker owns
-    /// one partition.
+    /// one partition. After an online split the key is routed to the unique
+    /// congruence class containing it (see [`TableDef::split_classes`]).
     pub fn partition_of_key(&self, key: i64) -> usize {
+        if !self.split_classes.is_empty() {
+            for (i, (m, r)) in self.split_classes.iter().enumerate() {
+                if key.rem_euclid(*m) == *r {
+                    return i;
+                }
+            }
+            // unreachable by construction (classes cover every residue);
+            // keep a deterministic fallback rather than panicking
+            return 0;
+        }
         let n = self.num_partitions();
         (key.rem_euclid(n as i64)) as usize
+    }
+
+    /// Restore a post-split routing table verbatim (checkpoint recovery).
+    /// Classes must be non-empty, disjoint, and cover every key; only
+    /// trivially-checkable shape errors are rejected here.
+    pub fn with_split_classes(mut self, classes: Vec<(i64, i64)>) -> Result<TableDef> {
+        if !matches!(self.partitioning, Partitioning::Hash { .. }) {
+            return Err(Error::Catalog(format!(
+                "'{}': split classes require hash partitioning",
+                self.name
+            )));
+        }
+        if classes.is_empty() || classes.iter().any(|(m, r)| *m <= 0 || *r < 0 || r >= m) {
+            return Err(Error::Catalog(format!("'{}': malformed split classes", self.name)));
+        }
+        self.split_classes = classes;
+        Ok(self)
     }
 
     /// Schema index of the primary key column.

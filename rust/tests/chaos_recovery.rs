@@ -23,7 +23,6 @@ use schaladb::storage::checkpoint::checkpoint_node;
 use schaladb::storage::cluster::{ClusterConfig, ConcurrencyMode, DurabilityConfig};
 use schaladb::storage::replication::AvailabilityManager;
 use schaladb::storage::{AccessKind, DbCluster, Prepared, Value};
-use schaladb::util::clock;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -241,13 +240,13 @@ fn run_cell(seed: u64, parts: usize) {
         std::process::id()
     ));
     let _ = std::fs::remove_dir_all(&dir);
-    let a = DbCluster::start(ClusterConfig {
-        data_nodes: 2,
-        replication: true,
-        clock: clock::wall(),
-        durability: Some(DurabilityConfig::new(dir.clone(), 8)),
-        concurrency: chaos_mode(),
-    })
+    let a = DbCluster::start(
+        ClusterConfig::builder()
+            .durability(DurabilityConfig::new(dir.clone(), 8))
+            .concurrency(chaos_mode())
+            .build()
+            .unwrap(),
+    )
     .unwrap();
     // The twin always runs pessimistic 2PL: under CHAOS_MODE=occ the
     // byte-equality below is a cross-discipline proof, not a mirror test.

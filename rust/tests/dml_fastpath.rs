@@ -34,14 +34,7 @@ const BREAK_NOT_NULL: &str = "UPDATE workqueue SET failtries = NULL \
                               WHERE taskid = ? AND workerid = ?";
 
 fn cluster(parts: usize, clock: SharedClock) -> Arc<DbCluster> {
-    let c = DbCluster::start(ClusterConfig {
-        data_nodes: 2,
-        replication: true,
-        clock,
-        durability: None,
-        ..Default::default()
-    })
-    .unwrap();
+    let c = DbCluster::start(ClusterConfig::builder().clock(clock).build().unwrap()).unwrap();
     c.exec(&format!(
         "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
          status TEXT, failtries INT NOT NULL, dur FLOAT, starttime FLOAT) \

@@ -382,10 +382,9 @@ fn remote_client_reads_metrics_and_monitoring_over_the_wire() {
 fn occ_telemetry_reconciles_and_reaches_the_monitoring_table() {
     const PK_CLAIM: &str = "UPDATE workqueue SET status = 'RUNNING', starttime = 0.0 \
                             WHERE taskid = ? AND workerid = ? AND status = 'READY'";
-    let c = workload_cluster_with(ClusterConfig {
-        concurrency: ConcurrencyMode::Occ,
-        ..Default::default()
-    });
+    let c = workload_cluster_with(
+        ClusterConfig::builder().concurrency(ConcurrencyMode::Occ).build().unwrap(),
+    );
     let obs = c.obs().clone();
 
     // phase 1: two racers per partition claim every task by PK

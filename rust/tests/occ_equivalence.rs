@@ -39,13 +39,9 @@ const INSERT: &str = "INSERT INTO workqueue (taskid, workerid, status, dur, star
                       VALUES (?, ?, 'READY', ?, 0.0)";
 
 fn cluster(parts: usize, clock: SharedClock, mode: ConcurrencyMode) -> Arc<DbCluster> {
-    let c = DbCluster::start(ClusterConfig {
-        data_nodes: 2,
-        replication: true,
-        clock,
-        durability: None,
-        concurrency: mode,
-    })
+    let c = DbCluster::start(
+        ClusterConfig::builder().clock(clock).concurrency(mode).build().unwrap(),
+    )
     .unwrap();
     c.exec(&format!(
         "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
@@ -352,13 +348,13 @@ fn occ_claims_survive_kill_restart_rejoin_mid_stream() {
         std::process::id()
     ));
     let _ = std::fs::remove_dir_all(&dir);
-    let a = DbCluster::start(ClusterConfig {
-        data_nodes: 2,
-        replication: true,
-        clock: clock::wall(),
-        durability: Some(DurabilityConfig::new(dir.clone(), 4)),
-        concurrency: ConcurrencyMode::Occ,
-    })
+    let a = DbCluster::start(
+        ClusterConfig::builder()
+            .durability(DurabilityConfig::new(dir.clone(), 4))
+            .concurrency(ConcurrencyMode::Occ)
+            .build()
+            .unwrap(),
+    )
     .unwrap();
     a.exec(&format!(
         "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \

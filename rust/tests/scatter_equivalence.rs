@@ -30,13 +30,9 @@ fn scatter_mode() -> ConcurrencyMode {
 /// (so `NOW()` is identical across both executions of a statement).
 fn cluster(parts: usize) -> Arc<DbCluster> {
     let (shared, ctl) = clock::manual(1_000.0);
-    let c = DbCluster::start(ClusterConfig {
-        data_nodes: 2,
-        replication: true,
-        clock: shared,
-        durability: None,
-        concurrency: scatter_mode(),
-    })
+    let c = DbCluster::start(
+        ClusterConfig::builder().clock(shared).concurrency(scatter_mode()).build().unwrap(),
+    )
     .unwrap();
     ctl.set(1_000.0);
     c.exec(&format!(
@@ -350,13 +346,14 @@ fn mutate_while_scanning_survives_rejoin_mid_stream() {
     ));
     let _ = std::fs::remove_dir_all(&dir);
     let (shared, ctl) = clock::manual(1_000.0);
-    let c = DbCluster::start(ClusterConfig {
-        data_nodes: 2,
-        replication: true,
-        clock: shared,
-        durability: Some(DurabilityConfig::new(dir.clone(), 1)),
-        concurrency: scatter_mode(),
-    })
+    let c = DbCluster::start(
+        ClusterConfig::builder()
+            .clock(shared)
+            .durability(DurabilityConfig::new(dir.clone(), 1))
+            .concurrency(scatter_mode())
+            .build()
+            .unwrap(),
+    )
     .unwrap();
     ctl.set(1_000.0);
     c.exec(&format!(

@@ -376,12 +376,12 @@ fn remote_prepared_handles_survive_node_kill_and_rejoin() {
     let dir = std::env::temp_dir()
         .join(format!("schaladb-server-failover-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let cluster = DbCluster::start(ClusterConfig {
-        data_nodes: 2,
-        replication: true,
-        durability: Some(DurabilityConfig::new(dir.clone(), 8)),
-        ..Default::default()
-    })
+    let cluster = DbCluster::start(
+        ClusterConfig::builder()
+            .durability(DurabilityConfig::new(dir.clone(), 8))
+            .build()
+            .unwrap(),
+    )
     .unwrap();
     let am = AvailabilityManager::new(cluster.clone());
     let server = Server::bind(any_addr(), cluster.clone(), ServerConfig::default()).unwrap();

@@ -1,0 +1,582 @@
+//! Elastic-topology gate: online partition moves, splits, and node
+//! additions under live load — with the cluster's state **byte-equal** to
+//! an untouched twin at every quiescent point.
+//!
+//! The twin protocol (same as `chaos_recovery.rs`): every operation is
+//! applied to cluster A (the elastic one, whose topology is reshaped
+//! mid-stream) and, iff A committed it, to cluster B (never reshaped,
+//! never killed). `fingerprint()` serializes committed rows sorted and
+//! partition-agnostic, so a cluster that moved a partition onto a brand
+//! new node or split a hot partition in two must still render the exact
+//! bytes of the twin that did neither.
+//!
+//! Concurrency: the admin operations run while ≥4 claim threads hammer
+//! reserved rows (each must commit exactly once, on both clusters) and
+//! steering scanners sweep the table — claims and scans racing a cut
+//! either land before it or retry through the `Unavailable` window.
+//!
+//! The CI `topology-chaos` job runs this under a seed × partition ×
+//! concurrency-mode matrix via `TOPO_SEED` / `TOPO_PARTITIONS` /
+//! `TOPO_MODE`; a plain `cargo test` sweeps a small built-in matrix.
+//! `TOPO_MODE=occ` runs cluster A's point claims through the optimistic
+//! path while the twin stays on 2PL, making the byte-equality a
+//! cross-discipline proof as well.
+
+use schaladb::storage::cluster::{ClusterConfig, ConcurrencyMode, DurabilityConfig};
+use schaladb::storage::replication::AvailabilityManager;
+use schaladb::storage::{AccessKind, DbCluster, NodeState, Prepared, Value};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Deterministic LCG so every (seed, partitions) cell replays identically.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 11
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n.max(1)
+    }
+}
+
+fn schema(c: &DbCluster, parts: usize) {
+    c.exec(&format!(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
+         status TEXT, dur FLOAT) \
+         PARTITION BY HASH(workerid) PARTITIONS {parts} \
+         PRIMARY KEY (taskid) INDEX (status)"
+    ))
+    .unwrap();
+    c.exec("CREATE TABLE prov (provid INT NOT NULL, taskid INT, note TEXT) PRIMARY KEY (provid)")
+        .unwrap();
+}
+
+/// The prepared statement set one cluster runs the stream through.
+struct Stmts {
+    insert: Prepared,
+    claim: Prepared,
+    finish: Prepared,
+    delete: Prepared,
+    prov: Prepared,
+}
+
+impl Stmts {
+    fn prepare(c: &DbCluster) -> Stmts {
+        Stmts {
+            insert: c
+                .prepare(
+                    "INSERT INTO workqueue (taskid, workerid, status, dur) \
+                     VALUES (?, ?, 'READY', ?)",
+                )
+                .unwrap(),
+            claim: c
+                .prepare(
+                    "UPDATE workqueue SET status = 'RUNNING' \
+                     WHERE taskid = ? AND workerid = ? AND status = 'READY'",
+                )
+                .unwrap(),
+            finish: c
+                .prepare(
+                    "UPDATE workqueue SET status = 'FINISHED', dur = dur + 1.5 \
+                     WHERE taskid = ? AND workerid = ?",
+                )
+                .unwrap(),
+            delete: c
+                .prepare("DELETE FROM workqueue WHERE taskid = ? AND workerid = ?")
+                .unwrap(),
+            prov: c
+                .prepare("INSERT INTO prov (provid, taskid, note) VALUES (?, ?, ?)")
+                .unwrap(),
+        }
+    }
+}
+
+/// One op of the committed stream.
+#[derive(Clone, Debug)]
+enum Op {
+    Insert { id: i64, worker: i64, dur: f64 },
+    Claim { id: i64, worker: i64 },
+    Finish { id: i64, worker: i64 },
+    Delete { id: i64, worker: i64 },
+    Prov { id: i64, task: i64, note: String },
+}
+
+fn apply(c: &DbCluster, s: &Stmts, op: &Op) -> schaladb::Result<usize> {
+    let r = match op {
+        Op::Insert { id, worker, dur } => c.exec_prepared(
+            0,
+            AccessKind::InsertTasks,
+            &s.insert,
+            &[Value::Int(*id), Value::Int(*worker), Value::Float(*dur)],
+        )?,
+        Op::Claim { id, worker } => c.exec_prepared(
+            0,
+            AccessKind::UpdateToRunning,
+            &s.claim,
+            &[Value::Int(*id), Value::Int(*worker)],
+        )?,
+        Op::Finish { id, worker } => c.exec_prepared(
+            0,
+            AccessKind::UpdateToFinished,
+            &s.finish,
+            &[Value::Int(*id), Value::Int(*worker)],
+        )?,
+        Op::Delete { id, worker } => c.exec_prepared(
+            0,
+            AccessKind::Other,
+            &s.delete,
+            &[Value::Int(*id), Value::Int(*worker)],
+        )?,
+        Op::Prov { id, task, note } => c.exec_prepared(
+            0,
+            AccessKind::InsertProvenance,
+            &s.prov,
+            &[Value::Int(*id), Value::Int(*task), Value::str(note.clone())],
+        )?,
+    };
+    Ok(r.affected())
+}
+
+/// Streams ops into A; every op A commits is mirrored to B (the untouched
+/// twin). Ops that fail on A with an availability error (a cut or kill
+/// window) are dropped entirely — they committed nowhere.
+struct Driver {
+    a: Arc<DbCluster>,
+    b: Arc<DbCluster>,
+    sa: Stmts,
+    sb: Stmts,
+    rng: Rng,
+    parts: i64,
+    next_id: i64,
+    next_prov: i64,
+    live: Vec<(i64, i64)>,
+}
+
+impl Driver {
+    fn new(a: Arc<DbCluster>, b: Arc<DbCluster>, seed: u64, parts: usize) -> Driver {
+        let sa = Stmts::prepare(&a);
+        let sb = Stmts::prepare(&b);
+        Driver {
+            a,
+            b,
+            sa,
+            sb,
+            rng: Rng(seed.wrapping_mul(0x9e3779b97f4a7c15) | 1),
+            parts: parts as i64,
+            next_id: 0,
+            next_prov: 0,
+            live: Vec::new(),
+        }
+    }
+
+    fn gen(&mut self) -> Op {
+        let roll = self.rng.below(10);
+        if self.live.is_empty() || roll < 4 {
+            let id = self.next_id;
+            self.next_id += 1;
+            return Op::Insert {
+                id,
+                worker: self.rng.below(self.parts as u64) as i64,
+                dur: (self.rng.below(1000) as f64) / 8.0,
+            };
+        }
+        let pick = self.rng.below(self.live.len() as u64) as usize;
+        let (id, worker) = self.live[pick];
+        match roll {
+            4 | 5 => Op::Claim { id, worker },
+            6 => Op::Finish { id, worker },
+            7 => Op::Delete { id, worker },
+            _ => {
+                let pid = self.next_prov;
+                self.next_prov += 1;
+                Op::Prov { id: pid, task: id, note: format!("note {pid}") }
+            }
+        }
+    }
+
+    fn drive(&mut self, n: usize) {
+        for _ in 0..n {
+            let op = self.gen();
+            match apply(&self.a, &self.sa, &op) {
+                Ok(affected_a) => {
+                    let affected_b =
+                        apply(&self.b, &self.sb, &op).expect("twin must accept mirrored op");
+                    assert_eq!(
+                        affected_a, affected_b,
+                        "twin diverged on {op:?}: {affected_a} != {affected_b}"
+                    );
+                    match &op {
+                        Op::Insert { id, worker, .. } => self.live.push((*id, *worker)),
+                        Op::Delete { id, .. } => self.live.retain(|(i, _)| i != id),
+                        _ => {}
+                    }
+                }
+                Err(schaladb::Error::Unavailable(_)) => { /* nothing committed */ }
+                Err(e) => panic!("unexpected failure on {op:?}: {e}"),
+            }
+        }
+    }
+}
+
+fn fingerprints_equal(a: &DbCluster, b: &DbCluster) {
+    let fa = a.fingerprint().unwrap();
+    let fb = b.fingerprint().unwrap();
+    assert!(!fa.is_empty());
+    assert_eq!(fa, fb, "elastic cluster state diverged from the untouched twin");
+}
+
+/// Seed reserved rows on both clusters: `chunks` disjoint ranges of
+/// `per_chunk` tasks each, spread over all workers, for the concurrent
+/// claimers to consume exactly once during the admin operations.
+fn seed_reserved(
+    d: &mut Driver,
+    chunks: usize,
+    per_chunk: usize,
+    parts: i64,
+) -> Vec<Vec<(i64, i64)>> {
+    let mut out = Vec::with_capacity(chunks);
+    for c in 0..chunks {
+        let mut chunk = Vec::with_capacity(per_chunk);
+        for k in 0..per_chunk {
+            let id = 1_000_000 + (c * per_chunk + k) as i64;
+            let w = (c * per_chunk + k) as i64 % parts;
+            let op = Op::Insert { id, worker: w, dur: 1.0 };
+            assert_eq!(apply(&d.a, &d.sa, &op).unwrap(), 1);
+            assert_eq!(apply(&d.b, &d.sb, &op).unwrap(), 1);
+            chunk.push((id, w));
+        }
+        out.push(chunk);
+    }
+    out
+}
+
+/// Spawn one claim thread per reserved chunk. Each claim retries through
+/// transient unavailability (a cut in progress) and must commit exactly
+/// once on A, then mirror to B.
+fn spawn_claimers(
+    a: &Arc<DbCluster>,
+    b: &Arc<DbCluster>,
+    chunks: Vec<Vec<(i64, i64)>>,
+    claimed: &Arc<AtomicUsize>,
+) -> Vec<std::thread::JoinHandle<()>> {
+    chunks
+        .into_iter()
+        .map(|chunk| {
+            let a = a.clone();
+            let b = b.clone();
+            let claimed = claimed.clone();
+            std::thread::spawn(move || {
+                let sa = Stmts::prepare(&a);
+                let sb = Stmts::prepare(&b);
+                for (id, w) in chunk {
+                    let op = Op::Claim { id, worker: w };
+                    let na = loop {
+                        match apply(&a, &sa, &op) {
+                            Ok(n) => break n,
+                            Err(schaladb::Error::Unavailable(_)) => {
+                                std::thread::sleep(std::time::Duration::from_micros(200));
+                            }
+                            Err(e) => panic!("claim failed during topology change: {e}"),
+                        }
+                    };
+                    let nb = apply(&b, &sb, &op).unwrap();
+                    assert_eq!(na, nb);
+                    assert_eq!(na, 1, "reserved row must be claimable exactly once");
+                    claimed.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_micros(50));
+                }
+            })
+        })
+        .collect()
+}
+
+/// Spawn steering scanners that sweep the workqueue until `stop` flips.
+/// A scan racing a cut may see one `Unavailable`; it must never see any
+/// other error, and must keep scanning afterwards.
+fn spawn_scanners(
+    a: &Arc<DbCluster>,
+    n: usize,
+    stop: &Arc<AtomicBool>,
+    scans: &Arc<AtomicUsize>,
+) -> Vec<std::thread::JoinHandle<()>> {
+    (0..n)
+        .map(|_| {
+            let a = a.clone();
+            let stop = stop.clone();
+            let scans = scans.clone();
+            std::thread::spawn(move || {
+                let sel = a
+                    .prepare("SELECT status, COUNT(*) FROM workqueue GROUP BY status")
+                    .unwrap();
+                while !stop.load(Ordering::SeqCst) {
+                    match a.exec_prepared(0, AccessKind::Steering, &sel, &[]) {
+                        Ok(_) => {
+                            scans.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(schaladb::Error::Unavailable(_)) => {
+                            std::thread::sleep(std::time::Duration::from_micros(200));
+                        }
+                        Err(e) => panic!("steering scan failed during topology change: {e}"),
+                    }
+                }
+            })
+        })
+        .collect()
+}
+
+/// Point-DML concurrency mode for cluster A, from `TOPO_MODE`
+/// (`2pl` | `occ`, default 2PL). The CI matrix sets it.
+fn topo_mode() -> ConcurrencyMode {
+    std::env::var("TOPO_MODE")
+        .ok()
+        .and_then(|s| ConcurrencyMode::from_name(&s))
+        .unwrap_or_default()
+}
+
+/// Seed matrix: one cell from the environment (the CI job matrix), or a
+/// small built-in sweep for plain `cargo test`.
+fn matrix() -> Vec<(u64, usize)> {
+    let seed = std::env::var("TOPO_SEED").ok().and_then(|s| s.parse().ok());
+    let parts = std::env::var("TOPO_PARTITIONS").ok().and_then(|s| s.parse().ok());
+    match (seed, parts) {
+        (Some(s), Some(p)) => vec![(s, p)],
+        _ => vec![(1, 2), (2, 4)],
+    }
+}
+
+/// Live add-node, move, role-flip rebalance and split — all while 4 claim
+/// threads and 2 steering scanners run — then the byte-equality gate.
+fn run_live_cell(seed: u64, parts: usize) {
+    let a = DbCluster::start(
+        ClusterConfig::builder().concurrency(topo_mode()).build().unwrap(),
+    )
+    .unwrap();
+    // The twin always runs pessimistic 2PL on the original topology.
+    let b = DbCluster::start(ClusterConfig::default()).unwrap();
+    schema(&a, parts);
+    schema(&b, parts);
+    let mut d = Driver::new(a.clone(), b.clone(), seed, parts);
+
+    d.drive(300);
+    let chunks = seed_reserved(&mut d, 4, 12, parts as i64);
+    fingerprints_equal(&a, &b);
+
+    let claimed = Arc::new(AtomicUsize::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let scans = Arc::new(AtomicUsize::new(0));
+    let claimers = spawn_claimers(&a, &b, chunks, &claimed);
+    let scanners = spawn_scanners(&a, 2, &stop, &scans);
+
+    // Admin sequence, each step under live load with ops between steps.
+    let epoch0 = a.cluster_epoch();
+    let new_node = a.add_node().unwrap();
+    let before = a.topology();
+    assert!(before
+        .nodes
+        .iter()
+        .any(|n| n.id == new_node && n.state == NodeState::Joining));
+
+    // Move partition 0's primary onto the brand new (empty) node.
+    a.rebalance_partition("workqueue", 0, new_node).unwrap();
+    d.drive(150);
+
+    // Role-flip rebalance: partition 1 onto its own backup, if it has one.
+    let wq = |t: &schaladb::storage::Topology| {
+        t.tables.iter().find(|tt| tt.table == "workqueue").cloned().unwrap()
+    };
+    if let Some(backup) = wq(&a.topology()).partitions[1].backup {
+        a.rebalance_partition("workqueue", 1, backup).unwrap();
+        d.drive(100);
+    }
+
+    // Split the last partition in two.
+    let split_pidx = parts - 1;
+    let new_pidx = a.split_partition("workqueue", split_pidx).unwrap();
+    assert_eq!(new_pidx, parts);
+    d.drive(150);
+
+    stop.store(true, Ordering::SeqCst);
+    for h in scanners {
+        h.join().unwrap();
+    }
+    for h in claimers {
+        h.join().unwrap();
+    }
+    assert_eq!(claimed.load(Ordering::SeqCst), 4 * 12);
+    assert!(scans.load(Ordering::SeqCst) > 0, "scanners must make progress");
+
+    // The reshaped cluster must render the twin's exact bytes.
+    fingerprints_equal(&a, &b);
+
+    // And the topology must reflect every step: the new node serves, the
+    // moved partition's primary changed, the split partition exists.
+    let after = a.topology();
+    assert!(after.epoch > epoch0, "admin cuts must bump the cluster epoch");
+    assert!(after
+        .nodes
+        .iter()
+        .any(|n| n.id == new_node && n.state == NodeState::Alive));
+    let map = wq(&after);
+    assert_eq!(map.partitions.len(), parts + 1);
+    assert_eq!(map.partitions[0].primary, new_node);
+
+    // The stream keeps committing on the reshaped topology.
+    d.drive(100);
+    fingerprints_equal(&a, &b);
+}
+
+#[test]
+fn live_move_flip_and_split_equal_twin() {
+    for (seed, parts) in matrix() {
+        run_live_cell(seed, parts);
+    }
+}
+
+/// Add a node, race a live move against a kill of the donor primary, then
+/// restart the donor and let the sweep rejoin it — the cluster must stay
+/// byte-equal to the twin whether the kill landed before, during, or
+/// after the cut.
+#[test]
+fn add_node_move_survives_donor_kill_and_rejoin() {
+    let dir = std::env::temp_dir()
+        .join(format!("schaladb-topo-kill-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let a = DbCluster::start(
+        ClusterConfig::builder()
+            .durability(DurabilityConfig::new(dir.clone(), 8))
+            .concurrency(topo_mode())
+            .build()
+            .unwrap(),
+    )
+    .unwrap();
+    let b = DbCluster::start(ClusterConfig::default()).unwrap();
+    schema(&a, 4);
+    schema(&b, 4);
+    let am = AvailabilityManager::new(a.clone());
+    let mut d = Driver::new(a.clone(), b.clone(), 5, 4);
+
+    d.drive(300);
+    fingerprints_equal(&a, &b);
+
+    let new_node = a.add_node().unwrap();
+    let donor = a
+        .topology()
+        .tables
+        .iter()
+        .find(|t| t.table == "workqueue")
+        .unwrap()
+        .partitions[0]
+        .primary;
+
+    // Race: move partition 0 onto the new node while the donor dies.
+    let mover = {
+        let a = a.clone();
+        std::thread::spawn(move || a.rebalance_partition("workqueue", 0, new_node))
+    };
+    let killer = {
+        let a = a.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_micros(300));
+            a.kill_node(donor)
+        })
+    };
+    // Either outcome is legal — the move may finish first (the donor dies
+    // after handing off) or lose the race (it fails `Unavailable` and the
+    // partition stays put, intact). Both must preserve every committed row.
+    let move_result = mover.join().unwrap();
+    killer.join().unwrap().unwrap();
+    if let Err(e) = &move_result {
+        assert!(
+            matches!(e, schaladb::Error::Unavailable(_)),
+            "a raced move may only fail as Unavailable, got: {e}"
+        );
+    }
+
+    // The sweep promotes whatever the dead donor still served; the stream
+    // keeps committing around the hole either way.
+    am.sweep().unwrap();
+    d.drive(150);
+    fingerprints_equal(&a, &b);
+
+    // Restart the donor and sweep until it rejoins — past a topology that
+    // changed (or half-changed) while it was down.
+    let start = a.restart_node(donor).unwrap();
+    assert!(start.partitions > 0);
+    let mut rejoined = false;
+    for _ in 0..200 {
+        let r = am.sweep().unwrap();
+        if r.rejoined > 0 {
+            rejoined = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert!(rejoined, "donor must rejoin after the raced move");
+    assert!(a.node(donor).unwrap().is_alive());
+    am.sweep().unwrap();
+    d.drive(100);
+    fingerprints_equal(&a, &b);
+
+    // If the move won the race, the new node must be serving partition 0;
+    // either way the map is coherent and every partition has a live home.
+    let topo = a.topology();
+    if move_result.is_ok() {
+        let wq =
+            topo.tables.iter().find(|t| t.table == "workqueue").unwrap();
+        assert_eq!(wq.partitions[0].primary, new_node);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A split committed while a node is down must survive that node's rejoin:
+/// the rejoining replicas catch up against the *post-split* placement.
+#[test]
+fn split_then_rejoin_catches_up_on_new_topology() {
+    let a = DbCluster::start(
+        ClusterConfig::builder().concurrency(topo_mode()).build().unwrap(),
+    )
+    .unwrap();
+    let b = DbCluster::start(ClusterConfig::default()).unwrap();
+    schema(&a, 2);
+    schema(&b, 2);
+    let am = AvailabilityManager::new(a.clone());
+    let mut d = Driver::new(a.clone(), b.clone(), 9, 2);
+
+    d.drive(250);
+    // Kill node 1; its backups get promoted and the stream continues.
+    a.kill_node(1).unwrap();
+    am.sweep().unwrap();
+    d.drive(100);
+
+    // Split partition 0 while node 1 is down (its dead replica cannot be
+    // seeded — the split must proceed on the live side alone).
+    let new_pidx = a.split_partition("workqueue", 0).unwrap();
+    assert_eq!(new_pidx, 2);
+    d.drive(100);
+    fingerprints_equal(&a, &b);
+
+    // Rejoin node 1 against the post-split topology.
+    a.restart_node(1).unwrap();
+    let mut rejoined = false;
+    for _ in 0..200 {
+        let r = am.sweep().unwrap();
+        if r.rejoined > 0 {
+            rejoined = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert!(rejoined, "node must rejoin after an in-absence split");
+    am.sweep().unwrap();
+    d.drive(100);
+    fingerprints_equal(&a, &b);
+
+    // Prove the rejoined replicas are faithful on the split layout: fail
+    // over onto them and compare bytes again.
+    a.kill_node(0).unwrap();
+    am.sweep().unwrap();
+    fingerprints_equal(&a, &b);
+}
