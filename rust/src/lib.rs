@@ -80,6 +80,11 @@ pub enum Error {
     /// I/O failure (WAL, checkpoints, artifacts).
     #[error("io error: {0}")]
     Io(#[from] std::io::Error),
+    /// Durable-state recovery failure (irreconcilable replica divergence,
+    /// unusable durability directory). Cold start refuses rather than
+    /// guessing — see `DbCluster::open`.
+    #[error("recovery error: {0}")]
+    Recovery(String),
 }
 
 /// Crate-wide result alias.

@@ -22,7 +22,7 @@ use schaladb::metrics;
 use schaladb::runtime::{self, riser, PjrtService};
 use schaladb::server::{parse_addr, Client, Server, ServerConfig};
 use schaladb::sim::experiments;
-use schaladb::storage::{AccessKind, ClusterConfig, ConcurrencyMode, Value};
+use schaladb::storage::{AccessKind, ClusterConfig, ConcurrencyMode, DurabilityConfig, Value};
 use schaladb::util::json::Json;
 use schaladb::workload::{self, SyntheticWorkload};
 use schaladb::DbCluster;
@@ -53,8 +53,10 @@ const USAGE: &[(&str, &str, &str)] = &[
     ("sql", "", "run the steering SQL demo on a seeded risers database"),
     (
         "serve",
-        "[--addr HOST:PORT] [--max-conns N] [--data-nodes N] [--concurrency 2pl|occ]",
-        "start the wire-protocol server (blocks until `dchiron shutdown`)",
+        "[--addr HOST:PORT] [--max-conns N] [--data-nodes N] [--concurrency 2pl|occ] \
+         [--data-dir PATH] [--group-commit N] [--reopen] [--conn-timeout-secs S]",
+        "start the wire-protocol server (blocks until `dchiron shutdown`); \
+         --reopen cold-starts from an existing --data-dir",
     ),
     (
         "stats",
@@ -288,20 +290,41 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let addr = flag_addr(flags)?;
     let max_conns: usize = get(flags, "max-conns", 64);
     let data_nodes: usize = get(flags, "data-nodes", 2);
+    let group_commit: usize = get(flags, "group-commit", 64);
+    let conn_timeout_secs: u64 = get(flags, "conn-timeout-secs", 0);
+    let reopen = flags.contains_key("reopen");
     let concurrency = match flags.get("concurrency") {
         None => ConcurrencyMode::default(),
         Some(name) => ConcurrencyMode::from_name(name).ok_or_else(|| {
             anyhow::anyhow!("unknown --concurrency mode {name:?} (expected 2pl or occ)")
         })?,
     };
-    let cluster = DbCluster::start(
-        ClusterConfig::builder()
-            .data_nodes(data_nodes)
-            .replication(data_nodes >= 2)
-            .concurrency(concurrency)
-            .build()?,
-    )?;
-    let mut server = Server::bind(addr, cluster, ServerConfig { max_conns })?;
+    let mut builder = ClusterConfig::builder()
+        .data_nodes(data_nodes)
+        .replication(data_nodes >= 2)
+        .concurrency(concurrency);
+    if let Some(dir) = flags.get("data-dir") {
+        builder = builder
+            .durability(DurabilityConfig::new(dir.into(), group_commit.max(1)));
+    } else if reopen {
+        anyhow::bail!("--reopen needs --data-dir PATH (the durability dir to recover)");
+    }
+    let config = builder.build()?;
+    let cluster = if reopen {
+        let c = DbCluster::open(config)?;
+        println!(
+            "dchiron serve: cold start recovered {} tables at epoch {}",
+            c.tables().len(),
+            c.cluster_epoch()
+        );
+        c
+    } else {
+        DbCluster::start(config)?
+    };
+    let conn_timeout = (conn_timeout_secs > 0)
+        .then(|| std::time::Duration::from_secs(conn_timeout_secs));
+    let mut server =
+        Server::bind(addr, cluster.clone(), ServerConfig { max_conns, conn_timeout })?;
     println!(
         "dchiron serve: listening on {} ({data_nodes} data nodes, {concurrency:?} point DML, \
          max {max_conns} connections)",
@@ -309,6 +332,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     );
     println!("stop with: dchiron shutdown --addr {}", server.local_addr());
     server.wait();
+    // Clean shutdown: cut a final checkpoint on every node so a later
+    // `--reopen` cold-starts from checkpoints instead of long WAL replays.
+    if cluster.durability().is_some() {
+        for id in 0..cluster.num_nodes() as u32 {
+            if let Err(e) = schaladb::storage::checkpoint::checkpoint_node(&cluster, id) {
+                eprintln!("warning: shutdown checkpoint for node {id} failed: {e}");
+            }
+        }
+    }
     println!("dchiron serve: shut down cleanly");
     Ok(())
 }

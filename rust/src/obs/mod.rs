@@ -22,8 +22,8 @@
 
 pub mod span;
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::metrics::Histogram;
@@ -111,9 +111,12 @@ pub enum Counter {
     /// OCC statements that exhausted their retry budget and fell back to
     /// the 2PL fast path (mirrors `RouteCounters::occ_fallbacks`).
     OccFallbacks = 18,
+    /// Server connections dropped because a frame read/write exceeded the
+    /// configured per-connection timeout (`--conn-timeout-secs`).
+    ConnTimeouts = 19,
 }
 
-const N_COUNTERS: usize = 19;
+const N_COUNTERS: usize = 20;
 
 impl Counter {
     pub const ALL: [Counter; N_COUNTERS] = [
@@ -136,6 +139,7 @@ impl Counter {
         Counter::OccDml,
         Counter::OccRetries,
         Counter::OccFallbacks,
+        Counter::ConnTimeouts,
     ];
 
     pub fn label(self) -> &'static str {
@@ -159,6 +163,7 @@ impl Counter {
             Counter::OccDml => "occ_dml",
             Counter::OccRetries => "occ_retries",
             Counter::OccFallbacks => "occ_fallbacks",
+            Counter::ConnTimeouts => "server_conn_timeouts",
         }
     }
 }
@@ -351,6 +356,72 @@ impl Sharded {
     }
 }
 
+/// Cells per lazily-allocated node-ledger block.
+const NODE_BLOCK: usize = 64;
+/// Spine capacity: `NODE_BLOCKS * NODE_BLOCK` addressable nodes.
+const NODE_BLOCKS: usize = 64;
+
+/// Growable per-node counter ledger: a fixed spine of lazily-allocated
+/// [`NODE_BLOCK`]-cell blocks. `ensure` extends coverage after `add_node`
+/// without ever moving existing cells, so the hot `add`/`get` path stays
+/// lock-free (block pointers are `OnceLock`-published, length is a relaxed
+/// high-water mark). Nodes past the spine capacity (4096) are ignored, the
+/// same contract the old fixed vector had for out-of-range ids.
+struct NodeLedger {
+    blocks: Vec<OnceLock<Box<[AtomicU64]>>>,
+    len: AtomicUsize,
+}
+
+impl NodeLedger {
+    fn new(len: usize) -> NodeLedger {
+        let l = NodeLedger {
+            blocks: (0..NODE_BLOCKS).map(|_| OnceLock::new()).collect(),
+            len: AtomicUsize::new(0),
+        };
+        l.ensure(len);
+        l
+    }
+
+    /// Grow coverage to at least `len` cells (never shrinks).
+    fn ensure(&self, len: usize) {
+        let len = len.min(NODE_BLOCK * NODE_BLOCKS);
+        let blocks_needed = (len + NODE_BLOCK - 1) / NODE_BLOCK;
+        for b in 0..blocks_needed {
+            self.blocks[b].get_or_init(|| (0..NODE_BLOCK).map(|_| AtomicU64::new(0)).collect());
+        }
+        self.len.fetch_max(len, Relaxed);
+    }
+
+    fn len(&self) -> usize {
+        self.len.load(Relaxed)
+    }
+
+    fn cell(&self, i: usize) -> Option<&AtomicU64> {
+        if i >= self.len() {
+            return None;
+        }
+        self.blocks.get(i / NODE_BLOCK)?.get().map(|b| &b[i % NODE_BLOCK])
+    }
+
+    fn add(&self, i: usize, n: u64) {
+        if let Some(c) = self.cell(i) {
+            c.fetch_add(n, Relaxed);
+        }
+    }
+
+    fn get(&self, i: usize) -> u64 {
+        self.cell(i).map_or(0, |c| c.load(Relaxed))
+    }
+
+    fn reset(&self) {
+        for b in self.blocks.iter().filter_map(|b| b.get()) {
+            for c in b.iter() {
+                c.store(0, Relaxed);
+            }
+        }
+    }
+}
+
 /// One completed span retained by the slow-op ring.
 #[derive(Clone, Debug)]
 pub struct SlowOp {
@@ -400,8 +471,8 @@ pub struct ObsRegistry {
     counters: Vec<AtomicU64>,
     hists: Vec<AtomicHistogram>,
     parts: Vec<Sharded>,
-    node_wal_records: Vec<AtomicU64>,
-    node_wal_flushes: Vec<AtomicU64>,
+    node_wal_records: NodeLedger,
+    node_wal_flushes: NodeLedger,
     slow: SlowRing,
     next_span: AtomicU64,
 }
@@ -413,8 +484,8 @@ impl ObsRegistry {
             counters: (0..N_COUNTERS).map(|_| AtomicU64::new(0)).collect(),
             hists: (0..N_HISTS).map(|_| AtomicHistogram::new()).collect(),
             parts: (0..N_PART_METRICS).map(|_| Sharded::new()).collect(),
-            node_wal_records: (0..num_nodes).map(|_| AtomicU64::new(0)).collect(),
-            node_wal_flushes: (0..num_nodes).map(|_| AtomicU64::new(0)).collect(),
+            node_wal_records: NodeLedger::new(num_nodes),
+            node_wal_flushes: NodeLedger::new(num_nodes),
             slow: SlowRing::new(),
             next_span: AtomicU64::new(1),
         }
@@ -444,9 +515,8 @@ impl ObsRegistry {
             for p in &self.parts {
                 p.reset();
             }
-            for c in self.node_wal_records.iter().chain(self.node_wal_flushes.iter()) {
-                c.store(0, Relaxed);
-            }
+            self.node_wal_records.reset();
+            self.node_wal_flushes.reset();
         }
     }
 
@@ -490,26 +560,30 @@ impl ObsRegistry {
         self.parts[m as usize].shards[shard % PART_SHARDS].load(Relaxed)
     }
 
+    /// Extend the per-node WAL ledgers to cover node `id`. Called by
+    /// `add_node`, so nodes added after construction get `node_wal_*`
+    /// breakouts instead of being silently dropped.
+    pub fn ensure_node(&self, id: usize) {
+        self.node_wal_records.ensure(id + 1);
+        self.node_wal_flushes.ensure(id + 1);
+    }
+
     pub fn node_wal(&self, node: usize, records: u64, flushed: bool) {
         if !self.is_enabled() {
             return;
         }
-        if let Some(c) = self.node_wal_records.get(node) {
-            c.fetch_add(records, Relaxed);
-        }
+        self.node_wal_records.add(node, records);
         if flushed {
-            if let Some(c) = self.node_wal_flushes.get(node) {
-                c.fetch_add(1, Relaxed);
-            }
+            self.node_wal_flushes.add(node, 1);
         }
     }
 
     pub fn node_wal_records(&self, node: usize) -> u64 {
-        self.node_wal_records.get(node).map_or(0, |c| c.load(Relaxed))
+        self.node_wal_records.get(node)
     }
 
     pub fn node_wal_flushes(&self, node: usize) -> u64 {
-        self.node_wal_flushes.get(node).map_or(0, |c| c.load(Relaxed))
+        self.node_wal_flushes.get(node)
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -693,6 +767,29 @@ mod tests {
         let sum: u64 = (0..PART_SHARDS).map(|s| reg.part_shard(PartMetric::Claims, s)).sum();
         assert_eq!(reg.part_total(PartMetric::Claims), sum);
         assert_eq!(sum, 55 + 3);
+    }
+
+    #[test]
+    fn node_ledger_grows_past_initial_sizing() {
+        let reg = ObsRegistry::new(2);
+        assert_eq!(reg.num_nodes(), 2);
+        reg.node_wal(2, 7, true); // out of range: silently dropped
+        assert_eq!(reg.node_wal_records(2), 0);
+        reg.ensure_node(2);
+        assert_eq!(reg.num_nodes(), 3);
+        reg.node_wal(2, 7, true);
+        assert_eq!(reg.node_wal_records(2), 7);
+        assert_eq!(reg.node_wal_flushes(2), 1);
+        // spill into a second lazily-allocated block
+        reg.ensure_node(100);
+        reg.node_wal(100, 1, false);
+        assert_eq!(reg.num_nodes(), 101);
+        assert_eq!(reg.node_wal_records(100), 1);
+        // quiesce→resume resets grown cells too
+        reg.set_enabled(false);
+        reg.set_enabled(true);
+        assert_eq!(reg.node_wal_records(2), 0);
+        assert_eq!(reg.node_wal_records(100), 0);
     }
 
     #[test]

@@ -29,11 +29,13 @@ use super::wire::{
 };
 use crate::obs::{Counter, Stage};
 use crate::storage::cluster::DbCluster;
+use crate::util::failpoint;
 use crate::{Error, Result};
 use std::net::{Shutdown as NetShutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// Server tuning knobs.
 #[derive(Clone, Copy, Debug)]
@@ -41,11 +43,17 @@ pub struct ServerConfig {
     /// Concurrent-connection bound; connection N+1 gets a typed
     /// `Backpressure` error frame and is closed.
     pub max_conns: usize,
+    /// Per-connection read/write deadline. A frame read or write that
+    /// blocks longer than this gets a typed `Timeout` error frame (best
+    /// effort) and the connection is closed; open transactions discard
+    /// with the session. `None` (the default) keeps the pre-existing
+    /// block-forever behavior.
+    pub conn_timeout: Option<Duration>,
 }
 
 impl Default for ServerConfig {
     fn default() -> ServerConfig {
-        ServerConfig { max_conns: 64 }
+        ServerConfig { max_conns: 64, conn_timeout: None }
     }
 }
 
@@ -55,6 +63,7 @@ struct Shared {
     cluster: Arc<DbCluster>,
     addr: SocketAddr,
     max_conns: usize,
+    conn_timeout: Option<Duration>,
     /// Live connection count (backpressure bound, `Stats.sessions`).
     active: AtomicUsize,
     shutdown: AtomicBool,
@@ -108,6 +117,7 @@ impl Server {
             cluster,
             addr: local,
             max_conns: cfg.max_conns.max(1),
+            conn_timeout: cfg.conn_timeout,
             active: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
             next_session: AtomicU64::new(1),
@@ -249,20 +259,25 @@ fn err_response(e: &Error) -> Response {
 /// Write one response frame, counting it (payload + 8-byte header) in the
 /// observability registry. Returns `false` when the peer is gone.
 fn send(stream: &mut TcpStream, shared: &Shared, resp: &Response) -> bool {
+    let obs = shared.cluster.obs();
     let payload = resp.encode();
-    if write_frame(stream, &payload).is_err() {
+    let write = failpoint::hit("server-frame-write").and_then(|()| write_frame(stream, &payload));
+    if let Err(e) = write {
+        if matches!(&e, Error::Io(io) if wire::is_timeout_io(io)) {
+            obs.inc(Counter::ConnTimeouts);
+        }
         return false;
     }
-    let obs = shared.cluster.obs();
     obs.inc(Counter::FramesOut);
     obs.addc(Counter::BytesOut, (payload.len() + 8) as u64);
     true
 }
 
-/// Read one request frame, counting traffic and malformed frames.
+/// Read one request frame, counting traffic, malformed frames, and
+/// deadline expiries.
 fn recv(stream: &mut TcpStream, shared: &Shared) -> Result<Option<Vec<u8>>> {
     let obs = shared.cluster.obs();
-    match read_frame(stream) {
+    match failpoint::hit("server-frame-read").and_then(|()| read_frame(stream)) {
         Ok(Some(p)) => {
             obs.inc(Counter::FramesIn);
             obs.addc(Counter::BytesIn, (p.len() + 8) as u64);
@@ -270,7 +285,11 @@ fn recv(stream: &mut TcpStream, shared: &Shared) -> Result<Option<Vec<u8>>> {
         }
         Ok(None) => Ok(None),
         Err(e) => {
-            obs.inc(Counter::FrameErrors);
+            if matches!(&e, Error::Io(io) if wire::is_timeout_io(io)) {
+                obs.inc(Counter::ConnTimeouts);
+            } else {
+                obs.inc(Counter::FrameErrors);
+            }
             Err(e)
         }
     }
@@ -281,6 +300,10 @@ fn recv(stream: &mut TcpStream, shared: &Shared) -> Result<Option<Vec<u8>>> {
 /// discards any open transaction — abrupt-disconnect rollback for free.
 fn handle_conn(mut stream: TcpStream, shared: &Arc<Shared>) {
     let _ = stream.set_nodelay(true); // claim loops are latency-bound
+    if let Some(t) = shared.conn_timeout {
+        let _ = stream.set_read_timeout(Some(t));
+        let _ = stream.set_write_timeout(Some(t));
+    }
     // Handshake: the first frame must be a version-matched Hello.
     let (node, kind) = match recv(&mut stream, shared) {
         Ok(Some(payload)) => match Request::decode(&payload) {

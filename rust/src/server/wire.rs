@@ -336,6 +336,10 @@ pub enum ErrCode {
     Io = 9,
     Protocol = 10,
     Backpressure = 11,
+    /// Server-only: the per-connection read/write deadline expired
+    /// (`--conn-timeout-secs`). Older clients decode it through the
+    /// `Engine` fallback arm, so no protocol-version bump is needed.
+    Timeout = 12,
 }
 
 /// Split an engine error into its wire code + message.
@@ -349,8 +353,21 @@ pub fn encode_error(e: &Error) -> (ErrCode, String) {
         Error::Unavailable(m) => (ErrCode::Unavailable, m.clone()),
         Error::Engine(m) => (ErrCode::Engine, m.clone()),
         Error::Runtime(m) => (ErrCode::Runtime, m.clone()),
+        Error::Io(m) if is_timeout_io(m) => (ErrCode::Timeout, m.to_string()),
         Error::Io(m) => (ErrCode::Io, m.to_string()),
+        // Recovery failures never reach a live connection (they abort
+        // startup), but the match must stay exhaustive.
+        Error::Recovery(m) => (ErrCode::Engine, format!("recovery error: {m}")),
     }
+}
+
+/// `true` for the two kinds a blocking socket read/write deadline surfaces
+/// as (`TimedOut` on most platforms, `WouldBlock` on some Unixes).
+pub fn is_timeout_io(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+    )
 }
 
 /// Rebuild a client-side [`Error`] from a wire code + message.
@@ -366,6 +383,7 @@ pub fn decode_error(code: u8, message: String) -> Error {
         9 => Error::Io(std::io::Error::other(message)),
         10 => Error::Engine(format!("protocol error: {message}")),
         11 => Error::Unavailable(format!("server backpressure: {message}")),
+        12 => Error::Io(std::io::Error::new(std::io::ErrorKind::TimedOut, message)),
         _ => Error::Engine(message),
     }
 }
@@ -1305,6 +1323,18 @@ mod tests {
             let back = decode_error(code as u8, msg);
             assert_eq!(std::mem::discriminant(&e), std::mem::discriminant(&back));
         }
+    }
+
+    #[test]
+    fn timeout_io_gets_its_own_wire_code() {
+        let e = Error::Io(std::io::Error::new(std::io::ErrorKind::TimedOut, "read deadline"));
+        let (code, msg) = encode_error(&e);
+        assert_eq!(code, ErrCode::Timeout);
+        let back = decode_error(code as u8, msg);
+        assert!(matches!(back, Error::Io(ref io) if io.kind() == std::io::ErrorKind::TimedOut));
+        // Recovery degrades to Engine: it never reaches a live connection.
+        let (code, _) = encode_error(&Error::Recovery("x".into()));
+        assert_eq!(code, ErrCode::Engine);
     }
 
     #[test]

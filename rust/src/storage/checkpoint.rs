@@ -21,7 +21,8 @@
 use crate::storage::cluster::{ClusterConfig, DbCluster};
 use crate::storage::table_def::{Partitioning, TableDef};
 use crate::storage::value::{Column, ColumnType, Row, Schema};
-use crate::storage::wal::{decode_value, encode_value};
+use crate::storage::wal::{decode_value, encode_value, fnv1a32, fnv1a32_fold};
+use crate::util::failpoint;
 use crate::{Error, Result};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
@@ -194,18 +195,32 @@ pub fn checkpoint_node(cluster: &DbCluster, node_id: u32) -> Result<NodeCheckpoi
             continue;
         };
         let tmp = dir.join(format!("{}.tmp", partition_ckpt_name(&table, pidx)));
+        failpoint::hit("ckpt-before-tmp-write")?;
         {
             let f = std::fs::File::create(&tmp)?;
             let mut w = BufWriter::new(f);
-            writeln!(w, "{}", def_header(&def))?;
-            writeln!(w, "{pidx}\x1f{version}\x1f{epoch}\x1f{cap}")?;
+            // Stream a FNV-1a32 over every body byte and append it as a
+            // `#<hex>` trailer line: load rejects a checkpoint whose body
+            // was torn or bit-flipped instead of deserializing garbage.
+            let mut sum = fnv1a32(&[]);
+            let mut put = |w: &mut BufWriter<std::fs::File>, line: String| -> Result<()> {
+                writeln!(w, "{line}")?;
+                sum = fnv1a32_fold(sum, line.as_bytes());
+                sum = fnv1a32_fold(sum, b"\n");
+                Ok(())
+            };
+            put(&mut w, def_header(&def))?;
+            put(&mut w, format!("{pidx}\x1f{version}\x1f{epoch}\x1f{cap}"))?;
             for (slot, row) in &rows {
                 let vals: Vec<String> = row.values.iter().map(encode_value).collect();
-                writeln!(w, "{slot}\t{}", vals.join("\t"))?;
+                put(&mut w, format!("{slot}\t{}", vals.join("\t")))?;
             }
+            writeln!(w, "#{sum:08x}")?;
             w.flush()?;
         }
+        failpoint::hit("ckpt-after-tmp-write")?;
         std::fs::rename(&tmp, &fname)?;
+        failpoint::hit("ckpt-after-rename")?;
         // the cut: redo at or below `version` is covered by the checkpoint
         node.wal.lock().unwrap().truncate_upto(&table, pidx, version)?;
         report.written += 1;
@@ -213,17 +228,41 @@ pub fn checkpoint_node(cluster: &DbCluster, node_id: u32) -> Result<NodeCheckpoi
     Ok(report)
 }
 
-/// Load one per-partition checkpoint file.
+/// Load one per-partition checkpoint file, verifying its checksum trailer.
+///
+/// A checkpoint whose `#<fnv1a32>` trailer is missing (torn write) or does
+/// not match the body (bit rot, manual corruption) fails with
+/// `Error::Parse` **before** any row is deserialized — callers fall back to
+/// WAL replay or cross-node shipping rather than loading garbage.
 pub fn load_partition_checkpoint(path: &Path) -> Result<PartitionCheckpoint> {
-    let f = std::fs::File::open(path)?;
-    let mut lines = BufReader::new(f).lines();
+    let text = std::fs::read_to_string(path)?;
+    let trimmed = text.trim_end_matches('\n');
+    let (body, trailer) = match trimmed.rfind('\n') {
+        Some(i) => (&text[..i + 1], &trimmed[i + 1..]),
+        None => {
+            return Err(Error::Parse(format!("truncated partition checkpoint {path:?}")));
+        }
+    };
+    let want = trailer
+        .strip_prefix('#')
+        .and_then(|h| u32::from_str_radix(h, 16).ok())
+        .ok_or_else(|| {
+            Error::Parse(format!("partition checkpoint {path:?} missing checksum trailer"))
+        })?;
+    let got = fnv1a32(body.as_bytes());
+    if got != want {
+        return Err(Error::Parse(format!(
+            "partition checkpoint {path:?} checksum mismatch (trailer {want:08x}, body {got:08x})"
+        )));
+    }
+    let mut lines = body.lines();
     let header = lines
         .next()
-        .ok_or_else(|| Error::Parse(format!("empty partition checkpoint {path:?}")))??;
-    let def = parse_def_header(&header)?;
+        .ok_or_else(|| Error::Parse(format!("empty partition checkpoint {path:?}")))?;
+    let def = parse_def_header(header)?;
     let meta = lines
         .next()
-        .ok_or_else(|| Error::Parse(format!("partition checkpoint missing meta {path:?}")))??;
+        .ok_or_else(|| Error::Parse(format!("partition checkpoint missing meta {path:?}")))?;
     let parts: Vec<&str> = meta.split('\x1f').collect();
     if parts.len() != 4 {
         return Err(Error::Parse(format!("bad partition checkpoint meta: {meta}")));
@@ -243,7 +282,6 @@ pub fn load_partition_checkpoint(path: &Path) -> Result<PartitionCheckpoint> {
     let ncols = def.schema.len();
     let mut rows = Vec::new();
     for line in lines {
-        let line = line?;
         if line.is_empty() {
             continue;
         }

@@ -29,6 +29,7 @@ use crate::storage::wal::{encode_value, read_segment_file, LogOp, NodeWal};
 use crate::storage::{ResultSet, StatementResult};
 use crate::obs::{span, Counter, Hist, ObsRegistry, PartMetric, Stage};
 use crate::util::clock::{self, SharedClock};
+use crate::util::failpoint;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
 use rustc_hash::FxHashMap;
@@ -276,6 +277,15 @@ pub struct RejoinStart {
     pub from_checkpoint: usize,
     /// WAL records replayed on top of the checkpoints.
     pub replayed: u64,
+    /// Local checkpoints rejected (checksum mismatch / torn body) and
+    /// discarded before falling back to WAL replay or peer shipping.
+    pub ckpt_rejected: usize,
+    /// Partitions whose checkpoint + WAL tail were shipped cross-node from
+    /// a live peer replica because nothing usable survived locally.
+    pub shipped: usize,
+    /// The node's durability directory was missing entirely (disk loss)
+    /// and had to be recreated.
+    pub disk_lost: bool,
 }
 
 /// Point-in-time snapshot of the cluster topology (see
@@ -402,6 +412,28 @@ fn select_references(s: &SelectStmt, table: &str) -> bool {
         || s.joins.iter().any(|j| j.table.table.eq_ignore_ascii_case(table))
 }
 
+/// Can this on-disk WAL segment alone reconstruct its partition from the
+/// origin? True when the earliest surviving record is the partition's first
+/// LSN — replay then needs no checkpoint underneath it. A missing, empty,
+/// or unreadable segment cannot.
+fn wal_covers_origin(path: &std::path::Path) -> bool {
+    match read_segment_file(path) {
+        Ok(recs) => recs.iter().map(|r| r.lsn).min() == Some(1),
+        Err(_) => false,
+    }
+}
+
+/// Split a per-partition durability file stem `{table}.p{pidx}` into its
+/// parts (see `checkpoint::partition_ckpt_name`). `None` for foreign files
+/// (tmp debris, unrelated names) — cold start ignores those.
+fn split_part_stem(stem: &str) -> Option<(String, usize)> {
+    let (table, p) = stem.rsplit_once(".p")?;
+    if table.is_empty() {
+        return None;
+    }
+    Some((table.to_string(), p.parse().ok()?))
+}
+
 // ---------- lock plumbing ----------
 
 /// Which replica a lock request targets.
@@ -518,10 +550,10 @@ impl DbCluster {
                 let ndir = d.dir.join(format!("node{}", n.id));
                 // A *fresh* cluster is authoritative: stale segments and
                 // checkpoints from a previous process under the same dir
-                // would interleave two unrelated LSN histories. (Cold-start
-                // recovery of a whole cluster from its partition
-                // checkpoints is a ROADMAP open item; per-node recovery
-                // goes through `restart_node`, which never reaches here.)
+                // would interleave two unrelated LSN histories. (Whole-
+                // cluster recovery from an existing dir goes through
+                // `DbCluster::open`, per-node recovery through
+                // `restart_node`; neither reaches here.)
                 let _ = std::fs::remove_dir_all(&ndir);
                 std::fs::create_dir_all(&ndir)?;
                 n.attach_durability(ndir, d.group_commit);
@@ -545,6 +577,314 @@ impl DbCluster {
             monitoring_refresh: Mutex::new(()),
             admin: Mutex::new(()),
         }))
+    }
+
+    /// Cold-start a cluster **from** an existing durability directory —
+    /// the non-wiping sibling of [`DbCluster::start`], closing the
+    /// full-cluster-stop recovery gap: `start` treats the directory as
+    /// scratch space and wipes it, so until now only single-node restarts
+    /// (`restart_node`) could recover from disk.
+    ///
+    /// Per node directory, every partition replica is rebuilt from its
+    /// newest **valid** checkpoint (checksum-verified; corrupt files are
+    /// detected and skipped, not loaded) plus a torn-tail-tolerant replay
+    /// of its WAL segment. Replica pairs are then reconciled by
+    /// `(epoch, LSN)` — the longer prefix under the highest epoch wins,
+    /// the other replica is re-seeded from it — and every store is
+    /// re-stamped with a fresh cluster epoch strictly above anything on
+    /// disk, fencing stale redo from the previous incarnation.
+    ///
+    /// Refuses with [`Error::Recovery`] instead of guessing when:
+    /// - no durability config is given (there is nothing to open);
+    /// - a table left WAL segments but no readable checkpoint (rows exist
+    ///   but their schema is unknowable);
+    /// - two replicas of a partition are irreconcilable — a replica on a
+    ///   stale epoch holds **more** committed records than the winner
+    ///   (acked writes would be silently dropped), or the pair matches on
+    ///   `(epoch, LSN)` but differs in content.
+    ///
+    /// Nothing on disk is modified until all validation has passed; the
+    /// first write is the fresh post-open checkpoint baseline.
+    pub fn open(config: ClusterConfig) -> Result<Arc<DbCluster>> {
+        let d = config.durability.clone().ok_or_else(|| {
+            Error::Recovery("DbCluster::open requires a durability configuration".into())
+        })?;
+        if config.data_nodes == 0 {
+            return Err(Error::Catalog("need at least one data node".into()));
+        }
+        failpoint::hit("cold-start-open")?;
+        // Node-dir discovery: a cluster that grew online (`add_node`) has
+        // more directories than the configured baseline; cover them all.
+        let mut n_nodes = config.data_nodes;
+        if let Ok(rd) = std::fs::read_dir(&d.dir) {
+            for e in rd.flatten() {
+                let idx = e
+                    .file_name()
+                    .to_str()
+                    .and_then(|s| s.strip_prefix("node"))
+                    .and_then(|s| s.parse::<usize>().ok());
+                if let Some(i) = idx {
+                    if e.path().is_dir() {
+                        n_nodes = n_nodes.max(i + 1);
+                    }
+                }
+            }
+        }
+        if config.replication && n_nodes < 2 {
+            return Err(Error::Catalog("replication needs >= 2 data nodes".into()));
+        }
+
+        // Phase 1 (read-only): load every valid checkpoint, note every WAL
+        // segment, and pick each table's definition — the one from the
+        // highest-epoch checkpoint, widest partitioning on a tie (splits
+        // only ever add partitions).
+        struct FoundCkpt {
+            node: u32,
+            ck: checkpoint::PartitionCheckpoint,
+        }
+        let mut ckpts: FxHashMap<(String, usize), Vec<FoundCkpt>> = FxHashMap::default();
+        let mut wal_files: Vec<(String, usize, u32)> = Vec::new();
+        let mut defs: FxHashMap<String, (u64, TableDef)> = FxHashMap::default();
+        for node in 0..n_nodes as u32 {
+            let ndir = d.dir.join(format!("node{node}"));
+            let Ok(rd) = std::fs::read_dir(&ndir) else { continue };
+            for e in rd.flatten() {
+                let path = e.path();
+                let Some(fname) = path.file_name().and_then(|s| s.to_str()) else {
+                    continue;
+                };
+                if let Some(stem) = fname.strip_suffix(".ckpt") {
+                    let Some((table, pidx)) = split_part_stem(stem) else { continue };
+                    match checkpoint::load_partition_checkpoint(&path) {
+                        Ok(ck) => {
+                            let slot = defs.entry(table.clone()).or_insert_with(|| {
+                                (ck.epoch, ck.def.clone())
+                            });
+                            let wider = ck.def.num_partitions() > slot.1.num_partitions();
+                            let newer = ck.def.num_partitions() == slot.1.num_partitions()
+                                && ck.epoch > slot.0;
+                            if wider || newer {
+                                *slot = (ck.epoch, ck.def.clone());
+                            }
+                            ckpts
+                                .entry((table, pidx))
+                                .or_default()
+                                .push(FoundCkpt { node, ck });
+                        }
+                        Err(e) => {
+                            log::warn!(
+                                "cold start: skipping unusable checkpoint {path:?}: {e}"
+                            );
+                        }
+                    }
+                } else if let Some(stem) = fname.strip_suffix(".wal") {
+                    if let Some((table, pidx)) = split_part_stem(stem) {
+                        wal_files.push((table, pidx, node));
+                    }
+                }
+            }
+        }
+        for (table, _, _) in &wal_files {
+            if !defs.contains_key(table) {
+                return Err(Error::Recovery(format!(
+                    "table '{table}' left WAL segments but no readable checkpoint \
+                     defines its schema; cannot cold-start"
+                )));
+            }
+        }
+
+        // Phase 2 (read-only): reconstruct each surviving replica —
+        // checkpoint base + WAL replay — into standalone stores.
+        struct Replica {
+            node: u32,
+            store: PartitionStore,
+        }
+        let def_arcs: FxHashMap<String, Arc<TableDef>> = defs
+            .into_iter()
+            .map(|(k, (_, def))| (k, Arc::new(def)))
+            .collect();
+        let mut candidates: FxHashMap<(String, usize), Vec<Replica>> = FxHashMap::default();
+        let mut seen: std::collections::HashSet<(String, usize, u32)> =
+            std::collections::HashSet::new();
+        let mut recover_one = |table: &str,
+                               pidx: usize,
+                               node: u32,
+                               ck: Option<checkpoint::PartitionCheckpoint>|
+         -> Result<()> {
+            if !seen.insert((table.to_string(), pidx, node)) {
+                return Ok(());
+            }
+            let def = def_arcs
+                .get(table)
+                .ok_or_else(|| Error::Recovery(format!("no definition for '{table}'")))?;
+            let mut store = PartitionStore::new(def.clone());
+            if let Some(ck) = ck {
+                let rows = ck.rows.into_iter().map(|(s, r)| (s, Arc::new(r))).collect();
+                store.load_slotted(ck.cap, rows)?;
+                store.version = ck.version;
+                store.epoch = ck.epoch;
+            }
+            let walp = d
+                .dir
+                .join(format!("node{node}"))
+                .join(checkpoint::partition_wal_name(table, pidx));
+            match read_segment_file(&walp) {
+                Ok(mut recs) => {
+                    recs.sort_by_key(|r| r.lsn);
+                    for rec in recs {
+                        if !matches!(store.apply_redo(&rec), Ok(_)) {
+                            break; // gap or fence: this replica's history ends here
+                        }
+                    }
+                }
+                Err(e) => log::warn!("cold start: unreadable WAL {walp:?}: {e}"),
+            }
+            if store.version > 0 || store.len() > 0 {
+                candidates
+                    .entry((table.to_string(), pidx))
+                    .or_default()
+                    .push(Replica { node, store });
+            }
+            Ok(())
+        };
+        for ((table, pidx), found) in std::mem::take(&mut ckpts) {
+            for f in found {
+                recover_one(&table, pidx, f.node, Some(f.ck))?;
+            }
+        }
+        for (table, pidx, node) in &wal_files {
+            recover_one(table, *pidx, *node, None)?;
+        }
+
+        // Phase 3 (read-only): reconcile replica sets. Winner = highest
+        // (epoch, LSN); refuse on irreconcilable divergence.
+        let mut max_epoch = 0u64;
+        for (key, reps) in candidates.iter_mut() {
+            reps.sort_by(|a, b| {
+                (b.store.epoch, b.store.version, a.node).cmp(&(
+                    a.store.epoch,
+                    a.store.version,
+                    b.node,
+                ))
+            });
+            let (w_epoch, w_version, w_len) = {
+                let w = &reps[0].store;
+                (w.epoch, w.version, w.len())
+            };
+            max_epoch = max_epoch.max(w_epoch);
+            for c in &reps[1..] {
+                if c.store.version > w_version {
+                    return Err(Error::Recovery(format!(
+                        "irreconcilable replicas of {}[{}]: node {} holds LSN {} under \
+                         epoch {}, past the winner's LSN {} (epoch {}); acked writes \
+                         would be lost",
+                        key.0, key.1, c.node, c.store.version, c.store.epoch, w_version,
+                        w_epoch
+                    )));
+                }
+                if c.store.epoch == w_epoch
+                    && c.store.version == w_version
+                    && c.store.len() != w_len
+                {
+                    return Err(Error::Recovery(format!(
+                        "irreconcilable replicas of {}[{}]: equal (epoch {}, LSN {}) \
+                         but {} vs {} rows",
+                        key.0, key.1, w_epoch, w_version, c.store.len(), w_len
+                    )));
+                }
+            }
+        }
+        let fresh_epoch = max_epoch + 1;
+
+        // Phase 4: assemble the cluster. First write to disk happens only
+        // after this point (the post-open checkpoint baseline).
+        let nodes: Vec<Arc<DataNode>> =
+            (0..n_nodes as u32).map(|i| Arc::new(DataNode::new(i))).collect();
+        let obs = Arc::new(ObsRegistry::new(n_nodes));
+        for n in &nodes {
+            n.attach_obs(obs.clone());
+            let ndir = d.dir.join(format!("node{}", n.id));
+            std::fs::create_dir_all(&ndir)?;
+            n.attach_durability(ndir, d.group_commit);
+        }
+        let mut catalog: FxHashMap<String, Arc<TableMeta>> = FxHashMap::default();
+        let mut tables: Vec<&String> = def_arcs.keys().collect();
+        tables.sort();
+        for key in tables {
+            let def = def_arcs[key].clone();
+            let name = def.name.clone();
+            let mut placements = Vec::with_capacity(def.num_partitions());
+            for pidx in 0..def.num_partitions() {
+                let mut reps = candidates.remove(&(key.clone(), pidx)).unwrap_or_default();
+                let primary_id = reps
+                    .first()
+                    .map(|r| r.node)
+                    .unwrap_or((pidx % n_nodes) as u32);
+                let backup_id = if config.replication {
+                    reps.get(1).map(|r| r.node).or_else(|| {
+                        (0..n_nodes as u32).find(|i| *i != primary_id)
+                    })
+                } else {
+                    None
+                };
+                let pn = &nodes[primary_id as usize];
+                pn.host_partition(def.clone(), pidx)?;
+                let pstore = pn.partition_even_if_dead(&name, pidx)?;
+                let version = if let Some(winner) = reps.first_mut() {
+                    let mut g = pstore.write().unwrap();
+                    winner.store.epoch = fresh_epoch;
+                    *g = std::mem::replace(
+                        &mut winner.store,
+                        PartitionStore::new(def.clone()),
+                    );
+                    g.version
+                } else {
+                    0
+                };
+                pn.wal.lock().unwrap().reset_segment(&name, pidx, version);
+                if let Some(bid) = backup_id {
+                    let bn = &nodes[bid as usize];
+                    bn.host_partition(def.clone(), pidx)?;
+                    let bstore = bn.partition_even_if_dead(&name, pidx)?;
+                    let g = pstore.read().unwrap();
+                    let mut bg = bstore.write().unwrap();
+                    let (cap, rows) = g.snapshot_slotted();
+                    bg.load_slotted(cap, rows)?;
+                    bg.version = g.version;
+                    bg.epoch = fresh_epoch;
+                    bn.wal.lock().unwrap().reset_segment(&name, pidx, version);
+                }
+                placements.push(Placement { primary: primary_id, backup: backup_id });
+            }
+            catalog.insert(key.clone(), Arc::new(TableMeta { def, placements }));
+        }
+        let cluster = Arc::new(DbCluster {
+            nodes: RwLock::new(nodes),
+            catalog: RwLock::new(catalog),
+            clock: config.clock,
+            stats: Arc::new(StatsRegistry::new()),
+            replication: config.replication,
+            durability: Some(d),
+            concurrency: config.concurrency,
+            epoch: AtomicU64::new(fresh_epoch),
+            place_cursor: AtomicUsize::new(0),
+            plans: RwLock::new(FxHashMap::default()),
+            pool: OnceLock::new(),
+            routes: RouteCounters::default(),
+            scan_metrics: Arc::new(ScanMetrics::default()),
+            obs,
+            monitoring_refresh: Mutex::new(()),
+            admin: Mutex::new(()),
+        });
+        // Fresh durable baseline under the new epoch: re-cut every node's
+        // checkpoints (this also truncates the replayed WAL segments, so
+        // the previous incarnation's records cannot be replayed twice).
+        for id in 0..cluster.num_nodes() as u32 {
+            if let Err(e) = checkpoint::checkpoint_node(&cluster, id) {
+                log::warn!("cold start: baseline checkpoint of node {id} failed: {e}");
+            }
+        }
+        Ok(cluster)
     }
 
     /// The cluster's observability registry (see `crate::obs`).
@@ -885,8 +1225,21 @@ impl DbCluster {
                 node.state()
             )));
         }
-        node.begin_rejoin();
+        failpoint::hit("rejoin-seed")?;
         let ndir = self.durability.as_ref().map(|d| d.dir.join(format!("node{id}")));
+        let mut report = RejoinStart::default();
+        // Disk loss: the node's durability directory vanished (operator
+        // wiped the volume, disk replaced). Recreate it — without this,
+        // every later WAL append on the node would fail (the open of a
+        // sink file in a missing directory errors), wedging commits that
+        // mirror to this replica after rejoin.
+        if let Some(dir) = &ndir {
+            if !dir.is_dir() {
+                report.disk_lost = true;
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        node.begin_rejoin();
         // A restart loses the in-memory WAL buffers *and* whatever the
         // group-commit window had buffered but not yet flushed: discard
         // the old log (replacing it without `discard` would run NodeWal's
@@ -901,7 +1254,6 @@ impl DbCluster {
                 _ => NodeWal::new(),
             };
         }
-        let mut report = RejoinStart::default();
         let mut keys = node.hosted_keys();
         keys.sort();
         for (table, pidx) in keys {
@@ -912,15 +1264,56 @@ impl DbCluster {
             report.partitions += 1;
             if let Some(dir) = &ndir {
                 let ckpt = dir.join(checkpoint::partition_ckpt_name(&table, pidx));
-                if ckpt.exists() {
-                    let ck = checkpoint::load_partition_checkpoint(&ckpt)?;
+                let walp = dir.join(checkpoint::partition_wal_name(&table, pidx));
+                // Validate the local checkpoint. A checksum mismatch or
+                // torn body is *detected*, never loaded: discard the file
+                // and fall back to WAL replay or peer shipping.
+                let mut ck = match checkpoint::load_partition_checkpoint(&ckpt) {
+                    Ok(ck) => Some(ck),
+                    Err(Error::Io(e)) if e.kind() == std::io::ErrorKind::NotFound => None,
+                    Err(e) => {
+                        log::warn!(
+                            "restart_node({id}): rejecting checkpoint {ckpt:?}: {e}"
+                        );
+                        let _ = std::fs::remove_file(&ckpt);
+                        report.ckpt_rejected += 1;
+                        None
+                    }
+                };
+                // Nothing local can reconstruct this replica's prefix —
+                // no valid checkpoint, and the surviving WAL (if any) does
+                // not start at the partition's origin. Ship the peer
+                // replica's checkpoint + WAL tail into our directory and
+                // recover from the copies, instead of restarting empty
+                // with no durable baseline.
+                if ck.is_none() && !wal_covers_origin(&walp) {
+                    match self.ship_partition_from_peer(id, &table, pidx, dir) {
+                        Ok(true) => {
+                            report.shipped += 1;
+                            ck = match checkpoint::load_partition_checkpoint(&ckpt) {
+                                Ok(ck) => Some(ck),
+                                Err(e) => {
+                                    log::warn!(
+                                        "restart_node({id}): shipped checkpoint for \
+                                         {table}[{pidx}] unusable: {e}"
+                                    );
+                                    None
+                                }
+                            };
+                        }
+                        Ok(false) => {}
+                        Err(e) => log::warn!(
+                            "restart_node({id}): peer ship of {table}[{pidx}] failed: {e}"
+                        ),
+                    }
+                }
+                if let Some(ck) = ck {
                     let rows = ck.rows.into_iter().map(|(s, r)| (s, Arc::new(r))).collect();
                     g.load_slotted(ck.cap, rows)?;
                     g.version = ck.version;
                     g.epoch = ck.epoch;
                     report.from_checkpoint += 1;
                 }
-                let walp = dir.join(checkpoint::partition_wal_name(&table, pidx));
                 let mut recs = read_segment_file(&walp)?;
                 recs.sort_by_key(|r| r.lsn);
                 for rec in recs {
@@ -938,6 +1331,50 @@ impl DbCluster {
         Ok(report)
     }
 
+    /// Copy a live peer replica's on-disk checkpoint + WAL segment for
+    /// `(table, pidx)` into `dst_dir` (cross-node checkpoint shipping —
+    /// the disk-loss recovery path). The peer's buffered WAL tail is
+    /// flushed first so the copied segment is current; a concurrent peer
+    /// append at most tears the copy's final line, which replay tolerates.
+    /// Returns whether any file was shipped.
+    fn ship_partition_from_peer(
+        &self,
+        id: u32,
+        table: &str,
+        pidx: usize,
+        dst_dir: &std::path::Path,
+    ) -> Result<bool> {
+        failpoint::hit("rejoin-ship-checkpoint")?;
+        let Some(d) = &self.durability else { return Ok(false) };
+        let Ok(meta) = self.meta(table) else { return Ok(false) };
+        let Some(pl) = meta.placements.get(pidx) else { return Ok(false) };
+        for peer in std::iter::once(pl.primary).chain(pl.backup) {
+            if peer == id {
+                continue;
+            }
+            let Some(pn) = self.node(peer) else { continue };
+            if !pn.is_alive() {
+                continue;
+            }
+            let _ = pn.wal.lock().unwrap().flush_all();
+            let src_dir = d.dir.join(format!("node{peer}"));
+            let ck_name = checkpoint::partition_ckpt_name(table, pidx);
+            let wal_name = checkpoint::partition_wal_name(table, pidx);
+            let mut copied = false;
+            for name in [&ck_name, &wal_name] {
+                let src = src_dir.join(name);
+                if src.is_file() {
+                    std::fs::copy(&src, dst_dir.join(name))?;
+                    copied = true;
+                }
+            }
+            if copied {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
     /// One opportunistic catch-up round for a rejoining node: for every
     /// hosted partition, copy the serving replica's retained redo tail
     /// (brief wal lock, no partition latch held during the apply) and
@@ -952,6 +1389,7 @@ impl DbCluster {
         if node.state() != NodeState::Rejoining {
             return Ok(0);
         }
+        failpoint::hit("rejoin-catchup")?;
         let mut shipped = 0u64;
         for (table, pidx) in node.hosted_keys() {
             let Ok(meta) = self.meta(&table) else { continue };
@@ -1000,6 +1438,9 @@ impl DbCluster {
         if node.state() != NodeState::Rejoining {
             return Err(Error::Engine(format!("node {id} is not rejoining")));
         }
+        // Before any latch is taken: an injected fault aborts the cut with
+        // the node still Rejoining, and the next sweep retries it.
+        failpoint::hit("rejoin-final-cut")?;
         // (table, pidx, serving replica) — `None` for a sole-replica
         // partition (no backup, primary is the rejoiner): there is no peer
         // to catch up from, and the local recovery *is* the authoritative
@@ -1092,17 +1533,15 @@ impl DbCluster {
     /// to `Alive`. With durability configured the node gets its own
     /// `node<id>/` directory and WAL segments, exactly like a start-time
     /// node.
-    ///
-    /// Known limit: the obs registry's per-node WAL counter vectors are
-    /// sized at cluster start, so later-added nodes are not broken out in
-    /// the `node_wal_*` telemetry (lookups are bounds-checked; everything
-    /// else — per-partition cells, counters, tracing — covers them).
     pub fn add_node(&self) -> Result<u32> {
         let _admin = self.admin.lock().unwrap();
         let mut nodes = self.nodes.write().unwrap();
         let id = nodes.len() as u32;
         let n = Arc::new(DataNode::new_joining(id));
         n.attach_obs(self.obs.clone());
+        // Grow the obs registry's per-node WAL ledgers so this node gets
+        // its own `node_wal_*` breakouts, like a start-time node.
+        self.obs.ensure_node(id as usize);
         if let Some(d) = &self.durability {
             let ndir = d.dir.join(format!("node{id}"));
             let _ = std::fs::remove_dir_all(&ndir);
@@ -1318,6 +1757,9 @@ impl DbCluster {
         // just the serving one — freeze writers wherever failover may have
         // routed them; the serving replica is then chosen from liveness
         // observed under those latches (the mirror-set rule, reused).
+        // An injected fault here aborts the move before any latch or
+        // catalog mutation; the caller drops the seeded target replica.
+        failpoint::hit("rebalance-cut")?;
         let pn = self
             .node(pl.primary)
             .ok_or_else(|| Error::Unavailable(format!("no node {}", pl.primary)))?;
@@ -1487,6 +1929,9 @@ impl DbCluster {
         b_node: Option<&Arc<DataNode>>,
     ) -> Result<()> {
         let name = &meta.def.name;
+        // Before any latch: an injected fault aborts the split cleanly
+        // (the caller drops the freshly hosted, still-invisible stores).
+        failpoint::hit("split-cut")?;
         let src = pn.partition(name, pidx)?;
         let ndst = pn.partition_even_if_dead(name, new_pidx)?;
         let b_src = match b_node {

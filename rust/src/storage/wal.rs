@@ -26,6 +26,7 @@
 //! into a parse error).
 
 use crate::storage::value::{Row, Value};
+use crate::util::failpoint;
 use crate::{Error, Result};
 use rustc_hash::FxHashMap;
 use std::fmt::Write as _;
@@ -196,7 +197,7 @@ impl WalRecord {
     /// parse as a valid, shorter record.
     pub fn to_line(&self) -> String {
         let payload = format!("{}\t{}\t{}", self.lsn, self.epoch, self.op.to_line());
-        let sum = line_checksum(payload.as_bytes());
+        let sum = fnv1a32(payload.as_bytes());
         format!("{payload}\t#{sum:08x}")
     }
 
@@ -210,7 +211,7 @@ impl WalRecord {
             .ok_or_else(|| Error::Parse("WAL record missing checksum tag".into()))?;
         let want = u32::from_str_radix(sum, 16)
             .map_err(|e| Error::Parse(format!("bad WAL checksum: {e}")))?;
-        let got = line_checksum(payload.as_bytes());
+        let got = fnv1a32(payload.as_bytes());
         if got != want {
             return Err(Error::Parse(format!(
                 "WAL checksum mismatch ({got:08x} != {want:08x})"
@@ -233,9 +234,16 @@ impl WalRecord {
 }
 
 /// FNV-1a over a record line's payload (fast, no tables, good enough to
-/// catch arbitrary-byte tears).
-fn line_checksum(bytes: &[u8]) -> u32 {
-    let mut h: u32 = 0x811c_9dc5;
+/// catch arbitrary-byte tears). Shared with the checkpoint writer, whose
+/// trailer checksums the whole file body with the same function.
+pub fn fnv1a32(bytes: &[u8]) -> u32 {
+    fnv1a32_fold(0x811c_9dc5, bytes)
+}
+
+/// Incremental FNV-1a step: fold `bytes` into a running hash `h` (seed it
+/// with `fnv1a32(&[])`'s offset via [`fnv1a32`], or chain calls). Lets the
+/// checkpoint writer checksum a streamed file without buffering it.
+pub fn fnv1a32_fold(mut h: u32, bytes: &[u8]) -> u32 {
     for &b in bytes {
         h ^= u32::from(b);
         h = h.wrapping_mul(0x0100_0193);
@@ -468,6 +476,7 @@ impl NodeWal {
     /// commit touched on this node) under `epoch`, then apply the group
     /// commit rule.
     pub fn commit(&mut self, epoch: u64, ops: &[(u64, LogOp)]) -> Result<()> {
+        failpoint::hit("wal-append-before-flush")?;
         for (lsn, op) in ops {
             let rec = WalRecord { lsn: *lsn, epoch, op: op.clone() };
             self.segment_mut(op.table(), op.pidx()).append(rec)?;
@@ -489,6 +498,7 @@ impl NodeWal {
     /// Flush every segment's sink writer (group-commit boundary, shutdown,
     /// checkpoint cut).
     pub fn flush_all(&mut self) -> Result<()> {
+        failpoint::hit("wal-flush")?;
         for m in self.segments.values_mut() {
             for s in m.values_mut() {
                 s.flush()?;
@@ -511,6 +521,7 @@ impl NodeWal {
     /// Checkpoint cut for one partition: flush, drop records with
     /// `lsn <= cut`, rewrite the sink with the retained tail.
     pub fn truncate_upto(&mut self, table: &str, pidx: usize, cut: u64) -> Result<()> {
+        failpoint::hit("wal-truncate")?;
         self.flush_all()?;
         self.segment_mut(table, pidx).truncate_upto(cut)
     }
@@ -537,6 +548,9 @@ impl NodeWal {
     /// the log so the recovery it then exercises is the one a crash
     /// actually leaves behind, not a silently upgraded stronger one.
     pub fn discard(&mut self) {
+        // `discard` is infallible (crash simulation); only Delay/Panic
+        // actions are meaningful here.
+        let _ = failpoint::hit("wal-discard");
         for m in self.segments.values_mut() {
             for s in m.values_mut() {
                 s.discard_writer();

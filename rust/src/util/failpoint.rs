@@ -1,0 +1,369 @@
+//! Deterministic fault injection for crash-surface tests.
+//!
+//! A *failpoint* is a named hook compiled into a durability-critical seam
+//! (WAL append, checkpoint rename, rejoin cut, …). In production every
+//! hook is a single relaxed atomic load — the registry is empty and
+//! `hit()` returns immediately. Tests (or the `DCHIRON_FAILPOINTS`
+//! environment variable) arm individual points with an [`Action`]:
+//!
+//! - `Err` — the seam returns an injected `Error::Io`, modelling a failed
+//!   syscall (write/rename/fsync).
+//! - `Panic` — the seam panics, modelling a crash mid-operation. Only
+//!   safe at seams that hold no poisonable locks (e.g. the server frame
+//!   pump, whose handler threads are isolated per connection).
+//! - `Delay(ms)` — the seam sleeps, widening race windows.
+//! - `OneShot(inner)` — fires `inner` exactly once, then disarms. The
+//!   workhorse for recovery tests: inject one fault, then let the
+//!   recovery path run clean.
+//!
+//! Env syntax (`;`-separated, first match wins):
+//!
+//! ```text
+//! DCHIRON_FAILPOINTS='wal-append-before-flush=panic;ckpt-after-tmp-write=err'
+//! DCHIRON_FAILPOINTS='rejoin-final-cut=oneshot(err);wal-flush=delay(5)'
+//! ```
+//!
+//! The registry is process-global; tests that arm points must call
+//! [`reset`] when done (and serialize with other failpoint tests — the
+//! chaos suites run their schedules sequentially for this reason).
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// What an armed failpoint does when its seam is hit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// Disarmed — `hit` is a no-op.
+    Off,
+    /// Panic with the failpoint's name, modelling a crash mid-seam.
+    Panic,
+    /// Return an injected `Error::Io`, modelling a failed syscall.
+    Err,
+    /// Sleep for the given number of milliseconds, widening races.
+    Delay(u64),
+    /// Fire the inner action exactly once, then disarm.
+    OneShot(Box<Action>),
+}
+
+impl Action {
+    /// Parse one action spec: `off | panic | err | delay(MS) |
+    /// oneshot(ACTION)`.
+    fn parse(spec: &str) -> Result<Action> {
+        let spec = spec.trim();
+        if let Some(rest) = spec.strip_prefix("oneshot(").and_then(|s| s.strip_suffix(')')) {
+            let inner = Action::parse(rest)?;
+            if matches!(inner, Action::Off | Action::OneShot(_)) {
+                return Err(Error::Parse(format!("failpoint: invalid oneshot inner {rest:?}")));
+            }
+            return Ok(Action::OneShot(Box::new(inner)));
+        }
+        if let Some(rest) = spec.strip_prefix("delay(").and_then(|s| s.strip_suffix(')')) {
+            let ms: u64 = rest
+                .trim()
+                .parse()
+                .map_err(|_| Error::Parse(format!("failpoint: invalid delay {rest:?}")))?;
+            return Ok(Action::Delay(ms));
+        }
+        match spec {
+            "off" => Ok(Action::Off),
+            "panic" => Ok(Action::Panic),
+            "err" => Ok(Action::Err),
+            _ => Err(Error::Parse(format!("failpoint: unknown action {spec:?}"))),
+        }
+    }
+}
+
+struct Registry {
+    points: HashMap<String, Action>,
+    hits: HashMap<String, u64>,
+}
+
+/// Count of currently armed (non-`Off`) points. `hit()`'s fast path is a
+/// single relaxed load of this — zero means no lock, no lookup.
+static ARMED: AtomicUsize = AtomicUsize::new(0);
+
+fn registry() -> &'static Mutex<Registry> {
+    static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let mut reg = Registry { points: HashMap::new(), hits: HashMap::new() };
+        if let Ok(spec) = std::env::var("DCHIRON_FAILPOINTS") {
+            match parse_spec(&spec) {
+                Ok(parsed) => {
+                    for (name, action) in parsed {
+                        arm(&mut reg, &name, action);
+                    }
+                }
+                Err(e) => eprintln!("[failpoint] ignoring DCHIRON_FAILPOINTS: {e}"),
+            }
+        }
+        Mutex::new(reg)
+    })
+}
+
+fn parse_spec(spec: &str) -> Result<Vec<(String, Action)>> {
+    let mut out = Vec::new();
+    for entry in spec.split(';') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (name, action) = entry
+            .split_once('=')
+            .ok_or_else(|| Error::Parse(format!("failpoint: missing '=' in {entry:?}")))?;
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(Error::Parse(format!("failpoint: empty name in {entry:?}")));
+        }
+        out.push((name.to_string(), Action::parse(action)?));
+    }
+    Ok(out)
+}
+
+/// Install `action` for `name` inside a held registry, maintaining the
+/// ARMED count that gates the fast path.
+fn arm(reg: &mut Registry, name: &str, action: Action) {
+    let was_armed = reg.points.get(name).is_some_and(|a| *a != Action::Off);
+    let now_armed = action != Action::Off;
+    match action {
+        Action::Off => {
+            reg.points.remove(name);
+        }
+        a => {
+            reg.points.insert(name.to_string(), a);
+        }
+    }
+    match (was_armed, now_armed) {
+        (false, true) => {
+            ARMED.fetch_add(1, Ordering::SeqCst);
+        }
+        (true, false) => {
+            ARMED.fetch_sub(1, Ordering::SeqCst);
+        }
+        _ => {}
+    }
+}
+
+/// Arm (or disarm, with [`Action::Off`]) a failpoint programmatically.
+pub fn set(name: &str, action: Action) {
+    let mut reg = registry().lock().unwrap();
+    arm(&mut reg, name, action);
+}
+
+/// Disarm a single failpoint.
+pub fn clear(name: &str) {
+    set(name, Action::Off);
+}
+
+/// Disarm every failpoint and zero the hit counters. Tests that arm
+/// points must call this when done.
+pub fn reset() {
+    let mut reg = registry().lock().unwrap();
+    let armed = reg.points.len();
+    reg.points.clear();
+    reg.hits.clear();
+    if armed > 0 {
+        ARMED.fetch_sub(armed, Ordering::SeqCst);
+    }
+}
+
+/// Parse and apply an env-style spec (`name=action;name=action`).
+/// Returns how many points were configured.
+pub fn configure(spec: &str) -> Result<usize> {
+    let parsed = parse_spec(spec)?;
+    let n = parsed.len();
+    let mut reg = registry().lock().unwrap();
+    for (name, action) in parsed {
+        arm(&mut reg, &name, action);
+    }
+    Ok(n)
+}
+
+/// How many times `name` has been hit *while armed* (OneShot consumption
+/// counts). Lets tests assert an injected fault actually fired.
+pub fn hits(name: &str) -> u64 {
+    registry().lock().unwrap().hits.get(name).copied().unwrap_or(0)
+}
+
+/// Evaluate the failpoint `name`. The overwhelmingly common case — no
+/// failpoint armed anywhere in the process — is a single relaxed atomic
+/// load and an immediate `Ok(())`.
+#[inline]
+pub fn hit(name: &str) -> Result<()> {
+    if ARMED.load(Ordering::Relaxed) == 0 {
+        // Touch the registry once so DCHIRON_FAILPOINTS is parsed even if
+        // nothing ever calls set(); OnceLock makes repeats free.
+        if !env_checked() {
+            let _ = registry();
+            return hit(name);
+        }
+        return Ok(());
+    }
+    hit_slow(name)
+}
+
+/// Whether the env spec has been folded into the registry yet.
+fn env_checked() -> bool {
+    static CHECKED: AtomicUsize = AtomicUsize::new(0);
+    if CHECKED.load(Ordering::Relaxed) == 1 {
+        return true;
+    }
+    CHECKED.store(1, Ordering::Relaxed);
+    false
+}
+
+#[cold]
+fn hit_slow(name: &str) -> Result<()> {
+    let action = {
+        let mut reg = registry().lock().unwrap();
+        let Some(action) = reg.points.get(name).cloned() else {
+            return Ok(());
+        };
+        *reg.hits.entry(name.to_string()).or_insert(0) += 1;
+        if let Action::OneShot(inner) = action {
+            arm(&mut reg, name, Action::Off);
+            *inner
+        } else {
+            action
+        }
+    };
+    match action {
+        Action::Off => Ok(()),
+        Action::Panic => panic!("failpoint '{name}' (injected panic)"),
+        Action::Err => {
+            Err(Error::Io(std::io::Error::other(format!("failpoint '{name}' (injected error)"))))
+        }
+        Action::Delay(ms) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+        Action::OneShot(_) => unreachable!("oneshot unwrapped above"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global, so these tests serialize on a local
+    // mutex and reset() on every path.
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn off_by_default_and_after_reset() {
+        let _g = serial();
+        reset();
+        assert!(hit("nothing-armed").is_ok());
+        set("x", Action::Err);
+        assert!(hit("x").is_err());
+        reset();
+        assert!(hit("x").is_ok());
+        assert_eq!(hits("x"), 0);
+    }
+
+    #[test]
+    fn err_action_is_io_error_and_counts_hits() {
+        let _g = serial();
+        reset();
+        set("wal-append-before-flush", Action::Err);
+        let e = hit("wal-append-before-flush").unwrap_err();
+        assert!(matches!(e, Error::Io(_)), "got {e:?}");
+        assert!(e.to_string().contains("wal-append-before-flush"));
+        assert_eq!(hits("wal-append-before-flush"), 1);
+        assert!(hit("some-other-point").is_ok());
+        reset();
+    }
+
+    #[test]
+    fn oneshot_fires_once_then_disarms() {
+        let _g = serial();
+        reset();
+        set("cut", Action::OneShot(Box::new(Action::Err)));
+        assert!(hit("cut").is_err());
+        assert!(hit("cut").is_ok());
+        assert!(hit("cut").is_ok());
+        assert_eq!(hits("cut"), 1);
+        // Disarmed oneshot returns the fast path to zero-cost.
+        assert_eq!(ARMED.load(Ordering::SeqCst), 0);
+        reset();
+    }
+
+    #[test]
+    fn panic_action_panics_with_name() {
+        let _g = serial();
+        reset();
+        set("boom", Action::Panic);
+        let r = std::panic::catch_unwind(|| {
+            let _ = hit("boom");
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("boom"), "panic message: {msg}");
+        reset();
+    }
+
+    #[test]
+    fn delay_sleeps() {
+        let _g = serial();
+        reset();
+        set("slow", Action::Delay(10));
+        let t0 = std::time::Instant::now();
+        assert!(hit("slow").is_ok());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(8));
+        reset();
+    }
+
+    #[test]
+    fn configure_parses_env_syntax() {
+        let _g = serial();
+        reset();
+        let n = configure("a=err; b=delay(3) ;c=oneshot(panic);d=off").unwrap();
+        assert_eq!(n, 4);
+        assert!(hit("a").is_err());
+        assert!(hit("b").is_ok());
+        assert_eq!(hits("b"), 1);
+        assert!(hit("d").is_ok());
+        assert!(std::panic::catch_unwind(|| {
+            let _ = hit("c");
+        })
+        .is_err());
+        assert!(hit("c").is_ok(), "oneshot consumed");
+        reset();
+    }
+
+    #[test]
+    fn configure_rejects_garbage() {
+        let _g = serial();
+        reset();
+        assert!(configure("a").is_err());
+        assert!(configure("=err").is_err());
+        assert!(configure("a=explode").is_err());
+        assert!(configure("a=delay(x)").is_err());
+        assert!(configure("a=oneshot(off)").is_err());
+        assert!(configure("a=oneshot(oneshot(err))").is_err());
+        // Failed parses must not leave partial arms behind.
+        reset();
+        assert_eq!(ARMED.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn rearming_same_point_does_not_leak_armed_count() {
+        let _g = serial();
+        reset();
+        set("p", Action::Err);
+        set("p", Action::Delay(1));
+        set("p", Action::Err);
+        assert_eq!(ARMED.load(Ordering::SeqCst), 1);
+        clear("p");
+        assert_eq!(ARMED.load(Ordering::SeqCst), 0);
+        reset();
+    }
+}

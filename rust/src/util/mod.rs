@@ -1,9 +1,11 @@
 //! Small self-contained utilities: deterministic RNG, a clock abstraction
 //! shared by the real engine and the discrete-event simulator, a mini
 //! property-testing harness (stand-in for `proptest`, which is not available
-//! offline), and a tiny JSON writer for machine-readable bench reports.
+//! offline), a tiny JSON writer for machine-readable bench reports, and the
+//! deterministic failpoint registry used by the crash-surface tests.
 
 pub mod clock;
+pub mod failpoint;
 pub mod json;
 pub mod prop;
 pub mod rng;

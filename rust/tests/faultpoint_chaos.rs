@@ -1,0 +1,704 @@
+//! Failpoint chaos gate: drive the claim workload through deterministic
+//! fault-injection schedules (`util::failpoint`) covering every
+//! durability-critical seam — WAL append/flush/truncate, checkpoint
+//! tmp-write/rename, rejoin seed/catch-up/final-cut, rebalance/split cut,
+//! cold-start open — and demand the surviving cluster stays **byte-equal**
+//! to a never-faulted twin fed the identical committed stream.
+//!
+//! Beyond the schedule sweep, this suite gates the two recovery paths the
+//! failpoints exist to prove out:
+//! - **disk loss**: a node restarted with its durability directory wiped
+//!   (or its checkpoint corrupted) recovers by shipping the peer replica's
+//!   checkpoint + WAL tail cross-node (`RejoinStart::{disk_lost,shipped}`);
+//! - **whole-cluster cold start**: `DbCluster::open` round-trips a full
+//!   stop — every partition from its newest valid checkpoint plus
+//!   torn-tail-tolerant WAL replay, replica pairs reconciled by
+//!   (epoch, LSN) — with fingerprint equality, and refuses with a typed
+//!   `Error::Recovery` when the directory cannot define a schema.
+//!
+//! Injected-error semantics: a WAL-commit failpoint fires *after* the
+//! in-memory commit installed on both replicas (the engine logs after the
+//! latched apply), so the driver treats an injected commit error as
+//! committed and mirrors the op to the twin — recovery then proves the
+//! durability hole is healed from the serving replicas' memory, not from
+//! the torn log.
+//!
+//! The CI `fault-matrix` job runs this under `FAULT_SEED` × `FAULT_MODE`
+//! (`2pl` | `occ`); a plain `cargo test` sweeps a small built-in matrix.
+//! Failpoints are process-global, so every test here serializes on one
+//! gate and resets the registry on both sides.
+
+use schaladb::storage::checkpoint::checkpoint_node;
+use schaladb::storage::cluster::{ClusterConfig, ConcurrencyMode, DurabilityConfig};
+use schaladb::storage::replication::AvailabilityManager;
+use schaladb::storage::{AccessKind, DbCluster, Prepared, Value};
+use schaladb::util::failpoint::{self, Action};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+static GATE: Mutex<()> = Mutex::new(());
+
+/// Serialize a test against the process-global failpoint registry: take
+/// the gate, reset on entry, and reset again when dropped so a panicking
+/// test cannot leak an armed failpoint into the next one.
+struct Serial(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+fn serial() -> Serial {
+    let g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::reset();
+    Serial(g)
+}
+
+impl Drop for Serial {
+    fn drop(&mut self) {
+        failpoint::reset();
+    }
+}
+
+fn one_shot_err() -> Action {
+    Action::OneShot(Box::new(Action::Err))
+}
+
+/// Is this the error a fired `Err`-action failpoint injects?
+fn is_injected(e: &schaladb::Error) -> bool {
+    e.to_string().contains("failpoint")
+}
+
+/// Deterministic LCG so every (seed, mode) cell replays identically.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 11
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n.max(1)
+    }
+}
+
+const PARTS: usize = 4;
+
+fn schema(c: &DbCluster) {
+    c.exec(&format!(
+        "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
+         status TEXT, dur FLOAT) \
+         PARTITION BY HASH(workerid) PARTITIONS {PARTS} \
+         PRIMARY KEY (taskid) INDEX (status)"
+    ))
+    .unwrap();
+    c.exec("CREATE TABLE prov (provid INT NOT NULL, taskid INT, note TEXT) PRIMARY KEY (provid)")
+        .unwrap();
+}
+
+struct Stmts {
+    insert: Prepared,
+    claim: Prepared,
+    finish: Prepared,
+    delete: Prepared,
+    prov: Prepared,
+}
+
+impl Stmts {
+    fn prepare(c: &DbCluster) -> Stmts {
+        Stmts {
+            insert: c
+                .prepare(
+                    "INSERT INTO workqueue (taskid, workerid, status, dur) \
+                     VALUES (?, ?, 'READY', ?)",
+                )
+                .unwrap(),
+            claim: c
+                .prepare(
+                    "UPDATE workqueue SET status = 'RUNNING' \
+                     WHERE taskid = ? AND workerid = ? AND status = 'READY'",
+                )
+                .unwrap(),
+            finish: c
+                .prepare(
+                    "UPDATE workqueue SET status = 'FINISHED', dur = dur + 1.5 \
+                     WHERE taskid = ? AND workerid = ?",
+                )
+                .unwrap(),
+            delete: c
+                .prepare("DELETE FROM workqueue WHERE taskid = ? AND workerid = ?")
+                .unwrap(),
+            prov: c
+                .prepare("INSERT INTO prov (provid, taskid, note) VALUES (?, ?, ?)")
+                .unwrap(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Op {
+    Insert { id: i64, worker: i64, dur: f64 },
+    Claim { id: i64, worker: i64 },
+    Finish { id: i64, worker: i64 },
+    Delete { id: i64, worker: i64 },
+    Prov { id: i64, task: i64, note: String },
+}
+
+fn apply(c: &DbCluster, s: &Stmts, op: &Op) -> schaladb::Result<usize> {
+    let r = match op {
+        Op::Insert { id, worker, dur } => c.exec_prepared(
+            0,
+            AccessKind::InsertTasks,
+            &s.insert,
+            &[Value::Int(*id), Value::Int(*worker), Value::Float(*dur)],
+        )?,
+        Op::Claim { id, worker } => c.exec_prepared(
+            0,
+            AccessKind::UpdateToRunning,
+            &s.claim,
+            &[Value::Int(*id), Value::Int(*worker)],
+        )?,
+        Op::Finish { id, worker } => c.exec_prepared(
+            0,
+            AccessKind::UpdateToFinished,
+            &s.finish,
+            &[Value::Int(*id), Value::Int(*worker)],
+        )?,
+        Op::Delete { id, worker } => c.exec_prepared(
+            0,
+            AccessKind::Other,
+            &s.delete,
+            &[Value::Int(*id), Value::Int(*worker)],
+        )?,
+        Op::Prov { id, task, note } => c.exec_prepared(
+            0,
+            AccessKind::InsertProvenance,
+            &s.prov,
+            &[Value::Int(*id), Value::Int(*task), Value::str(note.clone())],
+        )?,
+    };
+    Ok(r.affected())
+}
+
+/// Streams ops into A (the fault victim); every op A commits — including
+/// ops whose WAL logging was killed by an injected failpoint *after* the
+/// in-memory commit — is mirrored to B, the never-faulted twin.
+struct Driver {
+    a: Arc<DbCluster>,
+    b: Arc<DbCluster>,
+    sa: Stmts,
+    sb: Stmts,
+    rng: Rng,
+    next_id: i64,
+    next_prov: i64,
+    /// (taskid, workerid) of rows believed live on both clusters.
+    live: Vec<(i64, i64)>,
+    /// Ops whose commit was torn by an injected WAL error (committed in
+    /// memory, durability hole) — mirrored to the twin anyway.
+    injected_commits: usize,
+}
+
+impl Driver {
+    fn new(a: Arc<DbCluster>, b: Arc<DbCluster>, seed: u64, id_base: i64) -> Driver {
+        let sa = Stmts::prepare(&a);
+        let sb = Stmts::prepare(&b);
+        Driver {
+            a,
+            b,
+            sa,
+            sb,
+            rng: Rng(seed.wrapping_mul(0x9e3779b97f4a7c15) | 1),
+            next_id: id_base,
+            next_prov: id_base,
+            live: Vec::new(),
+            injected_commits: 0,
+        }
+    }
+
+    fn gen(&mut self) -> Op {
+        let roll = self.rng.below(10);
+        if self.live.is_empty() || roll < 4 {
+            let id = self.next_id;
+            self.next_id += 1;
+            return Op::Insert {
+                id,
+                worker: self.rng.below(PARTS as u64) as i64,
+                dur: (self.rng.below(1000) as f64) / 8.0,
+            };
+        }
+        let pick = self.rng.below(self.live.len() as u64) as usize;
+        let (id, worker) = self.live[pick];
+        match roll {
+            4 | 5 => Op::Claim { id, worker },
+            6 => Op::Finish { id, worker },
+            7 => Op::Delete { id, worker },
+            _ => {
+                let pid = self.next_prov;
+                self.next_prov += 1;
+                Op::Prov { id: pid, task: id, note: format!("note {pid}") }
+            }
+        }
+    }
+
+    fn bookkeep(&mut self, op: &Op, affected: usize) {
+        match op {
+            Op::Insert { id, worker, .. } if affected > 0 => self.live.push((*id, *worker)),
+            Op::Delete { id, .. } if affected > 0 => self.live.retain(|(i, _)| i != id),
+            _ => {}
+        }
+    }
+
+    fn drive(&mut self, n: usize) {
+        for _ in 0..n {
+            let op = self.gen();
+            match apply(&self.a, &self.sa, &op) {
+                Ok(affected_a) => {
+                    let affected_b =
+                        apply(&self.b, &self.sb, &op).expect("twin must accept mirrored op");
+                    assert_eq!(
+                        affected_a, affected_b,
+                        "twin diverged on {op:?}: {affected_a} != {affected_b}"
+                    );
+                    self.bookkeep(&op, affected_a);
+                }
+                // A fired WAL-commit failpoint surfaces after the latched
+                // in-memory apply installed on both replicas: the op IS
+                // committed, only its log record is torn. Mirror it.
+                Err(e) if is_injected(&e) => {
+                    self.injected_commits += 1;
+                    let affected_b =
+                        apply(&self.b, &self.sb, &op).expect("twin must accept mirrored op");
+                    self.bookkeep(&op, affected_b);
+                }
+                Err(schaladb::Error::Unavailable(_)) => { /* committed nowhere */ }
+                Err(e) => panic!("unexpected failure on {op:?}: {e}"),
+            }
+        }
+    }
+
+    /// Drive until the named (armed) failpoint fires, bounded.
+    fn drive_until_hit(&mut self, name: &str, max_ops: usize) {
+        let before = failpoint::hits(name);
+        for _ in 0..max_ops {
+            self.drive(1);
+            if failpoint::hits(name) > before {
+                return;
+            }
+        }
+        panic!("failpoint '{name}' never fired within {max_ops} ops");
+    }
+}
+
+fn fingerprints_equal(a: &DbCluster, b: &DbCluster) {
+    let fa = a.fingerprint().unwrap();
+    let fb = b.fingerprint().unwrap();
+    assert!(!fa.is_empty());
+    assert_eq!(fa, fb, "fault victim diverged from the never-faulted twin");
+}
+
+/// Point-DML concurrency mode for the victim, from `FAULT_MODE`
+/// (`2pl` | `occ`, default 2PL). The CI fault-matrix sets it.
+fn fault_mode() -> ConcurrencyMode {
+    std::env::var("FAULT_MODE")
+        .ok()
+        .and_then(|s| ConcurrencyMode::from_name(&s))
+        .unwrap_or_default()
+}
+
+fn fault_seeds() -> Vec<u64> {
+    match std::env::var("FAULT_SEED").ok().and_then(|s| s.parse().ok()) {
+        Some(s) => vec![s],
+        None => vec![1, 2],
+    }
+}
+
+fn tmpdir(tag: &str, seed: u64) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "schaladb-fault-{tag}-s{seed}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn victim(dir: &std::path::Path, group_commit: usize) -> Arc<DbCluster> {
+    DbCluster::start(
+        ClusterConfig::builder()
+            .durability(DurabilityConfig::new(dir.to_path_buf(), group_commit))
+            .concurrency(fault_mode())
+            .build()
+            .unwrap(),
+    )
+    .unwrap()
+}
+
+/// The tentpole gate: one seed's full failpoint schedule. Every armed
+/// site is proven to fire (hit counter), every recovery ends byte-equal
+/// to the twin.
+fn run_schedule(seed: u64) {
+    let dir = tmpdir("sched", seed);
+    let a = victim(&dir, 8);
+    let b = DbCluster::start(ClusterConfig::default()).unwrap();
+    schema(&a);
+    schema(&b);
+    let am = AvailabilityManager::new(a.clone());
+    let mut d = Driver::new(a.clone(), b.clone(), seed, 0);
+
+    // Healthy prefix + durable baseline.
+    d.drive(250);
+    fingerprints_equal(&a, &b);
+    assert!(checkpoint_node(&a, 0).unwrap().written > 0);
+    assert!(checkpoint_node(&a, 1).unwrap().written > 0);
+
+    // --- WAL seams, fired from inside the live claim stream ---
+    for site in ["wal-append-before-flush", "wal-flush"] {
+        failpoint::set(site, one_shot_err());
+        d.drive_until_hit(site, 400);
+        fingerprints_equal(&a, &b);
+    }
+    assert!(d.injected_commits > 0, "WAL failpoints must tear real commits");
+
+    // --- checkpoint seams: the cut fails cleanly, a retry succeeds ---
+    for site in [
+        "ckpt-before-tmp-write",
+        "ckpt-after-tmp-write",
+        "ckpt-after-rename",
+        "wal-truncate",
+    ] {
+        d.drive(30); // make the incremental checkpoint have work to do
+        failpoint::set(site, one_shot_err());
+        let r = checkpoint_node(&a, 0);
+        assert!(r.is_err(), "armed {site} must fail the checkpoint: {r:?}");
+        assert_eq!(failpoint::hits(site), 1, "{site} must have fired exactly once");
+        checkpoint_node(&a, 0).unwrap_or_else(|e| panic!("retry after {site} failed: {e}"));
+        fingerprints_equal(&a, &b);
+    }
+
+    // --- rejoin seams, cycle 1: seed + catch-up ---
+    let epoch0 = a.cluster_epoch();
+    a.kill_node(1).unwrap();
+    assert!(am.sweep().unwrap().promoted > 0);
+    assert!(a.cluster_epoch() > epoch0);
+    d.drive(100);
+
+    failpoint::set("rejoin-seed", one_shot_err());
+    let r = a.restart_node(1);
+    assert!(r.is_err(), "armed rejoin-seed must fail the restart: {r:?}");
+    assert_eq!(failpoint::hits("rejoin-seed"), 1);
+    // the failed restart left the node dead and retryable
+    let start = a.restart_node(1).unwrap();
+    assert!(start.partitions > 0);
+    assert!(start.from_checkpoint > 0, "phase-1 checkpoints must be found: {start:?}");
+
+    failpoint::set("rejoin-catchup", one_shot_err());
+    let r = am.sweep();
+    assert!(r.is_err(), "armed rejoin-catchup must surface through the sweep: {r:?}");
+    assert_eq!(failpoint::hits("rejoin-catchup"), 1);
+    let mut rejoined = false;
+    for _ in 0..50 {
+        if am.sweep().unwrap().rejoined > 0 {
+            rejoined = true;
+            break;
+        }
+    }
+    assert!(rejoined, "node 1 must rejoin after the catch-up failpoint cleared");
+    d.drive(60);
+    fingerprints_equal(&a, &b);
+
+    // --- rejoin seams, cycle 2: the final cut itself ---
+    // (no promoted assert: after the first rejoin node 1 may be
+    // backup-only, so killing it promotes nothing)
+    a.kill_node(1).unwrap();
+    am.sweep().unwrap();
+    d.drive(60);
+    a.restart_node(1).unwrap();
+    failpoint::set("rejoin-final-cut", one_shot_err());
+    let r = am.sweep().unwrap();
+    assert_eq!(r.rejoined, 0, "armed rejoin-final-cut must defer the hand-off");
+    assert_eq!(failpoint::hits("rejoin-final-cut"), 1);
+    let mut rejoined = false;
+    for _ in 0..50 {
+        if am.sweep().unwrap().rejoined > 0 {
+            rejoined = true;
+            break;
+        }
+    }
+    assert!(rejoined, "node 1 must rejoin once the final cut is clean");
+    d.drive(60);
+    fingerprints_equal(&a, &b);
+
+    // --- admin seams: rebalance and split cuts fail typed, retry clean ---
+    let new_node = a.add_node().unwrap();
+    failpoint::set("rebalance-cut", one_shot_err());
+    let r = a.rebalance_partition("workqueue", 0, new_node);
+    assert!(r.is_err(), "armed rebalance-cut must fail the move: {r:?}");
+    assert_eq!(failpoint::hits("rebalance-cut"), 1);
+    a.rebalance_partition("workqueue", 0, new_node).unwrap();
+    d.drive(40);
+    fingerprints_equal(&a, &b);
+
+    failpoint::set("split-cut", one_shot_err());
+    let r = a.split_partition("workqueue", 0);
+    assert!(r.is_err(), "armed split-cut must fail the split: {r:?}");
+    assert_eq!(failpoint::hits("split-cut"), 1);
+    a.split_partition("workqueue", 0).unwrap();
+    d.drive(40);
+    am.sweep().unwrap();
+    fingerprints_equal(&a, &b);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn failpoint_schedule_survivor_equals_twin() {
+    let _g = serial();
+    for seed in fault_seeds() {
+        failpoint::reset();
+        run_schedule(seed);
+    }
+}
+
+/// Disk loss: node 1 restarts with its durability directory wiped. The
+/// restart detects the loss, ships the peer replica's checkpoint + WAL
+/// tail cross-node, rejoins, and stays byte-equal — then survives being
+/// promoted to serve everything.
+#[test]
+fn wiped_durability_dir_recovers_via_peer_shipping() {
+    let _g = serial();
+    let seed = fault_seeds()[0];
+    let dir = tmpdir("wipe", seed);
+    let a = victim(&dir, 8);
+    let b = DbCluster::start(ClusterConfig::default()).unwrap();
+    schema(&a);
+    schema(&b);
+    let am = AvailabilityManager::new(a.clone());
+    let mut d = Driver::new(a.clone(), b.clone(), seed, 0);
+
+    d.drive(300);
+    assert!(checkpoint_node(&a, 0).unwrap().written > 0);
+    assert!(checkpoint_node(&a, 1).unwrap().written > 0);
+    d.drive(150);
+
+    a.kill_node(1).unwrap();
+    assert!(am.sweep().unwrap().promoted > 0);
+    d.drive(50);
+
+    // the disk is gone: nothing local survives the restart
+    std::fs::remove_dir_all(dir.join("node1")).unwrap();
+    let start = a.restart_node(1).unwrap();
+    assert!(start.disk_lost, "missing durability dir must be detected: {start:?}");
+    assert!(start.shipped > 0, "recovery must ship from the peer: {start:?}");
+    assert!(
+        start.from_checkpoint > 0,
+        "shipped checkpoints must actually load: {start:?}"
+    );
+
+    let mut rejoined = false;
+    for _ in 0..50 {
+        if am.sweep().unwrap().rejoined > 0 {
+            rejoined = true;
+            break;
+        }
+    }
+    assert!(rejoined, "disk-loss node must rejoin via shipped state");
+    d.drive(80);
+    fingerprints_equal(&a, &b);
+
+    // the shipped replicas are faithful enough to serve everything
+    a.kill_node(0).unwrap();
+    assert!(am.sweep().unwrap().promoted > 0);
+    fingerprints_equal(&a, &b);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corrupt-checkpoint fallback: flip a byte in a checkpoint file; the
+/// restart detects the checksum mismatch, discards the file (never loads
+/// garbage), recovers that partition from the peer, and stays byte-equal.
+#[test]
+fn corrupt_checkpoint_is_detected_and_recovered_from_peer() {
+    let _g = serial();
+    let seed = fault_seeds()[0];
+    let dir = tmpdir("corrupt", seed);
+    let a = victim(&dir, 8);
+    let b = DbCluster::start(ClusterConfig::default()).unwrap();
+    schema(&a);
+    schema(&b);
+    let am = AvailabilityManager::new(a.clone());
+    let mut d = Driver::new(a.clone(), b.clone(), seed, 0);
+
+    d.drive(250);
+    assert!(checkpoint_node(&a, 0).unwrap().written > 0);
+    assert!(checkpoint_node(&a, 1).unwrap().written > 0);
+    d.drive(100);
+
+    a.kill_node(1).unwrap();
+    assert!(am.sweep().unwrap().promoted > 0);
+
+    // flip one byte in the middle of node 1's largest checkpoint
+    let target = largest_ckpt(&dir.join("node1"));
+    let mut bytes = std::fs::read(&target).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x5a;
+    std::fs::write(&target, &bytes).unwrap();
+
+    let start = a.restart_node(1).unwrap();
+    assert!(
+        start.ckpt_rejected >= 1,
+        "the flipped checkpoint must fail its checksum: {start:?}"
+    );
+    assert!(
+        !target.is_file(),
+        "a rejected checkpoint must be discarded, not left to re-poison restarts"
+    );
+
+    let mut rejoined = false;
+    for _ in 0..50 {
+        if am.sweep().unwrap().rejoined > 0 {
+            rejoined = true;
+            break;
+        }
+    }
+    assert!(rejoined, "corrupt-checkpoint node must still rejoin");
+    d.drive(60);
+    am.sweep().unwrap();
+    fingerprints_equal(&a, &b);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn largest_ckpt(node_dir: &std::path::Path) -> std::path::PathBuf {
+    std::fs::read_dir(node_dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().map_or(false, |x| x == "ckpt"))
+        .max_by_key(|p| p.metadata().map(|m| m.len()).unwrap_or(0))
+        .expect("node dir must hold at least one checkpoint")
+}
+
+/// Whole-cluster cold start: stop everything, `DbCluster::open` the
+/// durability dir, and the reopened cluster fingerprints byte-equal to
+/// both the pre-shutdown state and the live twin — then keeps committing.
+/// Node 1 is deliberately left checkpoint-less so its replicas rebuild
+/// from origin-covering WAL replay alone.
+#[test]
+fn cold_start_round_trips_full_cluster_stop() {
+    let _g = serial();
+    let seed = fault_seeds()[0];
+    let dir = tmpdir("cold", seed);
+    let mk_config = || {
+        ClusterConfig::builder()
+            .durability(DurabilityConfig::new(dir.clone(), 4))
+            .concurrency(fault_mode())
+            .build()
+            .unwrap()
+    };
+    let b = DbCluster::start(ClusterConfig::default()).unwrap();
+    schema(&b);
+    let fp_before;
+    {
+        let a = DbCluster::start(mk_config()).unwrap();
+        schema(&a);
+        let mut d = Driver::new(a.clone(), b.clone(), seed, 0);
+        d.drive(300);
+        // checkpoint node 0 only: node 1 cold-starts from pure WAL replay
+        assert!(checkpoint_node(&a, 0).unwrap().written > 0);
+        d.drive(150);
+        fp_before = a.fingerprint().unwrap();
+        // d (and its Arc clones) drops here; dropping the last Arc drops
+        // the NodeWals, whose Drop flushes the buffered group-commit tail
+    }
+
+    // the cold-start seam itself is a failpoint site
+    failpoint::set("cold-start-open", one_shot_err());
+    let r = DbCluster::open(mk_config());
+    assert!(r.is_err(), "armed cold-start-open must refuse the open");
+    assert_eq!(failpoint::hits("cold-start-open"), 1);
+
+    let a = DbCluster::open(mk_config()).unwrap();
+    assert!(a.cluster_epoch() > 0, "cold start must re-stamp a fresh epoch");
+    assert_eq!(a.fingerprint().unwrap(), fp_before, "cold start lost committed state");
+    fingerprints_equal(&a, &b);
+
+    // the reopened cluster is live: keep committing, stay byte-equal
+    let mut d = Driver::new(a.clone(), b.clone(), seed + 17, 1_000_000);
+    d.drive(150);
+    fingerprints_equal(&a, &b);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Cold start skips (never loads) a corrupt checkpoint and rebuilds that
+/// partition from the other replica's files.
+#[test]
+fn cold_start_skips_corrupt_checkpoint() {
+    let _g = serial();
+    let seed = fault_seeds()[0];
+    let dir = tmpdir("coldcorrupt", seed);
+    let mk_config = || {
+        ClusterConfig::builder()
+            .durability(DurabilityConfig::new(dir.clone(), 4))
+            .build()
+            .unwrap()
+    };
+    let b = DbCluster::start(ClusterConfig::default()).unwrap();
+    schema(&b);
+    let fp_before;
+    {
+        let a = DbCluster::start(mk_config()).unwrap();
+        schema(&a);
+        let mut d = Driver::new(a.clone(), b.clone(), seed, 0);
+        d.drive(200);
+        assert!(checkpoint_node(&a, 0).unwrap().written > 0);
+        assert!(checkpoint_node(&a, 1).unwrap().written > 0);
+        d.drive(100);
+        fp_before = a.fingerprint().unwrap();
+    }
+
+    let target = largest_ckpt(&dir.join("node0"));
+    let mut bytes = std::fs::read(&target).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x5a;
+    std::fs::write(&target, &bytes).unwrap();
+
+    let a = DbCluster::open(mk_config()).unwrap();
+    assert_eq!(
+        a.fingerprint().unwrap(),
+        fp_before,
+        "cold start must recover the corrupted partition from the peer replica"
+    );
+    fingerprints_equal(&a, &b);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Cold start refuses, with the typed `Error::Recovery`, when it cannot
+/// proceed safely: no durability config at all, or WAL segments whose
+/// schema no readable checkpoint defines.
+#[test]
+fn cold_start_refuses_undefinable_state() {
+    let _g = serial();
+    let r = DbCluster::open(ClusterConfig::default());
+    assert!(
+        matches!(r, Err(schaladb::Error::Recovery(_))),
+        "open without durability must refuse typed"
+    );
+
+    let seed = fault_seeds()[0];
+    let dir = tmpdir("refuse", seed);
+    let mk_config = || {
+        ClusterConfig::builder()
+            .durability(DurabilityConfig::new(dir.clone(), 4))
+            .build()
+            .unwrap()
+    };
+    {
+        let a = DbCluster::start(mk_config()).unwrap();
+        schema(&a);
+        let b = DbCluster::start(ClusterConfig::default()).unwrap();
+        schema(&b);
+        let mut d = Driver::new(a.clone(), b.clone(), seed, 0);
+        d.drive(80);
+        // no checkpoint is ever cut: on disk there are only WAL segments
+    }
+    let r = DbCluster::open(mk_config());
+    match r {
+        Err(schaladb::Error::Recovery(m)) => {
+            assert!(m.contains("no readable checkpoint"), "unexpected refusal: {m}")
+        }
+        other => panic!("WAL-without-schema must refuse typed, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -512,3 +512,79 @@ fn contended_single_row_updates_stay_exact_and_accounted() {
     );
     assert_occ_counters_consistent(&c, "contended row");
 }
+
+/// OCC commits are durable across a whole-cluster stop: claims validated
+/// past the write latches land in the WAL like any 2PL commit, so
+/// `DbCluster::open` cold-starts the cluster back byte-equal to a 2PL
+/// twin — and the reopened cluster keeps validating new OCC claims.
+/// Node 1 is left checkpoint-less to force pure WAL replay on its side.
+#[test]
+fn occ_commits_survive_whole_cluster_cold_start() {
+    let parts = 4usize;
+    let tasks = 48i64;
+    let dir =
+        std::env::temp_dir().join(format!("schaladb-occ-coldstart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mk_config = || {
+        ClusterConfig::builder()
+            .durability(DurabilityConfig::new(dir.clone(), 4))
+            .concurrency(ConcurrencyMode::Occ)
+            .build()
+            .unwrap()
+    };
+    let b = cluster(parts, clock::wall(), ConcurrencyMode::TwoPL);
+    seed(&b, tasks, parts);
+    let fp_before;
+    {
+        let a = DbCluster::start(mk_config()).unwrap();
+        a.exec(&format!(
+            "CREATE TABLE workqueue (taskid INT NOT NULL, workerid INT NOT NULL, \
+             status TEXT, dur FLOAT, starttime FLOAT) \
+             PARTITION BY HASH(workerid) PARTITIONS {parts} \
+             PRIMARY KEY (taskid) INDEX (status)"
+        ))
+        .unwrap();
+        seed(&a, tasks, parts);
+        let ca = a.prepare(CLAIM_FIXED).unwrap();
+        let cb = b.prepare(CLAIM_FIXED).unwrap();
+        for id in 0..tasks / 2 {
+            let params = [Value::Int(id), Value::Int(id % parts as i64)];
+            let na = a.exec_prepared(0, AccessKind::UpdateToRunning, &ca, &params).unwrap();
+            let nb = b.exec_prepared(0, AccessKind::UpdateToRunning, &cb, &params).unwrap();
+            assert_eq!(na, nb, "claim {id} diverged before the stop");
+        }
+        assert!(a.route_counts().occ_dml > 0, "claims must go through the OCC tier");
+        // checkpoint node 0 only: node 1 must cold-start from WAL replay
+        assert!(
+            schaladb::storage::checkpoint::checkpoint_node(&a, 0).unwrap().written > 0
+        );
+        let fa = a.prepare(FINISH).unwrap();
+        let fb = b.prepare(FINISH).unwrap();
+        for id in 0..tasks / 4 {
+            let params =
+                [Value::Float(0.5), Value::Int(id), Value::Int(id % parts as i64)];
+            let na = a.exec_prepared(0, AccessKind::UpdateToFinished, &fa, &params).unwrap();
+            let nb = b.exec_prepared(0, AccessKind::UpdateToFinished, &fb, &params).unwrap();
+            assert_eq!(na, nb, "finish {id} diverged before the stop");
+        }
+        fp_before = a.fingerprint().unwrap();
+        // scope end: Arcs drop, node WALs flush — clean whole-cluster stop
+    }
+
+    let a = DbCluster::open(mk_config()).unwrap();
+    assert_eq!(a.fingerprint().unwrap(), fp_before, "cold start lost OCC commits");
+    assert_eq!(a.fingerprint().unwrap(), b.fingerprint().unwrap());
+
+    // the reopened cluster keeps validating fresh OCC claims
+    let ca = a.prepare(CLAIM_FIXED).unwrap();
+    let cb = b.prepare(CLAIM_FIXED).unwrap();
+    for id in tasks / 2..tasks {
+        let params = [Value::Int(id), Value::Int(id % parts as i64)];
+        let na = a.exec_prepared(0, AccessKind::UpdateToRunning, &ca, &params).unwrap();
+        let nb = b.exec_prepared(0, AccessKind::UpdateToRunning, &cb, &params).unwrap();
+        assert_eq!(na, nb, "claim {id} diverged after cold start");
+    }
+    assert!(a.route_counts().occ_dml > 0, "reopened cluster must still run OCC");
+    assert_eq!(a.fingerprint().unwrap(), b.fingerprint().unwrap());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -340,7 +340,12 @@ fn abrupt_disconnect_rolls_back_the_open_txn() {
 #[test]
 fn connections_beyond_max_conns_are_rejected_with_backpressure() {
     let cluster = DbCluster::start(ClusterConfig::default()).unwrap();
-    let server = Server::bind(any_addr(), cluster, ServerConfig { max_conns: 1 }).unwrap();
+    let server = Server::bind(
+        any_addr(),
+        cluster,
+        ServerConfig { max_conns: 1, ..ServerConfig::default() },
+    )
+    .unwrap();
     let addr = server.local_addr();
 
     let held = Client::connect(addr, 0, AccessKind::Other).unwrap();
@@ -365,6 +370,35 @@ fn connections_beyond_max_conns_are_rejected_with_backpressure() {
         }
     }
     ok.expect("slot never freed after close").close().unwrap();
+}
+
+/// `--conn-timeout-secs`: an idle connection is dropped once a frame read
+/// outlives the per-connection deadline, and the drop is typed — counted
+/// in `Counter::ConnTimeouts`, not lumped in with frame errors.
+#[test]
+fn idle_connections_are_dropped_after_the_conn_timeout() {
+    let cluster = DbCluster::start(ClusterConfig::default()).unwrap();
+    let server = Server::bind(
+        any_addr(),
+        cluster.clone(),
+        ServerConfig { max_conns: 4, conn_timeout: Some(Duration::from_millis(150)) },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // handshake succeeds, then the client goes quiet past the deadline
+    let _idle = Client::connect(addr, 0, AccessKind::Other).unwrap();
+    let mut dropped = false;
+    for _ in 0..300 {
+        if server.active_conns() == 0 {
+            dropped = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(dropped, "idle connection outlived the read deadline");
+    let timeouts = cluster.obs().counter(schaladb::obs::Counter::ConnTimeouts);
+    assert!(timeouts >= 1, "deadline expiry was not counted (got {timeouts})");
 }
 
 /// Failover regression (the PR 1 guarantee, across the wire): a remote

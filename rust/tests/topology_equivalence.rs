@@ -580,3 +580,69 @@ fn split_then_rejoin_catches_up_on_new_topology() {
     am.sweep().unwrap();
     fingerprints_equal(&a, &b);
 }
+
+/// Elastic topology survives a whole-cluster stop: grow to three nodes,
+/// move a partition onto the new node, split it, checkpoint everywhere
+/// (the clean-shutdown baseline), then `DbCluster::open` the directory.
+/// Node-dir discovery must bring back all three nodes, the widest
+/// post-split definition must win the def election over stale pre-split
+/// checkpoints, and the state must stay byte-equal to the untouched twin.
+#[test]
+fn elastic_topology_round_trips_whole_cluster_cold_start() {
+    use schaladb::storage::checkpoint::checkpoint_node;
+    let parts = 4usize;
+    let dir =
+        std::env::temp_dir().join(format!("schaladb-topo-coldstart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mk_config = || {
+        ClusterConfig::builder()
+            .durability(DurabilityConfig::new(dir.clone(), 8))
+            .concurrency(topo_mode())
+            .build()
+            .unwrap()
+    };
+    let b = DbCluster::start(ClusterConfig::default()).unwrap();
+    schema(&b, parts);
+    let fp_before;
+    {
+        let a = DbCluster::start(mk_config()).unwrap();
+        schema(&a, parts);
+        let mut d = Driver::new(a.clone(), b.clone(), 23, parts);
+        d.drive(250);
+        // pre-admin checkpoints: these keep the narrow 4-partition def and
+        // must lose the def election once the split widens the table
+        assert!(checkpoint_node(&a, 0).unwrap().written > 0);
+        assert!(checkpoint_node(&a, 1).unwrap().written > 0);
+
+        let new_node = a.add_node().unwrap();
+        a.rebalance_partition("workqueue", 0, new_node).unwrap();
+        d.drive(100);
+        a.split_partition("workqueue", 0).unwrap();
+        d.drive(100);
+        fingerprints_equal(&a, &b);
+
+        // clean-shutdown baseline: checkpoint every node (what `dchiron
+        // serve` does on shutdown), then stop the whole cluster
+        for id in 0..a.num_nodes() as u32 {
+            checkpoint_node(&a, id).unwrap();
+        }
+        fp_before = a.fingerprint().unwrap();
+        // scope end: Arcs drop, node WALs flush — clean whole-cluster stop
+    }
+
+    let a = DbCluster::open(mk_config()).unwrap();
+    assert_eq!(a.num_nodes(), 3, "node-dir discovery must bring back the added node");
+    assert_eq!(a.fingerprint().unwrap(), fp_before, "cold start lost elastic state");
+    fingerprints_equal(&a, &b);
+
+    // the reopened, widened topology still serves on every partition
+    let sa = Stmts::prepare(&a);
+    let sb = Stmts::prepare(&b);
+    for k in 0..40i64 {
+        let op = Op::Insert { id: 5_000_000 + k, worker: k % parts as i64, dur: 3.0 };
+        assert_eq!(apply(&a, &sa, &op).unwrap(), 1, "insert {k} after cold start");
+        assert_eq!(apply(&b, &sb, &op).unwrap(), 1);
+    }
+    fingerprints_equal(&a, &b);
+    let _ = std::fs::remove_dir_all(&dir);
+}
